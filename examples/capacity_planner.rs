@@ -1,0 +1,86 @@
+//! Capacity planner: the paper's deployment workflow (§3.5) end-to-end.
+//!
+//! 1. Estimate mean acceptance alpha-hat from a small held-out sample with
+//!    the closed-form estimator (Prop. 4 / Remark 5) and its Hoeffding bound.
+//! 2. Measure the wall-clock cost ratio c on this hardware.
+//! 3. Scan gamma with the analytic predictors, pick gamma* (exact Prop. 3
+//!    condition), and *verify* the prediction against a measured run.
+//!
+//!     cargo run --release --example capacity_planner [-- --sigma 0.6 --dataset weather]
+
+use stride::accept::{estimate_alpha_closed_form, AcceptancePolicy};
+use stride::config::Cli;
+use stride::repro::{Bench, RowCfg};
+use stride::theory;
+use stride::util::stats::hoeffding_n;
+
+fn main() -> anyhow::Result<()> {
+    let cli = Cli::from_env()?;
+    let sigma = cli.get_f64("sigma")?.unwrap_or(0.5);
+    let dataset: &'static str = match cli.get("dataset").unwrap_or("etth1") {
+        "etth2" => "etth2",
+        "ettm2" => "ettm2",
+        "weather" => "weather",
+        _ => "etth1",
+    };
+
+    let bench = Bench::from_env()?;
+    let p = bench.manifest.patch;
+
+    // --- Step 1: held-out acceptance estimate.
+    let eps = 0.05;
+    let n_needed = hoeffding_n(eps, 0.05);
+    println!("Hoeffding: N = {n_needed} held-out histories for +-{eps} at 95%");
+    let cfg = RowCfg { dataset, sigma, windows: 64, ..Default::default() };
+    let windows = bench.windows(&cfg)?;
+    let mut heads = Vec::new();
+    for w in &windows {
+        let n = w.history.len() / p;
+        let mp = bench.target.forward(&w.history, n)?;
+        let md = bench.draft.forward(&w.history, n)?;
+        heads.push((mp[(n - 1) * p..n * p].to_vec(), md[(n - 1) * p..n * p].to_vec()));
+    }
+    let policy = AcceptancePolicy::new(sigma, 1.0);
+    let est = estimate_alpha_closed_form(
+        &policy,
+        heads.iter().map(|(a, b)| (a.as_slice(), b.as_slice())),
+    );
+    println!(
+        "alpha_hat = {:.4} +- {:.4} (N = {}, dataset = {dataset}, sigma = {sigma})",
+        est.alpha_hat, est.eps95, est.n_histories
+    );
+
+    // --- Step 2: measured cost ratios on this testbed.
+    let c = bench.draft.mean_secs() / bench.target.mean_secs();
+    let c_hat = bench.draft.flops(bench.manifest.n_ctx) / bench.target.flops(bench.manifest.n_ctx);
+    println!("measured c = {c:.3} (wall-clock), c_hat = {c_hat:.3} (FLOPs)");
+
+    // --- Step 3: gamma scan + pick.
+    let g_star = theory::optimal_gamma(est.alpha_hat, c, 16);
+    println!("\n gamma   E[L]    S_wall(pred)   OpsFactor");
+    for gamma in [1usize, 2, 3, 4, 5, 7, 10] {
+        let pr = theory::predict(est.alpha_hat, gamma, c, c_hat);
+        println!(
+            "  {gamma:>3}   {:>5.2}   {:>9.2}x   {:>8.2}{}",
+            pr.expected_l,
+            pr.s_wall,
+            pr.ops_factor,
+            if gamma == g_star { "   <- gamma* (exact Prop. 3)" } else { "" }
+        );
+    }
+    println!(
+        "paper's verbatim Prop. 3 rule would pick gamma = {} (conservative; see theory.rs)",
+        theory::paper_gamma_rule(est.alpha_hat, c, 16)
+    );
+
+    // --- Step 4: verify the chosen gamma against a measured run.
+    let cfg = RowCfg { dataset, sigma, gamma: g_star, ..Default::default() };
+    let r = bench.run_row(&cfg)?;
+    println!(
+        "\nverification at gamma* = {g_star}: predicted S_wall {:.2}x, measured {:.2}x ({} windows)",
+        theory::wall_speedup(est.alpha_hat, g_star, r.c),
+        r.s_wall_meas,
+        cfg.windows,
+    );
+    Ok(())
+}

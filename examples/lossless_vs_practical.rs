@@ -1,0 +1,64 @@
+//! Lossless vs practical variant (paper §3.2-3.3, §A.5, §B.6): measure the
+//! exactness/cost trade-off that motivates the paper's fallback-to-p choice.
+//!
+//! Demonstrates: (i) both variants' forecast quality, (ii) the residual
+//! thinning cost exploding as acceptance -> 1 (expected 1/(1-beta) target
+//! draws per rejection), and (iii) the §B.6 breakeven rule.
+//!
+//!     cargo run --release --example lossless_vs_practical
+
+use stride::accept::AcceptancePolicy;
+use stride::repro::{Bench, RowCfg};
+use stride::theory;
+use stride::util::microbench::Table;
+
+fn main() -> anyhow::Result<()> {
+    let bench = Bench::from_env()?;
+    let mut table = Table::new(
+        "Lossless (residual thinning) vs practical (fallback-to-p)",
+        &["sigma", "variant", "MSE", "alpha", "residual draws/rejection",
+          "S_wall meas", "worthwhile (B.6)?"],
+    );
+
+    for &sigma in &[0.3, 0.5, 0.8] {
+        for lossless in [false, true] {
+            let cfg = RowCfg {
+                dataset: "etth1",
+                sigma,
+                lossless,
+                windows: 16,
+                ..Default::default()
+            };
+            let r = bench.run_row(&cfg)?;
+            let rejections = r.stats.proposals - r.stats.accepted;
+            let draws_per_rej = if rejections > 0 {
+                r.stats.residual_draws as f64 / rejections as f64
+            } else {
+                f64::NAN
+            };
+            table.row(vec![
+                format!("{sigma}"),
+                if lossless { "lossless" } else { "practical" }.into(),
+                format!("{:.4}", r.mse),
+                format!("{:.3}", r.alpha_hat),
+                if lossless { format!("{draws_per_rej:.1}") } else { "0 (fallback)".into() },
+                format!("{:.2}x", r.s_wall_meas),
+                format!("{}", theory::lossless_worthwhile(r.alpha_hat, cfg.gamma)),
+            ]);
+        }
+    }
+    table.print();
+    table.write_csv("results/lossless_vs_practical.csv")?;
+
+    // Analytic illustration of the 1/(1-beta) cost curve.
+    println!("expected residual draws per rejection = 1/(1-beta):");
+    let pol = AcceptancePolicy::new(0.5, 1.0);
+    for gap in [1.0f32, 0.5, 0.25, 0.1, 0.05] {
+        let mu_p = vec![gap; 4];
+        let mu_q = vec![0.0f32; 4];
+        let beta = pol.mean_acceptance_closed_form(&mu_p, &mu_q);
+        println!("  mean gap {gap:<5}: beta = {beta:.3}, expected draws = {:.1}", 1.0 / (1.0 - beta));
+    }
+    println!("wrote results/lossless_vs_practical.csv");
+    Ok(())
+}

@@ -1,0 +1,61 @@
+//! Quickstart: load the AOT artifacts, forecast one window with speculative
+//! decoding, and compare against plain target autoregression.
+//!
+//!     make artifacts && cargo run --release --example quickstart
+
+use stride::data::{eval_windows, Dataset};
+use stride::forecast::ar_decode;
+use stride::models::XlaBackend;
+use stride::runtime::{Engine, Manifest};
+use stride::specdec::{sd_generate, SpecConfig};
+use stride::util::tensor::mse_mae;
+
+fn main() -> anyhow::Result<()> {
+    // 1. Load the compiled artifacts (target + 0.25x distilled draft).
+    let manifest = Manifest::load(&stride::artifacts_dir())?;
+    let mut engine = Engine::cpu()?;
+    let target = XlaBackend::load(&mut engine, &manifest, "target", "fused")?;
+    let draft = XlaBackend::load(&mut engine, &manifest, "draft", "fused")?;
+    println!(
+        "loaded {} ({} params) + {} ({} params) on {}",
+        manifest.target.name,
+        manifest.target.param_count,
+        manifest.draft.name,
+        manifest.draft.param_count,
+        engine.platform()
+    );
+
+    // 2. Take a real eval window: 96-step lookback, 96-step horizon.
+    let data = Dataset::by_name("etth1").unwrap();
+    let w = &eval_windows(&data, manifest.patch, 4, 4, 96, 1)[0];
+    let n_hist = w.history.len() / manifest.patch;
+
+    // 3. Baseline: plain autoregression with the target (4 sequential passes).
+    let t0 = std::time::Instant::now();
+    let (base, _, calls) = ar_decode(&target, &w.history, n_hist, 4)?;
+    let base_wall = t0.elapsed();
+    let (base_mse, _) = mse_mae(&base, &w.future);
+
+    // 4. Speculative decoding: draft proposes gamma=3 patches, target
+    //    validates all prefixes in one batched pass.
+    let cfg = SpecConfig::default(); // gamma=3, sigma=0.5, practical variant
+    let t1 = std::time::Instant::now();
+    let out = sd_generate(&target, &draft, &w.history, n_hist, 4, &cfg)?;
+    let sd_wall = t1.elapsed();
+    let (sd_mse, _) = mse_mae(&out.patches, &w.future);
+
+    println!("\nbaseline : {calls} target passes, {:.2}ms, MSE {base_mse:.4}", base_wall.as_secs_f64() * 1e3);
+    println!(
+        "SD       : {} draft + {} target passes, {:.2}ms, MSE {sd_mse:.4}",
+        out.stats.draft_calls,
+        out.stats.rounds,
+        sd_wall.as_secs_f64() * 1e3
+    );
+    println!(
+        "speedup  : {:.2}x   alpha_hat {:.3}   E[L] {:.2}",
+        base_wall.as_secs_f64() / sd_wall.as_secs_f64(),
+        out.stats.alpha_hat(),
+        out.stats.mean_block_len()
+    );
+    Ok(())
+}

@@ -1,0 +1,158 @@
+//! End-to-end serving driver (the DESIGN.md §6 validation run): start the
+//! coordinator with XLA artifacts, fire Poisson-arrival forecast traffic
+//! through real HTTP from concurrent clients, and report latency percentiles
+//! and throughput for baseline-AR vs speculative modes.
+//!
+//!     cargo run --release --example serve_bench [-- --requests 200 --rps 40 --clients 8]
+//!
+//! Results are recorded in EXPERIMENTS.md §End-to-end.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+use stride::config::{Cli, ServeConfig};
+use stride::data::Dataset;
+use stride::http::http_request;
+use stride::server::Server;
+use stride::util::json::Json;
+use stride::util::microbench::Table;
+use stride::util::rng::Rng;
+use stride::util::stats::quantile;
+
+struct LoadResult {
+    latencies_ms: Vec<f64>,
+    wall_s: f64,
+    errors: usize,
+    patches: usize,
+}
+
+/// Fire `n_requests` at ~`rps` (Poisson arrivals) from `clients` threads.
+fn run_load(addr: &str, mode: &str, n_requests: usize, rps: f64, clients: usize) -> LoadResult {
+    let data = Dataset::by_name("etth1").unwrap();
+    // Pre-build request bodies over varied windows/channels/horizons.
+    let mut rng = Rng::new(0xBEEF);
+    let bodies: Vec<String> = (0..n_requests)
+        .map(|i| {
+            let ch = i % data.channels();
+            let start = 12_000 + (i * 37) % 1_500;
+            let hist = data.norm_slice(ch, start, 96);
+            let horizon = if i % 5 == 0 { 8 } else { 4 };
+            let nums: Vec<String> = hist.iter().map(|v| format!("{v:.5}")).collect();
+            format!(
+                r#"{{"history": [{}], "horizon": {horizon}, "mode": "{mode}", "dataset": "etth1"}}"#,
+                nums.join(",")
+            )
+        })
+        .collect();
+    // Poisson arrival offsets.
+    let mut offsets_ms = Vec::with_capacity(n_requests);
+    let mut t = 0.0f64;
+    for _ in 0..n_requests {
+        t += rng.exponential(rps) * 1e3;
+        offsets_ms.push(t);
+    }
+
+    let bodies = Arc::new(bodies);
+    let offsets = Arc::new(offsets_ms);
+    let next = Arc::new(AtomicUsize::new(0));
+    let errors = Arc::new(AtomicUsize::new(0));
+    let patches = Arc::new(AtomicUsize::new(0));
+    let t0 = Instant::now();
+    let handles: Vec<_> = (0..clients)
+        .map(|_| {
+            let bodies = Arc::clone(&bodies);
+            let offsets = Arc::clone(&offsets);
+            let next = Arc::clone(&next);
+            let errors = Arc::clone(&errors);
+            let patches = Arc::clone(&patches);
+            let addr = addr.to_string();
+            std::thread::spawn(move || {
+                let mut lats = Vec::new();
+                loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= bodies.len() {
+                        return lats;
+                    }
+                    // Open-loop pacing: wait until this request's arrival time.
+                    let due = offsets[i] / 1e3;
+                    let now = t0.elapsed().as_secs_f64();
+                    if due > now {
+                        std::thread::sleep(std::time::Duration::from_secs_f64(due - now));
+                    }
+                    let ts = Instant::now();
+                    match http_request(&addr, "POST", "/forecast", Some(bodies[i].as_bytes())) {
+                        Ok(r) if r.status == 200 => {
+                            lats.push(ts.elapsed().as_secs_f64() * 1e3);
+                            if let Ok(j) = Json::parse(r.body_str()) {
+                                if let Some(f) = j.get("forecast").and_then(Json::as_arr) {
+                                    patches.fetch_add(f.len() / 24, Ordering::Relaxed);
+                                }
+                            }
+                        }
+                        _ => {
+                            errors.fetch_add(1, Ordering::Relaxed);
+                        }
+                    }
+                }
+            })
+        })
+        .collect();
+    let mut latencies: Vec<f64> = handles.into_iter().flat_map(|h| h.join().unwrap()).collect();
+    latencies.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    LoadResult {
+        latencies_ms: latencies,
+        wall_s: t0.elapsed().as_secs_f64(),
+        errors: errors.load(Ordering::Relaxed),
+        patches: patches.load(Ordering::Relaxed),
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    let cli = Cli::from_env()?;
+    let n_requests = cli.get_usize("requests")?.unwrap_or(200);
+    let rps = cli.get_f64("rps")?.unwrap_or(40.0);
+    let clients = cli.get_usize("clients")?.unwrap_or(8);
+
+    let mut cfg = ServeConfig::default();
+    cfg.bind = "127.0.0.1:0".into();
+    cfg.backend = cli.get("backend").unwrap_or("xla").to_string();
+    cfg.max_batch = cli.get_usize("max-batch")?.unwrap_or(8);
+    cfg.max_wait_ms = 2;
+    println!(
+        "starting server (backend={}, gamma={}, sigma={}, max_batch={})...",
+        cfg.backend, cfg.gamma, cfg.sigma, cfg.max_batch
+    );
+    let server = Server::start(cfg)?;
+    let addr = server.addr().to_string();
+    println!("server ready on {addr}; load: {n_requests} requests @ {rps} rps, {clients} clients\n");
+
+    let mut table = Table::new(
+        "End-to-end serving: baseline AR vs speculative decoding",
+        &["mode", "requests", "errors", "p50 ms", "p95 ms", "p99 ms", "mean ms",
+          "throughput req/s", "patches/s"],
+    );
+    for mode in ["baseline", "sd"] {
+        let r = run_load(&addr, mode, n_requests, rps, clients);
+        let n = r.latencies_ms.len();
+        table.row(vec![
+            mode.into(),
+            format!("{n}"),
+            format!("{}", r.errors),
+            format!("{:.1}", quantile(&r.latencies_ms, 0.50)),
+            format!("{:.1}", quantile(&r.latencies_ms, 0.95)),
+            format!("{:.1}", quantile(&r.latencies_ms, 0.99)),
+            format!("{:.1}", r.latencies_ms.iter().sum::<f64>() / n as f64),
+            format!("{:.1}", n as f64 / r.wall_s),
+            format!("{:.0}", r.patches as f64 / r.wall_s),
+        ]);
+    }
+    table.print();
+    table.write_csv("results/serve_bench.csv")?;
+
+    // Server-side view.
+    let stats = http_request(&addr, "GET", "/stats", None)?;
+    println!("server /stats: {}", stats.body_str());
+    println!("wrote results/serve_bench.csv");
+    Ok(())
+}

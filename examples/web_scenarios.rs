@@ -1,0 +1,115 @@
+//! Web-scenario SLO study: replay the paper's §1 deployment scenarios
+//! (recommendation / CDN / ads / e-commerce) against the live coordinator
+//! and report latency vs each scenario's SLO, baseline vs speculative.
+//!
+//!     cargo run --release --example web_scenarios [-- --events 150 --rps 120]
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+use stride::config::{Cli, ServeConfig};
+use stride::data::{dataset_by_name_with_csv, generate_trace, Scenario};
+use stride::http::http_request;
+use stride::server::Server;
+use stride::util::microbench::Table;
+use stride::util::stats::quantile;
+
+fn replay(addr: &str, scenario: Scenario, mode: &str, events: usize, rps: f64) -> (Vec<f64>, usize) {
+    let trace = generate_trace(scenario, events, rps, 42);
+    // Materialize request bodies from the scenario's dataset.
+    let bodies: Vec<String> = trace
+        .iter()
+        .map(|e| {
+            let data = dataset_by_name_with_csv(e.dataset).unwrap();
+            let ch = e.channel % data.channels();
+            let start = 11_000 + (e.channel * 131) % 2_000;
+            let hist = data.norm_slice(ch, start, e.history_len);
+            let nums: Vec<String> = hist.iter().map(|v| format!("{v:.5}")).collect();
+            format!(
+                r#"{{"history": [{}], "horizon": {}, "mode": "{mode}", "dataset": "{}"}}"#,
+                nums.join(","),
+                e.horizon,
+                e.dataset
+            )
+        })
+        .collect();
+
+    let bodies = Arc::new(bodies);
+    let offsets: Arc<Vec<f64>> = Arc::new(trace.iter().map(|e| e.at_s).collect());
+    let next = Arc::new(AtomicUsize::new(0));
+    let errors = Arc::new(AtomicUsize::new(0));
+    let t0 = Instant::now();
+    let handles: Vec<_> = (0..8)
+        .map(|_| {
+            let bodies = Arc::clone(&bodies);
+            let offsets = Arc::clone(&offsets);
+            let next = Arc::clone(&next);
+            let errors = Arc::clone(&errors);
+            let addr = addr.to_string();
+            std::thread::spawn(move || {
+                let mut lats = Vec::new();
+                loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= bodies.len() {
+                        return lats;
+                    }
+                    let due = offsets[i];
+                    let now = t0.elapsed().as_secs_f64();
+                    if due > now {
+                        std::thread::sleep(std::time::Duration::from_secs_f64(due - now));
+                    }
+                    let ts = Instant::now();
+                    match http_request(&addr, "POST", "/forecast", Some(bodies[i].as_bytes())) {
+                        Ok(r) if r.status == 200 => lats.push(ts.elapsed().as_secs_f64() * 1e3),
+                        _ => {
+                            errors.fetch_add(1, Ordering::Relaxed);
+                        }
+                    }
+                }
+            })
+        })
+        .collect();
+    let mut lats: Vec<f64> = handles.into_iter().flat_map(|h| h.join().unwrap()).collect();
+    lats.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    (lats, errors.load(Ordering::Relaxed))
+}
+
+fn main() -> anyhow::Result<()> {
+    let cli = Cli::from_env()?;
+    let events = cli.get_usize("events")?.unwrap_or(150);
+    let rps = cli.get_f64("rps")?.unwrap_or(120.0);
+
+    let mut cfg = ServeConfig::default();
+    cfg.bind = "127.0.0.1:0".into();
+    cfg.backend = cli.get("backend").unwrap_or("xla").to_string();
+    cfg.max_batch = 16;
+    let server = Server::start(cfg)?;
+    let addr = server.addr().to_string();
+
+    let mut table = Table::new(
+        "Web scenarios (paper §1): latency vs SLO, baseline vs speculative",
+        &["scenario", "SLO ms", "mode", "p50 ms", "p95 ms", "p99 ms", "SLO hit %", "errors"],
+    );
+    for scenario in [Scenario::Recommendation, Scenario::Cdn, Scenario::Ads, Scenario::Ecommerce] {
+        for mode in ["baseline", "sd"] {
+            let (lats, errors) = replay(&addr, scenario, mode, events, rps);
+            let slo = scenario.slo_ms();
+            let hit = lats.iter().filter(|l| **l <= slo).count() as f64 / lats.len() as f64;
+            table.row(vec![
+                scenario.name().into(),
+                format!("{slo:.0}"),
+                mode.into(),
+                format!("{:.1}", quantile(&lats, 0.50)),
+                format!("{:.1}", quantile(&lats, 0.95)),
+                format!("{:.1}", quantile(&lats, 0.99)),
+                format!("{:.1}", 100.0 * hit),
+                format!("{errors}"),
+            ]);
+        }
+    }
+    table.print();
+    table.write_csv("results/web_scenarios.csv")?;
+    println!("wrote results/web_scenarios.csv");
+    Ok(())
+}

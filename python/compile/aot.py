@@ -1,0 +1,290 @@
+"""AOT entrypoint: train (cached) -> lower to HLO text -> export artifacts.
+
+Python runs ONCE here (``make artifacts``); the Rust coordinator is fully
+self-contained afterwards.  Interchange is HLO **text**, not serialized
+HloModuleProto: jax >= 0.5 emits protos with 64-bit instruction ids that the
+xla crate's xla_extension 0.5.1 rejects; the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Exports into --out-dir (default ../artifacts):
+  {target,draft}_fwd_b{1,8,32}.hlo.txt     fused-attention forwards
+  {target,draft}_fwd_pallas_b1.hlo.txt     Pallas-attention forwards (L1 path)
+  accept_kernel.hlo.txt                    Pallas Gaussian-acceptance kernel
+  weights_{target,draft}.bin               flat f32 LE dumps for the Rust
+                                           native backend (parity tests)
+  golden_*.bin                             pinned I/O vectors (Rust tests)
+  manifest.json                            index of all of the above
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import pathlib
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import datagen, train
+from .kernels import ref
+from .kernels.gaussian_head import gaussian_accept
+from .model import CONFIGS, DRAFT, TARGET, ModelConfig, flatten_params, forward
+
+SCHEMA_VERSION = 4  # bump to invalidate caches on incompatible changes
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (the 0.5.1-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # print_large_constants=True is load-bearing: the default elides weight
+    # tensors as `constant({...})`, which parses back as zeros on the Rust
+    # side and silently destroys numerics.
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def lower_forward(params, cfg: ModelConfig, batch: int, use_pallas: bool,
+                  n_ctx: int | None = None) -> str:
+    """Lower tokens[batch, n, patch] -> (means,) with weights baked in.
+
+    ``n_ctx`` < cfg.n_ctx emits a *sequence-length-specialized* variant:
+    XLA compiles a graph whose matmuls and attention are sized to the short
+    context, so the runtime can route short prefixes (the common case during
+    decoding: history 4 + gamma proposals) to a ~3-4x cheaper executable
+    instead of always padding to the maximum context (see EXPERIMENTS.md
+    §Perf).  Causality makes the shorter positional-embedding slice exact.
+    """
+    n = n_ctx or cfg.n_ctx
+
+    def fn(tokens):
+        return (forward(params, tokens, cfg, use_pallas=use_pallas),)
+
+    spec = jax.ShapeDtypeStruct((batch, n, cfg.patch), jnp.float32)
+    return to_hlo_text(jax.jit(fn).lower(spec))
+
+
+def lower_accept_kernel(batch: int, dim: int) -> str:
+    def fn(x, mu_p, mu_q, sigma, bias):
+        return gaussian_accept(x, mu_p, mu_q, sigma, bias)
+
+    v = jax.ShapeDtypeStruct((batch, dim), jnp.float32)
+    s = jax.ShapeDtypeStruct((1,), jnp.float32)
+    return to_hlo_text(jax.jit(fn).lower(v, v, v, s, s))
+
+
+def dump_weights(params, path: pathlib.Path) -> list[dict]:
+    """Flat f32 little-endian dump + tensor index for the Rust loader."""
+    index, bufs, offset = [], [], 0
+    for name, tensor in flatten_params(params):
+        arr = np.asarray(tensor, dtype="<f4")
+        index.append({"name": name, "shape": list(arr.shape), "offset": offset})
+        bufs.append(arr.tobytes())
+        offset += arr.size
+    path.write_bytes(b"".join(bufs))
+    return index
+
+
+def config_hash(tc: train.TrainConfig) -> str:
+    blob = json.dumps(
+        {
+            "schema": SCHEMA_VERSION,
+            "target": TARGET.__dict__,
+            "draft": DRAFT.__dict__,
+            "train": tc.__dict__,
+            "datasets": {k: v.__dict__ for k, v in datagen.SPECS.items()},
+        },
+        sort_keys=True, default=str,
+    )
+    return hashlib.sha256(blob.encode()).hexdigest()[:16]
+
+
+def export_golden(out: pathlib.Path, params_t, params_d) -> dict:
+    """Pinned vectors consumed by cargo tests (parity + datagen equivalence)."""
+    golden: dict = {}
+    # Model I/O parity: one real window from the etth1 test split.
+    spec = datagen.SPECS["etth1"]
+    win = datagen.sample_windows(spec, TARGET.patch, TARGET.n_ctx, 1, seed=999, split="test")
+    tokens = jnp.asarray(win[:, :-1])  # [1, 32, 24]
+    mu_t = forward(params_t, tokens, TARGET, use_pallas=False)
+    mu_d = forward(params_d, tokens, DRAFT, use_pallas=False)
+    np.asarray(tokens, "<f4").tofile(out / "golden_input.bin")
+    np.asarray(mu_t, "<f4").tofile(out / "golden_target_means.bin")
+    np.asarray(mu_d, "<f4").tofile(out / "golden_draft_means.bin")
+    golden["model_io"] = {
+        "input": "golden_input.bin",
+        "target_means": "golden_target_means.bin",
+        "draft_means": "golden_draft_means.bin",
+        "shape": [1, TARGET.n_ctx, TARGET.patch],
+    }
+    # Acceptance kernel golden.
+    key = jax.random.PRNGKey(42)
+    kx, kp, kq = jax.random.split(key, 3)
+    x = jax.random.normal(kx, (32, TARGET.patch), jnp.float32)
+    mu_p = x + 0.3 * jax.random.normal(kp, x.shape, jnp.float32)
+    mu_q = x + 0.3 * jax.random.normal(kq, x.shape, jnp.float32)
+    lr, alpha = ref.gaussian_accept_ref(x, mu_p, mu_q, 0.5, bias=1.0)
+    for name, arr in [("x", x), ("mu_p", mu_p), ("mu_q", mu_q),
+                      ("log_ratio", lr), ("alpha", alpha)]:
+        np.asarray(arr, "<f4").tofile(out / f"golden_accept_{name}.bin")
+    golden["accept"] = {"batch": 32, "dim": TARGET.patch, "sigma": 0.5, "bias": 1.0}
+    # Datagen equivalence: first 64 raw f64 samples of channel 0 per dataset,
+    # plus normalization stats, so the Rust generator can prove it is the
+    # same process.
+    dg = {}
+    for name, sp in datagen.SPECS.items():
+        raw = datagen.generate(sp)
+        train_end, _ = datagen.train_val_test_split(sp.length)
+        mu = raw[:, :train_end].mean(axis=1)
+        sd = raw[:, :train_end].std(axis=1)
+        raw[0, :64].astype("<f8").tofile(out / f"golden_data_{name}.bin")
+        dg[name] = {
+            "file": f"golden_data_{name}.bin",
+            "chan0_mean": float(mu[0]),
+            "chan0_std": float(sd[0]),
+        }
+    golden["datagen"] = dg
+    return golden
+
+
+# (batch, n_ctx) shape grid: batch variants at full context for the
+# dynamic batcher, plus short-sequence variants at b=1/b=8 for the decode
+# hot path (shape specialization, §Perf).
+SHAPE_GRID = ((1, 8), (1, 16), (1, 32), (8, 8), (8, 16), (8, 32), (32, 16), (32, 32))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--quick", action="store_true",
+                    help="tiny training run (CI); models underfit but all "
+                         "artifact plumbing is exercised")
+    ap.add_argument("--force", action="store_true", help="ignore caches")
+    ap.add_argument("--skip-xl", action="store_true", default=True)
+    args = ap.parse_args()
+
+    out = pathlib.Path(args.out_dir).resolve()
+    out.mkdir(parents=True, exist_ok=True)
+    cache = out / "cache"
+    cache.mkdir(exist_ok=True)
+
+    tc = train.TrainConfig()
+    if args.quick:
+        tc = tc.scaled(0.05)
+    chash = config_hash(tc) + ("-quick" if args.quick else "")
+
+    manifest_path = out / "manifest.json"
+    if manifest_path.exists() and not args.force:
+        old = json.loads(manifest_path.read_text())
+        if old.get("config_hash") == chash and all(
+            (out / a["file"]).exists() for a in old.get("artifacts", [])
+        ):
+            print(f"artifacts up-to-date (hash {chash}); nothing to do")
+            return
+
+    # ---- train (cached by config hash) ----------------------------------
+    wcache = cache / f"weights-{chash}.npz"
+    if wcache.exists() and not args.force:
+        print(f"loading cached weights {wcache.name}")
+        blob = np.load(wcache)
+        params_t = unflatten(TARGET, blob, "t.")
+        params_d = unflatten(DRAFT, blob, "d.")
+        corpus = train.build_corpus(tc, TARGET.n_ctx, TARGET.patch)
+    else:
+        print(f"building corpus ({tc.windows_per_dataset} windows x "
+              f"{len(datagen.SPECS)} datasets)")
+        corpus = train.build_corpus(tc, TARGET.n_ctx, TARGET.patch)
+        params_t = train.pretrain_target(TARGET, tc, corpus)
+        params_d = train.distill_draft(DRAFT, TARGET, params_t, tc, corpus)
+        save = {}
+        for pfx, p in (("t.", params_t), ("d.", params_d)):
+            for name, tensor in flatten_params(p):
+                save[pfx + name] = np.asarray(tensor)
+        np.savez(wcache, **save)
+    gap = train.mean_gap(params_t, params_d, TARGET, DRAFT, corpus)
+    print(f"draft-target mean gap ||mu_p - mu_q|| = {gap:.4f} "
+          f"(acceptance at sigma=0.5 ~ 2*Phi(-gap/(2*0.5)))")
+
+    # ---- export ----------------------------------------------------------
+    artifacts = []
+    for mkey, cfg, params in (("target", TARGET, params_t), ("draft", DRAFT, params_d)):
+        for b, n in SHAPE_GRID:
+            f = f"{mkey}_fwd_b{b}_n{n}.hlo.txt" if n != cfg.n_ctx else f"{mkey}_fwd_b{b}.hlo.txt"
+            print(f"lowering {f}")
+            (out / f).write_text(lower_forward(params, cfg, b, use_pallas=False, n_ctx=n))
+            artifacts.append({"file": f, "model": mkey, "batch": b, "n_ctx": n,
+                              "kernel": "fused"})
+        f = f"{mkey}_fwd_pallas_b1.hlo.txt"
+        print(f"lowering {f} (Pallas interpret)")
+        (out / f).write_text(lower_forward(params, cfg, 1, use_pallas=True))
+        artifacts.append({"file": f, "model": mkey, "batch": 1, "n_ctx": cfg.n_ctx,
+                          "kernel": "pallas"})
+
+    print("lowering accept_kernel.hlo.txt")
+    (out / "accept_kernel.hlo.txt").write_text(lower_accept_kernel(32, TARGET.patch))
+
+    windex_t = dump_weights(params_t, out / "weights_target.bin")
+    windex_d = dump_weights(params_d, out / "weights_draft.bin")
+    golden = export_golden(out, params_t, params_d)
+
+    manifest = {
+        "schema": SCHEMA_VERSION,
+        "config_hash": chash,
+        "quick": args.quick,
+        "patch": TARGET.patch,
+        "n_ctx": TARGET.n_ctx,
+        "batches": sorted({b for b, _ in SHAPE_GRID}),
+        "shape_grid": [list(x) for x in SHAPE_GRID],
+        "models": {
+            "target": model_entry(TARGET, "weights_target.bin", windex_t),
+            "draft": model_entry(DRAFT, "weights_draft.bin", windex_d),
+        },
+        "artifacts": artifacts,
+        "accept_kernel": {"file": "accept_kernel.hlo.txt", "batch": 32,
+                          "dim": TARGET.patch},
+        "golden": golden,
+        "distill": {"sigma": tc.distill_sigma, "tau": tc.distill_tau,
+                    "w_kl": tc.distill_w_kl, "w_mse": tc.distill_w_mse,
+                    "mean_gap": gap},
+        "datasets": {k: v.__dict__ for k, v in datagen.SPECS.items()},
+    }
+    manifest_path.write_text(json.dumps(manifest, indent=2, default=str))
+    print(f"wrote {manifest_path} ({len(artifacts)} HLO artifacts)")
+
+
+def model_entry(cfg: ModelConfig, weights_file: str, index: list[dict]) -> dict:
+    return {
+        "name": cfg.name,
+        "patch": cfg.patch, "n_ctx": cfg.n_ctx,
+        "d_model": cfg.d_model, "n_layers": cfg.n_layers,
+        "n_heads": cfg.n_heads, "d_ff": cfg.d_ff,
+        "param_count": cfg.param_count(),
+        "weights": weights_file,
+        "tensors": index,
+    }
+
+
+def unflatten(cfg: ModelConfig, blob, prefix: str):
+    """Rebuild the params pytree from an npz cache."""
+    from .model import init_params  # structure template
+
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    params["embed_w"] = jnp.asarray(blob[prefix + "embed_w"])
+    params["embed_b"] = jnp.asarray(blob[prefix + "embed_b"])
+    params["pos"] = jnp.asarray(blob[prefix + "pos"])
+    params["final_norm"] = jnp.asarray(blob[prefix + "final_norm"])
+    params["head_w"] = jnp.asarray(blob[prefix + "head_w"])
+    params["head_b"] = jnp.asarray(blob[prefix + "head_b"])
+    for i in range(cfg.n_layers):
+        for k in ("ln1", "wqkv", "wo", "ln2", "wg", "wu", "wd"):
+            params["layers"][i][k] = jnp.asarray(blob[f"{prefix}layers.{i}.{k}"])
+    return params
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,116 @@
+"""Pallas fused causal attention — the L1 compute hot-spot.
+
+The paper's targets (Timer / Timer-XL) run flash-/memory-efficient attention
+on CUDA (paper §4.1.6).  On this stack the same IO-minimizing schedule is
+expressed as a Pallas HBM<->VMEM block schedule (DESIGN.md §Hardware-
+Adaptation):
+
+* grid = (batch, heads, q-blocks): each program owns one ``block_q x d_head``
+  query tile resident in VMEM (the SRAM tile of the CUDA version);
+* K/V are streamed tile-by-tile with ``pl.load`` (the HBM->VMEM pipeline a
+  threadblock would issue), with an **online-softmax** accumulator so no
+  [N, N] score matrix ever materializes;
+* the causal frontier prunes the K-block loop, exactly like flash-attention's
+  block skipping — a query tile only visits ``ceil((q_end)/block_k)`` tiles;
+* the two matmuls (QK^T, PV) are MXU-shaped ([block_q, d_head] x
+  [d_head, block_k]); with bf16 inputs on real TPU these hit the systolic
+  array.  ``interpret=True`` is mandatory here: CPU PJRT cannot execute the
+  Mosaic custom-call a real TPU lowering would emit, so the kernel lowers to
+  plain HLO (correctness path); TPU performance is *estimated* in
+  EXPERIMENTS.md §Perf from the BlockSpec footprint.
+
+Correctness oracle: ``ref.causal_attention_ref`` (pytest sweeps shapes).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = float("-inf")
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, *, block_q: int, block_k: int, scale: float):
+    """One (batch, head, q-block) program: online-softmax over K tiles."""
+    qi = pl.program_id(2)
+    q = q_ref[0, 0].astype(jnp.float32) * scale  # [block_q, dh] VMEM tile
+    dh = q.shape[-1]
+    q_start = qi * block_q
+
+    m0 = jnp.full((block_q,), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((block_q,), jnp.float32)
+    acc0 = jnp.zeros((block_q, dh), jnp.float32)
+
+    # Causal frontier: K tiles strictly past the last query row are skipped.
+    n_kb = (q_start + block_q + block_k - 1) // block_k
+
+    def body(kb, carry):
+        m, l, acc = carry
+        k = pl.load(k_ref, (0, 0, pl.dslice(kb * block_k, block_k), slice(None)))
+        v = pl.load(v_ref, (0, 0, pl.dslice(kb * block_k, block_k), slice(None)))
+        s = q @ k.astype(jnp.float32).T  # [block_q, block_k] (MXU matmul)
+        qpos = q_start + jax.lax.iota(jnp.int32, block_q)
+        kpos = kb * block_k + jax.lax.iota(jnp.int32, block_k)
+        s = jnp.where(qpos[:, None] >= kpos[None, :], s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m - m_new)
+        l_new = corr * l + p.sum(axis=-1)
+        acc_new = acc * corr[:, None] + p @ v.astype(jnp.float32)
+        return m_new, l_new, acc_new
+
+    m, l, acc = jax.lax.fori_loop(0, n_kb, body, (m0, l0, acc0))
+    o_ref[0, 0] = (acc / l[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_q", "block_k"))
+def causal_attention(q, k, v, block_q: int = 16, block_k: int = 16):
+    """Fused causal attention.  q, k, v: [B, H, N, Dh] -> [B, H, N, Dh].
+
+    N must be divisible by block_q and block_k (the model pads its context
+    to Nmax, so this holds by construction on the AOT path).
+    """
+    b, h, n, dh = q.shape
+    block_q = min(block_q, n)
+    block_k = min(block_k, n)
+    if n % block_q or n % block_k:
+        raise ValueError(f"N={n} not divisible by blocks ({block_q},{block_k})")
+    scale = 1.0 / (dh**0.5)
+    grid = (b, h, n // block_q)
+    return pl.pallas_call(
+        functools.partial(_flash_kernel, block_q=block_q, block_k=block_k, scale=scale),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, dh), lambda bi, hi, qi: (bi, hi, qi, 0)),
+            pl.BlockSpec((1, 1, n, dh), lambda bi, hi, qi: (bi, hi, 0, 0)),
+            pl.BlockSpec((1, 1, n, dh), lambda bi, hi, qi: (bi, hi, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, dh), lambda bi, hi, qi: (bi, hi, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, n, dh), q.dtype),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls (see module doc)
+    )(q, k, v)
+
+
+def vmem_footprint_bytes(n: int, dh: int, block_q: int = 16, block_k: int = 16,
+                         dtype_bytes: int = 4) -> dict:
+    """Analytic VMEM/MXU model used by the §Perf TPU estimate (no execution).
+
+    Returns per-program VMEM bytes and the arithmetic intensity of the two
+    matmuls; EXPERIMENTS.md §Perf combines this with MXU peak to estimate
+    real-TPU efficiency (interpret-mode wallclock is *not* a TPU proxy).
+    """
+    q_tile = block_q * dh * dtype_bytes
+    kv_tile = 2 * block_k * dh * dtype_bytes
+    acc = block_q * dh * 4 + 2 * block_q * 4  # fp32 accumulator + m/l rows
+    flops = 2 * 2 * block_q * block_k * dh  # QK^T and PV per tile pair
+    bytes_moved = kv_tile  # K/V streamed per tile; Q/acc resident
+    return {
+        "vmem_bytes": q_tile + kv_tile + acc,
+        "flops_per_tile": flops,
+        "bytes_per_tile": bytes_moved,
+        "arith_intensity": flops / bytes_moved,
+        "n_tiles": (n // block_q) * (n // block_k) / 2,  # causal halves the work
+    }

@@ -1,0 +1,73 @@
+"""Pallas fused Gaussian acceptance kernel (paper Eq. 7/8).
+
+Computes, for a batch of proposed patches x and the two model means, the
+log-likelihood ratio and the log-space acceptance probability of speculative
+decoding in a single fused pass:
+
+    log_ratio = -(||x - mu_p||^2 - ||x - mu_q||^2) / (2 sigma^2) + log(bias)
+    alpha     = exp(min(log_ratio, 0))        # == min(1, p/q * bias)
+
+The subtraction of squared norms is numerically the dangerous spot (two
+large nearby numbers); the kernel follows the paper's log-domain rule (§3.6)
+and fuses the difference-of-squares as sum((mu_q - mu_p) * (2x - mu_p -
+mu_q)), which is exact algebraically and avoids forming the two large norms.
+
+This kernel is exported as its own HLO artifact (``accept_kernel.hlo.txt``)
+and exercised from Rust as a cross-language validation path; the serving hot
+loop uses the native Rust implementation of the same formula (bit-compared
+in ``rust/tests/xla_integration.rs``).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _accept_kernel(x_ref, mup_ref, muq_ref, sig_ref, bias_ref, lr_ref, a_ref):
+    x = x_ref[...].astype(jnp.float32)
+    mup = mup_ref[...].astype(jnp.float32)
+    muq = muq_ref[...].astype(jnp.float32)
+    sigma = sig_ref[0]
+    log_bias = jnp.log(bias_ref[0])
+    # ||x-mu_p||^2 - ||x-mu_q||^2 == sum((mu_q - mu_p) * (2x - mu_p - mu_q))
+    diff = jnp.sum((muq - mup) * (2.0 * x - mup - muq), axis=-1)
+    log_ratio = -diff / (2.0 * sigma * sigma) + log_bias
+    lr_ref[...] = log_ratio
+    a_ref[...] = jnp.exp(jnp.minimum(log_ratio, 0.0))
+
+
+@functools.partial(jax.jit, static_argnames=("block_b",))
+def gaussian_accept(x, mu_p, mu_q, sigma, bias, block_b: int = 32):
+    """Fused acceptance.  x, mu_p, mu_q: [B, d]; sigma, bias: [1] scalars.
+
+    Returns (log_ratio [B], alpha [B]), both float32.
+    """
+    b, d = x.shape
+    block_b = min(block_b, b)
+    if b % block_b:
+        raise ValueError(f"B={b} not divisible by block_b={block_b}")
+    grid = (b // block_b,)
+    return pl.pallas_call(
+        _accept_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b, d), lambda i: (i, 0)),
+            pl.BlockSpec((block_b, d), lambda i: (i, 0)),
+            pl.BlockSpec((block_b, d), lambda i: (i, 0)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_b,), lambda i: (i,)),
+            pl.BlockSpec((block_b,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b,), jnp.float32),
+            jax.ShapeDtypeStruct((b,), jnp.float32),
+        ],
+        interpret=True,  # CPU PJRT path; see attention.py module doc
+    )(x, mu_p, mu_q, sigma, bias)

@@ -1,0 +1,51 @@
+"""Pure-jnp oracles for the Pallas kernels (L1 correctness ground truth).
+
+Every Pallas kernel in this package has an exact reference here; pytest
+asserts allclose between kernel and oracle across shape/dtype sweeps
+(``python/tests/test_kernels.py``).  These references are also what the
+training loop uses (interpret-mode Pallas is too slow to train through).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def causal_attention_ref(q, k, v, scale: float | None = None):
+    """Causal scaled-dot-product attention.
+
+    q, k, v: [B, H, N, Dh].  Returns [B, H, N, Dh].
+    """
+    if scale is None:
+        scale = 1.0 / (q.shape[-1] ** 0.5)
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q, k) * scale
+    n = q.shape[2]
+    mask = jnp.tril(jnp.ones((n, n), dtype=bool))
+    logits = jnp.where(mask[None, None], logits, -jnp.inf)
+    probs = jnp.exp(logits - logits.max(axis=-1, keepdims=True))
+    probs = probs / probs.sum(axis=-1, keepdims=True)
+    return jnp.einsum("bhqk,bhkd->bhqd", probs, v)
+
+
+def gaussian_accept_ref(x, mu_p, mu_q, sigma, bias: float = 1.0):
+    """Log-space acceptance for isotropic Gaussian heads (paper Eq. 7/8).
+
+    x, mu_p, mu_q: [B, d]; sigma: scalar or [B].
+    Returns (log_ratio [B], alpha [B]) with
+      log_ratio = -(||x-mu_p||^2 - ||x-mu_q||^2) / (2 sigma^2) + log(bias)
+      alpha     = min(1, exp(log_ratio)).
+    ``bias`` is the paper's tolerance lambda (Table 1/5 "bias" rows).
+    """
+    sigma = jnp.asarray(sigma)
+    dp = jnp.sum((x - mu_p) ** 2, axis=-1)
+    dq = jnp.sum((x - mu_q) ** 2, axis=-1)
+    log_ratio = -(dp - dq) / (2.0 * sigma**2) + jnp.log(bias)
+    # exp(min(lr,0)) == min(1, exp(lr)), and it cannot overflow for lr >> 0.
+    alpha = jnp.exp(jnp.minimum(log_ratio, 0.0))
+    return log_ratio, alpha
+
+
+def rmsnorm_ref(x, w, eps: float = 1e-6):
+    """RMSNorm over the last axis: x * w / rms(x)."""
+    ms = jnp.mean(x.astype(jnp.float32) ** 2, axis=-1, keepdims=True)
+    return (x * (1.0 / jnp.sqrt(ms + eps)) * w).astype(x.dtype)

@@ -1,0 +1,160 @@
+"""L2: Timer-style patch-token decoder in JAX.
+
+Decoder-only causal Transformer over time-series patches (Timer / Timer-XL
+family, paper §2): patch embedding -> pre-RMSNorm blocks (causal MHA + SwiGLU
+MLP) -> RMSNorm -> linear head emitting the *mean* of the isotropic Gaussian
+next-patch distribution N(mu(H), sigma^2 I).  sigma is the paper's runtime
+noise knob (swept in Tables 1/3/4), applied by the serving layer, so the
+lowered graph outputs means only.
+
+``forward(..., use_pallas=True)`` routes attention through the L1 Pallas
+kernel so it lowers into the same HLO artifact; ``use_pallas=False`` uses the
+pure-jnp reference (XLA-fused) — both variants are exported and the Rust
+runtime can load either (config ``kernel = "pallas" | "fused"``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import ref
+from .kernels.attention import causal_attention
+
+Params = dict[str, Any]
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Architecture hyperparameters for one model variant."""
+
+    name: str
+    patch: int = 24     # patch length P == Gaussian head dimension d
+    n_ctx: int = 32     # Nmax patches (fixed AOT shape)
+    d_model: int = 128
+    n_layers: int = 4
+    n_heads: int = 4
+    d_ff: int = 256
+
+    @property
+    def d_head(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+    def param_count(self) -> int:
+        d, f, p = self.d_model, self.d_ff, self.patch
+        per_layer = 4 * d * d + 3 * d * f + 2 * d  # qkv+out, swiglu, norms
+        return p * d + d + self.n_ctx * d + self.n_layers * per_layer + d + d * p + p
+
+
+# The paper's target/draft pair: draft is the 0.25x down-scaled variant
+# (depth and width halved => ~1/8-1/4 of the parameters / FLOPs, matching the
+# paper's 0.125x-0.5x exploration band).
+TARGET = ModelConfig(name="timer-base", d_model=128, n_layers=4, n_heads=4, d_ff=256)
+DRAFT = ModelConfig(name="timer-draft-0.25x", d_model=64, n_layers=2, n_heads=2, d_ff=128)
+# Optional larger target for scale ablations ("timer-xl" stand-in).
+TARGET_XL = ModelConfig(name="timer-xl", d_model=256, n_layers=6, n_heads=8, d_ff=512)
+
+CONFIGS = {c.name: c for c in (TARGET, DRAFT, TARGET_XL)}
+
+
+def init_params(cfg: ModelConfig, key: jax.Array) -> Params:
+    """Scaled-normal initialization (0.02 / sqrt(2*layers) on residual outs)."""
+    keys = iter(jax.random.split(key, 6 + 8 * cfg.n_layers))
+    d, f, p = cfg.d_model, cfg.d_ff, cfg.patch
+    std = 0.02
+    resid_std = std / (2.0 * cfg.n_layers) ** 0.5
+
+    def norm(k, shape, s):
+        return (jax.random.normal(k, shape, jnp.float32) * s)
+
+    params: Params = {
+        "embed_w": norm(next(keys), (p, d), std),
+        "embed_b": jnp.zeros((d,), jnp.float32),
+        "pos": norm(next(keys), (cfg.n_ctx, d), std),
+        "final_norm": jnp.ones((d,), jnp.float32),
+        "head_w": norm(next(keys), (d, p), std),
+        "head_b": jnp.zeros((p,), jnp.float32),
+        "layers": [],
+    }
+    for _ in range(cfg.n_layers):
+        params["layers"].append(
+            {
+                "ln1": jnp.ones((d,), jnp.float32),
+                "wqkv": norm(next(keys), (d, 3 * d), std),
+                "wo": norm(next(keys), (d, d), resid_std),
+                "ln2": jnp.ones((d,), jnp.float32),
+                "wg": norm(next(keys), (d, f), std),
+                "wu": norm(next(keys), (d, f), std),
+                "wd": norm(next(keys), (f, d), resid_std),
+            }
+        )
+    return params
+
+
+def _attention(x: jax.Array, layer: Params, cfg: ModelConfig, use_pallas: bool) -> jax.Array:
+    b, n, d = x.shape
+    qkv = x @ layer["wqkv"]  # [B, N, 3D]
+    qkv = qkv.reshape(b, n, 3, cfg.n_heads, cfg.d_head)
+    q, k, v = (qkv[:, :, i].transpose(0, 2, 1, 3) for i in range(3))  # [B,H,N,Dh]
+    if use_pallas:
+        o = causal_attention(q, k, v)
+    else:
+        o = ref.causal_attention_ref(q, k, v)
+    o = o.transpose(0, 2, 1, 3).reshape(b, n, d)
+    return o @ layer["wo"]
+
+
+def _mlp(x: jax.Array, layer: Params) -> jax.Array:
+    g = x @ layer["wg"]
+    u = x @ layer["wu"]
+    return (jax.nn.silu(g) * u) @ layer["wd"]
+
+
+def forward(params: Params, tokens: jax.Array, cfg: ModelConfig,
+            use_pallas: bool = False) -> jax.Array:
+    """tokens [B, N, P] -> next-patch means [B, N, P].
+
+    Output position i is mu(patch_{i+1} | patches_{<=i}); causality guarantees
+    that one forward over history+gamma drafted patches yields every prefix
+    conditional the batched validation pass needs (paper Alg. 1 line 4).
+    """
+    b, n, p = tokens.shape
+    assert p == cfg.patch, (p, cfg.patch)
+    assert n <= cfg.n_ctx, (n, cfg.n_ctx)
+    x = tokens @ params["embed_w"] + params["embed_b"]
+    x = x + params["pos"][:n]
+    for layer in params["layers"]:
+        x = x + _attention(ref.rmsnorm_ref(x, layer["ln1"]), layer, cfg, use_pallas)
+        x = x + _mlp(ref.rmsnorm_ref(x, layer["ln2"]), layer)
+    x = ref.rmsnorm_ref(x, params["final_norm"])
+    return x @ params["head_w"] + params["head_b"]
+
+
+def flops_per_forward(cfg: ModelConfig, batch: int, n: int) -> float:
+    """Dense matmul FLOPs of one forward (the paper's \\hat{c} numerator)."""
+    d, f, p = cfg.d_model, cfg.d_ff, cfg.patch
+    per_tok = 2 * (p * d + 4 * d * d * cfg.n_layers + 3 * d * f * cfg.n_layers + d * p)
+    attn = 4 * n * n * d * cfg.n_layers  # QK^T + PV per layer
+    return batch * (n * per_tok + attn)
+
+
+def flatten_params(params: Params) -> list[tuple[str, jax.Array]]:
+    """Deterministic (name, tensor) list shared with the Rust loader."""
+    out = [
+        ("embed_w", params["embed_w"]),
+        ("embed_b", params["embed_b"]),
+        ("pos", params["pos"]),
+    ]
+    for i, layer in enumerate(params["layers"]):
+        for k in ("ln1", "wqkv", "wo", "ln2", "wg", "wu", "wd"):
+            out.append((f"layers.{i}.{k}", layer[k]))
+    out += [
+        ("final_norm", params["final_norm"]),
+        ("head_w", params["head_w"]),
+        ("head_b", params["head_b"]),
+    ]
+    return out

@@ -1,0 +1,186 @@
+"""Build-time pretraining + distillation (compile path only, never serving).
+
+The paper's protocol is inference-only over *fixed checkpoints* (§4.1.5):
+targets are pretrained foundation models, drafts are down-sampled variants
+distilled with a combined KL + MSE objective at temperature tau (§4.1.2).
+No public Timer checkpoints are usable here, so ``make artifacts`` performs
+the equivalent one-time procedure on the synthetic corpus (DESIGN.md §3):
+
+1. pretrain the target with the Gaussian NLL (== MSE at fixed sigma) on
+   teacher-forced windows from all four datasets;
+2. distill the 0.25x draft against the frozen target means:
+       L = w_kl * ||mu_q - mu_p||^2 / (2 sigma_d^2 tau^2) + w_mse * ||mu_q - x||^2
+   which is exactly KL(N(mu_q, s) || N(mu_p, s)) for isotropic heads plus the
+   data term.
+
+Optimizer is a hand-rolled Adam (no optax in this environment).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import datagen
+from .model import ModelConfig, Params, forward, init_params
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    steps: int = 700
+    batch: int = 32
+    lr: float = 3e-4
+    warmup: int = 50
+    windows_per_dataset: int = 2048
+    seed: int = 7
+    # Distillation knobs (paper §4.1.2).
+    distill_steps: int = 500
+    distill_tau: float = 2.0
+    distill_w_kl: float = 0.7
+    distill_w_mse: float = 0.3
+    distill_sigma: float = 0.5
+
+    def scaled(self, frac: float) -> "TrainConfig":
+        """Down-scaled config for --quick CI runs."""
+        return dataclasses.replace(
+            self,
+            steps=max(20, int(self.steps * frac)),
+            distill_steps=max(20, int(self.distill_steps * frac)),
+            windows_per_dataset=max(256, int(self.windows_per_dataset * frac)),
+        )
+
+
+def build_corpus(tc: TrainConfig, n_ctx: int, patch: int) -> np.ndarray:
+    """Mixed-dataset training windows [n_total, n_ctx+1, patch] (train split)."""
+    parts = [
+        datagen.sample_windows(spec, patch, n_ctx, tc.windows_per_dataset, seed=tc.seed + j)
+        for j, spec in enumerate(datagen.SPECS.values())
+    ]
+    corpus = np.concatenate(parts, axis=0)
+    perm = np.argsort(datagen.uniform01(tc.seed * 31 + 5, np.arange(len(corpus))))
+    return corpus[perm]
+
+
+# ---------------------------------------------------------------------------
+# Hand-rolled Adam.
+# ---------------------------------------------------------------------------
+
+
+def adam_init(params: Params):
+    zeros = jax.tree_util.tree_map(jnp.zeros_like, params)
+    return {"m": zeros, "v": jax.tree_util.tree_map(jnp.zeros_like, params), "t": 0}
+
+
+def adam_update(params, grads, state, lr, b1=0.9, b2=0.999, eps=1e-8):
+    t = state["t"] + 1
+    m = jax.tree_util.tree_map(lambda m_, g: b1 * m_ + (1 - b1) * g, state["m"], grads)
+    v = jax.tree_util.tree_map(lambda v_, g: b2 * v_ + (1 - b2) * g * g, state["v"], grads)
+    mh_scale = 1.0 / (1 - b1**t)
+    vh_scale = 1.0 / (1 - b2**t)
+    new_params = jax.tree_util.tree_map(
+        lambda p_, m_, v_: p_ - lr * (m_ * mh_scale) / (jnp.sqrt(v_ * vh_scale) + eps),
+        params, m, v,
+    )
+    return new_params, {"m": m, "v": v, "t": t}
+
+
+def _lr_at(step, tc: TrainConfig):
+    warm = jnp.minimum(1.0, (step + 1) / tc.warmup)
+    decay = 0.5 * (1 + jnp.cos(jnp.pi * jnp.minimum(1.0, step / tc.steps)))
+    return tc.lr * warm * (0.1 + 0.9 * decay)
+
+
+# ---------------------------------------------------------------------------
+# Target pretraining.
+# ---------------------------------------------------------------------------
+
+
+def pretrain_target(cfg: ModelConfig, tc: TrainConfig, corpus: np.ndarray,
+                    log: Callable[[str], None] = print) -> Params:
+    key = jax.random.PRNGKey(tc.seed)
+    params = init_params(cfg, key)
+
+    def loss_fn(p, batch):
+        inp, tgt = batch[:, :-1], batch[:, 1:]
+        mu = forward(p, inp, cfg, use_pallas=False)
+        return jnp.mean((mu - tgt) ** 2)
+
+    @jax.jit
+    def step_fn(p, opt, batch, step):
+        loss, grads = jax.value_and_grad(loss_fn)(p, batch)
+        p, opt = adam_update(p, grads, opt, _lr_at(step, tc))
+        return p, opt, loss
+
+    opt = adam_init(params)
+    n = len(corpus)
+    t0 = time.time()
+    for step in range(tc.steps):
+        lo = (step * tc.batch) % max(1, n - tc.batch)
+        batch = jnp.asarray(corpus[lo : lo + tc.batch])
+        params, opt, loss = step_fn(params, opt, batch, step)
+        if step % 100 == 0 or step == tc.steps - 1:
+            log(f"[target {cfg.name}] step {step:4d} loss {float(loss):.4f} "
+                f"({time.time() - t0:.0f}s)")
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Draft distillation.
+# ---------------------------------------------------------------------------
+
+
+def distill_draft(draft_cfg: ModelConfig, target_cfg: ModelConfig,
+                  target_params: Params, tc: TrainConfig, corpus: np.ndarray,
+                  log: Callable[[str], None] = print) -> Params:
+    key = jax.random.PRNGKey(tc.seed + 1)
+    params = init_params(draft_cfg, key)
+    kl_scale = tc.distill_w_kl / (2.0 * tc.distill_sigma**2 * tc.distill_tau**2)
+
+    @jax.jit
+    def teacher_means(batch):
+        return forward(target_params, batch[:, :-1], target_cfg, use_pallas=False)
+
+    def loss_fn(p, batch, mu_t):
+        inp, tgt = batch[:, :-1], batch[:, 1:]
+        mu_q = forward(p, inp, draft_cfg, use_pallas=False)
+        l_kl = jnp.mean(jnp.sum((mu_q - mu_t) ** 2, axis=-1))
+        l_mse = jnp.mean((mu_q - tgt) ** 2)
+        return kl_scale * l_kl + tc.distill_w_mse * l_mse
+
+    @jax.jit
+    def step_fn(p, opt, batch, mu_t, step):
+        loss, grads = jax.value_and_grad(loss_fn)(p, batch, mu_t)
+        p, opt = adam_update(p, grads, opt, _lr_at(step, tc))
+        return p, opt, loss
+
+    opt = adam_init(params)
+    n = len(corpus)
+    t0 = time.time()
+    for step in range(tc.distill_steps):
+        lo = (step * tc.batch) % max(1, n - tc.batch)
+        batch = jnp.asarray(corpus[lo : lo + tc.batch])
+        mu_t = teacher_means(batch)
+        params, opt, loss = step_fn(params, opt, batch, mu_t, step)
+        if step % 100 == 0 or step == tc.distill_steps - 1:
+            log(f"[draft {draft_cfg.name}] step {step:4d} loss {float(loss):.4f} "
+                f"({time.time() - t0:.0f}s)")
+    return params
+
+
+def mean_gap(target_params, draft_params, target_cfg, draft_cfg, corpus,
+             n_batches: int = 8, batch: int = 32) -> float:
+    """Mean L2 distance ||mu_p - mu_q|| at the last position — the Mahalanobis
+    numerator that (with sigma) determines acceptance (Remark 5)."""
+    gaps = []
+    for i in range(n_batches):
+        b = jnp.asarray(corpus[i * batch : (i + 1) * batch, :-1])
+        mp = forward(target_params, b, target_cfg, use_pallas=False)[:, -1]
+        mq = forward(draft_params, b, draft_cfg, use_pallas=False)[:, -1]
+        gaps.append(jnp.sqrt(jnp.sum((mp - mq) ** 2, axis=-1)))
+    return float(jnp.mean(jnp.concatenate(gaps)))

@@ -1,0 +1,132 @@
+"""AOT pipeline tests: HLO text export invariants, weight dumps, manifest
+schema, and (when artifacts exist) consistency of the exported goldens."""
+
+import json
+import pathlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot, train
+from compile.model import DRAFT, TARGET, ModelConfig, forward, init_params
+
+ARTIFACTS = pathlib.Path(__file__).resolve().parents[2] / "artifacts"
+
+
+@pytest.fixture(scope="module")
+def tiny_params():
+    cfg = ModelConfig(name="tiny", patch=4, n_ctx=8, d_model=16, n_layers=1,
+                      n_heads=2, d_ff=32)
+    return cfg, init_params(cfg, jax.random.PRNGKey(0))
+
+
+def test_hlo_text_has_full_constants(tiny_params):
+    cfg, params = tiny_params
+    text = aot.lower_forward(params, cfg, batch=1, use_pallas=False)
+    assert text.startswith("HloModule")
+    # The elided form `constant({...})` must never appear: it parses as
+    # zeros on the Rust side (the bug print_large_constants=True fixes).
+    assert "constant({...})" not in text
+    # Entry layout matches [1, n_ctx, patch] -> tuple.
+    assert "f32[1,8,4]" in text
+
+
+def test_hlo_pallas_variant_lowers(tiny_params):
+    cfg, params = tiny_params
+    text = aot.lower_forward(params, cfg, batch=1, use_pallas=True)
+    assert text.startswith("HloModule")
+    assert "constant({...})" not in text
+
+
+def test_accept_kernel_lowers():
+    text = aot.lower_accept_kernel(batch=32, dim=24)
+    assert text.startswith("HloModule")
+    assert "f32[32,24]" in text
+
+
+def test_dump_weights_roundtrip(tiny_params, tmp_path):
+    cfg, params = tiny_params
+    blob = tmp_path / "w.bin"
+    index = aot.dump_weights(params, blob)
+    raw = np.fromfile(blob, dtype="<f4")
+    total = sum(int(np.prod(e["shape"])) for e in index)
+    assert len(raw) == total == cfg.param_count()
+    # Spot-check one tensor: offsets slice out exactly the right values.
+    e = next(i for i in index if i["name"] == "embed_w")
+    got = raw[e["offset"]: e["offset"] + int(np.prod(e["shape"]))]
+    np.testing.assert_array_equal(got, np.asarray(params["embed_w"]).ravel())
+
+
+def test_config_hash_stable_and_sensitive():
+    tc = train.TrainConfig()
+    assert aot.config_hash(tc) == aot.config_hash(tc)
+    tc2 = train.TrainConfig(steps=tc.steps + 1)
+    assert aot.config_hash(tc) != aot.config_hash(tc2)
+
+
+def test_unflatten_roundtrip(tiny_params, tmp_path):
+    _, params = tiny_params
+    # Save/load via the cache format used by aot.main.
+    save = {"t." + name: np.asarray(t) for name, t in
+            __import__("compile.model", fromlist=["flatten_params"]).flatten_params(params)}
+    np.savez(tmp_path / "w.npz", **save)
+    blob = np.load(tmp_path / "w.npz")
+    cfg = ModelConfig(name="tiny", patch=4, n_ctx=8, d_model=16, n_layers=1,
+                      n_heads=2, d_ff=32)
+    restored = aot.unflatten(cfg, blob, "t.")
+    x = jnp.ones((1, 8, 4), jnp.float32)
+    np.testing.assert_allclose(
+        np.asarray(forward(params, x, cfg)),
+        np.asarray(forward(restored, x, cfg)),
+        atol=1e-6,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Artifact-dependent checks (skipped until `make artifacts`).
+# ---------------------------------------------------------------------------
+
+needs_artifacts = pytest.mark.skipif(
+    not (ARTIFACTS / "manifest.json").exists(), reason="run `make artifacts`"
+)
+
+
+@needs_artifacts
+def test_manifest_schema():
+    m = json.loads((ARTIFACTS / "manifest.json").read_text())
+    assert m["patch"] == TARGET.patch
+    assert m["n_ctx"] == TARGET.n_ctx
+    for key in ("target", "draft"):
+        entry = m["models"][key]
+        assert (ARTIFACTS / entry["weights"]).exists()
+        assert entry["param_count"] > 0
+    for a in m["artifacts"]:
+        assert (ARTIFACTS / a["file"]).exists(), a["file"]
+        assert a["kernel"] in ("fused", "pallas")
+    assert m["models"]["draft"]["param_count"] * 3 < m["models"]["target"]["param_count"]
+
+
+@needs_artifacts
+def test_golden_target_means_match_recomputation():
+    """The exported golden output must equal a fresh forward through the
+    cached weights — guards against manifest/weights/golden skew."""
+    m = json.loads((ARTIFACTS / "manifest.json").read_text())
+    cache = ARTIFACTS / "cache" / f"weights-{m['config_hash']}.npz"
+    if not cache.exists():
+        pytest.skip("weights cache cleared")
+    blob = np.load(cache)
+    params = aot.unflatten(TARGET, blob, "t.")
+    tokens = np.fromfile(ARTIFACTS / "golden_input.bin", dtype="<f4").reshape(1, 32, 24)
+    want = np.fromfile(ARTIFACTS / "golden_target_means.bin", dtype="<f4").reshape(1, 32, 24)
+    got = np.asarray(forward(params, jnp.asarray(tokens), TARGET, use_pallas=False))
+    np.testing.assert_allclose(got, want, atol=1e-5)
+
+
+@needs_artifacts
+def test_exported_hlo_files_have_constants():
+    for f in ARTIFACTS.glob("*_fwd_*.hlo.txt"):
+        head = f.read_text()[:200]
+        assert head.startswith("HloModule"), f.name
+        assert "constant({...})" not in f.read_text(), f.name

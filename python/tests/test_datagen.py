@@ -1,0 +1,83 @@
+"""Datagen tests: RNG golden values (the Rust-equivalence contract),
+generator determinism, split/normalization, window sampling."""
+
+import numpy as np
+import pytest
+
+from compile import datagen
+
+
+def test_splitmix_golden_values():
+    # Pinned values asserted identically in rust/src/util/rng.rs.
+    assert int(datagen.splitmix64(42, np.arange(1))[0]) == 0xBDD7_3226_2FEB_6E95
+    assert int(datagen.splitmix64(0, np.arange(1))[0]) == 0xE220_A839_7B1D_CDAF
+    assert abs(float(datagen.uniform01(42, np.arange(1))[0]) - 0.7415648787718233) < 1e-15
+    assert abs(float(datagen.std_normal(3, np.arange(5))[3]) - 0.4124328000730101) < 1e-12
+
+
+def test_uniform_range_and_normal_moments():
+    u = datagen.uniform01(9, np.arange(20000))
+    assert u.min() >= 0.0 and u.max() < 1.0
+    assert abs(u.mean() - 0.5) < 0.01
+    z = datagen.std_normal(9, np.arange(50000))
+    assert abs(z.mean()) < 0.02
+    assert abs(z.var() - 1.0) < 0.03
+
+
+@pytest.mark.parametrize("name", list(datagen.SPECS))
+def test_generate_deterministic_and_finite(name):
+    spec = datagen.SPECS[name]
+    a = datagen.generate(spec)
+    assert a.shape == (spec.channels, spec.length)
+    assert np.isfinite(a).all()
+    b = datagen.generate(spec)
+    np.testing.assert_array_equal(a[:, :256], b[:, :256])
+
+
+def test_channels_differ():
+    a = datagen.generate(datagen.SPECS["etth1"])
+    assert np.abs(a[0, :100] - a[1, :100]).max() > 0.1
+
+
+def test_normalized_train_stats():
+    data = datagen.normalized(datagen.SPECS["etth2"])
+    train_end, _ = datagen.train_val_test_split(data.shape[1])
+    tr = data[:, :train_end]
+    np.testing.assert_allclose(tr.mean(axis=1), 0.0, atol=1e-10)
+    np.testing.assert_allclose(tr.std(axis=1), 1.0, atol=1e-10)
+
+
+def test_roughness_ordering():
+    # Mirrors rust data::synthetic::datasets_have_expected_roughness_ordering.
+    def rough(name):
+        d = datagen.normalized(datagen.SPECS[name])
+        return np.abs(np.diff(d[:, :2000], axis=1)).mean()
+
+    assert rough("weather") < rough("etth1") < rough("etth2")
+
+
+def test_patchify():
+    x = np.arange(50, dtype=np.float64)
+    p = datagen.patchify(x, 24)
+    assert p.shape == (2, 24)
+    assert p[1, 0] == 24
+
+
+def test_sample_windows_shapes_and_split():
+    spec = datagen.SPECS["etth1"]
+    w = datagen.sample_windows(spec, 24, 8, 16, seed=3, split="train")
+    assert w.shape == (16, 9, 24)
+    assert w.dtype == np.float32
+    assert np.isfinite(w).all()
+    # Windows are contiguous: consecutive patches continue the series.
+    flat = w[0].reshape(-1)
+    assert np.abs(np.diff(flat)).max() < 5.0  # no discontinuity artifacts
+
+
+def test_sample_windows_deterministic():
+    spec = datagen.SPECS["weather"]
+    a = datagen.sample_windows(spec, 24, 4, 8, seed=5)
+    b = datagen.sample_windows(spec, 24, 4, 8, seed=5)
+    np.testing.assert_array_equal(a, b)
+    c = datagen.sample_windows(spec, 24, 4, 8, seed=6)
+    assert np.abs(a - c).max() > 1e-6

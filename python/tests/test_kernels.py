@@ -1,0 +1,120 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles across shape/dtype
+sweeps (the hypothesis-style grid is explicit so failures are reproducible).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels import ref
+from compile.kernels.attention import causal_attention, vmem_footprint_bytes
+from compile.kernels.gaussian_head import gaussian_accept
+
+ATTN_SHAPES = [
+    # (batch, heads, seq, d_head, block_q, block_k)
+    (1, 1, 16, 8, 16, 16),
+    (1, 2, 32, 16, 16, 16),
+    (2, 4, 32, 32, 16, 16),
+    (1, 1, 32, 32, 8, 8),
+    (3, 2, 64, 16, 16, 32),
+    (1, 4, 32, 32, 32, 32),  # single q block
+    (2, 2, 48, 8, 16, 8),    # uneven block mix
+]
+
+
+@pytest.mark.parametrize("b,h,n,dh,bq,bk", ATTN_SHAPES)
+def test_attention_matches_ref(b, h, n, dh, bq, bk):
+    rng = np.random.default_rng(hash((b, h, n, dh)) % 2**32)
+    q, k, v = (
+        jnp.asarray(rng.standard_normal((b, h, n, dh)), jnp.float32) for _ in range(3)
+    )
+    out = causal_attention(q, k, v, block_q=bq, block_k=bk)
+    want = ref.causal_attention_ref(q, k, v)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=2e-5, rtol=2e-5)
+
+
+def test_attention_is_causal():
+    # Perturbing position t must not change outputs before t.
+    rng = np.random.default_rng(0)
+    q, k, v = (
+        jnp.asarray(rng.standard_normal((1, 2, 32, 16)), jnp.float32) for _ in range(3)
+    )
+    base = np.asarray(causal_attention(q, k, v))
+    k2 = k.at[:, :, 20:].add(5.0)
+    v2 = v.at[:, :, 20:].add(5.0)
+    pert = np.asarray(causal_attention(q, k2, v2))
+    np.testing.assert_allclose(base[:, :, :20], pert[:, :, :20], atol=1e-6)
+    assert np.abs(base[:, :, 20:] - pert[:, :, 20:]).max() > 1e-3
+
+
+def test_attention_scale_invariance_of_softmax():
+    # Adding a constant to all logits (via uniform k shift along d) leaves
+    # attention unchanged only in degenerate cases; instead verify the
+    # softmax normalization: outputs are convex combinations of v rows.
+    rng = np.random.default_rng(1)
+    q, k = (jnp.asarray(rng.standard_normal((1, 1, 16, 8)), jnp.float32) for _ in range(2))
+    v = jnp.ones((1, 1, 16, 8), jnp.float32)
+    out = np.asarray(causal_attention(q, k, v))
+    np.testing.assert_allclose(out, 1.0, atol=1e-5)
+
+
+def test_attention_rejects_indivisible():
+    q = jnp.zeros((1, 1, 30, 8), jnp.float32)
+    with pytest.raises(ValueError):
+        causal_attention(q, q, q, block_q=16, block_k=16)
+
+
+def test_vmem_model_sane():
+    m = vmem_footprint_bytes(32, 32, 16, 16)
+    assert m["vmem_bytes"] < 16 * 1024 * 1024, "fits VMEM"
+    assert m["arith_intensity"] > 1.0
+
+
+ACCEPT_SHAPES = [(32, 24), (32, 8), (64, 24), (96, 4), (32, 1)]
+
+
+@pytest.mark.parametrize("b,d", ACCEPT_SHAPES)
+@pytest.mark.parametrize("sigma,bias", [(0.5, 1.0), (0.3, 1.0), (0.8, 1.5), (1.2, 3.0)])
+def test_gaussian_accept_matches_ref(b, d, sigma, bias):
+    rng = np.random.default_rng(hash((b, d, sigma)) % 2**32)
+    x = jnp.asarray(rng.standard_normal((b, d)), jnp.float32)
+    mu_p = x + jnp.asarray(0.3 * rng.standard_normal((b, d)), jnp.float32)
+    mu_q = x + jnp.asarray(0.3 * rng.standard_normal((b, d)), jnp.float32)
+    lr, alpha = gaussian_accept(
+        x, mu_p, mu_q,
+        jnp.array([sigma], jnp.float32), jnp.array([bias], jnp.float32),
+        block_b=32,
+    )
+    lr_ref, a_ref = ref.gaussian_accept_ref(x, mu_p, mu_q, sigma, bias=bias)
+    np.testing.assert_allclose(np.asarray(lr), np.asarray(lr_ref), atol=2e-4, rtol=2e-4)
+    np.testing.assert_allclose(np.asarray(alpha), np.asarray(a_ref), atol=2e-5)
+
+
+def test_accept_alpha_bounds_and_direction():
+    # If x == mu_p, target likes x at least as much: alpha == 1.
+    x = jnp.zeros((32, 24), jnp.float32)
+    far = jnp.full((32, 24), 3.0, jnp.float32)
+    one = jnp.array([1.0], jnp.float32)
+    half = jnp.array([0.5], jnp.float32)
+    _, a = gaussian_accept(x, x, far, half, one)
+    np.testing.assert_allclose(np.asarray(a), 1.0)
+    _, a = gaussian_accept(x, far, x, half, one)
+    assert np.asarray(a).max() < 1e-6
+
+
+def test_accept_no_overflow_extreme_ratio():
+    x = jnp.full((32, 24), 50.0, jnp.float32)
+    mu_q = jnp.full((32, 24), -50.0, jnp.float32)
+    sig = jnp.array([0.05], jnp.float32)
+    one = jnp.array([1.0], jnp.float32)
+    lr, a = gaussian_accept(x, x, mu_q, sig, one)
+    assert np.isfinite(np.asarray(a)).all()
+    np.testing.assert_allclose(np.asarray(a), 1.0)
+
+
+def test_rmsnorm_ref_unit_scale():
+    x = jnp.asarray(np.random.default_rng(2).standard_normal((4, 16)), jnp.float32)
+    y = ref.rmsnorm_ref(x, jnp.ones((16,), jnp.float32))
+    rms = np.sqrt(np.mean(np.asarray(y) ** 2, axis=-1))
+    np.testing.assert_allclose(rms, 1.0, atol=1e-3)

@@ -1,0 +1,88 @@
+"""L2 model tests: shapes, causality, pallas/fused parity, FLOPs model."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.model import (
+    CONFIGS, DRAFT, TARGET, ModelConfig, flatten_params, flops_per_forward,
+    forward, init_params,
+)
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    cfg = ModelConfig(name="tiny", patch=8, n_ctx=16, d_model=32, n_layers=2,
+                      n_heads=2, d_ff=64)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def test_forward_shapes(tiny):
+    cfg, params = tiny
+    x = jnp.zeros((3, 16, 8), jnp.float32)
+    y = forward(params, x, cfg)
+    assert y.shape == (3, 16, 8)
+    assert bool(jnp.isfinite(y).all())
+
+
+def test_forward_shorter_context(tiny):
+    cfg, params = tiny
+    x = jnp.zeros((1, 5, 8), jnp.float32)
+    assert forward(params, x, cfg).shape == (1, 5, 8)
+
+
+def test_causality(tiny):
+    cfg, params = tiny
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal((1, 16, 8)), jnp.float32)
+    y0 = forward(params, x, cfg)
+    x2 = x.at[:, 10:].add(1.0)
+    y1 = forward(params, x2, cfg)
+    np.testing.assert_allclose(np.asarray(y0[:, :10]), np.asarray(y1[:, :10]), atol=1e-5)
+    assert np.abs(np.asarray(y0[:, 10:]) - np.asarray(y1[:, 10:])).max() > 1e-4
+
+
+def test_pallas_and_fused_agree(tiny):
+    cfg, params = tiny
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.standard_normal((1, 16, 8)), jnp.float32)
+    y_fused = forward(params, x, cfg, use_pallas=False)
+    y_pallas = forward(params, x, cfg, use_pallas=True)
+    np.testing.assert_allclose(np.asarray(y_fused), np.asarray(y_pallas),
+                               atol=5e-5, rtol=5e-5)
+
+
+def test_param_count_matches_flatten(tiny):
+    cfg, params = tiny
+    total = sum(int(np.prod(t.shape)) for _, t in flatten_params(params))
+    assert total == cfg.param_count()
+
+
+def test_draft_is_quarter_scale():
+    # The paper's 0.25x draft band: parameter ratio in [0.1, 0.35].
+    ratio = DRAFT.param_count() / TARGET.param_count()
+    assert 0.05 < ratio < 0.35, ratio
+
+
+def test_flops_model_monotone():
+    assert flops_per_forward(TARGET, 1, 32) > flops_per_forward(DRAFT, 1, 32)
+    assert flops_per_forward(TARGET, 2, 32) == 2 * flops_per_forward(TARGET, 1, 32)
+    assert flops_per_forward(TARGET, 1, 32) > flops_per_forward(TARGET, 1, 16)
+
+
+def test_configs_registry():
+    assert set(CONFIGS) >= {"timer-base", "timer-draft-0.25x", "timer-xl"}
+    for cfg in CONFIGS.values():
+        assert cfg.d_model % cfg.n_heads == 0
+
+
+def test_deterministic_init():
+    cfg = ModelConfig(name="t", patch=4, n_ctx=8, d_model=16, n_layers=1,
+                      n_heads=2, d_ff=32)
+    a = init_params(cfg, jax.random.PRNGKey(7))
+    b = init_params(cfg, jax.random.PRNGKey(7))
+    for (na, ta), (nb, tb) in zip(flatten_params(a), flatten_params(b)):
+        assert na == nb
+        np.testing.assert_array_equal(np.asarray(ta), np.asarray(tb))

@@ -1,0 +1,99 @@
+//! Ablation — covariance parameterization (paper Remark 1 / §4.3):
+//! isotropic vs diagonal Gaussian heads.
+//!
+//! The paper restricts to isotropic heads for efficiency and *predicts*
+//! that diagonal covariance "may increase alpha-bar by better matching the
+//! target, but raises per-step cost". We quantify both halves:
+//! * acceptance: alpha-hat under iso vs diagonal acceptance on the same
+//!   (target, draft) head pairs, with per-dim sigmas fitted from validation
+//!   residuals;
+//! * cost: ns per acceptance evaluation for each parameterization.
+
+use stride::gaussian::{diag_log_ratio, DiagGaussian};
+use stride::models::Backend;
+use stride::repro::{Bench, RowCfg};
+use stride::util::microbench::{bencher_from_env, Table};
+use stride::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let bench = Bench::from_env()?;
+    let p = bench.manifest.patch;
+
+    // Fit per-dim residual std of the *target* on validation windows: the
+    // natural diagonal head (per-position-in-patch error profile).
+    let cfg = RowCfg { dataset: "etth1", windows: 48, ..Default::default() };
+    let windows = bench.windows(&cfg)?;
+    let mut sq = vec![0.0f64; p];
+    let mut heads: Vec<(Vec<f32>, Vec<f32>)> = Vec::new();
+    for w in &windows {
+        let n = w.history.len() / p;
+        let mp = bench.target.forward(&w.history, n)?;
+        let md = bench.draft.forward(&w.history, n)?;
+        let mu_p = &mp[(n - 1) * p..n * p];
+        for (i, (m, t)) in mu_p.iter().zip(&w.future[..p]).enumerate() {
+            sq[i] += ((m - t) as f64).powi(2);
+        }
+        heads.push((mu_p.to_vec(), md[(n - 1) * p..n * p].to_vec()));
+    }
+    let diag_sigmas: Vec<f32> =
+        sq.iter().map(|s| ((s / windows.len() as f64).sqrt() as f32).max(0.05)).collect();
+    let mean_sigma =
+        (diag_sigmas.iter().map(|s| (s * s) as f64).sum::<f64>() / p as f64).sqrt();
+
+    let mut table = Table::new(
+        "Ablation: covariance parameterization (Remark 1), ETTh1 heads",
+        &["head", "alpha_hat (MC)", "ns / alpha eval", "notes"],
+    );
+
+    // Monte-Carlo alpha under both rules on identical samples.
+    let mut rng = Rng::new(17);
+    let m = 400;
+    let (mut a_iso, mut a_diag) = (0.0f64, 0.0f64);
+    for (mu_p, mu_q) in &heads {
+        let q_diag = DiagGaussian::new(mu_q.clone(), diag_sigmas.clone());
+        let p_diag = DiagGaussian::new(mu_p.clone(), diag_sigmas.clone());
+        let pol = stride::accept::AcceptancePolicy::new(mean_sigma, 1.0);
+        for _ in 0..m {
+            // Sample from the diagonal draft (the more faithful model).
+            let x = q_diag.sample(&mut rng);
+            a_iso += pol.alpha(&x, mu_p, mu_q);
+            a_diag += diag_log_ratio(&x, &p_diag, &q_diag).min(0.0).exp();
+        }
+    }
+    let n_mc = (heads.len() * m) as f64;
+
+    // Cost of one acceptance evaluation each way.
+    let b = bencher_from_env();
+    let (mu_p, mu_q) = &heads[0];
+    let x: Vec<f32> = mu_q.iter().map(|v| v + 0.1).collect();
+    let pol = stride::accept::AcceptancePolicy::new(mean_sigma, 1.0);
+    let r_iso = b.run("iso", || {
+        std::hint::black_box(pol.alpha(&x, mu_p, mu_q));
+    });
+    let pd = DiagGaussian::new(mu_p.clone(), diag_sigmas.clone());
+    let qd = DiagGaussian::new(mu_q.clone(), diag_sigmas.clone());
+    let r_diag = b.run("diag", || {
+        std::hint::black_box(diag_log_ratio(&x, &pd, &qd).min(0.0).exp());
+    });
+
+    table.row(vec![
+        "isotropic".into(),
+        format!("{:.4}", a_iso / n_mc),
+        format!("{:.0}", r_iso.mean_ns),
+        format!("sigma = {mean_sigma:.3} (RMS of fitted diag)"),
+    ]);
+    table.row(vec![
+        "diagonal".into(),
+        format!("{:.4}", a_diag / n_mc),
+        format!("{:.0}", r_diag.mean_ns),
+        format!(
+            "per-dim sigma in [{:.2}, {:.2}]",
+            diag_sigmas.iter().cloned().fold(f32::INFINITY, f32::min),
+            diag_sigmas.iter().cloned().fold(0.0, f32::max)
+        ),
+    ]);
+    table.print();
+    table.write_csv("results/ablation_covariance.csv")?;
+    println!("wrote results/ablation_covariance.csv");
+    Ok(())
+}

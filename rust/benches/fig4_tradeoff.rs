@@ -1,0 +1,54 @@
+//! Figure 4 — Accuracy vs. speed trade-off frontier: target baseline,
+//! draft-only decoding, and SD at gamma in {3, 7, 10}.
+
+use stride::forecast::eval_ar;
+use stride::repro::{quick, Bench, RowCfg};
+use stride::util::microbench::Table;
+
+fn main() -> anyhow::Result<()> {
+    let bench = Bench::from_env()?;
+    let mut table = Table::new(
+        "Figure 4: accuracy vs speed trade-off (ETTh1)",
+        &["Point", "MSE", "relative cost", "speedup"],
+    );
+
+    let base_cfg = RowCfg { dataset: "etth1", sigma: 0.5, ..Default::default() };
+    let windows = bench.windows(&base_cfg)?;
+    let p = bench.manifest.patch;
+
+    // Target baseline.
+    let base = eval_ar(bench.target.as_ref(), &windows, p)?;
+    table.row(vec![
+        "target-only".into(),
+        format!("{:.4}", base.mse),
+        "1.00".into(),
+        "1.00x".into(),
+    ]);
+
+    // Draft-only decoding (circle marker in the paper: fast but inaccurate).
+    let draft_only = eval_ar(bench.draft.as_ref(), &windows, p)?;
+    table.row(vec![
+        "draft-only".into(),
+        format!("{:.4}", draft_only.mse),
+        format!("{:.2}", draft_only.wall.as_secs_f64() / base.wall.as_secs_f64()),
+        format!("{:.2}x", base.wall.as_secs_f64() / draft_only.wall.as_secs_f64()),
+    ]);
+
+    // SD at increasing gamma (square/diamond/pentagon markers).
+    let gammas: &[usize] = if quick() { &[3] } else { &[3, 7, 10] };
+    for &gamma in gammas {
+        let cfg = RowCfg { gamma, ..base_cfg.clone() };
+        let r = bench.run_row(&cfg)?;
+        table.row(vec![
+            format!("SD gamma={gamma}"),
+            format!("{:.4}", r.mse),
+            format!("{:.2}", 1.0 / r.s_wall_meas),
+            format!("{:.2}x", r.s_wall_meas),
+        ]);
+    }
+
+    table.print();
+    table.write_csv("results/fig4_tradeoff.csv")?;
+    println!("wrote results/fig4_tradeoff.csv");
+    Ok(())
+}

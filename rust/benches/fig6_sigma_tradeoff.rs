@@ -1,0 +1,32 @@
+//! Figure 6 — Accuracy-speed trade-off labeled by sigma for ETTh1 and
+//! ETTh2: dMSE (%) vs measured speedup as sigma sweeps 0.30 -> 0.70.
+
+use stride::repro::{quick, Bench, RowCfg};
+use stride::util::microbench::Table;
+
+fn main() -> anyhow::Result<()> {
+    let bench = Bench::from_env()?;
+    let mut table = Table::new(
+        "Figure 6: dMSE vs speedup, labeled by sigma",
+        &["dataset", "sigma", "alpha", "S_wall (meas)", "dMSE %"],
+    );
+    let sigmas: &[f64] =
+        if quick() { &[0.5] } else { &[0.30, 0.35, 0.40, 0.45, 0.50, 0.55, 0.60, 0.65, 0.70] };
+    for dataset in ["etth1", "etth2"] {
+        for &sigma in sigmas {
+            let cfg = RowCfg { dataset: if dataset == "etth1" { "etth1" } else { "etth2" }, sigma, ..Default::default() };
+            let r = bench.run_row(&cfg)?;
+            table.row(vec![
+                dataset.into(),
+                format!("{sigma:.2}"),
+                format!("{:.3}", r.alpha_hat),
+                format!("{:.2}", r.s_wall_meas),
+                format!("{:.1}", 100.0 * (r.mse - r.baseline_mse) / r.baseline_mse),
+            ]);
+        }
+    }
+    table.print();
+    table.write_csv("results/fig6_sigma_tradeoff.csv")?;
+    println!("wrote results/fig6_sigma_tradeoff.csv");
+    Ok(())
+}

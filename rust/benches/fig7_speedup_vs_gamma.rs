@@ -1,0 +1,39 @@
+//! Figure 7 — Measured and predicted wall-clock speedup vs block size
+//! gamma; the curve saturates past gamma ~ 3 (capped-geometric analysis).
+
+use stride::repro::{quick, Bench, RowCfg};
+use stride::util::microbench::Table;
+
+fn main() -> anyhow::Result<()> {
+    let bench = Bench::from_env()?;
+    let mut table = Table::new(
+        "Figure 7: S_wall vs gamma (ETTh1, sigma=0.6)",
+        &["gamma", "alpha", "E[L]", "c", "S_wall pred", "S_wall meas"],
+    );
+    let gammas: &[usize] = if quick() { &[1, 3] } else { &[1, 2, 3, 4, 5, 6, 7, 8, 10] };
+    for &gamma in gammas {
+        // Long horizon (pred-len 336 = 14 patches) so gamma up to 10 is
+        // exercised rather than capped at horizon-1.
+        let cfg = RowCfg {
+            dataset: "etth1",
+            sigma: 0.6,
+            gamma,
+            horizon: 14,
+            windows: if quick() { 4 } else { 14 },
+            ..Default::default()
+        };
+        let r = bench.run_row(&cfg)?;
+        table.row(vec![
+            format!("{gamma}"),
+            format!("{:.3}", r.alpha_hat),
+            format!("{:.2}", r.mean_block_len),
+            format!("{:.3}", r.c),
+            format!("{:.2}x", r.s_wall_pred),
+            format!("{:.2}x", r.s_wall_meas),
+        ]);
+    }
+    table.print();
+    table.write_csv("results/fig7_speedup_vs_gamma.csv")?;
+    println!("wrote results/fig7_speedup_vs_gamma.csv");
+    Ok(())
+}

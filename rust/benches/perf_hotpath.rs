@@ -1,0 +1,126 @@
+//! L3 hot-path microbenchmarks (the §Perf profile targets): acceptance
+//! math, Gaussian sampling, literal marshalling (PJRT boundary), JSON
+//! parse/serialize of the wire protocol, and end-to-end forward costs per
+//! backend. These are the numbers the performance pass iterates on.
+
+use stride::accept::AcceptancePolicy;
+use stride::util::microbench::{bencher_from_env, Table};
+use stride::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let b = bencher_from_env();
+    let mut table = Table::new(
+        "Perf: L3 hot-path microbenchmarks",
+        &["op", "mean", "p50", "p99", "unit/iter"],
+    );
+    let fmt = |r: &stride::util::microbench::BenchResult, unit: &str| {
+        vec![
+            r.name.clone(),
+            format!("{:.2}us", r.mean_ns / 1e3),
+            format!("{:.2}us", r.p50_ns / 1e3),
+            format!("{:.2}us", r.p99_ns / 1e3),
+            unit.to_string(),
+        ]
+    };
+
+    // Acceptance alpha over a 24-dim patch (the per-proposal cost).
+    let policy = AcceptancePolicy::new(0.5, 1.0);
+    let mut rng = Rng::new(1);
+    let x: Vec<f32> = (0..24).map(|_| rng.normal() as f32).collect();
+    let mu_p: Vec<f32> = (0..24).map(|_| rng.normal() as f32).collect();
+    let mu_q: Vec<f32> = (0..24).map(|_| rng.normal() as f32).collect();
+    let mut acc = 0.0;
+    let r = b.run("accept_alpha_d24", || {
+        acc += policy.alpha(&x, &mu_p, &mu_q);
+    });
+    table.row(fmt(&r, "1 alpha"));
+    std::hint::black_box(acc);
+
+    // Patch sampling (draft proposal emission).
+    let mut out = vec![0.0f32; 24];
+    let r = b.run("sample_patch_d24", || {
+        rng.fill_normal_around(&mu_q, 0.5, &mut out);
+    });
+    table.row(fmt(&r, "1 patch"));
+
+    // Wire protocol: parse + serialize a forecast request/response.
+    let hist: Vec<String> = (0..96).map(|i| format!("{:.4}", (i as f32 * 0.1).sin())).collect();
+    let req_body = format!(r#"{{"history": [{}], "horizon": 4}}"#, hist.join(","));
+    let r = b.run("json_parse_request", || {
+        let j = stride::util::json::Json::parse(&req_body).unwrap();
+        std::hint::black_box(stride::server::ForecastRequest::from_json(&j).unwrap());
+    });
+    table.row(fmt(&r, "1 req"));
+
+    let resp = stride::server::ForecastResponse {
+        forecast: (0..96).map(|i| i as f32).collect(),
+        mode: "sd".into(),
+        latency_ms: 1.0,
+        alpha_hat: 0.97,
+        mean_block_len: 3.4,
+        rounds: 2,
+        draft_calls: 6,
+        target_calls: 2,
+    };
+    let r = b.run("json_serialize_response", || {
+        std::hint::black_box(resp.to_json().to_string());
+    });
+    table.row(fmt(&r, "1 resp"));
+
+    // Backend forwards (the dominant cost; includes the PJRT literal
+    // marshalling boundary for the XLA rows).
+    if stride::artifacts_dir().join("manifest.json").exists() {
+        let bench = stride::repro::Bench::xla()?;
+        let n = bench.manifest.n_ctx;
+        let p = bench.manifest.patch;
+        let input = vec![0.1f32; n * p];
+        let _ = bench.target.forward(&input, n); // warm
+        let _ = bench.draft.forward(&input, n);
+        let r = b.run("xla_target_fwd_b1", || {
+            std::hint::black_box(bench.target.forward(&input, n).unwrap());
+        });
+        table.row(fmt(&r, "1 fwd"));
+        let r = b.run("xla_draft_fwd_b1", || {
+            std::hint::black_box(bench.draft.forward(&input, n).unwrap());
+        });
+        table.row(fmt(&r, "1 fwd"));
+        let batch_in = vec![0.1f32; 32 * n * p];
+        let _ = bench.target.forward_batch(&batch_in, 32, n);
+        let r = b.run("xla_target_fwd_b32", || {
+            std::hint::black_box(bench.target.forward_batch(&batch_in, 32, n).unwrap());
+        });
+        table.row(fmt(&r, "32 fwd"));
+
+        let native = stride::repro::Bench::native()?;
+        let r = b.run("native_target_fwd_b1", || {
+            std::hint::black_box(native.target.forward(&input, n).unwrap());
+        });
+        table.row(fmt(&r, "1 fwd"));
+
+        // Full SD decode end-to-end (4-patch horizon, XLA).
+        let data = stride::data::Dataset::by_name("etth1").unwrap();
+        let ws = stride::data::eval_windows(&data, p, 4, 4, 96, 1);
+        let spec = stride::specdec::SpecConfig::default();
+        let r = b.run("sd_decode_h4_xla", || {
+            std::hint::black_box(
+                stride::specdec::sd_generate(
+                    bench.target.as_ref(),
+                    bench.draft.as_ref(),
+                    &ws[0].history,
+                    4,
+                    4,
+                    &spec,
+                )
+                .unwrap(),
+            );
+        });
+        table.row(fmt(&r, "1 decode"));
+    } else {
+        eprintln!("(artifacts missing: XLA rows skipped)");
+    }
+
+    table.print();
+    table.write_csv("results/perf_hotpath.csv")?;
+    println!("wrote results/perf_hotpath.csv");
+    Ok(())
+}

@@ -1,0 +1,73 @@
+//! Table 1 — Main results across datasets and models.
+//!
+//! For each dataset: the Timer-base baseline row, then 0.25x-draft SD rows
+//! sweeping sigma (and batch for ETTh1, bias + pred-len for ETTm2), printing
+//! MSE / MAE / alpha-hat / E[L] / gamma / c / S_wall (pred & meas).
+//!
+//! Run: `cargo bench --bench table1_main` (STRIDE_BENCH_QUICK=1 for CI).
+
+use stride::repro::{fmt_row, quick, Bench, RowCfg};
+use stride::util::microbench::Table;
+
+fn main() -> anyhow::Result<()> {
+    let bench = Bench::from_env()?;
+    let mut table = Table::new(
+        "Table 1: Main results across datasets and models",
+        &["Dataset", "Model", "MSE", "MAE", "alpha", "E[L]", "g", "c", "S_wall (pred/meas)"],
+    );
+
+    let mut rows: Vec<RowCfg> = Vec::new();
+    let sig_etth1: &[f64] = if quick() { &[0.5] } else { &[0.35, 0.4, 0.45, 0.5, 0.55, 0.6, 0.65, 0.7] };
+    for &sigma in sig_etth1 {
+        rows.push(RowCfg { dataset: "etth1", sigma, ..Default::default() });
+    }
+    // Batch sweep at sigma=0.6 (the paper's batch=64/128 rows; our artifact
+    // variants cap at 32).
+    for &batch in if quick() { &[8][..] } else { &[8, 32][..] } {
+        rows.push(RowCfg { dataset: "etth1", sigma: 0.6, batch, windows: 32, ..Default::default() });
+    }
+    let sig_etth2: &[f64] = if quick() { &[0.5] } else { &[0.3, 0.35, 0.4, 0.45, 0.5, 0.55, 0.6, 0.65] };
+    for &sigma in sig_etth2 {
+        rows.push(RowCfg { dataset: "etth2", sigma, ..Default::default() });
+    }
+    // ETTm2: pred-len 336 (14 patches) and 96, with bias=1.5 rows.
+    if !quick() {
+        rows.push(RowCfg { dataset: "ettm2", sigma: 0.7, bias: 1.5, horizon: 14, windows: 14, ..Default::default() });
+        rows.push(RowCfg { dataset: "ettm2", sigma: 0.7, bias: 1.5, ..Default::default() });
+        rows.push(RowCfg { dataset: "ettm2", sigma: 0.7, bias: 1.5, gamma: 2, ..Default::default() });
+        rows.push(RowCfg { dataset: "ettm2", sigma: 0.8, bias: 1.5, gamma: 2, ..Default::default() });
+    } else {
+        rows.push(RowCfg { dataset: "ettm2", sigma: 0.7, bias: 1.5, ..Default::default() });
+    }
+    // Weather: gamma 3/4 at sigma 0.8, gamma 2 at 0.6/0.7.
+    let weather: &[(f64, usize)] =
+        if quick() { &[(0.8, 3)] } else { &[(0.8, 3), (0.8, 4), (0.6, 2), (0.7, 2)] };
+    for &(sigma, gamma) in weather {
+        rows.push(RowCfg { dataset: "weather", sigma, gamma, ..Default::default() });
+    }
+
+    let mut last_dataset = "";
+    for cfg in &rows {
+        let r = bench.run_row(cfg)?;
+        if cfg.dataset != last_dataset {
+            table.row(vec![
+                cfg.dataset.into(),
+                "Timer-base (baseline)".into(),
+                format!("{:.4}", r.baseline_mse),
+                format!("{:.4}", r.baseline_mae),
+                "-".into(),
+                "-".into(),
+                "-".into(),
+                "-".into(),
+                "- / 1.00x".into(),
+            ]);
+            last_dataset = cfg.dataset;
+        }
+        table.row(fmt_row(&r));
+    }
+
+    table.print();
+    table.write_csv("results/table1_main.csv")?;
+    println!("wrote results/table1_main.csv");
+    Ok(())
+}

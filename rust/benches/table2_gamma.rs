@@ -1,0 +1,29 @@
+//! Table 2 — Ablations on gamma for the Weather dataset (sigma = 0.8),
+//! extended past the paper's {3, 4} to show the saturation tail.
+
+use stride::repro::{quick, Bench, RowCfg};
+use stride::util::microbench::Table;
+
+fn main() -> anyhow::Result<()> {
+    let bench = Bench::from_env()?;
+    let mut table = Table::new(
+        "Table 2: Ablations on gamma (Weather, sigma=0.8)",
+        &["gamma", "alpha", "E[L] (meas)", "S_wall (pred)", "S_wall (meas)"],
+    );
+    let gammas: &[usize] = if quick() { &[3, 4] } else { &[1, 2, 3, 4, 5, 7, 10] };
+    for &gamma in gammas {
+        let cfg = RowCfg { dataset: "weather", sigma: 0.8, gamma, ..Default::default() };
+        let r = bench.run_row(&cfg)?;
+        table.row(vec![
+            format!("{gamma}"),
+            format!("{:.3}", r.alpha_hat),
+            format!("{:.2}", r.mean_block_len),
+            format!("{:.2}x", r.s_wall_pred),
+            format!("{:.2}x", r.s_wall_meas),
+        ]);
+    }
+    table.print();
+    table.write_csv("results/table2_gamma.csv")?;
+    println!("wrote results/table2_gamma.csv");
+    Ok(())
+}

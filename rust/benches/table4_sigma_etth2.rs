@@ -1,0 +1,29 @@
+//! Table 4 — Ablations on sigma for ETTh2 (gamma = 3).
+
+use stride::repro::{quick, Bench, RowCfg};
+use stride::util::microbench::Table;
+
+fn main() -> anyhow::Result<()> {
+    let bench = Bench::from_env()?;
+    let mut table = Table::new(
+        "Table 4: Ablations on sigma (ETTh2, gamma=3)",
+        &["sigma", "alpha", "S_wall (meas)", "MSE", "dMSE vs baseline"],
+    );
+    let sigmas: &[f64] =
+        if quick() { &[0.5] } else { &[0.30, 0.35, 0.40, 0.45, 0.50, 0.55, 0.60, 0.65] };
+    for &sigma in sigmas {
+        let cfg = RowCfg { dataset: "etth2", sigma, ..Default::default() };
+        let r = bench.run_row(&cfg)?;
+        table.row(vec![
+            format!("{sigma:.2}"),
+            format!("{:.3}", r.alpha_hat),
+            format!("{:.2}x", r.s_wall_meas),
+            format!("{:.4}", r.mse),
+            format!("{:+.1}%", 100.0 * (r.mse - r.baseline_mse) / r.baseline_mse),
+        ]);
+    }
+    table.print();
+    table.write_csv("results/table4_sigma_etth2.csv")?;
+    println!("wrote results/table4_sigma_etth2.csv");
+    Ok(())
+}

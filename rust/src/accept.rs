@@ -1,0 +1,205 @@
+//! Acceptance rule and the mean-acceptance estimator (paper §3.5–§3.6,
+//! Props. 4 & 8).
+//!
+//! The rule is computed in the log domain (Eq. 7) with an optional
+//! tolerance/bias λ multiplying the ratio (the "bias" knob of Tables 1/5):
+//! accept x with probability min{1, λ p(x)/q(x)}. The deviation bounds of
+//! §3.3 hold for any measurable α, so λ trades a larger bias bound ᾱ for
+//! higher throughput.
+
+use crate::gaussian::{iso_log_ratio, IsoGaussian};
+use crate::util::rng::Rng;
+use crate::util::stats::{gaussian_overlap, hoeffding_eps};
+
+/// Acceptance policy shared by the engine and the estimator.
+#[derive(Clone, Copy, Debug)]
+pub struct AcceptancePolicy {
+    /// Shared head sigma (the paper's noise knob).
+    pub sigma: f64,
+    /// Tolerance λ >= 0; 1.0 is the canonical rule.
+    pub bias: f64,
+}
+
+impl Default for AcceptancePolicy {
+    fn default() -> Self {
+        AcceptancePolicy { sigma: 0.5, bias: 1.0 }
+    }
+}
+
+impl AcceptancePolicy {
+    pub fn new(sigma: f64, bias: f64) -> Self {
+        assert!(sigma > 0.0 && bias > 0.0);
+        AcceptancePolicy { sigma, bias }
+    }
+
+    /// α(x) = min{1, λ p(x)/q(x)} for equal-sigma isotropic heads,
+    /// evaluated in log space.
+    #[inline]
+    pub fn alpha(&self, x: &[f32], mu_p: &[f32], mu_q: &[f32]) -> f64 {
+        let lr = iso_log_ratio(x, mu_p, mu_q, self.sigma) + self.bias.ln();
+        lr.min(0.0).exp()
+    }
+
+    /// One acceptance coin flip.
+    #[inline]
+    pub fn accept(&self, x: &[f32], mu_p: &[f32], mu_q: &[f32], rng: &mut Rng) -> bool {
+        let a = self.alpha(x, mu_p, mu_q);
+        a >= 1.0 || rng.uniform() < a
+    }
+
+    /// Closed-form per-history mean acceptance for the canonical rule
+    /// (λ = 1): β(h) = 2 Φ(-Δ/2) with Δ the Mahalanobis mean gap
+    /// (Remark 5). For λ != 1 there is no closed form; use Monte Carlo.
+    pub fn mean_acceptance_closed_form(&self, mu_p: &[f32], mu_q: &[f32]) -> f64 {
+        let gap_sq: f64 = mu_p
+            .iter()
+            .zip(mu_q)
+            .map(|(a, b)| {
+                let d = (*a - *b) as f64;
+                d * d
+            })
+            .sum();
+        gaussian_overlap(gap_sq.sqrt() / self.sigma)
+    }
+}
+
+/// Two-stage mean-acceptance estimator (Prop. 8): for each history draw m
+/// proposals from q and average α; average over N histories. Hoeffding over
+/// the N·m bounded terms gives P(|α̂ - ᾱ| >= ε) <= 2 exp(-2 N m ε²).
+#[derive(Clone, Debug)]
+pub struct AcceptanceEstimate {
+    pub alpha_hat: f64,
+    pub n_histories: usize,
+    pub m_per_history: usize,
+    /// 95% Hoeffding half-width.
+    pub eps95: f64,
+}
+
+/// Estimate ᾱ from per-history head pairs via Monte Carlo (works for any
+/// bias λ). `heads` yields (mu_p, mu_q) per held-out history.
+pub fn estimate_alpha<'a, I>(
+    policy: &AcceptancePolicy,
+    heads: I,
+    m_per_history: usize,
+    seed: u64,
+) -> AcceptanceEstimate
+where
+    I: IntoIterator<Item = (&'a [f32], &'a [f32])>,
+{
+    let mut rng = Rng::new(seed);
+    let mut total = 0.0f64;
+    let mut n = 0usize;
+    for (mu_p, mu_q) in heads {
+        let q = IsoGaussian::new(mu_q.to_vec(), policy.sigma);
+        let mut acc = 0.0;
+        for _ in 0..m_per_history {
+            let x = q.sample(&mut rng);
+            acc += policy.alpha(&x, mu_p, mu_q);
+        }
+        total += acc / m_per_history as f64;
+        n += 1;
+    }
+    assert!(n > 0, "need at least one history");
+    AcceptanceEstimate {
+        alpha_hat: total / n as f64,
+        n_histories: n,
+        m_per_history,
+        eps95: hoeffding_eps(n * m_per_history, 0.05),
+    }
+}
+
+/// Closed-form estimator (canonical rule only): averages 2Φ(-Δ/2) over
+/// histories — the exact inner integral, so concentration is over N alone.
+pub fn estimate_alpha_closed_form<'a, I>(policy: &AcceptancePolicy, heads: I) -> AcceptanceEstimate
+where
+    I: IntoIterator<Item = (&'a [f32], &'a [f32])>,
+{
+    let mut total = 0.0f64;
+    let mut n = 0usize;
+    for (mu_p, mu_q) in heads {
+        total += policy.mean_acceptance_closed_form(mu_p, mu_q);
+        n += 1;
+    }
+    assert!(n > 0);
+    AcceptanceEstimate {
+        alpha_hat: total / n as f64,
+        n_histories: n,
+        m_per_history: 0,
+        eps95: hoeffding_eps(n, 0.05),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alpha_is_one_when_target_likes_x_more() {
+        let pol = AcceptancePolicy::new(0.5, 1.0);
+        let x = [0.0f32, 0.0];
+        // mu_p == x, mu_q far: p(x) > q(x) => alpha = 1.
+        assert_eq!(pol.alpha(&x, &[0.0, 0.0], &[2.0, 2.0]), 1.0);
+        // Reverse: alpha < 1.
+        assert!(pol.alpha(&x, &[2.0, 2.0], &[0.0, 0.0]) < 1e-6);
+    }
+
+    #[test]
+    fn bias_inflates_acceptance() {
+        let x = [0.1f32, -0.2];
+        let mu_p = [0.5f32, 0.5];
+        let mu_q = [0.0f32, 0.0];
+        let a1 = AcceptancePolicy::new(0.5, 1.0).alpha(&x, &mu_p, &mu_q);
+        let a2 = AcceptancePolicy::new(0.5, 2.0).alpha(&x, &mu_p, &mu_q);
+        assert!(a2 >= a1);
+        assert!(a2 <= 1.0);
+    }
+
+    #[test]
+    fn no_overflow_for_huge_log_ratio() {
+        let pol = AcceptancePolicy::new(0.01, 1.0);
+        // Extremely peaked heads: |log ratio| is enormous; alpha must stay
+        // finite and in [0, 1].
+        let a = pol.alpha(&[100.0, 100.0], &[100.0, 100.0], &[-100.0, -100.0]);
+        assert!(a.is_finite() && (0.0..=1.0).contains(&a));
+        assert_eq!(a, 1.0);
+    }
+
+    #[test]
+    fn mc_estimator_matches_closed_form() {
+        // Single history: alpha_bar = 2 Phi(-gap / (2 sigma)).
+        let pol = AcceptancePolicy::new(0.6, 1.0);
+        let mu_p = vec![0.3f32; 8];
+        let mu_q = vec![0.0f32; 8];
+        let mc = estimate_alpha(
+            &pol,
+            std::iter::once((mu_p.as_slice(), mu_q.as_slice())),
+            40_000,
+            5,
+        );
+        let cf = pol.mean_acceptance_closed_form(&mu_p, &mu_q);
+        assert!(
+            (mc.alpha_hat - cf).abs() < 0.01,
+            "MC {:.4} vs closed form {cf:.4}",
+            mc.alpha_hat
+        );
+    }
+
+    #[test]
+    fn estimator_concentrates_with_n() {
+        let e1 = AcceptanceEstimate { alpha_hat: 0.9, n_histories: 10, m_per_history: 10, eps95: hoeffding_eps(100, 0.05) };
+        let e2 = AcceptanceEstimate { alpha_hat: 0.9, n_histories: 1000, m_per_history: 10, eps95: hoeffding_eps(10_000, 0.05) };
+        assert!(e2.eps95 < e1.eps95 / 5.0);
+    }
+
+    #[test]
+    fn closed_form_estimator_averages() {
+        let pol = AcceptancePolicy::new(0.5, 1.0);
+        let a = vec![0.0f32; 4];
+        let b = vec![10.0f32; 4]; // essentially zero overlap
+        let est = estimate_alpha_closed_form(
+            &pol,
+            vec![(a.as_slice(), a.as_slice()), (a.as_slice(), b.as_slice())],
+        );
+        assert!((est.alpha_hat - 0.5).abs() < 1e-6, "{}", est.alpha_hat);
+    }
+}

@@ -1,0 +1,290 @@
+//! Configuration system: typed config structs, JSON config files, and a
+//! small CLI argument parser (clap is unavailable offline).
+//!
+//! Precedence: defaults < config file (--config path.json) < CLI flags.
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+
+use anyhow::{bail, Context, Result};
+
+use crate::accept::AcceptancePolicy;
+use crate::specdec::{Emission, SpecConfig, Variant};
+use crate::util::json::Json;
+
+/// Parsed command line: positional args + `--key value` / `--flag` options.
+#[derive(Clone, Debug, Default)]
+pub struct Cli {
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+}
+
+impl Cli {
+    pub fn parse(args: impl IntoIterator<Item = String>) -> Result<Cli> {
+        let mut cli = Cli::default();
+        let mut it = args.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(key) = a.strip_prefix("--") {
+                if key.is_empty() {
+                    bail!("bare '--' not supported");
+                }
+                if let Some((k, v)) = key.split_once('=') {
+                    cli.options.insert(k.to_string(), v.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    cli.options.insert(key.to_string(), it.next().unwrap());
+                } else {
+                    cli.options.insert(key.to_string(), "true".to_string());
+                }
+            } else {
+                cli.positional.push(a);
+            }
+        }
+        Ok(cli)
+    }
+
+    pub fn from_env() -> Result<Cli> {
+        Cli::parse(std::env::args().skip(1))
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(String::as_str)
+    }
+
+    pub fn get_f64(&self, key: &str) -> Result<Option<f64>> {
+        self.get(key)
+            .map(|v| v.parse::<f64>().with_context(|| format!("--{key} must be a number")))
+            .transpose()
+    }
+
+    pub fn get_usize(&self, key: &str) -> Result<Option<usize>> {
+        self.get(key)
+            .map(|v| v.parse::<usize>().with_context(|| format!("--{key} must be an integer")))
+            .transpose()
+    }
+
+    pub fn flag(&self, key: &str) -> bool {
+        matches!(self.get(key), Some("true") | Some("1"))
+    }
+}
+
+/// Server/engine configuration.
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    pub bind: String,
+    pub http_workers: usize,
+    /// Dynamic batcher: flush when this many requests are queued...
+    pub max_batch: usize,
+    /// ...or when the oldest request has waited this long.
+    pub max_wait_ms: u64,
+    /// "xla" | "native"; kernel flavor for xla: "fused" | "pallas".
+    pub backend: String,
+    pub kernel: String,
+    pub gamma: usize,
+    pub sigma: f64,
+    pub bias: f64,
+    pub lossless: bool,
+    /// Generative (sampled) emission instead of production mean emission.
+    pub sampled: bool,
+    /// Adaptive γ from the acceptance monitor (Prop. 3 online).
+    pub adaptive_gamma: bool,
+    /// Disable speculative decoding entirely (target-only AR) — the
+    /// baseline mode for A/B latency comparisons.
+    pub baseline: bool,
+    pub artifacts: PathBuf,
+    pub seed: u64,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            bind: "127.0.0.1:8080".into(),
+            http_workers: 8,
+            max_batch: 8,
+            max_wait_ms: 2,
+            backend: "xla".into(),
+            kernel: "fused".into(),
+            gamma: 3,
+            sigma: 0.5,
+            bias: 1.0,
+            lossless: false,
+            sampled: false,
+            adaptive_gamma: false,
+            baseline: false,
+            artifacts: crate::artifacts_dir(),
+            seed: 0xC0FFEE,
+        }
+    }
+}
+
+impl ServeConfig {
+    /// Apply a JSON config object (subset of fields).
+    pub fn apply_json(&mut self, j: &Json) -> Result<()> {
+        let obj = j.as_obj().context("config must be a JSON object")?;
+        for (k, v) in obj {
+            match k.as_str() {
+                "bind" => self.bind = v.as_str().context("bind")?.to_string(),
+                "http_workers" => self.http_workers = v.as_usize().context("http_workers")?,
+                "max_batch" => self.max_batch = v.as_usize().context("max_batch")?,
+                "max_wait_ms" => self.max_wait_ms = v.as_usize().context("max_wait_ms")? as u64,
+                "backend" => self.backend = v.as_str().context("backend")?.to_string(),
+                "kernel" => self.kernel = v.as_str().context("kernel")?.to_string(),
+                "gamma" => self.gamma = v.as_usize().context("gamma")?,
+                "sigma" => self.sigma = v.as_f64().context("sigma")?,
+                "bias" => self.bias = v.as_f64().context("bias")?,
+                "lossless" => self.lossless = v.as_bool().context("lossless")?,
+                "sampled" => self.sampled = v.as_bool().context("sampled")?,
+                "adaptive_gamma" => self.adaptive_gamma = v.as_bool().context("adaptive_gamma")?,
+                "baseline" => self.baseline = v.as_bool().context("baseline")?,
+                "artifacts" => self.artifacts = PathBuf::from(v.as_str().context("artifacts")?),
+                "seed" => self.seed = v.as_usize().context("seed")? as u64,
+                other => bail!("unknown config key: {other}"),
+            }
+        }
+        Ok(())
+    }
+
+    /// Apply CLI overrides.
+    pub fn apply_cli(&mut self, cli: &Cli) -> Result<()> {
+        if let Some(path) = cli.get("config") {
+            let text = std::fs::read_to_string(path)
+                .with_context(|| format!("reading config {path}"))?;
+            self.apply_json(&Json::parse(&text)?)?;
+        }
+        if let Some(v) = cli.get("bind") {
+            self.bind = v.to_string();
+        }
+        if let Some(v) = cli.get_usize("http-workers")? {
+            self.http_workers = v;
+        }
+        if let Some(v) = cli.get_usize("max-batch")? {
+            self.max_batch = v;
+        }
+        if let Some(v) = cli.get_usize("max-wait-ms")? {
+            self.max_wait_ms = v as u64;
+        }
+        if let Some(v) = cli.get("backend") {
+            self.backend = v.to_string();
+        }
+        if let Some(v) = cli.get("kernel") {
+            self.kernel = v.to_string();
+        }
+        if let Some(v) = cli.get_usize("gamma")? {
+            self.gamma = v;
+        }
+        if let Some(v) = cli.get_f64("sigma")? {
+            self.sigma = v;
+        }
+        if let Some(v) = cli.get_f64("bias")? {
+            self.bias = v;
+        }
+        if cli.flag("lossless") {
+            self.lossless = true;
+        }
+        if cli.flag("sampled") {
+            self.sampled = true;
+        }
+        if cli.flag("adaptive-gamma") {
+            self.adaptive_gamma = true;
+        }
+        if cli.flag("baseline") {
+            self.baseline = true;
+        }
+        if let Some(v) = cli.get("artifacts") {
+            self.artifacts = PathBuf::from(v);
+        }
+        if let Some(v) = cli.get_usize("seed")? {
+            self.seed = v as u64;
+        }
+        self.validate()
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.gamma == 0 || self.gamma > 64 {
+            bail!("gamma must be in [1, 64], got {}", self.gamma);
+        }
+        if !(self.sigma > 0.0) {
+            bail!("sigma must be positive");
+        }
+        if !(self.bias > 0.0) {
+            bail!("bias must be positive");
+        }
+        if self.lossless && (self.bias - 1.0).abs() > 1e-12 {
+            bail!("lossless requires bias = 1 (canonical acceptance)");
+        }
+        if self.lossless && !self.sampled {
+            bail!("lossless requires --sampled emission (Theorems 1-2 are about the sampled chain)");
+        }
+        if !matches!(self.backend.as_str(), "xla" | "native") {
+            bail!("backend must be 'xla' or 'native'");
+        }
+        if !matches!(self.kernel.as_str(), "fused" | "pallas") {
+            bail!("kernel must be 'fused' or 'pallas'");
+        }
+        Ok(())
+    }
+
+    pub fn spec_config(&self) -> SpecConfig {
+        SpecConfig {
+            gamma: self.gamma,
+            policy: AcceptancePolicy::new(self.sigma, self.bias),
+            variant: if self.lossless { Variant::Lossless } else { Variant::Practical },
+            seed: self.seed,
+            max_residual_draws: 10_000,
+            emission: if self.sampled { Emission::Sampled } else { Emission::Mean },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(s: &str) -> Vec<String> {
+        s.split_whitespace().map(String::from).collect()
+    }
+
+    #[test]
+    fn cli_parsing() {
+        let c = Cli::parse(args("serve --gamma 5 --sigma=0.7 --lossless --bind 0.0.0.0:9")).unwrap();
+        assert_eq!(c.positional, vec!["serve"]);
+        assert_eq!(c.get("gamma"), Some("5"));
+        assert_eq!(c.get("sigma"), Some("0.7"));
+        assert!(c.flag("lossless"));
+        assert_eq!(c.get("bind"), Some("0.0.0.0:9"));
+    }
+
+    #[test]
+    fn config_precedence_and_validation() {
+        let mut cfg = ServeConfig::default();
+        cfg.apply_json(&Json::parse(r#"{"gamma": 7, "sigma": 0.35}"#).unwrap()).unwrap();
+        assert_eq!(cfg.gamma, 7);
+        let cli = Cli::parse(args("--gamma 2")).unwrap();
+        cfg.apply_cli(&cli).unwrap();
+        assert_eq!(cfg.gamma, 2);
+        assert!((cfg.sigma - 0.35).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rejects_bad_values() {
+        let mut cfg = ServeConfig::default();
+        assert!(cfg.apply_json(&Json::parse(r#"{"gamma": 0}"#).unwrap()).is_ok());
+        assert!(cfg.validate().is_err()); // gamma 0 invalid
+        let mut cfg = ServeConfig::default();
+        assert!(cfg.apply_json(&Json::parse(r#"{"nope": 1}"#).unwrap()).is_err());
+        let mut cfg = ServeConfig::default();
+        cfg.lossless = true;
+        cfg.bias = 1.5;
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn spec_config_mapping() {
+        let mut cfg = ServeConfig::default();
+        cfg.gamma = 4;
+        cfg.sigma = 0.6;
+        let sc = cfg.spec_config();
+        assert_eq!(sc.gamma, 4);
+        assert_eq!(sc.emission, Emission::Mean);
+        assert!((sc.policy.sigma - 0.6).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,12 @@
+//! Data pipeline: synthetic benchmark datasets (mirroring the Python
+//! training corpus) and evaluation windowing.
+
+pub mod csv;
+pub mod synthetic;
+pub mod windows;
+pub mod workload;
+
+pub use csv::{dataset_by_name_with_csv, load_csv_dataset};
+pub use synthetic::{spec_by_name, specs, Dataset, DatasetSpec};
+pub use windows::{eval_windows, eval_windows_balanced, Window};
+pub use workload::{generate_trace, Scenario, TraceEvent};

@@ -1,0 +1,265 @@
+//! Synthetic ETT-like / Weather-like dataset generator.
+//!
+//! Line-for-line mirror of `python/compile/datagen.py` (same counter-based
+//! SplitMix64 stream, same AR recursion, same split/normalization), so the
+//! serving side evaluates on exactly the corpus the models were trained on.
+//! The cross-language contract is pinned by golden vectors exported by
+//! `aot.py` (see `golden_matches_python_export` below).
+
+use crate::util::rng::{std_normal, uniform01};
+
+/// Parameters of one synthetic dataset (mirror of datagen.DatasetSpec).
+#[derive(Clone, Debug, PartialEq)]
+pub struct DatasetSpec {
+    pub name: &'static str,
+    pub seed: u64,
+    pub channels: usize,
+    pub length: usize,
+    pub periods: Vec<usize>,
+    pub amps: Vec<f64>,
+    pub ar_phi: f64,
+    pub noise_std: f64,
+    pub trend_per_k: f64,
+    pub n_shifts: usize,
+    pub shift_std: f64,
+}
+
+/// The four benchmark stand-ins (mirror of datagen.SPECS; see DESIGN.md §3
+/// for why the parameterization preserves the paper's dataset ordering).
+pub fn specs() -> Vec<DatasetSpec> {
+    vec![
+        DatasetSpec {
+            name: "etth1", seed: 101, channels: 7, length: 14400,
+            periods: vec![24, 168], amps: vec![1.0, 0.45],
+            ar_phi: 0.72, noise_std: 0.32, trend_per_k: 0.04,
+            n_shifts: 6, shift_std: 0.5,
+        },
+        DatasetSpec {
+            name: "etth2", seed: 202, channels: 7, length: 14400,
+            periods: vec![24, 168], amps: vec![0.9, 0.35],
+            ar_phi: 0.65, noise_std: 0.52, trend_per_k: 0.06,
+            n_shifts: 10, shift_std: 0.8,
+        },
+        DatasetSpec {
+            name: "ettm2", seed: 303, channels: 7, length: 28800,
+            periods: vec![96, 672], amps: vec![1.0, 0.40],
+            ar_phi: 0.80, noise_std: 0.28, trend_per_k: 0.02,
+            n_shifts: 6, shift_std: 0.4,
+        },
+        DatasetSpec {
+            name: "weather", seed: 404, channels: 21, length: 14400,
+            periods: vec![144, 1008], amps: vec![1.1, 0.50],
+            ar_phi: 0.85, noise_std: 0.14, trend_per_k: 0.03,
+            n_shifts: 3, shift_std: 0.3,
+        },
+    ]
+}
+
+pub fn spec_by_name(name: &str) -> Option<DatasetSpec> {
+    specs().into_iter().find(|s| s.name == name)
+}
+
+// Sub-stream tags (keep in sync with datagen.py).
+const TAG_PHASE: u64 = 1;
+const TAG_AMP: u64 = 2;
+const TAG_NOISE: u64 = 3;
+const TAG_TREND: u64 = 4;
+const TAG_SHIFT_POS: u64 = 5;
+const TAG_SHIFT_MAG: u64 = 6;
+
+fn chan_seed(spec: &DatasetSpec, tag: u64, channel: usize) -> u64 {
+    spec.seed
+        .wrapping_mul(1_000_003)
+        .wrapping_add(tag.wrapping_mul(10_007))
+        .wrapping_add(channel as u64)
+}
+
+/// A generated dataset: raw series plus train-split normalization stats.
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    pub spec: DatasetSpec,
+    /// Raw series, row-major [channels][length].
+    pub raw: Vec<Vec<f64>>,
+    /// Per-channel train mean/std (population std, matching numpy).
+    pub mean: Vec<f64>,
+    pub std: Vec<f64>,
+}
+
+/// Generate one channel (mirror of the datagen.generate inner loop).
+fn generate_channel(spec: &DatasetSpec, c: usize) -> Vec<f64> {
+    let n = spec.length;
+    let mut y = vec![0.0f64; n];
+    let nk = spec.periods.len();
+    let phases: Vec<f64> =
+        (0..nk).map(|k| uniform01(chan_seed(spec, TAG_PHASE, c), k as u64)).collect();
+    let ampj: Vec<f64> =
+        (0..nk).map(|k| uniform01(chan_seed(spec, TAG_AMP, c), k as u64)).collect();
+    for k in 0..nk {
+        let a = spec.amps[k] * (0.75 + 0.5 * ampj[k]);
+        let period = spec.periods[k] as f64;
+        for (t, yt) in y.iter_mut().enumerate() {
+            *yt += a * (2.0 * std::f64::consts::PI * (t as f64 / period + phases[k])).sin();
+        }
+    }
+    // AR(1) noise.
+    let noise_seed = chan_seed(spec, TAG_NOISE, c);
+    let mut prev = 0.0f64;
+    for (t, yt) in y.iter_mut().enumerate() {
+        prev = spec.ar_phi * prev + spec.noise_std * std_normal(noise_seed, t as u64);
+        *yt += prev;
+    }
+    // Slow linear trend.
+    let tr = uniform01(chan_seed(spec, TAG_TREND, c), 0) - 0.5;
+    let slope = 2.0 * tr * spec.trend_per_k / 1000.0;
+    for (t, yt) in y.iter_mut().enumerate() {
+        *yt += slope * t as f64;
+    }
+    // Rare level shifts.
+    let pos_seed = chan_seed(spec, TAG_SHIFT_POS, c);
+    let mag_seed = chan_seed(spec, TAG_SHIFT_MAG, c);
+    for s in 0..spec.n_shifts {
+        let start = (uniform01(pos_seed, s as u64) * n as f64) as usize;
+        let mag = spec.shift_std * std_normal(mag_seed, s as u64);
+        for yt in y.iter_mut().skip(start) {
+            *yt += mag;
+        }
+    }
+    y
+}
+
+/// (train_end, val_end): 70/10/20 split (mirror of datagen).
+pub fn split_points(length: usize) -> (usize, usize) {
+    ((length as f64 * 0.7) as usize, (length as f64 * 0.8) as usize)
+}
+
+impl Dataset {
+    pub fn generate(spec: &DatasetSpec) -> Dataset {
+        let raw: Vec<Vec<f64>> =
+            (0..spec.channels).map(|c| generate_channel(spec, c)).collect();
+        let (train_end, _) = split_points(spec.length);
+        let mut mean = Vec::with_capacity(spec.channels);
+        let mut std = Vec::with_capacity(spec.channels);
+        for ch in &raw {
+            let m = ch[..train_end].iter().sum::<f64>() / train_end as f64;
+            let v = ch[..train_end].iter().map(|x| (x - m) * (x - m)).sum::<f64>()
+                / train_end as f64;
+            mean.push(m);
+            std.push(v.sqrt().max(1e-8));
+        }
+        Dataset { spec: spec.clone(), raw, mean, std }
+    }
+
+    pub fn by_name(name: &str) -> Option<Dataset> {
+        spec_by_name(name).map(|s| Dataset::generate(&s))
+    }
+
+    /// Normalized value at (channel, t).
+    #[inline]
+    pub fn norm(&self, channel: usize, t: usize) -> f32 {
+        ((self.raw[channel][t] - self.mean[channel]) / self.std[channel]) as f32
+    }
+
+    /// Normalized slice [t0, t0+len) of a channel as f32.
+    pub fn norm_slice(&self, channel: usize, t0: usize, len: usize) -> Vec<f32> {
+        (t0..t0 + len).map(|t| self.norm(channel, t)).collect()
+    }
+
+    pub fn channels(&self) -> usize {
+        self.spec.channels
+    }
+
+    pub fn len(&self) -> usize {
+        self.spec.length
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.spec.length == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let spec = &specs()[0];
+        let a = Dataset::generate(spec);
+        let b = Dataset::generate(spec);
+        assert_eq!(a.raw[0][..100], b.raw[0][..100]);
+    }
+
+    #[test]
+    fn channels_differ() {
+        let d = Dataset::by_name("etth1").unwrap();
+        assert_ne!(d.raw[0][..50], d.raw[1][..50]);
+    }
+
+    #[test]
+    fn normalized_train_split_is_standard() {
+        let d = Dataset::by_name("etth2").unwrap();
+        let (train_end, _) = split_points(d.len());
+        for c in 0..d.channels() {
+            let vals: Vec<f64> = (0..train_end).map(|t| d.norm(c, t) as f64).collect();
+            let m = vals.iter().sum::<f64>() / vals.len() as f64;
+            let v = vals.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / vals.len() as f64;
+            assert!(m.abs() < 1e-3, "mean {m}");
+            assert!((v - 1.0).abs() < 1e-3, "var {v}");
+        }
+    }
+
+    #[test]
+    fn datasets_have_expected_roughness_ordering() {
+        // Weather is smoothest; ETTh2 noisier than ETTh1 (paper's dataset
+        // behaviour ordering, DESIGN.md §3). Roughness = mean |x_t - x_{t-1}|
+        // of the normalized series.
+        let rough = |name: &str| {
+            let d = Dataset::by_name(name).unwrap();
+            let mut acc = 0.0f64;
+            let mut n = 0usize;
+            for c in 0..d.channels() {
+                for t in 1..2000 {
+                    acc += (d.norm(c, t) - d.norm(c, t - 1)).abs() as f64;
+                    n += 1;
+                }
+            }
+            acc / n as f64
+        };
+        let (w, e1, e2) = (rough("weather"), rough("etth1"), rough("etth2"));
+        assert!(w < e1, "weather {w} vs etth1 {e1}");
+        assert!(e1 < e2, "etth1 {e1} vs etth2 {e2}");
+    }
+
+    /// Cross-language contract: when artifacts are present, the first 64 raw
+    /// samples of channel 0 must match the Python export bit-for-bit (up to
+    /// libm ulp differences — tol 1e-9).
+    #[test]
+    fn golden_matches_python_export() {
+        let dir = crate::artifacts_dir();
+        let mut checked = 0;
+        for spec in specs() {
+            let path = dir.join(format!("golden_data_{}.bin", spec.name));
+            if !path.exists() {
+                continue;
+            }
+            let bytes = std::fs::read(&path).unwrap();
+            let want: Vec<f64> = bytes
+                .chunks_exact(8)
+                .map(|c| f64::from_le_bytes(c.try_into().unwrap()))
+                .collect();
+            let d = Dataset::generate(&spec);
+            for (t, w) in want.iter().enumerate() {
+                let got = d.raw[0][t];
+                assert!(
+                    (got - w).abs() < 1e-9,
+                    "{} t={t}: rust {got} vs python {w}",
+                    spec.name
+                );
+            }
+            checked += 1;
+        }
+        if checked == 0 {
+            eprintln!("SKIP golden_matches_python_export: run `make artifacts`");
+        }
+    }
+}

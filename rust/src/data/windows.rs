@@ -1,0 +1,133 @@
+//! Evaluation windowing: channel-independent sliding windows over the test
+//! split (standard long-horizon forecasting protocol: lookback L, horizon H,
+//! per-channel z-scored by train statistics).
+
+use super::synthetic::{split_points, Dataset};
+
+/// One forecasting task instance (normalized values).
+#[derive(Clone, Debug)]
+pub struct Window {
+    pub channel: usize,
+    pub start: usize,
+    /// Lookback, length = lookback patches * patch.
+    pub history: Vec<f32>,
+    /// Ground truth, length = horizon patches * patch.
+    pub future: Vec<f32>,
+}
+
+/// Deterministic sliding eval windows from the test split.
+///
+/// `stride` is in time steps; the standard protocol strides by the horizon
+/// so windows do not overlap in their forecast region.
+pub fn eval_windows(
+    data: &Dataset,
+    patch: usize,
+    lookback_patches: usize,
+    horizon_patches: usize,
+    stride: usize,
+    max_windows: usize,
+) -> Vec<Window> {
+    let (_, val_end) = split_points(data.len());
+    let lb = lookback_patches * patch;
+    let hz = horizon_patches * patch;
+    let mut out = Vec::new();
+    'outer: for channel in 0..data.channels() {
+        let mut start = val_end;
+        while start + lb + hz <= data.len() {
+            out.push(Window {
+                channel,
+                start,
+                history: data.norm_slice(channel, start, lb),
+                future: data.norm_slice(channel, start + lb, hz),
+            });
+            if out.len() >= max_windows {
+                break 'outer;
+            }
+            start += stride;
+        }
+    }
+    out
+}
+
+/// Round-robin interleave across channels so a truncated window budget still
+/// covers every channel (used when batching across heterogeneous requests).
+pub fn eval_windows_balanced(
+    data: &Dataset,
+    patch: usize,
+    lookback_patches: usize,
+    horizon_patches: usize,
+    stride: usize,
+    max_windows: usize,
+) -> Vec<Window> {
+    let per_chan = eval_windows(data, patch, lookback_patches, horizon_patches, stride, usize::MAX);
+    let mut by_chan: Vec<Vec<Window>> = vec![Vec::new(); data.channels()];
+    for w in per_chan {
+        by_chan[w.channel].push(w);
+    }
+    let mut out = Vec::new();
+    let mut i = 0;
+    while out.len() < max_windows {
+        let mut any = false;
+        for ch in by_chan.iter() {
+            if let Some(w) = ch.get(i) {
+                out.push(w.clone());
+                any = true;
+                if out.len() >= max_windows {
+                    break;
+                }
+            }
+        }
+        if !any {
+            break;
+        }
+        i += 1;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::Dataset;
+
+    #[test]
+    fn windows_are_in_test_split_and_consistent() {
+        let d = Dataset::by_name("etth1").unwrap();
+        let ws = eval_windows(&d, 24, 4, 4, 96, 50);
+        assert!(!ws.is_empty());
+        let (_, val_end) = split_points(d.len());
+        for w in &ws {
+            assert!(w.start >= val_end);
+            assert_eq!(w.history.len(), 96);
+            assert_eq!(w.future.len(), 96);
+            // History + future must be contiguous in the underlying series.
+            let direct = d.norm_slice(w.channel, w.start, 192);
+            assert_eq!(&direct[..96], w.history.as_slice());
+            assert_eq!(&direct[96..], w.future.as_slice());
+        }
+    }
+
+    #[test]
+    fn stride_and_budget_respected() {
+        let d = Dataset::by_name("etth1").unwrap();
+        let ws = eval_windows(&d, 24, 4, 4, 48, 10);
+        assert_eq!(ws.len(), 10);
+        assert_eq!(ws[1].start - ws[0].start, 48);
+    }
+
+    #[test]
+    fn balanced_covers_channels() {
+        let d = Dataset::by_name("etth1").unwrap();
+        let ws = eval_windows_balanced(&d, 24, 4, 4, 96, 14);
+        let chans: std::collections::BTreeSet<usize> = ws.iter().map(|w| w.channel).collect();
+        assert_eq!(chans.len(), 7, "all 7 channels covered: {chans:?}");
+    }
+
+    #[test]
+    fn long_horizon_windows() {
+        let d = Dataset::by_name("ettm2").unwrap();
+        let ws = eval_windows(&d, 24, 4, 14, 336, 20); // pred-len 336
+        assert!(!ws.is_empty());
+        assert_eq!(ws[0].future.len(), 336);
+    }
+}

@@ -1,0 +1,153 @@
+//! Web-workload trace generator — the paper's §1 deployment scenarios as
+//! reproducible request traces for the load generator and capacity tests.
+//!
+//! Each scenario produces a deterministic sequence of (arrival offset,
+//! forecast request shape) events with the arrival-process character the
+//! intro describes: steady Poisson for recommendation ranking, diurnal
+//! modulation for CDN traffic, bursty flash-crowds for ads/e-commerce.
+
+use crate::util::rng::Rng;
+
+/// One request event in a trace.
+#[derive(Clone, Debug)]
+pub struct TraceEvent {
+    /// Arrival offset from trace start, seconds.
+    pub at_s: f64,
+    /// Dataset the history is drawn from.
+    pub dataset: &'static str,
+    /// Channel index (modulo the dataset's channels).
+    pub channel: usize,
+    /// History length in time steps.
+    pub history_len: usize,
+    /// Forecast horizon in patches.
+    pub horizon: usize,
+}
+
+/// Scenario presets from the paper's introduction.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Scenario {
+    /// §1(1): real-time content recommendation — steady high-rate Poisson,
+    /// short horizons, tight latency budget (10-50 ms).
+    Recommendation,
+    /// §1(2): CDN/traffic optimization — diurnally modulated rate,
+    /// minute-granularity forecasts, longer horizons.
+    Cdn,
+    /// §1(3): computational advertising — bursty arrivals (flash crowds on
+    /// top of a base rate), very short horizons, <20 ms budget.
+    Ads,
+    /// §1(4): e-commerce demand — moderate rate, mixed horizons including
+    /// long-range (pred-336) forecasts.
+    Ecommerce,
+}
+
+impl Scenario {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Scenario::Recommendation => "recommendation",
+            Scenario::Cdn => "cdn",
+            Scenario::Ads => "ads",
+            Scenario::Ecommerce => "ecommerce",
+        }
+    }
+
+    /// Latency SLO the scenario motivates (paper §1), milliseconds.
+    pub fn slo_ms(&self) -> f64 {
+        match self {
+            Scenario::Recommendation => 50.0,
+            Scenario::Cdn => 200.0,
+            Scenario::Ads => 20.0,
+            Scenario::Ecommerce => 100.0,
+        }
+    }
+}
+
+/// Generate a deterministic trace of `n` events at mean rate `rps`.
+pub fn generate_trace(scenario: Scenario, n: usize, rps: f64, seed: u64) -> Vec<TraceEvent> {
+    let mut rng = Rng::new(seed ^ 0x7124_CE00);
+    let mut t = 0.0f64;
+    let mut out = Vec::with_capacity(n);
+    for i in 0..n {
+        // Arrival process.
+        let rate = match scenario {
+            Scenario::Recommendation => rps,
+            // Diurnal modulation: +-60% sinusoid over a simulated day
+            // compressed into the trace span.
+            Scenario::Cdn => rps * (1.0 + 0.6 * (i as f64 / n as f64 * std::f64::consts::TAU).sin()),
+            // Bursts: 10x rate with probability 5%.
+            Scenario::Ads => {
+                if rng.bernoulli(0.05) {
+                    rps * 10.0
+                } else {
+                    rps
+                }
+            }
+            Scenario::Ecommerce => rps,
+        };
+        t += rng.exponential(rate.max(1e-6));
+        let (dataset, horizon) = match scenario {
+            Scenario::Recommendation => ("etth1", 4),
+            Scenario::Cdn => ("ettm2", if rng.bernoulli(0.3) { 14 } else { 4 }),
+            Scenario::Ads => ("etth2", if rng.bernoulli(0.5) { 2 } else { 4 }),
+            Scenario::Ecommerce => ("weather", if rng.bernoulli(0.2) { 14 } else { 8 }),
+        };
+        out.push(TraceEvent {
+            at_s: t,
+            dataset,
+            channel: rng.below(32),
+            history_len: 96,
+            horizon,
+        });
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn traces_are_deterministic_and_ordered() {
+        let a = generate_trace(Scenario::Recommendation, 100, 50.0, 1);
+        let b = generate_trace(Scenario::Recommendation, 100, 50.0, 1);
+        assert_eq!(a.len(), 100);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.at_s, y.at_s);
+        }
+        assert!(a.windows(2).all(|w| w[0].at_s <= w[1].at_s), "arrivals ordered");
+    }
+
+    #[test]
+    fn mean_rate_approximates_target() {
+        let tr = generate_trace(Scenario::Recommendation, 2000, 100.0, 2);
+        let span = tr.last().unwrap().at_s;
+        let rate = 2000.0 / span;
+        assert!((rate - 100.0).abs() / 100.0 < 0.1, "rate {rate}");
+    }
+
+    #[test]
+    fn ads_trace_is_burstier_than_recommendation() {
+        // Squared coefficient of variation of inter-arrivals: bursty > Poisson.
+        let cv2 = |tr: &[TraceEvent]| {
+            let gaps: Vec<f64> = tr.windows(2).map(|w| w[1].at_s - w[0].at_s).collect();
+            let m = gaps.iter().sum::<f64>() / gaps.len() as f64;
+            let v = gaps.iter().map(|g| (g - m) * (g - m)).sum::<f64>() / gaps.len() as f64;
+            v / (m * m)
+        };
+        let ads = generate_trace(Scenario::Ads, 3000, 100.0, 3);
+        let rec = generate_trace(Scenario::Recommendation, 3000, 100.0, 3);
+        assert!(cv2(&ads) > cv2(&rec), "ads {:.2} vs rec {:.2}", cv2(&ads), cv2(&rec));
+    }
+
+    #[test]
+    fn scenario_request_shapes() {
+        for s in [Scenario::Recommendation, Scenario::Cdn, Scenario::Ads, Scenario::Ecommerce] {
+            let tr = generate_trace(s, 200, 50.0, 4);
+            assert!(tr.iter().all(|e| e.history_len == 96));
+            assert!(tr.iter().all(|e| e.horizon >= 1 && e.horizon <= 14));
+            assert!(s.slo_ms() > 0.0);
+        }
+        // CDN mixes long horizons.
+        let cdn = generate_trace(Scenario::Cdn, 500, 50.0, 5);
+        assert!(cdn.iter().any(|e| e.horizon == 14));
+    }
+}

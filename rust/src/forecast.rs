@@ -1,0 +1,239 @@
+//! Forecast decoding modes and accuracy evaluation — the paper's baselines
+//! (§4.1.3): (i) target-only autoregression, (ii) draft-only decoding,
+//! (iii) speculative decoding, plus MSE/MAE evaluation over eval windows.
+
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::data::Window;
+use crate::models::Backend;
+use crate::specdec::{sd_generate, DecodeStats, SpecConfig};
+use crate::util::rng::Rng;
+use crate::util::tensor::mse_mae;
+
+/// Plain autoregressive decode with a single model: one forward per emitted
+/// patch, greedy (mean) emission — the paper's target baseline protocol.
+pub fn ar_decode(
+    model: &dyn Backend,
+    history: &[f32],
+    n_hist: usize,
+    horizon: usize,
+) -> Result<(Vec<f32>, Duration, usize)> {
+    let p = model.patch();
+    let mut ctx: Vec<f32> = history[..n_hist * p].to_vec();
+    let mut out = Vec::with_capacity(horizon * p);
+    let t0 = Instant::now();
+    let mut calls = 0usize;
+    for _ in 0..horizon {
+        let n = (ctx.len() / p).min(model.max_ctx());
+        if ctx.len() / p > model.max_ctx() {
+            let drop = ctx.len() / p - model.max_ctx();
+            ctx.drain(..drop * p);
+        }
+        let means = model.forward(&ctx, n)?;
+        calls += 1;
+        let mu = &means[(n - 1) * p..n * p];
+        out.extend_from_slice(mu);
+        ctx.extend_from_slice(mu);
+    }
+    Ok((out, t0.elapsed(), calls))
+}
+
+/// Stochastic AR decode (samples N(mu, sigma^2 I) each step) — the
+/// like-for-like baseline for SD's generative protocol.
+pub fn ar_decode_stochastic(
+    model: &dyn Backend,
+    history: &[f32],
+    n_hist: usize,
+    horizon: usize,
+    sigma: f64,
+    seed: u64,
+) -> Result<(Vec<f32>, Duration)> {
+    let p = model.patch();
+    let mut rng = Rng::new(seed);
+    let mut ctx: Vec<f32> = history[..n_hist * p].to_vec();
+    let mut out = Vec::with_capacity(horizon * p);
+    let t0 = Instant::now();
+    for _ in 0..horizon {
+        if ctx.len() / p > model.max_ctx() {
+            let drop = ctx.len() / p - model.max_ctx();
+            ctx.drain(..drop * p);
+        }
+        let n = ctx.len() / p;
+        let means = model.forward(&ctx, n)?;
+        let mu = &means[(n - 1) * p..n * p];
+        let mut x = vec![0.0f32; p];
+        rng.fill_normal_around(mu, sigma as f32, &mut x);
+        out.extend_from_slice(&x);
+        ctx.extend_from_slice(&x);
+    }
+    Ok((out, t0.elapsed()))
+}
+
+/// Batched greedy AR decode: all sequences advance one patch per round via
+/// one batched forward (the baseline for the paper's batch>1 rows).
+/// Sequences may differ in history length; horizons must match.
+pub fn ar_decode_batch(
+    model: &dyn Backend,
+    tasks: &[(&[f32], usize, usize)],
+    // (history, n_hist, horizon)
+) -> Result<(Vec<Vec<f32>>, Duration)> {
+    let p = model.patch();
+    anyhow::ensure!(!tasks.is_empty());
+    let horizon = tasks[0].2;
+    anyhow::ensure!(tasks.iter().all(|t| t.2 == horizon), "batched AR needs equal horizons");
+    let mut ctxs: Vec<Vec<f32>> = tasks.iter().map(|(h, n, _)| h[..n * p].to_vec()).collect();
+    let mut outs: Vec<Vec<f32>> = vec![Vec::with_capacity(horizon * p); tasks.len()];
+    let t0 = Instant::now();
+    for _ in 0..horizon {
+        for ctx in ctxs.iter_mut() {
+            if ctx.len() / p > model.max_ctx() {
+                let drop = ctx.len() / p - model.max_ctx();
+                ctx.drain(..drop * p);
+            }
+        }
+        let n_max = ctxs.iter().map(|c| c.len() / p).max().unwrap();
+        let mut buf = vec![0.0f32; tasks.len() * n_max * p];
+        for (i, ctx) in ctxs.iter().enumerate() {
+            buf[i * n_max * p..i * n_max * p + ctx.len()].copy_from_slice(ctx);
+        }
+        let means = model.forward_batch(&buf, tasks.len(), n_max)?;
+        for (i, ctx) in ctxs.iter_mut().enumerate() {
+            let n_i = ctx.len() / p;
+            let off = i * n_max * p + (n_i - 1) * p;
+            let mu = &means[off..off + p];
+            outs[i].extend_from_slice(mu);
+            ctx.extend_from_slice(mu);
+        }
+    }
+    Ok((outs, t0.elapsed()))
+}
+
+/// Accuracy + efficiency over a set of eval windows for one decoding mode.
+#[derive(Clone, Debug, Default)]
+pub struct EvalResult {
+    pub windows: usize,
+    pub mse: f64,
+    pub mae: f64,
+    /// Total decode wall-clock.
+    pub wall: Duration,
+    /// Emitted patches (throughput numerator).
+    pub patches: usize,
+    /// SD-only: aggregated decode stats.
+    pub sd: DecodeStats,
+}
+
+impl EvalResult {
+    pub fn throughput_patches_per_s(&self) -> f64 {
+        self.patches as f64 / self.wall.as_secs_f64()
+    }
+}
+
+/// Evaluate target-only AR (greedy) over windows.
+pub fn eval_ar(model: &dyn Backend, windows: &[Window], patch: usize) -> Result<EvalResult> {
+    let mut r = EvalResult::default();
+    let (mut se, mut ae) = (0.0, 0.0);
+    for w in windows {
+        let n_hist = w.history.len() / patch;
+        let horizon = w.future.len() / patch;
+        let (pred, wall, _calls) = ar_decode(model, &w.history, n_hist, horizon)?;
+        let (mse, mae) = mse_mae(&pred, &w.future);
+        se += mse;
+        ae += mae;
+        r.wall += wall;
+        r.patches += horizon;
+        r.windows += 1;
+    }
+    r.mse = se / r.windows as f64;
+    r.mae = ae / r.windows as f64;
+    Ok(r)
+}
+
+/// Evaluate speculative decoding over windows.
+pub fn eval_sd(
+    target: &dyn Backend,
+    draft: &dyn Backend,
+    windows: &[Window],
+    patch: usize,
+    cfg: &SpecConfig,
+) -> Result<EvalResult> {
+    let mut r = EvalResult::default();
+    let (mut se, mut ae) = (0.0, 0.0);
+    for (i, w) in windows.iter().enumerate() {
+        let n_hist = w.history.len() / patch;
+        let horizon = w.future.len() / patch;
+        let mut c = *cfg;
+        c.seed = cfg.seed.wrapping_add(i as u64 * 0x9E37);
+        let t0 = Instant::now();
+        let out = sd_generate(target, draft, &w.history, n_hist, horizon, &c)?;
+        r.wall += t0.elapsed();
+        let (mse, mae) = mse_mae(&out.patches, &w.future);
+        se += mse;
+        ae += mae;
+        r.patches += horizon;
+        r.windows += 1;
+        r.sd.merge(&out.stats);
+    }
+    r.mse = se / r.windows as f64;
+    r.mae = ae / r.windows as f64;
+    Ok(r)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::AnalyticBackend;
+
+    fn window(patch: usize, n_hist: usize, horizon: usize) -> Window {
+        Window {
+            channel: 0,
+            start: 0,
+            history: (0..n_hist * patch).map(|i| (i as f32 * 0.3).sin()).collect(),
+            future: (0..horizon * patch).map(|i| (i as f32 * 0.3).cos()).collect(),
+        }
+    }
+
+    #[test]
+    fn ar_decode_emits_horizon() {
+        let m = AnalyticBackend::new("t", 3, 0.9, 0.0);
+        let w = window(3, 4, 5);
+        let (pred, _, calls) = ar_decode(&m, &w.history, 4, 5).unwrap();
+        assert_eq!(pred.len(), 15);
+        assert_eq!(calls, 5);
+    }
+
+    #[test]
+    fn eval_ar_and_sd_shapes() {
+        let t = AnalyticBackend::new("t", 2, 0.8, 0.1);
+        let d = AnalyticBackend::new("d", 2, 0.78, 0.1);
+        let ws: Vec<Window> = (0..4).map(|_| window(2, 3, 6)).collect();
+        let ar = eval_ar(&t, &ws, 2).unwrap();
+        assert_eq!(ar.windows, 4);
+        assert_eq!(ar.patches, 24);
+        assert!(ar.mse.is_finite() && ar.mae.is_finite());
+
+        let sd = eval_sd(&t, &d, &ws, 2, &SpecConfig::default()).unwrap();
+        assert_eq!(sd.windows, 4);
+        assert!(sd.sd.rounds > 0);
+        assert!(sd.sd.alpha_hat() > 0.0);
+        assert!(sd.throughput_patches_per_s() > 0.0);
+    }
+
+    #[test]
+    fn greedy_ar_beats_stochastic_on_mse() {
+        // Adding sigma-noise to emissions must not *reduce* error on
+        // average — the sigma/MSE mechanism behind the paper's Fig. 6.
+        let t = AnalyticBackend::new("t", 2, 0.8, 0.1);
+        let ws: Vec<Window> = (0..6).map(|_| window(2, 3, 8)).collect();
+        let greedy = eval_ar(&t, &ws, 2).unwrap();
+        let mut se = 0.0;
+        for (i, w) in ws.iter().enumerate() {
+            let (pred, _) =
+                ar_decode_stochastic(&t, &w.history, 3, 8, 0.8, 7 + i as u64).unwrap();
+            se += mse_mae(&pred, &w.future).0;
+        }
+        let stoch_mse = se / ws.len() as f64;
+        assert!(stoch_mse > greedy.mse, "stochastic {stoch_mse} vs greedy {}", greedy.mse);
+    }
+}

@@ -1,0 +1,258 @@
+//! Gaussian patch heads (paper §2, §3.6, Remark 1/5).
+//!
+//! Both target and draft parameterize the next patch as N(mu(H), sigma^2 I)
+//! with a shared per-sample sigma (the paper's swept noise knob). This
+//! module provides log-densities, sampling, the closed-form equal-covariance
+//! overlap, and the diagonal-covariance extension (Remark 1).
+
+use crate::util::rng::Rng;
+use crate::util::stats::phi;
+
+/// Isotropic Gaussian head: mean vector + shared scalar sigma.
+#[derive(Clone, Debug, PartialEq)]
+pub struct IsoGaussian {
+    pub mean: Vec<f32>,
+    pub sigma: f64,
+}
+
+impl IsoGaussian {
+    pub fn new(mean: Vec<f32>, sigma: f64) -> Self {
+        assert!(sigma > 0.0, "sigma must be positive");
+        IsoGaussian { mean, sigma }
+    }
+
+    pub fn dim(&self) -> usize {
+        self.mean.len()
+    }
+
+    /// log N(x; mean, sigma^2 I).
+    pub fn log_density(&self, x: &[f32]) -> f64 {
+        assert_eq!(x.len(), self.dim());
+        let d = self.dim() as f64;
+        let s2 = self.sigma * self.sigma;
+        let sq: f64 = x
+            .iter()
+            .zip(&self.mean)
+            .map(|(a, b)| {
+                let d = (*a - *b) as f64;
+                d * d
+            })
+            .sum();
+        -0.5 * (d * (2.0 * std::f64::consts::PI * s2).ln() + sq / s2)
+    }
+
+    /// Draw x ~ N(mean, sigma^2 I).
+    pub fn sample(&self, rng: &mut Rng) -> Vec<f32> {
+        let mut out = vec![0.0f32; self.dim()];
+        rng.fill_normal_around(&self.mean, self.sigma as f32, &mut out);
+        out
+    }
+
+    /// Squared L2 distance between means.
+    pub fn mean_gap_sq(&self, other: &IsoGaussian) -> f64 {
+        assert_eq!(self.dim(), other.dim());
+        self.mean
+            .iter()
+            .zip(&other.mean)
+            .map(|(a, b)| {
+                let d = (*a - *b) as f64;
+                d * d
+            })
+            .sum()
+    }
+
+    /// Closed-form overlap beta = ∫ min{p, q} for equal-sigma heads
+    /// (paper Remark 5): beta = 2 Phi(-Delta/2), Delta = ||mu_p - mu_q|| / sigma.
+    pub fn overlap(&self, other: &IsoGaussian) -> f64 {
+        assert!(
+            (self.sigma - other.sigma).abs() < 1e-12,
+            "closed-form overlap requires equal sigma"
+        );
+        let delta = self.mean_gap_sq(other).sqrt() / self.sigma;
+        2.0 * phi(-delta / 2.0)
+    }
+}
+
+/// Diagonal-covariance head (paper Remark 1 extension). More expressive —
+/// can raise acceptance by matching the target better — at higher per-step
+/// evaluation cost; the ablation bench compares both.
+#[derive(Clone, Debug, PartialEq)]
+pub struct DiagGaussian {
+    pub mean: Vec<f32>,
+    pub sigmas: Vec<f32>,
+}
+
+impl DiagGaussian {
+    pub fn new(mean: Vec<f32>, sigmas: Vec<f32>) -> Self {
+        assert_eq!(mean.len(), sigmas.len());
+        assert!(sigmas.iter().all(|s| *s > 0.0));
+        DiagGaussian { mean, sigmas }
+    }
+
+    pub fn dim(&self) -> usize {
+        self.mean.len()
+    }
+
+    pub fn log_density(&self, x: &[f32]) -> f64 {
+        let mut acc = -0.5 * self.dim() as f64 * (2.0 * std::f64::consts::PI).ln();
+        for i in 0..self.dim() {
+            let s = self.sigmas[i] as f64;
+            let d = (x[i] - self.mean[i]) as f64;
+            acc -= s.ln() + 0.5 * d * d / (s * s);
+        }
+        acc
+    }
+
+    pub fn sample(&self, rng: &mut Rng) -> Vec<f32> {
+        self.mean
+            .iter()
+            .zip(&self.sigmas)
+            .map(|(m, s)| m + s * rng.normal() as f32)
+            .collect()
+    }
+
+    /// Mahalanobis distance of x from the mean.
+    pub fn mahalanobis(&self, x: &[f32]) -> f64 {
+        self.mean
+            .iter()
+            .zip(&self.sigmas)
+            .zip(x)
+            .map(|((m, s), xi)| {
+                let d = ((xi - m) / s) as f64;
+                d * d
+            })
+            .sum::<f64>()
+            .sqrt()
+    }
+}
+
+/// Log-likelihood ratio log p(x)/q(x) for equal-sigma isotropic heads,
+/// fused as sum((mu_q - mu_p) * (2x - mu_p - mu_q)) / (2 sigma^2) — the same
+/// difference-of-squares factorization as the L1 Pallas kernel, avoiding the
+/// cancellation of two large norms (paper §3.6 log-domain rule).
+#[inline]
+pub fn iso_log_ratio(x: &[f32], mu_p: &[f32], mu_q: &[f32], sigma: f64) -> f64 {
+    debug_assert_eq!(x.len(), mu_p.len());
+    debug_assert_eq!(x.len(), mu_q.len());
+    let mut acc = 0.0f64;
+    for i in 0..x.len() {
+        let dq_dp = (mu_q[i] - mu_p[i]) as f64;
+        let two_x = 2.0 * x[i] as f64 - mu_p[i] as f64 - mu_q[i] as f64;
+        acc += dq_dp * two_x;
+    }
+    -acc / (2.0 * sigma * sigma)
+}
+
+/// Log ratio for diagonal heads (Remark 1): Mahalanobis difference plus the
+/// log-determinant correction 1/2 log|Σ_q| - 1/2 log|Σ_p|.
+pub fn diag_log_ratio(x: &[f32], p: &DiagGaussian, q: &DiagGaussian) -> f64 {
+    p.log_density(x) - q.log_density(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest_lite::{check, NormalVec, UsizeRange};
+
+    fn mc_overlap(p: &IsoGaussian, q: &IsoGaussian, n: usize, seed: u64) -> f64 {
+        // E_q[min(1, p/q)] == beta for alpha = min(1, p/q).
+        let mut rng = Rng::new(seed);
+        let mut acc = 0.0;
+        for _ in 0..n {
+            let x = q.sample(&mut rng);
+            let lr = p.log_density(&x) - q.log_density(&x);
+            acc += lr.min(0.0).exp();
+        }
+        acc / n as f64
+    }
+
+    #[test]
+    fn log_density_matches_analytic_1d() {
+        let g = IsoGaussian::new(vec![0.0], 1.0);
+        let want = -0.5 * (2.0 * std::f64::consts::PI).ln();
+        assert!((g.log_density(&[0.0]) - want).abs() < 1e-12);
+        assert!((g.log_density(&[1.0]) - (want - 0.5)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn closed_form_overlap_matches_monte_carlo() {
+        let p = IsoGaussian::new(vec![0.5, -0.3, 0.2], 0.7);
+        let q = IsoGaussian::new(vec![0.0, 0.0, 0.0], 0.7);
+        let analytic = p.overlap(&q);
+        let mc = mc_overlap(&p, &q, 60_000, 11);
+        assert!(
+            (analytic - mc).abs() < 0.01,
+            "closed form {analytic:.4} vs MC {mc:.4}"
+        );
+    }
+
+    #[test]
+    fn overlap_one_for_identical_heads() {
+        let p = IsoGaussian::new(vec![1.0, 2.0], 0.5);
+        assert!((p.overlap(&p.clone()) - 1.0).abs() < 1e-6); // A&S erf bias ~1e-9
+    }
+
+    #[test]
+    fn iso_log_ratio_matches_density_difference() {
+        let mut rng = Rng::new(3);
+        for _ in 0..50 {
+            let d = 8;
+            let mu_p: Vec<f32> = (0..d).map(|_| rng.normal() as f32).collect();
+            let mu_q: Vec<f32> = (0..d).map(|_| rng.normal() as f32).collect();
+            let x: Vec<f32> = (0..d).map(|_| rng.normal() as f32).collect();
+            let sigma = 0.6;
+            let p = IsoGaussian::new(mu_p.clone(), sigma);
+            let q = IsoGaussian::new(mu_q.clone(), sigma);
+            let direct = p.log_density(&x) - q.log_density(&x);
+            let fused = iso_log_ratio(&x, &mu_p, &mu_q, sigma);
+            assert!((direct - fused).abs() < 1e-4, "{direct} vs {fused}"); // f32 sub rounding
+        }
+    }
+
+    #[test]
+    fn sampling_moments() {
+        let g = IsoGaussian::new(vec![2.0; 4], 0.5);
+        let mut rng = Rng::new(7);
+        let n = 20_000;
+        let mut sum = 0.0f64;
+        let mut sum2 = 0.0f64;
+        for _ in 0..n {
+            let x = g.sample(&mut rng);
+            for v in x {
+                sum += v as f64;
+                sum2 += (v as f64 - 2.0).powi(2);
+            }
+        }
+        let mean = sum / (n * 4) as f64;
+        let var = sum2 / (n * 4) as f64;
+        assert!((mean - 2.0).abs() < 0.01, "mean {mean}");
+        assert!((var - 0.25).abs() < 0.01, "var {var}");
+    }
+
+    #[test]
+    fn diag_reduces_to_iso_when_sigmas_equal() {
+        let mean = vec![0.1, -0.2, 0.3];
+        let iso = IsoGaussian::new(mean.clone(), 0.4);
+        let diag = DiagGaussian::new(mean, vec![0.4; 3]);
+        let x = [0.0, 0.5, -0.5];
+        assert!((iso.log_density(&x) - diag.log_density(&x)).abs() < 1e-6); // f32 sigma rounding
+    }
+
+    #[test]
+    fn prop_overlap_bounds_and_symmetry() {
+        // beta in (0, 1], symmetric in (p, q).
+        check(&NormalVec { len: UsizeRange(1, 16), scale: 1.0 }, |mean| {
+            let p = IsoGaussian::new(mean.clone(), 0.5);
+            let q = IsoGaussian::new(vec![0.0; mean.len()], 0.5);
+            let b1 = p.overlap(&q);
+            let b2 = q.overlap(&p);
+            if !(0.0..=1.0 + 1e-12).contains(&b1) {
+                return Err(format!("overlap {b1} out of bounds"));
+            }
+            if (b1 - b2).abs() > 1e-12 {
+                return Err(format!("asymmetric: {b1} vs {b2}"));
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,12 @@
+//! Minimal HTTP/1.1 substrate over std::net (tokio is unavailable offline).
+//!
+//! Server: blocking accept loop + worker thread pool; enough of HTTP/1.1
+//! for a JSON serving API (fixed-length bodies, keep-alive, chunked *not*
+//! supported — the client we ship never sends it).
+//! Client: blocking request helper used by the load generator and tests.
+
+mod client;
+mod server;
+
+pub use client::{http_request, HttpResponse};
+pub use server::{HttpServer, Request, Response};

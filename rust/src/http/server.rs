@@ -1,0 +1,270 @@
+//! Blocking HTTP/1.1 server: accept loop on a std::net listener, requests
+//! dispatched to a handler on a worker pool. Designed for the coordinator's
+//! JSON API: small request bodies, keep-alive, graceful shutdown.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::util::threadpool::ThreadPool;
+
+#[derive(Clone, Debug)]
+pub struct Request {
+    pub method: String,
+    pub path: String,
+    pub query: Option<String>,
+    pub headers: Vec<(String, String)>,
+    pub body: Vec<u8>,
+}
+
+impl Request {
+    pub fn header(&self, name: &str) -> Option<&str> {
+        self.headers
+            .iter()
+            .find(|(k, _)| k.eq_ignore_ascii_case(name))
+            .map(|(_, v)| v.as_str())
+    }
+
+    pub fn body_str(&self) -> Result<&str, std::str::Utf8Error> {
+        std::str::from_utf8(&self.body)
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct Response {
+    pub status: u16,
+    pub content_type: &'static str,
+    pub body: Vec<u8>,
+}
+
+impl Response {
+    pub fn json(status: u16, body: String) -> Response {
+        Response { status, content_type: "application/json", body: body.into_bytes() }
+    }
+    pub fn text(status: u16, body: &str) -> Response {
+        Response { status, content_type: "text/plain", body: body.as_bytes().to_vec() }
+    }
+    pub fn not_found() -> Response {
+        Response::text(404, "not found")
+    }
+    pub fn bad_request(msg: &str) -> Response {
+        Response::text(400, msg)
+    }
+}
+
+fn status_text(code: u16) -> &'static str {
+    match code {
+        200 => "OK",
+        202 => "Accepted",
+        400 => "Bad Request",
+        404 => "Not Found",
+        429 => "Too Many Requests",
+        500 => "Internal Server Error",
+        503 => "Service Unavailable",
+        _ => "Unknown",
+    }
+}
+
+pub type Handler = Arc<dyn Fn(&Request) -> Response + Send + Sync + 'static>;
+
+pub struct HttpServer {
+    pub addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept_thread: Option<std::thread::JoinHandle<()>>,
+}
+
+impl HttpServer {
+    /// Bind `addr` (use port 0 for an ephemeral port) and serve `handler`
+    /// on `workers` threads until `shutdown()`.
+    pub fn start(addr: &str, workers: usize, handler: Handler) -> std::io::Result<HttpServer> {
+        let listener = TcpListener::bind(addr)?;
+        let local = listener.local_addr()?;
+        // Periodic accept timeout so the stop flag is observed promptly.
+        listener.set_nonblocking(true)?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = Arc::clone(&stop);
+        let accept_thread = std::thread::Builder::new()
+            .name("stride-accept".into())
+            .spawn(move || {
+                let pool = ThreadPool::new(workers);
+                loop {
+                    if stop2.load(Ordering::Relaxed) {
+                        break;
+                    }
+                    match listener.accept() {
+                        Ok((stream, _)) => {
+                            let handler = Arc::clone(&handler);
+                            pool.execute(move || handle_connection(stream, handler));
+                        }
+                        Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                            std::thread::sleep(Duration::from_millis(2));
+                        }
+                        Err(_) => break,
+                    }
+                }
+            })?;
+        Ok(HttpServer { addr: local, stop, accept_thread: Some(accept_thread) })
+    }
+
+    pub fn shutdown(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(t) = self.accept_thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+impl Drop for HttpServer {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn handle_connection(stream: TcpStream, handler: Handler) {
+    let _ = stream.set_read_timeout(Some(Duration::from_secs(30)));
+    let _ = stream.set_nodelay(true);
+    let mut reader = BufReader::new(match stream.try_clone() {
+        Ok(s) => s,
+        Err(_) => return,
+    });
+    let mut stream = stream;
+    // Keep-alive loop.
+    loop {
+        let req = match read_request(&mut reader) {
+            Ok(Some(r)) => r,
+            _ => return,
+        };
+        let keep_alive = !matches!(req.header("connection"), Some(v) if v.eq_ignore_ascii_case("close"));
+        let resp = handler(&req);
+        if write_response(&mut stream, &resp, keep_alive).is_err() {
+            return;
+        }
+        if !keep_alive {
+            return;
+        }
+    }
+}
+
+fn read_request<R: BufRead>(reader: &mut R) -> std::io::Result<Option<Request>> {
+    let mut line = String::new();
+    if reader.read_line(&mut line)? == 0 {
+        return Ok(None); // closed
+    }
+    let mut parts = line.split_whitespace();
+    let method = parts.next().unwrap_or("").to_uppercase();
+    let target = parts.next().unwrap_or("/").to_string();
+    if method.is_empty() {
+        return Ok(None);
+    }
+    let (path, query) = match target.split_once('?') {
+        Some((p, q)) => (p.to_string(), Some(q.to_string())),
+        None => (target, None),
+    };
+    let mut headers = Vec::new();
+    let mut content_len = 0usize;
+    loop {
+        let mut h = String::new();
+        if reader.read_line(&mut h)? == 0 {
+            return Ok(None);
+        }
+        let h = h.trim_end();
+        if h.is_empty() {
+            break;
+        }
+        if let Some((k, v)) = h.split_once(':') {
+            let k = k.trim().to_string();
+            let v = v.trim().to_string();
+            if k.eq_ignore_ascii_case("content-length") {
+                content_len = v.parse().unwrap_or(0);
+            }
+            headers.push((k, v));
+        }
+    }
+    const MAX_BODY: usize = 64 << 20;
+    if content_len > MAX_BODY {
+        return Err(std::io::Error::new(std::io::ErrorKind::InvalidData, "body too large"));
+    }
+    let mut body = vec![0u8; content_len];
+    reader.read_exact(&mut body)?;
+    Ok(Some(Request { method, path, query, headers, body }))
+}
+
+fn write_response(stream: &mut TcpStream, resp: &Response, keep_alive: bool) -> std::io::Result<()> {
+    let head = format!(
+        "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nContent-Length: {}\r\nConnection: {}\r\n\r\n",
+        resp.status,
+        status_text(resp.status),
+        resp.content_type,
+        resp.body.len(),
+        if keep_alive { "keep-alive" } else { "close" },
+    );
+    stream.write_all(head.as_bytes())?;
+    stream.write_all(&resp.body)?;
+    stream.flush()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::http::client::http_request;
+
+    fn echo_server() -> HttpServer {
+        HttpServer::start(
+            "127.0.0.1:0",
+            2,
+            Arc::new(|req: &Request| match req.path.as_str() {
+                "/healthz" => Response::text(200, "ok"),
+                "/echo" => Response::json(200, String::from_utf8_lossy(&req.body).into_owned()),
+                _ => Response::not_found(),
+            }),
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn serves_get_and_post() {
+        let server = echo_server();
+        let addr = server.addr;
+        let r = http_request(&addr.to_string(), "GET", "/healthz", None).unwrap();
+        assert_eq!(r.status, 200);
+        assert_eq!(r.body_str(), "ok");
+        let r = http_request(&addr.to_string(), "POST", "/echo", Some(b"{\"x\":1}")).unwrap();
+        assert_eq!(r.status, 200);
+        assert_eq!(r.body_str(), "{\"x\":1}");
+        let r = http_request(&addr.to_string(), "GET", "/nope", None).unwrap();
+        assert_eq!(r.status, 404);
+    }
+
+    #[test]
+    fn concurrent_requests() {
+        let server = echo_server();
+        let addr = server.addr.to_string();
+        let handles: Vec<_> = (0..8)
+            .map(|i| {
+                let addr = addr.clone();
+                std::thread::spawn(move || {
+                    let body = format!("{{\"i\":{i}}}");
+                    let r =
+                        http_request(&addr, "POST", "/echo", Some(body.as_bytes())).unwrap();
+                    assert_eq!(r.body_str(), body);
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn shutdown_is_clean() {
+        let mut server = echo_server();
+        let addr = server.addr.to_string();
+        let _ = http_request(&addr, "GET", "/healthz", None).unwrap();
+        server.shutdown();
+        // Subsequent connections must fail (listener gone).
+        std::thread::sleep(Duration::from_millis(20));
+        assert!(http_request(&addr, "GET", "/healthz", None).is_err());
+    }
+}

@@ -1,0 +1,47 @@
+//! # STRIDE — Speculative decoding for time-series foundation models
+//!
+//! Rust + JAX + Pallas reproduction of *"Accelerating Time Series Foundation
+//! Models with Speculative Decoding"* (CS.LG 2025) as a production-shaped
+//! serving framework.
+//!
+//! Architecture (see DESIGN.md):
+//! * **L1 (Pallas)** and **L2 (JAX)** live in `python/compile/` and run only
+//!   at build time (`make artifacts`), producing HLO-text artifacts.
+//! * **L3 (this crate)** is the serving coordinator: PJRT runtime, the
+//!   speculative-decoding engine (practical + lossless variants), the
+//!   dynamic batcher and router, theory-driven γ selection, and metrics.
+//!
+//! Quick tour:
+//! * [`specdec`] — Algorithm 1/2 over a [`models::Backend`].
+//! * [`theory`] — Eqs. 2–6 closed forms, γ* rule, dependence bounds.
+//! * [`accept`] — log-space acceptance (Eq. 7) + the α̂ estimator (§3.5).
+//! * [`runtime`] — HLO-text → PJRT executable cache.
+//! * [`server`] — HTTP front end with dynamic batching.
+
+pub mod accept;
+pub mod config;
+pub mod data;
+pub mod forecast;
+pub mod gaussian;
+pub mod http;
+pub mod metrics;
+pub mod models;
+pub mod nn;
+pub mod repro;
+pub mod runtime;
+pub mod server;
+pub mod specdec;
+pub mod theory;
+pub mod util;
+
+/// Crate version string surfaced by the CLI and `/healthz`.
+pub const VERSION: &str = env!("CARGO_PKG_VERSION");
+
+/// Resolve the artifacts directory: `STRIDE_ARTIFACTS` env var or
+/// `<manifest>/artifacts`.
+pub fn artifacts_dir() -> std::path::PathBuf {
+    match std::env::var("STRIDE_ARTIFACTS") {
+        Ok(p) => std::path::PathBuf::from(p),
+        Err(_) => std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts"),
+    }
+}

@@ -1,0 +1,233 @@
+//! STRIDE CLI — the leader entrypoint.
+//!
+//! Subcommands:
+//!   serve     start the forecasting service (the paper's deployment mode)
+//!   eval      offline accuracy/speed eval of one configuration
+//!   plan      estimate alpha-hat + pick gamma* from held-out windows
+//!   info      print artifact/manifest information
+//!
+//! Run `stride <cmd> --help` conventions: all flags are `--key value`;
+//! see `config::ServeConfig` for the full list.
+
+use anyhow::{bail, Context, Result};
+
+use stride::accept::AcceptancePolicy;
+use stride::config::{Cli, ServeConfig};
+use stride::data::{eval_windows, Dataset};
+use stride::forecast::{eval_ar, eval_sd};
+use stride::models::{Backend, NativeBackend, XlaBackend};
+use stride::runtime::{Engine, Manifest};
+use stride::specdec::SpecConfig;
+use stride::theory;
+
+const USAGE: &str = "\
+stride <command> [--key value ...]
+
+commands:
+  serve   start the HTTP forecasting service
+          --bind 127.0.0.1:8080 --backend xla|native --kernel fused|pallas
+          --gamma 3 --sigma 0.5 --bias 1.0 --max-batch 8 --max-wait-ms 2
+          --adaptive-gamma --lossless --greedy --baseline
+  eval    offline eval: --dataset etth1 --horizon 4 --windows 28 [--gamma/--sigma...]
+  plan    acceptance estimation + gamma scan: --dataset etth1 --windows 64
+  info    print the artifacts manifest summary
+";
+
+fn main() {
+    env_logger_lite();
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+/// Minimal env_logger replacement: honor RUST_LOG=info|debug via the `log`
+/// crate's max level (messages go to stderr).
+fn env_logger_lite() {
+    struct L;
+    impl log::Log for L {
+        fn enabled(&self, _: &log::Metadata) -> bool {
+            true
+        }
+        fn log(&self, record: &log::Record) {
+            eprintln!("[{}] {}", record.level(), record.args());
+        }
+        fn flush(&self) {}
+    }
+    static LOGGER: L = L;
+    let level = match std::env::var("RUST_LOG").as_deref() {
+        Ok("debug") => log::LevelFilter::Debug,
+        Ok("trace") => log::LevelFilter::Trace,
+        Ok("warn") => log::LevelFilter::Warn,
+        Ok("error") => log::LevelFilter::Error,
+        _ => log::LevelFilter::Info,
+    };
+    let _ = log::set_logger(&LOGGER).map(|_| log::set_max_level(level));
+}
+
+fn run() -> Result<()> {
+    let cli = Cli::from_env()?;
+    let cmd = cli.positional.first().map(String::as_str).unwrap_or("help");
+    match cmd {
+        "serve" => cmd_serve(&cli),
+        "eval" => cmd_eval(&cli),
+        "plan" => cmd_plan(&cli),
+        "info" => cmd_info(&cli),
+        "help" | "--help" | "-h" => {
+            println!("{USAGE}");
+            Ok(())
+        }
+        other => bail!("unknown command '{other}'\n{USAGE}"),
+    }
+}
+
+fn cmd_serve(cli: &Cli) -> Result<()> {
+    let mut cfg = ServeConfig::default();
+    cfg.apply_cli(cli)?;
+    let server = stride::server::Server::start(cfg)?;
+    println!("stride serving on http://{}  (Ctrl-C to stop)", server.addr());
+    // Block forever; the OS reclaims everything on SIGINT.
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(3600));
+    }
+}
+
+fn load_backends(cli: &Cli) -> Result<(Box<dyn Backend>, Box<dyn Backend>, Manifest)> {
+    let mut cfg = ServeConfig::default();
+    cfg.apply_cli(cli)?;
+    let manifest = Manifest::load(&cfg.artifacts)?;
+    match cfg.backend.as_str() {
+        "native" => {
+            let (t, d) = NativeBackend::pair_from_manifest(&manifest)?;
+            Ok((Box::new(t), Box::new(d), manifest))
+        }
+        _ => {
+            let mut engine = Engine::cpu()?;
+            let t = XlaBackend::load(&mut engine, &manifest, "target", &cfg.kernel)?;
+            let d = XlaBackend::load(&mut engine, &manifest, "draft", &cfg.kernel)?;
+            Ok((Box::new(t), Box::new(d), manifest))
+        }
+    }
+}
+
+fn cmd_eval(cli: &Cli) -> Result<()> {
+    let dataset = cli.get("dataset").unwrap_or("etth1");
+    let horizon = cli.get_usize("horizon")?.unwrap_or(4);
+    let n_windows = cli.get_usize("windows")?.unwrap_or(28);
+    let gamma = cli.get_usize("gamma")?.unwrap_or(3);
+    let sigma = cli.get_f64("sigma")?.unwrap_or(0.5);
+    let bias = cli.get_f64("bias")?.unwrap_or(1.0);
+
+    let (target, draft, manifest) = load_backends(cli)?;
+    let data = Dataset::by_name(dataset).with_context(|| format!("unknown dataset {dataset}"))?;
+    let windows =
+        eval_windows(&data, manifest.patch, 4, horizon, horizon * manifest.patch, n_windows);
+    println!(
+        "eval: dataset={dataset} windows={} horizon={horizon} patches gamma={gamma} sigma={sigma}",
+        windows.len()
+    );
+
+    let base = eval_ar(target.as_ref(), &windows, manifest.patch)?;
+    println!(
+        "baseline (target AR): MSE {:.4}  MAE {:.4}  wall {:.2}s  {:.1} patches/s",
+        base.mse,
+        base.mae,
+        base.wall.as_secs_f64(),
+        base.throughput_patches_per_s()
+    );
+
+    let mut spec = SpecConfig::default();
+    spec.gamma = gamma;
+    spec.policy = AcceptancePolicy::new(sigma, bias);
+    let sd = eval_sd(target.as_ref(), draft.as_ref(), &windows, manifest.patch, &spec)?;
+    let speedup = base.wall.as_secs_f64() / sd.wall.as_secs_f64();
+    println!(
+        "speculative:          MSE {:.4}  MAE {:.4}  wall {:.2}s  {:.1} patches/s  S_wall {:.2}x",
+        sd.mse,
+        sd.mae,
+        sd.wall.as_secs_f64(),
+        sd.throughput_patches_per_s(),
+        speedup
+    );
+    println!(
+        "acceptance: alpha_hat {:.4}  E[L] {:.2}  rounds {}  draft_calls {}  target_calls {}",
+        sd.sd.alpha_hat(),
+        sd.sd.mean_block_len(),
+        sd.sd.rounds,
+        sd.sd.draft_calls,
+        sd.sd.target_calls
+    );
+    Ok(())
+}
+
+fn cmd_plan(cli: &Cli) -> Result<()> {
+    let dataset = cli.get("dataset").unwrap_or("etth1");
+    let n_windows = cli.get_usize("windows")?.unwrap_or(64);
+    let sigma = cli.get_f64("sigma")?.unwrap_or(0.5);
+
+    let (target, draft, manifest) = load_backends(cli)?;
+    let data = Dataset::by_name(dataset).with_context(|| format!("unknown dataset {dataset}"))?;
+    let windows = eval_windows(&data, manifest.patch, 4, 1, 24, n_windows);
+    let policy = AcceptancePolicy::new(sigma, 1.0);
+
+    // Closed-form alpha-hat over held-out histories (Prop. 4 / Remark 5).
+    let p = manifest.patch;
+    let mut heads: Vec<(Vec<f32>, Vec<f32>)> = Vec::new();
+    for w in &windows {
+        let n = w.history.len() / p;
+        let mp = target.forward(&w.history, n)?;
+        let md = draft.forward(&w.history, n)?;
+        heads.push((mp[(n - 1) * p..n * p].to_vec(), md[(n - 1) * p..n * p].to_vec()));
+    }
+    let est = stride::accept::estimate_alpha_closed_form(
+        &policy,
+        heads.iter().map(|(a, b)| (a.as_slice(), b.as_slice())),
+    );
+    // Measured cost ratio from the forwards above.
+    let c = draft.mean_secs() / target.mean_secs();
+    let c_hat = draft.flops(manifest.n_ctx) / target.flops(manifest.n_ctx);
+    println!(
+        "alpha_hat = {:.4} +- {:.4} (95% Hoeffding, N={})   c = {:.3}   c_hat = {:.3}",
+        est.alpha_hat, est.eps95, est.n_histories, c, c_hat
+    );
+    let g_star = theory::optimal_gamma(est.alpha_hat, c, 16);
+    println!("gamma* (Prop. 3) = {g_star}");
+    println!("\n gamma   E[L]    S_wall   OpsFactor");
+    for gamma in [1usize, 2, 3, 4, 5, 7, 10] {
+        let pr = theory::predict(est.alpha_hat, gamma, c, c_hat);
+        println!(
+            "  {gamma:>3}   {:>5.2}   {:>6.2}x   {:>7.2}{}",
+            pr.expected_l,
+            pr.s_wall,
+            pr.ops_factor,
+            if gamma == g_star { "   <- gamma*" } else { "" }
+        );
+    }
+    Ok(())
+}
+
+fn cmd_info(cli: &Cli) -> Result<()> {
+    let mut cfg = ServeConfig::default();
+    cfg.apply_cli(cli)?;
+    let m = Manifest::load(&cfg.artifacts)?;
+    println!("artifacts: {}", m.dir.display());
+    println!("patch={} n_ctx={} batches={:?} quick={}", m.patch, m.n_ctx, m.batches, m.quick);
+    println!(
+        "target: {} ({} params, d_model={} layers={})",
+        m.target.name, m.target.param_count, m.target.dims.d_model, m.target.dims.n_layers
+    );
+    println!(
+        "draft:  {} ({} params, d_model={} layers={}, {:.1}% of target)",
+        m.draft.name,
+        m.draft.param_count,
+        m.draft.dims.d_model,
+        m.draft.dims.n_layers,
+        100.0 * m.draft.param_count as f64 / m.target.param_count as f64
+    );
+    println!("distill: sigma={} mean_gap={:.4}", m.distill_sigma, m.mean_gap);
+    println!("{} HLO artifacts:", m.artifacts.len());
+    for a in &m.artifacts {
+        println!("  {} (model={} batch={} kernel={})", a.file.file_name().unwrap().to_string_lossy(), a.model, a.batch, a.kernel);
+    }
+    Ok(())
+}

@@ -1,0 +1,196 @@
+//! Serving metrics registry (thread-safe): request counters, latency
+//! histograms, acceptance monitoring. Exposed at `/metrics` in a
+//! Prometheus-style text format and consumed by the adaptive-γ controller.
+//!
+//! The paper's §7 deployment guidance — "comprehensive monitoring of
+//! acceptance rates ᾱ across traffic segments, adaptive thresholds during
+//! anomalous periods" — is implemented by [`AcceptanceMonitor`].
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+use crate::util::stats::LatencyHistogram;
+
+#[derive(Default)]
+pub struct Metrics {
+    counters: Mutex<BTreeMap<String, u64>>,
+    histograms: Mutex<BTreeMap<String, LatencyHistogram>>,
+    pub requests_total: AtomicU64,
+    pub patches_total: AtomicU64,
+    pub errors_total: AtomicU64,
+}
+
+impl Metrics {
+    pub fn new() -> Metrics {
+        Metrics::default()
+    }
+
+    pub fn inc(&self, name: &str, by: u64) {
+        *self.counters.lock().unwrap().entry(name.to_string()).or_insert(0) += by;
+    }
+
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters.lock().unwrap().get(name).copied().unwrap_or(0)
+    }
+
+    pub fn observe(&self, name: &str, d: Duration) {
+        self.histograms
+            .lock()
+            .unwrap()
+            .entry(name.to_string())
+            .or_default()
+            .record(d);
+    }
+
+    pub fn quantile_ms(&self, name: &str, q: f64) -> f64 {
+        self.histograms
+            .lock()
+            .unwrap()
+            .get(name)
+            .map(|h| h.quantile_ns(q) / 1e6)
+            .unwrap_or(0.0)
+    }
+
+    /// Prometheus-style text dump.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "stride_requests_total {}\nstride_patches_total {}\nstride_errors_total {}\n",
+            self.requests_total.load(Ordering::Relaxed),
+            self.patches_total.load(Ordering::Relaxed),
+            self.errors_total.load(Ordering::Relaxed),
+        ));
+        for (k, v) in self.counters.lock().unwrap().iter() {
+            out.push_str(&format!("stride_{k} {v}\n"));
+        }
+        for (k, h) in self.histograms.lock().unwrap().iter() {
+            if h.count() == 0 {
+                continue;
+            }
+            out.push_str(&format!(
+                "stride_{k}_count {}\nstride_{k}_mean_ms {:.4}\nstride_{k}_p50_ms {:.4}\nstride_{k}_p95_ms {:.4}\nstride_{k}_p99_ms {:.4}\n",
+                h.count(),
+                h.mean_ns() / 1e6,
+                h.quantile_ns(0.50) / 1e6,
+                h.quantile_ns(0.95) / 1e6,
+                h.quantile_ns(0.99) / 1e6,
+            ));
+        }
+        out
+    }
+}
+
+/// Sliding-window acceptance monitor with an adaptive-γ recommendation
+/// (paper §7 "golden path" guidance + Prop. 3 online).
+pub struct AcceptanceMonitor {
+    window: usize,
+    inner: Mutex<MonitorState>,
+    /// Alert when windowed ᾱ drops below this (distribution shift guard).
+    pub alert_threshold: f64,
+}
+
+struct MonitorState {
+    alphas: std::collections::VecDeque<f64>,
+    sum: f64,
+}
+
+impl AcceptanceMonitor {
+    pub fn new(window: usize, alert_threshold: f64) -> AcceptanceMonitor {
+        AcceptanceMonitor {
+            window,
+            inner: Mutex::new(MonitorState { alphas: Default::default(), sum: 0.0 }),
+            alert_threshold,
+        }
+    }
+
+    pub fn record(&self, alpha: f64) {
+        let mut s = self.inner.lock().unwrap();
+        s.alphas.push_back(alpha);
+        s.sum += alpha;
+        if s.alphas.len() > self.window {
+            if let Some(old) = s.alphas.pop_front() {
+                s.sum -= old;
+            }
+        }
+    }
+
+    /// Windowed mean acceptance (NaN when empty).
+    pub fn alpha_bar(&self) -> f64 {
+        let s = self.inner.lock().unwrap();
+        if s.alphas.is_empty() {
+            f64::NAN
+        } else {
+            s.sum / s.alphas.len() as f64
+        }
+    }
+
+    pub fn n(&self) -> usize {
+        self.inner.lock().unwrap().alphas.len()
+    }
+
+    /// True when the windowed acceptance indicates distribution shift.
+    pub fn degraded(&self) -> bool {
+        let a = self.alpha_bar();
+        a.is_finite() && a < self.alert_threshold
+    }
+
+    /// Recommend γ from the windowed ᾱ and a measured cost ratio c
+    /// (Prop. 3), conservatively dropping to 1 when degraded.
+    pub fn recommend_gamma(&self, c: f64, cap: usize) -> usize {
+        if self.degraded() || self.n() == 0 {
+            return 1;
+        }
+        crate::theory::optimal_gamma(self.alpha_bar(), c, cap)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_and_histograms_render() {
+        let m = Metrics::new();
+        m.requests_total.fetch_add(3, Ordering::Relaxed);
+        m.inc("batches", 2);
+        m.observe("latency", Duration::from_millis(5));
+        m.observe("latency", Duration::from_millis(15));
+        let text = m.render();
+        assert!(text.contains("stride_requests_total 3"));
+        assert!(text.contains("stride_batches 2"));
+        assert!(text.contains("stride_latency_count 2"));
+        assert!(m.quantile_ms("latency", 0.5) > 1.0);
+    }
+
+    #[test]
+    fn monitor_windowed_mean() {
+        let mon = AcceptanceMonitor::new(4, 0.5);
+        for a in [1.0, 1.0, 0.0, 0.0] {
+            mon.record(a);
+        }
+        assert!((mon.alpha_bar() - 0.5).abs() < 1e-12);
+        // Window slides: two more 1.0s evict the early 1.0s.
+        mon.record(1.0);
+        mon.record(1.0);
+        assert!((mon.alpha_bar() - 0.5).abs() < 1e-12); // 0,0,1,1
+        mon.record(1.0);
+        assert!(mon.alpha_bar() > 0.7);
+    }
+
+    #[test]
+    fn monitor_degradation_and_gamma() {
+        let mon = AcceptanceMonitor::new(10, 0.6);
+        for _ in 0..10 {
+            mon.record(0.3);
+        }
+        assert!(mon.degraded());
+        assert_eq!(mon.recommend_gamma(0.2, 10), 1, "conservative under shift");
+        for _ in 0..10 {
+            mon.record(0.99);
+        }
+        assert!(!mon.degraded());
+        assert!(mon.recommend_gamma(0.1, 10) > 2);
+    }
+}

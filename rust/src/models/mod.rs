@@ -1,0 +1,57 @@
+//! Model backends: the abstraction the speculative-decoding engine runs
+//! over. Three implementations:
+//!
+//! * [`XlaBackend`] — the production path: AOT HLO artifacts on PJRT.
+//! * [`NativeBackend`] — pure-Rust forward (parity tests, PJRT-free benches).
+//! * [`AnalyticBackend`] — closed-form AR(1) patch heads for the statistical
+//!   exactness tests of the lossless variant (no NN at all).
+
+mod analytic;
+mod native;
+mod xla_backend;
+
+pub use analytic::AnalyticBackend;
+pub use native::NativeBackend;
+pub use xla_backend::XlaBackend;
+
+use anyhow::Result;
+
+/// A next-patch mean predictor over patch-token sequences.
+///
+/// `forward` consumes a flat row-major `[n, patch]` token buffer and returns
+/// flat `[n, patch]` means, where output position `i` is the predicted mean
+/// of patch `i+1` given patches `0..=i` (causal). This single signature
+/// serves both draft proposal steps (read the last position) and batched
+/// target validation (read the last γ+1 positions) — see DESIGN.md §2.
+pub trait Backend {
+    fn name(&self) -> &str;
+    fn patch(&self) -> usize;
+    /// Maximum sequence length (patches) a single forward accepts.
+    fn max_ctx(&self) -> usize;
+    /// Single-sequence forward.
+    fn forward(&self, tokens: &[f32], n: usize) -> Result<Vec<f32>>;
+    /// Batched forward over `b` independent sequences of equal length
+    /// (flat `[b, n, patch]`). Default: loop over `forward`.
+    fn forward_batch(&self, tokens: &[f32], b: usize, n: usize) -> Result<Vec<f32>> {
+        let stride = n * self.patch();
+        let mut out = Vec::with_capacity(b * stride);
+        for i in 0..b {
+            out.extend(self.forward(&tokens[i * stride..(i + 1) * stride], n)?);
+        }
+        Ok(out)
+    }
+    /// Mean seconds per single-sequence forward, if instrumented
+    /// (feeds the paper's measured cost ratio `c`).
+    fn mean_secs(&self) -> f64 {
+        f64::NAN
+    }
+    /// Dense-matmul FLOPs of one forward at length `n` (for ĉ / OpsFactor).
+    fn flops(&self, n: usize) -> f64;
+}
+
+/// Measured draft/target cost ratios (paper's c and ĉ).
+pub fn cost_ratios(target: &dyn Backend, draft: &dyn Backend, n: usize) -> (f64, f64) {
+    let c = draft.mean_secs() / target.mean_secs();
+    let c_hat = draft.flops(n) / target.flops(n);
+    (c, c_hat)
+}

@@ -1,0 +1,114 @@
+//! Pure-Rust backend over [`crate::nn::NativeModel`]: the CPU reference
+//! comparator and the PJRT-free test/bench path.
+
+use std::cell::RefCell;
+
+use anyhow::Result;
+
+use super::Backend;
+use crate::nn::{ModelDims, NativeModel, Weights};
+use crate::runtime::{Manifest, ModelEntry};
+use crate::util::stats::Summary;
+use crate::util::tensor::Tensor;
+
+pub struct NativeBackend {
+    model: NativeModel,
+    timings: RefCell<Summary>,
+}
+
+impl NativeBackend {
+    pub fn new(model: NativeModel) -> NativeBackend {
+        NativeBackend { model, timings: RefCell::new(Summary::new()) }
+    }
+
+    /// Load from a manifest model entry (weights blob + tensor index).
+    pub fn from_entry(entry: &ModelEntry) -> Result<NativeBackend> {
+        let w = Weights::load(&entry.weights_file, &entry.tensor_index)?;
+        Ok(NativeBackend::new(NativeModel::new(&entry.name, entry.dims, w)))
+    }
+
+    /// Load the (target, draft) pair from the artifacts manifest.
+    pub fn pair_from_manifest(m: &Manifest) -> Result<(NativeBackend, NativeBackend)> {
+        Ok((Self::from_entry(&m.target)?, Self::from_entry(&m.draft)?))
+    }
+
+    pub fn dims(&self) -> &ModelDims {
+        &self.model.dims
+    }
+}
+
+impl Backend for NativeBackend {
+    fn name(&self) -> &str {
+        &self.model.name
+    }
+    fn patch(&self) -> usize {
+        self.model.dims.patch
+    }
+    fn max_ctx(&self) -> usize {
+        self.model.dims.n_ctx
+    }
+
+    fn forward(&self, tokens: &[f32], n: usize) -> Result<Vec<f32>> {
+        let p = self.patch();
+        anyhow::ensure!(tokens.len() >= n * p, "tokens too short");
+        let t0 = std::time::Instant::now();
+        let t = Tensor::from_vec(&[1, n, p], tokens[..n * p].to_vec());
+        let out = self.model.forward(&t)?;
+        self.timings.borrow_mut().push(t0.elapsed().as_secs_f64());
+        Ok(out.data)
+    }
+
+    fn forward_batch(&self, tokens: &[f32], b: usize, n: usize) -> Result<Vec<f32>> {
+        let p = self.patch();
+        anyhow::ensure!(tokens.len() == b * n * p, "bad batch buffer");
+        let t = Tensor::from_vec(&[b, n, p], tokens.to_vec());
+        Ok(self.model.forward(&t)?.data)
+    }
+
+    fn mean_secs(&self) -> f64 {
+        let t = self.timings.borrow();
+        if t.n == 0 {
+            f64::NAN
+        } else {
+            t.mean()
+        }
+    }
+
+    fn flops(&self, n: usize) -> f64 {
+        let d = &self.model.dims;
+        let per_tok = 2.0
+            * (d.patch * d.d_model
+                + 4 * d.d_model * d.d_model * d.n_layers
+                + 3 * d.d_model * d.d_ff * d.n_layers
+                + d.d_model * d.patch) as f64;
+        let attn = (4 * n * n * d.d_model * d.n_layers) as f64;
+        n as f64 * per_tok + attn
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::model::tiny_model;
+
+    #[test]
+    fn backend_forward_and_timing() {
+        let b = NativeBackend::new(tiny_model(1));
+        let toks = vec![0.1f32; 8 * 4];
+        let out = b.forward(&toks, 8).unwrap();
+        assert_eq!(out.len(), 8 * 4);
+        assert!(b.mean_secs() > 0.0);
+        assert!(b.flops(8) > 0.0);
+    }
+
+    #[test]
+    fn default_batch_matches_loop() {
+        let b = NativeBackend::new(tiny_model(2));
+        let toks: Vec<f32> = (0..2 * 8 * 4).map(|i| (i as f32 * 0.1).sin()).collect();
+        let batched = b.forward_batch(&toks, 2, 8).unwrap();
+        let first = b.forward(&toks[..8 * 4], 8).unwrap();
+        for i in 0..8 * 4 {
+            assert!((batched[i] - first[i]).abs() < 1e-5);
+        }
+    }
+}

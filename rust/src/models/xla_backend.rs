@@ -1,0 +1,150 @@
+//! Production backend: AOT HLO artifacts executed via PJRT.
+//!
+//! Shapes are compile-time fixed at `[B, n_ctx, patch]` per artifact; this
+//! backend pads sequences to `n_ctx` (causality makes the padding inert for
+//! positions < n) and selects the smallest batch variant that fits, padding
+//! the batch with zero sequences — the same shape-specialization strategy
+//! TPU serving stacks use.
+
+use std::rc::Rc;
+
+use anyhow::{Context, Result};
+
+use super::Backend;
+use crate::nn::ModelDims;
+use crate::runtime::{Engine, Executable, Manifest};
+
+pub struct XlaBackend {
+    name: String,
+    dims: ModelDims,
+    /// (batch, n_ctx, executable) shape-specialized variants.
+    variants: Vec<(usize, usize, Rc<Executable>)>,
+}
+
+impl XlaBackend {
+    /// Load all batch variants of `model` ("target" | "draft") with the
+    /// given kernel flavor ("fused" | "pallas") from the manifest,
+    /// including short-sequence variants (production shape routing).
+    pub fn load(
+        engine: &mut Engine,
+        manifest: &Manifest,
+        model: &str,
+        kernel: &str,
+    ) -> Result<XlaBackend> {
+        Self::load_filtered(engine, manifest, model, kernel, false)
+    }
+
+    /// Like [`Self::load`] but with `full_ctx_only = true` restricted to
+    /// the full-context artifacts — the paper's fixed-graph measurement
+    /// protocol (one executable per model), used by the reproduction
+    /// benches so cost ratios are constant across context lengths.
+    pub fn load_filtered(
+        engine: &mut Engine,
+        manifest: &Manifest,
+        model: &str,
+        kernel: &str,
+        full_ctx_only: bool,
+    ) -> Result<XlaBackend> {
+        let entry = match model {
+            "target" => &manifest.target,
+            "draft" => &manifest.draft,
+            other => anyhow::bail!("unknown model {other}"),
+        };
+        let mut arts = manifest.batch_variants(model, kernel);
+        if full_ctx_only {
+            arts.retain(|a| a.n_ctx == manifest.n_ctx);
+        }
+        anyhow::ensure!(!arts.is_empty(), "no artifacts for {model}/{kernel}");
+        let mut variants = Vec::new();
+        for a in arts {
+            let exe = engine
+                .load(&a.file, (a.batch, a.n_ctx, manifest.patch))
+                .with_context(|| format!("loading {}", a.file.display()))?;
+            variants.push((a.batch, a.n_ctx, exe));
+        }
+        Ok(XlaBackend { name: format!("{}[{kernel}]", entry.name), dims: entry.dims, variants })
+    }
+
+    /// Cheapest variant fitting `b` rows of `n` patches (cost ~ b * n).
+    fn variant_for(&self, b: usize, n: usize) -> Result<&(usize, usize, Rc<Executable>)> {
+        self.variants
+            .iter()
+            .filter(|(vb, vn, _)| *vb >= b && *vn >= n)
+            .min_by_key(|(vb, vn, _)| (*vb * *vn, *vn))
+            .with_context(|| format!("no shape variant >= (b{b}, n{n}) for {}", self.name))
+    }
+
+    pub fn available_shapes(&self) -> Vec<(usize, usize)> {
+        self.variants.iter().map(|(b, n, _)| (*b, *n)).collect()
+    }
+}
+
+impl Backend for XlaBackend {
+    fn name(&self) -> &str {
+        &self.name
+    }
+    fn patch(&self) -> usize {
+        self.dims.patch
+    }
+    fn max_ctx(&self) -> usize {
+        self.dims.n_ctx
+    }
+
+    fn forward(&self, tokens: &[f32], n: usize) -> Result<Vec<f32>> {
+        let p = self.dims.patch;
+        anyhow::ensure!(n <= self.dims.n_ctx, "n {n} > n_ctx {}", self.dims.n_ctx);
+        anyhow::ensure!(tokens.len() >= n * p, "tokens too short");
+        let (_, vn, exe) = self.variant_for(1, n)?;
+        // Pad sequence to the variant's shape; outputs past n-1 are
+        // garbage-but-unused thanks to the causal mask.
+        let mut buf = vec![0.0f32; vn * p];
+        buf[..n * p].copy_from_slice(&tokens[..n * p]);
+        let out = exe.run(&buf)?;
+        Ok(out[..n * p].to_vec())
+    }
+
+    fn forward_batch(&self, tokens: &[f32], b: usize, n: usize) -> Result<Vec<f32>> {
+        let p = self.dims.patch;
+        anyhow::ensure!(n <= self.dims.n_ctx);
+        anyhow::ensure!(tokens.len() == b * n * p, "bad batch buffer");
+        let (vb, vn, exe) = self.variant_for(b, n)?;
+        let mut buf = vec![0.0f32; vb * vn * p];
+        for i in 0..b {
+            buf[i * vn * p..i * vn * p + n * p]
+                .copy_from_slice(&tokens[i * n * p..(i + 1) * n * p]);
+        }
+        let out = exe.run(&buf)?;
+        let mut result = Vec::with_capacity(b * n * p);
+        for i in 0..b {
+            result.extend_from_slice(&out[i * vn * p..i * vn * p + n * p]);
+        }
+        Ok(result)
+    }
+
+    fn mean_secs(&self) -> f64 {
+        // Weighted mean over all variants that have run.
+        let (mut t, mut n) = (0.0, 0u64);
+        for (_, _, e) in &self.variants {
+            if e.calls() > 0 {
+                t += e.mean_secs() * e.calls() as f64;
+                n += e.calls();
+            }
+        }
+        if n == 0 {
+            f64::NAN
+        } else {
+            t / n as f64
+        }
+    }
+
+    fn flops(&self, n: usize) -> f64 {
+        let d = &self.dims;
+        let per_tok = 2.0
+            * (d.patch * d.d_model
+                + 4 * d.d_model * d.d_model * d.n_layers
+                + 3 * d.d_model * d.d_ff * d.n_layers
+                + d.d_model * d.patch) as f64;
+        let attn = (4 * n * n * d.d_model * d.n_layers) as f64;
+        n as f64 * per_tok + attn
+    }
+}

@@ -1,0 +1,8 @@
+//! Native (pure-Rust) neural network substrate: weight loading and the
+//! Timer-style decoder forward, mirroring `python/compile/model.py`.
+
+pub mod model;
+pub mod weights;
+
+pub use model::{ModelDims, NativeModel};
+pub use weights::Weights;

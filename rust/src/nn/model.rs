@@ -1,0 +1,308 @@
+//! Native Rust forward pass of the Timer-style decoder — an exact mirror of
+//! `python/compile/model.py::forward` (fused-attention variant).
+//!
+//! Role in the system (DESIGN.md §4): (i) the CPU reference comparator the
+//! paper baselines against, (ii) a PJRT-free backend for tests/benches, and
+//! (iii) the parity check proving the HLO artifacts compute the same
+//! function (`rust/tests/xla_integration.rs` asserts native == XLA == JAX
+//! golden within fp tolerance).
+
+use anyhow::Result;
+
+use super::weights::Weights;
+use crate::util::tensor::{linear, matmul, rmsnorm, silu, softmax_row, Tensor};
+
+/// Architecture dims (mirror of model.ModelConfig; parsed from the manifest).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ModelDims {
+    pub patch: usize,
+    pub n_ctx: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_ff: usize,
+}
+
+impl ModelDims {
+    pub fn d_head(&self) -> usize {
+        self.d_model / self.n_heads
+    }
+}
+
+const RMS_EPS: f32 = 1e-6;
+
+/// A loaded native model.
+pub struct NativeModel {
+    pub dims: ModelDims,
+    pub name: String,
+    w: Weights,
+}
+
+impl NativeModel {
+    pub fn new(name: &str, dims: ModelDims, weights: Weights) -> NativeModel {
+        NativeModel { dims, name: name.to_string(), w: weights }
+    }
+
+    /// tokens [B, N, P] -> next-patch means [B, N, P]; N <= n_ctx.
+    pub fn forward(&self, tokens: &Tensor) -> Result<Tensor> {
+        let (b, n, p) = (tokens.shape[0], tokens.shape[1], tokens.shape[2]);
+        anyhow::ensure!(p == self.dims.patch, "patch dim {p} != {}", self.dims.patch);
+        anyhow::ensure!(n <= self.dims.n_ctx, "N {n} > n_ctx {}", self.dims.n_ctx);
+        let d = self.dims.d_model;
+
+        // Patch embedding + learned positions.
+        let mut x = linear(tokens, self.w.get("embed_w")?, Some(&self.w.get("embed_b")?.data));
+        let pos = self.w.get("pos")?;
+        for bi in 0..b {
+            for t in 0..n {
+                let row = &mut x.data[(bi * n + t) * d..(bi * n + t + 1) * d];
+                for (v, pv) in row.iter_mut().zip(&pos.data[t * d..(t + 1) * d]) {
+                    *v += pv;
+                }
+            }
+        }
+
+        let mut scratch = Scratch::new(&self.dims, b, n);
+        for li in 0..self.dims.n_layers {
+            self.attn_block(li, &mut x, b, n, &mut scratch)?;
+            self.mlp_block(li, &mut x, b, n)?;
+        }
+
+        rmsnorm(&mut x.data, &self.w.get("final_norm")?.data, RMS_EPS);
+        Ok(linear(&x, self.w.get("head_w")?, Some(&self.w.get("head_b")?.data)))
+    }
+
+    /// Convenience: single-sequence forward returning the mean at `pos`.
+    pub fn mean_at(&self, patches: &[f32], n: usize, pos: usize) -> Result<Vec<f32>> {
+        let p = self.dims.patch;
+        let t = Tensor::from_vec(&[1, n, p], patches[..n * p].to_vec());
+        let out = self.forward(&t)?;
+        Ok(out.data[pos * p..(pos + 1) * p].to_vec())
+    }
+
+    fn attn_block(&self, li: usize, x: &mut Tensor, b: usize, n: usize, s: &mut Scratch) -> Result<()> {
+        let d = self.dims.d_model;
+        let h = self.dims.n_heads;
+        let dh = self.dims.d_head();
+        let scale = 1.0 / (dh as f32).sqrt();
+
+        // Pre-norm into scratch.
+        s.normed.data.copy_from_slice(&x.data);
+        rmsnorm(&mut s.normed.data, &self.w.get(&format!("layers.{li}.ln1"))?.data, RMS_EPS);
+        // QKV projection: [B*N, 3D]; layout per token = [3, H, Dh].
+        let wqkv = self.w.get(&format!("layers.{li}.wqkv"))?;
+        matmul(&s.normed.data, &wqkv.data, b * n, d, 3 * d, &mut s.qkv.data);
+
+        // Attention per (batch, head): scores in scratch, online over rows.
+        for bi in 0..b {
+            for hi in 0..h {
+                // Gather q, k, v rows for this (b, h): stride-3D layout.
+                for t in 0..n {
+                    let base = (bi * n + t) * 3 * d;
+                    let qoff = base + hi * dh;
+                    let koff = base + d + hi * dh;
+                    let voff = base + 2 * d + hi * dh;
+                    s.q[t * dh..(t + 1) * dh].copy_from_slice(&s.qkv.data[qoff..qoff + dh]);
+                    s.k[t * dh..(t + 1) * dh].copy_from_slice(&s.qkv.data[koff..koff + dh]);
+                    s.v[t * dh..(t + 1) * dh].copy_from_slice(&s.qkv.data[voff..voff + dh]);
+                }
+                for t in 0..n {
+                    let qrow = &s.q[t * dh..(t + 1) * dh];
+                    let srow = &mut s.scores[..=t];
+                    for (j, sv) in srow.iter_mut().enumerate() {
+                        let krow = &s.k[j * dh..(j + 1) * dh];
+                        *sv = qrow.iter().zip(krow).map(|(a, c)| a * c).sum::<f32>() * scale;
+                    }
+                    softmax_row(srow);
+                    let orow = &mut s.attn_out[(t * dh)..(t + 1) * dh];
+                    orow.fill(0.0);
+                    for (j, &w) in srow.iter().enumerate() {
+                        let vrow = &s.v[j * dh..(j + 1) * dh];
+                        for (o, vv) in orow.iter_mut().zip(vrow) {
+                            *o += w * vv;
+                        }
+                    }
+                }
+                // Scatter head output back into s.concat [B*N, D].
+                for t in 0..n {
+                    let dst = (bi * n + t) * d + hi * dh;
+                    s.concat.data[dst..dst + dh]
+                        .copy_from_slice(&s.attn_out[t * dh..(t + 1) * dh]);
+                }
+            }
+        }
+        // Output projection + residual.
+        let wo = self.w.get(&format!("layers.{li}.wo"))?;
+        matmul(&s.concat.data, &wo.data, b * n, d, d, &mut s.proj.data);
+        for (xv, pv) in x.data.iter_mut().zip(&s.proj.data) {
+            *xv += pv;
+        }
+        Ok(())
+    }
+
+    fn mlp_block(&self, li: usize, x: &mut Tensor, b: usize, n: usize) -> Result<()> {
+        let d = self.dims.d_model;
+        let f = self.dims.d_ff;
+        let mut normed = x.clone();
+        rmsnorm(&mut normed.data, &self.w.get(&format!("layers.{li}.ln2"))?.data, RMS_EPS);
+        let wg = self.w.get(&format!("layers.{li}.wg"))?;
+        let wu = self.w.get(&format!("layers.{li}.wu"))?;
+        let wd = self.w.get(&format!("layers.{li}.wd"))?;
+        let mut g = vec![0.0f32; b * n * f];
+        let mut u = vec![0.0f32; b * n * f];
+        matmul(&normed.data, &wg.data, b * n, d, f, &mut g);
+        matmul(&normed.data, &wu.data, b * n, d, f, &mut u);
+        for (gv, uv) in g.iter_mut().zip(&u) {
+            *gv = silu(*gv) * uv;
+        }
+        let mut down = vec![0.0f32; b * n * d];
+        matmul(&g, &wd.data, b * n, f, d, &mut down);
+        for (xv, dv) in x.data.iter_mut().zip(&down) {
+            *xv += dv;
+        }
+        Ok(())
+    }
+}
+
+/// Reusable per-forward scratch buffers (hot-path allocation hygiene).
+struct Scratch {
+    normed: Tensor,
+    qkv: Tensor,
+    concat: Tensor,
+    proj: Tensor,
+    q: Vec<f32>,
+    k: Vec<f32>,
+    v: Vec<f32>,
+    scores: Vec<f32>,
+    attn_out: Vec<f32>,
+}
+
+impl Scratch {
+    fn new(dims: &ModelDims, b: usize, n: usize) -> Scratch {
+        let d = dims.d_model;
+        let dh = dims.d_head();
+        Scratch {
+            normed: Tensor::zeros(&[b * n, d]),
+            qkv: Tensor::zeros(&[b * n, 3 * d]),
+            concat: Tensor::zeros(&[b * n, d]),
+            proj: Tensor::zeros(&[b * n, d]),
+            q: vec![0.0; n * dh],
+            k: vec![0.0; n * dh],
+            v: vec![0.0; n * dh],
+            scores: vec![0.0; n],
+            attn_out: vec![0.0; n * dh],
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    /// Tiny random model for structural tests (no artifacts needed).
+    pub fn tiny_model(seed: u64) -> NativeModel {
+        let dims = ModelDims { patch: 4, n_ctx: 8, d_model: 8, n_layers: 2, n_heads: 2, d_ff: 16 };
+        let mut w = Weights::default();
+        let mut rng = Rng::new(seed);
+        let mut t = |shape: &[usize], scale: f32| {
+            let n: usize = shape.iter().product();
+            Tensor::from_vec(shape, (0..n).map(|_| scale * rng.normal() as f32).collect())
+        };
+        w.insert("embed_w", t(&[4, 8], 0.3));
+        w.insert("embed_b", Tensor::zeros(&[8]));
+        w.insert("pos", t(&[8, 8], 0.1));
+        for li in 0..2 {
+            w.insert(&format!("layers.{li}.ln1"), Tensor::from_vec(&[8], vec![1.0; 8]));
+            w.insert(&format!("layers.{li}.wqkv"), t(&[8, 24], 0.3));
+            w.insert(&format!("layers.{li}.wo"), t(&[8, 8], 0.2));
+            w.insert(&format!("layers.{li}.ln2"), Tensor::from_vec(&[8], vec![1.0; 8]));
+            w.insert(&format!("layers.{li}.wg"), t(&[8, 16], 0.3));
+            w.insert(&format!("layers.{li}.wu"), t(&[8, 16], 0.3));
+            w.insert(&format!("layers.{li}.wd"), t(&[16, 8], 0.2));
+        }
+        w.insert("final_norm", Tensor::from_vec(&[8], vec![1.0; 8]));
+        w.insert("head_w", t(&[8, 4], 0.3));
+        w.insert("head_b", Tensor::zeros(&[4]));
+        NativeModel::new("tiny", dims, w)
+    }
+
+    #[test]
+    fn forward_shapes() {
+        let m = tiny_model(1);
+        let x = Tensor::zeros(&[2, 8, 4]);
+        let y = m.forward(&x).unwrap();
+        assert_eq!(y.shape, vec![2, 8, 4]);
+        assert!(y.data.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn causality() {
+        // Changing patch t must not change outputs at positions < t.
+        let m = tiny_model(2);
+        let mut rng = Rng::new(3);
+        let base: Vec<f32> = (0..8 * 4).map(|_| rng.normal() as f32).collect();
+        let y0 = m.forward(&Tensor::from_vec(&[1, 8, 4], base.clone())).unwrap();
+        let mut perturbed = base.clone();
+        for v in &mut perturbed[5 * 4..] {
+            *v += 1.0;
+        }
+        let y1 = m.forward(&Tensor::from_vec(&[1, 8, 4], perturbed)).unwrap();
+        for t in 0..5 {
+            for i in 0..4 {
+                let a = y0.data[t * 4 + i];
+                let b = y1.data[t * 4 + i];
+                assert!(
+                    (a - b).abs() < 1e-6,
+                    "position {t} changed by future perturbation: {a} vs {b}"
+                );
+            }
+        }
+        // ...and *must* change positions >= 5 (sanity that the test bites).
+        let mut any = false;
+        for t in 5..8 {
+            for i in 0..4 {
+                if (y0.data[t * 4 + i] - y1.data[t * 4 + i]).abs() > 1e-4 {
+                    any = true;
+                }
+            }
+        }
+        assert!(any, "future positions unaffected — attention is broken");
+    }
+
+    #[test]
+    fn batch_equals_loop() {
+        // forward([a; b]) == [forward(a); forward(b)].
+        let m = tiny_model(4);
+        let mut rng = Rng::new(9);
+        let a: Vec<f32> = (0..8 * 4).map(|_| rng.normal() as f32).collect();
+        let b: Vec<f32> = (0..8 * 4).map(|_| rng.normal() as f32).collect();
+        let mut ab = a.clone();
+        ab.extend_from_slice(&b);
+        let batched = m.forward(&Tensor::from_vec(&[2, 8, 4], ab)).unwrap();
+        let ya = m.forward(&Tensor::from_vec(&[1, 8, 4], a)).unwrap();
+        let yb = m.forward(&Tensor::from_vec(&[1, 8, 4], b)).unwrap();
+        for i in 0..8 * 4 {
+            assert!((batched.data[i] - ya.data[i]).abs() < 1e-5);
+            assert!((batched.data[8 * 4 + i] - yb.data[i]).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn shorter_context_allowed() {
+        let m = tiny_model(5);
+        let x = Tensor::zeros(&[1, 3, 4]);
+        let y = m.forward(&x).unwrap();
+        assert_eq!(y.shape, vec![1, 3, 4]);
+    }
+
+    #[test]
+    fn wrong_patch_dim_rejected() {
+        let m = tiny_model(6);
+        assert!(m.forward(&Tensor::zeros(&[1, 8, 5])).is_err());
+        assert!(m.forward(&Tensor::zeros(&[1, 9, 4])).is_err());
+    }
+}
+
+#[cfg(test)]
+pub use tests::tiny_model;

@@ -1,0 +1,109 @@
+//! Weight loading for the native backend: flat f32 LE blobs indexed by the
+//! manifest's tensor table (written by `aot.dump_weights`).
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+use crate::util::tensor::Tensor;
+
+/// Named tensor store.
+#[derive(Debug, Default)]
+pub struct Weights {
+    map: HashMap<String, Tensor>,
+}
+
+impl Weights {
+    /// Load from `blob_path` using the manifest's per-model `tensors` index
+    /// (array of {name, shape, offset} with offsets in floats).
+    pub fn load(blob_path: &Path, tensor_index: &Json) -> Result<Weights> {
+        let bytes = std::fs::read(blob_path)
+            .with_context(|| format!("reading weights blob {}", blob_path.display()))?;
+        if bytes.len() % 4 != 0 {
+            bail!("weights blob size {} not a multiple of 4", bytes.len());
+        }
+        let floats: Vec<f32> = bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        let entries = tensor_index.as_arr().context("tensor index must be an array")?;
+        let mut map = HashMap::new();
+        for e in entries {
+            let name = e.get("name").and_then(Json::as_str).context("tensor name")?;
+            let offset = e.get("offset").and_then(Json::as_usize).context("tensor offset")?;
+            let shape: Vec<usize> = e
+                .get("shape")
+                .and_then(Json::as_arr)
+                .context("tensor shape")?
+                .iter()
+                .map(|v| v.as_usize().unwrap_or(0))
+                .collect();
+            let n: usize = shape.iter().product();
+            if offset + n > floats.len() {
+                bail!("tensor {name} [{offset}, {}) exceeds blob len {}", offset + n, floats.len());
+            }
+            map.insert(name.to_string(), Tensor::from_vec(&shape, floats[offset..offset + n].to_vec()));
+        }
+        Ok(Weights { map })
+    }
+
+    pub fn get(&self, name: &str) -> Result<&Tensor> {
+        self.map.get(name).with_context(|| format!("missing tensor {name}"))
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    pub fn total_params(&self) -> usize {
+        self.map.values().map(|t| t.numel()).sum()
+    }
+
+    /// Insert (for tests / synthetic weights).
+    pub fn insert(&mut self, name: &str, t: Tensor) {
+        self.map.insert(name.to_string(), t);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn load_roundtrip() {
+        let dir = std::env::temp_dir().join("stride_weights_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let blob = dir.join("w.bin");
+        let floats: Vec<f32> = (0..10).map(|i| i as f32).collect();
+        let bytes: Vec<u8> = floats.iter().flat_map(|f| f.to_le_bytes()).collect();
+        std::fs::write(&blob, bytes).unwrap();
+        let index = Json::parse(
+            r#"[{"name":"a","shape":[2,3],"offset":0},{"name":"b","shape":[4],"offset":6}]"#,
+        )
+        .unwrap();
+        let w = Weights::load(&blob, &index).unwrap();
+        assert_eq!(w.len(), 2);
+        assert_eq!(w.get("a").unwrap().shape, vec![2, 3]);
+        assert_eq!(w.get("a").unwrap().data, vec![0.0, 1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert_eq!(w.get("b").unwrap().data, vec![6.0, 7.0, 8.0, 9.0]);
+        assert_eq!(w.total_params(), 10);
+        assert!(w.get("nope").is_err());
+    }
+
+    #[test]
+    fn rejects_out_of_bounds() {
+        let dir = std::env::temp_dir().join("stride_weights_test2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let blob = dir.join("w.bin");
+        std::fs::write(&blob, [0u8; 8]).unwrap();
+        let index =
+            Json::parse(r#"[{"name":"a","shape":[4],"offset":0}]"#).unwrap();
+        assert!(Weights::load(&blob, &index).is_err());
+    }
+}

@@ -1,0 +1,176 @@
+//! PJRT runtime: HLO-text loading, compile caching, execution, and per-
+//! executable wall-clock accounting (the paper's measured `c` comes from
+//! these timers).
+//!
+//! NOTE ON THREADING: the `xla` crate's `PjRtClient` is `Rc`-based and not
+//! `Send`; the serving coordinator therefore owns one `Engine` on a
+//! dedicated executor thread (see `server::engine_thread`), which is also
+//! the natural continuous-batching design.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::Path;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::util::stats::Summary;
+
+/// A compiled, named executable with timing stats.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    pub name: String,
+    /// Input shape [b, n, p] this artifact was specialized for.
+    pub shape: (usize, usize, usize),
+    timings: RefCell<Summary>,
+}
+
+impl Executable {
+    /// Execute on a flat row-major buffer of exactly b*n*p floats;
+    /// returns the flat output (same shape).
+    pub fn run(&self, input: &[f32]) -> Result<Vec<f32>> {
+        let (b, n, p) = self.shape;
+        anyhow::ensure!(
+            input.len() == b * n * p,
+            "{}: input len {} != {}x{}x{}",
+            self.name,
+            input.len(),
+            b,
+            n,
+            p
+        );
+        let t0 = Instant::now();
+        let lit = xla::Literal::vec1(input)
+            .reshape(&[b as i64, n as i64, p as i64])
+            .context("reshape literal")?;
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&[lit])
+            .with_context(|| format!("executing {}", self.name))?[0][0]
+            .to_literal_sync()
+            .context("to_literal_sync")?;
+        // aot.py lowers with return_tuple=True: unwrap the 1-tuple.
+        let out = result.to_tuple1().context("to_tuple1")?;
+        let v = out.to_vec::<f32>().context("to_vec")?;
+        self.timings.borrow_mut().push(t0.elapsed().as_secs_f64());
+        Ok(v)
+    }
+
+    /// Mean wall-clock seconds per call so far (NaN if never run).
+    pub fn mean_secs(&self) -> f64 {
+        let t = self.timings.borrow();
+        if t.n == 0 {
+            f64::NAN
+        } else {
+            t.mean()
+        }
+    }
+
+    pub fn calls(&self) -> u64 {
+        self.timings.borrow().n
+    }
+}
+
+/// PJRT CPU engine with a compile cache keyed by artifact path.
+pub struct Engine {
+    client: xla::PjRtClient,
+    cache: HashMap<String, std::rc::Rc<Executable>>,
+}
+
+impl Engine {
+    pub fn cpu() -> Result<Engine> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Engine { client, cache: HashMap::new() })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an HLO-text artifact (cached).
+    pub fn load(
+        &mut self,
+        path: &Path,
+        shape: (usize, usize, usize),
+    ) -> Result<std::rc::Rc<Executable>> {
+        let key = path.to_string_lossy().to_string();
+        if let Some(exe) = self.cache.get(&key) {
+            return Ok(exe.clone());
+        }
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(&key)
+            .with_context(|| format!("parsing HLO text {key}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("PJRT compile of {key}"))?;
+        log::info!("compiled {key} in {:.2}s", t0.elapsed().as_secs_f64());
+        let name = path
+            .file_stem()
+            .map(|s| s.to_string_lossy().into_owned())
+            .unwrap_or_else(|| key.clone());
+        let entry = std::rc::Rc::new(Executable {
+            exe,
+            name,
+            shape,
+            timings: RefCell::new(Summary::new()),
+        });
+        self.cache.insert(key, entry.clone());
+        Ok(entry)
+    }
+
+    pub fn cached_count(&self) -> usize {
+        self.cache.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts() -> Option<std::path::PathBuf> {
+        let dir = crate::artifacts_dir();
+        if dir.join("manifest.json").exists() {
+            Some(dir)
+        } else {
+            eprintln!("SKIP: run `make artifacts`");
+            None
+        }
+    }
+
+    #[test]
+    fn load_run_and_cache() {
+        let Some(dir) = artifacts() else { return };
+        let mut eng = Engine::cpu().unwrap();
+        let exe = eng.load(&dir.join("draft_fwd_b1.hlo.txt"), (1, 32, 24)).unwrap();
+        let out = exe.run(&vec![0.1f32; 32 * 24]).unwrap();
+        assert_eq!(out.len(), 32 * 24);
+        assert!(out.iter().all(|v| v.is_finite()));
+        assert_eq!(exe.calls(), 1);
+        assert!(exe.mean_secs() > 0.0);
+        // Second load hits the cache.
+        let exe2 = eng.load(&dir.join("draft_fwd_b1.hlo.txt"), (1, 32, 24)).unwrap();
+        assert_eq!(eng.cached_count(), 1);
+        assert_eq!(exe2.calls(), 1);
+    }
+
+    #[test]
+    fn wrong_input_len_rejected() {
+        let Some(dir) = artifacts() else { return };
+        let mut eng = Engine::cpu().unwrap();
+        let exe = eng.load(&dir.join("draft_fwd_b1.hlo.txt"), (1, 32, 24)).unwrap();
+        assert!(exe.run(&vec![0.0f32; 5]).is_err());
+    }
+
+    #[test]
+    fn deterministic_outputs() {
+        let Some(dir) = artifacts() else { return };
+        let mut eng = Engine::cpu().unwrap();
+        let exe = eng.load(&dir.join("draft_fwd_b1.hlo.txt"), (1, 32, 24)).unwrap();
+        let input: Vec<f32> = (0..32 * 24).map(|i| (i as f32 * 0.01).sin()).collect();
+        let a = exe.run(&input).unwrap();
+        let b = exe.run(&input).unwrap();
+        assert_eq!(a, b);
+    }
+}

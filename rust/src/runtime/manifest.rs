@@ -1,0 +1,169 @@
+//! Artifact manifest (written by `python/compile/aot.py`): what models
+//! exist, which HLO files implement them at which batch sizes, where the
+//! weight blobs and golden vectors live.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::nn::ModelDims;
+use crate::util::json::Json;
+
+#[derive(Clone, Debug)]
+pub struct ModelEntry {
+    pub name: String,
+    pub dims: ModelDims,
+    pub param_count: usize,
+    pub weights_file: PathBuf,
+    /// Raw tensor index (array of {name, shape, offset}) for Weights::load.
+    pub tensor_index: Json,
+}
+
+#[derive(Clone, Debug)]
+pub struct ArtifactEntry {
+    pub file: PathBuf,
+    /// "target" | "draft".
+    pub model: String,
+    pub batch: usize,
+    /// Sequence length this artifact was specialized for (<= manifest
+    /// n_ctx; short variants serve the decode hot path, see §Perf).
+    pub n_ctx: usize,
+    /// "fused" | "pallas".
+    pub kernel: String,
+}
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub patch: usize,
+    pub n_ctx: usize,
+    pub batches: Vec<usize>,
+    pub target: ModelEntry,
+    pub draft: ModelEntry,
+    pub artifacts: Vec<ArtifactEntry>,
+    pub distill_sigma: f64,
+    pub mean_gap: f64,
+    pub quick: bool,
+}
+
+fn model_entry(dir: &Path, j: &Json, patch: usize, n_ctx: usize) -> Result<ModelEntry> {
+    let get = |k: &str| -> Result<usize> {
+        j.get(k).and_then(Json::as_usize).with_context(|| format!("model field {k}"))
+    };
+    Ok(ModelEntry {
+        name: j.get("name").and_then(Json::as_str).context("model name")?.to_string(),
+        dims: ModelDims {
+            patch,
+            n_ctx,
+            d_model: get("d_model")?,
+            n_layers: get("n_layers")?,
+            n_heads: get("n_heads")?,
+            d_ff: get("d_ff")?,
+        },
+        param_count: get("param_count")?,
+        weights_file: dir.join(j.get("weights").and_then(Json::as_str).context("weights")?),
+        tensor_index: j.get("tensors").context("tensors")?.clone(),
+    })
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} (run `make artifacts`)", path.display()))?;
+        let j = Json::parse(&text).context("parsing manifest.json")?;
+        let patch = j.get("patch").and_then(Json::as_usize).context("patch")?;
+        let n_ctx = j.get("n_ctx").and_then(Json::as_usize).context("n_ctx")?;
+        let batches = j
+            .get("batches")
+            .and_then(Json::as_arr)
+            .context("batches")?
+            .iter()
+            .filter_map(Json::as_usize)
+            .collect();
+        let artifacts = j
+            .get("artifacts")
+            .and_then(Json::as_arr)
+            .context("artifacts")?
+            .iter()
+            .map(|a| {
+                Ok(ArtifactEntry {
+                    file: dir.join(a.get("file").and_then(Json::as_str).context("file")?),
+                    model: a.get("model").and_then(Json::as_str).context("model")?.to_string(),
+                    batch: a.get("batch").and_then(Json::as_usize).context("batch")?,
+                    n_ctx: a.get("n_ctx").and_then(Json::as_usize).unwrap_or(n_ctx),
+                    kernel: a.get("kernel").and_then(Json::as_str).context("kernel")?.to_string(),
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            patch,
+            n_ctx,
+            batches,
+            target: model_entry(dir, j.path(&["models", "target"]).context("models.target")?, patch, n_ctx)?,
+            draft: model_entry(dir, j.path(&["models", "draft"]).context("models.draft")?, patch, n_ctx)?,
+            artifacts,
+            distill_sigma: j.path(&["distill", "sigma"]).and_then(Json::as_f64).unwrap_or(0.5),
+            mean_gap: j.path(&["distill", "mean_gap"]).and_then(Json::as_f64).unwrap_or(f64::NAN),
+            quick: j.get("quick").and_then(Json::as_bool).unwrap_or(false),
+        })
+    }
+
+    /// Find the cheapest HLO artifact for (model, kernel) that fits
+    /// `min_batch` rows of `min_n` patches (cost ~ batch * n).
+    pub fn artifact_for(&self, model: &str, kernel: &str, min_batch: usize) -> Option<&ArtifactEntry> {
+        self.artifacts
+            .iter()
+            .filter(|a| a.model == model && a.kernel == kernel && a.batch >= min_batch)
+            .min_by_key(|a| (a.batch * a.n_ctx, a.n_ctx))
+    }
+
+    /// All shape variants available for (model, kernel), ascending cost.
+    pub fn batch_variants(&self, model: &str, kernel: &str) -> Vec<&ArtifactEntry> {
+        let mut v: Vec<&ArtifactEntry> = self
+            .artifacts
+            .iter()
+            .filter(|a| a.model == model && a.kernel == kernel)
+            .collect();
+        v.sort_by_key(|a| (a.batch, a.n_ctx));
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn loads_real_manifest_if_present() {
+        let dir = crate::artifacts_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("SKIP: run `make artifacts`");
+            return;
+        }
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.patch, 24);
+        assert_eq!(m.n_ctx, 32);
+        assert!(m.target.param_count > m.draft.param_count * 3, "draft ~0.25x");
+        assert!(m.artifact_for("target", "fused", 1).is_some());
+        assert!(m.artifact_for("draft", "fused", 1).is_some());
+        // Batch selection picks the smallest variant that fits.
+        let a = m.artifact_for("target", "fused", 2).unwrap();
+        assert!(a.batch >= 2);
+        let variants = m.batch_variants("target", "fused");
+        assert!(variants.windows(2).all(|w| (w[0].batch, w[0].n_ctx) < (w[1].batch, w[1].n_ctx)));
+        // Short-sequence variants exist for the decode hot path.
+        assert!(variants.iter().any(|a| a.n_ctx < m.n_ctx), "n-specialized variants");
+    }
+
+    #[test]
+    fn artifact_for_none_when_too_big() {
+        let dir = crate::artifacts_dir();
+        if !dir.join("manifest.json").exists() {
+            return;
+        }
+        let m = Manifest::load(&dir).unwrap();
+        assert!(m.artifact_for("target", "fused", 100_000).is_none());
+    }
+}

@@ -1,0 +1,7 @@
+//! XLA/PJRT runtime layer: artifact manifest, compile cache, execution.
+
+pub mod engine;
+pub mod manifest;
+
+pub use engine::{Engine, Executable};
+pub use manifest::{ArtifactEntry, Manifest, ModelEntry};

@@ -1,0 +1,327 @@
+//! Dynamic batcher + engine thread: the serving coordinator's core loop.
+//!
+//! HTTP workers enqueue jobs; a single engine thread (which owns all PJRT
+//! state — the xla crate's client is not Send) drains the queue with a
+//! size-or-deadline policy (max_batch / max_wait_ms), groups compatible
+//! speculative jobs into one lockstep batched decode, and replies through
+//! per-job channels. This is the continuous-batching shape vLLM-style
+//! servers use, specialized to fixed-shape PJRT executables.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc};
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use super::protocol::{ForecastRequest, ForecastResponse, Mode};
+use crate::config::ServeConfig;
+use crate::forecast::ar_decode;
+use crate::metrics::{AcceptanceMonitor, Metrics};
+use crate::models::{Backend, NativeBackend, XlaBackend};
+use crate::runtime::{Engine, Manifest};
+use crate::specdec::{sd_generate_batch, SpecConfig};
+
+pub struct Job {
+    pub req: ForecastRequest,
+    pub enqueued: Instant,
+    pub reply: mpsc::SyncSender<Result<ForecastResponse, String>>,
+}
+
+/// Handle held by the HTTP side.
+#[derive(Clone)]
+pub struct BatcherHandle {
+    tx: mpsc::Sender<Job>,
+    pub metrics: Arc<Metrics>,
+    pub monitor: Arc<AcceptanceMonitor>,
+}
+
+impl BatcherHandle {
+    /// Synchronous request-response (the HTTP worker blocks here).
+    pub fn forecast(&self, req: ForecastRequest) -> Result<ForecastResponse, String> {
+        let (tx, rx) = mpsc::sync_channel(1);
+        let job = Job { req, enqueued: Instant::now(), reply: tx };
+        self.tx.send(job).map_err(|_| "engine thread gone".to_string())?;
+        rx.recv_timeout(Duration::from_secs(120))
+            .map_err(|_| "engine timeout".to_string())?
+    }
+}
+
+/// Spawn the engine thread; blocks until backends are loaded (or fails).
+pub fn start_engine(
+    cfg: ServeConfig,
+    metrics: Arc<Metrics>,
+    monitor: Arc<AcceptanceMonitor>,
+    stop: Arc<AtomicBool>,
+) -> Result<(BatcherHandle, std::thread::JoinHandle<()>)> {
+    let (tx, rx) = mpsc::channel::<Job>();
+    let (ready_tx, ready_rx) = mpsc::sync_channel::<Result<String, String>>(1);
+    let m2 = metrics.clone();
+    let mon2 = monitor.clone();
+    let handle = std::thread::Builder::new()
+        .name("stride-engine".into())
+        .spawn(move || engine_main(cfg, rx, ready_tx, m2, mon2, stop))
+        .context("spawning engine thread")?;
+    match ready_rx.recv().context("engine thread died during startup")? {
+        Ok(desc) => log::info!("engine ready: {desc}"),
+        Err(e) => anyhow::bail!("engine startup failed: {e}"),
+    }
+    Ok((BatcherHandle { tx, metrics, monitor }, handle))
+}
+
+fn load_backends(cfg: &ServeConfig) -> Result<(Box<dyn Backend>, Box<dyn Backend>, Manifest)> {
+    let manifest = Manifest::load(&cfg.artifacts)?;
+    match cfg.backend.as_str() {
+        "native" => {
+            let (t, d) = NativeBackend::pair_from_manifest(&manifest)?;
+            Ok((Box::new(t), Box::new(d), manifest))
+        }
+        "xla" => {
+            let mut engine = Engine::cpu()?;
+            let t = XlaBackend::load(&mut engine, &manifest, "target", &cfg.kernel)?;
+            let d = XlaBackend::load(&mut engine, &manifest, "draft", &cfg.kernel)?;
+            Ok((Box::new(t), Box::new(d), manifest))
+        }
+        other => anyhow::bail!("unknown backend {other}"),
+    }
+}
+
+fn engine_main(
+    cfg: ServeConfig,
+    rx: mpsc::Receiver<Job>,
+    ready: mpsc::SyncSender<Result<String, String>>,
+    metrics: Arc<Metrics>,
+    monitor: Arc<AcceptanceMonitor>,
+    stop: Arc<AtomicBool>,
+) {
+    let (target, draft, manifest) = match load_backends(&cfg) {
+        Ok(v) => {
+            let _ = ready.send(Ok(format!(
+                "backend={} target={} draft={} patch={} n_ctx={}",
+                cfg.backend,
+                v.0.name(),
+                v.1.name(),
+                v.2.patch,
+                v.2.n_ctx
+            )));
+            v
+        }
+        Err(e) => {
+            let _ = ready.send(Err(format!("{e:#}")));
+            return;
+        }
+    };
+
+    // Warm the executables so the first request doesn't pay compile cost.
+    let p = manifest.patch;
+    let warm = vec![0.0f32; manifest.n_ctx * p];
+    let _ = target.forward(&warm, manifest.n_ctx);
+    let _ = draft.forward(&warm, manifest.n_ctx);
+
+    let max_wait = Duration::from_millis(cfg.max_wait_ms);
+    loop {
+        // Block for the first job (with timeout so `stop` is honored).
+        let first = match rx.recv_timeout(Duration::from_millis(50)) {
+            Ok(j) => j,
+            Err(mpsc::RecvTimeoutError::Timeout) => {
+                if stop.load(Ordering::Relaxed) {
+                    return;
+                }
+                continue;
+            }
+            Err(mpsc::RecvTimeoutError::Disconnected) => return,
+        };
+        // Drain until the batch is full or the deadline passes.
+        let mut jobs = vec![first];
+        let deadline = jobs[0].enqueued + max_wait;
+        while jobs.len() < cfg.max_batch {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match rx.recv_timeout(deadline - now) {
+                Ok(j) => jobs.push(j),
+                Err(_) => break,
+            }
+        }
+        metrics.inc("batches", 1);
+        metrics.inc("batched_jobs", jobs.len() as u64);
+        process_batch(&cfg, &manifest, target.as_ref(), draft.as_ref(), jobs, &metrics, &monitor);
+    }
+}
+
+/// Validate + normalize one request into (history, n_hist, horizon).
+fn prep(req: &ForecastRequest, manifest: &Manifest, gamma: usize) -> Result<(Vec<f32>, usize, usize), String> {
+    let p = manifest.patch;
+    if req.history.len() % p != 0 {
+        return Err(format!(
+            "history length {} not a multiple of patch {p}",
+            req.history.len()
+        ));
+    }
+    let n_hist = req.history.len() / p;
+    // Keep at most the context the models can see during a round.
+    let keep = manifest.n_ctx.saturating_sub(gamma + 1).max(1);
+    let hist = if n_hist > keep {
+        req.history[(n_hist - keep) * p..].to_vec()
+    } else {
+        req.history.clone()
+    };
+    let n = hist.len() / p;
+    Ok((hist, n, req.horizon))
+}
+
+fn process_batch(
+    cfg: &ServeConfig,
+    manifest: &Manifest,
+    target: &dyn Backend,
+    draft: &dyn Backend,
+    jobs: Vec<Job>,
+    metrics: &Metrics,
+    monitor: &AcceptanceMonitor,
+) {
+    // Partition: SD jobs grouped by (gamma, sigma-bits) so overrides batch
+    // together; baseline/draft jobs run individually.
+    let mut sd_groups: BTreeMap<(usize, u64), Vec<Job>> = BTreeMap::new();
+    let mut singles: Vec<Job> = Vec::new();
+    let base_spec = cfg.spec_config();
+
+    for job in jobs {
+        metrics.requests_total.fetch_add(1, Ordering::Relaxed);
+        match job.req.mode {
+            Mode::Sd if !cfg.baseline => {
+                let mut gamma = job.req.gamma.unwrap_or(cfg.gamma);
+                if cfg.adaptive_gamma {
+                    let c = draft.mean_secs() / target.mean_secs();
+                    if c.is_finite() && c > 0.0 {
+                        gamma = monitor.recommend_gamma(c, 16);
+                    }
+                }
+                let sigma = job.req.sigma.unwrap_or(cfg.sigma);
+                sd_groups.entry((gamma, sigma.to_bits())).or_default().push(job);
+            }
+            _ => singles.push(job),
+        }
+    }
+
+    // Per-group decode seed: reusing one RNG stream across batches would
+    // correlate accept/reject coins between requests.
+    static DECODE_SEQ: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(0);
+    for ((gamma, sigma_bits), group) in sd_groups {
+        let sigma = f64::from_bits(sigma_bits);
+        let mut spec = base_spec;
+        spec.gamma = gamma;
+        spec.policy.sigma = sigma;
+        spec.seed = spec
+            .seed
+            .wrapping_add(DECODE_SEQ.fetch_add(1, Ordering::Relaxed))
+            .wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        run_sd_group(manifest, target, draft, group, &spec, metrics, monitor);
+    }
+    for job in singles {
+        run_single(cfg, manifest, target, draft, job, metrics);
+    }
+}
+
+fn run_sd_group(
+    manifest: &Manifest,
+    target: &dyn Backend,
+    draft: &dyn Backend,
+    group: Vec<Job>,
+    spec: &SpecConfig,
+    metrics: &Metrics,
+    monitor: &AcceptanceMonitor,
+) {
+    // Validate all; drop invalid with error replies.
+    let mut ok_jobs = Vec::new();
+    let mut preps: Vec<(Vec<f32>, usize, usize)> = Vec::new();
+    for job in group {
+        match prep(&job.req, manifest, spec.gamma) {
+            Ok(p) => {
+                preps.push(p);
+                ok_jobs.push(job);
+            }
+            Err(e) => {
+                metrics.errors_total.fetch_add(1, Ordering::Relaxed);
+                let _ = job.reply.send(Err(e));
+            }
+        }
+    }
+    if ok_jobs.is_empty() {
+        return;
+    }
+    let tasks: Vec<(&[f32], usize, usize)> =
+        preps.iter().map(|(h, n, hz)| (h.as_slice(), *n, *hz)).collect();
+    let t0 = Instant::now();
+    match sd_generate_batch(target, draft, &tasks, spec) {
+        Ok(outs) => {
+            let batch_wall = t0.elapsed();
+            for (job, out) in ok_jobs.into_iter().zip(outs) {
+                let latency = job.enqueued.elapsed();
+                metrics.observe("request_latency", latency);
+                metrics.observe("decode_latency", batch_wall);
+                metrics.patches_total.fetch_add(out.patches.len() as u64 / manifest.patch as u64, Ordering::Relaxed);
+                let alpha = out.stats.alpha_hat();
+                if alpha.is_finite() {
+                    monitor.record(alpha);
+                }
+                let resp = ForecastResponse {
+                    forecast: out.patches,
+                    mode: "sd".into(),
+                    latency_ms: latency.as_secs_f64() * 1e3,
+                    alpha_hat: alpha,
+                    mean_block_len: out.stats.mean_block_len(),
+                    rounds: out.stats.rounds,
+                    draft_calls: out.stats.draft_calls,
+                    target_calls: out.stats.target_calls,
+                };
+                let _ = job.reply.send(Ok(resp));
+            }
+        }
+        Err(e) => {
+            for job in ok_jobs {
+                metrics.errors_total.fetch_add(1, Ordering::Relaxed);
+                let _ = job.reply.send(Err(format!("decode failed: {e:#}")));
+            }
+        }
+    }
+}
+
+fn run_single(
+    cfg: &ServeConfig,
+    manifest: &Manifest,
+    target: &dyn Backend,
+    draft: &dyn Backend,
+    job: Job,
+    metrics: &Metrics,
+) {
+    let model: &dyn Backend = match job.req.mode {
+        Mode::DraftOnly => draft,
+        _ => target,
+    };
+    let result = (|| -> Result<ForecastResponse, String> {
+        let (hist, n_hist, horizon) = prep(&job.req, manifest, 1)?;
+        let (pred, _wall, calls) =
+            ar_decode(model, &hist, n_hist, horizon).map_err(|e| format!("{e:#}"))?;
+        let latency = job.enqueued.elapsed();
+        metrics.observe("request_latency", latency);
+        metrics
+            .patches_total
+            .fetch_add(horizon as u64, Ordering::Relaxed);
+        Ok(ForecastResponse {
+            forecast: pred,
+            mode: if job.req.mode == Mode::DraftOnly { "draft" } else { "baseline" }.into(),
+            latency_ms: latency.as_secs_f64() * 1e3,
+            alpha_hat: f64::NAN,
+            mean_block_len: f64::NAN,
+            rounds: horizon,
+            draft_calls: if job.req.mode == Mode::DraftOnly { calls } else { 0 },
+            target_calls: if job.req.mode == Mode::DraftOnly { 0 } else { calls },
+        })
+    })();
+    if result.is_err() {
+        metrics.errors_total.fetch_add(1, Ordering::Relaxed);
+    }
+    let _ = job.reply.send(result);
+    let _ = cfg;
+}

@@ -1,0 +1,134 @@
+//! The serving front end: HTTP routes over the dynamic batcher.
+//!
+//! Routes:
+//! * `POST /forecast` — forecast request (see [`protocol`]).
+//! * `GET  /healthz`  — liveness + version.
+//! * `GET  /metrics`  — Prometheus-style metrics text.
+//! * `GET  /stats`    — JSON snapshot (acceptance monitor, latency quantiles).
+//!
+//! The router validates and parses on HTTP worker threads; all model work
+//! happens on the single engine thread behind the batcher (PJRT state is
+//! not Send — see `runtime::engine`).
+
+mod batcher;
+pub mod protocol;
+
+pub use batcher::{start_engine, BatcherHandle};
+pub use protocol::{ForecastRequest, ForecastResponse, Mode};
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::config::ServeConfig;
+use crate::http::{HttpServer, Request, Response};
+use crate::metrics::{AcceptanceMonitor, Metrics};
+use crate::util::json::Json;
+
+pub struct Server {
+    pub http: HttpServer,
+    pub handle: BatcherHandle,
+    stop: Arc<AtomicBool>,
+    engine_thread: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Server {
+    /// Start engine + HTTP front end; returns once both are ready.
+    pub fn start(cfg: ServeConfig) -> Result<Server> {
+        cfg.validate()?;
+        let metrics = Arc::new(Metrics::new());
+        // Window of 256 recent per-request acceptance means; alert at 0.8
+        // per the paper's §7 conservative-threshold guidance.
+        let monitor = Arc::new(AcceptanceMonitor::new(256, 0.8));
+        let stop = Arc::new(AtomicBool::new(false));
+        let (handle, engine_thread) =
+            start_engine(cfg.clone(), metrics.clone(), monitor.clone(), stop.clone())?;
+
+        let h = handle.clone();
+        let http = HttpServer::start(
+            &cfg.bind,
+            cfg.http_workers,
+            Arc::new(move |req: &Request| route(req, &h)),
+        )?;
+        log::info!("serving on {}", http.addr);
+        Ok(Server { http, handle, stop, engine_thread: Some(engine_thread) })
+    }
+
+    pub fn addr(&self) -> std::net::SocketAddr {
+        self.http.addr
+    }
+
+    pub fn shutdown(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        self.http.shutdown();
+        if let Some(t) = self.engine_thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn route(req: &Request, handle: &BatcherHandle) -> Response {
+    match (req.method.as_str(), req.path.as_str()) {
+        ("GET", "/healthz") => Response::json(
+            200,
+            Json::obj(vec![
+                ("status", Json::from("ok")),
+                ("version", Json::from(crate::VERSION)),
+            ])
+            .to_string(),
+        ),
+        ("GET", "/metrics") => Response::text(200, &handle.metrics.render()),
+        ("GET", "/stats") => {
+            let m = &handle.metrics;
+            let mon = &handle.monitor;
+            let j = Json::obj(vec![
+                ("requests", Json::from(m.requests_total.load(Ordering::Relaxed) as usize)),
+                ("patches", Json::from(m.patches_total.load(Ordering::Relaxed) as usize)),
+                ("errors", Json::from(m.errors_total.load(Ordering::Relaxed) as usize)),
+                ("alpha_bar_window", finite_or_null(mon.alpha_bar())),
+                ("acceptance_degraded", Json::from(mon.degraded())),
+                ("latency_p50_ms", Json::Num(m.quantile_ms("request_latency", 0.5))),
+                ("latency_p95_ms", Json::Num(m.quantile_ms("request_latency", 0.95))),
+                ("latency_p99_ms", Json::Num(m.quantile_ms("request_latency", 0.99))),
+            ]);
+            Response::json(200, j.to_string())
+        }
+        ("POST", "/forecast") => {
+            let body = match req.body_str() {
+                Ok(s) => s,
+                Err(_) => return Response::bad_request("body must be UTF-8"),
+            };
+            let parsed = match Json::parse(body) {
+                Ok(j) => j,
+                Err(e) => return Response::bad_request(&format!("bad JSON: {e}")),
+            };
+            let freq = match ForecastRequest::from_json(&parsed) {
+                Ok(r) => r,
+                Err(e) => return Response::bad_request(&format!("bad request: {e:#}")),
+            };
+            match handle.forecast(freq) {
+                Ok(resp) => Response::json(200, resp.to_json().to_string()),
+                Err(e) => Response::json(
+                    500,
+                    Json::obj(vec![("error", Json::from(e))]).to_string(),
+                ),
+            }
+        }
+        _ => Response::not_found(),
+    }
+}
+
+fn finite_or_null(v: f64) -> Json {
+    if v.is_finite() {
+        Json::Num(v)
+    } else {
+        Json::Null
+    }
+}

@@ -1,0 +1,193 @@
+//! JSON wire protocol of the forecasting service.
+//!
+//! POST /forecast
+//!   {"history": [f32...], "horizon": <patches>, "gamma"?: n, "sigma"?: x,
+//!    "mode"?: "sd" | "baseline" | "draft", "dataset"?: "etth1"}
+//! ->
+//!   {"forecast": [f32...], "mode": "...", "latency_ms": x,
+//!    "alpha_hat": x, "mean_block_len": x, "rounds": n,
+//!    "draft_calls": n, "target_calls": n}
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum Mode {
+    Sd,
+    Baseline,
+    DraftOnly,
+}
+
+impl Mode {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Mode::Sd => "sd",
+            Mode::Baseline => "baseline",
+            Mode::DraftOnly => "draft",
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct ForecastRequest {
+    /// Normalized history values; length must be a multiple of the patch.
+    pub history: Vec<f32>,
+    /// Forecast horizon in patches.
+    pub horizon: usize,
+    pub mode: Mode,
+    /// Optional per-request overrides.
+    pub gamma: Option<usize>,
+    pub sigma: Option<f64>,
+    /// Traffic-segment tag for acceptance monitoring (paper §7).
+    pub dataset: Option<String>,
+}
+
+impl ForecastRequest {
+    pub fn from_json(j: &Json) -> Result<ForecastRequest> {
+        let history: Vec<f32> = j
+            .get("history")
+            .and_then(Json::as_arr)
+            .context("'history' array required")?
+            .iter()
+            .map(|v| v.as_f64().map(|x| x as f32).context("history values must be numbers"))
+            .collect::<Result<_>>()?;
+        if history.is_empty() {
+            bail!("'history' must be non-empty");
+        }
+        let horizon = j.get("horizon").and_then(Json::as_usize).context("'horizon' required")?;
+        if horizon == 0 || horizon > 1024 {
+            bail!("'horizon' must be in [1, 1024] patches");
+        }
+        let mode = match j.get("mode").and_then(Json::as_str) {
+            None | Some("sd") => Mode::Sd,
+            Some("baseline") => Mode::Baseline,
+            Some("draft") => Mode::DraftOnly,
+            Some(other) => bail!("unknown mode '{other}'"),
+        };
+        let gamma = j.get("gamma").and_then(Json::as_usize);
+        if let Some(g) = gamma {
+            if g == 0 || g > 64 {
+                bail!("'gamma' must be in [1, 64]");
+            }
+        }
+        let sigma = j.get("sigma").and_then(Json::as_f64);
+        if let Some(s) = sigma {
+            if !(s > 0.0 && s < 100.0) {
+                bail!("'sigma' must be in (0, 100)");
+            }
+        }
+        Ok(ForecastRequest {
+            history,
+            horizon,
+            mode,
+            gamma,
+            sigma,
+            dataset: j.get("dataset").and_then(Json::as_str).map(String::from),
+        })
+    }
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct ForecastResponse {
+    pub forecast: Vec<f32>,
+    pub mode: String,
+    pub latency_ms: f64,
+    pub alpha_hat: f64,
+    pub mean_block_len: f64,
+    pub rounds: usize,
+    pub draft_calls: usize,
+    pub target_calls: usize,
+}
+
+impl ForecastResponse {
+    pub fn to_json(&self) -> Json {
+        fn num(v: f64) -> Json {
+            if v.is_finite() {
+                Json::Num(v)
+            } else {
+                Json::Null
+            }
+        }
+        Json::obj(vec![
+            ("forecast", Json::arr_f32(&self.forecast)),
+            ("mode", Json::from(self.mode.as_str())),
+            ("latency_ms", num(self.latency_ms)),
+            ("alpha_hat", num(self.alpha_hat)),
+            ("mean_block_len", num(self.mean_block_len)),
+            ("rounds", Json::from(self.rounds)),
+            ("draft_calls", Json::from(self.draft_calls)),
+            ("target_calls", Json::from(self.target_calls)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_minimal_request() {
+        let j = Json::parse(r#"{"history": [1.0, 2.0], "horizon": 4}"#).unwrap();
+        let r = ForecastRequest::from_json(&j).unwrap();
+        assert_eq!(r.history, vec![1.0, 2.0]);
+        assert_eq!(r.horizon, 4);
+        assert_eq!(r.mode, Mode::Sd);
+        assert!(r.gamma.is_none());
+    }
+
+    #[test]
+    fn parses_full_request() {
+        let j = Json::parse(
+            r#"{"history": [0.5], "horizon": 2, "mode": "baseline", "gamma": 5,
+                "sigma": 0.7, "dataset": "etth1"}"#,
+        )
+        .unwrap();
+        let r = ForecastRequest::from_json(&j).unwrap();
+        assert_eq!(r.mode, Mode::Baseline);
+        assert_eq!(r.gamma, Some(5));
+        assert_eq!(r.dataset.as_deref(), Some("etth1"));
+    }
+
+    #[test]
+    fn rejects_bad_requests() {
+        for bad in [
+            r#"{"horizon": 4}"#,
+            r#"{"history": [], "horizon": 4}"#,
+            r#"{"history": [1], "horizon": 0}"#,
+            r#"{"history": [1], "horizon": 4, "mode": "warp"}"#,
+            r#"{"history": [1], "horizon": 4, "gamma": 0}"#,
+            r#"{"history": [1], "horizon": 4, "sigma": -1}"#,
+            r#"{"history": ["x"], "horizon": 4}"#,
+        ] {
+            let j = Json::parse(bad).unwrap();
+            assert!(ForecastRequest::from_json(&j).is_err(), "should reject {bad}");
+        }
+    }
+
+    #[test]
+    fn response_roundtrips() {
+        let resp = ForecastResponse {
+            forecast: vec![1.0, 2.0],
+            mode: "sd".into(),
+            latency_ms: 3.5,
+            alpha_hat: 0.97,
+            mean_block_len: 3.4,
+            rounds: 2,
+            draft_calls: 6,
+            target_calls: 2,
+        };
+        let j = resp.to_json();
+        let parsed = Json::parse(&j.to_string()).unwrap();
+        assert_eq!(parsed.get("mode").unwrap().as_str(), Some("sd"));
+        assert_eq!(parsed.get("rounds").unwrap().as_usize(), Some(2));
+        assert_eq!(parsed.get("forecast").unwrap().as_arr().unwrap().len(), 2);
+    }
+
+    #[test]
+    fn nan_stats_serialize_as_null() {
+        let resp = ForecastResponse { alpha_hat: f64::NAN, ..Default::default() };
+        let j = resp.to_json();
+        assert_eq!(j.get("alpha_hat"), Some(&Json::Null));
+    }
+}

@@ -1,0 +1,22 @@
+//! Speculative decoding engine (paper §3, Algorithms 1 & 2).
+//!
+//! A draft backend autoregressively proposes γ patches; the target backend
+//! validates all γ+1 prefix conditionals in **one** forward over the
+//! extended sequence (causality gives every prefix's next-patch mean in a
+//! single pass — the paper's "single batched target pass"). Acceptance is
+//! the log-domain rule of Eq. 7 with optional tolerance/bias λ.
+//!
+//! Two variants:
+//! * [`Variant::Practical`] — Algorithm 1: on rejection, fall back to one
+//!   draw from p. Output law g = αq + (1-ᾱ)p, TV(g, p) <= ᾱ (Cor. 1).
+//! * [`Variant::Lossless`] — Algorithm 2: on rejection, draw from the
+//!   residual r ∝ (p - q)_+ via thinning from p (§A.5.1); exact law p
+//!   (Theorems 1–2) at expected cost 1/(1-β) target draws per rejection.
+
+mod batched;
+mod engine;
+mod stats;
+
+pub use batched::{sd_generate_batch, sd_generate_stream};
+pub use engine::{sd_generate, Emission, SpecConfig, Variant};
+pub use stats::{DecodeOutput, DecodeStats, RoundStats};

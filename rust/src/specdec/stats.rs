@@ -1,0 +1,153 @@
+//! Per-round and per-decode statistics: everything the paper's tables
+//! report (α̂, E[L], measured speedup components) is accumulated here.
+
+use std::time::Duration;
+
+/// One speculative round's outcome.
+#[derive(Clone, Debug)]
+pub struct RoundStats {
+    /// γ actually used this round (may be capped near the horizon end).
+    pub gamma: usize,
+    /// Accepted consecutive proposals (the run length before rejection).
+    pub accepted: usize,
+    /// Patches emitted this round (accepted + 1 bonus/fallback).
+    pub emitted: usize,
+    /// Acceptance probabilities evaluated (one per checked proposal).
+    pub alphas: Vec<f64>,
+    /// Extra target draws consumed by residual thinning (lossless only).
+    pub residual_draws: usize,
+    pub draft_time: Duration,
+    pub target_time: Duration,
+}
+
+/// Aggregate over a full decode.
+#[derive(Clone, Debug, Default)]
+pub struct DecodeStats {
+    pub rounds: usize,
+    pub draft_calls: usize,
+    pub target_calls: usize,
+    pub residual_draws: usize,
+    pub proposals: usize,
+    pub accepted: usize,
+    pub sum_alpha: f64,
+    pub alpha_count: usize,
+    pub sum_block_len: usize,
+    pub draft_time: Duration,
+    pub target_time: Duration,
+}
+
+impl DecodeStats {
+    pub fn absorb(&mut self, r: &RoundStats) {
+        self.rounds += 1;
+        self.draft_calls += r.gamma;
+        self.target_calls += 1 + r.residual_draws; // residual draws re-use p samples, not forwards; counted separately below
+        self.residual_draws += r.residual_draws;
+        self.proposals += r.gamma;
+        self.accepted += r.accepted;
+        self.sum_alpha += r.alphas.iter().sum::<f64>();
+        self.alpha_count += r.alphas.len();
+        self.sum_block_len += r.emitted;
+        self.draft_time += r.draft_time;
+        self.target_time += r.target_time;
+    }
+
+    /// Empirical mean acceptance probability (the table's α̂ column).
+    pub fn alpha_hat(&self) -> f64 {
+        if self.alpha_count == 0 {
+            f64::NAN
+        } else {
+            self.sum_alpha / self.alpha_count as f64
+        }
+    }
+
+    /// Empirical acceptance *rate* (fraction of proposals accepted).
+    pub fn accept_rate(&self) -> f64 {
+        if self.proposals == 0 {
+            f64::NAN
+        } else {
+            self.accepted as f64 / self.proposals as f64
+        }
+    }
+
+    /// Mean emitted patches per round (measured E[L]).
+    pub fn mean_block_len(&self) -> f64 {
+        if self.rounds == 0 {
+            f64::NAN
+        } else {
+            self.sum_block_len as f64 / self.rounds as f64
+        }
+    }
+
+    pub fn merge(&mut self, other: &DecodeStats) {
+        self.rounds += other.rounds;
+        self.draft_calls += other.draft_calls;
+        self.target_calls += other.target_calls;
+        self.residual_draws += other.residual_draws;
+        self.proposals += other.proposals;
+        self.accepted += other.accepted;
+        self.sum_alpha += other.sum_alpha;
+        self.alpha_count += other.alpha_count;
+        self.sum_block_len += other.sum_block_len;
+        self.draft_time += other.draft_time;
+        self.target_time += other.target_time;
+    }
+}
+
+/// Result of one decode call.
+#[derive(Clone, Debug)]
+pub struct DecodeOutput {
+    /// Flat [horizon_patches * patch] forecast values.
+    pub patches: Vec<f32>,
+    pub rounds: Vec<RoundStats>,
+    pub stats: DecodeStats,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn round(gamma: usize, accepted: usize, alphas: Vec<f64>) -> RoundStats {
+        RoundStats {
+            gamma,
+            accepted,
+            emitted: accepted + 1,
+            alphas,
+            residual_draws: 0,
+            draft_time: Duration::from_micros(10),
+            target_time: Duration::from_micros(40),
+        }
+    }
+
+    #[test]
+    fn aggregates() {
+        let mut s = DecodeStats::default();
+        s.absorb(&round(3, 3, vec![1.0, 1.0, 1.0]));
+        s.absorb(&round(3, 1, vec![1.0, 0.2]));
+        assert_eq!(s.rounds, 2);
+        assert_eq!(s.proposals, 6);
+        assert_eq!(s.accepted, 4);
+        assert!((s.alpha_hat() - 4.2 / 5.0).abs() < 1e-12);
+        assert!((s.mean_block_len() - 3.0).abs() < 1e-12);
+        assert!((s.accept_rate() - 4.0 / 6.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn merge_is_additive() {
+        let mut a = DecodeStats::default();
+        a.absorb(&round(2, 2, vec![1.0, 1.0]));
+        let mut b = DecodeStats::default();
+        b.absorb(&round(2, 0, vec![0.1]));
+        let mut m = a.clone();
+        m.merge(&b);
+        assert_eq!(m.rounds, 2);
+        assert_eq!(m.accepted, 2);
+        assert_eq!(m.alpha_count, 3);
+    }
+
+    #[test]
+    fn empty_stats_are_nan() {
+        let s = DecodeStats::default();
+        assert!(s.alpha_hat().is_nan());
+        assert!(s.mean_block_len().is_nan());
+    }
+}

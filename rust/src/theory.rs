@@ -1,0 +1,251 @@
+//! Closed-form performance theory (paper §3.4–§3.5, Props. 1 & 3).
+//!
+//! Everything here is pure math over the mean acceptance ᾱ, the wall-clock
+//! cost ratio c and the FLOPs ratio ĉ; the calibration bench (Table 5)
+//! compares these predictors against measured values, and the server's
+//! auto-γ controller calls [`optimal_gamma`] online.
+
+/// Capped-geometric block-length law (Eqs. 2–3):
+/// P(L = l) = (1-ᾱ) ᾱ^{l-1} for 1 <= l <= γ, P(L = γ+1) = ᾱ^γ.
+pub fn block_length_pmf(alpha: f64, gamma: usize) -> Vec<f64> {
+    assert!((0.0..=1.0).contains(&alpha), "alpha in [0,1]");
+    let mut pmf = Vec::with_capacity(gamma + 1);
+    for l in 1..=gamma {
+        pmf.push((1.0 - alpha) * alpha.powi(l as i32 - 1));
+    }
+    pmf.push(alpha.powi(gamma as i32));
+    pmf
+}
+
+/// E[L] = (1 - ᾱ^{γ+1}) / (1 - ᾱ) (Eq. 4), with the ᾱ→1 limit γ+1.
+pub fn expected_block_length(alpha: f64, gamma: usize) -> f64 {
+    assert!((0.0..=1.0).contains(&alpha));
+    if (1.0 - alpha).abs() < 1e-12 {
+        return (gamma + 1) as f64;
+    }
+    (1.0 - alpha.powi(gamma as i32 + 1)) / (1.0 - alpha)
+}
+
+/// Wall-clock speedup S_wall(γ) = E[L] / (cγ + 1) (Eq. 5);
+/// c is the measured draft/target wall-clock ratio.
+pub fn wall_speedup(alpha: f64, gamma: usize, c: f64) -> f64 {
+    expected_block_length(alpha, gamma) / (c * gamma as f64 + 1.0)
+}
+
+/// OpsFactor = (γ ĉ + γ + 1) / E[L] (Eq. 6): extra compute per emitted
+/// patch relative to pure target autoregression (>1 means SD burns more
+/// FLOPs — the price paid for latency).
+pub fn ops_factor(alpha: f64, gamma: usize, c_hat: f64) -> f64 {
+    (gamma as f64 * c_hat + gamma as f64 + 1.0) / expected_block_length(alpha, gamma)
+}
+
+/// Exact increment condition: S_wall(γ+1) >= S_wall(γ) iff
+///   ᾱ^{γ+1} · [ (1 + c(γ+1)) − ᾱ(1 + cγ) ] >= c.
+///
+/// Derivation: cross-multiply Eq. 5 at γ and γ+1 —
+///   (1-ᾱ^{γ+2})(cγ+1) >= (1-ᾱ^{γ+1})(c(γ+1)+1)
+/// and collect the ᾱ^{γ+1} terms.
+///
+/// NOTE — paper discrepancy (recorded in EXPERIMENTS.md): the paper's
+/// Prop. 3 states the condition as ᾱ^{γ+1} >= (1+cγ)/(1+c(γ+1)), which
+/// drops an ᾱ factor in the expansion (their Eq. 27→28 treats
+/// ᾱ^{γ+2}(cγ+1) as ᾱ^{γ+1}(cγ+1)). The stated rule is *conservative*
+/// (understates the optimal γ at high ᾱ); our property test
+/// `optimal_gamma_matches_exhaustive_scan` rejects it, so [`optimal_gamma`]
+/// uses the exact condition and [`paper_gamma_rule`] preserves the paper's
+/// verbatim rule for Table 5 comparisons.
+pub fn speedup_increases_at(alpha: f64, gamma: usize, c: f64) -> bool {
+    let g = gamma as f64;
+    alpha.powi(gamma as i32 + 1) * ((1.0 + c * (g + 1.0)) - alpha * (1.0 + c * g)) >= c
+}
+
+/// Near-optimal integer γ*: scan up from 1 while the speedup keeps
+/// increasing (exact condition above).
+pub fn optimal_gamma(alpha: f64, c: f64, cap: usize) -> usize {
+    let mut g = 1usize;
+    while g < cap && speedup_increases_at(alpha, g, c) {
+        g += 1;
+    }
+    g
+}
+
+/// The paper's Prop. 3 rule, verbatim: largest γ with
+/// ᾱ^{γ+1} >= (1+cγ)/(1+c(γ+1)). Kept for predictor-calibration
+/// comparisons; conservative at high ᾱ (see [`speedup_increases_at`]).
+pub fn paper_gamma_rule(alpha: f64, c: f64, cap: usize) -> usize {
+    let mut g = 1usize;
+    while g < cap
+        && alpha.powi(g as i32 + 1)
+            >= (1.0 + c * g as f64) / (1.0 + c * (g as f64 + 1.0))
+    {
+        g += 1;
+    }
+    g
+}
+
+/// Prop. 1 dependence bounds on E[L] when per-step conditional acceptance
+/// lies in [alpha_lo, alpha_hi].
+pub fn block_length_bounds(alpha_lo: f64, alpha_hi: f64, gamma: usize) -> (f64, f64) {
+    assert!(alpha_lo <= alpha_hi);
+    (
+        expected_block_length(alpha_lo, gamma),
+        expected_block_length(alpha_hi, gamma),
+    )
+}
+
+/// Plug-in predictor bundle for a measured (α̂, c, ĉ) triple — what the
+/// capacity planner and Table 5 report.
+#[derive(Clone, Copy, Debug)]
+pub struct Predictors {
+    pub alpha: f64,
+    pub gamma: usize,
+    pub expected_l: f64,
+    pub s_wall: f64,
+    pub ops_factor: f64,
+}
+
+pub fn predict(alpha: f64, gamma: usize, c: f64, c_hat: f64) -> Predictors {
+    Predictors {
+        alpha,
+        gamma,
+        expected_l: expected_block_length(alpha, gamma),
+        s_wall: wall_speedup(alpha, gamma, c),
+        ops_factor: ops_factor(alpha, gamma, c_hat),
+    }
+}
+
+/// Breakeven heuristic for the lossless variant (§B.6): residual sampling
+/// is only competitive when 1 - ᾱ ≳ 1/γ (expected residual cost per block
+/// does not exceed the block's expected output).
+pub fn lossless_worthwhile(alpha: f64, gamma: usize) -> bool {
+    (1.0 - alpha) >= 1.0 / gamma as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest_lite::{check, F64Range, Pair, UsizeRange};
+
+    #[test]
+    fn pmf_sums_to_one() {
+        check(
+            &Pair(F64Range(0.0, 1.0), UsizeRange(1, 20)),
+            |(alpha, gamma)| {
+                let s: f64 = block_length_pmf(*alpha, *gamma).iter().sum();
+                if (s - 1.0).abs() < 1e-9 {
+                    Ok(())
+                } else {
+                    Err(format!("pmf sums to {s}"))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn expected_l_matches_pmf_mean() {
+        check(
+            &Pair(F64Range(0.0, 0.999), UsizeRange(1, 15)),
+            |(alpha, gamma)| {
+                let pmf = block_length_pmf(*alpha, *gamma);
+                let mean: f64 = pmf.iter().enumerate().map(|(i, p)| (i + 1) as f64 * p).sum();
+                let closed = expected_block_length(*alpha, *gamma);
+                if (mean - closed).abs() < 1e-9 {
+                    Ok(())
+                } else {
+                    Err(format!("pmf mean {mean} vs closed form {closed}"))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn expected_l_limits() {
+        assert!((expected_block_length(0.0, 5) - 1.0).abs() < 1e-12, "always reject -> 1");
+        assert!((expected_block_length(1.0, 5) - 6.0).abs() < 1e-12, "always accept -> gamma+1");
+        // Monotone increasing in alpha and in gamma.
+        assert!(expected_block_length(0.9, 5) > expected_block_length(0.5, 5));
+        assert!(expected_block_length(0.9, 7) > expected_block_length(0.9, 5));
+    }
+
+    #[test]
+    fn saturation_in_gamma() {
+        // The paper's headline qualitative claim (Fig. 7): E[L] saturates
+        // once gamma greatly exceeds the 1/(1-alpha) scale.
+        let a = 0.7; // scale 1/(1-a) ~ 3.3
+        let g5 = expected_block_length(a, 5);
+        let g10 = expected_block_length(a, 10);
+        let g20 = expected_block_length(a, 20);
+        assert!((g10 - g5) > (g20 - g10), "increments shrink");
+        assert!((g20 - 1.0 / (1.0 - a)).abs() < 0.01, "limit is 1/(1-alpha)");
+        // And S_wall itself saturates: past the optimum it *decreases*.
+        let c = 0.2;
+        let g_star = optimal_gamma(a, c, 64);
+        assert!(wall_speedup(a, g_star + 5, c) < wall_speedup(a, g_star, c));
+    }
+
+    #[test]
+    fn speedup_known_value() {
+        // alpha=1, c=0.25, gamma=3: S = 4 / (0.75 + 1) = 2.2857...
+        let s = wall_speedup(1.0, 3, 0.25);
+        assert!((s - 4.0 / 1.75).abs() < 1e-12, "{s}");
+    }
+
+    #[test]
+    fn ops_factor_at_least_cost_of_validation() {
+        // With perfect acceptance OpsFactor = (γĉ + γ + 1)/(γ+1) > 1 when ĉ>0.
+        let f = ops_factor(1.0, 3, 0.25);
+        assert!((f - (3.0 * 0.25 + 4.0) / 4.0).abs() < 1e-12);
+        assert!(f > 1.0);
+    }
+
+    #[test]
+    fn optimal_gamma_matches_exhaustive_scan() {
+        check(
+            &Pair(F64Range(0.05, 0.999), F64Range(0.02, 0.9)),
+            |(alpha, c)| {
+                let cap = 32;
+                let g_rule = optimal_gamma(*alpha, *c, cap);
+                // Exhaustive argmax of S_wall over [1, cap].
+                let (mut best_g, mut best_s) = (1, f64::MIN);
+                for g in 1..=cap {
+                    let s = wall_speedup(*alpha, g, *c);
+                    if s > best_s {
+                        best_s = s;
+                        best_g = g;
+                    }
+                }
+                // Prop. 3 is *near*-optimal: the rule's S_wall must be
+                // within 2% of the exhaustive optimum.
+                let s_rule = wall_speedup(*alpha, g_rule, *c);
+                if s_rule >= 0.98 * best_s {
+                    Ok(())
+                } else {
+                    Err(format!(
+                        "rule gamma={g_rule} (S={s_rule:.4}) vs scan gamma={best_g} (S={best_s:.4})"
+                    ))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn high_alpha_low_c_wants_large_gamma() {
+        assert!(optimal_gamma(0.99, 0.05, 64) > 8);
+        assert!(optimal_gamma(0.5, 0.5, 64) <= 2);
+        // The paper's verbatim rule is conservative at high alpha:
+        assert!(paper_gamma_rule(0.99, 0.05, 64) <= optimal_gamma(0.99, 0.05, 64));
+    }
+
+    #[test]
+    fn dependence_bounds_bracket_iid() {
+        let (lo, hi) = block_length_bounds(0.7, 0.9, 5);
+        let iid = expected_block_length(0.8, 5);
+        assert!(lo <= iid && iid <= hi);
+    }
+
+    #[test]
+    fn lossless_breakeven() {
+        assert!(lossless_worthwhile(0.5, 4)); // 0.5 >= 0.25
+        assert!(!lossless_worthwhile(0.95, 4)); // 0.05 < 0.25
+    }
+}

@@ -1,0 +1,204 @@
+//! Micro-benchmark substrate (criterion is unavailable offline).
+//!
+//! Provides warmup + timed iterations with mean / p50 / p99 / MAD reporting,
+//! a table printer for the paper-reproduction benches, and CSV output into
+//! `results/`. All `cargo bench` targets (`harness = false`) use this.
+
+use std::io::Write;
+use std::path::Path;
+use std::time::{Duration, Instant};
+
+use super::stats::quantile;
+
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_ns: f64,
+    pub p50_ns: f64,
+    pub p99_ns: f64,
+    pub mad_ns: f64,
+    pub min_ns: f64,
+}
+
+impl BenchResult {
+    pub fn mean_ms(&self) -> f64 {
+        self.mean_ns / 1e6
+    }
+    pub fn throughput_per_s(&self, items_per_iter: f64) -> f64 {
+        items_per_iter / (self.mean_ns / 1e9)
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct Bencher {
+    pub warmup: Duration,
+    pub measure: Duration,
+    pub min_iters: usize,
+    pub max_iters: usize,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher {
+            warmup: Duration::from_millis(300),
+            measure: Duration::from_secs(2),
+            min_iters: 10,
+            max_iters: 10_000,
+        }
+    }
+}
+
+impl Bencher {
+    pub fn quick() -> Self {
+        Bencher {
+            warmup: Duration::from_millis(50),
+            measure: Duration::from_millis(300),
+            min_iters: 5,
+            max_iters: 1000,
+        }
+    }
+
+    /// Benchmark `f`, returning robust timing statistics.
+    pub fn run<F: FnMut()>(&self, name: &str, mut f: F) -> BenchResult {
+        // Warmup.
+        let t0 = Instant::now();
+        while t0.elapsed() < self.warmup {
+            f();
+        }
+        // Measure.
+        let mut samples_ns: Vec<f64> = Vec::new();
+        let t1 = Instant::now();
+        while (t1.elapsed() < self.measure || samples_ns.len() < self.min_iters)
+            && samples_ns.len() < self.max_iters
+        {
+            let s = Instant::now();
+            f();
+            samples_ns.push(s.elapsed().as_nanos() as f64);
+        }
+        samples_ns.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mean = samples_ns.iter().sum::<f64>() / samples_ns.len() as f64;
+        let p50 = quantile(&samples_ns, 0.5);
+        let mut devs: Vec<f64> = samples_ns.iter().map(|x| (x - p50).abs()).collect();
+        devs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        BenchResult {
+            name: name.to_string(),
+            iters: samples_ns.len(),
+            mean_ns: mean,
+            p50_ns: p50,
+            p99_ns: quantile(&samples_ns, 0.99),
+            mad_ns: quantile(&devs, 0.5),
+            min_ns: samples_ns[0],
+        }
+    }
+}
+
+/// Fixed-width table printer for paper-style output.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+    title: String,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Table {
+        Table {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len(), "row width mismatch");
+        self.rows.push(cells);
+    }
+
+    pub fn print(&self) {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (w, c) in widths.iter_mut().zip(row) {
+                *w = (*w).max(c.len());
+            }
+        }
+        let total: usize = widths.iter().sum::<usize>() + 3 * widths.len() + 1;
+        println!("\n{}", self.title);
+        println!("{}", "=".repeat(total.min(120)));
+        let fmt_row = |cells: &[String]| {
+            let mut line = String::from("|");
+            for (c, w) in cells.iter().zip(&widths) {
+                line.push_str(&format!(" {:<w$} |", c, w = w));
+            }
+            line
+        };
+        println!("{}", fmt_row(&self.headers));
+        println!("{}", "-".repeat(total.min(120)));
+        for row in &self.rows {
+            println!("{}", fmt_row(row));
+        }
+        println!();
+    }
+
+    /// Write the table as CSV under results/ (created if missing).
+    pub fn write_csv(&self, path: &str) -> std::io::Result<()> {
+        if let Some(parent) = Path::new(path).parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let mut f = std::fs::File::create(path)?;
+        writeln!(f, "{}", self.headers.join(","))?;
+        for row in &self.rows {
+            writeln!(f, "{}", row.join(","))?;
+        }
+        Ok(())
+    }
+}
+
+/// Format helper: "1.23x".
+pub fn fx(v: f64) -> String {
+    format!("{v:.2}x")
+}
+
+/// Format helper: fixed 4 decimals.
+pub fn f4(v: f64) -> String {
+    format!("{v:.4}")
+}
+
+/// Honor `STRIDE_BENCH_QUICK=1` so CI can run every bench cheaply.
+pub fn bencher_from_env() -> Bencher {
+    if std::env::var("STRIDE_BENCH_QUICK").as_deref() == Ok("1") {
+        Bencher::quick()
+    } else {
+        Bencher::default()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_sleep() {
+        let b = Bencher {
+            warmup: Duration::from_millis(5),
+            measure: Duration::from_millis(100),
+            min_iters: 5,
+            max_iters: 100,
+        };
+        let r = b.run("sleep1ms", || std::thread::sleep(Duration::from_millis(1)));
+        assert!(r.mean_ns > 0.9e6, "mean {:.0}ns", r.mean_ns);
+        assert!(r.iters >= 5);
+        assert!(r.p99_ns >= r.p50_ns);
+        assert!(r.min_ns <= r.mean_ns);
+    }
+
+    #[test]
+    fn table_roundtrip_csv() {
+        let dir = std::env::temp_dir().join("stride_tbl_test");
+        let path = dir.join("t.csv");
+        let mut t = Table::new("T", &["a", "b"]);
+        t.row(vec!["1".into(), "2".into()]);
+        t.write_csv(path.to_str().unwrap()).unwrap();
+        let body = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(body, "a,b\n1,2\n");
+    }
+}

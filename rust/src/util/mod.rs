@@ -1,0 +1,10 @@
+//! Hand-rolled substrates (no third-party crates are available offline
+//! beyond the `xla` dependency chain — see DESIGN.md §4).
+
+pub mod json;
+pub mod microbench;
+pub mod proptest_lite;
+pub mod rng;
+pub mod stats;
+pub mod tensor;
+pub mod threadpool;

@@ -1,0 +1,219 @@
+//! Property-testing substrate (proptest is unavailable offline).
+//!
+//! A seeded generator + shrinking-lite runner: on failure, retries with
+//! "smaller" inputs produced by the generator's `shrink` hook and reports
+//! the smallest failing case. Used for coordinator invariants (routing,
+//! batching, specdec state) per the repo testing policy.
+
+use super::rng::Rng;
+
+/// A value generator with an optional shrinker.
+pub trait Gen {
+    type Value: std::fmt::Debug + Clone;
+    fn generate(&self, rng: &mut Rng) -> Self::Value;
+    /// Candidate smaller values; default none.
+    fn shrink(&self, _v: &Self::Value) -> Vec<Self::Value> {
+        Vec::new()
+    }
+}
+
+/// Runner configuration.
+pub struct Config {
+    pub cases: usize,
+    pub seed: u64,
+    pub max_shrink_rounds: usize,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config { cases: 200, seed: 0x5712DE, max_shrink_rounds: 200 }
+    }
+}
+
+/// Run `prop` over `cases` generated inputs; panic with the smallest
+/// failing input found.
+pub fn check<G: Gen, F: Fn(&G::Value) -> Result<(), String>>(gen: &G, prop: F) {
+    check_with(Config::default(), gen, prop)
+}
+
+pub fn check_with<G: Gen, F: Fn(&G::Value) -> Result<(), String>>(
+    cfg: Config,
+    gen: &G,
+    prop: F,
+) {
+    let mut rng = Rng::new(cfg.seed);
+    for case in 0..cfg.cases {
+        let v = gen.generate(&mut rng);
+        if let Err(msg) = prop(&v) {
+            // Shrink.
+            let mut best = v.clone();
+            let mut best_msg = msg;
+            let mut rounds = 0;
+            'outer: loop {
+                for cand in gen.shrink(&best) {
+                    rounds += 1;
+                    if rounds > cfg.max_shrink_rounds {
+                        break 'outer;
+                    }
+                    if let Err(m) = prop(&cand) {
+                        best = cand;
+                        best_msg = m;
+                        continue 'outer;
+                    }
+                }
+                break;
+            }
+            panic!(
+                "property failed (case {case}, seed {:#x}):\n  input: {:?}\n  error: {}",
+                cfg.seed, best, best_msg
+            );
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Common generators.
+// ---------------------------------------------------------------------------
+
+/// Uniform f64 in [lo, hi]; shrinks toward lo.
+pub struct F64Range(pub f64, pub f64);
+
+impl Gen for F64Range {
+    type Value = f64;
+    fn generate(&self, rng: &mut Rng) -> f64 {
+        rng.range(self.0, self.1)
+    }
+    fn shrink(&self, v: &f64) -> Vec<f64> {
+        let mut out = Vec::new();
+        if *v > self.0 {
+            out.push(self.0);
+            out.push(self.0 + (*v - self.0) / 2.0);
+        }
+        out
+    }
+}
+
+/// Uniform usize in [lo, hi]; shrinks toward lo.
+pub struct UsizeRange(pub usize, pub usize);
+
+impl Gen for UsizeRange {
+    type Value = usize;
+    fn generate(&self, rng: &mut Rng) -> usize {
+        self.0 + rng.below(self.1 - self.0 + 1)
+    }
+    fn shrink(&self, v: &usize) -> Vec<usize> {
+        let mut out = Vec::new();
+        if *v > self.0 {
+            out.push(self.0);
+            out.push(self.0 + (*v - self.0) / 2);
+        }
+        out
+    }
+}
+
+/// Vec of f32 drawn from N(0, scale); shrinks by halving length.
+pub struct NormalVec {
+    pub len: UsizeRange,
+    pub scale: f32,
+}
+
+impl Gen for NormalVec {
+    type Value = Vec<f32>;
+    fn generate(&self, rng: &mut Rng) -> Vec<f32> {
+        let n = self.len.generate(rng);
+        (0..n).map(|_| self.scale * rng.normal() as f32).collect()
+    }
+    fn shrink(&self, v: &Vec<f32>) -> Vec<Vec<f32>> {
+        if v.len() <= self.len.0 {
+            return Vec::new();
+        }
+        let half = self.len.0.max(v.len() / 2);
+        vec![v[..half].to_vec()]
+    }
+}
+
+/// Tuple combinator.
+pub struct Pair<A, B>(pub A, pub B);
+
+impl<A: Gen, B: Gen> Gen for Pair<A, B> {
+    type Value = (A::Value, B::Value);
+    fn generate(&self, rng: &mut Rng) -> Self::Value {
+        (self.0.generate(rng), self.1.generate(rng))
+    }
+    fn shrink(&self, v: &Self::Value) -> Vec<Self::Value> {
+        let mut out: Vec<Self::Value> = self
+            .0
+            .shrink(&v.0)
+            .into_iter()
+            .map(|a| (a, v.1.clone()))
+            .collect();
+        out.extend(self.1.shrink(&v.1).into_iter().map(|b| (v.0.clone(), b)));
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check(&F64Range(0.0, 1.0), |v| {
+            if (0.0..=1.0).contains(v) {
+                Ok(())
+            } else {
+                Err(format!("{v} out of range"))
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics_with_shrunk_input() {
+        check(&UsizeRange(0, 1000), |v| {
+            if *v < 500 {
+                Ok(())
+            } else {
+                Err("too big".into())
+            }
+        });
+    }
+
+    #[test]
+    fn shrink_finds_small_case() {
+        // Verify the shrinker drives toward the boundary: catch the panic
+        // and check the reported input is well below the original draws.
+        let res = std::panic::catch_unwind(|| {
+            check(&UsizeRange(0, 1_000_000), |v| {
+                if *v < 10 {
+                    Ok(())
+                } else {
+                    Err("boom".into())
+                }
+            })
+        });
+        let msg = *res.unwrap_err().downcast::<String>().unwrap();
+        // Binary shrinking from anywhere in [0, 1e6] should land < 100.
+        let input: usize = msg
+            .split("input: ")
+            .nth(1)
+            .unwrap()
+            .split_whitespace()
+            .next()
+            .unwrap()
+            .parse()
+            .unwrap();
+        assert!(input < 100, "shrunk input {input} (msg: {msg})");
+    }
+
+    #[test]
+    fn pair_generates_both() {
+        check(&Pair(UsizeRange(1, 4), F64Range(-1.0, 1.0)), |(n, x)| {
+            if (1..=4).contains(n) && (-1.0..=1.0).contains(x) {
+                Ok(())
+            } else {
+                Err("bounds".into())
+            }
+        });
+    }
+}

@@ -1,0 +1,223 @@
+//! Deterministic RNG substrate: counter-based SplitMix64 + a sequential
+//! Xoshiro256++ stream, plus Gaussian sampling.
+//!
+//! The counter-based SplitMix64 is mirrored bit-for-bit by
+//! `python/compile/datagen.py` so Python (training) and Rust (serving/eval)
+//! can generate the *same* synthetic datasets; golden vectors exported by
+//! `aot.py` pin the equivalence (`data::synthetic` tests).
+//!
+//! No `rand` crate is available offline; everything here is hand-rolled and
+//! unit-tested against reference values.
+
+const GOLDEN: u64 = 0x9E37_79B9_7F4A_7C15;
+const MIX1: u64 = 0xBF58_476D_1CE4_E5B9;
+const MIX2: u64 = 0x94D0_49BB_1331_11EB;
+
+/// Hash (seed, idx) -> u64. Stateless; identical to datagen.splitmix64.
+#[inline]
+pub fn splitmix64(seed: u64, idx: u64) -> u64 {
+    let mut z = seed.wrapping_add(idx.wrapping_add(1).wrapping_mul(GOLDEN));
+    z = (z ^ (z >> 30)).wrapping_mul(MIX1);
+    z = (z ^ (z >> 27)).wrapping_mul(MIX2);
+    z ^ (z >> 31)
+}
+
+/// Uniform in [0, 1) with 53-bit mantissa (matches datagen.uniform01).
+#[inline]
+pub fn uniform01(seed: u64, idx: u64) -> f64 {
+    (splitmix64(seed, idx) >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+}
+
+/// Standard normal via Box-Muller over the (2i, 2i+1) uniform pair,
+/// cos branch only (matches datagen.std_normal).
+#[inline]
+pub fn std_normal(seed: u64, idx: u64) -> f64 {
+    let u1 = uniform01(seed, 2 * idx);
+    let u2 = uniform01(seed, 2 * idx + 1);
+    (-2.0 * (-u1).ln_1p()).sqrt() * (2.0 * core::f64::consts::PI * u2).cos()
+}
+
+/// Sequential PRNG for the serving hot loop (acceptance coin flips, fallback
+/// sampling): Xoshiro256++, seeded via SplitMix64 expansion.
+#[derive(Clone, Debug)]
+pub struct Rng {
+    s: [u64; 4],
+    /// Cached second Box-Muller branch.
+    spare: Option<f64>,
+}
+
+impl Rng {
+    pub fn new(seed: u64) -> Self {
+        let mut s = [0u64; 4];
+        for (i, slot) in s.iter_mut().enumerate() {
+            *slot = splitmix64(seed, i as u64);
+        }
+        Rng { s, spare: None }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let s = &mut self.s;
+        let result = s[0]
+            .wrapping_add(s[3])
+            .rotate_left(23)
+            .wrapping_add(s[0]);
+        let t = s[1] << 17;
+        s[2] ^= s[0];
+        s[3] ^= s[1];
+        s[1] ^= s[2];
+        s[0] ^= s[3];
+        s[2] ^= t;
+        s[3] = s[3].rotate_left(45);
+        result
+    }
+
+    /// Uniform in [0, 1).
+    #[inline]
+    pub fn uniform(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform in [lo, hi).
+    #[inline]
+    pub fn range(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.uniform()
+    }
+
+    /// Uniform integer in [0, n).
+    #[inline]
+    pub fn below(&mut self, n: usize) -> usize {
+        debug_assert!(n > 0);
+        // Lemire-style rejection-free for our (non-crypto) purposes.
+        ((self.next_u64() >> 11) as u128 * n as u128 >> 53) as usize
+    }
+
+    /// Standard normal (Box-Muller, both branches used).
+    #[inline]
+    pub fn normal(&mut self) -> f64 {
+        if let Some(z) = self.spare.take() {
+            return z;
+        }
+        let u1 = self.uniform();
+        let u2 = self.uniform();
+        let r = (-2.0 * (1.0 - u1).ln()).sqrt();
+        let (s, c) = (2.0 * core::f64::consts::PI * u2).sin_cos();
+        self.spare = Some(r * s);
+        r * c
+    }
+
+    /// N(mu, sigma^2).
+    #[inline]
+    pub fn normal_scaled(&mut self, mu: f64, sigma: f64) -> f64 {
+        mu + sigma * self.normal()
+    }
+
+    /// Fill `out` with x[i] ~ N(mu[i], sigma^2) — the draft/fallback patch
+    /// sampler on the hot path.
+    pub fn fill_normal_around(&mut self, mu: &[f32], sigma: f32, out: &mut [f32]) {
+        debug_assert_eq!(mu.len(), out.len());
+        for (o, m) in out.iter_mut().zip(mu) {
+            *o = *m + sigma * self.normal() as f32;
+        }
+    }
+
+    /// Exponential with rate `lambda` (Poisson-process inter-arrivals for
+    /// the load generator).
+    #[inline]
+    pub fn exponential(&mut self, lambda: f64) -> f64 {
+        -(1.0 - self.uniform()).ln() / lambda
+    }
+
+    /// Bernoulli(p).
+    #[inline]
+    pub fn bernoulli(&mut self, p: f64) -> bool {
+        self.uniform() < p
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn splitmix_reference_values() {
+        // Distinct, deterministic, stable across runs.
+        assert_eq!(splitmix64(0, 0), splitmix64(0, 0));
+        assert_ne!(splitmix64(0, 0), splitmix64(0, 1));
+        assert_ne!(splitmix64(0, 0), splitmix64(1, 0));
+        // Pinned golden values computed from python/compile/datagen.py —
+        // this is the cross-language equivalence contract.
+        assert_eq!(splitmix64(42, 0), 0xbdd7_3226_2feb_6e95);
+        assert_eq!(splitmix64(0, 0), 0xe220_a839_7b1d_cdaf);
+        assert!((uniform01(42, 0) - 0.7415648787718233).abs() < 1e-15);
+        assert!((std_normal(3, 3) - 0.4124328000730101).abs() < 1e-12);
+    }
+
+    #[test]
+    fn uniform_in_range_and_spread() {
+        let mut mn = 1.0f64;
+        let mut mx = 0.0f64;
+        for i in 0..10_000 {
+            let u = uniform01(7, i);
+            assert!((0.0..1.0).contains(&u));
+            mn = mn.min(u);
+            mx = mx.max(u);
+        }
+        assert!(mn < 0.01 && mx > 0.99, "poor spread: [{mn}, {mx}]");
+    }
+
+    #[test]
+    fn counter_normal_moments() {
+        let n = 50_000;
+        let (mut s, mut s2) = (0.0, 0.0);
+        for i in 0..n {
+            let z = std_normal(3, i);
+            s += z;
+            s2 += z * z;
+        }
+        let mean = s / n as f64;
+        let var = s2 / n as f64 - mean * mean;
+        assert!(mean.abs() < 0.02, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.03, "var {var}");
+    }
+
+    #[test]
+    fn xoshiro_normal_moments_and_determinism() {
+        let mut rng = Rng::new(9);
+        let mut rng2 = Rng::new(9);
+        assert_eq!(rng.next_u64(), rng2.next_u64());
+        let n = 50_000;
+        let (mut s, mut s2) = (0.0, 0.0);
+        for _ in 0..n {
+            let z = rng.normal();
+            s += z;
+            s2 += z * z;
+        }
+        let mean = s / n as f64;
+        let var = s2 / n as f64 - mean * mean;
+        assert!(mean.abs() < 0.02, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.03, "var {var}");
+    }
+
+    #[test]
+    fn below_is_uniform_enough() {
+        let mut rng = Rng::new(1);
+        let mut counts = [0usize; 10];
+        for _ in 0..100_000 {
+            counts[rng.below(10)] += 1;
+        }
+        for &c in &counts {
+            assert!((8_000..12_000).contains(&c), "bucket count {c}");
+        }
+    }
+
+    #[test]
+    fn exponential_mean() {
+        let mut rng = Rng::new(5);
+        let lambda = 4.0;
+        let n = 50_000;
+        let s: f64 = (0..n).map(|_| rng.exponential(lambda)).sum();
+        let mean = s / n as f64;
+        assert!((mean - 1.0 / lambda).abs() < 0.01, "mean {mean}");
+    }
+}

@@ -1,0 +1,268 @@
+//! Statistics substrate: normal CDF/erf, summary stats, quantiles, and a
+//! log-bucketed latency histogram (HDR-style) for the serving metrics.
+
+/// erf via Abramowitz & Stegun 7.1.26 refined: max abs error < 1.2e-7,
+/// plenty for acceptance/overlap math (we also cross-check against series).
+pub fn erf(x: f64) -> f64 {
+    let sign = if x < 0.0 { -1.0 } else { 1.0 };
+    let x = x.abs();
+    let t = 1.0 / (1.0 + 0.3275911 * x);
+    let y = 1.0
+        - (((((1.061405429 * t - 1.453152027) * t) + 1.421413741) * t - 0.284496736) * t
+            + 0.254829592)
+            * t
+            * (-x * x).exp();
+    sign * y
+}
+
+/// Standard normal CDF.
+#[inline]
+pub fn phi(x: f64) -> f64 {
+    0.5 * (1.0 + erf(x / std::f64::consts::SQRT_2))
+}
+
+/// Closed-form overlap of two equal-covariance isotropic Gaussians
+/// (paper Remark 5): beta = 2 * Phi(-delta / 2), delta = ||mu_p - mu_q|| / sigma.
+#[inline]
+pub fn gaussian_overlap(mahalanobis_gap: f64) -> f64 {
+    2.0 * phi(-mahalanobis_gap / 2.0)
+}
+
+/// Hoeffding sample size: N such that P(|a_hat - a| >= eps) <= delta
+/// (paper §3.5: P <= 2 exp(-2 N eps^2)).
+pub fn hoeffding_n(eps: f64, delta: f64) -> usize {
+    ((2.0f64 / delta).ln() / (2.0 * eps * eps)).ceil() as usize
+}
+
+/// Hoeffding deviation bound for given N: eps such that the failure
+/// probability is `delta`.
+pub fn hoeffding_eps(n: usize, delta: f64) -> f64 {
+    ((2.0f64 / delta).ln() / (2.0 * n as f64)).sqrt()
+}
+
+/// Running summary statistics (Welford).
+#[derive(Clone, Debug, Default)]
+pub struct Summary {
+    pub n: u64,
+    mean: f64,
+    m2: f64,
+    pub min: f64,
+    pub max: f64,
+}
+
+impl Summary {
+    pub fn new() -> Self {
+        Summary { n: 0, mean: 0.0, m2: 0.0, min: f64::INFINITY, max: f64::NEG_INFINITY }
+    }
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+    pub fn var(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.m2 / (self.n - 1) as f64
+        }
+    }
+    pub fn std(&self) -> f64 {
+        self.var().sqrt()
+    }
+}
+
+/// Exact quantile over a (small) sample; q in [0, 1], linear interpolation.
+pub fn quantile(sorted: &[f64], q: f64) -> f64 {
+    assert!(!sorted.is_empty());
+    let pos = q.clamp(0.0, 1.0) * (sorted.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    if lo == hi {
+        sorted[lo]
+    } else {
+        sorted[lo] + (sorted[hi] - sorted[lo]) * (pos - lo as f64)
+    }
+}
+
+/// Log-bucketed latency histogram: ~4.6% relative resolution from 100ns to
+/// ~100s in 456 buckets, constant-time record, mergeable. The serving
+/// metrics path records nanoseconds.
+#[derive(Clone, Debug)]
+pub struct LatencyHistogram {
+    buckets: Vec<u64>,
+    count: u64,
+    sum_ns: u128,
+    max_ns: u64,
+}
+
+const HIST_BUCKETS: usize = 456;
+const HIST_MIN_NS: f64 = 100.0;
+const HIST_GROWTH: f64 = 1.0457; // 456 buckets * log(1.0457) covers ~9 decades
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LatencyHistogram {
+    pub fn new() -> Self {
+        LatencyHistogram { buckets: vec![0; HIST_BUCKETS], count: 0, sum_ns: 0, max_ns: 0 }
+    }
+
+    #[inline]
+    fn index(ns: u64) -> usize {
+        if ns as f64 <= HIST_MIN_NS {
+            return 0;
+        }
+        let idx = ((ns as f64 / HIST_MIN_NS).ln() / HIST_GROWTH.ln()) as usize;
+        idx.min(HIST_BUCKETS - 1)
+    }
+
+    pub fn record_ns(&mut self, ns: u64) {
+        self.buckets[Self::index(ns)] += 1;
+        self.count += 1;
+        self.sum_ns += ns as u128;
+        self.max_ns = self.max_ns.max(ns);
+    }
+
+    pub fn record(&mut self, d: std::time::Duration) {
+        self.record_ns(d.as_nanos() as u64);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn mean_ns(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum_ns as f64 / self.count as f64
+        }
+    }
+
+    pub fn max_ns(&self) -> u64 {
+        self.max_ns
+    }
+
+    /// Approximate quantile (upper edge of the containing bucket).
+    pub fn quantile_ns(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let rank = (q.clamp(0.0, 1.0) * self.count as f64).ceil() as u64;
+        let mut seen = 0;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            seen += c;
+            if seen >= rank.max(1) {
+                return HIST_MIN_NS * HIST_GROWTH.powi(i as i32 + 1);
+            }
+        }
+        self.max_ns as f64
+    }
+
+    pub fn merge(&mut self, other: &LatencyHistogram) {
+        for (a, b) in self.buckets.iter_mut().zip(&other.buckets) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.sum_ns += other.sum_ns;
+        self.max_ns = self.max_ns.max(other.max_ns);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn erf_known_values() {
+        // Reference values (Abramowitz & Stegun tables).
+        for (x, want) in [(0.0, 0.0), (0.5, 0.5204999), (1.0, 0.8427008), (2.0, 0.9953223)] {
+            assert!((erf(x) - want).abs() < 2e-6, "erf({x})");
+            assert!((erf(-x) + want).abs() < 2e-6, "erf(-{x})");
+        }
+    }
+
+    #[test]
+    fn phi_known_values() {
+        assert!((phi(0.0) - 0.5).abs() < 1e-9);
+        assert!((phi(1.96) - 0.9750021).abs() < 1e-5);
+        assert!((phi(-1.0) - 0.1586553).abs() < 1e-5);
+    }
+
+    #[test]
+    fn overlap_limits() {
+        assert!((gaussian_overlap(0.0) - 1.0).abs() < 1e-6, "identical heads overlap 1");
+        assert!(gaussian_overlap(10.0) < 1e-4, "far heads overlap ~0");
+        // Monotone decreasing.
+        let mut prev = 1.0;
+        for i in 1..50 {
+            let b = gaussian_overlap(i as f64 * 0.2);
+            assert!(b < prev);
+            prev = b;
+        }
+    }
+
+    #[test]
+    fn hoeffding_roundtrip() {
+        let n = hoeffding_n(0.05, 0.05);
+        assert!(hoeffding_eps(n, 0.05) <= 0.05 + 1e-9);
+        assert!(hoeffding_eps(n - 1, 0.05) > 0.05 - 1e-3);
+        // Paper's claim: "a modest number of held-out samples".
+        assert!(n < 1000, "N for (5%, 95%) should be modest, got {n}");
+    }
+
+    #[test]
+    fn summary_matches_direct() {
+        let xs = [1.0, 2.0, 3.0, 4.0, 10.0];
+        let mut s = Summary::new();
+        for &x in &xs {
+            s.push(x);
+        }
+        assert!((s.mean() - 4.0).abs() < 1e-12);
+        let var = xs.iter().map(|x| (x - 4.0f64).powi(2)).sum::<f64>() / 4.0;
+        assert!((s.var() - var).abs() < 1e-12);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 10.0);
+    }
+
+    #[test]
+    fn quantile_interp() {
+        let v = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(quantile(&v, 0.0), 1.0);
+        assert_eq!(quantile(&v, 1.0), 4.0);
+        assert!((quantile(&v, 0.5) - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn histogram_quantiles_within_resolution() {
+        let mut h = LatencyHistogram::new();
+        for i in 1..=10_000u64 {
+            h.record_ns(i * 1_000); // 1us .. 10ms uniform
+        }
+        let p50 = h.quantile_ns(0.5);
+        assert!((p50 - 5e6).abs() / 5e6 < 0.10, "p50 {p50}");
+        let p99 = h.quantile_ns(0.99);
+        assert!((p99 - 9.9e6).abs() / 9.9e6 < 0.10, "p99 {p99}");
+        assert_eq!(h.count(), 10_000);
+    }
+
+    #[test]
+    fn histogram_merge() {
+        let mut a = LatencyHistogram::new();
+        let mut b = LatencyHistogram::new();
+        a.record_ns(1_000);
+        b.record_ns(1_000_000);
+        a.merge(&b);
+        assert_eq!(a.count(), 2);
+        assert_eq!(a.max_ns(), 1_000_000);
+    }
+}

@@ -1,0 +1,221 @@
+//! Row-major f32 tensor substrate for the native backend and data pipeline.
+//!
+//! Deliberately minimal: shapes are `Vec<usize>`, storage is `Vec<f32>`,
+//! and only the ops the Timer-style forward needs are implemented (matmul,
+//! softmax, rmsnorm, transpose-free attention helpers). The PJRT path does
+//! not use this type on the wire — `runtime::literal` marshals flat slices.
+
+use std::fmt;
+
+#[derive(Clone, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl fmt::Debug for Tensor {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "Tensor{:?}(n={})", self.shape, self.data.len())
+    }
+}
+
+impl Tensor {
+    pub fn zeros(shape: &[usize]) -> Tensor {
+        let n = shape.iter().product();
+        Tensor { shape: shape.to_vec(), data: vec![0.0; n] }
+    }
+
+    pub fn from_vec(shape: &[usize], data: Vec<f32>) -> Tensor {
+        assert_eq!(shape.iter().product::<usize>(), data.len(), "shape/data mismatch");
+        Tensor { shape: shape.to_vec(), data }
+    }
+
+    pub fn numel(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn rank(&self) -> usize {
+        self.shape.len()
+    }
+
+    /// Last-axis length.
+    pub fn dim(&self, i: usize) -> usize {
+        self.shape[i]
+    }
+
+    pub fn reshape(mut self, shape: &[usize]) -> Tensor {
+        assert_eq!(shape.iter().product::<usize>(), self.data.len());
+        self.shape = shape.to_vec();
+        self
+    }
+
+    /// Row `r` of a 2-D tensor.
+    pub fn row(&self, r: usize) -> &[f32] {
+        assert_eq!(self.rank(), 2);
+        let c = self.shape[1];
+        &self.data[r * c..(r + 1) * c]
+    }
+
+    pub fn row_mut(&mut self, r: usize) -> &mut [f32] {
+        assert_eq!(self.rank(), 2);
+        let c = self.shape[1];
+        &mut self.data[r * c..(r + 1) * c]
+    }
+}
+
+/// C = A[m,k] x B[k,n]; the native-backend hot matmul.
+/// Simple ikj loop order with the inner j loop auto-vectorizing.
+pub fn matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, c: &mut [f32]) {
+    assert_eq!(a.len(), m * k);
+    assert_eq!(b.len(), k * n);
+    assert_eq!(c.len(), m * n);
+    c.fill(0.0);
+    for i in 0..m {
+        let crow = &mut c[i * n..(i + 1) * n];
+        for kk in 0..k {
+            let aik = a[i * k + kk];
+            if aik == 0.0 {
+                continue;
+            }
+            let brow = &b[kk * n..(kk + 1) * n];
+            for (cj, bj) in crow.iter_mut().zip(brow) {
+                *cj += aik * bj;
+            }
+        }
+    }
+}
+
+/// y = x[m,k] x W[k,n] + b (b optional), allocating variant.
+pub fn linear(x: &Tensor, w: &Tensor, b: Option<&[f32]>) -> Tensor {
+    let (m, k) = (x.numel() / x.shape[x.rank() - 1], *x.shape.last().unwrap());
+    assert_eq!(w.rank(), 2);
+    assert_eq!(w.shape[0], k, "linear: in-dim mismatch");
+    let n = w.shape[1];
+    let mut out_shape = x.shape.clone();
+    *out_shape.last_mut().unwrap() = n;
+    let mut out = Tensor::zeros(&out_shape);
+    matmul(&x.data, &w.data, m, k, n, &mut out.data);
+    if let Some(bias) = b {
+        assert_eq!(bias.len(), n);
+        for r in 0..m {
+            for j in 0..n {
+                out.data[r * n + j] += bias[j];
+            }
+        }
+    }
+    out
+}
+
+/// In-place numerically-stable softmax over the last axis of a row slice.
+pub fn softmax_row(row: &mut [f32]) {
+    let mx = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let mut sum = 0.0f32;
+    for v in row.iter_mut() {
+        *v = (*v - mx).exp();
+        sum += *v;
+    }
+    let inv = 1.0 / sum;
+    for v in row.iter_mut() {
+        *v *= inv;
+    }
+}
+
+/// RMSNorm over the last axis (eps matches the JAX side).
+pub fn rmsnorm(x: &mut [f32], w: &[f32], eps: f32) {
+    let d = w.len();
+    assert_eq!(x.len() % d, 0);
+    for row in x.chunks_exact_mut(d) {
+        let ms: f32 = row.iter().map(|v| v * v).sum::<f32>() / d as f32;
+        let inv = 1.0 / (ms + eps).sqrt();
+        for (v, wi) in row.iter_mut().zip(w) {
+            *v = *v * inv * wi;
+        }
+    }
+}
+
+/// SiLU activation.
+#[inline]
+pub fn silu(x: f32) -> f32 {
+    x / (1.0 + (-x).exp())
+}
+
+/// MSE and MAE between two equal-length slices.
+pub fn mse_mae(a: &[f32], b: &[f32]) -> (f64, f64) {
+    assert_eq!(a.len(), b.len());
+    assert!(!a.is_empty());
+    let (mut se, mut ae) = (0.0f64, 0.0f64);
+    for (x, y) in a.iter().zip(b) {
+        let d = (*x - *y) as f64;
+        se += d * d;
+        ae += d.abs();
+    }
+    (se / a.len() as f64, ae / a.len() as f64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_identity() {
+        let a = vec![1.0, 2.0, 3.0, 4.0];
+        let eye = vec![1.0, 0.0, 0.0, 1.0];
+        let mut c = vec![0.0; 4];
+        matmul(&a, &eye, 2, 2, 2, &mut c);
+        assert_eq!(c, a);
+    }
+
+    #[test]
+    fn matmul_known() {
+        // [[1,2],[3,4]] x [[5,6],[7,8]] = [[19,22],[43,50]]
+        let a = vec![1.0, 2.0, 3.0, 4.0];
+        let b = vec![5.0, 6.0, 7.0, 8.0];
+        let mut c = vec![0.0; 4];
+        matmul(&a, &b, 2, 2, 2, &mut c);
+        assert_eq!(c, vec![19.0, 22.0, 43.0, 50.0]);
+    }
+
+    #[test]
+    fn matmul_rectangular() {
+        // [1x3] x [3x2]
+        let a = vec![1.0, 2.0, 3.0];
+        let b = vec![1.0, 0.0, 0.0, 1.0, 1.0, 1.0];
+        let mut c = vec![0.0; 2];
+        matmul(&a, &b, 1, 3, 2, &mut c);
+        assert_eq!(c, vec![4.0, 5.0]);
+    }
+
+    #[test]
+    fn linear_bias() {
+        let x = Tensor::from_vec(&[1, 2], vec![1.0, 1.0]);
+        let w = Tensor::from_vec(&[2, 3], vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let out = linear(&x, &w, Some(&[10.0, 20.0, 30.0]));
+        assert_eq!(out.data, vec![15.0, 27.0, 39.0]);
+        assert_eq!(out.shape, vec![1, 3]);
+    }
+
+    #[test]
+    fn softmax_sums_to_one_and_is_stable() {
+        let mut row = vec![1000.0, 1001.0, 1002.0];
+        softmax_row(&mut row);
+        let s: f32 = row.iter().sum();
+        assert!((s - 1.0).abs() < 1e-6);
+        assert!(row[2] > row[1] && row[1] > row[0]);
+        assert!(row.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn rmsnorm_unit_rows() {
+        let mut x = vec![3.0, 4.0];
+        rmsnorm(&mut x, &[1.0, 1.0], 0.0);
+        let rms: f32 = (x.iter().map(|v| v * v).sum::<f32>() / 2.0).sqrt();
+        assert!((rms - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn mse_mae_basics() {
+        let (mse, mae) = mse_mae(&[1.0, 2.0], &[2.0, 4.0]);
+        assert!((mse - 2.5).abs() < 1e-12);
+        assert!((mae - 1.5).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,161 @@
+//! End-to-end serving test: start the coordinator on an ephemeral port with
+//! the native backend (fast, PJRT-free) and exercise the full HTTP surface,
+//! including batched concurrent load and error paths.
+
+use std::sync::Arc;
+
+use stride::config::ServeConfig;
+use stride::data::Dataset;
+use stride::http::http_request;
+use stride::server::Server;
+use stride::util::json::Json;
+
+fn start_server() -> Option<Server> {
+    if !stride::artifacts_dir().join("manifest.json").exists() {
+        eprintln!("SKIP: run `make artifacts`");
+        return None;
+    }
+    let mut cfg = ServeConfig::default();
+    cfg.bind = "127.0.0.1:0".into();
+    cfg.backend = "native".into(); // keep the e2e test PJRT-free and fast
+    cfg.max_batch = 4;
+    cfg.max_wait_ms = 5;
+    Some(Server::start(cfg).expect("server start"))
+}
+
+fn history_json(n_points: usize) -> String {
+    let data = Dataset::by_name("etth1").unwrap();
+    let vals = data.norm_slice(0, 12_000, n_points);
+    let nums: Vec<String> = vals.iter().map(|v| format!("{v}")).collect();
+    format!("[{}]", nums.join(","))
+}
+
+#[test]
+fn healthz_metrics_stats() {
+    let Some(server) = start_server() else { return };
+    let addr = server.addr().to_string();
+    let r = http_request(&addr, "GET", "/healthz", None).unwrap();
+    assert_eq!(r.status, 200);
+    assert!(r.body_str().contains("ok"));
+
+    let r = http_request(&addr, "GET", "/metrics", None).unwrap();
+    assert_eq!(r.status, 200);
+    assert!(r.body_str().contains("stride_requests_total"));
+
+    let r = http_request(&addr, "GET", "/stats", None).unwrap();
+    assert_eq!(r.status, 200);
+    let j = Json::parse(r.body_str()).unwrap();
+    assert!(j.get("requests").is_some());
+
+    let r = http_request(&addr, "GET", "/nope", None).unwrap();
+    assert_eq!(r.status, 404);
+}
+
+#[test]
+fn forecast_sd_and_baseline() {
+    let Some(server) = start_server() else { return };
+    let addr = server.addr().to_string();
+    let hist = history_json(96);
+
+    for mode in ["sd", "baseline", "draft"] {
+        let body = format!(r#"{{"history": {hist}, "horizon": 4, "mode": "{mode}"}}"#);
+        let r = http_request(&addr, "POST", "/forecast", Some(body.as_bytes())).unwrap();
+        assert_eq!(r.status, 200, "mode {mode}: {}", r.body_str());
+        let j = Json::parse(r.body_str()).unwrap();
+        assert_eq!(j.get("mode").unwrap().as_str(), Some(mode));
+        let forecast = j.get("forecast").unwrap().as_arr().unwrap();
+        assert_eq!(forecast.len(), 4 * 24, "mode {mode}");
+        assert!(j.get("latency_ms").unwrap().as_f64().unwrap() > 0.0);
+        if mode == "sd" {
+            assert!(j.get("alpha_hat").unwrap().as_f64().unwrap() > 0.0);
+            assert!(j.get("draft_calls").unwrap().as_usize().unwrap() > 0);
+        }
+    }
+}
+
+#[test]
+fn per_request_overrides() {
+    let Some(server) = start_server() else { return };
+    let addr = server.addr().to_string();
+    let hist = history_json(96);
+    let body = format!(r#"{{"history": {hist}, "horizon": 3, "gamma": 2, "sigma": 0.9}}"#);
+    let r = http_request(&addr, "POST", "/forecast", Some(body.as_bytes())).unwrap();
+    assert_eq!(r.status, 200, "{}", r.body_str());
+    let j = Json::parse(r.body_str()).unwrap();
+    assert_eq!(j.get("forecast").unwrap().as_arr().unwrap().len(), 3 * 24);
+}
+
+#[test]
+fn rejects_invalid_requests() {
+    let Some(server) = start_server() else { return };
+    let addr = server.addr().to_string();
+    // Bad JSON.
+    let r = http_request(&addr, "POST", "/forecast", Some(b"{nope")).unwrap();
+    assert_eq!(r.status, 400);
+    // Missing horizon.
+    let r = http_request(&addr, "POST", "/forecast", Some(br#"{"history":[1.0]}"#)).unwrap();
+    assert_eq!(r.status, 400);
+    // History not a multiple of the patch size (server-side validation).
+    let r = http_request(
+        &addr,
+        "POST",
+        "/forecast",
+        Some(br#"{"history":[1.0,2.0,3.0], "horizon": 2}"#),
+    )
+    .unwrap();
+    assert_eq!(r.status, 500, "{}", r.body_str());
+    assert!(r.body_str().contains("multiple of patch"));
+}
+
+#[test]
+fn concurrent_load_is_batched_and_correct() {
+    let Some(server) = start_server() else { return };
+    let addr = Arc::new(server.addr().to_string());
+    let hist = Arc::new(history_json(96));
+    let n_clients = 12;
+    let handles: Vec<_> = (0..n_clients)
+        .map(|_| {
+            let addr = Arc::clone(&addr);
+            let hist = Arc::clone(&hist);
+            std::thread::spawn(move || {
+                let body = format!(r#"{{"history": {hist}, "horizon": 4}}"#);
+                let r = http_request(&addr, "POST", "/forecast", Some(body.as_bytes())).unwrap();
+                assert_eq!(r.status, 200);
+                let j = Json::parse(r.body_str()).unwrap();
+                assert_eq!(j.get("forecast").unwrap().as_arr().unwrap().len(), 96);
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+    // Batching must have happened: fewer batches than jobs.
+    let m = http_request(&addr, "GET", "/metrics", None).unwrap();
+    let text = m.body_str().to_string();
+    let get = |k: &str| -> u64 {
+        text.lines()
+            .find(|l| l.starts_with(k))
+            .and_then(|l| l.split_whitespace().nth(1))
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(0)
+    };
+    assert_eq!(get("stride_requests_total"), n_clients as u64);
+    let batches = get("stride_batches");
+    assert!(batches >= 1 && batches <= n_clients as u64);
+    eprintln!("{} requests served in {} batches", n_clients, batches);
+}
+
+#[test]
+fn acceptance_monitor_populates() {
+    let Some(server) = start_server() else { return };
+    let addr = server.addr().to_string();
+    let hist = history_json(96);
+    for _ in 0..3 {
+        let body = format!(r#"{{"history": {hist}, "horizon": 4}}"#);
+        let _ = http_request(&addr, "POST", "/forecast", Some(body.as_bytes())).unwrap();
+    }
+    let r = http_request(&addr, "GET", "/stats", None).unwrap();
+    let j = Json::parse(r.body_str()).unwrap();
+    let alpha = j.get("alpha_bar_window").unwrap();
+    assert!(alpha.as_f64().is_some(), "monitor should have samples: {alpha:?}");
+}

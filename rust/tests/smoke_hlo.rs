@@ -1,0 +1,46 @@
+//! Earliest integration signal: the AOT-exported HLO compiles on the PJRT
+//! CPU client and reproduces JAX numerics on the golden window.
+//! Requires `make artifacts`. Skips (with a loud message) if absent.
+
+use std::path::Path;
+
+fn read_f32(path: &Path) -> Vec<f32> {
+    let bytes = std::fs::read(path).unwrap();
+    bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect()
+}
+
+#[test]
+fn golden_target_forward_matches_jax() {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("target_fwd_b1.hlo.txt").exists() {
+        eprintln!("SKIP: artifacts not built (run `make artifacts`)");
+        return;
+    }
+    let client = xla::PjRtClient::cpu().unwrap();
+    let proto =
+        xla::HloModuleProto::from_text_file(dir.join("target_fwd_b1.hlo.txt").to_str().unwrap())
+            .unwrap();
+    let exe = client.compile(&xla::XlaComputation::from_proto(&proto)).unwrap();
+
+    let input = read_f32(&dir.join("golden_input.bin"));
+    assert_eq!(input.len(), 32 * 24);
+    let lit = xla::Literal::vec1(&input).reshape(&[1, 32, 24]).unwrap();
+    let out = exe.execute::<xla::Literal>(&[lit]).unwrap()[0][0]
+        .to_literal_sync()
+        .unwrap()
+        .to_tuple1()
+        .unwrap();
+    let got = out.to_vec::<f32>().unwrap();
+    let want = read_f32(&dir.join("golden_target_means.bin"));
+    assert_eq!(got.len(), want.len());
+    let max_err = got
+        .iter()
+        .zip(&want)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+    eprintln!("golden forward max_err = {max_err:.3e}");
+    assert!(max_err < 1e-4, "max_err {max_err} too large");
+}

@@ -1,0 +1,157 @@
+//! Cross-layer integration: the same function computed three ways must
+//! agree — JAX (golden export), PJRT execution of the HLO artifact, and the
+//! native Rust forward over the dumped weights. Also validates the Pallas
+//! artifact flavor and the exported acceptance kernel against the Rust
+//! acceptance implementation.
+//!
+//! All tests skip loudly when artifacts are missing (`make artifacts`).
+
+use std::path::PathBuf;
+
+use stride::accept::AcceptancePolicy;
+use stride::models::{Backend, NativeBackend, XlaBackend};
+use stride::runtime::{Engine, Manifest};
+
+fn artifacts() -> Option<PathBuf> {
+    let dir = stride::artifacts_dir();
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("SKIP: run `make artifacts`");
+        None
+    }
+}
+
+fn read_f32(path: &std::path::Path) -> Vec<f32> {
+    std::fs::read(path)
+        .unwrap()
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+        .collect()
+}
+
+fn max_err(a: &[f32], b: &[f32]) -> f32 {
+    assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0.0, f32::max)
+}
+
+#[test]
+fn three_way_parity_target() {
+    let Some(dir) = artifacts() else { return };
+    let manifest = Manifest::load(&dir).unwrap();
+    let golden_in = read_f32(&dir.join("golden_input.bin"));
+    let golden_out = read_f32(&dir.join("golden_target_means.bin"));
+
+    // 1. JAX golden vs PJRT.
+    let mut engine = Engine::cpu().unwrap();
+    let xla = XlaBackend::load(&mut engine, &manifest, "target", "fused").unwrap();
+    let got_xla = xla.forward(&golden_in, manifest.n_ctx).unwrap();
+    let e1 = max_err(&got_xla, &golden_out);
+    eprintln!("target XLA vs JAX golden: max_err {e1:.2e}");
+    assert!(e1 < 1e-4);
+
+    // 2. Native Rust vs JAX golden.
+    let native = NativeBackend::from_entry(&manifest.target).unwrap();
+    let got_native = native.forward(&golden_in, manifest.n_ctx).unwrap();
+    let e2 = max_err(&got_native, &golden_out);
+    eprintln!("target native vs JAX golden: max_err {e2:.2e}");
+    assert!(e2 < 5e-4, "native forward drifted: {e2}");
+}
+
+#[test]
+fn three_way_parity_draft() {
+    let Some(dir) = artifacts() else { return };
+    let manifest = Manifest::load(&dir).unwrap();
+    let golden_in = read_f32(&dir.join("golden_input.bin"));
+    let golden_out = read_f32(&dir.join("golden_draft_means.bin"));
+
+    let mut engine = Engine::cpu().unwrap();
+    let xla = XlaBackend::load(&mut engine, &manifest, "draft", "fused").unwrap();
+    assert!(max_err(&xla.forward(&golden_in, manifest.n_ctx).unwrap(), &golden_out) < 1e-4);
+
+    let native = NativeBackend::from_entry(&manifest.draft).unwrap();
+    assert!(max_err(&native.forward(&golden_in, manifest.n_ctx).unwrap(), &golden_out) < 5e-4);
+}
+
+#[test]
+fn pallas_artifact_matches_fused() {
+    // The L1 kernel lowered through interpret-mode Pallas must compute the
+    // same function as the fused XLA attention.
+    let Some(dir) = artifacts() else { return };
+    let manifest = Manifest::load(&dir).unwrap();
+    let mut engine = Engine::cpu().unwrap();
+    let fused = XlaBackend::load(&mut engine, &manifest, "target", "fused").unwrap();
+    let pallas = XlaBackend::load(&mut engine, &manifest, "target", "pallas").unwrap();
+    let input = read_f32(&dir.join("golden_input.bin"));
+    let a = fused.forward(&input, manifest.n_ctx).unwrap();
+    let b = pallas.forward(&input, manifest.n_ctx).unwrap();
+    let e = max_err(&a, &b);
+    eprintln!("pallas vs fused: max_err {e:.2e}");
+    assert!(e < 1e-3, "pallas kernel drifted from fused attention: {e}");
+}
+
+#[test]
+fn batch_variant_consistency() {
+    // b=8/b=32 artifacts must agree with b=1 on shared rows.
+    let Some(dir) = artifacts() else { return };
+    let manifest = Manifest::load(&dir).unwrap();
+    let mut engine = Engine::cpu().unwrap();
+    let xla = XlaBackend::load(&mut engine, &manifest, "draft", "fused").unwrap();
+    let p = manifest.patch;
+    let n = manifest.n_ctx;
+    let one: Vec<f32> = (0..n * p).map(|i| (i as f32 * 0.013).sin()).collect();
+    let single = xla.forward(&one, n).unwrap();
+    // Duplicate the row 5 times; batched result rows must equal the single.
+    let mut batch = Vec::new();
+    for _ in 0..5 {
+        batch.extend_from_slice(&one);
+    }
+    let out = xla.forward_batch(&batch, 5, n).unwrap();
+    for r in 0..5 {
+        let row = &out[r * n * p..(r + 1) * n * p];
+        let e = max_err(row, &single);
+        assert!(e < 1e-4, "batch row {r} differs from single: {e}");
+    }
+}
+
+#[test]
+fn accept_kernel_artifact_matches_rust() {
+    // The exported Pallas acceptance kernel vs the native Rust hot-path
+    // implementation of Eq. 7/8.
+    let Some(dir) = artifacts() else { return };
+    let x = read_f32(&dir.join("golden_accept_x.bin"));
+    let mu_p = read_f32(&dir.join("golden_accept_mu_p.bin"));
+    let mu_q = read_f32(&dir.join("golden_accept_mu_q.bin"));
+    let want_alpha = read_f32(&dir.join("golden_accept_alpha.bin"));
+    let (b, d) = (32usize, 24usize);
+    let policy = AcceptancePolicy::new(0.5, 1.0);
+    for i in 0..b {
+        let s = i * d..(i + 1) * d;
+        let a = policy.alpha(&x[s.clone()], &mu_p[s.clone()], &mu_q[s.clone()]) as f32;
+        assert!(
+            (a - want_alpha[i]).abs() < 1e-4,
+            "row {i}: rust alpha {a} vs pallas-golden {}",
+            want_alpha[i]
+        );
+    }
+}
+
+#[test]
+fn sd_decode_runs_end_to_end_on_xla() {
+    // Full SD decode over the production backend on a real window.
+    let Some(dir) = artifacts() else { return };
+    let manifest = Manifest::load(&dir).unwrap();
+    let mut engine = Engine::cpu().unwrap();
+    let target = XlaBackend::load(&mut engine, &manifest, "target", "fused").unwrap();
+    let draft = XlaBackend::load(&mut engine, &manifest, "draft", "fused").unwrap();
+
+    let data = stride::data::Dataset::by_name("etth1").unwrap();
+    let ws = stride::data::eval_windows(&data, manifest.patch, 4, 4, 96, 3);
+    let cfg = stride::specdec::SpecConfig::default();
+    for w in &ws {
+        let out = stride::specdec::sd_generate(&target, &draft, &w.history, 4, 4, &cfg).unwrap();
+        assert_eq!(out.patches.len(), 4 * manifest.patch);
+        assert!(out.patches.iter().all(|v| v.is_finite()));
+        assert!(out.stats.alpha_hat() > 0.0, "some acceptance expected");
+    }
+}
