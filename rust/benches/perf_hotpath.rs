@@ -1,10 +1,18 @@
 //! L3 hot-path microbenchmarks (the §Perf profile targets): acceptance
 //! math, Gaussian sampling, literal marshalling (PJRT boundary), JSON
-//! parse/serialize of the wire protocol, and end-to-end forward costs per
-//! backend. These are the numbers the performance pass iterates on.
+//! parse/serialize of the wire protocol, end-to-end forward costs per
+//! backend, and the KV-cache sweep (cached vs uncached decode cost vs
+//! context length — the fig-style table behind the decode-session PR).
+//! These are the numbers the performance pass iterates on.
+
+use std::time::Duration;
 
 use stride::accept::AcceptancePolicy;
-use stride::util::microbench::{bencher_from_env, Table};
+use stride::forecast::ar_decode_with;
+use stride::models::{Backend, CacheMode, DecodeSession, NativeBackend};
+use stride::nn::{ModelDims, NativeModel};
+use stride::specdec::{sd_generate, SpecConfig};
+use stride::util::microbench::{bencher_from_env, Bencher, Table};
 use stride::util::rng::Rng;
 
 fn main() -> anyhow::Result<()> {
@@ -66,6 +74,100 @@ fn main() -> anyhow::Result<()> {
         std::hint::black_box(resp.to_json().to_string());
     });
     table.row(fmt(&r, "1 resp"));
+
+    // --- KV-cache sweep: cached vs uncached decode over context length.
+    // Runs on seeded random native models so it needs no artifacts; the
+    // acceptance bar for the decode-session PR is cached strictly faster
+    // than uncached from n_ctx >= 256.
+    {
+        let dims =
+            ModelDims { patch: 8, n_ctx: 512, d_model: 32, n_layers: 2, n_heads: 4, d_ff: 64 };
+        let draft_dims =
+            ModelDims { patch: 8, n_ctx: 512, d_model: 16, n_layers: 1, n_heads: 2, d_ff: 32 };
+        let target = NativeBackend::new(NativeModel::random("t", dims, 1));
+        let draft = NativeBackend::new(NativeModel::random("d", draft_dims, 2));
+        let mut rng = Rng::new(3);
+        let hist: Vec<f32> = (0..dims.n_ctx * dims.patch).map(|_| rng.normal() as f32).collect();
+
+        // Decode wall-clock dominates the iteration, so a light bencher
+        // keeps the sweep tractable; STRIDE_BENCH_QUICK trims it further.
+        let quick = std::env::var("STRIDE_BENCH_QUICK").as_deref() == Ok("1");
+        let sweep_b = Bencher {
+            warmup: Duration::from_millis(if quick { 10 } else { 50 }),
+            measure: Duration::from_millis(if quick { 100 } else { 500 }),
+            min_iters: 3,
+            max_iters: if quick { 10 } else { 100 },
+        };
+        let horizon = 16;
+        let mut sweep = Table::new(
+            "Perf: KV-cache sweep (AR + SD decode, horizon 16)",
+            &["n_ctx", "mode", "uncached", "cached", "speedup"],
+        );
+        for n_hist in [64usize, 256, 480] {
+            // Greedy AR baseline (one sequential read per patch).
+            let r_off = sweep_b.run(&format!("ar_off_n{n_hist}"), || {
+                std::hint::black_box(
+                    ar_decode_with(&target, &hist, n_hist, horizon, CacheMode::Off).unwrap(),
+                );
+            });
+            let r_on = sweep_b.run(&format!("ar_on_n{n_hist}"), || {
+                std::hint::black_box(
+                    ar_decode_with(&target, &hist, n_hist, horizon, CacheMode::On).unwrap(),
+                );
+            });
+            sweep.row(vec![
+                format!("{n_hist}"),
+                "ar".into(),
+                format!("{:.2}ms", r_off.mean_ms()),
+                format!("{:.2}ms", r_on.mean_ms()),
+                format!("{:.2}x", r_off.mean_ns / r_on.mean_ns),
+            ]);
+
+            // Speculative decode, gamma 3.
+            let mut spec = SpecConfig::default();
+            spec.cache = CacheMode::Off;
+            let s_off = sweep_b.run(&format!("sd_off_n{n_hist}"), || {
+                std::hint::black_box(
+                    sd_generate(&target, &draft, &hist, n_hist, horizon, &spec).unwrap(),
+                );
+            });
+            spec.cache = CacheMode::On;
+            let s_on = sweep_b.run(&format!("sd_on_n{n_hist}"), || {
+                std::hint::black_box(
+                    sd_generate(&target, &draft, &hist, n_hist, horizon, &spec).unwrap(),
+                );
+            });
+            sweep.row(vec![
+                format!("{n_hist}"),
+                "sd_g3".into(),
+                format!("{:.2}ms", s_off.mean_ms()),
+                format!("{:.2}ms", s_on.mean_ms()),
+                format!("{:.2}x", s_off.mean_ns / s_on.mean_ns),
+            ]);
+        }
+        // Single-step anatomy: full re-forward vs one incremental row.
+        for n in [256usize, 512] {
+            let r_full = sweep_b.run(&format!("fwd_full_n{n}"), || {
+                std::hint::black_box(target.forward(&hist, n).unwrap());
+            });
+            let mut sess = target.begin_cached(&hist, n - 1).unwrap();
+            let step = hist[(n - 1) * dims.patch..n * dims.patch].to_vec();
+            let r_inc = sweep_b.run(&format!("fwd_inc_n{n}"), || {
+                std::hint::black_box(sess.extend(&step, 1).unwrap());
+                sess.rollback(1).unwrap();
+            });
+            sweep.row(vec![
+                format!("{n}"),
+                "1 fwd".into(),
+                format!("{:.3}ms", r_full.mean_ms()),
+                format!("{:.3}ms", r_inc.mean_ms()),
+                format!("{:.2}x", r_full.mean_ns / r_inc.mean_ns),
+            ]);
+        }
+        sweep.print();
+        sweep.write_csv("results/perf_hotpath_cached.csv")?;
+        println!("wrote results/perf_hotpath_cached.csv");
+    }
 
     // Backend forwards (the dominant cost; includes the PJRT literal
     // marshalling boundary for the XLA rows).

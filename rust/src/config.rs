@@ -9,6 +9,7 @@ use std::path::PathBuf;
 use anyhow::{bail, Context, Result};
 
 use crate::accept::AcceptancePolicy;
+use crate::models::CacheMode;
 use crate::specdec::{Emission, SpecConfig, Variant};
 use crate::util::json::Json;
 
@@ -90,6 +91,10 @@ pub struct ServeConfig {
     /// Disable speculative decoding entirely (target-only AR) — the
     /// baseline mode for A/B latency comparisons.
     pub baseline: bool,
+    /// KV-cached decode sessions (default on). `false` forces the
+    /// stateless re-forward cost model — outputs identical, wall-clock
+    /// isn't; the A/B switch behind the cached-vs-uncached bench columns.
+    pub cache: bool,
     pub artifacts: PathBuf,
     pub seed: u64,
 }
@@ -110,6 +115,7 @@ impl Default for ServeConfig {
             sampled: false,
             adaptive_gamma: false,
             baseline: false,
+            cache: true,
             artifacts: crate::artifacts_dir(),
             seed: 0xC0FFEE,
         }
@@ -135,6 +141,7 @@ impl ServeConfig {
                 "sampled" => self.sampled = v.as_bool().context("sampled")?,
                 "adaptive_gamma" => self.adaptive_gamma = v.as_bool().context("adaptive_gamma")?,
                 "baseline" => self.baseline = v.as_bool().context("baseline")?,
+                "cache" => self.cache = v.as_bool().context("cache")?,
                 "artifacts" => self.artifacts = PathBuf::from(v.as_str().context("artifacts")?),
                 "seed" => self.seed = v.as_usize().context("seed")? as u64,
                 other => bail!("unknown config key: {other}"),
@@ -189,6 +196,13 @@ impl ServeConfig {
         if cli.flag("baseline") {
             self.baseline = true;
         }
+        // `--no-cache` switches to the stateless cost model; `--cache`
+        // re-enables it (later flag wins when both are given via file+CLI).
+        if cli.flag("no-cache") {
+            self.cache = false;
+        } else if cli.flag("cache") {
+            self.cache = true;
+        }
         if let Some(v) = cli.get("artifacts") {
             self.artifacts = PathBuf::from(v);
         }
@@ -231,6 +245,7 @@ impl ServeConfig {
             seed: self.seed,
             max_residual_draws: 10_000,
             emission: if self.sampled { Emission::Sampled } else { Emission::Mean },
+            cache: if self.cache { CacheMode::On } else { CacheMode::Off },
         }
     }
 }
@@ -286,5 +301,21 @@ mod tests {
         assert_eq!(sc.gamma, 4);
         assert_eq!(sc.emission, Emission::Mean);
         assert!((sc.policy.sigma - 0.6).abs() < 1e-12);
+        assert_eq!(sc.cache, CacheMode::On);
+    }
+
+    #[test]
+    fn cache_toggle_plumbing() {
+        let mut cfg = ServeConfig::default();
+        assert!(cfg.cache);
+        cfg.apply_json(&Json::parse(r#"{"cache": false}"#).unwrap()).unwrap();
+        assert!(!cfg.cache);
+        assert_eq!(cfg.spec_config().cache, CacheMode::Off);
+        let cli = Cli::parse(args("--cache")).unwrap();
+        cfg.apply_cli(&cli).unwrap();
+        assert!(cfg.cache);
+        let cli = Cli::parse(args("--no-cache")).unwrap();
+        cfg.apply_cli(&cli).unwrap();
+        assert!(!cfg.cache);
     }
 }

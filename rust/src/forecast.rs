@@ -1,41 +1,56 @@
 //! Forecast decoding modes and accuracy evaluation — the paper's baselines
 //! (§4.1.3): (i) target-only autoregression, (ii) draft-only decoding,
 //! (iii) speculative decoding, plus MSE/MAE evaluation over eval windows.
+//!
+//! All AR decoders drive [`crate::models::DecodeSession`]s: with the KV
+//! cache on (the default), a step costs one incremental forward instead of
+//! a full-context re-forward; `ar_decode_with` exposes the toggle so the
+//! benches can report cached-vs-uncached baselines.
 
 use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
 use crate::data::Window;
-use crate::models::Backend;
+use crate::models::{begin_batch_session, begin_session, Backend, CacheMode};
 use crate::specdec::{sd_generate, DecodeStats, SpecConfig};
 use crate::util::rng::Rng;
 use crate::util::tensor::mse_mae;
 
-/// Plain autoregressive decode with a single model: one forward per emitted
-/// patch, greedy (mean) emission — the paper's target baseline protocol.
+/// Plain autoregressive decode with a single model: one sequential model
+/// read per emitted patch, greedy (mean) emission — the paper's target
+/// baseline protocol. KV-cached when the backend supports it.
 pub fn ar_decode(
     model: &dyn Backend,
     history: &[f32],
     n_hist: usize,
     horizon: usize,
 ) -> Result<(Vec<f32>, Duration, usize)> {
+    ar_decode_with(model, history, n_hist, horizon, CacheMode::On)
+}
+
+/// [`ar_decode`] with an explicit cache toggle (the A/B hook for the
+/// `perf_hotpath` cached sweep). Returned `calls` counts sequential decode
+/// steps (one model read per emitted patch), identical across modes.
+pub fn ar_decode_with(
+    model: &dyn Backend,
+    history: &[f32],
+    n_hist: usize,
+    horizon: usize,
+    cache: CacheMode,
+) -> Result<(Vec<f32>, Duration, usize)> {
     let p = model.patch();
-    let mut ctx: Vec<f32> = history[..n_hist * p].to_vec();
-    let mut out = Vec::with_capacity(horizon * p);
     let t0 = Instant::now();
+    let mut sess = begin_session(model, cache, history, n_hist)?;
+    let mut out = Vec::with_capacity(horizon * p);
     let mut calls = 0usize;
     for _ in 0..horizon {
-        let n = (ctx.len() / p).min(model.max_ctx());
-        if ctx.len() / p > model.max_ctx() {
-            let drop = ctx.len() / p - model.max_ctx();
-            ctx.drain(..drop * p);
-        }
-        let means = model.forward(&ctx, n)?;
+        let mu = sess.tip_mean()?;
         calls += 1;
-        let mu = &means[(n - 1) * p..n * p];
-        out.extend_from_slice(mu);
-        ctx.extend_from_slice(mu);
+        out.extend_from_slice(&mu);
+        // Sessions slide their window internally at max_ctx, matching the
+        // old drain-from-front rule.
+        sess.append(&mu, 1)?;
     }
     Ok((out, t0.elapsed(), calls))
 }
@@ -52,28 +67,24 @@ pub fn ar_decode_stochastic(
 ) -> Result<(Vec<f32>, Duration)> {
     let p = model.patch();
     let mut rng = Rng::new(seed);
-    let mut ctx: Vec<f32> = history[..n_hist * p].to_vec();
-    let mut out = Vec::with_capacity(horizon * p);
     let t0 = Instant::now();
+    let mut sess = begin_session(model, CacheMode::On, history, n_hist)?;
+    let mut out = Vec::with_capacity(horizon * p);
     for _ in 0..horizon {
-        if ctx.len() / p > model.max_ctx() {
-            let drop = ctx.len() / p - model.max_ctx();
-            ctx.drain(..drop * p);
-        }
-        let n = ctx.len() / p;
-        let means = model.forward(&ctx, n)?;
-        let mu = &means[(n - 1) * p..n * p];
+        let mu = sess.tip_mean()?;
         let mut x = vec![0.0f32; p];
-        rng.fill_normal_around(mu, sigma as f32, &mut x);
+        rng.fill_normal_around(&mu, sigma as f32, &mut x);
         out.extend_from_slice(&x);
-        ctx.extend_from_slice(&x);
+        sess.append(&x, 1)?;
     }
     Ok((out, t0.elapsed()))
 }
 
-/// Batched greedy AR decode: all sequences advance one patch per round via
-/// one batched forward (the baseline for the paper's batch>1 rows).
-/// Sequences may differ in history length; horizons must match.
+/// Batched greedy AR decode: all sequences advance one patch per round
+/// over a [`crate::models::BatchDecodeSession`] (one batched read per
+/// step; per-sequence KV caches when the backend supports them). The
+/// baseline for the paper's batch>1 rows. Sequences may differ in history
+/// length; horizons must match.
 pub fn ar_decode_batch(
     model: &dyn Backend,
     tasks: &[(&[f32], usize, usize)],
@@ -83,28 +94,17 @@ pub fn ar_decode_batch(
     anyhow::ensure!(!tasks.is_empty());
     let horizon = tasks[0].2;
     anyhow::ensure!(tasks.iter().all(|t| t.2 == horizon), "batched AR needs equal horizons");
-    let mut ctxs: Vec<Vec<f32>> = tasks.iter().map(|(h, n, _)| h[..n * p].to_vec()).collect();
-    let mut outs: Vec<Vec<f32>> = vec![Vec::with_capacity(horizon * p); tasks.len()];
     let t0 = Instant::now();
+    let sess_tasks: Vec<(&[f32], usize)> = tasks.iter().map(|(h, n, _)| (*h, *n)).collect();
+    let mut bs = begin_batch_session(model, CacheMode::On, &sess_tasks)?;
+    let idx: Vec<usize> = (0..tasks.len()).collect();
+    let mut outs: Vec<Vec<f32>> = vec![Vec::with_capacity(horizon * p); tasks.len()];
     for _ in 0..horizon {
-        for ctx in ctxs.iter_mut() {
-            if ctx.len() / p > model.max_ctx() {
-                let drop = ctx.len() / p - model.max_ctx();
-                ctx.drain(..drop * p);
-            }
-        }
-        let n_max = ctxs.iter().map(|c| c.len() / p).max().unwrap();
-        let mut buf = vec![0.0f32; tasks.len() * n_max * p];
-        for (i, ctx) in ctxs.iter().enumerate() {
-            buf[i * n_max * p..i * n_max * p + ctx.len()].copy_from_slice(ctx);
-        }
-        let means = model.forward_batch(&buf, tasks.len(), n_max)?;
-        for (i, ctx) in ctxs.iter_mut().enumerate() {
-            let n_i = ctx.len() / p;
-            let off = i * n_max * p + (n_i - 1) * p;
-            let mu = &means[off..off + p];
+        let mus = bs.tip_means(&idx)?;
+        for (ai, &i) in idx.iter().enumerate() {
+            let mu = &mus[ai * p..(ai + 1) * p];
             outs[i].extend_from_slice(mu);
-            ctx.extend_from_slice(mu);
+            bs.append(i, mu, 1)?;
         }
     }
     Ok((outs, t0.elapsed()))
@@ -218,6 +218,23 @@ mod tests {
         assert!(sd.sd.rounds > 0);
         assert!(sd.sd.alpha_hat() > 0.0);
         assert!(sd.throughput_patches_per_s() > 0.0);
+    }
+
+    #[test]
+    fn ar_decode_cache_toggle_identical() {
+        // Cached AR must emit the same forecast as the uncached baseline,
+        // including once the window starts sliding.
+        use crate::models::NativeBackend;
+        use crate::nn::model::tiny_model;
+        let m = NativeBackend::new(tiny_model(17));
+        let hist: Vec<f32> = (0..3 * 4).map(|i| (i as f32 * 0.21).sin()).collect();
+        let (on, _, calls_on) = ar_decode_with(&m, &hist, 3, 12, CacheMode::On).unwrap();
+        let (off, _, calls_off) = ar_decode_with(&m, &hist, 3, 12, CacheMode::Off).unwrap();
+        assert_eq!(calls_on, calls_off);
+        assert_eq!(on.len(), off.len());
+        for (a, b) in on.iter().zip(&off) {
+            assert!((a - b).abs() < 1e-5, "cached {a} vs uncached {b}");
+        }
     }
 
     #[test]

@@ -12,11 +12,30 @@
 //!   dynamic batcher and router, theory-driven γ selection, and metrics.
 //!
 //! Quick tour:
-//! * [`specdec`] — Algorithm 1/2 over a [`models::Backend`].
+//! * [`specdec`] — Algorithm 1/2 over a [`models::Backend`], driven
+//!   through KV-cached decode sessions.
+//! * [`models`] — backends + the decode-session layer:
+//!   [`models::begin_session`] hands out a [`models::DecodeSession`]
+//!   (`extend`/`rollback`/`evict_to`) that is KV-cached on the native
+//!   backend ([`models::CacheMode::On`], the default) or a stateless
+//!   re-forward wrapper (`Off`, the uncached A/B baseline and the only
+//!   mode for fixed-shape PJRT executables). Rollback semantics: a
+//!   rejected speculation truncates the session (and its K/V buffers) —
+//!   the surviving prefix stays valid because attention is causal; a
+//!   window slide past `max_ctx` instead re-prefills the kept suffix
+//!   (learned absolute positions shift). Cache on/off is observationally
+//!   identical — same means, same acceptance decisions, same RNG stream
+//!   (`tests/cache_equivalence.rs`, `tests/statistical.rs`); only
+//!   wall-clock differs, reported by the `perf_hotpath` bench's
+//!   cached-vs-uncached sweep (`results/perf_hotpath_cached.csv`).
+//!   Toggle: `ServeConfig::cache` / `--no-cache` / per-request
+//!   `"cache": false` / `SpecConfig::cache`.
 //! * [`theory`] — Eqs. 2–6 closed forms, γ* rule, dependence bounds.
 //! * [`accept`] — log-space acceptance (Eq. 7) + the α̂ estimator (§3.5).
 //! * [`runtime`] — HLO-text → PJRT executable cache.
-//! * [`server`] — HTTP front end with dynamic batching.
+//! * [`server`] — HTTP front end with dynamic batching; SD jobs are
+//!   grouped by (γ, σ, cache) and each group's sequences keep their
+//!   decode sessions across all speculative rounds.
 
 pub mod accept;
 pub mod config;

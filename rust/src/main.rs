@@ -27,8 +27,9 @@ commands:
   serve   start the HTTP forecasting service
           --bind 127.0.0.1:8080 --backend xla|native --kernel fused|pallas
           --gamma 3 --sigma 0.5 --bias 1.0 --max-batch 8 --max-wait-ms 2
-          --adaptive-gamma --lossless --greedy --baseline
-  eval    offline eval: --dataset etth1 --horizon 4 --windows 28 [--gamma/--sigma...]
+          --adaptive-gamma --lossless --greedy --baseline --no-cache
+  eval    offline eval: --dataset etth1 --horizon 4 --windows 28
+          [--gamma/--sigma/--no-cache...]
   plan    acceptance estimation + gamma scan: --dataset etth1 --windows 64
   info    print the artifacts manifest summary
 ";
@@ -139,6 +140,9 @@ fn cmd_eval(cli: &Cli) -> Result<()> {
     let mut spec = SpecConfig::default();
     spec.gamma = gamma;
     spec.policy = AcceptancePolicy::new(sigma, bias);
+    if cli.flag("no-cache") {
+        spec.cache = stride::models::CacheMode::Off;
+    }
     let sd = eval_sd(target.as_ref(), draft.as_ref(), &windows, manifest.patch, &spec)?;
     let speedup = base.wall.as_secs_f64() / sd.wall.as_secs_f64();
     println!(

@@ -5,13 +5,25 @@
 //! * [`NativeBackend`] — pure-Rust forward (parity tests, PJRT-free benches).
 //! * [`AnalyticBackend`] — closed-form AR(1) patch heads for the statistical
 //!   exactness tests of the lossless variant (no NN at all).
+//!
+//! Decode loops do not call `forward` directly anymore: they run over
+//! [`DecodeSession`]s obtained from [`begin_session`] (see the `session`
+//! module and `models/README.md`). With [`CacheMode::On`] the native
+//! backend serves KV-cached incremental sessions; everything else (and
+//! [`CacheMode::Off`]) gets the stateless wrapper with identical
+//! observable behavior.
 
 mod analytic;
 mod native;
+mod session;
 mod xla_backend;
 
 pub use analytic::AnalyticBackend;
-pub use native::NativeBackend;
+pub use native::{NativeBackend, NativeBatchSession, NativeSession};
+pub use session::{
+    begin_batch_session, begin_session, BatchDecodeSession, CacheMode, DecodeSession,
+    StatelessBatchSession, StatelessSession,
+};
 pub use xla_backend::XlaBackend;
 
 use anyhow::Result;
@@ -47,6 +59,13 @@ pub trait Backend {
     }
     /// Dense-matmul FLOPs of one forward at length `n` (for ĉ / OpsFactor).
     fn flops(&self, n: usize) -> f64;
+    /// Downcast hook for session creation: backends with a KV-cached
+    /// incremental decode path return themselves here so
+    /// [`begin_session`] can hand out a cached session; the default
+    /// (`None`) routes to the always-correct stateless wrapper.
+    fn as_native(&self) -> Option<&NativeBackend> {
+        None
+    }
 }
 
 /// Measured draft/target cost ratios (paper's c and ĉ).

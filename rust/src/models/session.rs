@@ -1,0 +1,512 @@
+//! Decode sessions: incremental decoding over a [`Backend`].
+//!
+//! A session owns one sequence's decode state (context tokens plus, for
+//! KV-cached implementations, per-layer K/V buffers) and exposes the four
+//! operations a speculative round needs:
+//!
+//! * [`DecodeSession::tip_mean`] — the model's prediction of the next patch
+//!   given the current context (μ at the tip);
+//! * [`DecodeSession::extend`] — append `k` patches and get the `k+1`
+//!   prefix-conditional means covering them plus one beyond (exactly what
+//!   target validation of γ proposals needs: μ_p(0..γ) in one call);
+//! * [`DecodeSession::rollback`] — forget the last `k` patches (rejected
+//!   speculation) without touching the surviving prefix;
+//! * [`DecodeSession::append`] — append without requiring means (emitted
+//!   patches; stateless implementations defer the forward entirely).
+//!
+//! Two implementations exist: the stateless wrappers in this file (cache
+//! off — every read re-forwards the full context, the paper's baseline cost
+//! model, and the only option for fixed-shape PJRT executables), and the
+//! KV-cached `NativeSession`/`NativeBatchSession` in `models::native`
+//! (cache on — O(k·n·d) per read instead of O(n²·d)).
+//!
+//! Cache on/off must be *observationally identical*: same means (to float
+//! equality on the native backend), same acceptance decisions, same RNG
+//! stream. `rust/tests/cache_equivalence.rs` and the statistical suite pin
+//! this.
+
+use anyhow::Result;
+
+use super::Backend;
+
+/// Whether decode loops run over KV-cached sessions (`On`) or re-forward
+/// the full context on every read (`Off` — the uncached baseline used for
+/// A/B speedup measurement and for backends without a cached path).
+///
+/// `On` is a *request*, not a guarantee: backends without an incremental
+/// implementation (XLA fixed-shape executables, analytic heads) silently
+/// fall back to the stateless session, which is always correct.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum CacheMode {
+    #[default]
+    On,
+    Off,
+}
+
+/// One sequence's incremental decode state over a backend.
+///
+/// Position/means convention: a session of length `n` holds patches
+/// `0..n`; the model output at position `i` is the predicted mean of patch
+/// `i+1`. `extend(patches, k)` therefore returns `(k+1)·patch` floats: the
+/// outputs at positions `n-1 ..= n+k-1`, i.e. the mean of every appended
+/// patch's position *and* the one beyond (the bonus patch of a fully
+/// accepted speculative round).
+pub trait DecodeSession {
+    fn patch(&self) -> usize;
+    /// Patches currently in the session context.
+    fn len(&self) -> usize;
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+    /// The backend's context capacity (window size for eviction).
+    fn max_ctx(&self) -> usize;
+    /// The raw context tokens (flat `[len, patch]`) — introspection for
+    /// tests and for cross-session consistency checks.
+    fn context(&self) -> &[f32];
+    /// Predicted mean of the next patch given the current context.
+    /// Stateless sessions may run a full forward here if stale.
+    fn tip_mean(&mut self) -> Result<Vec<f32>>;
+    /// Append `k` patches (flat `[k, patch]`); returns the `(k+1)·patch`
+    /// means at positions `len-1 ..= len+k-1` (see trait docs). Slides the
+    /// window first if the result would exceed `max_ctx`.
+    fn extend(&mut self, patches: &[f32], k: usize) -> Result<Vec<f32>>;
+    /// Append `k` patches without requiring means. Cached sessions compute
+    /// incrementally anyway (cheap); stateless sessions just buffer and
+    /// defer the forward to the next read.
+    fn append(&mut self, patches: &[f32], k: usize) -> Result<()>;
+    /// Forget the last `k` patches (rejected speculation). The surviving
+    /// prefix — including any cached K/V — stays valid because attention
+    /// is causal. Must leave at least one patch.
+    fn rollback(&mut self, k: usize) -> Result<()>;
+    /// Slide the window from the front so exactly `keep` patches remain —
+    /// the stateless sliding-window rule. Cached sessions re-prefill the
+    /// kept suffix (absolute positions shift, invalidating cached K/V).
+    fn evict_to(&mut self, keep: usize) -> Result<()>;
+    /// Sequential forward passes run so far (perf accounting).
+    fn forwards(&self) -> usize;
+}
+
+/// Lockstep decode state for `b` independent sequences. Mirrors
+/// [`DecodeSession`], but reads are batched over an explicit index set so
+/// a continuous batcher can advance any subset of live sequences per
+/// round, and writes (append/rollback/evict) are per-sequence because
+/// acceptance lengths diverge.
+pub trait BatchDecodeSession {
+    fn batch(&self) -> usize;
+    fn patch(&self) -> usize;
+    fn len(&self, i: usize) -> usize;
+    fn max_ctx(&self) -> usize;
+    /// Tip means for the sequences in `idx` (flat `[idx.len(), patch]`).
+    fn tip_means(&mut self, idx: &[usize]) -> Result<Vec<f32>>;
+    /// Append `k` patches to each sequence in `idx` (flat
+    /// `[idx.len(), k, patch]`); returns flat `[idx.len(), k+1, patch]`
+    /// means with the same per-sequence convention as
+    /// [`DecodeSession::extend`].
+    fn extend(&mut self, idx: &[usize], patches: &[f32], k: usize) -> Result<Vec<f32>>;
+    fn append(&mut self, i: usize, patches: &[f32], k: usize) -> Result<()>;
+    fn rollback(&mut self, i: usize, k: usize) -> Result<()>;
+    fn evict_to(&mut self, i: usize, keep: usize) -> Result<()>;
+    fn forwards(&self) -> usize;
+}
+
+/// Start a session on `backend`: the KV-cached implementation when
+/// `cache` is [`CacheMode::On`] and the backend has one, else the
+/// stateless wrapper. `history` is flat `[n_hist, patch]`, `n_hist >= 1`.
+pub fn begin_session<'a>(
+    backend: &'a dyn Backend,
+    cache: CacheMode,
+    history: &[f32],
+    n_hist: usize,
+) -> Result<Box<dyn DecodeSession + 'a>> {
+    if cache == CacheMode::On {
+        if let Some(nb) = backend.as_native() {
+            return Ok(Box::new(nb.begin_cached(history, n_hist)?));
+        }
+    }
+    Ok(Box::new(StatelessSession::new(backend, history, n_hist)?))
+}
+
+/// Batched counterpart of [`begin_session`]: one session per
+/// `(history, n_hist)` task, advanced in lockstep.
+pub fn begin_batch_session<'a>(
+    backend: &'a dyn Backend,
+    cache: CacheMode,
+    tasks: &[(&[f32], usize)],
+) -> Result<Box<dyn BatchDecodeSession + 'a>> {
+    if cache == CacheMode::On {
+        if let Some(nb) = backend.as_native() {
+            return Ok(Box::new(nb.begin_cached_batch(tasks)?));
+        }
+    }
+    Ok(Box::new(StatelessBatchSession::new(backend, tasks)?))
+}
+
+// ---------------------------------------------------------------------------
+// Stateless (cache-off) sessions.
+// ---------------------------------------------------------------------------
+
+/// Cache-off session: context is a token buffer; every stale read is one
+/// full `Backend::forward` over it. Means from the last forward are kept
+/// and remain valid across `rollback` (causality) but not across
+/// `evict_to` (the window moved under every position).
+pub struct StatelessSession<'a> {
+    backend: &'a dyn Backend,
+    tokens: Vec<f32>,
+    /// Outputs of the last forward, rows `0..valid`.
+    means: Vec<f32>,
+    valid: usize,
+    forwards: usize,
+}
+
+impl<'a> StatelessSession<'a> {
+    pub fn new(backend: &'a dyn Backend, history: &[f32], n_hist: usize) -> Result<Self> {
+        let p = backend.patch();
+        anyhow::ensure!(n_hist >= 1, "session needs at least one history patch");
+        anyhow::ensure!(history.len() >= n_hist * p, "history too short");
+        // Over-long histories keep their trailing window — the same silent
+        // clamp every decode loop applied before sessions existed.
+        let keep = n_hist.min(backend.max_ctx());
+        Ok(StatelessSession {
+            backend,
+            tokens: history[(n_hist - keep) * p..n_hist * p].to_vec(),
+            means: Vec::new(),
+            valid: 0,
+            forwards: 0,
+        })
+    }
+
+    fn refresh(&mut self) -> Result<()> {
+        let n = self.len();
+        if self.valid < n {
+            self.means = self.backend.forward(&self.tokens, n)?;
+            self.valid = n;
+            self.forwards += 1;
+        }
+        Ok(())
+    }
+
+    /// Slide the window if appending `k` patches would exceed max_ctx.
+    fn room_for(&mut self, k: usize) -> Result<()> {
+        let cap = self.max_ctx();
+        if self.len() + k > cap {
+            anyhow::ensure!(k < cap, "append of {k} patches cannot fit in max_ctx {cap}");
+            self.evict_to(cap - k)?;
+        }
+        Ok(())
+    }
+}
+
+impl DecodeSession for StatelessSession<'_> {
+    fn patch(&self) -> usize {
+        self.backend.patch()
+    }
+    fn len(&self) -> usize {
+        self.tokens.len() / self.backend.patch()
+    }
+    fn max_ctx(&self) -> usize {
+        self.backend.max_ctx()
+    }
+    fn context(&self) -> &[f32] {
+        &self.tokens
+    }
+
+    fn tip_mean(&mut self) -> Result<Vec<f32>> {
+        self.refresh()?;
+        let p = self.patch();
+        let n = self.len();
+        Ok(self.means[(n - 1) * p..n * p].to_vec())
+    }
+
+    fn extend(&mut self, patches: &[f32], k: usize) -> Result<Vec<f32>> {
+        let p = self.patch();
+        anyhow::ensure!(k >= 1, "extend needs k >= 1");
+        anyhow::ensure!(patches.len() >= k * p, "patch buffer too short");
+        self.room_for(k)?;
+        let n0 = self.len();
+        anyhow::ensure!(n0 >= 1, "extend on an empty session");
+        self.tokens.extend_from_slice(&patches[..k * p]);
+        let n = n0 + k;
+        self.means = self.backend.forward(&self.tokens, n)?;
+        self.valid = n;
+        self.forwards += 1;
+        Ok(self.means[(n0 - 1) * p..n * p].to_vec())
+    }
+
+    fn append(&mut self, patches: &[f32], k: usize) -> Result<()> {
+        let p = self.patch();
+        anyhow::ensure!(patches.len() >= k * p, "patch buffer too short");
+        if k == 0 {
+            return Ok(());
+        }
+        self.room_for(k)?;
+        self.tokens.extend_from_slice(&patches[..k * p]);
+        // `valid` rows keep their means: earlier outputs cannot depend on
+        // the appended patches (causality). The new rows are stale until
+        // the next read.
+        Ok(())
+    }
+
+    fn rollback(&mut self, k: usize) -> Result<()> {
+        if k == 0 {
+            return Ok(());
+        }
+        let p = self.patch();
+        let n = self.len();
+        anyhow::ensure!(k < n, "rollback({k}) would empty a session of {n}");
+        let keep = n - k;
+        self.tokens.truncate(keep * p);
+        self.valid = self.valid.min(keep);
+        self.means.truncate(self.valid * p);
+        Ok(())
+    }
+
+    fn evict_to(&mut self, keep: usize) -> Result<()> {
+        let p = self.patch();
+        let n = self.len();
+        anyhow::ensure!(keep >= 1 && keep <= n, "bad evict target {keep} for len {n}");
+        if keep == n {
+            return Ok(());
+        }
+        self.tokens.drain(..(n - keep) * p);
+        // Every output was conditioned on the old window start.
+        self.valid = 0;
+        self.means.clear();
+        Ok(())
+    }
+
+    fn forwards(&self) -> usize {
+        self.forwards
+    }
+}
+
+struct SeqBuf {
+    tokens: Vec<f32>,
+    means: Vec<f32>,
+    valid: usize,
+}
+
+/// Cache-off lockstep sessions: stale reads over an index set become one
+/// zero-padded `forward_batch` (tail padding is inert under causality),
+/// exactly the execution shape of the pre-session batched decoder.
+pub struct StatelessBatchSession<'a> {
+    backend: &'a dyn Backend,
+    seqs: Vec<SeqBuf>,
+    forwards: usize,
+}
+
+impl<'a> StatelessBatchSession<'a> {
+    pub fn new(backend: &'a dyn Backend, tasks: &[(&[f32], usize)]) -> Result<Self> {
+        let p = backend.patch();
+        let mut seqs = Vec::with_capacity(tasks.len());
+        for (hist, n_hist) in tasks {
+            anyhow::ensure!(*n_hist >= 1, "session needs at least one history patch");
+            anyhow::ensure!(hist.len() >= n_hist * p, "history too short");
+            // Trailing-window clamp, same rule as the single-sequence path.
+            let keep = (*n_hist).min(backend.max_ctx());
+            seqs.push(SeqBuf {
+                tokens: hist[(n_hist - keep) * p..n_hist * p].to_vec(),
+                means: Vec::new(),
+                valid: 0,
+            });
+        }
+        Ok(StatelessBatchSession { backend, seqs, forwards: 0 })
+    }
+
+    /// One padded batched forward over the stale subset of `idx`.
+    fn refresh(&mut self, idx: &[usize]) -> Result<()> {
+        let p = self.backend.patch();
+        let stale: Vec<usize> = idx
+            .iter()
+            .copied()
+            .filter(|&i| self.seqs[i].valid * p < self.seqs[i].tokens.len())
+            .collect();
+        if stale.is_empty() {
+            return Ok(());
+        }
+        let n_max = stale.iter().map(|&i| self.seqs[i].tokens.len() / p).max().unwrap();
+        let mut buf = vec![0.0f32; stale.len() * n_max * p];
+        for (ai, &i) in stale.iter().enumerate() {
+            let t = &self.seqs[i].tokens;
+            buf[ai * n_max * p..ai * n_max * p + t.len()].copy_from_slice(t);
+        }
+        let means = self.backend.forward_batch(&buf, stale.len(), n_max)?;
+        self.forwards += 1;
+        for (ai, &i) in stale.iter().enumerate() {
+            let n_i = self.seqs[i].tokens.len() / p;
+            self.seqs[i].means = means[ai * n_max * p..ai * n_max * p + n_i * p].to_vec();
+            self.seqs[i].valid = n_i;
+        }
+        Ok(())
+    }
+
+    fn room_for(&mut self, i: usize, k: usize) -> Result<()> {
+        let cap = self.backend.max_ctx();
+        if self.len(i) + k > cap {
+            anyhow::ensure!(k < cap, "append of {k} patches cannot fit in max_ctx {cap}");
+            self.evict_to(i, cap - k)?;
+        }
+        Ok(())
+    }
+}
+
+impl BatchDecodeSession for StatelessBatchSession<'_> {
+    fn batch(&self) -> usize {
+        self.seqs.len()
+    }
+    fn patch(&self) -> usize {
+        self.backend.patch()
+    }
+    fn len(&self, i: usize) -> usize {
+        self.seqs[i].tokens.len() / self.backend.patch()
+    }
+    fn max_ctx(&self) -> usize {
+        self.backend.max_ctx()
+    }
+
+    fn tip_means(&mut self, idx: &[usize]) -> Result<Vec<f32>> {
+        self.refresh(idx)?;
+        let p = self.patch();
+        let mut out = Vec::with_capacity(idx.len() * p);
+        for &i in idx {
+            let n = self.len(i);
+            out.extend_from_slice(&self.seqs[i].means[(n - 1) * p..n * p]);
+        }
+        Ok(out)
+    }
+
+    fn extend(&mut self, idx: &[usize], patches: &[f32], k: usize) -> Result<Vec<f32>> {
+        let p = self.patch();
+        anyhow::ensure!(k >= 1, "extend needs k >= 1");
+        anyhow::ensure!(patches.len() >= idx.len() * k * p, "patch buffer too short");
+        for (ai, &i) in idx.iter().enumerate() {
+            self.room_for(i, k)?;
+            anyhow::ensure!(self.len(i) >= 1, "extend on an empty sequence");
+            self.seqs[i].tokens.extend_from_slice(&patches[ai * k * p..(ai + 1) * k * p]);
+        }
+        self.refresh(idx)?;
+        let mut out = Vec::with_capacity(idx.len() * (k + 1) * p);
+        for &i in idx {
+            let n = self.len(i);
+            let n0 = n - k;
+            out.extend_from_slice(&self.seqs[i].means[(n0 - 1) * p..n * p]);
+        }
+        Ok(out)
+    }
+
+    fn append(&mut self, i: usize, patches: &[f32], k: usize) -> Result<()> {
+        let p = self.patch();
+        anyhow::ensure!(patches.len() >= k * p, "patch buffer too short");
+        if k == 0 {
+            return Ok(());
+        }
+        self.room_for(i, k)?;
+        self.seqs[i].tokens.extend_from_slice(&patches[..k * p]);
+        Ok(())
+    }
+
+    fn rollback(&mut self, i: usize, k: usize) -> Result<()> {
+        if k == 0 {
+            return Ok(());
+        }
+        let p = self.patch();
+        let n = self.len(i);
+        anyhow::ensure!(k < n, "rollback({k}) would empty sequence {i} of {n}");
+        let keep = n - k;
+        let s = &mut self.seqs[i];
+        s.tokens.truncate(keep * p);
+        s.valid = s.valid.min(keep);
+        s.means.truncate(s.valid * p);
+        Ok(())
+    }
+
+    fn evict_to(&mut self, i: usize, keep: usize) -> Result<()> {
+        let p = self.patch();
+        let n = self.len(i);
+        anyhow::ensure!(keep >= 1 && keep <= n, "bad evict target {keep} for len {n}");
+        if keep == n {
+            return Ok(());
+        }
+        let s = &mut self.seqs[i];
+        s.tokens.drain(..(n - keep) * p);
+        s.valid = 0;
+        s.means.clear();
+        Ok(())
+    }
+
+    fn forwards(&self) -> usize {
+        self.forwards
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::AnalyticBackend;
+
+    /// The analytic head makes session semantics directly checkable:
+    /// mean(next) = a * last_patch + b.
+    fn backend() -> AnalyticBackend {
+        AnalyticBackend::new("t", 2, 0.5, 1.0)
+    }
+
+    #[test]
+    fn tip_and_extend_follow_the_analytic_law() {
+        let b = backend();
+        let mut s = StatelessSession::new(&b, &[2.0, 4.0], 1).unwrap();
+        assert_eq!(s.tip_mean().unwrap(), vec![2.0, 3.0]);
+        // extend returns rows n0-1..n0+k-1: here positions 0 and 1.
+        let rows = s.extend(&[1.0, 1.0], 1).unwrap();
+        assert_eq!(rows, vec![2.0, 3.0, 1.5, 1.5]);
+        assert_eq!(s.len(), 2);
+        assert_eq!(s.tip_mean().unwrap(), vec![1.5, 1.5]);
+    }
+
+    #[test]
+    fn rollback_restores_previous_tip_without_reforward() {
+        let b = backend();
+        let mut s = StatelessSession::new(&b, &[2.0, 4.0], 1).unwrap();
+        let _ = s.extend(&[1.0, 1.0, 8.0, 8.0], 2).unwrap();
+        let fwds = s.forwards();
+        s.rollback(2).unwrap();
+        assert_eq!(s.len(), 1);
+        // Causality: the kept row's mean is still valid, no forward needed.
+        assert_eq!(s.tip_mean().unwrap(), vec![2.0, 3.0]);
+        assert_eq!(s.forwards(), fwds);
+    }
+
+    #[test]
+    fn append_defers_compute() {
+        let b = backend();
+        let mut s = StatelessSession::new(&b, &[2.0, 4.0], 1).unwrap();
+        s.append(&[6.0, 6.0], 1).unwrap();
+        assert_eq!(s.forwards(), 0);
+        assert_eq!(s.tip_mean().unwrap(), vec![4.0, 4.0]);
+        assert_eq!(s.forwards(), 1);
+    }
+
+    #[test]
+    fn rollback_refuses_to_empty() {
+        let b = backend();
+        let mut s = StatelessSession::new(&b, &[2.0, 4.0], 1).unwrap();
+        assert!(s.rollback(1).is_err());
+        s.append(&[1.0, 1.0], 1).unwrap();
+        assert!(s.rollback(1).is_ok());
+    }
+
+    #[test]
+    fn batch_session_matches_singles() {
+        let b = backend();
+        let h1 = [2.0f32, 4.0];
+        let h2 = [0.0f32, 0.0, 6.0, 2.0];
+        let tasks: Vec<(&[f32], usize)> = vec![(&h1, 1), (&h2, 2)];
+        let mut bs = StatelessBatchSession::new(&b, &tasks).unwrap();
+        let tips = bs.tip_means(&[0, 1]).unwrap();
+        assert_eq!(tips, vec![2.0, 3.0, 4.0, 2.0]);
+        let rows = bs.extend(&[0, 1], &[1.0, 1.0, 5.0, 5.0], 1).unwrap();
+        // Per sequence: [tip_before, new_tip].
+        assert_eq!(rows, vec![2.0, 3.0, 1.5, 1.5, 4.0, 2.0, 3.5, 3.5]);
+        bs.rollback(0, 1).unwrap();
+        assert_eq!(bs.len(0), 1);
+        assert_eq!(bs.len(1), 3);
+    }
+}

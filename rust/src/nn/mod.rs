@@ -4,5 +4,5 @@
 pub mod model;
 pub mod weights;
 
-pub use model::{ModelDims, NativeModel};
+pub use model::{KvCache, ModelDims, NativeModel};
 pub use weights::Weights;

@@ -6,10 +6,20 @@
 //! (iii) the parity check proving the HLO artifacts compute the same
 //! function (`rust/tests/xla_integration.rs` asserts native == XLA == JAX
 //! golden within fp tolerance).
+//!
+//! Two forward paths share the same math:
+//! * [`NativeModel::forward`] — stateless, recomputes attention over the
+//!   whole context (O(n²·d) per call).
+//! * [`NativeModel::forward_cached`] — incremental over a [`KvCache`]:
+//!   only the appended rows are computed (O(k·n·d) per call), which is what
+//!   turns a speculative round from O(n²·d) into O(γ·n·d). The op order is
+//!   identical row-for-row, so the two paths agree to float equality
+//!   (pinned by `rust/tests/cache_equivalence.rs`).
 
 use anyhow::Result;
 
 use super::weights::Weights;
+use crate::util::rng::Rng;
 use crate::util::tensor::{linear, matmul, rmsnorm, silu, softmax_row, Tensor};
 
 /// Architecture dims (mirror of model.ModelConfig; parsed from the manifest).
@@ -41,6 +51,40 @@ pub struct NativeModel {
 impl NativeModel {
     pub fn new(name: &str, dims: ModelDims, weights: Weights) -> NativeModel {
         NativeModel { dims, name: name.to_string(), w: weights }
+    }
+
+    /// Seeded random-weight model (no artifacts needed): the substrate for
+    /// the cache-equivalence test suite and the `perf_hotpath` cached sweep,
+    /// where analytic heads would be too trivial to exercise attention.
+    /// Projections are scaled by 1/sqrt(fan_in) so activations stay sane at
+    /// bench-sized dims.
+    pub fn random(name: &str, dims: ModelDims, seed: u64) -> NativeModel {
+        let mut w = Weights::default();
+        let mut rng = Rng::new(seed);
+        let mut t = |shape: &[usize], scale: f32| {
+            let n: usize = shape.iter().product();
+            Tensor::from_vec(shape, (0..n).map(|_| scale * rng.normal() as f32).collect())
+        };
+        let (p, d, f) = (dims.patch, dims.d_model, dims.d_ff);
+        let s_p = 0.5 / (p as f32).sqrt();
+        let s_d = 0.5 / (d as f32).sqrt();
+        let s_f = 0.5 / (f as f32).sqrt();
+        w.insert("embed_w", t(&[p, d], s_p));
+        w.insert("embed_b", Tensor::zeros(&[d]));
+        w.insert("pos", t(&[dims.n_ctx, d], 0.1));
+        for li in 0..dims.n_layers {
+            w.insert(&format!("layers.{li}.ln1"), Tensor::from_vec(&[d], vec![1.0; d]));
+            w.insert(&format!("layers.{li}.wqkv"), t(&[d, 3 * d], s_d));
+            w.insert(&format!("layers.{li}.wo"), t(&[d, d], s_d));
+            w.insert(&format!("layers.{li}.ln2"), Tensor::from_vec(&[d], vec![1.0; d]));
+            w.insert(&format!("layers.{li}.wg"), t(&[d, f], s_d));
+            w.insert(&format!("layers.{li}.wu"), t(&[d, f], s_d));
+            w.insert(&format!("layers.{li}.wd"), t(&[f, d], s_f));
+        }
+        w.insert("final_norm", Tensor::from_vec(&[d], vec![1.0; d]));
+        w.insert("head_w", t(&[d, p], s_d));
+        w.insert("head_b", Tensor::zeros(&[p]));
+        NativeModel::new(name, dims, w)
     }
 
     /// tokens [B, N, P] -> next-patch means [B, N, P]; N <= n_ctx.
@@ -161,6 +205,161 @@ impl NativeModel {
             *xv += dv;
         }
         Ok(())
+    }
+
+    /// Incremental forward: consume `k` new patches (flat `[k, patch]`)
+    /// given `cache` holding per-layer K/V for the first `cache.n` patches
+    /// of the sequence. Appends `k` rows per layer and returns the outputs
+    /// at the `k` new positions (flat `[k, patch]`).
+    ///
+    /// The appended rows attend over the cached rows plus themselves with
+    /// exactly the op order of [`NativeModel::forward`], so outputs match
+    /// the corresponding rows of a full stateless forward to float
+    /// equality. Cost is O(k·n·d) vs the stateless O(n²·d).
+    pub fn forward_cached(&self, cache: &mut KvCache, new_tokens: &[f32], k: usize) -> Result<Vec<f32>> {
+        let p = self.dims.patch;
+        let d = self.dims.d_model;
+        let h = self.dims.n_heads;
+        let dh = self.dims.d_head();
+        anyhow::ensure!(cache.dims == self.dims, "KV cache built for different dims");
+        anyhow::ensure!(k >= 1, "forward_cached needs k >= 1");
+        anyhow::ensure!(new_tokens.len() >= k * p, "token buffer too short");
+        let n0 = cache.n;
+        anyhow::ensure!(
+            n0 + k <= self.dims.n_ctx,
+            "KV cache overflow: {n0} + {k} > n_ctx {}",
+            self.dims.n_ctx
+        );
+
+        // Embed + learned positions for the new rows only. Positions are
+        // absolute (n0..n0+k), which is why window slides cannot rotate the
+        // cache in place — see `KvCache` docs.
+        let t_in = Tensor::from_vec(&[k, p], new_tokens[..k * p].to_vec());
+        let mut x = linear(&t_in, self.w.get("embed_w")?, Some(&self.w.get("embed_b")?.data));
+        let pos = self.w.get("pos")?;
+        for t in 0..k {
+            let row = &mut x.data[t * d..(t + 1) * d];
+            for (v, pv) in row.iter_mut().zip(&pos.data[(n0 + t) * d..(n0 + t + 1) * d]) {
+                *v += pv;
+            }
+        }
+
+        let scale = 1.0 / (dh as f32).sqrt();
+        let mut normed = vec![0.0f32; k * d];
+        let mut qkv = vec![0.0f32; k * 3 * d];
+        let mut concat = vec![0.0f32; k * d];
+        let mut proj = vec![0.0f32; k * d];
+        let mut scores = vec![0.0f32; n0 + k];
+
+        for li in 0..self.dims.n_layers {
+            normed.copy_from_slice(&x.data);
+            rmsnorm(&mut normed, &self.w.get(&format!("layers.{li}.ln1"))?.data, RMS_EPS);
+            let wqkv = self.w.get(&format!("layers.{li}.wqkv"))?;
+            matmul(&normed, &wqkv.data, k, d, 3 * d, &mut qkv);
+
+            // Append the new K/V rows (heads contiguous, as in the qkv
+            // layout) before attending so a row can see itself.
+            let kbuf = &mut cache.k[li];
+            let vbuf = &mut cache.v[li];
+            for t in 0..k {
+                let base = t * 3 * d;
+                kbuf[(n0 + t) * d..(n0 + t + 1) * d].copy_from_slice(&qkv[base + d..base + 2 * d]);
+                vbuf[(n0 + t) * d..(n0 + t + 1) * d]
+                    .copy_from_slice(&qkv[base + 2 * d..base + 3 * d]);
+            }
+            // Causal attention: new row at absolute position g attends over
+            // cached rows 0..=g.
+            for t in 0..k {
+                let g = n0 + t;
+                for hi in 0..h {
+                    let q = &qkv[t * 3 * d + hi * dh..t * 3 * d + hi * dh + dh];
+                    let srow = &mut scores[..=g];
+                    for (j, sv) in srow.iter_mut().enumerate() {
+                        let krow = &kbuf[j * d + hi * dh..j * d + hi * dh + dh];
+                        *sv = q.iter().zip(krow).map(|(a, c)| a * c).sum::<f32>() * scale;
+                    }
+                    softmax_row(srow);
+                    let orow = &mut concat[t * d + hi * dh..t * d + hi * dh + dh];
+                    orow.fill(0.0);
+                    for (j, &wj) in srow.iter().enumerate() {
+                        let vrow = &vbuf[j * d + hi * dh..j * d + hi * dh + dh];
+                        for (o, vv) in orow.iter_mut().zip(vrow) {
+                            *o += wj * vv;
+                        }
+                    }
+                }
+            }
+            let wo = self.w.get(&format!("layers.{li}.wo"))?;
+            matmul(&concat, &wo.data, k, d, d, &mut proj);
+            for (xv, pv) in x.data.iter_mut().zip(&proj) {
+                *xv += pv;
+            }
+            self.mlp_block(li, &mut x, 1, k)?;
+        }
+
+        cache.n = n0 + k;
+        rmsnorm(&mut x.data, &self.w.get("final_norm")?.data, RMS_EPS);
+        Ok(linear(&x, self.w.get("head_w")?, Some(&self.w.get("head_b")?.data)).data)
+    }
+}
+
+/// Per-layer K/V ring buffers for incremental decoding.
+///
+/// Rows live at absolute positions `0..n` in fixed `[n_ctx * d_model]`
+/// allocations (one K and one V buffer per layer, heads contiguous).
+/// Rollback of rejected speculation is `truncate` (drop suffix rows —
+/// the prefix stays valid because attention is causal). Window *slides*
+/// are different: the learned absolute position embeddings make every
+/// cached row position-dependent, so eviction from the front cannot
+/// rotate rows in place — the session layer truncates and re-prefills
+/// the kept suffix instead (see `models::NativeSession::evict_to`).
+/// The speculative engine evicts once per round (freeing γ+1 slots), so
+/// the re-prefill amortizes over the whole emitted block; a *saturated*
+/// plain-AR decode slides one patch per step and therefore degenerates
+/// to stateless cost at the window boundary — the price of keeping
+/// eviction bit-equal to the stateless sliding-window rule.
+pub struct KvCache {
+    dims: ModelDims,
+    /// Valid rows (patches) currently cached.
+    n: usize,
+    k: Vec<Vec<f32>>,
+    v: Vec<Vec<f32>>,
+}
+
+impl KvCache {
+    pub fn new(dims: &ModelDims) -> KvCache {
+        let cap = dims.n_ctx * dims.d_model;
+        KvCache {
+            dims: *dims,
+            n: 0,
+            k: (0..dims.n_layers).map(|_| vec![0.0; cap]).collect(),
+            v: (0..dims.n_layers).map(|_| vec![0.0; cap]).collect(),
+        }
+    }
+
+    /// Valid rows (patches) currently cached.
+    pub fn len(&self) -> usize {
+        self.n
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+
+    /// Maximum rows (the model's n_ctx).
+    pub fn capacity(&self) -> usize {
+        self.dims.n_ctx
+    }
+
+    /// Forget everything (prelude to a re-prefill after a window slide).
+    pub fn reset(&mut self) {
+        self.n = 0;
+    }
+
+    /// Drop cached rows beyond `n` — the rollback of rejected speculation.
+    pub fn truncate(&mut self, n: usize) {
+        assert!(n <= self.n, "KvCache::truncate beyond cached rows");
+        self.n = n;
     }
 }
 
@@ -301,6 +500,68 @@ mod tests {
         let m = tiny_model(6);
         assert!(m.forward(&Tensor::zeros(&[1, 8, 5])).is_err());
         assert!(m.forward(&Tensor::zeros(&[1, 9, 4])).is_err());
+    }
+
+    #[test]
+    fn cached_forward_matches_full() {
+        // prefill 5 rows + incremental 3 rows == one stateless forward.
+        let m = tiny_model(11);
+        let mut rng = Rng::new(21);
+        let toks: Vec<f32> = (0..8 * 4).map(|_| rng.normal() as f32).collect();
+        let full = m.forward(&Tensor::from_vec(&[1, 8, 4], toks.clone())).unwrap();
+        let mut cache = KvCache::new(&m.dims);
+        let head = m.forward_cached(&mut cache, &toks[..5 * 4], 5).unwrap();
+        let tail = m.forward_cached(&mut cache, &toks[5 * 4..], 3).unwrap();
+        assert_eq!(cache.len(), 8);
+        for (i, v) in head.iter().chain(tail.iter()).enumerate() {
+            assert!(
+                (v - full.data[i]).abs() < 1e-5,
+                "row {} diverged: cached {v} vs full {}",
+                i / 4,
+                full.data[i]
+            );
+        }
+    }
+
+    #[test]
+    fn cached_truncate_then_reextend_matches_full() {
+        // Rollback (truncate) must leave the prefix usable: re-extending
+        // with different patches equals a stateless forward of the spliced
+        // sequence.
+        let m = tiny_model(12);
+        let mut rng = Rng::new(22);
+        let toks: Vec<f32> = (0..8 * 4).map(|_| rng.normal() as f32).collect();
+        let mut cache = KvCache::new(&m.dims);
+        let _ = m.forward_cached(&mut cache, &toks, 8).unwrap();
+        cache.truncate(4);
+        let replacement: Vec<f32> = (0..2 * 4).map(|_| rng.normal() as f32).collect();
+        let rows = m.forward_cached(&mut cache, &replacement, 2).unwrap();
+        let mut spliced = toks[..4 * 4].to_vec();
+        spliced.extend_from_slice(&replacement);
+        let full = m.forward(&Tensor::from_vec(&[1, 6, 4], spliced)).unwrap();
+        for i in 0..2 * 4 {
+            assert!((rows[i] - full.data[4 * 4 + i]).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn cached_overflow_rejected() {
+        let m = tiny_model(13);
+        let mut cache = KvCache::new(&m.dims);
+        let toks = vec![0.1f32; 8 * 4];
+        let _ = m.forward_cached(&mut cache, &toks, 8).unwrap();
+        assert!(m.forward_cached(&mut cache, &toks[..4], 1).is_err());
+    }
+
+    #[test]
+    fn random_model_forward_is_finite() {
+        let dims =
+            ModelDims { patch: 4, n_ctx: 32, d_model: 16, n_layers: 3, n_heads: 4, d_ff: 32 };
+        let m = NativeModel::random("rnd", dims, 7);
+        let mut rng = Rng::new(8);
+        let toks: Vec<f32> = (0..32 * 4).map(|_| rng.normal() as f32).collect();
+        let y = m.forward(&Tensor::from_vec(&[1, 32, 4], toks)).unwrap();
+        assert!(y.data.iter().all(|v| v.is_finite()));
     }
 }
 

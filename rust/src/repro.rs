@@ -152,6 +152,7 @@ impl Bench {
             } else {
                 crate::specdec::Emission::Mean
             },
+            cache: crate::models::CacheMode::On,
         };
 
         // Warmup: one untimed baseline + SD pass so first-row results don't

@@ -16,9 +16,9 @@ use anyhow::{Context, Result};
 
 use super::protocol::{ForecastRequest, ForecastResponse, Mode};
 use crate::config::ServeConfig;
-use crate::forecast::ar_decode;
+use crate::forecast::ar_decode_with;
 use crate::metrics::{AcceptanceMonitor, Metrics};
-use crate::models::{Backend, NativeBackend, XlaBackend};
+use crate::models::{Backend, CacheMode, NativeBackend, XlaBackend};
 use crate::runtime::{Engine, Manifest};
 use crate::specdec::{sd_generate_batch, SpecConfig};
 
@@ -180,9 +180,10 @@ fn process_batch(
     metrics: &Metrics,
     monitor: &AcceptanceMonitor,
 ) {
-    // Partition: SD jobs grouped by (gamma, sigma-bits) so overrides batch
-    // together; baseline/draft jobs run individually.
-    let mut sd_groups: BTreeMap<(usize, u64), Vec<Job>> = BTreeMap::new();
+    // Partition: SD jobs grouped by (gamma, sigma-bits, cache) so
+    // overrides batch together — a decode group shares one session pool
+    // and one cost model; baseline/draft jobs run individually.
+    let mut sd_groups: BTreeMap<(usize, u64, bool), Vec<Job>> = BTreeMap::new();
     let mut singles: Vec<Job> = Vec::new();
     let base_spec = cfg.spec_config();
 
@@ -198,7 +199,8 @@ fn process_batch(
                     }
                 }
                 let sigma = job.req.sigma.unwrap_or(cfg.sigma);
-                sd_groups.entry((gamma, sigma.to_bits())).or_default().push(job);
+                let cache = job.req.cache.unwrap_or(cfg.cache);
+                sd_groups.entry((gamma, sigma.to_bits(), cache)).or_default().push(job);
             }
             _ => singles.push(job),
         }
@@ -207,11 +209,12 @@ fn process_batch(
     // Per-group decode seed: reusing one RNG stream across batches would
     // correlate accept/reject coins between requests.
     static DECODE_SEQ: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(0);
-    for ((gamma, sigma_bits), group) in sd_groups {
+    for ((gamma, sigma_bits, cache), group) in sd_groups {
         let sigma = f64::from_bits(sigma_bits);
         let mut spec = base_spec;
         spec.gamma = gamma;
         spec.policy.sigma = sigma;
+        spec.cache = if cache { CacheMode::On } else { CacheMode::Off };
         spec.seed = spec
             .seed
             .wrapping_add(DECODE_SEQ.fetch_add(1, Ordering::Relaxed))
@@ -299,10 +302,11 @@ fn run_single(
         Mode::DraftOnly => draft,
         _ => target,
     };
+    let cache = if job.req.cache.unwrap_or(cfg.cache) { CacheMode::On } else { CacheMode::Off };
     let result = (|| -> Result<ForecastResponse, String> {
         let (hist, n_hist, horizon) = prep(&job.req, manifest, 1)?;
         let (pred, _wall, calls) =
-            ar_decode(model, &hist, n_hist, horizon).map_err(|e| format!("{e:#}"))?;
+            ar_decode_with(model, &hist, n_hist, horizon, cache).map_err(|e| format!("{e:#}"))?;
         let latency = job.enqueued.elapsed();
         metrics.observe("request_latency", latency);
         metrics
@@ -323,5 +327,4 @@ fn run_single(
         metrics.errors_total.fetch_add(1, Ordering::Relaxed);
     }
     let _ = job.reply.send(result);
-    let _ = cfg;
 }

@@ -2,7 +2,8 @@
 //!
 //! POST /forecast
 //!   {"history": [f32...], "horizon": <patches>, "gamma"?: n, "sigma"?: x,
-//!    "mode"?: "sd" | "baseline" | "draft", "dataset"?: "etth1"}
+//!    "mode"?: "sd" | "baseline" | "draft", "dataset"?: "etth1",
+//!    "cache"?: true|false}
 //! ->
 //!   {"forecast": [f32...], "mode": "...", "latency_ms": x,
 //!    "alpha_hat": x, "mean_block_len": x, "rounds": n,
@@ -39,6 +40,9 @@ pub struct ForecastRequest {
     /// Optional per-request overrides.
     pub gamma: Option<usize>,
     pub sigma: Option<f64>,
+    /// Per-request KV-cache override (None = server config). Exposed so
+    /// A/B latency probes can hit both cost models on one running server.
+    pub cache: Option<bool>,
     /// Traffic-segment tag for acceptance monitoring (paper §7).
     pub dataset: Option<String>,
 }
@@ -83,6 +87,7 @@ impl ForecastRequest {
             mode,
             gamma,
             sigma,
+            cache: j.get("cache").and_then(Json::as_bool),
             dataset: j.get("dataset").and_then(Json::as_str).map(String::from),
         })
     }

@@ -2,12 +2,16 @@
 //! lockstep rounds sharing the model forwards (the paper's batch=64/128
 //! rows in Table 1, and the serving batcher's execution mode).
 //!
-//! Per round: γ *batched* draft forwards propose one patch per sequence
-//! each, then one batched target forward validates every sequence's γ+1
-//! prefix conditionals. Sequences accept/reject independently, so context
-//! lengths diverge; buffers are left-aligned and zero-padded to the round's
-//! max length — causality makes tail padding inert, and each sequence reads
-//! its own positions. Finished sequences drop out of the batch.
+//! Per round: γ *batched* draft extends propose one patch per sequence
+//! each, then one batched target extend validates every sequence's γ+1
+//! prefix conditionals. Sequences accept/reject independently, so each
+//! sequence's session is rolled back by its own rejected-suffix length —
+//! with the KV cache on, that is a per-sequence cache truncation instead
+//! of a context rebuild. With the cache off the sessions fall back to
+//! left-aligned zero-padded batched re-forwards (causality makes tail
+//! padding inert), the exact execution shape of the stateless decoder.
+//! Finished sequences drop out of the advancing set; queued tasks take
+//! their slots immediately (continuous batching, paper §5.5).
 
 use std::time::Instant;
 
@@ -15,11 +19,10 @@ use anyhow::Result;
 
 use super::engine::{Emission, SpecConfig, Variant};
 use super::stats::{DecodeOutput, DecodeStats, RoundStats};
-use crate::models::Backend;
+use crate::models::{begin_batch_session, Backend};
 use crate::util::rng::Rng;
 
 struct SeqState {
-    ctx: Vec<f32>,
     out: Vec<f32>,
     horizon: usize,
     emitted: usize,
@@ -69,11 +72,17 @@ pub fn sd_generate_stream(
     }
     let max_ctx = target.max_ctx().min(draft.max_ctx());
 
+    // Long-lived per-sequence sessions for both models. Jobs keep these
+    // across all their rounds; rejection rolls back, nothing is rebuilt.
+    let sess_tasks: Vec<(&[f32], usize)> =
+        tasks.iter().map(|(h, n, _)| (*h, *n)).collect();
+    let mut t_bs = begin_batch_session(target, cfg.cache, &sess_tasks)?;
+    let mut d_bs = begin_batch_session(draft, cfg.cache, &sess_tasks)?;
+
     let mut seqs: Vec<SeqState> = tasks
         .iter()
         .enumerate()
-        .map(|(i, (hist, n_hist, horizon))| SeqState {
-            ctx: hist[..n_hist * p].to_vec(),
+        .map(|(i, (_, _, horizon))| SeqState {
             out: Vec::with_capacity(horizon * p),
             horizon: *horizon,
             emitted: 0,
@@ -92,6 +101,7 @@ pub fn sd_generate_stream(
         if active.is_empty() {
             break;
         }
+        let a = active.len();
         // Round γ: shared across the batch (sequences near their horizon
         // cap their own emissions after acceptance).
         let gamma = cfg
@@ -100,63 +110,65 @@ pub fn sd_generate_stream(
             .max(1)
             .min(cfg.gamma);
 
-        // Slide contexts that would overflow.
+        // Slide windows that would overflow (target and draft in lockstep).
         for &i in &active {
-            let n_now = seqs[i].ctx.len() / p;
+            let n_now = t_bs.len(i);
             if n_now + gamma + 1 > max_ctx {
+                anyhow::ensure!(gamma + 1 < max_ctx, "gamma {gamma} cannot fit in max_ctx {max_ctx}");
                 let keep = max_ctx - (gamma + 1);
-                let drop = n_now - keep;
-                seqs[i].ctx.drain(..drop * p);
+                t_bs.evict_to(i, keep)?;
+                d_bs.evict_to(i, keep)?;
             }
         }
-        let n0: Vec<usize> = active.iter().map(|&i| seqs[i].ctx.len() / p).collect();
 
-        // --- Draft: gamma batched forwards.
-        let mut proposals: Vec<Vec<Vec<f32>>> = vec![Vec::new(); active.len()]; // [seq][i][p]
-        let mut mu_qs: Vec<Vec<Vec<f32>>> = vec![Vec::new(); active.len()];
+        // --- Draft: tip means, then gamma-1 batched extends (the last
+        // proposal only feeds target validation, never the draft context).
         let t0 = Instant::now();
+        let mut mu_q = d_bs.tip_means(&active)?; // [a, p]
+        let mut draft_time = t0.elapsed();
+        let mut proposals: Vec<Vec<Vec<f32>>> = vec![Vec::new(); a]; // [seq][i][p]
+        let mut mu_qs: Vec<Vec<Vec<f32>>> = vec![Vec::new(); a];
         for step in 0..gamma {
-            let n_max = active
-                .iter()
-                .map(|&i| seqs[i].ctx.len() / p)
-                .max()
-                .unwrap();
-            let mut buf = vec![0.0f32; active.len() * n_max * p];
+            let mut xs = vec![0.0f32; a * p];
             for (ai, &i) in active.iter().enumerate() {
-                let s = &seqs[i].ctx;
-                buf[ai * n_max * p..ai * n_max * p + s.len()].copy_from_slice(s);
+                let mq = &mu_q[ai * p..(ai + 1) * p];
+                seqs[i]
+                    .rng
+                    .fill_normal_around(mq, cfg.policy.sigma as f32, &mut xs[ai * p..(ai + 1) * p]);
+                proposals[ai].push(xs[ai * p..(ai + 1) * p].to_vec());
+                mu_qs[ai].push(mq.to_vec());
             }
-            let means = draft.forward_batch(&buf, active.len(), n_max)?;
-            for (ai, &i) in active.iter().enumerate() {
-                let n_i = seqs[i].ctx.len() / p;
-                let off = ai * n_max * p + (n_i - 1) * p;
-                let mu_q = means[off..off + p].to_vec();
-                let mut x = vec![0.0f32; p];
-                seqs[i].rng.fill_normal_around(&mu_q, cfg.policy.sigma as f32, &mut x);
-                seqs[i].ctx.extend_from_slice(&x);
-                proposals[ai].push(x);
-                mu_qs[ai].push(mu_q);
+            if step + 1 < gamma {
+                let td = Instant::now();
+                let rows = d_bs.extend(&active, &xs, 1)?; // [a, 2, p]
+                draft_time += td.elapsed();
+                for ai in 0..a {
+                    mu_q[ai * p..(ai + 1) * p]
+                        .copy_from_slice(&rows[ai * 2 * p + p..(ai + 1) * 2 * p]);
+                }
             }
-            let _ = step;
         }
-        let draft_time = t0.elapsed();
 
-        // --- Target: one batched validation forward.
-        let n_max = active.iter().map(|&i| seqs[i].ctx.len() / p).max().unwrap();
-        let mut buf = vec![0.0f32; active.len() * n_max * p];
-        for (ai, &i) in active.iter().enumerate() {
-            let s = &seqs[i].ctx;
-            buf[ai * n_max * p..ai * n_max * p + s.len()].copy_from_slice(s);
+        // --- Target: one batched extend validates every sequence's γ+1
+        // prefix conditionals.
+        let mut flat = vec![0.0f32; a * gamma * p];
+        for ai in 0..a {
+            for (k, x) in proposals[ai].iter().enumerate() {
+                flat[ai * gamma * p + k * p..ai * gamma * p + (k + 1) * p].copy_from_slice(x);
+            }
         }
         let t1 = Instant::now();
-        let target_means = target.forward_batch(&buf, active.len(), n_max)?;
+        let val_rows = t_bs.extend(&active, &flat, gamma)?; // [a, gamma+1, p]
         let target_time = t1.elapsed();
 
-        // --- Per-sequence acceptance + emission.
+        // --- Per-sequence acceptance + rollback + emission.
         for (ai, &i) in active.iter().enumerate() {
-            let base = ai * n_max * p;
-            let n0_i = n0[ai];
-            let mu_p_at = |k: usize| &target_means[base + (n0_i - 1 + k) * p..base + (n0_i + k) * p];
+            // Each sequence's post-work (scan, rollback, appends, residual
+            // draws) is timed individually so one slow sequence does not
+            // inflate its batchmates' stats.
+            let tpost = Instant::now();
+            let base = ai * (gamma + 1) * p;
+            let mu_p_at = |k: usize| &val_rows[base + k * p..base + (k + 1) * p];
 
             // Per-sequence gamma: a sequence near its horizon only consumes
             // the proposals it can still emit (the round's extra draft work
@@ -167,27 +179,43 @@ pub fn sd_generate_stream(
             let mut accepted = 0usize;
             let mut rejected_at = None;
             for k in 0..g_i {
-                let a = cfg.policy.alpha(&proposals[ai][k], mu_p_at(k), &mu_qs[ai][k]);
-                alphas.push(a);
-                if a >= 1.0 || seqs[i].rng.uniform() < a {
+                let alpha = cfg.policy.alpha(&proposals[ai][k], mu_p_at(k), &mu_qs[ai][k]);
+                alphas.push(alpha);
+                if alpha >= 1.0 || seqs[i].rng.uniform() < alpha {
                     accepted += 1;
                 } else {
                     rejected_at = Some(k);
                     break;
                 }
             }
-            // Truncate context to the accepted prefix, then re-extend with
-            // the emitted values (samples or draft means per protocol).
-            seqs[i].ctx.truncate(n0_i * p);
+
+            // Roll this sequence's sessions back to its accepted prefix.
+            let keep_d = accepted.min(gamma - 1);
             let mut emit: Vec<f32> = Vec::with_capacity((accepted + 1) * p);
-            for k in 0..accepted {
-                let patch: &[f32] = match cfg.emission {
-                    Emission::Sampled => &proposals[ai][k],
-                    Emission::Mean => &mu_qs[ai][k],
-                };
-                emit.extend_from_slice(patch);
-                seqs[i].ctx.extend_from_slice(patch);
+            match cfg.emission {
+                Emission::Sampled => {
+                    t_bs.rollback(i, gamma - accepted)?;
+                    d_bs.rollback(i, (gamma - 1) - keep_d)?;
+                    if accepted > keep_d {
+                        d_bs.append(i, &proposals[ai][gamma - 1], 1)?;
+                    }
+                    for x in &proposals[ai][..accepted] {
+                        emit.extend_from_slice(x);
+                    }
+                }
+                Emission::Mean => {
+                    t_bs.rollback(i, gamma)?;
+                    d_bs.rollback(i, gamma - 1)?;
+                    for m in &mu_qs[ai][..accepted] {
+                        emit.extend_from_slice(m);
+                    }
+                    if accepted > 0 {
+                        t_bs.append(i, &emit, accepted)?;
+                        d_bs.append(i, &emit, accepted)?;
+                    }
+                }
             }
+
             let mut residual_draws = 0usize;
             let final_mu: Vec<f32> = match rejected_at {
                 None => mu_p_at(g_i).to_vec(),
@@ -221,7 +249,8 @@ pub fn sd_generate_stream(
                 },
             };
             emit.extend_from_slice(&final_patch);
-            seqs[i].ctx.extend_from_slice(&final_patch);
+            t_bs.append(i, &final_patch, 1)?;
+            d_bs.append(i, &final_patch, 1)?;
 
             // accepted <= g_i <= remaining - 1, so take never truncates now;
             // keep the min as a defensive invariant.
@@ -236,8 +265,8 @@ pub fn sd_generate_stream(
                 emitted: take,
                 alphas,
                 residual_draws,
-                draft_time: draft_time / active.len() as u32,
-                target_time: target_time / active.len() as u32,
+                draft_time: draft_time / a as u32,
+                target_time: target_time / a as u32 + tpost.elapsed(),
             };
             seqs[i].stats.absorb(&r);
             seqs[i].rounds.push(r);
@@ -254,7 +283,8 @@ pub fn sd_generate_stream(
 mod tests {
     use super::*;
     use crate::accept::AcceptancePolicy;
-    use crate::models::AnalyticBackend;
+    use crate::models::{AnalyticBackend, CacheMode, NativeBackend};
+    use crate::nn::model::tiny_model;
 
     fn cfg(gamma: usize, sigma: f64, seed: u64) -> SpecConfig {
         SpecConfig {
@@ -264,6 +294,7 @@ mod tests {
             seed,
             max_residual_draws: 1000,
             emission: Emission::Sampled,
+            cache: CacheMode::On,
         }
     }
 
@@ -325,6 +356,32 @@ mod tests {
             assert_eq!(o.stats.accepted, o.stats.proposals, "identical heads must accept");
             assert_eq!(o.patches.len(), 6);
             assert!(o.patches.iter().all(|v| v.is_finite()));
+        }
+    }
+
+    #[test]
+    fn batched_cache_toggle_is_observationally_identical() {
+        // Per-sequence KV rollback (cache on) vs padded batched re-forwards
+        // (cache off) must yield the same decodes, including with mixed
+        // history lengths and horizons that force window slides.
+        let t = NativeBackend::new(tiny_model(41));
+        let d = NativeBackend::new(tiny_model(42));
+        let h1: Vec<f32> = (0..2 * 4).map(|i| (i as f32 * 0.2).sin()).collect();
+        let h2: Vec<f32> = (0..4 * 4).map(|i| (i as f32 * 0.3).cos()).collect();
+        let tasks: Vec<(&[f32], usize, usize)> = vec![(&h1, 2, 11), (&h2, 4, 7)];
+        let mut on = cfg(3, 0.5, 9);
+        on.cache = CacheMode::On;
+        let mut off = on;
+        off.cache = CacheMode::Off;
+        let a = sd_generate_batch(&t, &d, &tasks, &on).unwrap();
+        let b = sd_generate_batch(&t, &d, &tasks, &off).unwrap();
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.stats.accepted, y.stats.accepted);
+            assert_eq!(x.stats.rounds, y.stats.rounds);
+            assert_eq!(x.patches.len(), y.patches.len());
+            for (u, v) in x.patches.iter().zip(&y.patches) {
+                assert!((u - v).abs() < 1e-5, "cached {u} vs uncached {v}");
+            }
         }
     }
 }

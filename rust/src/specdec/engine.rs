@@ -1,4 +1,13 @@
 //! The decode loop: Algorithm 1 (practical) and Algorithm 2 (lossless).
+//!
+//! Since the decode-session refactor the loop drives two
+//! [`crate::models::DecodeSession`]s (target + draft) instead of stateless
+//! re-forwards: a round is γ draft `extend`s, one target `extend` that
+//! returns all γ+1 prefix-conditional means, an acceptance scan, and a
+//! `rollback` of the rejected suffix — with [`CacheMode::On`] the rollback
+//! rewinds KV caches instead of rebuilding context, turning a round's
+//! target cost from O(n²·d) into O(γ·n·d). [`CacheMode::Off`] reproduces
+//! the stateless cost model with identical outputs (the A/B baseline).
 
 use std::time::Instant;
 
@@ -6,7 +15,7 @@ use anyhow::Result;
 
 use super::stats::{DecodeOutput, DecodeStats, RoundStats};
 use crate::accept::AcceptancePolicy;
-use crate::models::Backend;
+use crate::models::{begin_session, Backend, CacheMode};
 use crate::util::rng::Rng;
 
 /// Which SD variant to run on rejection (paper §3.2 vs §3.3).
@@ -49,6 +58,11 @@ pub struct SpecConfig {
     pub max_residual_draws: usize,
     /// Emission protocol; see [`Emission`].
     pub emission: Emission,
+    /// KV-cache toggle: `On` uses incremental decode sessions where the
+    /// backend supports them; `Off` forces the stateless re-forward cost
+    /// model. Outputs are identical either way (pinned by
+    /// `tests/cache_equivalence.rs`); only wall-clock differs.
+    pub cache: CacheMode,
 }
 
 impl Default for SpecConfig {
@@ -60,6 +74,7 @@ impl Default for SpecConfig {
             seed: 0xC0FFEE,
             max_residual_draws: 10_000,
             emission: Emission::Mean,
+            cache: CacheMode::On,
         }
     }
 }
@@ -93,8 +108,11 @@ pub fn sd_generate(
     }
 
     let mut rng = Rng::new(cfg.seed);
-    // Working context: history ++ emitted patches (flat).
-    let mut ctx: Vec<f32> = history[..n_hist * p].to_vec();
+    // Long-lived decode sessions: both models carry the full emitted
+    // context; rejection rolls their state back instead of rebuilding it.
+    let mut t_sess = begin_session(target, cfg.cache, history, n_hist)?;
+    let mut d_sess = begin_session(draft, cfg.cache, history, n_hist)?;
+    let max_ctx = target.max_ctx().min(draft.max_ctx());
     let mut emitted = 0usize;
     let mut out_patches: Vec<f32> = Vec::with_capacity(horizon * p);
     let mut rounds = Vec::new();
@@ -103,28 +121,31 @@ pub fn sd_generate(
     while emitted < horizon {
         let remaining = horizon - emitted;
         // A round emits up to gamma+1; don't overshoot the horizon.
-        let gamma = cfg.gamma.min(remaining.saturating_sub(1)).max(0);
+        let gamma = cfg.gamma.min(remaining.saturating_sub(1));
 
-        // Slide the context window so validation fits in max_ctx.
-        let max_ctx = target.max_ctx().min(draft.max_ctx());
+        // Slide both windows in lockstep so validation fits in the joint
+        // max_ctx (sessions also self-evict, but the shared rule keeps
+        // target and draft contexts aligned patch-for-patch).
         let need = gamma + 1; // proposed patches appended before validation
-        let n_ctx_now = ctx.len() / p;
+        let n_ctx_now = t_sess.len();
         if n_ctx_now + need > max_ctx {
+            anyhow::ensure!(need < max_ctx, "gamma {gamma} cannot fit in max_ctx {max_ctx}");
             let keep = max_ctx - need;
-            let drop = n_ctx_now - keep;
-            ctx.drain(..drop * p);
+            t_sess.evict_to(keep)?;
+            d_sess.evict_to(keep)?;
         }
-        let n0 = ctx.len() / p;
 
         if gamma == 0 {
-            // Horizon tail: plain target AR step.
+            // Horizon tail: plain target AR step off the session tip.
             let t0 = Instant::now();
-            let means = target.forward(&ctx, n0)?;
+            let mu_p = t_sess.tip_mean()?;
+            let patch = emit_patch(&mu_p, cfg, &mut rng);
+            t_sess.append(&patch, 1)?;
             let tt = t0.elapsed();
-            let mu_p = &means[(n0 - 1) * p..n0 * p];
-            let patch = emit_patch(mu_p, cfg, &mut rng);
+            let t1 = Instant::now();
+            d_sess.append(&patch, 1)?;
+            let dt = t1.elapsed();
             out_patches.extend_from_slice(&patch);
-            ctx.extend_from_slice(&patch);
             emitted += 1;
             let r = RoundStats {
                 gamma: 0,
@@ -132,7 +153,7 @@ pub fn sd_generate(
                 emitted: 1,
                 alphas: vec![],
                 residual_draws: 0,
-                draft_time: Default::default(),
+                draft_time: dt,
                 target_time: tt,
             };
             stats.absorb(&r);
@@ -141,32 +162,39 @@ pub fn sd_generate(
         }
 
         // --- Draft proposes gamma patches autoregressively (Alg. 1 l.1-3).
+        // The first mean comes off the session tip; each proposal i < γ-1
+        // is pushed through `extend` to produce the next mean. Proposal
+        // γ-1 is only needed by target validation, so it never enters the
+        // draft context (nothing would read its successor mean).
+        let t0 = Instant::now();
+        let mut mu_q = d_sess.tip_mean()?;
+        let mut draft_time = t0.elapsed();
         let mut proposals: Vec<Vec<f32>> = Vec::with_capacity(gamma);
         let mut mu_qs: Vec<Vec<f32>> = Vec::with_capacity(gamma);
-        let t0 = Instant::now();
         for i in 0..gamma {
-            let n = n0 + i;
-            let means = draft.forward(&ctx, n)?;
-            let mu_q = means[(n - 1) * p..n * p].to_vec();
-            let x: Vec<f32> = {
-                let mut buf = vec![0.0f32; p];
-                rng.fill_normal_around(&mu_q, cfg.policy.sigma as f32, &mut buf);
-                buf
-            };
-            ctx.extend_from_slice(&x);
+            let mut x = vec![0.0f32; p];
+            rng.fill_normal_around(&mu_q, cfg.policy.sigma as f32, &mut x);
             proposals.push(x);
-            mu_qs.push(mu_q);
+            mu_qs.push(mu_q.clone());
+            if i + 1 < gamma {
+                let td = Instant::now();
+                let rows = d_sess.extend(proposals.last().unwrap(), 1)?;
+                draft_time += td.elapsed();
+                mu_q = rows[p..].to_vec();
+            }
         }
-        let draft_time = t0.elapsed();
 
-        // --- One batched target pass over history + proposals (l.4).
-        let n_val = n0 + gamma;
+        // --- One target pass validates all gamma+1 prefix conditionals
+        // (l.4): `extend` returns the means at positions n0-1 ..= n0+γ-1,
+        // i.e. mu_p for every proposal plus the bonus patch.
+        let mut flat = Vec::with_capacity(gamma * p);
+        for x in &proposals {
+            flat.extend_from_slice(x);
+        }
         let t1 = Instant::now();
-        let target_means = target.forward(&ctx, n_val)?;
-        let target_time = t1.elapsed();
-        // mu_p for proposal i (0-based) = output at position n0 - 1 + i;
-        // the bonus patch mean is output at position n_val - 1.
-        let mu_p_at = |i: usize| &target_means[(n0 - 1 + i) * p..(n0 + i) * p];
+        let val_rows = t_sess.extend(&flat, gamma)?;
+        let mut target_time = t1.elapsed();
+        let mu_p_at = |i: usize| &val_rows[i * p..(i + 1) * p];
 
         // --- Acceptance scan (l.5-8).
         let mut alphas = Vec::with_capacity(gamma);
@@ -183,17 +211,50 @@ pub fn sd_generate(
             }
         }
 
-        // Truncate context back to the accepted prefix, then emit per the
-        // emission protocol (context always carries what was emitted so the
-        // reported forecast is self-consistent).
-        ctx.truncate(n0 * p);
-        for i in 0..accepted {
-            let emitted_patch: &[f32] = match cfg.emission {
-                Emission::Sampled => &proposals[i],
-                Emission::Mean => &mu_qs[i],
-            };
-            out_patches.extend_from_slice(emitted_patch);
-            ctx.extend_from_slice(emitted_patch);
+        // --- Rewind to the accepted prefix (the KV-cache rollback that
+        // replaces the old truncate-and-rebuild), then emit per protocol.
+        // The draft session holds γ-1 proposals, the target session γ.
+        let keep_d = accepted.min(gamma - 1);
+        match cfg.emission {
+            Emission::Sampled => {
+                // Accepted proposals are already in both contexts.
+                let t2 = Instant::now();
+                t_sess.rollback(gamma - accepted)?;
+                target_time += t2.elapsed();
+                let t3 = Instant::now();
+                d_sess.rollback((gamma - 1) - keep_d)?;
+                if accepted > keep_d {
+                    // All γ accepted: proposal γ-1 never entered the draft.
+                    d_sess.append(proposals.last().unwrap(), 1)?;
+                }
+                draft_time += t3.elapsed();
+                for x in &proposals[..accepted] {
+                    out_patches.extend_from_slice(x);
+                }
+            }
+            Emission::Mean => {
+                // Contexts must carry the emitted draft means, not the
+                // sampled proposals: rewind everything and re-append.
+                let t2 = Instant::now();
+                t_sess.rollback(gamma)?;
+                target_time += t2.elapsed();
+                let t3 = Instant::now();
+                d_sess.rollback(gamma - 1)?;
+                draft_time += t3.elapsed();
+                let mut emit_flat = Vec::with_capacity(accepted * p);
+                for m in &mu_qs[..accepted] {
+                    emit_flat.extend_from_slice(m);
+                }
+                if accepted > 0 {
+                    let t4 = Instant::now();
+                    t_sess.append(&emit_flat, accepted)?;
+                    target_time += t4.elapsed();
+                    let t5 = Instant::now();
+                    d_sess.append(&emit_flat, accepted)?;
+                    draft_time += t5.elapsed();
+                }
+                out_patches.extend_from_slice(&emit_flat);
+            }
         }
 
         let mut residual_draws = 0usize;
@@ -238,7 +299,12 @@ pub fn sd_generate(
             }
         };
         out_patches.extend_from_slice(&final_patch);
-        ctx.extend_from_slice(&final_patch);
+        let t6 = Instant::now();
+        t_sess.append(&final_patch, 1)?;
+        target_time += t6.elapsed();
+        let t7 = Instant::now();
+        d_sess.append(&final_patch, 1)?;
+        draft_time += t7.elapsed();
         // Residual thinning consumes no extra target *forwards* (it samples
         // from the already-computed head); `residual_draws` records the
         // draw count for the §B.6 cost analysis.
@@ -292,6 +358,36 @@ mod tests {
             seed,
             max_residual_draws: 10_000,
             emission: Emission::Sampled,
+            cache: CacheMode::On,
+        }
+    }
+
+    /// Cache on/off must be RNG-stream and decision identical. On the
+    /// native backend (the one with a real KV cache) incremental and
+    /// stateless forwards share the exact op order, so whole decodes —
+    /// including window slides past max_ctx — come out the same.
+    #[test]
+    fn cache_toggle_is_observationally_identical() {
+        use crate::models::NativeBackend;
+        use crate::nn::model::tiny_model;
+        let t = NativeBackend::new(tiny_model(31));
+        let d = NativeBackend::new(tiny_model(32));
+        let hist = [0.4f32, -0.2, 0.1, 0.7, 0.0, 0.3, -0.5, 0.2]; // 2 patches
+        for variant in [Variant::Practical, Variant::Lossless] {
+            let mut on = cfg(3, 0.4, variant, 11);
+            on.cache = CacheMode::On;
+            let mut off = on;
+            off.cache = CacheMode::Off;
+            // horizon 17 with n_ctx 8 forces repeated eviction.
+            let a = sd_generate(&t, &d, &hist, 2, 17, &on).unwrap();
+            let b = sd_generate(&t, &d, &hist, 2, 17, &off).unwrap();
+            assert_eq!(a.stats.accepted, b.stats.accepted, "{variant:?}");
+            assert_eq!(a.stats.proposals, b.stats.proposals);
+            assert_eq!(a.stats.rounds, b.stats.rounds);
+            assert_eq!(a.patches.len(), b.patches.len());
+            for (x, y) in a.patches.iter().zip(&b.patches) {
+                assert!((x - y).abs() < 1e-5, "{variant:?}: {x} vs {y}");
+            }
         }
     }
 

@@ -1,0 +1,234 @@
+//! Equivalence suite for the KV-cached decode sessions: cached forwards
+//! must reproduce the stateless `forward()` path within 1e-5 for single
+//! and batched decode, including after mid-sequence `rollback()`, and
+//! ring-buffer eviction at max_ctx must match the stateless
+//! sliding-window rule. Property tests (proptest_lite) pin the session
+//! invariants: extend-then-rollback is an identity, eviction equals the
+//! window rule.
+
+use stride::models::{
+    begin_batch_session, begin_session, Backend, CacheMode, NativeBackend,
+};
+use stride::nn::{ModelDims, NativeModel};
+use stride::util::proptest_lite::{self, Pair, UsizeRange};
+use stride::util::rng::Rng;
+
+const TOL: f32 = 1e-5;
+
+fn dims(n_ctx: usize) -> ModelDims {
+    ModelDims { patch: 4, n_ctx, d_model: 16, n_layers: 2, n_heads: 2, d_ff: 32 }
+}
+
+fn model(n_ctx: usize, seed: u64) -> NativeBackend {
+    NativeBackend::new(NativeModel::random("m", dims(n_ctx), seed))
+}
+
+fn tokens(n: usize, seed: u64) -> Vec<f32> {
+    let mut rng = Rng::new(seed);
+    (0..n * 4).map(|_| rng.normal() as f32).collect()
+}
+
+fn assert_close(a: &[f32], b: &[f32], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length mismatch");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert!((x - y).abs() < TOL, "{what}: [{i}] cached {x} vs stateless {y}");
+    }
+}
+
+#[test]
+fn cached_extend_matches_stateless_forward() {
+    // For several (n_hist, k) splits, session prefill + extend must equal
+    // one stateless forward over the concatenated sequence.
+    let b = model(32, 1);
+    for seed in 0..5u64 {
+        let toks = tokens(12, 100 + seed);
+        for (n_hist, k) in [(1usize, 1usize), (1, 11), (4, 3), (8, 4), (11, 1)] {
+            let full = b.forward(&toks[..(n_hist + k) * 4], n_hist + k).unwrap();
+            let mut sess =
+                begin_session(&b, CacheMode::On, &toks[..n_hist * 4], n_hist).unwrap();
+            let rows = sess.extend(&toks[n_hist * 4..(n_hist + k) * 4], k).unwrap();
+            // rows = outputs at positions n_hist-1 ..= n_hist+k-1.
+            assert_close(
+                &rows,
+                &full[(n_hist - 1) * 4..(n_hist + k) * 4],
+                &format!("seed {seed} n_hist {n_hist} k {k}"),
+            );
+        }
+    }
+}
+
+#[test]
+fn cached_rollback_midsequence_matches_stateless() {
+    // extend a, rollback r, extend different patches: outputs must equal a
+    // stateless forward over the spliced sequence — the exact state a
+    // speculative rejection leaves behind.
+    let b = model(32, 2);
+    let toks = tokens(10, 7);
+    let alt = tokens(6, 8);
+    let mut sess = begin_session(&b, CacheMode::On, &toks[..4 * 4], 4).unwrap();
+    let _ = sess.extend(&toks[4 * 4..10 * 4], 6).unwrap();
+    sess.rollback(4).unwrap(); // keep 6 patches
+    let rows = sess.extend(&alt[..3 * 4], 3).unwrap();
+
+    let mut spliced = toks[..6 * 4].to_vec();
+    spliced.extend_from_slice(&alt[..3 * 4]);
+    let full = b.forward(&spliced, 9).unwrap();
+    assert_close(&rows, &full[5 * 4..9 * 4], "rollback+reextend");
+    let tip = sess.tip_mean().unwrap();
+    assert_close(&tip, &full[8 * 4..9 * 4], "tip after rollback+reextend");
+}
+
+#[test]
+fn cached_batch_matches_stateless_per_sequence() {
+    let b = model(32, 3);
+    let h1 = tokens(3, 11);
+    let h2 = tokens(7, 12);
+    let tasks: Vec<(&[f32], usize)> = vec![(&h1, 3), (&h2, 7)];
+    let mut bs = begin_batch_session(&b, CacheMode::On, &tasks).unwrap();
+    let fresh = tokens(2, 13);
+    let rows = bs.extend(&[0, 1], &[&fresh[..2 * 4], &fresh[..2 * 4]].concat(), 2).unwrap();
+
+    let cases: [(usize, &[f32], usize); 2] = [(0, &h1, 3), (1, &h2, 7)];
+    for (ai, hist, n_hist) in cases {
+        let mut seq = hist[..n_hist * 4].to_vec();
+        seq.extend_from_slice(&fresh[..2 * 4]);
+        let full = b.forward(&seq, n_hist + 2).unwrap();
+        let per_seq = &rows[ai * 3 * 4..(ai + 1) * 3 * 4];
+        assert_close(per_seq, &full[(n_hist - 1) * 4..(n_hist + 2) * 4], "batched row");
+    }
+}
+
+#[test]
+fn batched_per_sequence_rollback_independent() {
+    // Rolling back one sequence must not disturb the other's state.
+    let b = model(32, 4);
+    let h1 = tokens(4, 21);
+    let h2 = tokens(4, 22);
+    let tasks: Vec<(&[f32], usize)> = vec![(&h1, 4), (&h2, 4)];
+    let mut bs = begin_batch_session(&b, CacheMode::On, &tasks).unwrap();
+    let ext = tokens(3, 23);
+    let _ = bs.extend(&[0, 1], &[&ext[..3 * 4], &ext[..3 * 4]].concat(), 3).unwrap();
+    bs.rollback(0, 2).unwrap();
+    assert_eq!(bs.len(0), 5);
+    assert_eq!(bs.len(1), 7);
+    // Sequence 1's tip must still equal the stateless forward of its full
+    // 7-patch context.
+    let mut seq2 = h2[..4 * 4].to_vec();
+    seq2.extend_from_slice(&ext[..3 * 4]);
+    let full = b.forward(&seq2, 7).unwrap();
+    let tips = bs.tip_means(&[1]).unwrap();
+    assert_close(&tips, &full[6 * 4..7 * 4], "untouched sequence tip");
+}
+
+#[test]
+fn eviction_at_max_ctx_matches_sliding_window() {
+    // Push a session far past max_ctx one patch at a time; at every step
+    // the tip must equal a stateless forward over the trailing window —
+    // for both cache modes.
+    let n_ctx = 8;
+    let b = model(n_ctx, 5);
+    let toks = tokens(20, 31);
+    for mode in [CacheMode::On, CacheMode::Off] {
+        let mut sess = begin_session(&b, mode, &toks[..4 * 4], 4).unwrap();
+        for t in 4..20 {
+            let tip = sess.tip_mean().unwrap();
+            let n = sess.len();
+            let start = t - n;
+            let full = b.forward(&toks[start * 4..t * 4], n).unwrap();
+            assert_close(&tip, &full[(n - 1) * 4..n * 4], &format!("{mode:?} step {t}"));
+            sess.append(&toks[t * 4..(t + 1) * 4], 1).unwrap();
+            assert!(sess.len() <= n_ctx, "window exceeded max_ctx");
+        }
+    }
+}
+
+#[test]
+fn cache_modes_agree_after_eviction() {
+    // Same drive sequence in both modes: lengths and tips must agree at
+    // every step (the ring-buffer eviction rule IS the sliding-window
+    // rule).
+    let b = model(8, 6);
+    let toks = tokens(26, 41);
+    let mut on = begin_session(&b, CacheMode::On, &toks[..2 * 4], 2).unwrap();
+    let mut off = begin_session(&b, CacheMode::Off, &toks[..2 * 4], 2).unwrap();
+    for t in 2..26 {
+        assert_eq!(on.len(), off.len(), "lengths diverged at step {t}");
+        assert_close(
+            &on.tip_mean().unwrap(),
+            &off.tip_mean().unwrap(),
+            &format!("tip at step {t}"),
+        );
+        on.append(&toks[t * 4..(t + 1) * 4], 1).unwrap();
+        off.append(&toks[t * 4..(t + 1) * 4], 1).unwrap();
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Property tests (proptest_lite): session invariants over random shapes.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_extend_then_rollback_is_identity() {
+    // For random (n_hist, k): extend(k) then rollback(k) restores len,
+    // context, and tip mean exactly.
+    let b = model(32, 9);
+    proptest_lite::check_with(
+        proptest_lite::Config { cases: 40, seed: 0xCAFE, max_shrink_rounds: 50 },
+        &Pair(UsizeRange(1, 12), UsizeRange(1, 8)),
+        |&(n_hist, k)| {
+            let toks = tokens(n_hist + k, 1000 + (n_hist * 31 + k) as u64);
+            let mut sess = begin_session(&b, CacheMode::On, &toks[..n_hist * 4], n_hist)
+                .map_err(|e| e.to_string())?;
+            let tip0 = sess.tip_mean().map_err(|e| e.to_string())?;
+            let ctx0 = sess.context().to_vec();
+            let _ = sess
+                .extend(&toks[n_hist * 4..(n_hist + k) * 4], k)
+                .map_err(|e| e.to_string())?;
+            sess.rollback(k).map_err(|e| e.to_string())?;
+            if sess.len() != n_hist {
+                return Err(format!("len {} != {}", sess.len(), n_hist));
+            }
+            if sess.context() != ctx0.as_slice() {
+                return Err("context changed".into());
+            }
+            let tip1 = sess.tip_mean().map_err(|e| e.to_string())?;
+            if tip0 != tip1 {
+                return Err(format!("tip changed: {tip0:?} vs {tip1:?}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_eviction_matches_stateless_window() {
+    // For random total lengths past max_ctx, the cached session's tip
+    // equals a stateless forward over the trailing max_ctx window.
+    let n_ctx = 8;
+    let b = model(n_ctx, 10);
+    proptest_lite::check_with(
+        proptest_lite::Config { cases: 30, seed: 0xBEEF, max_shrink_rounds: 50 },
+        &UsizeRange(9, 24),
+        |&total| {
+            let toks = tokens(total, 2000 + total as u64);
+            let mut sess = begin_session(&b, CacheMode::On, &toks[..4 * 4], 4)
+                .map_err(|e| e.to_string())?;
+            for t in 4..total {
+                sess.append(&toks[t * 4..(t + 1) * 4], 1).map_err(|e| e.to_string())?;
+            }
+            let n = sess.len();
+            if n > n_ctx {
+                return Err(format!("len {n} exceeds max_ctx {n_ctx}"));
+            }
+            let start = total - n;
+            let full = b.forward(&toks[start * 4..total * 4], n).map_err(|e| e.to_string())?;
+            let tip = sess.tip_mean().map_err(|e| e.to_string())?;
+            for (x, y) in tip.iter().zip(&full[(n - 1) * 4..n * 4]) {
+                if (x - y).abs() >= TOL {
+                    return Err(format!("tip {x} vs window {y}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}

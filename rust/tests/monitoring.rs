@@ -20,6 +20,7 @@ fn spec(sigma: f64, seed: u64) -> SpecConfig {
         seed,
         max_residual_draws: 100,
         emission: Emission::Sampled,
+        cache: stride::models::CacheMode::On,
     }
 }
 

@@ -22,6 +22,7 @@ fn spec(gamma: usize, sigma: f64, variant: Variant, seed: u64) -> SpecConfig {
         seed,
         max_residual_draws: 10_000,
         emission: stride::specdec::Emission::Sampled,
+        cache: stride::models::CacheMode::On,
     }
 }
 
@@ -208,6 +209,129 @@ fn measured_speedup_components_track_theory() {
             (mean_l - want).abs() / want < 0.08,
             "gamma={gamma}: measured E[L] {mean_l:.3} vs theory {want:.3} (alpha {alpha:.3})"
         );
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Cache regression suite: the KV-cached decode path must not move a single
+// statistic. Cached and uncached runs share the RNG stream (the engine
+// consumes randomness identically in both modes), and the native backend's
+// incremental forward reproduces the stateless op order, so acceptance
+// decisions — not just rates — must match decode-for-decode.
+// ---------------------------------------------------------------------------
+
+fn tiny_native_pair() -> (stride::models::NativeBackend, stride::models::NativeBackend) {
+    use stride::models::NativeBackend;
+    use stride::nn::{ModelDims, NativeModel};
+    let dims = ModelDims { patch: 4, n_ctx: 24, d_model: 16, n_layers: 2, n_heads: 2, d_ff: 32 };
+    let draft_dims =
+        ModelDims { patch: 4, n_ctx: 24, d_model: 8, n_layers: 1, n_heads: 2, d_ff: 16 };
+    (
+        NativeBackend::new(NativeModel::random("t", dims, 101)),
+        NativeBackend::new(NativeModel::random("d", draft_dims, 202)),
+    )
+}
+
+/// Run many decodes in both cache modes; assert acceptance rate, per-round
+/// accepted-patch histogram, alpha-hat, and MSE against a fixed reference
+/// are *identical* (same RNG stream, same decisions).
+fn assert_cache_modes_agree(variant: Variant, emission: stride::specdec::Emission) {
+    use stride::models::CacheMode;
+    use stride::util::tensor::mse_mae;
+    let (t, d) = tiny_native_pair();
+    let hist: Vec<f32> = (0..4 * 4).map(|i| (i as f32 * 0.23).sin()).collect();
+    let reference: Vec<f32> = (0..10 * 4).map(|i| (i as f32 * 0.23 + 0.4).sin()).collect();
+    let gamma = 3;
+
+    // Per-round accepted-count histogram (0..=gamma) across all decodes.
+    let mut hist_on = vec![0usize; gamma + 1];
+    let mut hist_off = vec![0usize; gamma + 1];
+    let (mut rate_on, mut rate_off) = ((0usize, 0usize), (0usize, 0usize));
+    let (mut alpha_on, mut alpha_off) = ((0.0f64, 0usize), (0.0f64, 0usize));
+    let (mut mse_on, mut mse_off) = (0.0f64, 0.0f64);
+
+    for seed in 0..60u64 {
+        let mut on = spec(gamma, 0.5, variant, seed);
+        on.emission = emission;
+        on.cache = CacheMode::On;
+        let mut off = on;
+        off.cache = CacheMode::Off;
+        let a = sd_generate(&t, &d, &hist, 4, 10, &on).unwrap();
+        let b = sd_generate(&t, &d, &hist, 4, 10, &off).unwrap();
+
+        assert_eq!(a.rounds.len(), b.rounds.len(), "seed {seed}: round count drifted");
+        for (ra, rb) in a.rounds.iter().zip(&b.rounds) {
+            assert_eq!(ra.accepted, rb.accepted, "seed {seed}: accepted-run drifted");
+            assert_eq!(ra.gamma, rb.gamma);
+            if ra.gamma > 0 {
+                hist_on[ra.accepted] += 1;
+                hist_off[rb.accepted] += 1;
+            }
+            for (x, y) in ra.alphas.iter().zip(&rb.alphas) {
+                assert!((x - y).abs() < 1e-9, "seed {seed}: alpha drifted {x} vs {y}");
+            }
+        }
+        rate_on = (rate_on.0 + a.stats.accepted, rate_on.1 + a.stats.proposals);
+        rate_off = (rate_off.0 + b.stats.accepted, rate_off.1 + b.stats.proposals);
+        alpha_on = (alpha_on.0 + a.stats.sum_alpha, alpha_on.1 + a.stats.alpha_count);
+        alpha_off = (alpha_off.0 + b.stats.sum_alpha, alpha_off.1 + b.stats.alpha_count);
+        mse_on += mse_mae(&a.patches, &reference).0;
+        mse_off += mse_mae(&b.patches, &reference).0;
+    }
+
+    assert_eq!(hist_on, hist_off, "accepted-patch histograms drifted");
+    assert_eq!(rate_on, rate_off, "acceptance rate drifted");
+    assert_eq!(alpha_on.1, alpha_off.1);
+    assert!((alpha_on.0 - alpha_off.0).abs() < 1e-6, "alpha-hat drifted");
+    // MSE delta vs the fixed reference: identical emissions => identical
+    // (within f32 accumulation) error.
+    assert!(
+        (mse_on - mse_off).abs() < 1e-6,
+        "MSE drifted: cached {mse_on} vs uncached {mse_off}"
+    );
+    // Sanity: the suite exercised both acceptances and rejections — an
+    // all-accept (or all-reject) run would make the comparison vacuous.
+    assert!(rate_on.0 > 0, "no acceptances — test has no power");
+    assert!(rate_on.0 < rate_on.1, "no rejections — test has no power");
+}
+
+#[test]
+fn cached_specdec_statistics_identical_practical() {
+    assert_cache_modes_agree(Variant::Practical, stride::specdec::Emission::Sampled);
+}
+
+#[test]
+fn cached_specdec_statistics_identical_practical_mean_emission() {
+    assert_cache_modes_agree(Variant::Practical, stride::specdec::Emission::Mean);
+}
+
+#[test]
+fn cached_specdec_statistics_identical_lossless() {
+    assert_cache_modes_agree(Variant::Lossless, stride::specdec::Emission::Sampled);
+}
+
+#[test]
+fn cached_batched_specdec_statistics_identical() {
+    use stride::models::CacheMode;
+    use stride::specdec::sd_generate_batch;
+    let (t, d) = tiny_native_pair();
+    let h1: Vec<f32> = (0..3 * 4).map(|i| (i as f32 * 0.31).sin()).collect();
+    let h2: Vec<f32> = (0..5 * 4).map(|i| (i as f32 * 0.19).cos()).collect();
+    let tasks: Vec<(&[f32], usize, usize)> = vec![(&h1, 3, 9), (&h2, 5, 6)];
+    let mut on = spec(3, 0.5, Variant::Practical, 77);
+    on.cache = CacheMode::On;
+    let mut off = on;
+    off.cache = CacheMode::Off;
+    let a = sd_generate_batch(&t, &d, &tasks, &on).unwrap();
+    let b = sd_generate_batch(&t, &d, &tasks, &off).unwrap();
+    for (x, y) in a.iter().zip(&b) {
+        assert_eq!(x.stats.accepted, y.stats.accepted);
+        assert_eq!(x.stats.proposals, y.stats.proposals);
+        assert_eq!(x.stats.rounds, y.stats.rounds);
+        assert_eq!(x.stats.sum_block_len, y.stats.sum_block_len);
+        for (u, v) in x.patches.iter().zip(&y.patches) {
+            assert!((u - v).abs() < 1e-5);
+        }
     }
 }
 

@@ -1,0 +1,26 @@
+#!/usr/bin/env bash
+# Tier-1 verify in one command: release build, full test suite, and a
+# quick perf_hotpath smoke (the cached-vs-uncached sweep runs in its
+# STRIDE_BENCH_QUICK=1 trim). Usage: scripts/ci.sh [--no-bench]
+set -euo pipefail
+
+cd "$(dirname "$0")/../rust"
+
+if ! command -v cargo >/dev/null 2>&1; then
+    echo "error: cargo not found on PATH — install the Rust toolchain" >&2
+    echo "       (rustup.rs), then re-run scripts/ci.sh" >&2
+    exit 1
+fi
+
+echo "== cargo build --release =="
+cargo build --release
+
+echo "== cargo test -q =="
+cargo test -q
+
+if [[ "${1:-}" != "--no-bench" ]]; then
+    echo "== perf_hotpath smoke (STRIDE_BENCH_QUICK=1) =="
+    STRIDE_BENCH_QUICK=1 cargo bench --bench perf_hotpath
+fi
+
+echo "CI OK"
