@@ -1,8 +1,11 @@
 //! L3 hot-path microbenchmarks (the §Perf profile targets): acceptance
 //! math, Gaussian sampling, literal marshalling (PJRT boundary), JSON
 //! parse/serialize of the wire protocol, end-to-end forward costs per
-//! backend, and the KV-cache sweep (cached vs uncached decode cost vs
-//! context length — the fig-style table behind the decode-session PR).
+//! backend, the KV-cache sweep (cached vs uncached decode cost vs
+//! context length — the fig-style table behind the decode-session PR),
+//! and the kernel-layer comparison (packed/arena/blocked vs the
+//! pre-kernel-layer naive kernel, serial vs row-parallel matmul) emitted
+//! machine-readably to `results/BENCH_perf_hotpath.json` for CI.
 //! These are the numbers the performance pass iterates on.
 
 use std::time::Duration;
@@ -14,6 +17,8 @@ use stride::nn::{ModelDims, NativeModel};
 use stride::specdec::{sd_generate, SpecConfig};
 use stride::util::microbench::{bencher_from_env, Bencher, Table};
 use stride::util::rng::Rng;
+use stride::util::tensor::{matmul, matmul_parallel};
+use stride::util::threadpool::global_pool;
 
 fn main() -> anyhow::Result<()> {
     let b = bencher_from_env();
@@ -167,6 +172,192 @@ fn main() -> anyhow::Result<()> {
         sweep.print();
         sweep.write_csv("results/perf_hotpath_cached.csv")?;
         println!("wrote results/perf_hotpath_cached.csv");
+    }
+
+    // --- Kernel layer: packed weights + scratch arena + blocked matmul
+    // ("after") vs the pre-kernel-layer reference kernel behind the flag
+    // ("before" = string-keyed lookups, per-call allocation, naive ikj
+    // matmul), plus serial vs row-parallel matmul at prefill shape. The
+    // perf trajectory for this layer is tracked machine-readably in
+    // results/BENCH_perf_hotpath.json; scripts/ci.sh fails on NaN or
+    // empty output.
+    {
+        let dims =
+            ModelDims { patch: 8, n_ctx: 256, d_model: 128, n_layers: 2, n_heads: 4, d_ff: 256 };
+        let draft_dims =
+            ModelDims { patch: 8, n_ctx: 256, d_model: 64, n_layers: 1, n_heads: 2, d_ff: 128 };
+        let target = NativeBackend::new(NativeModel::random("kt", dims, 5));
+        let draft = NativeBackend::new(NativeModel::random("kd", draft_dims, 6));
+        let mut target_ref = NativeBackend::new(NativeModel::random("kt", dims, 5));
+        target_ref.set_reference_kernel(true);
+        let mut draft_ref = NativeBackend::new(NativeModel::random("kd", draft_dims, 6));
+        draft_ref.set_reference_kernel(true);
+        let mut rng = Rng::new(7);
+        let hist: Vec<f32> =
+            (0..dims.n_ctx * dims.patch).map(|_| rng.normal() as f32).collect();
+        let quick = std::env::var("STRIDE_BENCH_QUICK").as_deref() == Ok("1");
+        let kb = Bencher {
+            warmup: Duration::from_millis(if quick { 20 } else { 100 }),
+            measure: Duration::from_millis(if quick { 150 } else { 800 }),
+            min_iters: 3,
+            max_iters: if quick { 20 } else { 200 },
+        };
+        let p = dims.patch;
+        let n = dims.n_ctx;
+
+        // Prefill: one stateless forward over the full context.
+        let r_pre = kb.run("kernel_prefill_packed", || {
+            std::hint::black_box(target.forward(&hist, n).unwrap());
+        });
+        let r_pre_ref = kb.run("kernel_prefill_naive", || {
+            std::hint::black_box(target_ref.forward(&hist, n).unwrap());
+        });
+
+        // AR step: one incremental extend at full context (+ rollback so
+        // the session state is identical every iteration).
+        let step = hist[(n - 1) * p..n * p].to_vec();
+        let mut sess = target.begin_cached(&hist, n - 1).unwrap();
+        let r_ar = kb.run("kernel_ar_step_packed", || {
+            std::hint::black_box(sess.extend(&step, 1).unwrap());
+            sess.rollback(1).unwrap();
+        });
+        let mut sess_ref = target_ref.begin_cached(&hist, n - 1).unwrap();
+        let r_ar_ref = kb.run("kernel_ar_step_naive", || {
+            std::hint::black_box(sess_ref.extend(&step, 1).unwrap());
+            sess_ref.rollback(1).unwrap();
+        });
+
+        // SD round: a full speculative decode (horizon 16, γ 3, cache on)
+        // normalized per round. Both kernel flavors decode identically
+        // (same acceptance decisions within fp tolerance), so ns/round is
+        // the like-for-like verify-path cost.
+        let n_hist = 128;
+        let spec = SpecConfig::default();
+        let rounds = sd_generate(&target, &draft, &hist, n_hist, 16, &spec)
+            .unwrap()
+            .stats
+            .rounds
+            .max(1) as f64;
+        let r_sd = kb.run("kernel_sd_decode_packed", || {
+            std::hint::black_box(
+                sd_generate(&target, &draft, &hist, n_hist, 16, &spec).unwrap(),
+            );
+        });
+        let rounds_ref = sd_generate(&target_ref, &draft_ref, &hist, n_hist, 16, &spec)
+            .unwrap()
+            .stats
+            .rounds
+            .max(1) as f64;
+        let r_sd_ref = kb.run("kernel_sd_decode_naive", || {
+            std::hint::black_box(
+                sd_generate(&target_ref, &draft_ref, &hist, n_hist, 16, &spec).unwrap(),
+            );
+        });
+        let sd_round = r_sd.mean_ns / rounds;
+        let sd_round_ref = r_sd_ref.mean_ns / rounds_ref;
+
+        // Matmul at prefill shape: serial blocked kernel vs the
+        // row-partitioned pool path (bitwise identical results).
+        let (mm, mk, mn) = (n, dims.d_model, 3 * dims.d_model);
+        let a: Vec<f32> = (0..mm * mk).map(|_| rng.normal() as f32).collect();
+        let b2: Vec<f32> = (0..mk * mn).map(|_| rng.normal() as f32).collect();
+        let mut c = vec![0.0f32; mm * mn];
+        let r_mm = kb.run("kernel_matmul_serial", || {
+            matmul(&a, &b2, mm, mk, mn, &mut c);
+            std::hint::black_box(&c);
+        });
+        let pool = global_pool();
+        let r_mmp = kb.run("kernel_matmul_parallel", || {
+            matmul_parallel(pool, &a, &b2, mm, mk, mn, &mut c);
+            std::hint::black_box(&c);
+        });
+
+        let mut ktab = Table::new(
+            "Perf: kernel layer (packed/arena/blocked vs naive reference)",
+            &["op", "naive", "packed", "speedup"],
+        );
+        let ms = |ns: f64| format!("{:.3}ms", ns / 1e6);
+        ktab.row(vec![
+            "prefill fwd n256".into(),
+            ms(r_pre_ref.mean_ns),
+            ms(r_pre.mean_ns),
+            format!("{:.2}x", r_pre_ref.mean_ns / r_pre.mean_ns),
+        ]);
+        ktab.row(vec![
+            "AR step n256".into(),
+            ms(r_ar_ref.mean_ns),
+            ms(r_ar.mean_ns),
+            format!("{:.2}x", r_ar_ref.mean_ns / r_ar.mean_ns),
+        ]);
+        ktab.row(vec![
+            "SD round g3".into(),
+            ms(sd_round_ref),
+            ms(sd_round),
+            format!("{:.2}x", sd_round_ref / sd_round),
+        ]);
+        ktab.row(vec![
+            format!("matmul {mm}x{mk}x{mn} (serial->par)"),
+            ms(r_mm.mean_ns),
+            ms(r_mmp.mean_ns),
+            format!("{:.2}x", r_mm.mean_ns / r_mmp.mean_ns),
+        ]);
+        ktab.print();
+
+        // Machine-readable record for CI and the perf trajectory. Every
+        // value is checked finite before writing so a NaN can never slip
+        // into the file silently (ci.sh also greps).
+        let vals = [
+            r_pre.mean_ns,
+            r_pre_ref.mean_ns,
+            r_ar.mean_ns,
+            r_ar_ref.mean_ns,
+            sd_round,
+            sd_round_ref,
+            r_mm.mean_ns,
+            r_mmp.mean_ns,
+        ];
+        anyhow::ensure!(
+            vals.iter().all(|v| v.is_finite() && *v > 0.0),
+            "kernel bench produced non-finite timings: {vals:?}"
+        );
+        let json = format!(
+            concat!(
+                "{{\n",
+                "  \"bench\": \"perf_hotpath_kernel\",\n",
+                "  \"threads\": {threads},\n",
+                "  \"quick\": {quick},\n",
+                "  \"dims\": {{\"patch\": {p}, \"n_ctx\": {n}, \"d_model\": {d}, ",
+                "\"n_layers\": {l}, \"n_heads\": {h}, \"d_ff\": {f}}},\n",
+                "  \"prefill_ns\": {{\"naive\": {pre_ref:.0}, \"packed\": {pre:.0}, \"speedup\": {pre_s:.3}}},\n",
+                "  \"ar_step_ns\": {{\"naive\": {ar_ref:.0}, \"packed\": {ar:.0}, \"speedup\": {ar_s:.3}}},\n",
+                "  \"sd_round_ns\": {{\"naive\": {sd_ref:.0}, \"packed\": {sd:.0}, \"speedup\": {sd_s:.3}}},\n",
+                "  \"matmul_ns\": {{\"serial\": {mm_s_ns:.0}, \"parallel\": {mm_p_ns:.0}, \"speedup\": {mm_sp:.3}}}\n",
+                "}}\n"
+            ),
+            threads = pool.size(),
+            quick = quick,
+            p = p,
+            n = n,
+            d = dims.d_model,
+            l = dims.n_layers,
+            h = dims.n_heads,
+            f = dims.d_ff,
+            pre_ref = r_pre_ref.mean_ns,
+            pre = r_pre.mean_ns,
+            pre_s = r_pre_ref.mean_ns / r_pre.mean_ns,
+            ar_ref = r_ar_ref.mean_ns,
+            ar = r_ar.mean_ns,
+            ar_s = r_ar_ref.mean_ns / r_ar.mean_ns,
+            sd_ref = sd_round_ref,
+            sd = sd_round,
+            sd_s = sd_round_ref / sd_round,
+            mm_s_ns = r_mm.mean_ns,
+            mm_p_ns = r_mmp.mean_ns,
+            mm_sp = r_mm.mean_ns / r_mmp.mean_ns,
+        );
+        std::fs::create_dir_all("results")?;
+        std::fs::write("results/BENCH_perf_hotpath.json", &json)?;
+        println!("wrote results/BENCH_perf_hotpath.json");
     }
 
     // Backend forwards (the dominant cost; includes the PJRT literal

@@ -95,6 +95,11 @@ pub struct ServeConfig {
     /// stateless re-forward cost model — outputs identical, wall-clock
     /// isn't; the A/B switch behind the cached-vs-uncached bench columns.
     pub cache: bool,
+    /// Worker threads for the native kernel layer's shared compute pool
+    /// (row-parallel prefill matmuls + the batched-verify fan-out).
+    /// 0 = auto (`STRIDE_THREADS` env, else available parallelism capped
+    /// at 8). Results are bitwise identical for any value.
+    pub threads: usize,
     pub artifacts: PathBuf,
     pub seed: u64,
 }
@@ -116,6 +121,7 @@ impl Default for ServeConfig {
             adaptive_gamma: false,
             baseline: false,
             cache: true,
+            threads: 0,
             artifacts: crate::artifacts_dir(),
             seed: 0xC0FFEE,
         }
@@ -142,6 +148,7 @@ impl ServeConfig {
                 "adaptive_gamma" => self.adaptive_gamma = v.as_bool().context("adaptive_gamma")?,
                 "baseline" => self.baseline = v.as_bool().context("baseline")?,
                 "cache" => self.cache = v.as_bool().context("cache")?,
+                "threads" => self.threads = v.as_usize().context("threads")?,
                 "artifacts" => self.artifacts = PathBuf::from(v.as_str().context("artifacts")?),
                 "seed" => self.seed = v.as_usize().context("seed")? as u64,
                 other => bail!("unknown config key: {other}"),
@@ -202,6 +209,9 @@ impl ServeConfig {
             self.cache = false;
         } else if cli.flag("cache") {
             self.cache = true;
+        }
+        if let Some(v) = cli.get_usize("threads")? {
+            self.threads = v;
         }
         if let Some(v) = cli.get("artifacts") {
             self.artifacts = PathBuf::from(v);
@@ -302,6 +312,17 @@ mod tests {
         assert_eq!(sc.emission, Emission::Mean);
         assert!((sc.policy.sigma - 0.6).abs() < 1e-12);
         assert_eq!(sc.cache, CacheMode::On);
+    }
+
+    #[test]
+    fn threads_plumbing() {
+        let mut cfg = ServeConfig::default();
+        assert_eq!(cfg.threads, 0, "default must be auto");
+        cfg.apply_json(&Json::parse(r#"{"threads": 4}"#).unwrap()).unwrap();
+        assert_eq!(cfg.threads, 4);
+        let cli = Cli::parse(args("--threads 2")).unwrap();
+        cfg.apply_cli(&cli).unwrap();
+        assert_eq!(cfg.threads, 2);
     }
 
     #[test]

@@ -30,6 +30,20 @@
 //!   cached-vs-uncached sweep (`results/perf_hotpath_cached.csv`).
 //!   Toggle: `ServeConfig::cache` / `--no-cache` / per-request
 //!   `"cache": false` / `SpecConfig::cache`.
+//! * [`nn::kernel`] — the native backend's **kernel layer**: weights are
+//!   resolved once at model construction into packed `Arc<Tensor>` handles
+//!   ([`nn::PackedWeights`] — no string-keyed lookups in any hot loop), a
+//!   [`nn::ForwardScratch`] arena owned by the [`nn::KvCache`] makes the
+//!   steady-state cached forward zero-allocation, and matmuls dispatch
+//!   serial (register-blocked micro-kernel) or row-parallel over the
+//!   shared [`util::threadpool::global_pool`] — bitwise identical for any
+//!   thread count (`--threads` / `STRIDE_THREADS`). The pre-kernel-layer
+//!   implementation survives behind a reference flag as the equivalence
+//!   baseline (`tests/kernel_equivalence.rs`,
+//!   `tests/alloc_discipline.rs`, and `results/BENCH_perf_hotpath.json`
+//!   pin correctness and the perf trajectory). Batched verify fans
+//!   per-sequence extends across the same pool, so a lockstep round costs
+//!   max-of-sequences wall clock instead of sum.
 //! * [`theory`] — Eqs. 2–6 closed forms, γ* rule, dependence bounds.
 //! * [`accept`] — log-space acceptance (Eq. 7) + the α̂ estimator (§3.5).
 //! * [`runtime`] — HLO-text → PJRT executable cache.

@@ -7,8 +7,20 @@
 //! instead of the stateless O(n²·d) re-forward. Rollback truncates the
 //! buffers (causality keeps the prefix valid); window eviction re-prefills
 //! the kept suffix because the learned absolute positions shift.
+//!
+//! Kernel-layer guarantees (see `models/README.md`):
+//! * **Zero-allocation steady state** — session token/mean buffers are
+//!   reserved to `max_ctx` up front and the forward arena lives inside the
+//!   `KvCache`, so a steady-state `extend` heap-allocates only the
+//!   trait-mandated return `Vec` (pinned by `tests/alloc_discipline.rs`).
+//! * **Parallel batched verify** — [`NativeBatchSession::extend`] fans the
+//!   per-sequence incremental forwards across the shared worker pool
+//!   ([`crate::util::threadpool::global_pool`]), so a lockstep round costs
+//!   max-of-sequences wall clock instead of sum. Each sequence runs the
+//!   identical serial code path, so results are bitwise independent of
+//!   the thread count (pinned by `tests/kernel_equivalence.rs`).
 
-use std::cell::RefCell;
+use std::sync::Mutex;
 
 use anyhow::Result;
 
@@ -18,21 +30,22 @@ use crate::nn::{KvCache, ModelDims, NativeModel, Weights};
 use crate::runtime::{Manifest, ModelEntry};
 use crate::util::stats::Summary;
 use crate::util::tensor::Tensor;
+use crate::util::threadpool::{global_pool, in_worker};
 
 pub struct NativeBackend {
     model: NativeModel,
-    timings: RefCell<Summary>,
+    timings: Mutex<Summary>,
 }
 
 impl NativeBackend {
     pub fn new(model: NativeModel) -> NativeBackend {
-        NativeBackend { model, timings: RefCell::new(Summary::new()) }
+        NativeBackend { model, timings: Mutex::new(Summary::new()) }
     }
 
     /// Load from a manifest model entry (weights blob + tensor index).
     pub fn from_entry(entry: &ModelEntry) -> Result<NativeBackend> {
         let w = Weights::load(&entry.weights_file, &entry.tensor_index)?;
-        Ok(NativeBackend::new(NativeModel::new(&entry.name, entry.dims, w)))
+        Ok(NativeBackend::new(NativeModel::new(&entry.name, entry.dims, w)?))
     }
 
     /// Load the (target, draft) pair from the artifacts manifest.
@@ -44,6 +57,13 @@ impl NativeBackend {
         &self.model.dims
     }
 
+    /// Route all forwards through the pre-kernel-layer reference
+    /// implementation — the `perf_hotpath` "before" flag and the baseline
+    /// of the kernel equivalence suite.
+    pub fn set_reference_kernel(&mut self, on: bool) {
+        self.model.set_reference(on);
+    }
+
     /// Start a KV-cached decode session primed with `history`
     /// (flat `[n_hist, patch]`, `n_hist >= 1`). One prefill forward fills
     /// the per-layer K/V buffers and the per-position means.
@@ -53,7 +73,8 @@ impl NativeBackend {
 
     /// Batched counterpart of [`NativeBackend::begin_cached`]: one cached
     /// session per `(history, n_hist)` task, with per-sequence rollback
-    /// for the lockstep decoder.
+    /// for the lockstep decoder. Prefill forwards parallelize row-wise via
+    /// `matmul_auto`; subsequent lockstep reads fan across sequences.
     pub fn begin_cached_batch(&self, tasks: &[(&[f32], usize)]) -> Result<NativeBatchSession<'_>> {
         let seqs = tasks
             .iter()
@@ -66,9 +87,11 @@ impl NativeBackend {
 /// KV-cached decode session over a [`NativeBackend`].
 ///
 /// Holds the context tokens (needed to re-prefill after a window slide),
-/// the per-layer K/V cache, and the model output at *every* position —
-/// so `tip_mean` is always free and `rollback` restores the previous tip
-/// without recomputation.
+/// the per-layer K/V cache (which owns the forward scratch arena), and the
+/// model output at *every* position — so `tip_mean` is always free and
+/// `rollback` restores the previous tip without recomputation. Token and
+/// mean buffers are reserved to `max_ctx` at construction: steady-state
+/// appends never reallocate.
 pub struct NativeSession<'a> {
     backend: &'a NativeBackend,
     cache: KvCache,
@@ -84,27 +107,46 @@ impl<'a> NativeSession<'a> {
         anyhow::ensure!(history.len() >= n_hist * p, "history too short");
         // Trailing-window clamp, matching the stateless sessions.
         let keep = n_hist.min(backend.max_ctx());
+        let cap = backend.max_ctx() * p;
+        let mut tokens = Vec::with_capacity(cap);
+        tokens.extend_from_slice(&history[(n_hist - keep) * p..n_hist * p]);
         let mut s = NativeSession {
             backend,
             cache: KvCache::new(&backend.model.dims),
-            tokens: history[(n_hist - keep) * p..n_hist * p].to_vec(),
-            means: Vec::new(),
+            tokens,
+            means: Vec::with_capacity(cap),
             forwards: 0,
         };
-        let toks = s.tokens.clone();
-        s.means = s.run_cached_timed(&toks, keep)?;
+        Self::run_forward(
+            s.backend,
+            &mut s.cache,
+            &mut s.means,
+            &s.tokens,
+            keep,
+            &mut s.forwards,
+        )?;
         Ok(s)
     }
 
-    /// One incremental forward, timed into the backend's summary so
+    /// One incremental forward appended straight into `means` (no
+    /// intermediate buffer), timed into the backend's summary so
     /// `mean_secs` (the paper's measured cost ratio c) reflects the
-    /// cached regime when caching is on.
-    fn run_cached_timed(&mut self, patches: &[f32], k: usize) -> Result<Vec<f32>> {
+    /// cached regime when caching is on. Free function over disjoint
+    /// fields so callers can pass `&self.tokens` alongside the `&mut`s.
+    fn run_forward(
+        backend: &NativeBackend,
+        cache: &mut KvCache,
+        means: &mut Vec<f32>,
+        patches: &[f32],
+        k: usize,
+        forwards: &mut usize,
+    ) -> Result<()> {
         let t0 = std::time::Instant::now();
-        let out = self.backend.model.forward_cached(&mut self.cache, patches, k)?;
-        self.backend.timings.borrow_mut().push(t0.elapsed().as_secs_f64());
-        self.forwards += 1;
-        Ok(out)
+        let rows = backend.model.forward_cached(cache, patches, k)?;
+        means.extend_from_slice(rows);
+        backend.timings.lock().unwrap().push(t0.elapsed().as_secs_f64());
+        *forwards += 1;
+        Ok(())
     }
 
     /// Slide the window if appending `k` patches would exceed max_ctx.
@@ -145,9 +187,15 @@ impl DecodeSession for NativeSession<'_> {
         self.room_for(k)?;
         let n0 = self.len();
         anyhow::ensure!(n0 >= 1, "extend on an empty session");
-        let rows = self.run_cached_timed(&patches[..k * p], k)?;
+        Self::run_forward(
+            self.backend,
+            &mut self.cache,
+            &mut self.means,
+            &patches[..k * p],
+            k,
+            &mut self.forwards,
+        )?;
         self.tokens.extend_from_slice(&patches[..k * p]);
-        self.means.extend_from_slice(&rows);
         let n = n0 + k;
         Ok(self.means[(n0 - 1) * p..n * p].to_vec())
     }
@@ -185,8 +233,15 @@ impl DecodeSession for NativeSession<'_> {
         self.tokens.drain(..(n - keep) * p);
         // Absolute positions shifted under every kept row: re-prefill.
         self.cache.reset();
-        let toks = self.tokens.clone();
-        self.means = self.run_cached_timed(&toks, keep)?;
+        self.means.clear();
+        Self::run_forward(
+            self.backend,
+            &mut self.cache,
+            &mut self.means,
+            &self.tokens,
+            keep,
+            &mut self.forwards,
+        )?;
         Ok(())
     }
 
@@ -195,13 +250,58 @@ impl DecodeSession for NativeSession<'_> {
     }
 }
 
-/// Per-sequence cached sessions advanced in lockstep. Reads loop over the
-/// index set with incremental forwards — each O(k·n_i·d), which already
-/// beats the padded O(n_max²·d) batched re-forward by a wide margin;
-/// fusing the per-sequence incremental attention into one batched kernel
-/// is future work (see models/README).
+/// Per-sequence cached sessions advanced in lockstep. Batched reads fan
+/// the per-sequence incremental forwards — each O(k·n_i·d) — across the
+/// shared worker pool, so a verify round costs the *max* of its sequences
+/// instead of their sum (the serving-throughput lever of the batched
+/// decoder). Writes (append/rollback/evict) stay per-sequence because
+/// acceptance lengths diverge.
 pub struct NativeBatchSession<'a> {
     seqs: Vec<NativeSession<'a>>,
+}
+
+// The batched-verify fan-out smuggles `&mut NativeSession` across worker
+// threads as a raw address, which erases the compiler's Send/Sync
+// checking — pin the invariants it relies on at compile time so a future
+// non-thread-safe field (RefCell, Rc, …) fails the build instead of
+// becoming a silent data race.
+const _: () = {
+    const fn assert_sync<T: Sync>() {}
+    const fn assert_send<T: Send>() {}
+    assert_sync::<NativeBackend>();
+    assert_send::<NativeSession<'static>>();
+};
+
+/// Minimum per-sequence flops for the k = 1 fan-out to beat its dispatch
+/// cost (job box + channel hops + mutex queue pickup ≈ a few µs).
+const PAR_MIN_SEQ_FLOPS: usize = 128 * 1024;
+
+impl NativeBatchSession<'_> {
+    /// Fan `extend` over the pool when it can help: at least two
+    /// sequences, a real pool, strictly increasing indices (distinct
+    /// sessions — the engine's active sets are sorted), not already on a
+    /// pool worker (a nested map_wait would deadlock), and enough
+    /// per-sequence work to amortize dispatch. Verify reads (k ≥ 2
+    /// target rows) always qualify; the γ per-round k = 1 draft proposal
+    /// steps only fan out when one incremental forward is heavy enough —
+    /// a tiny draft's microsecond step stays on the serial loop.
+    fn parallel_ok(&self, idx: &[usize], k: usize) -> bool {
+        if idx.len() < 2
+            || in_worker()
+            || global_pool().size() <= 1
+            || !idx.windows(2).all(|w| w[0] < w[1])
+        {
+            return false;
+        }
+        if k >= 2 {
+            return true;
+        }
+        let m = self.seqs[idx[0]].backend.dims();
+        let n = idx.iter().map(|&i| self.seqs[i].len()).max().unwrap_or(0);
+        let per_seq =
+            k * m.n_layers * (m.d_model * (4 * m.d_model + 3 * m.d_ff) + n * m.d_model);
+        per_seq >= PAR_MIN_SEQ_FLOPS
+    }
 }
 
 impl BatchDecodeSession for NativeBatchSession<'_> {
@@ -230,9 +330,37 @@ impl BatchDecodeSession for NativeBatchSession<'_> {
     fn extend(&mut self, idx: &[usize], patches: &[f32], k: usize) -> Result<Vec<f32>> {
         let p = self.patch();
         anyhow::ensure!(patches.len() >= idx.len() * k * p, "patch buffer too short");
+        anyhow::ensure!(idx.iter().all(|&i| i < self.seqs.len()), "sequence index out of range");
+        if !self.parallel_ok(idx, k) {
+            let mut out = Vec::with_capacity(idx.len() * (k + 1) * p);
+            for (ai, &i) in idx.iter().enumerate() {
+                out.extend(self.seqs[i].extend(&patches[ai * k * p..(ai + 1) * k * p], k)?);
+            }
+            return Ok(out);
+        }
+        // Smuggle the borrows as addresses: the pool's Job type is
+        // 'static, but map_wait joins every job before returning, so the
+        // borrows strictly outlive all worker accesses. `idx` is strictly
+        // increasing (checked above), so each job gets a distinct
+        // `&mut NativeSession` and a disjoint slice of `patches`.
+        let seqs_addr = self.seqs.as_mut_ptr() as usize;
+        let patches_addr = patches.as_ptr() as usize;
+        let patches_len = patches.len();
+        let idx_owned: Vec<usize> = idx.to_vec();
+        let results = global_pool().map_wait(idx_owned.len(), move |ai| {
+            let i = idx_owned[ai];
+            // SAFETY: distinct i per job (strictly increasing idx), joined
+            // before the caller's &mut self ends; the session type's
+            // borrow of the backend is Sync (Mutex-guarded timings).
+            let sess: &mut NativeSession =
+                unsafe { &mut *(seqs_addr as *mut NativeSession).add(i) };
+            let patches: &[f32] =
+                unsafe { std::slice::from_raw_parts(patches_addr as *const f32, patches_len) };
+            sess.extend(&patches[ai * k * p..(ai + 1) * k * p], k)
+        })?;
         let mut out = Vec::with_capacity(idx.len() * (k + 1) * p);
-        for (ai, &i) in idx.iter().enumerate() {
-            out.extend(self.seqs[i].extend(&patches[ai * k * p..(ai + 1) * k * p], k)?);
+        for rows in results {
+            out.extend(rows?);
         }
         Ok(out)
     }
@@ -271,7 +399,7 @@ impl Backend for NativeBackend {
         let t0 = std::time::Instant::now();
         let t = Tensor::from_vec(&[1, n, p], tokens[..n * p].to_vec());
         let out = self.model.forward(&t)?;
-        self.timings.borrow_mut().push(t0.elapsed().as_secs_f64());
+        self.timings.lock().unwrap().push(t0.elapsed().as_secs_f64());
         Ok(out.data)
     }
 
@@ -283,7 +411,7 @@ impl Backend for NativeBackend {
     }
 
     fn mean_secs(&self) -> f64 {
-        let t = self.timings.borrow();
+        let t = self.timings.lock().unwrap();
         if t.n == 0 {
             f64::NAN
         } else {
@@ -369,6 +497,55 @@ mod tests {
         let tip = sess.tip_mean().unwrap();
         for i in 0..4 {
             assert!((tip[i] - full[7 * 4 + i]).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn session_buffers_never_reallocate_in_steady_state() {
+        // tokens/means are reserved to max_ctx·patch up front; pointer
+        // stability across extends/rollbacks is the cheap proxy for the
+        // zero-reallocation claim (the counting-allocator test is the
+        // strict one).
+        let b = NativeBackend::new(tiny_model(5));
+        let toks: Vec<f32> = (0..8 * 4).map(|i| (i as f32 * 0.19).sin()).collect();
+        let mut sess = b.begin_cached(&toks[..2 * 4], 2).unwrap();
+        let tok_ptr = sess.tokens.as_ptr();
+        let mean_ptr = sess.means.as_ptr();
+        for step in 0..30 {
+            let start = (step % 6) * 4;
+            sess.extend(&toks[start..start + 4], 1).unwrap();
+            if sess.len() > 2 {
+                sess.rollback(1).unwrap();
+            }
+        }
+        assert_eq!(tok_ptr, sess.tokens.as_ptr(), "token buffer reallocated");
+        assert_eq!(mean_ptr, sess.means.as_ptr(), "means buffer reallocated");
+    }
+
+    #[test]
+    fn batched_parallel_extend_matches_serial_singles() {
+        // The pool fan-out must reproduce the single-session path exactly
+        // (same serial kernel per sequence → bitwise equal).
+        let b = NativeBackend::new(tiny_model(6));
+        let mk = |seed: u64, n: usize| -> Vec<f32> {
+            (0..n * 4).map(|i| ((i as f32 + seed as f32) * 0.23).sin()).collect()
+        };
+        let h1 = mk(1, 3);
+        let h2 = mk(2, 5);
+        let h3 = mk(3, 2);
+        let tasks: Vec<(&[f32], usize)> = vec![(&h1, 3), (&h2, 5), (&h3, 2)];
+        let mut bs = b.begin_cached_batch(&tasks).unwrap();
+        let ext = mk(9, 2);
+        let mut flat = Vec::new();
+        for _ in 0..3 {
+            flat.extend_from_slice(&ext);
+        }
+        let batch_rows = bs.extend(&[0, 1, 2], &flat, 2).unwrap();
+        for (ai, (h, n)) in [(&h1, 3usize), (&h2, 5), (&h3, 2)].iter().enumerate() {
+            let mut solo = b.begin_cached(h, *n).unwrap();
+            let rows = solo.extend(&ext, 2).unwrap();
+            let got = &batch_rows[ai * 3 * 4..(ai + 1) * 3 * 4];
+            assert_eq!(rows.as_slice(), got, "sequence {ai} diverged under parallel verify");
         }
     }
 }

@@ -18,7 +18,10 @@
 //! off — every read re-forwards the full context, the paper's baseline cost
 //! model, and the only option for fixed-shape PJRT executables), and the
 //! KV-cached `NativeSession`/`NativeBatchSession` in `models::native`
-//! (cache on — O(k·n·d) per read instead of O(n²·d)).
+//! (cache on — O(k·n·d) per read instead of O(n²·d), allocation-free in
+//! steady state, and with batched reads fanned across the shared worker
+//! pool so a lockstep round costs max-of-sequences — see the kernel-layer
+//! section of `models/README.md`).
 //!
 //! Cache on/off must be *observationally identical*: same means (to float
 //! equality on the native backend), same acceptance decisions, same RNG

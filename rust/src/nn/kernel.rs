@@ -1,0 +1,412 @@
+//! The native backend's kernel layer: packed weights, a reusable forward
+//! arena, and the per-block compute kernels the Timer-style forward is
+//! assembled from.
+//!
+//! Three ideas (see `models/README.md` § kernel layer):
+//!
+//! * **Packed weights** — [`PackedWeights::pack`] resolves every
+//!   string-keyed tensor lookup (`format!("layers.{li}.wqkv")` + hashmap
+//!   probe, 24 sites per forward before this layer existed) exactly once
+//!   at model construction into direct `Arc<Tensor>` handles: one
+//!   [`LayerWeights`] per decoder layer plus the embed/pos/head tensors.
+//!   The hot loop indexes a `Vec`, never a map.
+//! * **Scratch arena** — [`ForwardScratch`] owns every intermediate buffer
+//!   one forward needs (activations, qkv, attention scores, MLP gate/up/
+//!   down, output rows), sized once. The KV-cached decode path stores the
+//!   arena inside the cache, so a steady-state `extend` performs **zero
+//!   heap allocations** (pinned by `tests/alloc_discipline.rs`).
+//! * **Slice kernels** — the block functions below ([`embed_tokens`],
+//!   [`qkv_rows`], [`append_kv`], [`attn_rows`], [`proj_residual_rows`],
+//!   [`mlp_rows`], [`head_rows`]) operate on flat `&[f32]` row buffers and
+//!   are shared verbatim by the stateless batched forward and the
+//!   incremental cached forward, which is what keeps the two paths equal
+//!   row-for-row (the cache-equivalence invariant from the decode-session
+//!   PR). Matmuls dispatch through [`crate::util::tensor::matmul_auto`]:
+//!   serial for decode-sized row counts, row-partitioned across the shared
+//!   pool for prefill-sized ones — bitwise identical either way.
+//!
+//! To add a new kernel: take `rows` plus flat slices, assert lengths,
+//! write only into caller-provided scratch, and keep per-row arithmetic
+//! independent of `rows` so cached/stateless equality and thread-count
+//! determinism hold by construction.
+
+use std::sync::Arc;
+
+use anyhow::{ensure, Result};
+
+use super::model::ModelDims;
+use super::weights::Weights;
+use crate::util::tensor::{matmul_auto, rmsnorm, silu, softmax_row, Tensor};
+
+/// RMSNorm epsilon (matches the JAX side; re-exported via `model`).
+pub(crate) const RMS_EPS: f32 = 1e-6;
+
+/// Direct handles to one decoder layer's tensors.
+#[derive(Clone)]
+pub struct LayerWeights {
+    pub ln1: Arc<Tensor>,
+    pub wqkv: Arc<Tensor>,
+    pub wo: Arc<Tensor>,
+    pub ln2: Arc<Tensor>,
+    pub wg: Arc<Tensor>,
+    pub wu: Arc<Tensor>,
+    pub wd: Arc<Tensor>,
+}
+
+/// All weight handles a forward needs, resolved once at construction.
+#[derive(Clone)]
+pub struct PackedWeights {
+    pub embed_w: Arc<Tensor>,
+    pub embed_b: Arc<Tensor>,
+    pub pos: Arc<Tensor>,
+    pub layers: Vec<LayerWeights>,
+    pub final_norm: Arc<Tensor>,
+    pub head_w: Arc<Tensor>,
+    pub head_b: Arc<Tensor>,
+}
+
+impl PackedWeights {
+    /// Resolve and shape-check every tensor against `dims`. Fails early
+    /// (at load time) on a missing or mis-shaped tensor instead of deep in
+    /// a decode loop.
+    pub fn pack(dims: &ModelDims, w: &Weights) -> Result<PackedWeights> {
+        let (p, d, f) = (dims.patch, dims.d_model, dims.d_ff);
+        let want = |t: &Arc<Tensor>, shape: &[usize], name: &str| -> Result<()> {
+            ensure!(
+                t.shape == shape,
+                "tensor {name}: shape {:?} != expected {:?}",
+                t.shape,
+                shape
+            );
+            Ok(())
+        };
+        let embed_w = w.get_arc("embed_w")?;
+        want(&embed_w, &[p, d], "embed_w")?;
+        let embed_b = w.get_arc("embed_b")?;
+        want(&embed_b, &[d], "embed_b")?;
+        let pos = w.get_arc("pos")?;
+        want(&pos, &[dims.n_ctx, d], "pos")?;
+        let mut layers = Vec::with_capacity(dims.n_layers);
+        for li in 0..dims.n_layers {
+            let lw = LayerWeights {
+                ln1: w.get_arc(&format!("layers.{li}.ln1"))?,
+                wqkv: w.get_arc(&format!("layers.{li}.wqkv"))?,
+                wo: w.get_arc(&format!("layers.{li}.wo"))?,
+                ln2: w.get_arc(&format!("layers.{li}.ln2"))?,
+                wg: w.get_arc(&format!("layers.{li}.wg"))?,
+                wu: w.get_arc(&format!("layers.{li}.wu"))?,
+                wd: w.get_arc(&format!("layers.{li}.wd"))?,
+            };
+            want(&lw.ln1, &[d], "ln1")?;
+            want(&lw.wqkv, &[d, 3 * d], "wqkv")?;
+            want(&lw.wo, &[d, d], "wo")?;
+            want(&lw.ln2, &[d], "ln2")?;
+            want(&lw.wg, &[d, f], "wg")?;
+            want(&lw.wu, &[d, f], "wu")?;
+            want(&lw.wd, &[f, d], "wd")?;
+            layers.push(lw);
+        }
+        let final_norm = w.get_arc("final_norm")?;
+        want(&final_norm, &[d], "final_norm")?;
+        let head_w = w.get_arc("head_w")?;
+        want(&head_w, &[d, p], "head_w")?;
+        let head_b = w.get_arc("head_b")?;
+        want(&head_b, &[p], "head_b")?;
+        Ok(PackedWeights { embed_w, embed_b, pos, layers, final_norm, head_w, head_b })
+    }
+}
+
+/// Reusable per-forward buffers, sized once for up to `rows` activation
+/// rows. The KV-cached path owns one inside the `KvCache` (rows = n_ctx,
+/// the prefill worst case) so steady-state decode never allocates; the
+/// stateless path builds one per call (rows = b·n).
+pub struct ForwardScratch {
+    /// Row capacity this arena was sized for.
+    rows: usize,
+    /// Activations `[rows, d]` — the residual stream.
+    pub(crate) x: Vec<f32>,
+    /// Pre-norm copy `[rows, d]` (attn and MLP reuse it in turn).
+    pub(crate) normed: Vec<f32>,
+    /// QKV projection `[rows, 3d]`.
+    pub(crate) qkv: Vec<f32>,
+    /// Attention head concat `[rows, d]`.
+    pub(crate) concat: Vec<f32>,
+    /// Output projection `[rows, d]`.
+    pub(crate) proj: Vec<f32>,
+    /// MLP gate / up `[rows, d_ff]`, down `[rows, d]`.
+    pub(crate) gate: Vec<f32>,
+    pub(crate) up: Vec<f32>,
+    pub(crate) down: Vec<f32>,
+    /// One attention score row `[n_ctx]`.
+    pub(crate) scores: Vec<f32>,
+    /// Per-sequence K/V gather for the *stateless* path `[n_ctx, d]`
+    /// (the cached path reads the KvCache ring buffers instead).
+    pub(crate) kbuf: Vec<f32>,
+    pub(crate) vbuf: Vec<f32>,
+    /// Model output `[rows, patch]`.
+    pub(crate) out: Vec<f32>,
+}
+
+/// Largest `k` a steady-state decode read can carry: `SpecConfig::gamma`
+/// is capped at 64 (`config::ServeConfig::validate`), so a session sees
+/// extends of at most γ proposals and appends of at most γ+1 emitted
+/// patches. The cache-owned arena is sized for this, not for a
+/// full-context prefill — prefill-sized calls borrow a temporary arena
+/// instead (they are allowed to allocate; only steady state is pinned
+/// allocation-free).
+pub const MAX_DECODE_ROWS: usize = 64;
+
+impl ForwardScratch {
+    /// Arena for the *stateless* path: includes the per-sequence K/V
+    /// gather buffers its attention reads.
+    pub fn new(dims: &ModelDims, rows: usize) -> ForwardScratch {
+        Self::build(dims, rows, rows, true)
+    }
+
+    /// Persistent arena for the *cached* path (owned by the `KvCache`).
+    /// Intermediates are sized for [`MAX_DECODE_ROWS`] (the steady-state
+    /// worst case), not `n_ctx` — at production dims full-context
+    /// `gate`/`up`/`qkv` rows would dwarf the K/V cache itself and sit
+    /// ~n_ctx/γ× oversized after the one prefill. The `out` buffer alone
+    /// is `n_ctx` rows (patch-sized, tiny) so prefill results written via
+    /// a temporary arena can still be returned from cache-owned storage.
+    /// The stateless K/V gather buffers are not allocated at all —
+    /// attention reads the cache's ring buffers.
+    pub fn for_cached(dims: &ModelDims) -> ForwardScratch {
+        Self::build(dims, MAX_DECODE_ROWS.min(dims.n_ctx), dims.n_ctx, false)
+    }
+
+    /// Temporary arena for a prefill-sized cached call
+    /// (`k > capacity_rows()` of the persistent arena).
+    pub fn for_prefill(dims: &ModelDims, rows: usize) -> ForwardScratch {
+        Self::build(dims, rows, rows, false)
+    }
+
+    fn build(dims: &ModelDims, rows: usize, out_rows: usize, kv_gather: bool) -> ForwardScratch {
+        let d = dims.d_model;
+        let f = dims.d_ff;
+        let kv = if kv_gather { dims.n_ctx * d } else { 0 };
+        ForwardScratch {
+            rows,
+            x: vec![0.0; rows * d],
+            normed: vec![0.0; rows * d],
+            qkv: vec![0.0; rows * 3 * d],
+            concat: vec![0.0; rows * d],
+            proj: vec![0.0; rows * d],
+            gate: vec![0.0; rows * f],
+            up: vec![0.0; rows * f],
+            down: vec![0.0; rows * d],
+            scores: vec![0.0; dims.n_ctx],
+            kbuf: vec![0.0; kv],
+            vbuf: vec![0.0; kv],
+            out: vec![0.0; out_rows * dims.patch],
+        }
+    }
+
+    /// Row capacity (callers assert their `rows <= capacity`).
+    pub fn capacity_rows(&self) -> usize {
+        self.rows
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Block kernels. All operate on flat row buffers, allocate nothing, and
+// keep per-row arithmetic independent of how many rows are processed
+// together (the cached/stateless equality invariant).
+// ---------------------------------------------------------------------------
+
+/// Patch embedding: `tokens [rows, p] x embed_w [p, d] + embed_b -> x`.
+pub fn embed_tokens(pw: &PackedWeights, tokens: &[f32], rows: usize, p: usize, d: usize, x: &mut [f32]) {
+    matmul_auto(&tokens[..rows * p], &pw.embed_w.data, rows, p, d, &mut x[..rows * d]);
+    let bias = &pw.embed_b.data;
+    for r in 0..rows {
+        for (v, bv) in x[r * d..(r + 1) * d].iter_mut().zip(bias) {
+            *v += bv;
+        }
+    }
+}
+
+/// Add learned absolute positions `n0..n0+rows` to `rows` activation rows.
+pub fn add_pos(pw: &PackedWeights, d: usize, n0: usize, rows: usize, x: &mut [f32]) {
+    let pos = &pw.pos.data;
+    for t in 0..rows {
+        let row = &mut x[t * d..(t + 1) * d];
+        for (v, pv) in row.iter_mut().zip(&pos[(n0 + t) * d..(n0 + t + 1) * d]) {
+            *v += pv;
+        }
+    }
+}
+
+/// Pre-norm + QKV projection: `normed = rmsnorm(x, ln1)`, `qkv = normed x
+/// wqkv` (`[rows, 3d]`, per-token layout `[q | k | v]`, heads contiguous).
+pub fn qkv_rows(lw: &LayerWeights, x: &[f32], rows: usize, d: usize, normed: &mut [f32], qkv: &mut [f32]) {
+    normed[..rows * d].copy_from_slice(&x[..rows * d]);
+    rmsnorm(&mut normed[..rows * d], &lw.ln1.data, RMS_EPS);
+    matmul_auto(&normed[..rows * d], &lw.wqkv.data, rows, d, 3 * d, &mut qkv[..rows * 3 * d]);
+}
+
+/// Append the K/V parts of `rows` qkv rows into `[n, d]` row buffers at
+/// absolute positions `n0..n0+rows` (heads contiguous, the cache layout).
+pub fn append_kv(qkv: &[f32], rows: usize, d: usize, n0: usize, kbuf: &mut [f32], vbuf: &mut [f32]) {
+    for t in 0..rows {
+        let base = t * 3 * d;
+        kbuf[(n0 + t) * d..(n0 + t + 1) * d].copy_from_slice(&qkv[base + d..base + 2 * d]);
+        vbuf[(n0 + t) * d..(n0 + t + 1) * d].copy_from_slice(&qkv[base + 2 * d..base + 3 * d]);
+    }
+}
+
+/// Causal attention for `rows` new rows at absolute positions
+/// `n0..n0+rows` over K/V row buffers that already contain positions
+/// `0..n0+rows` (call [`append_kv`] first so a row can see itself). Writes
+/// head-concatenated outputs into `concat [rows, d]`; `scores` is one
+/// reusable `[>= n0+rows]` row.
+#[allow(clippy::too_many_arguments)]
+pub fn attn_rows(
+    qkv: &[f32],
+    kbuf: &[f32],
+    vbuf: &[f32],
+    n0: usize,
+    rows: usize,
+    h: usize,
+    dh: usize,
+    scale: f32,
+    scores: &mut [f32],
+    concat: &mut [f32],
+) {
+    let d = h * dh;
+    for t in 0..rows {
+        let g = n0 + t;
+        for hi in 0..h {
+            let q = &qkv[t * 3 * d + hi * dh..t * 3 * d + hi * dh + dh];
+            let srow = &mut scores[..=g];
+            for (j, sv) in srow.iter_mut().enumerate() {
+                let krow = &kbuf[j * d + hi * dh..j * d + hi * dh + dh];
+                *sv = q.iter().zip(krow).map(|(a, c)| a * c).sum::<f32>() * scale;
+            }
+            softmax_row(srow);
+            let orow = &mut concat[t * d + hi * dh..t * d + hi * dh + dh];
+            orow.fill(0.0);
+            for (j, &wj) in srow.iter().enumerate() {
+                let vrow = &vbuf[j * d + hi * dh..j * d + hi * dh + dh];
+                for (o, vv) in orow.iter_mut().zip(vrow) {
+                    *o += wj * vv;
+                }
+            }
+        }
+    }
+}
+
+/// Attention output projection plus residual: `x += concat x wo`.
+pub fn proj_residual_rows(
+    lw: &LayerWeights,
+    concat: &[f32],
+    rows: usize,
+    d: usize,
+    proj: &mut [f32],
+    x: &mut [f32],
+) {
+    matmul_auto(&concat[..rows * d], &lw.wo.data, rows, d, d, &mut proj[..rows * d]);
+    for (xv, pv) in x[..rows * d].iter_mut().zip(&proj[..rows * d]) {
+        *xv += pv;
+    }
+}
+
+/// Gated MLP block with residual: `x += silu(norm x wg) * (norm x wu) x wd`.
+#[allow(clippy::too_many_arguments)]
+pub fn mlp_rows(
+    lw: &LayerWeights,
+    x: &mut [f32],
+    rows: usize,
+    d: usize,
+    f: usize,
+    normed: &mut [f32],
+    gate: &mut [f32],
+    up: &mut [f32],
+    down: &mut [f32],
+) {
+    normed[..rows * d].copy_from_slice(&x[..rows * d]);
+    rmsnorm(&mut normed[..rows * d], &lw.ln2.data, RMS_EPS);
+    matmul_auto(&normed[..rows * d], &lw.wg.data, rows, d, f, &mut gate[..rows * f]);
+    matmul_auto(&normed[..rows * d], &lw.wu.data, rows, d, f, &mut up[..rows * f]);
+    for (gv, uv) in gate[..rows * f].iter_mut().zip(&up[..rows * f]) {
+        *gv = silu(*gv) * uv;
+    }
+    matmul_auto(&gate[..rows * f], &lw.wd.data, rows, f, d, &mut down[..rows * d]);
+    for (xv, dv) in x[..rows * d].iter_mut().zip(&down[..rows * d]) {
+        *xv += dv;
+    }
+}
+
+/// Final norm + output head: `out = rmsnorm(x, final_norm) x head_w +
+/// head_b` (`[rows, p]`). Mutates `x` in place (last use in a forward).
+pub fn head_rows(pw: &PackedWeights, x: &mut [f32], rows: usize, d: usize, p: usize, out: &mut [f32]) {
+    rmsnorm(&mut x[..rows * d], &pw.final_norm.data, RMS_EPS);
+    matmul_auto(&x[..rows * d], &pw.head_w.data, rows, d, p, &mut out[..rows * p]);
+    let bias = &pw.head_b.data;
+    for r in 0..rows {
+        for (v, bv) in out[r * p..(r + 1) * p].iter_mut().zip(bias) {
+            *v += bv;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parallel_threshold_excludes_steady_state_decode() {
+        // matmul_auto must never take the (allocating) pool path for a
+        // decode-sized row count, or forward_cached's zero-allocation
+        // guarantee breaks for large γ.
+        assert!(crate::util::tensor::PAR_MIN_ROWS > MAX_DECODE_ROWS);
+    }
+
+    #[test]
+    fn pack_rejects_missing_and_misshaped() {
+        let dims = ModelDims { patch: 2, n_ctx: 4, d_model: 4, n_layers: 1, n_heads: 2, d_ff: 8 };
+        let mut w = Weights::default();
+        assert!(PackedWeights::pack(&dims, &w).is_err(), "empty weights must not pack");
+        w.insert("embed_w", Tensor::zeros(&[2, 5])); // wrong d
+        assert!(PackedWeights::pack(&dims, &w).is_err());
+    }
+
+    #[test]
+    fn scratch_sized_for_rows() {
+        let dims = ModelDims { patch: 3, n_ctx: 8, d_model: 4, n_layers: 2, n_heads: 2, d_ff: 6 };
+        let s = ForwardScratch::new(&dims, 5);
+        assert_eq!(s.capacity_rows(), 5);
+        assert_eq!(s.x.len(), 5 * 4);
+        assert_eq!(s.qkv.len(), 5 * 12);
+        assert_eq!(s.gate.len(), 5 * 6);
+        assert_eq!(s.scores.len(), 8);
+        assert_eq!(s.kbuf.len(), 8 * 4);
+        assert_eq!(s.out.len(), 5 * 3);
+    }
+
+    #[test]
+    fn cached_scratch_skips_stateless_gather_buffers() {
+        let dims = ModelDims { patch: 3, n_ctx: 8, d_model: 4, n_layers: 2, n_heads: 2, d_ff: 6 };
+        let s = ForwardScratch::for_cached(&dims);
+        assert_eq!(s.capacity_rows(), 8, "capped at n_ctx when n_ctx < MAX_DECODE_ROWS");
+        assert_eq!(s.kbuf.len(), 0, "cached path reads the KvCache ring buffers");
+        assert_eq!(s.vbuf.len(), 0);
+        assert_eq!(s.x.len(), 8 * 4);
+    }
+
+    #[test]
+    fn cached_scratch_sized_for_decode_not_prefill() {
+        // Long contexts: intermediates stop at MAX_DECODE_ROWS; only the
+        // (patch-sized) out buffer spans n_ctx so prefill results can be
+        // returned from cache-owned storage.
+        let dims =
+            ModelDims { patch: 3, n_ctx: 256, d_model: 4, n_layers: 2, n_heads: 2, d_ff: 16 };
+        let s = ForwardScratch::for_cached(&dims);
+        assert_eq!(s.capacity_rows(), MAX_DECODE_ROWS);
+        assert_eq!(s.gate.len(), MAX_DECODE_ROWS * 16);
+        assert_eq!(s.out.len(), 256 * 3, "out must hold a full prefill's rows");
+        let t = ForwardScratch::for_prefill(&dims, 200);
+        assert_eq!(t.capacity_rows(), 200);
+        assert_eq!(t.kbuf.len(), 0);
+    }
+}

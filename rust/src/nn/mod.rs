@@ -1,8 +1,11 @@
-//! Native (pure-Rust) neural network substrate: weight loading and the
+//! Native (pure-Rust) neural network substrate: weight loading, the
+//! kernel layer (packed weights + scratch arena + block kernels), and the
 //! Timer-style decoder forward, mirroring `python/compile/model.py`.
 
+pub mod kernel;
 pub mod model;
 pub mod weights;
 
+pub use kernel::{ForwardScratch, LayerWeights, PackedWeights};
 pub use model::{KvCache, ModelDims, NativeModel};
 pub use weights::Weights;

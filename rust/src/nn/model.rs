@@ -7,20 +7,31 @@
 //! function (`rust/tests/xla_integration.rs` asserts native == XLA == JAX
 //! golden within fp tolerance).
 //!
+//! Since the kernel-layer PR the compute itself lives in [`super::kernel`]:
+//! weights are resolved once at construction into [`PackedWeights`] (no
+//! string-keyed lookups in the hot loop), intermediates live in a
+//! [`ForwardScratch`] arena (the cached path's arena is owned by the
+//! [`KvCache`], so steady-state decode does zero heap allocation), and
+//! matmuls dispatch serial-or-row-parallel via `matmul_auto`. The
+//! pre-kernel-layer implementation (string-keyed, allocating, naive
+//! matmul) is retained behind [`NativeModel::set_reference`] as the
+//! equivalence baseline and the `perf_hotpath` "before" kernel.
+//!
 //! Two forward paths share the same math:
 //! * [`NativeModel::forward`] — stateless, recomputes attention over the
 //!   whole context (O(n²·d) per call).
 //! * [`NativeModel::forward_cached`] — incremental over a [`KvCache`]:
 //!   only the appended rows are computed (O(k·n·d) per call), which is what
-//!   turns a speculative round from O(n²·d) into O(γ·n·d). The op order is
-//!   identical row-for-row, so the two paths agree to float equality
-//!   (pinned by `rust/tests/cache_equivalence.rs`).
+//!   turns a speculative round from O(n²·d) into O(γ·n·d). Both paths are
+//!   assembled from the *same* slice kernels, so they agree row-for-row to
+//!   float equality (pinned by `rust/tests/cache_equivalence.rs`).
 
 use anyhow::Result;
 
+use super::kernel::{self, ForwardScratch, PackedWeights, RMS_EPS};
 use super::weights::Weights;
 use crate::util::rng::Rng;
-use crate::util::tensor::{linear, matmul, rmsnorm, silu, softmax_row, Tensor};
+use crate::util::tensor::{linear_naive, matmul_naive, rmsnorm, silu, softmax_row, Tensor};
 
 /// Architecture dims (mirror of model.ModelConfig; parsed from the manifest).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -39,18 +50,44 @@ impl ModelDims {
     }
 }
 
-const RMS_EPS: f32 = 1e-6;
-
 /// A loaded native model.
 pub struct NativeModel {
     pub dims: ModelDims,
     pub name: String,
+    /// String-keyed store (reference path + introspection); shares tensor
+    /// storage with `pw` via `Arc`, so keeping both costs pointers only.
     w: Weights,
+    /// Kernel-layer weight handles, resolved once here.
+    pw: PackedWeights,
+    /// Route forwards through the pre-kernel-layer reference
+    /// implementation (equivalence tests, perf "before" flag).
+    use_reference: bool,
 }
 
 impl NativeModel {
-    pub fn new(name: &str, dims: ModelDims, weights: Weights) -> NativeModel {
-        NativeModel { dims, name: name.to_string(), w: weights }
+    /// Pack the weight map into direct kernel handles; fails early on a
+    /// missing or mis-shaped tensor.
+    pub fn new(name: &str, dims: ModelDims, weights: Weights) -> Result<NativeModel> {
+        let pw = PackedWeights::pack(&dims, &weights)?;
+        Ok(NativeModel {
+            dims,
+            name: name.to_string(),
+            w: weights,
+            pw,
+            use_reference: false,
+        })
+    }
+
+    /// Toggle the pre-kernel-layer (string-keyed, allocating, naive-matmul)
+    /// implementation for both forward paths. The kernel equivalence suite
+    /// pins `packed == reference` within 1e-5.
+    pub fn set_reference(&mut self, on: bool) {
+        self.use_reference = on;
+    }
+
+    /// Whether the reference kernel is active.
+    pub fn reference_kernel(&self) -> bool {
+        self.use_reference
     }
 
     /// Seeded random-weight model (no artifacts needed): the substrate for
@@ -84,7 +121,7 @@ impl NativeModel {
         w.insert("final_norm", Tensor::from_vec(&[d], vec![1.0; d]));
         w.insert("head_w", t(&[d, p], s_d));
         w.insert("head_b", Tensor::zeros(&[p]));
-        NativeModel::new(name, dims, w)
+        NativeModel::new(name, dims, w).expect("random weights are complete")
     }
 
     /// tokens [B, N, P] -> next-patch means [B, N, P]; N <= n_ctx.
@@ -92,28 +129,46 @@ impl NativeModel {
         let (b, n, p) = (tokens.shape[0], tokens.shape[1], tokens.shape[2]);
         anyhow::ensure!(p == self.dims.patch, "patch dim {p} != {}", self.dims.patch);
         anyhow::ensure!(n <= self.dims.n_ctx, "N {n} > n_ctx {}", self.dims.n_ctx);
+        if self.use_reference {
+            return self.forward_reference(tokens, b, n);
+        }
         let d = self.dims.d_model;
+        let h = self.dims.n_heads;
+        let dh = self.dims.d_head();
+        let f = self.dims.d_ff;
+        let scale = 1.0 / (dh as f32).sqrt();
+        let rows = b * n;
 
-        // Patch embedding + learned positions.
-        let mut x = linear(tokens, self.w.get("embed_w")?, Some(&self.w.get("embed_b")?.data));
-        let pos = self.w.get("pos")?;
+        // One arena per call (the stateless path is the re-forward cost
+        // model; only the cached path must be allocation-free).
+        let mut s = ForwardScratch::new(&self.dims, rows);
+        kernel::embed_tokens(&self.pw, &tokens.data, rows, p, d, &mut s.x);
         for bi in 0..b {
-            for t in 0..n {
-                let row = &mut x.data[(bi * n + t) * d..(bi * n + t + 1) * d];
-                for (v, pv) in row.iter_mut().zip(&pos.data[t * d..(t + 1) * d]) {
-                    *v += pv;
-                }
+            kernel::add_pos(&self.pw, d, 0, n, &mut s.x[bi * n * d..(bi + 1) * n * d]);
+        }
+        for lw in &self.pw.layers {
+            kernel::qkv_rows(lw, &s.x, rows, d, &mut s.normed, &mut s.qkv);
+            for bi in 0..b {
+                let q = &s.qkv[bi * n * 3 * d..(bi + 1) * n * 3 * d];
+                kernel::append_kv(q, n, d, 0, &mut s.kbuf, &mut s.vbuf);
+                kernel::attn_rows(
+                    q,
+                    &s.kbuf,
+                    &s.vbuf,
+                    0,
+                    n,
+                    h,
+                    dh,
+                    scale,
+                    &mut s.scores,
+                    &mut s.concat[bi * n * d..(bi + 1) * n * d],
+                );
             }
+            kernel::proj_residual_rows(lw, &s.concat, rows, d, &mut s.proj, &mut s.x);
+            kernel::mlp_rows(lw, &mut s.x, rows, d, f, &mut s.normed, &mut s.gate, &mut s.up, &mut s.down);
         }
-
-        let mut scratch = Scratch::new(&self.dims, b, n);
-        for li in 0..self.dims.n_layers {
-            self.attn_block(li, &mut x, b, n, &mut scratch)?;
-            self.mlp_block(li, &mut x, b, n)?;
-        }
-
-        rmsnorm(&mut x.data, &self.w.get("final_norm")?.data, RMS_EPS);
-        Ok(linear(&x, self.w.get("head_w")?, Some(&self.w.get("head_b")?.data)))
+        kernel::head_rows(&self.pw, &mut s.x, rows, d, p, &mut s.out);
+        Ok(Tensor::from_vec(&[b, n, p], s.out))
     }
 
     /// Convenience: single-sequence forward returning the mean at `pos`.
@@ -124,7 +179,148 @@ impl NativeModel {
         Ok(out.data[pos * p..(pos + 1) * p].to_vec())
     }
 
-    fn attn_block(&self, li: usize, x: &mut Tensor, b: usize, n: usize, s: &mut Scratch) -> Result<()> {
+    /// Incremental forward: consume `k` new patches (flat `[k, patch]`)
+    /// given `cache` holding per-layer K/V for the first `cache.n` patches
+    /// of the sequence. Appends `k` rows per layer and returns the outputs
+    /// at the `k` new positions (flat `[k, patch]`), borrowed from the
+    /// cache-owned scratch arena — **zero heap allocations** on this path
+    /// (pinned by `tests/alloc_discipline.rs`).
+    ///
+    /// The appended rows attend over the cached rows plus themselves with
+    /// exactly the op order of [`NativeModel::forward`] (same slice
+    /// kernels), so outputs match the corresponding rows of a full
+    /// stateless forward to float equality. Cost is O(k·n·d) vs the
+    /// stateless O(n²·d).
+    pub fn forward_cached<'c>(
+        &self,
+        cache: &'c mut KvCache,
+        new_tokens: &[f32],
+        k: usize,
+    ) -> Result<&'c [f32]> {
+        let p = self.dims.patch;
+        anyhow::ensure!(cache.dims == self.dims, "KV cache built for different dims");
+        anyhow::ensure!(k >= 1, "forward_cached needs k >= 1");
+        anyhow::ensure!(new_tokens.len() >= k * p, "token buffer too short");
+        let n0 = cache.n;
+        anyhow::ensure!(
+            n0 + k <= self.dims.n_ctx,
+            "KV cache overflow: {n0} + {k} > n_ctx {}",
+            self.dims.n_ctx
+        );
+
+        if self.use_reference {
+            let v = self.forward_cached_reference(cache, new_tokens, k)?;
+            cache.scratch.out[..k * p].copy_from_slice(&v);
+            return Ok(&cache.scratch.out[..k * p]);
+        }
+
+        {
+            // Split the cache borrow: K/V ring buffers and the scratch
+            // arena are disjoint fields.
+            let KvCache { k: ref mut kc, v: ref mut vc, scratch: ref mut owned, .. } = *cache;
+            if k <= owned.capacity_rows() {
+                // Steady state (k <= MAX_DECODE_ROWS): the cache-owned
+                // arena, zero allocations.
+                self.cached_kernels(owned, kc, vc, new_tokens, n0, k);
+            } else {
+                // Prefill / evict re-prefill: larger than the persistent
+                // arena — borrow a temporary one (allocation is fine off
+                // the steady-state path) and land the output rows in the
+                // cache-owned `out` (sized n_ctx rows) so the returned
+                // slice always borrows from the cache.
+                let mut temp = ForwardScratch::for_prefill(&self.dims, k);
+                self.cached_kernels(&mut temp, kc, vc, new_tokens, n0, k);
+                owned.out[..k * p].copy_from_slice(&temp.out[..k * p]);
+            }
+        }
+        cache.n = n0 + k;
+        Ok(&cache.scratch.out[..k * p])
+    }
+
+    /// The cached forward's kernel sequence over an arbitrary arena
+    /// (cache-owned in steady state, temporary for prefill-sized `k`).
+    fn cached_kernels(
+        &self,
+        s: &mut ForwardScratch,
+        kc: &mut [Vec<f32>],
+        vc: &mut [Vec<f32>],
+        new_tokens: &[f32],
+        n0: usize,
+        k: usize,
+    ) {
+        let p = self.dims.patch;
+        let d = self.dims.d_model;
+        let h = self.dims.n_heads;
+        let dh = self.dims.d_head();
+        let f = self.dims.d_ff;
+        let scale = 1.0 / (dh as f32).sqrt();
+        // Embed + learned positions for the new rows only. Positions are
+        // absolute (n0..n0+k), which is why window slides cannot rotate
+        // the cache in place — see `KvCache` docs.
+        kernel::embed_tokens(&self.pw, new_tokens, k, p, d, &mut s.x);
+        kernel::add_pos(&self.pw, d, n0, k, &mut s.x);
+        for (li, lw) in self.pw.layers.iter().enumerate() {
+            kernel::qkv_rows(lw, &s.x, k, d, &mut s.normed, &mut s.qkv);
+            // Append the new K/V rows before attending so a row can see
+            // itself.
+            kernel::append_kv(&s.qkv, k, d, n0, &mut kc[li], &mut vc[li]);
+            kernel::attn_rows(
+                &s.qkv,
+                &kc[li],
+                &vc[li],
+                n0,
+                k,
+                h,
+                dh,
+                scale,
+                &mut s.scores,
+                &mut s.concat,
+            );
+            kernel::proj_residual_rows(lw, &s.concat, k, d, &mut s.proj, &mut s.x);
+            kernel::mlp_rows(lw, &mut s.x, k, d, f, &mut s.normed, &mut s.gate, &mut s.up, &mut s.down);
+        }
+        kernel::head_rows(&self.pw, &mut s.x, k, d, p, &mut s.out);
+    }
+
+    // -----------------------------------------------------------------------
+    // Reference (pre-kernel-layer) implementation: string-keyed weight
+    // lookups, per-call allocation, naive matmul. The "before" side of the
+    // kernel equivalence tests and the perf_hotpath naive flag.
+    // -----------------------------------------------------------------------
+
+    fn forward_reference(&self, tokens: &Tensor, b: usize, n: usize) -> Result<Tensor> {
+        let d = self.dims.d_model;
+
+        // Patch embedding + learned positions.
+        let mut x = linear_naive(tokens, self.w.get("embed_w")?, Some(&self.w.get("embed_b")?.data));
+        let pos = self.w.get("pos")?;
+        for bi in 0..b {
+            for t in 0..n {
+                let row = &mut x.data[(bi * n + t) * d..(bi * n + t + 1) * d];
+                for (v, pv) in row.iter_mut().zip(&pos.data[t * d..(t + 1) * d]) {
+                    *v += pv;
+                }
+            }
+        }
+
+        let mut scratch = RefScratch::new(&self.dims, b, n);
+        for li in 0..self.dims.n_layers {
+            self.attn_block_reference(li, &mut x, b, n, &mut scratch)?;
+            self.mlp_block_reference(li, &mut x, b, n)?;
+        }
+
+        rmsnorm(&mut x.data, &self.w.get("final_norm")?.data, RMS_EPS);
+        Ok(linear_naive(&x, self.w.get("head_w")?, Some(&self.w.get("head_b")?.data)))
+    }
+
+    fn attn_block_reference(
+        &self,
+        li: usize,
+        x: &mut Tensor,
+        b: usize,
+        n: usize,
+        s: &mut RefScratch,
+    ) -> Result<()> {
         let d = self.dims.d_model;
         let h = self.dims.n_heads;
         let dh = self.dims.d_head();
@@ -135,7 +331,7 @@ impl NativeModel {
         rmsnorm(&mut s.normed.data, &self.w.get(&format!("layers.{li}.ln1"))?.data, RMS_EPS);
         // QKV projection: [B*N, 3D]; layout per token = [3, H, Dh].
         let wqkv = self.w.get(&format!("layers.{li}.wqkv"))?;
-        matmul(&s.normed.data, &wqkv.data, b * n, d, 3 * d, &mut s.qkv.data);
+        matmul_naive(&s.normed.data, &wqkv.data, b * n, d, 3 * d, &mut s.qkv.data);
 
         // Attention per (batch, head): scores in scratch, online over rows.
         for bi in 0..b {
@@ -177,14 +373,14 @@ impl NativeModel {
         }
         // Output projection + residual.
         let wo = self.w.get(&format!("layers.{li}.wo"))?;
-        matmul(&s.concat.data, &wo.data, b * n, d, d, &mut s.proj.data);
+        matmul_naive(&s.concat.data, &wo.data, b * n, d, d, &mut s.proj.data);
         for (xv, pv) in x.data.iter_mut().zip(&s.proj.data) {
             *xv += pv;
         }
         Ok(())
     }
 
-    fn mlp_block(&self, li: usize, x: &mut Tensor, b: usize, n: usize) -> Result<()> {
+    fn mlp_block_reference(&self, li: usize, x: &mut Tensor, b: usize, n: usize) -> Result<()> {
         let d = self.dims.d_model;
         let f = self.dims.d_ff;
         let mut normed = x.clone();
@@ -194,48 +390,34 @@ impl NativeModel {
         let wd = self.w.get(&format!("layers.{li}.wd"))?;
         let mut g = vec![0.0f32; b * n * f];
         let mut u = vec![0.0f32; b * n * f];
-        matmul(&normed.data, &wg.data, b * n, d, f, &mut g);
-        matmul(&normed.data, &wu.data, b * n, d, f, &mut u);
+        matmul_naive(&normed.data, &wg.data, b * n, d, f, &mut g);
+        matmul_naive(&normed.data, &wu.data, b * n, d, f, &mut u);
         for (gv, uv) in g.iter_mut().zip(&u) {
             *gv = silu(*gv) * uv;
         }
         let mut down = vec![0.0f32; b * n * d];
-        matmul(&g, &wd.data, b * n, f, d, &mut down);
+        matmul_naive(&g, &wd.data, b * n, f, d, &mut down);
         for (xv, dv) in x.data.iter_mut().zip(&down) {
             *xv += dv;
         }
         Ok(())
     }
 
-    /// Incremental forward: consume `k` new patches (flat `[k, patch]`)
-    /// given `cache` holding per-layer K/V for the first `cache.n` patches
-    /// of the sequence. Appends `k` rows per layer and returns the outputs
-    /// at the `k` new positions (flat `[k, patch]`).
-    ///
-    /// The appended rows attend over the cached rows plus themselves with
-    /// exactly the op order of [`NativeModel::forward`], so outputs match
-    /// the corresponding rows of a full stateless forward to float
-    /// equality. Cost is O(k·n·d) vs the stateless O(n²·d).
-    pub fn forward_cached(&self, cache: &mut KvCache, new_tokens: &[f32], k: usize) -> Result<Vec<f32>> {
+    fn forward_cached_reference(
+        &self,
+        cache: &mut KvCache,
+        new_tokens: &[f32],
+        k: usize,
+    ) -> Result<Vec<f32>> {
         let p = self.dims.patch;
         let d = self.dims.d_model;
         let h = self.dims.n_heads;
         let dh = self.dims.d_head();
-        anyhow::ensure!(cache.dims == self.dims, "KV cache built for different dims");
-        anyhow::ensure!(k >= 1, "forward_cached needs k >= 1");
-        anyhow::ensure!(new_tokens.len() >= k * p, "token buffer too short");
         let n0 = cache.n;
-        anyhow::ensure!(
-            n0 + k <= self.dims.n_ctx,
-            "KV cache overflow: {n0} + {k} > n_ctx {}",
-            self.dims.n_ctx
-        );
 
-        // Embed + learned positions for the new rows only. Positions are
-        // absolute (n0..n0+k), which is why window slides cannot rotate the
-        // cache in place — see `KvCache` docs.
+        // Embed + learned positions for the new rows only.
         let t_in = Tensor::from_vec(&[k, p], new_tokens[..k * p].to_vec());
-        let mut x = linear(&t_in, self.w.get("embed_w")?, Some(&self.w.get("embed_b")?.data));
+        let mut x = linear_naive(&t_in, self.w.get("embed_w")?, Some(&self.w.get("embed_b")?.data));
         let pos = self.w.get("pos")?;
         for t in 0..k {
             let row = &mut x.data[t * d..(t + 1) * d];
@@ -255,7 +437,7 @@ impl NativeModel {
             normed.copy_from_slice(&x.data);
             rmsnorm(&mut normed, &self.w.get(&format!("layers.{li}.ln1"))?.data, RMS_EPS);
             let wqkv = self.w.get(&format!("layers.{li}.wqkv"))?;
-            matmul(&normed, &wqkv.data, k, d, 3 * d, &mut qkv);
+            matmul_naive(&normed, &wqkv.data, k, d, 3 * d, &mut qkv);
 
             // Append the new K/V rows (heads contiguous, as in the qkv
             // layout) before attending so a row can see itself.
@@ -290,20 +472,24 @@ impl NativeModel {
                 }
             }
             let wo = self.w.get(&format!("layers.{li}.wo"))?;
-            matmul(&concat, &wo.data, k, d, d, &mut proj);
+            matmul_naive(&concat, &wo.data, k, d, d, &mut proj);
             for (xv, pv) in x.data.iter_mut().zip(&proj) {
                 *xv += pv;
             }
-            self.mlp_block(li, &mut x, 1, k)?;
+            self.mlp_block_reference(li, &mut x, 1, k)?;
         }
 
         cache.n = n0 + k;
         rmsnorm(&mut x.data, &self.w.get("final_norm")?.data, RMS_EPS);
-        Ok(linear(&x, self.w.get("head_w")?, Some(&self.w.get("head_b")?.data)).data)
+        Ok(linear_naive(&x, self.w.get("head_w")?, Some(&self.w.get("head_b")?.data)).data)
     }
 }
 
-/// Per-layer K/V ring buffers for incremental decoding.
+/// Per-layer K/V ring buffers for incremental decoding, plus the owned
+/// [`ForwardScratch`] arena (sized once for the steady-state worst case,
+/// [`kernel::MAX_DECODE_ROWS`] rows, so every decode-sized
+/// `forward_cached` is allocation-free; prefill-sized calls borrow a
+/// temporary arena and may allocate).
 ///
 /// Rows live at absolute positions `0..n` in fixed `[n_ctx * d_model]`
 /// allocations (one K and one V buffer per layer, heads contiguous).
@@ -324,6 +510,7 @@ pub struct KvCache {
     n: usize,
     k: Vec<Vec<f32>>,
     v: Vec<Vec<f32>>,
+    scratch: ForwardScratch,
 }
 
 impl KvCache {
@@ -334,6 +521,7 @@ impl KvCache {
             n: 0,
             k: (0..dims.n_layers).map(|_| vec![0.0; cap]).collect(),
             v: (0..dims.n_layers).map(|_| vec![0.0; cap]).collect(),
+            scratch: ForwardScratch::for_cached(dims),
         }
     }
 
@@ -363,8 +551,9 @@ impl KvCache {
     }
 }
 
-/// Reusable per-forward scratch buffers (hot-path allocation hygiene).
-struct Scratch {
+/// Reusable per-forward scratch for the *reference* stateless path (the
+/// kernel-layer path uses [`ForwardScratch`]).
+struct RefScratch {
     normed: Tensor,
     qkv: Tensor,
     concat: Tensor,
@@ -376,11 +565,11 @@ struct Scratch {
     attn_out: Vec<f32>,
 }
 
-impl Scratch {
-    fn new(dims: &ModelDims, b: usize, n: usize) -> Scratch {
+impl RefScratch {
+    fn new(dims: &ModelDims, b: usize, n: usize) -> RefScratch {
         let d = dims.d_model;
         let dh = dims.d_head();
-        Scratch {
+        RefScratch {
             normed: Tensor::zeros(&[b * n, d]),
             qkv: Tensor::zeros(&[b * n, 3 * d]),
             concat: Tensor::zeros(&[b * n, d]),
@@ -423,7 +612,7 @@ mod tests {
         w.insert("final_norm", Tensor::from_vec(&[8], vec![1.0; 8]));
         w.insert("head_w", t(&[8, 4], 0.3));
         w.insert("head_b", Tensor::zeros(&[4]));
-        NativeModel::new("tiny", dims, w)
+        NativeModel::new("tiny", dims, w).unwrap()
     }
 
     #[test]
@@ -433,6 +622,45 @@ mod tests {
         let y = m.forward(&x).unwrap();
         assert_eq!(y.shape, vec![2, 8, 4]);
         assert!(y.data.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn packed_forward_matches_reference() {
+        // The kernel layer (packed weights, arena, blocked matmul) must
+        // reproduce the pre-kernel-layer implementation within fp
+        // reassociation tolerance.
+        let m = tiny_model(7);
+        let mut r = tiny_model(7);
+        r.set_reference(true);
+        let mut rng = Rng::new(70);
+        let toks: Vec<f32> = (0..2 * 8 * 4).map(|_| rng.normal() as f32).collect();
+        let t = Tensor::from_vec(&[2, 8, 4], toks);
+        let a = m.forward(&t).unwrap();
+        let b = r.forward(&t).unwrap();
+        for (i, (x, y)) in a.data.iter().zip(&b.data).enumerate() {
+            assert!((x - y).abs() < 1e-5, "[{i}] packed {x} vs reference {y}");
+        }
+    }
+
+    #[test]
+    fn packed_cached_matches_reference_cached() {
+        let m = tiny_model(8);
+        let mut r = tiny_model(8);
+        r.set_reference(true);
+        let mut rng = Rng::new(80);
+        let toks: Vec<f32> = (0..8 * 4).map(|_| rng.normal() as f32).collect();
+        let mut c_m = KvCache::new(&m.dims);
+        let mut c_r = KvCache::new(&r.dims);
+        let a = m.forward_cached(&mut c_m, &toks[..5 * 4], 5).unwrap().to_vec();
+        let b = r.forward_cached(&mut c_r, &toks[..5 * 4], 5).unwrap().to_vec();
+        for (x, y) in a.iter().zip(&b) {
+            assert!((x - y).abs() < 1e-5, "prefill: packed {x} vs reference {y}");
+        }
+        let a = m.forward_cached(&mut c_m, &toks[5 * 4..], 3).unwrap().to_vec();
+        let b = r.forward_cached(&mut c_r, &toks[5 * 4..], 3).unwrap().to_vec();
+        for (x, y) in a.iter().zip(&b) {
+            assert!((x - y).abs() < 1e-5, "extend: packed {x} vs reference {y}");
+        }
     }
 
     #[test]
@@ -510,8 +738,8 @@ mod tests {
         let toks: Vec<f32> = (0..8 * 4).map(|_| rng.normal() as f32).collect();
         let full = m.forward(&Tensor::from_vec(&[1, 8, 4], toks.clone())).unwrap();
         let mut cache = KvCache::new(&m.dims);
-        let head = m.forward_cached(&mut cache, &toks[..5 * 4], 5).unwrap();
-        let tail = m.forward_cached(&mut cache, &toks[5 * 4..], 3).unwrap();
+        let head = m.forward_cached(&mut cache, &toks[..5 * 4], 5).unwrap().to_vec();
+        let tail = m.forward_cached(&mut cache, &toks[5 * 4..], 3).unwrap().to_vec();
         assert_eq!(cache.len(), 8);
         for (i, v) in head.iter().chain(tail.iter()).enumerate() {
             assert!(
@@ -535,7 +763,7 @@ mod tests {
         let _ = m.forward_cached(&mut cache, &toks, 8).unwrap();
         cache.truncate(4);
         let replacement: Vec<f32> = (0..2 * 4).map(|_| rng.normal() as f32).collect();
-        let rows = m.forward_cached(&mut cache, &replacement, 2).unwrap();
+        let rows = m.forward_cached(&mut cache, &replacement, 2).unwrap().to_vec();
         let mut spliced = toks[..4 * 4].to_vec();
         spliced.extend_from_slice(&replacement);
         let full = m.forward(&Tensor::from_vec(&[1, 6, 4], spliced)).unwrap();
@@ -551,6 +779,34 @@ mod tests {
         let toks = vec![0.1f32; 8 * 4];
         let _ = m.forward_cached(&mut cache, &toks, 8).unwrap();
         assert!(m.forward_cached(&mut cache, &toks[..4], 1).is_err());
+    }
+
+    #[test]
+    fn prefill_beyond_arena_capacity_matches_stateless() {
+        // n_ctx > MAX_DECODE_ROWS: the prefill takes the temporary-arena
+        // path (k > capacity_rows) and must still equal the stateless
+        // forward row-for-row; a subsequent small extend goes back through
+        // the owned arena against the same cache.
+        let dims =
+            ModelDims { patch: 4, n_ctx: 96, d_model: 8, n_layers: 2, n_heads: 2, d_ff: 16 };
+        assert!(dims.n_ctx > crate::nn::kernel::MAX_DECODE_ROWS);
+        let m = NativeModel::random("long", dims, 31);
+        let mut rng = Rng::new(32);
+        let toks: Vec<f32> = (0..90 * 4).map(|_| rng.normal() as f32).collect();
+        let full = m.forward(&Tensor::from_vec(&[1, 90, 4], toks.clone())).unwrap();
+        let mut cache = KvCache::new(&dims);
+        let head = m.forward_cached(&mut cache, &toks[..80 * 4], 80).unwrap().to_vec();
+        for (i, v) in head.iter().enumerate() {
+            assert!((v - full.data[i]).abs() < 1e-5, "prefill row {} diverged", i / 4);
+        }
+        let tail = m.forward_cached(&mut cache, &toks[80 * 4..], 10).unwrap().to_vec();
+        for (i, v) in tail.iter().enumerate() {
+            assert!(
+                (v - full.data[80 * 4 + i]).abs() < 1e-5,
+                "post-prefill extend row {} diverged",
+                i / 4
+            );
+        }
     }
 
     #[test]

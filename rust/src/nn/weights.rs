@@ -1,8 +1,15 @@
 //! Weight loading for the native backend: flat f32 LE blobs indexed by the
 //! manifest's tensor table (written by `aot.dump_weights`).
+//!
+//! Tensors are stored behind `Arc` so the kernel layer's
+//! [`crate::nn::kernel::PackedWeights`] can hold direct handles to the same
+//! storage the string-keyed map owns — packing copies pointers, not floats,
+//! and the map stays available for the reference (string-keyed) forward
+//! path and for introspection.
 
 use std::collections::HashMap;
 use std::path::Path;
+use std::sync::Arc;
 
 use anyhow::{bail, Context, Result};
 
@@ -12,7 +19,7 @@ use crate::util::tensor::Tensor;
 /// Named tensor store.
 #[derive(Debug, Default)]
 pub struct Weights {
-    map: HashMap<String, Tensor>,
+    map: HashMap<String, Arc<Tensor>>,
 }
 
 impl Weights {
@@ -44,13 +51,28 @@ impl Weights {
             if offset + n > floats.len() {
                 bail!("tensor {name} [{offset}, {}) exceeds blob len {}", offset + n, floats.len());
             }
-            map.insert(name.to_string(), Tensor::from_vec(&shape, floats[offset..offset + n].to_vec()));
+            map.insert(
+                name.to_string(),
+                Arc::new(Tensor::from_vec(&shape, floats[offset..offset + n].to_vec())),
+            );
         }
         Ok(Weights { map })
     }
 
     pub fn get(&self, name: &str) -> Result<&Tensor> {
-        self.map.get(name).with_context(|| format!("missing tensor {name}"))
+        self.map
+            .get(name)
+            .map(|t| t.as_ref())
+            .with_context(|| format!("missing tensor {name}"))
+    }
+
+    /// Shared handle to a tensor (the kernel layer packs these once at
+    /// model construction; no float is copied).
+    pub fn get_arc(&self, name: &str) -> Result<Arc<Tensor>> {
+        self.map
+            .get(name)
+            .cloned()
+            .with_context(|| format!("missing tensor {name}"))
     }
 
     pub fn len(&self) -> usize {
@@ -67,7 +89,7 @@ impl Weights {
 
     /// Insert (for tests / synthetic weights).
     pub fn insert(&mut self, name: &str, t: Tensor) {
-        self.map.insert(name.to_string(), t);
+        self.map.insert(name.to_string(), Arc::new(t));
     }
 }
 

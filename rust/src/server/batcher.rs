@@ -112,6 +112,17 @@ fn engine_main(
         }
     };
 
+    // Spin up the kernel layer's shared compute pool before the first
+    // request: prefill matmuls and the batched verify fan over it. A
+    // `threads` setting fixes the size; 0 leaves the STRIDE_THREADS /
+    // auto default. (First initialization wins process-wide.)
+    let pool_size = if cfg.threads > 0 {
+        crate::util::threadpool::init_global_pool(cfg.threads)
+    } else {
+        crate::util::threadpool::global_pool().size()
+    };
+    log::info!("kernel compute pool: {pool_size} threads");
+
     // Warm the executables so the first request doesn't pay compile cost.
     let p = manifest.patch;
     let warm = vec![0.0f32; manifest.n_ctx * p];

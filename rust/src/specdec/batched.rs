@@ -12,6 +12,17 @@
 //! padding inert), the exact execution shape of the stateless decoder.
 //! Finished sequences drop out of the advancing set; queued tasks take
 //! their slots immediately (continuous batching, paper §5.5).
+//!
+//! Wall-clock shape: on the native backend the batched `extend` calls
+//! below (draft proposals and the target verify) fan their per-sequence
+//! incremental forwards across the shared worker pool
+//! (`NativeBatchSession`, kernel-layer PR), so a lockstep round costs the
+//! *max* of its sequences instead of their sum — outputs are bitwise
+//! independent of the thread count, so everything this module pins about
+//! cache on/off equivalence is untouched. The per-round `draft_time` /
+//! `target_time` attribution divides the round wall clock evenly across
+//! the active set, which under the parallel verify is the honest
+//! per-sequence share of the (now overlapped) round.
 
 use std::time::Instant;
 

@@ -64,8 +64,64 @@ impl Tensor {
 }
 
 /// C = A[m,k] x B[k,n]; the native-backend hot matmul.
-/// Simple ikj loop order with the inner j loop auto-vectorizing.
+///
+/// Register-blocked micro-kernel: the k loop is 4x-unrolled so the inner j
+/// loop carries four fused multiply-adds per C element per pass (one load
+/// of `crow[j]`, four B streams), which auto-vectorizes into fma chains.
+/// There is deliberately *no* `a[i,k] == 0.0` skip: on dense activations
+/// the branch mispredicts, and skipping silently dropped NaN/Inf
+/// propagation (`0.0 * NaN` never added), diverging from the XLA/JAX
+/// reference semantics. Results are bit-deterministic for fixed shapes —
+/// each output row depends only on its own A row and all of B — which is
+/// what lets [`matmul_parallel`] partition rows across threads without
+/// changing a single bit.
 pub fn matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, c: &mut [f32]) {
+    assert_eq!(a.len(), m * k);
+    assert_eq!(b.len(), k * n);
+    assert_eq!(c.len(), m * n);
+    matmul_rows(a, b, m, k, n, c);
+}
+
+/// Row-range worker for [`matmul`]/[`matmul_parallel`]: computes `rows`
+/// output rows from `rows` A rows against the full B. No allocation.
+fn matmul_rows(a_rows: &[f32], b: &[f32], rows: usize, k: usize, n: usize, c_rows: &mut [f32]) {
+    debug_assert_eq!(a_rows.len(), rows * k);
+    debug_assert_eq!(c_rows.len(), rows * n);
+    c_rows.fill(0.0);
+    for i in 0..rows {
+        let arow = &a_rows[i * k..(i + 1) * k];
+        let crow = &mut c_rows[i * n..(i + 1) * n];
+        let mut kk = 0;
+        while kk + 4 <= k {
+            let a0 = arow[kk];
+            let a1 = arow[kk + 1];
+            let a2 = arow[kk + 2];
+            let a3 = arow[kk + 3];
+            let b0 = &b[kk * n..(kk + 1) * n];
+            let b1 = &b[(kk + 1) * n..(kk + 2) * n];
+            let b2 = &b[(kk + 2) * n..(kk + 3) * n];
+            let b3 = &b[(kk + 3) * n..(kk + 4) * n];
+            for j in 0..n {
+                crow[j] += a0 * b0[j] + a1 * b1[j] + a2 * b2[j] + a3 * b3[j];
+            }
+            kk += 4;
+        }
+        while kk < k {
+            let aik = arow[kk];
+            let brow = &b[kk * n..(kk + 1) * n];
+            for (cj, bj) in crow.iter_mut().zip(brow) {
+                *cj += aik * bj;
+            }
+            kk += 1;
+        }
+    }
+}
+
+/// The pre-kernel-layer reference matmul (plain ikj, one k per pass).
+/// Kept as the "before" side of the kernel equivalence tests and the
+/// `perf_hotpath` naive-kernel flag; same semantics as [`matmul`] up to
+/// float reassociation (results agree within ~1e-6 relative).
+pub fn matmul_naive(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, c: &mut [f32]) {
     assert_eq!(a.len(), m * k);
     assert_eq!(b.len(), k * n);
     assert_eq!(c.len(), m * n);
@@ -74,9 +130,6 @@ pub fn matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, c: &mut [f32])
         let crow = &mut c[i * n..(i + 1) * n];
         for kk in 0..k {
             let aik = a[i * k + kk];
-            if aik == 0.0 {
-                continue;
-            }
             let brow = &b[kk * n..(kk + 1) * n];
             for (cj, bj) in crow.iter_mut().zip(brow) {
                 *cj += aik * bj;
@@ -85,8 +138,90 @@ pub fn matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, c: &mut [f32])
     }
 }
 
-/// y = x[m,k] x W[k,n] + b (b optional), allocating variant.
-pub fn linear(x: &Tensor, w: &Tensor, b: Option<&[f32]>) -> Tensor {
+/// Row-partitioned parallel [`matmul`] over a worker pool. Each worker
+/// computes a contiguous block of output rows with the same serial
+/// micro-kernel, so the result is **bitwise identical** to the serial call
+/// for any worker count (pinned by `tests/kernel_equivalence.rs` across
+/// pool sizes {1, 2, 8}).
+///
+/// Must not be called from a worker of the same pool (nested `map_wait`
+/// deadlocks); use [`matmul_auto`], which checks.
+pub fn matmul_parallel(
+    pool: &crate::util::threadpool::ThreadPool,
+    a: &[f32],
+    b: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    c: &mut [f32],
+) {
+    assert_eq!(a.len(), m * k);
+    assert_eq!(b.len(), k * n);
+    assert_eq!(c.len(), m * n);
+    let jobs = pool.size().min(m).max(1);
+    if jobs == 1 {
+        return matmul_rows(a, b, m, k, n, c);
+    }
+    let rows_per = (m + jobs - 1) / jobs;
+    // Smuggle the borrows as addresses: the Job type is 'static but
+    // map_wait joins every job before returning, so `a`, `b`, and `c`
+    // strictly outlive all worker accesses, and each job writes a disjoint
+    // row range of `c`.
+    let a_addr = a.as_ptr() as usize;
+    let b_addr = b.as_ptr() as usize;
+    let c_addr = c.as_mut_ptr() as usize;
+    pool.map_wait(jobs, move |j| {
+        let lo = j * rows_per;
+        let hi = ((j + 1) * rows_per).min(m);
+        if lo >= hi {
+            return;
+        }
+        // SAFETY: see above — shared &[f32] views plus a &mut slice of
+        // rows [lo, hi) that no other job touches, all joined before the
+        // caller's borrows end.
+        let (a_rows, b, c_rows) = unsafe {
+            (
+                std::slice::from_raw_parts((a_addr as *const f32).add(lo * k), (hi - lo) * k),
+                std::slice::from_raw_parts(b_addr as *const f32, k * n),
+                std::slice::from_raw_parts_mut((c_addr as *mut f32).add(lo * n), (hi - lo) * n),
+            )
+        };
+        matmul_rows(a_rows, b, hi - lo, k, n, c_rows);
+    })
+    .expect("parallel matmul job panicked");
+}
+
+/// Rows below this run serially. Set strictly above
+/// `nn::kernel::MAX_DECODE_ROWS` (= 64, the γ cap) so every steady-state
+/// cached forward — whose matmuls have m = k ≤ 64 — stays on the serial,
+/// allocation-free path (the zero-allocation guarantee of
+/// `forward_cached` must hold for *all* valid γ, and `map_wait`
+/// allocates); prefill-sized m still parallelizes. Cross-checked by a
+/// test in `nn::kernel`.
+pub const PAR_MIN_ROWS: usize = 65;
+/// Minimum per-row work (k·n mults) for the parallel path to win.
+pub const PAR_MIN_ROW_FLOPS: usize = 2048;
+
+/// [`matmul`] that routes prefill-sized calls through the shared pool and
+/// everything else (small m, small per-row work, or already running on a
+/// pool worker) through the serial kernel. Bitwise identical either way.
+pub fn matmul_auto(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, c: &mut [f32]) {
+    use crate::util::threadpool::{global_pool, in_worker};
+    if m >= PAR_MIN_ROWS && k * n >= PAR_MIN_ROW_FLOPS && !in_worker() {
+        let pool = global_pool();
+        if pool.size() > 1 {
+            return matmul_parallel(pool, a, b, m, k, n, c);
+        }
+    }
+    matmul(a, b, m, k, n, c)
+}
+
+/// y = x[m,k] x W[k,n] + b (b optional), allocating variant over
+/// [`matmul_naive`]: the embed/head of the reference (pre-kernel-layer)
+/// forward, kept so the "before" flag measures the old kernel end to end.
+/// The kernel layer itself writes into caller scratch via
+/// `nn::kernel::embed_tokens` / `head_rows` instead.
+pub fn linear_naive(x: &Tensor, w: &Tensor, b: Option<&[f32]>) -> Tensor {
     let (m, k) = (x.numel() / x.shape[x.rank() - 1], *x.shape.last().unwrap());
     assert_eq!(w.rank(), 2);
     assert_eq!(w.shape[0], k, "linear: in-dim mismatch");
@@ -94,7 +229,7 @@ pub fn linear(x: &Tensor, w: &Tensor, b: Option<&[f32]>) -> Tensor {
     let mut out_shape = x.shape.clone();
     *out_shape.last_mut().unwrap() = n;
     let mut out = Tensor::zeros(&out_shape);
-    matmul(&x.data, &w.data, m, k, n, &mut out.data);
+    matmul_naive(&x.data, &w.data, m, k, n, &mut out.data);
     if let Some(bias) = b {
         assert_eq!(bias.len(), n);
         for r in 0..m {
@@ -186,10 +321,64 @@ mod tests {
     }
 
     #[test]
-    fn linear_bias() {
+    fn matmul_matches_naive_on_odd_shapes() {
+        // Exercise the unrolled-by-4 path plus the remainder loop.
+        let mut rng = crate::util::rng::Rng::new(7);
+        for &(m, k, n) in &[(1usize, 1usize, 1usize), (3, 5, 2), (4, 7, 9), (8, 16, 3), (5, 13, 17)] {
+            let a: Vec<f32> = (0..m * k).map(|_| rng.normal() as f32).collect();
+            let b: Vec<f32> = (0..k * n).map(|_| rng.normal() as f32).collect();
+            let mut c0 = vec![0.0; m * n];
+            let mut c1 = vec![0.0; m * n];
+            matmul_naive(&a, &b, m, k, n, &mut c0);
+            matmul(&a, &b, m, k, n, &mut c1);
+            for (x, y) in c0.iter().zip(&c1) {
+                assert!((x - y).abs() < 1e-5, "blocked {y} vs naive {x} at ({m},{k},{n})");
+            }
+        }
+    }
+
+    #[test]
+    fn matmul_propagates_nan_through_zero_rows() {
+        // A zero in A must not skip a NaN in B: 0.0 * NaN = NaN (the old
+        // zero-skip branch silently dropped it).
+        let a = vec![0.0f32, 1.0];
+        let b = vec![f32::NAN, 2.0, 3.0, 4.0];
+        let mut c = vec![0.0; 2];
+        matmul(&a, &b, 1, 2, 2, &mut c);
+        assert!(c[0].is_nan(), "NaN dropped by the kernel: {c:?}");
+        let mut c = vec![0.0; 2];
+        matmul_naive(&a, &b, 1, 2, 2, &mut c);
+        assert!(c[0].is_nan(), "NaN dropped by the naive kernel: {c:?}");
+    }
+
+    #[test]
+    fn matmul_parallel_bitwise_equals_serial() {
+        use crate::util::threadpool::ThreadPool;
+        let mut rng = crate::util::rng::Rng::new(11);
+        let (m, k, n) = (37, 24, 19);
+        let a: Vec<f32> = (0..m * k).map(|_| rng.normal() as f32).collect();
+        let b: Vec<f32> = (0..k * n).map(|_| rng.normal() as f32).collect();
+        let mut serial = vec![0.0; m * n];
+        matmul(&a, &b, m, k, n, &mut serial);
+        for threads in [1usize, 2, 8] {
+            let pool = ThreadPool::new(threads);
+            let mut par = vec![0.0; m * n];
+            matmul_parallel(&pool, &a, &b, m, k, n, &mut par);
+            for (i, (x, y)) in serial.iter().zip(&par).enumerate() {
+                assert_eq!(
+                    x.to_bits(),
+                    y.to_bits(),
+                    "bit drift at {i} with {threads} threads: {x} vs {y}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn linear_naive_bias() {
         let x = Tensor::from_vec(&[1, 2], vec![1.0, 1.0]);
         let w = Tensor::from_vec(&[2, 3], vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
-        let out = linear(&x, &w, Some(&[10.0, 20.0, 30.0]));
+        let out = linear_naive(&x, &w, Some(&[10.0, 20.0, 30.0]));
         assert_eq!(out.data, vec![15.0, 27.0, 39.0]);
         assert_eq!(out.shape, vec![1, 3]);
     }

@@ -1,9 +1,29 @@
 //! Fixed-size worker pool over std::sync primitives (no tokio offline).
-//! Backs the HTTP server's connection handling and the load generator.
+//! Backs the HTTP server's connection handling, the load generator, and —
+//! since the kernel-layer PR — the native backend's row-parallel matmul
+//! and the batched verify fan-out.
+//!
+//! Panic safety: a panicking job is caught in the worker loop (the worker
+//! thread survives and keeps draining the queue), and [`ThreadPool::map_wait`]
+//! surfaces the panic as an `Err` instead of poisoning the pool. Before
+//! this, one bad job silently shrank the pool and a later `map_wait` died
+//! on a missing result.
+//!
+//! A process-wide shared pool for compute kernels lives behind
+//! [`global_pool`]; its size comes from `STRIDE_THREADS` (or available
+//! parallelism, capped at 8) and can be fixed programmatically once via
+//! [`init_global_pool`] before first use. The kernel pool's workers are
+//! named `stride-kernel-*` (other pools default to `stride-worker-*`);
+//! [`in_worker`] lets nested code detect that it is already running on
+//! the *kernel* pool and fall back to the serial path instead of
+//! deadlocking on a recursive `map_wait`.
 
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::mpsc;
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, OnceLock};
 use std::thread;
+
+use anyhow::{anyhow, Result};
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
 
@@ -14,6 +34,14 @@ pub struct ThreadPool {
 
 impl ThreadPool {
     pub fn new(size: usize) -> ThreadPool {
+        Self::with_name(size, "stride-worker")
+    }
+
+    /// Pool with a custom worker-name prefix. The global compute pool uses
+    /// `stride-kernel` so [`in_worker`] identifies *its* workers
+    /// specifically — the HTTP connection pool's `stride-worker` threads
+    /// must not trip the serial-fallback guard.
+    pub fn with_name(size: usize, prefix: &str) -> ThreadPool {
         assert!(size > 0);
         let (tx, rx) = mpsc::channel::<Job>();
         let rx = Arc::new(Mutex::new(rx));
@@ -21,14 +49,19 @@ impl ThreadPool {
             .map(|i| {
                 let rx = Arc::clone(&rx);
                 thread::Builder::new()
-                    .name(format!("stride-worker-{i}"))
+                    .name(format!("{prefix}-{i}"))
                     .spawn(move || loop {
                         let job = {
                             let guard = rx.lock().unwrap();
                             guard.recv()
                         };
                         match job {
-                            Ok(job) => job(),
+                            // A panicking job must not kill the worker: the
+                            // pool would silently shrink and a later
+                            // map_wait would hang on the missing slot.
+                            Ok(job) => {
+                                let _ = catch_unwind(AssertUnwindSafe(job));
+                            }
                             Err(_) => break, // sender dropped: shutdown
                         }
                     })
@@ -36,6 +69,11 @@ impl ThreadPool {
             })
             .collect();
         ThreadPool { workers, tx: Some(tx) }
+    }
+
+    /// Worker thread count.
+    pub fn size(&self) -> usize {
+        self.workers.len()
     }
 
     pub fn execute<F: FnOnce() + Send + 'static>(&self, f: F) {
@@ -46,8 +84,14 @@ impl ThreadPool {
             .expect("workers alive");
     }
 
-    /// Run `f` over 0..n from the pool and wait for all results (scoped join).
-    pub fn map_wait<T, F>(&self, n: usize, f: F) -> Vec<T>
+    /// Run `f` over 0..n from the pool and wait for all results (scoped
+    /// join: every job has completed by the time this returns). A panic in
+    /// any `f(i)` is caught and surfaced as an `Err` naming the first
+    /// panicked index — the pool itself stays usable.
+    ///
+    /// Must not be called from a worker of the same pool: the caller's job
+    /// would block waiting for queue slots behind itself (see [`in_worker`]).
+    pub fn map_wait<T, F>(&self, n: usize, f: F) -> Result<Vec<T>>
     where
         T: Send + 'static,
         F: Fn(usize) -> T + Send + Sync + 'static,
@@ -58,15 +102,37 @@ impl ThreadPool {
             let f = Arc::clone(&f);
             let tx = tx.clone();
             self.execute(move || {
-                let _ = tx.send((i, f(i)));
+                // Catch here (not just in the worker loop) so the slot is
+                // always filled and the panic is attributable to its index.
+                let r = catch_unwind(AssertUnwindSafe(|| f(i)));
+                let _ = tx.send((i, r));
             });
         }
         drop(tx);
         let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
-        for (i, v) in rx {
-            out[i] = Some(v);
+        let mut panicked: Vec<(usize, String)> = Vec::new();
+        for (i, r) in rx {
+            match r {
+                Ok(v) => out[i] = Some(v),
+                Err(payload) => panicked.push((i, panic_message(&payload))),
+            }
         }
-        out.into_iter().map(|v| v.expect("worker panicked")).collect()
+        if let Some((i, msg)) = panicked.into_iter().min_by_key(|(i, _)| *i) {
+            return Err(anyhow!("map_wait job {i} panicked: {msg}"));
+        }
+        out.into_iter()
+            .map(|v| v.ok_or_else(|| anyhow!("map_wait job lost (worker died)")))
+            .collect()
+    }
+}
+
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
     }
 }
 
@@ -77,6 +143,48 @@ impl Drop for ThreadPool {
             let _ = w.join();
         }
     }
+}
+
+// ---------------------------------------------------------------------------
+// Process-wide compute pool (kernel layer).
+// ---------------------------------------------------------------------------
+
+static GLOBAL: OnceLock<ThreadPool> = OnceLock::new();
+
+/// Thread count the global pool would be built with: `STRIDE_THREADS` if
+/// set (>= 1), else available parallelism capped at 8 (the compute kernels
+/// stop scaling before the HTTP worker count does).
+pub fn default_threads() -> usize {
+    if let Ok(v) = std::env::var("STRIDE_THREADS") {
+        if let Ok(n) = v.trim().parse::<usize>() {
+            return n.max(1);
+        }
+    }
+    thread::available_parallelism().map(|n| n.get()).unwrap_or(1).min(8)
+}
+
+const KERNEL_POOL_NAME: &str = "stride-kernel";
+
+/// The shared compute pool, built on first use with [`default_threads`].
+pub fn global_pool() -> &'static ThreadPool {
+    GLOBAL.get_or_init(|| ThreadPool::with_name(default_threads(), KERNEL_POOL_NAME))
+}
+
+/// Fix the global pool size before first use (server startup). Returns the
+/// actual size — an earlier initialization wins (the constructor only runs
+/// if the pool does not exist yet; no threads are spawned and thrown away).
+pub fn init_global_pool(threads: usize) -> usize {
+    GLOBAL
+        .get_or_init(|| ThreadPool::with_name(threads.max(1), KERNEL_POOL_NAME))
+        .size()
+}
+
+/// True when the current thread is a *global compute pool* worker. Kernel
+/// code uses this to run serially instead of issuing a nested
+/// (deadlocking) `map_wait`. Other pools (the HTTP connection pool) keep
+/// the `stride-worker` prefix and do not trip this guard.
+pub fn in_worker() -> bool {
+    thread::current().name().map_or(false, |n| n.starts_with(KERNEL_POOL_NAME))
 }
 
 #[cfg(test)]
@@ -106,8 +214,35 @@ mod tests {
     #[test]
     fn map_wait_ordered() {
         let pool = ThreadPool::new(3);
-        let out = pool.map_wait(10, |i| i * i);
+        let out = pool.map_wait(10, |i| i * i).unwrap();
         assert_eq!(out, (0..10).map(|i| i * i).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn map_wait_surfaces_panics_and_pool_survives() {
+        let pool = ThreadPool::new(2);
+        let err = pool
+            .map_wait(4, |i| {
+                if i == 2 {
+                    panic!("boom at {i}");
+                }
+                i
+            })
+            .unwrap_err();
+        assert!(err.to_string().contains("panicked"), "{err}");
+        assert!(err.to_string().contains("boom"), "{err}");
+        // The workers caught the unwind: the pool still runs jobs.
+        let out = pool.map_wait(6, |i| i + 1).unwrap();
+        assert_eq!(out, vec![1, 2, 3, 4, 5, 6]);
+    }
+
+    #[test]
+    fn execute_panic_does_not_shrink_pool() {
+        let pool = ThreadPool::new(1);
+        pool.execute(|| panic!("job dies, worker must not"));
+        // Single worker: if the panic killed it, this would hang/err.
+        let out = pool.map_wait(3, |i| i).unwrap();
+        assert_eq!(out, vec![0, 1, 2]);
     }
 
     #[test]
@@ -115,5 +250,23 @@ mod tests {
         let pool = ThreadPool::new(2);
         pool.execute(|| std::thread::sleep(std::time::Duration::from_millis(10)));
         drop(pool); // must not hang or panic
+    }
+
+    #[test]
+    fn worker_detection_is_kernel_pool_specific() {
+        assert!(!in_worker());
+        // Only kernel-named workers trip the guard...
+        let kernel = ThreadPool::with_name(2, KERNEL_POOL_NAME);
+        let flags = kernel.map_wait(4, |_| in_worker()).unwrap();
+        assert!(flags.iter().all(|&f| f));
+        // ...a default-named pool (e.g. HTTP connections) must not.
+        let http = ThreadPool::new(2);
+        let flags = http.map_wait(4, |_| in_worker()).unwrap();
+        assert!(flags.iter().all(|&f| !f), "non-kernel pool misdetected as kernel worker");
+    }
+
+    #[test]
+    fn global_pool_has_workers() {
+        assert!(global_pool().size() >= 1);
     }
 }

@@ -1,0 +1,115 @@
+//! Counting-allocator proof of the kernel layer's zero-allocation claim:
+//! a steady-state `NativeModel::forward_cached` performs **zero** heap
+//! allocations (packed weights, cache-owned arena, slice return), and a
+//! steady-state `NativeSession::extend` allocates only the trait-mandated
+//! return `Vec`.
+//!
+//! This file contains exactly one `#[test]` on purpose: the counter is a
+//! process-wide global, and a sibling test allocating concurrently would
+//! make the measurement meaningless.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use stride::models::{DecodeSession, NativeBackend};
+use stride::nn::{KvCache, ModelDims, NativeModel};
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+struct CountingAlloc;
+
+// SAFETY: delegates straight to `System`; the counter uses a lock-free
+// atomic and never allocates.
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static A: CountingAlloc = CountingAlloc;
+
+fn allocs() -> u64 {
+    ALLOCS.load(Ordering::Relaxed)
+}
+
+#[test]
+fn steady_state_decode_does_not_allocate() {
+    let dims = ModelDims { patch: 4, n_ctx: 32, d_model: 16, n_layers: 2, n_heads: 2, d_ff: 32 };
+    let model = NativeModel::random("m", dims, 1);
+    let toks: Vec<f32> = (0..32 * 4).map(|i| (i as f32 * 0.17).sin()).collect();
+
+    // --- Kernel layer: forward_cached over a prefilled cache, k = 1.
+    let mut cache = KvCache::new(&dims);
+    let _ = model.forward_cached(&mut cache, &toks, 16).unwrap(); // prefill (allocs OK)
+    // Warm one steady-state step so any lazy one-time init is done.
+    let _ = model.forward_cached(&mut cache, &toks[16 * 4..17 * 4], 1).unwrap();
+    cache.truncate(16);
+
+    let before = allocs();
+    for step in 0..8 {
+        let _ = model
+            .forward_cached(&mut cache, &toks[(16 + step) * 4..(17 + step) * 4], 1)
+            .unwrap();
+        cache.truncate(16);
+    }
+    let kernel_allocs = allocs() - before;
+    assert_eq!(
+        kernel_allocs, 0,
+        "forward_cached must be allocation-free in steady state \
+         (packed weights + cache-owned arena); counted {kernel_allocs} over 8 steps"
+    );
+
+    // γ-sized extends (k up to MAX_DECODE_ROWS) are steady state too: the
+    // owned arena covers them and matmul_auto must stay serial (the pool
+    // path allocates). k = 16 was exactly the old PAR_MIN_ROWS, so this
+    // guards the threshold regression.
+    let before = allocs();
+    for _ in 0..4 {
+        let _ = model.forward_cached(&mut cache, &toks[16 * 4..32 * 4], 16).unwrap();
+        cache.truncate(16);
+    }
+    let gamma_allocs = allocs() - before;
+    assert_eq!(
+        gamma_allocs, 0,
+        "gamma-sized forward_cached (k = 16) must also be allocation-free; \
+         counted {gamma_allocs} over 4 steps"
+    );
+
+    // --- Session layer: extend/rollback. The DecodeSession contract
+    // returns a Vec, so the only permitted allocation per extend is that
+    // return value (1 per call; <= 2 leaves room for allocator-internal
+    // bookkeeping on some platforms, still far below the dozens a
+    // format!-keyed or per-layer-allocating forward would show).
+    let backend = NativeBackend::new(model);
+    let mut sess = backend.begin_cached(&toks, 16).unwrap();
+    // Warm-up: settle Vec capacities and the timing summary.
+    for step in 0..4 {
+        let _ = sess.extend(&toks[(16 + step) * 4..(17 + step) * 4], 1).unwrap();
+        sess.rollback(1).unwrap();
+    }
+    let before = allocs();
+    let rounds = 8u64;
+    for step in 0..rounds as usize {
+        let _ = sess.extend(&toks[(16 + step) * 4..(17 + step) * 4], 1).unwrap();
+        sess.rollback(1).unwrap();
+    }
+    let per_round = (allocs() - before) as f64 / rounds as f64;
+    assert!(
+        per_round <= 2.0,
+        "steady-state extend should allocate only its return Vec; \
+         measured {per_round} allocations per extend+rollback round"
+    );
+}

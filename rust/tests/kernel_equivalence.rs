@@ -1,0 +1,183 @@
+//! Equivalence suite for the kernel layer: the packed-weight / scratch-
+//! arena / blocked-matmul path must reproduce the pre-kernel-layer
+//! reference implementation (string-keyed lookups, per-call allocation,
+//! naive matmul) within 1e-5, the parallel paths must be *bitwise*
+//! identical to serial for every thread count, and the pool must surface
+//! job panics instead of silently shrinking.
+
+use stride::models::{Backend, BatchDecodeSession, DecodeSession, NativeBackend};
+use stride::nn::{ModelDims, NativeModel};
+use stride::util::proptest_lite::{self, Pair, UsizeRange};
+use stride::util::rng::Rng;
+use stride::util::tensor::{matmul, matmul_naive, matmul_parallel};
+use stride::util::threadpool::ThreadPool;
+
+const TOL: f32 = 1e-5;
+
+fn dims() -> ModelDims {
+    ModelDims { patch: 4, n_ctx: 32, d_model: 16, n_layers: 2, n_heads: 2, d_ff: 32 }
+}
+
+/// Same seed twice: one kernel-layer backend, one reference backend.
+fn pair(seed: u64) -> (NativeBackend, NativeBackend) {
+    let packed = NativeBackend::new(NativeModel::random("m", dims(), seed));
+    let mut reference = NativeBackend::new(NativeModel::random("m", dims(), seed));
+    reference.set_reference_kernel(true);
+    (packed, reference)
+}
+
+fn tokens(n: usize, seed: u64) -> Vec<f32> {
+    let mut rng = Rng::new(seed);
+    (0..n * 4).map(|_| rng.normal() as f32).collect()
+}
+
+fn assert_close(a: &[f32], b: &[f32], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length mismatch");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert!((x - y).abs() < TOL, "{what}: [{i}] packed {x} vs reference {y}");
+    }
+}
+
+#[test]
+fn packed_forward_matches_string_keyed_reference() {
+    let (packed, reference) = pair(1);
+    for seed in 0..4u64 {
+        for n in [1usize, 3, 13, 32] {
+            let toks = tokens(n, 100 + seed);
+            let a = packed.forward(&toks, n).unwrap();
+            let b = reference.forward(&toks, n).unwrap();
+            assert_close(&a, &b, &format!("forward seed {seed} n {n}"));
+        }
+    }
+}
+
+#[test]
+fn arena_cached_matches_allocating_reference() {
+    // Session prefill + extend + rollback + re-extend on both kernels.
+    let (packed, reference) = pair(2);
+    let toks = tokens(14, 7);
+    let alt = tokens(4, 8);
+    let mut sp = packed.begin_cached(&toks[..6 * 4], 6).unwrap();
+    let mut sr = reference.begin_cached(&toks[..6 * 4], 6).unwrap();
+    let a = sp.extend(&toks[6 * 4..14 * 4], 8).unwrap();
+    let b = sr.extend(&toks[6 * 4..14 * 4], 8).unwrap();
+    assert_close(&a, &b, "extend");
+    sp.rollback(5).unwrap();
+    sr.rollback(5).unwrap();
+    let a = sp.extend(&alt, 4).unwrap();
+    let b = sr.extend(&alt, 4).unwrap();
+    assert_close(&a, &b, "rollback + re-extend");
+    assert_close(&sp.tip_mean().unwrap(), &sr.tip_mean().unwrap(), "tip");
+}
+
+#[test]
+fn prop_packed_equals_reference_over_random_splits() {
+    // For random (n_hist, k): prefill n_hist then extend k must agree
+    // between the kernel layer and the reference implementation.
+    let (packed, reference) = pair(3);
+    proptest_lite::check_with(
+        proptest_lite::Config { cases: 30, seed: 0x7E57, max_shrink_rounds: 40 },
+        &Pair(UsizeRange(1, 12), UsizeRange(1, 8)),
+        |&(n_hist, k)| {
+            let toks = tokens(n_hist + k, 3000 + (n_hist * 37 + k) as u64);
+            let mut sp = packed
+                .begin_cached(&toks[..n_hist * 4], n_hist)
+                .map_err(|e| e.to_string())?;
+            let mut sr = reference
+                .begin_cached(&toks[..n_hist * 4], n_hist)
+                .map_err(|e| e.to_string())?;
+            let a = sp
+                .extend(&toks[n_hist * 4..(n_hist + k) * 4], k)
+                .map_err(|e| e.to_string())?;
+            let b = sr
+                .extend(&toks[n_hist * 4..(n_hist + k) * 4], k)
+                .map_err(|e| e.to_string())?;
+            for (i, (x, y)) in a.iter().zip(&b).enumerate() {
+                if (x - y).abs() >= TOL {
+                    return Err(format!("[{i}] packed {x} vs reference {y}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn blocked_matmul_matches_naive_within_tolerance() {
+    let mut rng = Rng::new(11);
+    for &(m, k, n) in &[(1usize, 16usize, 48usize), (7, 33, 12), (64, 128, 96)] {
+        let a: Vec<f32> = (0..m * k).map(|_| rng.normal() as f32).collect();
+        let b: Vec<f32> = (0..k * n).map(|_| rng.normal() as f32).collect();
+        let mut c0 = vec![0.0; m * n];
+        let mut c1 = vec![0.0; m * n];
+        matmul_naive(&a, &b, m, k, n, &mut c0);
+        matmul(&a, &b, m, k, n, &mut c1);
+        for (x, y) in c0.iter().zip(&c1) {
+            assert!((x - y).abs() < 1e-4 * x.abs().max(1.0), "naive {x} vs blocked {y}");
+        }
+    }
+}
+
+#[test]
+fn parallel_matmul_bit_stable_across_thread_counts() {
+    // STRIDE_THREADS ∈ {1, 2, 8}: the row partition must not move a bit.
+    let mut rng = Rng::new(12);
+    let (m, k, n) = (53, 32, 48);
+    let a: Vec<f32> = (0..m * k).map(|_| rng.normal() as f32).collect();
+    let b: Vec<f32> = (0..k * n).map(|_| rng.normal() as f32).collect();
+    let mut serial = vec![0.0; m * n];
+    matmul(&a, &b, m, k, n, &mut serial);
+    for threads in [1usize, 2, 8] {
+        let pool = ThreadPool::new(threads);
+        let mut par = vec![0.0; m * n];
+        matmul_parallel(&pool, &a, &b, m, k, n, &mut par);
+        for (i, (x, y)) in serial.iter().zip(&par).enumerate() {
+            assert_eq!(x.to_bits(), y.to_bits(), "bit drift at {i} with {threads} threads");
+        }
+    }
+}
+
+#[test]
+fn parallel_batched_verify_bit_stable_and_matches_singles() {
+    // The batched-verify fan-out must equal per-sequence single sessions
+    // exactly — the per-sequence work runs the identical serial kernel on
+    // whatever thread picks it up.
+    let backend = NativeBackend::new(NativeModel::random("m", dims(), 21));
+    let h1 = tokens(3, 31);
+    let h2 = tokens(7, 32);
+    let h3 = tokens(5, 33);
+    let tasks: Vec<(&[f32], usize)> = vec![(&h1, 3), (&h2, 7), (&h3, 5)];
+    let mut bs = backend.begin_cached_batch(&tasks).unwrap();
+    let fresh = tokens(3, 34);
+    let flat = [&fresh[..], &fresh[..], &fresh[..]].concat();
+    let rows = bs.extend(&[0, 1, 2], &flat, 3).unwrap();
+    for (ai, (h, n)) in [(&h1, 3usize), (&h2, 7), (&h3, 5)].iter().enumerate() {
+        let mut solo = backend.begin_cached(h, *n).unwrap();
+        let want = solo.extend(&fresh, 3).unwrap();
+        let got = &rows[ai * 4 * 4..(ai + 1) * 4 * 4];
+        for (i, (x, y)) in want.iter().zip(got).enumerate() {
+            assert_eq!(
+                x.to_bits(),
+                y.to_bits(),
+                "sequence {ai} [{i}]: batch {y} vs single {x}"
+            );
+        }
+    }
+    // Per-sequence rollback after a parallel extend leaves consistent state.
+    bs.rollback(1, 2).unwrap();
+    assert_eq!(bs.len(0), 6);
+    assert_eq!(bs.len(1), 8);
+    assert_eq!(bs.len(2), 8);
+}
+
+#[test]
+fn pool_panic_is_an_error_not_a_hang() {
+    let pool = ThreadPool::new(2);
+    let err = pool
+        .map_wait(3, |i| if i == 1 { panic!("kernel job exploded") } else { i })
+        .unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("panicked"), "unexpected error text: {msg}");
+    // Pool survives and still computes.
+    assert_eq!(pool.map_wait(2, |i| i * 10).unwrap(), vec![0, 10]);
+}

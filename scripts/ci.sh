@@ -21,6 +21,20 @@ cargo test -q
 if [[ "${1:-}" != "--no-bench" ]]; then
     echo "== perf_hotpath smoke (STRIDE_BENCH_QUICK=1) =="
     STRIDE_BENCH_QUICK=1 cargo bench --bench perf_hotpath
+
+    # The kernel-layer bench must leave a sane machine-readable record:
+    # non-empty JSON with no NaN/inf timings (the perf trajectory file).
+    json=results/BENCH_perf_hotpath.json
+    if [[ ! -s "$json" ]]; then
+        echo "error: $json missing or empty after perf_hotpath" >&2
+        exit 1
+    fi
+    if grep -qiE 'nan|inf' "$json"; then
+        echo "error: non-finite timing in $json:" >&2
+        grep -iE 'nan|inf' "$json" >&2
+        exit 1
+    fi
+    echo "kernel bench record OK: $json"
 fi
 
 echo "CI OK"
