@@ -27,6 +27,7 @@ impl Default for AcceptancePolicy {
 }
 
 impl AcceptancePolicy {
+    /// Policy with the given (positive) sigma and bias λ.
     pub fn new(sigma: f64, bias: f64) -> Self {
         assert!(sigma > 0.0 && bias > 0.0);
         AcceptancePolicy { sigma, bias }
@@ -68,8 +69,11 @@ impl AcceptancePolicy {
 /// the N·m bounded terms gives P(|α̂ - ᾱ| >= ε) <= 2 exp(-2 N m ε²).
 #[derive(Clone, Debug)]
 pub struct AcceptanceEstimate {
+    /// Estimated mean acceptance ᾱ.
     pub alpha_hat: f64,
+    /// Held-out histories averaged over.
     pub n_histories: usize,
+    /// Monte-Carlo proposals per history (0 for the closed form).
     pub m_per_history: usize,
     /// 95% Hoeffding half-width.
     pub eps95: f64,

@@ -10,17 +10,21 @@ use anyhow::{bail, Context, Result};
 
 use crate::accept::AcceptancePolicy;
 use crate::models::CacheMode;
-use crate::specdec::{Emission, SpecConfig, Variant};
+use crate::specdec::{AdaptiveConfig, Emission, SpecConfig, Variant};
 use crate::util::json::Json;
 
 /// Parsed command line: positional args + `--key value` / `--flag` options.
 #[derive(Clone, Debug, Default)]
 pub struct Cli {
+    /// Positional arguments in order (e.g. the subcommand).
     pub positional: Vec<String>,
+    /// `--key value` / `--key=value` / bare `--flag` options (flags store
+    /// the string `"true"`).
     pub options: BTreeMap<String, String>,
 }
 
 impl Cli {
+    /// Parse an argument iterator (without the program name).
     pub fn parse(args: impl IntoIterator<Item = String>) -> Result<Cli> {
         let mut cli = Cli::default();
         let mut it = args.into_iter().peekable();
@@ -43,26 +47,31 @@ impl Cli {
         Ok(cli)
     }
 
+    /// Parse the process arguments.
     pub fn from_env() -> Result<Cli> {
         Cli::parse(std::env::args().skip(1))
     }
 
+    /// Raw string value of `--key`, if present.
     pub fn get(&self, key: &str) -> Option<&str> {
         self.options.get(key).map(String::as_str)
     }
 
+    /// `--key` parsed as a float (error when present but malformed).
     pub fn get_f64(&self, key: &str) -> Result<Option<f64>> {
         self.get(key)
             .map(|v| v.parse::<f64>().with_context(|| format!("--{key} must be a number")))
             .transpose()
     }
 
+    /// `--key` parsed as an unsigned integer (error when malformed).
     pub fn get_usize(&self, key: &str) -> Result<Option<usize>> {
         self.get(key)
             .map(|v| v.parse::<usize>().with_context(|| format!("--{key} must be an integer")))
             .transpose()
     }
 
+    /// Whether boolean `--key` was given (accepts `true`/`1`).
     pub fn flag(&self, key: &str) -> bool {
         matches!(self.get(key), Some("true") | Some("1"))
     }
@@ -71,7 +80,10 @@ impl Cli {
 /// Server/engine configuration.
 #[derive(Clone, Debug)]
 pub struct ServeConfig {
+    /// Listen address, `host:port` (port 0 picks an ephemeral port).
     pub bind: String,
+    /// HTTP worker threads (connection handling only; model work runs on
+    /// the single engine thread).
     pub http_workers: usize,
     /// Dynamic batcher: flush when this many requests are queued...
     pub max_batch: usize,
@@ -79,15 +91,28 @@ pub struct ServeConfig {
     pub max_wait_ms: u64,
     /// "xla" | "native"; kernel flavor for xla: "fused" | "pallas".
     pub backend: String,
+    /// XLA kernel flavor ("fused" | "pallas"); ignored by `native`.
     pub kernel: String,
+    /// Default draft block length γ (per-request `gamma` overrides; the
+    /// adaptive controller's opening value).
     pub gamma: usize,
+    /// Default acceptance width σ (per-request `sigma` overrides).
     pub sigma: f64,
+    /// Acceptance bias λ (1.0 = canonical rule).
     pub bias: f64,
+    /// Run the lossless variant (requires `bias` = 1 and `sampled`).
     pub lossless: bool,
     /// Generative (sampled) emission instead of production mean emission.
     pub sampled: bool,
-    /// Adaptive γ from the acceptance monitor (Prop. 3 online).
-    pub adaptive_gamma: bool,
+    /// Adaptive speculation: per-stream γ tuned online from live
+    /// acceptance telemetry (`specdec::controller`). Enabled by the
+    /// `"adaptive"` config key (bool or `{...}` object), `--adaptive`,
+    /// or a per-request `"adaptive"` override. The server keeps one
+    /// long-lived controller whose recommendation seeds each decode
+    /// group, so jobs regroup as γ drifts.
+    pub adaptive: bool,
+    /// Controller knobs, tunable via the `"adaptive": {...}` object form.
+    pub adaptive_cfg: AdaptiveConfig,
     /// Disable speculative decoding entirely (target-only AR) — the
     /// baseline mode for A/B latency comparisons.
     pub baseline: bool,
@@ -100,7 +125,9 @@ pub struct ServeConfig {
     /// 0 = auto (`STRIDE_THREADS` env, else available parallelism capped
     /// at 8). Results are bitwise identical for any value.
     pub threads: usize,
+    /// Artifact directory (HLO executables, weights, manifest).
     pub artifacts: PathBuf,
+    /// Base RNG seed (per-decode-group seeds are derived from it).
     pub seed: u64,
 }
 
@@ -118,7 +145,8 @@ impl Default for ServeConfig {
             bias: 1.0,
             lossless: false,
             sampled: false,
-            adaptive_gamma: false,
+            adaptive: false,
+            adaptive_cfg: AdaptiveConfig::default(),
             baseline: false,
             cache: true,
             threads: 0,
@@ -145,13 +173,51 @@ impl ServeConfig {
                 "bias" => self.bias = v.as_f64().context("bias")?,
                 "lossless" => self.lossless = v.as_bool().context("lossless")?,
                 "sampled" => self.sampled = v.as_bool().context("sampled")?,
-                "adaptive_gamma" => self.adaptive_gamma = v.as_bool().context("adaptive_gamma")?,
+                // Accepts a bare bool or an object of controller knobs
+                // (object implies enabled unless "enabled": false).
+                "adaptive" => self.apply_adaptive_json(v)?,
+                // Pre-controller spelling, kept as an alias.
+                "adaptive_gamma" => self.adaptive = v.as_bool().context("adaptive_gamma")?,
                 "baseline" => self.baseline = v.as_bool().context("baseline")?,
                 "cache" => self.cache = v.as_bool().context("cache")?,
                 "threads" => self.threads = v.as_usize().context("threads")?,
                 "artifacts" => self.artifacts = PathBuf::from(v.as_str().context("artifacts")?),
                 "seed" => self.seed = v.as_usize().context("seed")? as u64,
                 other => bail!("unknown config key: {other}"),
+            }
+        }
+        Ok(())
+    }
+
+    /// Apply the `"adaptive"` config value: `true`/`false`, or an object
+    /// of [`AdaptiveConfig`] knobs (which implies `enabled` unless an
+    /// explicit `"enabled": false` is present).
+    fn apply_adaptive_json(&mut self, v: &Json) -> Result<()> {
+        if let Some(b) = v.as_bool() {
+            self.adaptive = b;
+            return Ok(());
+        }
+        let obj = v.as_obj().context("'adaptive' must be a bool or an object")?;
+        self.adaptive = true;
+        let a = &mut self.adaptive_cfg;
+        for (k, val) in obj {
+            match k.as_str() {
+                "enabled" => self.adaptive = val.as_bool().context("adaptive.enabled")?,
+                "min_gamma" => a.min_gamma = val.as_usize().context("adaptive.min_gamma")?,
+                "max_gamma" => a.max_gamma = val.as_usize().context("adaptive.max_gamma")?,
+                "halflife" => a.halflife = val.as_f64().context("adaptive.halflife")?,
+                "alpha0" => a.alpha0 = val.as_f64().context("adaptive.alpha0")?,
+                "warmup" => a.warmup = val.as_usize().context("adaptive.warmup")?,
+                "dwell" => a.dwell = val.as_usize().context("adaptive.dwell")?,
+                "hysteresis" => a.hysteresis = val.as_f64().context("adaptive.hysteresis")?,
+                "c_override" => a.c_override = val.as_f64().context("adaptive.c_override")?,
+                "sigma_adapt" => a.sigma_adapt = val.as_bool().context("adaptive.sigma_adapt")?,
+                "sigma_min" => a.sigma_min = val.as_f64().context("adaptive.sigma_min")?,
+                "sigma_max" => a.sigma_max = val.as_f64().context("adaptive.sigma_max")?,
+                "alpha_lo" => a.alpha_lo = val.as_f64().context("adaptive.alpha_lo")?,
+                "alpha_hi" => a.alpha_hi = val.as_f64().context("adaptive.alpha_hi")?,
+                "sigma_step" => a.sigma_step = val.as_f64().context("adaptive.sigma_step")?,
+                other => bail!("unknown adaptive config key: {other}"),
             }
         }
         Ok(())
@@ -197,8 +263,10 @@ impl ServeConfig {
         if cli.flag("sampled") {
             self.sampled = true;
         }
-        if cli.flag("adaptive-gamma") {
-            self.adaptive_gamma = true;
+        // `--adaptive` enables the controller; `--adaptive-gamma` is the
+        // pre-controller spelling, kept as an alias.
+        if cli.flag("adaptive") || cli.flag("adaptive-gamma") {
+            self.adaptive = true;
         }
         if cli.flag("baseline") {
             self.baseline = true;
@@ -222,6 +290,8 @@ impl ServeConfig {
         self.validate()
     }
 
+    /// Check cross-field invariants (γ bounds, σ/λ positivity, variant
+    /// compatibility, backend/kernel names, adaptive knobs).
     pub fn validate(&self) -> Result<()> {
         if self.gamma == 0 || self.gamma > 64 {
             bail!("gamma must be in [1, 64], got {}", self.gamma);
@@ -244,9 +314,20 @@ impl ServeConfig {
         if !matches!(self.kernel.as_str(), "fused" | "pallas") {
             bail!("kernel must be 'fused' or 'pallas'");
         }
+        if self.adaptive {
+            self.adaptive_cfg.validate()?;
+            if self.adaptive_cfg.sigma_adapt {
+                bail!(
+                    "adaptive.sigma_adapt is single-stream only; the server's \
+                     batched decode groups share one acceptance policy"
+                );
+            }
+        }
         Ok(())
     }
 
+    /// Lower this serving configuration into the decode engine's
+    /// [`SpecConfig`] (the per-decode-group view of the same knobs).
     pub fn spec_config(&self) -> SpecConfig {
         SpecConfig {
             gamma: self.gamma,
@@ -256,6 +337,7 @@ impl ServeConfig {
             max_residual_draws: 10_000,
             emission: if self.sampled { Emission::Sampled } else { Emission::Mean },
             cache: if self.cache { CacheMode::On } else { CacheMode::Off },
+            adaptive: if self.adaptive { Some(self.adaptive_cfg) } else { None },
         }
     }
 }
@@ -323,6 +405,61 @@ mod tests {
         let cli = Cli::parse(args("--threads 2")).unwrap();
         cfg.apply_cli(&cli).unwrap();
         assert_eq!(cfg.threads, 2);
+    }
+
+    #[test]
+    fn adaptive_plumbing() {
+        // Bool form.
+        let mut cfg = ServeConfig::default();
+        assert!(!cfg.adaptive);
+        cfg.apply_json(&Json::parse(r#"{"adaptive": true}"#).unwrap()).unwrap();
+        assert!(cfg.adaptive);
+        assert!(cfg.spec_config().adaptive.is_some());
+        cfg.apply_json(&Json::parse(r#"{"adaptive": false}"#).unwrap()).unwrap();
+        assert!(cfg.spec_config().adaptive.is_none());
+
+        // Object form implies enabled and sets knobs.
+        let mut cfg = ServeConfig::default();
+        cfg.apply_json(
+            &Json::parse(r#"{"adaptive": {"max_gamma": 8, "dwell": 2, "hysteresis": 0.05}}"#)
+                .unwrap(),
+        )
+        .unwrap();
+        assert!(cfg.adaptive);
+        assert_eq!(cfg.adaptive_cfg.max_gamma, 8);
+        assert_eq!(cfg.adaptive_cfg.dwell, 2);
+        assert!((cfg.adaptive_cfg.hysteresis - 0.05).abs() < 1e-12);
+        cfg.validate().unwrap();
+
+        // Explicit enabled: false in the object form.
+        let mut cfg = ServeConfig::default();
+        cfg.apply_json(&Json::parse(r#"{"adaptive": {"enabled": false, "max_gamma": 4}}"#).unwrap())
+            .unwrap();
+        assert!(!cfg.adaptive);
+        assert_eq!(cfg.adaptive_cfg.max_gamma, 4, "knobs apply even when disabled");
+
+        // Unknown knob rejected.
+        let mut cfg = ServeConfig::default();
+        assert!(cfg.apply_json(&Json::parse(r#"{"adaptive": {"nope": 1}}"#).unwrap()).is_err());
+
+        // CLI flag and the pre-controller alias.
+        let mut cfg = ServeConfig::default();
+        cfg.apply_cli(&Cli::parse(args("--adaptive")).unwrap()).unwrap();
+        assert!(cfg.adaptive);
+        let mut cfg = ServeConfig::default();
+        cfg.apply_cli(&Cli::parse(args("--adaptive-gamma")).unwrap()).unwrap();
+        assert!(cfg.adaptive);
+
+        // Bad bounds rejected at validation.
+        let mut cfg = ServeConfig::default();
+        cfg.apply_json(&Json::parse(r#"{"adaptive": {"min_gamma": 9, "max_gamma": 2}}"#).unwrap())
+            .unwrap();
+        assert!(cfg.validate().is_err());
+
+        // sigma adaptation is single-stream only; the server rejects it.
+        let mut cfg = ServeConfig::default();
+        cfg.apply_json(&Json::parse(r#"{"adaptive": {"sigma_adapt": true}}"#).unwrap()).unwrap();
+        assert!(cfg.validate().is_err());
     }
 
     #[test]

@@ -15,7 +15,7 @@ use anyhow::{bail, Context, Result};
 use super::synthetic::{split_points, Dataset, DatasetSpec};
 
 /// Parse a numeric CSV with a header row; the first column (timestamp) is
-/// skipped. Returns column-major series [channels][rows].
+/// skipped. Returns column-major series `[channels][rows]`.
 pub fn parse_csv(text: &str) -> Result<(Vec<String>, Vec<Vec<f64>>)> {
     let mut lines = text.lines().filter(|l| !l.trim().is_empty());
     let header = lines.next().context("empty CSV")?;

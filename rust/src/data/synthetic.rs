@@ -11,16 +11,27 @@ use crate::util::rng::{std_normal, uniform01};
 /// Parameters of one synthetic dataset (mirror of datagen.DatasetSpec).
 #[derive(Clone, Debug, PartialEq)]
 pub struct DatasetSpec {
+    /// Dataset name ("etth1", "weather", ...).
     pub name: &'static str,
+    /// Base seed for all of the dataset's RNG sub-streams.
     pub seed: u64,
+    /// Number of channels (independent series).
     pub channels: usize,
+    /// Series length in time steps.
     pub length: usize,
+    /// Seasonal component periods, in time steps.
     pub periods: Vec<usize>,
+    /// Base amplitude per seasonal component.
     pub amps: Vec<f64>,
+    /// AR(1) noise coefficient.
     pub ar_phi: f64,
+    /// AR(1) innovation standard deviation.
     pub noise_std: f64,
+    /// Linear trend magnitude per 1000 steps.
     pub trend_per_k: f64,
+    /// Number of random level shifts (regime switches).
     pub n_shifts: usize,
+    /// Level-shift magnitude standard deviation.
     pub shift_std: f64,
 }
 
@@ -55,6 +66,7 @@ pub fn specs() -> Vec<DatasetSpec> {
     ]
 }
 
+/// The spec of a benchmark dataset by name, if known.
 pub fn spec_by_name(name: &str) -> Option<DatasetSpec> {
     specs().into_iter().find(|s| s.name == name)
 }
@@ -77,11 +89,13 @@ fn chan_seed(spec: &DatasetSpec, tag: u64, channel: usize) -> u64 {
 /// A generated dataset: raw series plus train-split normalization stats.
 #[derive(Clone, Debug)]
 pub struct Dataset {
+    /// The generating parameters.
     pub spec: DatasetSpec,
-    /// Raw series, row-major [channels][length].
+    /// Raw series, row-major `[channels][length]`.
     pub raw: Vec<Vec<f64>>,
     /// Per-channel train mean/std (population std, matching numpy).
     pub mean: Vec<f64>,
+    /// Per-channel train standard deviation (floored at 1e-8).
     pub std: Vec<f64>,
 }
 
@@ -133,6 +147,7 @@ pub fn split_points(length: usize) -> (usize, usize) {
 }
 
 impl Dataset {
+    /// Generate the full dataset for a spec (deterministic).
     pub fn generate(spec: &DatasetSpec) -> Dataset {
         let raw: Vec<Vec<f64>> =
             (0..spec.channels).map(|c| generate_channel(spec, c)).collect();
@@ -149,6 +164,7 @@ impl Dataset {
         Dataset { spec: spec.clone(), raw, mean, std }
     }
 
+    /// Generate a benchmark dataset by name, if known.
     pub fn by_name(name: &str) -> Option<Dataset> {
         spec_by_name(name).map(|s| Dataset::generate(&s))
     }
@@ -164,14 +180,17 @@ impl Dataset {
         (t0..t0 + len).map(|t| self.norm(channel, t)).collect()
     }
 
+    /// Number of channels.
     pub fn channels(&self) -> usize {
         self.spec.channels
     }
 
+    /// Series length in time steps.
     pub fn len(&self) -> usize {
         self.spec.length
     }
 
+    /// Whether the series is empty (never true for the benchmark specs).
     pub fn is_empty(&self) -> bool {
         self.spec.length == 0
     }

@@ -7,7 +7,9 @@ use super::synthetic::{split_points, Dataset};
 /// One forecasting task instance (normalized values).
 #[derive(Clone, Debug)]
 pub struct Window {
+    /// Source channel index within the dataset.
     pub channel: usize,
+    /// Window start (time step) within the channel.
     pub start: usize,
     /// Lookback, length = lookback patches * patch.
     pub history: Vec<f32>,

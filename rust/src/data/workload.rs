@@ -41,6 +41,7 @@ pub enum Scenario {
 }
 
 impl Scenario {
+    /// Lower-case scenario name (trace/report label).
     pub fn name(&self) -> &'static str {
         match self {
             Scenario::Recommendation => "recommendation",

@@ -113,8 +113,11 @@ pub fn ar_decode_batch(
 /// Accuracy + efficiency over a set of eval windows for one decoding mode.
 #[derive(Clone, Debug, Default)]
 pub struct EvalResult {
+    /// Windows evaluated.
     pub windows: usize,
+    /// Mean squared error over all windows.
     pub mse: f64,
+    /// Mean absolute error over all windows.
     pub mae: f64,
     /// Total decode wall-clock.
     pub wall: Duration,
@@ -125,6 +128,7 @@ pub struct EvalResult {
 }
 
 impl EvalResult {
+    /// Decode throughput in patches per second.
     pub fn throughput_patches_per_s(&self) -> f64 {
         self.patches as f64 / self.wall.as_secs_f64()
     }

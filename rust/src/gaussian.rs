@@ -11,16 +11,20 @@ use crate::util::stats::phi;
 /// Isotropic Gaussian head: mean vector + shared scalar sigma.
 #[derive(Clone, Debug, PartialEq)]
 pub struct IsoGaussian {
+    /// Mean vector (one entry per patch dimension).
     pub mean: Vec<f32>,
+    /// Shared scalar standard deviation.
     pub sigma: f64,
 }
 
 impl IsoGaussian {
+    /// Head with the given mean and (positive) sigma.
     pub fn new(mean: Vec<f32>, sigma: f64) -> Self {
         assert!(sigma > 0.0, "sigma must be positive");
         IsoGaussian { mean, sigma }
     }
 
+    /// Patch dimensionality.
     pub fn dim(&self) -> usize {
         self.mean.len()
     }
@@ -78,21 +82,26 @@ impl IsoGaussian {
 /// evaluation cost; the ablation bench compares both.
 #[derive(Clone, Debug, PartialEq)]
 pub struct DiagGaussian {
+    /// Mean vector (one entry per patch dimension).
     pub mean: Vec<f32>,
+    /// Per-dimension standard deviations.
     pub sigmas: Vec<f32>,
 }
 
 impl DiagGaussian {
+    /// Head with the given mean and (positive) per-dimension sigmas.
     pub fn new(mean: Vec<f32>, sigmas: Vec<f32>) -> Self {
         assert_eq!(mean.len(), sigmas.len());
         assert!(sigmas.iter().all(|s| *s > 0.0));
         DiagGaussian { mean, sigmas }
     }
 
+    /// Patch dimensionality.
     pub fn dim(&self) -> usize {
         self.mean.len()
     }
 
+    /// log N(x; mean, diag(sigmas²)).
     pub fn log_density(&self, x: &[f32]) -> f64 {
         let mut acc = -0.5 * self.dim() as f64 * (2.0 * std::f64::consts::PI).ln();
         for i in 0..self.dim() {
@@ -103,6 +112,7 @@ impl DiagGaussian {
         acc
     }
 
+    /// Draw x ~ N(mean, diag(sigmas²)).
     pub fn sample(&self, rng: &mut Rng) -> Vec<f32> {
         self.mean
             .iter()

@@ -8,14 +8,19 @@ use std::io::{BufRead, BufReader, Read, Write};
 use std::net::TcpStream;
 use std::time::Duration;
 
+/// A received HTTP response.
 #[derive(Clone, Debug)]
 pub struct HttpResponse {
+    /// Status code (200, 404, ...).
     pub status: u16,
+    /// Response headers in arrival order.
     pub headers: Vec<(String, String)>,
+    /// Raw response body.
     pub body: Vec<u8>,
 }
 
 impl HttpResponse {
+    /// Body as UTF-8 (empty string when not valid UTF-8).
     pub fn body_str(&self) -> &str {
         std::str::from_utf8(&self.body).unwrap_or("")
     }

@@ -10,16 +10,23 @@ use std::time::Duration;
 
 use crate::util::threadpool::ThreadPool;
 
+/// A parsed incoming HTTP request.
 #[derive(Clone, Debug)]
 pub struct Request {
+    /// Upper-cased method ("GET", "POST", ...).
     pub method: String,
+    /// Request path without the query string.
     pub path: String,
+    /// Raw query string, if any.
     pub query: Option<String>,
+    /// Headers in arrival order.
     pub headers: Vec<(String, String)>,
+    /// Raw request body (Content-Length framed).
     pub body: Vec<u8>,
 }
 
 impl Request {
+    /// Case-insensitive header lookup.
     pub fn header(&self, name: &str) -> Option<&str> {
         self.headers
             .iter()
@@ -27,28 +34,37 @@ impl Request {
             .map(|(_, v)| v.as_str())
     }
 
+    /// Body as UTF-8.
     pub fn body_str(&self) -> Result<&str, std::str::Utf8Error> {
         std::str::from_utf8(&self.body)
     }
 }
 
+/// An outgoing HTTP response.
 #[derive(Clone, Debug)]
 pub struct Response {
+    /// Status code.
     pub status: u16,
+    /// `Content-Type` header value.
     pub content_type: &'static str,
+    /// Response body bytes.
     pub body: Vec<u8>,
 }
 
 impl Response {
+    /// JSON response with the given status.
     pub fn json(status: u16, body: String) -> Response {
         Response { status, content_type: "application/json", body: body.into_bytes() }
     }
+    /// Plain-text response with the given status.
     pub fn text(status: u16, body: &str) -> Response {
         Response { status, content_type: "text/plain", body: body.as_bytes().to_vec() }
     }
+    /// 404 with a plain-text body.
     pub fn not_found() -> Response {
         Response::text(404, "not found")
     }
+    /// 400 with the given plain-text message.
     pub fn bad_request(msg: &str) -> Response {
         Response::text(400, msg)
     }
@@ -67,9 +83,12 @@ fn status_text(code: u16) -> &'static str {
     }
 }
 
+/// Shared request handler invoked on worker threads.
 pub type Handler = Arc<dyn Fn(&Request) -> Response + Send + Sync + 'static>;
 
+/// A bound, running HTTP server (accept loop + worker pool).
 pub struct HttpServer {
+    /// The actually-bound local address.
     pub addr: SocketAddr,
     stop: Arc<AtomicBool>,
     accept_thread: Option<std::thread::JoinHandle<()>>,
@@ -108,6 +127,7 @@ impl HttpServer {
         Ok(HttpServer { addr: local, stop, accept_thread: Some(accept_thread) })
     }
 
+    /// Stop accepting and join the accept thread (idempotent).
     pub fn shutdown(&mut self) {
         self.stop.store(true, Ordering::Relaxed);
         if let Some(t) = self.accept_thread.take() {

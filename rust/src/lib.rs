@@ -11,9 +11,29 @@
 //!   speculative-decoding engine (practical + lossless variants), the
 //!   dynamic batcher and router, theory-driven γ selection, and metrics.
 //!
+//! Start with the repo's root `README.md` (quickstart + layer map) and
+//! `docs/ARCHITECTURE.md` (one page per layer: session model, kernel
+//! ownership, threading, batcher grouping, controller design). This crate
+//! enforces `#![warn(missing_docs)]`; `scripts/ci.sh` turns rustdoc
+//! warnings into failures.
+//!
 //! Quick tour:
 //! * [`specdec`] — Algorithm 1/2 over a [`models::Backend`], driven
 //!   through KV-cached decode sessions.
+//! * [`specdec::GammaController`] — the **adaptive speculation
+//!   controller**: per-stream EWMA α̂ over live acceptance telemetry
+//!   (rollback-aware — rejected proposals count at the weight the rule
+//!   gave them), measured draft/target cost ratio, and the closed-form
+//!   speedup curve re-evaluated online to retune γ (hysteresis-gated, so
+//!   no thrash) and optionally σ inside an MSE guard-rail. Adaptation
+//!   changes *when* drafting happens, never *what* is emitted —
+//!   [`specdec::sd_generate_scheduled`] replays a decode's per-round γ
+//!   choices bit-identically (`tests/statistical.rs`). Serving: the
+//!   batcher keys adaptive jobs on a long-lived controller's current
+//!   recommendation (jobs regroup as γ drifts), `/stats` and
+//!   `stride_controller_*` gauges expose the live state, and
+//!   `benches/adaptive_gamma.rs` pins the controller within 90% of the
+//!   best fixed γ on drifting-α workloads.
 //! * [`models`] — backends + the decode-session layer:
 //!   [`models::begin_session`] hands out a [`models::DecodeSession`]
 //!   (`extend`/`rollback`/`evict_to`) that is KV-cached on the native
@@ -51,6 +71,8 @@
 //!   grouped by (γ, σ, cache) and each group's sequences keep their
 //!   decode sessions across all speculative rounds.
 
+#![warn(missing_docs)]
+
 pub mod accept;
 pub mod config;
 pub mod data;
@@ -66,6 +88,7 @@ pub mod server;
 pub mod specdec;
 pub mod theory;
 pub mod util;
+pub mod xla;
 
 /// Crate version string surfaced by the CLI and `/healthz`.
 pub const VERSION: &str = env!("CARGO_PKG_VERSION");

@@ -27,7 +27,8 @@ commands:
   serve   start the HTTP forecasting service
           --bind 127.0.0.1:8080 --backend xla|native --kernel fused|pallas
           --gamma 3 --sigma 0.5 --bias 1.0 --max-batch 8 --max-wait-ms 2
-          --adaptive-gamma --lossless --greedy --baseline --no-cache
+          --adaptive (online gamma controller; knobs via config
+          \"adaptive\": {...}) --lossless --greedy --baseline --no-cache
           --threads N (native kernel pool; 0 = auto/STRIDE_THREADS)
   eval    offline eval: --dataset etth1 --horizon 4 --windows 28
           [--gamma/--sigma/--no-cache...]

@@ -13,28 +13,55 @@ use std::time::Duration;
 
 use crate::util::stats::LatencyHistogram;
 
+/// Thread-safe metrics registry: named counters, float gauges, and
+/// latency histograms, rendered at `/metrics`.
 #[derive(Default)]
 pub struct Metrics {
     counters: Mutex<BTreeMap<String, u64>>,
+    gauges: Mutex<BTreeMap<String, f64>>,
     histograms: Mutex<BTreeMap<String, LatencyHistogram>>,
+    /// Requests admitted by the batcher (all modes).
     pub requests_total: AtomicU64,
+    /// Forecast patches emitted across all requests.
     pub patches_total: AtomicU64,
+    /// Requests that failed validation or decoding.
     pub errors_total: AtomicU64,
 }
 
 impl Metrics {
+    /// Fresh, empty registry.
     pub fn new() -> Metrics {
         Metrics::default()
     }
 
+    /// Add `by` to the named counter (created at 0 on first use).
     pub fn inc(&self, name: &str, by: u64) {
         *self.counters.lock().unwrap().entry(name.to_string()).or_insert(0) += by;
     }
 
+    /// Current value of a named counter (0 when never incremented).
     pub fn counter(&self, name: &str) -> u64 {
         self.counters.lock().unwrap().get(name).copied().unwrap_or(0)
     }
 
+    /// Set a named gauge to an instantaneous value (last write wins —
+    /// e.g. the adaptive controller's current γ / α̂ / c snapshot).
+    /// Non-finite values clear the gauge instead of rendering as NaN.
+    pub fn set_gauge(&self, name: &str, v: f64) {
+        let mut g = self.gauges.lock().unwrap();
+        if v.is_finite() {
+            g.insert(name.to_string(), v);
+        } else {
+            g.remove(name);
+        }
+    }
+
+    /// Current value of a named gauge, if set.
+    pub fn gauge(&self, name: &str) -> Option<f64> {
+        self.gauges.lock().unwrap().get(name).copied()
+    }
+
+    /// Record one duration into the named latency histogram.
     pub fn observe(&self, name: &str, d: Duration) {
         self.histograms
             .lock()
@@ -44,6 +71,8 @@ impl Metrics {
             .record(d);
     }
 
+    /// Quantile of a named latency histogram, in milliseconds (0 when the
+    /// histogram does not exist).
     pub fn quantile_ms(&self, name: &str, q: f64) -> f64 {
         self.histograms
             .lock()
@@ -63,6 +92,9 @@ impl Metrics {
             self.errors_total.load(Ordering::Relaxed),
         ));
         for (k, v) in self.counters.lock().unwrap().iter() {
+            out.push_str(&format!("stride_{k} {v}\n"));
+        }
+        for (k, v) in self.gauges.lock().unwrap().iter() {
             out.push_str(&format!("stride_{k} {v}\n"));
         }
         for (k, h) in self.histograms.lock().unwrap().iter() {
@@ -97,6 +129,8 @@ struct MonitorState {
 }
 
 impl AcceptanceMonitor {
+    /// Monitor over the last `window` per-request acceptance means,
+    /// alerting below `alert_threshold`.
     pub fn new(window: usize, alert_threshold: f64) -> AcceptanceMonitor {
         AcceptanceMonitor {
             window,
@@ -105,6 +139,7 @@ impl AcceptanceMonitor {
         }
     }
 
+    /// Record one request's mean acceptance probability.
     pub fn record(&self, alpha: f64) {
         let mut s = self.inner.lock().unwrap();
         s.alphas.push_back(alpha);
@@ -126,6 +161,7 @@ impl AcceptanceMonitor {
         }
     }
 
+    /// Samples currently in the window.
     pub fn n(&self) -> usize {
         self.inner.lock().unwrap().alphas.len()
     }
@@ -162,6 +198,17 @@ mod tests {
         assert!(text.contains("stride_batches 2"));
         assert!(text.contains("stride_latency_count 2"));
         assert!(m.quantile_ms("latency", 0.5) > 1.0);
+    }
+
+    #[test]
+    fn gauges_render_and_clear_on_nonfinite() {
+        let m = Metrics::new();
+        m.set_gauge("controller_gamma", 5.0);
+        assert_eq!(m.gauge("controller_gamma"), Some(5.0));
+        assert!(m.render().contains("stride_controller_gamma 5"));
+        m.set_gauge("controller_gamma", f64::NAN);
+        assert_eq!(m.gauge("controller_gamma"), None);
+        assert!(!m.render().contains("controller_gamma"), "NaN gauge must not render");
     }
 
     #[test]

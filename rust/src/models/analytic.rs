@@ -9,17 +9,23 @@ use anyhow::Result;
 
 use super::Backend;
 
+/// Closed-form AR(1) backend: `mean(next) = a * last + b` elementwise.
 #[derive(Clone, Debug)]
 pub struct AnalyticBackend {
+    /// Backend label for logs and stats.
     pub name: String,
+    /// Values per patch.
     pub patch: usize,
+    /// AR coefficient.
     pub a: f32,
+    /// AR intercept.
     pub b: f32,
     /// Pretend FLOPs so cost ratios are well-defined in tests.
     pub pseudo_flops: f64,
 }
 
 impl AnalyticBackend {
+    /// Head with `mean(next) = a * last + b`.
     pub fn new(name: &str, patch: usize, a: f32, b: f32) -> AnalyticBackend {
         AnalyticBackend { name: name.into(), patch, a, b, pseudo_flops: 1.0 }
     }

@@ -36,7 +36,9 @@ use anyhow::Result;
 /// serves both draft proposal steps (read the last position) and batched
 /// target validation (read the last γ+1 positions) — see DESIGN.md §2.
 pub trait Backend {
+    /// Backend label for logs and stats.
     fn name(&self) -> &str;
+    /// Values per patch token.
     fn patch(&self) -> usize;
     /// Maximum sequence length (patches) a single forward accepts.
     fn max_ctx(&self) -> usize;

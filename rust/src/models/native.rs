@@ -32,12 +32,15 @@ use crate::util::stats::Summary;
 use crate::util::tensor::Tensor;
 use crate::util::threadpool::{global_pool, in_worker};
 
+/// Pure-Rust transformer backend (the KV-cached decode path and the
+/// PJRT-free bench/test substrate).
 pub struct NativeBackend {
     model: NativeModel,
     timings: Mutex<Summary>,
 }
 
 impl NativeBackend {
+    /// Wrap a loaded [`NativeModel`].
     pub fn new(model: NativeModel) -> NativeBackend {
         NativeBackend { model, timings: Mutex::new(Summary::new()) }
     }
@@ -53,6 +56,7 @@ impl NativeBackend {
         Ok((Self::from_entry(&m.target)?, Self::from_entry(&m.draft)?))
     }
 
+    /// The wrapped model's architecture dimensions.
     pub fn dims(&self) -> &ModelDims {
         &self.model.dims
     }

@@ -41,8 +41,10 @@ use super::Backend;
 /// fall back to the stateless session, which is always correct.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub enum CacheMode {
+    /// Incremental KV-cached sessions where the backend supports them.
     #[default]
     On,
+    /// Stateless re-forward sessions (the baseline cost model).
     Off,
 }
 
@@ -55,9 +57,11 @@ pub enum CacheMode {
 /// patch's position *and* the one beyond (the bonus patch of a fully
 /// accepted speculative round).
 pub trait DecodeSession {
+    /// Values per patch token.
     fn patch(&self) -> usize;
     /// Patches currently in the session context.
     fn len(&self) -> usize;
+    /// Whether the context holds no patches.
     fn is_empty(&self) -> bool {
         self.len() == 0
     }
@@ -95,9 +99,13 @@ pub trait DecodeSession {
 /// round, and writes (append/rollback/evict) are per-sequence because
 /// acceptance lengths diverge.
 pub trait BatchDecodeSession {
+    /// Number of sequences in the batch.
     fn batch(&self) -> usize;
+    /// Values per patch token.
     fn patch(&self) -> usize;
+    /// Context length (patches) of sequence `i`.
     fn len(&self, i: usize) -> usize;
+    /// The backend's context capacity (shared by all sequences).
     fn max_ctx(&self) -> usize;
     /// Tip means for the sequences in `idx` (flat `[idx.len(), patch]`).
     fn tip_means(&mut self, idx: &[usize]) -> Result<Vec<f32>>;
@@ -106,9 +114,13 @@ pub trait BatchDecodeSession {
     /// means with the same per-sequence convention as
     /// [`DecodeSession::extend`].
     fn extend(&mut self, idx: &[usize], patches: &[f32], k: usize) -> Result<Vec<f32>>;
+    /// Append `k` patches to sequence `i` without requiring means.
     fn append(&mut self, i: usize, patches: &[f32], k: usize) -> Result<()>;
+    /// Forget the last `k` patches of sequence `i` (rejected speculation).
     fn rollback(&mut self, i: usize, k: usize) -> Result<()>;
+    /// Slide sequence `i`'s window so exactly `keep` patches remain.
     fn evict_to(&mut self, i: usize, keep: usize) -> Result<()>;
+    /// Batched forward passes run so far (perf accounting).
     fn forwards(&self) -> usize;
 }
 
@@ -162,6 +174,7 @@ pub struct StatelessSession<'a> {
 }
 
 impl<'a> StatelessSession<'a> {
+    /// Session over `backend` primed with `history` (flat `[n_hist, patch]`).
     pub fn new(backend: &'a dyn Backend, history: &[f32], n_hist: usize) -> Result<Self> {
         let p = backend.patch();
         anyhow::ensure!(n_hist >= 1, "session needs at least one history patch");
@@ -298,6 +311,7 @@ pub struct StatelessBatchSession<'a> {
 }
 
 impl<'a> StatelessBatchSession<'a> {
+    /// One session per `(history, n_hist)` task over a shared backend.
     pub fn new(backend: &'a dyn Backend, tasks: &[(&[f32], usize)]) -> Result<Self> {
         let p = backend.patch();
         let mut seqs = Vec::with_capacity(tasks.len());

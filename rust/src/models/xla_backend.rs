@@ -14,6 +14,7 @@ use super::Backend;
 use crate::nn::ModelDims;
 use crate::runtime::{Engine, Executable, Manifest};
 
+/// PJRT-backed backend over AOT HLO artifacts with shape routing.
 pub struct XlaBackend {
     name: String,
     dims: ModelDims,
@@ -74,6 +75,7 @@ impl XlaBackend {
             .with_context(|| format!("no shape variant >= (b{b}, n{n}) for {}", self.name))
     }
 
+    /// All (batch, n_ctx) executable shapes this backend can route to.
     pub fn available_shapes(&self) -> Vec<(usize, usize)> {
         self.variants.iter().map(|(b, n, _)| (*b, *n)).collect()
     }

@@ -44,24 +44,38 @@ pub(crate) const RMS_EPS: f32 = 1e-6;
 /// Direct handles to one decoder layer's tensors.
 #[derive(Clone)]
 pub struct LayerWeights {
+    /// Pre-attention RMSNorm scale, `[d_model]`.
     pub ln1: Arc<Tensor>,
+    /// Fused QKV projection, `[d_model, 3*d_model]`.
     pub wqkv: Arc<Tensor>,
+    /// Attention output projection, `[d_model, d_model]`.
     pub wo: Arc<Tensor>,
+    /// Pre-MLP RMSNorm scale, `[d_model]`.
     pub ln2: Arc<Tensor>,
+    /// SwiGLU gate projection, `[d_model, d_ff]`.
     pub wg: Arc<Tensor>,
+    /// SwiGLU up projection, `[d_model, d_ff]`.
     pub wu: Arc<Tensor>,
+    /// SwiGLU down projection, `[d_ff, d_model]`.
     pub wd: Arc<Tensor>,
 }
 
 /// All weight handles a forward needs, resolved once at construction.
 #[derive(Clone)]
 pub struct PackedWeights {
+    /// Patch embedding, `[patch, d_model]`.
     pub embed_w: Arc<Tensor>,
+    /// Patch embedding bias, `[d_model]`.
     pub embed_b: Arc<Tensor>,
+    /// Learned absolute position table, `[n_ctx, d_model]`.
     pub pos: Arc<Tensor>,
+    /// Per-layer handles, in order.
     pub layers: Vec<LayerWeights>,
+    /// Final RMSNorm scale, `[d_model]`.
     pub final_norm: Arc<Tensor>,
+    /// Output head, `[d_model, patch]`.
     pub head_w: Arc<Tensor>,
+    /// Output head bias, `[patch]`.
     pub head_b: Arc<Tensor>,
 }
 

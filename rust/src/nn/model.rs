@@ -36,15 +36,22 @@ use crate::util::tensor::{linear_naive, matmul_naive, rmsnorm, silu, softmax_row
 /// Architecture dims (mirror of model.ModelConfig; parsed from the manifest).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct ModelDims {
+    /// Values per patch token.
     pub patch: usize,
+    /// Maximum context length in patches.
     pub n_ctx: usize,
+    /// Residual stream width.
     pub d_model: usize,
+    /// Decoder layers.
     pub n_layers: usize,
+    /// Attention heads per layer.
     pub n_heads: usize,
+    /// MLP hidden width.
     pub d_ff: usize,
 }
 
 impl ModelDims {
+    /// Per-head dimension (`d_model / n_heads`).
     pub fn d_head(&self) -> usize {
         self.d_model / self.n_heads
     }
@@ -52,7 +59,9 @@ impl ModelDims {
 
 /// A loaded native model.
 pub struct NativeModel {
+    /// Architecture dimensions.
     pub dims: ModelDims,
+    /// Model name (manifest name or a synthetic label).
     pub name: String,
     /// String-keyed store (reference path + introspection); shares tensor
     /// storage with `pw` via `Arc`, so keeping both costs pointers only.
@@ -514,6 +523,8 @@ pub struct KvCache {
 }
 
 impl KvCache {
+    /// Empty cache with full-capacity K/V buffers and the owned scratch
+    /// arena pre-sized for `dims`.
     pub fn new(dims: &ModelDims) -> KvCache {
         let cap = dims.n_ctx * dims.d_model;
         KvCache {
@@ -530,6 +541,7 @@ impl KvCache {
         self.n
     }
 
+    /// Whether no rows are cached.
     pub fn is_empty(&self) -> bool {
         self.n == 0
     }

@@ -59,6 +59,7 @@ impl Weights {
         Ok(Weights { map })
     }
 
+    /// Borrow a tensor by name (error when missing).
     pub fn get(&self, name: &str) -> Result<&Tensor> {
         self.map
             .get(name)
@@ -75,14 +76,17 @@ impl Weights {
             .with_context(|| format!("missing tensor {name}"))
     }
 
+    /// Number of named tensors.
     pub fn len(&self) -> usize {
         self.map.len()
     }
 
+    /// Whether the store holds no tensors.
     pub fn is_empty(&self) -> bool {
         self.map.is_empty()
     }
 
+    /// Total float count across all tensors.
     pub fn total_params(&self) -> usize {
         self.map.values().map(|t| t.numel()).sum()
     }

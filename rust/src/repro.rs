@@ -17,9 +17,13 @@ use crate::util::tensor::mse_mae;
 /// One experiment row configuration.
 #[derive(Clone, Debug)]
 pub struct RowCfg {
+    /// Dataset name (see `data::specs`).
     pub dataset: &'static str,
+    /// Acceptance width σ.
     pub sigma: f64,
+    /// Acceptance bias λ (1.0 = canonical).
     pub bias: f64,
+    /// Draft block length γ.
     pub gamma: usize,
     /// Forecast horizon in patches (4 -> pred-len 96, 14 -> 336).
     pub horizon: usize,
@@ -27,6 +31,7 @@ pub struct RowCfg {
     pub batch: usize,
     /// Eval windows to average over.
     pub windows: usize,
+    /// Run the lossless variant instead of practical.
     pub lossless: bool,
 }
 
@@ -54,6 +59,7 @@ pub fn default_windows() -> usize {
     }
 }
 
+/// Whether `STRIDE_BENCH_QUICK=1` (CI-scale bench trims) is set.
 pub fn quick() -> bool {
     std::env::var("STRIDE_BENCH_QUICK").as_deref() == Ok("1")
 }
@@ -61,26 +67,39 @@ pub fn quick() -> bool {
 /// One measured row: the paper's Table 1 columns.
 #[derive(Clone, Debug)]
 pub struct RowResult {
+    /// The configuration this row measured.
     pub cfg: RowCfg,
+    /// Baseline (target-only AR) mean squared error.
     pub baseline_mse: f64,
+    /// Baseline mean absolute error.
     pub baseline_mae: f64,
+    /// Speculative-decode mean squared error.
     pub mse: f64,
+    /// Speculative-decode mean absolute error.
     pub mae: f64,
+    /// Measured mean acceptance probability α̂.
     pub alpha_hat: f64,
+    /// Measured mean block length E\[L\].
     pub mean_block_len: f64,
     /// Per-call wall-clock cost ratio measured inside this row's decodes.
     pub c: f64,
+    /// Predicted wall-clock speedup (Eq. 5 at the measured α̂/c).
     pub s_wall_pred: f64,
+    /// Measured wall-clock speedup (baseline wall / SD wall).
     pub s_wall_meas: f64,
     /// OpsFactor from FLOPs ratio.
     pub ops_factor: f64,
+    /// Aggregated decode statistics across the row's windows.
     pub stats: DecodeStats,
 }
 
 /// Backends bundle for the harness.
 pub struct Bench {
+    /// The large target model.
     pub target: Box<dyn Backend>,
+    /// The small draft model.
     pub draft: Box<dyn Backend>,
+    /// The artifact manifest both were loaded from.
     pub manifest: Manifest,
 }
 
@@ -128,6 +147,7 @@ impl Bench {
         }
     }
 
+    /// Cut the balanced eval windows a row configuration asks for.
     pub fn windows(&self, cfg: &RowCfg) -> Result<Vec<Window>> {
         let data = Dataset::by_name(cfg.dataset)
             .with_context(|| format!("unknown dataset {}", cfg.dataset))?;
@@ -153,6 +173,7 @@ impl Bench {
                 crate::specdec::Emission::Mean
             },
             cache: crate::models::CacheMode::On,
+            adaptive: None,
         };
 
         // Warmup: one untimed baseline + SD pass so first-row results don't

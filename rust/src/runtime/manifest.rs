@@ -9,21 +9,29 @@ use anyhow::{Context, Result};
 use crate::nn::ModelDims;
 use crate::util::json::Json;
 
+/// One model described by the manifest (target or draft).
 #[derive(Clone, Debug)]
 pub struct ModelEntry {
+    /// Model name as exported by the Python side.
     pub name: String,
+    /// Transformer dimensions.
     pub dims: ModelDims,
+    /// Total parameter count.
     pub param_count: usize,
+    /// Path to the raw weight blob.
     pub weights_file: PathBuf,
     /// Raw tensor index (array of {name, shape, offset}) for Weights::load.
     pub tensor_index: Json,
 }
 
+/// One compiled HLO artifact on disk.
 #[derive(Clone, Debug)]
 pub struct ArtifactEntry {
+    /// Path to the HLO-text file.
     pub file: PathBuf,
     /// "target" | "draft".
     pub model: String,
+    /// Batch size the artifact was specialized for.
     pub batch: usize,
     /// Sequence length this artifact was specialized for (<= manifest
     /// n_ctx; short variants serve the decode hot path, see §Perf).
@@ -32,17 +40,28 @@ pub struct ArtifactEntry {
     pub kernel: String,
 }
 
+/// The artifact-directory manifest (`manifest.json`).
 #[derive(Clone, Debug)]
 pub struct Manifest {
+    /// The artifact directory the manifest was loaded from.
     pub dir: PathBuf,
+    /// Patch size (values per patch token).
     pub patch: usize,
+    /// Maximum model context in patches.
     pub n_ctx: usize,
+    /// Batch sizes with compiled artifacts.
     pub batches: Vec<usize>,
+    /// The large target model.
     pub target: ModelEntry,
+    /// The small draft model.
     pub draft: ModelEntry,
+    /// All compiled HLO artifacts.
     pub artifacts: Vec<ArtifactEntry>,
+    /// Distillation noise σ the draft was trained with.
     pub distill_sigma: f64,
+    /// Exported mean target-draft head gap (acceptance sanity anchor).
     pub mean_gap: f64,
+    /// Whether the artifacts were built in quick (CI) mode.
     pub quick: bool,
 }
 
@@ -67,6 +86,7 @@ fn model_entry(dir: &Path, j: &Json, patch: usize, n_ctx: usize) -> Result<Model
 }
 
 impl Manifest {
+    /// Load and validate `<dir>/manifest.json`.
     pub fn load(dir: &Path) -> Result<Manifest> {
         let path = dir.join("manifest.json");
         let text = std::fs::read_to_string(&path)

@@ -9,7 +9,7 @@
 
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::{mpsc, Arc};
+use std::sync::{mpsc, Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
@@ -20,11 +20,15 @@ use crate::forecast::ar_decode_with;
 use crate::metrics::{AcceptanceMonitor, Metrics};
 use crate::models::{Backend, CacheMode, NativeBackend, XlaBackend};
 use crate::runtime::{Engine, Manifest};
-use crate::specdec::{sd_generate_batch, SpecConfig};
+use crate::specdec::{sd_generate_batch, GammaController, SpecConfig};
 
+/// One queued forecast request plus its reply channel.
 pub struct Job {
+    /// The parsed request.
     pub req: ForecastRequest,
+    /// Enqueue time (request latency is measured from here).
     pub enqueued: Instant,
+    /// Channel the engine thread answers on.
     pub reply: mpsc::SyncSender<Result<ForecastResponse, String>>,
 }
 
@@ -32,8 +36,16 @@ pub struct Job {
 #[derive(Clone)]
 pub struct BatcherHandle {
     tx: mpsc::Sender<Job>,
+    /// Shared metrics registry (also rendered at `/metrics`).
     pub metrics: Arc<Metrics>,
+    /// Windowed acceptance monitor (alerting; paper §7).
     pub monitor: Arc<AcceptanceMonitor>,
+    /// The server's long-lived adaptive γ controller, present when
+    /// `ServeConfig::adaptive` is on. Its recommendation seeds each
+    /// adaptive decode group (so jobs regroup as γ drifts) and every
+    /// finished group's rounds are fed back. Exposed read-only via
+    /// `/stats`.
+    pub controller: Option<Arc<Mutex<GammaController>>>,
 }
 
 impl BatcherHandle {
@@ -56,17 +68,27 @@ pub fn start_engine(
 ) -> Result<(BatcherHandle, std::thread::JoinHandle<()>)> {
     let (tx, rx) = mpsc::channel::<Job>();
     let (ready_tx, ready_rx) = mpsc::sync_channel::<Result<String, String>>(1);
+    let controller = if cfg.adaptive {
+        Some(Arc::new(Mutex::new(GammaController::new(
+            cfg.adaptive_cfg,
+            cfg.gamma,
+            cfg.sigma,
+        ))))
+    } else {
+        None
+    };
     let m2 = metrics.clone();
     let mon2 = monitor.clone();
+    let ctrl2 = controller.clone();
     let handle = std::thread::Builder::new()
         .name("stride-engine".into())
-        .spawn(move || engine_main(cfg, rx, ready_tx, m2, mon2, stop))
+        .spawn(move || engine_main(cfg, rx, ready_tx, m2, mon2, ctrl2, stop))
         .context("spawning engine thread")?;
     match ready_rx.recv().context("engine thread died during startup")? {
         Ok(desc) => log::info!("engine ready: {desc}"),
         Err(e) => anyhow::bail!("engine startup failed: {e}"),
     }
-    Ok((BatcherHandle { tx, metrics, monitor }, handle))
+    Ok((BatcherHandle { tx, metrics, monitor, controller }, handle))
 }
 
 fn load_backends(cfg: &ServeConfig) -> Result<(Box<dyn Backend>, Box<dyn Backend>, Manifest)> {
@@ -92,6 +114,7 @@ fn engine_main(
     ready: mpsc::SyncSender<Result<String, String>>,
     metrics: Arc<Metrics>,
     monitor: Arc<AcceptanceMonitor>,
+    controller: Option<Arc<Mutex<GammaController>>>,
     stop: Arc<AtomicBool>,
 ) {
     let (target, draft, manifest) = match load_backends(&cfg) {
@@ -157,7 +180,16 @@ fn engine_main(
         }
         metrics.inc("batches", 1);
         metrics.inc("batched_jobs", jobs.len() as u64);
-        process_batch(&cfg, &manifest, target.as_ref(), draft.as_ref(), jobs, &metrics, &monitor);
+        process_batch(
+            &cfg,
+            &manifest,
+            target.as_ref(),
+            draft.as_ref(),
+            jobs,
+            &metrics,
+            &monitor,
+            controller.as_deref(),
+        );
     }
 }
 
@@ -182,6 +214,7 @@ fn prep(req: &ForecastRequest, manifest: &Manifest, gamma: usize) -> Result<(Vec
     Ok((hist, n, req.horizon))
 }
 
+#[allow(clippy::too_many_arguments)]
 fn process_batch(
     cfg: &ServeConfig,
     manifest: &Manifest,
@@ -190,11 +223,16 @@ fn process_batch(
     jobs: Vec<Job>,
     metrics: &Metrics,
     monitor: &AcceptanceMonitor,
+    controller: Option<&Mutex<GammaController>>,
 ) {
-    // Partition: SD jobs grouped by (gamma, sigma-bits, cache) so
-    // overrides batch together — a decode group shares one session pool
-    // and one cost model; baseline/draft jobs run individually.
-    let mut sd_groups: BTreeMap<(usize, u64, bool), Vec<Job>> = BTreeMap::new();
+    // Partition: SD jobs grouped by (gamma, sigma-bits, cache, adaptive)
+    // so overrides batch together — a decode group shares one session
+    // pool, one cost model, and one adaptation mode; baseline/draft jobs
+    // run individually. Adaptive jobs take the live controller's current
+    // recommendation as their γ key, so they *regroup automatically* as
+    // the controller drifts — the γ in the key is also the γ that seeds
+    // the group's per-sequence controllers.
+    let mut sd_groups: BTreeMap<(usize, u64, bool, bool), Vec<Job>> = BTreeMap::new();
     let mut singles: Vec<Job> = Vec::new();
     let base_spec = cfg.spec_config();
 
@@ -202,16 +240,35 @@ fn process_batch(
         metrics.requests_total.fetch_add(1, Ordering::Relaxed);
         match job.req.mode {
             Mode::Sd if !cfg.baseline => {
-                let mut gamma = job.req.gamma.unwrap_or(cfg.gamma);
-                if cfg.adaptive_gamma {
-                    let c = draft.mean_secs() / target.mean_secs();
-                    if c.is_finite() && c > 0.0 {
-                        gamma = monitor.recommend_gamma(c, 16);
-                    }
+                // Asking for adaptation on a server that runs without a
+                // controller is a request we cannot honor — reject it
+                // rather than silently serving static gamma.
+                if job.req.adaptive == Some(true) && controller.is_none() {
+                    metrics.errors_total.fetch_add(1, Ordering::Relaxed);
+                    let _ = job.reply.send(Err(
+                        "adaptive speculation is not enabled on this server \
+                         (start it with --adaptive)"
+                            .to_string(),
+                    ));
+                    continue;
                 }
+                // An explicit per-request gamma always pins the job to
+                // the static path: a pinned request is a pinned request.
+                let adaptive = controller.is_some()
+                    && job.req.adaptive.unwrap_or(cfg.adaptive)
+                    && job.req.gamma.is_none();
+                let gamma = if adaptive {
+                    let ctrl = controller.unwrap().lock().unwrap();
+                    ctrl.gamma_for(manifest.n_ctx)
+                } else {
+                    job.req.gamma.unwrap_or(cfg.gamma)
+                };
                 let sigma = job.req.sigma.unwrap_or(cfg.sigma);
                 let cache = job.req.cache.unwrap_or(cfg.cache);
-                sd_groups.entry((gamma, sigma.to_bits(), cache)).or_default().push(job);
+                sd_groups
+                    .entry((gamma, sigma.to_bits(), cache, adaptive))
+                    .or_default()
+                    .push(job);
             }
             _ => singles.push(job),
         }
@@ -220,23 +277,26 @@ fn process_batch(
     // Per-group decode seed: reusing one RNG stream across batches would
     // correlate accept/reject coins between requests.
     static DECODE_SEQ: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(0);
-    for ((gamma, sigma_bits, cache), group) in sd_groups {
+    for ((gamma, sigma_bits, cache, adaptive), group) in sd_groups {
         let sigma = f64::from_bits(sigma_bits);
         let mut spec = base_spec;
         spec.gamma = gamma;
         spec.policy.sigma = sigma;
         spec.cache = if cache { CacheMode::On } else { CacheMode::Off };
+        spec.adaptive = if adaptive { Some(cfg.adaptive_cfg) } else { None };
         spec.seed = spec
             .seed
             .wrapping_add(DECODE_SEQ.fetch_add(1, Ordering::Relaxed))
             .wrapping_mul(0x9E37_79B9_7F4A_7C15);
-        run_sd_group(manifest, target, draft, group, &spec, metrics, monitor);
+        let ctrl = if adaptive { controller } else { None };
+        run_sd_group(manifest, target, draft, group, &spec, metrics, monitor, ctrl);
     }
     for job in singles {
         run_single(cfg, manifest, target, draft, job, metrics);
     }
 }
 
+#[allow(clippy::too_many_arguments)]
 fn run_sd_group(
     manifest: &Manifest,
     target: &dyn Backend,
@@ -245,6 +305,7 @@ fn run_sd_group(
     spec: &SpecConfig,
     metrics: &Metrics,
     monitor: &AcceptanceMonitor,
+    controller: Option<&Mutex<GammaController>>,
 ) {
     // Validate all; drop invalid with error replies.
     let mut ok_jobs = Vec::new();
@@ -270,6 +331,25 @@ fn run_sd_group(
     match sd_generate_batch(target, draft, &tasks, spec) {
         Ok(outs) => {
             let batch_wall = t0.elapsed();
+            // Feed the finished group back into the server's long-lived
+            // controller: every round (including rejected ones) updates
+            // α̂/c, and the next batch's adaptive jobs will key on the
+            // possibly-retuned γ. Gauges expose the live state.
+            if let Some(ctrl) = controller {
+                let mut c = ctrl.lock().unwrap();
+                for out in &outs {
+                    for r in &out.rounds {
+                        c.observe_round(r);
+                    }
+                }
+                let s = c.state();
+                drop(c);
+                metrics.set_gauge("controller_gamma", s.gamma as f64);
+                metrics.set_gauge("controller_alpha_hat", s.alpha_hat);
+                metrics.set_gauge("controller_c", s.c);
+                metrics.set_gauge("controller_rounds", s.rounds as f64);
+                metrics.set_gauge("controller_gamma_changes", s.gamma_changes as f64);
+            }
             for (job, out) in ok_jobs.into_iter().zip(outs) {
                 let latency = job.enqueued.elapsed();
                 metrics.observe("request_latency", latency);

@@ -4,7 +4,9 @@
 //! * `POST /forecast` — forecast request (see [`protocol`]).
 //! * `GET  /healthz`  — liveness + version.
 //! * `GET  /metrics`  — Prometheus-style metrics text.
-//! * `GET  /stats`    — JSON snapshot (acceptance monitor, latency quantiles).
+//! * `GET  /stats`    — JSON snapshot (acceptance monitor, latency
+//!   quantiles, and — when adaptive speculation is on — the live
+//!   controller state: current γ, α̂, measured c, change counts).
 //!
 //! The router validates and parses on HTTP worker threads; all model work
 //! happens on the single engine thread behind the batcher (PJRT state is
@@ -26,8 +28,11 @@ use crate::http::{HttpServer, Request, Response};
 use crate::metrics::{AcceptanceMonitor, Metrics};
 use crate::util::json::Json;
 
+/// A running forecast service: HTTP front end + engine thread.
 pub struct Server {
+    /// The bound HTTP listener (owns the accept loop).
     pub http: HttpServer,
+    /// Handle for submitting jobs and reading metrics/controller state.
     pub handle: BatcherHandle,
     stop: Arc<AtomicBool>,
     engine_thread: Option<std::thread::JoinHandle<()>>,
@@ -55,10 +60,12 @@ impl Server {
         Ok(Server { http, handle, stop, engine_thread: Some(engine_thread) })
     }
 
+    /// The bound listen address (useful with port 0).
     pub fn addr(&self) -> std::net::SocketAddr {
         self.http.addr
     }
 
+    /// Stop accepting, drain the engine thread, and join everything.
     pub fn shutdown(&mut self) {
         self.stop.store(true, Ordering::Relaxed);
         self.http.shutdown();
@@ -88,12 +95,32 @@ fn route(req: &Request, handle: &BatcherHandle) -> Response {
         ("GET", "/stats") => {
             let m = &handle.metrics;
             let mon = &handle.monitor;
+            // Live adaptive-controller snapshot (null when adaptation is
+            // off): the serving-side view of specdec::ControllerState.
+            let controller = match &handle.controller {
+                Some(ctrl) => {
+                    let s = ctrl.lock().unwrap().state();
+                    Json::obj(vec![
+                        ("gamma", Json::from(s.gamma)),
+                        ("sigma", finite_or_null(s.sigma)),
+                        ("alpha_hat", finite_or_null(s.alpha_hat)),
+                        ("c", finite_or_null(s.c)),
+                        ("rounds", Json::from(s.rounds)),
+                        ("proposals", Json::from(s.proposals)),
+                        ("gamma_changes", Json::from(s.gamma_changes)),
+                        ("sigma_changes", Json::from(s.sigma_changes)),
+                    ])
+                }
+                None => Json::Null,
+            };
             let j = Json::obj(vec![
                 ("requests", Json::from(m.requests_total.load(Ordering::Relaxed) as usize)),
                 ("patches", Json::from(m.patches_total.load(Ordering::Relaxed) as usize)),
                 ("errors", Json::from(m.errors_total.load(Ordering::Relaxed) as usize)),
                 ("alpha_bar_window", finite_or_null(mon.alpha_bar())),
                 ("acceptance_degraded", Json::from(mon.degraded())),
+                ("adaptive", Json::from(handle.controller.is_some())),
+                ("controller", controller),
                 ("latency_p50_ms", Json::Num(m.quantile_ms("request_latency", 0.5))),
                 ("latency_p95_ms", Json::Num(m.quantile_ms("request_latency", 0.95))),
                 ("latency_p99_ms", Json::Num(m.quantile_ms("request_latency", 0.99))),

@@ -3,7 +3,7 @@
 //! POST /forecast
 //!   {"history": [f32...], "horizon": <patches>, "gamma"?: n, "sigma"?: x,
 //!    "mode"?: "sd" | "baseline" | "draft", "dataset"?: "etth1",
-//!    "cache"?: true|false}
+//!    "cache"?: true|false, "adaptive"?: true|false}
 //! ->
 //!   {"forecast": [f32...], "mode": "...", "latency_ms": x,
 //!    "alpha_hat": x, "mean_block_len": x, "rounds": n,
@@ -13,14 +13,19 @@ use anyhow::{bail, Context, Result};
 
 use crate::util::json::Json;
 
+/// Decoding mode of one forecast request.
 #[derive(Clone, Debug, PartialEq)]
 pub enum Mode {
+    /// Speculative decoding (the default).
     Sd,
+    /// Target-only autoregression (the A/B baseline).
     Baseline,
+    /// Draft-only autoregression (cost-ratio probes).
     DraftOnly,
 }
 
 impl Mode {
+    /// Wire name of the mode (`"sd"` / `"baseline"` / `"draft"`).
     pub fn as_str(&self) -> &'static str {
         match self {
             Mode::Sd => "sd",
@@ -30,24 +35,34 @@ impl Mode {
     }
 }
 
+/// One parsed `/forecast` request body.
 #[derive(Clone, Debug)]
 pub struct ForecastRequest {
     /// Normalized history values; length must be a multiple of the patch.
     pub history: Vec<f32>,
     /// Forecast horizon in patches.
     pub horizon: usize,
+    /// Decoding mode (`sd` unless overridden).
     pub mode: Mode,
     /// Optional per-request overrides.
     pub gamma: Option<usize>,
+    /// Per-request acceptance-width override (None = server config).
     pub sigma: Option<f64>,
     /// Per-request KV-cache override (None = server config). Exposed so
     /// A/B latency probes can hit both cost models on one running server.
     pub cache: Option<bool>,
+    /// Per-request adaptive-speculation override (None = server config).
+    /// `true` routes the job through the server's live γ controller (an
+    /// error when the server runs without one); `false` pins the static
+    /// γ. An explicit `gamma` always wins over adaptation — a pinned
+    /// request is a pinned request.
+    pub adaptive: Option<bool>,
     /// Traffic-segment tag for acceptance monitoring (paper §7).
     pub dataset: Option<String>,
 }
 
 impl ForecastRequest {
+    /// Parse and validate a request from its JSON body.
     pub fn from_json(j: &Json) -> Result<ForecastRequest> {
         let history: Vec<f32> = j
             .get("history")
@@ -88,24 +103,35 @@ impl ForecastRequest {
             gamma,
             sigma,
             cache: j.get("cache").and_then(Json::as_bool),
+            adaptive: j.get("adaptive").and_then(Json::as_bool),
             dataset: j.get("dataset").and_then(Json::as_str).map(String::from),
         })
     }
 }
 
+/// One `/forecast` response body.
 #[derive(Clone, Debug, Default)]
 pub struct ForecastResponse {
+    /// Forecast values, flat `[horizon * patch]`.
     pub forecast: Vec<f32>,
+    /// Mode actually served (`"sd"` / `"baseline"` / `"draft"`).
     pub mode: String,
+    /// End-to-end request latency in milliseconds.
     pub latency_ms: f64,
+    /// Mean acceptance probability of this decode (NaN for AR modes).
     pub alpha_hat: f64,
+    /// Mean emitted patches per round (NaN for AR modes).
     pub mean_block_len: f64,
+    /// Speculative rounds (or AR steps) executed.
     pub rounds: usize,
+    /// Draft forward passes consumed.
     pub draft_calls: usize,
+    /// Target forward passes consumed.
     pub target_calls: usize,
 }
 
 impl ForecastResponse {
+    /// Serialize to the wire JSON (non-finite stats become `null`).
     pub fn to_json(&self) -> Json {
         fn num(v: f64) -> Json {
             if v.is_finite() {
@@ -152,6 +178,15 @@ mod tests {
         assert_eq!(r.mode, Mode::Baseline);
         assert_eq!(r.gamma, Some(5));
         assert_eq!(r.dataset.as_deref(), Some("etth1"));
+        assert_eq!(r.adaptive, None);
+    }
+
+    #[test]
+    fn parses_adaptive_override() {
+        let j = Json::parse(r#"{"history": [0.5], "horizon": 2, "adaptive": true}"#).unwrap();
+        assert_eq!(ForecastRequest::from_json(&j).unwrap().adaptive, Some(true));
+        let j = Json::parse(r#"{"history": [0.5], "horizon": 2, "adaptive": false}"#).unwrap();
+        assert_eq!(ForecastRequest::from_json(&j).unwrap().adaptive, Some(false));
     }
 
     #[test]

@@ -28,6 +28,7 @@ use std::time::Instant;
 
 use anyhow::Result;
 
+use super::controller::GammaController;
 use super::engine::{Emission, SpecConfig, Variant};
 use super::stats::{DecodeOutput, DecodeStats, RoundStats};
 use crate::models::{begin_batch_session, Backend};
@@ -40,6 +41,10 @@ struct SeqState {
     rng: Rng,
     rounds: Vec<RoundStats>,
     stats: DecodeStats,
+    /// Per-sequence adaptive controller (present iff `cfg.adaptive`).
+    /// Sequences adapt independently: a hostile stream collapses its own
+    /// γ without dragging its batchmates down.
+    ctrl: Option<GammaController>,
 }
 
 impl SeqState {
@@ -81,6 +86,14 @@ pub fn sd_generate_stream(
         anyhow::ensure!((cfg.policy.bias - 1.0).abs() < 1e-12, "lossless requires bias=1");
         anyhow::ensure!(cfg.emission == Emission::Sampled, "lossless requires Emission::Sampled");
     }
+    if let Some(acfg) = &cfg.adaptive {
+        acfg.validate()?;
+        anyhow::ensure!(
+            !acfg.sigma_adapt,
+            "sigma adaptation is single-stream only (proposals in a lockstep \
+             batch share one acceptance policy); use gamma-only adaptation here"
+        );
+    }
     let max_ctx = target.max_ctx().min(draft.max_ctx());
 
     // Long-lived per-sequence sessions for both models. Jobs keep these
@@ -100,6 +113,9 @@ pub fn sd_generate_stream(
             rng: Rng::new(cfg.seed.wrapping_add(i as u64 * 0x9E37_79B9)),
             rounds: Vec::new(),
             stats: DecodeStats::default(),
+            ctrl: cfg
+                .adaptive
+                .map(|acfg| GammaController::new(acfg, cfg.gamma, cfg.policy.sigma)),
         })
         .collect();
 
@@ -113,13 +129,23 @@ pub fn sd_generate_stream(
             break;
         }
         let a = active.len();
-        // Round γ: shared across the batch (sequences near their horizon
-        // cap their own emissions after acceptance).
-        let gamma = cfg
-            .gamma
-            .min(active.iter().map(|&i| seqs[i].remaining()).max().unwrap().saturating_sub(1))
-            .max(1)
-            .min(cfg.gamma);
+        // Per-sequence desired γ for this round: the controller's current
+        // recommendation (context-clamped) under adaptation, else the
+        // static γ — capped by the sequence's own remaining horizon.
+        let desired: Vec<usize> = active
+            .iter()
+            .map(|&i| {
+                let want = match &seqs[i].ctrl {
+                    Some(c) => c.gamma_for(max_ctx),
+                    None => cfg.gamma,
+                };
+                want.min(seqs[i].remaining().saturating_sub(1))
+            })
+            .collect();
+        // Round γ: the max desired across the batch — every sequence's
+        // proposals fit inside the shared lockstep round; sequences
+        // wanting less scan (and keep) only their own prefix.
+        let gamma = desired.iter().copied().max().unwrap().max(1);
 
         // Slide windows that would overflow (target and draft in lockstep).
         for &i in &active {
@@ -181,11 +207,12 @@ pub fn sd_generate_stream(
             let base = ai * (gamma + 1) * p;
             let mu_p_at = |k: usize| &val_rows[base + k * p..base + (k + 1) * p];
 
-            // Per-sequence gamma: a sequence near its horizon only consumes
-            // the proposals it can still emit (the round's extra draft work
-            // is lockstep overhead, but acceptance statistics stay honest —
+            // Per-sequence gamma: a sequence near its horizon (or whose
+            // controller wants a shorter block) only consumes the
+            // proposals it can still use (the round's extra draft work is
+            // lockstep overhead, but acceptance statistics stay honest —
             // without this, tail truncation deflates measured E[L]).
-            let g_i = gamma.min(seqs[i].remaining().saturating_sub(1));
+            let g_i = desired[ai];
             let mut alphas = Vec::with_capacity(g_i);
             let mut accepted = 0usize;
             let mut rejected_at = None;
@@ -279,6 +306,9 @@ pub fn sd_generate_stream(
                 draft_time: draft_time / a as u32,
                 target_time: target_time / a as u32 + tpost.elapsed(),
             };
+            if let Some(c) = &mut seqs[i].ctrl {
+                c.observe_round(&r);
+            }
             seqs[i].stats.absorb(&r);
             seqs[i].rounds.push(r);
         }
@@ -306,6 +336,7 @@ mod tests {
             max_residual_draws: 1000,
             emission: Emission::Sampled,
             cache: CacheMode::On,
+            adaptive: None,
         }
     }
 
@@ -368,6 +399,80 @@ mod tests {
             assert_eq!(o.patches.len(), 6);
             assert!(o.patches.iter().all(|v| v.is_finite()));
         }
+    }
+
+    #[test]
+    fn adaptive_batch_emits_exact_horizons() {
+        use crate::specdec::AdaptiveConfig;
+        let t = AnalyticBackend::new("t", 2, 0.8, 0.1);
+        let d = AnalyticBackend::new("d", 2, 0.8, 0.1);
+        let h1 = vec![0.5f32, -0.5];
+        let h2 = vec![1.0f32, 0.0, 0.3, 0.3];
+        let tasks: Vec<(&[f32], usize, usize)> = vec![(&h1, 1, 30), (&h2, 2, 9), (&h1, 1, 1)];
+        let mut c = cfg(2, 0.5, 5);
+        c.adaptive = Some(AdaptiveConfig {
+            warmup: 1,
+            dwell: 1,
+            halflife: 6.0,
+            c_override: 0.05,
+            ..AdaptiveConfig::default()
+        });
+        let outs = sd_generate_batch(&t, &d, &tasks, &c).unwrap();
+        assert_eq!(outs[0].patches.len(), 30 * 2);
+        assert_eq!(outs[1].patches.len(), 9 * 2);
+        assert_eq!(outs[2].patches.len(), 1 * 2);
+        // The long identical-model sequence must have adapted upward.
+        let max_g = outs[0].rounds.iter().map(|r| r.gamma).max().unwrap();
+        assert!(max_g > 2, "controller never adapted in batch (max gamma {max_g})");
+    }
+
+    #[test]
+    fn adaptive_sequences_adapt_independently() {
+        use crate::specdec::AdaptiveConfig;
+        // The two heads agree where |x| is small and disagree violently
+        // where |x| is large (mean gap = |x|), so a sequence starting at
+        // 30 rejects nearly everything while a sequence near 0 accepts.
+        // Per-sequence controllers must diverge: the hostile stream
+        // collapses its own gamma without dragging its batchmate down.
+        let t = AnalyticBackend::new("t", 1, 0.5, 0.0);
+        let d = AnalyticBackend::new("d", 1, -0.5, 0.0);
+        let good = vec![0.0f32];
+        let hostile = vec![30.0f32];
+        let tasks: Vec<(&[f32], usize, usize)> = vec![(&good, 1, 60), (&hostile, 1, 60)];
+        let mut c = cfg(3, 0.5, 7);
+        c.adaptive = Some(AdaptiveConfig {
+            warmup: 1,
+            dwell: 1,
+            halflife: 6.0,
+            c_override: 0.05,
+            ..AdaptiveConfig::default()
+        });
+        let outs = sd_generate_batch(&t, &d, &tasks, &c).unwrap();
+        for o in &outs {
+            assert_eq!(o.patches.len(), 60);
+        }
+        // The hostile sequence must have dropped below its opening gamma
+        // at some round; the good one must never have been dragged to 1
+        // for long — compare the per-round gamma paths directly.
+        let g_good: Vec<usize> = outs[0].rounds.iter().map(|r| r.gamma).collect();
+        let g_host: Vec<usize> = outs[1].rounds.iter().map(|r| r.gamma).collect();
+        assert!(g_host.iter().any(|&g| g == 1), "hostile stream never collapsed: {g_host:?}");
+        assert!(
+            g_good.iter().zip(&g_host).any(|(a, b)| a > b),
+            "controllers never diverged: good {g_good:?} vs hostile {g_host:?}"
+        );
+    }
+
+    #[test]
+    fn adaptive_batch_rejects_sigma_adaptation() {
+        use crate::specdec::AdaptiveConfig;
+        let t = AnalyticBackend::new("t", 1, 0.8, 0.1);
+        let d = AnalyticBackend::new("d", 1, 0.8, 0.1);
+        let h = vec![0.1f32];
+        let tasks: Vec<(&[f32], usize, usize)> = vec![(&h, 1, 4)];
+        let mut c = cfg(2, 0.5, 3);
+        c.adaptive = Some(AdaptiveConfig { sigma_adapt: true, ..AdaptiveConfig::default() });
+        assert!(sd_generate_batch(&t, &d, &tasks, &c).is_err());
     }
 
     #[test]

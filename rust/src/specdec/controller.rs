@@ -1,0 +1,639 @@
+//! Adaptive speculation controller: online γ (and optionally σ) tuning
+//! from live acceptance telemetry.
+//!
+//! The paper fixes the draft length γ and acceptance width σ offline, but
+//! its own speedup model (Eq. 5 / Prop. 3, implemented in
+//! [`crate::theory`]) makes the optimal γ a function of the mean
+//! acceptance ᾱ and the draft/target cost ratio c — both of which drift
+//! per-series and per-regime in real traffic. This module closes the loop
+//! the repo already half-built: every decode measures per-proposal
+//! acceptance probabilities ([`RoundStats::alphas`]); the controller
+//! folds them into an EWMA estimate α̂, measures c from the round timers,
+//! and re-evaluates the closed-form speedup curve online to pick the next
+//! round's γ.
+//!
+//! Design constraints, in order:
+//!
+//! 1. **Adaptation never changes *what* is emitted, only *when* drafting
+//!    happens.** Each speculative round is correct for any γ (the
+//!    accept/reject math is per-proposal), so a γ change between rounds
+//!    preserves both variants' guarantees — including Lossless exactness.
+//!    `tests/statistical.rs` pins this by replaying an adaptive decode's
+//!    per-round γ choices through [`super::sd_generate_scheduled`] and
+//!    asserting bit-identical output.
+//! 2. **No thrash.** γ changes are hysteresis-gated: the candidate γ* must
+//!    beat the current γ's *predicted* speedup by a configurable relative
+//!    margin, and changes are separated by a dwell period. Near the
+//!    optimum the speedup curve is flat (Fig. 7 saturation), so the gate
+//!    naturally pins γ once converged.
+//! 3. **Rollback-aware estimation.** α̂ is updated from the per-proposal
+//!    acceptance *probabilities*, which include the rejected proposal that
+//!    ended a round — a Rao-Blackwellised estimate (the probability
+//!    carries more information than the binary coin) that sees rejected
+//!    work at exactly the weight the acceptance rule gave it.
+//! 4. **Context-guarded.** The recommended γ is clamped so a round's
+//!    γ+1 appended patches always fit the session window
+//!    (`γ ≤ max_ctx − 2`), preserving the "gamma cannot fit in max_ctx"
+//!    invariant introduced with the session layer.
+//!
+//! σ adaptation (off by default) widens the acceptance width when α̂ falls
+//! below a target band and narrows it when acceptance saturates, bounded
+//! by an MSE guard-rail: σ may never leave `[sigma_min, sigma_max]`
+//! (defaulting to `[0.75·σ₀, 1.5·σ₀]`), which caps the accuracy cost the
+//! paper's Tables 3–4 attribute to wider σ. It applies only to the
+//! practical variant on the single-stream engine — Lossless exactness is
+//! a statement about a *fixed* target law, so the engine rejects the
+//! combination.
+
+use anyhow::Result;
+
+use super::stats::RoundStats;
+use crate::theory;
+
+/// Tuning knobs of the adaptive controller. All fields are plain scalars
+/// so the struct stays `Copy` and can live inside
+/// [`super::SpecConfig`] without breaking its value semantics.
+#[derive(Clone, Copy, Debug)]
+pub struct AdaptiveConfig {
+    /// Lower bound on the recommended γ (≥ 1).
+    pub min_gamma: usize,
+    /// Upper bound on the recommended γ; further clamped per round so
+    /// γ + 1 proposals fit the joint context window.
+    pub max_gamma: usize,
+    /// EWMA half-life of the α̂ estimator, in observed *proposals*
+    /// (the c estimator reuses it in *rounds*). Shorter tracks regime
+    /// switches faster at the cost of noisier estimates.
+    pub halflife: f64,
+    /// Prior α̂ before any observation (the controller's opening belief).
+    pub alpha0: f64,
+    /// Rounds observed before the first γ change is allowed.
+    pub warmup: usize,
+    /// Minimum rounds between consecutive γ changes.
+    pub dwell: usize,
+    /// Relative predicted-speedup improvement a candidate γ must show
+    /// before the controller switches (e.g. 0.02 = 2%). The anti-thrash
+    /// gate: near-optimal neighbours never clear it.
+    pub hysteresis: f64,
+    /// Fixed draft/target wall-clock cost ratio. Finite values override
+    /// the online measurement (deterministic tests, simulated-cost
+    /// benches); `NAN` (the default) measures c from round timers.
+    pub c_override: f64,
+    /// Enable online σ adjustment (practical variant, single-stream
+    /// engine only).
+    pub sigma_adapt: bool,
+    /// Lower σ bound; `NAN` resolves to `0.75 · σ₀` at controller
+    /// construction.
+    pub sigma_min: f64,
+    /// Upper σ bound — the MSE guard-rail; `NAN` resolves to `1.5 · σ₀`.
+    pub sigma_max: f64,
+    /// Widen σ when α̂ drops below this.
+    pub alpha_lo: f64,
+    /// Narrow σ when α̂ rises above this (reclaiming accuracy once
+    /// acceptance saturates).
+    pub alpha_hi: f64,
+    /// Multiplicative σ step per adjustment (> 1).
+    pub sigma_step: f64,
+}
+
+impl Default for AdaptiveConfig {
+    fn default() -> Self {
+        AdaptiveConfig {
+            min_gamma: 1,
+            max_gamma: 16,
+            halflife: 48.0,
+            alpha0: 0.7,
+            warmup: 4,
+            dwell: 4,
+            hysteresis: 0.02,
+            c_override: f64::NAN,
+            sigma_adapt: false,
+            sigma_min: f64::NAN,
+            sigma_max: f64::NAN,
+            alpha_lo: 0.45,
+            alpha_hi: 0.98,
+            sigma_step: 1.1,
+        }
+    }
+}
+
+impl AdaptiveConfig {
+    /// Check the knobs are internally consistent (bounds ordered, decay
+    /// positive). Called by `ServeConfig::validate` and the engine entry
+    /// points.
+    pub fn validate(&self) -> Result<()> {
+        anyhow::ensure!(self.min_gamma >= 1, "adaptive min_gamma must be >= 1");
+        anyhow::ensure!(
+            self.min_gamma <= self.max_gamma && self.max_gamma <= 64,
+            "adaptive gamma bounds must satisfy 1 <= min <= max <= 64"
+        );
+        anyhow::ensure!(self.halflife > 0.0, "adaptive halflife must be positive");
+        anyhow::ensure!((0.0..=1.0).contains(&self.alpha0), "alpha0 in [0,1]");
+        anyhow::ensure!(self.hysteresis >= 0.0, "hysteresis must be >= 0");
+        if self.c_override.is_finite() {
+            anyhow::ensure!(self.c_override > 0.0, "c_override must be positive");
+        }
+        if self.sigma_min.is_finite() {
+            anyhow::ensure!(self.sigma_min > 0.0, "sigma_min must be positive");
+        }
+        if self.sigma_max.is_finite() {
+            anyhow::ensure!(self.sigma_max > 0.0, "sigma_max must be positive");
+        }
+        if self.sigma_min.is_finite() && self.sigma_max.is_finite() {
+            anyhow::ensure!(
+                self.sigma_min <= self.sigma_max,
+                "sigma bounds must satisfy min <= max"
+            );
+        }
+        if self.sigma_adapt {
+            anyhow::ensure!(self.sigma_step > 1.0, "sigma_step must be > 1");
+            anyhow::ensure!(
+                self.alpha_lo < self.alpha_hi,
+                "sigma target band needs alpha_lo < alpha_hi"
+            );
+        }
+        Ok(())
+    }
+
+    /// Largest γ a context of `max_ctx` patches can host: a round appends
+    /// γ proposals plus one bonus/fallback patch and must keep at least
+    /// one context patch, so γ + 1 < max_ctx.
+    pub fn ctx_gamma_cap(max_ctx: usize) -> usize {
+        max_ctx.saturating_sub(2).max(1)
+    }
+}
+
+/// Read-only snapshot of a controller for metrics and the `/stats`
+/// endpoint.
+#[derive(Clone, Copy, Debug)]
+pub struct ControllerState {
+    /// Current recommended γ (before per-round context clamping).
+    pub gamma: usize,
+    /// Current acceptance width σ (equals σ₀ unless σ adaptation ran).
+    pub sigma: f64,
+    /// EWMA acceptance estimate α̂.
+    pub alpha_hat: f64,
+    /// Effective draft/target cost ratio (override or EWMA measurement;
+    /// NaN before the first measured round).
+    pub c: f64,
+    /// Speculative rounds observed.
+    pub rounds: usize,
+    /// Proposals observed (α̂ sample count).
+    pub proposals: usize,
+    /// γ changes applied since construction.
+    pub gamma_changes: usize,
+    /// σ changes applied since construction.
+    pub sigma_changes: usize,
+}
+
+/// Per-stream adaptive γ/σ controller.
+///
+/// Feed it every finished round via [`GammaController::observe_round`];
+/// read the next round's γ via [`GammaController::gamma_for`] (context
+/// clamped) and the current σ via [`GammaController::sigma`]. One
+/// controller per decode stream: the engine creates one per call when
+/// [`super::SpecConfig::adaptive`] is set, the batched engine one per
+/// sequence, and the serving batcher keeps a long-lived one that seeds
+/// each decode group (see `server::batcher`).
+#[derive(Clone, Debug)]
+pub struct GammaController {
+    cfg: AdaptiveConfig,
+    gamma: usize,
+    sigma: f64,
+    sigma_min: f64,
+    sigma_max: f64,
+    alpha_hat: f64,
+    c_meas: f64,
+    rounds: usize,
+    proposals: usize,
+    since_change: usize,
+    gamma_changes: usize,
+    sigma_changes: usize,
+}
+
+impl GammaController {
+    /// Build a controller opening at `gamma0`/`sigma0` (typically the
+    /// configured static values, so the first rounds behave exactly like
+    /// the fixed setup the operator asked for).
+    ///
+    /// Construction never panics on degenerate configs (a half-specified
+    /// σ band or inverted γ bounds collapse to their lower edge) —
+    /// [`AdaptiveConfig::validate`] is where misconfiguration becomes an
+    /// error, and every decode entry point calls it before building one
+    /// of these.
+    pub fn new(cfg: AdaptiveConfig, gamma0: usize, sigma0: f64) -> GammaController {
+        let sigma_min = if cfg.sigma_min.is_finite() { cfg.sigma_min } else { 0.75 * sigma0 };
+        let sigma_max = if cfg.sigma_max.is_finite() { cfg.sigma_max } else { 1.5 * sigma0 };
+        // A half-specified band can come out inverted (finite min above
+        // the defaulted max); collapse instead of panicking in clamp.
+        let sigma_max = sigma_max.max(sigma_min);
+        let gamma_max = cfg.max_gamma.max(cfg.min_gamma);
+        GammaController {
+            cfg,
+            gamma: gamma0.clamp(cfg.min_gamma, gamma_max),
+            sigma: sigma0.clamp(sigma_min, sigma_max),
+            sigma_min,
+            sigma_max,
+            alpha_hat: cfg.alpha0,
+            c_meas: f64::NAN,
+            rounds: 0,
+            proposals: 0,
+            since_change: 0,
+            gamma_changes: 0,
+            sigma_changes: 0,
+        }
+    }
+
+    /// The configuration this controller runs with.
+    pub fn config(&self) -> &AdaptiveConfig {
+        &self.cfg
+    }
+
+    /// Current recommended γ, unclamped (use [`GammaController::gamma_for`]
+    /// inside a decode loop).
+    pub fn gamma(&self) -> usize {
+        self.gamma
+    }
+
+    /// γ for the next round on a backend with `max_ctx` context patches:
+    /// the recommendation clamped so γ + 1 appended patches always fit
+    /// (the session layer's invariant).
+    pub fn gamma_for(&self, max_ctx: usize) -> usize {
+        self.gamma.min(AdaptiveConfig::ctx_gamma_cap(max_ctx)).max(1)
+    }
+
+    /// Current acceptance width σ.
+    pub fn sigma(&self) -> f64 {
+        self.sigma
+    }
+
+    /// EWMA acceptance estimate α̂ (the prior until proposals arrive).
+    pub fn alpha_hat(&self) -> f64 {
+        self.alpha_hat
+    }
+
+    /// Effective cost ratio: the override when finite, else the EWMA of
+    /// per-round measurements (NaN before the first γ > 0 round).
+    pub fn c(&self) -> f64 {
+        if self.cfg.c_override.is_finite() {
+            self.cfg.c_override
+        } else {
+            self.c_meas
+        }
+    }
+
+    /// Snapshot for metrics / the stats endpoint.
+    pub fn state(&self) -> ControllerState {
+        ControllerState {
+            gamma: self.gamma,
+            sigma: self.sigma,
+            alpha_hat: self.alpha_hat,
+            c: self.c(),
+            rounds: self.rounds,
+            proposals: self.proposals,
+            gamma_changes: self.gamma_changes,
+            sigma_changes: self.sigma_changes,
+        }
+    }
+
+    /// Fold one finished round into the estimators, then re-evaluate the
+    /// speedup curve and (hysteresis permitting) retune γ/σ for the next
+    /// round.
+    ///
+    /// Rounds with γ = 0 (horizon tail) carry no acceptance information
+    /// and are ignored. The α̂ update consumes `r.alphas` — which includes
+    /// the rejected proposal when the round ended early, so rejected
+    /// (rolled-back) work lowers α̂ exactly as it should.
+    pub fn observe_round(&mut self, r: &RoundStats) {
+        if r.gamma == 0 {
+            return;
+        }
+        // Per-proposal EWMA: halflife h proposals => decay 2^(-1/h).
+        let lam = 0.5f64.powf(1.0 / self.cfg.halflife);
+        for &a in &r.alphas {
+            self.alpha_hat = lam * self.alpha_hat + (1.0 - lam) * a.clamp(0.0, 1.0);
+            self.proposals += 1;
+        }
+        // Per-round cost-ratio EWMA from the round's own timers: γ draft
+        // extends against one target validation pass.
+        if !self.cfg.c_override.is_finite() {
+            let dt = r.draft_time.as_secs_f64() / r.gamma as f64;
+            let tt = r.target_time.as_secs_f64();
+            if dt > 0.0 && tt > 0.0 {
+                let c_round = dt / tt;
+                self.c_meas = if self.c_meas.is_finite() {
+                    lam * self.c_meas + (1.0 - lam) * c_round
+                } else {
+                    c_round
+                };
+            }
+        }
+        self.rounds += 1;
+        self.since_change += 1;
+        self.retune();
+    }
+
+    /// Hysteresis-gated retuning: switch to the closed-form γ* only when
+    /// its predicted speedup beats the current γ's by the configured
+    /// margin, at most once per dwell period, never during warmup.
+    fn retune(&mut self) {
+        if self.rounds < self.cfg.warmup || self.since_change < self.cfg.dwell {
+            return;
+        }
+        let c = self.c();
+        if !(c.is_finite() && c > 0.0) {
+            return;
+        }
+        let a = self.alpha_hat.clamp(0.0, 1.0);
+        let cap = self.cfg.max_gamma.max(self.cfg.min_gamma);
+        let cand = theory::optimal_gamma(a, c, cap).clamp(self.cfg.min_gamma, cap);
+        if cand != self.gamma {
+            let s_cur = theory::wall_speedup(a, self.gamma, c);
+            let s_cand = theory::wall_speedup(a, cand, c);
+            if s_cand >= s_cur * (1.0 + self.cfg.hysteresis) {
+                self.gamma = cand;
+                self.gamma_changes += 1;
+                self.since_change = 0;
+            }
+        }
+        if self.cfg.sigma_adapt {
+            self.retune_sigma(a);
+        }
+    }
+
+    /// σ step toward the target acceptance band, inside the guard-rail.
+    fn retune_sigma(&mut self, alpha: f64) {
+        let next = if alpha < self.cfg.alpha_lo {
+            (self.sigma * self.cfg.sigma_step).min(self.sigma_max)
+        } else if alpha > self.cfg.alpha_hi {
+            (self.sigma / self.cfg.sigma_step).max(self.sigma_min)
+        } else {
+            self.sigma
+        };
+        if (next - self.sigma).abs() > f64::EPSILON * self.sigma {
+            self.sigma = next;
+            self.sigma_changes += 1;
+            self.since_change = 0;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    fn round(gamma: usize, accepted: usize, alphas: Vec<f64>) -> RoundStats {
+        RoundStats {
+            gamma,
+            accepted,
+            emitted: accepted + 1,
+            alphas,
+            residual_draws: 0,
+            draft_time: Duration::from_micros(5 * gamma as u64),
+            target_time: Duration::from_micros(50),
+        }
+    }
+
+    fn fast_cfg() -> AdaptiveConfig {
+        AdaptiveConfig {
+            halflife: 8.0,
+            warmup: 1,
+            dwell: 1,
+            c_override: 0.1,
+            ..AdaptiveConfig::default()
+        }
+    }
+
+    #[test]
+    fn defaults_validate() {
+        AdaptiveConfig::default().validate().unwrap();
+        fast_cfg().validate().unwrap();
+    }
+
+    #[test]
+    fn validate_rejects_bad_knobs() {
+        let mut c = AdaptiveConfig::default();
+        c.min_gamma = 0;
+        assert!(c.validate().is_err());
+        let mut c = AdaptiveConfig::default();
+        c.min_gamma = 8;
+        c.max_gamma = 4;
+        assert!(c.validate().is_err());
+        let mut c = AdaptiveConfig::default();
+        c.halflife = 0.0;
+        assert!(c.validate().is_err());
+        let mut c = AdaptiveConfig::default();
+        c.c_override = -1.0;
+        assert!(c.validate().is_err());
+        let mut c = AdaptiveConfig::default();
+        c.sigma_adapt = true;
+        c.sigma_step = 1.0;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn ewma_tracks_alpha_up_and_down() {
+        let mut ctrl = GammaController::new(fast_cfg(), 3, 0.5);
+        for _ in 0..50 {
+            ctrl.observe_round(&round(3, 3, vec![0.95, 0.95, 0.95]));
+        }
+        assert!(ctrl.alpha_hat() > 0.9, "alpha_hat {}", ctrl.alpha_hat());
+        for _ in 0..50 {
+            ctrl.observe_round(&round(3, 0, vec![0.05]));
+        }
+        assert!(ctrl.alpha_hat() < 0.2, "alpha_hat {}", ctrl.alpha_hat());
+    }
+
+    #[test]
+    fn rejected_rounds_lower_alpha_hat() {
+        // Rollback-awareness: a round that ends in rejection contributes
+        // its rejected proposal's low alpha to the estimate.
+        let mut accept_only = GammaController::new(fast_cfg(), 3, 0.5);
+        let mut with_rejects = GammaController::new(fast_cfg(), 3, 0.5);
+        for _ in 0..30 {
+            accept_only.observe_round(&round(3, 3, vec![0.9, 0.9, 0.9]));
+            with_rejects.observe_round(&round(3, 1, vec![0.9, 0.1]));
+        }
+        assert!(with_rejects.alpha_hat() < accept_only.alpha_hat() - 0.2);
+    }
+
+    #[test]
+    fn converges_to_optimal_gamma_high_alpha() {
+        let cfg = fast_cfg();
+        let mut ctrl = GammaController::new(cfg, 1, 0.5);
+        for _ in 0..100 {
+            let g = ctrl.gamma();
+            ctrl.observe_round(&round(g, g, vec![0.95; g]));
+        }
+        // Hysteresis may legitimately stop a step short of the exact
+        // argmax (the curve is flat there) — the contract is
+        // near-optimality of the *predicted speedup*, not of gamma.
+        let a = ctrl.alpha_hat();
+        let g_star = theory::optimal_gamma(a, 0.1, cfg.max_gamma);
+        let s_ctrl = theory::wall_speedup(a, ctrl.gamma(), 0.1);
+        let s_star = theory::wall_speedup(a, g_star, 0.1);
+        assert!(
+            s_ctrl >= 0.95 * s_star,
+            "controller gamma {} (S {:.3}) vs gamma* {} (S {:.3})",
+            ctrl.gamma(),
+            s_ctrl,
+            g_star,
+            s_star
+        );
+        assert!(ctrl.gamma() > 3, "high acceptance + cheap draft should push gamma up");
+    }
+
+    #[test]
+    fn converges_down_under_hostile_draft() {
+        let mut ctrl = GammaController::new(fast_cfg(), 8, 0.5);
+        for _ in 0..100 {
+            let g = ctrl.gamma();
+            ctrl.observe_round(&round(g, 0, vec![0.02]));
+        }
+        assert_eq!(ctrl.gamma(), 1, "constant rejection should collapse gamma to 1");
+    }
+
+    #[test]
+    fn hysteresis_prevents_thrash() {
+        // Alternating alpha evidence around a boundary: with a dwell and a
+        // relative-improvement gate, gamma must change far less often than
+        // the evidence oscillates.
+        let mut cfg = fast_cfg();
+        cfg.dwell = 4;
+        cfg.hysteresis = 0.05;
+        let mut ctrl = GammaController::new(cfg, 3, 0.5);
+        for i in 0..200 {
+            let a = if i % 2 == 0 { 0.75 } else { 0.85 };
+            let g = ctrl.gamma();
+            ctrl.observe_round(&round(g, g, vec![a; g]));
+        }
+        let s = ctrl.state();
+        assert!(
+            s.gamma_changes <= 4,
+            "gamma changed {} times under oscillating evidence",
+            s.gamma_changes
+        );
+    }
+
+    #[test]
+    fn warmup_and_dwell_delay_changes() {
+        let mut cfg = fast_cfg();
+        cfg.warmup = 10;
+        let mut ctrl = GammaController::new(cfg, 1, 0.5);
+        for i in 0..9 {
+            ctrl.observe_round(&round(1, 1, vec![0.99]));
+            assert_eq!(ctrl.gamma(), 1, "no change during warmup (round {i})");
+        }
+        for _ in 0..20 {
+            ctrl.observe_round(&round(1, 1, vec![0.99]));
+        }
+        assert!(ctrl.gamma() > 1, "post-warmup the controller must move");
+    }
+
+    #[test]
+    fn gamma_for_respects_context_cap() {
+        // PR 1's panic-fix guard: gamma + 1 appended patches must fit in
+        // max_ctx with one context patch surviving, i.e. gamma <= ctx - 2.
+        let mut ctrl = GammaController::new(fast_cfg(), 16, 0.5);
+        for _ in 0..100 {
+            ctrl.observe_round(&round(8, 8, vec![0.99; 8]));
+        }
+        assert!(ctrl.gamma() > 4, "unclamped gamma should be large");
+        assert_eq!(ctrl.gamma_for(6), 4);
+        assert_eq!(ctrl.gamma_for(3), 1);
+        assert_eq!(ctrl.gamma_for(2), 1, "degenerate window still yields a legal gamma");
+        assert_eq!(AdaptiveConfig::ctx_gamma_cap(480), 478);
+    }
+
+    #[test]
+    fn c_measured_from_round_timers() {
+        let mut cfg = fast_cfg();
+        cfg.c_override = f64::NAN;
+        let mut ctrl = GammaController::new(cfg, 3, 0.5);
+        assert!(ctrl.c().is_nan(), "no measurement before the first round");
+        for _ in 0..20 {
+            // draft 5us/proposal vs target 50us => c = 0.1.
+            ctrl.observe_round(&round(3, 3, vec![0.9, 0.9, 0.9]));
+        }
+        assert!((ctrl.c() - 0.1).abs() < 1e-9, "c {}", ctrl.c());
+    }
+
+    #[test]
+    fn gamma_zero_rounds_are_ignored() {
+        let mut ctrl = GammaController::new(fast_cfg(), 3, 0.5);
+        let before = ctrl.state();
+        ctrl.observe_round(&RoundStats {
+            gamma: 0,
+            accepted: 0,
+            emitted: 1,
+            alphas: vec![],
+            residual_draws: 0,
+            draft_time: Duration::from_micros(1),
+            target_time: Duration::from_micros(1),
+        });
+        let after = ctrl.state();
+        assert_eq!(before.rounds, after.rounds);
+        assert_eq!(before.proposals, after.proposals);
+    }
+
+    #[test]
+    fn sigma_guard_rail_holds() {
+        let mut cfg = fast_cfg();
+        cfg.sigma_adapt = true;
+        let mut ctrl = GammaController::new(cfg, 3, 0.5);
+        // Persistent low acceptance: sigma widens but never past 1.5 x.
+        for _ in 0..200 {
+            let g = ctrl.gamma();
+            ctrl.observe_round(&round(g, 0, vec![0.05]));
+        }
+        assert!(ctrl.sigma() <= 0.75 + 1e-12, "sigma {} escaped the guard", ctrl.sigma());
+        assert!(ctrl.sigma() > 0.5, "low acceptance should widen sigma");
+        // Persistent saturation: narrows back down, never below 0.75 x.
+        for _ in 0..400 {
+            let g = ctrl.gamma();
+            ctrl.observe_round(&round(g, g, vec![1.0; g]));
+        }
+        assert!(ctrl.sigma() >= 0.375 - 1e-12);
+        assert!(ctrl.sigma() < 0.5, "saturated acceptance should narrow sigma");
+        assert!(ctrl.state().sigma_changes > 0);
+    }
+
+    #[test]
+    fn degenerate_configs_construct_without_panicking() {
+        // Half-specified sigma band: finite min above the defaulted max
+        // (1.5 * 0.5 = 0.75) collapses instead of panicking in clamp.
+        let mut cfg = fast_cfg();
+        cfg.sigma_min = 1.0;
+        let ctrl = GammaController::new(cfg, 3, 0.5);
+        assert_eq!(ctrl.sigma(), 1.0, "sigma clamped into the collapsed band");
+        // Inverted gamma bounds: invalid (validate() rejects them) but
+        // construction must still not panic.
+        let mut cfg = fast_cfg();
+        cfg.min_gamma = 5;
+        cfg.max_gamma = 2;
+        assert!(cfg.validate().is_err());
+        let ctrl = GammaController::new(cfg, 3, 0.5);
+        assert!(ctrl.gamma() >= 1);
+    }
+
+    #[test]
+    fn validate_checks_sigma_bounds_even_without_sigma_adapt() {
+        let mut cfg = AdaptiveConfig::default();
+        cfg.sigma_min = 2.0;
+        cfg.sigma_max = 1.0;
+        assert!(cfg.validate().is_err(), "inverted sigma bounds must be rejected");
+        let mut cfg = AdaptiveConfig::default();
+        cfg.sigma_min = -1.0;
+        assert!(cfg.validate().is_err(), "negative sigma_min must be rejected");
+    }
+
+    #[test]
+    fn sigma_fixed_when_adaptation_off() {
+        let mut ctrl = GammaController::new(fast_cfg(), 3, 0.5);
+        for _ in 0..100 {
+            ctrl.observe_round(&round(3, 0, vec![0.01]));
+        }
+        assert_eq!(ctrl.sigma(), 0.5);
+        assert_eq!(ctrl.state().sigma_changes, 0);
+    }
+}

@@ -13,6 +13,7 @@ use std::time::Instant;
 
 use anyhow::Result;
 
+use super::controller::{AdaptiveConfig, GammaController};
 use super::stats::{DecodeOutput, DecodeStats, RoundStats};
 use crate::accept::AcceptancePolicy;
 use crate::models::{begin_session, Backend, CacheMode};
@@ -43,15 +44,23 @@ pub enum Variant {
 ///   exactness guarantees (Theorems 1-2) and used by the statistical tests.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Emission {
+    /// Emit head means (production protocol; the paper's MSep deltas).
     Mean,
+    /// Emit the accepted samples (generative protocol; lossless exactness).
     Sampled,
 }
 
+/// One decode's full configuration (γ, acceptance policy, variant, seed,
+/// emission, cache toggle, optional adaptive controller).
 #[derive(Clone, Copy, Debug)]
 pub struct SpecConfig {
+    /// Draft block length γ (the opening value when `adaptive` is set).
     pub gamma: usize,
+    /// Acceptance rule parameters (σ, bias λ).
     pub policy: AcceptancePolicy,
+    /// Practical (fallback-to-p) or Lossless (residual thinning).
     pub variant: Variant,
+    /// RNG stream seed; decodes are deterministic given the seed.
     pub seed: u64,
     /// Cap on thinning iterations per residual draw (safety valve; the
     /// expected count is 1/(1-beta) which explodes as beta -> 1).
@@ -63,6 +72,12 @@ pub struct SpecConfig {
     /// model. Outputs are identical either way (pinned by
     /// `tests/cache_equivalence.rs`); only wall-clock differs.
     pub cache: CacheMode,
+    /// Online γ/σ tuning from live acceptance telemetry. `None` (the
+    /// default) keeps the static γ. When set, the engine runs a
+    /// per-stream [`GammaController`] seeded at `gamma`/`policy.sigma`;
+    /// adaptation changes *when* drafting happens, never *what* is
+    /// emitted (see `specdec::controller`).
+    pub adaptive: Option<AdaptiveConfig>,
 }
 
 impl Default for SpecConfig {
@@ -75,6 +90,55 @@ impl Default for SpecConfig {
             max_residual_draws: 10_000,
             emission: Emission::Mean,
             cache: CacheMode::On,
+            adaptive: None,
+        }
+    }
+}
+
+/// Where each round's γ (and σ) comes from: the static config, a live
+/// controller, or a recorded per-round schedule (replay).
+pub(super) enum GammaPlan<'a> {
+    /// Static `cfg.gamma` every round.
+    Fixed,
+    /// A live controller: γ from the speedup curve, observations fed back.
+    Controller(&'a mut GammaController),
+    /// Replay a recorded per-round γ sequence (`DecodeOutput::rounds`'
+    /// `gamma` values); rounds beyond the schedule fall back to
+    /// `cfg.gamma`. Used to prove adaptation changes only *when* drafting
+    /// happens: replaying an adaptive decode's choices reproduces it
+    /// bit-for-bit.
+    Schedule(&'a [usize], usize),
+}
+
+impl GammaPlan<'_> {
+    /// γ wanted for the next round, before horizon capping.
+    fn desired(&mut self, cfg: &SpecConfig, max_ctx: usize) -> usize {
+        match self {
+            GammaPlan::Fixed => cfg.gamma,
+            GammaPlan::Controller(c) => c.gamma_for(max_ctx),
+            GammaPlan::Schedule(s, i) => {
+                let g = s.get(*i).copied().unwrap_or(cfg.gamma);
+                *i += 1;
+                g
+            }
+        }
+    }
+
+    /// Acceptance policy for the next round (σ may drift under a
+    /// controller with σ adaptation enabled).
+    fn policy(&self, cfg: &SpecConfig) -> AcceptancePolicy {
+        match self {
+            GammaPlan::Controller(c) if c.config().sigma_adapt => {
+                AcceptancePolicy { sigma: c.sigma(), bias: cfg.policy.bias }
+            }
+            _ => cfg.policy,
+        }
+    }
+
+    /// Feed a finished round back (no-op for fixed/replay plans).
+    fn observe(&mut self, r: &RoundStats) {
+        if let GammaPlan::Controller(c) = self {
+            c.observe_round(r);
         }
     }
 }
@@ -83,6 +147,11 @@ impl Default for SpecConfig {
 ///
 /// The context is slid left if `n_hist + gamma + 1` would exceed the
 /// backend's max context (long-horizon decodes, pred-len 336).
+///
+/// When [`SpecConfig::adaptive`] is set, a fresh per-stream
+/// [`GammaController`] is created for this decode; to keep controller
+/// state across decodes (a long-lived stream), use
+/// [`sd_generate_with_controller`].
 pub fn sd_generate(
     target: &dyn Backend,
     draft: &dyn Backend,
@@ -90,6 +159,92 @@ pub fn sd_generate(
     n_hist: usize,
     horizon: usize,
     cfg: &SpecConfig,
+) -> Result<DecodeOutput> {
+    match cfg.adaptive {
+        Some(acfg) => {
+            // Validate before construction: bad knobs must be a clean
+            // error, never a clamp panic inside the controller.
+            acfg.validate()?;
+            let mut ctrl = GammaController::new(acfg, cfg.gamma, cfg.policy.sigma);
+            sd_generate_with_controller(target, draft, history, n_hist, horizon, cfg, &mut ctrl)
+        }
+        None => sd_generate_impl(
+            target,
+            draft,
+            history,
+            n_hist,
+            horizon,
+            cfg,
+            &mut GammaPlan::Fixed,
+        ),
+    }
+}
+
+/// [`sd_generate`] driven by a caller-owned [`GammaController`]: the
+/// controller's α̂/c estimates and γ/σ choices persist across calls, which
+/// is how a long-lived request stream (or the `adaptive_gamma` bench)
+/// adapts across many forecast windows.
+pub fn sd_generate_with_controller(
+    target: &dyn Backend,
+    draft: &dyn Backend,
+    history: &[f32],
+    n_hist: usize,
+    horizon: usize,
+    cfg: &SpecConfig,
+    ctrl: &mut GammaController,
+) -> Result<DecodeOutput> {
+    ctrl.config().validate()?;
+    if cfg.variant == Variant::Lossless {
+        anyhow::ensure!(
+            !ctrl.config().sigma_adapt,
+            "sigma adaptation changes the emission law; the lossless variant \
+             requires a fixed sigma (gamma adaptation alone is exact)"
+        );
+    }
+    sd_generate_impl(
+        target,
+        draft,
+        history,
+        n_hist,
+        horizon,
+        cfg,
+        &mut GammaPlan::Controller(ctrl),
+    )
+}
+
+/// [`sd_generate`] with a recorded per-round γ schedule (entries beyond
+/// the schedule fall back to `cfg.gamma`). Replaying the `gamma` values
+/// from an adaptive decode's [`DecodeOutput`] rounds reproduces that
+/// decode bit-for-bit — the test harness for "adaptation changes *when*
+/// we draft, never *what* is emitted".
+pub fn sd_generate_scheduled(
+    target: &dyn Backend,
+    draft: &dyn Backend,
+    history: &[f32],
+    n_hist: usize,
+    horizon: usize,
+    cfg: &SpecConfig,
+    schedule: &[usize],
+) -> Result<DecodeOutput> {
+    sd_generate_impl(
+        target,
+        draft,
+        history,
+        n_hist,
+        horizon,
+        cfg,
+        &mut GammaPlan::Schedule(schedule, 0),
+    )
+}
+
+fn sd_generate_impl(
+    target: &dyn Backend,
+    draft: &dyn Backend,
+    history: &[f32],
+    n_hist: usize,
+    horizon: usize,
+    cfg: &SpecConfig,
+    plan: &mut GammaPlan<'_>,
 ) -> Result<DecodeOutput> {
     let p = target.patch();
     anyhow::ensure!(p == draft.patch(), "patch mismatch");
@@ -120,8 +275,12 @@ pub fn sd_generate(
 
     while emitted < horizon {
         let remaining = horizon - emitted;
-        // A round emits up to gamma+1; don't overshoot the horizon.
-        let gamma = cfg.gamma.min(remaining.saturating_sub(1));
+        // A round emits up to gamma+1; don't overshoot the horizon. The
+        // plan's desired gamma (static, controller, or replay) is already
+        // context-clamped; the horizon cap composes on top.
+        let gamma = plan.desired(cfg, max_ctx).min(remaining.saturating_sub(1));
+        // Round policy: sigma may drift under an adapting controller.
+        let policy = plan.policy(cfg);
 
         // Slide both windows in lockstep so validation fits in the joint
         // max_ctx (sessions also self-evict, but the shared rule keeps
@@ -139,7 +298,7 @@ pub fn sd_generate(
             // Horizon tail: plain target AR step off the session tip.
             let t0 = Instant::now();
             let mu_p = t_sess.tip_mean()?;
-            let patch = emit_patch(&mu_p, cfg, &mut rng);
+            let patch = emit_from_p(&mu_p, policy.sigma, cfg.emission, &mut rng);
             t_sess.append(&patch, 1)?;
             let tt = t0.elapsed();
             let t1 = Instant::now();
@@ -156,6 +315,7 @@ pub fn sd_generate(
                 draft_time: dt,
                 target_time: tt,
             };
+            plan.observe(&r);
             stats.absorb(&r);
             rounds.push(r);
             continue;
@@ -173,7 +333,7 @@ pub fn sd_generate(
         let mut mu_qs: Vec<Vec<f32>> = Vec::with_capacity(gamma);
         for i in 0..gamma {
             let mut x = vec![0.0f32; p];
-            rng.fill_normal_around(&mu_q, cfg.policy.sigma as f32, &mut x);
+            rng.fill_normal_around(&mu_q, policy.sigma as f32, &mut x);
             proposals.push(x);
             mu_qs.push(mu_q.clone());
             if i + 1 < gamma {
@@ -201,7 +361,7 @@ pub fn sd_generate(
         let mut accepted = 0usize;
         let mut rejected_at: Option<usize> = None;
         for i in 0..gamma {
-            let a = cfg.policy.alpha(&proposals[i], mu_p_at(i), &mu_qs[i]);
+            let a = policy.alpha(&proposals[i], mu_p_at(i), &mu_qs[i]);
             alphas.push(a);
             if a >= 1.0 || rng.uniform() < a {
                 accepted += 1;
@@ -262,18 +422,18 @@ pub fn sd_generate(
             None => {
                 // All accepted: bonus draw from p_{gamma+1} (l.9-10).
                 let mu = mu_p_at(gamma);
-                emit_from_p(mu, cfg, &mut rng)
+                emit_from_p(mu, policy.sigma, cfg.emission, &mut rng)
             }
             Some(i) => {
                 let mu_p = mu_p_at(i);
                 match cfg.variant {
                     // Fallback-to-p (l.12).
-                    Variant::Practical => emit_from_p(mu_p, cfg, &mut rng),
+                    Variant::Practical => emit_from_p(mu_p, policy.sigma, cfg.emission, &mut rng),
                     // Residual thinning (§A.5.1): draw Z ~ p, accept with
                     // prob (1 - q(Z)/p(Z))_+.
                     Variant::Lossless => {
                         let mu_q = &mu_qs[i];
-                        let sigma = cfg.policy.sigma;
+                        let sigma = policy.sigma;
                         let mut z = vec![0.0f32; p];
                         loop {
                             residual_draws += 1;
@@ -319,6 +479,7 @@ pub fn sd_generate(
             draft_time,
             target_time,
         };
+        plan.observe(&r);
         stats.absorb(&r);
         rounds.push(r);
     }
@@ -328,20 +489,17 @@ pub fn sd_generate(
 }
 
 /// Emit a patch given its target-head mean: a sample in the generative
-/// protocol, the mean in production mode.
-fn emit_from_p(mu: &[f32], cfg: &SpecConfig, rng: &mut Rng) -> Vec<f32> {
-    match cfg.emission {
+/// protocol, the mean in production mode. Takes the *round* sigma so an
+/// adapting controller's width applies consistently within a round.
+fn emit_from_p(mu: &[f32], sigma: f64, emission: Emission, rng: &mut Rng) -> Vec<f32> {
+    match emission {
         Emission::Sampled => {
             let mut buf = vec![0.0f32; mu.len()];
-            rng.fill_normal_around(mu, cfg.policy.sigma as f32, &mut buf);
+            rng.fill_normal_around(mu, sigma as f32, &mut buf);
             buf
         }
         Emission::Mean => mu.to_vec(),
     }
-}
-
-fn emit_patch(mu: &[f32], cfg: &SpecConfig, rng: &mut Rng) -> Vec<f32> {
-    emit_from_p(mu, cfg, rng)
 }
 
 #[cfg(test)]
@@ -359,6 +517,7 @@ mod tests {
             max_residual_draws: 10_000,
             emission: Emission::Sampled,
             cache: CacheMode::On,
+            adaptive: None,
         }
     }
 
@@ -552,6 +711,107 @@ mod tests {
         let out =
             sd_generate(&t, &d, &[0.5, -0.5], 1, 30, &cfg(3, 0.5, Variant::Practical, 7)).unwrap();
         assert_eq!(out.patches.len(), 30 * 2);
+    }
+
+    #[test]
+    fn adaptive_emits_exact_horizon_and_adapts_gamma() {
+        use super::super::controller::AdaptiveConfig;
+        let t = AnalyticBackend::new("t", 2, 0.8, 0.1);
+        let d = AnalyticBackend::new("d", 2, 0.8, 0.1); // identical => alpha ~ 1
+        let mut c = cfg(2, 0.5, Variant::Practical, 9);
+        c.adaptive = Some(AdaptiveConfig {
+            warmup: 1,
+            dwell: 1,
+            halflife: 6.0,
+            c_override: 0.05,
+            ..AdaptiveConfig::default()
+        });
+        let out = sd_generate(&t, &d, &[0.5, -0.5], 1, 60, &c).unwrap();
+        assert_eq!(out.patches.len(), 60 * 2);
+        assert_eq!(out.stats.sum_block_len, 60);
+        // Identical heads accept everything; the controller must have
+        // raised gamma above its opening value within the decode.
+        let max_gamma = out.rounds.iter().map(|r| r.gamma).max().unwrap();
+        assert!(max_gamma > 2, "controller never adapted (max gamma {max_gamma})");
+    }
+
+    #[test]
+    fn adaptive_respects_tight_context_window() {
+        // A backend with max_ctx 6 can host at most gamma 4 per round
+        // (gamma + 1 appended, >= 1 context patch kept). The controller
+        // must clamp even when acceptance begs for more.
+        struct Limited(AnalyticBackend);
+        impl crate::models::Backend for Limited {
+            fn name(&self) -> &str {
+                self.0.name()
+            }
+            fn patch(&self) -> usize {
+                self.0.patch()
+            }
+            fn max_ctx(&self) -> usize {
+                6
+            }
+            fn forward(&self, tokens: &[f32], n: usize) -> Result<Vec<f32>> {
+                assert!(n <= 6, "context overflow: {n}");
+                self.0.forward(tokens, n)
+            }
+            fn flops(&self, n: usize) -> f64 {
+                self.0.flops(n)
+            }
+        }
+        let t = Limited(AnalyticBackend::new("t", 1, 0.9, 0.0));
+        let d = Limited(AnalyticBackend::new("d", 1, 0.9, 0.0));
+        let mut c = cfg(3, 0.5, Variant::Practical, 11);
+        c.adaptive = Some(AdaptiveConfig {
+            warmup: 1,
+            dwell: 1,
+            halflife: 4.0,
+            c_override: 0.02, // begs for huge gamma
+            ..AdaptiveConfig::default()
+        });
+        let out = sd_generate(&t, &d, &[0.4], 1, 50, &c).unwrap();
+        assert_eq!(out.patches.len(), 50);
+        assert!(out.rounds.iter().all(|r| r.gamma <= 4), "context clamp violated");
+    }
+
+    #[test]
+    fn scheduled_replay_reproduces_adaptive_decode() {
+        use super::super::controller::AdaptiveConfig;
+        // The core lossless-compatibility property: replaying an adaptive
+        // decode's per-round gamma choices yields the identical decode.
+        let t = AnalyticBackend::new("t", 2, 0.7, 0.2);
+        let d = AnalyticBackend::new("d", 2, 0.6, 0.1);
+        let mut c = cfg(3, 0.5, Variant::Practical, 21);
+        c.adaptive = Some(AdaptiveConfig {
+            warmup: 1,
+            dwell: 1,
+            halflife: 4.0,
+            c_override: 0.1,
+            ..AdaptiveConfig::default()
+        });
+        let live = sd_generate(&t, &d, &[0.5, 0.5], 1, 40, &c).unwrap();
+        let schedule: Vec<usize> = live.rounds.iter().map(|r| r.gamma).collect();
+        assert!(schedule.iter().any(|&g| g != 3), "decode never adapted; test is vacuous");
+        let mut replay_cfg = c;
+        replay_cfg.adaptive = None;
+        let replay =
+            sd_generate_scheduled(&t, &d, &[0.5, 0.5], 1, 40, &replay_cfg, &schedule).unwrap();
+        assert_eq!(live.patches, replay.patches, "replay drifted from the live decode");
+        assert_eq!(live.stats.accepted, replay.stats.accepted);
+        assert_eq!(live.stats.rounds, replay.stats.rounds);
+    }
+
+    #[test]
+    fn adaptive_lossless_rejects_sigma_adaptation() {
+        use super::super::controller::AdaptiveConfig;
+        let t = AnalyticBackend::new("t", 1, 0.8, 0.0);
+        let d = AnalyticBackend::new("d", 1, 0.7, 0.0);
+        let mut c = cfg(2, 0.5, Variant::Lossless, 1);
+        c.adaptive = Some(AdaptiveConfig { sigma_adapt: true, ..AdaptiveConfig::default() });
+        assert!(sd_generate(&t, &d, &[0.0], 1, 4, &c).is_err());
+        // Gamma-only adaptation is fine for lossless.
+        c.adaptive = Some(AdaptiveConfig::default());
+        assert!(sd_generate(&t, &d, &[0.0], 1, 4, &c).is_ok());
     }
 
     #[test]

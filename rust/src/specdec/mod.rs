@@ -13,10 +13,21 @@
 //!   residual r ∝ (p - q)_+ via thinning from p (§A.5.1); exact law p
 //!   (Theorems 1–2) at expected cost 1/(1-β) target draws per rejection.
 
+//! A third axis (this PR): the *adaptive speculation controller*
+//! ([`controller`]) closes the loop between the measured acceptance
+//! telemetry and the closed-form speedup curve — per-stream γ (and
+//! optionally σ) retuned online, with hysteresis, never changing what is
+//! emitted (replay-pinned; see [`sd_generate_scheduled`]).
+
 mod batched;
+mod controller;
 mod engine;
 mod stats;
 
 pub use batched::{sd_generate_batch, sd_generate_stream};
-pub use engine::{sd_generate, Emission, SpecConfig, Variant};
+pub use controller::{AdaptiveConfig, ControllerState, GammaController};
+pub use engine::{
+    sd_generate, sd_generate_scheduled, sd_generate_with_controller, Emission, SpecConfig,
+    Variant,
+};
 pub use stats::{DecodeOutput, DecodeStats, RoundStats};

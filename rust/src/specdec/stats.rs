@@ -1,5 +1,5 @@
 //! Per-round and per-decode statistics: everything the paper's tables
-//! report (α̂, E[L], measured speedup components) is accumulated here.
+//! report (α̂, E\[L\], measured speedup components) is accumulated here.
 
 use std::time::Duration;
 
@@ -16,27 +16,41 @@ pub struct RoundStats {
     pub alphas: Vec<f64>,
     /// Extra target draws consumed by residual thinning (lossless only).
     pub residual_draws: usize,
+    /// Wall clock spent in draft-model work this round.
     pub draft_time: Duration,
+    /// Wall clock spent in target-model work this round.
     pub target_time: Duration,
 }
 
 /// Aggregate over a full decode.
 #[derive(Clone, Debug, Default)]
 pub struct DecodeStats {
+    /// Speculative rounds executed.
     pub rounds: usize,
+    /// Draft forward passes consumed.
     pub draft_calls: usize,
+    /// Target forward passes consumed (incl. residual-draw accounting).
     pub target_calls: usize,
+    /// Residual thinning draws across all rejections (lossless only).
     pub residual_draws: usize,
+    /// Draft proposals checked by the acceptance rule.
     pub proposals: usize,
+    /// Proposals accepted.
     pub accepted: usize,
+    /// Sum of evaluated acceptance probabilities (α̂ numerator).
     pub sum_alpha: f64,
+    /// Count of evaluated acceptance probabilities (α̂ denominator).
     pub alpha_count: usize,
+    /// Sum of emitted patches per round (E\[L\] numerator).
     pub sum_block_len: usize,
+    /// Total wall clock in draft-model work.
     pub draft_time: Duration,
+    /// Total wall clock in target-model work.
     pub target_time: Duration,
 }
 
 impl DecodeStats {
+    /// Fold one round's outcome into the aggregate.
     pub fn absorb(&mut self, r: &RoundStats) {
         self.rounds += 1;
         self.draft_calls += r.gamma;
@@ -69,7 +83,7 @@ impl DecodeStats {
         }
     }
 
-    /// Mean emitted patches per round (measured E[L]).
+    /// Mean emitted patches per round (measured E\[L\]).
     pub fn mean_block_len(&self) -> f64 {
         if self.rounds == 0 {
             f64::NAN
@@ -78,6 +92,7 @@ impl DecodeStats {
         }
     }
 
+    /// Add another decode's aggregate into this one.
     pub fn merge(&mut self, other: &DecodeStats) {
         self.rounds += other.rounds;
         self.draft_calls += other.draft_calls;
@@ -96,9 +111,12 @@ impl DecodeStats {
 /// Result of one decode call.
 #[derive(Clone, Debug)]
 pub struct DecodeOutput {
-    /// Flat [horizon_patches * patch] forecast values.
+    /// Flat `[horizon_patches * patch]` forecast values.
     pub patches: Vec<f32>,
+    /// Per-round outcomes in execution order (`gamma` per round is the
+    /// replay schedule for `sd_generate_scheduled`).
     pub rounds: Vec<RoundStats>,
+    /// Aggregate statistics over all rounds.
     pub stats: DecodeStats,
 }
 

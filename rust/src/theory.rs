@@ -17,7 +17,7 @@ pub fn block_length_pmf(alpha: f64, gamma: usize) -> Vec<f64> {
     pmf
 }
 
-/// E[L] = (1 - ᾱ^{γ+1}) / (1 - ᾱ) (Eq. 4), with the ᾱ→1 limit γ+1.
+/// E\[L\] = (1 - ᾱ^{γ+1}) / (1 - ᾱ) (Eq. 4), with the ᾱ→1 limit γ+1.
 pub fn expected_block_length(alpha: f64, gamma: usize) -> f64 {
     assert!((0.0..=1.0).contains(&alpha));
     if (1.0 - alpha).abs() < 1e-12 {
@@ -26,13 +26,13 @@ pub fn expected_block_length(alpha: f64, gamma: usize) -> f64 {
     (1.0 - alpha.powi(gamma as i32 + 1)) / (1.0 - alpha)
 }
 
-/// Wall-clock speedup S_wall(γ) = E[L] / (cγ + 1) (Eq. 5);
+/// Wall-clock speedup S_wall(γ) = E\[L\] / (cγ + 1) (Eq. 5);
 /// c is the measured draft/target wall-clock ratio.
 pub fn wall_speedup(alpha: f64, gamma: usize, c: f64) -> f64 {
     expected_block_length(alpha, gamma) / (c * gamma as f64 + 1.0)
 }
 
-/// OpsFactor = (γ ĉ + γ + 1) / E[L] (Eq. 6): extra compute per emitted
+/// OpsFactor = (γ ĉ + γ + 1) / E\[L\] (Eq. 6): extra compute per emitted
 /// patch relative to pure target autoregression (>1 means SD burns more
 /// FLOPs — the price paid for latency).
 pub fn ops_factor(alpha: f64, gamma: usize, c_hat: f64) -> f64 {
@@ -83,7 +83,7 @@ pub fn paper_gamma_rule(alpha: f64, c: f64, cap: usize) -> usize {
     g
 }
 
-/// Prop. 1 dependence bounds on E[L] when per-step conditional acceptance
+/// Prop. 1 dependence bounds on E\[L\] when per-step conditional acceptance
 /// lies in [alpha_lo, alpha_hi].
 pub fn block_length_bounds(alpha_lo: f64, alpha_hi: f64, gamma: usize) -> (f64, f64) {
     assert!(alpha_lo <= alpha_hi);
@@ -97,13 +97,19 @@ pub fn block_length_bounds(alpha_lo: f64, alpha_hi: f64, gamma: usize) -> (f64, 
 /// capacity planner and Table 5 report.
 #[derive(Clone, Copy, Debug)]
 pub struct Predictors {
+    /// Mean acceptance ᾱ the predictions are evaluated at.
     pub alpha: f64,
+    /// Draft block length γ.
     pub gamma: usize,
+    /// Predicted mean block length E\[L\] (Eq. 4).
     pub expected_l: f64,
+    /// Predicted wall-clock speedup (Eq. 5).
     pub s_wall: f64,
+    /// Predicted compute overhead factor (Eq. 6).
     pub ops_factor: f64,
 }
 
+/// Evaluate all closed-form predictors at one (ᾱ, γ, c, ĉ) point.
 pub fn predict(alpha: f64, gamma: usize, c: f64, c_hat: f64) -> Predictors {
     Predictors {
         alpha,

@@ -5,64 +5,89 @@
 use std::collections::BTreeMap;
 use std::fmt;
 
+/// A parsed JSON value (the usual six-variant sum type).
 #[derive(Clone, Debug, PartialEq)]
 pub enum Json {
+    /// `null`.
     Null,
+    /// `true` / `false`.
     Bool(bool),
+    /// Any JSON number (always stored as `f64`).
     Num(f64),
+    /// A string.
     Str(String),
+    /// An array.
     Arr(Vec<Json>),
+    /// An object (sorted keys — output is deterministic).
     Obj(BTreeMap<String, Json>),
 }
 
-#[derive(Debug, thiserror::Error)]
-#[error("json error at byte {pos}: {msg}")]
+/// Parse error with the byte offset where parsing failed.
+#[derive(Debug)]
 pub struct JsonError {
+    /// Byte offset into the input where the error was detected.
     pub pos: usize,
+    /// Human-readable description of what went wrong.
     pub msg: String,
 }
 
+impl fmt::Display for JsonError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "json error at byte {}: {}", self.pos, self.msg)
+    }
+}
+
+impl std::error::Error for JsonError {}
+
 impl Json {
     // ---- accessors -------------------------------------------------------
+    /// Object field lookup (`None` for non-objects / missing keys).
     pub fn get(&self, key: &str) -> Option<&Json> {
         match self {
             Json::Obj(m) => m.get(key),
             _ => None,
         }
     }
+    /// Array element lookup (`None` for non-arrays / out of range).
     pub fn at(&self, idx: usize) -> Option<&Json> {
         match self {
             Json::Arr(v) => v.get(idx),
             _ => None,
         }
     }
+    /// The number value, if this is a number.
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Json::Num(n) => Some(*n),
             _ => None,
         }
     }
+    /// The number value truncated to `usize`, if this is a number.
     pub fn as_usize(&self) -> Option<usize> {
         self.as_f64().map(|n| n as usize)
     }
+    /// The string value, if this is a string.
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Json::Str(s) => Some(s),
             _ => None,
         }
     }
+    /// The boolean value, if this is a bool.
     pub fn as_bool(&self) -> Option<bool> {
         match self {
             Json::Bool(b) => Some(*b),
             _ => None,
         }
     }
+    /// The elements, if this is an array.
     pub fn as_arr(&self) -> Option<&[Json]> {
         match self {
             Json::Arr(v) => Some(v),
             _ => None,
         }
     }
+    /// The key→value map, if this is an object.
     pub fn as_obj(&self) -> Option<&BTreeMap<String, Json>> {
         match self {
             Json::Obj(m) => Some(m),
@@ -80,16 +105,20 @@ impl Json {
     }
 
     // ---- constructors ----------------------------------------------------
+    /// Build an object from `(key, value)` pairs.
     pub fn obj(pairs: Vec<(&str, Json)>) -> Json {
         Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
     }
+    /// Build a number array from an `f64` slice.
     pub fn arr_f64(v: &[f64]) -> Json {
         Json::Arr(v.iter().map(|&x| Json::Num(x)).collect())
     }
+    /// Build a number array from an `f32` slice (widened to `f64`).
     pub fn arr_f32(v: &[f32]) -> Json {
         Json::Arr(v.iter().map(|&x| Json::Num(x as f64)).collect())
     }
 
+    /// Parse a complete JSON document (trailing data is an error).
     pub fn parse(s: &str) -> Result<Json, JsonError> {
         let b = s.as_bytes();
         let mut p = Parser { b, pos: 0 };

@@ -10,31 +10,46 @@ use std::time::{Duration, Instant};
 
 use super::stats::quantile;
 
+/// Timing statistics of one benched closure.
 #[derive(Clone, Debug)]
 pub struct BenchResult {
+    /// Bench label (as passed to [`Bencher::run`]).
     pub name: String,
+    /// Timed iterations contributing to the statistics.
     pub iters: usize,
+    /// Mean per-iteration time, nanoseconds.
     pub mean_ns: f64,
+    /// Median per-iteration time, nanoseconds.
     pub p50_ns: f64,
+    /// 99th-percentile per-iteration time, nanoseconds.
     pub p99_ns: f64,
+    /// Median absolute deviation from the median, nanoseconds.
     pub mad_ns: f64,
+    /// Fastest iteration, nanoseconds.
     pub min_ns: f64,
 }
 
 impl BenchResult {
+    /// Mean per-iteration time in milliseconds.
     pub fn mean_ms(&self) -> f64 {
         self.mean_ns / 1e6
     }
+    /// Items per second given `items_per_iter` work units per iteration.
     pub fn throughput_per_s(&self, items_per_iter: f64) -> f64 {
         items_per_iter / (self.mean_ns / 1e9)
     }
 }
 
+/// Warmup-then-measure micro-bench runner.
 #[derive(Clone, Debug)]
 pub struct Bencher {
+    /// Untimed warmup budget.
     pub warmup: Duration,
+    /// Timed measurement budget.
     pub measure: Duration,
+    /// Lower bound on timed iterations (overrides the budget).
     pub min_iters: usize,
+    /// Upper bound on timed iterations (caps the budget).
     pub max_iters: usize,
 }
 
@@ -50,6 +65,7 @@ impl Default for Bencher {
 }
 
 impl Bencher {
+    /// CI-scale budgets (tens of milliseconds instead of seconds).
     pub fn quick() -> Self {
         Bencher {
             warmup: Duration::from_millis(50),
@@ -101,6 +117,7 @@ pub struct Table {
 }
 
 impl Table {
+    /// Empty table with a title row and column headers.
     pub fn new(title: &str, headers: &[&str]) -> Table {
         Table {
             title: title.to_string(),
@@ -109,11 +126,13 @@ impl Table {
         }
     }
 
+    /// Append one row (must match the header width).
     pub fn row(&mut self, cells: Vec<String>) {
         assert_eq!(cells.len(), self.headers.len(), "row width mismatch");
         self.rows.push(cells);
     }
 
+    /// Print the table to stdout with auto-sized columns.
     pub fn print(&self) {
         let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
         for row in &self.rows {

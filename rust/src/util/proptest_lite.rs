@@ -9,7 +9,9 @@ use super::rng::Rng;
 
 /// A value generator with an optional shrinker.
 pub trait Gen {
+    /// The generated value type.
     type Value: std::fmt::Debug + Clone;
+    /// Draw one value from the generator's distribution.
     fn generate(&self, rng: &mut Rng) -> Self::Value;
     /// Candidate smaller values; default none.
     fn shrink(&self, _v: &Self::Value) -> Vec<Self::Value> {
@@ -19,8 +21,11 @@ pub trait Gen {
 
 /// Runner configuration.
 pub struct Config {
+    /// Generated inputs per property.
     pub cases: usize,
+    /// RNG seed (reported on failure for reproduction).
     pub seed: u64,
+    /// Cap on shrink attempts after a failure.
     pub max_shrink_rounds: usize,
 }
 
@@ -36,6 +41,7 @@ pub fn check<G: Gen, F: Fn(&G::Value) -> Result<(), String>>(gen: &G, prop: F) {
     check_with(Config::default(), gen, prop)
 }
 
+/// [`check`] with an explicit [`Config`] (case count, seed, shrink cap).
 pub fn check_with<G: Gen, F: Fn(&G::Value) -> Result<(), String>>(
     cfg: Config,
     gen: &G,
@@ -113,7 +119,9 @@ impl Gen for UsizeRange {
 
 /// Vec of f32 drawn from N(0, scale); shrinks by halving length.
 pub struct NormalVec {
+    /// Length range of the generated vector.
     pub len: UsizeRange,
+    /// Standard deviation of the elements.
     pub scale: f32,
 }
 

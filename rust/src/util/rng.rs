@@ -47,6 +47,7 @@ pub struct Rng {
 }
 
 impl Rng {
+    /// New stream; equal seeds yield identical streams.
     pub fn new(seed: u64) -> Self {
         let mut s = [0u64; 4];
         for (i, slot) in s.iter_mut().enumerate() {
@@ -55,6 +56,7 @@ impl Rng {
         Rng { s, spare: None }
     }
 
+    /// Next raw 64-bit output of the Xoshiro256++ stream.
     #[inline]
     pub fn next_u64(&mut self) -> u64 {
         let s = &mut self.s;
@@ -112,7 +114,7 @@ impl Rng {
         mu + sigma * self.normal()
     }
 
-    /// Fill `out` with x[i] ~ N(mu[i], sigma^2) — the draft/fallback patch
+    /// Fill `out` with `x[i] ~ N(mu[i], sigma^2)` — the draft/fallback patch
     /// sampler on the hot path.
     pub fn fill_normal_around(&mut self, mu: &[f32], sigma: f32, out: &mut [f32]) {
         debug_assert_eq!(mu.len(), out.len());

@@ -43,17 +43,22 @@ pub fn hoeffding_eps(n: usize, delta: f64) -> f64 {
 /// Running summary statistics (Welford).
 #[derive(Clone, Debug, Default)]
 pub struct Summary {
+    /// Samples pushed so far.
     pub n: u64,
     mean: f64,
     m2: f64,
+    /// Smallest sample seen (`+inf` when empty).
     pub min: f64,
+    /// Largest sample seen (`-inf` when empty).
     pub max: f64,
 }
 
 impl Summary {
+    /// Empty summary.
     pub fn new() -> Self {
         Summary { n: 0, mean: 0.0, m2: 0.0, min: f64::INFINITY, max: f64::NEG_INFINITY }
     }
+    /// Fold one sample in.
     pub fn push(&mut self, x: f64) {
         self.n += 1;
         let d = x - self.mean;
@@ -62,9 +67,11 @@ impl Summary {
         self.min = self.min.min(x);
         self.max = self.max.max(x);
     }
+    /// Sample mean.
     pub fn mean(&self) -> f64 {
         self.mean
     }
+    /// Unbiased sample variance (0 for fewer than two samples).
     pub fn var(&self) -> f64 {
         if self.n < 2 {
             0.0
@@ -72,6 +79,7 @@ impl Summary {
             self.m2 / (self.n - 1) as f64
         }
     }
+    /// Sample standard deviation.
     pub fn std(&self) -> f64 {
         self.var().sqrt()
     }
@@ -112,6 +120,7 @@ impl Default for LatencyHistogram {
 }
 
 impl LatencyHistogram {
+    /// Empty histogram.
     pub fn new() -> Self {
         LatencyHistogram { buckets: vec![0; HIST_BUCKETS], count: 0, sum_ns: 0, max_ns: 0 }
     }
@@ -125,6 +134,7 @@ impl LatencyHistogram {
         idx.min(HIST_BUCKETS - 1)
     }
 
+    /// Record one latency in nanoseconds.
     pub fn record_ns(&mut self, ns: u64) {
         self.buckets[Self::index(ns)] += 1;
         self.count += 1;
@@ -132,14 +142,17 @@ impl LatencyHistogram {
         self.max_ns = self.max_ns.max(ns);
     }
 
+    /// Record one latency from a [`std::time::Duration`].
     pub fn record(&mut self, d: std::time::Duration) {
         self.record_ns(d.as_nanos() as u64);
     }
 
+    /// Number of recorded samples.
     pub fn count(&self) -> u64 {
         self.count
     }
 
+    /// Mean latency in nanoseconds (0 when empty).
     pub fn mean_ns(&self) -> f64 {
         if self.count == 0 {
             0.0
@@ -148,6 +161,7 @@ impl LatencyHistogram {
         }
     }
 
+    /// Largest recorded latency in nanoseconds.
     pub fn max_ns(&self) -> u64 {
         self.max_ns
     }
@@ -168,6 +182,7 @@ impl LatencyHistogram {
         self.max_ns as f64
     }
 
+    /// Add another histogram's samples into this one (bucket-wise).
     pub fn merge(&mut self, other: &LatencyHistogram) {
         for (a, b) in self.buckets.iter_mut().zip(&other.buckets) {
             *a += b;

@@ -7,9 +7,12 @@
 
 use std::fmt;
 
+/// Row-major f32 tensor: a shape vector over flat storage.
 #[derive(Clone, PartialEq)]
 pub struct Tensor {
+    /// Dimension sizes, outermost first.
     pub shape: Vec<usize>,
+    /// Flat row-major storage (`shape.iter().product()` elements).
     pub data: Vec<f32>,
 }
 
@@ -20,29 +23,34 @@ impl fmt::Debug for Tensor {
 }
 
 impl Tensor {
+    /// Zero-filled tensor of the given shape.
     pub fn zeros(shape: &[usize]) -> Tensor {
         let n = shape.iter().product();
         Tensor { shape: shape.to_vec(), data: vec![0.0; n] }
     }
 
+    /// Wrap existing flat data in a shape (lengths must agree).
     pub fn from_vec(shape: &[usize], data: Vec<f32>) -> Tensor {
         assert_eq!(shape.iter().product::<usize>(), data.len(), "shape/data mismatch");
         Tensor { shape: shape.to_vec(), data }
     }
 
+    /// Total element count.
     pub fn numel(&self) -> usize {
         self.data.len()
     }
 
+    /// Number of dimensions.
     pub fn rank(&self) -> usize {
         self.shape.len()
     }
 
-    /// Last-axis length.
+    /// Size of dimension `i`.
     pub fn dim(&self, i: usize) -> usize {
         self.shape[i]
     }
 
+    /// Reinterpret under a new shape of equal element count.
     pub fn reshape(mut self, shape: &[usize]) -> Tensor {
         assert_eq!(shape.iter().product::<usize>(), self.data.len());
         self.shape = shape.to_vec();
@@ -56,6 +64,7 @@ impl Tensor {
         &self.data[r * c..(r + 1) * c]
     }
 
+    /// Mutable row `r` of a 2-D tensor.
     pub fn row_mut(&mut self, r: usize) -> &mut [f32] {
         assert_eq!(self.rank(), 2);
         let c = self.shape[1];

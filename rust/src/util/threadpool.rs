@@ -27,12 +27,15 @@ use anyhow::{anyhow, Result};
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
 
+/// Fixed-size worker pool: fire-and-forget [`ThreadPool::execute`] plus a
+/// scoped-join [`ThreadPool::map_wait`] for compute fan-outs.
 pub struct ThreadPool {
     workers: Vec<thread::JoinHandle<()>>,
     tx: Option<mpsc::Sender<Job>>,
 }
 
 impl ThreadPool {
+    /// Pool of `size` workers with the default `stride-worker` name prefix.
     pub fn new(size: usize) -> ThreadPool {
         Self::with_name(size, "stride-worker")
     }
@@ -76,6 +79,7 @@ impl ThreadPool {
         self.workers.len()
     }
 
+    /// Enqueue a fire-and-forget job (no result, no join).
     pub fn execute<F: FnOnce() + Send + 'static>(&self, f: F) {
         self.tx
             .as_ref()

@@ -1,0 +1,144 @@
+//! Offline stub of the `xla` (PJRT) crate's API surface.
+//!
+//! The runtime layer was written against the external `xla` crate
+//! (PJRT CPU client over AOT HLO artifacts), which is not available in
+//! the offline build environment. This module mirrors exactly the API
+//! the repo touches — [`PjRtClient`], [`PjRtLoadedExecutable`],
+//! [`Literal`], [`HloModuleProto`], [`XlaComputation`] — so everything
+//! compiles and all non-XLA paths (native backend, analytic heads, the
+//! whole specdec/serving stack) work unchanged. Any attempt to actually
+//! *use* PJRT fails fast at [`PjRtClient::cpu`] with a clear message.
+//!
+//! Restoring real PJRT execution is a two-line change: add the `xla`
+//! dependency to `Cargo.toml` and delete the `use crate::xla;` aliases
+//! in `runtime::engine` and `tests/smoke_hlo.rs` (plus this module).
+//! Every call site is API-compatible by construction.
+
+use std::fmt;
+
+/// Error type mirroring `xla::Error` closely enough for `anyhow` context
+/// chaining.
+#[derive(Debug)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "xla (stub): {}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+/// Stub result type.
+pub type Result<T> = std::result::Result<T, Error>;
+
+const UNAVAILABLE: &str = "PJRT/XLA is unavailable in this build (the `xla` crate is not \
+     vendored offline); use --backend native, or add the `xla` dependency \
+     to Cargo.toml to restore this path";
+
+/// A host tensor literal (stub: carries no data).
+#[derive(Debug, Clone)]
+pub struct Literal;
+
+impl Literal {
+    /// Build a rank-1 literal from a float slice.
+    pub fn vec1(_data: &[f32]) -> Literal {
+        Literal
+    }
+
+    /// Reshape to the given dimensions.
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal> {
+        Err(Error(UNAVAILABLE.into()))
+    }
+
+    /// Unwrap a 1-tuple result literal.
+    pub fn to_tuple1(self) -> Result<Literal> {
+        Err(Error(UNAVAILABLE.into()))
+    }
+
+    /// Copy out as a typed vector.
+    pub fn to_vec<T>(&self) -> Result<Vec<T>> {
+        Err(Error(UNAVAILABLE.into()))
+    }
+
+    /// Synchronous device-to-host transfer.
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(Error(UNAVAILABLE.into()))
+    }
+}
+
+/// Parsed HLO module (stub: never constructible at runtime).
+#[derive(Debug)]
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    /// Parse an HLO-text file.
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        Err(Error(UNAVAILABLE.into()))
+    }
+}
+
+/// An XLA computation wrapping an HLO module.
+#[derive(Debug)]
+pub struct XlaComputation;
+
+impl XlaComputation {
+    /// Wrap a parsed HLO module.
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+/// A compiled executable (stub: never constructible at runtime).
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    /// Execute on device buffers; indexed `[device][output]`.
+    pub fn execute<T>(&self, _args: &[Literal]) -> Result<Vec<Vec<Literal>>> {
+        Err(Error(UNAVAILABLE.into()))
+    }
+}
+
+/// The PJRT client (stub: construction always fails with a clear message).
+#[derive(Debug)]
+pub struct PjRtClient;
+
+impl PjRtClient {
+    /// Create a CPU client. Always fails in the stub build.
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(Error(UNAVAILABLE.into()))
+    }
+
+    /// Platform name ("cpu" in the stub).
+    pub fn platform_name(&self) -> String {
+        "cpu-stub".to_string()
+    }
+
+    /// Compile a computation.
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(Error(UNAVAILABLE.into()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stub_fails_fast_with_clear_message() {
+        let err = PjRtClient::cpu().unwrap_err();
+        assert!(err.to_string().contains("unavailable"), "{err}");
+        assert!(HloModuleProto::from_text_file("x.hlo.txt").is_err());
+    }
+
+    #[test]
+    fn stub_error_chains_through_anyhow() {
+        use anyhow::Context;
+        let r: anyhow::Result<PjRtClient> =
+            PjRtClient::cpu().context("creating PJRT CPU client");
+        let msg = format!("{:#}", r.unwrap_err());
+        assert!(msg.contains("creating PJRT CPU client"));
+        assert!(msg.contains("unavailable"));
+    }
+}

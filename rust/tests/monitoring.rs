@@ -21,6 +21,7 @@ fn spec(sigma: f64, seed: u64) -> SpecConfig {
         max_residual_draws: 100,
         emission: Emission::Sampled,
         cache: stride::models::CacheMode::On,
+        adaptive: None,
     }
 }
 

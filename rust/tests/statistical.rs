@@ -23,6 +23,7 @@ fn spec(gamma: usize, sigma: f64, variant: Variant, seed: u64) -> SpecConfig {
         max_residual_draws: 10_000,
         emission: stride::specdec::Emission::Sampled,
         cache: stride::models::CacheMode::On,
+        adaptive: None,
     }
 }
 
@@ -333,6 +334,90 @@ fn cached_batched_specdec_statistics_identical() {
             assert!((u - v).abs() < 1e-5);
         }
     }
+}
+
+// ---------------------------------------------------------------------------
+// Adaptive-controller regression: adaptation changes *when* we draft, never
+// *what* is emitted. For the lossless variant this is the exactness
+// statement — each round is exact for any γ (Theorems 1-2 are per-round),
+// so a γ sequence chosen online must reproduce bit-for-bit when replayed
+// as per-round fixed choices.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn adaptive_lossless_bit_identical_to_fixed_gamma_replay() {
+    use stride::specdec::{sd_generate_scheduled, AdaptiveConfig};
+    let (t, d) = tiny_native_pair();
+    let hist: Vec<f32> = (0..4 * 4).map(|i| (i as f32 * 0.23).sin()).collect();
+    for seed in 0..12u64 {
+        let mut live_cfg = spec(3, 0.5, Variant::Lossless, seed);
+        live_cfg.adaptive = Some(AdaptiveConfig {
+            warmup: 1,
+            dwell: 1,
+            halflife: 4.0,
+            c_override: 0.1,
+            ..AdaptiveConfig::default()
+        });
+        let live = sd_generate(&t, &d, &hist, 4, 20, &live_cfg).unwrap();
+        let schedule: Vec<usize> = live.rounds.iter().map(|r| r.gamma).collect();
+        let mut replay_cfg = live_cfg;
+        replay_cfg.adaptive = None;
+        let replay = sd_generate_scheduled(&t, &d, &hist, 4, 20, &replay_cfg, &schedule).unwrap();
+        assert_eq!(
+            live.patches, replay.patches,
+            "seed {seed}: adaptive lossless output drifted from its own gamma schedule"
+        );
+        assert_eq!(live.stats.accepted, replay.stats.accepted, "seed {seed}");
+        assert_eq!(live.stats.proposals, replay.stats.proposals, "seed {seed}");
+        assert_eq!(live.stats.residual_draws, replay.stats.residual_draws, "seed {seed}");
+        for (a, b) in live.rounds.iter().zip(&replay.rounds) {
+            assert_eq!(a.gamma, b.gamma, "seed {seed}: replay used a different gamma");
+            assert_eq!(a.accepted, b.accepted, "seed {seed}");
+        }
+    }
+}
+
+#[test]
+fn adaptive_lossless_still_matches_target_law() {
+    // The stronger statistical statement: with the controller moving γ
+    // online, the lossless chain still reproduces the exact target
+    // marginal (Theorem 2) — adaptation is invisible in distribution.
+    use stride::specdec::AdaptiveConfig;
+    let a = 0.7f32;
+    let b = 0.1f32;
+    let t = AnalyticBackend::new("t", 1, a, b);
+    let d = AnalyticBackend::new("d", 1, 0.4, -0.2); // bad draft
+    let sigma = 0.4;
+    let x0 = 0.8f32;
+    let want_mean = (a as f64).powi(3) * x0 as f64
+        + b as f64 * (1.0 + a as f64 + (a as f64).powi(2));
+    let want_var = sigma * sigma * (1.0 + (a as f64).powi(2) + (a as f64).powi(4));
+
+    let mut s = Summary::new();
+    for seed in 0..6000 {
+        let mut cfg = spec(2, sigma, Variant::Lossless, seed);
+        cfg.adaptive = Some(AdaptiveConfig {
+            warmup: 1,
+            dwell: 1,
+            halflife: 4.0,
+            c_override: 0.1,
+            ..AdaptiveConfig::default()
+        });
+        let out = sd_generate(&t, &d, &[x0], 1, 3, &cfg).unwrap();
+        s.push(out.patches[2] as f64);
+    }
+    assert!(
+        (s.mean() - want_mean).abs() < 0.03,
+        "adaptive lossless x3 mean {:.4} vs target chain {:.4}",
+        s.mean(),
+        want_mean
+    );
+    assert!(
+        (s.var() - want_var).abs() < 0.05,
+        "adaptive lossless x3 var {:.4} vs target chain {:.4}",
+        s.var(),
+        want_var
+    );
 }
 
 #[test]

@@ -1,7 +1,9 @@
 #!/usr/bin/env bash
-# Tier-1 verify in one command: release build, full test suite, and a
-# quick perf_hotpath smoke (the cached-vs-uncached sweep runs in its
-# STRIDE_BENCH_QUICK=1 trim). Usage: scripts/ci.sh [--no-bench]
+# Tier-1 verify in one command: release build, full test suite, the
+# rustdoc gate (crate docs must build with zero warnings), and quick
+# bench smokes (perf_hotpath's cached-vs-uncached sweep and the adaptive
+# controller bench, both in their STRIDE_BENCH_QUICK=1 trims).
+# Usage: scripts/ci.sh [--no-bench]
 set -euo pipefail
 
 cd "$(dirname "$0")/../rust"
@@ -18,23 +20,43 @@ cargo build --release
 echo "== cargo test -q =="
 cargo test -q
 
-if [[ "${1:-}" != "--no-bench" ]]; then
-    echo "== perf_hotpath smoke (STRIDE_BENCH_QUICK=1) =="
-    STRIDE_BENCH_QUICK=1 cargo bench --bench perf_hotpath
+# Rustdoc gate: the crate carries #![warn(missing_docs)]; -D warnings
+# turns any missing public-API doc (or broken intra-doc link) into a hard
+# failure. --lib avoids the doc-output name collision with the bin target.
+echo "== cargo doc --no-deps (deny warnings) =="
+RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --lib
 
-    # The kernel-layer bench must leave a sane machine-readable record:
-    # non-empty JSON with no NaN/inf timings (the perf trajectory file).
-    json=results/BENCH_perf_hotpath.json
+# Shared check for the machine-readable bench records (schema in
+# benches/README.md): the file must exist, be non-empty, and contain no
+# non-finite values.
+check_bench_json() {
+    local json="$1"
     if [[ ! -s "$json" ]]; then
-        echo "error: $json missing or empty after perf_hotpath" >&2
+        echo "error: $json missing or empty" >&2
         exit 1
     fi
     if grep -qiE 'nan|inf' "$json"; then
-        echo "error: non-finite timing in $json:" >&2
+        echo "error: non-finite value in $json:" >&2
         grep -iE 'nan|inf' "$json" >&2
         exit 1
     fi
-    echo "kernel bench record OK: $json"
+    echo "bench record OK: $json"
+}
+
+if [[ "${1:-}" != "--no-bench" ]]; then
+    echo "== perf_hotpath smoke (STRIDE_BENCH_QUICK=1) =="
+    STRIDE_BENCH_QUICK=1 cargo bench --bench perf_hotpath
+    check_bench_json results/BENCH_perf_hotpath.json
+
+    echo "== adaptive_gamma smoke (STRIDE_BENCH_QUICK=1) =="
+    # The bench exits non-zero itself if the controller misses its
+    # acceptance criteria; the JSON check is belt-and-braces.
+    STRIDE_BENCH_QUICK=1 cargo bench --bench adaptive_gamma
+    check_bench_json results/BENCH_adaptive_gamma.json
+    if ! grep -q '"criteria_met":true' results/BENCH_adaptive_gamma.json; then
+        echo "error: adaptive_gamma criteria not met" >&2
+        exit 1
+    fi
 fi
 
 echo "CI OK"
