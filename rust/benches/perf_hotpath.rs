@@ -68,6 +68,7 @@ fn main() -> anyhow::Result<()> {
     let resp = stride::server::ForecastResponse {
         forecast: (0..96).map(|i| i as f32).collect(),
         mode: "sd".into(),
+        draft: "model".into(),
         latency_ms: 1.0,
         alpha_hat: 0.97,
         mean_block_len: 3.4,

@@ -10,7 +10,7 @@ use anyhow::{bail, Context, Result};
 
 use crate::accept::AcceptancePolicy;
 use crate::models::CacheMode;
-use crate::specdec::{AdaptiveConfig, Emission, SpecConfig, Variant};
+use crate::specdec::{AdaptiveConfig, DraftConfig, DraftKind, Emission, SpecConfig, Variant};
 use crate::util::json::Json;
 
 /// Parsed command line: positional args + `--key value` / `--flag` options.
@@ -104,6 +104,14 @@ pub struct ServeConfig {
     pub lossless: bool,
     /// Generative (sampled) emission instead of production mean emission.
     pub sampled: bool,
+    /// Draft-source selection: where speculative proposals come from.
+    /// `"draft": "model" | "extrap" | "adaptive"` (or an object with
+    /// `kind`/`period`/`eta` knobs) in the config file, `--draft` on the
+    /// CLI, per-request `"draft"` override. `model` (the default) is the
+    /// classic second-model setup; `extrap` drafts for free from a
+    /// closed-form continuation; `adaptive` learns a residual head from
+    /// verification feedback (see `specdec::draft`).
+    pub draft: DraftConfig,
     /// Adaptive speculation: per-stream γ tuned online from live
     /// acceptance telemetry (`specdec::controller`). Enabled by the
     /// `"adaptive"` config key (bool or `{...}` object), `--adaptive`,
@@ -145,6 +153,7 @@ impl Default for ServeConfig {
             bias: 1.0,
             lossless: false,
             sampled: false,
+            draft: DraftConfig::default(),
             adaptive: false,
             adaptive_cfg: AdaptiveConfig::default(),
             baseline: false,
@@ -173,6 +182,8 @@ impl ServeConfig {
                 "bias" => self.bias = v.as_f64().context("bias")?,
                 "lossless" => self.lossless = v.as_bool().context("lossless")?,
                 "sampled" => self.sampled = v.as_bool().context("sampled")?,
+                // Accepts a kind string or an object of source knobs.
+                "draft" => self.apply_draft_json(v)?,
                 // Accepts a bare bool or an object of controller knobs
                 // (object implies enabled unless "enabled": false).
                 "adaptive" => self.apply_adaptive_json(v)?,
@@ -184,6 +195,32 @@ impl ServeConfig {
                 "artifacts" => self.artifacts = PathBuf::from(v.as_str().context("artifacts")?),
                 "seed" => self.seed = v.as_usize().context("seed")? as u64,
                 other => bail!("unknown config key: {other}"),
+            }
+        }
+        Ok(())
+    }
+
+    /// Apply the `"draft"` config value: a kind string
+    /// (`"model" | "extrap" | "adaptive"`) or an object of
+    /// [`DraftConfig`] knobs (`kind`, `period`, `eta`).
+    fn apply_draft_json(&mut self, v: &Json) -> Result<()> {
+        if let Some(s) = v.as_str() {
+            self.draft.kind = DraftKind::parse(s)
+                .with_context(|| format!("unknown draft kind '{s}' (model|extrap|adaptive)"))?;
+            return Ok(());
+        }
+        let obj = v.as_obj().context("'draft' must be a kind string or an object")?;
+        for (k, val) in obj {
+            match k.as_str() {
+                "kind" => {
+                    let s = val.as_str().context("draft.kind")?;
+                    self.draft.kind = DraftKind::parse(s).with_context(|| {
+                        format!("unknown draft kind '{s}' (model|extrap|adaptive)")
+                    })?;
+                }
+                "period" => self.draft.period = val.as_usize().context("draft.period")?,
+                "eta" => self.draft.eta = val.as_f64().context("draft.eta")?,
+                other => bail!("unknown draft config key: {other}"),
             }
         }
         Ok(())
@@ -263,6 +300,16 @@ impl ServeConfig {
         if cli.flag("sampled") {
             self.sampled = true;
         }
+        if let Some(v) = cli.get("draft") {
+            self.draft.kind = DraftKind::parse(v)
+                .with_context(|| format!("--draft must be model|extrap|adaptive, got '{v}'"))?;
+        }
+        if let Some(v) = cli.get_usize("draft-period")? {
+            self.draft.period = v;
+        }
+        if let Some(v) = cli.get_f64("draft-eta")? {
+            self.draft.eta = v;
+        }
         // `--adaptive` enables the controller; `--adaptive-gamma` is the
         // pre-controller spelling, kept as an alias.
         if cli.flag("adaptive") || cli.flag("adaptive-gamma") {
@@ -314,6 +361,7 @@ impl ServeConfig {
         if !matches!(self.kernel.as_str(), "fused" | "pallas") {
             bail!("kernel must be 'fused' or 'pallas'");
         }
+        self.draft.validate()?;
         if self.adaptive {
             self.adaptive_cfg.validate()?;
             if self.adaptive_cfg.sigma_adapt {
@@ -337,6 +385,7 @@ impl ServeConfig {
             max_residual_draws: 10_000,
             emission: if self.sampled { Emission::Sampled } else { Emission::Mean },
             cache: if self.cache { CacheMode::On } else { CacheMode::Off },
+            draft: self.draft,
             adaptive: if self.adaptive { Some(self.adaptive_cfg) } else { None },
         }
     }
@@ -459,6 +508,45 @@ mod tests {
         // sigma adaptation is single-stream only; the server rejects it.
         let mut cfg = ServeConfig::default();
         cfg.apply_json(&Json::parse(r#"{"adaptive": {"sigma_adapt": true}}"#).unwrap()).unwrap();
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn draft_plumbing() {
+        // String form.
+        let mut cfg = ServeConfig::default();
+        assert_eq!(cfg.draft.kind, DraftKind::Model);
+        cfg.apply_json(&Json::parse(r#"{"draft": "extrap"}"#).unwrap()).unwrap();
+        assert_eq!(cfg.draft.kind, DraftKind::Extrap);
+        assert_eq!(cfg.spec_config().draft.kind, DraftKind::Extrap);
+
+        // Object form sets knobs.
+        let mut cfg = ServeConfig::default();
+        cfg.apply_json(
+            &Json::parse(r#"{"draft": {"kind": "adaptive", "eta": 0.3, "period": 24}}"#).unwrap(),
+        )
+        .unwrap();
+        assert_eq!(cfg.draft.kind, DraftKind::Adaptive);
+        assert!((cfg.draft.eta - 0.3).abs() < 1e-12);
+        assert_eq!(cfg.draft.period, 24);
+        cfg.validate().unwrap();
+
+        // Unknown kind / unknown knob rejected.
+        let mut cfg = ServeConfig::default();
+        assert!(cfg.apply_json(&Json::parse(r#"{"draft": "warp"}"#).unwrap()).is_err());
+        assert!(cfg.apply_json(&Json::parse(r#"{"draft": {"nope": 1}}"#).unwrap()).is_err());
+
+        // CLI flag.
+        let mut cfg = ServeConfig::default();
+        cfg.apply_cli(&Cli::parse(args("--draft adaptive --draft-eta 0.8")).unwrap()).unwrap();
+        assert_eq!(cfg.draft.kind, DraftKind::Adaptive);
+        assert!((cfg.draft.eta - 0.8).abs() < 1e-12);
+        let mut cfg = ServeConfig::default();
+        assert!(cfg.apply_cli(&Cli::parse(args("--draft warp")).unwrap()).is_err());
+
+        // Bad eta rejected at validation.
+        let mut cfg = ServeConfig::default();
+        cfg.apply_json(&Json::parse(r#"{"draft": {"eta": 5.0}}"#).unwrap()).unwrap();
         assert!(cfg.validate().is_err());
     }
 

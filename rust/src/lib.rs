@@ -34,6 +34,23 @@
 //!   `stride_controller_*` gauges expose the live state, and
 //!   `benches/adaptive_gamma.rs` pins the controller within 90% of the
 //!   best fixed γ on drifting-α workloads.
+//! * [`specdec::draft`] — **pluggable draft sources**: where proposals
+//!   come from is a trait ([`specdec::DraftSource`]), not a hard-wired
+//!   second model. [`specdec::ModelDraft`] wraps any backend's decode
+//!   session and is bit-identical to the pre-refactor engine
+//!   (`tests/draft_equivalence.rs` keeps the old loops verbatim as the
+//!   baseline); [`specdec::ExtrapolationDraft`] drafts for free from a
+//!   closed-form linear/seasonal continuation (measured cost ratio
+//!   c ≈ 0, the Eq. 5 best case); [`specdec::AdaptiveResidualDraft`]
+//!   NLMS-fits a residual head to the target means observed during
+//!   verification — acceptance α rises *online* with zero extra target
+//!   passes, updates pause while speculation is in flight and flush
+//!   after rollback. Selected via `SpecConfig::draft` / `--draft` /
+//!   config `"draft"` / per-request `"draft"`; SD decode groups key on
+//!   the kind; `/stats` and `stride_draft_*` gauges report per-source
+//!   α̂/c/update counts; `benches/draft_sources.rs` pins the adaptive
+//!   head out-accepting a frozen model draft after regime drift and the
+//!   extrapolation source measuring the lowest c.
 //! * [`models`] — backends + the decode-session layer:
 //!   [`models::begin_session`] hands out a [`models::DecodeSession`]
 //!   (`extend`/`rollback`/`evict_to`) that is KV-cached on the native
@@ -68,8 +85,8 @@
 //! * [`accept`] — log-space acceptance (Eq. 7) + the α̂ estimator (§3.5).
 //! * [`runtime`] — HLO-text → PJRT executable cache.
 //! * [`server`] — HTTP front end with dynamic batching; SD jobs are
-//!   grouped by (γ, σ, cache) and each group's sequences keep their
-//!   decode sessions across all speculative rounds.
+//!   grouped by (γ, σ, cache, adaptive, draft kind) and each group's
+//!   sequences keep their decode sessions across all speculative rounds.
 
 #![warn(missing_docs)]
 

@@ -27,6 +27,11 @@ commands:
   serve   start the HTTP forecasting service
           --bind 127.0.0.1:8080 --backend xla|native --kernel fused|pallas
           --gamma 3 --sigma 0.5 --bias 1.0 --max-batch 8 --max-wait-ms 2
+          --draft model|extrap|adaptive (proposal source: second model,
+          draft-free extrapolation, or online-learned head)
+          --draft-period N (extrap: seasonal period in patches; 0=linear)
+          --draft-eta X (adaptive: NLMS rate in (0,2)); also via config
+          \"draft\": {...} and per-request \"draft\" override
           --adaptive (online gamma controller; knobs via config
           \"adaptive\": {...}) --lossless --greedy --baseline --no-cache
           --threads N (native kernel pool; 0 = auto/STRIDE_THREADS)

@@ -61,6 +61,20 @@ impl Metrics {
         self.gauges.lock().unwrap().get(name).copied()
     }
 
+    /// Fold an observation into a named gauge as an EWMA with decay
+    /// `lam` in [0, 1) (first observation seeds the gauge). Non-finite
+    /// observations are dropped. Used for per-draft-source α̂ and cost
+    /// gauges, where a last-write-wins gauge would just echo the most
+    /// recent decode group's noise.
+    pub fn ewma_gauge(&self, name: &str, v: f64, lam: f64) {
+        if !v.is_finite() {
+            return;
+        }
+        let mut g = self.gauges.lock().unwrap();
+        let e = g.entry(name.to_string()).or_insert(v);
+        *e = lam * *e + (1.0 - lam) * v;
+    }
+
     /// Record one duration into the named latency histogram.
     pub fn observe(&self, name: &str, d: Duration) {
         self.histograms
@@ -209,6 +223,18 @@ mod tests {
         m.set_gauge("controller_gamma", f64::NAN);
         assert_eq!(m.gauge("controller_gamma"), None);
         assert!(!m.render().contains("controller_gamma"), "NaN gauge must not render");
+    }
+
+    #[test]
+    fn ewma_gauge_folds_and_drops_nonfinite() {
+        let m = Metrics::new();
+        m.ewma_gauge("draft_model_alpha_hat", 1.0, 0.5);
+        assert_eq!(m.gauge("draft_model_alpha_hat"), Some(1.0), "first obs seeds");
+        m.ewma_gauge("draft_model_alpha_hat", 0.0, 0.5);
+        assert_eq!(m.gauge("draft_model_alpha_hat"), Some(0.5));
+        m.ewma_gauge("draft_model_alpha_hat", f64::NAN, 0.5);
+        assert_eq!(m.gauge("draft_model_alpha_hat"), Some(0.5), "NaN obs dropped");
+        assert!(m.render().contains("stride_draft_model_alpha_hat"));
     }
 
     #[test]

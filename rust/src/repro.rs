@@ -173,6 +173,7 @@ impl Bench {
                 crate::specdec::Emission::Mean
             },
             cache: crate::models::CacheMode::On,
+            draft: crate::specdec::DraftConfig::default(),
             adaptive: None,
         };
 

@@ -20,7 +20,10 @@ use crate::forecast::ar_decode_with;
 use crate::metrics::{AcceptanceMonitor, Metrics};
 use crate::models::{Backend, CacheMode, NativeBackend, XlaBackend};
 use crate::runtime::{Engine, Manifest};
-use crate::specdec::{sd_generate_batch, GammaController, SpecConfig};
+use crate::specdec::{
+    make_batch_source, sd_generate_stream_from, DecodeStats, DraftKind, GammaController,
+    SpecConfig,
+};
 
 /// One queued forecast request plus its reply channel.
 pub struct Job {
@@ -46,6 +49,10 @@ pub struct BatcherHandle {
     /// finished group's rounds are fed back. Exposed read-only via
     /// `/stats`.
     pub controller: Option<Arc<Mutex<GammaController>>>,
+    /// The server's default draft-source kind (per-request `"draft"`
+    /// overrides route jobs to other kinds; `/stats` reports per-kind
+    /// aggregates).
+    pub draft: DraftKind,
 }
 
 impl BatcherHandle {
@@ -69,17 +76,18 @@ pub fn start_engine(
     let (tx, rx) = mpsc::channel::<Job>();
     let (ready_tx, ready_rx) = mpsc::sync_channel::<Result<String, String>>(1);
     let controller = if cfg.adaptive {
-        Some(Arc::new(Mutex::new(GammaController::new(
-            cfg.adaptive_cfg,
-            cfg.gamma,
-            cfg.sigma,
-        ))))
+        let mut ctrl = GammaController::new(cfg.adaptive_cfg, cfg.gamma, cfg.sigma);
+        // Tag the telemetry with the server's default source: the c this
+        // controller measures (and the γ it recommends) is per-source.
+        ctrl.set_draft_kind(cfg.draft.kind.as_str());
+        Some(Arc::new(Mutex::new(ctrl)))
     } else {
         None
     };
     let m2 = metrics.clone();
     let mon2 = monitor.clone();
     let ctrl2 = controller.clone();
+    let draft_kind = cfg.draft.kind;
     let handle = std::thread::Builder::new()
         .name("stride-engine".into())
         .spawn(move || engine_main(cfg, rx, ready_tx, m2, mon2, ctrl2, stop))
@@ -88,7 +96,7 @@ pub fn start_engine(
         Ok(desc) => log::info!("engine ready: {desc}"),
         Err(e) => anyhow::bail!("engine startup failed: {e}"),
     }
-    Ok((BatcherHandle { tx, metrics, monitor, controller }, handle))
+    Ok((BatcherHandle { tx, metrics, monitor, controller, draft: draft_kind }, handle))
 }
 
 fn load_backends(cfg: &ServeConfig) -> Result<(Box<dyn Backend>, Box<dyn Backend>, Manifest)> {
@@ -153,6 +161,12 @@ fn engine_main(
     let _ = draft.forward(&warm, manifest.n_ctx);
 
     let max_wait = Duration::from_millis(cfg.max_wait_ms);
+    // Learned draft-source state carried across decode groups (engine
+    // thread only, no locking): learning kinds export their parameter
+    // snapshot after each group and the next group's fresh sources are
+    // seeded with it — online adaptation survives across requests
+    // instead of cold-starting per batch.
+    let mut draft_heads: BTreeMap<DraftKind, Vec<f32>> = BTreeMap::new();
     loop {
         // Block for the first job (with timeout so `stop` is honored).
         let first = match rx.recv_timeout(Duration::from_millis(50)) {
@@ -189,6 +203,7 @@ fn engine_main(
             &metrics,
             &monitor,
             controller.as_deref(),
+            &mut draft_heads,
         );
     }
 }
@@ -224,15 +239,16 @@ fn process_batch(
     metrics: &Metrics,
     monitor: &AcceptanceMonitor,
     controller: Option<&Mutex<GammaController>>,
+    draft_heads: &mut BTreeMap<DraftKind, Vec<f32>>,
 ) {
-    // Partition: SD jobs grouped by (gamma, sigma-bits, cache, adaptive)
-    // so overrides batch together — a decode group shares one session
-    // pool, one cost model, and one adaptation mode; baseline/draft jobs
-    // run individually. Adaptive jobs take the live controller's current
-    // recommendation as their γ key, so they *regroup automatically* as
-    // the controller drifts — the γ in the key is also the γ that seeds
-    // the group's per-sequence controllers.
-    let mut sd_groups: BTreeMap<(usize, u64, bool, bool), Vec<Job>> = BTreeMap::new();
+    // Partition: SD jobs grouped by (gamma, sigma-bits, cache, adaptive,
+    // draft-kind) so overrides batch together — a decode group shares one
+    // session pool, one draft source, one cost model, and one adaptation
+    // mode; baseline/draft jobs run individually. Adaptive jobs take the
+    // live controller's current recommendation as their γ key, so they
+    // *regroup automatically* as the controller drifts — the γ in the key
+    // is also the γ that seeds the group's per-sequence controllers.
+    let mut sd_groups: BTreeMap<(usize, u64, bool, bool, DraftKind), Vec<Job>> = BTreeMap::new();
     let mut singles: Vec<Job> = Vec::new();
     let base_spec = cfg.spec_config();
 
@@ -252,11 +268,31 @@ fn process_batch(
                     ));
                     continue;
                 }
+                let draft_kind = job.req.draft.unwrap_or(cfg.draft.kind);
+                // The long-lived controller's α̂/c telemetry is
+                // per-source: rounds from a different draft kind would
+                // contaminate the estimates the default kind's γ is
+                // tuned from (an extrap group's c ≈ 0 would peg γ at
+                // max for everyone). Jobs overriding the draft kind
+                // cannot ride the controller — reject an explicit ask,
+                // and run implicitly-adaptive overrides on the static
+                // path.
+                if job.req.adaptive == Some(true) && draft_kind != cfg.draft.kind {
+                    metrics.errors_total.fetch_add(1, Ordering::Relaxed);
+                    let _ = job.reply.send(Err(format!(
+                        "adaptive speculation rides the server's long-lived \
+                         controller, which is tuned for draft '{}'; drop the \
+                         per-request draft override or the adaptive flag",
+                        cfg.draft.kind.as_str()
+                    )));
+                    continue;
+                }
                 // An explicit per-request gamma always pins the job to
                 // the static path: a pinned request is a pinned request.
                 let adaptive = controller.is_some()
                     && job.req.adaptive.unwrap_or(cfg.adaptive)
-                    && job.req.gamma.is_none();
+                    && job.req.gamma.is_none()
+                    && draft_kind == cfg.draft.kind;
                 let gamma = if adaptive {
                     let ctrl = controller.unwrap().lock().unwrap();
                     ctrl.gamma_for(manifest.n_ctx)
@@ -266,7 +302,7 @@ fn process_batch(
                 let sigma = job.req.sigma.unwrap_or(cfg.sigma);
                 let cache = job.req.cache.unwrap_or(cfg.cache);
                 sd_groups
-                    .entry((gamma, sigma.to_bits(), cache, adaptive))
+                    .entry((gamma, sigma.to_bits(), cache, adaptive, draft_kind))
                     .or_default()
                     .push(job);
             }
@@ -277,19 +313,20 @@ fn process_batch(
     // Per-group decode seed: reusing one RNG stream across batches would
     // correlate accept/reject coins between requests.
     static DECODE_SEQ: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(0);
-    for ((gamma, sigma_bits, cache, adaptive), group) in sd_groups {
+    for ((gamma, sigma_bits, cache, adaptive, kind), group) in sd_groups {
         let sigma = f64::from_bits(sigma_bits);
         let mut spec = base_spec;
         spec.gamma = gamma;
         spec.policy.sigma = sigma;
         spec.cache = if cache { CacheMode::On } else { CacheMode::Off };
+        spec.draft.kind = kind;
         spec.adaptive = if adaptive { Some(cfg.adaptive_cfg) } else { None };
         spec.seed = spec
             .seed
             .wrapping_add(DECODE_SEQ.fetch_add(1, Ordering::Relaxed))
             .wrapping_mul(0x9E37_79B9_7F4A_7C15);
         let ctrl = if adaptive { controller } else { None };
-        run_sd_group(manifest, target, draft, group, &spec, metrics, monitor, ctrl);
+        run_sd_group(manifest, target, draft, group, &spec, metrics, monitor, ctrl, draft_heads);
     }
     for job in singles {
         run_single(cfg, manifest, target, draft, job, metrics);
@@ -306,6 +343,7 @@ fn run_sd_group(
     metrics: &Metrics,
     monitor: &AcceptanceMonitor,
     controller: Option<&Mutex<GammaController>>,
+    draft_heads: &mut BTreeMap<DraftKind, Vec<f32>>,
 ) {
     // Validate all; drop invalid with error replies.
     let mut ok_jobs = Vec::new();
@@ -327,9 +365,31 @@ fn run_sd_group(
     }
     let tasks: Vec<(&[f32], usize, usize)> =
         preps.iter().map(|(h, n, hz)| (h.as_slice(), *n, *hz)).collect();
+    // Build the group's draft source explicitly so learned state can be
+    // threaded across groups: seed fresh sources with the last exported
+    // head of this kind, export back after the decode.
+    let mut source = match make_batch_source(&spec.draft, draft) {
+        Ok(s) => s,
+        Err(e) => {
+            for job in ok_jobs {
+                metrics.errors_total.fetch_add(1, Ordering::Relaxed);
+                let _ = job.reply.send(Err(format!("draft source failed: {e:#}")));
+            }
+            return;
+        }
+    };
+    if let Some(h) = draft_heads.get(&spec.draft.kind) {
+        if let Err(e) = source.import_head(h) {
+            log::warn!("stale draft head discarded: {e:#}");
+            draft_heads.remove(&spec.draft.kind);
+        }
+    }
     let t0 = Instant::now();
-    match sd_generate_batch(target, draft, &tasks, spec) {
+    match sd_generate_stream_from(target, source.as_mut(), &tasks, usize::MAX, spec) {
         Ok(outs) => {
+            if let Some(h) = source.export_head() {
+                draft_heads.insert(spec.draft.kind, h);
+            }
             let batch_wall = t0.elapsed();
             // Feed the finished group back into the server's long-lived
             // controller: every round (including rejected ones) updates
@@ -350,6 +410,20 @@ fn run_sd_group(
                 metrics.set_gauge("controller_rounds", s.rounds as f64);
                 metrics.set_gauge("controller_gamma_changes", s.gamma_changes as f64);
             }
+            // Per-draft-source serving aggregates: which source kinds are
+            // live, their acceptance α̂, their measured cost ratio c, and
+            // (for learning sources) how many online updates they apply.
+            // α̂/c fold as EWMAs so the gauges track traffic rather than
+            // echoing the last group; decode/update counts are monotone.
+            let kind = spec.draft.kind.as_str();
+            let mut agg = DecodeStats::default();
+            for out in &outs {
+                agg.merge(&out.stats);
+            }
+            metrics.inc(&format!("draft_{kind}_decodes"), outs.len() as u64);
+            metrics.inc(&format!("draft_{kind}_updates"), agg.draft_updates as u64);
+            metrics.ewma_gauge(&format!("draft_{kind}_alpha_hat"), agg.alpha_hat(), 0.8);
+            metrics.ewma_gauge(&format!("draft_{kind}_c"), agg.cost_ratio(), 0.8);
             for (job, out) in ok_jobs.into_iter().zip(outs) {
                 let latency = job.enqueued.elapsed();
                 metrics.observe("request_latency", latency);
@@ -362,6 +436,7 @@ fn run_sd_group(
                 let resp = ForecastResponse {
                     forecast: out.patches,
                     mode: "sd".into(),
+                    draft: spec.draft.kind.as_str().into(),
                     latency_ms: latency.as_secs_f64() * 1e3,
                     alpha_hat: alpha,
                     mean_block_len: out.stats.mean_block_len(),
@@ -406,6 +481,9 @@ fn run_single(
         Ok(ForecastResponse {
             forecast: pred,
             mode: if job.req.mode == Mode::DraftOnly { "draft" } else { "baseline" }.into(),
+            // AR modes draft nothing; the field names the proposal source
+            // of SD decodes only.
+            draft: String::new(),
             latency_ms: latency.as_secs_f64() * 1e3,
             alpha_hat: f64::NAN,
             mean_block_len: f64::NAN,

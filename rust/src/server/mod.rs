@@ -5,8 +5,10 @@
 //! * `GET  /healthz`  — liveness + version.
 //! * `GET  /metrics`  — Prometheus-style metrics text.
 //! * `GET  /stats`    — JSON snapshot (acceptance monitor, latency
-//!   quantiles, and — when adaptive speculation is on — the live
-//!   controller state: current γ, α̂, measured c, change counts).
+//!   quantiles, per-draft-source aggregates — α̂, measured c, online
+//!   update counts per served source kind — and, when adaptive
+//!   speculation is on, the live controller state: current γ, α̂,
+//!   measured c, change counts, tagged draft kind).
 //!
 //! The router validates and parses on HTTP worker threads; all model work
 //! happens on the single engine thread behind the batcher (PJRT state is
@@ -101,6 +103,7 @@ fn route(req: &Request, handle: &BatcherHandle) -> Response {
                 Some(ctrl) => {
                     let s = ctrl.lock().unwrap().state();
                     Json::obj(vec![
+                        ("draft", Json::from(s.draft)),
                         ("gamma", Json::from(s.gamma)),
                         ("sigma", finite_or_null(s.sigma)),
                         ("alpha_hat", finite_or_null(s.alpha_hat)),
@@ -113,6 +116,44 @@ fn route(req: &Request, handle: &BatcherHandle) -> Response {
                 }
                 None => Json::Null,
             };
+            // Per-draft-source aggregates: one entry per source kind that
+            // has actually served decodes (the serving-side view of the
+            // pluggable-draft subsystem — α̂, measured c, online-update
+            // and decode counts, from the stride_draft_* gauges).
+            let mut sources = Vec::new();
+            for kind in crate::specdec::DraftKind::all() {
+                let k = kind.as_str();
+                let decodes = m.counter(&format!("draft_{k}_decodes"));
+                if decodes == 0 {
+                    continue;
+                }
+                sources.push((
+                    k,
+                    Json::obj(vec![
+                        ("decodes", Json::from(decodes as usize)),
+                        (
+                            "alpha_hat",
+                            m.gauge(&format!("draft_{k}_alpha_hat"))
+                                .map(Json::Num)
+                                .unwrap_or(Json::Null),
+                        ),
+                        (
+                            "c",
+                            m.gauge(&format!("draft_{k}_c"))
+                                .map(Json::Num)
+                                .unwrap_or(Json::Null),
+                        ),
+                        (
+                            "updates",
+                            Json::from(m.counter(&format!("draft_{k}_updates")) as usize),
+                        ),
+                    ]),
+                ));
+            }
+            let draft = Json::obj(vec![
+                ("default", Json::from(handle.draft.as_str())),
+                ("sources", Json::obj(sources)),
+            ]);
             let j = Json::obj(vec![
                 ("requests", Json::from(m.requests_total.load(Ordering::Relaxed) as usize)),
                 ("patches", Json::from(m.patches_total.load(Ordering::Relaxed) as usize)),
@@ -121,6 +162,7 @@ fn route(req: &Request, handle: &BatcherHandle) -> Response {
                 ("acceptance_degraded", Json::from(mon.degraded())),
                 ("adaptive", Json::from(handle.controller.is_some())),
                 ("controller", controller),
+                ("draft", draft),
                 ("latency_p50_ms", Json::Num(m.quantile_ms("request_latency", 0.5))),
                 ("latency_p95_ms", Json::Num(m.quantile_ms("request_latency", 0.95))),
                 ("latency_p99_ms", Json::Num(m.quantile_ms("request_latency", 0.99))),

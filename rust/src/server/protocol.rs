@@ -3,14 +3,16 @@
 //! POST /forecast
 //!   {"history": [f32...], "horizon": <patches>, "gamma"?: n, "sigma"?: x,
 //!    "mode"?: "sd" | "baseline" | "draft", "dataset"?: "etth1",
-//!    "cache"?: true|false, "adaptive"?: true|false}
+//!    "cache"?: true|false, "adaptive"?: true|false,
+//!    "draft"?: "model" | "extrap" | "adaptive"}
 //! ->
-//!   {"forecast": [f32...], "mode": "...", "latency_ms": x,
-//!    "alpha_hat": x, "mean_block_len": x, "rounds": n,
+//!   {"forecast": [f32...], "mode": "...", "draft": "...",
+//!    "latency_ms": x, "alpha_hat": x, "mean_block_len": x, "rounds": n,
 //!    "draft_calls": n, "target_calls": n}
 
 use anyhow::{bail, Context, Result};
 
+use crate::specdec::DraftKind;
 use crate::util::json::Json;
 
 /// Decoding mode of one forecast request.
@@ -57,6 +59,15 @@ pub struct ForecastRequest {
     /// γ. An explicit `gamma` always wins over adaptation — a pinned
     /// request is a pinned request.
     pub adaptive: Option<bool>,
+    /// Per-request draft-source override (None = server config):
+    /// `"model"` pins the classic two-model draft, `"extrap"` the
+    /// draft-free continuation, `"adaptive"` the online-learned head.
+    /// SD jobs group by draft kind, so mixed traffic batches cleanly.
+    /// Overriding the kind routes the job to the *static*-γ path: the
+    /// server's long-lived γ controller is tuned per-source, so an
+    /// explicit `"adaptive": true` combined with a different kind is
+    /// rejected rather than cross-contaminating its c/α̂ estimates.
+    pub draft: Option<DraftKind>,
     /// Traffic-segment tag for acceptance monitoring (paper §7).
     pub dataset: Option<String>,
 }
@@ -96,6 +107,13 @@ impl ForecastRequest {
                 bail!("'sigma' must be in (0, 100)");
             }
         }
+        let draft = match j.get("draft").and_then(Json::as_str) {
+            None => None,
+            Some(s) => Some(
+                DraftKind::parse(s)
+                    .with_context(|| format!("unknown draft kind '{s}' (model|extrap|adaptive)"))?,
+            ),
+        };
         Ok(ForecastRequest {
             history,
             horizon,
@@ -104,6 +122,7 @@ impl ForecastRequest {
             sigma,
             cache: j.get("cache").and_then(Json::as_bool),
             adaptive: j.get("adaptive").and_then(Json::as_bool),
+            draft,
             dataset: j.get("dataset").and_then(Json::as_str).map(String::from),
         })
     }
@@ -116,6 +135,9 @@ pub struct ForecastResponse {
     pub forecast: Vec<f32>,
     /// Mode actually served (`"sd"` / `"baseline"` / `"draft"`).
     pub mode: String,
+    /// Draft source that produced the proposals (`"model"` / `"extrap"`
+    /// / `"adaptive"`; empty for the AR modes, which draft nothing).
+    pub draft: String,
     /// End-to-end request latency in milliseconds.
     pub latency_ms: f64,
     /// Mean acceptance probability of this decode (NaN for AR modes).
@@ -143,6 +165,7 @@ impl ForecastResponse {
         Json::obj(vec![
             ("forecast", Json::arr_f32(&self.forecast)),
             ("mode", Json::from(self.mode.as_str())),
+            ("draft", Json::from(self.draft.as_str())),
             ("latency_ms", num(self.latency_ms)),
             ("alpha_hat", num(self.alpha_hat)),
             ("mean_block_len", num(self.mean_block_len)),
@@ -179,6 +202,17 @@ mod tests {
         assert_eq!(r.gamma, Some(5));
         assert_eq!(r.dataset.as_deref(), Some("etth1"));
         assert_eq!(r.adaptive, None);
+        assert_eq!(r.draft, None);
+    }
+
+    #[test]
+    fn parses_draft_override() {
+        let j = Json::parse(r#"{"history": [0.5], "horizon": 2, "draft": "extrap"}"#).unwrap();
+        assert_eq!(ForecastRequest::from_json(&j).unwrap().draft, Some(DraftKind::Extrap));
+        let j = Json::parse(r#"{"history": [0.5], "horizon": 2, "draft": "adaptive"}"#).unwrap();
+        assert_eq!(ForecastRequest::from_json(&j).unwrap().draft, Some(DraftKind::Adaptive));
+        let j = Json::parse(r#"{"history": [0.5], "horizon": 2, "draft": "warp"}"#).unwrap();
+        assert!(ForecastRequest::from_json(&j).is_err());
     }
 
     #[test]
@@ -210,6 +244,7 @@ mod tests {
         let resp = ForecastResponse {
             forecast: vec![1.0, 2.0],
             mode: "sd".into(),
+            draft: "model".into(),
             latency_ms: 3.5,
             alpha_hat: 0.97,
             mean_block_len: 3.4,
@@ -220,6 +255,7 @@ mod tests {
         let j = resp.to_json();
         let parsed = Json::parse(&j.to_string()).unwrap();
         assert_eq!(parsed.get("mode").unwrap().as_str(), Some("sd"));
+        assert_eq!(parsed.get("draft").unwrap().as_str(), Some("model"));
         assert_eq!(parsed.get("rounds").unwrap().as_usize(), Some(2));
         assert_eq!(parsed.get("forecast").unwrap().as_arr().unwrap().len(), 2);
     }

@@ -2,16 +2,19 @@
 //! lockstep rounds sharing the model forwards (the paper's batch=64/128
 //! rows in Table 1, and the serving batcher's execution mode).
 //!
-//! Per round: γ *batched* draft extends propose one patch per sequence
-//! each, then one batched target extend validates every sequence's γ+1
-//! prefix conditionals. Sequences accept/reject independently, so each
-//! sequence's session is rolled back by its own rejected-suffix length —
-//! with the KV cache on, that is a per-sequence cache truncation instead
-//! of a context rebuild. With the cache off the sessions fall back to
-//! left-aligned zero-padded batched re-forwards (causality makes tail
-//! padding inert), the exact execution shape of the stateless decoder.
-//! Finished sequences drop out of the advancing set; queued tasks take
-//! their slots immediately (continuous batching, paper §5.5).
+//! Per round: one batched [`BatchDraftSource::propose`] produces γ
+//! proposals per sequence (for the model-backed source that is γ batched
+//! draft extends, exactly the pre-refactor execution; draft-free sources
+//! run their closed-form/learned heads per sequence), then one batched
+//! target extend validates every sequence's γ+1 prefix conditionals.
+//! Sequences accept/reject independently, so each sequence's state is
+//! rolled back by its own rejected-suffix length — with the KV cache on,
+//! that is a per-sequence cache truncation instead of a context rebuild.
+//! With the cache off the sessions fall back to left-aligned zero-padded
+//! batched re-forwards (causality makes tail padding inert), the exact
+//! execution shape of the stateless decoder. Finished sequences drop out
+//! of the advancing set; queued tasks take their slots immediately
+//! (continuous batching, paper §5.5).
 //!
 //! Wall-clock shape: on the native backend the batched `extend` calls
 //! below (draft proposals and the target verify) fan their per-sequence
@@ -29,6 +32,7 @@ use std::time::Instant;
 use anyhow::Result;
 
 use super::controller::GammaController;
+use super::draft::{make_batch_source, BatchDraftSource, RoundFeedback};
 use super::engine::{Emission, SpecConfig, Variant};
 use super::stats::{DecodeOutput, DecodeStats, RoundStats};
 use crate::models::{begin_batch_session, Backend};
@@ -38,7 +42,6 @@ struct SeqState {
     out: Vec<f32>,
     horizon: usize,
     emitted: usize,
-    rng: Rng,
     rounds: Vec<RoundStats>,
     stats: DecodeStats,
     /// Per-sequence adaptive controller (present iff `cfg.adaptive`).
@@ -57,7 +60,8 @@ impl SeqState {
 }
 
 /// Decode a batch of (history, n_hist, horizon) tasks in one lockstep
-/// group; returns one [`DecodeOutput`] per task, in order.
+/// group; returns one [`DecodeOutput`] per task, in order. The draft
+/// side is built from [`SpecConfig::draft`] (see [`super::draft`]).
 pub fn sd_generate_batch(
     target: &dyn Backend,
     draft: &dyn Backend,
@@ -79,8 +83,23 @@ pub fn sd_generate_stream(
     max_active: usize,
     cfg: &SpecConfig,
 ) -> Result<Vec<DecodeOutput>> {
+    anyhow::ensure!(target.patch() == draft.patch(), "patch mismatch");
+    let mut source = make_batch_source(&cfg.draft, draft)?;
+    sd_generate_stream_from(target, source.as_mut(), tasks, max_active, cfg)
+}
+
+/// [`sd_generate_stream`] over a caller-owned [`BatchDraftSource`]
+/// (learned per-sequence state persists across calls when the caller
+/// keeps the source alive).
+pub fn sd_generate_stream_from(
+    target: &dyn Backend,
+    source: &mut dyn BatchDraftSource,
+    tasks: &[(&[f32], usize, usize)],
+    max_active: usize,
+    cfg: &SpecConfig,
+) -> Result<Vec<DecodeOutput>> {
     let p = target.patch();
-    anyhow::ensure!(p == draft.patch(), "patch mismatch");
+    anyhow::ensure!(p == source.patch(), "patch mismatch");
     anyhow::ensure!(cfg.gamma >= 1);
     if cfg.variant == Variant::Lossless {
         anyhow::ensure!((cfg.policy.bias - 1.0).abs() < 1e-12, "lossless requires bias=1");
@@ -94,23 +113,58 @@ pub fn sd_generate_stream(
              batch share one acceptance policy); use gamma-only adaptation here"
         );
     }
-    let max_ctx = target.max_ctx().min(draft.max_ctx());
+    let max_ctx = target.max_ctx().min(source.max_ctx());
+    // The same config-vs-backend check the single-stream engine runs up
+    // front (the max_ctx footgun fix): never start a decode whose opening
+    // γ can only blow up at the first window slide.
+    anyhow::ensure!(
+        cfg.gamma + 1 < max_ctx,
+        "gamma {} cannot fit the joint context window: a round appends \
+         gamma + 1 patches and must keep at least one context patch \
+         (target max_ctx {}, draft max_ctx {}) — lower gamma or raise \
+         the binding side's context",
+        cfg.gamma,
+        target.max_ctx(),
+        source.max_ctx()
+    );
 
-    // Long-lived per-sequence sessions for both models. Jobs keep these
-    // across all their rounds; rejection rolls back, nothing is rebuilt.
-    let sess_tasks: Vec<(&[f32], usize)> =
-        tasks.iter().map(|(h, n, _)| (*h, *n)).collect();
-    let mut t_bs = begin_batch_session(target, cfg.cache, &sess_tasks)?;
-    let mut d_bs = begin_batch_session(draft, cfg.cache, &sess_tasks)?;
+    // Validate every task before the clamp below slices into it: a short
+    // history must stay the clean "history too short" error it always
+    // was, never a slice panic on the serving engine thread.
+    for (h, n, _) in tasks {
+        anyhow::ensure!(*n >= 1, "session needs at least one history patch");
+        anyhow::ensure!(h.len() >= *n * p, "history too short");
+    }
+    // Clamp every opening history to the joint window so the target
+    // sessions and the draft source stay aligned patch-for-patch even
+    // when their max_ctx differ.
+    let clamped: Vec<(&[f32], usize)> = tasks
+        .iter()
+        .map(|(h, n, _)| {
+            let keep = (*n).min(max_ctx);
+            (&h[(*n - keep) * p..*n * p], keep)
+        })
+        .collect();
 
+    // Long-lived per-sequence target sessions + the draft source. Jobs
+    // keep these across all their rounds; rejection rolls back, nothing
+    // is rebuilt.
+    let mut t_bs = begin_batch_session(target, cfg.cache, &clamped)?;
+    source.begin(&clamped, cfg.cache)?;
+    let upd0: Vec<usize> = (0..tasks.len()).map(|i| source.updates(i)).collect();
+
+    // Per-sequence RNG streams, kept beside (not inside) the sequence
+    // states so the draft source can sample through them while the loop
+    // still mutates `seqs`.
+    let mut rngs: Vec<Rng> = (0..tasks.len())
+        .map(|i| Rng::new(cfg.seed.wrapping_add(i as u64 * 0x9E37_79B9)))
+        .collect();
     let mut seqs: Vec<SeqState> = tasks
         .iter()
-        .enumerate()
-        .map(|(i, (_, _, horizon))| SeqState {
+        .map(|(_, _, horizon)| SeqState {
             out: Vec::with_capacity(horizon * p),
             horizon: *horizon,
             emitted: 0,
-            rng: Rng::new(cfg.seed.wrapping_add(i as u64 * 0x9E37_79B9)),
             rounds: Vec::new(),
             stats: DecodeStats::default(),
             ctrl: cfg
@@ -154,43 +208,28 @@ pub fn sd_generate_stream(
                 anyhow::ensure!(gamma + 1 < max_ctx, "gamma {gamma} cannot fit in max_ctx {max_ctx}");
                 let keep = max_ctx - (gamma + 1);
                 t_bs.evict_to(i, keep)?;
-                d_bs.evict_to(i, keep)?;
+                source.evict_to(i, keep)?;
             }
         }
 
-        // --- Draft: tip means, then gamma-1 batched extends (the last
-        // proposal only feeds target validation, never the draft context).
+        // --- Draft: one batched propose (γ proposals per active
+        // sequence, sampled through the per-sequence RNG streams).
         let t0 = Instant::now();
-        let mut mu_q = d_bs.tip_means(&active)?; // [a, p]
-        let mut draft_time = t0.elapsed();
-        let mut proposals: Vec<Vec<Vec<f32>>> = vec![Vec::new(); a]; // [seq][i][p]
-        let mut mu_qs: Vec<Vec<Vec<f32>>> = vec![Vec::new(); a];
-        for step in 0..gamma {
-            let mut xs = vec![0.0f32; a * p];
-            for (ai, &i) in active.iter().enumerate() {
-                let mq = &mu_q[ai * p..(ai + 1) * p];
-                seqs[i]
-                    .rng
-                    .fill_normal_around(mq, cfg.policy.sigma as f32, &mut xs[ai * p..(ai + 1) * p]);
-                proposals[ai].push(xs[ai * p..(ai + 1) * p].to_vec());
-                mu_qs[ai].push(mq.to_vec());
-            }
-            if step + 1 < gamma {
-                let td = Instant::now();
-                let rows = d_bs.extend(&active, &xs, 1)?; // [a, 2, p]
-                draft_time += td.elapsed();
-                for ai in 0..a {
-                    mu_q[ai * p..(ai + 1) * p]
-                        .copy_from_slice(&rows[ai * 2 * p + p..(ai + 1) * 2 * p]);
-                }
-            }
-        }
+        let blocks = source.propose(&active, gamma, cfg.policy.sigma, &mut rngs)?;
+        let draft_time = t0.elapsed();
+        anyhow::ensure!(blocks.len() == a, "draft source returned {} blocks for {a}", blocks.len());
 
         // --- Target: one batched extend validates every sequence's γ+1
         // prefix conditionals.
         let mut flat = vec![0.0f32; a * gamma * p];
-        for ai in 0..a {
-            for (k, x) in proposals[ai].iter().enumerate() {
+        for (ai, block) in blocks.iter().enumerate() {
+            anyhow::ensure!(
+                block.proposals.len() == gamma && block.mu_qs.len() == gamma,
+                "draft source returned {}/{} proposals/means for gamma {gamma}",
+                block.proposals.len(),
+                block.mu_qs.len()
+            );
+            for (k, x) in block.proposals.iter().enumerate() {
                 flat[ai * gamma * p + k * p..ai * gamma * p + (k + 1) * p].copy_from_slice(x);
             }
         }
@@ -206,6 +245,8 @@ pub fn sd_generate_stream(
             let tpost = Instant::now();
             let base = ai * (gamma + 1) * p;
             let mu_p_at = |k: usize| &val_rows[base + k * p..base + (k + 1) * p];
+            let proposals = &blocks[ai].proposals;
+            let mu_qs = &blocks[ai].mu_qs;
 
             // Per-sequence gamma: a sequence near its horizon (or whose
             // controller wants a shorter block) only consumes the
@@ -217,9 +258,9 @@ pub fn sd_generate_stream(
             let mut accepted = 0usize;
             let mut rejected_at = None;
             for k in 0..g_i {
-                let alpha = cfg.policy.alpha(&proposals[ai][k], mu_p_at(k), &mu_qs[ai][k]);
+                let alpha = cfg.policy.alpha(&proposals[k], mu_p_at(k), &mu_qs[k]);
                 alphas.push(alpha);
-                if alpha >= 1.0 || seqs[i].rng.uniform() < alpha {
+                if alpha >= 1.0 || rngs[i].uniform() < alpha {
                     accepted += 1;
                 } else {
                     rejected_at = Some(k);
@@ -227,29 +268,23 @@ pub fn sd_generate_stream(
                 }
             }
 
-            // Roll this sequence's sessions back to its accepted prefix.
-            let keep_d = accepted.min(gamma - 1);
+            // Roll this sequence's target session back to its accepted
+            // prefix (the source rewinds itself in finish_round below).
             let mut emit: Vec<f32> = Vec::with_capacity((accepted + 1) * p);
             match cfg.emission {
                 Emission::Sampled => {
                     t_bs.rollback(i, gamma - accepted)?;
-                    d_bs.rollback(i, (gamma - 1) - keep_d)?;
-                    if accepted > keep_d {
-                        d_bs.append(i, &proposals[ai][gamma - 1], 1)?;
-                    }
-                    for x in &proposals[ai][..accepted] {
+                    for x in &proposals[..accepted] {
                         emit.extend_from_slice(x);
                     }
                 }
                 Emission::Mean => {
                     t_bs.rollback(i, gamma)?;
-                    d_bs.rollback(i, gamma - 1)?;
-                    for m in &mu_qs[ai][..accepted] {
+                    for m in &mu_qs[..accepted] {
                         emit.extend_from_slice(m);
                     }
                     if accepted > 0 {
                         t_bs.append(i, &emit, accepted)?;
-                        d_bs.append(i, &emit, accepted)?;
                     }
                 }
             }
@@ -261,15 +296,15 @@ pub fn sd_generate_stream(
             };
             let final_patch = match (rejected_at, cfg.variant) {
                 (Some(k), Variant::Lossless) => {
-                    let mu_q = &mu_qs[ai][k];
+                    let mu_q = &mu_qs[k];
                     let sigma = cfg.policy.sigma;
                     let mut z = vec![0.0f32; p];
                     loop {
                         residual_draws += 1;
-                        seqs[i].rng.fill_normal_around(&final_mu, sigma as f32, &mut z);
+                        rngs[i].fill_normal_around(&final_mu, sigma as f32, &mut z);
                         let lqp = crate::gaussian::iso_log_ratio(&z, mu_q, &final_mu, sigma);
                         let pi = 1.0 - lqp.min(0.0).exp();
-                        if seqs[i].rng.uniform() < pi || residual_draws >= cfg.max_residual_draws {
+                        if rngs[i].uniform() < pi || residual_draws >= cfg.max_residual_draws {
                             break;
                         }
                     }
@@ -278,17 +313,32 @@ pub fn sd_generate_stream(
                 _ => match cfg.emission {
                     Emission::Sampled => {
                         let mut z = vec![0.0f32; p];
-                        seqs[i]
-                            .rng
-                            .fill_normal_around(&final_mu, cfg.policy.sigma as f32, &mut z);
+                        rngs[i].fill_normal_around(&final_mu, cfg.policy.sigma as f32, &mut z);
                         z
                     }
                     Emission::Mean => final_mu,
                 },
             };
-            emit.extend_from_slice(&final_patch);
             t_bs.append(i, &final_patch, 1)?;
-            d_bs.append(i, &final_patch, 1)?;
+            let tpost_elapsed = tpost.elapsed();
+
+            // --- Verification feedback to the draft side (draft-cost
+            // work: rollback, commit, online update flush).
+            let tfin = Instant::now();
+            source.finish_round(
+                i,
+                &RoundFeedback {
+                    gamma,
+                    accepted,
+                    alphas: &alphas,
+                    target_means: &val_rows[base..base + (gamma + 1) * p],
+                    committed: &emit,
+                    final_patch: &final_patch,
+                    sampled: cfg.emission == Emission::Sampled,
+                },
+            )?;
+            let fin_elapsed = tfin.elapsed();
+            emit.extend_from_slice(&final_patch);
 
             // accepted <= g_i <= remaining - 1, so take never truncates now;
             // keep the min as a defensive invariant.
@@ -303,8 +353,8 @@ pub fn sd_generate_stream(
                 emitted: take,
                 alphas,
                 residual_draws,
-                draft_time: draft_time / a as u32,
-                target_time: target_time / a as u32 + tpost.elapsed(),
+                draft_time: draft_time / a as u32 + fin_elapsed,
+                target_time: target_time / a as u32 + tpost_elapsed,
             };
             if let Some(c) = &mut seqs[i].ctrl {
                 c.observe_round(&r);
@@ -314,6 +364,9 @@ pub fn sd_generate_stream(
         }
     }
 
+    for (i, s) in seqs.iter_mut().enumerate() {
+        s.stats.draft_updates = source.updates(i).saturating_sub(upd0[i]);
+    }
     Ok(seqs
         .into_iter()
         .map(|s| DecodeOutput { patches: s.out, rounds: s.rounds, stats: s.stats })
@@ -326,6 +379,7 @@ mod tests {
     use crate::accept::AcceptancePolicy;
     use crate::models::{AnalyticBackend, CacheMode, NativeBackend};
     use crate::nn::model::tiny_model;
+    use crate::specdec::draft::DraftConfig;
 
     fn cfg(gamma: usize, sigma: f64, seed: u64) -> SpecConfig {
         SpecConfig {
@@ -336,6 +390,7 @@ mod tests {
             max_residual_draws: 1000,
             emission: Emission::Sampled,
             cache: CacheMode::On,
+            draft: DraftConfig::default(),
             adaptive: None,
         }
     }
@@ -398,6 +453,44 @@ mod tests {
             assert_eq!(o.stats.accepted, o.stats.proposals, "identical heads must accept");
             assert_eq!(o.patches.len(), 6);
             assert!(o.patches.iter().all(|v| v.is_finite()));
+        }
+    }
+
+    #[test]
+    fn short_history_is_a_clean_error_not_a_panic() {
+        let t = AnalyticBackend::new("t", 2, 0.8, 0.1);
+        let d = AnalyticBackend::new("d", 2, 0.75, 0.1);
+        let short = vec![0.5f32]; // 1 value, claims 2 patches of size 2
+        let tasks: Vec<(&[f32], usize, usize)> = vec![(&short, 2, 4)];
+        let err = sd_generate_batch(&t, &d, &tasks, &cfg(2, 0.5, 1)).unwrap_err();
+        assert!(format!("{err:#}").contains("history too short"), "{err:#}");
+        let zero: Vec<(&[f32], usize, usize)> = vec![(&short, 0, 4)];
+        assert!(sd_generate_batch(&t, &d, &zero, &cfg(2, 0.5, 1)).is_err());
+    }
+
+    #[test]
+    fn draft_free_batch_sources_emit_exact_horizons() {
+        use crate::specdec::draft::DraftKind;
+        let t = AnalyticBackend::new("t", 2, 0.8, 0.1);
+        let d = AnalyticBackend::new("d", 2, 0.75, 0.1); // patch size only
+        let h1 = vec![0.5f32, -0.5, 0.2, 0.4];
+        let h2 = vec![1.0f32, 0.0];
+        let tasks: Vec<(&[f32], usize, usize)> = vec![(&h1, 2, 7), (&h2, 1, 11)];
+        for kind in [DraftKind::Extrap, DraftKind::Adaptive] {
+            let mut c = cfg(3, 0.5, 5);
+            c.draft.kind = kind;
+            let outs = sd_generate_batch(&t, &d, &tasks, &c).unwrap();
+            assert_eq!(outs[0].patches.len(), 7 * 2, "{kind:?}");
+            assert_eq!(outs[1].patches.len(), 11 * 2, "{kind:?}");
+            for o in &outs {
+                assert!(o.patches.iter().all(|v| v.is_finite()));
+            }
+            if kind == DraftKind::Adaptive {
+                assert!(
+                    outs.iter().any(|o| o.stats.draft_updates > 0),
+                    "adaptive batch sources never updated"
+                );
+            }
         }
     }
 

@@ -166,6 +166,11 @@ impl AdaptiveConfig {
 /// endpoint.
 #[derive(Clone, Copy, Debug)]
 pub struct ControllerState {
+    /// Wire name of the draft source this controller's telemetry comes
+    /// from (`"model"` unless tagged via
+    /// [`GammaController::set_draft_kind`]) — serving observability for
+    /// the pluggable-draft subsystem.
+    pub draft: &'static str,
     /// Current recommended γ (before per-round context clamping).
     pub gamma: usize,
     /// Current acceptance width σ (equals σ₀ unless σ adaptation ran).
@@ -197,6 +202,7 @@ pub struct ControllerState {
 #[derive(Clone, Debug)]
 pub struct GammaController {
     cfg: AdaptiveConfig,
+    draft_kind: &'static str,
     gamma: usize,
     sigma: f64,
     sigma_min: f64,
@@ -229,6 +235,7 @@ impl GammaController {
         let gamma_max = cfg.max_gamma.max(cfg.min_gamma);
         GammaController {
             cfg,
+            draft_kind: "model",
             gamma: gamma0.clamp(cfg.min_gamma, gamma_max),
             sigma: sigma0.clamp(sigma_min, sigma_max),
             sigma_min,
@@ -246,6 +253,21 @@ impl GammaController {
     /// The configuration this controller runs with.
     pub fn config(&self) -> &AdaptiveConfig {
         &self.cfg
+    }
+
+    /// Tag the controller with the draft-source kind feeding its
+    /// telemetry (serving observability; `"model"` by default). The c it
+    /// measures — and therefore the γ it recommends — is per-source, so
+    /// surfacing the source alongside the estimates keeps `/stats`
+    /// interpretable when the server switches drafts.
+    pub fn set_draft_kind(&mut self, kind: &'static str) {
+        self.draft_kind = kind;
+    }
+
+    /// The tagged draft-source kind (see
+    /// [`GammaController::set_draft_kind`]).
+    pub fn draft_kind(&self) -> &'static str {
+        self.draft_kind
     }
 
     /// Current recommended γ, unclamped (use [`GammaController::gamma_for`]
@@ -284,6 +306,7 @@ impl GammaController {
     /// Snapshot for metrics / the stats endpoint.
     pub fn state(&self) -> ControllerState {
         ControllerState {
+            draft: self.draft_kind,
             gamma: self.gamma,
             sigma: self.sigma,
             alpha_hat: self.alpha_hat,
@@ -314,11 +337,16 @@ impl GammaController {
             self.proposals += 1;
         }
         // Per-round cost-ratio EWMA from the round's own timers: γ draft
-        // extends against one target validation pass.
+        // extends against one target validation pass. A draft-free source
+        // (closed-form extrapolation) can legitimately measure *zero*
+        // draft time at clock resolution — that is a real observation of
+        // c ≈ 0, the Eq. 5 best case, and must feed the estimator (the
+        // old `dt > 0` guard would have frozen c at NaN and disabled
+        // retuning exactly for the cheapest drafts).
         if !self.cfg.c_override.is_finite() {
             let dt = r.draft_time.as_secs_f64() / r.gamma as f64;
             let tt = r.target_time.as_secs_f64();
-            if dt > 0.0 && tt > 0.0 {
+            if tt > 0.0 {
                 let c_round = dt / tt;
                 self.c_meas = if self.c_meas.is_finite() {
                     lam * self.c_meas + (1.0 - lam) * c_round
@@ -339,8 +367,11 @@ impl GammaController {
         if self.rounds < self.cfg.warmup || self.since_change < self.cfg.dwell {
             return;
         }
+        // c >= 0: a measured zero (free draft) is a legal operating point
+        // — the curve then favors the γ cap; only "no measurement yet"
+        // (NaN) blocks retuning.
         let c = self.c();
-        if !(c.is_finite() && c > 0.0) {
+        if !(c.is_finite() && c >= 0.0) {
             return;
         }
         let a = self.alpha_hat.clamp(0.0, 1.0);
@@ -556,6 +587,40 @@ mod tests {
             ctrl.observe_round(&round(3, 3, vec![0.9, 0.9, 0.9]));
         }
         assert!((ctrl.c() - 0.1).abs() < 1e-9, "c {}", ctrl.c());
+    }
+
+    #[test]
+    fn zero_cost_draft_measures_c_zero_and_maxes_gamma() {
+        // A draft-free source can measure literally zero draft time per
+        // round; that is a genuine observation of c = 0 (the Eq. 5 best
+        // case) and must drive gamma to its cap, not freeze the
+        // controller at "no measurement".
+        let mut cfg = fast_cfg();
+        cfg.c_override = f64::NAN;
+        let mut ctrl = GammaController::new(cfg, 2, 0.5);
+        for _ in 0..50 {
+            let g = ctrl.gamma();
+            ctrl.observe_round(&RoundStats {
+                gamma: g,
+                accepted: g,
+                emitted: g + 1,
+                alphas: vec![0.95; g],
+                residual_draws: 0,
+                draft_time: Duration::ZERO,
+                target_time: Duration::from_micros(50),
+            });
+        }
+        assert_eq!(ctrl.c(), 0.0, "zero draft time must measure c = 0");
+        assert_eq!(ctrl.gamma(), ctrl.config().max_gamma, "free draft should max gamma");
+    }
+
+    #[test]
+    fn draft_kind_tag_defaults_and_sets() {
+        let mut ctrl = GammaController::new(fast_cfg(), 3, 0.5);
+        assert_eq!(ctrl.state().draft, "model");
+        ctrl.set_draft_kind("extrap");
+        assert_eq!(ctrl.draft_kind(), "extrap");
+        assert_eq!(ctrl.state().draft, "extrap");
     }
 
     #[test]

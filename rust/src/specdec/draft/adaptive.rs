@@ -1,0 +1,368 @@
+//! Online-adapted draft: a lightweight residual head fitted to the
+//! target's verification outputs, round by round.
+//!
+//! Online Speculative Decoding (Liu et al.) showed the draft should
+//! *learn from verification*: every speculative round already pays for a
+//! target pass over all γ+1 prefix conditionals, so the target's means at
+//! those positions are free training signal. This source predicts
+//!
+//! ```text
+//! mu_q(next) = x_last + R · [x_last; 1]
+//! ```
+//!
+//! — naive persistence plus a learned linear residual `R ∈ R^{p×(p+1)}`,
+//! updated by normalized LMS against the observed target means. `R`
+//! opens at zero (a pure naive-persistence draft) and converges to the
+//! target's local linear response; under regime drift it re-converges
+//! within a handful of rounds, pulling the acceptance rate α back up with
+//! **zero extra target forwards** — the knob the adaptive γ controller
+//! measures drift with but cannot itself turn.
+//!
+//! Update discipline ("pause/flush on rollback"): features are captured
+//! while proposals are in flight, but the NLMS step runs only in
+//! [`DraftSource::finish_round`], *after* the engine has resolved the
+//! acceptance scan and rolled the rejected suffix back — the head trains
+//! exclusively on positions the target actually validated (accepted
+//! prefix + the rejection point + the bonus position), never on patches
+//! that silently left the sequence. Updates are deterministic: same
+//! seed, same stream → the same head, bit for bit (pinned by the
+//! proptest invariants in `tests/draft_equivalence.rs`).
+
+use anyhow::Result;
+
+use super::{DraftKind, DraftSource, ProposalBlock, RoundFeedback};
+use crate::models::CacheMode;
+use crate::util::rng::Rng;
+
+/// Online-learned residual draft head (see module docs). Per-decode
+/// context state resets at [`DraftSource::begin`]; the learned residual
+/// head `R` persists — that is what makes a long-lived source adapt
+/// across a request stream.
+pub struct AdaptiveResidualDraft {
+    patch: usize,
+    /// NLMS step size in (0, 2).
+    eta: f32,
+    /// Residual head, row-major `[patch, patch + 1]` (last column is the
+    /// bias term).
+    r: Vec<f32>,
+    /// Committed context, flat `[len, patch]`.
+    ctx: Vec<f32>,
+    /// Features captured during the in-flight round, one `[patch + 1]`
+    /// vector per validated position `0 ..= γ` (position i's feature is
+    /// the patch the target conditioned on last when predicting i).
+    feats: Vec<Vec<f32>>,
+    updates: usize,
+}
+
+impl AdaptiveResidualDraft {
+    /// Fresh head (R = 0 → naive persistence) over `patch`-sized tokens
+    /// with NLMS rate `eta`.
+    pub fn new(patch: usize, eta: f32) -> AdaptiveResidualDraft {
+        assert!(patch >= 1, "patch must be >= 1");
+        assert!(eta > 0.0 && eta < 2.0, "eta must be in (0, 2)");
+        AdaptiveResidualDraft {
+            patch,
+            eta,
+            r: vec![0.0; patch * (patch + 1)],
+            ctx: Vec::new(),
+            feats: Vec::new(),
+            updates: 0,
+        }
+    }
+
+    /// The learned residual head, row-major `[patch, patch + 1]`
+    /// (introspection for tests and determinism checks).
+    pub fn head(&self) -> &[f32] {
+        &self.r
+    }
+
+    /// Feature vector for predicting the patch after `last`: `[last; 1]`.
+    fn features(last: &[f32]) -> Vec<f32> {
+        let mut u = last.to_vec();
+        u.push(1.0);
+        u
+    }
+
+    /// Head prediction given a feature vector: persistence + residual.
+    fn predict(&self, u: &[f32]) -> Vec<f32> {
+        let p = self.patch;
+        let f = p + 1;
+        (0..p)
+            .map(|j| {
+                let row = &self.r[j * f..(j + 1) * f];
+                let resid: f32 = row.iter().zip(u).map(|(w, v)| w * v).sum();
+                u[j] + resid
+            })
+            .collect()
+    }
+
+    /// One NLMS step toward `target` on feature `u`.
+    fn learn(&mut self, u: &[f32], target: &[f32]) {
+        let p = self.patch;
+        let f = p + 1;
+        let pred = self.predict(u);
+        let norm: f32 = u.iter().map(|v| v * v).sum::<f32>() + 1e-6;
+        let g = self.eta / norm;
+        for j in 0..p {
+            let e = target[j] - pred[j];
+            let row = &mut self.r[j * f..(j + 1) * f];
+            for (w, v) in row.iter_mut().zip(u) {
+                *w += g * e * v;
+            }
+        }
+        self.updates += 1;
+    }
+}
+
+impl DraftSource for AdaptiveResidualDraft {
+    fn kind(&self) -> DraftKind {
+        DraftKind::Adaptive
+    }
+    fn patch(&self) -> usize {
+        self.patch
+    }
+    fn begin(&mut self, history: &[f32], n_hist: usize, _cache: CacheMode) -> Result<()> {
+        let p = self.patch;
+        anyhow::ensure!(n_hist >= 1, "source needs at least one history patch");
+        anyhow::ensure!(history.len() >= n_hist * p, "history too short");
+        self.ctx.clear();
+        self.ctx.extend_from_slice(&history[..n_hist * p]);
+        self.feats.clear();
+        Ok(())
+    }
+    fn len(&self) -> usize {
+        self.ctx.len() / self.patch
+    }
+    fn max_ctx(&self) -> usize {
+        usize::MAX
+    }
+    fn context(&self) -> &[f32] {
+        &self.ctx
+    }
+
+    fn propose(&mut self, gamma: usize, sigma: f64, rng: &mut Rng) -> Result<ProposalBlock> {
+        let p = self.patch;
+        anyhow::ensure!(!self.ctx.is_empty(), "propose before begin()");
+        let mut proposals = Vec::with_capacity(gamma);
+        let mut mu_qs = Vec::with_capacity(gamma);
+        self.feats.clear();
+        // Position i conditions on the previous patch: the context tip
+        // for i = 0, proposal i-1 after. The same features feed the
+        // eventual NLMS update — they are exactly what the target
+        // conditioned on last during validation (the proposals *were*
+        // extended into the target session).
+        let mut last = self.ctx[self.ctx.len() - p..].to_vec();
+        for _ in 0..gamma {
+            let u = Self::features(&last);
+            let mu = self.predict(&u);
+            self.feats.push(u);
+            let mut x = vec![0.0f32; p];
+            rng.fill_normal_around(&mu, sigma as f32, &mut x);
+            last = x.clone();
+            proposals.push(x);
+            mu_qs.push(mu);
+        }
+        // The bonus position γ conditions on proposal γ-1.
+        self.feats.push(Self::features(&last));
+        Ok(ProposalBlock { proposals, mu_qs })
+    }
+
+    fn finish_round(&mut self, fb: &RoundFeedback<'_>) -> Result<()> {
+        let p = self.patch;
+        anyhow::ensure!(
+            fb.target_means.len() >= (fb.gamma + 1) * p,
+            "target means shorter than gamma + 1 rows"
+        );
+        // Flush the paused updates: one NLMS step per *validated*
+        // position — the accepted prefix, plus the rejection point (or
+        // the bonus position when everything was accepted). Positions
+        // past the rejection were conditioned on patches that are now
+        // rolled back; their target rows are still well-defined function
+        // samples, but only the surviving prefix reflects the sequence
+        // the stream will actually continue from, so training stops at
+        // the rejection boundary.
+        let feats = std::mem::take(&mut self.feats);
+        let n_pairs = (fb.accepted + 1).min(fb.gamma + 1).min(feats.len());
+        for (i, u) in feats.iter().enumerate().take(n_pairs) {
+            let y = fb.target_means[i * p..(i + 1) * p].to_vec();
+            self.learn(u, &y);
+        }
+        self.ctx.extend_from_slice(fb.committed);
+        self.ctx.extend_from_slice(fb.final_patch);
+        Ok(())
+    }
+
+    fn append(&mut self, patches: &[f32], k: usize) -> Result<()> {
+        let p = self.patch;
+        anyhow::ensure!(patches.len() >= k * p, "patch buffer too short");
+        self.ctx.extend_from_slice(&patches[..k * p]);
+        Ok(())
+    }
+
+    fn evict_to(&mut self, keep: usize) -> Result<()> {
+        let p = self.patch;
+        let n = self.len();
+        anyhow::ensure!(keep >= 1 && keep <= n, "bad evict target {keep} for len {n}");
+        self.ctx.drain(..(n - keep) * p);
+        Ok(())
+    }
+
+    fn updates(&self) -> usize {
+        self.updates
+    }
+
+    fn export_head(&self) -> Option<Vec<f32>> {
+        Some(self.r.clone())
+    }
+
+    fn import_head(&mut self, head: &[f32]) -> Result<()> {
+        anyhow::ensure!(
+            head.len() == self.r.len(),
+            "residual head size {} != expected {} (patch {})",
+            head.len(),
+            self.r.len(),
+            self.patch
+        );
+        self.r.copy_from_slice(head);
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Drive rounds against a known linear target y = a·x + b and check
+    /// the head's prediction error shrinks toward zero.
+    #[test]
+    fn nlms_converges_to_linear_target() {
+        let p = 2;
+        let (a, b) = (0.6f32, 0.4f32);
+        let mut src = AdaptiveResidualDraft::new(p, 0.5);
+        src.begin(&[0.3, -0.2], 1, CacheMode::Off).unwrap();
+        let mut rng = Rng::new(11);
+        let mut last_err = f32::INFINITY;
+        for round in 0..60 {
+            let gamma = 3;
+            let block = src.propose(gamma, 0.5, &mut rng).unwrap();
+            // Target means at each validated position: a·prev + b where
+            // prev is the patch the position conditioned on.
+            let mut prevs: Vec<Vec<f32>> =
+                vec![src.context()[src.context().len() - p..].to_vec()];
+            for x in &block.proposals {
+                prevs.push(x.clone());
+            }
+            let mut tm = Vec::with_capacity((gamma + 1) * p);
+            for prev in &prevs {
+                tm.extend(prev.iter().map(|v| a * v + b));
+            }
+            // All accepted; commit the proposals + the bonus mean.
+            let committed: Vec<f32> = block.proposals.iter().flatten().copied().collect();
+            let fina = tm[gamma * p..(gamma + 1) * p].to_vec();
+            src.finish_round(&RoundFeedback {
+                gamma,
+                accepted: gamma,
+                alphas: &[1.0; 3],
+                target_means: &tm,
+                committed: &committed,
+                final_patch: &fina,
+                sampled: true,
+            })
+            .unwrap();
+            if round == 59 {
+                // Measure current prediction error on a probe feature.
+                let u = AdaptiveResidualDraft::features(&[0.7, -0.1]);
+                let pred = src.predict(&u);
+                let want = [a * 0.7 + b, a * -0.1 + b];
+                last_err = pred
+                    .iter()
+                    .zip(&want)
+                    .map(|(x, y)| (x - y).abs())
+                    .fold(0.0, f32::max);
+            }
+        }
+        assert!(src.updates() >= 60, "updates {}", src.updates());
+        assert!(last_err < 0.05, "head did not converge: err {last_err}");
+    }
+
+    #[test]
+    fn updates_pause_during_speculation_and_stop_at_rejection() {
+        let p = 1;
+        let mut src = AdaptiveResidualDraft::new(p, 0.5);
+        src.begin(&[1.0], 1, CacheMode::Off).unwrap();
+        let mut rng = Rng::new(5);
+        let _ = src.propose(4, 0.5, &mut rng).unwrap();
+        assert_eq!(src.updates(), 0, "no updates while proposals are in flight");
+        src.finish_round(&RoundFeedback {
+            gamma: 4,
+            accepted: 1, // rejected at position 1
+            alphas: &[1.0, 0.0],
+            target_means: &[0.5, 0.6, 0.7, 0.8, 0.9],
+            committed: &[0.5],
+            final_patch: &[0.6],
+            sampled: true,
+        })
+        .unwrap();
+        // accepted + 1 = 2 validated positions trained on, not gamma + 1.
+        assert_eq!(src.updates(), 2);
+        // Context = history + committed + final only.
+        assert_eq!(src.context(), &[1.0, 0.5, 0.6]);
+    }
+
+    #[test]
+    fn head_export_import_roundtrip() {
+        let mut a = AdaptiveResidualDraft::new(2, 0.5);
+        a.begin(&[0.1, 0.2], 1, CacheMode::Off).unwrap();
+        let mut rng = Rng::new(3);
+        let block = a.propose(2, 0.5, &mut rng).unwrap();
+        let committed: Vec<f32> = block.proposals.iter().flatten().copied().collect();
+        a.finish_round(&RoundFeedback {
+            gamma: 2,
+            accepted: 2,
+            alphas: &[1.0, 1.0],
+            target_means: &[0.4; 6],
+            committed: &committed,
+            final_patch: &[0.0, 0.0],
+            sampled: true,
+        })
+        .unwrap();
+        let head = a.export_head().expect("learning source exports");
+        assert!(head.iter().any(|v| *v != 0.0), "trained head must be nonzero");
+        // A fresh source seeded with the head predicts identically.
+        let mut b = AdaptiveResidualDraft::new(2, 0.5);
+        b.import_head(&head).unwrap();
+        assert_eq!(b.head(), head.as_slice());
+        // Wrong-sized head is rejected.
+        assert!(b.import_head(&[0.0; 3]).is_err());
+    }
+
+    #[test]
+    fn deterministic_under_fixed_seed() {
+        let run = || {
+            let mut src = AdaptiveResidualDraft::new(2, 0.5);
+            src.begin(&[0.1, 0.2, 0.3, 0.4], 2, CacheMode::Off).unwrap();
+            let mut rng = Rng::new(42);
+            for _ in 0..10 {
+                let block = src.propose(2, 0.4, &mut rng).unwrap();
+                let committed: Vec<f32> =
+                    block.proposals.iter().flatten().copied().collect();
+                src.finish_round(&RoundFeedback {
+                    gamma: 2,
+                    accepted: 2,
+                    alphas: &[1.0, 1.0],
+                    target_means: &[0.1; 6],
+                    committed: &committed,
+                    final_patch: &[0.0, 0.0],
+                    sampled: true,
+                })
+                .unwrap();
+            }
+            (src.head().to_vec(), src.context().to_vec(), src.updates())
+        };
+        let (h1, c1, u1) = run();
+        let (h2, c2, u2) = run();
+        assert_eq!(h1, h2, "head drifted under identical streams");
+        assert_eq!(c1, c2);
+        assert_eq!(u1, u2);
+    }
+}

@@ -1,0 +1,204 @@
+//! Draft-free self-speculation: a closed-form continuation of the
+//! committed context stands in for the draft model.
+//!
+//! Speculative Streaming showed drafting needs no auxiliary model; for
+//! time series the cheapest competent "draft" is an extrapolation of the
+//! context itself:
+//!
+//! * **Linear trend** (`period == 0`): continue the series at the slope
+//!   of its last two points — `x̂[n+k] = x[n] + k·(x[n] − x[n−1])`. Flat
+//!   or slowly-trending series (the bulk of z-scored traffic) yield
+//!   proposal means close to any competent target's, so α stays useful.
+//! * **Seasonal naive** (`period == s > 0`): repeat the patch one season
+//!   back — `x̂_patch[i] = x_patch[i − s]` — the classic strong baseline
+//!   on periodic telemetry.
+//!
+//! Cost: a handful of float ops per proposal — no forward pass, no
+//! weights, no allocation beyond the returned block. Measured draft cost
+//! c ≈ 0, which is the best case of the paper's Eq. 5 wall-clock speedup
+//! (the denominator `c·γ + 1` collapses to 1): every accepted patch is
+//! free. `benches/draft_sources.rs` pins this source as the lowest
+//! measured c of the three.
+
+use anyhow::Result;
+
+use super::{DraftKind, DraftSource, ProposalBlock, RoundFeedback};
+use crate::models::CacheMode;
+use crate::util::rng::Rng;
+
+/// Closed-form continuation draft (linear trend or seasonal naive). Holds
+/// only the committed context window; proposals condition on the sampled
+/// prefix recursively, mirroring a model draft's autoregression.
+pub struct ExtrapolationDraft {
+    patch: usize,
+    /// `0` = linear trend; `s > 0` = seasonal naive with period `s`
+    /// patches.
+    period: usize,
+    /// Committed context, flat `[len, patch]`.
+    ctx: Vec<f32>,
+}
+
+impl ExtrapolationDraft {
+    /// Continuation source over `patch`-sized tokens; `period == 0` for
+    /// linear trend, else seasonal-naive with that many patches.
+    pub fn new(patch: usize, period: usize) -> ExtrapolationDraft {
+        assert!(patch >= 1, "patch must be >= 1");
+        ExtrapolationDraft { patch, period, ctx: Vec::new() }
+    }
+
+    /// Closed-form mean of the next patch given the current (possibly
+    /// speculatively extended) context tail.
+    fn mean_next(&self) -> Vec<f32> {
+        let p = self.patch;
+        let n = self.ctx.len();
+        debug_assert!(n >= p, "mean_next on an empty context");
+        if self.period > 0 {
+            let n_patches = n / p;
+            if n_patches >= self.period {
+                // Patch one season back.
+                let start = (n_patches - self.period) * p;
+                return self.ctx[start..start + p].to_vec();
+            }
+            // Not a full season yet: fall back to naive (repeat last).
+            return self.ctx[n - p..].to_vec();
+        }
+        // Linear trend from the last two *points* of the flat series.
+        let last = self.ctx[n - 1];
+        let slope = if n >= 2 { last - self.ctx[n - 2] } else { 0.0 };
+        (1..=p).map(|k| last + slope * k as f32).collect()
+    }
+}
+
+impl DraftSource for ExtrapolationDraft {
+    fn kind(&self) -> DraftKind {
+        DraftKind::Extrap
+    }
+    fn patch(&self) -> usize {
+        self.patch
+    }
+    fn begin(&mut self, history: &[f32], n_hist: usize, _cache: CacheMode) -> Result<()> {
+        let p = self.patch;
+        anyhow::ensure!(n_hist >= 1, "source needs at least one history patch");
+        anyhow::ensure!(history.len() >= n_hist * p, "history too short");
+        self.ctx.clear();
+        self.ctx.extend_from_slice(&history[..n_hist * p]);
+        Ok(())
+    }
+    fn len(&self) -> usize {
+        self.ctx.len() / self.patch
+    }
+    fn max_ctx(&self) -> usize {
+        usize::MAX
+    }
+    fn context(&self) -> &[f32] {
+        &self.ctx
+    }
+
+    fn propose(&mut self, gamma: usize, sigma: f64, rng: &mut Rng) -> Result<ProposalBlock> {
+        let p = self.patch;
+        anyhow::ensure!(!self.ctx.is_empty(), "propose before begin()");
+        // Speculative extension lives directly on the context buffer and
+        // is truncated before returning — committed history is untouched
+        // and nothing is cloned (this source must stay the cheapest).
+        let base = self.ctx.len();
+        let mut proposals = Vec::with_capacity(gamma);
+        let mut mu_qs = Vec::with_capacity(gamma);
+        for _ in 0..gamma {
+            let mu = self.mean_next();
+            let mut x = vec![0.0f32; p];
+            rng.fill_normal_around(&mu, sigma as f32, &mut x);
+            self.ctx.extend_from_slice(&x);
+            proposals.push(x);
+            mu_qs.push(mu);
+        }
+        self.ctx.truncate(base);
+        Ok(ProposalBlock { proposals, mu_qs })
+    }
+
+    fn finish_round(&mut self, fb: &RoundFeedback<'_>) -> Result<()> {
+        // Proposals were already unwound at the end of propose(): commit
+        // exactly what the engine emitted.
+        self.ctx.extend_from_slice(fb.committed);
+        self.ctx.extend_from_slice(fb.final_patch);
+        Ok(())
+    }
+
+    fn append(&mut self, patches: &[f32], k: usize) -> Result<()> {
+        let p = self.patch;
+        anyhow::ensure!(patches.len() >= k * p, "patch buffer too short");
+        self.ctx.extend_from_slice(&patches[..k * p]);
+        Ok(())
+    }
+
+    fn evict_to(&mut self, keep: usize) -> Result<()> {
+        let p = self.patch;
+        let n = self.len();
+        anyhow::ensure!(keep >= 1 && keep <= n, "bad evict target {keep} for len {n}");
+        self.ctx.drain(..(n - keep) * p);
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn linear_trend_continues_slope() {
+        let mut s = ExtrapolationDraft::new(2, 0);
+        // Flat series 1,2,3,4 → slope 1 → next patch [5, 6].
+        s.begin(&[1.0, 2.0, 3.0, 4.0], 2, CacheMode::Off).unwrap();
+        assert_eq!(s.mean_next(), vec![5.0, 6.0]);
+    }
+
+    #[test]
+    fn seasonal_naive_repeats_period() {
+        let mut s = ExtrapolationDraft::new(2, 2);
+        // Patches: [1,2], [9,9], [1,2], [9,9] with period 2 → next = [1,2].
+        s.begin(&[1.0, 2.0, 9.0, 9.0, 1.0, 2.0, 9.0, 9.0], 4, CacheMode::Off).unwrap();
+        assert_eq!(s.mean_next(), vec![1.0, 2.0]);
+        // Short context falls back to naive-repeat.
+        let mut s = ExtrapolationDraft::new(2, 8);
+        s.begin(&[3.0, 4.0], 1, CacheMode::Off).unwrap();
+        assert_eq!(s.mean_next(), vec![3.0, 4.0]);
+    }
+
+    #[test]
+    fn propose_leaves_committed_context_untouched() {
+        let mut s = ExtrapolationDraft::new(2, 0);
+        s.begin(&[1.0, 2.0, 3.0, 4.0], 2, CacheMode::Off).unwrap();
+        let before = s.context().to_vec();
+        let mut rng = Rng::new(3);
+        let block = s.propose(4, 0.5, &mut rng).unwrap();
+        assert_eq!(block.proposals.len(), 4);
+        assert_eq!(block.mu_qs.len(), 4);
+        assert_eq!(s.context(), before.as_slice());
+        // Later proposals condition on the sampled prefix: the second
+        // mean continues from proposal 0's last points, not the context.
+        let x0 = &block.proposals[0];
+        let slope = x0[1] - x0[0];
+        assert_eq!(block.mu_qs[1], vec![x0[1] + slope, x0[1] + 2.0 * slope]);
+    }
+
+    #[test]
+    fn commit_and_evict_window() {
+        let mut s = ExtrapolationDraft::new(1, 0);
+        s.begin(&[1.0, 2.0], 2, CacheMode::Off).unwrap();
+        let mut rng = Rng::new(4);
+        let _ = s.propose(2, 0.5, &mut rng).unwrap();
+        s.finish_round(&RoundFeedback {
+            gamma: 2,
+            accepted: 1,
+            alphas: &[1.0, 0.0],
+            target_means: &[0.0; 3],
+            committed: &[7.0],
+            final_patch: &[8.0],
+            sampled: true,
+        })
+        .unwrap();
+        assert_eq!(s.context(), &[1.0, 2.0, 7.0, 8.0]);
+        s.evict_to(2).unwrap();
+        assert_eq!(s.context(), &[7.0, 8.0]);
+        assert!(s.evict_to(0).is_err());
+    }
+}

@@ -1,0 +1,530 @@
+//! Pluggable draft sources: *where speculative proposals come from*.
+//!
+//! The paper (and this repo until now) hard-wires the draft as a second,
+//! smaller forecasting model — a full [`crate::models::Backend`] driven
+//! through its own decode session. But the speculative-decoding framework
+//! only needs a *proposal distribution* q per position; anything that can
+//! produce a mean patch given the committed history is a legal draft.
+//! Opening this axis turns the acceptance rate α itself into a tunable:
+//!
+//! * [`ModelDraft`] — the classic two-model setup, wrapping any backend's
+//!   [`crate::models::DecodeSession`]. This is the equivalence baseline:
+//!   decoding through a `ModelDraft` is **bit-identical** to the
+//!   pre-refactor engine (pinned by `tests/draft_equivalence.rs`).
+//! * [`ExtrapolationDraft`] — *draft-free self-speculation* in the spirit
+//!   of Speculative Streaming (Bhendawade et al.): a closed-form
+//!   linear-trend or seasonal-naive continuation of the context. Draft
+//!   cost c ≈ 0, which is the best case of the paper's Eq. 5 speedup
+//!   curve — every accepted patch is nearly free.
+//! * [`AdaptiveResidualDraft`] — an *online-learned* corrector in the
+//!   spirit of Online Speculative Decoding (Liu et al.): a lightweight
+//!   linear head over the last committed patch, NLMS-updated each round
+//!   against the target means observed during verification. The target
+//!   validation pass it learns from is already paid for, so α rises
+//!   online with **zero extra target forwards** — exactly the lever the
+//!   adaptive γ controller (PR 3) measures regime drift with but cannot
+//!   itself pull.
+//!
+//! ## Contract
+//!
+//! A source is driven by the engine in strict phases per speculative
+//! round: [`DraftSource::propose`] (γ proposals, sampled through the
+//! engine's RNG stream), then — after target validation, acceptance
+//! scanning, and the *target*-side rollback — one
+//! [`DraftSource::finish_round`] carrying the verification feedback
+//! ([`RoundFeedback`]): accepted count, per-proposal acceptance
+//! probabilities, the target means at every validated prefix (including
+//! the rejection point), and the patches actually committed. Between
+//! rounds the source's state must equal "committed history only":
+//! proposals never leak into the context of a later round unless they
+//! were committed (`tests/draft_equivalence.rs`'s proptest invariants).
+//! Learning updates therefore *pause* while speculation is in flight and
+//! are *flushed* only in `finish_round`, after the rejected suffix has
+//! been rolled back — a source can never train on patches that lost the
+//! acceptance coin flip and left the sequence.
+//!
+//! Cost accounting: the engine times `propose`/`finish_round` as draft
+//! work, so the [`super::GammaController`]'s measured cost ratio c is
+//! per-source automatically — a near-zero-cost `ExtrapolationDraft`
+//! measures c ≈ 0 and the speedup curve pushes γ toward its cap.
+
+mod adaptive;
+mod extrap;
+mod model;
+
+pub use adaptive::AdaptiveResidualDraft;
+pub use extrap::ExtrapolationDraft;
+pub use model::{ModelBatchDraft, ModelDraft};
+
+use anyhow::Result;
+
+use crate::models::{Backend, CacheMode};
+use crate::util::rng::Rng;
+
+/// Which draft-source implementation a decode runs with (the config /
+/// wire-level selector: `--draft`, JSON `"draft"`, per-request
+/// `"draft"`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum DraftKind {
+    /// A second model's decode session (the paper's setup; the default).
+    Model,
+    /// Draft-free closed-form continuation (linear trend / seasonal
+    /// naive) — near-zero draft cost.
+    Extrap,
+    /// Online-learned residual corrector fitted to verification feedback.
+    Adaptive,
+}
+
+impl DraftKind {
+    /// Wire/CLI name of the kind (`"model"` / `"extrap"` / `"adaptive"`).
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            DraftKind::Model => "model",
+            DraftKind::Extrap => "extrap",
+            DraftKind::Adaptive => "adaptive",
+        }
+    }
+
+    /// Parse a wire/CLI name; `None` for unknown spellings.
+    pub fn parse(s: &str) -> Option<DraftKind> {
+        match s {
+            "model" => Some(DraftKind::Model),
+            "extrap" | "extrapolation" => Some(DraftKind::Extrap),
+            "adaptive" => Some(DraftKind::Adaptive),
+            _ => None,
+        }
+    }
+
+    /// All kinds, in serving-metrics order.
+    pub fn all() -> [DraftKind; 3] {
+        [DraftKind::Model, DraftKind::Extrap, DraftKind::Adaptive]
+    }
+}
+
+/// Draft-source configuration carried inside
+/// [`super::SpecConfig`] (plain scalars so both stay `Copy`).
+#[derive(Clone, Copy, Debug)]
+pub struct DraftConfig {
+    /// Which source to construct.
+    pub kind: DraftKind,
+    /// [`ExtrapolationDraft`] mode: `0` = linear-trend continuation,
+    /// `k > 0` = seasonal-naive with a period of `k` patches.
+    pub period: usize,
+    /// [`AdaptiveResidualDraft`] NLMS learning rate, in `(0, 2)` for
+    /// stability (normalized step — 2 is the classic divergence bound).
+    pub eta: f64,
+}
+
+impl Default for DraftConfig {
+    fn default() -> Self {
+        DraftConfig { kind: DraftKind::Model, period: 0, eta: 0.5 }
+    }
+}
+
+impl DraftConfig {
+    /// Check the knobs are legal (η stability bound, sane period).
+    pub fn validate(&self) -> Result<()> {
+        anyhow::ensure!(
+            self.eta > 0.0 && self.eta < 2.0,
+            "draft.eta must be in (0, 2) for NLMS stability, got {}",
+            self.eta
+        );
+        anyhow::ensure!(
+            self.period <= 4096,
+            "draft.period must be <= 4096 patches, got {}",
+            self.period
+        );
+        Ok(())
+    }
+}
+
+/// One round's proposal block from a source: γ sampled proposals and the
+/// γ proposal means they were drawn around (the q-means the acceptance
+/// rule needs).
+#[derive(Clone, Debug)]
+pub struct ProposalBlock {
+    /// Sampled proposals `x_i ~ N(mu_q_i, σ²)`, one `[patch]` vector each.
+    pub proposals: Vec<Vec<f32>>,
+    /// The proposal means `mu_q_i`, aligned with `proposals`.
+    pub mu_qs: Vec<Vec<f32>>,
+}
+
+/// Verification feedback for one finished speculative round — everything
+/// a source may observe (and learn from) about what the target thought of
+/// its proposals.
+#[derive(Clone, Copy, Debug)]
+pub struct RoundFeedback<'a> {
+    /// Proposals produced this round (the block length γ fed to the
+    /// target; in a lockstep batch this is the *round* γ, which may
+    /// exceed the sequence's own scanned prefix).
+    pub gamma: usize,
+    /// Consecutive proposals accepted before rejection (run length).
+    pub accepted: usize,
+    /// Per-proposal acceptance probabilities evaluated by the scan
+    /// (includes the rejected proposal's α when the round ended early).
+    pub alphas: &'a [f64],
+    /// Target means at every validated prefix, flat `[gamma+1, patch]`:
+    /// row `i` is the target's prediction at position `i` given the
+    /// committed context plus proposals `0..i` — row `accepted` is the
+    /// mean *at the rejection point* (or the bonus mean when everything
+    /// was accepted). This is the online-learning signal: it costs zero
+    /// extra target forwards.
+    pub target_means: &'a [f32],
+    /// Patches committed to the sequence this round *before* the final
+    /// patch, flat `[accepted, patch]` (the accepted samples under
+    /// `Emission::Sampled`, the accepted draft means under
+    /// `Emission::Mean`).
+    pub committed: &'a [f32],
+    /// The round's final bonus/fallback/residual patch, flat `[patch]`.
+    pub final_patch: &'a [f32],
+    /// True when `committed` is the accepted proposals verbatim
+    /// (sampled emission) — lets [`ModelDraft`] keep its session's
+    /// accepted prefix in place instead of rebuilding, preserving the
+    /// pre-refactor session-op sequence exactly.
+    pub sampled: bool,
+}
+
+/// A proposal source for speculative decoding (the "q side" of the
+/// accept/reject rule). See the module docs for the phase contract.
+pub trait DraftSource {
+    /// Which implementation this is (metrics/group labels).
+    fn kind(&self) -> DraftKind;
+    /// Values per patch token.
+    fn patch(&self) -> usize;
+    /// (Re)anchor the source on a fresh committed history (flat
+    /// `[n_hist, patch]`). Per-decode context state resets; *learned*
+    /// state (e.g. the adaptive head) persists — that is how a
+    /// long-lived source adapts across a request stream.
+    fn begin(&mut self, history: &[f32], n_hist: usize, cache: CacheMode) -> Result<()>;
+    /// Patches currently in the committed context.
+    fn len(&self) -> usize;
+    /// Whether the committed context holds no patches.
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+    /// Context cap this source imposes on the joint decode window
+    /// (`usize::MAX` for closed-form sources with no backend).
+    fn max_ctx(&self) -> usize;
+    /// The committed context tokens (flat `[len, patch]`) —
+    /// introspection for tests and invariant checks.
+    fn context(&self) -> &[f32];
+    /// Produce γ proposals autoregressively: each mean conditions on the
+    /// committed history plus the proposals sampled so far; each proposal
+    /// is drawn `x_i ~ N(mu_q_i, σ²)` through `rng` (exactly one
+    /// `fill_normal_around` per proposal, in order — the engine's RNG
+    /// stream contract). Must leave the committed context untouched.
+    fn propose(&mut self, gamma: usize, sigma: f64, rng: &mut Rng) -> Result<ProposalBlock>;
+    /// Absorb one round's verification outcome: commit
+    /// `fb.committed + fb.final_patch` to the context and (for learning
+    /// sources) fold the target means into the online update. Called
+    /// exactly once per `propose`, after the engine's acceptance scan.
+    fn finish_round(&mut self, fb: &RoundFeedback<'_>) -> Result<()>;
+    /// Commit `k` patches outside a proposal round (the γ = 0 horizon
+    /// tail, where the engine runs a plain target AR step).
+    fn append(&mut self, patches: &[f32], k: usize) -> Result<()>;
+    /// Slide the window from the front so exactly `keep` patches remain
+    /// (kept in lockstep with the target session by the engine).
+    fn evict_to(&mut self, keep: usize) -> Result<()>;
+    /// Online parameter updates applied so far (0 for non-learning
+    /// sources). Monotone; decode loops report per-decode deltas.
+    fn updates(&self) -> usize {
+        0
+    }
+    /// Snapshot of the source's learned parameters, if it has any
+    /// (`None` for non-learning sources). The serving batcher exports
+    /// after each decode group and re-imports into the next group's
+    /// fresh sources, so online adaptation survives across requests.
+    fn export_head(&self) -> Option<Vec<f32>> {
+        None
+    }
+    /// Load a previously exported parameter snapshot. Non-learning
+    /// sources ignore it; learning sources error on a wrong-sized head.
+    fn import_head(&mut self, head: &[f32]) -> Result<()> {
+        let _ = head;
+        Ok(())
+    }
+}
+
+/// Lockstep draft sources for the batched decoder: per-sequence state,
+/// batched `propose` over an explicit index set (so a model-backed
+/// implementation can share one batched extend across the active set),
+/// per-sequence feedback/commit because acceptance lengths diverge.
+pub trait BatchDraftSource {
+    /// Which implementation this is (metrics/group labels).
+    fn kind(&self) -> DraftKind;
+    /// Values per patch token.
+    fn patch(&self) -> usize;
+    /// (Re)anchor on a fresh batch of `(history, n_hist)` tasks.
+    fn begin(&mut self, tasks: &[(&[f32], usize)], cache: CacheMode) -> Result<()>;
+    /// Sequences in the batch.
+    fn batch(&self) -> usize;
+    /// Committed context length (patches) of sequence `i`.
+    fn len(&self, i: usize) -> usize;
+    /// Context cap this source imposes on the joint decode window.
+    fn max_ctx(&self) -> usize;
+    /// Batched [`DraftSource::propose`]: one [`ProposalBlock`] per entry
+    /// of `idx`, sampling sequence `i`'s proposals through `rngs[i]`
+    /// (the full per-sequence RNG slab, indexed absolutely).
+    fn propose(
+        &mut self,
+        idx: &[usize],
+        gamma: usize,
+        sigma: f64,
+        rngs: &mut [Rng],
+    ) -> Result<Vec<ProposalBlock>>;
+    /// Per-sequence [`DraftSource::finish_round`].
+    fn finish_round(&mut self, i: usize, fb: &RoundFeedback<'_>) -> Result<()>;
+    /// Commit `k` patches to sequence `i` outside a proposal round.
+    fn append(&mut self, i: usize, patches: &[f32], k: usize) -> Result<()>;
+    /// Slide sequence `i`'s window so exactly `keep` patches remain.
+    fn evict_to(&mut self, i: usize, keep: usize) -> Result<()>;
+    /// Online updates applied so far by sequence `i`'s source.
+    fn updates(&self, i: usize) -> usize {
+        let _ = i;
+        0
+    }
+    /// Merged snapshot of the batch's learned parameters (`None` when no
+    /// sequence has any). See [`DraftSource::export_head`].
+    fn export_head(&self) -> Option<Vec<f32>> {
+        None
+    }
+    /// Seed every sequence's source (present and future — i.e. sources
+    /// created by the next [`BatchDraftSource::begin`]) with an exported
+    /// parameter snapshot.
+    fn import_head(&mut self, head: &[f32]) -> Result<()> {
+        let _ = head;
+        Ok(())
+    }
+}
+
+/// Build a single-stream source per `cfg`. The `draft` backend is the
+/// proposal model for [`DraftKind::Model`]; draft-free kinds only take
+/// its patch size (callers without a second model can use
+/// [`make_free_source`]).
+pub fn make_source<'a>(
+    cfg: &DraftConfig,
+    draft: &'a dyn Backend,
+) -> Result<Box<dyn DraftSource + 'a>> {
+    cfg.validate()?;
+    Ok(match cfg.kind {
+        DraftKind::Model => Box::new(ModelDraft::new(draft)),
+        DraftKind::Extrap => Box::new(ExtrapolationDraft::new(draft.patch(), cfg.period)),
+        DraftKind::Adaptive => {
+            Box::new(AdaptiveResidualDraft::new(draft.patch(), cfg.eta as f32))
+        }
+    })
+}
+
+/// Build a draft-free source (no second model anywhere): errors on
+/// [`DraftKind::Model`], which needs a backend.
+pub fn make_free_source(cfg: &DraftConfig, patch: usize) -> Result<Box<dyn DraftSource>> {
+    cfg.validate()?;
+    Ok(match cfg.kind {
+        DraftKind::Model => anyhow::bail!("draft kind 'model' requires a draft backend"),
+        DraftKind::Extrap => Box::new(ExtrapolationDraft::new(patch, cfg.period)),
+        DraftKind::Adaptive => Box::new(AdaptiveResidualDraft::new(patch, cfg.eta as f32)),
+    })
+}
+
+/// Build a lockstep batch source per `cfg`: the model kind shares one
+/// [`crate::models::BatchDecodeSession`] (keeping the pool-fanned batched
+/// draft extends); draft-free kinds get one independent per-sequence
+/// source each.
+pub fn make_batch_source<'a>(
+    cfg: &DraftConfig,
+    draft: &'a dyn Backend,
+) -> Result<Box<dyn BatchDraftSource + 'a>> {
+    cfg.validate()?;
+    Ok(match cfg.kind {
+        DraftKind::Model => Box::new(ModelBatchDraft::new(draft)),
+        _ => Box::new(PerSeqBatchDraft::new(*cfg, draft.patch())),
+    })
+}
+
+/// [`BatchDraftSource`] adapter holding one independent
+/// [`DraftSource`] per sequence — the lockstep flavor of the draft-free
+/// kinds (no cross-sequence compute to share, so per-sequence loops are
+/// already optimal).
+pub struct PerSeqBatchDraft {
+    cfg: DraftConfig,
+    patch: usize,
+    srcs: Vec<Box<dyn DraftSource>>,
+    /// Pending parameter snapshot; applied to every source created by
+    /// `begin` (cross-request persistence for learning kinds).
+    seed_head: Option<Vec<f32>>,
+}
+
+impl PerSeqBatchDraft {
+    /// Adapter for `cfg` over `patch`-sized tokens; sequences are created
+    /// at [`BatchDraftSource::begin`].
+    pub fn new(cfg: DraftConfig, patch: usize) -> PerSeqBatchDraft {
+        PerSeqBatchDraft { cfg, patch, srcs: Vec::new(), seed_head: None }
+    }
+}
+
+impl BatchDraftSource for PerSeqBatchDraft {
+    fn kind(&self) -> DraftKind {
+        self.cfg.kind
+    }
+    fn patch(&self) -> usize {
+        self.patch
+    }
+    fn begin(&mut self, tasks: &[(&[f32], usize)], cache: CacheMode) -> Result<()> {
+        self.srcs.clear();
+        for (hist, n_hist) in tasks {
+            let mut s = make_free_source(&self.cfg, self.patch)?;
+            if let Some(h) = &self.seed_head {
+                s.import_head(h)?;
+            }
+            s.begin(hist, *n_hist, cache)?;
+            self.srcs.push(s);
+        }
+        Ok(())
+    }
+    fn batch(&self) -> usize {
+        self.srcs.len()
+    }
+    fn len(&self, i: usize) -> usize {
+        self.srcs[i].len()
+    }
+    fn max_ctx(&self) -> usize {
+        usize::MAX
+    }
+    fn propose(
+        &mut self,
+        idx: &[usize],
+        gamma: usize,
+        sigma: f64,
+        rngs: &mut [Rng],
+    ) -> Result<Vec<ProposalBlock>> {
+        idx.iter()
+            .map(|&i| self.srcs[i].propose(gamma, sigma, &mut rngs[i]))
+            .collect()
+    }
+    fn finish_round(&mut self, i: usize, fb: &RoundFeedback<'_>) -> Result<()> {
+        self.srcs[i].finish_round(fb)
+    }
+    fn append(&mut self, i: usize, patches: &[f32], k: usize) -> Result<()> {
+        self.srcs[i].append(patches, k)
+    }
+    fn evict_to(&mut self, i: usize, keep: usize) -> Result<()> {
+        self.srcs[i].evict_to(keep)
+    }
+    fn updates(&self, i: usize) -> usize {
+        self.srcs[i].updates()
+    }
+    /// Elementwise mean of the per-sequence heads — a deterministic
+    /// merge (sequence order is fixed) that keeps every stream's
+    /// adaptation represented in the snapshot the next group is seeded
+    /// with.
+    fn export_head(&self) -> Option<Vec<f32>> {
+        let heads: Vec<Vec<f32>> =
+            self.srcs.iter().filter_map(|s| s.export_head()).collect();
+        let first_len = heads.first()?.len();
+        let mut mean = vec![0.0f32; first_len];
+        let mut n = 0usize;
+        for h in &heads {
+            if h.len() != first_len {
+                continue;
+            }
+            for (m, v) in mean.iter_mut().zip(h) {
+                *m += v;
+            }
+            n += 1;
+        }
+        for m in &mut mean {
+            *m /= n as f32;
+        }
+        Some(mean)
+    }
+    fn import_head(&mut self, head: &[f32]) -> Result<()> {
+        for s in &mut self.srcs {
+            s.import_head(head)?;
+        }
+        self.seed_head = Some(head.to_vec());
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kind_roundtrips_through_names() {
+        for k in DraftKind::all() {
+            assert_eq!(DraftKind::parse(k.as_str()), Some(k));
+        }
+        assert_eq!(DraftKind::parse("warp"), None);
+        assert_eq!(DraftKind::parse("extrapolation"), Some(DraftKind::Extrap));
+    }
+
+    #[test]
+    fn config_validation() {
+        DraftConfig::default().validate().unwrap();
+        let mut c = DraftConfig::default();
+        c.eta = 0.0;
+        assert!(c.validate().is_err());
+        c.eta = 2.0;
+        assert!(c.validate().is_err());
+        let mut c = DraftConfig::default();
+        c.period = 5000;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn per_seq_batch_head_seeds_and_merges() {
+        use crate::models::CacheMode;
+        use crate::util::rng::Rng;
+        let cfg = DraftConfig { kind: DraftKind::Adaptive, ..DraftConfig::default() };
+        let mut batch = PerSeqBatchDraft::new(cfg, 1);
+        let h1 = [0.5f32];
+        let h2 = [0.2f32, 0.4];
+        let tasks: Vec<(&[f32], usize)> = vec![(&h1, 1), (&h2, 2)];
+        batch.begin(&tasks, CacheMode::Off).unwrap();
+        // Drive one round on each sequence with different targets so the
+        // per-sequence heads diverge.
+        let mut rngs = vec![Rng::new(1), Rng::new(2)];
+        let blocks = batch.propose(&[0, 1], 2, 0.5, &mut rngs).unwrap();
+        for (i, tm) in [(0usize, [0.9f32; 3]), (1usize, [-0.9f32; 3])] {
+            let committed: Vec<f32> =
+                blocks[i].proposals.iter().flatten().copied().collect();
+            batch
+                .finish_round(
+                    i,
+                    &RoundFeedback {
+                        gamma: 2,
+                        accepted: 2,
+                        alphas: &[1.0, 1.0],
+                        target_means: &tm,
+                        committed: &committed,
+                        final_patch: &[0.0],
+                        sampled: true,
+                    },
+                )
+                .unwrap();
+            assert!(batch.updates(i) > 0);
+        }
+        let head = batch.export_head().expect("adaptive batch exports a merged head");
+        assert_eq!(head.len(), 1 * 2, "[patch, patch+1] head for patch 1");
+        // Re-begin with the head imported: fresh sources are seeded.
+        let mut next = PerSeqBatchDraft::new(cfg, 1);
+        next.import_head(&head).unwrap();
+        next.begin(&tasks, CacheMode::Off).unwrap();
+        assert_eq!(next.srcs[0].export_head().unwrap(), head);
+        assert_eq!(next.srcs[1].export_head().unwrap(), head);
+        // Non-learning kinds export nothing.
+        let ecfg = DraftConfig { kind: DraftKind::Extrap, ..DraftConfig::default() };
+        let mut eb = PerSeqBatchDraft::new(ecfg, 1);
+        eb.begin(&tasks, CacheMode::Off).unwrap();
+        assert!(eb.export_head().is_none());
+    }
+
+    #[test]
+    fn free_source_rejects_model_kind() {
+        let cfg = DraftConfig::default(); // kind: Model
+        assert!(make_free_source(&cfg, 4).is_err());
+        let cfg = DraftConfig { kind: DraftKind::Extrap, ..DraftConfig::default() };
+        assert!(make_free_source(&cfg, 4).is_ok());
+    }
+}

@@ -1,0 +1,340 @@
+//! The classic two-model draft: a second backend's decode session,
+//! wrapped as a [`DraftSource`]. This is the *equivalence baseline* of
+//! the draft-source subsystem — driving a decode through [`ModelDraft`]
+//! performs the exact session-operation sequence (and consumes the exact
+//! RNG stream) of the pre-refactor engine, so fixed-draft decoding stays
+//! bit-identical (pinned by `tests/draft_equivalence.rs`).
+
+use anyhow::Result;
+
+use super::{BatchDraftSource, DraftKind, DraftSource, ProposalBlock, RoundFeedback};
+use crate::models::{
+    begin_batch_session, begin_session, Backend, BatchDecodeSession, CacheMode, DecodeSession,
+};
+use crate::util::rng::Rng;
+
+/// Draft source backed by a model's [`DecodeSession`] (KV-cached when the
+/// backend supports it and the decode runs with [`CacheMode::On`]).
+pub struct ModelDraft<'a> {
+    backend: &'a dyn Backend,
+    sess: Option<Box<dyn DecodeSession + 'a>>,
+    /// The in-flight round's block length and final proposal (γ−1), the
+    /// only proposal `finish_round` ever needs (the sampled-emission
+    /// all-accepted path re-appends it — it never entered the session
+    /// during drafting). One patch, not the whole block: this sits on
+    /// the hot decode loop.
+    last_gamma: usize,
+    last_proposal: Vec<f32>,
+}
+
+impl<'a> ModelDraft<'a> {
+    /// Source proposing from `backend`'s decode sessions.
+    pub fn new(backend: &'a dyn Backend) -> ModelDraft<'a> {
+        ModelDraft { backend, sess: None, last_gamma: 0, last_proposal: Vec::new() }
+    }
+
+    fn sess(&mut self) -> Result<&mut Box<dyn DecodeSession + 'a>> {
+        self.sess
+            .as_mut()
+            .ok_or_else(|| anyhow::anyhow!("ModelDraft used before begin()"))
+    }
+}
+
+impl DraftSource for ModelDraft<'_> {
+    fn kind(&self) -> DraftKind {
+        DraftKind::Model
+    }
+    fn patch(&self) -> usize {
+        self.backend.patch()
+    }
+    fn begin(&mut self, history: &[f32], n_hist: usize, cache: CacheMode) -> Result<()> {
+        self.sess = Some(begin_session(self.backend, cache, history, n_hist)?);
+        self.last_gamma = 0;
+        self.last_proposal.clear();
+        Ok(())
+    }
+    fn len(&self) -> usize {
+        self.sess.as_ref().map(|s| s.len()).unwrap_or(0)
+    }
+    fn max_ctx(&self) -> usize {
+        self.backend.max_ctx()
+    }
+    fn context(&self) -> &[f32] {
+        self.sess.as_ref().map(|s| s.context()).unwrap_or(&[])
+    }
+
+    fn propose(&mut self, gamma: usize, sigma: f64, rng: &mut Rng) -> Result<ProposalBlock> {
+        let p = self.backend.patch();
+        let sess = self.sess()?;
+        // Verbatim pre-refactor drafting loop (Alg. 1 l.1-3): the first
+        // mean comes off the session tip; each proposal i < γ-1 is pushed
+        // through `extend` to produce the next mean. Proposal γ-1 is only
+        // needed by target validation, so it never enters the draft
+        // context (nothing would read its successor mean).
+        let mut mu_q = sess.tip_mean()?;
+        let mut proposals: Vec<Vec<f32>> = Vec::with_capacity(gamma);
+        let mut mu_qs: Vec<Vec<f32>> = Vec::with_capacity(gamma);
+        for i in 0..gamma {
+            let mut x = vec![0.0f32; p];
+            rng.fill_normal_around(&mu_q, sigma as f32, &mut x);
+            proposals.push(x);
+            mu_qs.push(mu_q.clone());
+            if i + 1 < gamma {
+                let rows = sess.extend(proposals.last().unwrap(), 1)?;
+                mu_q = rows[p..].to_vec();
+            }
+        }
+        self.last_gamma = gamma;
+        self.last_proposal.clear();
+        if let Some(x) = proposals.last() {
+            self.last_proposal.extend_from_slice(x);
+        }
+        Ok(ProposalBlock { proposals, mu_qs })
+    }
+
+    fn finish_round(&mut self, fb: &RoundFeedback<'_>) -> Result<()> {
+        let gamma = fb.gamma;
+        anyhow::ensure!(gamma >= 1, "finish_round on an empty proposal block");
+        anyhow::ensure!(self.last_gamma == gamma, "feedback gamma mismatch");
+        // Split the borrow: the retained final proposal is read while
+        // the session is mutated.
+        let last = std::mem::take(&mut self.last_proposal);
+        self.last_gamma = 0;
+        let sess = self.sess()?;
+        if fb.sampled {
+            // The committed patches are the accepted proposals verbatim
+            // and the session already holds proposals 0..γ-1: keep the
+            // accepted prefix, re-append proposal γ-1 if everything was
+            // accepted (it never entered the context during drafting).
+            let keep_d = fb.accepted.min(gamma - 1);
+            sess.rollback((gamma - 1) - keep_d)?;
+            if fb.accepted > keep_d {
+                sess.append(&last, 1)?;
+            }
+        } else {
+            // Mean emission: the context must carry the emitted draft
+            // means, not the sampled proposals — rewind everything and
+            // re-append the committed means.
+            sess.rollback(gamma - 1)?;
+            if fb.accepted > 0 {
+                sess.append(fb.committed, fb.accepted)?;
+            }
+        }
+        sess.append(fb.final_patch, 1)?;
+        Ok(())
+    }
+
+    fn append(&mut self, patches: &[f32], k: usize) -> Result<()> {
+        self.sess()?.append(patches, k)
+    }
+
+    fn evict_to(&mut self, keep: usize) -> Result<()> {
+        self.sess()?.evict_to(keep)
+    }
+}
+
+/// Lockstep flavor of [`ModelDraft`]: one shared
+/// [`BatchDecodeSession`], so the γ per-round draft extends stay batched
+/// (and keep fanning across the worker pool on the native backend).
+/// Performs the exact per-sequence session-op sequence of the
+/// pre-refactor batched engine.
+pub struct ModelBatchDraft<'a> {
+    backend: &'a dyn Backend,
+    sess: Option<Box<dyn BatchDecodeSession + 'a>>,
+    /// Per-sequence in-flight round state: `(gamma, final proposal)` —
+    /// the only proposal `finish_round` ever needs (see [`ModelDraft`]).
+    last: Vec<(usize, Vec<f32>)>,
+}
+
+impl<'a> ModelBatchDraft<'a> {
+    /// Lockstep source proposing from `backend`'s batched sessions.
+    pub fn new(backend: &'a dyn Backend) -> ModelBatchDraft<'a> {
+        ModelBatchDraft { backend, sess: None, last: Vec::new() }
+    }
+
+    fn sess(&mut self) -> Result<&mut Box<dyn BatchDecodeSession + 'a>> {
+        self.sess
+            .as_mut()
+            .ok_or_else(|| anyhow::anyhow!("ModelBatchDraft used before begin()"))
+    }
+}
+
+impl BatchDraftSource for ModelBatchDraft<'_> {
+    fn kind(&self) -> DraftKind {
+        DraftKind::Model
+    }
+    fn patch(&self) -> usize {
+        self.backend.patch()
+    }
+    fn begin(&mut self, tasks: &[(&[f32], usize)], cache: CacheMode) -> Result<()> {
+        self.sess = Some(begin_batch_session(self.backend, cache, tasks)?);
+        self.last = vec![(0, Vec::new()); tasks.len()];
+        Ok(())
+    }
+    fn batch(&self) -> usize {
+        self.last.len()
+    }
+    fn len(&self, i: usize) -> usize {
+        self.sess.as_ref().map(|s| s.len(i)).unwrap_or(0)
+    }
+    fn max_ctx(&self) -> usize {
+        self.backend.max_ctx()
+    }
+
+    fn propose(
+        &mut self,
+        idx: &[usize],
+        gamma: usize,
+        sigma: f64,
+        rngs: &mut [Rng],
+    ) -> Result<Vec<ProposalBlock>> {
+        let p = self.backend.patch();
+        let a = idx.len();
+        let sess = self.sess()?;
+        // Verbatim pre-refactor batched drafting: tip means, then γ-1
+        // batched extends (the last proposal only feeds target
+        // validation, never the draft context). Per-sequence RNG streams
+        // are independent, so the per-step interleaving preserves each
+        // sequence's exact sample order.
+        let mut mu_q = sess.tip_means(idx)?; // [a, p]
+        let mut blocks: Vec<ProposalBlock> = (0..a)
+            .map(|_| ProposalBlock {
+                proposals: Vec::with_capacity(gamma),
+                mu_qs: Vec::with_capacity(gamma),
+            })
+            .collect();
+        for step in 0..gamma {
+            let mut xs = vec![0.0f32; a * p];
+            for (ai, &i) in idx.iter().enumerate() {
+                let mq = &mu_q[ai * p..(ai + 1) * p];
+                rngs[i].fill_normal_around(mq, sigma as f32, &mut xs[ai * p..(ai + 1) * p]);
+                blocks[ai].proposals.push(xs[ai * p..(ai + 1) * p].to_vec());
+                blocks[ai].mu_qs.push(mq.to_vec());
+            }
+            if step + 1 < gamma {
+                let rows = sess.extend(idx, &xs, 1)?; // [a, 2, p]
+                for ai in 0..a {
+                    mu_q[ai * p..(ai + 1) * p]
+                        .copy_from_slice(&rows[ai * 2 * p + p..(ai + 1) * 2 * p]);
+                }
+            }
+        }
+        for (ai, &i) in idx.iter().enumerate() {
+            let (g, buf) = &mut self.last[i];
+            *g = gamma;
+            buf.clear();
+            if let Some(x) = blocks[ai].proposals.last() {
+                buf.extend_from_slice(x);
+            }
+        }
+        Ok(blocks)
+    }
+
+    fn finish_round(&mut self, i: usize, fb: &RoundFeedback<'_>) -> Result<()> {
+        let gamma = fb.gamma;
+        anyhow::ensure!(gamma >= 1, "finish_round on an empty proposal block");
+        anyhow::ensure!(self.last[i].0 == gamma, "feedback gamma mismatch for seq {i}");
+        let last = std::mem::take(&mut self.last[i].1);
+        self.last[i].0 = 0;
+        let sess = self.sess()?;
+        if fb.sampled {
+            let keep_d = fb.accepted.min(gamma - 1);
+            sess.rollback(i, (gamma - 1) - keep_d)?;
+            if fb.accepted > keep_d {
+                sess.append(i, &last, 1)?;
+            }
+        } else {
+            sess.rollback(i, gamma - 1)?;
+            if fb.accepted > 0 {
+                sess.append(i, fb.committed, fb.accepted)?;
+            }
+        }
+        sess.append(i, fb.final_patch, 1)?;
+        Ok(())
+    }
+
+    fn append(&mut self, i: usize, patches: &[f32], k: usize) -> Result<()> {
+        self.sess()?.append(i, patches, k)
+    }
+
+    fn evict_to(&mut self, i: usize, keep: usize) -> Result<()> {
+        self.sess()?.evict_to(i, keep)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::AnalyticBackend;
+
+    #[test]
+    fn propose_matches_session_semantics() {
+        // Analytic head: mean(next) = 0.5 * last + 1.0 elementwise. The
+        // first proposal mean must be the tip mean; the second must
+        // condition on the sampled first proposal.
+        let b = AnalyticBackend::new("d", 2, 0.5, 1.0);
+        let mut src = ModelDraft::new(&b);
+        src.begin(&[2.0, 4.0], 1, CacheMode::On).unwrap();
+        let mut rng = Rng::new(7);
+        let block = src.propose(2, 0.3, &mut rng).unwrap();
+        assert_eq!(block.proposals.len(), 2);
+        assert_eq!(block.mu_qs[0], vec![2.0, 3.0]);
+        let x0 = &block.proposals[0];
+        let want = vec![0.5 * x0[0] + 1.0, 0.5 * x0[1] + 1.0];
+        assert_eq!(block.mu_qs[1], want);
+        // Context must be committed history + the extended proposals
+        // (γ-1 of them) until finish_round rewinds.
+        assert_eq!(src.len(), 2);
+    }
+
+    #[test]
+    fn finish_round_sampled_keeps_accepted_prefix() {
+        let b = AnalyticBackend::new("d", 1, 1.0, 0.0);
+        let mut src = ModelDraft::new(&b);
+        src.begin(&[1.0], 1, CacheMode::On).unwrap();
+        let mut rng = Rng::new(1);
+        let block = src.propose(3, 0.5, &mut rng).unwrap();
+        let committed: Vec<f32> = block.proposals[..2].iter().flatten().copied().collect();
+        let fina = [9.0f32];
+        src.finish_round(&RoundFeedback {
+            gamma: 3,
+            accepted: 2,
+            alphas: &[1.0, 1.0, 0.1],
+            target_means: &[0.0; 4],
+            committed: &committed,
+            final_patch: &fina,
+            sampled: true,
+        })
+        .unwrap();
+        // history(1) + 2 accepted + 1 final.
+        assert_eq!(src.len(), 4);
+        let ctx = src.context();
+        assert_eq!(ctx[1], block.proposals[0][0]);
+        assert_eq!(ctx[2], block.proposals[1][0]);
+        assert_eq!(ctx[3], 9.0);
+    }
+
+    #[test]
+    fn finish_round_mean_rebuilds_context() {
+        let b = AnalyticBackend::new("d", 1, 1.0, 0.0);
+        let mut src = ModelDraft::new(&b);
+        src.begin(&[1.0], 1, CacheMode::On).unwrap();
+        let mut rng = Rng::new(2);
+        let block = src.propose(2, 0.5, &mut rng).unwrap();
+        let committed = [block.mu_qs[0][0]];
+        src.finish_round(&RoundFeedback {
+            gamma: 2,
+            accepted: 1,
+            alphas: &[1.0, 0.0],
+            target_means: &[0.0; 3],
+            committed: &committed,
+            final_patch: &[5.0],
+            sampled: false,
+        })
+        .unwrap();
+        assert_eq!(src.len(), 3);
+        let ctx = src.context();
+        assert_eq!(ctx[1], block.mu_qs[0][0], "mean emission commits mu_q, not the sample");
+        assert_eq!(ctx[2], 5.0);
+    }
+}

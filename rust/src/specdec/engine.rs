@@ -1,19 +1,25 @@
 //! The decode loop: Algorithm 1 (practical) and Algorithm 2 (lossless).
 //!
-//! Since the decode-session refactor the loop drives two
-//! [`crate::models::DecodeSession`]s (target + draft) instead of stateless
-//! re-forwards: a round is γ draft `extend`s, one target `extend` that
-//! returns all γ+1 prefix-conditional means, an acceptance scan, and a
-//! `rollback` of the rejected suffix — with [`CacheMode::On`] the rollback
-//! rewinds KV caches instead of rebuilding context, turning a round's
-//! target cost from O(n²·d) into O(γ·n·d). [`CacheMode::Off`] reproduces
-//! the stateless cost model with identical outputs (the A/B baseline).
+//! Since the decode-session refactor the loop drives a target
+//! [`crate::models::DecodeSession`] plus a pluggable [`DraftSource`]
+//! (which for the classic two-model setup wraps the draft's own decode
+//! session — see [`super::draft`]): a round is one `propose` (γ draft
+//! proposals), one target `extend` that returns all γ+1 prefix-conditional
+//! means, an acceptance scan, a `rollback` of the rejected target suffix,
+//! and one `finish_round` feeding the verification outcome back to the
+//! source — with [`CacheMode::On`] the rollback rewinds KV caches instead
+//! of rebuilding context, turning a round's target cost from O(n²·d) into
+//! O(γ·n·d). [`CacheMode::Off`] reproduces the stateless cost model with
+//! identical outputs (the A/B baseline). Decoding through the default
+//! [`super::DraftKind::Model`] source is bit-identical to the
+//! pre-refactor two-session engine (`tests/draft_equivalence.rs`).
 
 use std::time::Instant;
 
 use anyhow::Result;
 
 use super::controller::{AdaptiveConfig, GammaController};
+use super::draft::{make_source, DraftConfig, DraftSource, RoundFeedback};
 use super::stats::{DecodeOutput, DecodeStats, RoundStats};
 use crate::accept::AcceptancePolicy;
 use crate::models::{begin_session, Backend, CacheMode};
@@ -51,7 +57,7 @@ pub enum Emission {
 }
 
 /// One decode's full configuration (γ, acceptance policy, variant, seed,
-/// emission, cache toggle, optional adaptive controller).
+/// emission, cache toggle, draft source, optional adaptive controller).
 #[derive(Clone, Copy, Debug)]
 pub struct SpecConfig {
     /// Draft block length γ (the opening value when `adaptive` is set).
@@ -72,6 +78,12 @@ pub struct SpecConfig {
     /// model. Outputs are identical either way (pinned by
     /// `tests/cache_equivalence.rs`); only wall-clock differs.
     pub cache: CacheMode,
+    /// Where draft proposals come from: the classic second model
+    /// ([`super::DraftKind::Model`], the default — bit-identical to the
+    /// pre-refactor engine), a draft-free closed-form continuation
+    /// ([`super::DraftKind::Extrap`]), or an online-learned residual head
+    /// ([`super::DraftKind::Adaptive`]). See [`super::draft`].
+    pub draft: DraftConfig,
     /// Online γ/σ tuning from live acceptance telemetry. `None` (the
     /// default) keeps the static γ. When set, the engine runs a
     /// per-stream [`GammaController`] seeded at `gamma`/`policy.sigma`;
@@ -90,6 +102,7 @@ impl Default for SpecConfig {
             max_residual_draws: 10_000,
             emission: Emission::Mean,
             cache: CacheMode::On,
+            draft: DraftConfig::default(),
             adaptive: None,
         }
     }
@@ -145,8 +158,14 @@ impl GammaPlan<'_> {
 
 /// Generate `horizon` patches following `history` (flat `[n_hist, patch]`).
 ///
+/// The draft source is built from [`SpecConfig::draft`]: the `draft`
+/// backend is the proposal model for [`super::DraftKind::Model`] and
+/// supplies only the patch size for the draft-free kinds. To keep a *learned*
+/// source alive across decodes (e.g. an adapting residual head on a
+/// long-lived stream), use [`sd_generate_from`].
+///
 /// The context is slid left if `n_hist + gamma + 1` would exceed the
-/// backend's max context (long-horizon decodes, pred-len 336).
+/// joint max context (long-horizon decodes, pred-len 336).
 ///
 /// When [`SpecConfig::adaptive`] is set, a fresh per-stream
 /// [`GammaController`] is created for this decode; to keep controller
@@ -160,17 +179,36 @@ pub fn sd_generate(
     horizon: usize,
     cfg: &SpecConfig,
 ) -> Result<DecodeOutput> {
+    anyhow::ensure!(target.patch() == draft.patch(), "patch mismatch");
+    let mut source = make_source(&cfg.draft, draft)?;
+    sd_generate_from(target, source.as_mut(), history, n_hist, horizon, cfg)
+}
+
+/// [`sd_generate`] over a caller-owned [`DraftSource`]. The source is
+/// re-anchored on `history` but keeps its learned state — this is how a
+/// long-lived stream (or `benches/draft_sources.rs`) adapts its draft
+/// across many forecast windows.
+pub fn sd_generate_from(
+    target: &dyn Backend,
+    source: &mut dyn DraftSource,
+    history: &[f32],
+    n_hist: usize,
+    horizon: usize,
+    cfg: &SpecConfig,
+) -> Result<DecodeOutput> {
     match cfg.adaptive {
         Some(acfg) => {
             // Validate before construction: bad knobs must be a clean
             // error, never a clamp panic inside the controller.
             acfg.validate()?;
             let mut ctrl = GammaController::new(acfg, cfg.gamma, cfg.policy.sigma);
-            sd_generate_with_controller(target, draft, history, n_hist, horizon, cfg, &mut ctrl)
+            sd_generate_from_with_controller(
+                target, source, history, n_hist, horizon, cfg, &mut ctrl,
+            )
         }
         None => sd_generate_impl(
             target,
-            draft,
+            source,
             history,
             n_hist,
             horizon,
@@ -193,6 +231,32 @@ pub fn sd_generate_with_controller(
     cfg: &SpecConfig,
     ctrl: &mut GammaController,
 ) -> Result<DecodeOutput> {
+    anyhow::ensure!(target.patch() == draft.patch(), "patch mismatch");
+    let mut source = make_source(&cfg.draft, draft)?;
+    sd_generate_from_with_controller(
+        target,
+        source.as_mut(),
+        history,
+        n_hist,
+        horizon,
+        cfg,
+        ctrl,
+    )
+}
+
+/// [`sd_generate_with_controller`] over a caller-owned [`DraftSource`]:
+/// both the γ controller *and* the draft's learned state persist across
+/// calls — the fully-adaptive long-lived stream (the controller tunes γ
+/// to α, the source raises α itself).
+pub fn sd_generate_from_with_controller(
+    target: &dyn Backend,
+    source: &mut dyn DraftSource,
+    history: &[f32],
+    n_hist: usize,
+    horizon: usize,
+    cfg: &SpecConfig,
+    ctrl: &mut GammaController,
+) -> Result<DecodeOutput> {
     ctrl.config().validate()?;
     if cfg.variant == Variant::Lossless {
         anyhow::ensure!(
@@ -203,7 +267,7 @@ pub fn sd_generate_with_controller(
     }
     sd_generate_impl(
         target,
-        draft,
+        source,
         history,
         n_hist,
         horizon,
@@ -226,9 +290,11 @@ pub fn sd_generate_scheduled(
     cfg: &SpecConfig,
     schedule: &[usize],
 ) -> Result<DecodeOutput> {
+    anyhow::ensure!(target.patch() == draft.patch(), "patch mismatch");
+    let mut source = make_source(&cfg.draft, draft)?;
     sd_generate_impl(
         target,
-        draft,
+        source.as_mut(),
         history,
         n_hist,
         horizon,
@@ -239,7 +305,7 @@ pub fn sd_generate_scheduled(
 
 fn sd_generate_impl(
     target: &dyn Backend,
-    draft: &dyn Backend,
+    source: &mut dyn DraftSource,
     history: &[f32],
     n_hist: usize,
     horizon: usize,
@@ -247,7 +313,8 @@ fn sd_generate_impl(
     plan: &mut GammaPlan<'_>,
 ) -> Result<DecodeOutput> {
     let p = target.patch();
-    anyhow::ensure!(p == draft.patch(), "patch mismatch");
+    anyhow::ensure!(p == source.patch(), "patch mismatch");
+    anyhow::ensure!(n_hist >= 1, "need at least one history patch");
     anyhow::ensure!(history.len() >= n_hist * p, "history too short");
     anyhow::ensure!(cfg.gamma >= 1, "gamma >= 1");
     if cfg.variant == Variant::Lossless {
@@ -262,12 +329,36 @@ fn sd_generate_impl(
         );
     }
 
+    let max_ctx = target.max_ctx().min(source.max_ctx());
+    // Config-vs-backend validation up front: the old engine only tripped
+    // over an oversized γ when the first window slide discovered it,
+    // mid-decode, with session state already diverging. A round appends
+    // γ + 1 patches and must keep >= 1 context patch, so γ + 1 < max_ctx.
+    anyhow::ensure!(
+        cfg.gamma + 1 < max_ctx,
+        "gamma {} cannot fit the joint context window: a round appends \
+         gamma + 1 patches and must keep at least one context patch \
+         (target max_ctx {}, draft max_ctx {}) — lower gamma or raise \
+         the binding side's context",
+        cfg.gamma,
+        target.max_ctx(),
+        source.max_ctx()
+    );
+
     let mut rng = Rng::new(cfg.seed);
-    // Long-lived decode sessions: both models carry the full emitted
-    // context; rejection rolls their state back instead of rebuilding it.
-    let mut t_sess = begin_session(target, cfg.cache, history, n_hist)?;
-    let mut d_sess = begin_session(draft, cfg.cache, history, n_hist)?;
-    let max_ctx = target.max_ctx().min(draft.max_ctx());
+    // Clamp the opening history to the *joint* window before priming
+    // either side, so target and draft contexts align patch-for-patch
+    // even when their max_ctx differ (previously each session clamped to
+    // its own window, silently conditioning the two models on different
+    // histories when a small-context draft met a long history).
+    let keep0 = n_hist.min(max_ctx);
+    let hist = &history[(n_hist - keep0) * p..n_hist * p];
+    // Long-lived decode state: the target session and the draft source
+    // carry the full emitted context; rejection rolls state back instead
+    // of rebuilding it.
+    let mut t_sess = begin_session(target, cfg.cache, hist, keep0)?;
+    source.begin(hist, keep0, cfg.cache)?;
+    let upd0 = source.updates();
     let mut emitted = 0usize;
     let mut out_patches: Vec<f32> = Vec::with_capacity(horizon * p);
     let mut rounds = Vec::new();
@@ -291,7 +382,7 @@ fn sd_generate_impl(
             anyhow::ensure!(need < max_ctx, "gamma {gamma} cannot fit in max_ctx {max_ctx}");
             let keep = max_ctx - need;
             t_sess.evict_to(keep)?;
-            d_sess.evict_to(keep)?;
+            source.evict_to(keep)?;
         }
 
         if gamma == 0 {
@@ -302,7 +393,7 @@ fn sd_generate_impl(
             t_sess.append(&patch, 1)?;
             let tt = t0.elapsed();
             let t1 = Instant::now();
-            d_sess.append(&patch, 1)?;
+            source.append(&patch, 1)?;
             let dt = t1.elapsed();
             out_patches.extend_from_slice(&patch);
             emitted += 1;
@@ -321,34 +412,26 @@ fn sd_generate_impl(
             continue;
         }
 
-        // --- Draft proposes gamma patches autoregressively (Alg. 1 l.1-3).
-        // The first mean comes off the session tip; each proposal i < γ-1
-        // is pushed through `extend` to produce the next mean. Proposal
-        // γ-1 is only needed by target validation, so it never enters the
-        // draft context (nothing would read its successor mean).
+        // --- The source proposes gamma patches autoregressively
+        // (Alg. 1 l.1-3): sampled x_i ~ N(mu_q_i, sigma^2) through this
+        // decode's RNG stream, each mean conditioned on the committed
+        // context plus the proposals so far.
         let t0 = Instant::now();
-        let mut mu_q = d_sess.tip_mean()?;
+        let block = source.propose(gamma, policy.sigma, &mut rng)?;
         let mut draft_time = t0.elapsed();
-        let mut proposals: Vec<Vec<f32>> = Vec::with_capacity(gamma);
-        let mut mu_qs: Vec<Vec<f32>> = Vec::with_capacity(gamma);
-        for i in 0..gamma {
-            let mut x = vec![0.0f32; p];
-            rng.fill_normal_around(&mu_q, policy.sigma as f32, &mut x);
-            proposals.push(x);
-            mu_qs.push(mu_q.clone());
-            if i + 1 < gamma {
-                let td = Instant::now();
-                let rows = d_sess.extend(proposals.last().unwrap(), 1)?;
-                draft_time += td.elapsed();
-                mu_q = rows[p..].to_vec();
-            }
-        }
+        anyhow::ensure!(
+            block.proposals.len() == gamma && block.mu_qs.len() == gamma,
+            "draft source returned {} proposals for gamma {gamma}",
+            block.proposals.len()
+        );
+        let proposals = &block.proposals;
+        let mu_qs = &block.mu_qs;
 
         // --- One target pass validates all gamma+1 prefix conditionals
         // (l.4): `extend` returns the means at positions n0-1 ..= n0+γ-1,
         // i.e. mu_p for every proposal plus the bonus patch.
         let mut flat = Vec::with_capacity(gamma * p);
-        for x in &proposals {
+        for x in proposals {
             flat.extend_from_slice(x);
         }
         let t1 = Instant::now();
@@ -371,37 +454,26 @@ fn sd_generate_impl(
             }
         }
 
-        // --- Rewind to the accepted prefix (the KV-cache rollback that
-        // replaces the old truncate-and-rebuild), then emit per protocol.
-        // The draft session holds γ-1 proposals, the target session γ.
-        let keep_d = accepted.min(gamma - 1);
+        // --- Rewind the target to the accepted prefix (the KV-cache
+        // rollback that replaces the old truncate-and-rebuild), then emit
+        // per protocol. The draft side is rewound by `finish_round`.
+        let mut emit_flat: Vec<f32> = Vec::with_capacity(accepted * p);
         match cfg.emission {
             Emission::Sampled => {
-                // Accepted proposals are already in both contexts.
+                // Accepted proposals are already in the target context.
                 let t2 = Instant::now();
                 t_sess.rollback(gamma - accepted)?;
                 target_time += t2.elapsed();
-                let t3 = Instant::now();
-                d_sess.rollback((gamma - 1) - keep_d)?;
-                if accepted > keep_d {
-                    // All γ accepted: proposal γ-1 never entered the draft.
-                    d_sess.append(proposals.last().unwrap(), 1)?;
-                }
-                draft_time += t3.elapsed();
                 for x in &proposals[..accepted] {
-                    out_patches.extend_from_slice(x);
+                    emit_flat.extend_from_slice(x);
                 }
             }
             Emission::Mean => {
-                // Contexts must carry the emitted draft means, not the
+                // The context must carry the emitted draft means, not the
                 // sampled proposals: rewind everything and re-append.
                 let t2 = Instant::now();
                 t_sess.rollback(gamma)?;
                 target_time += t2.elapsed();
-                let t3 = Instant::now();
-                d_sess.rollback(gamma - 1)?;
-                draft_time += t3.elapsed();
-                let mut emit_flat = Vec::with_capacity(accepted * p);
                 for m in &mu_qs[..accepted] {
                     emit_flat.extend_from_slice(m);
                 }
@@ -409,13 +481,10 @@ fn sd_generate_impl(
                     let t4 = Instant::now();
                     t_sess.append(&emit_flat, accepted)?;
                     target_time += t4.elapsed();
-                    let t5 = Instant::now();
-                    d_sess.append(&emit_flat, accepted)?;
-                    draft_time += t5.elapsed();
                 }
-                out_patches.extend_from_slice(&emit_flat);
             }
         }
+        out_patches.extend_from_slice(&emit_flat);
 
         let mut residual_draws = 0usize;
         let final_patch: Vec<f32> = match rejected_at {
@@ -462,9 +531,23 @@ fn sd_generate_impl(
         let t6 = Instant::now();
         t_sess.append(&final_patch, 1)?;
         target_time += t6.elapsed();
+
+        // --- Verification feedback: the source rewinds its rejected
+        // suffix, commits what was emitted, and (for learning sources)
+        // flushes its paused online update — all draft-side cost, so the
+        // controller's measured c stays per-source honest.
         let t7 = Instant::now();
-        d_sess.append(&final_patch, 1)?;
+        source.finish_round(&RoundFeedback {
+            gamma,
+            accepted,
+            alphas: &alphas,
+            target_means: &val_rows,
+            committed: &emit_flat,
+            final_patch: &final_patch,
+            sampled: cfg.emission == Emission::Sampled,
+        })?;
         draft_time += t7.elapsed();
+
         // Residual thinning consumes no extra target *forwards* (it samples
         // from the already-computed head); `residual_draws` records the
         // draw count for the §B.6 cost analysis.
@@ -485,6 +568,7 @@ fn sd_generate_impl(
     }
 
     out_patches.truncate(horizon * p);
+    stats.draft_updates = source.updates().saturating_sub(upd0);
     Ok(DecodeOutput { patches: out_patches, rounds, stats })
 }
 
@@ -517,6 +601,7 @@ mod tests {
             max_residual_draws: 10_000,
             emission: Emission::Sampled,
             cache: CacheMode::On,
+            draft: DraftConfig::default(),
             adaptive: None,
         }
     }
@@ -683,34 +768,121 @@ mod tests {
         }
     }
 
+    /// A tight-window shim over the analytic head, shared by the sliding
+    /// and clamping tests below.
+    struct Limited(AnalyticBackend, usize);
+    impl crate::models::Backend for Limited {
+        fn name(&self) -> &str {
+            self.0.name()
+        }
+        fn patch(&self) -> usize {
+            self.0.patch()
+        }
+        fn max_ctx(&self) -> usize {
+            self.1
+        }
+        fn forward(&self, tokens: &[f32], n: usize) -> Result<Vec<f32>> {
+            assert!(n <= self.1, "context overflow: {n}");
+            self.0.forward(tokens, n)
+        }
+        fn flops(&self, n: usize) -> f64 {
+            self.0.flops(n)
+        }
+    }
+
     #[test]
     fn long_horizon_slides_context() {
-        // max_ctx is effectively unlimited for AnalyticBackend, so wrap it
-        // with a tight-limit shim to exercise the sliding path.
-        struct Limited(AnalyticBackend);
-        impl crate::models::Backend for Limited {
-            fn name(&self) -> &str {
-                self.0.name()
-            }
-            fn patch(&self) -> usize {
-                self.0.patch()
-            }
-            fn max_ctx(&self) -> usize {
-                6
-            }
-            fn forward(&self, tokens: &[f32], n: usize) -> Result<Vec<f32>> {
-                assert!(n <= 6, "context overflow: {n}");
-                self.0.forward(tokens, n)
-            }
-            fn flops(&self, n: usize) -> f64 {
-                self.0.flops(n)
-            }
-        }
-        let t = Limited(AnalyticBackend::new("t", 2, 0.8, 0.1));
-        let d = Limited(AnalyticBackend::new("d", 2, 0.75, 0.1));
+        let t = Limited(AnalyticBackend::new("t", 2, 0.8, 0.1), 6);
+        let d = Limited(AnalyticBackend::new("d", 2, 0.75, 0.1), 6);
         let out =
             sd_generate(&t, &d, &[0.5, -0.5], 1, 30, &cfg(3, 0.5, Variant::Practical, 7)).unwrap();
         assert_eq!(out.patches.len(), 30 * 2);
+    }
+
+    /// The max_ctx footgun fix: an opening γ that can never fit the joint
+    /// window — including when the *draft* is the binding constraint —
+    /// must be a clear error at decode entry, not mid-decode weirdness.
+    #[test]
+    fn oversized_gamma_is_a_clear_upfront_error() {
+        let t = AnalyticBackend::new("t", 1, 0.8, 0.1); // max_ctx unbounded
+        let d = Limited(AnalyticBackend::new("d", 1, 0.8, 0.1), 4);
+        let err = sd_generate(&t, &d, &[0.0, 0.1, 0.2], 3, 10, &cfg(5, 0.5, Variant::Practical, 1))
+            .unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("cannot fit"), "unexpected error: {msg}");
+        assert!(msg.contains("draft max_ctx 4"), "error must name the binding side: {msg}");
+        // gamma 2 fits (2 + 1 < 4): same setup must decode fine.
+        let out = sd_generate(&t, &d, &[0.0, 0.1, 0.2], 3, 10, &cfg(2, 0.5, Variant::Practical, 1))
+            .unwrap();
+        assert_eq!(out.patches.len(), 10);
+    }
+
+    /// A small-context draft meeting a long history: both sides must be
+    /// clamped to the *joint* window (previously each clamped to its own,
+    /// silently conditioning the two models on different histories).
+    #[test]
+    fn mismatched_max_ctx_aligns_on_joint_window() {
+        let t = AnalyticBackend::new("t", 1, 0.9, 0.0);
+        let d = Limited(AnalyticBackend::new("d", 1, 0.9, 0.0), 5);
+        let hist: Vec<f32> = (0..12).map(|i| i as f32 * 0.1).collect();
+        // Identical heads under the same window accept everything; a
+        // desynced window would show up as rejections.
+        let out = sd_generate(&t, &d, &hist, 12, 8, &cfg(2, 0.5, Variant::Practical, 9)).unwrap();
+        assert_eq!(out.patches.len(), 8);
+        assert_eq!(out.stats.accepted, out.stats.proposals, "window desync broke acceptance");
+    }
+
+    #[test]
+    fn draft_free_sources_decode_exact_horizon() {
+        use super::super::draft::DraftKind;
+        let t = AnalyticBackend::new("t", 2, 0.8, 0.1);
+        let d = AnalyticBackend::new("d", 2, 0.75, 0.1); // only supplies patch size
+        for kind in [DraftKind::Extrap, DraftKind::Adaptive] {
+            for (variant, emission) in [
+                (Variant::Practical, Emission::Mean),
+                (Variant::Practical, Emission::Sampled),
+                (Variant::Lossless, Emission::Sampled),
+            ] {
+                let mut c = cfg(3, 0.5, variant, 13);
+                c.emission = emission;
+                c.draft.kind = kind;
+                let out = sd_generate(&t, &d, &[0.5, -0.5, 0.2, 0.1], 2, 15, &c).unwrap();
+                assert_eq!(out.patches.len(), 15 * 2, "{kind:?}/{variant:?}");
+                assert!(out.patches.iter().all(|v| v.is_finite()));
+                assert_eq!(out.stats.sum_block_len, 15);
+            }
+        }
+    }
+
+    #[test]
+    fn adaptive_source_learns_the_target_online() {
+        use super::super::draft::{AdaptiveResidualDraft, ModelDraft};
+        // Frozen biased model draft vs the online residual head, same
+        // target, same stream of windows: after enough feedback the
+        // learned head's acceptance must overtake the frozen draft's.
+        let t = AnalyticBackend::new("t", 2, 0.5, 0.8);
+        let d_frozen = AnalyticBackend::new("d", 2, 0.5, 0.0); // stale bias
+        let mut frozen = ModelDraft::new(&d_frozen);
+        let mut learned = AdaptiveResidualDraft::new(2, 0.5);
+        let c = cfg(3, 0.5, Variant::Practical, 17);
+        let (mut a_frozen, mut a_learned) = (0.0, 0.0);
+        for w in 0..30 {
+            let hist = [0.3 + 0.01 * w as f32, -0.2];
+            let mut cw = c;
+            cw.seed = 1000 + w as u64;
+            let of = sd_generate_from(&t, &mut frozen, &hist, 1, 10, &cw).unwrap();
+            let ol = sd_generate_from(&t, &mut learned, &hist, 1, 10, &cw).unwrap();
+            if w >= 20 {
+                // Score only the tail, once the head has seen feedback.
+                a_frozen += of.stats.alpha_hat();
+                a_learned += ol.stats.alpha_hat();
+            }
+        }
+        assert!(
+            a_learned > a_frozen,
+            "learned draft alpha {a_learned:.3} should beat frozen {a_frozen:.3}"
+        );
+        assert!(learned.updates() > 0, "head never updated");
     }
 
     #[test]
@@ -740,27 +912,8 @@ mod tests {
         // A backend with max_ctx 6 can host at most gamma 4 per round
         // (gamma + 1 appended, >= 1 context patch kept). The controller
         // must clamp even when acceptance begs for more.
-        struct Limited(AnalyticBackend);
-        impl crate::models::Backend for Limited {
-            fn name(&self) -> &str {
-                self.0.name()
-            }
-            fn patch(&self) -> usize {
-                self.0.patch()
-            }
-            fn max_ctx(&self) -> usize {
-                6
-            }
-            fn forward(&self, tokens: &[f32], n: usize) -> Result<Vec<f32>> {
-                assert!(n <= 6, "context overflow: {n}");
-                self.0.forward(tokens, n)
-            }
-            fn flops(&self, n: usize) -> f64 {
-                self.0.flops(n)
-            }
-        }
-        let t = Limited(AnalyticBackend::new("t", 1, 0.9, 0.0));
-        let d = Limited(AnalyticBackend::new("d", 1, 0.9, 0.0));
+        let t = Limited(AnalyticBackend::new("t", 1, 0.9, 0.0), 6);
+        let d = Limited(AnalyticBackend::new("d", 1, 0.9, 0.0), 6);
         let mut c = cfg(3, 0.5, Variant::Practical, 11);
         c.adaptive = Some(AdaptiveConfig {
             warmup: 1,

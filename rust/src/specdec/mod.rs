@@ -1,6 +1,6 @@
 //! Speculative decoding engine (paper §3, Algorithms 1 & 2).
 //!
-//! A draft backend autoregressively proposes γ patches; the target backend
+//! A draft source autoregressively proposes γ patches; the target backend
 //! validates all γ+1 prefix conditionals in **one** forward over the
 //! extended sequence (causality gives every prefix's next-patch mean in a
 //! single pass — the paper's "single batched target pass"). Acceptance is
@@ -13,21 +13,36 @@
 //!   residual r ∝ (p - q)_+ via thinning from p (§A.5.1); exact law p
 //!   (Theorems 1–2) at expected cost 1/(1-β) target draws per rejection.
 
-//! A third axis (this PR): the *adaptive speculation controller*
-//! ([`controller`]) closes the loop between the measured acceptance
-//! telemetry and the closed-form speedup curve — per-stream γ (and
-//! optionally σ) retuned online, with hysteresis, never changing what is
-//! emitted (replay-pinned; see [`sd_generate_scheduled`]).
+//! A third axis (adaptive-controller PR): the *adaptive speculation
+//! controller* ([`GammaController`]) closes the loop between the measured
+//! acceptance telemetry and the closed-form speedup curve — per-stream γ
+//! (and optionally σ) retuned online, with hysteresis, never changing
+//! what is emitted (replay-pinned; see [`sd_generate_scheduled`]).
+//!
+//! A fourth axis (this PR): *pluggable draft sources* ([`draft`]) — where
+//! proposals come from is a trait, not a hard-wired second model. The
+//! classic [`ModelDraft`] stays bit-identical to the pre-refactor engine;
+//! [`ExtrapolationDraft`] drafts for free from a closed-form continuation
+//! (c → 0, the Eq. 5 best case); [`AdaptiveResidualDraft`] learns from
+//! each round's verification feedback, pushing the acceptance rate α up
+//! online — the controller tunes γ *to* α, the draft source tunes α
+//! itself.
 
 mod batched;
 mod controller;
+pub mod draft;
 mod engine;
 mod stats;
 
-pub use batched::{sd_generate_batch, sd_generate_stream};
+pub use batched::{sd_generate_batch, sd_generate_stream, sd_generate_stream_from};
 pub use controller::{AdaptiveConfig, ControllerState, GammaController};
+pub use draft::{
+    make_batch_source, make_free_source, make_source, AdaptiveResidualDraft, BatchDraftSource,
+    DraftConfig, DraftKind, DraftSource, ExtrapolationDraft, ModelBatchDraft, ModelDraft,
+    ProposalBlock, RoundFeedback,
+};
 pub use engine::{
-    sd_generate, sd_generate_scheduled, sd_generate_with_controller, Emission, SpecConfig,
-    Variant,
+    sd_generate, sd_generate_from, sd_generate_from_with_controller, sd_generate_scheduled,
+    sd_generate_with_controller, Emission, SpecConfig, Variant,
 };
 pub use stats::{DecodeOutput, DecodeStats, RoundStats};

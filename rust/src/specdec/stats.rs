@@ -47,6 +47,10 @@ pub struct DecodeStats {
     pub draft_time: Duration,
     /// Total wall clock in target-model work.
     pub target_time: Duration,
+    /// Online draft-parameter updates applied during this decode (0 for
+    /// non-learning draft sources; set by the decode loops from
+    /// `DraftSource::updates` deltas, not accumulated per round).
+    pub draft_updates: usize,
 }
 
 impl DecodeStats {
@@ -92,6 +96,24 @@ impl DecodeStats {
         }
     }
 
+    /// Measured draft/target cost ratio over this decode: mean draft
+    /// wall clock per proposal relative to mean target wall clock per
+    /// validation round — the paper's c, in the same convention the
+    /// adaptive controller measures it. Near zero for draft-free
+    /// sources. NaN until both clocks have ticked.
+    pub fn cost_ratio(&self) -> f64 {
+        if self.proposals == 0 || self.rounds == 0 {
+            return f64::NAN;
+        }
+        let per_prop = self.draft_time.as_secs_f64() / self.proposals as f64;
+        let per_round = self.target_time.as_secs_f64() / self.rounds as f64;
+        if per_round > 0.0 {
+            per_prop / per_round
+        } else {
+            f64::NAN
+        }
+    }
+
     /// Add another decode's aggregate into this one.
     pub fn merge(&mut self, other: &DecodeStats) {
         self.rounds += other.rounds;
@@ -105,6 +127,7 @@ impl DecodeStats {
         self.sum_block_len += other.sum_block_len;
         self.draft_time += other.draft_time;
         self.target_time += other.target_time;
+        self.draft_updates += other.draft_updates;
     }
 }
 
@@ -167,5 +190,32 @@ mod tests {
         let s = DecodeStats::default();
         assert!(s.alpha_hat().is_nan());
         assert!(s.mean_block_len().is_nan());
+        assert!(s.cost_ratio().is_nan());
+    }
+
+    #[test]
+    fn cost_ratio_per_proposal_vs_per_round() {
+        let mut s = DecodeStats::default();
+        // Two rounds of gamma 2: draft 10us total per round (5us per
+        // proposal), target 40us per round => c = 5/40 = 0.125.
+        s.absorb(&round(2, 2, vec![1.0, 1.0]));
+        s.absorb(&round(2, 1, vec![1.0, 0.2]));
+        assert!((s.cost_ratio() - 0.125).abs() < 1e-12, "c {}", s.cost_ratio());
+        // A zero-cost draft measures c = 0, not NaN.
+        let mut z = DecodeStats::default();
+        let mut r = round(2, 2, vec![1.0, 1.0]);
+        r.draft_time = Duration::ZERO;
+        z.absorb(&r);
+        assert_eq!(z.cost_ratio(), 0.0);
+    }
+
+    #[test]
+    fn draft_updates_merge_additively() {
+        let mut a = DecodeStats::default();
+        a.draft_updates = 3;
+        let mut b = DecodeStats::default();
+        b.draft_updates = 4;
+        a.merge(&b);
+        assert_eq!(a.draft_updates, 7);
     }
 }

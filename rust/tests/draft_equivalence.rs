@@ -1,0 +1,700 @@
+//! Draft-source subsystem equivalence + invariants.
+//!
+//! 1. **Bit-identity of the refactor.** The engine now drives a pluggable
+//!    `DraftSource`; the default `ModelDraft` must reproduce the
+//!    pre-refactor two-session decode loop *bit for bit*. The pre-refactor
+//!    loop is preserved verbatim below (`reference::sd_generate` /
+//!    `reference::sd_generate_batch`, copied from the engine as it stood
+//!    before this PR, fixed-γ path) and compared against the new engine
+//!    across backends × cache modes × variants × emissions × seeds —
+//!    including horizons that force window slides.
+//! 2. **DraftSource invariants** (proptest_lite): a propose returns
+//!    exactly γ proposals and γ means; a full round leaves the committed
+//!    history untouched (the new context is exactly old context +
+//!    committed + final patch — rolled-back proposals never leak); the
+//!    adaptive head is deterministic under a fixed seed.
+
+use stride::accept::AcceptancePolicy;
+use stride::models::{AnalyticBackend, CacheMode, NativeBackend};
+use stride::nn::model::tiny_model;
+use stride::specdec::{
+    sd_generate, sd_generate_batch, DraftConfig, Emission, SpecConfig, Variant,
+};
+use stride::util::proptest_lite::{check_with, Config, Gen};
+use stride::util::rng::Rng;
+
+fn cfg(gamma: usize, sigma: f64, variant: Variant, emission: Emission, seed: u64) -> SpecConfig {
+    SpecConfig {
+        gamma,
+        policy: AcceptancePolicy::new(sigma, 1.0),
+        variant,
+        seed,
+        max_residual_draws: 10_000,
+        emission,
+        cache: CacheMode::On,
+        draft: DraftConfig::default(),
+        adaptive: None,
+    }
+}
+
+/// The decode loops exactly as they stood before the draft-source
+/// refactor (fixed-γ path), driving the draft as a second decode
+/// session. Kept verbatim as the frozen equivalence baseline.
+mod reference {
+    use anyhow::Result;
+    use stride::models::{begin_batch_session, begin_session, Backend};
+    use stride::specdec::{Emission, SpecConfig, Variant};
+    use stride::util::rng::Rng;
+
+    /// What the equivalence assertions need from a decode.
+    pub struct RefOutput {
+        pub patches: Vec<f32>,
+        pub rounds: usize,
+        pub proposals: usize,
+        pub accepted: usize,
+        pub gammas: Vec<usize>,
+    }
+
+    fn emit_from_p(mu: &[f32], sigma: f64, emission: Emission, rng: &mut Rng) -> Vec<f32> {
+        match emission {
+            Emission::Sampled => {
+                let mut buf = vec![0.0f32; mu.len()];
+                rng.fill_normal_around(mu, sigma as f32, &mut buf);
+                buf
+            }
+            Emission::Mean => mu.to_vec(),
+        }
+    }
+
+    pub fn sd_generate(
+        target: &dyn Backend,
+        draft: &dyn Backend,
+        history: &[f32],
+        n_hist: usize,
+        horizon: usize,
+        cfg: &SpecConfig,
+    ) -> Result<RefOutput> {
+        let p = target.patch();
+        let mut rng = Rng::new(cfg.seed);
+        let mut t_sess = begin_session(target, cfg.cache, history, n_hist)?;
+        let mut d_sess = begin_session(draft, cfg.cache, history, n_hist)?;
+        let max_ctx = target.max_ctx().min(draft.max_ctx());
+        let mut emitted = 0usize;
+        let mut out = RefOutput {
+            patches: Vec::with_capacity(horizon * p),
+            rounds: 0,
+            proposals: 0,
+            accepted: 0,
+            gammas: Vec::new(),
+        };
+
+        while emitted < horizon {
+            let remaining = horizon - emitted;
+            let gamma = cfg.gamma.min(remaining.saturating_sub(1));
+            let policy = cfg.policy;
+
+            let need = gamma + 1;
+            let n_ctx_now = t_sess.len();
+            if n_ctx_now + need > max_ctx {
+                anyhow::ensure!(need < max_ctx, "gamma {gamma} cannot fit in max_ctx {max_ctx}");
+                let keep = max_ctx - need;
+                t_sess.evict_to(keep)?;
+                d_sess.evict_to(keep)?;
+            }
+
+            if gamma == 0 {
+                let mu_p = t_sess.tip_mean()?;
+                let patch = emit_from_p(&mu_p, policy.sigma, cfg.emission, &mut rng);
+                t_sess.append(&patch, 1)?;
+                d_sess.append(&patch, 1)?;
+                out.patches.extend_from_slice(&patch);
+                emitted += 1;
+                out.rounds += 1;
+                out.gammas.push(0);
+                continue;
+            }
+
+            // Draft proposes gamma patches autoregressively.
+            let mut mu_q = d_sess.tip_mean()?;
+            let mut proposals: Vec<Vec<f32>> = Vec::with_capacity(gamma);
+            let mut mu_qs: Vec<Vec<f32>> = Vec::with_capacity(gamma);
+            for i in 0..gamma {
+                let mut x = vec![0.0f32; p];
+                rng.fill_normal_around(&mu_q, policy.sigma as f32, &mut x);
+                proposals.push(x);
+                mu_qs.push(mu_q.clone());
+                if i + 1 < gamma {
+                    let rows = d_sess.extend(proposals.last().unwrap(), 1)?;
+                    mu_q = rows[p..].to_vec();
+                }
+            }
+
+            // One target pass validates all gamma+1 prefix conditionals.
+            let mut flat = Vec::with_capacity(gamma * p);
+            for x in &proposals {
+                flat.extend_from_slice(x);
+            }
+            let val_rows = t_sess.extend(&flat, gamma)?;
+            let mu_p_at = |i: usize| &val_rows[i * p..(i + 1) * p];
+
+            // Acceptance scan.
+            let mut accepted = 0usize;
+            let mut rejected_at: Option<usize> = None;
+            for i in 0..gamma {
+                let a = policy.alpha(&proposals[i], mu_p_at(i), &mu_qs[i]);
+                if a >= 1.0 || rng.uniform() < a {
+                    accepted += 1;
+                } else {
+                    rejected_at = Some(i);
+                    break;
+                }
+            }
+
+            // Rewind to the accepted prefix, then emit per protocol.
+            let keep_d = accepted.min(gamma - 1);
+            match cfg.emission {
+                Emission::Sampled => {
+                    t_sess.rollback(gamma - accepted)?;
+                    d_sess.rollback((gamma - 1) - keep_d)?;
+                    if accepted > keep_d {
+                        d_sess.append(proposals.last().unwrap(), 1)?;
+                    }
+                    for x in &proposals[..accepted] {
+                        out.patches.extend_from_slice(x);
+                    }
+                }
+                Emission::Mean => {
+                    t_sess.rollback(gamma)?;
+                    d_sess.rollback(gamma - 1)?;
+                    let mut emit_flat = Vec::with_capacity(accepted * p);
+                    for m in &mu_qs[..accepted] {
+                        emit_flat.extend_from_slice(m);
+                    }
+                    if accepted > 0 {
+                        t_sess.append(&emit_flat, accepted)?;
+                        d_sess.append(&emit_flat, accepted)?;
+                    }
+                    out.patches.extend_from_slice(&emit_flat);
+                }
+            }
+
+            let mut residual_draws = 0usize;
+            let final_patch: Vec<f32> = match rejected_at {
+                None => {
+                    let mu = mu_p_at(gamma);
+                    emit_from_p(mu, policy.sigma, cfg.emission, &mut rng)
+                }
+                Some(i) => {
+                    let mu_p = mu_p_at(i);
+                    match cfg.variant {
+                        Variant::Practical => {
+                            emit_from_p(mu_p, policy.sigma, cfg.emission, &mut rng)
+                        }
+                        Variant::Lossless => {
+                            let mu_q = &mu_qs[i];
+                            let sigma = policy.sigma;
+                            let mut z = vec![0.0f32; p];
+                            loop {
+                                residual_draws += 1;
+                                rng.fill_normal_around(mu_p, sigma as f32, &mut z);
+                                let lqp =
+                                    stride::gaussian::iso_log_ratio(&z, mu_q, mu_p, sigma);
+                                let pi = 1.0 - lqp.min(0.0).exp();
+                                if rng.uniform() < pi {
+                                    break;
+                                }
+                                if residual_draws >= cfg.max_residual_draws {
+                                    break;
+                                }
+                            }
+                            z
+                        }
+                    }
+                }
+            };
+            out.patches.extend_from_slice(&final_patch);
+            t_sess.append(&final_patch, 1)?;
+            d_sess.append(&final_patch, 1)?;
+            emitted += accepted + 1;
+            out.rounds += 1;
+            out.proposals += gamma;
+            out.accepted += accepted;
+            out.gammas.push(gamma);
+        }
+
+        out.patches.truncate(horizon * p);
+        Ok(out)
+    }
+
+    pub fn sd_generate_batch(
+        target: &dyn Backend,
+        draft: &dyn Backend,
+        tasks: &[(&[f32], usize, usize)],
+        cfg: &SpecConfig,
+    ) -> Result<Vec<RefOutput>> {
+        let p = target.patch();
+        let max_ctx = target.max_ctx().min(draft.max_ctx());
+        let sess_tasks: Vec<(&[f32], usize)> =
+            tasks.iter().map(|(h, n, _)| (*h, *n)).collect();
+        let mut t_bs = begin_batch_session(target, cfg.cache, &sess_tasks)?;
+        let mut d_bs = begin_batch_session(draft, cfg.cache, &sess_tasks)?;
+
+        struct Seq {
+            out: RefOutput,
+            horizon: usize,
+            emitted: usize,
+            rng: Rng,
+        }
+        let mut seqs: Vec<Seq> = tasks
+            .iter()
+            .enumerate()
+            .map(|(i, (_, _, horizon))| Seq {
+                out: RefOutput {
+                    patches: Vec::with_capacity(horizon * p),
+                    rounds: 0,
+                    proposals: 0,
+                    accepted: 0,
+                    gammas: Vec::new(),
+                },
+                horizon: *horizon,
+                emitted: 0,
+                rng: Rng::new(cfg.seed.wrapping_add(i as u64 * 0x9E37_79B9)),
+            })
+            .collect();
+
+        loop {
+            let active: Vec<usize> =
+                (0..seqs.len()).filter(|&i| seqs[i].emitted < seqs[i].horizon).collect();
+            if active.is_empty() {
+                break;
+            }
+            let a = active.len();
+            let desired: Vec<usize> = active
+                .iter()
+                .map(|&i| {
+                    cfg.gamma
+                        .min((seqs[i].horizon - seqs[i].emitted).saturating_sub(1))
+                })
+                .collect();
+            let gamma = desired.iter().copied().max().unwrap().max(1);
+
+            for &i in &active {
+                let n_now = t_bs.len(i);
+                if n_now + gamma + 1 > max_ctx {
+                    let keep = max_ctx - (gamma + 1);
+                    t_bs.evict_to(i, keep)?;
+                    d_bs.evict_to(i, keep)?;
+                }
+            }
+
+            let mut mu_q = d_bs.tip_means(&active)?;
+            let mut proposals: Vec<Vec<Vec<f32>>> = vec![Vec::new(); a];
+            let mut mu_qs: Vec<Vec<Vec<f32>>> = vec![Vec::new(); a];
+            for step in 0..gamma {
+                let mut xs = vec![0.0f32; a * p];
+                for (ai, &i) in active.iter().enumerate() {
+                    let mq = &mu_q[ai * p..(ai + 1) * p];
+                    seqs[i].rng.fill_normal_around(
+                        mq,
+                        cfg.policy.sigma as f32,
+                        &mut xs[ai * p..(ai + 1) * p],
+                    );
+                    proposals[ai].push(xs[ai * p..(ai + 1) * p].to_vec());
+                    mu_qs[ai].push(mq.to_vec());
+                }
+                if step + 1 < gamma {
+                    let rows = d_bs.extend(&active, &xs, 1)?;
+                    for ai in 0..a {
+                        mu_q[ai * p..(ai + 1) * p]
+                            .copy_from_slice(&rows[ai * 2 * p + p..(ai + 1) * 2 * p]);
+                    }
+                }
+            }
+
+            let mut flat = vec![0.0f32; a * gamma * p];
+            for ai in 0..a {
+                for (k, x) in proposals[ai].iter().enumerate() {
+                    flat[ai * gamma * p + k * p..ai * gamma * p + (k + 1) * p]
+                        .copy_from_slice(x);
+                }
+            }
+            let val_rows = t_bs.extend(&active, &flat, gamma)?;
+
+            for (ai, &i) in active.iter().enumerate() {
+                let base = ai * (gamma + 1) * p;
+                let mu_p_at = |k: usize| &val_rows[base + k * p..base + (k + 1) * p];
+                let g_i = desired[ai];
+                let mut accepted = 0usize;
+                let mut rejected_at = None;
+                for k in 0..g_i {
+                    let alpha = cfg.policy.alpha(&proposals[ai][k], mu_p_at(k), &mu_qs[ai][k]);
+                    if alpha >= 1.0 || seqs[i].rng.uniform() < alpha {
+                        accepted += 1;
+                    } else {
+                        rejected_at = Some(k);
+                        break;
+                    }
+                }
+
+                let keep_d = accepted.min(gamma - 1);
+                let mut emit: Vec<f32> = Vec::with_capacity((accepted + 1) * p);
+                match cfg.emission {
+                    Emission::Sampled => {
+                        t_bs.rollback(i, gamma - accepted)?;
+                        d_bs.rollback(i, (gamma - 1) - keep_d)?;
+                        if accepted > keep_d {
+                            d_bs.append(i, &proposals[ai][gamma - 1], 1)?;
+                        }
+                        for x in &proposals[ai][..accepted] {
+                            emit.extend_from_slice(x);
+                        }
+                    }
+                    Emission::Mean => {
+                        t_bs.rollback(i, gamma)?;
+                        d_bs.rollback(i, gamma - 1)?;
+                        for m in &mu_qs[ai][..accepted] {
+                            emit.extend_from_slice(m);
+                        }
+                        if accepted > 0 {
+                            t_bs.append(i, &emit, accepted)?;
+                            d_bs.append(i, &emit, accepted)?;
+                        }
+                    }
+                }
+
+                let mut residual_draws = 0usize;
+                let final_mu: Vec<f32> = match rejected_at {
+                    None => mu_p_at(g_i).to_vec(),
+                    Some(k) => mu_p_at(k).to_vec(),
+                };
+                let final_patch = match (rejected_at, cfg.variant) {
+                    (Some(k), Variant::Lossless) => {
+                        let mu_q = &mu_qs[ai][k];
+                        let sigma = cfg.policy.sigma;
+                        let mut z = vec![0.0f32; p];
+                        loop {
+                            residual_draws += 1;
+                            seqs[i].rng.fill_normal_around(&final_mu, sigma as f32, &mut z);
+                            let lqp =
+                                stride::gaussian::iso_log_ratio(&z, mu_q, &final_mu, sigma);
+                            let pi = 1.0 - lqp.min(0.0).exp();
+                            if seqs[i].rng.uniform() < pi
+                                || residual_draws >= cfg.max_residual_draws
+                            {
+                                break;
+                            }
+                        }
+                        z
+                    }
+                    _ => match cfg.emission {
+                        Emission::Sampled => {
+                            let mut z = vec![0.0f32; p];
+                            seqs[i].rng.fill_normal_around(
+                                &final_mu,
+                                cfg.policy.sigma as f32,
+                                &mut z,
+                            );
+                            z
+                        }
+                        Emission::Mean => final_mu,
+                    },
+                };
+                emit.extend_from_slice(&final_patch);
+                t_bs.append(i, &final_patch, 1)?;
+                d_bs.append(i, &final_patch, 1)?;
+
+                let take = (accepted + 1).min(seqs[i].horizon - seqs[i].emitted);
+                seqs[i].out.patches.extend_from_slice(&emit[..take * p]);
+                seqs[i].emitted += take;
+                seqs[i].out.rounds += 1;
+                seqs[i].out.proposals += g_i;
+                seqs[i].out.accepted += accepted;
+                seqs[i].out.gammas.push(g_i);
+            }
+        }
+
+        Ok(seqs.into_iter().map(|s| s.out).collect())
+    }
+}
+
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+/// Every (variant, emission) combo the engine accepts.
+const COMBOS: &[(Variant, Emission)] = &[
+    (Variant::Practical, Emission::Mean),
+    (Variant::Practical, Emission::Sampled),
+    (Variant::Lossless, Emission::Sampled),
+];
+
+#[test]
+fn model_draft_single_is_bit_identical_to_prerefactor_analytic() {
+    let t = AnalyticBackend::new("t", 2, 0.8, 0.1);
+    let d = AnalyticBackend::new("d", 2, 0.7, 0.15);
+    let hist = [0.5f32, -0.5, 0.2, 0.1, -0.3, 0.4];
+    for &(variant, emission) in COMBOS {
+        for seed in [1u64, 7, 42] {
+            for gamma in [1usize, 2, 3, 5] {
+                let c = cfg(gamma, 0.5, variant, emission, seed);
+                let new = sd_generate(&t, &d, &hist, 3, 13, &c).unwrap();
+                let old = reference::sd_generate(&t, &d, &hist, 3, 13, &c).unwrap();
+                assert_eq!(
+                    bits(&new.patches),
+                    bits(&old.patches),
+                    "{variant:?}/{emission:?} gamma {gamma} seed {seed}: patches diverged"
+                );
+                assert_eq!(new.stats.rounds, old.rounds);
+                assert_eq!(new.stats.proposals, old.proposals);
+                assert_eq!(new.stats.accepted, old.accepted);
+                let new_gammas: Vec<usize> = new.rounds.iter().map(|r| r.gamma).collect();
+                assert_eq!(new_gammas, old.gammas);
+            }
+        }
+    }
+}
+
+#[test]
+fn model_draft_single_is_bit_identical_to_prerefactor_native() {
+    // Real transformer pair with a tight window (n_ctx forces repeated
+    // eviction at horizon 17), cached and uncached.
+    let t = NativeBackend::new(tiny_model(31));
+    let d = NativeBackend::new(tiny_model(32));
+    let hist: Vec<f32> = (0..2 * 4).map(|i| (i as f32 * 0.2).sin()).collect();
+    for &(variant, emission) in COMBOS {
+        for cache in [CacheMode::On, CacheMode::Off] {
+            let mut c = cfg(3, 0.4, variant, emission, 11);
+            c.cache = cache;
+            let new = sd_generate(&t, &d, &hist, 2, 17, &c).unwrap();
+            let old = reference::sd_generate(&t, &d, &hist, 2, 17, &c).unwrap();
+            assert_eq!(
+                bits(&new.patches),
+                bits(&old.patches),
+                "{variant:?}/{emission:?}/{cache:?}: native patches diverged"
+            );
+            assert_eq!(new.stats.accepted, old.accepted);
+            assert_eq!(new.stats.rounds, old.rounds);
+        }
+    }
+}
+
+#[test]
+fn model_draft_batched_is_bit_identical_to_prerefactor() {
+    let t = AnalyticBackend::new("t", 2, 0.8, 0.1);
+    let d = AnalyticBackend::new("d", 2, 0.72, 0.12);
+    let h1 = vec![0.5f32, -0.5];
+    let h2 = vec![1.0f32, 0.0, 0.3, 0.3, -0.2, 0.6];
+    let h3 = vec![0.1f32, 0.1];
+    let tasks: Vec<(&[f32], usize, usize)> = vec![(&h1, 1, 9), (&h2, 3, 5), (&h3, 1, 1)];
+    for &(variant, emission) in COMBOS {
+        for seed in [3u64, 19] {
+            let c = cfg(3, 0.5, variant, emission, seed);
+            let new = sd_generate_batch(&t, &d, &tasks, &c).unwrap();
+            let old = reference::sd_generate_batch(&t, &d, &tasks, &c).unwrap();
+            assert_eq!(new.len(), old.len());
+            for (i, (n, o)) in new.iter().zip(&old).enumerate() {
+                assert_eq!(
+                    bits(&n.patches),
+                    bits(&o.patches),
+                    "{variant:?}/{emission:?} seed {seed} seq {i}: patches diverged"
+                );
+                assert_eq!(n.stats.rounds, o.rounds, "seq {i}");
+                assert_eq!(n.stats.proposals, o.proposals, "seq {i}");
+                assert_eq!(n.stats.accepted, o.accepted, "seq {i}");
+            }
+        }
+    }
+}
+
+#[test]
+fn model_draft_batched_native_cached_and_uncached_match_prerefactor() {
+    let t = NativeBackend::new(tiny_model(41));
+    let d = NativeBackend::new(tiny_model(42));
+    let h1: Vec<f32> = (0..2 * 4).map(|i| (i as f32 * 0.2).sin()).collect();
+    let h2: Vec<f32> = (0..4 * 4).map(|i| (i as f32 * 0.3).cos()).collect();
+    let tasks: Vec<(&[f32], usize, usize)> = vec![(&h1, 2, 11), (&h2, 4, 7)];
+    for cache in [CacheMode::On, CacheMode::Off] {
+        let mut c = cfg(3, 0.5, Variant::Practical, Emission::Sampled, 9);
+        c.cache = cache;
+        let new = sd_generate_batch(&t, &d, &tasks, &c).unwrap();
+        let old = reference::sd_generate_batch(&t, &d, &tasks, &c).unwrap();
+        for (i, (n, o)) in new.iter().zip(&old).enumerate() {
+            assert_eq!(
+                bits(&n.patches),
+                bits(&o.patches),
+                "{cache:?} seq {i}: native batched patches diverged"
+            );
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// DraftSource invariants (proptest_lite).
+// ---------------------------------------------------------------------------
+
+use stride::specdec::{make_source, AdaptiveResidualDraft, DraftKind, DraftSource, RoundFeedback};
+
+/// One generated round case: source kind, γ, accepted prefix, history
+/// length, seed.
+#[derive(Clone, Debug)]
+struct RoundCase {
+    kind: usize, // 0 = model, 1 = extrap, 2 = adaptive
+    gamma: usize,
+    accepted: usize,
+    n_hist: usize,
+    seed: u64,
+    sampled: bool,
+}
+
+struct RoundGen;
+
+impl Gen for RoundGen {
+    type Value = RoundCase;
+    fn generate(&self, rng: &mut Rng) -> RoundCase {
+        let gamma = 1 + rng.below(5);
+        RoundCase {
+            kind: rng.below(DraftKind::all().len()),
+            gamma,
+            accepted: rng.below(gamma + 1),
+            n_hist: 1 + rng.below(4),
+            seed: rng.next_u64(),
+            sampled: rng.bernoulli(0.5),
+        }
+    }
+    fn shrink(&self, v: &RoundCase) -> Vec<RoundCase> {
+        let mut out = Vec::new();
+        if v.gamma > 1 {
+            out.push(RoundCase { gamma: v.gamma - 1, accepted: v.accepted.min(v.gamma - 1), ..v.clone() });
+        }
+        if v.accepted > 0 {
+            out.push(RoundCase { accepted: 0, ..v.clone() });
+        }
+        out
+    }
+}
+
+/// Drive one full propose/finish_round cycle on a fresh source and check
+/// the structural invariants.
+fn run_round_case(case: &RoundCase) -> Result<(), String> {
+    let p = 2usize;
+    let backend = AnalyticBackend::new("d", p, 0.6, 0.2);
+    // Same factory the engine uses, so a future DraftKind automatically
+    // joins this property's coverage via DraftKind::all().
+    let dcfg = DraftConfig { kind: DraftKind::all()[case.kind], ..DraftConfig::default() };
+    let mut boxed = make_source(&dcfg, &backend).map_err(|e| e.to_string())?;
+    let src: &mut dyn DraftSource = boxed.as_mut();
+    let hist: Vec<f32> = (0..case.n_hist * p).map(|i| ((i as f32) * 0.3).sin()).collect();
+    src.begin(&hist, case.n_hist, CacheMode::On).map_err(|e| e.to_string())?;
+    let committed_before = src.context().to_vec();
+    let mut rng = Rng::new(case.seed);
+
+    let block = src.propose(case.gamma, 0.5, &mut rng).map_err(|e| e.to_string())?;
+    // Invariant 1: proposal block length == gamma, means aligned.
+    if block.proposals.len() != case.gamma || block.mu_qs.len() != case.gamma {
+        return Err(format!(
+            "block lengths {}/{} != gamma {}",
+            block.proposals.len(),
+            block.mu_qs.len(),
+            case.gamma
+        ));
+    }
+    if block.proposals.iter().chain(&block.mu_qs).any(|v| v.len() != p) {
+        return Err("patch-sized rows violated".into());
+    }
+
+    // Simulated verification outcome: accept `accepted`, commit per
+    // protocol, one final patch.
+    let committed: Vec<f32> = if case.sampled {
+        block.proposals[..case.accepted].iter().flatten().copied().collect()
+    } else {
+        block.mu_qs[..case.accepted].iter().flatten().copied().collect()
+    };
+    let final_patch = vec![0.25f32; p];
+    let target_means = vec![0.1f32; (case.gamma + 1) * p];
+    let alphas = vec![0.9f64; case.accepted.min(case.gamma) + 1];
+    src.finish_round(&RoundFeedback {
+        gamma: case.gamma,
+        accepted: case.accepted,
+        alphas: &alphas,
+        target_means: &target_means,
+        committed: &committed,
+        final_patch: &final_patch,
+        sampled: case.sampled,
+    })
+    .map_err(|e| e.to_string())?;
+
+    // Invariant 2: committed history is untouched and extended by exactly
+    // committed + final — rolled-back proposals never leak into context.
+    let ctx = src.context();
+    let want_len = committed_before.len() + committed.len() + p;
+    if ctx.len() != want_len {
+        return Err(format!("context len {} != expected {}", ctx.len(), want_len));
+    }
+    if ctx[..committed_before.len()] != committed_before[..] {
+        return Err("committed history prefix was mutated".into());
+    }
+    if ctx[committed_before.len()..committed_before.len() + committed.len()] != committed[..] {
+        return Err("committed patches not appended verbatim".into());
+    }
+    if ctx[want_len - p..] != final_patch[..] {
+        return Err("final patch not appended".into());
+    }
+    Ok(())
+}
+
+#[test]
+fn draft_source_round_invariants_hold() {
+    check_with(Config { cases: 300, seed: 0xD0A5, max_shrink_rounds: 100 }, &RoundGen, |case| {
+        run_round_case(case)
+    });
+}
+
+#[test]
+fn adaptive_head_is_deterministic_under_fixed_seed() {
+    // Two independent sources fed bit-identical streams must produce
+    // bit-identical heads, proposals, and update counts — across many
+    // random stream shapes.
+    check_with(
+        Config { cases: 60, seed: 0xD0A6, max_shrink_rounds: 50 },
+        &RoundGen,
+        |case| {
+            let p = 2usize;
+            let run = || -> Result<(Vec<u32>, usize, Vec<u32>), String> {
+                let mut src = AdaptiveResidualDraft::new(p, 0.5);
+                let hist: Vec<f32> =
+                    (0..case.n_hist * p).map(|i| ((i as f32) * 0.3).cos()).collect();
+                src.begin(&hist, case.n_hist, CacheMode::Off).map_err(|e| e.to_string())?;
+                let mut rng = Rng::new(case.seed);
+                let mut all_props = Vec::new();
+                for _ in 0..4 {
+                    let block =
+                        src.propose(case.gamma, 0.5, &mut rng).map_err(|e| e.to_string())?;
+                    all_props.extend(block.proposals.iter().flatten().map(|v| v.to_bits()));
+                    let committed: Vec<f32> =
+                        block.proposals[..case.accepted].iter().flatten().copied().collect();
+                    src.finish_round(&RoundFeedback {
+                        gamma: case.gamma,
+                        accepted: case.accepted,
+                        alphas: &vec![0.5; case.accepted.min(case.gamma) + 1],
+                        target_means: &vec![0.2f32; (case.gamma + 1) * p],
+                        committed: &committed,
+                        final_patch: &vec![0.3f32; p],
+                        sampled: true,
+                    })
+                    .map_err(|e| e.to_string())?;
+                }
+                Ok((
+                    src.head().iter().map(|v| v.to_bits()).collect(),
+                    src.updates(),
+                    all_props,
+                ))
+            };
+            let a = run()?;
+            let b = run()?;
+            if a != b {
+                return Err("adaptive head diverged under identical seed/stream".into());
+            }
+            Ok(())
+        },
+    );
+}

@@ -21,6 +21,7 @@ fn spec(sigma: f64, seed: u64) -> SpecConfig {
         max_residual_draws: 100,
         emission: Emission::Sampled,
         cache: stride::models::CacheMode::On,
+        draft: stride::specdec::DraftConfig::default(),
         adaptive: None,
     }
 }
@@ -84,6 +85,28 @@ fn server_stats_reflect_acceptance_quality() {
     )
     .unwrap();
     let alpha_in = j.get("alpha_bar_window").unwrap().as_f64().unwrap();
+
+    // Per-draft-source observability: the default model source must show
+    // up in both /metrics (stride_draft_model_* gauges) and the /stats
+    // "draft" block after serving SD traffic.
+    let metrics_text = http_request(&addr, "GET", "/metrics", None).unwrap().body_str().to_string();
+    assert!(
+        metrics_text.contains("stride_draft_model_decodes"),
+        "missing per-source decode counter in /metrics:\n{metrics_text}"
+    );
+    assert!(
+        metrics_text.contains("stride_draft_model_alpha_hat"),
+        "missing per-source alpha gauge in /metrics"
+    );
+    assert!(
+        metrics_text.contains("stride_draft_model_c"),
+        "missing per-source cost-ratio gauge in /metrics"
+    );
+    let draft = j.get("draft").expect("/stats must carry a draft block");
+    assert_eq!(draft.get("default").unwrap().as_str(), Some("model"));
+    let model_src = draft.get("sources").unwrap().get("model").expect("model source served");
+    assert!(model_src.get("decodes").unwrap().as_usize().unwrap() > 0);
+    assert!(model_src.get("alpha_hat").unwrap().as_f64().is_some());
 
     // Wild out-of-distribution history (constant extreme level).
     let wild: Vec<String> = (0..96).map(|_| "25.0".to_string()).collect();

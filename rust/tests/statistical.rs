@@ -23,6 +23,7 @@ fn spec(gamma: usize, sigma: f64, variant: Variant, seed: u64) -> SpecConfig {
         max_residual_draws: 10_000,
         emission: stride::specdec::Emission::Sampled,
         cache: stride::models::CacheMode::On,
+        draft: stride::specdec::DraftConfig::default(),
         adaptive: None,
     }
 }

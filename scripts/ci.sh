@@ -57,6 +57,17 @@ if [[ "${1:-}" != "--no-bench" ]]; then
         echo "error: adaptive_gamma criteria not met" >&2
         exit 1
     fi
+
+    echo "== draft_sources smoke (STRIDE_BENCH_QUICK=1) =="
+    # Pluggable-draft criteria: the online-adapted draft must out-accept
+    # the frozen model draft after regime drift, and the draft-free
+    # extrapolation source must measure the lowest cost ratio c.
+    STRIDE_BENCH_QUICK=1 cargo bench --bench draft_sources
+    check_bench_json results/BENCH_draft_sources.json
+    if ! grep -q '"criteria_met":true' results/BENCH_draft_sources.json; then
+        echo "error: draft_sources criteria not met" >&2
+        exit 1
+    fi
 fi
 
 echo "CI OK"
