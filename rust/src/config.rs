@@ -77,18 +77,71 @@ impl Cli {
     }
 }
 
+/// Dispatch-ordering policy of the serving scheduler.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum SchedPolicy {
+    /// Priority bands first, earliest-deadline-first within a band,
+    /// arrival order as the tiebreak; saturated admission evicts the
+    /// worst queued job for a higher-priority arrival. The default.
+    #[default]
+    Edf,
+    /// Pure arrival order, tail-drop admission — the pre-scheduler
+    /// batcher's behavior, kept as the A/B baseline for
+    /// `benches/serving_load.rs`.
+    Fifo,
+}
+
+impl SchedPolicy {
+    /// Config/CLI name (`"edf"` / `"fifo"`).
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            SchedPolicy::Edf => "edf",
+            SchedPolicy::Fifo => "fifo",
+        }
+    }
+
+    /// Parse a config/CLI name; `None` for unknown spellings.
+    pub fn parse(s: &str) -> Option<SchedPolicy> {
+        match s {
+            "edf" => Some(SchedPolicy::Edf),
+            "fifo" => Some(SchedPolicy::Fifo),
+            _ => None,
+        }
+    }
+}
+
 /// Server/engine configuration.
 #[derive(Clone, Debug)]
 pub struct ServeConfig {
     /// Listen address, `host:port` (port 0 picks an ephemeral port).
     pub bind: String,
     /// HTTP worker threads (connection handling only; model work runs on
-    /// the single engine thread).
+    /// the engine replica threads).
     pub http_workers: usize,
     /// Dynamic batcher: flush when this many requests are queued...
     pub max_batch: usize,
     /// ...or when the oldest request has waited this long.
     pub max_wait_ms: u64,
+    /// Engine replicas: independent model/session stacks (sharing one
+    /// `Arc`-packed weight storage on the native backend), each draining
+    /// the admission queue with group affinity + idle stealing. The
+    /// PJRT-backed `xla` backend is not shareable across threads, so it
+    /// requires `replicas = 1`.
+    pub replicas: usize,
+    /// Hard cap on queued (admitted, not yet dispatched) requests. At
+    /// the cap, arrivals are shed with HTTP 429 (`Retry-After`) — under
+    /// [`SchedPolicy::Edf`], a higher-priority arrival instead evicts
+    /// the worst queued job.
+    pub queue_cap: usize,
+    /// Dispatch ordering: `edf` (priority + earliest-deadline-first) or
+    /// `fifo` (arrival order; the A/B baseline).
+    pub sched: SchedPolicy,
+    /// Deadline applied to requests that carry none, in milliseconds
+    /// from admission (0 = no default deadline). Expired jobs are failed
+    /// fast with HTTP 504 and never decoded.
+    pub default_deadline_ms: u64,
+    /// `Retry-After` hint attached to shed responses, in milliseconds.
+    pub retry_after_ms: u64,
     /// "xla" | "native"; kernel flavor for xla: "fused" | "pallas".
     pub backend: String,
     /// XLA kernel flavor ("fused" | "pallas"); ignored by `native`.
@@ -146,6 +199,11 @@ impl Default for ServeConfig {
             http_workers: 8,
             max_batch: 8,
             max_wait_ms: 2,
+            replicas: 1,
+            queue_cap: 256,
+            sched: SchedPolicy::Edf,
+            default_deadline_ms: 0,
+            retry_after_ms: 1000,
             backend: "xla".into(),
             kernel: "fused".into(),
             gamma: 3,
@@ -175,6 +233,19 @@ impl ServeConfig {
                 "http_workers" => self.http_workers = v.as_usize().context("http_workers")?,
                 "max_batch" => self.max_batch = v.as_usize().context("max_batch")?,
                 "max_wait_ms" => self.max_wait_ms = v.as_usize().context("max_wait_ms")? as u64,
+                "replicas" => self.replicas = v.as_usize().context("replicas")?,
+                "queue_cap" => self.queue_cap = v.as_usize().context("queue_cap")?,
+                "sched" => {
+                    let s = v.as_str().context("sched")?;
+                    self.sched = SchedPolicy::parse(s)
+                        .with_context(|| format!("unknown sched policy '{s}' (edf|fifo)"))?;
+                }
+                "default_deadline_ms" => {
+                    self.default_deadline_ms = v.as_usize().context("default_deadline_ms")? as u64
+                }
+                "retry_after_ms" => {
+                    self.retry_after_ms = v.as_usize().context("retry_after_ms")? as u64
+                }
                 "backend" => self.backend = v.as_str().context("backend")?.to_string(),
                 "kernel" => self.kernel = v.as_str().context("kernel")?.to_string(),
                 "gamma" => self.gamma = v.as_usize().context("gamma")?,
@@ -279,6 +350,22 @@ impl ServeConfig {
         if let Some(v) = cli.get_usize("max-wait-ms")? {
             self.max_wait_ms = v as u64;
         }
+        if let Some(v) = cli.get_usize("replicas")? {
+            self.replicas = v;
+        }
+        if let Some(v) = cli.get_usize("queue-cap")? {
+            self.queue_cap = v;
+        }
+        if let Some(v) = cli.get("sched") {
+            self.sched = SchedPolicy::parse(v)
+                .with_context(|| format!("--sched must be edf|fifo, got '{v}'"))?;
+        }
+        if let Some(v) = cli.get_usize("default-deadline-ms")? {
+            self.default_deadline_ms = v as u64;
+        }
+        if let Some(v) = cli.get_usize("retry-after-ms")? {
+            self.retry_after_ms = v as u64;
+        }
         if let Some(v) = cli.get("backend") {
             self.backend = v.to_string();
         }
@@ -357,6 +444,21 @@ impl ServeConfig {
         }
         if !matches!(self.backend.as_str(), "xla" | "native") {
             bail!("backend must be 'xla' or 'native'");
+        }
+        if self.replicas == 0 || self.replicas > 64 {
+            bail!("replicas must be in [1, 64], got {}", self.replicas);
+        }
+        if self.backend == "xla" && self.replicas > 1 {
+            bail!(
+                "replicas > 1 requires the native backend: PJRT client state \
+                 is not shareable across engine threads (xla replicas = 1)"
+            );
+        }
+        if self.queue_cap == 0 {
+            bail!("queue_cap must be >= 1");
+        }
+        if self.retry_after_ms == 0 {
+            bail!("retry_after_ms must be >= 1");
         }
         if !matches!(self.kernel.as_str(), "fused" | "pallas") {
             bail!("kernel must be 'fused' or 'pallas'");
@@ -548,6 +650,71 @@ mod tests {
         let mut cfg = ServeConfig::default();
         cfg.apply_json(&Json::parse(r#"{"draft": {"eta": 5.0}}"#).unwrap()).unwrap();
         assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn scheduler_plumbing() {
+        // Defaults.
+        let cfg = ServeConfig::default();
+        assert_eq!(cfg.replicas, 1);
+        assert_eq!(cfg.queue_cap, 256);
+        assert_eq!(cfg.sched, SchedPolicy::Edf);
+        assert_eq!(cfg.default_deadline_ms, 0);
+        assert_eq!(cfg.retry_after_ms, 1000);
+
+        // JSON form.
+        let mut cfg = ServeConfig::default();
+        cfg.apply_json(
+            &Json::parse(
+                r#"{"replicas": 4, "queue_cap": 32, "sched": "fifo",
+                    "default_deadline_ms": 500, "retry_after_ms": 250,
+                    "backend": "native"}"#,
+            )
+            .unwrap(),
+        )
+        .unwrap();
+        assert_eq!(cfg.replicas, 4);
+        assert_eq!(cfg.queue_cap, 32);
+        assert_eq!(cfg.sched, SchedPolicy::Fifo);
+        assert_eq!(cfg.default_deadline_ms, 500);
+        assert_eq!(cfg.retry_after_ms, 250);
+        cfg.validate().unwrap();
+
+        // CLI form.
+        let mut cfg = ServeConfig::default();
+        cfg.apply_cli(
+            &Cli::parse(args("--backend native --replicas 2 --queue-cap 8 --sched edf")).unwrap(),
+        )
+        .unwrap();
+        assert_eq!(cfg.replicas, 2);
+        assert_eq!(cfg.queue_cap, 8);
+        assert_eq!(cfg.sched, SchedPolicy::Edf);
+
+        // Bad values.
+        let mut cfg = ServeConfig::default();
+        assert!(cfg.apply_json(&Json::parse(r#"{"sched": "lifo"}"#).unwrap()).is_err());
+        let mut cfg = ServeConfig::default();
+        cfg.backend = "native".into();
+        cfg.replicas = 0;
+        assert!(cfg.validate().is_err());
+        cfg.replicas = 65;
+        assert!(cfg.validate().is_err());
+        cfg.replicas = 2;
+        cfg.queue_cap = 0;
+        assert!(cfg.validate().is_err());
+
+        // PJRT state is not shareable: xla + replicas > 1 is rejected.
+        let mut cfg = ServeConfig::default();
+        cfg.replicas = 2; // backend defaults to xla
+        assert!(cfg.validate().is_err());
+        cfg.backend = "native".into();
+        cfg.validate().unwrap();
+
+        // Policy names roundtrip.
+        for p in [SchedPolicy::Edf, SchedPolicy::Fifo] {
+            assert_eq!(SchedPolicy::parse(p.as_str()), Some(p));
+        }
+        assert_eq!(SchedPolicy::parse("lifo"), None);
     }
 
     #[test]

@@ -47,6 +47,8 @@ pub struct Response {
     pub status: u16,
     /// `Content-Type` header value.
     pub content_type: &'static str,
+    /// Extra response headers (e.g. `Retry-After` on a shed response).
+    pub headers: Vec<(String, String)>,
     /// Response body bytes.
     pub body: Vec<u8>,
 }
@@ -54,11 +56,21 @@ pub struct Response {
 impl Response {
     /// JSON response with the given status.
     pub fn json(status: u16, body: String) -> Response {
-        Response { status, content_type: "application/json", body: body.into_bytes() }
+        Response {
+            status,
+            content_type: "application/json",
+            headers: Vec::new(),
+            body: body.into_bytes(),
+        }
     }
     /// Plain-text response with the given status.
     pub fn text(status: u16, body: &str) -> Response {
-        Response { status, content_type: "text/plain", body: body.as_bytes().to_vec() }
+        Response {
+            status,
+            content_type: "text/plain",
+            headers: Vec::new(),
+            body: body.as_bytes().to_vec(),
+        }
     }
     /// 404 with a plain-text body.
     pub fn not_found() -> Response {
@@ -67,6 +79,11 @@ impl Response {
     /// 400 with the given plain-text message.
     pub fn bad_request(msg: &str) -> Response {
         Response::text(400, msg)
+    }
+    /// Attach an extra response header (builder style).
+    pub fn with_header(mut self, name: &str, value: impl Into<String>) -> Response {
+        self.headers.push((name.to_string(), value.into()));
+        self
     }
 }
 
@@ -79,6 +96,7 @@ fn status_text(code: u16) -> &'static str {
         429 => "Too Many Requests",
         500 => "Internal Server Error",
         503 => "Service Unavailable",
+        504 => "Gateway Timeout",
         _ => "Unknown",
     }
 }
@@ -96,8 +114,31 @@ pub struct HttpServer {
 
 impl HttpServer {
     /// Bind `addr` (use port 0 for an ephemeral port) and serve `handler`
-    /// on `workers` threads until `shutdown()`.
+    /// on `workers` threads until `shutdown()`, with 30 s read *and*
+    /// write socket timeouts.
     pub fn start(addr: &str, workers: usize, handler: Handler) -> std::io::Result<HttpServer> {
+        Self::start_with_timeouts(
+            addr,
+            workers,
+            handler,
+            Duration::from_secs(30),
+            Duration::from_secs(30),
+        )
+    }
+
+    /// [`HttpServer::start`] with explicit socket timeouts. The write
+    /// timeout matters as much as the read timeout: without it a client
+    /// that stops *reading* (while the worker is mid-`write_all` on a
+    /// response larger than the socket buffer) pins that worker thread
+    /// forever — a handful of slow readers could brown out the whole
+    /// pool.
+    pub fn start_with_timeouts(
+        addr: &str,
+        workers: usize,
+        handler: Handler,
+        read_timeout: Duration,
+        write_timeout: Duration,
+    ) -> std::io::Result<HttpServer> {
         let listener = TcpListener::bind(addr)?;
         let local = listener.local_addr()?;
         // Periodic accept timeout so the stop flag is observed promptly.
@@ -115,7 +156,9 @@ impl HttpServer {
                     match listener.accept() {
                         Ok((stream, _)) => {
                             let handler = Arc::clone(&handler);
-                            pool.execute(move || handle_connection(stream, handler));
+                            pool.execute(move || {
+                                handle_connection(stream, handler, read_timeout, write_timeout)
+                            });
                         }
                         Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
                             std::thread::sleep(Duration::from_millis(2));
@@ -142,8 +185,17 @@ impl Drop for HttpServer {
     }
 }
 
-fn handle_connection(stream: TcpStream, handler: Handler) {
-    let _ = stream.set_read_timeout(Some(Duration::from_secs(30)));
+fn handle_connection(
+    stream: TcpStream,
+    handler: Handler,
+    read_timeout: Duration,
+    write_timeout: Duration,
+) {
+    let _ = stream.set_read_timeout(Some(read_timeout));
+    // A reader that stalls mid-response must not pin this worker: when
+    // the socket send buffer fills, `write_all` blocks until the timeout
+    // fires and the connection is dropped.
+    let _ = stream.set_write_timeout(Some(write_timeout));
     let _ = stream.set_nodelay(true);
     let mut reader = BufReader::new(match stream.try_clone() {
         Ok(s) => s,
@@ -212,14 +264,21 @@ fn read_request<R: BufRead>(reader: &mut R) -> std::io::Result<Option<Request>> 
 }
 
 fn write_response(stream: &mut TcpStream, resp: &Response, keep_alive: bool) -> std::io::Result<()> {
-    let head = format!(
-        "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nContent-Length: {}\r\nConnection: {}\r\n\r\n",
+    let mut head = format!(
+        "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nContent-Length: {}\r\nConnection: {}\r\n",
         resp.status,
         status_text(resp.status),
         resp.content_type,
         resp.body.len(),
         if keep_alive { "keep-alive" } else { "close" },
     );
+    for (k, v) in &resp.headers {
+        head.push_str(k);
+        head.push_str(": ");
+        head.push_str(v);
+        head.push_str("\r\n");
+    }
+    head.push_str("\r\n");
     stream.write_all(head.as_bytes())?;
     stream.write_all(&resp.body)?;
     stream.flush()
@@ -275,6 +334,66 @@ mod tests {
         for h in handles {
             h.join().unwrap();
         }
+    }
+
+    #[test]
+    fn extra_headers_are_written() {
+        let server = HttpServer::start(
+            "127.0.0.1:0",
+            1,
+            Arc::new(|_req: &Request| {
+                Response::text(429, "slow down").with_header("Retry-After", "2")
+            }),
+        )
+        .unwrap();
+        let r = http_request(&server.addr.to_string(), "GET", "/", None).unwrap();
+        assert_eq!(r.status, 429);
+        let retry = r
+            .headers
+            .iter()
+            .find(|(k, _)| k.eq_ignore_ascii_case("retry-after"))
+            .map(|(_, v)| v.as_str());
+        assert_eq!(retry, Some("2"));
+    }
+
+    /// A client that stops *reading* must not pin an HTTP worker: the
+    /// write timeout drops the connection and frees the thread. With a
+    /// single worker and a response far larger than any socket buffer,
+    /// a follow-up request only succeeds if the stalled write timed out.
+    #[test]
+    fn write_timeout_frees_worker_from_slow_reader() {
+        let big = vec![b'x'; 64 << 20]; // 64 MiB >> any default send buffer
+        let server = HttpServer::start_with_timeouts(
+            "127.0.0.1:0",
+            1, // single worker: a pinned thread would block everyone
+            Arc::new(move |req: &Request| match req.path.as_str() {
+                "/big" => Response { status: 200, content_type: "text/plain", headers: Vec::new(), body: big.clone() },
+                _ => Response::text(200, "ok"),
+            }),
+            Duration::from_secs(5),
+            Duration::from_millis(200),
+        )
+        .unwrap();
+        let addr = server.addr.to_string();
+        // Request the huge body, then never read it.
+        let mut stalled = TcpStream::connect(&addr).unwrap();
+        stalled
+            .write_all(b"GET /big HTTP/1.1\r\nHost: x\r\nContent-Length: 0\r\n\r\n")
+            .unwrap();
+        stalled.flush().unwrap();
+        // Give the worker time to fill the socket buffers, block, and
+        // hit the 200 ms write timeout.
+        std::thread::sleep(Duration::from_millis(800));
+        // The single worker must be free again for a normal request.
+        let t0 = std::time::Instant::now();
+        let r = http_request(&addr, "GET", "/ping", None).unwrap();
+        assert_eq!(r.status, 200);
+        assert!(
+            t0.elapsed() < Duration::from_secs(3),
+            "worker still pinned by the stalled reader after {:?}",
+            t0.elapsed()
+        );
+        drop(stalled);
     }
 
     #[test]

@@ -87,6 +87,22 @@
 //! * [`server`] — HTTP front end with dynamic batching; SD jobs are
 //!   grouped by (γ, σ, cache, adaptive, draft kind) and each group's
 //!   sequences keep their decode sessions across all speculative rounds.
+//! * [`server::sched`] — the **serving scheduler**: a bounded admission
+//!   queue with load shedding (HTTP 429 + `Retry-After`; a saturated
+//!   queue evicts its worst job for a higher-priority arrival),
+//!   per-request priorities and deadlines (expired jobs fail fast with
+//!   HTTP 504 and never decode), earliest-deadline-first dispatch
+//!   within each compatibility group, and an engine **replica pool** —
+//!   N model/session stacks over one `Arc`-packed weight storage
+//!   ([`models::NativeBackend::replicate`]) with group-affinity routing
+//!   plus idle stealing, merged draft heads, and a shared γ controller.
+//!   Decode groups run through [`specdec::sd_generate_stream_seeded`]
+//!   (per-request seeds, per-sequence γ bucketing), so every response
+//!   is bit-identical to [`specdec::sd_generate_from`] at the same
+//!   seed for any replica count or batch composition. `/healthz` is a
+//!   readiness probe (503 while saturated); `benches/serving_load.rs`
+//!   pins throughput scaling, overload SLO attainment, and the
+//!   determinism contract in `results/BENCH_serving_load.json`.
 
 #![warn(missing_docs)]
 

@@ -27,6 +27,11 @@ commands:
   serve   start the HTTP forecasting service
           --bind 127.0.0.1:8080 --backend xla|native --kernel fused|pallas
           --gamma 3 --sigma 0.5 --bias 1.0 --max-batch 8 --max-wait-ms 2
+          --replicas N (engine replica pool; native backend only for N>1)
+          --queue-cap N (bounded admission; 429 + Retry-After when full)
+          --sched edf|fifo (priority + earliest-deadline-first dispatch,
+          or arrival order) --default-deadline-ms N (0 = none)
+          --retry-after-ms N (shed back-off hint)
           --draft model|extrap|adaptive (proposal source: second model,
           draft-free extrapolation, or online-learned head)
           --draft-period N (extrap: seasonal period in patches; 0=linear)

@@ -26,6 +26,12 @@ pub struct Metrics {
     pub patches_total: AtomicU64,
     /// Requests that failed validation or decoding.
     pub errors_total: AtomicU64,
+    /// Requests shed by the bounded admission queue (tail-dropped at the
+    /// cap or evicted for a higher-priority arrival) — HTTP 429s.
+    pub sheds_total: AtomicU64,
+    /// Requests whose deadline expired while queued (failed fast,
+    /// never decoded) — HTTP 504s.
+    pub expired_total: AtomicU64,
 }
 
 impl Metrics {
@@ -75,6 +81,26 @@ impl Metrics {
         *e = lam * *e + (1.0 - lam) * v;
     }
 
+    /// Record one request's deadline outcome into the overall and
+    /// per-priority SLO counters and refresh the per-priority
+    /// attainment gauge (`slo_attainment_<prio>` = met / (met+missed)).
+    /// Served requests report met/missed by latency; **shed and expired
+    /// requests count as missed** — the SLO is about what the client
+    /// experienced, not about what happened to decode.
+    pub fn record_deadline_outcome(&self, prio: &str, met: bool) {
+        let which = if met { "met" } else { "missed" };
+        self.inc(if met { "deadline_met" } else { "deadline_missed" }, 1);
+        self.inc(&format!("deadline_{which}_{prio}"), 1);
+        let met_n = self.counter(&format!("deadline_met_{prio}"));
+        let miss_n = self.counter(&format!("deadline_missed_{prio}"));
+        if met_n + miss_n > 0 {
+            self.set_gauge(
+                &format!("slo_attainment_{prio}"),
+                met_n as f64 / (met_n + miss_n) as f64,
+            );
+        }
+    }
+
     /// Record one duration into the named latency histogram.
     pub fn observe(&self, name: &str, d: Duration) {
         self.histograms
@@ -100,10 +126,12 @@ impl Metrics {
     pub fn render(&self) -> String {
         let mut out = String::new();
         out.push_str(&format!(
-            "stride_requests_total {}\nstride_patches_total {}\nstride_errors_total {}\n",
+            "stride_requests_total {}\nstride_patches_total {}\nstride_errors_total {}\nstride_sheds_total {}\nstride_expired_total {}\n",
             self.requests_total.load(Ordering::Relaxed),
             self.patches_total.load(Ordering::Relaxed),
             self.errors_total.load(Ordering::Relaxed),
+            self.sheds_total.load(Ordering::Relaxed),
+            self.expired_total.load(Ordering::Relaxed),
         ));
         for (k, v) in self.counters.lock().unwrap().iter() {
             out.push_str(&format!("stride_{k} {v}\n"));
@@ -212,6 +240,32 @@ mod tests {
         assert!(text.contains("stride_batches 2"));
         assert!(text.contains("stride_latency_count 2"));
         assert!(m.quantile_ms("latency", 0.5) > 1.0);
+    }
+
+    #[test]
+    fn scheduler_counters_render() {
+        let m = Metrics::new();
+        m.sheds_total.fetch_add(4, Ordering::Relaxed);
+        m.expired_total.fetch_add(2, Ordering::Relaxed);
+        let text = m.render();
+        assert!(text.contains("stride_sheds_total 4"));
+        assert!(text.contains("stride_expired_total 2"));
+    }
+
+    #[test]
+    fn deadline_outcomes_drive_slo_gauge() {
+        let m = Metrics::new();
+        m.record_deadline_outcome("high", true);
+        m.record_deadline_outcome("high", true);
+        m.record_deadline_outcome("high", false); // e.g. expired in queue
+        assert_eq!(m.counter("deadline_met_high"), 2);
+        assert_eq!(m.counter("deadline_missed_high"), 1);
+        let g = m.gauge("slo_attainment_high").unwrap();
+        assert!((g - 2.0 / 3.0).abs() < 1e-12, "attainment {g}");
+        // Other bands are independent.
+        m.record_deadline_outcome("low", false);
+        assert_eq!(m.gauge("slo_attainment_low"), Some(0.0));
+        assert!((m.gauge("slo_attainment_high").unwrap() - 2.0 / 3.0).abs() < 1e-12);
     }
 
     #[test]

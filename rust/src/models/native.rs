@@ -61,6 +61,15 @@ impl NativeBackend {
         &self.model.dims
     }
 
+    /// An independent backend over the same `Arc`-shared weight storage
+    /// (see [`NativeModel::replicate`]): its own packed handles, its own
+    /// timing summary (so the measured cost ratio c stays per-replica
+    /// honest), zero float duplication. The serving replica pool builds
+    /// its N model stacks with this.
+    pub fn replicate(&self) -> Result<NativeBackend> {
+        Ok(NativeBackend::new(self.model.replicate()?))
+    }
+
     /// Route all forwards through the pre-kernel-layer reference
     /// implementation — the `perf_hotpath` "before" flag and the baseline
     /// of the kernel equivalence suite.
@@ -524,6 +533,28 @@ mod tests {
         }
         assert_eq!(tok_ptr, sess.tokens.as_ptr(), "token buffer reallocated");
         assert_eq!(mean_ptr, sess.means.as_ptr(), "means buffer reallocated");
+    }
+
+    #[test]
+    fn replicate_shares_storage_and_matches_bitwise() {
+        let b = NativeBackend::new(tiny_model(7));
+        let r = b.replicate().unwrap();
+        let toks: Vec<f32> = (0..6 * 4).map(|i| (i as f32 * 0.11).sin()).collect();
+        let a = b.forward(&toks, 6).unwrap();
+        let c = r.forward(&toks, 6).unwrap();
+        // Same floats behind both stacks => bitwise identical outputs.
+        for (x, y) in a.iter().zip(&c) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+        // Independent timing summaries: the replica's c measurement must
+        // not fold into the original's.
+        assert!(b.mean_secs() > 0.0);
+        let fresh = NativeBackend::new(tiny_model(7));
+        let rep = fresh.replicate().unwrap();
+        assert!(fresh.mean_secs().is_nan());
+        let _ = rep.forward(&toks, 6).unwrap();
+        assert!(fresh.mean_secs().is_nan(), "replica timings leaked into source");
+        assert!(rep.mean_secs() > 0.0);
     }
 
     #[test]

@@ -87,6 +87,15 @@ impl NativeModel {
         })
     }
 
+    /// An independent model instance over the *same* `Arc`-shared float
+    /// storage: tensors are not copied, only handles. Each serving replica
+    /// gets its own `NativeModel` (and thus its own packed handles and
+    /// timing summary) this way — N replicas cost N sets of pointers, one
+    /// set of floats. The reference-kernel flag resets to the default.
+    pub fn replicate(&self) -> Result<NativeModel> {
+        NativeModel::new(&self.name, self.dims, self.w.clone())
+    }
+
     /// Toggle the pre-kernel-layer (string-keyed, allocating, naive-matmul)
     /// implementation for both forward paths. The kernel equivalence suite
     /// pins `packed == reference` within 1e-5.
@@ -595,37 +604,40 @@ impl RefScratch {
     }
 }
 
+/// Tiny random model for structural tests and serving benches (no
+/// artifacts needed): patch 4, context 8, two layers. Exported at module
+/// level (not under `cfg(test)`) because integration tests and benches
+/// compile the library without the test cfg and need the same substrate.
+pub fn tiny_model(seed: u64) -> NativeModel {
+    let dims = ModelDims { patch: 4, n_ctx: 8, d_model: 8, n_layers: 2, n_heads: 2, d_ff: 16 };
+    let mut w = Weights::default();
+    let mut rng = Rng::new(seed);
+    let mut t = |shape: &[usize], scale: f32| {
+        let n: usize = shape.iter().product();
+        Tensor::from_vec(shape, (0..n).map(|_| scale * rng.normal() as f32).collect())
+    };
+    w.insert("embed_w", t(&[4, 8], 0.3));
+    w.insert("embed_b", Tensor::zeros(&[8]));
+    w.insert("pos", t(&[8, 8], 0.1));
+    for li in 0..2 {
+        w.insert(&format!("layers.{li}.ln1"), Tensor::from_vec(&[8], vec![1.0; 8]));
+        w.insert(&format!("layers.{li}.wqkv"), t(&[8, 24], 0.3));
+        w.insert(&format!("layers.{li}.wo"), t(&[8, 8], 0.2));
+        w.insert(&format!("layers.{li}.ln2"), Tensor::from_vec(&[8], vec![1.0; 8]));
+        w.insert(&format!("layers.{li}.wg"), t(&[8, 16], 0.3));
+        w.insert(&format!("layers.{li}.wu"), t(&[8, 16], 0.3));
+        w.insert(&format!("layers.{li}.wd"), t(&[16, 8], 0.2));
+    }
+    w.insert("final_norm", Tensor::from_vec(&[8], vec![1.0; 8]));
+    w.insert("head_w", t(&[8, 4], 0.3));
+    w.insert("head_b", Tensor::zeros(&[4]));
+    NativeModel::new("tiny", dims, w).unwrap()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::util::rng::Rng;
-
-    /// Tiny random model for structural tests (no artifacts needed).
-    pub fn tiny_model(seed: u64) -> NativeModel {
-        let dims = ModelDims { patch: 4, n_ctx: 8, d_model: 8, n_layers: 2, n_heads: 2, d_ff: 16 };
-        let mut w = Weights::default();
-        let mut rng = Rng::new(seed);
-        let mut t = |shape: &[usize], scale: f32| {
-            let n: usize = shape.iter().product();
-            Tensor::from_vec(shape, (0..n).map(|_| scale * rng.normal() as f32).collect())
-        };
-        w.insert("embed_w", t(&[4, 8], 0.3));
-        w.insert("embed_b", Tensor::zeros(&[8]));
-        w.insert("pos", t(&[8, 8], 0.1));
-        for li in 0..2 {
-            w.insert(&format!("layers.{li}.ln1"), Tensor::from_vec(&[8], vec![1.0; 8]));
-            w.insert(&format!("layers.{li}.wqkv"), t(&[8, 24], 0.3));
-            w.insert(&format!("layers.{li}.wo"), t(&[8, 8], 0.2));
-            w.insert(&format!("layers.{li}.ln2"), Tensor::from_vec(&[8], vec![1.0; 8]));
-            w.insert(&format!("layers.{li}.wg"), t(&[8, 16], 0.3));
-            w.insert(&format!("layers.{li}.wu"), t(&[8, 16], 0.3));
-            w.insert(&format!("layers.{li}.wd"), t(&[16, 8], 0.2));
-        }
-        w.insert("final_norm", Tensor::from_vec(&[8], vec![1.0; 8]));
-        w.insert("head_w", t(&[8, 4], 0.3));
-        w.insert("head_b", Tensor::zeros(&[4]));
-        NativeModel::new("tiny", dims, w).unwrap()
-    }
 
     #[test]
     fn forward_shapes() {
@@ -832,6 +844,3 @@ mod tests {
         assert!(y.data.iter().all(|v| v.is_finite()));
     }
 }
-
-#[cfg(test)]
-pub use tests::tiny_model;

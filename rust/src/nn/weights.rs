@@ -17,7 +17,11 @@ use crate::util::json::Json;
 use crate::util::tensor::Tensor;
 
 /// Named tensor store.
-#[derive(Debug, Default)]
+///
+/// Cloning is cheap: tensors live behind `Arc`, so a clone copies pointers
+/// only — the replica pool uses this to give every serving replica its own
+/// model stack over one shared float storage.
+#[derive(Clone, Debug, Default)]
 pub struct Weights {
     map: HashMap<String, Arc<Tensor>>,
 }

@@ -1,27 +1,39 @@
-//! Dynamic batcher + engine thread: the serving coordinator's core loop.
+//! Admission + execution glue of the serving tier.
 //!
-//! HTTP workers enqueue jobs; a single engine thread (which owns all PJRT
-//! state — the xla crate's client is not Send) drains the queue with a
-//! size-or-deadline policy (max_batch / max_wait_ms), groups compatible
-//! speculative jobs into one lockstep batched decode, and replies through
-//! per-job channels. This is the continuous-batching shape vLLM-style
-//! servers use, specialized to fixed-shape PJRT executables.
+//! HTTP workers call [`BatcherHandle::forecast`]: the request is keyed by
+//! its decode-compatibility group, stamped with priority/deadline, and
+//! admitted into the bounded [`AdmissionQueue`] (sched subsystem). Engine
+//! replicas pull EDF-ordered batches from the queue and run them through
+//! [`execute_batch`]: one lockstep speculative decode per SD group
+//! (per-request seeds through [`sd_generate_stream_seeded`], so responses
+//! are replica- and batching-invariant), individual AR decodes for the
+//! baseline modes. Replies travel per-job channels, typed as
+//! [`ServeError`] so the HTTP layer can map shed/expired/invalid/internal
+//! to distinct statuses.
+//!
+//! The pre-scheduler single-FIFO engine loop is gone; `start_engine`
+//! now stands up the scheduler (queue + replica pool) and returns a
+//! handle with the same surface the HTTP router always used.
 
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
 use std::time::{Duration, Instant};
 
-use anyhow::{Context, Result};
+use anyhow::Result;
 
-use super::protocol::{ForecastRequest, ForecastResponse, Mode};
+use super::protocol::{ForecastRequest, ForecastResponse, Mode, ServeError};
+use super::sched::{
+    start_pool, AdmissionQueue, GroupKey, ModelShape, QueuedJob, ReplicaBuilder, ReplicaStacks,
+    SchedShared,
+};
 use crate::config::ServeConfig;
 use crate::forecast::ar_decode_with;
 use crate::metrics::{AcceptanceMonitor, Metrics};
 use crate::models::{Backend, CacheMode, NativeBackend, XlaBackend};
 use crate::runtime::{Engine, Manifest};
 use crate::specdec::{
-    make_batch_source, sd_generate_stream_from, DecodeStats, DraftKind, GammaController,
+    make_batch_source, sd_generate_stream_seeded, DecodeStats, DraftKind, GammaController,
     SpecConfig,
 };
 
@@ -29,16 +41,20 @@ use crate::specdec::{
 pub struct Job {
     /// The parsed request.
     pub req: ForecastRequest,
-    /// Enqueue time (request latency is measured from here).
+    /// Enqueue time (request latency and deadlines are measured from
+    /// here).
     pub enqueued: Instant,
-    /// Channel the engine thread answers on.
-    pub reply: mpsc::SyncSender<Result<ForecastResponse, String>>,
+    /// Channel the executing replica (or the queue, for shed/expired
+    /// jobs) answers on.
+    pub reply: mpsc::SyncSender<Result<ForecastResponse, ServeError>>,
 }
 
 /// Handle held by the HTTP side.
 #[derive(Clone)]
 pub struct BatcherHandle {
-    tx: mpsc::Sender<Job>,
+    cfg: Arc<ServeConfig>,
+    shape: ModelShape,
+    queue: Arc<AdmissionQueue>,
     /// Shared metrics registry (also rendered at `/metrics`).
     pub metrics: Arc<Metrics>,
     /// Windowed acceptance monitor (alerting; paper §7).
@@ -46,8 +62,8 @@ pub struct BatcherHandle {
     /// The server's long-lived adaptive γ controller, present when
     /// `ServeConfig::adaptive` is on. Its recommendation seeds each
     /// adaptive decode group (so jobs regroup as γ drifts) and every
-    /// finished group's rounds are fed back. Exposed read-only via
-    /// `/stats`.
+    /// finished group's rounds are fed back — from whichever replica ran
+    /// them. Exposed read-only via `/stats`.
     pub controller: Option<Arc<Mutex<GammaController>>>,
     /// The server's default draft-source kind (per-request `"draft"`
     /// overrides route jobs to other kinds; `/stats` reports per-kind
@@ -57,24 +73,155 @@ pub struct BatcherHandle {
 
 impl BatcherHandle {
     /// Synchronous request-response (the HTTP worker blocks here).
-    pub fn forecast(&self, req: ForecastRequest) -> Result<ForecastResponse, String> {
+    /// Admission failures (shed / invalid) return immediately; admitted
+    /// jobs wait for their replica's reply.
+    pub fn forecast(&self, req: ForecastRequest) -> Result<ForecastResponse, ServeError> {
+        self.metrics.requests_total.fetch_add(1, Ordering::Relaxed);
+        let mut req = req;
+        // Seed discipline: a request that pins a seed is exactly
+        // reproducible (bit-identical to `sd_generate_from` at that
+        // seed, any replica count). Unseeded requests get a fresh
+        // decode seed here — without this, all unseeded traffic would
+        // share one RNG stream and `"sampled"` clients repeating a
+        // request would receive N copies of one draw instead of N
+        // samples. The assigned seed is echoed in the response, so any
+        // served forecast can be replayed afterwards.
+        if req.seed.is_none() {
+            static REQ_SEQ: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(0);
+            req.seed = Some(
+                self.cfg
+                    .seed
+                    .wrapping_add(REQ_SEQ.fetch_add(1, Ordering::Relaxed))
+                    .wrapping_mul(0x9E37_79B9_7F4A_7C15),
+            );
+        }
+        let key = self.group_key(&req)?;
+        let priority = req.priority;
+        let deadline_ms = req.deadline_ms.or(if self.cfg.default_deadline_ms > 0 {
+            Some(self.cfg.default_deadline_ms)
+        } else {
+            None
+        });
         let (tx, rx) = mpsc::sync_channel(1);
         let job = Job { req, enqueued: Instant::now(), reply: tx };
-        self.tx.send(job).map_err(|_| "engine thread gone".to_string())?;
-        rx.recv_timeout(Duration::from_secs(120))
-            .map_err(|_| "engine timeout".to_string())?
+        self.queue.admit(job, priority, deadline_ms, key)?;
+        match rx.recv_timeout(Duration::from_secs(120)) {
+            Ok(r) => r,
+            Err(_) => Err(ServeError::Internal("engine timeout".into())),
+        }
+    }
+
+    /// Compute the request's decode-compatibility group (and reject the
+    /// combinations the server cannot honor, before they cost a queue
+    /// slot).
+    fn group_key(&self, req: &ForecastRequest) -> Result<GroupKey, ServeError> {
+        let cfg = &self.cfg;
+        match req.mode {
+            Mode::Sd if !cfg.baseline => {
+                // Asking for adaptation on a server that runs without a
+                // controller is a request we cannot honor — reject it
+                // rather than silently serving static gamma.
+                if req.adaptive == Some(true) && self.controller.is_none() {
+                    self.metrics.errors_total.fetch_add(1, Ordering::Relaxed);
+                    return Err(ServeError::Invalid(
+                        "adaptive speculation is not enabled on this server \
+                         (start it with --adaptive)"
+                            .to_string(),
+                    ));
+                }
+                let kind = req.draft.unwrap_or(cfg.draft.kind);
+                // The long-lived controller's α̂/c telemetry is
+                // per-source: rounds from a different draft kind would
+                // contaminate the estimates the default kind's γ is
+                // tuned from. Jobs overriding the draft kind cannot ride
+                // the controller.
+                if req.adaptive == Some(true) && kind != cfg.draft.kind {
+                    self.metrics.errors_total.fetch_add(1, Ordering::Relaxed);
+                    return Err(ServeError::Invalid(format!(
+                        "adaptive speculation rides the server's long-lived \
+                         controller, which is tuned for draft '{}'; drop the \
+                         per-request draft override or the adaptive flag",
+                        cfg.draft.kind.as_str()
+                    )));
+                }
+                // An explicit per-request gamma always pins the job to
+                // the static path: a pinned request is a pinned request.
+                let adaptive = self.controller.is_some()
+                    && req.adaptive.unwrap_or(cfg.adaptive)
+                    && req.gamma.is_none()
+                    && kind == cfg.draft.kind;
+                let gamma = if adaptive {
+                    let ctrl = self.controller.as_ref().unwrap().lock().unwrap();
+                    ctrl.gamma_for(self.shape.n_ctx)
+                } else {
+                    req.gamma.unwrap_or(cfg.gamma)
+                };
+                let sigma = req.sigma.unwrap_or(cfg.sigma);
+                let cache = req.cache.unwrap_or(cfg.cache);
+                Ok(GroupKey::Sd { gamma, sigma_bits: sigma.to_bits(), cache, adaptive, kind })
+            }
+            _ => Ok(GroupKey::Single),
+        }
+    }
+
+    /// Jobs currently waiting in the admission queue.
+    pub fn queue_depth(&self) -> usize {
+        self.queue.depth()
+    }
+
+    /// The admission queue's hard cap.
+    pub fn queue_cap(&self) -> usize {
+        self.queue.cap()
+    }
+
+    /// Readiness: false while the admission queue is saturated (the
+    /// `/healthz` 503 signal for external load balancers).
+    pub fn ready(&self) -> bool {
+        !self.queue.saturated()
+    }
+
+    /// The scheduler's dispatch policy name (`"edf"` / `"fifo"`).
+    pub fn sched_policy(&self) -> &'static str {
+        self.queue.policy().as_str()
+    }
+
+    /// Engine replicas serving this queue.
+    pub fn replicas(&self) -> usize {
+        self.cfg.replicas
+    }
+
+    /// Stop the scheduler: refuse new admissions, fail queued jobs, and
+    /// let the replica threads drain out.
+    pub fn shutdown(&self) {
+        self.queue.shutdown();
     }
 }
 
-/// Spawn the engine thread; blocks until backends are loaded (or fails).
+/// Spawn the scheduler (admission queue + replica pool) from the
+/// artifacts manifest; blocks until every replica's backends are loaded
+/// (or fails).
 pub fn start_engine(
     cfg: ServeConfig,
     metrics: Arc<Metrics>,
     monitor: Arc<AcceptanceMonitor>,
     stop: Arc<AtomicBool>,
-) -> Result<(BatcherHandle, std::thread::JoinHandle<()>)> {
-    let (tx, rx) = mpsc::channel::<Job>();
-    let (ready_tx, ready_rx) = mpsc::sync_channel::<Result<String, String>>(1);
+) -> Result<(BatcherHandle, Vec<std::thread::JoinHandle<()>>)> {
+    let (shape, builder) = builder_from_artifacts(&cfg)?;
+    start_engine_with_builder(cfg, shape, builder, metrics, monitor, stop)
+}
+
+/// [`start_engine`] with an injected replica builder — the entry point
+/// that lets tests and benches run the complete serving stack (HTTP,
+/// admission, EDF dispatch, replica pool) over synthetic in-memory
+/// models, no artifacts directory required.
+pub fn start_engine_with_builder(
+    cfg: ServeConfig,
+    shape: ModelShape,
+    builder: ReplicaBuilder,
+    metrics: Arc<Metrics>,
+    monitor: Arc<AcceptanceMonitor>,
+    stop: Arc<AtomicBool>,
+) -> Result<(BatcherHandle, Vec<std::thread::JoinHandle<()>>)> {
     let controller = if cfg.adaptive {
         let mut ctrl = GammaController::new(cfg.adaptive_cfg, cfg.gamma, cfg.sigma);
         // Tag the telemetry with the server's default source: the c this
@@ -84,133 +231,82 @@ pub fn start_engine(
     } else {
         None
     };
-    let m2 = metrics.clone();
-    let mon2 = monitor.clone();
-    let ctrl2 = controller.clone();
     let draft_kind = cfg.draft.kind;
-    let handle = std::thread::Builder::new()
-        .name("stride-engine".into())
-        .spawn(move || engine_main(cfg, rx, ready_tx, m2, mon2, ctrl2, stop))
-        .context("spawning engine thread")?;
-    match ready_rx.recv().context("engine thread died during startup")? {
-        Ok(desc) => log::info!("engine ready: {desc}"),
-        Err(e) => anyhow::bail!("engine startup failed: {e}"),
-    }
-    Ok((BatcherHandle { tx, metrics, monitor, controller, draft: draft_kind }, handle))
+    let cfg = Arc::new(cfg);
+    let queue = Arc::new(AdmissionQueue::new(
+        cfg.queue_cap,
+        cfg.sched,
+        cfg.retry_after_ms,
+        metrics.clone(),
+        Arc::clone(&stop),
+    ));
+    let shared = Arc::new(SchedShared {
+        metrics: metrics.clone(),
+        monitor: monitor.clone(),
+        controller: controller.clone(),
+        draft_heads: Mutex::new(BTreeMap::new()),
+    });
+    let handles = start_pool(
+        Arc::clone(&cfg),
+        shape,
+        builder,
+        Arc::clone(&queue),
+        Arc::clone(&shared),
+        stop,
+    )?;
+    Ok((
+        BatcherHandle { cfg, shape, queue, metrics, monitor, controller, draft: draft_kind },
+        handles,
+    ))
 }
 
-fn load_backends(cfg: &ServeConfig) -> Result<(Box<dyn Backend>, Box<dyn Backend>, Manifest)> {
+/// Resolve the manifest into (shape, replica builder). The native
+/// backend loads each weight blob **once** here; every replica's stack
+/// is a [`NativeBackend::replicate`] over that single `Arc` storage
+/// (packing copies pointers, not floats). The xla backend constructs
+/// its PJRT state on the replica thread itself (the client is not
+/// `Send`) and is limited to one replica by `ServeConfig::validate`.
+fn builder_from_artifacts(cfg: &ServeConfig) -> Result<(ModelShape, ReplicaBuilder)> {
     let manifest = Manifest::load(&cfg.artifacts)?;
+    let shape = ModelShape { patch: manifest.patch, n_ctx: manifest.n_ctx };
     match cfg.backend.as_str() {
         "native" => {
-            let (t, d) = NativeBackend::pair_from_manifest(&manifest)?;
-            Ok((Box::new(t), Box::new(d), manifest))
+            // Load the base pair once; every replica is a `replicate()`
+            // over the same `Arc` storage (pointers, not floats).
+            let (base_t, base_d) = NativeBackend::pair_from_manifest(&manifest)?;
+            let builder: ReplicaBuilder = Arc::new(move |_r| {
+                Ok(ReplicaStacks {
+                    target: Box::new(base_t.replicate()?),
+                    draft: Box::new(base_d.replicate()?),
+                })
+            });
+            Ok((shape, builder))
         }
         "xla" => {
-            let mut engine = Engine::cpu()?;
-            let t = XlaBackend::load(&mut engine, &manifest, "target", &cfg.kernel)?;
-            let d = XlaBackend::load(&mut engine, &manifest, "draft", &cfg.kernel)?;
-            Ok((Box::new(t), Box::new(d), manifest))
+            let artifacts = cfg.artifacts.clone();
+            let kernel = cfg.kernel.clone();
+            let builder: ReplicaBuilder = Arc::new(move |_r| {
+                // All PJRT state is created on (and never leaves) the
+                // replica thread.
+                let manifest = Manifest::load(&artifacts)?;
+                let mut engine = Engine::cpu()?;
+                let t = XlaBackend::load(&mut engine, &manifest, "target", &kernel)?;
+                let d = XlaBackend::load(&mut engine, &manifest, "draft", &kernel)?;
+                Ok(ReplicaStacks { target: Box::new(t), draft: Box::new(d) })
+            });
+            Ok((shape, builder))
         }
         other => anyhow::bail!("unknown backend {other}"),
     }
 }
 
-fn engine_main(
-    cfg: ServeConfig,
-    rx: mpsc::Receiver<Job>,
-    ready: mpsc::SyncSender<Result<String, String>>,
-    metrics: Arc<Metrics>,
-    monitor: Arc<AcceptanceMonitor>,
-    controller: Option<Arc<Mutex<GammaController>>>,
-    stop: Arc<AtomicBool>,
-) {
-    let (target, draft, manifest) = match load_backends(&cfg) {
-        Ok(v) => {
-            let _ = ready.send(Ok(format!(
-                "backend={} target={} draft={} patch={} n_ctx={}",
-                cfg.backend,
-                v.0.name(),
-                v.1.name(),
-                v.2.patch,
-                v.2.n_ctx
-            )));
-            v
-        }
-        Err(e) => {
-            let _ = ready.send(Err(format!("{e:#}")));
-            return;
-        }
-    };
-
-    // Spin up the kernel layer's shared compute pool before the first
-    // request: prefill matmuls and the batched verify fan over it. A
-    // `threads` setting fixes the size; 0 leaves the STRIDE_THREADS /
-    // auto default. (First initialization wins process-wide.)
-    let pool_size = if cfg.threads > 0 {
-        crate::util::threadpool::init_global_pool(cfg.threads)
-    } else {
-        crate::util::threadpool::global_pool().size()
-    };
-    log::info!("kernel compute pool: {pool_size} threads");
-
-    // Warm the executables so the first request doesn't pay compile cost.
-    let p = manifest.patch;
-    let warm = vec![0.0f32; manifest.n_ctx * p];
-    let _ = target.forward(&warm, manifest.n_ctx);
-    let _ = draft.forward(&warm, manifest.n_ctx);
-
-    let max_wait = Duration::from_millis(cfg.max_wait_ms);
-    // Learned draft-source state carried across decode groups (engine
-    // thread only, no locking): learning kinds export their parameter
-    // snapshot after each group and the next group's fresh sources are
-    // seeded with it — online adaptation survives across requests
-    // instead of cold-starting per batch.
-    let mut draft_heads: BTreeMap<DraftKind, Vec<f32>> = BTreeMap::new();
-    loop {
-        // Block for the first job (with timeout so `stop` is honored).
-        let first = match rx.recv_timeout(Duration::from_millis(50)) {
-            Ok(j) => j,
-            Err(mpsc::RecvTimeoutError::Timeout) => {
-                if stop.load(Ordering::Relaxed) {
-                    return;
-                }
-                continue;
-            }
-            Err(mpsc::RecvTimeoutError::Disconnected) => return,
-        };
-        // Drain until the batch is full or the deadline passes.
-        let mut jobs = vec![first];
-        let deadline = jobs[0].enqueued + max_wait;
-        while jobs.len() < cfg.max_batch {
-            let now = Instant::now();
-            if now >= deadline {
-                break;
-            }
-            match rx.recv_timeout(deadline - now) {
-                Ok(j) => jobs.push(j),
-                Err(_) => break,
-            }
-        }
-        metrics.inc("batches", 1);
-        metrics.inc("batched_jobs", jobs.len() as u64);
-        process_batch(
-            &cfg,
-            &manifest,
-            target.as_ref(),
-            draft.as_ref(),
-            jobs,
-            &metrics,
-            &monitor,
-            controller.as_deref(),
-            &mut draft_heads,
-        );
-    }
-}
-
 /// Validate + normalize one request into (history, n_hist, horizon).
-fn prep(req: &ForecastRequest, manifest: &Manifest, gamma: usize) -> Result<(Vec<f32>, usize, usize), String> {
-    let p = manifest.patch;
+fn prep(
+    req: &ForecastRequest,
+    shape: ModelShape,
+    gamma: usize,
+) -> Result<(Vec<f32>, usize, usize), String> {
+    let p = shape.patch;
     if req.history.len() % p != 0 {
         return Err(format!(
             "history length {} not a multiple of patch {p}",
@@ -219,7 +315,7 @@ fn prep(req: &ForecastRequest, manifest: &Manifest, gamma: usize) -> Result<(Vec
     }
     let n_hist = req.history.len() / p;
     // Keep at most the context the models can see during a round.
-    let keep = manifest.n_ctx.saturating_sub(gamma + 1).max(1);
+    let keep = shape.n_ctx.saturating_sub(gamma + 1).max(1);
     let hist = if n_hist > keep {
         req.history[(n_hist - keep) * p..].to_vec()
     } else {
@@ -229,134 +325,78 @@ fn prep(req: &ForecastRequest, manifest: &Manifest, gamma: usize) -> Result<(Vec
     Ok((hist, n, req.horizon))
 }
 
+/// Record one served request's latency into the overall and per-priority
+/// histograms, and fold its deadline outcome into the per-priority SLO
+/// counters/gauges.
+fn observe_served(shared: &SchedShared, qj: &QueuedJob, latency: Duration) {
+    let m = &shared.metrics;
+    m.observe("request_latency", latency);
+    let prio = qj.priority.as_str();
+    m.observe(&format!("request_latency_{prio}"), latency);
+    if let Some(dl) = qj.deadline_ms {
+        // Shed/expired jobs record their (missed) outcome in the queue;
+        // this is the served side of the same ledger.
+        m.record_deadline_outcome(prio, latency <= Duration::from_millis(dl));
+    }
+}
+
+/// Execute one scheduled batch on a replica's stacks: a lockstep
+/// speculative decode for an SD group, per-job AR decodes for singles.
 #[allow(clippy::too_many_arguments)]
-fn process_batch(
+pub(crate) fn execute_batch(
     cfg: &ServeConfig,
-    manifest: &Manifest,
+    shape: ModelShape,
     target: &dyn Backend,
     draft: &dyn Backend,
-    jobs: Vec<Job>,
-    metrics: &Metrics,
-    monitor: &AcceptanceMonitor,
-    controller: Option<&Mutex<GammaController>>,
-    draft_heads: &mut BTreeMap<DraftKind, Vec<f32>>,
+    key: GroupKey,
+    jobs: Vec<QueuedJob>,
+    shared: &SchedShared,
+    replica: usize,
 ) {
-    // Partition: SD jobs grouped by (gamma, sigma-bits, cache, adaptive,
-    // draft-kind) so overrides batch together — a decode group shares one
-    // session pool, one draft source, one cost model, and one adaptation
-    // mode; baseline/draft jobs run individually. Adaptive jobs take the
-    // live controller's current recommendation as their γ key, so they
-    // *regroup automatically* as the controller drifts — the γ in the key
-    // is also the γ that seeds the group's per-sequence controllers.
-    let mut sd_groups: BTreeMap<(usize, u64, bool, bool, DraftKind), Vec<Job>> = BTreeMap::new();
-    let mut singles: Vec<Job> = Vec::new();
-    let base_spec = cfg.spec_config();
-
-    for job in jobs {
-        metrics.requests_total.fetch_add(1, Ordering::Relaxed);
-        match job.req.mode {
-            Mode::Sd if !cfg.baseline => {
-                // Asking for adaptation on a server that runs without a
-                // controller is a request we cannot honor — reject it
-                // rather than silently serving static gamma.
-                if job.req.adaptive == Some(true) && controller.is_none() {
-                    metrics.errors_total.fetch_add(1, Ordering::Relaxed);
-                    let _ = job.reply.send(Err(
-                        "adaptive speculation is not enabled on this server \
-                         (start it with --adaptive)"
-                            .to_string(),
-                    ));
-                    continue;
-                }
-                let draft_kind = job.req.draft.unwrap_or(cfg.draft.kind);
-                // The long-lived controller's α̂/c telemetry is
-                // per-source: rounds from a different draft kind would
-                // contaminate the estimates the default kind's γ is
-                // tuned from (an extrap group's c ≈ 0 would peg γ at
-                // max for everyone). Jobs overriding the draft kind
-                // cannot ride the controller — reject an explicit ask,
-                // and run implicitly-adaptive overrides on the static
-                // path.
-                if job.req.adaptive == Some(true) && draft_kind != cfg.draft.kind {
-                    metrics.errors_total.fetch_add(1, Ordering::Relaxed);
-                    let _ = job.reply.send(Err(format!(
-                        "adaptive speculation rides the server's long-lived \
-                         controller, which is tuned for draft '{}'; drop the \
-                         per-request draft override or the adaptive flag",
-                        cfg.draft.kind.as_str()
-                    )));
-                    continue;
-                }
-                // An explicit per-request gamma always pins the job to
-                // the static path: a pinned request is a pinned request.
-                let adaptive = controller.is_some()
-                    && job.req.adaptive.unwrap_or(cfg.adaptive)
-                    && job.req.gamma.is_none()
-                    && draft_kind == cfg.draft.kind;
-                let gamma = if adaptive {
-                    let ctrl = controller.unwrap().lock().unwrap();
-                    ctrl.gamma_for(manifest.n_ctx)
-                } else {
-                    job.req.gamma.unwrap_or(cfg.gamma)
-                };
-                let sigma = job.req.sigma.unwrap_or(cfg.sigma);
-                let cache = job.req.cache.unwrap_or(cfg.cache);
-                sd_groups
-                    .entry((gamma, sigma.to_bits(), cache, adaptive, draft_kind))
-                    .or_default()
-                    .push(job);
+    match key {
+        GroupKey::Single => {
+            for qj in jobs {
+                run_single(cfg, shape, target, draft, qj, shared, replica);
             }
-            _ => singles.push(job),
         }
-    }
-
-    // Per-group decode seed: reusing one RNG stream across batches would
-    // correlate accept/reject coins between requests.
-    static DECODE_SEQ: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(0);
-    for ((gamma, sigma_bits, cache, adaptive, kind), group) in sd_groups {
-        let sigma = f64::from_bits(sigma_bits);
-        let mut spec = base_spec;
-        spec.gamma = gamma;
-        spec.policy.sigma = sigma;
-        spec.cache = if cache { CacheMode::On } else { CacheMode::Off };
-        spec.draft.kind = kind;
-        spec.adaptive = if adaptive { Some(cfg.adaptive_cfg) } else { None };
-        spec.seed = spec
-            .seed
-            .wrapping_add(DECODE_SEQ.fetch_add(1, Ordering::Relaxed))
-            .wrapping_mul(0x9E37_79B9_7F4A_7C15);
-        let ctrl = if adaptive { controller } else { None };
-        run_sd_group(manifest, target, draft, group, &spec, metrics, monitor, ctrl, draft_heads);
-    }
-    for job in singles {
-        run_single(cfg, manifest, target, draft, job, metrics);
+        GroupKey::Sd { gamma, sigma_bits, cache, adaptive, kind } => {
+            let mut spec = cfg.spec_config();
+            spec.gamma = gamma;
+            spec.policy.sigma = f64::from_bits(sigma_bits);
+            spec.cache = if cache { CacheMode::On } else { CacheMode::Off };
+            spec.draft.kind = kind;
+            spec.adaptive = if adaptive { Some(cfg.adaptive_cfg) } else { None };
+            let ctrl = if adaptive { shared.controller.as_deref() } else { None };
+            run_sd_group(cfg, shape, target, draft, jobs, &spec, shared, ctrl, replica);
+        }
     }
 }
 
 #[allow(clippy::too_many_arguments)]
 fn run_sd_group(
-    manifest: &Manifest,
+    cfg: &ServeConfig,
+    shape: ModelShape,
     target: &dyn Backend,
     draft: &dyn Backend,
-    group: Vec<Job>,
+    jobs: Vec<QueuedJob>,
     spec: &SpecConfig,
-    metrics: &Metrics,
-    monitor: &AcceptanceMonitor,
+    shared: &SchedShared,
     controller: Option<&Mutex<GammaController>>,
-    draft_heads: &mut BTreeMap<DraftKind, Vec<f32>>,
+    replica: usize,
 ) {
+    let metrics = &shared.metrics;
     // Validate all; drop invalid with error replies.
-    let mut ok_jobs = Vec::new();
+    let mut ok_jobs: Vec<QueuedJob> = Vec::new();
     let mut preps: Vec<(Vec<f32>, usize, usize)> = Vec::new();
-    for job in group {
-        match prep(&job.req, manifest, spec.gamma) {
+    for qj in jobs {
+        match prep(&qj.job.req, shape, spec.gamma) {
             Ok(p) => {
                 preps.push(p);
-                ok_jobs.push(job);
+                ok_jobs.push(qj);
             }
             Err(e) => {
                 metrics.errors_total.fetch_add(1, Ordering::Relaxed);
-                let _ = job.reply.send(Err(e));
+                let _ = qj.job.reply.send(Err(ServeError::Invalid(e)));
             }
         }
     }
@@ -365,36 +405,44 @@ fn run_sd_group(
     }
     let tasks: Vec<(&[f32], usize, usize)> =
         preps.iter().map(|(h, n, hz)| (h.as_slice(), *n, *hz)).collect();
+    // One decode seed per request: the response becomes a pure function
+    // of the request, independent of batching, replica count, and
+    // arrival order (the scheduler's determinism contract).
+    let seeds: Vec<u64> =
+        ok_jobs.iter().map(|qj| qj.job.req.seed.unwrap_or(cfg.seed)).collect();
     // Build the group's draft source explicitly so learned state can be
-    // threaded across groups: seed fresh sources with the last exported
-    // head of this kind, export back after the decode.
+    // threaded across groups and replicas: seed fresh sources with the
+    // fleet's current merged head, merge the export back after.
     let mut source = match make_batch_source(&spec.draft, draft) {
         Ok(s) => s,
         Err(e) => {
-            for job in ok_jobs {
+            for qj in ok_jobs {
                 metrics.errors_total.fetch_add(1, Ordering::Relaxed);
-                let _ = job.reply.send(Err(format!("draft source failed: {e:#}")));
+                let _ = qj
+                    .job
+                    .reply
+                    .send(Err(ServeError::Internal(format!("draft source failed: {e:#}"))));
             }
             return;
         }
     };
-    if let Some(h) = draft_heads.get(&spec.draft.kind) {
-        if let Err(e) = source.import_head(h) {
+    if let Some(h) = shared.head_for(spec.draft.kind) {
+        if let Err(e) = source.import_head(&h) {
             log::warn!("stale draft head discarded: {e:#}");
-            draft_heads.remove(&spec.draft.kind);
+            shared.discard_head(spec.draft.kind);
         }
     }
     let t0 = Instant::now();
-    match sd_generate_stream_from(target, source.as_mut(), &tasks, usize::MAX, spec) {
+    match sd_generate_stream_seeded(target, source.as_mut(), &tasks, &seeds, usize::MAX, spec) {
         Ok(outs) => {
             if let Some(h) = source.export_head() {
-                draft_heads.insert(spec.draft.kind, h);
+                shared.merge_head(spec.draft.kind, h);
             }
             let batch_wall = t0.elapsed();
             // Feed the finished group back into the server's long-lived
             // controller: every round (including rejected ones) updates
             // α̂/c, and the next batch's adaptive jobs will key on the
-            // possibly-retuned γ. Gauges expose the live state.
+            // possibly-retuned γ — whichever replica they land on.
             if let Some(ctrl) = controller {
                 let mut c = ctrl.lock().unwrap();
                 for out in &outs {
@@ -410,11 +458,8 @@ fn run_sd_group(
                 metrics.set_gauge("controller_rounds", s.rounds as f64);
                 metrics.set_gauge("controller_gamma_changes", s.gamma_changes as f64);
             }
-            // Per-draft-source serving aggregates: which source kinds are
-            // live, their acceptance α̂, their measured cost ratio c, and
-            // (for learning sources) how many online updates they apply.
-            // α̂/c fold as EWMAs so the gauges track traffic rather than
-            // echoing the last group; decode/update counts are monotone.
+            // Per-draft-source serving aggregates (see PR 4): EWMA α̂/c
+            // per kind plus monotone decode/update counts.
             let kind = spec.draft.kind.as_str();
             let mut agg = DecodeStats::default();
             for out in &outs {
@@ -424,19 +469,24 @@ fn run_sd_group(
             metrics.inc(&format!("draft_{kind}_updates"), agg.draft_updates as u64);
             metrics.ewma_gauge(&format!("draft_{kind}_alpha_hat"), agg.alpha_hat(), 0.8);
             metrics.ewma_gauge(&format!("draft_{kind}_c"), agg.cost_ratio(), 0.8);
-            for (job, out) in ok_jobs.into_iter().zip(outs) {
-                let latency = job.enqueued.elapsed();
-                metrics.observe("request_latency", latency);
+            for (qj, out) in ok_jobs.into_iter().zip(outs) {
+                let latency = qj.job.enqueued.elapsed();
+                observe_served(shared, &qj, latency);
                 metrics.observe("decode_latency", batch_wall);
-                metrics.patches_total.fetch_add(out.patches.len() as u64 / manifest.patch as u64, Ordering::Relaxed);
+                metrics
+                    .patches_total
+                    .fetch_add(out.patches.len() as u64 / shape.patch as u64, Ordering::Relaxed);
                 let alpha = out.stats.alpha_hat();
                 if alpha.is_finite() {
-                    monitor.record(alpha);
+                    shared.monitor.record(alpha);
                 }
                 let resp = ForecastResponse {
                     forecast: out.patches,
                     mode: "sd".into(),
                     draft: spec.draft.kind.as_str().into(),
+                    priority: qj.priority.as_str().into(),
+                    replica,
+                    seed: qj.job.req.seed.unwrap_or(cfg.seed),
                     latency_ms: latency.as_secs_f64() * 1e3,
                     alpha_hat: alpha,
                     mean_block_len: out.stats.mean_block_len(),
@@ -444,13 +494,16 @@ fn run_sd_group(
                     draft_calls: out.stats.draft_calls,
                     target_calls: out.stats.target_calls,
                 };
-                let _ = job.reply.send(Ok(resp));
+                let _ = qj.job.reply.send(Ok(resp));
             }
         }
         Err(e) => {
-            for job in ok_jobs {
+            for qj in ok_jobs {
                 metrics.errors_total.fetch_add(1, Ordering::Relaxed);
-                let _ = job.reply.send(Err(format!("decode failed: {e:#}")));
+                let _ = qj
+                    .job
+                    .reply
+                    .send(Err(ServeError::Internal(format!("decode failed: {e:#}"))));
             }
         }
     }
@@ -458,42 +511,47 @@ fn run_sd_group(
 
 fn run_single(
     cfg: &ServeConfig,
-    manifest: &Manifest,
+    shape: ModelShape,
     target: &dyn Backend,
     draft: &dyn Backend,
-    job: Job,
-    metrics: &Metrics,
+    qj: QueuedJob,
+    shared: &SchedShared,
+    replica: usize,
 ) {
-    let model: &dyn Backend = match job.req.mode {
+    let metrics = &shared.metrics;
+    let model: &dyn Backend = match qj.job.req.mode {
         Mode::DraftOnly => draft,
         _ => target,
     };
-    let cache = if job.req.cache.unwrap_or(cfg.cache) { CacheMode::On } else { CacheMode::Off };
-    let result = (|| -> Result<ForecastResponse, String> {
-        let (hist, n_hist, horizon) = prep(&job.req, manifest, 1)?;
-        let (pred, _wall, calls) =
-            ar_decode_with(model, &hist, n_hist, horizon, cache).map_err(|e| format!("{e:#}"))?;
-        let latency = job.enqueued.elapsed();
-        metrics.observe("request_latency", latency);
-        metrics
-            .patches_total
-            .fetch_add(horizon as u64, Ordering::Relaxed);
+    let cache =
+        if qj.job.req.cache.unwrap_or(cfg.cache) { CacheMode::On } else { CacheMode::Off };
+    let result = (|| -> Result<ForecastResponse, ServeError> {
+        let (hist, n_hist, horizon) =
+            prep(&qj.job.req, shape, 1).map_err(ServeError::Invalid)?;
+        let (pred, _wall, calls) = ar_decode_with(model, &hist, n_hist, horizon, cache)
+            .map_err(|e| ServeError::Internal(format!("{e:#}")))?;
+        let latency = qj.job.enqueued.elapsed();
+        observe_served(shared, &qj, latency);
+        metrics.patches_total.fetch_add(horizon as u64, Ordering::Relaxed);
         Ok(ForecastResponse {
             forecast: pred,
-            mode: if job.req.mode == Mode::DraftOnly { "draft" } else { "baseline" }.into(),
+            mode: if qj.job.req.mode == Mode::DraftOnly { "draft" } else { "baseline" }.into(),
             // AR modes draft nothing; the field names the proposal source
             // of SD decodes only.
             draft: String::new(),
+            priority: qj.priority.as_str().into(),
+            replica,
+            seed: qj.job.req.seed.unwrap_or(cfg.seed),
             latency_ms: latency.as_secs_f64() * 1e3,
             alpha_hat: f64::NAN,
             mean_block_len: f64::NAN,
             rounds: horizon,
-            draft_calls: if job.req.mode == Mode::DraftOnly { calls } else { 0 },
-            target_calls: if job.req.mode == Mode::DraftOnly { 0 } else { calls },
+            draft_calls: if qj.job.req.mode == Mode::DraftOnly { calls } else { 0 },
+            target_calls: if qj.job.req.mode == Mode::DraftOnly { 0 } else { calls },
         })
     })();
     if result.is_err() {
         metrics.errors_total.fetch_add(1, Ordering::Relaxed);
     }
-    let _ = job.reply.send(result);
+    let _ = qj.job.reply.send(result);
 }

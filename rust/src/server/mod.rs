@@ -1,24 +1,31 @@
-//! The serving front end: HTTP routes over the dynamic batcher.
+//! The serving front end: HTTP routes over the serving scheduler.
 //!
 //! Routes:
-//! * `POST /forecast` — forecast request (see [`protocol`]).
-//! * `GET  /healthz`  — liveness + version.
+//! * `POST /forecast` — forecast request (see [`protocol`]). Errors are
+//!   typed: 429 + `Retry-After` when shed by the bounded admission
+//!   queue, 504 when a deadline expired before decoding, 400 for
+//!   invalid requests, 500 for decode failures.
+//! * `GET  /healthz`  — **readiness** probe: HTTP 200 `"ready": true`
+//!   normally, HTTP 503 `"ready": false` while the admission queue is
+//!   saturated (external load balancers drain a hot replica on this).
 //! * `GET  /metrics`  — Prometheus-style metrics text.
 //! * `GET  /stats`    — JSON snapshot (acceptance monitor, latency
-//!   quantiles, per-draft-source aggregates — α̂, measured c, online
-//!   update counts per served source kind — and, when adaptive
-//!   speculation is on, the live controller state: current γ, α̂,
-//!   measured c, change counts, tagged draft kind).
+//!   quantiles, per-draft-source aggregates, the adaptive-controller
+//!   state, and the `"scheduler"` block: policy, replicas, queue
+//!   depth/cap, shed/expired/steal counts, per-priority latency and
+//!   SLO attainment).
 //!
-//! The router validates and parses on HTTP worker threads; all model work
-//! happens on the single engine thread behind the batcher (PJRT state is
-//! not Send — see `runtime::engine`).
+//! The router validates and parses on HTTP worker threads; all model
+//! work happens on the engine replica threads behind the scheduler
+//! ([`sched`]).
 
 mod batcher;
 pub mod protocol;
+pub mod sched;
 
-pub use batcher::{start_engine, BatcherHandle};
-pub use protocol::{ForecastRequest, ForecastResponse, Mode};
+pub use batcher::{start_engine, start_engine_with_builder, BatcherHandle, Job};
+pub use protocol::{ForecastRequest, ForecastResponse, Mode, Priority, ServeError};
+pub use sched::{ModelShape, ReplicaBuilder, ReplicaStacks};
 
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
@@ -30,27 +37,56 @@ use crate::http::{HttpServer, Request, Response};
 use crate::metrics::{AcceptanceMonitor, Metrics};
 use crate::util::json::Json;
 
-/// A running forecast service: HTTP front end + engine thread.
+/// A running forecast service: HTTP front end + scheduler + replicas.
 pub struct Server {
     /// The bound HTTP listener (owns the accept loop).
     pub http: HttpServer,
-    /// Handle for submitting jobs and reading metrics/controller state.
+    /// Handle for submitting jobs and reading metrics/scheduler state.
     pub handle: BatcherHandle,
     stop: Arc<AtomicBool>,
-    engine_thread: Option<std::thread::JoinHandle<()>>,
+    replica_threads: Vec<std::thread::JoinHandle<()>>,
 }
 
 impl Server {
-    /// Start engine + HTTP front end; returns once both are ready.
+    /// Start the scheduler + HTTP front end from the artifacts manifest;
+    /// returns once every replica is ready.
     pub fn start(cfg: ServeConfig) -> Result<Server> {
         cfg.validate()?;
+        Self::start_inner(cfg, None)
+    }
+
+    /// [`Server::start`] over an injected replica builder and model
+    /// shape — the artifact-free entry for tests and benches (synthetic
+    /// in-memory models, full HTTP + scheduler stack).
+    pub fn start_with_builder(
+        cfg: ServeConfig,
+        shape: ModelShape,
+        builder: ReplicaBuilder,
+    ) -> Result<Server> {
+        cfg.validate()?;
+        Self::start_inner(cfg, Some((shape, builder)))
+    }
+
+    fn start_inner(
+        cfg: ServeConfig,
+        injected: Option<(ModelShape, ReplicaBuilder)>,
+    ) -> Result<Server> {
         let metrics = Arc::new(Metrics::new());
         // Window of 256 recent per-request acceptance means; alert at 0.8
         // per the paper's §7 conservative-threshold guidance.
         let monitor = Arc::new(AcceptanceMonitor::new(256, 0.8));
         let stop = Arc::new(AtomicBool::new(false));
-        let (handle, engine_thread) =
-            start_engine(cfg.clone(), metrics.clone(), monitor.clone(), stop.clone())?;
+        let (handle, replica_threads) = match injected {
+            None => start_engine(cfg.clone(), metrics, monitor, stop.clone())?,
+            Some((shape, builder)) => start_engine_with_builder(
+                cfg.clone(),
+                shape,
+                builder,
+                metrics,
+                monitor,
+                stop.clone(),
+            )?,
+        };
 
         let h = handle.clone();
         let http = HttpServer::start(
@@ -59,7 +95,7 @@ impl Server {
             Arc::new(move |req: &Request| route(req, &h)),
         )?;
         log::info!("serving on {}", http.addr);
-        Ok(Server { http, handle, stop, engine_thread: Some(engine_thread) })
+        Ok(Server { http, handle, stop, replica_threads })
     }
 
     /// The bound listen address (useful with port 0).
@@ -67,11 +103,12 @@ impl Server {
         self.http.addr
     }
 
-    /// Stop accepting, drain the engine thread, and join everything.
+    /// Stop accepting, drain the scheduler, and join everything.
     pub fn shutdown(&mut self) {
         self.stop.store(true, Ordering::Relaxed);
         self.http.shutdown();
-        if let Some(t) = self.engine_thread.take() {
+        self.handle.shutdown();
+        for t in self.replica_threads.drain(..) {
             let _ = t.join();
         }
     }
@@ -85,14 +122,20 @@ impl Drop for Server {
 
 fn route(req: &Request, handle: &BatcherHandle) -> Response {
     match (req.method.as_str(), req.path.as_str()) {
-        ("GET", "/healthz") => Response::json(
-            200,
-            Json::obj(vec![
-                ("status", Json::from("ok")),
+        ("GET", "/healthz") => {
+            // Readiness, not just liveness: a saturated admission queue
+            // means this replica should stop receiving traffic.
+            let ready = handle.ready();
+            let body = Json::obj(vec![
+                ("status", Json::from(if ready { "ok" } else { "saturated" })),
+                ("ready", Json::from(ready)),
                 ("version", Json::from(crate::VERSION)),
+                ("queue_depth", Json::from(handle.queue_depth())),
+                ("queue_cap", Json::from(handle.queue_cap())),
             ])
-            .to_string(),
-        ),
+            .to_string();
+            Response::json(if ready { 200 } else { 503 }, body)
+        }
         ("GET", "/metrics") => Response::text(200, &handle.metrics.render()),
         ("GET", "/stats") => {
             let m = &handle.metrics;
@@ -117,9 +160,7 @@ fn route(req: &Request, handle: &BatcherHandle) -> Response {
                 None => Json::Null,
             };
             // Per-draft-source aggregates: one entry per source kind that
-            // has actually served decodes (the serving-side view of the
-            // pluggable-draft subsystem — α̂, measured c, online-update
-            // and decode counts, from the stride_draft_* gauges).
+            // has actually served decodes.
             let mut sources = Vec::new();
             for kind in crate::specdec::DraftKind::all() {
                 let k = kind.as_str();
@@ -154,6 +195,47 @@ fn route(req: &Request, handle: &BatcherHandle) -> Response {
                 ("default", Json::from(handle.draft.as_str())),
                 ("sources", Json::obj(sources)),
             ]);
+            // Scheduler block: admission + dispatch + per-priority SLO
+            // state (see server::sched).
+            let mut priorities = Vec::new();
+            for p in Priority::all() {
+                let name = p.as_str();
+                priorities.push((
+                    name,
+                    Json::obj(vec![
+                        (
+                            "latency_p50_ms",
+                            Json::Num(m.quantile_ms(&format!("request_latency_{name}"), 0.5)),
+                        ),
+                        (
+                            "latency_p99_ms",
+                            Json::Num(m.quantile_ms(&format!("request_latency_{name}"), 0.99)),
+                        ),
+                        (
+                            "slo_attainment",
+                            m.gauge(&format!("slo_attainment_{name}"))
+                                .map(Json::Num)
+                                .unwrap_or(Json::Null),
+                        ),
+                    ]),
+                ));
+            }
+            let scheduler = Json::obj(vec![
+                ("policy", Json::from(handle.sched_policy())),
+                ("replicas", Json::from(handle.replicas())),
+                ("queue_depth", Json::from(handle.queue_depth())),
+                ("queue_cap", Json::from(handle.queue_cap())),
+                (
+                    "shed",
+                    Json::from(m.sheds_total.load(Ordering::Relaxed) as usize),
+                ),
+                (
+                    "expired",
+                    Json::from(m.expired_total.load(Ordering::Relaxed) as usize),
+                ),
+                ("steals", Json::from(m.counter("steals") as usize)),
+                ("priorities", Json::obj(priorities)),
+            ]);
             let j = Json::obj(vec![
                 ("requests", Json::from(m.requests_total.load(Ordering::Relaxed) as usize)),
                 ("patches", Json::from(m.patches_total.load(Ordering::Relaxed) as usize)),
@@ -163,6 +245,7 @@ fn route(req: &Request, handle: &BatcherHandle) -> Response {
                 ("adaptive", Json::from(handle.controller.is_some())),
                 ("controller", controller),
                 ("draft", draft),
+                ("scheduler", scheduler),
                 ("latency_p50_ms", Json::Num(m.quantile_ms("request_latency", 0.5))),
                 ("latency_p95_ms", Json::Num(m.quantile_ms("request_latency", 0.95))),
                 ("latency_p99_ms", Json::Num(m.quantile_ms("request_latency", 0.99))),
@@ -184,10 +267,15 @@ fn route(req: &Request, handle: &BatcherHandle) -> Response {
             };
             match handle.forecast(freq) {
                 Ok(resp) => Response::json(200, resp.to_json().to_string()),
-                Err(e) => Response::json(
-                    500,
-                    Json::obj(vec![("error", Json::from(e))]).to_string(),
-                ),
+                Err(e) => {
+                    let mut resp = Response::json(e.http_status(), e.to_json().to_string());
+                    if let ServeError::Shed { retry_after_ms } = &e {
+                        // Retry-After is specified in (whole) seconds.
+                        let secs = ((retry_after_ms + 999) / 1000).max(1);
+                        resp = resp.with_header("Retry-After", secs.to_string());
+                    }
+                    resp
+                }
             }
         }
         _ => Response::not_found(),

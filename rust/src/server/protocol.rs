@@ -4,16 +4,156 @@
 //!   {"history": [f32...], "horizon": <patches>, "gamma"?: n, "sigma"?: x,
 //!    "mode"?: "sd" | "baseline" | "draft", "dataset"?: "etth1",
 //!    "cache"?: true|false, "adaptive"?: true|false,
-//!    "draft"?: "model" | "extrap" | "adaptive"}
+//!    "draft"?: "model" | "extrap" | "adaptive",
+//!    "priority"?: "high" | "normal" | "low", "deadline_ms"?: n,
+//!    "seed"?: n}
 //! ->
 //!   {"forecast": [f32...], "mode": "...", "draft": "...",
+//!    "priority": "...", "replica": n, "seed": n,
 //!    "latency_ms": x, "alpha_hat": x, "mean_block_len": x, "rounds": n,
 //!    "draft_calls": n, "target_calls": n}
+//!
+//! Error responses carry a machine-readable `error_code` alongside the
+//! human `error` message (see [`ServeError`]): `shed` (HTTP 429 with a
+//! `Retry-After` header), `deadline_expired` (HTTP 504 — the job was
+//! never decoded), `invalid` (HTTP 400), `internal` (HTTP 500).
 
 use anyhow::{bail, Context, Result};
 
 use crate::specdec::DraftKind;
 use crate::util::json::Json;
+
+/// Scheduling priority of one request. The admission queue orders each
+/// compatibility group by priority band first (EDF within a band), and a
+/// saturated queue evicts its worst low-priority entry to admit a
+/// higher-priority arrival.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Priority {
+    /// Shed first, served last.
+    Low,
+    /// The default band.
+    #[default]
+    Normal,
+    /// Latency-sensitive traffic: admitted preferentially, served first.
+    High,
+}
+
+impl Priority {
+    /// Wire name of the band (`"low"` / `"normal"` / `"high"`).
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Priority::Low => "low",
+            Priority::Normal => "normal",
+            Priority::High => "high",
+        }
+    }
+
+    /// Parse a wire name; `None` for unknown spellings.
+    pub fn parse(s: &str) -> Option<Priority> {
+        match s {
+            "low" => Some(Priority::Low),
+            "normal" => Some(Priority::Normal),
+            "high" => Some(Priority::High),
+            _ => None,
+        }
+    }
+
+    /// All bands, lowest first (per-band metrics iterate this).
+    pub fn all() -> [Priority; 3] {
+        [Priority::Low, Priority::Normal, Priority::High]
+    }
+}
+
+/// A typed serving failure: every variant maps to a distinct wire
+/// `error_code` and HTTP status, so load balancers and clients can react
+/// mechanically (back off on `shed`, drop on `deadline_expired`, fix the
+/// request on `invalid`).
+#[derive(Clone, Debug, PartialEq)]
+pub enum ServeError {
+    /// The bounded admission queue is saturated and this job was shed —
+    /// either rejected at the door or evicted by a higher-priority
+    /// arrival. HTTP 429 with a `Retry-After` hint.
+    Shed {
+        /// Suggested client back-off before retrying.
+        retry_after_ms: u64,
+    },
+    /// The request's `deadline_ms` elapsed while it was still queued; it
+    /// was failed fast and **never decoded**. HTTP 504.
+    DeadlineExpired {
+        /// The deadline the request carried.
+        deadline_ms: u64,
+        /// How long the job had waited when it was purged.
+        waited_ms: u64,
+    },
+    /// The request failed validation. HTTP 400.
+    Invalid(String),
+    /// The decode (or the engine) failed. HTTP 500.
+    Internal(String),
+}
+
+impl ServeError {
+    /// Machine-readable wire code (`shed` / `deadline_expired` /
+    /// `invalid` / `internal`).
+    pub fn code(&self) -> &'static str {
+        match self {
+            ServeError::Shed { .. } => "shed",
+            ServeError::DeadlineExpired { .. } => "deadline_expired",
+            ServeError::Invalid(_) => "invalid",
+            ServeError::Internal(_) => "internal",
+        }
+    }
+
+    /// The HTTP status this error is served with.
+    pub fn http_status(&self) -> u16 {
+        match self {
+            ServeError::Shed { .. } => 429,
+            ServeError::DeadlineExpired { .. } => 504,
+            ServeError::Invalid(_) => 400,
+            ServeError::Internal(_) => 500,
+        }
+    }
+
+    /// Wire body: `{"error": ..., "error_code": ...}` plus
+    /// variant-specific fields (`retry_after_ms`, `deadline_ms`,
+    /// `waited_ms`).
+    pub fn to_json(&self) -> Json {
+        let mut fields = vec![
+            ("error", Json::from(self.to_string())),
+            ("error_code", Json::from(self.code())),
+        ];
+        match self {
+            ServeError::Shed { retry_after_ms } => {
+                fields.push(("retry_after_ms", Json::from(*retry_after_ms as usize)));
+            }
+            ServeError::DeadlineExpired { deadline_ms, waited_ms } => {
+                fields.push(("deadline_ms", Json::from(*deadline_ms as usize)));
+                fields.push(("waited_ms", Json::from(*waited_ms as usize)));
+            }
+            _ => {}
+        }
+        Json::obj(fields)
+    }
+}
+
+impl std::fmt::Display for ServeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ServeError::Shed { retry_after_ms } => write!(
+                f,
+                "admission queue saturated; retry after {retry_after_ms} ms"
+            ),
+            ServeError::DeadlineExpired { deadline_ms, waited_ms } => write!(
+                f,
+                "deadline of {deadline_ms} ms expired after waiting {waited_ms} ms; \
+                 request was not decoded"
+            ),
+            ServeError::Invalid(m) => write!(f, "{m}"),
+            ServeError::Internal(m) => write!(f, "{m}"),
+        }
+    }
+}
+
+impl std::error::Error for ServeError {}
 
 /// Decoding mode of one forecast request.
 #[derive(Clone, Debug, PartialEq)]
@@ -70,6 +210,23 @@ pub struct ForecastRequest {
     pub draft: Option<DraftKind>,
     /// Traffic-segment tag for acceptance monitoring (paper §7).
     pub dataset: Option<String>,
+    /// Scheduling priority band (`normal` unless overridden). Orders the
+    /// admission queue and decides who is evicted under saturation.
+    pub priority: Priority,
+    /// Soft deadline in milliseconds, measured from admission. Expired
+    /// jobs are failed fast with [`ServeError::DeadlineExpired`] and
+    /// never decoded; within a compatibility group, jobs dispatch
+    /// earliest-deadline-first. `None` falls back to the server's
+    /// `default_deadline_ms` (0 = no deadline).
+    pub deadline_ms: Option<u64>,
+    /// Per-request decode seed. With a pinned seed the response is a
+    /// pure function of the request — bit-identical to
+    /// `sd_generate_from` at that seed regardless of batching, replica
+    /// count, or arrival order. `None` makes the scheduler assign a
+    /// fresh seed (echoed in the response), so unseeded traffic keeps
+    /// independent RNG streams: repeated `"sampled"` requests draw
+    /// fresh samples, not copies.
+    pub seed: Option<u64>,
 }
 
 impl ForecastRequest {
@@ -114,6 +271,28 @@ impl ForecastRequest {
                     .with_context(|| format!("unknown draft kind '{s}' (model|extrap|adaptive)"))?,
             ),
         };
+        let priority = match j.get("priority") {
+            None => Priority::Normal,
+            Some(v) => {
+                let s = v.as_str().context("'priority' must be a string")?;
+                Priority::parse(s)
+                    .with_context(|| format!("unknown priority '{s}' (high|normal|low)"))?
+            }
+        };
+        let deadline_ms = match j.get("deadline_ms") {
+            None => None,
+            Some(v) => {
+                let d = v.as_usize().context("'deadline_ms' must be an integer")? as u64;
+                if d == 0 || d > 3_600_000 {
+                    bail!("'deadline_ms' must be in [1, 3600000]");
+                }
+                Some(d)
+            }
+        };
+        let seed = match j.get("seed") {
+            None => None,
+            Some(v) => Some(v.as_usize().context("'seed' must be an integer")? as u64),
+        };
         Ok(ForecastRequest {
             history,
             horizon,
@@ -124,6 +303,9 @@ impl ForecastRequest {
             adaptive: j.get("adaptive").and_then(Json::as_bool),
             draft,
             dataset: j.get("dataset").and_then(Json::as_str).map(String::from),
+            priority,
+            deadline_ms,
+            seed,
         })
     }
 }
@@ -138,6 +320,15 @@ pub struct ForecastResponse {
     /// Draft source that produced the proposals (`"model"` / `"extrap"`
     /// / `"adaptive"`; empty for the AR modes, which draft nothing).
     pub draft: String,
+    /// Priority band the scheduler served this request in.
+    pub priority: String,
+    /// Replica that executed the decode (0-based; diagnostics only —
+    /// responses are replica-invariant at a fixed seed).
+    pub replica: usize,
+    /// The decode seed actually used (the request's pinned seed, or the
+    /// fresh one the scheduler assigned). Resubmitting the same request
+    /// with `"seed"` set to this value replays the forecast exactly.
+    pub seed: u64,
     /// End-to-end request latency in milliseconds.
     pub latency_ms: f64,
     /// Mean acceptance probability of this decode (NaN for AR modes).
@@ -166,6 +357,9 @@ impl ForecastResponse {
             ("forecast", Json::arr_f32(&self.forecast)),
             ("mode", Json::from(self.mode.as_str())),
             ("draft", Json::from(self.draft.as_str())),
+            ("priority", Json::from(self.priority.as_str())),
+            ("replica", Json::from(self.replica)),
+            ("seed", Json::from(self.seed as usize)),
             ("latency_ms", num(self.latency_ms)),
             ("alpha_hat", num(self.alpha_hat)),
             ("mean_block_len", num(self.mean_block_len)),
@@ -245,6 +439,9 @@ mod tests {
             forecast: vec![1.0, 2.0],
             mode: "sd".into(),
             draft: "model".into(),
+            priority: "high".into(),
+            replica: 3,
+            seed: 99,
             latency_ms: 3.5,
             alpha_hat: 0.97,
             mean_block_len: 3.4,
@@ -256,8 +453,72 @@ mod tests {
         let parsed = Json::parse(&j.to_string()).unwrap();
         assert_eq!(parsed.get("mode").unwrap().as_str(), Some("sd"));
         assert_eq!(parsed.get("draft").unwrap().as_str(), Some("model"));
+        assert_eq!(parsed.get("priority").unwrap().as_str(), Some("high"));
+        assert_eq!(parsed.get("replica").unwrap().as_usize(), Some(3));
+        assert_eq!(parsed.get("seed").unwrap().as_usize(), Some(99));
         assert_eq!(parsed.get("rounds").unwrap().as_usize(), Some(2));
         assert_eq!(parsed.get("forecast").unwrap().as_arr().unwrap().len(), 2);
+    }
+
+    #[test]
+    fn parses_scheduling_fields() {
+        let j = Json::parse(
+            r#"{"history": [0.5], "horizon": 2, "priority": "high",
+                "deadline_ms": 250, "seed": 42}"#,
+        )
+        .unwrap();
+        let r = ForecastRequest::from_json(&j).unwrap();
+        assert_eq!(r.priority, Priority::High);
+        assert_eq!(r.deadline_ms, Some(250));
+        assert_eq!(r.seed, Some(42));
+        // Defaults.
+        let j = Json::parse(r#"{"history": [0.5], "horizon": 2}"#).unwrap();
+        let r = ForecastRequest::from_json(&j).unwrap();
+        assert_eq!(r.priority, Priority::Normal);
+        assert_eq!(r.deadline_ms, None);
+        assert_eq!(r.seed, None);
+        // Rejections.
+        for bad in [
+            r#"{"history": [0.5], "horizon": 2, "priority": "urgent"}"#,
+            r#"{"history": [0.5], "horizon": 2, "priority": 7}"#,
+            r#"{"history": [0.5], "horizon": 2, "deadline_ms": 0}"#,
+            r#"{"history": [0.5], "horizon": 2, "deadline_ms": 4000000}"#,
+            r#"{"history": [0.5], "horizon": 2, "seed": "abc"}"#,
+        ] {
+            let j = Json::parse(bad).unwrap();
+            assert!(ForecastRequest::from_json(&j).is_err(), "should reject {bad}");
+        }
+    }
+
+    #[test]
+    fn priority_ordering_and_names() {
+        assert!(Priority::High > Priority::Normal);
+        assert!(Priority::Normal > Priority::Low);
+        for p in Priority::all() {
+            assert_eq!(Priority::parse(p.as_str()), Some(p));
+        }
+        assert_eq!(Priority::parse("urgent"), None);
+    }
+
+    #[test]
+    fn serve_error_wire_mapping() {
+        let e = ServeError::Shed { retry_after_ms: 750 };
+        assert_eq!(e.http_status(), 429);
+        assert_eq!(e.code(), "shed");
+        let j = e.to_json();
+        assert_eq!(j.get("error_code").unwrap().as_str(), Some("shed"));
+        assert_eq!(j.get("retry_after_ms").unwrap().as_usize(), Some(750));
+
+        let e = ServeError::DeadlineExpired { deadline_ms: 100, waited_ms: 180 };
+        assert_eq!(e.http_status(), 504);
+        assert_eq!(e.code(), "deadline_expired");
+        let j = e.to_json();
+        assert_eq!(j.get("deadline_ms").unwrap().as_usize(), Some(100));
+        assert_eq!(j.get("waited_ms").unwrap().as_usize(), Some(180));
+
+        assert_eq!(ServeError::Invalid("x".into()).http_status(), 400);
+        assert_eq!(ServeError::Internal("x".into()).http_status(), 500);
+        assert!(ServeError::Invalid("bad gamma".into()).to_string().contains("bad gamma"));
     }
 
     #[test]

@@ -1,0 +1,71 @@
+//! The serving scheduler: bounded admission, deadline/priority-aware
+//! dispatch, and an engine replica pool.
+//!
+//! This subsystem replaces the original single-FIFO-batcher serving loop
+//! (one engine thread draining an unbounded channel in arrival order)
+//! with a production-shaped pipeline:
+//!
+//! ```text
+//!  HTTP workers ── admit ──► AdmissionQueue ── next_batch ──► replica 0
+//!        │   (bounded; shed 429 /   │  (EDF within group,     replica 1
+//!        │    priority eviction)    │   affinity + stealing)     ...
+//!        ▼                          ▼                         replica N-1
+//!   ServeError::Shed        ServeError::DeadlineExpired    (own model/session
+//!   + Retry-After           (expired jobs never decode)     stacks over one
+//!                                                           Arc'd weight store)
+//! ```
+//!
+//! * **Admission** ([`AdmissionQueue`]): a hard queue-depth cap from
+//!   `ServeConfig::queue_cap`. At the cap, arrivals are shed with HTTP
+//!   429 + `Retry-After`; under the default [`SchedPolicy::Edf`] a
+//!   higher-priority arrival instead evicts the worst queued job. Jobs
+//!   whose `deadline_ms` elapses while queued are failed fast with a
+//!   distinct error code (HTTP 504) and are **never decoded**.
+//! * **Dispatch order**: jobs are keyed by their decode-compatibility
+//!   group ([`GroupKey`] — the (γ, σ, cache, adaptive, draft-kind)
+//!   tuple), and within a group ordered by priority band first, then
+//!   earliest deadline, then arrival. [`SchedPolicy::Fifo`] preserves
+//!   pure arrival order as the A/B baseline.
+//! * **Replicas** ([`start_pool`]): N independent engine stacks — on the
+//!   native backend each replica's models share one `Arc`-packed weight
+//!   storage ([`crate::models::NativeBackend::replicate`]) — each
+//!   running its own drain loop. Replicas prefer groups they served
+//!   last (affinity) and steal the most urgent other group when idle,
+//!   so one slow group cannot head-of-line-block the fleet. Learned
+//!   draft heads and the adaptive-γ controller are shared behind
+//!   mutexes and merged across replicas.
+//! * **Determinism**: decode groups run through
+//!   [`crate::specdec::sd_generate_stream_seeded`] with one seed per
+//!   request, so a response is a pure function of the request — bit
+//!   identical to `sd_generate_from` at that seed for *any* replica
+//!   count, batch composition, or arrival order
+//!   (`benches/serving_load.rs` pins this).
+//!
+//! Observability: `stride_queue_depth`, `stride_sheds_total`,
+//! `stride_expired_total`, `stride_steals`, per-replica batch counters,
+//! per-priority latency histograms, and per-priority SLO-attainment
+//! gauges — all rendered at `/metrics` and summarized in the `/stats`
+//! `"scheduler"` block. `/healthz` turns into a readiness probe:
+//! it reports HTTP 503 with `"ready": false` while the admission queue
+//! is saturated, so external load balancers can drain a hot replica.
+
+mod queue;
+mod pool;
+
+pub use pool::{start_pool, ReplicaBuilder, ReplicaStacks, SchedShared};
+pub use queue::{AdmissionQueue, GroupKey, QueuedJob};
+
+pub use crate::config::SchedPolicy;
+
+/// The model geometry the executor needs for request validation and
+/// context clamping — the manifest fields the scheduler actually uses,
+/// decoupled from [`crate::runtime::Manifest`] so tests and benches can
+/// run the full serving stack over synthetic models with no artifacts
+/// on disk.
+#[derive(Clone, Copy, Debug)]
+pub struct ModelShape {
+    /// Values per patch token.
+    pub patch: usize,
+    /// Maximum context length in patches.
+    pub n_ctx: usize,
+}

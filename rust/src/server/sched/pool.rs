@@ -1,0 +1,204 @@
+//! The engine replica pool: N independent model/session stacks, each
+//! running its own drain loop over the shared [`AdmissionQueue`].
+//!
+//! Replicas are built by a [`ReplicaBuilder`] *on the replica's own
+//! thread* (the PJRT client is not `Send`, so the xla backend must be
+//! constructed where it runs; the native builder hands every replica a
+//! [`crate::models::NativeBackend::replicate`] stack over one shared
+//! `Arc`-packed weight store — N replicas, one copy of the floats).
+//!
+//! Cross-replica state is deliberately small and mutex-guarded:
+//! * the server's long-lived adaptive-γ controller (every finished
+//!   group's rounds feed it, whichever replica ran them);
+//! * the per-kind learned draft heads — a replica imports the current
+//!   snapshot before a decode group and merges its export back
+//!   (elementwise mean with the stored head), so online adaptation is
+//!   pooled across the fleet instead of fragmenting per replica.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use crate::config::ServeConfig;
+use crate::metrics::{AcceptanceMonitor, Metrics};
+use crate::models::Backend;
+use crate::specdec::{DraftKind, GammaController};
+
+use super::super::batcher::execute_batch;
+use super::queue::AdmissionQueue;
+use super::ModelShape;
+
+/// One replica's owned backends (target + draft).
+pub struct ReplicaStacks {
+    /// The target (verifier) backend.
+    pub target: Box<dyn Backend>,
+    /// The draft (proposal) backend.
+    pub draft: Box<dyn Backend>,
+}
+
+/// Constructs replica `i`'s stacks, called on that replica's thread.
+/// Must be cheap on shared state (clone `Arc` weight handles, don't
+/// reload blobs) and is the injection point that lets tests and benches
+/// run the full serving stack over synthetic models.
+pub type ReplicaBuilder = Arc<dyn Fn(usize) -> Result<ReplicaStacks> + Send + Sync>;
+
+/// State shared by every replica (and read by the HTTP layer).
+pub struct SchedShared {
+    /// Serving metrics registry.
+    pub metrics: Arc<Metrics>,
+    /// Windowed acceptance monitor (paper §7 alerting).
+    pub monitor: Arc<AcceptanceMonitor>,
+    /// The server's long-lived adaptive-γ controller, when enabled.
+    pub controller: Option<Arc<Mutex<GammaController>>>,
+    /// Per-kind learned draft-head snapshots, merged across replicas.
+    pub draft_heads: Mutex<BTreeMap<DraftKind, Vec<f32>>>,
+}
+
+impl SchedShared {
+    /// Current head snapshot for `kind`, if any replica exported one.
+    pub fn head_for(&self, kind: DraftKind) -> Option<Vec<f32>> {
+        self.draft_heads.lock().unwrap().get(&kind).cloned()
+    }
+
+    /// Fold a replica's exported head into the shared snapshot:
+    /// elementwise mean with the stored head (deterministic, keeps every
+    /// replica's adaptation represented), or replace it on a shape
+    /// change.
+    pub fn merge_head(&self, kind: DraftKind, head: Vec<f32>) {
+        let mut hs = self.draft_heads.lock().unwrap();
+        match hs.get_mut(&kind) {
+            Some(prev) if prev.len() == head.len() => {
+                for (p, h) in prev.iter_mut().zip(&head) {
+                    *p = 0.5 * (*p + *h);
+                }
+            }
+            _ => {
+                hs.insert(kind, head);
+            }
+        }
+    }
+
+    /// Drop a stored head (a replica found it stale/mis-shaped).
+    pub fn discard_head(&self, kind: DraftKind) {
+        self.draft_heads.lock().unwrap().remove(&kind);
+    }
+}
+
+/// Spawn `cfg.replicas` engine threads; blocks until every replica's
+/// backends are loaded and warmed (or fails, after tearing the pool
+/// down). Each thread drains the queue until shutdown.
+pub fn start_pool(
+    cfg: Arc<ServeConfig>,
+    shape: ModelShape,
+    builder: ReplicaBuilder,
+    queue: Arc<AdmissionQueue>,
+    shared: Arc<SchedShared>,
+    stop: Arc<AtomicBool>,
+) -> Result<Vec<std::thread::JoinHandle<()>>> {
+    // Size the kernel compute pool before the first forward (first
+    // initialization wins process-wide, exactly as the single-engine
+    // loop did).
+    let pool_size = if cfg.threads > 0 {
+        crate::util::threadpool::init_global_pool(cfg.threads)
+    } else {
+        crate::util::threadpool::global_pool().size()
+    };
+    log::info!("kernel compute pool: {pool_size} threads");
+
+    let (ready_tx, ready_rx) = mpsc::sync_channel::<Result<String, String>>(cfg.replicas);
+    let mut handles = Vec::new();
+    for r in 0..cfg.replicas {
+        let cfg = Arc::clone(&cfg);
+        let builder = Arc::clone(&builder);
+        let queue = Arc::clone(&queue);
+        let shared = Arc::clone(&shared);
+        let stop = Arc::clone(&stop);
+        let ready = ready_tx.clone();
+        let handle = std::thread::Builder::new()
+            .name(format!("stride-replica-{r}"))
+            .spawn(move || {
+                let stacks = match builder(r) {
+                    Ok(s) => s,
+                    Err(e) => {
+                        let _ = ready.send(Err(format!("replica {r}: {e:#}")));
+                        return;
+                    }
+                };
+                // Warm both stacks so the first request doesn't pay
+                // first-touch cost.
+                let warm = vec![0.0f32; shape.n_ctx * shape.patch];
+                let _ = stacks.target.forward(&warm, shape.n_ctx);
+                let _ = stacks.draft.forward(&warm, shape.n_ctx);
+                let _ = ready.send(Ok(format!(
+                    "replica {r}: target={} draft={}",
+                    stacks.target.name(),
+                    stacks.draft.name()
+                )));
+                replica_main(r, &cfg, shape, stacks, &queue, &shared, &stop);
+            })
+            .context("spawning replica thread")?;
+        handles.push(handle);
+    }
+    drop(ready_tx);
+
+    let mut failure: Option<String> = None;
+    for _ in 0..cfg.replicas {
+        match ready_rx.recv() {
+            Ok(Ok(desc)) => log::info!("engine ready: {desc}"),
+            Ok(Err(e)) => {
+                failure = Some(e);
+                break;
+            }
+            Err(_) => {
+                failure = Some("replica thread died during startup".into());
+                break;
+            }
+        }
+    }
+    if let Some(e) = failure {
+        // Tear down whatever did come up before reporting the failure.
+        queue.shutdown();
+        stop.store(true, Ordering::Relaxed);
+        for h in handles {
+            let _ = h.join();
+        }
+        anyhow::bail!("engine startup failed: {e}");
+    }
+    Ok(handles)
+}
+
+fn replica_main(
+    replica: usize,
+    cfg: &ServeConfig,
+    shape: ModelShape,
+    stacks: ReplicaStacks,
+    queue: &AdmissionQueue,
+    shared: &SchedShared,
+    stop: &AtomicBool,
+) {
+    let max_wait = Duration::from_millis(cfg.max_wait_ms);
+    loop {
+        if stop.load(Ordering::Relaxed) {
+            return;
+        }
+        let Some((key, jobs)) = queue.next_batch(replica, cfg.max_batch, max_wait) else {
+            return; // queue shut down
+        };
+        shared.metrics.inc("batches", 1);
+        shared.metrics.inc("batched_jobs", jobs.len() as u64);
+        shared.metrics.inc(&format!("replica_{replica}_batches"), 1);
+        execute_batch(
+            cfg,
+            shape,
+            stacks.target.as_ref(),
+            stacks.draft.as_ref(),
+            key,
+            jobs,
+            shared,
+            replica,
+        );
+    }
+}

@@ -1,0 +1,685 @@
+//! Bounded, priority/deadline-aware admission queue with per-group EDF
+//! ordering — the data structure between the HTTP workers and the
+//! replica pool.
+//!
+//! Invariants:
+//! * Depth never exceeds the cap: at the cap an arrival is shed (or,
+//!   under EDF, the *worst* queued job is evicted for a strictly
+//!   higher-priority arrival) — every removal answers its reply channel
+//!   with a typed [`ServeError`].
+//! * Expired jobs never reach a replica: both `admit` and `next_batch`
+//!   purge deadline-expired entries first, failing them fast with
+//!   [`ServeError::DeadlineExpired`].
+//! * Within a group, `next_batch` hands out jobs in dispatch order:
+//!   priority band desc, deadline asc (absent = infinitely far), arrival
+//!   seq asc under [`SchedPolicy::Edf`]; pure arrival seq under
+//!   [`SchedPolicy::Fifo`].
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, Ordering as AtomicOrdering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::config::SchedPolicy;
+use crate::metrics::Metrics;
+use crate::specdec::DraftKind;
+
+use super::super::batcher::Job;
+use super::super::protocol::{Priority, ServeError};
+
+/// Decode-compatibility key: jobs with equal keys can share one lockstep
+/// decode group (one session pool, one draft source, one cost model).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum GroupKey {
+    /// A speculative-decode group — the (γ, σ, cache, adaptive,
+    /// draft-kind) tuple the batcher has always grouped by.
+    Sd {
+        /// Draft block length γ (the live controller's current value for
+        /// adaptive jobs, so they regroup as γ drifts).
+        gamma: usize,
+        /// Acceptance width σ as stable bits (f64 keys can't derive Ord).
+        sigma_bits: u64,
+        /// KV-cache on/off.
+        cache: bool,
+        /// Riding the server's long-lived γ controller.
+        adaptive: bool,
+        /// Proposal source kind.
+        kind: DraftKind,
+    },
+    /// Individually-executed jobs (baseline/draft-only AR modes); they
+    /// still queue, order, and shed like everything else.
+    Single,
+}
+
+/// One admitted request waiting for (or handed to) a replica.
+pub struct QueuedJob {
+    /// The job itself (request + reply channel).
+    pub job: Job,
+    /// Scheduling band.
+    pub priority: Priority,
+    /// Absolute expiry instant, when the request carries a deadline.
+    pub deadline: Option<Instant>,
+    /// The deadline in milliseconds as admitted (SLO accounting).
+    pub deadline_ms: Option<u64>,
+    /// Admission sequence number (arrival-order tiebreak).
+    pub seq: u64,
+}
+
+impl QueuedJob {
+    /// Dispatch-order key under EDF: smaller sorts first. Priority band
+    /// desc, then deadline asc (absent = infinitely far), then arrival.
+    fn edf_key(&self) -> (u8, u128, u64) {
+        let band = match self.priority {
+            Priority::High => 0u8,
+            Priority::Normal => 1,
+            Priority::Low => 2,
+        };
+        let dl = match self.deadline {
+            Some(d) => d,
+            // No deadline sorts after every real one: a year out.
+            None => self.job.enqueued + Duration::from_secs(86_400 * 365),
+        };
+        (band, instant_key(dl), self.seq)
+    }
+}
+
+/// Monotone ordering key for an `Instant` (nanos since process start-ish
+/// epoch; only comparisons matter).
+fn instant_key(t: Instant) -> u128 {
+    use std::sync::OnceLock;
+    static EPOCH: OnceLock<Instant> = OnceLock::new();
+    let e = *EPOCH.get_or_init(Instant::now);
+    t.saturating_duration_since(e).as_nanos()
+}
+
+struct State {
+    groups: BTreeMap<GroupKey, Vec<QueuedJob>>,
+    depth: usize,
+    seq: u64,
+    /// Last replica that served each group (routing preference).
+    affinity: BTreeMap<GroupKey, usize>,
+    shutdown: bool,
+}
+
+impl State {
+    fn insert(&mut self, key: GroupKey, qj: QueuedJob, policy: SchedPolicy) {
+        let g = self.groups.entry(key).or_default();
+        match policy {
+            SchedPolicy::Fifo => g.push(qj),
+            SchedPolicy::Edf => {
+                let k = qj.edf_key();
+                let pos = g.partition_point(|x| x.edf_key() <= k);
+                g.insert(pos, qj);
+            }
+        }
+        self.depth += 1;
+    }
+}
+
+/// Affinity entries kept once the map outgrows this bound: the key
+/// space is partly client-controlled (γ and σ-bits come off the wire),
+/// so the last-server map must not grow without limit on a long-running
+/// server — dead groups' entries are pruned past this size.
+const MAX_AFFINITY: usize = 256;
+
+/// The bounded admission queue shared by HTTP workers and the replica
+/// pool. See the module docs for the invariants.
+pub struct AdmissionQueue {
+    state: Mutex<State>,
+    cond: Condvar,
+    cap: usize,
+    policy: SchedPolicy,
+    retry_after_ms: u64,
+    metrics: Arc<Metrics>,
+    /// External drain signal: when set, `next_batch` returns `None` at
+    /// the next wakeup even without `shutdown()` (the pre-scheduler
+    /// engine loop honored its stop flag the same way).
+    stop: Arc<AtomicBool>,
+}
+
+impl AdmissionQueue {
+    /// Queue bounded at `cap` jobs, dispatching per `policy`, shedding
+    /// with a `retry_after_ms` back-off hint, counting into `metrics`.
+    /// Replicas drain out when `stop` is set or `shutdown()` is called.
+    pub fn new(
+        cap: usize,
+        policy: SchedPolicy,
+        retry_after_ms: u64,
+        metrics: Arc<Metrics>,
+        stop: Arc<AtomicBool>,
+    ) -> AdmissionQueue {
+        AdmissionQueue {
+            state: Mutex::new(State {
+                groups: BTreeMap::new(),
+                depth: 0,
+                seq: 0,
+                affinity: BTreeMap::new(),
+                shutdown: false,
+            }),
+            cond: Condvar::new(),
+            cap,
+            policy,
+            retry_after_ms,
+            metrics,
+            stop,
+        }
+    }
+
+    /// The dispatch policy this queue runs.
+    pub fn policy(&self) -> SchedPolicy {
+        self.policy
+    }
+
+    /// The hard depth cap.
+    pub fn cap(&self) -> usize {
+        self.cap
+    }
+
+    /// Jobs currently admitted and waiting.
+    pub fn depth(&self) -> usize {
+        self.state.lock().unwrap().depth
+    }
+
+    /// True when the queue is at its cap — the `/healthz` readiness
+    /// signal (a saturated replica should be drained by the balancer).
+    pub fn saturated(&self) -> bool {
+        let s = self.state.lock().unwrap();
+        s.depth >= self.cap
+    }
+
+    fn shed(&self, qj: QueuedJob) {
+        self.metrics.sheds_total.fetch_add(1, AtomicOrdering::Relaxed);
+        // A shed request with a deadline is a missed SLO: the client
+        // asked for a bound and got a 429 instead of a forecast.
+        if qj.deadline_ms.is_some() {
+            self.metrics.record_deadline_outcome(qj.priority.as_str(), false);
+        }
+        let _ = qj.job.reply.send(Err(ServeError::Shed { retry_after_ms: self.retry_after_ms }));
+    }
+
+    fn expire(&self, qj: QueuedJob, now: Instant) {
+        self.metrics.expired_total.fetch_add(1, AtomicOrdering::Relaxed);
+        // An expired deadline is by definition a missed SLO — without
+        // this, attainment gauges would be computed only over requests
+        // that decoded, overstating exactly under overload.
+        self.metrics.record_deadline_outcome(qj.priority.as_str(), false);
+        let waited_ms = now.saturating_duration_since(qj.job.enqueued).as_millis() as u64;
+        let _ = qj.job.reply.send(Err(ServeError::DeadlineExpired {
+            deadline_ms: qj.deadline_ms.unwrap_or(0),
+            waited_ms,
+        }));
+    }
+
+    /// Drop every queued job whose deadline has passed, answering each
+    /// with [`ServeError::DeadlineExpired`]. Expired jobs never decode.
+    fn purge_expired(&self, s: &mut State) {
+        let now = Instant::now();
+        let mut expired: Vec<QueuedJob> = Vec::new();
+        for g in s.groups.values_mut() {
+            let mut i = 0;
+            while i < g.len() {
+                if g[i].deadline.map(|d| d <= now).unwrap_or(false) {
+                    expired.push(g.remove(i));
+                } else {
+                    i += 1;
+                }
+            }
+        }
+        s.depth -= expired.len();
+        for qj in expired {
+            self.expire(qj, now);
+        }
+        s.groups.retain(|_, g| !g.is_empty());
+        self.metrics.set_gauge("queue_depth", s.depth as f64);
+    }
+
+    /// Admit one job into `key`'s group. At the cap: under FIFO the
+    /// arrival is shed; under EDF the worst queued job is evicted if the
+    /// arrival outranks it (strictly higher priority), else the arrival
+    /// is shed. Returns the shed error so the HTTP layer can answer
+    /// without waiting on the reply channel.
+    pub fn admit(
+        &self,
+        job: Job,
+        priority: Priority,
+        deadline_ms: Option<u64>,
+        key: GroupKey,
+    ) -> Result<(), ServeError> {
+        let mut s = self.state.lock().unwrap();
+        if s.shutdown {
+            return Err(ServeError::Internal("server is shutting down".into()));
+        }
+        self.purge_expired(&mut s);
+        if s.depth >= self.cap {
+            let evicted = match self.policy {
+                SchedPolicy::Fifo => None,
+                SchedPolicy::Edf => self.evict_worse_than(&mut s, priority),
+            };
+            match evicted {
+                Some(victim) => self.shed(victim),
+                None => {
+                    drop(s);
+                    self.metrics.sheds_total.fetch_add(1, AtomicOrdering::Relaxed);
+                    if deadline_ms.is_some() {
+                        self.metrics.record_deadline_outcome(priority.as_str(), false);
+                    }
+                    return Err(ServeError::Shed { retry_after_ms: self.retry_after_ms });
+                }
+            }
+        }
+        let seq = s.seq;
+        s.seq += 1;
+        let deadline = deadline_ms.map(|ms| job.enqueued + Duration::from_millis(ms));
+        s.insert(key, QueuedJob { job, priority, deadline, deadline_ms, seq }, self.policy);
+        self.metrics.set_gauge("queue_depth", s.depth as f64);
+        self.cond.notify_all();
+        Ok(())
+    }
+
+    /// Remove and return the worst queued job (lowest band, then latest
+    /// deadline, then newest) *iff* it ranks strictly below `incoming`.
+    fn evict_worse_than(&self, s: &mut State, incoming: Priority) -> Option<QueuedJob> {
+        let mut worst: Option<(GroupKey, usize)> = None;
+        let mut worst_key = (0u8, 0u128, 0u64);
+        for (k, g) in &s.groups {
+            for (i, qj) in g.iter().enumerate() {
+                if qj.priority >= incoming {
+                    continue;
+                }
+                // Reuse the EDF key; "worst" = largest.
+                let key = qj.edf_key();
+                if worst.is_none() || key > worst_key {
+                    worst = Some((*k, i));
+                    worst_key = key;
+                }
+            }
+        }
+        let (gk, i) = worst?;
+        let victim = s.groups.get_mut(&gk).unwrap().remove(i);
+        if s.groups.get(&gk).unwrap().is_empty() {
+            s.groups.remove(&gk);
+        }
+        s.depth -= 1;
+        Some(victim)
+    }
+
+    /// Pick this replica's next decode batch: up to `max_batch` jobs
+    /// from one group, in dispatch order. Blocks until work is
+    /// available, the group has either filled to `max_batch` or aged
+    /// past `max_wait` (the dynamic-batching window), or the queue shuts
+    /// down (`None`).
+    ///
+    /// Group choice: the most urgent head among groups this replica has
+    /// affinity for (or that nobody owns); when it has none, it *steals*
+    /// the most urgent foreign group — an idle replica never sits behind
+    /// another replica's backlog. Affinity follows the pop.
+    pub fn next_batch(
+        &self,
+        replica: usize,
+        max_batch: usize,
+        max_wait: Duration,
+    ) -> Option<(GroupKey, Vec<QueuedJob>)> {
+        let mut s = self.state.lock().unwrap();
+        loop {
+            if self.stop.load(AtomicOrdering::Relaxed) {
+                return None;
+            }
+            self.purge_expired(&mut s);
+            if let Some((key, stolen)) = self.choose_group(&s, replica) {
+                let g = s.groups.get(&key).unwrap();
+                let oldest = g.iter().map(|qj| qj.job.enqueued).min().unwrap();
+                let aged = oldest.elapsed() >= max_wait;
+                if g.len() >= max_batch || aged || s.depth >= self.cap {
+                    let g = s.groups.get_mut(&key).unwrap();
+                    let n = g.len().min(max_batch);
+                    let batch: Vec<QueuedJob> = g.drain(..n).collect();
+                    if g.is_empty() {
+                        s.groups.remove(&key);
+                    }
+                    s.depth -= batch.len();
+                    if stolen {
+                        self.metrics.inc("steals", 1);
+                    }
+                    s.affinity.insert(key, replica);
+                    // γ and σ-bits in the key come off the wire, so the
+                    // affinity map is client-growable: prune entries of
+                    // dead groups past a fixed bound.
+                    if s.affinity.len() > MAX_AFFINITY {
+                        let State { groups, affinity, .. } = &mut *s;
+                        affinity.retain(|k, _| *k == key || groups.contains_key(k));
+                    }
+                    self.metrics.set_gauge("queue_depth", s.depth as f64);
+                    // Waking peers matters: more groups may remain.
+                    self.cond.notify_all();
+                    return Some((key, batch));
+                }
+                // Wait out the batching window for this group to fill.
+                let remaining = max_wait.saturating_sub(oldest.elapsed());
+                let (ns, _) = self.cond.wait_timeout(s, remaining).unwrap();
+                s = ns;
+            } else if s.shutdown {
+                return None;
+            } else {
+                let (ns, _) = self.cond.wait_timeout(s, Duration::from_millis(50)).unwrap();
+                s = ns;
+            }
+        }
+    }
+
+    /// The most urgent non-empty group this replica should serve, and
+    /// whether taking it is a steal (it was last served by someone
+    /// else). Preference order: own/unowned groups, then foreign ones.
+    fn choose_group(&self, s: &State, replica: usize) -> Option<(GroupKey, bool)> {
+        let head_key = |g: &Vec<QueuedJob>| match self.policy {
+            SchedPolicy::Edf => g[0].edf_key(),
+            SchedPolicy::Fifo => (0, 0, g[0].seq),
+        };
+        let mut best_mine: Option<(GroupKey, (u8, u128, u64))> = None;
+        let mut best_foreign: Option<(GroupKey, (u8, u128, u64))> = None;
+        for (k, g) in &s.groups {
+            if g.is_empty() {
+                continue;
+            }
+            let hk = head_key(g);
+            let owner = s.affinity.get(k).copied();
+            let slot = if owner.is_none() || owner == Some(replica) {
+                &mut best_mine
+            } else {
+                &mut best_foreign
+            };
+            if slot.as_ref().map(|(_, bk)| hk < *bk).unwrap_or(true) {
+                *slot = Some((*k, hk));
+            }
+        }
+        match (best_mine, best_foreign) {
+            (Some((k, _)), _) => Some((k, false)),
+            (None, Some((k, _))) => Some((k, true)),
+            (None, None) => None,
+        }
+    }
+
+    /// Stop the queue: reject future admissions, wake all replicas (they
+    /// exit on the next `next_batch`), and fail every still-queued job
+    /// with an internal error.
+    pub fn shutdown(&self) {
+        let drained: Vec<QueuedJob> = {
+            let mut s = self.state.lock().unwrap();
+            s.shutdown = true;
+            let mut all = Vec::new();
+            for (_, mut g) in std::mem::take(&mut s.groups) {
+                all.append(&mut g);
+            }
+            s.depth = 0;
+            all
+        };
+        for qj in drained {
+            let _ = qj.job.reply.send(Err(ServeError::Internal("server shut down".into())));
+        }
+        self.cond.notify_all();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::server::protocol::{ForecastRequest, ForecastResponse, Mode};
+    use std::sync::mpsc;
+
+    fn req() -> ForecastRequest {
+        ForecastRequest {
+            history: vec![0.0; 4],
+            horizon: 1,
+            mode: Mode::Sd,
+            gamma: None,
+            sigma: None,
+            cache: None,
+            adaptive: None,
+            draft: None,
+            dataset: None,
+            priority: Priority::Normal,
+            deadline_ms: None,
+            seed: None,
+        }
+    }
+
+    fn mk_job() -> (Job, mpsc::Receiver<Result<ForecastResponse, ServeError>>) {
+        let (tx, rx) = mpsc::sync_channel(1);
+        (Job { req: req(), enqueued: Instant::now(), reply: tx }, rx)
+    }
+
+    fn key(gamma: usize) -> GroupKey {
+        GroupKey::Sd {
+            gamma,
+            sigma_bits: 0.5f64.to_bits(),
+            cache: true,
+            adaptive: false,
+            kind: DraftKind::Model,
+        }
+    }
+
+    fn queue(cap: usize, policy: SchedPolicy) -> AdmissionQueue {
+        AdmissionQueue::new(
+            cap,
+            policy,
+            750,
+            Arc::new(Metrics::new()),
+            Arc::new(AtomicBool::new(false)),
+        )
+    }
+
+    #[test]
+    fn admits_and_dispatches_in_priority_then_deadline_order() {
+        let q = queue(16, SchedPolicy::Edf);
+        let mut rxs = Vec::new();
+        // Mixed arrivals: (priority, deadline_ms).
+        let arrivals = [
+            (Priority::Low, None),
+            (Priority::High, Some(500u64)),
+            (Priority::Normal, Some(100)),
+            (Priority::High, Some(100)),
+            (Priority::Normal, None),
+        ];
+        for (p, d) in arrivals {
+            let (job, rx) = mk_job();
+            q.admit(job, p, d, key(3)).unwrap();
+            rxs.push(rx);
+        }
+        assert_eq!(q.depth(), 5);
+        let (_, batch) = q.next_batch(0, 16, Duration::ZERO).unwrap();
+        let order: Vec<(Priority, Option<u64>)> =
+            batch.iter().map(|qj| (qj.priority, qj.deadline_ms)).collect();
+        assert_eq!(
+            order,
+            vec![
+                (Priority::High, Some(100)),
+                (Priority::High, Some(500)),
+                (Priority::Normal, Some(100)),
+                (Priority::Normal, None),
+                (Priority::Low, None),
+            ]
+        );
+        assert_eq!(q.depth(), 0);
+    }
+
+    #[test]
+    fn fifo_policy_preserves_arrival_order() {
+        let q = queue(16, SchedPolicy::Fifo);
+        for (p, d) in [(Priority::Low, None), (Priority::High, Some(50u64)), (Priority::Normal, None)]
+        {
+            let (job, _rx) = mk_job();
+            std::mem::forget(_rx);
+            q.admit(job, p, d, key(3)).unwrap();
+        }
+        let (_, batch) = q.next_batch(0, 16, Duration::ZERO).unwrap();
+        let order: Vec<Priority> = batch.iter().map(|qj| qj.priority).collect();
+        assert_eq!(order, vec![Priority::Low, Priority::High, Priority::Normal]);
+    }
+
+    #[test]
+    fn saturation_sheds_and_high_priority_evicts_low() {
+        let m = Arc::new(Metrics::new());
+        let q =
+            AdmissionQueue::new(2, SchedPolicy::Edf, 750, m.clone(), Arc::new(AtomicBool::new(false)));
+        let (j1, rx1) = mk_job();
+        q.admit(j1, Priority::Low, None, key(3)).unwrap();
+        let (j2, _rx2) = mk_job();
+        q.admit(j2, Priority::Normal, None, key(3)).unwrap();
+        assert!(q.saturated());
+        // A low arrival at the cap is shed outright (nothing outranked).
+        let (j3, _rx3) = mk_job();
+        let err = q.admit(j3, Priority::Low, None, key(3)).unwrap_err();
+        assert!(matches!(err, ServeError::Shed { retry_after_ms: 750 }));
+        // A high arrival evicts the queued low.
+        let (j4, _rx4) = mk_job();
+        q.admit(j4, Priority::High, None, key(3)).unwrap();
+        let evicted = rx1.try_recv().unwrap().unwrap_err();
+        assert_eq!(evicted.code(), "shed");
+        assert_eq!(q.depth(), 2);
+        assert_eq!(m.sheds_total.load(AtomicOrdering::Relaxed), 2);
+        // The surviving batch holds high + normal.
+        let (_, batch) = q.next_batch(0, 16, Duration::ZERO).unwrap();
+        let bands: Vec<Priority> = batch.iter().map(|qj| qj.priority).collect();
+        assert_eq!(bands, vec![Priority::High, Priority::Normal]);
+    }
+
+    #[test]
+    fn fifo_saturation_tail_drops_regardless_of_priority() {
+        let q = queue(1, SchedPolicy::Fifo);
+        let (j1, _rx1) = mk_job();
+        q.admit(j1, Priority::Low, None, key(3)).unwrap();
+        let (j2, _rx2) = mk_job();
+        let err = q.admit(j2, Priority::High, None, key(3)).unwrap_err();
+        assert_eq!(err.code(), "shed");
+    }
+
+    #[test]
+    fn expired_jobs_are_purged_and_never_dispatched() {
+        let m = Arc::new(Metrics::new());
+        let q = AdmissionQueue::new(
+            16,
+            SchedPolicy::Edf,
+            750,
+            m.clone(),
+            Arc::new(AtomicBool::new(false)),
+        );
+        let (j1, rx1) = mk_job();
+        q.admit(j1, Priority::Normal, Some(1), key(3)).unwrap();
+        let (j2, _rx2) = mk_job();
+        q.admit(j2, Priority::Normal, Some(60_000), key(3)).unwrap();
+        std::thread::sleep(Duration::from_millis(10));
+        let (_, batch) = q.next_batch(0, 16, Duration::ZERO).unwrap();
+        assert_eq!(batch.len(), 1, "expired job must not dispatch");
+        assert_eq!(batch[0].deadline_ms, Some(60_000));
+        let e = rx1.try_recv().unwrap().unwrap_err();
+        assert_eq!(e.code(), "deadline_expired");
+        assert_eq!(e.http_status(), 504);
+        assert_eq!(m.expired_total.load(AtomicOrdering::Relaxed), 1);
+        // An expired deadline is a missed SLO: the attainment gauge must
+        // see it even though the request never decoded.
+        assert_eq!(m.counter("deadline_missed_normal"), 1);
+        assert_eq!(m.gauge("slo_attainment_normal"), Some(0.0));
+    }
+
+    #[test]
+    fn stop_flag_unblocks_idle_replicas() {
+        let stop = Arc::new(AtomicBool::new(false));
+        let q = Arc::new(AdmissionQueue::new(
+            16,
+            SchedPolicy::Edf,
+            750,
+            Arc::new(Metrics::new()),
+            stop.clone(),
+        ));
+        let q2 = q.clone();
+        let waiter = std::thread::spawn(move || q2.next_batch(0, 8, Duration::from_millis(5)));
+        std::thread::sleep(Duration::from_millis(20));
+        // No shutdown() call — the stop flag alone must drain the
+        // replica out of its idle wait (the pre-scheduler contract).
+        stop.store(true, AtomicOrdering::Relaxed);
+        let out = waiter.join().unwrap();
+        assert!(out.is_none(), "stopped replica must exit without work");
+    }
+
+    #[test]
+    fn groups_do_not_mix_and_stealing_is_counted() {
+        let m = Arc::new(Metrics::new());
+        let q = AdmissionQueue::new(
+            16,
+            SchedPolicy::Edf,
+            750,
+            m.clone(),
+            Arc::new(AtomicBool::new(false)),
+        );
+        for g in [2usize, 3] {
+            for _ in 0..2 {
+                let (job, _rx) = mk_job();
+                std::mem::forget(_rx);
+                q.admit(job, Priority::Normal, None, key(g)).unwrap();
+            }
+        }
+        // Replica 0 serves one group; affinity sticks.
+        let (k0, b0) = q.next_batch(0, 16, Duration::ZERO).unwrap();
+        assert_eq!(b0.len(), 2);
+        // Replica 1 takes the other group — unowned, not a steal.
+        let (k1, b1) = q.next_batch(1, 16, Duration::ZERO).unwrap();
+        assert_eq!(b1.len(), 2);
+        assert_ne!(k0, k1);
+        assert_eq!(m.counter("steals"), 0);
+        // More work lands in replica 0's group, but replica 1 grabs it:
+        // that is a steal.
+        let (job, _rx) = mk_job();
+        std::mem::forget(_rx);
+        q.admit(job, Priority::Normal, None, k0).unwrap();
+        let (k, _) = q.next_batch(1, 16, Duration::ZERO).unwrap();
+        assert_eq!(k, k0);
+        assert_eq!(m.counter("steals"), 1);
+    }
+
+    #[test]
+    fn batching_window_fills_before_dispatch() {
+        let q = Arc::new(queue(16, SchedPolicy::Edf));
+        let (job, _rx) = mk_job();
+        std::mem::forget(_rx);
+        q.admit(job, Priority::Normal, None, key(3)).unwrap();
+        // A second job lands while the replica is inside its batching
+        // window; both must come out in one batch.
+        let q2 = q.clone();
+        let t = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(20));
+            let (job, _rx) = mk_job();
+            std::mem::forget(_rx);
+            q2.admit(job, Priority::Normal, None, key(3)).unwrap();
+        });
+        let (_, batch) = q.next_batch(0, 8, Duration::from_millis(200)).unwrap();
+        t.join().unwrap();
+        assert_eq!(batch.len(), 2, "window should have batched both jobs");
+    }
+
+    #[test]
+    fn shutdown_fails_queued_jobs_and_unblocks_replicas() {
+        let q = Arc::new(queue(16, SchedPolicy::Edf));
+        let (job, rx) = mk_job();
+        q.admit(job, Priority::Normal, None, key(3)).unwrap();
+        let q2 = q.clone();
+        let waiter = std::thread::spawn(move || q2.next_batch(0, 8, Duration::from_secs(60)));
+        // Give the waiter time to enter its batching window, then pull
+        // the plug.
+        std::thread::sleep(Duration::from_millis(30));
+        q.shutdown();
+        // The queued job is answered, replicas drain out, and future
+        // admissions are refused.
+        match waiter.join().unwrap() {
+            None => {
+                let e = rx.recv_timeout(Duration::from_secs(1)).unwrap().unwrap_err();
+                assert_eq!(e.code(), "internal");
+            }
+            Some((_, batch)) => {
+                // The waiter may legitimately win the race and take the
+                // job before shutdown drains it.
+                assert_eq!(batch.len(), 1);
+            }
+        }
+        let (job, _rx) = mk_job();
+        assert!(q.admit(job, Priority::Normal, None, key(3)).is_err());
+    }
+}

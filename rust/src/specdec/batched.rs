@@ -296,18 +296,16 @@ pub fn sd_generate_stream_from(
             };
             let final_patch = match (rejected_at, cfg.variant) {
                 (Some(k), Variant::Lossless) => {
-                    let mu_q = &mu_qs[k];
-                    let sigma = cfg.policy.sigma;
-                    let mut z = vec![0.0f32; p];
-                    loop {
-                        residual_draws += 1;
-                        rngs[i].fill_normal_around(&final_mu, sigma as f32, &mut z);
-                        let lqp = crate::gaussian::iso_log_ratio(&z, mu_q, &final_mu, sigma);
-                        let pi = 1.0 - lqp.min(0.0).exp();
-                        if rngs[i].uniform() < pi || residual_draws >= cfg.max_residual_draws {
-                            break;
-                        }
-                    }
+                    // Shared residual-thinning helper (engine.rs): RNG
+                    // consumption is part of the bit-exactness contract.
+                    let (z, draws) = super::engine::residual_thin(
+                        &final_mu,
+                        &mu_qs[k],
+                        cfg.policy.sigma,
+                        cfg.max_residual_draws,
+                        &mut rngs[i],
+                    );
+                    residual_draws = draws;
                     z
                 }
                 _ => match cfg.emission {
@@ -361,6 +359,325 @@ pub fn sd_generate_stream_from(
             }
             seqs[i].stats.absorb(&r);
             seqs[i].rounds.push(r);
+        }
+    }
+
+    for (i, s) in seqs.iter_mut().enumerate() {
+        s.stats.draft_updates = source.updates(i).saturating_sub(upd0[i]);
+    }
+    Ok(seqs
+        .into_iter()
+        .map(|s| DecodeOutput { patches: s.out, rounds: s.rounds, stats: s.stats })
+        .collect())
+}
+
+/// [`sd_generate_stream_from`] with **per-task seeds** and a
+/// **per-sequence-exact** execution discipline: every sequence's decode is
+/// bit-identical to running [`super::sd_generate_from`] alone on that task
+/// with the same seed — for *any* batch composition, admission order, or
+/// `max_active` (the serving scheduler's replica-count-invariance
+/// contract).
+///
+/// What the default lockstep loop couples across batchmates, this one
+/// decouples:
+/// * **RNG** — sequence `i` draws from `Rng::new(seeds[i])`, not from a
+///   batch-index-derived stream.
+/// * **Round γ** — instead of one round-wide `max(desired)` block length
+///   (which makes a tail sequence consume extra proposal draws), each
+///   round *buckets* the active set by per-sequence desired γ and runs one
+///   batched propose/extend per bucket. A sequence therefore executes
+///   exactly the session ops and RNG draws of its solo decode; batchmates
+///   only determine who shares a batched `extend` call — and batched
+///   extends are bitwise equal to singles (`tests/kernel_equivalence.rs`).
+/// * **Eviction** — window slides use the sequence's own γ+1 need, not the
+///   round max.
+///
+/// The γ = 0 horizon tail runs the solo engine's plain target AR step
+/// (the default lockstep loop instead rounds the block length up to 1).
+/// Bit-exactness across grouping holds for [`CacheMode::On`] sessions
+/// (per-sequence serial kernels); `Off` falls back to padded batched
+/// re-forwards, which are observationally — not bit — identical.
+pub fn sd_generate_stream_seeded(
+    target: &dyn Backend,
+    source: &mut dyn BatchDraftSource,
+    tasks: &[(&[f32], usize, usize)],
+    seeds: &[u64],
+    max_active: usize,
+    cfg: &SpecConfig,
+) -> Result<Vec<DecodeOutput>> {
+    let p = target.patch();
+    anyhow::ensure!(p == source.patch(), "patch mismatch");
+    anyhow::ensure!(cfg.gamma >= 1);
+    anyhow::ensure!(
+        seeds.len() == tasks.len(),
+        "got {} seeds for {} tasks",
+        seeds.len(),
+        tasks.len()
+    );
+    if cfg.variant == Variant::Lossless {
+        anyhow::ensure!((cfg.policy.bias - 1.0).abs() < 1e-12, "lossless requires bias=1");
+        anyhow::ensure!(cfg.emission == Emission::Sampled, "lossless requires Emission::Sampled");
+    }
+    if let Some(acfg) = &cfg.adaptive {
+        acfg.validate()?;
+        anyhow::ensure!(
+            !acfg.sigma_adapt,
+            "sigma adaptation is single-stream only (proposals in a lockstep \
+             batch share one acceptance policy); use gamma-only adaptation here"
+        );
+    }
+    let max_ctx = target.max_ctx().min(source.max_ctx());
+    anyhow::ensure!(
+        cfg.gamma + 1 < max_ctx,
+        "gamma {} cannot fit the joint context window: a round appends \
+         gamma + 1 patches and must keep at least one context patch \
+         (target max_ctx {}, draft max_ctx {}) — lower gamma or raise \
+         the binding side's context",
+        cfg.gamma,
+        target.max_ctx(),
+        source.max_ctx()
+    );
+    for (h, n, _) in tasks {
+        anyhow::ensure!(*n >= 1, "session needs at least one history patch");
+        anyhow::ensure!(h.len() >= *n * p, "history too short");
+    }
+    let clamped: Vec<(&[f32], usize)> = tasks
+        .iter()
+        .map(|(h, n, _)| {
+            let keep = (*n).min(max_ctx);
+            (&h[(*n - keep) * p..*n * p], keep)
+        })
+        .collect();
+
+    let mut t_bs = begin_batch_session(target, cfg.cache, &clamped)?;
+    source.begin(&clamped, cfg.cache)?;
+    let upd0: Vec<usize> = (0..tasks.len()).map(|i| source.updates(i)).collect();
+
+    // The whole point: per-sequence streams seeded per *request*, so a
+    // sequence's draws are a pure function of (its seed, its own decode).
+    let mut rngs: Vec<Rng> = seeds.iter().map(|&s| Rng::new(s)).collect();
+    let mut seqs: Vec<SeqState> = tasks
+        .iter()
+        .map(|(_, _, horizon)| SeqState {
+            out: Vec::with_capacity(horizon * p),
+            horizon: *horizon,
+            emitted: 0,
+            rounds: Vec::new(),
+            stats: DecodeStats::default(),
+            ctrl: cfg
+                .adaptive
+                .map(|acfg| GammaController::new(acfg, cfg.gamma, cfg.policy.sigma)),
+        })
+        .collect();
+
+    anyhow::ensure!(max_active >= 1);
+    loop {
+        let active: Vec<usize> =
+            (0..seqs.len()).filter(|&i| !seqs[i].done()).take(max_active).collect();
+        if active.is_empty() {
+            break;
+        }
+        // Per-sequence desired γ, exactly the solo engine's rule: the
+        // controller's (context-clamped) recommendation or the static γ,
+        // capped by the sequence's own remaining horizon — and *kept*
+        // per-sequence: sequences are bucketed by desired γ instead of
+        // rounded up to a shared max.
+        let mut buckets: std::collections::BTreeMap<usize, Vec<usize>> = Default::default();
+        for &i in &active {
+            let want = match &seqs[i].ctrl {
+                Some(c) => c.gamma_for(max_ctx),
+                None => cfg.gamma,
+            };
+            let g = want.min(seqs[i].remaining().saturating_sub(1));
+            buckets.entry(g).or_default().push(i);
+        }
+        for (gamma, idx) in buckets {
+            // Window slides use each sequence's own need (solo rule).
+            let need = gamma + 1;
+            for &i in &idx {
+                if t_bs.len(i) + need > max_ctx {
+                    anyhow::ensure!(need < max_ctx, "gamma {gamma} cannot fit in max_ctx {max_ctx}");
+                    let keep = max_ctx - need;
+                    t_bs.evict_to(i, keep)?;
+                    source.evict_to(i, keep)?;
+                }
+            }
+
+            if gamma == 0 {
+                // Horizon tail: the solo engine's plain target AR step.
+                for &i in &idx {
+                    let t0 = Instant::now();
+                    let mu_p = t_bs.tip_means(&[i])?;
+                    let patch = match cfg.emission {
+                        Emission::Sampled => {
+                            let mut buf = vec![0.0f32; p];
+                            rngs[i].fill_normal_around(&mu_p, cfg.policy.sigma as f32, &mut buf);
+                            buf
+                        }
+                        Emission::Mean => mu_p,
+                    };
+                    t_bs.append(i, &patch, 1)?;
+                    let tt = t0.elapsed();
+                    let t1 = Instant::now();
+                    source.append(i, &patch, 1)?;
+                    let dt = t1.elapsed();
+                    seqs[i].out.extend_from_slice(&patch);
+                    seqs[i].emitted += 1;
+                    let r = RoundStats {
+                        gamma: 0,
+                        accepted: 0,
+                        emitted: 1,
+                        alphas: vec![],
+                        residual_draws: 0,
+                        draft_time: dt,
+                        target_time: tt,
+                    };
+                    if let Some(c) = &mut seqs[i].ctrl {
+                        c.observe_round(&r);
+                    }
+                    seqs[i].stats.absorb(&r);
+                    seqs[i].rounds.push(r);
+                }
+                continue;
+            }
+
+            let a = idx.len();
+            let t0 = Instant::now();
+            let blocks = source.propose(&idx, gamma, cfg.policy.sigma, &mut rngs)?;
+            let draft_time = t0.elapsed();
+            anyhow::ensure!(
+                blocks.len() == a,
+                "draft source returned {} blocks for {a}",
+                blocks.len()
+            );
+            let mut flat = vec![0.0f32; a * gamma * p];
+            for (ai, block) in blocks.iter().enumerate() {
+                anyhow::ensure!(
+                    block.proposals.len() == gamma && block.mu_qs.len() == gamma,
+                    "draft source returned {}/{} proposals/means for gamma {gamma}",
+                    block.proposals.len(),
+                    block.mu_qs.len()
+                );
+                for (k, x) in block.proposals.iter().enumerate() {
+                    flat[ai * gamma * p + k * p..ai * gamma * p + (k + 1) * p].copy_from_slice(x);
+                }
+            }
+            let t1 = Instant::now();
+            let val_rows = t_bs.extend(&idx, &flat, gamma)?; // [a, gamma+1, p]
+            let target_time = t1.elapsed();
+
+            for (ai, &i) in idx.iter().enumerate() {
+                let tpost = Instant::now();
+                let base = ai * (gamma + 1) * p;
+                let mu_p_at = |k: usize| &val_rows[base + k * p..base + (k + 1) * p];
+                let proposals = &blocks[ai].proposals;
+                let mu_qs = &blocks[ai].mu_qs;
+
+                // Acceptance scan over the full bucket γ — which *is* the
+                // sequence's own desired γ (no batchmate rounding).
+                let mut alphas = Vec::with_capacity(gamma);
+                let mut accepted = 0usize;
+                let mut rejected_at = None;
+                for k in 0..gamma {
+                    let alpha = cfg.policy.alpha(&proposals[k], mu_p_at(k), &mu_qs[k]);
+                    alphas.push(alpha);
+                    if alpha >= 1.0 || rngs[i].uniform() < alpha {
+                        accepted += 1;
+                    } else {
+                        rejected_at = Some(k);
+                        break;
+                    }
+                }
+
+                let mut emit: Vec<f32> = Vec::with_capacity((accepted + 1) * p);
+                match cfg.emission {
+                    Emission::Sampled => {
+                        t_bs.rollback(i, gamma - accepted)?;
+                        for x in &proposals[..accepted] {
+                            emit.extend_from_slice(x);
+                        }
+                    }
+                    Emission::Mean => {
+                        t_bs.rollback(i, gamma)?;
+                        for m in &mu_qs[..accepted] {
+                            emit.extend_from_slice(m);
+                        }
+                        if accepted > 0 {
+                            t_bs.append(i, &emit, accepted)?;
+                        }
+                    }
+                }
+
+                let mut residual_draws = 0usize;
+                let final_mu: Vec<f32> = match rejected_at {
+                    None => mu_p_at(gamma).to_vec(),
+                    Some(k) => mu_p_at(k).to_vec(),
+                };
+                let final_patch = match (rejected_at, cfg.variant) {
+                    (Some(k), Variant::Lossless) => {
+                        // Shared residual-thinning helper (engine.rs) —
+                        // the same code the solo path runs, which is what
+                        // keeps this path solo-exact by construction.
+                        let (z, draws) = super::engine::residual_thin(
+                            &final_mu,
+                            &mu_qs[k],
+                            cfg.policy.sigma,
+                            cfg.max_residual_draws,
+                            &mut rngs[i],
+                        );
+                        residual_draws = draws;
+                        z
+                    }
+                    _ => match cfg.emission {
+                        Emission::Sampled => {
+                            let mut z = vec![0.0f32; p];
+                            rngs[i].fill_normal_around(&final_mu, cfg.policy.sigma as f32, &mut z);
+                            z
+                        }
+                        Emission::Mean => final_mu,
+                    },
+                };
+                t_bs.append(i, &final_patch, 1)?;
+                let tpost_elapsed = tpost.elapsed();
+
+                let tfin = Instant::now();
+                source.finish_round(
+                    i,
+                    &RoundFeedback {
+                        gamma,
+                        accepted,
+                        alphas: &alphas,
+                        target_means: &val_rows[base..base + (gamma + 1) * p],
+                        committed: &emit,
+                        final_patch: &final_patch,
+                        sampled: cfg.emission == Emission::Sampled,
+                    },
+                )?;
+                let fin_elapsed = tfin.elapsed();
+                emit.extend_from_slice(&final_patch);
+
+                // gamma <= remaining - 1 by construction, so a round never
+                // overshoots its sequence's horizon.
+                let take = accepted + 1;
+                debug_assert!(take <= seqs[i].remaining());
+                seqs[i].out.extend_from_slice(&emit[..take * p]);
+                seqs[i].emitted += take;
+
+                let r = RoundStats {
+                    gamma,
+                    accepted,
+                    emitted: take,
+                    alphas,
+                    residual_draws,
+                    draft_time: draft_time / a as u32 + fin_elapsed,
+                    target_time: target_time / a as u32 + tpost_elapsed,
+                };
+                if let Some(c) = &mut seqs[i].ctrl {
+                    c.observe_round(&r);
+                }
+                seqs[i].stats.absorb(&r);
+                seqs[i].rounds.push(r);
+            }
         }
     }
 
@@ -566,6 +883,137 @@ mod tests {
         let mut c = cfg(2, 0.5, 3);
         c.adaptive = Some(AdaptiveConfig { sigma_adapt: true, ..AdaptiveConfig::default() });
         assert!(sd_generate_batch(&t, &d, &tasks, &c).is_err());
+    }
+
+    fn bits(v: &[f32]) -> Vec<u32> {
+        v.iter().map(|x| x.to_bits()).collect()
+    }
+
+    /// The serving scheduler's core contract: a sequence decoded through
+    /// `sd_generate_stream_seeded` is bit-identical to its solo
+    /// `sd_generate_from` decode with the same seed, for every draft kind,
+    /// variant, emission, batch composition, and admission cap — window
+    /// slides and horizon tails included.
+    #[test]
+    fn seeded_batch_is_bitwise_identical_to_solo_decodes() {
+        use crate::specdec::draft::{make_source, DraftKind};
+        use crate::specdec::sd_generate_from;
+        let t = NativeBackend::new(tiny_model(51));
+        let d = NativeBackend::new(tiny_model(52));
+        let h1: Vec<f32> = (0..2 * 4).map(|i| (i as f32 * 0.2).sin()).collect();
+        let h2: Vec<f32> = (0..5 * 4).map(|i| (i as f32 * 0.13).cos()).collect();
+        let h3: Vec<f32> = (0..3 * 4).map(|i| (i as f32 * 0.31).sin()).collect();
+        // Horizon 11 on an 8-patch context forces slides; horizon 1 forces
+        // the γ = 0 tail bucket.
+        let tasks: Vec<(&[f32], usize, usize)> = vec![(&h1, 2, 11), (&h2, 5, 7), (&h3, 3, 1)];
+        let seeds = [101u64, 202, 303];
+        for kind in [DraftKind::Model, DraftKind::Extrap, DraftKind::Adaptive] {
+            for (variant, emission) in [
+                (Variant::Practical, Emission::Mean),
+                (Variant::Practical, Emission::Sampled),
+                (Variant::Lossless, Emission::Sampled),
+            ] {
+                let mut c = cfg(3, 0.5, 0);
+                c.draft.kind = kind;
+                c.variant = variant;
+                c.emission = emission;
+                let label = format!("{kind:?} {variant:?} {emission:?}");
+                // Solo references: one fresh source per task (matching the
+                // batch adapter's fresh per-sequence sources).
+                let solo: Vec<DecodeOutput> = tasks
+                    .iter()
+                    .zip(&seeds)
+                    .map(|(&(h, n, hz), &s)| {
+                        let mut sc = c;
+                        sc.seed = s;
+                        let mut src = make_source(&sc.draft, &d).unwrap();
+                        sd_generate_from(&t, src.as_mut(), h, n, hz, &sc).unwrap()
+                    })
+                    .collect();
+                // All three in one batch.
+                let mut src = make_batch_source(&c.draft, &d).unwrap();
+                let outs =
+                    sd_generate_stream_seeded(&t, src.as_mut(), &tasks, &seeds, usize::MAX, &c)
+                        .unwrap();
+                for (o, s) in outs.iter().zip(&solo) {
+                    assert_eq!(bits(&o.patches), bits(&s.patches), "{label}");
+                    assert_eq!(o.stats.accepted, s.stats.accepted, "{label}");
+                    assert_eq!(o.stats.rounds, s.stats.rounds, "{label}");
+                }
+                // Continuous batching (max_active 2) must not change a
+                // sequence's decode either.
+                let mut src = make_batch_source(&c.draft, &d).unwrap();
+                let capped =
+                    sd_generate_stream_seeded(&t, src.as_mut(), &tasks, &seeds, 2, &c).unwrap();
+                for (o, s) in capped.iter().zip(&solo) {
+                    assert_eq!(bits(&o.patches), bits(&s.patches), "{label} max_active=2");
+                }
+                // A different composition/order: [task2, task0].
+                let regroup: Vec<(&[f32], usize, usize)> = vec![tasks[2], tasks[0]];
+                let rseeds = [seeds[2], seeds[0]];
+                let mut src = make_batch_source(&c.draft, &d).unwrap();
+                let outs2 =
+                    sd_generate_stream_seeded(&t, src.as_mut(), &regroup, &rseeds, usize::MAX, &c)
+                        .unwrap();
+                assert_eq!(bits(&outs2[0].patches), bits(&solo[2].patches), "{label} regrouped");
+                assert_eq!(bits(&outs2[1].patches), bits(&solo[0].patches), "{label} regrouped");
+            }
+        }
+    }
+
+    /// Per-sequence adaptive controllers make desired γ diverge across
+    /// batchmates mid-decode; the bucketed rounds must still reproduce
+    /// each solo adaptive decode bit-for-bit.
+    #[test]
+    fn seeded_batch_matches_solo_under_adaptive_gamma() {
+        use crate::specdec::draft::make_source;
+        use crate::specdec::{sd_generate_from, AdaptiveConfig};
+        let t = NativeBackend::new(tiny_model(61));
+        let d = NativeBackend::new(tiny_model(62));
+        let h1: Vec<f32> = (0..2 * 4).map(|i| (i as f32 * 0.21).sin()).collect();
+        let h2: Vec<f32> = (0..4 * 4).map(|i| (i as f32 * 0.17).cos()).collect();
+        let tasks: Vec<(&[f32], usize, usize)> = vec![(&h1, 2, 14), (&h2, 4, 6)];
+        let seeds = [7u64, 9];
+        let mut c = cfg(2, 0.5, 0);
+        c.adaptive = Some(AdaptiveConfig {
+            warmup: 1,
+            dwell: 1,
+            halflife: 6.0,
+            c_override: 0.05,
+            ..AdaptiveConfig::default()
+        });
+        let solo: Vec<DecodeOutput> = tasks
+            .iter()
+            .zip(&seeds)
+            .map(|(&(h, n, hz), &s)| {
+                let mut sc = c;
+                sc.seed = s;
+                let mut src = make_source(&sc.draft, &d).unwrap();
+                sd_generate_from(&t, src.as_mut(), h, n, hz, &sc).unwrap()
+            })
+            .collect();
+        let mut src = make_batch_source(&c.draft, &d).unwrap();
+        let outs =
+            sd_generate_stream_seeded(&t, src.as_mut(), &tasks, &seeds, usize::MAX, &c).unwrap();
+        for (o, s) in outs.iter().zip(&solo) {
+            assert_eq!(bits(&o.patches), bits(&s.patches));
+            let g_batch: Vec<usize> = o.rounds.iter().map(|r| r.gamma).collect();
+            let g_solo: Vec<usize> = s.rounds.iter().map(|r| r.gamma).collect();
+            assert_eq!(g_batch, g_solo, "per-round gamma schedules must match");
+        }
+    }
+
+    #[test]
+    fn seeded_batch_rejects_mismatched_seed_count() {
+        let t = AnalyticBackend::new("t", 2, 0.8, 0.1);
+        let d = AnalyticBackend::new("d", 2, 0.75, 0.1);
+        let h = vec![0.5f32, -0.5];
+        let tasks: Vec<(&[f32], usize, usize)> = vec![(&h, 1, 4)];
+        let c = cfg(2, 0.5, 1);
+        let mut src = make_batch_source(&c.draft, &d).unwrap();
+        assert!(
+            sd_generate_stream_seeded(&t, src.as_mut(), &tasks, &[1, 2], usize::MAX, &c).is_err()
+        );
     }
 
     #[test]

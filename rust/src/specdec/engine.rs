@@ -498,30 +498,17 @@ fn sd_generate_impl(
                 match cfg.variant {
                     // Fallback-to-p (l.12).
                     Variant::Practical => emit_from_p(mu_p, policy.sigma, cfg.emission, &mut rng),
-                    // Residual thinning (§A.5.1): draw Z ~ p, accept with
-                    // prob (1 - q(Z)/p(Z))_+.
+                    // Residual thinning (§A.5.1), shared helper: draw
+                    // Z ~ p, accept with prob (1 - q(Z)/p(Z))_+.
                     Variant::Lossless => {
-                        let mu_q = &mu_qs[i];
-                        let sigma = policy.sigma;
-                        let mut z = vec![0.0f32; p];
-                        loop {
-                            residual_draws += 1;
-                            rng.fill_normal_around(mu_p, sigma as f32, &mut z);
-                            // pi(z) = (1 - q(z)/p(z))_+ = 1 - exp(min(0, log q - log p))
-                            let lqp =
-                                crate::gaussian::iso_log_ratio(&z, mu_q, mu_p, sigma);
-                            let pi = 1.0 - lqp.min(0.0).exp();
-                            if rng.uniform() < pi {
-                                break;
-                            }
-                            if residual_draws >= cfg.max_residual_draws {
-                                log::warn!(
-                                    "residual thinning hit cap {}; emitting last draw",
-                                    cfg.max_residual_draws
-                                );
-                                break;
-                            }
-                        }
+                        let (z, draws) = residual_thin(
+                            mu_p,
+                            &mu_qs[i],
+                            policy.sigma,
+                            cfg.max_residual_draws,
+                            &mut rng,
+                        );
+                        residual_draws = draws;
                         z
                     }
                 }
@@ -570,6 +557,42 @@ fn sd_generate_impl(
     out_patches.truncate(horizon * p);
     stats.draft_updates = source.updates().saturating_sub(upd0);
     Ok(DecodeOutput { patches: out_patches, rounds, stats })
+}
+
+/// Residual thinning at a rejection point (§A.5.1): draw `Z ~ p`,
+/// accept with probability `(1 - q(Z)/p(Z))_+`, capped at
+/// `max_residual_draws`. Returns the emitted patch and the draw count.
+///
+/// Shared by the single-stream loop and **both** batched decode loops —
+/// the RNG consumption (one `fill_normal_around` block plus one
+/// `uniform` per iteration, in that order) is part of the decode's
+/// bit-exactness contract (`tests/draft_equivalence.rs`,
+/// `seeded_batch_is_bitwise_identical_to_solo_decodes`); any change
+/// here changes every path together, which is the point.
+pub(crate) fn residual_thin(
+    mu_p: &[f32],
+    mu_q: &[f32],
+    sigma: f64,
+    max_residual_draws: usize,
+    rng: &mut Rng,
+) -> (Vec<f32>, usize) {
+    let mut z = vec![0.0f32; mu_p.len()];
+    let mut draws = 0usize;
+    loop {
+        draws += 1;
+        rng.fill_normal_around(mu_p, sigma as f32, &mut z);
+        // pi(z) = (1 - q(z)/p(z))_+ = 1 - exp(min(0, log q - log p))
+        let lqp = crate::gaussian::iso_log_ratio(&z, mu_q, mu_p, sigma);
+        let pi = 1.0 - lqp.min(0.0).exp();
+        if rng.uniform() < pi {
+            break;
+        }
+        if draws >= max_residual_draws {
+            log::warn!("residual thinning hit cap {max_residual_draws}; emitting last draw");
+            break;
+        }
+    }
+    (z, draws)
 }
 
 /// Emit a patch given its target-head mean: a sample in the generative

@@ -27,6 +27,13 @@
 //! each round's verification feedback, pushing the acceptance rate α up
 //! online — the controller tunes γ *to* α, the draft source tunes α
 //! itself.
+//!
+//! A fifth axis (serving-scheduler PR): *batching-invariant decodes* —
+//! [`sd_generate_stream_seeded`] runs a lockstep batch with per-task
+//! seeds and per-sequence γ bucketing, making each sequence's decode
+//! bit-identical to its solo [`sd_generate_from`] run regardless of
+//! batch composition. This is what lets the serving scheduler promise
+//! replica-count- and arrival-order-independent responses.
 
 mod batched;
 mod controller;
@@ -34,7 +41,9 @@ pub mod draft;
 mod engine;
 mod stats;
 
-pub use batched::{sd_generate_batch, sd_generate_stream, sd_generate_stream_from};
+pub use batched::{
+    sd_generate_batch, sd_generate_stream, sd_generate_stream_from, sd_generate_stream_seeded,
+};
 pub use controller::{AdaptiveConfig, ControllerState, GammaController};
 pub use draft::{
     make_batch_source, make_free_source, make_source, AdaptiveResidualDraft, BatchDraftSource,

@@ -158,8 +158,11 @@ fn bad_request_does_not_poison_batch() {
             if expect_ok {
                 assert_eq!(r.status, 200, "good request failed: {}", r.body_str());
             } else {
-                assert_eq!(r.status, 500);
+                // Typed error mapping: validation failures are 400s with
+                // a machine-readable code (scheduler PR).
+                assert_eq!(r.status, 400, "{}", r.body_str());
                 assert!(r.body_str().contains("multiple of patch"));
+                assert!(r.body_str().contains("\"error_code\":\"invalid\""));
             }
         }));
     }

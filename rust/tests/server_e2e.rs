@@ -1,13 +1,23 @@
 //! End-to-end serving test: start the coordinator on an ephemeral port with
 //! the native backend (fast, PJRT-free) and exercise the full HTTP surface,
 //! including batched concurrent load and error paths.
+//!
+//! Two substrates:
+//! * artifact-backed tests (skip without `make artifacts`) over the real
+//!   manifest models, as before;
+//! * artifact-free scheduler tests over `Server::start_with_builder` +
+//!   `tiny_model` replicas — shedding, deadline expiry, priority
+//!   inversion, replica-count invariance, and `/healthz` readiness run
+//!   everywhere.
 
 use std::sync::Arc;
 
 use stride::config::ServeConfig;
 use stride::data::Dataset;
 use stride::http::http_request;
-use stride::server::Server;
+use stride::models::NativeBackend;
+use stride::nn::model::tiny_model;
+use stride::server::{ModelShape, ReplicaBuilder, ReplicaStacks, Server};
 use stride::util::json::Json;
 
 fn start_server() -> Option<Server> {
@@ -95,7 +105,8 @@ fn rejects_invalid_requests() {
     // Missing horizon.
     let r = http_request(&addr, "POST", "/forecast", Some(br#"{"history":[1.0]}"#)).unwrap();
     assert_eq!(r.status, 400);
-    // History not a multiple of the patch size (server-side validation).
+    // History not a multiple of the patch size (server-side validation):
+    // a typed 400 with a machine-readable code since the scheduler PR.
     let r = http_request(
         &addr,
         "POST",
@@ -103,8 +114,9 @@ fn rejects_invalid_requests() {
         Some(br#"{"history":[1.0,2.0,3.0], "horizon": 2}"#),
     )
     .unwrap();
-    assert_eq!(r.status, 500, "{}", r.body_str());
+    assert_eq!(r.status, 400, "{}", r.body_str());
     assert!(r.body_str().contains("multiple of patch"));
+    assert!(r.body_str().contains("\"error_code\":\"invalid\""));
 }
 
 #[test]
@@ -143,6 +155,315 @@ fn concurrent_load_is_batched_and_correct() {
     let batches = get("stride_batches");
     assert!(batches >= 1 && batches <= n_clients as u64);
     eprintln!("{} requests served in {} batches", n_clients, batches);
+}
+
+// ---------------------------------------------------------------------------
+// Artifact-free scheduler tests: full HTTP + admission + EDF + replica pool
+// over synthetic tiny models (Server::start_with_builder). These run in
+// every environment.
+// ---------------------------------------------------------------------------
+
+fn tiny_shape() -> ModelShape {
+    ModelShape { patch: 4, n_ctx: 8 }
+}
+
+fn tiny_builder() -> ReplicaBuilder {
+    Arc::new(move |_r| {
+        Ok(ReplicaStacks {
+            target: Box::new(NativeBackend::new(tiny_model(901))),
+            draft: Box::new(NativeBackend::new(tiny_model(902))),
+        })
+    })
+}
+
+fn sched_cfg(replicas: usize) -> ServeConfig {
+    let mut cfg = ServeConfig::default();
+    cfg.bind = "127.0.0.1:0".into();
+    cfg.backend = "native".into();
+    cfg.replicas = replicas;
+    cfg.http_workers = 32;
+    cfg
+}
+
+fn start_tiny(cfg: ServeConfig) -> Server {
+    Server::start_with_builder(cfg, tiny_shape(), tiny_builder()).expect("builder server start")
+}
+
+fn tiny_hist() -> Vec<f32> {
+    (0..4 * 4).map(|i| (i as f32 * 0.23).sin()).collect()
+}
+
+fn hist_json(h: &[f32]) -> String {
+    let nums: Vec<String> = h.iter().map(|v| format!("{v}")).collect();
+    format!("[{}]", nums.join(","))
+}
+
+fn metric(addr: &str, key: &str) -> u64 {
+    let text = http_request(addr, "GET", "/metrics", None).unwrap().body_str().to_string();
+    text.lines()
+        .find(|l| l.starts_with(key) && l.split_whitespace().next() == Some(key))
+        .and_then(|l| l.split_whitespace().nth(1))
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(0)
+}
+
+/// Criterion (c) of the scheduler PR, at the HTTP level: scheduled
+/// responses are bit-identical to the unscheduled `sd_generate_from`
+/// engine at the same request + seed, for every replica count — with
+/// mixed-group concurrent traffic forcing nontrivial batch compositions.
+#[test]
+fn scheduled_responses_match_unscheduled_engine_for_any_replica_count() {
+    use stride::specdec::{make_source, sd_generate_from, DraftKind};
+    let hist = tiny_hist();
+    // (gamma, sigma, draft kind, seed, horizon) — two compatibility
+    // groups per kind.
+    let combos: Vec<(usize, f64, &str, u64, usize)> = vec![
+        (2, 0.5, "model", 11, 6),
+        (3, 0.8, "model", 22, 5),
+        (2, 0.5, "extrap", 33, 7),
+        (3, 0.6, "extrap", 44, 4),
+        (2, 0.5, "model", 55, 6),
+        (2, 0.5, "extrap", 66, 6),
+    ];
+    // Unscheduled references straight off the decode engine.
+    let t = NativeBackend::new(tiny_model(901));
+    let d = NativeBackend::new(tiny_model(902));
+    let mut refs: Vec<Vec<u32>> = Vec::new();
+    for &(g, s, kind, seed, hz) in &combos {
+        let mut spec = sched_cfg(1).spec_config();
+        spec.gamma = g;
+        spec.policy.sigma = s;
+        spec.seed = seed;
+        spec.draft.kind = DraftKind::parse(kind).unwrap();
+        let mut src = make_source(&spec.draft, &d).unwrap();
+        let out = sd_generate_from(&t, src.as_mut(), &hist, 4, hz, &spec).unwrap();
+        refs.push(out.patches.iter().map(|v| v.to_bits()).collect());
+    }
+    let hist_s = Arc::new(hist_json(&hist));
+    for replicas in [1usize, 2, 3] {
+        let server = start_tiny(sched_cfg(replicas));
+        let addr = Arc::new(server.addr().to_string());
+        let handles: Vec<_> = combos
+            .iter()
+            .map(|&(g, s, kind, seed, hz)| {
+                let addr = Arc::clone(&addr);
+                let hist_s = Arc::clone(&hist_s);
+                std::thread::spawn(move || {
+                    let body = format!(
+                        r#"{{"history": {hist_s}, "horizon": {hz}, "gamma": {g},
+                            "sigma": {s}, "draft": "{kind}", "seed": {seed}}}"#
+                    );
+                    let r =
+                        http_request(&addr, "POST", "/forecast", Some(body.as_bytes())).unwrap();
+                    assert_eq!(r.status, 200, "{}", r.body_str());
+                    let j = Json::parse(r.body_str()).unwrap();
+                    let bits: Vec<u32> = j
+                        .get("forecast")
+                        .unwrap()
+                        .as_arr()
+                        .unwrap()
+                        .iter()
+                        .map(|v| (v.as_f64().unwrap() as f32).to_bits())
+                        .collect();
+                    bits
+                })
+            })
+            .collect();
+        for (i, h) in handles.into_iter().enumerate() {
+            let got = h.join().unwrap();
+            assert_eq!(
+                got, refs[i],
+                "replicas={replicas}: combo {i} diverged from the unscheduled engine"
+            );
+        }
+    }
+}
+
+#[test]
+fn saturation_sheds_with_retry_after() {
+    let mut cfg = sched_cfg(1);
+    cfg.queue_cap = 1;
+    cfg.max_batch = 1;
+    cfg.retry_after_ms = 1500;
+    let server = start_tiny(cfg);
+    let addr = Arc::new(server.addr().to_string());
+    let hist = Arc::new(hist_json(&tiny_hist()));
+    let handles: Vec<_> = (0..24)
+        .map(|_| {
+            let addr = Arc::clone(&addr);
+            let hist = Arc::clone(&hist);
+            std::thread::spawn(move || {
+                let body = format!(r#"{{"history": {hist}, "horizon": 1024}}"#);
+                http_request(&addr, "POST", "/forecast", Some(body.as_bytes())).unwrap()
+            })
+        })
+        .collect();
+    let mut ok = 0;
+    let mut shed = 0;
+    for h in handles {
+        let r = h.join().unwrap();
+        match r.status {
+            200 => ok += 1,
+            429 => {
+                shed += 1;
+                assert!(r.body_str().contains("\"error_code\":\"shed\""), "{}", r.body_str());
+                let retry = r
+                    .headers
+                    .iter()
+                    .find(|(k, _)| k.eq_ignore_ascii_case("retry-after"))
+                    .map(|(_, v)| v.clone());
+                assert_eq!(retry.as_deref(), Some("2"), "1500 ms rounds up to 2 s");
+            }
+            other => panic!("unexpected status {other}: {}", r.body_str()),
+        }
+    }
+    assert!(ok >= 1, "at least one request must be served");
+    assert!(shed >= 1, "a queue cap of 1 under a 24-way burst must shed");
+    assert!(metric(&addr, "stride_sheds_total") >= shed as u64);
+}
+
+#[test]
+fn expired_deadline_fails_fast_with_504() {
+    let mut cfg = sched_cfg(1);
+    cfg.max_batch = 1;
+    let server = start_tiny(cfg);
+    let addr = Arc::new(server.addr().to_string());
+    let hist = Arc::new(hist_json(&tiny_hist()));
+    // Occupy the single replica with a high-priority flood; EDF keeps it
+    // ahead of the low-priority probe below.
+    let flood: Vec<_> = (0..16)
+        .map(|_| {
+            let addr = Arc::clone(&addr);
+            let hist = Arc::clone(&hist);
+            std::thread::spawn(move || {
+                let body =
+                    format!(r#"{{"history": {hist}, "horizon": 1024, "priority": "high"}}"#);
+                let r = http_request(&addr, "POST", "/forecast", Some(body.as_bytes())).unwrap();
+                assert_eq!(r.status, 200, "{}", r.body_str());
+            })
+        })
+        .collect();
+    std::thread::sleep(std::time::Duration::from_millis(20));
+    // A low-priority request with a tight deadline sits behind the flood
+    // and must be failed fast — decoded never, answered 504.
+    let body = format!(
+        r#"{{"history": {hist}, "horizon": 4, "priority": "low", "deadline_ms": 25}}"#
+    );
+    let r = http_request(&addr, "POST", "/forecast", Some(body.as_bytes())).unwrap();
+    assert_eq!(r.status, 504, "{}", r.body_str());
+    assert!(r.body_str().contains("\"error_code\":\"deadline_expired\""));
+    for h in flood {
+        h.join().unwrap();
+    }
+    assert!(metric(&addr, "stride_expired_total") >= 1);
+}
+
+#[test]
+fn high_priority_is_not_starved_by_low_flood() {
+    let mut cfg = sched_cfg(1);
+    cfg.max_batch = 2;
+    let server = start_tiny(cfg);
+    let addr = Arc::new(server.addr().to_string());
+    let hist = Arc::new(hist_json(&tiny_hist()));
+    let t0 = std::time::Instant::now();
+    let lows: Vec<_> = (0..12)
+        .map(|_| {
+            let addr = Arc::clone(&addr);
+            let hist = Arc::clone(&hist);
+            std::thread::spawn(move || {
+                let body =
+                    format!(r#"{{"history": {hist}, "horizon": 1024, "priority": "low"}}"#);
+                let r = http_request(&addr, "POST", "/forecast", Some(body.as_bytes())).unwrap();
+                assert_eq!(r.status, 200, "{}", r.body_str());
+                t0.elapsed()
+            })
+        })
+        .collect();
+    std::thread::sleep(std::time::Duration::from_millis(20));
+    let body = format!(r#"{{"history": {hist}, "horizon": 32, "priority": "high"}}"#);
+    let r = http_request(&addr, "POST", "/forecast", Some(body.as_bytes())).unwrap();
+    let high_done = t0.elapsed();
+    assert_eq!(r.status, 200, "{}", r.body_str());
+    let j = Json::parse(r.body_str()).unwrap();
+    assert_eq!(j.get("priority").unwrap().as_str(), Some("high"));
+    let low_finish: Vec<_> = lows.into_iter().map(|h| h.join().unwrap()).collect();
+    let last_low = low_finish.iter().max().unwrap();
+    assert!(
+        high_done < *last_low,
+        "high-priority request ({high_done:?}) starved behind the low flood (last low {last_low:?})"
+    );
+}
+
+#[test]
+fn healthz_readiness_flips_under_saturation() {
+    let mut cfg = sched_cfg(1);
+    cfg.queue_cap = 1;
+    cfg.max_batch = 1;
+    let server = start_tiny(cfg);
+    let addr = Arc::new(server.addr().to_string());
+    // Fresh server: ready.
+    let r = http_request(&addr, "GET", "/healthz", None).unwrap();
+    assert_eq!(r.status, 200);
+    let j = Json::parse(r.body_str()).unwrap();
+    assert_eq!(j.get("ready").unwrap().as_bool(), Some(true));
+    // Saturate: one decode in flight + one queued hits the cap of 1.
+    let hist = Arc::new(hist_json(&tiny_hist()));
+    let flood: Vec<_> = (0..16)
+        .map(|_| {
+            let addr = Arc::clone(&addr);
+            let hist = Arc::clone(&hist);
+            std::thread::spawn(move || {
+                let body = format!(r#"{{"history": {hist}, "horizon": 1024}}"#);
+                let _ = http_request(&addr, "POST", "/forecast", Some(body.as_bytes()));
+            })
+        })
+        .collect();
+    let mut saw_unready = false;
+    for _ in 0..600 {
+        let r = http_request(&addr, "GET", "/healthz", None).unwrap();
+        if r.status == 503 {
+            let j = Json::parse(r.body_str()).unwrap();
+            assert_eq!(j.get("ready").unwrap().as_bool(), Some(false));
+            saw_unready = true;
+            break;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(5));
+    }
+    for h in flood {
+        h.join().unwrap();
+    }
+    assert!(saw_unready, "healthz never reported saturation under a 16-way burst at cap 1");
+    // Drained: ready again.
+    let mut ready_again = false;
+    for _ in 0..600 {
+        let r = http_request(&addr, "GET", "/healthz", None).unwrap();
+        if r.status == 200 {
+            ready_again = true;
+            break;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(5));
+    }
+    assert!(ready_again, "healthz stuck unready after the queue drained");
+}
+
+#[test]
+fn stats_scheduler_block_is_present() {
+    let server = start_tiny(sched_cfg(2));
+    let addr = server.addr().to_string();
+    let hist = hist_json(&tiny_hist());
+    let body = format!(
+        r#"{{"history": {hist}, "horizon": 4, "priority": "high", "deadline_ms": 60000}}"#
+    );
+    let r = http_request(&addr, "POST", "/forecast", Some(body.as_bytes())).unwrap();
+    assert_eq!(r.status, 200, "{}", r.body_str());
+    let j = Json::parse(http_request(&addr, "GET", "/stats", None).unwrap().body_str()).unwrap();
+    let sched = j.get("scheduler").expect("scheduler block");
+    assert_eq!(sched.get("policy").unwrap().as_str(), Some("edf"));
+    assert_eq!(sched.get("replicas").unwrap().as_usize(), Some(2));
+    assert!(sched.get("queue_cap").unwrap().as_usize().unwrap() >= 1);
+    let prio = sched.get("priorities").unwrap().get("high").expect("high priority block");
+    // The generous-deadline request above must have met its SLO.
+    assert_eq!(prio.get("slo_attainment").unwrap().as_f64(), Some(1.0));
 }
 
 #[test]

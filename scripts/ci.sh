@@ -68,6 +68,18 @@ if [[ "${1:-}" != "--no-bench" ]]; then
         echo "error: draft_sources criteria not met" >&2
         exit 1
     fi
+
+    echo "== serving_load smoke (STRIDE_BENCH_QUICK=1) =="
+    # Serving-scheduler criteria: scheduled responses bit-identical to
+    # the unscheduled engine at every replica count, throughput monotone
+    # in replicas, and high-priority deadline attainment under 2x
+    # overload >= the single-replica FIFO baseline.
+    STRIDE_BENCH_QUICK=1 cargo bench --bench serving_load
+    check_bench_json results/BENCH_serving_load.json
+    if ! grep -q '"criteria_met":true' results/BENCH_serving_load.json; then
+        echo "error: serving_load criteria not met" >&2
+        exit 1
+    fi
 fi
 
 echo "CI OK"
