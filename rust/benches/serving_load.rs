@@ -138,6 +138,7 @@ fn request(i: usize, with_deadline: bool) -> ForecastRequest {
         horizon: HORIZON,
         mode: Mode::Sd,
         gamma: Some(2 + (i % 2)),
+        k: None,
         sigma: Some(if i % 3 == 0 { 0.8 } else { 0.5 }),
         cache: None,
         adaptive: None,

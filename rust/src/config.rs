@@ -149,6 +149,11 @@ pub struct ServeConfig {
     /// Default draft block length γ (per-request `gamma` overrides; the
     /// adaptive controller's opening value).
     pub gamma: usize,
+    /// Default tree branch count k (per-request `k` overrides). `1` is
+    /// the classic single-trajectory engine; `k > 1` drafts k candidate
+    /// continuations per round and commits the longest accepted branch
+    /// (`specdec::sd_generate_tree`). Requires the practical variant.
+    pub k: usize,
     /// Default acceptance width σ (per-request `sigma` overrides).
     pub sigma: f64,
     /// Acceptance bias λ (1.0 = canonical rule).
@@ -207,6 +212,7 @@ impl Default for ServeConfig {
             backend: "xla".into(),
             kernel: "fused".into(),
             gamma: 3,
+            k: 1,
             sigma: 0.5,
             bias: 1.0,
             lossless: false,
@@ -249,6 +255,7 @@ impl ServeConfig {
                 "backend" => self.backend = v.as_str().context("backend")?.to_string(),
                 "kernel" => self.kernel = v.as_str().context("kernel")?.to_string(),
                 "gamma" => self.gamma = v.as_usize().context("gamma")?,
+                "k" => self.k = v.as_usize().context("k")?,
                 "sigma" => self.sigma = v.as_f64().context("sigma")?,
                 "bias" => self.bias = v.as_f64().context("bias")?,
                 "lossless" => self.lossless = v.as_bool().context("lossless")?,
@@ -325,6 +332,7 @@ impl ServeConfig {
                 "alpha_lo" => a.alpha_lo = val.as_f64().context("adaptive.alpha_lo")?,
                 "alpha_hi" => a.alpha_hi = val.as_f64().context("adaptive.alpha_hi")?,
                 "sigma_step" => a.sigma_step = val.as_f64().context("adaptive.sigma_step")?,
+                "k_max" => a.k_max = val.as_usize().context("adaptive.k_max")?,
                 other => bail!("unknown adaptive config key: {other}"),
             }
         }
@@ -374,6 +382,9 @@ impl ServeConfig {
         }
         if let Some(v) = cli.get_usize("gamma")? {
             self.gamma = v;
+        }
+        if let Some(v) = cli.get_usize("k")? {
+            self.k = v;
         }
         if let Some(v) = cli.get_f64("sigma")? {
             self.sigma = v;
@@ -430,6 +441,21 @@ impl ServeConfig {
         if self.gamma == 0 || self.gamma > 64 {
             bail!("gamma must be in [1, 64], got {}", self.gamma);
         }
+        if self.k == 0 || self.k > crate::specdec::MAX_TREE_K {
+            bail!("k must be in [1, {}], got {}", crate::specdec::MAX_TREE_K, self.k);
+        }
+        if self.lossless && self.k > 1 {
+            bail!(
+                "lossless requires k = 1: tree speculation's exactness is only \
+                 proven for decodes bit-identical to the single-trajectory path"
+            );
+        }
+        if self.lossless && self.adaptive && self.adaptive_cfg.k_max > 1 {
+            bail!(
+                "lossless requires adaptive.k_max = 1: the controller may not \
+                 branch a decode whose output law must stay exactly p"
+            );
+        }
         if !(self.sigma > 0.0) {
             bail!("sigma must be positive");
         }
@@ -481,6 +507,7 @@ impl ServeConfig {
     pub fn spec_config(&self) -> SpecConfig {
         SpecConfig {
             gamma: self.gamma,
+            k: self.k,
             policy: AcceptancePolicy::new(self.sigma, self.bias),
             variant: if self.lossless { Variant::Lossless } else { Variant::Practical },
             seed: self.seed,
@@ -610,6 +637,53 @@ mod tests {
         // sigma adaptation is single-stream only; the server rejects it.
         let mut cfg = ServeConfig::default();
         cfg.apply_json(&Json::parse(r#"{"adaptive": {"sigma_adapt": true}}"#).unwrap()).unwrap();
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn k_plumbing() {
+        // Default is the classic single-trajectory engine.
+        let mut cfg = ServeConfig::default();
+        assert_eq!(cfg.k, 1);
+        assert_eq!(cfg.spec_config().k, 1);
+
+        // JSON and CLI forms, CLI winning.
+        cfg.apply_json(&Json::parse(r#"{"k": 4}"#).unwrap()).unwrap();
+        assert_eq!(cfg.k, 4);
+        assert_eq!(cfg.spec_config().k, 4);
+        cfg.apply_cli(&Cli::parse(args("--k 2")).unwrap()).unwrap();
+        assert_eq!(cfg.k, 2);
+
+        // Bounds: 0 and > MAX_TREE_K rejected at validation.
+        let mut cfg = ServeConfig::default();
+        cfg.k = 0;
+        assert!(cfg.validate().is_err());
+        cfg.k = crate::specdec::MAX_TREE_K + 1;
+        assert!(cfg.validate().is_err());
+        cfg.k = crate::specdec::MAX_TREE_K;
+        cfg.validate().unwrap();
+
+        // Lossless refuses trees, both static k and the adaptive k axis.
+        let mut cfg = ServeConfig::default();
+        cfg.lossless = true;
+        cfg.sampled = true;
+        cfg.k = 2;
+        assert!(cfg.validate().is_err());
+        cfg.k = 1;
+        cfg.validate().unwrap();
+        cfg.adaptive = true;
+        cfg.adaptive_cfg.k_max = 4;
+        assert!(cfg.validate().is_err());
+        cfg.adaptive_cfg.k_max = 1;
+        cfg.validate().unwrap();
+
+        // The adaptive object form carries the k_max knob.
+        let mut cfg = ServeConfig::default();
+        cfg.apply_json(&Json::parse(r#"{"adaptive": {"k_max": 4}}"#).unwrap()).unwrap();
+        assert!(cfg.adaptive);
+        assert_eq!(cfg.adaptive_cfg.k_max, 4);
+        cfg.validate().unwrap();
+        cfg.apply_json(&Json::parse(r#"{"adaptive": {"k_max": 99}}"#).unwrap()).unwrap();
         assert!(cfg.validate().is_err());
     }
 

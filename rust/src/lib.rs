@@ -51,6 +51,25 @@
 //!   α̂/c/update counts; `benches/draft_sources.rs` pins the adaptive
 //!   head out-accepting a frozen model draft after regime drift and the
 //!   extrapolation source measuring the lowest c.
+//! * [`specdec::sd_generate_tree`] — **tree speculation**: k candidate
+//!   draft branches per round ([`specdec::DraftSource::propose_k`]),
+//!   verified against *one* shared-prefix target session by per-branch
+//!   extend + rollback; the longest accepted run commits (deterministic
+//!   lowest-index tie-break). Expected block length follows the
+//!   max-of-k law `E[L_k] = 1 + Σᵢ(1 − (1 − αⁱ)ᵏ)`
+//!   ([`theory::expected_block_length_tree`]); the controller retunes
+//!   (γ × k) jointly via [`theory::optimal_gamma_k`]. The k = 1 path is
+//!   bit-identical to classic speculation across the full
+//!   variant × emission × cache × draft-kind matrix
+//!   (`tests/tree_equivalence.rs` — the equivalence wall), which is why
+//!   [`specdec::sd_generate`] safely routes through it whenever
+//!   `SpecConfig::k > 1`. Lossless requires k = 1 (residual thinning
+//!   corrects one proposal law, not a max-of-k mixture — rejected
+//!   loudly, never clamped). Serving: per-request `"k"`, a k axis in
+//!   the decode-group key (k > 1 groups decode per-job through the
+//!   tree path), `stride_tree_*` metrics + the `/stats` `"tree"` block,
+//!   and `benches/tree_speculation.rs` pins k = 4 out-running k = 1
+//!   per acceptance regime in `results/BENCH_tree_speculation.json`.
 //! * [`models`] — backends + the decode-session layer:
 //!   [`models::begin_session`] hands out a [`models::DecodeSession`]
 //!   (`extend`/`rollback`/`evict_to`) that is KV-cached on the native

@@ -163,6 +163,7 @@ impl Bench {
 
         let spec = SpecConfig {
             gamma: cfg.gamma,
+            k: 1,
             policy: AcceptancePolicy::new(cfg.sigma, cfg.bias),
             variant: if cfg.lossless { Variant::Lossless } else { Variant::Practical },
             seed: 0x57121DE,

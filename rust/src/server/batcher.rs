@@ -4,10 +4,12 @@
 //! its decode-compatibility group, stamped with priority/deadline, and
 //! admitted into the bounded [`AdmissionQueue`] (sched subsystem). Engine
 //! replicas pull EDF-ordered batches from the queue and run them through
-//! [`execute_batch`]: one lockstep speculative decode per SD group
+//! [`execute_batch`]: one lockstep speculative decode per k = 1 SD group
 //! (per-request seeds through [`sd_generate_stream_seeded`], so responses
-//! are replica- and batching-invariant), individual AR decodes for the
-//! baseline modes. Replies travel per-job channels, typed as
+//! are replica- and batching-invariant), per-job tree decodes for k > 1
+//! groups (the batch axis is spent on candidate branches — see
+//! [`sd_generate_tree_from`]), individual AR decodes for the baseline
+//! modes. Replies travel per-job channels, typed as
 //! [`ServeError`] so the HTTP layer can map shed/expired/invalid/internal
 //! to distinct statuses.
 //!
@@ -33,8 +35,8 @@ use crate::metrics::{AcceptanceMonitor, Metrics};
 use crate::models::{Backend, CacheMode, NativeBackend, XlaBackend};
 use crate::runtime::{Engine, Manifest};
 use crate::specdec::{
-    make_batch_source, sd_generate_stream_seeded, DecodeStats, DraftKind, GammaController,
-    SpecConfig,
+    make_batch_source, make_source, sd_generate_stream_seeded, sd_generate_tree_from,
+    DecodeStats, DraftKind, GammaController, SpecConfig,
 };
 
 /// One queued forecast request plus its reply channel.
@@ -144,21 +146,34 @@ impl BatcherHandle {
                         cfg.draft.kind.as_str()
                     )));
                 }
-                // An explicit per-request gamma always pins the job to
-                // the static path: a pinned request is a pinned request.
+                // An explicit per-request gamma (or k) always pins the
+                // job to the static path: a pinned request is a pinned
+                // request.
                 let adaptive = self.controller.is_some()
                     && req.adaptive.unwrap_or(cfg.adaptive)
                     && req.gamma.is_none()
+                    && req.k.is_none()
                     && kind == cfg.draft.kind;
-                let gamma = if adaptive {
+                let (gamma, k) = if adaptive {
                     let ctrl = self.controller.as_ref().unwrap().lock().unwrap();
-                    ctrl.gamma_for(self.shape.n_ctx)
+                    (ctrl.gamma_for(self.shape.n_ctx), ctrl.k())
                 } else {
-                    req.gamma.unwrap_or(cfg.gamma)
+                    (req.gamma.unwrap_or(cfg.gamma), req.k.unwrap_or(cfg.k))
                 };
+                // Lossless decoding is proven only for k = 1 (the
+                // equivalence wall); a per-request k override cannot
+                // widen a lossless server's tree.
+                if k > 1 && cfg.lossless {
+                    self.metrics.errors_total.fetch_add(1, Ordering::Relaxed);
+                    return Err(ServeError::Invalid(
+                        "tree speculation (k > 1) requires the practical \
+                         variant; this server runs lossless decoding"
+                            .to_string(),
+                    ));
+                }
                 let sigma = req.sigma.unwrap_or(cfg.sigma);
                 let cache = req.cache.unwrap_or(cfg.cache);
-                Ok(GroupKey::Sd { gamma, sigma_bits: sigma.to_bits(), cache, adaptive, kind })
+                Ok(GroupKey::Sd { gamma, k, sigma_bits: sigma.to_bits(), cache, adaptive, kind })
             }
             _ => Ok(GroupKey::Single),
         }
@@ -359,15 +374,29 @@ pub(crate) fn execute_batch(
                 run_single(cfg, shape, target, draft, qj, shared, replica);
             }
         }
-        GroupKey::Sd { gamma, sigma_bits, cache, adaptive, kind } => {
+        GroupKey::Sd { gamma, k, sigma_bits, cache, adaptive, kind } => {
             let mut spec = cfg.spec_config();
             spec.gamma = gamma;
+            spec.k = k;
             spec.policy.sigma = f64::from_bits(sigma_bits);
             spec.cache = if cache { CacheMode::On } else { CacheMode::Off };
             spec.draft.kind = kind;
             spec.adaptive = if adaptive { Some(cfg.adaptive_cfg) } else { None };
             let ctrl = if adaptive { shared.controller.as_deref() } else { None };
-            run_sd_group(cfg, shape, target, draft, jobs, &spec, shared, ctrl, replica);
+            if k > 1 {
+                run_tree_group(cfg, shape, target, draft, jobs, &spec, shared, ctrl, replica);
+            } else {
+                if let Some(a) = spec.adaptive.as_mut() {
+                    // The lockstep batched engine spends the batch axis
+                    // on sequences, not branches: it only runs k_max = 1
+                    // controllers. The fleet controller (fed after the
+                    // group) still retunes (γ × k) jointly — a k > 1
+                    // recommendation routes *future* admissions to the
+                    // tree path above.
+                    a.k_max = 1;
+                }
+                run_sd_group(cfg, shape, target, draft, jobs, &spec, shared, ctrl, replica);
+            }
         }
     }
 }
@@ -453,10 +482,12 @@ fn run_sd_group(
                 let s = c.state();
                 drop(c);
                 metrics.set_gauge("controller_gamma", s.gamma as f64);
+                metrics.set_gauge("controller_k", s.k as f64);
                 metrics.set_gauge("controller_alpha_hat", s.alpha_hat);
                 metrics.set_gauge("controller_c", s.c);
                 metrics.set_gauge("controller_rounds", s.rounds as f64);
                 metrics.set_gauge("controller_gamma_changes", s.gamma_changes as f64);
+                metrics.set_gauge("controller_k_changes", s.k_changes as f64);
             }
             // Per-draft-source serving aggregates (see PR 4): EWMA α̂/c
             // per kind plus monotone decode/update counts.
@@ -504,6 +535,130 @@ fn run_sd_group(
                     .job
                     .reply
                     .send(Err(ServeError::Internal(format!("decode failed: {e:#}"))));
+            }
+        }
+    }
+}
+
+/// Execute a k > 1 group as per-job tree decodes. Tree speculation
+/// spends the target's batch axis on candidate branches, so jobs in the
+/// group run sequentially through [`sd_generate_tree_from`] — each with
+/// its own seed and draft source, keeping the response a pure function
+/// of the request exactly like the lockstep path. Learned draft heads
+/// thread through the fleet snapshot the same way, and adaptive groups
+/// feed every round back into the long-lived (γ × k) controller.
+#[allow(clippy::too_many_arguments)]
+fn run_tree_group(
+    cfg: &ServeConfig,
+    shape: ModelShape,
+    target: &dyn Backend,
+    draft: &dyn Backend,
+    jobs: Vec<QueuedJob>,
+    spec: &SpecConfig,
+    shared: &SchedShared,
+    controller: Option<&Mutex<GammaController>>,
+    replica: usize,
+) {
+    let metrics = &shared.metrics;
+    metrics.set_gauge("tree_k", spec.k as f64);
+    let kind = spec.draft.kind.as_str();
+    for qj in jobs {
+        let (hist, n_hist, horizon) = match prep(&qj.job.req, shape, spec.gamma) {
+            Ok(p) => p,
+            Err(e) => {
+                metrics.errors_total.fetch_add(1, Ordering::Relaxed);
+                let _ = qj.job.reply.send(Err(ServeError::Invalid(e)));
+                continue;
+            }
+        };
+        let mut source = match make_source(&spec.draft, draft) {
+            Ok(s) => s,
+            Err(e) => {
+                metrics.errors_total.fetch_add(1, Ordering::Relaxed);
+                let _ = qj
+                    .job
+                    .reply
+                    .send(Err(ServeError::Internal(format!("draft source failed: {e:#}"))));
+                continue;
+            }
+        };
+        if let Some(h) = shared.head_for(spec.draft.kind) {
+            if let Err(e) = source.import_head(&h) {
+                log::warn!("stale draft head discarded: {e:#}");
+                shared.discard_head(spec.draft.kind);
+            }
+        }
+        let mut job_spec = *spec;
+        job_spec.seed = qj.job.req.seed.unwrap_or(cfg.seed);
+        let t0 = Instant::now();
+        match sd_generate_tree_from(target, source.as_mut(), &hist, n_hist, horizon, &job_spec) {
+            Ok(out) => {
+                if let Some(h) = source.export_head() {
+                    shared.merge_head(spec.draft.kind, h);
+                }
+                let wall = t0.elapsed();
+                metrics.inc("tree_decodes", 1);
+                metrics.inc("tree_rounds", out.stats.rounds as u64);
+                metrics.inc("tree_branches_verified", out.stats.branches_verified as u64);
+                // Winner-depth histogram: how deep the committed branch
+                // ran, per tree round (capped — the tail folds into the
+                // last bucket).
+                for r in &out.rounds {
+                    if r.branches > 1 {
+                        metrics.inc(&format!("tree_winner_depth_{}", r.accepted.min(8)), 1);
+                    }
+                }
+                if let Some(ctrl) = controller {
+                    let mut c = ctrl.lock().unwrap();
+                    for r in &out.rounds {
+                        c.observe_round(r);
+                    }
+                    let s = c.state();
+                    drop(c);
+                    metrics.set_gauge("controller_gamma", s.gamma as f64);
+                    metrics.set_gauge("controller_k", s.k as f64);
+                    metrics.set_gauge("controller_alpha_hat", s.alpha_hat);
+                    metrics.set_gauge("controller_c", s.c);
+                    metrics.set_gauge("controller_rounds", s.rounds as f64);
+                    metrics.set_gauge("controller_gamma_changes", s.gamma_changes as f64);
+                    metrics.set_gauge("controller_k_changes", s.k_changes as f64);
+                }
+                metrics.inc(&format!("draft_{kind}_decodes"), 1);
+                metrics.inc(&format!("draft_{kind}_updates"), out.stats.draft_updates as u64);
+                metrics.ewma_gauge(&format!("draft_{kind}_alpha_hat"), out.stats.alpha_hat(), 0.8);
+                metrics.ewma_gauge(&format!("draft_{kind}_c"), out.stats.cost_ratio(), 0.8);
+                let latency = qj.job.enqueued.elapsed();
+                observe_served(shared, &qj, latency);
+                metrics.observe("decode_latency", wall);
+                metrics
+                    .patches_total
+                    .fetch_add(out.patches.len() as u64 / shape.patch as u64, Ordering::Relaxed);
+                let alpha = out.stats.alpha_hat();
+                if alpha.is_finite() {
+                    shared.monitor.record(alpha);
+                }
+                let resp = ForecastResponse {
+                    forecast: out.patches,
+                    mode: "sd".into(),
+                    draft: kind.into(),
+                    priority: qj.priority.as_str().into(),
+                    replica,
+                    seed: job_spec.seed,
+                    latency_ms: latency.as_secs_f64() * 1e3,
+                    alpha_hat: alpha,
+                    mean_block_len: out.stats.mean_block_len(),
+                    rounds: out.stats.rounds,
+                    draft_calls: out.stats.draft_calls,
+                    target_calls: out.stats.target_calls,
+                };
+                let _ = qj.job.reply.send(Ok(resp));
+            }
+            Err(e) => {
+                metrics.errors_total.fetch_add(1, Ordering::Relaxed);
+                let _ = qj
+                    .job
+                    .reply
+                    .send(Err(ServeError::Internal(format!("tree decode failed: {e:#}"))));
             }
         }
     }

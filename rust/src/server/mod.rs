@@ -11,9 +11,10 @@
 //! * `GET  /metrics`  — Prometheus-style metrics text.
 //! * `GET  /stats`    — JSON snapshot (acceptance monitor, latency
 //!   quantiles, per-draft-source aggregates, the adaptive-controller
-//!   state, and the `"scheduler"` block: policy, replicas, queue
-//!   depth/cap, shed/expired/steal counts, per-priority latency and
-//!   SLO attainment).
+//!   state, the `"tree"` block — k > 1 decode counts and the
+//!   winner-depth histogram — and the `"scheduler"` block: policy,
+//!   replicas, queue depth/cap, shed/expired/steal counts, per-priority
+//!   latency and SLO attainment).
 //!
 //! The router validates and parses on HTTP worker threads; all model
 //! work happens on the engine replica threads behind the scheduler
@@ -155,6 +156,8 @@ fn route(req: &Request, handle: &BatcherHandle) -> Response {
                         ("proposals", Json::from(s.proposals)),
                         ("gamma_changes", Json::from(s.gamma_changes)),
                         ("sigma_changes", Json::from(s.sigma_changes)),
+                        ("k", Json::from(s.k)),
+                        ("k_changes", Json::from(s.k_changes)),
                     ])
                 }
                 None => Json::Null,
@@ -194,6 +197,29 @@ fn route(req: &Request, handle: &BatcherHandle) -> Response {
             let draft = Json::obj(vec![
                 ("default", Json::from(handle.draft.as_str())),
                 ("sources", Json::obj(sources)),
+            ]);
+            // Tree-speculation block: per-job k > 1 decodes served so
+            // far. `winner_depth[d]` counts tree rounds whose committed
+            // branch ran d patches deep (the last bucket absorbs the
+            // tail); all-zero until the first k > 1 request.
+            let tree = Json::obj(vec![
+                ("decodes", Json::from(m.counter("tree_decodes") as usize)),
+                ("rounds", Json::from(m.counter("tree_rounds") as usize)),
+                (
+                    "branches_verified",
+                    Json::from(m.counter("tree_branches_verified") as usize),
+                ),
+                ("k", m.gauge("tree_k").map(Json::Num).unwrap_or(Json::Null)),
+                (
+                    "winner_depth",
+                    Json::Arr(
+                        (0..=8)
+                            .map(|d| {
+                                Json::from(m.counter(&format!("tree_winner_depth_{d}")) as usize)
+                            })
+                            .collect(),
+                    ),
+                ),
             ]);
             // Scheduler block: admission + dispatch + per-priority SLO
             // state (see server::sched).
@@ -245,6 +271,7 @@ fn route(req: &Request, handle: &BatcherHandle) -> Response {
                 ("adaptive", Json::from(handle.controller.is_some())),
                 ("controller", controller),
                 ("draft", draft),
+                ("tree", tree),
                 ("scheduler", scheduler),
                 ("latency_p50_ms", Json::Num(m.quantile_ms("request_latency", 0.5))),
                 ("latency_p95_ms", Json::Num(m.quantile_ms("request_latency", 0.95))),

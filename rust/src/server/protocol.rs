@@ -1,7 +1,8 @@
 //! JSON wire protocol of the forecasting service.
 //!
 //! POST /forecast
-//!   {"history": [f32...], "horizon": <patches>, "gamma"?: n, "sigma"?: x,
+//!   {"history": [f32...], "horizon": <patches>, "gamma"?: n, "k"?: n,
+//!    "sigma"?: x,
 //!    "mode"?: "sd" | "baseline" | "draft", "dataset"?: "etth1",
 //!    "cache"?: true|false, "adaptive"?: true|false,
 //!    "draft"?: "model" | "extrap" | "adaptive",
@@ -188,6 +189,13 @@ pub struct ForecastRequest {
     pub mode: Mode,
     /// Optional per-request overrides.
     pub gamma: Option<usize>,
+    /// Per-request tree branch-count override (None = server config).
+    /// `1` pins the classic single-trajectory decode; `k > 1` routes the
+    /// job to a per-job tree decode (`specdec::sd_generate_tree_from`)
+    /// drafting k candidate branches per round. Like `gamma`, an explicit
+    /// `k` pins the request to the static path — the server's joint
+    /// (γ × k) controller only drives requests that leave both unset.
+    pub k: Option<usize>,
     /// Per-request acceptance-width override (None = server config).
     pub sigma: Option<f64>,
     /// Per-request KV-cache override (None = server config). Exposed so
@@ -258,6 +266,12 @@ impl ForecastRequest {
                 bail!("'gamma' must be in [1, 64]");
             }
         }
+        let k = j.get("k").and_then(Json::as_usize);
+        if let Some(kv) = k {
+            if kv == 0 || kv > crate::specdec::MAX_TREE_K {
+                bail!("'k' must be in [1, {}]", crate::specdec::MAX_TREE_K);
+            }
+        }
         let sigma = j.get("sigma").and_then(Json::as_f64);
         if let Some(s) = sigma {
             if !(s > 0.0 && s < 100.0) {
@@ -298,6 +312,7 @@ impl ForecastRequest {
             horizon,
             mode,
             gamma,
+            k,
             sigma,
             cache: j.get("cache").and_then(Json::as_bool),
             adaptive: j.get("adaptive").and_then(Json::as_bool),
@@ -382,6 +397,20 @@ mod tests {
         assert_eq!(r.horizon, 4);
         assert_eq!(r.mode, Mode::Sd);
         assert!(r.gamma.is_none());
+        assert!(r.k.is_none());
+    }
+
+    #[test]
+    fn parses_k_override() {
+        let j = Json::parse(r#"{"history": [0.5], "horizon": 2, "k": 4}"#).unwrap();
+        assert_eq!(ForecastRequest::from_json(&j).unwrap().k, Some(4));
+        for bad in [
+            r#"{"history": [0.5], "horizon": 2, "k": 0}"#,
+            r#"{"history": [0.5], "horizon": 2, "k": 17}"#,
+        ] {
+            let j = Json::parse(bad).unwrap();
+            assert!(ForecastRequest::from_json(&j).is_err(), "should reject {bad}");
+        }
     }
 
     #[test]

@@ -31,12 +31,17 @@ use super::super::protocol::{Priority, ServeError};
 /// decode group (one session pool, one draft source, one cost model).
 #[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
 pub enum GroupKey {
-    /// A speculative-decode group — the (γ, σ, cache, adaptive,
-    /// draft-kind) tuple the batcher has always grouped by.
+    /// A speculative-decode group — the (γ, k, σ, cache, adaptive,
+    /// draft-kind) tuple the batcher groups by.
     Sd {
         /// Draft block length γ (the live controller's current value for
         /// adaptive jobs, so they regroup as γ drifts).
         gamma: usize,
+        /// Tree branch count k (the controller's current value for
+        /// adaptive jobs). k = 1 groups run the lockstep batched engine;
+        /// k > 1 groups decode per-job through the tree engine, so
+        /// grouping by k keeps the two execution shapes from mixing.
+        k: usize,
         /// Acceptance width σ as stable bits (f64 keys can't derive Ord).
         sigma_bits: u64,
         /// KV-cache on/off.
@@ -431,6 +436,7 @@ mod tests {
             horizon: 1,
             mode: Mode::Sd,
             gamma: None,
+            k: None,
             sigma: None,
             cache: None,
             adaptive: None,
@@ -450,11 +456,36 @@ mod tests {
     fn key(gamma: usize) -> GroupKey {
         GroupKey::Sd {
             gamma,
+            k: 1,
             sigma_bits: 0.5f64.to_bits(),
             cache: true,
             adaptive: false,
             kind: DraftKind::Model,
         }
+    }
+
+    #[test]
+    fn tree_k_is_a_grouping_axis() {
+        // Same γ/σ/cache/kind but different k must land in different
+        // decode groups: k = 1 runs the lockstep batched engine, k > 1
+        // runs per-job tree decodes.
+        let k1 = key(3);
+        let k4 = match key(3) {
+            GroupKey::Sd { gamma, sigma_bits, cache, adaptive, kind, .. } => {
+                GroupKey::Sd { gamma, k: 4, sigma_bits, cache, adaptive, kind }
+            }
+            other => other,
+        };
+        assert_ne!(k1, k4);
+        let q = queue(16, SchedPolicy::Edf);
+        for gk in [k1, k4] {
+            let (job, _rx) = mk_job();
+            std::mem::forget(_rx);
+            q.admit(job, Priority::Normal, None, gk).unwrap();
+        }
+        let (ka, _) = q.next_batch(0, 16, Duration::ZERO).unwrap();
+        let (kb, _) = q.next_batch(0, 16, Duration::ZERO).unwrap();
+        assert_ne!(ka, kb, "k = 1 and k = 4 jobs must not share a batch");
     }
 
     fn queue(cap: usize, policy: SchedPolicy) -> AdmissionQueue {

@@ -101,6 +101,12 @@ pub fn sd_generate_stream_from(
     let p = target.patch();
     anyhow::ensure!(p == source.patch(), "patch mismatch");
     anyhow::ensure!(cfg.gamma >= 1);
+    anyhow::ensure!(
+        cfg.k == 1,
+        "tree speculation (k > 1) is single-stream only; the serving \
+         batcher runs k > 1 requests as per-job tree decodes — the batch \
+         axis is spent on branches, not sequences"
+    );
     if cfg.variant == Variant::Lossless {
         anyhow::ensure!((cfg.policy.bias - 1.0).abs() < 1e-12, "lossless requires bias=1");
         anyhow::ensure!(cfg.emission == Emission::Sampled, "lossless requires Emission::Sampled");
@@ -111,6 +117,11 @@ pub fn sd_generate_stream_from(
             !acfg.sigma_adapt,
             "sigma adaptation is single-stream only (proposals in a lockstep \
              batch share one acceptance policy); use gamma-only adaptation here"
+        );
+        anyhow::ensure!(
+            acfg.k_max == 1,
+            "adaptive tree speculation (k_max > 1) is single-stream only; \
+             lockstep batches share one verify extend per round"
         );
     }
     let max_ctx = target.max_ctx().min(source.max_ctx());
@@ -351,6 +362,7 @@ pub fn sd_generate_stream_from(
                 emitted: take,
                 alphas,
                 residual_draws,
+                branches: 1,
                 draft_time: draft_time / a as u32 + fin_elapsed,
                 target_time: target_time / a as u32 + tpost_elapsed,
             };
@@ -409,6 +421,12 @@ pub fn sd_generate_stream_seeded(
     anyhow::ensure!(p == source.patch(), "patch mismatch");
     anyhow::ensure!(cfg.gamma >= 1);
     anyhow::ensure!(
+        cfg.k == 1,
+        "tree speculation (k > 1) is single-stream only; the serving \
+         batcher runs k > 1 requests as per-job tree decodes — the batch \
+         axis is spent on branches, not sequences"
+    );
+    anyhow::ensure!(
         seeds.len() == tasks.len(),
         "got {} seeds for {} tasks",
         seeds.len(),
@@ -424,6 +442,11 @@ pub fn sd_generate_stream_seeded(
             !acfg.sigma_adapt,
             "sigma adaptation is single-stream only (proposals in a lockstep \
              batch share one acceptance policy); use gamma-only adaptation here"
+        );
+        anyhow::ensure!(
+            acfg.k_max == 1,
+            "adaptive tree speculation (k_max > 1) is single-stream only; \
+             lockstep batches share one verify extend per round"
         );
     }
     let max_ctx = target.max_ctx().min(source.max_ctx());
@@ -529,6 +552,7 @@ pub fn sd_generate_stream_seeded(
                         emitted: 1,
                         alphas: vec![],
                         residual_draws: 0,
+                        branches: 1,
                         draft_time: dt,
                         target_time: tt,
                     };
@@ -669,6 +693,7 @@ pub fn sd_generate_stream_seeded(
                     emitted: take,
                     alphas,
                     residual_draws,
+                    branches: 1,
                     draft_time: draft_time / a as u32 + fin_elapsed,
                     target_time: target_time / a as u32 + tpost_elapsed,
                 };
@@ -701,6 +726,7 @@ mod tests {
     fn cfg(gamma: usize, sigma: f64, seed: u64) -> SpecConfig {
         SpecConfig {
             gamma,
+            k: 1,
             policy: AcceptancePolicy::new(sigma, 1.0),
             variant: Variant::Practical,
             seed,
@@ -710,6 +736,27 @@ mod tests {
             draft: DraftConfig::default(),
             adaptive: None,
         }
+    }
+
+    #[test]
+    fn batch_paths_reject_tree_k() {
+        let t = AnalyticBackend::new("t", 2, 0.8, 0.1);
+        let d = AnalyticBackend::new("d", 2, 0.75, 0.1);
+        let h = vec![0.5f32, -0.5];
+        let tasks: Vec<(&[f32], usize, usize)> = vec![(&h, 1, 4)];
+        let mut c = cfg(2, 0.5, 1);
+        c.k = 2;
+        let err = sd_generate_batch(&t, &d, &tasks, &c).unwrap_err();
+        assert!(format!("{err:#}").contains("single-stream"), "{err:#}");
+        let mut src = make_batch_source(&c.draft, &d).unwrap();
+        assert!(sd_generate_stream_seeded(&t, src.as_mut(), &tasks, &[1], usize::MAX, &c).is_err());
+        // Adaptive k_max > 1 is rejected the same way.
+        let mut c = cfg(2, 0.5, 1);
+        c.adaptive = Some(crate::specdec::AdaptiveConfig {
+            k_max: 4,
+            ..crate::specdec::AdaptiveConfig::default()
+        });
+        assert!(sd_generate_batch(&t, &d, &tasks, &c).is_err());
     }
 
     #[test]

@@ -93,6 +93,15 @@ pub struct AdaptiveConfig {
     pub alpha_hi: f64,
     /// Multiplicative σ step per adjustment (> 1).
     pub sigma_step: f64,
+    /// Upper bound on the tree branch count k the controller may choose.
+    /// `1` (the default) disables the k axis entirely — the controller
+    /// behaves exactly as the γ-only tuner and decodes stay on the
+    /// classic single-trajectory path. `> 1` turns retuning into a joint
+    /// (γ × k) scan over the tree speedup surface
+    /// ([`crate::theory::tree_wall_speedup`]); requires
+    /// [`super::Variant::Practical`] (the lossless guarantee is only
+    /// proven for decodes bit-identical to k = 1).
+    pub k_max: usize,
 }
 
 impl Default for AdaptiveConfig {
@@ -112,6 +121,7 @@ impl Default for AdaptiveConfig {
             alpha_lo: 0.45,
             alpha_hi: 0.98,
             sigma_step: 1.1,
+            k_max: 1,
         }
     }
 }
@@ -151,6 +161,12 @@ impl AdaptiveConfig {
                 "sigma target band needs alpha_lo < alpha_hi"
             );
         }
+        anyhow::ensure!(
+            (1..=super::tree::MAX_TREE_K).contains(&self.k_max),
+            "adaptive k_max must be in [1, {}], got {}",
+            super::tree::MAX_TREE_K,
+            self.k_max
+        );
         Ok(())
     }
 
@@ -188,6 +204,10 @@ pub struct ControllerState {
     pub gamma_changes: usize,
     /// σ changes applied since construction.
     pub sigma_changes: usize,
+    /// Current recommended tree branch count k (1 unless `k_max > 1`).
+    pub k: usize,
+    /// k changes applied since construction.
+    pub k_changes: usize,
 }
 
 /// Per-stream adaptive γ/σ controller.
@@ -214,6 +234,8 @@ pub struct GammaController {
     since_change: usize,
     gamma_changes: usize,
     sigma_changes: usize,
+    k: usize,
+    k_changes: usize,
 }
 
 impl GammaController {
@@ -247,6 +269,8 @@ impl GammaController {
             since_change: 0,
             gamma_changes: 0,
             sigma_changes: 0,
+            k: 1,
+            k_changes: 0,
         }
     }
 
@@ -288,6 +312,19 @@ impl GammaController {
         self.sigma
     }
 
+    /// Current recommended tree branch count k (1 unless `k_max > 1`
+    /// and the joint (γ × k) retune chose to branch).
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    /// Seed the opening branch count without counting a k change
+    /// (clamped into `[1, k_max]`) — how a static `SpecConfig::k` enters
+    /// an adaptive tree decode.
+    pub fn seed_k(&mut self, k: usize) {
+        self.k = k.clamp(1, self.cfg.k_max.max(1));
+    }
+
     /// EWMA acceptance estimate α̂ (the prior until proposals arrive).
     pub fn alpha_hat(&self) -> f64 {
         self.alpha_hat
@@ -315,6 +352,8 @@ impl GammaController {
             proposals: self.proposals,
             gamma_changes: self.gamma_changes,
             sigma_changes: self.sigma_changes,
+            k: self.k,
+            k_changes: self.k_changes,
         }
     }
 
@@ -344,8 +383,13 @@ impl GammaController {
         // old `dt > 0` guard would have frozen c at NaN and disabled
         // retuning exactly for the cheapest drafts).
         if !self.cfg.c_override.is_finite() {
-            let dt = r.draft_time.as_secs_f64() / r.gamma as f64;
-            let tt = r.target_time.as_secs_f64();
+            // Tree rounds draft γ proposals and run one verify extend
+            // *per branch*: normalize both clocks by the branch count so
+            // c stays per-proposal vs per-validation-pass at any k
+            // (branches = 1 leaves the classic arithmetic untouched).
+            let fan = r.branches.max(1) as f64;
+            let dt = r.draft_time.as_secs_f64() / (r.gamma as f64 * fan);
+            let tt = r.target_time.as_secs_f64() / fan;
             if tt > 0.0 {
                 let c_round = dt / tt;
                 self.c_meas = if self.c_meas.is_finite() {
@@ -376,14 +420,40 @@ impl GammaController {
         }
         let a = self.alpha_hat.clamp(0.0, 1.0);
         let cap = self.cfg.max_gamma.max(self.cfg.min_gamma);
-        let cand = theory::optimal_gamma(a, c, cap).clamp(self.cfg.min_gamma, cap);
-        if cand != self.gamma {
-            let s_cur = theory::wall_speedup(a, self.gamma, c);
-            let s_cand = theory::wall_speedup(a, cand, c);
-            if s_cand >= s_cur * (1.0 + self.cfg.hysteresis) {
-                self.gamma = cand;
-                self.gamma_changes += 1;
-                self.since_change = 0;
+        if self.cfg.k_max <= 1 {
+            // γ-only tuning: the pre-tree scan-up rule, byte-for-byte —
+            // k_max = 1 controllers must be indistinguishable from the
+            // controller that predated the k axis.
+            let cand = theory::optimal_gamma(a, c, cap).clamp(self.cfg.min_gamma, cap);
+            if cand != self.gamma {
+                let s_cur = theory::wall_speedup(a, self.gamma, c);
+                let s_cand = theory::wall_speedup(a, cand, c);
+                if s_cand >= s_cur * (1.0 + self.cfg.hysteresis) {
+                    self.gamma = cand;
+                    self.gamma_changes += 1;
+                    self.since_change = 0;
+                }
+            }
+        } else {
+            // Joint (γ × k) retune over the tree speedup surface, gated
+            // by the same relative-improvement hysteresis so the pair
+            // only moves when the predicted win is material.
+            let (g_cand, k_cand) = theory::optimal_gamma_k(a, c, cap, self.cfg.k_max);
+            let g_cand = g_cand.clamp(self.cfg.min_gamma, cap);
+            if (g_cand, k_cand) != (self.gamma, self.k) {
+                let s_cur = theory::tree_wall_speedup(a, self.gamma, self.k, c);
+                let s_cand = theory::tree_wall_speedup(a, g_cand, k_cand, c);
+                if s_cand >= s_cur * (1.0 + self.cfg.hysteresis) {
+                    if g_cand != self.gamma {
+                        self.gamma_changes += 1;
+                    }
+                    if k_cand != self.k {
+                        self.k_changes += 1;
+                    }
+                    self.gamma = g_cand;
+                    self.k = k_cand;
+                    self.since_change = 0;
+                }
             }
         }
         if self.cfg.sigma_adapt {
@@ -420,6 +490,7 @@ mod tests {
             emitted: accepted + 1,
             alphas,
             residual_draws: 0,
+            branches: 1,
             draft_time: Duration::from_micros(5 * gamma as u64),
             target_time: Duration::from_micros(50),
         }
@@ -606,6 +677,7 @@ mod tests {
                 emitted: g + 1,
                 alphas: vec![0.95; g],
                 residual_draws: 0,
+                branches: 1,
                 draft_time: Duration::ZERO,
                 target_time: Duration::from_micros(50),
             });
@@ -633,6 +705,7 @@ mod tests {
             emitted: 1,
             alphas: vec![],
             residual_draws: 0,
+            branches: 1,
             draft_time: Duration::from_micros(1),
             target_time: Duration::from_micros(1),
         });
@@ -690,6 +763,105 @@ mod tests {
         let mut cfg = AdaptiveConfig::default();
         cfg.sigma_min = -1.0;
         assert!(cfg.validate().is_err(), "negative sigma_min must be rejected");
+    }
+
+    #[test]
+    fn k_stays_one_when_k_max_is_one() {
+        // The default config must be indistinguishable from the
+        // pre-tree controller: k pinned at 1, no k changes, ever.
+        let mut ctrl = GammaController::new(fast_cfg(), 3, 0.5);
+        for _ in 0..100 {
+            let g = ctrl.gamma();
+            ctrl.observe_round(&round(g, g, vec![0.95; g]));
+        }
+        assert_eq!(ctrl.k(), 1);
+        assert_eq!(ctrl.state().k_changes, 0);
+    }
+
+    #[test]
+    fn joint_retune_branches_when_draft_is_cheap() {
+        // High acceptance + near-free draft: the tree surface favors
+        // k > 1 (E[L_k] gain beats the tiny k·γ cost), so the joint
+        // retune must move k off 1.
+        let mut cfg = fast_cfg();
+        cfg.k_max = 8;
+        cfg.c_override = 0.002;
+        let mut ctrl = GammaController::new(cfg, 3, 0.5);
+        for _ in 0..100 {
+            let g = ctrl.gamma();
+            ctrl.observe_round(&round(g, g.min(2), vec![0.8; g]));
+        }
+        assert!(ctrl.k() > 1, "cheap draft never branched (k {})", ctrl.k());
+        assert!(ctrl.state().k_changes >= 1);
+        assert!(ctrl.k() <= 8, "k escaped k_max");
+    }
+
+    #[test]
+    fn joint_retune_collapses_k_for_expensive_drafts() {
+        // c large: every extra branch costs more than its E[L] gain, so
+        // the joint optimum is the classic k = 1 even with k_max high.
+        let mut cfg = fast_cfg();
+        cfg.k_max = 8;
+        cfg.c_override = 0.8;
+        let mut ctrl = GammaController::new(cfg, 3, 0.5);
+        ctrl.seed_k(4);
+        assert_eq!(ctrl.k(), 4, "seed_k installs the opening k");
+        for _ in 0..100 {
+            let g = ctrl.gamma();
+            ctrl.observe_round(&round(g, 1, vec![0.5; g.min(2)]));
+        }
+        assert_eq!(ctrl.k(), 1, "expensive draft should collapse to k = 1");
+    }
+
+    #[test]
+    fn seed_k_clamps_to_k_max() {
+        let mut ctrl = GammaController::new(fast_cfg(), 3, 0.5); // k_max 1
+        ctrl.seed_k(6);
+        assert_eq!(ctrl.k(), 1);
+        let mut cfg = fast_cfg();
+        cfg.k_max = 4;
+        let mut ctrl = GammaController::new(cfg, 3, 0.5);
+        ctrl.seed_k(6);
+        assert_eq!(ctrl.k(), 4);
+        assert_eq!(ctrl.state().k_changes, 0, "seeding is not a change");
+    }
+
+    #[test]
+    fn validate_rejects_bad_k_max() {
+        let mut cfg = AdaptiveConfig::default();
+        cfg.k_max = 0;
+        assert!(cfg.validate().is_err());
+        let mut cfg = AdaptiveConfig::default();
+        cfg.k_max = 17;
+        assert!(cfg.validate().is_err());
+        let mut cfg = AdaptiveConfig::default();
+        cfg.k_max = 16;
+        assert!(cfg.validate().is_ok());
+    }
+
+    #[test]
+    fn tree_round_timers_normalized_by_branches() {
+        // A k = 4 round reports 4x the draft clock and 4x the target
+        // clock of its k = 1 twin; the per-proposal/per-pass c must come
+        // out identical.
+        let mut cfg = fast_cfg();
+        cfg.c_override = f64::NAN;
+        let mut flat = GammaController::new(cfg, 3, 0.5);
+        let mut tree = GammaController::new(cfg, 3, 0.5);
+        for _ in 0..20 {
+            flat.observe_round(&round(3, 3, vec![0.9; 3]));
+            let mut r = round(3, 3, vec![0.9; 12]);
+            r.branches = 4;
+            r.draft_time *= 4;
+            r.target_time *= 4;
+            tree.observe_round(&r);
+        }
+        assert!(
+            (flat.c() - tree.c()).abs() < 1e-12,
+            "c diverged: flat {} tree {}",
+            flat.c(),
+            tree.c()
+        );
     }
 
     #[test]

@@ -167,6 +167,31 @@ impl DraftSource for AdaptiveResidualDraft {
         Ok(ProposalBlock { proposals, mu_qs })
     }
 
+    fn propose_k(
+        &mut self,
+        gamma: usize,
+        k: usize,
+        sigma: f64,
+        rng: &mut Rng,
+    ) -> Result<Vec<ProposalBlock>> {
+        anyhow::ensure!(k >= 1, "propose_k needs k >= 1");
+        if k == 1 {
+            // The k=1 equivalence wall: plain propose, features armed.
+            return Ok(vec![self.propose(gamma, sigma, rng)?]);
+        }
+        // k σ-perturbed branches off the same committed tip (propose is
+        // context-neutral here, so sequential calls fork naturally). The
+        // captured features belong to the *last* branch only, which need
+        // not be the winner — so learning pauses on tree rounds: clear
+        // the feature buffer and let finish_round's `.min(feats.len())`
+        // train on zero pairs. Commit bookkeeping still runs.
+        let blocks = (0..k)
+            .map(|_| self.propose(gamma, sigma, rng))
+            .collect::<Result<Vec<_>>>()?;
+        self.feats.clear();
+        Ok(blocks)
+    }
+
     fn finish_round(&mut self, fb: &RoundFeedback<'_>) -> Result<()> {
         let p = self.patch;
         anyhow::ensure!(
@@ -307,6 +332,45 @@ mod tests {
         assert_eq!(src.updates(), 2);
         // Context = history + committed + final only.
         assert_eq!(src.context(), &[1.0, 0.5, 0.6]);
+    }
+
+    #[test]
+    fn tree_rounds_pause_learning_but_commit() {
+        let p = 1;
+        let mut src = AdaptiveResidualDraft::new(p, 0.5);
+        src.begin(&[1.0], 1, CacheMode::Off).unwrap();
+        let mut rng = Rng::new(8);
+        let blocks = src.propose_k(2, 3, 0.5, &mut rng).unwrap();
+        assert_eq!(blocks.len(), 3);
+        // All branches fork the same committed tip.
+        assert_eq!(blocks[0].mu_qs[0], blocks[1].mu_qs[0]);
+        assert_eq!(blocks[1].mu_qs[0], blocks[2].mu_qs[0]);
+        let committed: Vec<f32> = blocks[1].proposals.iter().flatten().copied().collect();
+        src.finish_round(&RoundFeedback {
+            gamma: 2,
+            accepted: 2,
+            alphas: &[1.0, 1.0],
+            target_means: &[0.3, 0.4, 0.5],
+            committed: &committed,
+            final_patch: &[0.5],
+            sampled: true,
+        })
+        .unwrap();
+        assert_eq!(src.updates(), 0, "tree rounds must not train on mismatched feats");
+        assert_eq!(src.len(), 4, "context still commits winner + final");
+        // A following k = 1 round learns again.
+        let _ = src.propose_k(2, 1, 0.5, &mut rng).unwrap();
+        src.finish_round(&RoundFeedback {
+            gamma: 2,
+            accepted: 0,
+            alphas: &[0.0],
+            target_means: &[0.3, 0.4, 0.5],
+            committed: &[],
+            final_patch: &[0.3],
+            sampled: true,
+        })
+        .unwrap();
+        assert_eq!(src.updates(), 1);
     }
 
     #[test]

@@ -47,6 +47,22 @@
 //! work, so the [`super::GammaController`]'s measured cost ratio c is
 //! per-source automatically — a near-zero-cost `ExtrapolationDraft`
 //! measures c ≈ 0 and the speedup curve pushes γ toward its cap.
+//!
+//! ## Tree rounds
+//!
+//! The tree engine ([`super::sd_generate_tree`]) asks a source for *k*
+//! candidate trajectories per round via [`DraftSource::propose_k`]. The
+//! default implementation draws k independent blocks through the *same*
+//! engine RNG stream — k σ-perturbed continuations for the closed-form
+//! sources, k distinct sample paths for a model-backed source. At
+//! `k = 1` the default delegates to [`DraftSource::propose`] verbatim,
+//! which is the ground of the k=1 equivalence wall
+//! (`tests/tree_equivalence.rs`). After verification the source gets a
+//! single [`RoundFeedback`] for the *winning* branch; the between-rounds
+//! contract is unchanged (state equals committed history only).
+//! Stateful sources override `propose_k` to roll their sessions back
+//! between branches ([`ModelDraft`]) or to pause learning on mismatched
+//! features ([`AdaptiveResidualDraft`]).
 
 mod adaptive;
 mod extrap;
@@ -214,6 +230,24 @@ pub trait DraftSource {
     /// `fill_normal_around` per proposal, in order — the engine's RNG
     /// stream contract). Must leave the committed context untouched.
     fn propose(&mut self, gamma: usize, sigma: f64, rng: &mut Rng) -> Result<ProposalBlock>;
+    /// Produce `k` candidate trajectories for one tree round, all drawn
+    /// sequentially through the same `rng` (branch j consumes its normals
+    /// after branch j-1's — the tree RNG stream contract). At `k = 1`
+    /// this MUST be indistinguishable from one [`DraftSource::propose`]
+    /// call: the default delegates, and overrides must preserve that
+    /// (the k=1 equivalence wall). The committed context must be left
+    /// untouched no matter how many branches were drafted; the winning
+    /// branch arrives later through [`DraftSource::finish_round`].
+    fn propose_k(
+        &mut self,
+        gamma: usize,
+        k: usize,
+        sigma: f64,
+        rng: &mut Rng,
+    ) -> Result<Vec<ProposalBlock>> {
+        anyhow::ensure!(k >= 1, "propose_k needs k >= 1");
+        (0..k).map(|_| self.propose(gamma, sigma, rng)).collect()
+    }
     /// Absorb one round's verification outcome: commit
     /// `fb.committed + fb.final_patch` to the context and (for learning
     /// sources) fold the target means into the online update. Called
@@ -272,6 +306,23 @@ pub trait BatchDraftSource {
         sigma: f64,
         rngs: &mut [Rng],
     ) -> Result<Vec<ProposalBlock>>;
+    /// Per-sequence [`DraftSource::propose_k`]: `k` candidate blocks for
+    /// sequence `i`, drawn branch-after-branch through `rngs[i]`. Same
+    /// k=1-delegation contract as the single-stream trait. The lockstep
+    /// decoder itself stays k = 1 (tree fan-out is a per-job affair in
+    /// the serving batcher), but batch sources expose the capability so
+    /// an adapter can host tree decodes without downcasting.
+    fn propose_k(
+        &mut self,
+        i: usize,
+        gamma: usize,
+        k: usize,
+        sigma: f64,
+        rngs: &mut [Rng],
+    ) -> Result<Vec<ProposalBlock>> {
+        anyhow::ensure!(k >= 1, "propose_k needs k >= 1");
+        (0..k).map(|_| Ok(self.propose(&[i], gamma, sigma, rngs)?.remove(0))).collect()
+    }
     /// Per-sequence [`DraftSource::finish_round`].
     fn finish_round(&mut self, i: usize, fb: &RoundFeedback<'_>) -> Result<()>;
     /// Commit `k` patches to sequence `i` outside a proposal round.
@@ -400,6 +451,16 @@ impl BatchDraftSource for PerSeqBatchDraft {
         idx.iter()
             .map(|&i| self.srcs[i].propose(gamma, sigma, &mut rngs[i]))
             .collect()
+    }
+    fn propose_k(
+        &mut self,
+        i: usize,
+        gamma: usize,
+        k: usize,
+        sigma: f64,
+        rngs: &mut [Rng],
+    ) -> Result<Vec<ProposalBlock>> {
+        self.srcs[i].propose_k(gamma, k, sigma, &mut rngs[i])
     }
     fn finish_round(&mut self, i: usize, fb: &RoundFeedback<'_>) -> Result<()> {
         self.srcs[i].finish_round(fb)

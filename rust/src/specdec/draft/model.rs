@@ -25,12 +25,23 @@ pub struct ModelDraft<'a> {
     /// the hot decode loop.
     last_gamma: usize,
     last_proposal: Vec<f32>,
+    /// True while a k > 1 tree round is in flight: `propose_k` rolled
+    /// the session back to the committed prefix after every branch, so
+    /// `finish_round` rebuilds from the winner's feedback instead of
+    /// trimming in-session proposals.
+    tree_round: bool,
 }
 
 impl<'a> ModelDraft<'a> {
     /// Source proposing from `backend`'s decode sessions.
     pub fn new(backend: &'a dyn Backend) -> ModelDraft<'a> {
-        ModelDraft { backend, sess: None, last_gamma: 0, last_proposal: Vec::new() }
+        ModelDraft {
+            backend,
+            sess: None,
+            last_gamma: 0,
+            last_proposal: Vec::new(),
+            tree_round: false,
+        }
     }
 
     fn sess(&mut self) -> Result<&mut Box<dyn DecodeSession + 'a>> {
@@ -51,6 +62,7 @@ impl DraftSource for ModelDraft<'_> {
         self.sess = Some(begin_session(self.backend, cache, history, n_hist)?);
         self.last_gamma = 0;
         self.last_proposal.clear();
+        self.tree_round = false;
         Ok(())
     }
     fn len(&self) -> usize {
@@ -92,6 +104,33 @@ impl DraftSource for ModelDraft<'_> {
         Ok(ProposalBlock { proposals, mu_qs })
     }
 
+    fn propose_k(
+        &mut self,
+        gamma: usize,
+        k: usize,
+        sigma: f64,
+        rng: &mut Rng,
+    ) -> Result<Vec<ProposalBlock>> {
+        anyhow::ensure!(k >= 1, "propose_k needs k >= 1");
+        if k == 1 {
+            // The k=1 equivalence wall: one plain propose, session left
+            // holding its γ-1 proposals exactly as the classic path does.
+            return Ok(vec![self.propose(gamma, sigma, rng)?]);
+        }
+        // Each branch is a fork of the committed prefix: draft it with
+        // the verbatim propose loop, then roll the session back so the
+        // next branch (and the winner commit) starts from the same KV
+        // state. Branches consume the RNG stream in order, so branch 0's
+        // samples are exactly the k=1 samples.
+        let mut blocks = Vec::with_capacity(k);
+        for _ in 0..k {
+            blocks.push(self.propose(gamma, sigma, rng)?);
+            self.sess()?.rollback(gamma - 1)?;
+        }
+        self.tree_round = true;
+        Ok(blocks)
+    }
+
     fn finish_round(&mut self, fb: &RoundFeedback<'_>) -> Result<()> {
         let gamma = fb.gamma;
         anyhow::ensure!(gamma >= 1, "finish_round on an empty proposal block");
@@ -100,6 +139,19 @@ impl DraftSource for ModelDraft<'_> {
         // the session is mutated.
         let last = std::mem::take(&mut self.last_proposal);
         self.last_gamma = 0;
+        if self.tree_round {
+            // Tree round: the session was rolled back to the committed
+            // prefix after every branch, so the winner's patches are
+            // rebuilt from feedback alone (sampled and mean emission
+            // alike — `fb.committed` is whatever the engine emitted).
+            self.tree_round = false;
+            let sess = self.sess()?;
+            if fb.accepted > 0 {
+                sess.append(fb.committed, fb.accepted)?;
+            }
+            sess.append(fb.final_patch, 1)?;
+            return Ok(());
+        }
         let sess = self.sess()?;
         if fb.sampled {
             // The committed patches are the accepted proposals verbatim
@@ -144,12 +196,15 @@ pub struct ModelBatchDraft<'a> {
     /// Per-sequence in-flight round state: `(gamma, final proposal)` —
     /// the only proposal `finish_round` ever needs (see [`ModelDraft`]).
     last: Vec<(usize, Vec<f32>)>,
+    /// Per-sequence tree-round flags (same contract as `ModelDraft`'s
+    /// `tree_round`: branches were rolled back, rebuild from feedback).
+    tree: Vec<bool>,
 }
 
 impl<'a> ModelBatchDraft<'a> {
     /// Lockstep source proposing from `backend`'s batched sessions.
     pub fn new(backend: &'a dyn Backend) -> ModelBatchDraft<'a> {
-        ModelBatchDraft { backend, sess: None, last: Vec::new() }
+        ModelBatchDraft { backend, sess: None, last: Vec::new(), tree: Vec::new() }
     }
 
     fn sess(&mut self) -> Result<&mut Box<dyn BatchDecodeSession + 'a>> {
@@ -169,6 +224,7 @@ impl BatchDraftSource for ModelBatchDraft<'_> {
     fn begin(&mut self, tasks: &[(&[f32], usize)], cache: CacheMode) -> Result<()> {
         self.sess = Some(begin_batch_session(self.backend, cache, tasks)?);
         self.last = vec![(0, Vec::new()); tasks.len()];
+        self.tree = vec![false; tasks.len()];
         Ok(())
     }
     fn batch(&self) -> usize {
@@ -230,12 +286,42 @@ impl BatchDraftSource for ModelBatchDraft<'_> {
         Ok(blocks)
     }
 
+    fn propose_k(
+        &mut self,
+        i: usize,
+        gamma: usize,
+        k: usize,
+        sigma: f64,
+        rngs: &mut [Rng],
+    ) -> Result<Vec<ProposalBlock>> {
+        anyhow::ensure!(k >= 1, "propose_k needs k >= 1");
+        if k == 1 {
+            return Ok(self.propose(&[i], gamma, sigma, rngs)?);
+        }
+        let mut blocks = Vec::with_capacity(k);
+        for _ in 0..k {
+            blocks.push(self.propose(&[i], gamma, sigma, rngs)?.remove(0));
+            self.sess()?.rollback(i, gamma - 1)?;
+        }
+        self.tree[i] = true;
+        Ok(blocks)
+    }
+
     fn finish_round(&mut self, i: usize, fb: &RoundFeedback<'_>) -> Result<()> {
         let gamma = fb.gamma;
         anyhow::ensure!(gamma >= 1, "finish_round on an empty proposal block");
         anyhow::ensure!(self.last[i].0 == gamma, "feedback gamma mismatch for seq {i}");
         let last = std::mem::take(&mut self.last[i].1);
         self.last[i].0 = 0;
+        if self.tree[i] {
+            self.tree[i] = false;
+            let sess = self.sess()?;
+            if fb.accepted > 0 {
+                sess.append(i, fb.committed, fb.accepted)?;
+            }
+            sess.append(i, fb.final_patch, 1)?;
+            return Ok(());
+        }
         let sess = self.sess()?;
         if fb.sampled {
             let keep_d = fb.accepted.min(gamma - 1);
@@ -336,5 +422,97 @@ mod tests {
         let ctx = src.context();
         assert_eq!(ctx[1], block.mu_qs[0][0], "mean emission commits mu_q, not the sample");
         assert_eq!(ctx[2], 5.0);
+    }
+
+    #[test]
+    fn propose_k1_matches_propose_exactly() {
+        let b = AnalyticBackend::new("d", 2, 0.6, 0.2);
+        let mut a = ModelDraft::new(&b);
+        let mut c = ModelDraft::new(&b);
+        a.begin(&[1.0, 2.0], 1, CacheMode::On).unwrap();
+        c.begin(&[1.0, 2.0], 1, CacheMode::On).unwrap();
+        let mut r1 = Rng::new(42);
+        let mut r2 = Rng::new(42);
+        let lone = a.propose(3, 0.4, &mut r1).unwrap();
+        let tree = c.propose_k(3, 1, 0.4, &mut r2).unwrap();
+        assert_eq!(tree.len(), 1);
+        assert_eq!(tree[0].proposals, lone.proposals);
+        assert_eq!(tree[0].mu_qs, lone.mu_qs);
+        // Session state identical too: γ-1 proposals left in place.
+        assert_eq!(a.len(), c.len());
+        assert_eq!(a.context(), c.context());
+    }
+
+    #[test]
+    fn propose_k_forks_branches_from_committed_prefix() {
+        let b = AnalyticBackend::new("d", 1, 0.5, 1.0);
+        let mut src = ModelDraft::new(&b);
+        src.begin(&[2.0], 1, CacheMode::On).unwrap();
+        let mut rng = Rng::new(9);
+        let blocks = src.propose_k(3, 3, 0.4, &mut rng).unwrap();
+        assert_eq!(blocks.len(), 3);
+        // Every branch conditions its first mean on the same committed
+        // tip (branch forking, not chaining).
+        let tip = 0.5 * 2.0 + 1.0;
+        for bl in &blocks {
+            assert_eq!(bl.mu_qs[0], vec![tip]);
+            // ...and its second mean on its *own* first sample.
+            assert_eq!(bl.mu_qs[1], vec![0.5 * bl.proposals[0][0] + 1.0]);
+        }
+        // Branches differ (distinct RNG draws).
+        assert_ne!(blocks[0].proposals[0], blocks[1].proposals[0]);
+        // Committed context untouched after drafting all branches.
+        assert_eq!(src.len(), 1);
+        assert_eq!(src.context(), &[2.0]);
+        // finish_round rebuilds the winner (say branch 1, 2 accepted).
+        let committed: Vec<f32> =
+            blocks[1].proposals[..2].iter().flatten().copied().collect();
+        src.finish_round(&RoundFeedback {
+            gamma: 3,
+            accepted: 2,
+            alphas: &[1.0, 1.0, 0.0],
+            target_means: &[0.0; 4],
+            committed: &committed,
+            final_patch: &[7.0],
+            sampled: true,
+        })
+        .unwrap();
+        assert_eq!(src.len(), 4);
+        let ctx = src.context();
+        assert_eq!(ctx[1], blocks[1].proposals[0][0]);
+        assert_eq!(ctx[2], blocks[1].proposals[1][0]);
+        assert_eq!(ctx[3], 7.0);
+    }
+
+    #[test]
+    fn batch_propose_k_forks_one_sequence() {
+        let b = AnalyticBackend::new("d", 1, 1.0, 0.0);
+        let mut src = ModelBatchDraft::new(&b);
+        let h0 = [1.0f32];
+        let h1 = [3.0f32, 4.0];
+        let tasks: Vec<(&[f32], usize)> = vec![(&h0, 1), (&h1, 2)];
+        src.begin(&tasks, CacheMode::On).unwrap();
+        let mut rngs = vec![Rng::new(5), Rng::new(6)];
+        let blocks = src.propose_k(1, 2, 2, 0.3, &mut rngs).unwrap();
+        assert_eq!(blocks.len(), 2);
+        assert_eq!(blocks[0].mu_qs[0], vec![4.0]);
+        assert_eq!(blocks[1].mu_qs[0], vec![4.0], "both branches fork the tip");
+        assert_eq!(src.len(1), 2, "committed context untouched");
+        assert_eq!(src.len(0), 1, "other sequence untouched");
+        let committed: Vec<f32> = blocks[0].proposals[..1].to_vec().concat();
+        src.finish_round(
+            1,
+            &RoundFeedback {
+                gamma: 2,
+                accepted: 1,
+                alphas: &[1.0, 0.0],
+                target_means: &[0.0; 3],
+                committed: &committed,
+                final_patch: &[8.0],
+                sampled: true,
+            },
+        )
+        .unwrap();
+        assert_eq!(src.len(1), 4);
     }
 }

@@ -62,6 +62,16 @@ pub enum Emission {
 pub struct SpecConfig {
     /// Draft block length γ (the opening value when `adaptive` is set).
     pub gamma: usize,
+    /// Candidate branches per speculative round (tree speculation).
+    /// `1` (the default) is the paper's single-trajectory algorithm;
+    /// `k > 1` drafts k candidate continuations per round, verifies all
+    /// of them against the shared committed prefix, and commits the
+    /// longest accepted branch (see [`super::sd_generate_tree`]). The
+    /// `k = 1` tree path is bit-identical to the classic engine
+    /// (`tests/tree_equivalence.rs`); `k > 1` requires
+    /// [`Variant::Practical`] — the lossless guarantee is only proven
+    /// for configurations identical to k = 1.
+    pub k: usize,
     /// Acceptance rule parameters (σ, bias λ).
     pub policy: AcceptancePolicy,
     /// Practical (fallback-to-p) or Lossless (residual thinning).
@@ -96,6 +106,7 @@ impl Default for SpecConfig {
     fn default() -> Self {
         SpecConfig {
             gamma: 3,
+            k: 1,
             policy: AcceptancePolicy::default(),
             variant: Variant::Practical,
             seed: 0xC0FFEE,
@@ -125,7 +136,7 @@ pub(super) enum GammaPlan<'a> {
 
 impl GammaPlan<'_> {
     /// γ wanted for the next round, before horizon capping.
-    fn desired(&mut self, cfg: &SpecConfig, max_ctx: usize) -> usize {
+    pub(super) fn desired(&mut self, cfg: &SpecConfig, max_ctx: usize) -> usize {
         match self {
             GammaPlan::Fixed => cfg.gamma,
             GammaPlan::Controller(c) => c.gamma_for(max_ctx),
@@ -137,9 +148,18 @@ impl GammaPlan<'_> {
         }
     }
 
+    /// Branch count k for the next round: the static config for fixed /
+    /// replay plans, the controller's joint (γ × k) choice when tuned.
+    pub(super) fn k_for(&self, cfg: &SpecConfig) -> usize {
+        match self {
+            GammaPlan::Controller(c) => c.k(),
+            _ => cfg.k,
+        }
+    }
+
     /// Acceptance policy for the next round (σ may drift under a
     /// controller with σ adaptation enabled).
-    fn policy(&self, cfg: &SpecConfig) -> AcceptancePolicy {
+    pub(super) fn policy(&self, cfg: &SpecConfig) -> AcceptancePolicy {
         match self {
             GammaPlan::Controller(c) if c.config().sigma_adapt => {
                 AcceptancePolicy { sigma: c.sigma(), bias: cfg.policy.bias }
@@ -149,7 +169,7 @@ impl GammaPlan<'_> {
     }
 
     /// Feed a finished round back (no-op for fixed/replay plans).
-    fn observe(&mut self, r: &RoundStats) {
+    pub(super) fn observe(&mut self, r: &RoundStats) {
         if let GammaPlan::Controller(c) = self {
             c.observe_round(r);
         }
@@ -196,6 +216,13 @@ pub fn sd_generate_from(
     horizon: usize,
     cfg: &SpecConfig,
 ) -> Result<DecodeOutput> {
+    if cfg.k > 1 {
+        // Tree speculation: k candidate branches per round, longest
+        // accepted branch committed. k = 1 stays on this (classic) path
+        // byte-for-byte — the equivalence wall the tree engine is tested
+        // against.
+        return super::tree::sd_generate_tree_from(target, source, history, n_hist, horizon, cfg);
+    }
     match cfg.adaptive {
         Some(acfg) => {
             // Validate before construction: bad knobs must be a clean
@@ -264,6 +291,19 @@ pub fn sd_generate_from_with_controller(
             "sigma adaptation changes the emission law; the lossless variant \
              requires a fixed sigma (gamma adaptation alone is exact)"
         );
+        anyhow::ensure!(
+            cfg.k == 1 && ctrl.config().k_max == 1,
+            "lossless exactness is only proven for decodes bit-identical \
+             to k = 1; tree speculation (k > 1 or adaptive.k_max > 1) \
+             requires Variant::Practical"
+        );
+    }
+    if cfg.k > 1 || ctrl.config().k_max > 1 {
+        // Any chance of a k > 1 round sends the whole decode through the
+        // tree loop (which runs k = 1 rounds identically to this path).
+        return super::tree::sd_generate_tree_ctrl(
+            target, source, history, n_hist, horizon, cfg, ctrl,
+        );
     }
     sd_generate_impl(
         target,
@@ -291,6 +331,11 @@ pub fn sd_generate_scheduled(
     schedule: &[usize],
 ) -> Result<DecodeOutput> {
     anyhow::ensure!(target.patch() == draft.patch(), "patch mismatch");
+    anyhow::ensure!(
+        cfg.k == 1,
+        "scheduled replay records only the gamma axis; tree decodes \
+         (k > 1) cannot be replayed through sd_generate_scheduled"
+    );
     let mut source = make_source(&cfg.draft, draft)?;
     sd_generate_impl(
         target,
@@ -317,6 +362,7 @@ fn sd_generate_impl(
     anyhow::ensure!(n_hist >= 1, "need at least one history patch");
     anyhow::ensure!(history.len() >= n_hist * p, "history too short");
     anyhow::ensure!(cfg.gamma >= 1, "gamma >= 1");
+    anyhow::ensure!(cfg.k == 1, "classic decode loop requires k = 1 (tree decodes route via sd_generate_tree)");
     if cfg.variant == Variant::Lossless {
         anyhow::ensure!(
             (cfg.policy.bias - 1.0).abs() < 1e-12,
@@ -403,6 +449,7 @@ fn sd_generate_impl(
                 emitted: 1,
                 alphas: vec![],
                 residual_draws: 0,
+                branches: 1,
                 draft_time: dt,
                 target_time: tt,
             };
@@ -546,6 +593,7 @@ fn sd_generate_impl(
             emitted: accepted + 1,
             alphas,
             residual_draws,
+            branches: 1,
             draft_time,
             target_time,
         };
@@ -598,7 +646,7 @@ pub(crate) fn residual_thin(
 /// Emit a patch given its target-head mean: a sample in the generative
 /// protocol, the mean in production mode. Takes the *round* sigma so an
 /// adapting controller's width applies consistently within a round.
-fn emit_from_p(mu: &[f32], sigma: f64, emission: Emission, rng: &mut Rng) -> Vec<f32> {
+pub(super) fn emit_from_p(mu: &[f32], sigma: f64, emission: Emission, rng: &mut Rng) -> Vec<f32> {
     match emission {
         Emission::Sampled => {
             let mut buf = vec![0.0f32; mu.len()];
@@ -618,6 +666,7 @@ mod tests {
     fn cfg(gamma: usize, sigma: f64, variant: Variant, seed: u64) -> SpecConfig {
         SpecConfig {
             gamma,
+            k: 1,
             policy: AcceptancePolicy::new(sigma, 1.0),
             variant,
             seed,

@@ -34,12 +34,24 @@
 //! bit-identical to its solo [`sd_generate_from`] run regardless of
 //! batch composition. This is what lets the serving scheduler promise
 //! replica-count- and arrival-order-independent responses.
+//!
+//! A sixth axis (tree-speculation PR): *multi-candidate drafting* —
+//! [`SpecConfig::k`] > 1 drafts k candidate continuations per round
+//! ([`draft::DraftSource::propose_k`]), verifies every branch against the
+//! shared committed prefix by per-branch extend + rollback of one target
+//! session, and commits the longest accepted branch (the `tree` module,
+//! capped at [`MAX_TREE_K`]). The k = 1 tree path is bit-identical to the
+//! classic engine (`tests/tree_equivalence.rs` — the equivalence wall),
+//! and the adaptive controller can retune (γ × k) jointly via
+//! [`AdaptiveConfig::k_max`]. Lossless decoding stays restricted to
+//! configurations provably identical to k = 1.
 
 mod batched;
 mod controller;
 pub mod draft;
 mod engine;
 mod stats;
+mod tree;
 
 pub use batched::{
     sd_generate_batch, sd_generate_stream, sd_generate_stream_from, sd_generate_stream_seeded,
@@ -55,3 +67,4 @@ pub use engine::{
     sd_generate_with_controller, Emission, SpecConfig, Variant,
 };
 pub use stats::{DecodeOutput, DecodeStats, RoundStats};
+pub use tree::{sd_generate_tree, sd_generate_tree_from, MAX_TREE_K};

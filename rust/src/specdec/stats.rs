@@ -16,6 +16,9 @@ pub struct RoundStats {
     pub alphas: Vec<f64>,
     /// Extra target draws consumed by residual thinning (lossless only).
     pub residual_draws: usize,
+    /// Candidate branches drafted and verified this round (1 for the
+    /// classic single-trajectory path; k for tree rounds).
+    pub branches: usize,
     /// Wall clock spent in draft-model work this round.
     pub draft_time: Duration,
     /// Wall clock spent in target-model work this round.
@@ -51,16 +54,23 @@ pub struct DecodeStats {
     /// non-learning draft sources; set by the decode loops from
     /// `DraftSource::updates` deltas, not accumulated per round).
     pub draft_updates: usize,
+    /// Candidate branches verified across all rounds (equals `rounds`
+    /// for classic k = 1 decodes; grows k-fold on tree rounds).
+    pub branches_verified: usize,
 }
 
 impl DecodeStats {
     /// Fold one round's outcome into the aggregate.
     pub fn absorb(&mut self, r: &RoundStats) {
+        // Tree rounds draft and check gamma proposals *per branch*; the
+        // classic path sets branches = 1 so the multiplier is inert.
+        let fan = r.branches.max(1);
         self.rounds += 1;
-        self.draft_calls += r.gamma;
-        self.target_calls += 1 + r.residual_draws; // residual draws re-use p samples, not forwards; counted separately below
+        self.draft_calls += r.gamma * fan;
+        self.target_calls += fan + r.residual_draws; // one verify extend per branch; residual draws re-use p samples, not forwards
         self.residual_draws += r.residual_draws;
-        self.proposals += r.gamma;
+        self.proposals += r.gamma * fan;
+        self.branches_verified += fan;
         self.accepted += r.accepted;
         self.sum_alpha += r.alphas.iter().sum::<f64>();
         self.alpha_count += r.alphas.len();
@@ -128,6 +138,7 @@ impl DecodeStats {
         self.draft_time += other.draft_time;
         self.target_time += other.target_time;
         self.draft_updates += other.draft_updates;
+        self.branches_verified += other.branches_verified;
     }
 }
 
@@ -154,6 +165,7 @@ mod tests {
             emitted: accepted + 1,
             alphas,
             residual_draws: 0,
+            branches: 1,
             draft_time: Duration::from_micros(10),
             target_time: Duration::from_micros(40),
         }
@@ -207,6 +219,22 @@ mod tests {
         r.draft_time = Duration::ZERO;
         z.absorb(&r);
         assert_eq!(z.cost_ratio(), 0.0);
+    }
+
+    #[test]
+    fn tree_rounds_multiply_proposal_accounting() {
+        let mut s = DecodeStats::default();
+        let mut r = round(3, 2, vec![1.0, 1.0, 0.3, 0.9, 0.1]);
+        r.branches = 4;
+        s.absorb(&r);
+        assert_eq!(s.proposals, 12, "gamma * k proposals drafted");
+        assert_eq!(s.draft_calls, 12);
+        assert_eq!(s.branches_verified, 4);
+        assert_eq!(s.target_calls, 4, "one verify extend per branch");
+        // Classic rounds keep branches_verified == rounds.
+        s.absorb(&round(3, 3, vec![1.0; 3]));
+        assert_eq!(s.branches_verified, 5);
+        assert_eq!(s.rounds, 2);
     }
 
     #[test]

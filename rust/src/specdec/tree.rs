@@ -1,0 +1,562 @@
+//! Tree speculation: k candidate draft trajectories per round, longest
+//! accepted branch committed.
+//!
+//! The paper verifies a single draft trajectory per speculative round;
+//! Speculative Streaming (Bhendawade et al.) and SpecDec (Xia et al.)
+//! showed that verifying *k* candidate continuations of the same prefix
+//! materially lengthens the accepted run — a rejection on one branch no
+//! longer ends the round if a sibling survived deeper. This module
+//! generalizes the engine along that axis:
+//!
+//! 1. **Draft**: the source produces k candidate blocks per round via
+//!    [`super::draft::DraftSource::propose_k`] — k distinct sample paths
+//!    for a model-backed draft, k σ-perturbed continuations for the
+//!    closed-form sources. All branches fork the *committed* prefix.
+//! 2. **Verify**: each branch's γ+1 prefix conditionals are validated in
+//!    a single target `extend` (the batched verify), and the branches
+//!    share the committed prefix's KV cache — between branches the
+//!    session is forked by `rollback(γ)`, the same machinery rejection
+//!    already uses, so no prefix work is ever recomputed.
+//! 3. **Commit**: each branch runs the standard acceptance scan (its own
+//!    uniforms, in branch order); the branch with the longest accepted
+//!    run wins (ties to the lowest index), its accepted prefix is
+//!    committed under the usual emission protocol, and the final
+//!    bonus/fallback patch comes from the winner's target rows.
+//!
+//! **The k = 1 equivalence wall.** At `k = 1` every step above collapses
+//! to the classic loop — same RNG stream, same session-operation
+//! sequence, same emitted bits (`tests/tree_equivalence.rs` pins this
+//! across backends × cache × variants × emissions). That wall is why the
+//! lossless variant is *restricted* to k = 1: Theorems 1–2 are statements
+//! about the single-trajectory chain, and picking the argmax of k
+//! acceptance scans re-weights the emitted law in a way the residual
+//! coupling does not correct. `k > 1` therefore requires
+//! [`Variant::Practical`]; a lossless request with `k > 1` (or an
+//! adaptive controller allowed to choose `k > 1`) is a validation error,
+//! never a silent clamp.
+//!
+//! Expected block length generalizes Eq. 4 to
+//! `E[L_k] = 1 + Σ_{i=1..γ} (1 − (1 − αⁱ)^k)` (independent-branch
+//! approximation, [`crate::theory::expected_block_length_tree`]), and the
+//! Eq. 5 trade-off picks up a k-multiplied draft cost:
+//! `S = E[L_k] / (c·k·γ + 1)` ([`crate::theory::tree_wall_speedup`]) —
+//! the 2-D (γ × k) surface the [`super::GammaController`] scans when
+//! `adaptive.k_max > 1`.
+
+use std::time::Instant;
+
+use anyhow::Result;
+
+use super::controller::GammaController;
+use super::draft::{make_source, DraftSource, RoundFeedback};
+use super::engine::{emit_from_p, residual_thin, Emission, GammaPlan, SpecConfig, Variant};
+use super::stats::{DecodeOutput, DecodeStats, RoundStats};
+use crate::models::{begin_session, Backend};
+use crate::util::rng::Rng;
+
+/// Hard cap on the branch count — k·γ proposals are drafted and verified
+/// per round, so k is a cost multiplier; 16 is far past the point where
+/// Eq. 5's `c·k·γ + 1` denominator eats the E\[L\] gain.
+pub const MAX_TREE_K: usize = 16;
+
+/// [`super::sd_generate`] with tree speculation: `cfg.k` candidate
+/// branches per round, longest accepted branch committed. At
+/// `cfg.k == 1` this is bit-identical to [`super::sd_generate`].
+pub fn sd_generate_tree(
+    target: &dyn Backend,
+    draft: &dyn Backend,
+    history: &[f32],
+    n_hist: usize,
+    horizon: usize,
+    cfg: &SpecConfig,
+) -> Result<DecodeOutput> {
+    anyhow::ensure!(target.patch() == draft.patch(), "patch mismatch");
+    let mut source = make_source(&cfg.draft, draft)?;
+    sd_generate_tree_from(target, source.as_mut(), history, n_hist, horizon, cfg)
+}
+
+/// [`sd_generate_tree`] over a caller-owned [`DraftSource`] (the source
+/// keeps its learned state across calls, as in
+/// [`super::sd_generate_from`]).
+pub fn sd_generate_tree_from(
+    target: &dyn Backend,
+    source: &mut dyn DraftSource,
+    history: &[f32],
+    n_hist: usize,
+    horizon: usize,
+    cfg: &SpecConfig,
+) -> Result<DecodeOutput> {
+    match cfg.adaptive {
+        Some(acfg) => {
+            acfg.validate()?;
+            if cfg.variant == Variant::Lossless {
+                anyhow::ensure!(
+                    cfg.k == 1 && acfg.k_max == 1,
+                    "lossless exactness is only proven for decodes bit-identical \
+                     to k = 1; tree speculation (k > 1 or adaptive.k_max > 1) \
+                     requires Variant::Practical"
+                );
+            }
+            let mut ctrl = GammaController::new(acfg, cfg.gamma, cfg.policy.sigma);
+            ctrl.seed_k(cfg.k);
+            sd_generate_tree_ctrl(target, source, history, n_hist, horizon, cfg, &mut ctrl)
+        }
+        None => sd_generate_tree_impl(
+            target,
+            source,
+            history,
+            n_hist,
+            horizon,
+            cfg,
+            &mut GammaPlan::Fixed,
+        ),
+    }
+}
+
+/// Tree decode driven by a caller-owned controller (invoked by
+/// [`super::sd_generate_from_with_controller`] whenever the decode might
+/// run a k > 1 round). Lossless compatibility is validated by the caller.
+pub(super) fn sd_generate_tree_ctrl(
+    target: &dyn Backend,
+    source: &mut dyn DraftSource,
+    history: &[f32],
+    n_hist: usize,
+    horizon: usize,
+    cfg: &SpecConfig,
+    ctrl: &mut GammaController,
+) -> Result<DecodeOutput> {
+    ctrl.config().validate()?;
+    sd_generate_tree_impl(
+        target,
+        source,
+        history,
+        n_hist,
+        horizon,
+        cfg,
+        &mut GammaPlan::Controller(ctrl),
+    )
+}
+
+/// The tree decode loop. Structured as [`super::sd_generate`]'s loop with
+/// the propose/verify/commit stages generalized over branches; every
+/// k = 1 round performs the classic loop's exact session-op and RNG
+/// sequence (the equivalence wall).
+fn sd_generate_tree_impl(
+    target: &dyn Backend,
+    source: &mut dyn DraftSource,
+    history: &[f32],
+    n_hist: usize,
+    horizon: usize,
+    cfg: &SpecConfig,
+    plan: &mut GammaPlan<'_>,
+) -> Result<DecodeOutput> {
+    let p = target.patch();
+    anyhow::ensure!(p == source.patch(), "patch mismatch");
+    anyhow::ensure!(n_hist >= 1, "need at least one history patch");
+    anyhow::ensure!(history.len() >= n_hist * p, "history too short");
+    anyhow::ensure!(cfg.gamma >= 1, "gamma >= 1");
+    anyhow::ensure!(
+        cfg.k >= 1 && cfg.k <= MAX_TREE_K,
+        "k must be in [1, {MAX_TREE_K}], got {}",
+        cfg.k
+    );
+    if cfg.variant == Variant::Lossless {
+        anyhow::ensure!(
+            cfg.k == 1,
+            "lossless exactness is only proven for decodes bit-identical \
+             to k = 1; tree speculation (k > 1) requires Variant::Practical"
+        );
+        anyhow::ensure!(
+            (cfg.policy.bias - 1.0).abs() < 1e-12,
+            "lossless exactness requires canonical acceptance (bias = 1)"
+        );
+        anyhow::ensure!(
+            cfg.emission == Emission::Sampled,
+            "lossless exactness (Theorems 1-2) is a statement about the \
+             sampled chain; use Emission::Sampled"
+        );
+    }
+
+    let max_ctx = target.max_ctx().min(source.max_ctx());
+    anyhow::ensure!(
+        cfg.gamma + 1 < max_ctx,
+        "gamma {} cannot fit the joint context window: a round appends \
+         gamma + 1 patches and must keep at least one context patch \
+         (target max_ctx {}, draft max_ctx {}) — lower gamma or raise \
+         the binding side's context",
+        cfg.gamma,
+        target.max_ctx(),
+        source.max_ctx()
+    );
+
+    let mut rng = Rng::new(cfg.seed);
+    let keep0 = n_hist.min(max_ctx);
+    let hist = &history[(n_hist - keep0) * p..n_hist * p];
+    let mut t_sess = begin_session(target, cfg.cache, hist, keep0)?;
+    source.begin(hist, keep0, cfg.cache)?;
+    let upd0 = source.updates();
+    let mut emitted = 0usize;
+    let mut out_patches: Vec<f32> = Vec::with_capacity(horizon * p);
+    let mut rounds = Vec::new();
+    let mut stats = DecodeStats::default();
+
+    while emitted < horizon {
+        let remaining = horizon - emitted;
+        let gamma = plan.desired(cfg, max_ctx).min(remaining.saturating_sub(1));
+        let policy = plan.policy(cfg);
+
+        // Window slide: branches are verified one at a time against the
+        // shared prefix (fork = rollback), so the peak in-session length
+        // is the classic gamma + 1 regardless of k.
+        let need = gamma + 1;
+        let n_ctx_now = t_sess.len();
+        if n_ctx_now + need > max_ctx {
+            anyhow::ensure!(need < max_ctx, "gamma {gamma} cannot fit in max_ctx {max_ctx}");
+            let keep = max_ctx - need;
+            t_sess.evict_to(keep)?;
+            source.evict_to(keep)?;
+        }
+
+        if gamma == 0 {
+            // Horizon tail: plain target AR step — no proposals, so no
+            // branches either (identical to the classic tail).
+            let t0 = Instant::now();
+            let mu_p = t_sess.tip_mean()?;
+            let patch = emit_from_p(&mu_p, policy.sigma, cfg.emission, &mut rng);
+            t_sess.append(&patch, 1)?;
+            let tt = t0.elapsed();
+            let t1 = Instant::now();
+            source.append(&patch, 1)?;
+            let dt = t1.elapsed();
+            out_patches.extend_from_slice(&patch);
+            emitted += 1;
+            let r = RoundStats {
+                gamma: 0,
+                accepted: 0,
+                emitted: 1,
+                alphas: vec![],
+                residual_draws: 0,
+                branches: 1,
+                draft_time: dt,
+                target_time: tt,
+            };
+            plan.observe(&r);
+            stats.absorb(&r);
+            rounds.push(r);
+            continue;
+        }
+
+        let k_round = plan.k_for(cfg).clamp(1, MAX_TREE_K);
+
+        // --- Draft k candidate branches, all forking the committed
+        // prefix, branch j's samples drawn after branch j-1's on the one
+        // decode RNG stream (so branch 0 ≡ the k = 1 draft).
+        let t0 = Instant::now();
+        let blocks = source.propose_k(gamma, k_round, policy.sigma, &mut rng)?;
+        let mut draft_time = t0.elapsed();
+        anyhow::ensure!(
+            blocks.len() == k_round,
+            "draft source returned {} branches for k {k_round}",
+            blocks.len()
+        );
+        for b in &blocks {
+            anyhow::ensure!(
+                b.proposals.len() == gamma && b.mu_qs.len() == gamma,
+                "draft source returned {} proposals for gamma {gamma}",
+                b.proposals.len()
+            );
+        }
+
+        // --- Verify: one target extend per branch returns all γ+1
+        // prefix-conditional means; rolling back γ between branches
+        // forks the next branch off the same cached prefix. The last
+        // branch stays in-session (at k = 1 that reproduces the classic
+        // extend with no extra ops).
+        let t1 = Instant::now();
+        let mut branch_rows: Vec<Vec<f32>> = Vec::with_capacity(k_round);
+        for (j, b) in blocks.iter().enumerate() {
+            let mut flat = Vec::with_capacity(gamma * p);
+            for x in &b.proposals {
+                flat.extend_from_slice(x);
+            }
+            branch_rows.push(t_sess.extend(&flat, gamma)?);
+            if j + 1 < k_round {
+                t_sess.rollback(gamma)?;
+            }
+        }
+        let mut target_time = t1.elapsed();
+
+        // --- Acceptance scan per branch, in branch order, each branch
+        // consuming its own uniforms (at k = 1 this is the classic scan
+        // at the classic stream position). `all_alphas` collects every
+        // evaluated probability for stats; the winner's own alphas feed
+        // the draft source.
+        let mut all_alphas: Vec<f64> = Vec::new();
+        let mut scans: Vec<(usize, Option<usize>, Vec<f64>)> = Vec::with_capacity(k_round);
+        for (j, b) in blocks.iter().enumerate() {
+            let rows = &branch_rows[j];
+            let mut alphas = Vec::with_capacity(gamma);
+            let mut accepted = 0usize;
+            let mut rejected_at: Option<usize> = None;
+            for i in 0..gamma {
+                let a = policy.alpha(&b.proposals[i], &rows[i * p..(i + 1) * p], &b.mu_qs[i]);
+                alphas.push(a);
+                if a >= 1.0 || rng.uniform() < a {
+                    accepted += 1;
+                } else {
+                    rejected_at = Some(i);
+                    break;
+                }
+            }
+            all_alphas.extend_from_slice(&alphas);
+            scans.push((accepted, rejected_at, alphas));
+        }
+
+        // --- Winner: longest accepted run, ties to the lowest branch
+        // index (so k = 1 trivially selects branch 0 and identical
+        // branches behave deterministically).
+        let winner = (0..k_round).max_by_key(|&j| (scans[j].0, usize::MAX - j)).unwrap_or(0);
+        let (accepted, rejected_at, win_alphas) = scans[winner].clone();
+        let wblock = &blocks[winner];
+        let wrows = &branch_rows[winner];
+        let mu_p_at = |i: usize| &wrows[i * p..(i + 1) * p];
+
+        // --- Commit the winner under the usual emission protocol. The
+        // session currently holds the *last* branch's proposals; when the
+        // winner is that branch the classic in-place ops apply verbatim,
+        // otherwise rewind fully and rebuild from the winner's patches.
+        let mut emit_flat: Vec<f32> = Vec::with_capacity(accepted * p);
+        match cfg.emission {
+            Emission::Sampled => {
+                for x in &wblock.proposals[..accepted] {
+                    emit_flat.extend_from_slice(x);
+                }
+                let t2 = Instant::now();
+                if winner == k_round - 1 {
+                    t_sess.rollback(gamma - accepted)?;
+                } else {
+                    t_sess.rollback(gamma)?;
+                    if accepted > 0 {
+                        t_sess.append(&emit_flat, accepted)?;
+                    }
+                }
+                target_time += t2.elapsed();
+            }
+            Emission::Mean => {
+                for m in &wblock.mu_qs[..accepted] {
+                    emit_flat.extend_from_slice(m);
+                }
+                let t2 = Instant::now();
+                t_sess.rollback(gamma)?;
+                if accepted > 0 {
+                    t_sess.append(&emit_flat, accepted)?;
+                }
+                target_time += t2.elapsed();
+            }
+        }
+        out_patches.extend_from_slice(&emit_flat);
+
+        let mut residual_draws = 0usize;
+        let final_patch: Vec<f32> = match rejected_at {
+            None => emit_from_p(mu_p_at(gamma), policy.sigma, cfg.emission, &mut rng),
+            Some(i) => match cfg.variant {
+                Variant::Practical => {
+                    emit_from_p(mu_p_at(i), policy.sigma, cfg.emission, &mut rng)
+                }
+                // Reachable only at k = 1 (validated above), where this
+                // is the classic lossless residual draw.
+                Variant::Lossless => {
+                    let (z, draws) = residual_thin(
+                        mu_p_at(i),
+                        &wblock.mu_qs[i],
+                        policy.sigma,
+                        cfg.max_residual_draws,
+                        &mut rng,
+                    );
+                    residual_draws = draws;
+                    z
+                }
+            },
+        };
+        out_patches.extend_from_slice(&final_patch);
+        let t6 = Instant::now();
+        t_sess.append(&final_patch, 1)?;
+        target_time += t6.elapsed();
+
+        // --- Feed the winner back to the source (its alphas, its target
+        // rows, the committed patches): exactly the classic feedback at
+        // k = 1; for tree rounds the source rebuilds from the committed
+        // block since all branches were rolled back during drafting.
+        let t7 = Instant::now();
+        source.finish_round(&RoundFeedback {
+            gamma,
+            accepted,
+            alphas: &win_alphas,
+            target_means: wrows,
+            committed: &emit_flat,
+            final_patch: &final_patch,
+            sampled: cfg.emission == Emission::Sampled,
+        })?;
+        draft_time += t7.elapsed();
+
+        emitted += accepted + 1;
+
+        let r = RoundStats {
+            gamma,
+            accepted,
+            emitted: accepted + 1,
+            alphas: all_alphas,
+            residual_draws,
+            branches: k_round,
+            draft_time,
+            target_time,
+        };
+        plan.observe(&r);
+        stats.absorb(&r);
+        rounds.push(r);
+    }
+
+    out_patches.truncate(horizon * p);
+    stats.draft_updates = source.updates().saturating_sub(upd0);
+    Ok(DecodeOutput { patches: out_patches, rounds, stats })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{sd_generate, DraftConfig, DraftKind};
+    use super::*;
+    use crate::accept::AcceptancePolicy;
+    use crate::models::{AnalyticBackend, CacheMode};
+
+    fn cfg(gamma: usize, k: usize, sigma: f64, variant: Variant, seed: u64) -> SpecConfig {
+        SpecConfig {
+            gamma,
+            k,
+            policy: AcceptancePolicy::new(sigma, 1.0),
+            variant,
+            seed,
+            max_residual_draws: 10_000,
+            emission: Emission::Sampled,
+            cache: CacheMode::On,
+            draft: DraftConfig::default(),
+            adaptive: None,
+        }
+    }
+
+    #[test]
+    fn k1_tree_is_bitwise_identical_to_classic() {
+        let t = AnalyticBackend::new("t", 2, 0.8, 0.1);
+        let d = AnalyticBackend::new("d", 2, 0.7, 0.15);
+        let hist = [0.5f32, -0.5, 0.2, 0.1, -0.3, 0.4];
+        for variant in [Variant::Practical, Variant::Lossless] {
+            for emission in [Emission::Mean, Emission::Sampled] {
+                if variant == Variant::Lossless && emission == Emission::Mean {
+                    continue;
+                }
+                let mut c = cfg(3, 1, 0.4, variant, 77);
+                c.emission = emission;
+                let classic = sd_generate(&t, &d, &hist, 3, 13, &c).unwrap();
+                let tree = sd_generate_tree(&t, &d, &hist, 3, 13, &c).unwrap();
+                let cb: Vec<u32> = classic.patches.iter().map(|v| v.to_bits()).collect();
+                let tb: Vec<u32> = tree.patches.iter().map(|v| v.to_bits()).collect();
+                assert_eq!(cb, tb, "{variant:?}/{emission:?}");
+                assert_eq!(classic.stats.accepted, tree.stats.accepted);
+                assert_eq!(classic.stats.rounds, tree.stats.rounds);
+                assert_eq!(classic.stats.branches_verified, tree.stats.branches_verified);
+            }
+        }
+    }
+
+    #[test]
+    fn k_gt1_decodes_exact_horizon_and_records_branches() {
+        let t = AnalyticBackend::new("t", 2, 0.8, 0.1);
+        let d = AnalyticBackend::new("d", 2, 0.6, 0.3); // imperfect draft
+        for kind in [DraftKind::Model, DraftKind::Extrap, DraftKind::Adaptive] {
+            for k in [2usize, 4] {
+                let mut c = cfg(3, k, 0.4, Variant::Practical, 5);
+                c.draft.kind = kind;
+                let out = sd_generate_tree(&t, &d, &[0.5, -0.5, 0.2, 0.1], 2, 17, &c).unwrap();
+                assert_eq!(out.patches.len(), 17 * 2, "{kind:?} k={k}");
+                assert!(out.patches.iter().all(|v| v.is_finite()));
+                assert_eq!(out.stats.sum_block_len, 17);
+                // Every proposal round verified k branches.
+                for r in out.rounds.iter().filter(|r| r.gamma > 0) {
+                    assert_eq!(r.branches, k);
+                    assert!(r.accepted <= r.gamma, "block length bound");
+                }
+                let prop_rounds = out.rounds.iter().filter(|r| r.gamma > 0).count();
+                let tail_rounds = out.rounds.len() - prop_rounds;
+                assert_eq!(out.stats.branches_verified, prop_rounds * k + tail_rounds);
+            }
+        }
+    }
+
+    #[test]
+    fn winner_run_lengthens_with_k_on_average() {
+        // Max-of-k accepted runs stochastically dominates the single
+        // run, so the first-round mean accepted length must rise from
+        // k=1 to k=4 over many seeds (rigorous many-seed versions live
+        // in tests/statistical.rs and the tree_speculation bench).
+        let t = AnalyticBackend::new("t", 1, 0.7, 0.2);
+        let d = AnalyticBackend::new("d", 1, 0.5, 0.1);
+        let (mut sum1, mut sum4) = (0usize, 0usize);
+        for seed in 0..60u64 {
+            let c1 = cfg(4, 1, 0.5, Variant::Practical, seed);
+            let c4 = cfg(4, 4, 0.5, Variant::Practical, seed);
+            let o1 = sd_generate_tree(&t, &d, &[0.8], 1, 25, &c1).unwrap();
+            let o4 = sd_generate_tree(&t, &d, &[0.8], 1, 25, &c4).unwrap();
+            sum1 += o1.rounds[0].accepted;
+            sum4 += o4.rounds[0].accepted;
+        }
+        assert!(
+            sum4 > sum1,
+            "k=4 first-round accepted sum {sum4} should beat k=1 sum {sum1}"
+        );
+    }
+
+    #[test]
+    fn lossless_rejects_k_gt1() {
+        let t = AnalyticBackend::new("t", 1, 0.8, 0.0);
+        let d = AnalyticBackend::new("d", 1, 0.7, 0.0);
+        let c = cfg(2, 2, 0.5, Variant::Lossless, 1);
+        let err = sd_generate_tree(&t, &d, &[0.0], 1, 4, &c).unwrap_err();
+        assert!(format!("{err:#}").contains("Practical"), "{err:#}");
+        // k = 1 lossless decodes fine through the tree path.
+        let c1 = cfg(2, 1, 0.5, Variant::Lossless, 1);
+        assert!(sd_generate_tree(&t, &d, &[0.0], 1, 4, &c1).is_ok());
+    }
+
+    #[test]
+    fn k_cap_enforced() {
+        let t = AnalyticBackend::new("t", 1, 0.8, 0.0);
+        let d = AnalyticBackend::new("d", 1, 0.7, 0.0);
+        let c = cfg(2, MAX_TREE_K + 1, 0.5, Variant::Practical, 1);
+        assert!(sd_generate_tree(&t, &d, &[0.0], 1, 4, &c).is_err());
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let t = AnalyticBackend::new("t", 2, 0.8, 0.1);
+        let d = AnalyticBackend::new("d", 2, 0.7, 0.1);
+        let c = cfg(3, 3, 0.4, Variant::Practical, 42);
+        let a = sd_generate_tree(&t, &d, &[0.5, 0.5], 1, 9, &c).unwrap();
+        let b = sd_generate_tree(&t, &d, &[0.5, 0.5], 1, 9, &c).unwrap();
+        assert_eq!(a.patches, b.patches);
+        let mut c2 = c;
+        c2.seed = 43;
+        let e = sd_generate_tree(&t, &d, &[0.5, 0.5], 1, 9, &c2).unwrap();
+        assert_ne!(a.patches, e.patches);
+    }
+
+    #[test]
+    fn routed_through_sd_generate_when_k_set() {
+        // The public entry points route k > 1 configs to the tree loop.
+        let t = AnalyticBackend::new("t", 1, 0.8, 0.1);
+        let d = AnalyticBackend::new("d", 1, 0.6, 0.2);
+        let c = cfg(3, 2, 0.5, Variant::Practical, 3);
+        let via_classic_entry = sd_generate(&t, &d, &[0.4], 1, 11, &c).unwrap();
+        let via_tree_entry = sd_generate_tree(&t, &d, &[0.4], 1, 11, &c).unwrap();
+        assert_eq!(via_classic_entry.patches, via_tree_entry.patches);
+        assert!(via_classic_entry.rounds.iter().any(|r| r.branches == 2));
+    }
+}

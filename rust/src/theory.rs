@@ -32,6 +32,66 @@ pub fn wall_speedup(alpha: f64, gamma: usize, c: f64) -> f64 {
     expected_block_length(alpha, gamma) / (c * gamma as f64 + 1.0)
 }
 
+/// Tree-speculation extension of Eq. 4: expected committed block length
+/// when **k independent** draft trajectories of length γ are verified in
+/// one target pass and the longest accepted branch is committed.
+///
+/// Each branch's accepted run length follows the capped-geometric law of
+/// Eqs. 2–3; the winner is the max of k i.i.d. run lengths, so
+///
+/// ```text
+/// E[L_k] = 1 + Σ_{i=1..γ} P(max run >= i)
+///        = 1 + Σ_{i=1..γ} (1 − (1 − ᾱ^i)^k)
+/// ```
+///
+/// (the leading 1 is the bonus/fallback patch every round emits). At
+/// k = 1 this telescopes back to Eq. 4 exactly — pinned by
+/// `tree_expected_l_reduces_to_eq4`.
+pub fn expected_block_length_tree(alpha: f64, gamma: usize, k: usize) -> f64 {
+    assert!((0.0..=1.0).contains(&alpha), "alpha in [0,1]");
+    assert!(k >= 1, "k >= 1");
+    let mut e = 1.0;
+    for i in 1..=gamma {
+        e += 1.0 - (1.0 - alpha.powi(i as i32)).powi(k as i32);
+    }
+    e
+}
+
+/// Tree-speculation extension of Eq. 5: the draft now proposes k·γ
+/// patches per round (k branches of length γ), so the round cost is
+/// `c·k·γ + 1` target-equivalents and
+///
+/// ```text
+/// S_tree(γ, k) = E[L_k] / (c·k·γ + 1)
+/// ```
+///
+/// At k = 1 this is [`wall_speedup`] verbatim. The batched verify is
+/// modeled as one target pass (the branches share the prefix KV cache and
+/// ride one `extend`), matching the engine's target-call accounting.
+pub fn tree_wall_speedup(alpha: f64, gamma: usize, k: usize, c: f64) -> f64 {
+    expected_block_length_tree(alpha, gamma, k) / (c * (k * gamma) as f64 + 1.0)
+}
+
+/// Joint (γ*, k*) maximizing [`tree_wall_speedup`] over
+/// `γ ∈ [1, gamma_cap] × k ∈ [1, k_cap]` by exhaustive scan — the space
+/// is tiny (≤ 64×16) and the curve is not unimodal in the pair, so a
+/// scan is both simplest and exact. Ties break toward smaller k, then
+/// smaller γ (prefer the cheaper configuration at equal predicted
+/// speedup; in particular plain k = 1 speculation wins all ties).
+pub fn optimal_gamma_k(alpha: f64, c: f64, gamma_cap: usize, k_cap: usize) -> (usize, usize) {
+    let (mut best, mut best_s) = ((1usize, 1usize), f64::MIN);
+    for k in 1..=k_cap.max(1) {
+        for g in 1..=gamma_cap.max(1) {
+            let s = tree_wall_speedup(alpha, g, k, c);
+            if s > best_s {
+                best_s = s;
+                best = (g, k);
+            }
+        }
+    }
+    best
+}
+
 /// OpsFactor = (γ ĉ + γ + 1) / E\[L\] (Eq. 6): extra compute per emitted
 /// patch relative to pure target autoregression (>1 means SD burns more
 /// FLOPs — the price paid for latency).
@@ -253,5 +313,99 @@ mod tests {
     fn lossless_breakeven() {
         assert!(lossless_worthwhile(0.5, 4)); // 0.5 >= 0.25
         assert!(!lossless_worthwhile(0.95, 4)); // 0.05 < 0.25
+    }
+
+    #[test]
+    fn tree_expected_l_reduces_to_eq4() {
+        // k = 1 must reproduce Eq. 4 exactly across the whole (alpha, gamma)
+        // plane: 1 + sum alpha^i is the telescoped geometric sum.
+        check(
+            &Pair(F64Range(0.0, 0.999), UsizeRange(1, 20)),
+            |(alpha, gamma)| {
+                let tree = expected_block_length_tree(*alpha, *gamma, 1);
+                let eq4 = expected_block_length(*alpha, *gamma);
+                if (tree - eq4).abs() < 1e-9 {
+                    Ok(())
+                } else {
+                    Err(format!("tree k=1 {tree} vs Eq.4 {eq4}"))
+                }
+            },
+        );
+        // And the speedup wrapper reduces to Eq. 5.
+        check(
+            &Pair(F64Range(0.05, 0.99), F64Range(0.02, 0.9)),
+            |(alpha, c)| {
+                let t = tree_wall_speedup(*alpha, 4, 1, *c);
+                let w = wall_speedup(*alpha, 4, *c);
+                if (t - w).abs() < 1e-12 {
+                    Ok(())
+                } else {
+                    Err(format!("tree k=1 speedup {t} vs Eq.5 {w}"))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn tree_expected_l_monotone_in_k_and_bounded() {
+        check(
+            &Pair(F64Range(0.01, 0.99), UsizeRange(1, 12)),
+            |(alpha, gamma)| {
+                let mut prev = f64::MIN;
+                for k in 1..=8 {
+                    let e = expected_block_length_tree(*alpha, *gamma, k);
+                    if e < prev - 1e-12 {
+                        return Err(format!("E[L_k] decreased at k={k}: {e} < {prev}"));
+                    }
+                    if !(1.0 - 1e-12..=(*gamma + 1) as f64 + 1e-12).contains(&e) {
+                        return Err(format!("E[L_k]={e} outside [1, gamma+1]"));
+                    }
+                    prev = e;
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn tree_expected_l_matches_max_of_runs_simulation_values() {
+        // Hand-checked point: alpha = 0.5, gamma = 2, k = 2.
+        // P(run >= 1) = 1 - 0.5^2 = 0.75; P(run >= 2) = 1 - 0.75^2 = 0.4375.
+        let e = expected_block_length_tree(0.5, 2, 2);
+        assert!((e - (1.0 + 0.75 + 0.4375)).abs() < 1e-12, "{e}");
+        // Degenerate edges: alpha 0 -> always 1 bonus patch; alpha 1 -> gamma+1.
+        assert!((expected_block_length_tree(0.0, 5, 4) - 1.0).abs() < 1e-12);
+        assert!((expected_block_length_tree(1.0, 5, 4) - 6.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn tree_speedup_tradeoff_and_joint_optimum() {
+        // Branches help E[L] but multiply draft cost: at c = 0 more
+        // branches can only help; at large c they must eventually hurt.
+        assert!(tree_wall_speedup(0.7, 4, 4, 0.0) > tree_wall_speedup(0.7, 4, 1, 0.0));
+        assert!(tree_wall_speedup(0.7, 4, 4, 0.5) < tree_wall_speedup(0.7, 4, 1, 0.5));
+        // Joint optimum: free drafts want the largest tree; expensive
+        // drafts collapse to classic k = 1.
+        let (g_free, k_free) = optimal_gamma_k(0.8, 0.001, 16, 8);
+        assert!(k_free > 1, "near-free draft should branch (got k={k_free})");
+        assert!(g_free >= 4);
+        let (_, k_dear) = optimal_gamma_k(0.5, 0.8, 16, 8);
+        assert_eq!(k_dear, 1, "expensive draft must not branch");
+        // The scan beats (or ties) every config it considered.
+        check(
+            &Pair(F64Range(0.05, 0.99), F64Range(0.01, 0.6)),
+            |(alpha, c)| {
+                let (g, k) = optimal_gamma_k(*alpha, *c, 12, 6);
+                let best = tree_wall_speedup(*alpha, g, k, *c);
+                for kk in 1..=6 {
+                    for gg in 1..=12 {
+                        if tree_wall_speedup(*alpha, gg, kk, *c) > best + 1e-12 {
+                            return Err(format!("scan missed ({gg},{kk}) > ({g},{k})"));
+                        }
+                    }
+                }
+                Ok(())
+            },
+        );
     }
 }

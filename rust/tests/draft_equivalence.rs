@@ -26,6 +26,7 @@ use stride::util::rng::Rng;
 fn cfg(gamma: usize, sigma: f64, variant: Variant, emission: Emission, seed: u64) -> SpecConfig {
     SpecConfig {
         gamma,
+        k: 1,
         policy: AcceptancePolicy::new(sigma, 1.0),
         variant,
         seed,

@@ -15,6 +15,7 @@ use stride::util::json::Json;
 fn spec(sigma: f64, seed: u64) -> SpecConfig {
     SpecConfig {
         gamma: 3,
+        k: 1,
         policy: stride::accept::AcceptancePolicy::new(sigma, 1.0),
         variant: Variant::Practical,
         seed,
@@ -123,6 +124,105 @@ fn server_stats_reflect_acceptance_quality() {
     eprintln!("alpha in-dist {alpha_in:.3}, after OOD burst {alpha_mixed:.3}");
     // Serving never crashes on OOD; acceptance statistics remain finite.
     assert!(alpha_mixed.is_finite());
+}
+
+/// Tree-speculation observability, end to end and artifact-free: a
+/// `"k": 4` request routes through the per-job tree executor and must
+/// (a) return a deterministic, engine-bit-identical forecast, (b) light
+/// up every `stride_tree_*` metric, and (c) fill the `/stats` `"tree"`
+/// block (decode/round/branch counters, the k gauge, and the
+/// winner-depth histogram).
+#[test]
+fn tree_metrics_and_stats_block_light_up() {
+    use stride::models::NativeBackend;
+    use stride::nn::model::tiny_model;
+    use stride::server::{ModelShape, ReplicaBuilder, ReplicaStacks};
+    use stride::specdec::{make_source, sd_generate_tree_from};
+
+    let mut cfg = ServeConfig::default();
+    cfg.bind = "127.0.0.1:0".into();
+    cfg.backend = "native".into();
+    let shape = ModelShape { patch: 4, n_ctx: 8 };
+    let spec_base = cfg.spec_config();
+    let gamma = cfg.gamma;
+    let builder: ReplicaBuilder = Arc::new(move |_r| {
+        Ok(ReplicaStacks {
+            target: Box::new(NativeBackend::new(tiny_model(901))),
+            draft: Box::new(NativeBackend::new(tiny_model(902))),
+        })
+    });
+    let server = Server::start_with_builder(cfg, shape, builder).unwrap();
+    let addr = server.addr().to_string();
+
+    let hist: Vec<f32> = (0..4 * 4).map(|i| (i as f32 * 0.23).sin()).collect();
+    let hist_s: Vec<String> = hist.iter().map(|v| format!("{v}")).collect();
+    let body = format!(
+        r#"{{"history": [{}], "horizon": 6, "k": 4, "seed": 7}}"#,
+        hist_s.join(",")
+    );
+    let r1 = http_request(&addr, "POST", "/forecast", Some(body.as_bytes())).unwrap();
+    assert_eq!(r1.status, 200, "{}", r1.body_str());
+    let r2 = http_request(&addr, "POST", "/forecast", Some(body.as_bytes())).unwrap();
+    assert_eq!(r2.status, 200);
+
+    let forecast_bits = |body: &str| -> Vec<u32> {
+        Json::parse(body)
+            .unwrap()
+            .get("forecast")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|v| (v.as_f64().unwrap() as f32).to_bits())
+            .collect()
+    };
+    let f1 = forecast_bits(r1.body_str());
+    assert_eq!(f1, forecast_bits(r2.body_str()), "seed-pinned tree decode must be deterministic");
+
+    // Engine-level replay: the served tree forecast is a pure function
+    // of the request — identical bits from a solo sd_generate_tree_from
+    // at the same seed (history pre-clamped exactly like the server).
+    let t = NativeBackend::new(tiny_model(901));
+    let d = NativeBackend::new(tiny_model(902));
+    let mut spec = spec_base;
+    spec.k = 4;
+    spec.seed = 7;
+    let keep = (8usize).saturating_sub(gamma + 1).max(1).min(hist.len() / 4);
+    let clamped = &hist[(hist.len() / 4 - keep) * 4..];
+    let mut src = make_source(&spec.draft, &d).unwrap();
+    let solo = sd_generate_tree_from(&t, src.as_mut(), clamped, keep, 6, &spec).unwrap();
+    let solo_bits: Vec<u32> = solo.patches.iter().map(|v| v.to_bits()).collect();
+    assert_eq!(f1, solo_bits, "served tree forecast diverged from the solo engine");
+
+    // /metrics: every tree series must be present after a k > 1 decode.
+    let m = http_request(&addr, "GET", "/metrics", None).unwrap().body_str().to_string();
+    for key in [
+        "stride_tree_decodes",
+        "stride_tree_rounds",
+        "stride_tree_branches_verified",
+        "stride_tree_k",
+        "stride_tree_winner_depth_",
+    ] {
+        assert!(m.contains(key), "missing {key} in /metrics:\n{m}");
+    }
+
+    // /stats: the tree block carries the same story in JSON.
+    let j = Json::parse(http_request(&addr, "GET", "/stats", None).unwrap().body_str()).unwrap();
+    let tree = j.get("tree").expect("/stats must carry a tree block");
+    let decodes = tree.get("decodes").unwrap().as_usize().unwrap();
+    let rounds = tree.get("rounds").unwrap().as_usize().unwrap();
+    let branches = tree.get("branches_verified").unwrap().as_usize().unwrap();
+    assert_eq!(decodes, 2, "two k=4 requests served");
+    assert!(rounds >= 1, "at least one speculative round ran");
+    assert!(branches > rounds, "k=4 rounds verify more branches than rounds");
+    assert_eq!(tree.get("k").unwrap().as_f64(), Some(4.0));
+    let depths = tree.get("winner_depth").unwrap().as_arr().unwrap();
+    assert_eq!(depths.len(), 9, "depth buckets 0..=8");
+    let depth_total: usize = depths.iter().map(|v| v.as_usize().unwrap()).sum();
+    assert!(
+        depth_total >= 1 && depth_total <= rounds,
+        "winner-depth histogram counts tree rounds: {depth_total} vs {rounds}"
+    );
 }
 
 /// Engine-thread resilience: a request that fails validation must not

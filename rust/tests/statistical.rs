@@ -17,6 +17,7 @@ use stride::util::stats::Summary;
 fn spec(gamma: usize, sigma: f64, variant: Variant, seed: u64) -> SpecConfig {
     SpecConfig {
         gamma,
+        k: 1,
         policy: AcceptancePolicy::new(sigma, 1.0),
         variant,
         seed,
@@ -418,6 +419,95 @@ fn adaptive_lossless_still_matches_target_law() {
         "adaptive lossless x3 var {:.4} vs target chain {:.4}",
         s.var(),
         want_var
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Tree-speculation statistics: the k = 1 tree path must inherit every
+// distributional guarantee of the classic engine (it is bit-identical —
+// tests/tree_equivalence.rs — so this is a belt-and-braces check through
+// the statistical lens), and k must buy accepted-run length at the rate
+// the max-of-k generalization of Eq. 4 predicts.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn tree_k1_lossless_matches_target_chain() {
+    // Theorem 2 through the tree loop: at k = 1 the lossless tree decode
+    // reproduces the exact AR(1) target marginal, bad draft and all.
+    use stride::specdec::sd_generate_tree;
+    let a = 0.7f32;
+    let b = 0.1f32;
+    let t = AnalyticBackend::new("t", 1, a, b);
+    let d = AnalyticBackend::new("d", 1, 0.4, -0.2); // bad draft, exactness must hold anyway
+    let sigma = 0.4;
+    let x0 = 0.8f32;
+    let want_mean = (a as f64).powi(3) * x0 as f64
+        + b as f64 * (1.0 + a as f64 + (a as f64).powi(2));
+    let want_var = sigma * sigma * (1.0 + (a as f64).powi(2) + (a as f64).powi(4));
+
+    let mut s = Summary::new();
+    for seed in 0..6000 {
+        let out =
+            sd_generate_tree(&t, &d, &[x0], 1, 3, &spec(2, sigma, Variant::Lossless, seed))
+                .unwrap();
+        s.push(out.patches[2] as f64);
+    }
+    assert!(
+        (s.mean() - want_mean).abs() < 0.03,
+        "tree k=1 lossless x3 mean {:.4} vs target chain {:.4}",
+        s.mean(),
+        want_mean
+    );
+    assert!(
+        (s.var() - want_var).abs() < 0.05,
+        "tree k=1 lossless x3 var {:.4} vs target chain {:.4}",
+        s.var(),
+        want_var
+    );
+}
+
+#[test]
+fn tree_accepted_run_is_monotone_in_k_and_tracks_theory() {
+    // Constant-gap heads give i.i.d. per-step acceptance α, and the k
+    // branches draw independent proposals and uniforms, so the winning
+    // run is the max of k independent capped geometrics:
+    //   E[acc_k] = Σ_{i=1..γ} (1 − (1 − αⁱ)^k)
+    // — exactly `theory::expected_block_length_tree(α, γ, k) − 1`. The
+    // measured first-round mean must track it per k and rise strictly
+    // with k.
+    let patch = 4;
+    let sigma = 0.5;
+    let gap = 0.2f32;
+    let (t, d) = constant_gap_models(patch, gap);
+    let delta = (patch as f64).sqrt() * gap as f64 / sigma;
+    let alpha = stride::util::stats::gaussian_overlap(delta);
+    let gamma = 4;
+    let hist = vec![0.0f32; patch];
+    let n = 2000u64;
+
+    let mut means = Vec::new();
+    for k in [1usize, 2, 4] {
+        let mut total = 0usize;
+        for seed in 0..n {
+            let mut c = spec(gamma, sigma, Variant::Practical, seed);
+            c.k = k;
+            let out =
+                stride::specdec::sd_generate_tree(&t, &d, &hist, 1, gamma + 1, &c).unwrap();
+            total += out.rounds[0].accepted;
+        }
+        let mean = total as f64 / n as f64;
+        let want = theory::expected_block_length_tree(alpha, gamma, k) - 1.0;
+        // SE of a mean of [0, γ]-bounded draws over 2000 trials < 0.03;
+        // allow ~4 SE.
+        assert!(
+            (mean - want).abs() < 0.12,
+            "k={k}: measured mean accepted {mean:.3} vs theory {want:.3} (alpha {alpha:.3})"
+        );
+        means.push(mean);
+    }
+    assert!(
+        means[0] + 0.2 < means[1] && means[1] + 0.2 < means[2],
+        "accepted run must rise strictly with k: {means:?}"
     );
 }
 

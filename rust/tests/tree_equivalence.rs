@@ -1,0 +1,359 @@
+//! Tree-speculation equivalence wall + invariants.
+//!
+//! 1. **The k = 1 equivalence wall.** `sd_generate_tree_from` at k = 1
+//!    must reproduce the classic single-trajectory engine *bit for bit*:
+//!    same RNG stream positions, same session-operation sequence, same
+//!    emitted floats. Pinned across backends (analytic closed-form and
+//!    native transformer) × cache on/off × {Practical, Lossless} ×
+//!    {Mean, Sampled} × draft-source kinds × seeds × γ — including
+//!    horizons that force repeated window slides. The wall is what makes
+//!    k a safe knob: everything k > 1 does is pure extension, never a
+//!    silent change to an existing decode.
+//! 2. **Tree invariants** (proptest_lite):
+//!    * `propose_k`'s branch 0 is the classic `propose` at the same
+//!      stream position, and every branch is a well-formed γ-block;
+//!    * every tree round commits at most γ patches and emits exactly
+//!      `accepted + 1`, the decode fills the horizon exactly, and every
+//!      proposal round verifies exactly k branches;
+//!    * cache on/off bit-identity at any k — the fork-by-rollback used
+//!      to share the committed prefix between branches leaves no KV
+//!      residue behind.
+
+use stride::accept::AcceptancePolicy;
+use stride::models::{AnalyticBackend, CacheMode, NativeBackend};
+use stride::nn::model::tiny_model;
+use stride::specdec::{
+    make_source, sd_generate_from, sd_generate_tree_from, DraftConfig, DraftKind, Emission,
+    SpecConfig, Variant,
+};
+use stride::util::proptest_lite::{check_with, Config, Gen};
+use stride::util::rng::Rng;
+
+fn cfg(
+    gamma: usize,
+    k: usize,
+    sigma: f64,
+    variant: Variant,
+    emission: Emission,
+    seed: u64,
+) -> SpecConfig {
+    SpecConfig {
+        gamma,
+        k,
+        policy: AcceptancePolicy::new(sigma, 1.0),
+        variant,
+        seed,
+        max_residual_draws: 10_000,
+        emission,
+        cache: CacheMode::On,
+        draft: DraftConfig::default(),
+        adaptive: None,
+    }
+}
+
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+/// Every (variant, emission) combo the engine accepts.
+const COMBOS: &[(Variant, Emission)] = &[
+    (Variant::Practical, Emission::Mean),
+    (Variant::Practical, Emission::Sampled),
+    (Variant::Lossless, Emission::Sampled),
+];
+
+/// Run the classic engine and the tree engine (forced through the tree
+/// loop, k = 1) on fresh sources and assert bitwise + stats equality.
+fn assert_wall(
+    target: &dyn stride::models::Backend,
+    draft: &dyn stride::models::Backend,
+    hist: &[f32],
+    n_hist: usize,
+    horizon: usize,
+    c: &SpecConfig,
+    label: &str,
+) {
+    let mut s1 = make_source(&c.draft, draft).unwrap();
+    let classic = sd_generate_from(target, s1.as_mut(), hist, n_hist, horizon, c).unwrap();
+    let mut s2 = make_source(&c.draft, draft).unwrap();
+    let tree = sd_generate_tree_from(target, s2.as_mut(), hist, n_hist, horizon, c).unwrap();
+    assert_eq!(bits(&classic.patches), bits(&tree.patches), "{label}: patches diverged");
+    assert_eq!(classic.stats.rounds, tree.stats.rounds, "{label}: rounds");
+    assert_eq!(classic.stats.proposals, tree.stats.proposals, "{label}: proposals");
+    assert_eq!(classic.stats.accepted, tree.stats.accepted, "{label}: accepted");
+    assert_eq!(
+        classic.stats.branches_verified, tree.stats.branches_verified,
+        "{label}: branches_verified"
+    );
+    let cg: Vec<usize> = classic.rounds.iter().map(|r| r.gamma).collect();
+    let tg: Vec<usize> = tree.rounds.iter().map(|r| r.gamma).collect();
+    assert_eq!(cg, tg, "{label}: per-round gammas");
+    assert!(
+        tree.rounds.iter().all(|r| r.branches == 1),
+        "{label}: a k = 1 decode recorded a multi-branch round"
+    );
+    // The per-round acceptance probabilities are part of the wall too:
+    // identical streams must evaluate identical alphas.
+    for (i, (rc, rt)) in classic.rounds.iter().zip(&tree.rounds).enumerate() {
+        assert_eq!(rc.alphas, rt.alphas, "{label}: round {i} alphas");
+        assert_eq!(rc.accepted, rt.accepted, "{label}: round {i} accepted");
+        assert_eq!(rc.residual_draws, rt.residual_draws, "{label}: round {i} residual draws");
+    }
+}
+
+#[test]
+fn tree_k1_matches_classic_bitwise_analytic_full_matrix() {
+    let t = AnalyticBackend::new("t", 2, 0.8, 0.1);
+    let d = AnalyticBackend::new("d", 2, 0.7, 0.15);
+    let hist = [0.5f32, -0.5, 0.2, 0.1, -0.3, 0.4];
+    for &(variant, emission) in COMBOS {
+        for cache in [CacheMode::On, CacheMode::Off] {
+            for seed in [1u64, 7, 42] {
+                for gamma in [1usize, 2, 3, 5] {
+                    let mut c = cfg(gamma, 1, 0.5, variant, emission, seed);
+                    c.cache = cache;
+                    assert_wall(
+                        &t,
+                        &d,
+                        &hist,
+                        3,
+                        13,
+                        &c,
+                        &format!("{variant:?}/{emission:?}/{cache:?} gamma {gamma} seed {seed}"),
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn tree_k1_matches_classic_bitwise_across_draft_kinds() {
+    let t = AnalyticBackend::new("t", 2, 0.8, 0.1);
+    let d = AnalyticBackend::new("d", 2, 0.72, 0.12);
+    let hist = [0.5f32, -0.5, 0.2, 0.1];
+    for kind in DraftKind::all() {
+        for &(variant, emission) in COMBOS {
+            for seed in [3u64, 19] {
+                let mut c = cfg(3, 1, 0.5, variant, emission, seed);
+                c.draft.kind = *kind;
+                assert_wall(
+                    &t,
+                    &d,
+                    &hist,
+                    2,
+                    11,
+                    &c,
+                    &format!("{kind:?}/{variant:?}/{emission:?} seed {seed}"),
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn tree_k1_matches_classic_bitwise_native_with_window_slides() {
+    // Real transformer pair with a tight context window: horizon 17 at
+    // γ = 3 forces repeated eviction, so the wall also covers the slide
+    // path (evict_to on both sessions mid-decode).
+    let t = NativeBackend::new(tiny_model(31));
+    let d = NativeBackend::new(tiny_model(32));
+    let hist: Vec<f32> = (0..2 * 4).map(|i| (i as f32 * 0.2).sin()).collect();
+    for &(variant, emission) in COMBOS {
+        for cache in [CacheMode::On, CacheMode::Off] {
+            let mut c = cfg(3, 1, 0.4, variant, emission, 11);
+            c.cache = cache;
+            assert_wall(
+                &t,
+                &d,
+                &hist,
+                2,
+                17,
+                &c,
+                &format!("native {variant:?}/{emission:?}/{cache:?}"),
+            );
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Tree invariants (proptest_lite).
+// ---------------------------------------------------------------------------
+
+/// One generated tree case: source kind, γ, k, horizon, history length,
+/// seed, emission flavor.
+#[derive(Clone, Debug)]
+struct TreeCase {
+    kind: usize, // index into DraftKind::all()
+    gamma: usize,
+    k: usize,
+    horizon: usize,
+    n_hist: usize,
+    seed: u64,
+    sampled: bool,
+}
+
+struct TreeGen;
+
+impl Gen for TreeGen {
+    type Value = TreeCase;
+    fn generate(&self, rng: &mut Rng) -> TreeCase {
+        TreeCase {
+            kind: rng.below(DraftKind::all().len()),
+            gamma: 1 + rng.below(4),
+            k: 1 + rng.below(5),
+            horizon: 1 + rng.below(16),
+            n_hist: 1 + rng.below(3),
+            seed: rng.next_u64(),
+            sampled: rng.bernoulli(0.5),
+        }
+    }
+    fn shrink(&self, v: &TreeCase) -> Vec<TreeCase> {
+        let mut out = Vec::new();
+        if v.k > 1 {
+            out.push(TreeCase { k: v.k - 1, ..v.clone() });
+        }
+        if v.gamma > 1 {
+            out.push(TreeCase { gamma: v.gamma - 1, ..v.clone() });
+        }
+        if v.horizon > 1 {
+            out.push(TreeCase { horizon: v.horizon / 2, ..v.clone() });
+        }
+        out
+    }
+}
+
+fn case_cfg(case: &TreeCase) -> SpecConfig {
+    let emission = if case.sampled { Emission::Sampled } else { Emission::Mean };
+    let mut c = cfg(case.gamma, case.k, 0.5, Variant::Practical, emission, case.seed);
+    c.draft.kind = DraftKind::all()[case.kind];
+    c
+}
+
+/// Invariant: `propose_k`'s branch 0 is the classic `propose` at the
+/// same RNG stream position (fresh source, fresh stream), and every
+/// branch is a well-formed γ-block of patch-sized rows.
+#[test]
+fn propose_k_branch0_is_classic_propose() {
+    check_with(Config { cases: 200, seed: 0x7EE1, max_shrink_rounds: 100 }, &TreeGen, |case| {
+        let p = 2usize;
+        let backend = AnalyticBackend::new("d", p, 0.6, 0.2);
+        let dcfg = DraftConfig { kind: DraftKind::all()[case.kind], ..DraftConfig::default() };
+        let hist: Vec<f32> = (0..case.n_hist * p).map(|i| ((i as f32) * 0.3).sin()).collect();
+
+        let mut s1 = make_source(&dcfg, &backend).map_err(|e| e.to_string())?;
+        s1.begin(&hist, case.n_hist, CacheMode::On).map_err(|e| e.to_string())?;
+        let mut r1 = Rng::new(case.seed);
+        let classic = s1.propose(case.gamma, 0.5, &mut r1).map_err(|e| e.to_string())?;
+
+        let mut s2 = make_source(&dcfg, &backend).map_err(|e| e.to_string())?;
+        s2.begin(&hist, case.n_hist, CacheMode::On).map_err(|e| e.to_string())?;
+        let mut r2 = Rng::new(case.seed);
+        let blocks =
+            s2.propose_k(case.gamma, case.k, 0.5, &mut r2).map_err(|e| e.to_string())?;
+
+        if blocks.len() != case.k {
+            return Err(format!("{} branches for k {}", blocks.len(), case.k));
+        }
+        for (j, b) in blocks.iter().enumerate() {
+            if b.proposals.len() != case.gamma || b.mu_qs.len() != case.gamma {
+                return Err(format!("branch {j}: block lengths != gamma {}", case.gamma));
+            }
+            if b.proposals.iter().chain(&b.mu_qs).any(|v| v.len() != p) {
+                return Err(format!("branch {j}: patch-sized rows violated"));
+            }
+        }
+        let b0 = &blocks[0];
+        let same = b0
+            .proposals
+            .iter()
+            .zip(&classic.proposals)
+            .chain(b0.mu_qs.iter().zip(&classic.mu_qs))
+            .all(|(a, b)| bits(a) == bits(b));
+        if !same {
+            return Err("branch 0 diverged from the classic propose".into());
+        }
+        Ok(())
+    });
+}
+
+/// Invariants: a tree decode fills the horizon exactly; every proposal
+/// round commits `accepted <= gamma` and emits `accepted + 1`; every
+/// proposal round verifies exactly k branches; all output is finite.
+#[test]
+fn tree_round_structure_invariants_hold() {
+    check_with(Config { cases: 200, seed: 0x7EE2, max_shrink_rounds: 100 }, &TreeGen, |case| {
+        let p = 2usize;
+        let t = AnalyticBackend::new("t", p, 0.8, 0.1);
+        let d = AnalyticBackend::new("d", p, 0.6, 0.25);
+        let c = case_cfg(case);
+        let hist: Vec<f32> = (0..case.n_hist * p).map(|i| ((i as f32) * 0.3).cos()).collect();
+        let mut src = make_source(&c.draft, &d).map_err(|e| e.to_string())?;
+        let out = sd_generate_tree_from(&t, src.as_mut(), &hist, case.n_hist, case.horizon, &c)
+            .map_err(|e| format!("{e:#}"))?;
+
+        if out.patches.len() != case.horizon * p {
+            return Err(format!("patches {} != horizon*p {}", out.patches.len(), case.horizon * p));
+        }
+        if !out.patches.iter().all(|v| v.is_finite()) {
+            return Err("non-finite output".into());
+        }
+        let mut emitted = 0usize;
+        for (i, r) in out.rounds.iter().enumerate() {
+            if r.accepted > r.gamma {
+                return Err(format!("round {i}: accepted {} > gamma {}", r.accepted, r.gamma));
+            }
+            if r.gamma == 0 {
+                if r.emitted != 1 || r.branches != 1 {
+                    return Err(format!("round {i}: malformed tail round"));
+                }
+            } else {
+                if r.emitted != r.accepted + 1 {
+                    return Err(format!("round {i}: emitted {} != accepted+1", r.emitted));
+                }
+                if r.branches != case.k {
+                    return Err(format!("round {i}: branches {} != k {}", r.branches, case.k));
+                }
+                // All k branches scanned: at least one alpha each up to
+                // k*gamma total.
+                if r.alphas.len() < case.k || r.alphas.len() > case.k * r.gamma {
+                    return Err(format!("round {i}: {} alphas for k {}", r.alphas.len(), case.k));
+                }
+            }
+            emitted += r.emitted;
+        }
+        if emitted < case.horizon {
+            return Err(format!("rounds emitted {emitted} < horizon {}", case.horizon));
+        }
+        Ok(())
+    });
+}
+
+/// Invariant: cache on/off bit-identity at any k. The tree loop forks
+/// branches off the shared committed prefix by `rollback(γ)`; if that
+/// fork left any KV residue behind, the cached decode would diverge from
+/// the stateless re-forward decode.
+#[test]
+fn tree_cache_on_off_bit_identity_any_k() {
+    check_with(Config { cases: 120, seed: 0x7EE3, max_shrink_rounds: 100 }, &TreeGen, |case| {
+        let p = 2usize;
+        let t = AnalyticBackend::new("t", p, 0.8, 0.1);
+        let d = AnalyticBackend::new("d", p, 0.65, 0.2);
+        let hist: Vec<f32> = (0..case.n_hist * p).map(|i| ((i as f32) * 0.4).sin()).collect();
+        let run = |cache: CacheMode| -> Result<Vec<u32>, String> {
+            let mut c = case_cfg(case);
+            c.cache = cache;
+            let mut src = make_source(&c.draft, &d).map_err(|e| e.to_string())?;
+            let out =
+                sd_generate_tree_from(&t, src.as_mut(), &hist, case.n_hist, case.horizon, &c)
+                    .map_err(|e| format!("{e:#}"))?;
+            Ok(bits(&out.patches))
+        };
+        let on = run(CacheMode::On)?;
+        let off = run(CacheMode::Off)?;
+        if on != off {
+            return Err("cache on/off diverged — branch fork left KV residue".into());
+        }
+        Ok(())
+    });
+}

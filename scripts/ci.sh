@@ -80,6 +80,18 @@ if [[ "${1:-}" != "--no-bench" ]]; then
         echo "error: serving_load criteria not met" >&2
         exit 1
     fi
+
+    echo "== tree_speculation smoke (STRIDE_BENCH_QUICK=1) =="
+    # Tree-speculation criteria: the k=4 mean accepted run must be
+    # strictly longer than k=1 overall and in every acceptance regime,
+    # and measured full-gamma runs must track the independent-branch
+    # law E[L_k] - 1 = sum(1 - (1 - alpha^i)^k).
+    STRIDE_BENCH_QUICK=1 cargo bench --bench tree_speculation
+    check_bench_json results/BENCH_tree_speculation.json
+    if ! grep -q '"criteria_met":true' results/BENCH_tree_speculation.json; then
+        echo "error: tree_speculation criteria not met" >&2
+        exit 1
+    fi
 fi
 
 echo "CI OK"
