@@ -9,6 +9,7 @@ use std::path::PathBuf;
 use anyhow::{bail, Context, Result};
 
 use crate::accept::AcceptancePolicy;
+use crate::faultinject::FaultConfig;
 use crate::models::CacheMode;
 use crate::specdec::{AdaptiveConfig, DraftConfig, DraftKind, Emission, SpecConfig, Variant};
 use crate::util::json::Json;
@@ -195,6 +196,14 @@ pub struct ServeConfig {
     pub artifacts: PathBuf,
     /// Base RNG seed (per-decode-group seeds are derived from it).
     pub seed: u64,
+    /// Seeded fault injection (chaos testing; the `"fault"` config
+    /// object). Disabled by default — serving is byte-for-byte the
+    /// non-chaos path unless `fault.enabled` is set.
+    pub fault: FaultConfig,
+    /// Graceful-shutdown drain budget in milliseconds: how long
+    /// `Server::drain` waits for queued jobs to finish (while refusing
+    /// new admissions with HTTP 503) before hard shutdown.
+    pub drain_ms: u64,
 }
 
 impl Default for ServeConfig {
@@ -225,6 +234,8 @@ impl Default for ServeConfig {
             threads: 0,
             artifacts: crate::artifacts_dir(),
             seed: 0xC0FFEE,
+            fault: FaultConfig::default(),
+            drain_ms: 5000,
         }
     }
 }
@@ -272,6 +283,10 @@ impl ServeConfig {
                 "threads" => self.threads = v.as_usize().context("threads")?,
                 "artifacts" => self.artifacts = PathBuf::from(v.as_str().context("artifacts")?),
                 "seed" => self.seed = v.as_usize().context("seed")? as u64,
+                // Chaos plan: an object of fault-injection knobs
+                // (object implies enabled unless "enabled": false).
+                "fault" => self.apply_fault_json(v)?,
+                "drain_ms" => self.drain_ms = v.as_usize().context("drain_ms")? as u64,
                 other => bail!("unknown config key: {other}"),
             }
         }
@@ -299,6 +314,29 @@ impl ServeConfig {
                 "period" => self.draft.period = val.as_usize().context("draft.period")?,
                 "eta" => self.draft.eta = val.as_f64().context("draft.eta")?,
                 other => bail!("unknown draft config key: {other}"),
+            }
+        }
+        Ok(())
+    }
+
+    /// Apply the `"fault"` config value: an object of [`FaultConfig`]
+    /// knobs. An object implies `enabled` unless it carries an explicit
+    /// `"enabled": false` — writing a fault plan into a config is opting
+    /// into chaos.
+    fn apply_fault_json(&mut self, v: &Json) -> Result<()> {
+        let obj = v.as_obj().context("'fault' must be an object of injection knobs")?;
+        let f = &mut self.fault;
+        f.enabled = true;
+        for (k, val) in obj {
+            match k.as_str() {
+                "enabled" => f.enabled = val.as_bool().context("fault.enabled")?,
+                "seed" => f.seed = val.as_usize().context("fault.seed")? as u64,
+                "p_panic" => f.p_panic = val.as_f64().context("fault.p_panic")?,
+                "p_stall" => f.p_stall = val.as_f64().context("fault.p_stall")?,
+                "stall_ms" => f.stall_ms = val.as_usize().context("fault.stall_ms")? as u64,
+                "p_nan" => f.p_nan = val.as_f64().context("fault.p_nan")?,
+                "max_faults" => f.max_faults = val.as_usize().context("fault.max_faults")? as u64,
+                other => bail!("unknown fault config key: {other}"),
             }
         }
         Ok(())
@@ -333,6 +371,22 @@ impl ServeConfig {
                 "alpha_hi" => a.alpha_hi = val.as_f64().context("adaptive.alpha_hi")?,
                 "sigma_step" => a.sigma_step = val.as_f64().context("adaptive.sigma_step")?,
                 "k_max" => a.k_max = val.as_usize().context("adaptive.k_max")?,
+                "breaker" => a.breaker = val.as_bool().context("adaptive.breaker")?,
+                "breaker_alpha_floor" => {
+                    a.breaker_alpha_floor = val.as_f64().context("adaptive.breaker_alpha_floor")?
+                }
+                "breaker_trip_rounds" => {
+                    a.breaker_trip_rounds = val.as_usize().context("adaptive.breaker_trip_rounds")?
+                }
+                "breaker_nf_trip" => {
+                    a.breaker_nf_trip = val.as_usize().context("adaptive.breaker_nf_trip")?
+                }
+                "breaker_cooldown" => {
+                    a.breaker_cooldown = val.as_usize().context("adaptive.breaker_cooldown")?
+                }
+                "breaker_probes" => {
+                    a.breaker_probes = val.as_usize().context("adaptive.breaker_probes")?
+                }
                 other => bail!("unknown adaptive config key: {other}"),
             }
         }
@@ -432,6 +486,9 @@ impl ServeConfig {
         if let Some(v) = cli.get_usize("seed")? {
             self.seed = v as u64;
         }
+        if let Some(v) = cli.get_usize("drain-ms")? {
+            self.drain_ms = v as u64;
+        }
         self.validate()
     }
 
@@ -490,6 +547,9 @@ impl ServeConfig {
             bail!("kernel must be 'fused' or 'pallas'");
         }
         self.draft.validate()?;
+        // Bounds hold whether or not chaos is armed — a config file
+        // carrying a nonsense plan is wrong even with enabled: false.
+        self.fault.validate()?;
         if self.adaptive {
             self.adaptive_cfg.validate()?;
             if self.adaptive_cfg.sigma_adapt {
@@ -789,6 +849,75 @@ mod tests {
             assert_eq!(SchedPolicy::parse(p.as_str()), Some(p));
         }
         assert_eq!(SchedPolicy::parse("lifo"), None);
+    }
+
+    #[test]
+    fn fault_and_drain_plumbing() {
+        // Defaults: chaos off, a real drain budget.
+        let cfg = ServeConfig::default();
+        assert!(!cfg.fault.enabled);
+        assert_eq!(cfg.drain_ms, 5000);
+        cfg.validate().unwrap();
+
+        // Object form implies enabled and sets knobs.
+        let mut cfg = ServeConfig::default();
+        cfg.apply_json(
+            &Json::parse(
+                r#"{"fault": {"seed": 9, "p_panic": 0.01, "p_nan": 0.05,
+                    "stall_ms": 10, "max_faults": 40}, "drain_ms": 250}"#,
+            )
+            .unwrap(),
+        )
+        .unwrap();
+        assert!(cfg.fault.enabled);
+        assert_eq!(cfg.fault.seed, 9);
+        assert!((cfg.fault.p_panic - 0.01).abs() < 1e-12);
+        assert_eq!(cfg.fault.max_faults, 40);
+        assert_eq!(cfg.drain_ms, 250);
+        cfg.validate().unwrap();
+
+        // Explicit enabled: false keeps the knobs but disarms the plan.
+        let mut cfg = ServeConfig::default();
+        cfg.apply_json(&Json::parse(r#"{"fault": {"enabled": false, "p_nan": 0.5}}"#).unwrap())
+            .unwrap();
+        assert!(!cfg.fault.enabled);
+        assert!((cfg.fault.p_nan - 0.5).abs() < 1e-12);
+
+        // Unknown knob and out-of-bounds values are rejected.
+        let mut cfg = ServeConfig::default();
+        assert!(cfg.apply_json(&Json::parse(r#"{"fault": {"nope": 1}}"#).unwrap()).is_err());
+        let mut cfg = ServeConfig::default();
+        cfg.apply_json(&Json::parse(r#"{"fault": {"p_panic": 0.9, "p_nan": 0.9}}"#).unwrap())
+            .unwrap();
+        assert!(cfg.validate().is_err(), "probabilities must form a sub-distribution");
+
+        // CLI drain override.
+        let mut cfg = ServeConfig::default();
+        cfg.apply_cli(&Cli::parse(args("--drain-ms 750")).unwrap()).unwrap();
+        assert_eq!(cfg.drain_ms, 750);
+
+        // Breaker knobs ride the adaptive object (and imply adaptive).
+        let mut cfg = ServeConfig::default();
+        cfg.apply_json(
+            &Json::parse(
+                r#"{"adaptive": {"breaker": true, "breaker_alpha_floor": 0.2,
+                    "breaker_trip_rounds": 4, "breaker_nf_trip": 3,
+                    "breaker_cooldown": 16, "breaker_probes": 2}}"#,
+            )
+            .unwrap(),
+        )
+        .unwrap();
+        assert!(cfg.adaptive);
+        assert!(cfg.adaptive_cfg.breaker);
+        assert!((cfg.adaptive_cfg.breaker_alpha_floor - 0.2).abs() < 1e-12);
+        assert_eq!(cfg.adaptive_cfg.breaker_trip_rounds, 4);
+        assert_eq!(cfg.adaptive_cfg.breaker_nf_trip, 3);
+        assert_eq!(cfg.adaptive_cfg.breaker_cooldown, 16);
+        assert_eq!(cfg.adaptive_cfg.breaker_probes, 2);
+        cfg.validate().unwrap();
+        // Breaker bounds are enforced when armed.
+        cfg.adaptive_cfg.breaker_alpha_floor = 1.5;
+        assert!(cfg.validate().is_err());
     }
 
     #[test]

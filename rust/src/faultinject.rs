@@ -1,0 +1,423 @@
+//! Seeded, config-gated fault injection for the serving stack.
+//!
+//! The paper pitches speculative decoding for latency-sensitive web
+//! serving; a serving tier earns that claim only if its failure modes
+//! are bounded and observable. This module provides the *chaos half* of
+//! that story: a [`FaultPlan`] — off by default, zero-cost when disabled
+//! — that deterministically injects the three failure shapes the
+//! fault-tolerance layer must absorb:
+//!
+//! * **panics** — a model forward aborts mid-decode (replica supervision
+//!   must answer the group and restart the stacks);
+//! * **stalls** — a forward blocks for a bounded interval (deadline
+//!   machinery and the soak's no-hang criterion must absorb it);
+//! * **non-finite outputs** — a forward returns NaN rows (the engine's
+//!   numeric guards must convert them to typed errors before the
+//!   acceptance scan, never serve them).
+//!
+//! Determinism: every injection decision is a pure function of
+//! `(plan seed, site, op index)` via a splitmix64 hash — no global RNG,
+//! no time dependence — so a chaos run is replayable from its config.
+//! The per-op cost when enabled is one relaxed atomic increment plus a
+//! hash; when `FaultConfig::enabled` is false no [`FaultPlan`] is ever
+//! constructed and the hot path is untouched.
+//!
+//! Wiring: the replica pool wraps each replica's backends in
+//! [`FaultyBackend`] when the plan is armed (see `server::sched`), so
+//! faults enter at the session boundary exactly where a misbehaving
+//! model would. [`FaultyBackend::as_native`] intentionally returns
+//! `None`: sessions over a faulty backend route through the stateless
+//! wrapper (observationally identical decodes), which keeps every
+//! forward — cached config or not — flowing through the injection
+//! point.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::Result;
+
+use crate::models::Backend;
+
+/// Which boundary a fault is injected at (also salts the decision hash,
+/// so target and draft streams fault independently under one seed).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultSite {
+    /// The target (verifier) backend's forwards.
+    Target,
+    /// The draft (proposal) backend's forwards.
+    Draft,
+}
+
+impl FaultSite {
+    fn salt(self) -> u64 {
+        match self {
+            FaultSite::Target => 0x7A26_57E7,
+            FaultSite::Draft => 0xD2AF_7001,
+        }
+    }
+
+    /// Stable lowercase label (metrics / logs).
+    pub fn as_str(self) -> &'static str {
+        match self {
+            FaultSite::Target => "target",
+            FaultSite::Draft => "draft",
+        }
+    }
+}
+
+/// One injected fault.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Fault {
+    /// Abort the forward with a panic (replica supervision test).
+    Panic,
+    /// Sleep for the configured interval before the forward proceeds.
+    Stall(Duration),
+    /// Poison the forward's tip row with NaN (numeric-guard test).
+    NonFinite,
+}
+
+/// Fault-injection configuration (a `ServeConfig` sub-object; JSON key
+/// `"fault"`). Disabled by default; validation bounds every knob so a
+/// chaos run cannot wedge the server (stalls are capped, fault budgets
+/// are finite when set).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct FaultConfig {
+    /// Master gate. When false no plan is built and serving is
+    /// byte-for-byte the non-chaos path.
+    pub enabled: bool,
+    /// Seed for the injection schedule (replayability).
+    pub seed: u64,
+    /// Per-forward probability of an injected panic.
+    pub p_panic: f64,
+    /// Per-forward probability of an injected stall.
+    pub p_stall: f64,
+    /// Stall duration in milliseconds (bounded; see [`FaultConfig::validate`]).
+    pub stall_ms: u64,
+    /// Per-forward probability of a NaN-poisoned output row.
+    pub p_nan: f64,
+    /// Hard cap on total injected faults (0 = unlimited). A finite
+    /// budget gives chaos tests a guaranteed-quiescent tail to measure
+    /// recovery against.
+    pub max_faults: u64,
+}
+
+impl Default for FaultConfig {
+    fn default() -> Self {
+        FaultConfig {
+            enabled: false,
+            seed: 0xFA_0175,
+            p_panic: 0.0,
+            p_stall: 0.0,
+            stall_ms: 25,
+            p_nan: 0.0,
+            max_faults: 0,
+        }
+    }
+}
+
+impl FaultConfig {
+    /// Bounds-check the plan: probabilities must form a sub-distribution
+    /// and stalls must be short enough that a faulted forward cannot
+    /// outlive the serving timeout.
+    pub fn validate(&self) -> Result<()> {
+        for (name, p) in
+            [("p_panic", self.p_panic), ("p_stall", self.p_stall), ("p_nan", self.p_nan)]
+        {
+            anyhow::ensure!(
+                p.is_finite() && (0.0..=1.0).contains(&p),
+                "fault {name} must be in [0, 1], got {p}"
+            );
+        }
+        anyhow::ensure!(
+            self.p_panic + self.p_stall + self.p_nan <= 1.0 + 1e-12,
+            "fault probabilities must sum to at most 1"
+        );
+        anyhow::ensure!(
+            self.stall_ms <= 10_000,
+            "fault stall_ms must be <= 10000 (a stalled forward must not \
+             outlive the serving timeout), got {}",
+            self.stall_ms
+        );
+        Ok(())
+    }
+}
+
+fn splitmix64(mut x: u64) -> u64 {
+    x = x.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    let mut z = x;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// A live injection schedule shared by every replica: decisions are
+/// drawn per forward from the seeded hash, counted per kind, and capped
+/// by the configured budget.
+pub struct FaultPlan {
+    cfg: FaultConfig,
+    ops: AtomicU64,
+    injected: AtomicU64,
+    panics: AtomicU64,
+    stalls: AtomicU64,
+    nans: AtomicU64,
+}
+
+impl FaultPlan {
+    /// Build a plan from a validated config. Callers gate on
+    /// `cfg.enabled` — a disabled config never constructs a plan.
+    pub fn new(cfg: FaultConfig) -> Result<Arc<FaultPlan>> {
+        cfg.validate()?;
+        anyhow::ensure!(cfg.enabled, "FaultPlan requires an enabled FaultConfig");
+        Ok(Arc::new(FaultPlan {
+            cfg,
+            ops: AtomicU64::new(0),
+            injected: AtomicU64::new(0),
+            panics: AtomicU64::new(0),
+            stalls: AtomicU64::new(0),
+            nans: AtomicU64::new(0),
+        }))
+    }
+
+    /// The plan's configuration.
+    pub fn config(&self) -> &FaultConfig {
+        &self.cfg
+    }
+
+    /// Total faults injected so far.
+    pub fn injected(&self) -> u64 {
+        self.injected.load(Ordering::Relaxed)
+    }
+
+    /// Injected panics so far.
+    pub fn panics(&self) -> u64 {
+        self.panics.load(Ordering::Relaxed)
+    }
+
+    /// Injected stalls so far.
+    pub fn stalls(&self) -> u64 {
+        self.stalls.load(Ordering::Relaxed)
+    }
+
+    /// Injected NaN poisonings so far.
+    pub fn nans(&self) -> u64 {
+        self.nans.load(Ordering::Relaxed)
+    }
+
+    /// True once the fault budget (when finite) is exhausted — the
+    /// quiescent tail a recovery measurement waits for.
+    pub fn exhausted(&self) -> bool {
+        self.cfg.max_faults > 0 && self.injected() >= self.cfg.max_faults
+    }
+
+    /// Draw the fault decision for the next forward at `site`. Pure in
+    /// `(seed, site, op index)`; respects the fault budget.
+    pub fn draw(&self, site: FaultSite) -> Option<Fault> {
+        let op = self.ops.fetch_add(1, Ordering::Relaxed);
+        if self.cfg.max_faults > 0 && self.injected.load(Ordering::Relaxed) >= self.cfg.max_faults
+        {
+            return None;
+        }
+        let h = splitmix64(self.cfg.seed ^ site.salt().wrapping_mul(0x100_0000_01B3) ^ op);
+        // 53-bit mantissa keeps the u64 -> f64 map uniform on [0, 1).
+        let u = (h >> 11) as f64 / (1u64 << 53) as f64;
+        let fault = if u < self.cfg.p_panic {
+            self.panics.fetch_add(1, Ordering::Relaxed);
+            Some(Fault::Panic)
+        } else if u < self.cfg.p_panic + self.cfg.p_stall {
+            self.stalls.fetch_add(1, Ordering::Relaxed);
+            Some(Fault::Stall(Duration::from_millis(self.cfg.stall_ms)))
+        } else if u < self.cfg.p_panic + self.cfg.p_stall + self.cfg.p_nan {
+            self.nans.fetch_add(1, Ordering::Relaxed);
+            Some(Fault::NonFinite)
+        } else {
+            None
+        };
+        if fault.is_some() {
+            self.injected.fetch_add(1, Ordering::Relaxed);
+        }
+        fault
+    }
+}
+
+/// A [`Backend`] decorator that applies a [`FaultPlan`] to every
+/// forward. Wraps a replica's target/draft stacks when chaos is armed;
+/// never constructed otherwise.
+pub struct FaultyBackend {
+    inner: Box<dyn Backend>,
+    plan: Arc<FaultPlan>,
+    site: FaultSite,
+}
+
+impl FaultyBackend {
+    /// Wrap `inner` so its forwards consult `plan` at `site`.
+    pub fn wrap(inner: Box<dyn Backend>, plan: Arc<FaultPlan>, site: FaultSite) -> Box<dyn Backend> {
+        Box::new(FaultyBackend { inner, plan, site })
+    }
+
+    fn apply(&self, fault: Option<Fault>) -> bool {
+        match fault {
+            Some(Fault::Panic) => {
+                panic!(
+                    "injected fault: panic at {} forward (seeded chaos plan)",
+                    self.site.as_str()
+                );
+            }
+            Some(Fault::Stall(d)) => {
+                std::thread::sleep(d);
+                false
+            }
+            Some(Fault::NonFinite) => true,
+            None => false,
+        }
+    }
+
+    /// Poison the tip row (the last `patch` values of every sequence's
+    /// output) — exactly the row the decode loops read next, so the
+    /// numeric guards must face it.
+    fn poison_tip(&self, out: &mut [f32], rows: usize) {
+        let p = self.inner.patch();
+        if rows == 0 || out.len() < p {
+            return;
+        }
+        let stride = out.len() / rows.max(1);
+        for r in 0..rows {
+            let end = (r + 1) * stride;
+            for v in &mut out[end - p..end] {
+                *v = f32::NAN;
+            }
+        }
+    }
+}
+
+impl Backend for FaultyBackend {
+    fn name(&self) -> &str {
+        self.inner.name()
+    }
+
+    fn patch(&self) -> usize {
+        self.inner.patch()
+    }
+
+    fn max_ctx(&self) -> usize {
+        self.inner.max_ctx()
+    }
+
+    fn forward(&self, tokens: &[f32], n: usize) -> Result<Vec<f32>> {
+        let poison = self.apply(self.plan.draw(self.site));
+        let mut out = self.inner.forward(tokens, n)?;
+        if poison {
+            self.poison_tip(&mut out, 1);
+        }
+        Ok(out)
+    }
+
+    fn forward_batch(&self, tokens: &[f32], b: usize, n: usize) -> Result<Vec<f32>> {
+        let poison = self.apply(self.plan.draw(self.site));
+        let mut out = self.inner.forward_batch(tokens, b, n)?;
+        if poison {
+            self.poison_tip(&mut out, b);
+        }
+        Ok(out)
+    }
+
+    fn mean_secs(&self) -> f64 {
+        self.inner.mean_secs()
+    }
+
+    fn flops(&self, n: usize) -> f64 {
+        self.inner.flops(n)
+    }
+
+    // Intentionally no `as_native` override: sessions over a faulty
+    // backend use the stateless wrapper, keeping every forward on the
+    // injection path.
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::AnalyticBackend;
+
+    fn cfg(p_panic: f64, p_stall: f64, p_nan: f64) -> FaultConfig {
+        FaultConfig {
+            enabled: true,
+            seed: 7,
+            p_panic,
+            p_stall,
+            stall_ms: 1,
+            p_nan,
+            max_faults: 0,
+        }
+    }
+
+    #[test]
+    fn disabled_config_is_rejected_and_validated() {
+        assert!(FaultPlan::new(FaultConfig::default()).is_err());
+        let mut bad = cfg(0.5, 0.4, 0.3);
+        assert!(bad.validate().is_err()); // sums to 1.2
+        bad.p_panic = 0.1;
+        assert!(bad.validate().is_ok());
+        let mut stall = cfg(0.0, 1.0, 0.0);
+        stall.stall_ms = 60_000;
+        assert!(stall.validate().is_err());
+    }
+
+    #[test]
+    fn schedule_is_deterministic_in_seed_and_op_index() {
+        let a = FaultPlan::new(cfg(0.2, 0.2, 0.2)).unwrap();
+        let b = FaultPlan::new(cfg(0.2, 0.2, 0.2)).unwrap();
+        let da: Vec<Option<Fault>> = (0..200).map(|_| a.draw(FaultSite::Target)).collect();
+        let db: Vec<Option<Fault>> = (0..200).map(|_| b.draw(FaultSite::Target)).collect();
+        assert_eq!(da, db);
+        assert!(da.iter().any(|f| f.is_some()), "no faults drawn at p = 0.6");
+        assert!(da.iter().any(|f| f.is_none()), "every op faulted at p = 0.6");
+        // A different seed produces a different schedule.
+        let mut c2 = cfg(0.2, 0.2, 0.2);
+        c2.seed = 8;
+        let c = FaultPlan::new(c2).unwrap();
+        let dc: Vec<Option<Fault>> = (0..200).map(|_| c.draw(FaultSite::Target)).collect();
+        assert_ne!(da, dc);
+    }
+
+    #[test]
+    fn budget_caps_total_injections() {
+        let mut c = cfg(0.0, 0.0, 1.0);
+        c.max_faults = 3;
+        let plan = FaultPlan::new(c).unwrap();
+        let hits = (0..50).filter(|_| plan.draw(FaultSite::Draft).is_some()).count();
+        assert_eq!(hits, 3);
+        assert!(plan.exhausted());
+        assert_eq!(plan.nans(), 3);
+    }
+
+    #[test]
+    fn nan_injection_poisons_only_the_tip_row() {
+        let inner = AnalyticBackend::new("t", 2, 0.8, 0.1);
+        let mut c = cfg(0.0, 0.0, 1.0);
+        c.max_faults = 1;
+        let plan = FaultPlan::new(c).unwrap();
+        let b = FaultyBackend::wrap(Box::new(inner), plan.clone(), FaultSite::Target);
+        let toks = [0.5f32, -0.5, 0.2, 0.1]; // 2 patches of size 2
+        let out = b.forward(&toks, 2).unwrap();
+        assert_eq!(out.len(), 4);
+        assert!(out[..2].iter().all(|v| v.is_finite()), "prefix rows must stay clean");
+        assert!(out[2..].iter().all(|v| v.is_nan()), "tip row must be poisoned");
+        // Budget spent: the next forward is clean.
+        let out2 = b.forward(&toks, 2).unwrap();
+        assert!(out2.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn panic_fault_panics_with_a_recognizable_message() {
+        let inner = AnalyticBackend::new("t", 1, 0.8, 0.0);
+        let plan = FaultPlan::new(cfg(1.0, 0.0, 0.0)).unwrap();
+        let b = FaultyBackend::wrap(Box::new(inner), plan, FaultSite::Draft);
+        let err = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let _ = b.forward(&[0.1f32], 1);
+        }))
+        .unwrap_err();
+        let msg = err.downcast_ref::<String>().cloned().unwrap_or_default();
+        assert!(msg.contains("injected fault"), "{msg}");
+    }
+}

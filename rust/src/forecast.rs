@@ -46,6 +46,7 @@ pub fn ar_decode_with(
     let mut calls = 0usize;
     for _ in 0..horizon {
         let mu = sess.tip_mean()?;
+        crate::specdec::ensure_finite(&mu, "AR tip mean")?;
         calls += 1;
         out.extend_from_slice(&mu);
         // Sessions slide their window internally at max_ctx, matching the
@@ -72,6 +73,7 @@ pub fn ar_decode_stochastic(
     let mut out = Vec::with_capacity(horizon * p);
     for _ in 0..horizon {
         let mu = sess.tip_mean()?;
+        crate::specdec::ensure_finite(&mu, "AR tip mean")?;
         let mut x = vec![0.0f32; p];
         rng.fill_normal_around(&mu, sigma as f32, &mut x);
         out.extend_from_slice(&x);
@@ -101,6 +103,7 @@ pub fn ar_decode_batch(
     let mut outs: Vec<Vec<f32>> = vec![Vec::with_capacity(horizon * p); tasks.len()];
     for _ in 0..horizon {
         let mus = bs.tip_means(&idx)?;
+        crate::specdec::ensure_finite(&mus, "batched AR tip means")?;
         for (ai, &i) in idx.iter().enumerate() {
             let mu = &mus[ai * p..(ai + 1) * p];
             outs[i].extend_from_slice(mu);

@@ -3,10 +3,24 @@
 //! the rates we generate (the server supports keep-alive, the loadgen
 //! measures end-to-end latency including connect, which is what a web
 //! client would see).
+//!
+//! Every request carries connect/read/write timeouts, so a stalled or
+//! dying server cannot hang a caller. [`http_request_retry`] adds a
+//! bounded, seeded-jitter exponential backoff that honors the server's
+//! `Retry-After` hint on 429/503 — the client-side half of the serving
+//! tier's shed/drain protocol — and gives up with a typed
+//! [`RetryError`] instead of retrying forever.
 
 use std::io::{BufRead, BufReader, Read, Write};
-use std::net::TcpStream;
+use std::net::{TcpStream, ToSocketAddrs};
 use std::time::Duration;
+
+use crate::util::rng::uniform01;
+
+/// Connect timeout for every request (a dead host fails fast).
+const CONNECT_TIMEOUT: Duration = Duration::from_secs(10);
+/// Read/write timeouts (a stalled server cannot hang the caller).
+const IO_TIMEOUT: Duration = Duration::from_secs(60);
 
 /// A received HTTP response.
 #[derive(Clone, Debug)]
@@ -33,8 +47,13 @@ pub fn http_request(
     path: &str,
     body: Option<&[u8]>,
 ) -> std::io::Result<HttpResponse> {
-    let mut stream = TcpStream::connect(addr)?;
-    stream.set_read_timeout(Some(Duration::from_secs(60)))?;
+    let sock = addr
+        .to_socket_addrs()?
+        .next()
+        .ok_or_else(|| std::io::Error::new(std::io::ErrorKind::InvalidInput, "unresolvable addr"))?;
+    let mut stream = TcpStream::connect_timeout(&sock, CONNECT_TIMEOUT)?;
+    stream.set_read_timeout(Some(IO_TIMEOUT))?;
+    stream.set_write_timeout(Some(IO_TIMEOUT))?;
     stream.set_nodelay(true)?;
     let body = body.unwrap_or(&[]);
     let head = format!(
@@ -86,4 +105,169 @@ pub fn http_request(
         }
     };
     Ok(HttpResponse { status, headers, body })
+}
+
+/// Backoff policy for [`http_request_retry`]: bounded attempts, capped
+/// exponential backoff, seeded jitter (a fleet of clients retrying the
+/// same shed does not stampede in lockstep, yet every run is
+/// replayable from its seed).
+#[derive(Clone, Copy, Debug)]
+pub struct RetryPolicy {
+    /// Total attempts, first try included (≥ 1).
+    pub attempts: u32,
+    /// Backoff before retry k is `base * 2^(k-1)`, jittered ±50%...
+    pub base_backoff: Duration,
+    /// ...and never more than this cap (which also caps an honored
+    /// `Retry-After`, so a hostile hint cannot park the client).
+    pub max_backoff: Duration,
+    /// Jitter seed: the sleep before retry k is a pure function of
+    /// `(seed, k)`.
+    pub seed: u64,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        RetryPolicy {
+            attempts: 4,
+            base_backoff: Duration::from_millis(50),
+            max_backoff: Duration::from_secs(2),
+            seed: 0x5E7_BAC0FF,
+        }
+    }
+}
+
+impl RetryPolicy {
+    /// Sleep before retry `k` (1-based): capped exponential backoff
+    /// with seeded multiplicative jitter in [0.5, 1.5), overridden by
+    /// the server's `Retry-After` hint (seconds) when one was given —
+    /// still jittered and still capped.
+    fn backoff(&self, k: u32, retry_after_secs: Option<u64>) -> Duration {
+        let base = match retry_after_secs {
+            Some(s) => Duration::from_secs(s),
+            None => self.base_backoff.saturating_mul(1u32 << (k - 1).min(16)),
+        };
+        let jitter = 0.5 + uniform01(self.seed, k as u64);
+        base.min(self.max_backoff).mul_f64(jitter).min(self.max_backoff)
+    }
+}
+
+/// Why [`http_request_retry`] gave up.
+#[derive(Debug)]
+pub enum RetryError {
+    /// Every attempt was answered with a retryable status (429 or 503).
+    /// The last such response is included — its body carries the typed
+    /// `error_code` the server sent.
+    Exhausted {
+        /// Attempts made before giving up.
+        attempts: u32,
+        /// The final retryable response.
+        last: HttpResponse,
+    },
+    /// Every attempt failed at the transport layer (connect/read/write).
+    Io {
+        /// Attempts made before giving up.
+        attempts: u32,
+        /// The final transport error.
+        last: std::io::Error,
+    },
+}
+
+impl std::fmt::Display for RetryError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            RetryError::Exhausted { attempts, last } => write!(
+                f,
+                "gave up after {attempts} attempts; last response was HTTP {}",
+                last.status
+            ),
+            RetryError::Io { attempts, last } => {
+                write!(f, "gave up after {attempts} attempts; last transport error: {last}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for RetryError {}
+
+/// `Retry-After` header of a response, parsed as whole seconds.
+fn retry_after_secs(resp: &HttpResponse) -> Option<u64> {
+    resp.headers
+        .iter()
+        .find(|(k, _)| k.eq_ignore_ascii_case("retry-after"))
+        .and_then(|(_, v)| v.trim().parse().ok())
+}
+
+/// [`http_request`] with bounded retry: 429 (shed) and 503 (draining /
+/// not ready) responses and transport errors are retried under
+/// `policy`'s capped, seeded-jitter backoff — honoring the server's
+/// `Retry-After` hint when present. Any other response (including 4xx
+/// and 500) returns immediately: those are answers, not congestion.
+pub fn http_request_retry(
+    addr: &str,
+    method: &str,
+    path: &str,
+    body: Option<&[u8]>,
+    policy: &RetryPolicy,
+) -> Result<HttpResponse, RetryError> {
+    let attempts = policy.attempts.max(1);
+    let mut k = 0u32;
+    loop {
+        k += 1;
+        match http_request(addr, method, path, body) {
+            Ok(resp) if resp.status == 429 || resp.status == 503 => {
+                if k >= attempts {
+                    return Err(RetryError::Exhausted { attempts: k, last: resp });
+                }
+                std::thread::sleep(policy.backoff(k, retry_after_secs(&resp)));
+            }
+            Ok(resp) => return Ok(resp),
+            Err(e) => {
+                if k >= attempts {
+                    return Err(RetryError::Io { attempts: k, last: e });
+                }
+                std::thread::sleep(policy.backoff(k, None));
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backoff_is_seeded_capped_and_honors_retry_after() {
+        let p = RetryPolicy::default();
+        // Deterministic: same (seed, attempt) -> same sleep.
+        assert_eq!(p.backoff(1, None), p.backoff(1, None));
+        // Jitter keeps the sleep within ±50% of the exponential base.
+        let b1 = p.backoff(1, None).as_secs_f64();
+        let base = p.base_backoff.as_secs_f64();
+        assert!(b1 >= 0.5 * base && b1 < 1.5 * base, "b1 = {b1}");
+        // Exponential growth saturates at the cap...
+        let b30 = p.backoff(30, None);
+        assert!(b30 <= p.max_backoff, "cap bounds the sleep, got {b30:?}");
+        // ...and Retry-After overrides the exponential base but not the cap.
+        let ra = p.backoff(1, Some(3600));
+        assert!(ra <= p.max_backoff, "hostile hint capped, got {ra:?}");
+        // Different seeds de-synchronize clients.
+        let q = RetryPolicy { seed: p.seed ^ 1, ..p };
+        assert_ne!(p.backoff(2, None), q.backoff(2, None));
+    }
+
+    #[test]
+    fn transport_failures_exhaust_into_a_typed_error() {
+        // Reserved port on localhost that nothing listens on; connect
+        // fails instantly, so the retry loop spins through its budget.
+        let p = RetryPolicy {
+            attempts: 3,
+            base_backoff: Duration::from_millis(1),
+            max_backoff: Duration::from_millis(2),
+            seed: 1,
+        };
+        match http_request_retry("127.0.0.1:9", "GET", "/healthz", None, &p) {
+            Err(RetryError::Io { attempts, .. }) => assert_eq!(attempts, 3),
+            other => panic!("expected Io give-up, got {other:?}"),
+        }
+    }
 }

@@ -8,5 +8,5 @@
 mod client;
 mod server;
 
-pub use client::{http_request, HttpResponse};
+pub use client::{http_request, http_request_retry, HttpResponse, RetryError, RetryPolicy};
 pub use server::{HttpServer, Request, Response};

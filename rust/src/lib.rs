@@ -122,12 +122,27 @@
 //!   readiness probe (503 while saturated); `benches/serving_load.rs`
 //!   pins throughput scaling, overload SLO attainment, and the
 //!   determinism contract in `results/BENCH_serving_load.json`.
+//! * [`faultinject`] + the **fault-tolerance layer**: a seeded,
+//!   config-gated chaos plan (panics / stalls / NaN outputs at the
+//!   session boundary), `catch_unwind` replica supervision with typed
+//!   [`server::ServeError::ReplicaFailure`] replies, requeue-once for
+//!   innocent group-mates and stack rebinds over the shared packed
+//!   weights, numeric guards in every decode loop (non-finite model
+//!   output becomes a typed error before the acceptance scan — never a
+//!   served NaN), a speculation **circuit breaker** in the adaptive
+//!   controller (α̂ collapse or a non-finite streak trips serving to
+//!   the pure-AR γ=0 fallback, recovering through half-open probe
+//!   rounds), and graceful drain shutdown (`/healthz` reports
+//!   `"draining"`). `tests/fault_injection.rs` is the chaos suite;
+//!   `benches/chaos_soak.rs` pins no-hang/no-NaN/bounded-recovery in
+//!   `results/BENCH_chaos_soak.json`.
 
 #![warn(missing_docs)]
 
 pub mod accept;
 pub mod config;
 pub mod data;
+pub mod faultinject;
 pub mod forecast;
 pub mod gaussian;
 pub mod http;

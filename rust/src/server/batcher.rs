@@ -16,10 +16,23 @@
 //! The pre-scheduler single-FIFO engine loop is gone; `start_engine`
 //! now stands up the scheduler (queue + replica pool) and returns a
 //! handle with the same surface the HTTP router always used.
+//!
+//! Fault tolerance: every scheduled group runs inside a [`GroupRun`]
+//! holder, so when a decode panics (a real bug, or an injected fault
+//! from [`crate::faultinject`]) the replica's supervisor can still
+//! reach each unreplied job — the poisoned job is answered with a typed
+//! [`ServeError::ReplicaFailure`], innocent group-mates are requeued
+//! exactly once, and no client ever waits out the engine timeout
+//! because a reply channel unwound. Decode errors carrying the engine
+//! numeric guards' "non-finite" marker are counted and reported to the
+//! speculation circuit breaker; while the breaker is open, adaptive
+//! admissions key at γ = 0 and route to [`run_ar_fallback_group`] —
+//! pure-AR service on the target model that ticks the breaker's
+//! cool-down until its half-open probes re-enable speculation.
 
 use std::collections::BTreeMap;
-use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::{mpsc, Arc, Mutex};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Mutex, MutexGuard};
 use std::time::{Duration, Instant};
 
 use anyhow::Result;
@@ -30,14 +43,25 @@ use super::sched::{
     SchedShared,
 };
 use crate::config::ServeConfig;
+use crate::faultinject::FaultPlan;
 use crate::forecast::ar_decode_with;
 use crate::metrics::{AcceptanceMonitor, Metrics};
 use crate::models::{Backend, CacheMode, NativeBackend, XlaBackend};
 use crate::runtime::{Engine, Manifest};
 use crate::specdec::{
     make_batch_source, make_source, sd_generate_stream_seeded, sd_generate_tree_from,
-    DecodeStats, DraftKind, GammaController, SpecConfig,
+    ControllerState, DecodeStats, DraftKind, GammaController, SpecConfig,
 };
+
+/// Lock a shared mutex, tolerating poison: a replica panic (induced by
+/// the chaos plan or a real bug) must not brick the fleet's controller
+/// or draft-head state for every future request. Writers keep the
+/// guarded values internally consistent (worst case: a partially-fed
+/// controller round), which is strictly better than serving errors
+/// forever off a poisoned lock.
+pub(crate) fn lock_ignore_poison<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
 
 /// One queued forecast request plus its reply channel.
 pub struct Job {
@@ -71,6 +95,9 @@ pub struct BatcherHandle {
     /// overrides route jobs to other kinds; `/stats` reports per-kind
     /// aggregates).
     pub draft: DraftKind,
+    /// The live fault-injection schedule, when chaos is armed
+    /// (`ServeConfig::fault.enabled`). `/stats` reports its counters.
+    pub fault: Option<Arc<FaultPlan>>,
 }
 
 impl BatcherHandle {
@@ -155,7 +182,10 @@ impl BatcherHandle {
                     && req.k.is_none()
                     && kind == cfg.draft.kind;
                 let (gamma, k) = if adaptive {
-                    let ctrl = self.controller.as_ref().unwrap().lock().unwrap();
+                    // An open circuit breaker keys adaptive jobs at
+                    // γ = 0 here, routing them to the pure-AR fallback
+                    // group in `execute_batch`.
+                    let ctrl = lock_ignore_poison(self.controller.as_ref().unwrap());
                     (ctrl.gamma_for(self.shape.n_ctx), ctrl.k())
                 } else {
                     (req.gamma.unwrap_or(cfg.gamma), req.k.unwrap_or(cfg.k))
@@ -205,6 +235,20 @@ impl BatcherHandle {
         self.cfg.replicas
     }
 
+    /// Begin a graceful drain: refuse new admissions with a typed
+    /// [`ServeError::Draining`] (HTTP 503) while replicas keep serving
+    /// what is already queued. `/healthz` reports the draining state so
+    /// load balancers stop routing here.
+    pub fn begin_drain(&self) {
+        self.queue.begin_drain();
+        self.metrics.set_gauge("draining", 1.0);
+    }
+
+    /// True once a graceful drain has begun.
+    pub fn draining(&self) -> bool {
+        self.queue.is_draining()
+    }
+
     /// Stop the scheduler: refuse new admissions, fail queued jobs, and
     /// let the replica threads drain out.
     pub fn shutdown(&self) {
@@ -247,6 +291,13 @@ pub fn start_engine_with_builder(
         None
     };
     let draft_kind = cfg.draft.kind;
+    // Arm the chaos plan only when the config gates it on; a disabled
+    // config never constructs a plan and the serving path is untouched.
+    let fault = if cfg.fault.enabled {
+        Some(FaultPlan::new(cfg.fault).map_err(|e| anyhow::anyhow!("fault config: {e:#}"))?)
+    } else {
+        None
+    };
     let cfg = Arc::new(cfg);
     let queue = Arc::new(AdmissionQueue::new(
         cfg.queue_cap,
@@ -260,7 +311,15 @@ pub fn start_engine_with_builder(
         monitor: monitor.clone(),
         controller: controller.clone(),
         draft_heads: Mutex::new(BTreeMap::new()),
+        fault_plan: fault.clone(),
     });
+    // Pre-register the fault-tolerance ledger so `/metrics` scrapes see
+    // the counters (at 0) and the breaker gauge before any fault fires.
+    for name in ["replica_restarts", "replica_failures", "requeues", "numeric_faults"] {
+        metrics.inc(name, 0);
+    }
+    metrics.set_gauge("breaker_state", 0.0);
+    metrics.set_gauge("draining", 0.0);
     let handles = start_pool(
         Arc::clone(&cfg),
         shape,
@@ -270,7 +329,7 @@ pub fn start_engine_with_builder(
         stop,
     )?;
     Ok((
-        BatcherHandle { cfg, shape, queue, metrics, monitor, controller, draft: draft_kind },
+        BatcherHandle { cfg, shape, queue, metrics, monitor, controller, draft: draft_kind, fault },
         handles,
     ))
 }
@@ -355,6 +414,144 @@ fn observe_served(shared: &SchedShared, qj: &QueuedJob, latency: Duration) {
     }
 }
 
+/// Sentinel: no single job is decoding right now.
+const CURRENT_NONE: usize = usize::MAX;
+/// Sentinel: the whole group is decoding in lockstep — a panic has no
+/// single owner, so every unreplied job takes the requeue-once path.
+pub(crate) const CURRENT_GROUP: usize = usize::MAX - 1;
+
+/// Panic-survivable holder for one scheduled batch. Jobs live in fixed
+/// slots until the instant they are answered, and the executor marks
+/// which slot (or the whole group) is decoding — so when a panic
+/// unwinds through [`execute_batch`], the replica's supervisor can
+/// still reach every unreplied job and give each a typed terminal
+/// outcome. No reply channel is ever dropped on the floor; no client
+/// waits out the engine timeout because a replica crashed.
+pub(crate) struct GroupRun {
+    slots: Mutex<Vec<Option<QueuedJob>>>,
+    current: AtomicUsize,
+    len: usize,
+}
+
+impl GroupRun {
+    /// Wrap one scheduled batch for supervised execution.
+    pub(crate) fn new(jobs: Vec<QueuedJob>) -> GroupRun {
+        let len = jobs.len();
+        GroupRun {
+            slots: Mutex::new(jobs.into_iter().map(Some).collect()),
+            current: AtomicUsize::new(CURRENT_NONE),
+            len,
+        }
+    }
+
+    /// Slot count (taken slots included).
+    fn len(&self) -> usize {
+        self.len
+    }
+
+    /// Mark slot `i` (or [`CURRENT_GROUP`]) as the decode in flight.
+    /// Never hold the slots lock while marked — the decode may panic.
+    fn mark(&self, i: usize) {
+        self.current.store(i, Ordering::Relaxed);
+    }
+
+    /// Clear the in-flight mark after a decode returns.
+    fn clear_mark(&self) {
+        self.current.store(CURRENT_NONE, Ordering::Relaxed);
+    }
+
+    /// Borrow the job in slot `i` for a short, non-panicking read
+    /// (request validation, seed extraction). `None` if already taken.
+    fn with<R>(&self, i: usize, f: impl FnOnce(&QueuedJob) -> R) -> Option<R> {
+        lock_ignore_poison(&self.slots)[i].as_ref().map(f)
+    }
+
+    /// Remove the job in slot `i` — the caller is about to answer it.
+    fn take(&self, i: usize) -> Option<QueuedJob> {
+        lock_ignore_poison(&self.slots)[i].take()
+    }
+
+    /// Take slot `i` and send it `r` (no-op if already answered).
+    fn reply(&self, i: usize, r: Result<ForecastResponse, ServeError>) {
+        if let Some(qj) = self.take(i) {
+            let _ = qj.job.reply.send(r);
+        }
+    }
+
+    /// Answer every job still held after a panic unwound the executor.
+    /// The job that was decoding — when one is identifiable — gets a
+    /// typed [`ServeError::ReplicaFailure`] (it poisoned the replica;
+    /// retrying it would crash the next one too). Every other job is
+    /// requeued exactly once; a second strike fails it the same way, so
+    /// one deterministic poison job can take down at most two decode
+    /// attempts, never the fleet.
+    pub(crate) fn recover_after_panic(
+        &self,
+        key: GroupKey,
+        queue: &AdmissionQueue,
+        shared: &SchedShared,
+        panic_msg: &str,
+    ) {
+        let current = self.current.load(Ordering::Relaxed);
+        let taken: Vec<(usize, QueuedJob)> = {
+            let mut slots = lock_ignore_poison(&self.slots);
+            slots
+                .iter_mut()
+                .enumerate()
+                .filter_map(|(i, s)| s.take().map(|qj| (i, qj)))
+                .collect()
+        };
+        for (i, qj) in taken {
+            if i == current || qj.requeued {
+                shared.metrics.inc("replica_failures", 1);
+                shared.metrics.errors_total.fetch_add(1, Ordering::Relaxed);
+                let _ = qj.job.reply.send(Err(ServeError::ReplicaFailure(format!(
+                    "replica panicked during decode: {panic_msg}"
+                ))));
+            } else {
+                queue.requeue(key, qj);
+            }
+        }
+    }
+}
+
+/// Push the controller's current state to the gauge set (shared by the
+/// lockstep, tree, and breaker-fallback paths).
+fn publish_controller(metrics: &Metrics, s: &ControllerState) {
+    metrics.set_gauge("controller_gamma", s.gamma as f64);
+    metrics.set_gauge("controller_k", s.k as f64);
+    metrics.set_gauge("controller_alpha_hat", s.alpha_hat);
+    metrics.set_gauge("controller_c", s.c);
+    metrics.set_gauge("controller_rounds", s.rounds as f64);
+    metrics.set_gauge("controller_gamma_changes", s.gamma_changes as f64);
+    metrics.set_gauge("controller_k_changes", s.k_changes as f64);
+    metrics.set_gauge("breaker_state", s.breaker.gauge());
+    metrics.set_gauge("breaker_trips", s.breaker_trips as f64);
+}
+
+/// Fold a decode failure into the fault ledger. The engine's numeric
+/// guards tag their errors with a "non-finite" marker (see
+/// `specdec::engine`'s `ensure_finite`); those count as numeric faults
+/// and are reported to the speculation circuit breaker, which may trip
+/// decode to the pure-AR fallback.
+fn note_decode_failure(
+    shared: &SchedShared,
+    controller: Option<&Mutex<GammaController>>,
+    e: &anyhow::Error,
+) {
+    if !format!("{e:#}").contains("non-finite") {
+        return;
+    }
+    shared.metrics.inc("numeric_faults", 1);
+    if let Some(ctrl) = controller {
+        let mut c = lock_ignore_poison(ctrl);
+        c.note_numeric_fault();
+        let s = c.state();
+        drop(c);
+        publish_controller(&shared.metrics, &s);
+    }
+}
+
 /// Execute one scheduled batch on a replica's stacks: a lockstep
 /// speculative decode for an SD group, per-job AR decodes for singles.
 #[allow(clippy::too_many_arguments)]
@@ -364,17 +561,25 @@ pub(crate) fn execute_batch(
     target: &dyn Backend,
     draft: &dyn Backend,
     key: GroupKey,
-    jobs: Vec<QueuedJob>,
+    run: &GroupRun,
     shared: &SchedShared,
     replica: usize,
 ) {
     match key {
         GroupKey::Single => {
-            for qj in jobs {
-                run_single(cfg, shape, target, draft, qj, shared, replica);
+            for i in 0..run.len() {
+                run_single(cfg, shape, target, draft, run, i, shared, replica);
             }
         }
         GroupKey::Sd { gamma, k, sigma_bits, cache, adaptive, kind } => {
+            let ctrl = if adaptive { shared.controller.as_deref() } else { None };
+            // γ = 0 group keys exist only while the speculation circuit
+            // breaker is open (static configs validate γ ≥ 1): serve
+            // pure-AR on the target and tick the breaker's cool-down.
+            if gamma == 0 {
+                run_ar_fallback_group(cfg, shape, target, run, kind, shared, ctrl, replica);
+                return;
+            }
             let mut spec = cfg.spec_config();
             spec.gamma = gamma;
             spec.k = k;
@@ -382,9 +587,8 @@ pub(crate) fn execute_batch(
             spec.cache = if cache { CacheMode::On } else { CacheMode::Off };
             spec.draft.kind = kind;
             spec.adaptive = if adaptive { Some(cfg.adaptive_cfg) } else { None };
-            let ctrl = if adaptive { shared.controller.as_deref() } else { None };
             if k > 1 {
-                run_tree_group(cfg, shape, target, draft, jobs, &spec, shared, ctrl, replica);
+                run_tree_group(cfg, shape, target, draft, run, &spec, shared, ctrl, replica);
             } else {
                 if let Some(a) = spec.adaptive.as_mut() {
                     // The lockstep batched engine spends the batch axis
@@ -395,7 +599,7 @@ pub(crate) fn execute_batch(
                     // tree path above.
                     a.k_max = 1;
                 }
-                run_sd_group(cfg, shape, target, draft, jobs, &spec, shared, ctrl, replica);
+                run_sd_group(cfg, shape, target, draft, run, &spec, shared, ctrl, replica);
             }
         }
     }
@@ -407,50 +611,48 @@ fn run_sd_group(
     shape: ModelShape,
     target: &dyn Backend,
     draft: &dyn Backend,
-    jobs: Vec<QueuedJob>,
+    run: &GroupRun,
     spec: &SpecConfig,
     shared: &SchedShared,
     controller: Option<&Mutex<GammaController>>,
     replica: usize,
 ) {
     let metrics = &shared.metrics;
-    // Validate all; drop invalid with error replies.
-    let mut ok_jobs: Vec<QueuedJob> = Vec::new();
-    let mut preps: Vec<(Vec<f32>, usize, usize)> = Vec::new();
-    for qj in jobs {
-        match prep(&qj.job.req, shape, spec.gamma) {
-            Ok(p) => {
-                preps.push(p);
-                ok_jobs.push(qj);
-            }
+    // Validate all; drop invalid with error replies. Surviving jobs stay
+    // in their holder slots (tracked by index) until answered.
+    let mut ok: Vec<(usize, Vec<f32>, usize, usize, u64)> = Vec::new();
+    for i in 0..run.len() {
+        let Some((prep_res, seed)) = run.with(i, |qj| {
+            (prep(&qj.job.req, shape, spec.gamma), qj.job.req.seed.unwrap_or(cfg.seed))
+        }) else {
+            continue;
+        };
+        match prep_res {
+            Ok((hist, n, hz)) => ok.push((i, hist, n, hz, seed)),
             Err(e) => {
                 metrics.errors_total.fetch_add(1, Ordering::Relaxed);
-                let _ = qj.job.reply.send(Err(ServeError::Invalid(e)));
+                run.reply(i, Err(ServeError::Invalid(e)));
             }
         }
     }
-    if ok_jobs.is_empty() {
+    if ok.is_empty() {
         return;
     }
     let tasks: Vec<(&[f32], usize, usize)> =
-        preps.iter().map(|(h, n, hz)| (h.as_slice(), *n, *hz)).collect();
+        ok.iter().map(|(_, h, n, hz, _)| (h.as_slice(), *n, *hz)).collect();
     // One decode seed per request: the response becomes a pure function
     // of the request, independent of batching, replica count, and
     // arrival order (the scheduler's determinism contract).
-    let seeds: Vec<u64> =
-        ok_jobs.iter().map(|qj| qj.job.req.seed.unwrap_or(cfg.seed)).collect();
+    let seeds: Vec<u64> = ok.iter().map(|(_, _, _, _, s)| *s).collect();
     // Build the group's draft source explicitly so learned state can be
     // threaded across groups and replicas: seed fresh sources with the
     // fleet's current merged head, merge the export back after.
     let mut source = match make_batch_source(&spec.draft, draft) {
         Ok(s) => s,
         Err(e) => {
-            for qj in ok_jobs {
+            for (i, ..) in ok {
                 metrics.errors_total.fetch_add(1, Ordering::Relaxed);
-                let _ = qj
-                    .job
-                    .reply
-                    .send(Err(ServeError::Internal(format!("draft source failed: {e:#}"))));
+                run.reply(i, Err(ServeError::Internal(format!("draft source failed: {e:#}"))));
             }
             return;
         }
@@ -462,7 +664,14 @@ fn run_sd_group(
         }
     }
     let t0 = Instant::now();
-    match sd_generate_stream_seeded(target, source.as_mut(), &tasks, &seeds, usize::MAX, spec) {
+    // The group decodes in lockstep: a panic in here has no single
+    // identifiable owner, so the group sentinel sends every unreplied
+    // job down the supervisor's requeue-once path.
+    run.mark(CURRENT_GROUP);
+    let decoded =
+        sd_generate_stream_seeded(target, source.as_mut(), &tasks, &seeds, usize::MAX, spec);
+    run.clear_mark();
+    match decoded {
         Ok(outs) => {
             if let Some(h) = source.export_head() {
                 shared.merge_head(spec.draft.kind, h);
@@ -473,7 +682,7 @@ fn run_sd_group(
             // α̂/c, and the next batch's adaptive jobs will key on the
             // possibly-retuned γ — whichever replica they land on.
             if let Some(ctrl) = controller {
-                let mut c = ctrl.lock().unwrap();
+                let mut c = lock_ignore_poison(ctrl);
                 for out in &outs {
                     for r in &out.rounds {
                         c.observe_round(r);
@@ -481,13 +690,7 @@ fn run_sd_group(
                 }
                 let s = c.state();
                 drop(c);
-                metrics.set_gauge("controller_gamma", s.gamma as f64);
-                metrics.set_gauge("controller_k", s.k as f64);
-                metrics.set_gauge("controller_alpha_hat", s.alpha_hat);
-                metrics.set_gauge("controller_c", s.c);
-                metrics.set_gauge("controller_rounds", s.rounds as f64);
-                metrics.set_gauge("controller_gamma_changes", s.gamma_changes as f64);
-                metrics.set_gauge("controller_k_changes", s.k_changes as f64);
+                publish_controller(metrics, &s);
             }
             // Per-draft-source serving aggregates (see PR 4): EWMA α̂/c
             // per kind plus monotone decode/update counts.
@@ -500,7 +703,8 @@ fn run_sd_group(
             metrics.inc(&format!("draft_{kind}_updates"), agg.draft_updates as u64);
             metrics.ewma_gauge(&format!("draft_{kind}_alpha_hat"), agg.alpha_hat(), 0.8);
             metrics.ewma_gauge(&format!("draft_{kind}_c"), agg.cost_ratio(), 0.8);
-            for (qj, out) in ok_jobs.into_iter().zip(outs) {
+            for ((i, _, _, _, seed), out) in ok.into_iter().zip(outs) {
+                let Some(qj) = run.take(i) else { continue };
                 let latency = qj.job.enqueued.elapsed();
                 observe_served(shared, &qj, latency);
                 metrics.observe("decode_latency", batch_wall);
@@ -517,7 +721,7 @@ fn run_sd_group(
                     draft: spec.draft.kind.as_str().into(),
                     priority: qj.priority.as_str().into(),
                     replica,
-                    seed: qj.job.req.seed.unwrap_or(cfg.seed),
+                    seed,
                     latency_ms: latency.as_secs_f64() * 1e3,
                     alpha_hat: alpha,
                     mean_block_len: out.stats.mean_block_len(),
@@ -529,14 +733,90 @@ fn run_sd_group(
             }
         }
         Err(e) => {
-            for qj in ok_jobs {
+            note_decode_failure(shared, controller, &e);
+            for (i, ..) in ok {
                 metrics.errors_total.fetch_add(1, Ordering::Relaxed);
-                let _ = qj
-                    .job
-                    .reply
-                    .send(Err(ServeError::Internal(format!("decode failed: {e:#}"))));
+                run.reply(i, Err(ServeError::Internal(format!("decode failed: {e:#}"))));
             }
         }
+    }
+}
+
+/// Serve a γ = 0 SD group as pure-AR decodes on the target model — the
+/// open circuit breaker's fallback path. Forecast quality is the
+/// target model's own (nothing speculative to get wrong); every served
+/// horizon ticks the breaker's cool-down so it can reach half-open and
+/// probe its way back to speculation.
+#[allow(clippy::too_many_arguments)]
+fn run_ar_fallback_group(
+    cfg: &ServeConfig,
+    shape: ModelShape,
+    target: &dyn Backend,
+    run: &GroupRun,
+    kind: DraftKind,
+    shared: &SchedShared,
+    controller: Option<&Mutex<GammaController>>,
+    replica: usize,
+) {
+    let metrics = &shared.metrics;
+    let mut served = 0u64;
+    let mut rounds_total = 0usize;
+    for i in 0..run.len() {
+        let Some((cache_req, prep_res, seed)) = run.with(i, |qj| {
+            (qj.job.req.cache, prep(&qj.job.req, shape, 1), qj.job.req.seed.unwrap_or(cfg.seed))
+        }) else {
+            continue;
+        };
+        let (hist, n_hist, horizon) = match prep_res {
+            Ok(p) => p,
+            Err(e) => {
+                metrics.errors_total.fetch_add(1, Ordering::Relaxed);
+                run.reply(i, Err(ServeError::Invalid(e)));
+                continue;
+            }
+        };
+        let cache = if cache_req.unwrap_or(cfg.cache) { CacheMode::On } else { CacheMode::Off };
+        run.mark(i);
+        let decoded = ar_decode_with(target, &hist, n_hist, horizon, cache);
+        run.clear_mark();
+        match decoded {
+            Ok((pred, _wall, calls)) => {
+                served += 1;
+                rounds_total += horizon;
+                let Some(qj) = run.take(i) else { continue };
+                let latency = qj.job.enqueued.elapsed();
+                observe_served(shared, &qj, latency);
+                metrics.patches_total.fetch_add(horizon as u64, Ordering::Relaxed);
+                let resp = ForecastResponse {
+                    forecast: pred,
+                    mode: "sd".into(),
+                    draft: kind.as_str().into(),
+                    priority: qj.priority.as_str().into(),
+                    replica,
+                    seed,
+                    latency_ms: latency.as_secs_f64() * 1e3,
+                    alpha_hat: f64::NAN,
+                    mean_block_len: f64::NAN,
+                    rounds: horizon,
+                    draft_calls: 0,
+                    target_calls: calls,
+                };
+                let _ = qj.job.reply.send(Ok(resp));
+            }
+            Err(e) => {
+                note_decode_failure(shared, controller, &e);
+                metrics.errors_total.fetch_add(1, Ordering::Relaxed);
+                run.reply(i, Err(ServeError::Internal(format!("decode failed: {e:#}"))));
+            }
+        }
+    }
+    metrics.inc("breaker_fallback_decodes", served);
+    if let Some(ctrl) = controller {
+        let mut c = lock_ignore_poison(ctrl);
+        c.tick_fallback(rounds_total);
+        let s = c.state();
+        drop(c);
+        publish_controller(metrics, &s);
     }
 }
 
@@ -553,7 +833,7 @@ fn run_tree_group(
     shape: ModelShape,
     target: &dyn Backend,
     draft: &dyn Backend,
-    jobs: Vec<QueuedJob>,
+    run: &GroupRun,
     spec: &SpecConfig,
     shared: &SchedShared,
     controller: Option<&Mutex<GammaController>>,
@@ -562,12 +842,17 @@ fn run_tree_group(
     let metrics = &shared.metrics;
     metrics.set_gauge("tree_k", spec.k as f64);
     let kind = spec.draft.kind.as_str();
-    for qj in jobs {
-        let (hist, n_hist, horizon) = match prep(&qj.job.req, shape, spec.gamma) {
+    for i in 0..run.len() {
+        let Some((prep_res, seed)) = run.with(i, |qj| {
+            (prep(&qj.job.req, shape, spec.gamma), qj.job.req.seed.unwrap_or(cfg.seed))
+        }) else {
+            continue;
+        };
+        let (hist, n_hist, horizon) = match prep_res {
             Ok(p) => p,
             Err(e) => {
                 metrics.errors_total.fetch_add(1, Ordering::Relaxed);
-                let _ = qj.job.reply.send(Err(ServeError::Invalid(e)));
+                run.reply(i, Err(ServeError::Invalid(e)));
                 continue;
             }
         };
@@ -575,10 +860,7 @@ fn run_tree_group(
             Ok(s) => s,
             Err(e) => {
                 metrics.errors_total.fetch_add(1, Ordering::Relaxed);
-                let _ = qj
-                    .job
-                    .reply
-                    .send(Err(ServeError::Internal(format!("draft source failed: {e:#}"))));
+                run.reply(i, Err(ServeError::Internal(format!("draft source failed: {e:#}"))));
                 continue;
             }
         };
@@ -589,10 +871,17 @@ fn run_tree_group(
             }
         }
         let mut job_spec = *spec;
-        job_spec.seed = qj.job.req.seed.unwrap_or(cfg.seed);
+        job_spec.seed = seed;
         let t0 = Instant::now();
-        match sd_generate_tree_from(target, source.as_mut(), &hist, n_hist, horizon, &job_spec) {
+        // Tree decodes are per-job: a panic mid-decode poisons exactly
+        // this slot (the supervisor fails it typed, requeues the rest).
+        run.mark(i);
+        let decoded =
+            sd_generate_tree_from(target, source.as_mut(), &hist, n_hist, horizon, &job_spec);
+        run.clear_mark();
+        match decoded {
             Ok(out) => {
+                let Some(qj) = run.take(i) else { continue };
                 if let Some(h) = source.export_head() {
                     shared.merge_head(spec.draft.kind, h);
                 }
@@ -609,19 +898,13 @@ fn run_tree_group(
                     }
                 }
                 if let Some(ctrl) = controller {
-                    let mut c = ctrl.lock().unwrap();
+                    let mut c = lock_ignore_poison(ctrl);
                     for r in &out.rounds {
                         c.observe_round(r);
                     }
                     let s = c.state();
                     drop(c);
-                    metrics.set_gauge("controller_gamma", s.gamma as f64);
-                    metrics.set_gauge("controller_k", s.k as f64);
-                    metrics.set_gauge("controller_alpha_hat", s.alpha_hat);
-                    metrics.set_gauge("controller_c", s.c);
-                    metrics.set_gauge("controller_rounds", s.rounds as f64);
-                    metrics.set_gauge("controller_gamma_changes", s.gamma_changes as f64);
-                    metrics.set_gauge("controller_k_changes", s.k_changes as f64);
+                    publish_controller(metrics, &s);
                 }
                 metrics.inc(&format!("draft_{kind}_decodes"), 1);
                 metrics.inc(&format!("draft_{kind}_updates"), out.stats.draft_updates as u64);
@@ -654,11 +937,9 @@ fn run_tree_group(
                 let _ = qj.job.reply.send(Ok(resp));
             }
             Err(e) => {
+                note_decode_failure(shared, controller, &e);
                 metrics.errors_total.fetch_add(1, Ordering::Relaxed);
-                let _ = qj
-                    .job
-                    .reply
-                    .send(Err(ServeError::Internal(format!("tree decode failed: {e:#}"))));
+                run.reply(i, Err(ServeError::Internal(format!("tree decode failed: {e:#}"))));
             }
         }
     }
@@ -669,44 +950,66 @@ fn run_single(
     shape: ModelShape,
     target: &dyn Backend,
     draft: &dyn Backend,
-    qj: QueuedJob,
+    run: &GroupRun,
+    i: usize,
     shared: &SchedShared,
     replica: usize,
 ) {
     let metrics = &shared.metrics;
-    let model: &dyn Backend = match qj.job.req.mode {
+    let Some((mode, cache_req, prep_res, seed)) = run.with(i, |qj| {
+        (
+            qj.job.req.mode.clone(),
+            qj.job.req.cache,
+            prep(&qj.job.req, shape, 1),
+            qj.job.req.seed.unwrap_or(cfg.seed),
+        )
+    }) else {
+        return;
+    };
+    let (hist, n_hist, horizon) = match prep_res {
+        Ok(p) => p,
+        Err(e) => {
+            metrics.errors_total.fetch_add(1, Ordering::Relaxed);
+            run.reply(i, Err(ServeError::Invalid(e)));
+            return;
+        }
+    };
+    let model: &dyn Backend = match mode {
         Mode::DraftOnly => draft,
         _ => target,
     };
-    let cache =
-        if qj.job.req.cache.unwrap_or(cfg.cache) { CacheMode::On } else { CacheMode::Off };
-    let result = (|| -> Result<ForecastResponse, ServeError> {
-        let (hist, n_hist, horizon) =
-            prep(&qj.job.req, shape, 1).map_err(ServeError::Invalid)?;
-        let (pred, _wall, calls) = ar_decode_with(model, &hist, n_hist, horizon, cache)
-            .map_err(|e| ServeError::Internal(format!("{e:#}")))?;
-        let latency = qj.job.enqueued.elapsed();
-        observe_served(shared, &qj, latency);
-        metrics.patches_total.fetch_add(horizon as u64, Ordering::Relaxed);
-        Ok(ForecastResponse {
-            forecast: pred,
-            mode: if qj.job.req.mode == Mode::DraftOnly { "draft" } else { "baseline" }.into(),
-            // AR modes draft nothing; the field names the proposal source
-            // of SD decodes only.
-            draft: String::new(),
-            priority: qj.priority.as_str().into(),
-            replica,
-            seed: qj.job.req.seed.unwrap_or(cfg.seed),
-            latency_ms: latency.as_secs_f64() * 1e3,
-            alpha_hat: f64::NAN,
-            mean_block_len: f64::NAN,
-            rounds: horizon,
-            draft_calls: if qj.job.req.mode == Mode::DraftOnly { calls } else { 0 },
-            target_calls: if qj.job.req.mode == Mode::DraftOnly { 0 } else { calls },
-        })
-    })();
-    if result.is_err() {
-        metrics.errors_total.fetch_add(1, Ordering::Relaxed);
+    let cache = if cache_req.unwrap_or(cfg.cache) { CacheMode::On } else { CacheMode::Off };
+    run.mark(i);
+    let decoded = ar_decode_with(model, &hist, n_hist, horizon, cache);
+    run.clear_mark();
+    match decoded {
+        Ok((pred, _wall, calls)) => {
+            let Some(qj) = run.take(i) else { return };
+            let latency = qj.job.enqueued.elapsed();
+            observe_served(shared, &qj, latency);
+            metrics.patches_total.fetch_add(horizon as u64, Ordering::Relaxed);
+            let draft_only = mode == Mode::DraftOnly;
+            let resp = ForecastResponse {
+                forecast: pred,
+                mode: if draft_only { "draft" } else { "baseline" }.into(),
+                // AR modes draft nothing; the field names the proposal
+                // source of SD decodes only.
+                draft: String::new(),
+                priority: qj.priority.as_str().into(),
+                replica,
+                seed,
+                latency_ms: latency.as_secs_f64() * 1e3,
+                alpha_hat: f64::NAN,
+                mean_block_len: f64::NAN,
+                rounds: horizon,
+                draft_calls: if draft_only { calls } else { 0 },
+                target_calls: if draft_only { 0 } else { calls },
+            };
+            let _ = qj.job.reply.send(Ok(resp));
+        }
+        Err(e) => {
+            metrics.errors_total.fetch_add(1, Ordering::Relaxed);
+            run.reply(i, Err(ServeError::Internal(format!("{e:#}"))));
+        }
     }
-    let _ = qj.job.reply.send(result);
 }

@@ -7,14 +7,17 @@
 //!   invalid requests, 500 for decode failures.
 //! * `GET  /healthz`  — **readiness** probe: HTTP 200 `"ready": true`
 //!   normally, HTTP 503 `"ready": false` while the admission queue is
-//!   saturated (external load balancers drain a hot replica on this).
+//!   saturated or the server is draining ahead of shutdown (external
+//!   load balancers drain a hot replica on this).
 //! * `GET  /metrics`  — Prometheus-style metrics text.
 //! * `GET  /stats`    — JSON snapshot (acceptance monitor, latency
 //!   quantiles, per-draft-source aggregates, the adaptive-controller
 //!   state, the `"tree"` block — k > 1 decode counts and the
-//!   winner-depth histogram — and the `"scheduler"` block: policy,
+//!   winner-depth histogram — the `"scheduler"` block: policy,
 //!   replicas, queue depth/cap, shed/expired/steal counts, per-priority
-//!   latency and SLO attainment).
+//!   latency and SLO attainment — and the `"faults"` block: injected
+//!   chaos counters, replica restarts, requeues, numeric faults, and
+//!   the speculation circuit breaker's state).
 //!
 //! The router validates and parses on HTTP worker threads; all model
 //! work happens on the engine replica threads behind the scheduler
@@ -104,6 +107,28 @@ impl Server {
         self.http.addr
     }
 
+    /// Graceful shutdown: stop admitting (new requests get a typed 503
+    /// `"draining"` while `/healthz` reports not-ready), let replicas
+    /// finish what is already queued — up to the `drain_ms` budget —
+    /// then hard-stop. Returns `true` when the queue fully drained
+    /// inside the budget, `false` when jobs were still queued at the
+    /// deadline (they are failed by the hard shutdown, never hung).
+    pub fn drain(&mut self, budget: std::time::Duration) -> bool {
+        self.handle.begin_drain();
+        let deadline = std::time::Instant::now() + budget;
+        let drained = loop {
+            if self.handle.queue_depth() == 0 {
+                break true;
+            }
+            if std::time::Instant::now() >= deadline {
+                break false;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(5));
+        };
+        self.shutdown();
+        drained
+    }
+
     /// Stop accepting, drain the scheduler, and join everything.
     pub fn shutdown(&mut self) {
         self.stop.store(true, Ordering::Relaxed);
@@ -125,11 +150,21 @@ fn route(req: &Request, handle: &BatcherHandle) -> Response {
     match (req.method.as_str(), req.path.as_str()) {
         ("GET", "/healthz") => {
             // Readiness, not just liveness: a saturated admission queue
-            // means this replica should stop receiving traffic.
-            let ready = handle.ready();
+            // or an in-progress drain means this replica should stop
+            // receiving traffic.
+            let draining = handle.draining();
+            let ready = handle.ready() && !draining;
+            let status = if draining {
+                "draining"
+            } else if ready {
+                "ok"
+            } else {
+                "saturated"
+            };
             let body = Json::obj(vec![
-                ("status", Json::from(if ready { "ok" } else { "saturated" })),
+                ("status", Json::from(status)),
                 ("ready", Json::from(ready)),
+                ("draining", Json::from(draining)),
                 ("version", Json::from(crate::VERSION)),
                 ("queue_depth", Json::from(handle.queue_depth())),
                 ("queue_cap", Json::from(handle.queue_cap())),
@@ -143,9 +178,11 @@ fn route(req: &Request, handle: &BatcherHandle) -> Response {
             let mon = &handle.monitor;
             // Live adaptive-controller snapshot (null when adaptation is
             // off): the serving-side view of specdec::ControllerState.
+            let mut breaker_state = None;
             let controller = match &handle.controller {
                 Some(ctrl) => {
-                    let s = ctrl.lock().unwrap().state();
+                    let s = ctrl.lock().unwrap_or_else(|e| e.into_inner()).state();
+                    breaker_state = Some((s.breaker, s.breaker_trips));
                     Json::obj(vec![
                         ("draft", Json::from(s.draft)),
                         ("gamma", Json::from(s.gamma)),
@@ -246,6 +283,41 @@ fn route(req: &Request, handle: &BatcherHandle) -> Response {
                     ]),
                 ));
             }
+            // Fault-tolerance ledger: what chaos injected (null unless a
+            // plan is armed), what the supervisor absorbed, and where
+            // the speculation circuit breaker stands.
+            let injection = match &handle.fault {
+                Some(plan) => Json::obj(vec![
+                    ("injected", Json::from(plan.injected() as usize)),
+                    ("panics", Json::from(plan.panics() as usize)),
+                    ("stalls", Json::from(plan.stalls() as usize)),
+                    ("nans", Json::from(plan.nans() as usize)),
+                    ("exhausted", Json::from(plan.exhausted())),
+                ]),
+                None => Json::Null,
+            };
+            let faults = Json::obj(vec![
+                ("injection", injection),
+                ("replica_restarts", Json::from(m.counter("replica_restarts") as usize)),
+                ("replica_failures", Json::from(m.counter("replica_failures") as usize)),
+                ("requeues", Json::from(m.counter("requeues") as usize)),
+                ("numeric_faults", Json::from(m.counter("numeric_faults") as usize)),
+                (
+                    "breaker",
+                    match breaker_state {
+                        Some((b, trips)) => Json::obj(vec![
+                            ("state", Json::from(b.as_str())),
+                            ("trips", Json::from(trips)),
+                            (
+                                "fallback_decodes",
+                                Json::from(m.counter("breaker_fallback_decodes") as usize),
+                            ),
+                        ]),
+                        None => Json::Null,
+                    },
+                ),
+                ("draining", Json::from(handle.draining())),
+            ]);
             let scheduler = Json::obj(vec![
                 ("policy", Json::from(handle.sched_policy())),
                 ("replicas", Json::from(handle.replicas())),
@@ -273,6 +345,7 @@ fn route(req: &Request, handle: &BatcherHandle) -> Response {
                 ("draft", draft),
                 ("tree", tree),
                 ("scheduler", scheduler),
+                ("faults", faults),
                 ("latency_p50_ms", Json::Num(m.quantile_ms("request_latency", 0.5))),
                 ("latency_p95_ms", Json::Num(m.quantile_ms("request_latency", 0.95))),
                 ("latency_p99_ms", Json::Num(m.quantile_ms("request_latency", 0.99))),

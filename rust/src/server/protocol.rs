@@ -17,7 +17,10 @@
 //! Error responses carry a machine-readable `error_code` alongside the
 //! human `error` message (see [`ServeError`]): `shed` (HTTP 429 with a
 //! `Retry-After` header), `deadline_expired` (HTTP 504 — the job was
-//! never decoded), `invalid` (HTTP 400), `internal` (HTTP 500).
+//! never decoded), `invalid` (HTTP 400), `internal` (HTTP 500),
+//! `replica_failure` (HTTP 500 — the executing replica panicked and was
+//! restarted), `draining` (HTTP 503 — the server is shutting down
+//! gracefully and no longer admits work).
 
 use anyhow::{bail, Context, Result};
 
@@ -90,17 +93,28 @@ pub enum ServeError {
     Invalid(String),
     /// The decode (or the engine) failed. HTTP 500.
     Internal(String),
+    /// The replica executing this job panicked. The job was answered by
+    /// the supervisor (not silently dropped) and the replica's stacks
+    /// were rebuilt over the shared packed weights. HTTP 500 with a
+    /// distinct code so clients can distinguish "my request is poison /
+    /// unlucky" from generic engine failure.
+    ReplicaFailure(String),
+    /// The server is draining ahead of shutdown: in-flight and queued
+    /// jobs still complete, but new work is refused. HTTP 503.
+    Draining,
 }
 
 impl ServeError {
     /// Machine-readable wire code (`shed` / `deadline_expired` /
-    /// `invalid` / `internal`).
+    /// `invalid` / `internal` / `replica_failure` / `draining`).
     pub fn code(&self) -> &'static str {
         match self {
             ServeError::Shed { .. } => "shed",
             ServeError::DeadlineExpired { .. } => "deadline_expired",
             ServeError::Invalid(_) => "invalid",
             ServeError::Internal(_) => "internal",
+            ServeError::ReplicaFailure(_) => "replica_failure",
+            ServeError::Draining => "draining",
         }
     }
 
@@ -111,6 +125,8 @@ impl ServeError {
             ServeError::DeadlineExpired { .. } => 504,
             ServeError::Invalid(_) => 400,
             ServeError::Internal(_) => 500,
+            ServeError::ReplicaFailure(_) => 500,
+            ServeError::Draining => 503,
         }
     }
 
@@ -150,6 +166,12 @@ impl std::fmt::Display for ServeError {
             ),
             ServeError::Invalid(m) => write!(f, "{m}"),
             ServeError::Internal(m) => write!(f, "{m}"),
+            ServeError::ReplicaFailure(m) => {
+                write!(f, "replica failed while executing this request: {m}")
+            }
+            ServeError::Draining => {
+                write!(f, "server is draining ahead of shutdown; not admitting new work")
+            }
         }
     }
 }
@@ -249,6 +271,14 @@ impl ForecastRequest {
             .collect::<Result<_>>()?;
         if history.is_empty() {
             bail!("'history' must be non-empty");
+        }
+        // Numeric guard at the door: NaN/inf history would flow straight
+        // into session prefill and poison every downstream mean. JSON
+        // cannot spell non-finite literals, but permissive parsers
+        // (ours included: 1e999 overflows to inf) can still produce
+        // them — reject here with a 400 instead of decoding garbage.
+        if let Some(pos) = history.iter().position(|v| !v.is_finite()) {
+            bail!("'history' contains a non-finite value at index {pos}");
         }
         let horizon = j.get("horizon").and_then(Json::as_usize).context("'horizon' required")?;
         if horizon == 0 || horizon > 1024 {
@@ -463,6 +493,26 @@ mod tests {
     }
 
     #[test]
+    fn rejects_non_finite_history() {
+        // Rust's f64 parser saturates huge exponents to infinity, so a
+        // permissive client can smuggle inf through syntactically valid
+        // JSON. The parse guard must turn that into a 400, not a decode.
+        let j = Json::parse(r#"{"history": [1.0, 1e999, 2.0], "horizon": 4}"#).unwrap();
+        let err = ForecastRequest::from_json(&j).unwrap_err();
+        assert!(err.to_string().contains("non-finite"), "got: {err:#}");
+        assert!(err.to_string().contains("index 1"), "got: {err:#}");
+        let j = Json::parse(r#"{"history": [-1e999], "horizon": 4}"#).unwrap();
+        assert!(ForecastRequest::from_json(&j).is_err());
+        // Hand-built NaN (unreachable via the wire parser, but the guard
+        // must still hold for programmatic construction).
+        let j = Json::obj(vec![
+            ("history", Json::Arr(vec![Json::Num(f64::NAN)])),
+            ("horizon", Json::Num(4.0)),
+        ]);
+        assert!(ForecastRequest::from_json(&j).is_err());
+    }
+
+    #[test]
     fn response_roundtrips() {
         let resp = ForecastResponse {
             forecast: vec![1.0, 2.0],
@@ -548,6 +598,18 @@ mod tests {
         assert_eq!(ServeError::Invalid("x".into()).http_status(), 400);
         assert_eq!(ServeError::Internal("x".into()).http_status(), 500);
         assert!(ServeError::Invalid("bad gamma".into()).to_string().contains("bad gamma"));
+
+        let e = ServeError::ReplicaFailure("injected fault: panic".into());
+        assert_eq!(e.http_status(), 500);
+        assert_eq!(e.code(), "replica_failure");
+        let j = e.to_json();
+        assert_eq!(j.get("error_code").unwrap().as_str(), Some("replica_failure"));
+        assert!(e.to_string().contains("replica failed"));
+
+        let e = ServeError::Draining;
+        assert_eq!(e.http_status(), 503);
+        assert_eq!(e.code(), "draining");
+        assert_eq!(e.to_json().get("error_code").unwrap().as_str(), Some("draining"));
     }
 
     #[test]

@@ -14,8 +14,20 @@
 //!   snapshot before a decode group and merges its export back
 //!   (elementwise mean with the stored head), so online adaptation is
 //!   pooled across the fleet instead of fragmenting per replica.
+//!
+//! Each decode group is **supervised**: it runs under `catch_unwind`,
+//! so a panic inside a model forward (a bug, or an injected chaos
+//! fault) costs one group, not the replica thread. The supervisor
+//! answers every unreplied job through the [`GroupRun`] holder (typed
+//! failure for the poisoned job, requeue-once for its group-mates),
+//! rebuilds the replica's stacks through the same [`ReplicaBuilder`]
+//! (on the native backend that re-clones `Arc` weight handles — no
+//! floats reload), and keeps draining. When a
+//! [`crate::faultinject::FaultPlan`] is armed, each replica's backends
+//! are wrapped in [`FaultyBackend`] after the warm-up forward.
 
 use std::collections::BTreeMap;
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
 use std::time::Duration;
@@ -23,11 +35,12 @@ use std::time::Duration;
 use anyhow::{Context, Result};
 
 use crate::config::ServeConfig;
+use crate::faultinject::{FaultPlan, FaultSite, FaultyBackend};
 use crate::metrics::{AcceptanceMonitor, Metrics};
 use crate::models::Backend;
 use crate::specdec::{DraftKind, GammaController};
 
-use super::super::batcher::execute_batch;
+use super::super::batcher::{execute_batch, lock_ignore_poison, GroupRun};
 use super::queue::AdmissionQueue;
 use super::ModelShape;
 
@@ -55,12 +68,15 @@ pub struct SchedShared {
     pub controller: Option<Arc<Mutex<GammaController>>>,
     /// Per-kind learned draft-head snapshots, merged across replicas.
     pub draft_heads: Mutex<BTreeMap<DraftKind, Vec<f32>>>,
+    /// Seeded fault-injection schedule, when chaos is armed (`None` in
+    /// normal operation — the hot path never consults it).
+    pub fault_plan: Option<Arc<FaultPlan>>,
 }
 
 impl SchedShared {
     /// Current head snapshot for `kind`, if any replica exported one.
     pub fn head_for(&self, kind: DraftKind) -> Option<Vec<f32>> {
-        self.draft_heads.lock().unwrap().get(&kind).cloned()
+        lock_ignore_poison(&self.draft_heads).get(&kind).cloned()
     }
 
     /// Fold a replica's exported head into the shared snapshot:
@@ -68,7 +84,7 @@ impl SchedShared {
     /// replica's adaptation represented), or replace it on a shape
     /// change.
     pub fn merge_head(&self, kind: DraftKind, head: Vec<f32>) {
-        let mut hs = self.draft_heads.lock().unwrap();
+        let mut hs = lock_ignore_poison(&self.draft_heads);
         match hs.get_mut(&kind) {
             Some(prev) if prev.len() == head.len() => {
                 for (p, h) in prev.iter_mut().zip(&head) {
@@ -83,7 +99,7 @@ impl SchedShared {
 
     /// Drop a stored head (a replica found it stale/mis-shaped).
     pub fn discard_head(&self, kind: DraftKind) {
-        self.draft_heads.lock().unwrap().remove(&kind);
+        lock_ignore_poison(&self.draft_heads).remove(&kind);
     }
 }
 
@@ -137,7 +153,7 @@ pub fn start_pool(
                     stacks.target.name(),
                     stacks.draft.name()
                 )));
-                replica_main(r, &cfg, shape, stacks, &queue, &shared, &stop);
+                replica_main(r, &cfg, shape, stacks, &builder, &queue, &shared, &stop);
             })
             .context("spawning replica thread")?;
         handles.push(handle);
@@ -170,16 +186,43 @@ pub fn start_pool(
     Ok(handles)
 }
 
+/// Wrap a replica's stacks in the chaos decorator when a fault plan is
+/// armed; a no-op (and no wrapper on the hot path) otherwise.
+fn arm(stacks: ReplicaStacks, shared: &SchedShared) -> ReplicaStacks {
+    let Some(plan) = &shared.fault_plan else { return stacks };
+    ReplicaStacks {
+        target: FaultyBackend::wrap(stacks.target, Arc::clone(plan), FaultSite::Target),
+        draft: FaultyBackend::wrap(stacks.draft, Arc::clone(plan), FaultSite::Draft),
+    }
+}
+
+/// Best-effort text of a panic payload (for logs and the typed
+/// `replica_failure` reply).
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
 fn replica_main(
     replica: usize,
     cfg: &ServeConfig,
     shape: ModelShape,
     stacks: ReplicaStacks,
+    builder: &ReplicaBuilder,
     queue: &AdmissionQueue,
     shared: &SchedShared,
     stop: &AtomicBool,
 ) {
     let max_wait = Duration::from_millis(cfg.max_wait_ms);
+    // Arm chaos only after the warm-up forwards, so startup cannot be
+    // killed by its own injection schedule.
+    let mut stacks = arm(stacks, shared);
     loop {
         if stop.load(Ordering::Relaxed) {
             return;
@@ -190,15 +233,33 @@ fn replica_main(
         shared.metrics.inc("batches", 1);
         shared.metrics.inc("batched_jobs", jobs.len() as u64);
         shared.metrics.inc(&format!("replica_{replica}_batches"), 1);
-        execute_batch(
-            cfg,
-            shape,
-            stacks.target.as_ref(),
-            stacks.draft.as_ref(),
-            key,
-            jobs,
-            shared,
-            replica,
-        );
+        let run = GroupRun::new(jobs);
+        let outcome = catch_unwind(AssertUnwindSafe(|| {
+            execute_batch(
+                cfg,
+                shape,
+                stacks.target.as_ref(),
+                stacks.draft.as_ref(),
+                key,
+                &run,
+                shared,
+                replica,
+            );
+        }));
+        if let Err(payload) = outcome {
+            let msg = panic_message(payload.as_ref());
+            log::error!("replica {replica} panicked mid-group, restarting: {msg}");
+            shared.metrics.inc("replica_restarts", 1);
+            run.recover_after_panic(key, queue, shared, &msg);
+            // Rebind to the shared weight store: on the native backend
+            // `replicate()` clones `Arc` handles, so a restart costs
+            // session state, never a weight reload.
+            match builder(replica) {
+                Ok(fresh) => stacks = arm(fresh, shared),
+                Err(e) => log::error!(
+                    "replica {replica} stack rebuild failed, keeping prior stacks: {e:#}"
+                ),
+            }
+        }
     }
 }

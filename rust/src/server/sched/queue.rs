@@ -14,6 +14,13 @@
 //!   priority band desc, deadline asc (absent = infinitely far), arrival
 //!   seq asc under [`SchedPolicy::Edf`]; pure arrival seq under
 //!   [`SchedPolicy::Fifo`].
+//! * A job is requeued **at most once**: when a replica panics mid-group,
+//!   the supervisor puts innocent group-mates back via [`AdmissionQueue::
+//!   requeue`] (cap-exempt — they were already admitted once), and the
+//!   `requeued` flag makes a second failure terminal.
+//! * Draining ([`AdmissionQueue::begin_drain`]) refuses new admissions
+//!   with [`ServeError::Draining`] while replicas keep dispatching the
+//!   backlog — graceful shutdown empties the queue before stopping.
 
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicBool, Ordering as AtomicOrdering};
@@ -68,6 +75,11 @@ pub struct QueuedJob {
     pub deadline_ms: Option<u64>,
     /// Admission sequence number (arrival-order tiebreak).
     pub seq: u64,
+    /// True once this job has been put back after a replica failure.
+    /// The requeue-once policy: a second failure answers the job with
+    /// [`ServeError::ReplicaFailure`] instead of requeuing again, so a
+    /// poison request cannot crash replicas forever.
+    pub requeued: bool,
 }
 
 impl QueuedJob {
@@ -140,6 +152,10 @@ pub struct AdmissionQueue {
     /// the next wakeup even without `shutdown()` (the pre-scheduler
     /// engine loop honored its stop flag the same way).
     stop: Arc<AtomicBool>,
+    /// Graceful-drain latch: set by [`AdmissionQueue::begin_drain`].
+    /// While draining, `admit` refuses with [`ServeError::Draining`] but
+    /// `next_batch` keeps dispatching until the backlog is empty.
+    draining: AtomicBool,
 }
 
 impl AdmissionQueue {
@@ -167,6 +183,7 @@ impl AdmissionQueue {
             retry_after_ms,
             metrics,
             stop,
+            draining: AtomicBool::new(false),
         }
     }
 
@@ -250,6 +267,9 @@ impl AdmissionQueue {
         deadline_ms: Option<u64>,
         key: GroupKey,
     ) -> Result<(), ServeError> {
+        if self.draining.load(AtomicOrdering::Relaxed) {
+            return Err(ServeError::Draining);
+        }
         let mut s = self.state.lock().unwrap();
         if s.shutdown {
             return Err(ServeError::Internal("server is shutting down".into()));
@@ -275,10 +295,54 @@ impl AdmissionQueue {
         let seq = s.seq;
         s.seq += 1;
         let deadline = deadline_ms.map(|ms| job.enqueued + Duration::from_millis(ms));
-        s.insert(key, QueuedJob { job, priority, deadline, deadline_ms, seq }, self.policy);
+        s.insert(
+            key,
+            QueuedJob { job, priority, deadline, deadline_ms, seq, requeued: false },
+            self.policy,
+        );
         self.metrics.set_gauge("queue_depth", s.depth as f64);
         self.cond.notify_all();
         Ok(())
+    }
+
+    /// Put an already-admitted job back after its replica failed mid
+    /// batch. Cap-exempt (the job held a queue slot moments ago; shedding
+    /// it now would turn one replica crash into spurious 429s) but
+    /// **once-only**: the caller must check [`QueuedJob::requeued`] and
+    /// answer with [`ServeError::ReplicaFailure`] instead of calling this
+    /// again. After `shutdown()` the job is failed rather than parked on
+    /// a queue nobody will drain.
+    pub fn requeue(&self, key: GroupKey, mut qj: QueuedJob) {
+        debug_assert!(!qj.requeued, "requeue-once violated");
+        qj.requeued = true;
+        {
+            let mut s = self.state.lock().unwrap();
+            if s.shutdown {
+                drop(s);
+                let _ = qj.job.reply.send(Err(ServeError::Internal("server shut down".into())));
+                return;
+            }
+            // Keep the original seq: the job re-enters at its old spot in
+            // arrival order rather than the back of the line.
+            s.insert(key, qj, self.policy);
+            self.metrics.set_gauge("queue_depth", s.depth as f64);
+        }
+        self.metrics.inc("requeues", 1);
+        self.cond.notify_all();
+    }
+
+    /// Enter graceful drain: refuse new admissions with
+    /// [`ServeError::Draining`] while replicas keep working the backlog.
+    /// Idempotent. The server layer polls [`AdmissionQueue::depth`]
+    /// against its drain deadline, then calls `shutdown()`.
+    pub fn begin_drain(&self) {
+        self.draining.store(true, AtomicOrdering::Relaxed);
+        self.cond.notify_all();
+    }
+
+    /// True once `begin_drain` has been called.
+    pub fn is_draining(&self) -> bool {
+        self.draining.load(AtomicOrdering::Relaxed)
     }
 
     /// Remove and return the worst queued job (lowest band, then latest
@@ -684,6 +748,64 @@ mod tests {
         let (_, batch) = q.next_batch(0, 8, Duration::from_millis(200)).unwrap();
         t.join().unwrap();
         assert_eq!(batch.len(), 2, "window should have batched both jobs");
+    }
+
+    #[test]
+    fn requeue_is_cap_exempt_and_marks_the_job() {
+        let m = Arc::new(Metrics::new());
+        let q =
+            AdmissionQueue::new(1, SchedPolicy::Edf, 750, m.clone(), Arc::new(AtomicBool::new(false)));
+        let (j1, _rx1) = mk_job();
+        q.admit(j1, Priority::Normal, None, key(3)).unwrap();
+        let (_, mut batch) = q.next_batch(0, 8, Duration::ZERO).unwrap();
+        let taken = batch.pop().unwrap();
+        assert!(!taken.requeued);
+        // Fill the queue back to its cap, then requeue the taken job:
+        // it must re-enter even though depth == cap.
+        let (j2, _rx2) = mk_job();
+        q.admit(j2, Priority::Normal, None, key(3)).unwrap();
+        assert!(q.saturated());
+        let orig_seq = taken.seq;
+        q.requeue(key(3), taken);
+        assert_eq!(q.depth(), 2);
+        assert_eq!(m.counter("requeues"), 1);
+        let (_, batch) = q.next_batch(0, 8, Duration::ZERO).unwrap();
+        let back = batch.iter().find(|qj| qj.seq == orig_seq).unwrap();
+        assert!(back.requeued, "requeued job must carry the once-only marker");
+        // The requeued job kept its arrival position (EDF tiebreak by
+        // seq), so it dispatches ahead of the younger admission.
+        assert_eq!(batch[0].seq, orig_seq);
+    }
+
+    #[test]
+    fn requeue_after_shutdown_fails_the_job() {
+        let q = queue(4, SchedPolicy::Edf);
+        let (j1, rx1) = mk_job();
+        q.admit(j1, Priority::Normal, None, key(3)).unwrap();
+        let (_, mut batch) = q.next_batch(0, 8, Duration::ZERO).unwrap();
+        q.shutdown();
+        q.requeue(key(3), batch.pop().unwrap());
+        let e = rx1.recv_timeout(Duration::from_secs(1)).unwrap().unwrap_err();
+        assert_eq!(e.code(), "internal");
+    }
+
+    #[test]
+    fn drain_refuses_admissions_but_keeps_dispatching() {
+        let q = queue(16, SchedPolicy::Edf);
+        let (j1, _rx1) = mk_job();
+        q.admit(j1, Priority::Normal, None, key(3)).unwrap();
+        assert!(!q.is_draining());
+        q.begin_drain();
+        assert!(q.is_draining());
+        // New work is refused with the typed draining error...
+        let (j2, _rx2) = mk_job();
+        let err = q.admit(j2, Priority::Normal, None, key(3)).unwrap_err();
+        assert_eq!(err.code(), "draining");
+        assert_eq!(err.http_status(), 503);
+        // ...but the backlog still dispatches to replicas.
+        let (_, batch) = q.next_batch(0, 8, Duration::ZERO).unwrap();
+        assert_eq!(batch.len(), 1);
+        assert_eq!(q.depth(), 0);
     }
 
     #[test]

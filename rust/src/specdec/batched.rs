@@ -240,6 +240,10 @@ pub fn sd_generate_stream_from(
                 block.proposals.len(),
                 block.mu_qs.len()
             );
+            for (x, m) in block.proposals.iter().zip(&block.mu_qs) {
+                super::engine::ensure_finite(x, "draft proposal")?;
+                super::engine::ensure_finite(m, "draft mean")?;
+            }
             for (k, x) in block.proposals.iter().enumerate() {
                 flat[ai * gamma * p + k * p..ai * gamma * p + (k + 1) * p].copy_from_slice(x);
             }
@@ -247,6 +251,7 @@ pub fn sd_generate_stream_from(
         let t1 = Instant::now();
         let val_rows = t_bs.extend(&active, &flat, gamma)?; // [a, gamma+1, p]
         let target_time = t1.elapsed();
+        super::engine::ensure_finite(&val_rows, "target validation means")?;
 
         // --- Per-sequence acceptance + rollback + emission.
         for (ai, &i) in active.iter().enumerate() {
@@ -531,6 +536,7 @@ pub fn sd_generate_stream_seeded(
                 for &i in &idx {
                     let t0 = Instant::now();
                     let mu_p = t_bs.tip_means(&[i])?;
+                    super::engine::ensure_finite(&mu_p, "target tip mean")?;
                     let patch = match cfg.emission {
                         Emission::Sampled => {
                             let mut buf = vec![0.0f32; p];
@@ -582,6 +588,10 @@ pub fn sd_generate_stream_seeded(
                     block.proposals.len(),
                     block.mu_qs.len()
                 );
+                for (x, m) in block.proposals.iter().zip(&block.mu_qs) {
+                    super::engine::ensure_finite(x, "draft proposal")?;
+                    super::engine::ensure_finite(m, "draft mean")?;
+                }
                 for (k, x) in block.proposals.iter().enumerate() {
                     flat[ai * gamma * p + k * p..ai * gamma * p + (k + 1) * p].copy_from_slice(x);
                 }
@@ -589,6 +599,7 @@ pub fn sd_generate_stream_seeded(
             let t1 = Instant::now();
             let val_rows = t_bs.extend(&idx, &flat, gamma)?; // [a, gamma+1, p]
             let target_time = t1.elapsed();
+            super::engine::ensure_finite(&val_rows, "target validation means")?;
 
             for (ai, &i) in idx.iter().enumerate() {
                 let tpost = Instant::now();

@@ -44,6 +44,24 @@
 //! practical variant on the single-stream engine — Lossless exactness is
 //! a statement about a *fixed* target law, so the engine rejects the
 //! combination.
+//!
+//! The **speculation circuit breaker** (off by default) is the serving
+//! tier's escape hatch: speculative decoding is an *optimization*, and
+//! Leviathan et al.'s framework only stays safe in production if it can
+//! be switched off mechanically when it misbehaves. Two trip conditions —
+//! a sustained α̂ collapse below `breaker_alpha_floor` (speculation burns
+//! draft compute for nothing) or a streak of numeric faults reported via
+//! [`GammaController::note_numeric_fault`] (a backend is emitting
+//! non-finite values) — move the breaker `Closed → Open`. Open pins
+//! [`GammaController::gamma_for`] at 0 (the pure-AR round shape every
+//! decode loop already supports) and [`GammaController::k`] at 1 for a
+//! cool-down of `breaker_cooldown` rounds, then `Open → HalfOpen`:
+//! `min_gamma` probe rounds judged on their *own* acceptance evidence
+//! (the EWMA is still depressed from the collapse). `breaker_probes`
+//! healthy probes re-close the breaker; one bad probe re-trips it.
+//! A closed breaker changes nothing — `gamma_for`/`k` are byte-for-byte
+//! the pre-breaker recommendations, so the k=1/lossless equivalence
+//! walls hold verbatim whenever the breaker is not tripped.
 
 use anyhow::Result;
 
@@ -102,6 +120,22 @@ pub struct AdaptiveConfig {
     /// [`super::Variant::Practical`] (the lossless guarantee is only
     /// proven for decodes bit-identical to k = 1).
     pub k_max: usize,
+    /// Enable the speculation circuit breaker (see the module docs).
+    /// Off by default: a disabled breaker is permanently `Closed` and
+    /// the controller is byte-for-byte the pre-breaker tuner.
+    pub breaker: bool,
+    /// α̂ below this floor counts toward the collapse trip condition.
+    pub breaker_alpha_floor: f64,
+    /// Consecutive low-α̂ speculative rounds before the breaker opens.
+    pub breaker_trip_rounds: usize,
+    /// Consecutive numeric faults ([`GammaController::note_numeric_fault`])
+    /// before the breaker opens. Faults and low-α̂ rounds trip
+    /// independently; any healthy speculative round resets both streaks.
+    pub breaker_nf_trip: usize,
+    /// Pure-AR rounds the breaker stays `Open` before probing.
+    pub breaker_cooldown: usize,
+    /// Healthy `HalfOpen` probe rounds required to re-close.
+    pub breaker_probes: usize,
 }
 
 impl Default for AdaptiveConfig {
@@ -122,6 +156,12 @@ impl Default for AdaptiveConfig {
             alpha_hi: 0.98,
             sigma_step: 1.1,
             k_max: 1,
+            breaker: false,
+            breaker_alpha_floor: 0.25,
+            breaker_trip_rounds: 8,
+            breaker_nf_trip: 2,
+            breaker_cooldown: 64,
+            breaker_probes: 4,
         }
     }
 }
@@ -167,6 +207,16 @@ impl AdaptiveConfig {
             super::tree::MAX_TREE_K,
             self.k_max
         );
+        if self.breaker {
+            anyhow::ensure!(
+                self.breaker_alpha_floor > 0.0 && self.breaker_alpha_floor < 1.0,
+                "breaker_alpha_floor must be in (0, 1)"
+            );
+            anyhow::ensure!(self.breaker_trip_rounds >= 1, "breaker_trip_rounds must be >= 1");
+            anyhow::ensure!(self.breaker_nf_trip >= 1, "breaker_nf_trip must be >= 1");
+            anyhow::ensure!(self.breaker_cooldown >= 1, "breaker_cooldown must be >= 1");
+            anyhow::ensure!(self.breaker_probes >= 1, "breaker_probes must be >= 1");
+        }
         Ok(())
     }
 
@@ -175,6 +225,40 @@ impl AdaptiveConfig {
     /// one context patch, so γ + 1 < max_ctx.
     pub fn ctx_gamma_cap(max_ctx: usize) -> usize {
         max_ctx.saturating_sub(2).max(1)
+    }
+}
+
+/// State of the speculation circuit breaker. A disabled breaker is
+/// permanently [`BreakerState::Closed`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BreakerState {
+    /// Normal operation: speculation runs at the tuned (γ, k).
+    Closed,
+    /// Tripped: decodes run pure-AR (γ = 0, k = 1) for the cool-down.
+    Open,
+    /// Probing: `min_gamma` speculative rounds, judged individually;
+    /// enough healthy probes re-close, one bad probe re-trips.
+    HalfOpen,
+}
+
+impl BreakerState {
+    /// Wire name (`"closed"` / `"open"` / `"half_open"`).
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            BreakerState::Closed => "closed",
+            BreakerState::Open => "open",
+            BreakerState::HalfOpen => "half_open",
+        }
+    }
+
+    /// Gauge encoding for `stride_breaker_state` (0 closed, 1 open,
+    /// 2 half-open) — monotone in "how far from normal".
+    pub fn gauge(&self) -> f64 {
+        match self {
+            BreakerState::Closed => 0.0,
+            BreakerState::Open => 1.0,
+            BreakerState::HalfOpen => 2.0,
+        }
     }
 }
 
@@ -208,6 +292,13 @@ pub struct ControllerState {
     pub k: usize,
     /// k changes applied since construction.
     pub k_changes: usize,
+    /// Circuit-breaker state (`Closed` when the breaker is disabled).
+    pub breaker: BreakerState,
+    /// Times the breaker has tripped `-> Open` since construction.
+    pub breaker_trips: usize,
+    /// Numeric faults reported via
+    /// [`GammaController::note_numeric_fault`] since construction.
+    pub numeric_faults: usize,
 }
 
 /// Per-stream adaptive γ/σ controller.
@@ -236,6 +327,17 @@ pub struct GammaController {
     sigma_changes: usize,
     k: usize,
     k_changes: usize,
+    breaker_state: BreakerState,
+    /// Consecutive low-α̂ speculative rounds while `Closed`.
+    low_streak: usize,
+    /// Consecutive numeric faults while `Closed`.
+    nf_streak: usize,
+    /// Pure-AR rounds left before `Open -> HalfOpen`.
+    cooldown_left: usize,
+    /// Healthy probes accumulated while `HalfOpen`.
+    probe_healthy: usize,
+    breaker_trips: usize,
+    numeric_faults: usize,
 }
 
 impl GammaController {
@@ -271,6 +373,13 @@ impl GammaController {
             sigma_changes: 0,
             k: 1,
             k_changes: 0,
+            breaker_state: BreakerState::Closed,
+            low_streak: 0,
+            nf_streak: 0,
+            cooldown_left: 0,
+            probe_healthy: 0,
+            breaker_trips: 0,
+            numeric_faults: 0,
         }
     }
 
@@ -302,9 +411,17 @@ impl GammaController {
 
     /// γ for the next round on a backend with `max_ctx` context patches:
     /// the recommendation clamped so γ + 1 appended patches always fit
-    /// (the session layer's invariant).
+    /// (the session layer's invariant). An `Open` breaker pins γ = 0
+    /// (the pure-AR round every decode loop supports as the horizon
+    /// tail); `HalfOpen` probes at `min_gamma`; `Closed` is byte-for-byte
+    /// the pre-breaker recommendation.
     pub fn gamma_for(&self, max_ctx: usize) -> usize {
-        self.gamma.min(AdaptiveConfig::ctx_gamma_cap(max_ctx)).max(1)
+        let cap = AdaptiveConfig::ctx_gamma_cap(max_ctx);
+        match self.breaker_state {
+            BreakerState::Open => 0,
+            BreakerState::HalfOpen => self.cfg.min_gamma.min(cap).max(1),
+            BreakerState::Closed => self.gamma.min(cap).max(1),
+        }
     }
 
     /// Current acceptance width σ.
@@ -313,9 +430,15 @@ impl GammaController {
     }
 
     /// Current recommended tree branch count k (1 unless `k_max > 1`
-    /// and the joint (γ × k) retune chose to branch).
+    /// and the joint (γ × k) retune chose to branch). A non-`Closed`
+    /// breaker pins k = 1 — branching is the most aggressive form of
+    /// speculation and the first thing the escape hatch turns off.
     pub fn k(&self) -> usize {
-        self.k
+        if self.breaker_state == BreakerState::Closed {
+            self.k
+        } else {
+            1
+        }
     }
 
     /// Seed the opening branch count without counting a k change
@@ -354,7 +477,116 @@ impl GammaController {
             sigma_changes: self.sigma_changes,
             k: self.k,
             k_changes: self.k_changes,
+            breaker: self.breaker_state,
+            breaker_trips: self.breaker_trips,
+            numeric_faults: self.numeric_faults,
         }
+    }
+
+    /// Current circuit-breaker state (`Closed` when the breaker is
+    /// disabled).
+    pub fn breaker_state(&self) -> BreakerState {
+        self.breaker_state
+    }
+
+    /// Report a numeric fault: a decode failed because a backend emitted
+    /// non-finite mu/sigma (the session-boundary guards turned it into a
+    /// typed error). Counted always; with the breaker enabled, a streak
+    /// of `breaker_nf_trip` faults trips `Closed -> Open`, and any fault
+    /// during a `HalfOpen` probe re-trips immediately.
+    pub fn note_numeric_fault(&mut self) {
+        self.numeric_faults += 1;
+        if !self.cfg.breaker {
+            return;
+        }
+        match self.breaker_state {
+            BreakerState::Open => {}
+            BreakerState::HalfOpen => self.trip(),
+            BreakerState::Closed => {
+                self.nf_streak += 1;
+                if self.nf_streak >= self.cfg.breaker_nf_trip {
+                    self.trip();
+                }
+            }
+        }
+    }
+
+    /// Tick the open-breaker cool-down by `rounds` pure-AR rounds that
+    /// did not flow through [`GammaController::observe_round`] (the
+    /// serving AR-fallback path decodes whole horizons without round
+    /// stats). No-op unless the breaker is `Open`.
+    pub fn tick_fallback(&mut self, rounds: usize) {
+        for _ in 0..rounds {
+            if self.breaker_state != BreakerState::Open {
+                break;
+            }
+            self.breaker_idle_tick();
+        }
+    }
+
+    /// One γ = 0 round elapsed while `Open`: count down toward the
+    /// `HalfOpen` probe phase.
+    fn breaker_idle_tick(&mut self) {
+        if !self.cfg.breaker || self.breaker_state != BreakerState::Open {
+            return;
+        }
+        self.cooldown_left = self.cooldown_left.saturating_sub(1);
+        if self.cooldown_left == 0 {
+            self.breaker_state = BreakerState::HalfOpen;
+            self.probe_healthy = 0;
+        }
+    }
+
+    /// Judge one finished speculative round (γ > 0) against the trip /
+    /// recovery conditions. Runs *after* the EWMA update: the `Closed`
+    /// collapse test reads the smoothed α̂, while `HalfOpen` probes are
+    /// judged on the round's own per-proposal evidence (the EWMA is
+    /// still depressed from whatever tripped the breaker).
+    fn breaker_observe(&mut self, r: &RoundStats) {
+        if !self.cfg.breaker {
+            return;
+        }
+        match self.breaker_state {
+            BreakerState::Closed => {
+                if self.alpha_hat >= self.cfg.breaker_alpha_floor {
+                    self.low_streak = 0;
+                    self.nf_streak = 0;
+                } else {
+                    self.low_streak += 1;
+                    if self.low_streak >= self.cfg.breaker_trip_rounds {
+                        self.trip();
+                    }
+                }
+            }
+            BreakerState::HalfOpen => {
+                let n = r.alphas.len().max(1) as f64;
+                let mean_a = r.alphas.iter().sum::<f64>() / n;
+                if mean_a >= self.cfg.breaker_alpha_floor {
+                    self.probe_healthy += 1;
+                    if self.probe_healthy >= self.cfg.breaker_probes {
+                        self.breaker_state = BreakerState::Closed;
+                        self.low_streak = 0;
+                        self.nf_streak = 0;
+                    }
+                } else {
+                    self.trip();
+                }
+            }
+            // gamma_for() pins 0 while Open, so speculative rounds should
+            // not arrive here; a straggler (e.g. a round already in
+            // flight when the breaker tripped) is simply ignored.
+            BreakerState::Open => {}
+        }
+    }
+
+    /// Open the breaker and arm the cool-down.
+    fn trip(&mut self) {
+        self.breaker_state = BreakerState::Open;
+        self.cooldown_left = self.cfg.breaker_cooldown.max(1);
+        self.breaker_trips += 1;
+        self.low_streak = 0;
+        self.nf_streak = 0;
+        self.probe_healthy = 0;
     }
 
     /// Fold one finished round into the estimators, then re-evaluate the
@@ -367,6 +599,10 @@ impl GammaController {
     /// (rolled-back) work lowers α̂ exactly as it should.
     pub fn observe_round(&mut self, r: &RoundStats) {
         if r.gamma == 0 {
+            // Pure-AR rounds carry no acceptance information — but they
+            // are exactly what an open breaker decodes with, so they
+            // tick its cool-down before the early return.
+            self.breaker_idle_tick();
             return;
         }
         // Per-proposal EWMA: halflife h proposals => decay 2^(-1/h).
@@ -401,6 +637,7 @@ impl GammaController {
         }
         self.rounds += 1;
         self.since_change += 1;
+        self.breaker_observe(r);
         self.retune();
     }
 
@@ -872,5 +1109,154 @@ mod tests {
         }
         assert_eq!(ctrl.sigma(), 0.5);
         assert_eq!(ctrl.state().sigma_changes, 0);
+    }
+
+    fn breaker_cfg() -> AdaptiveConfig {
+        AdaptiveConfig {
+            breaker: true,
+            breaker_alpha_floor: 0.25,
+            breaker_trip_rounds: 4,
+            breaker_nf_trip: 2,
+            breaker_cooldown: 6,
+            breaker_probes: 2,
+            ..fast_cfg()
+        }
+    }
+
+    fn ar_round() -> RoundStats {
+        RoundStats {
+            gamma: 0,
+            accepted: 0,
+            emitted: 1,
+            alphas: vec![],
+            residual_draws: 0,
+            branches: 1,
+            draft_time: Duration::ZERO,
+            target_time: Duration::from_micros(50),
+        }
+    }
+
+    #[test]
+    fn breaker_disabled_never_leaves_closed() {
+        let mut ctrl = GammaController::new(fast_cfg(), 3, 0.5);
+        for _ in 0..100 {
+            ctrl.observe_round(&round(3, 0, vec![0.01]));
+            ctrl.note_numeric_fault();
+        }
+        assert_eq!(ctrl.breaker_state(), BreakerState::Closed);
+        assert_eq!(ctrl.state().breaker_trips, 0);
+        assert_eq!(ctrl.state().numeric_faults, 100, "faults still counted");
+        assert!(ctrl.gamma_for(32) >= 1, "disabled breaker never pins gamma 0");
+    }
+
+    #[test]
+    fn breaker_trips_on_alpha_collapse_then_recovers_via_probes() {
+        let mut ctrl = GammaController::new(breaker_cfg(), 3, 0.5);
+        // Sustained rejection: the EWMA sinks below the floor, and after
+        // trip_rounds consecutive low rounds the breaker opens.
+        for _ in 0..40 {
+            ctrl.observe_round(&round(3, 0, vec![0.05]));
+        }
+        assert_eq!(ctrl.breaker_state(), BreakerState::Open);
+        assert_eq!(ctrl.state().breaker_trips, 1);
+        assert_eq!(ctrl.gamma_for(32), 0, "open breaker pins pure AR");
+        assert_eq!(ctrl.k(), 1);
+        // The pure-AR rounds the open breaker mandates tick the
+        // cool-down down to the half-open probe phase.
+        for _ in 0..6 {
+            assert_eq!(ctrl.breaker_state(), BreakerState::Open);
+            ctrl.observe_round(&ar_round());
+        }
+        assert_eq!(ctrl.breaker_state(), BreakerState::HalfOpen);
+        let g_probe = ctrl.gamma_for(32);
+        assert_eq!(g_probe, ctrl.config().min_gamma.max(1), "half-open probes at min_gamma");
+        // Healthy probes (judged on their own alphas — the EWMA is still
+        // depressed) re-close the breaker.
+        ctrl.observe_round(&round(g_probe, g_probe, vec![0.9; g_probe]));
+        assert_eq!(ctrl.breaker_state(), BreakerState::HalfOpen);
+        ctrl.observe_round(&round(g_probe, g_probe, vec![0.9; g_probe]));
+        assert_eq!(ctrl.breaker_state(), BreakerState::Closed);
+        assert_eq!(ctrl.state().breaker_trips, 1, "recovery is not a trip");
+    }
+
+    #[test]
+    fn bad_half_open_probe_retrips() {
+        let mut ctrl = GammaController::new(breaker_cfg(), 3, 0.5);
+        for _ in 0..40 {
+            ctrl.observe_round(&round(3, 0, vec![0.05]));
+        }
+        for _ in 0..6 {
+            ctrl.observe_round(&ar_round());
+        }
+        assert_eq!(ctrl.breaker_state(), BreakerState::HalfOpen);
+        let g = ctrl.gamma_for(32);
+        ctrl.observe_round(&round(g, 0, vec![0.02]));
+        assert_eq!(ctrl.breaker_state(), BreakerState::Open, "one bad probe re-trips");
+        assert_eq!(ctrl.state().breaker_trips, 2);
+    }
+
+    #[test]
+    fn numeric_fault_streak_trips_and_healthy_rounds_reset_it() {
+        let mut ctrl = GammaController::new(breaker_cfg(), 3, 0.5);
+        // One fault, then a healthy round: streak resets, no trip.
+        ctrl.note_numeric_fault();
+        ctrl.observe_round(&round(3, 3, vec![0.9; 3]));
+        ctrl.note_numeric_fault();
+        assert_eq!(ctrl.breaker_state(), BreakerState::Closed);
+        // A second consecutive fault trips.
+        ctrl.note_numeric_fault();
+        assert_eq!(ctrl.breaker_state(), BreakerState::Open);
+        assert_eq!(ctrl.state().breaker_trips, 1);
+        assert_eq!(ctrl.state().numeric_faults, 3);
+        // A fault during half-open probing re-trips immediately.
+        ctrl.tick_fallback(100);
+        assert_eq!(ctrl.breaker_state(), BreakerState::HalfOpen);
+        ctrl.note_numeric_fault();
+        assert_eq!(ctrl.breaker_state(), BreakerState::Open);
+        assert_eq!(ctrl.state().breaker_trips, 2);
+    }
+
+    #[test]
+    fn tick_fallback_only_advances_an_open_breaker() {
+        let mut ctrl = GammaController::new(breaker_cfg(), 3, 0.5);
+        ctrl.tick_fallback(1000);
+        assert_eq!(ctrl.breaker_state(), BreakerState::Closed, "closed breaker unaffected");
+        ctrl.note_numeric_fault();
+        ctrl.note_numeric_fault();
+        assert_eq!(ctrl.breaker_state(), BreakerState::Open);
+        ctrl.tick_fallback(5);
+        assert_eq!(ctrl.breaker_state(), BreakerState::Open, "cooldown 6 not yet elapsed");
+        ctrl.tick_fallback(1);
+        assert_eq!(ctrl.breaker_state(), BreakerState::HalfOpen);
+    }
+
+    #[test]
+    fn breaker_state_wire_encoding() {
+        assert_eq!(BreakerState::Closed.as_str(), "closed");
+        assert_eq!(BreakerState::Open.as_str(), "open");
+        assert_eq!(BreakerState::HalfOpen.as_str(), "half_open");
+        assert_eq!(BreakerState::Closed.gauge(), 0.0);
+        assert_eq!(BreakerState::Open.gauge(), 1.0);
+        assert_eq!(BreakerState::HalfOpen.gauge(), 2.0);
+    }
+
+    #[test]
+    fn validate_rejects_bad_breaker_knobs() {
+        for mutate in [
+            (|c: &mut AdaptiveConfig| c.breaker_alpha_floor = 0.0) as fn(&mut AdaptiveConfig),
+            |c| c.breaker_alpha_floor = 1.0,
+            |c| c.breaker_trip_rounds = 0,
+            |c| c.breaker_nf_trip = 0,
+            |c| c.breaker_cooldown = 0,
+            |c| c.breaker_probes = 0,
+        ] {
+            let mut cfg = breaker_cfg();
+            mutate(&mut cfg);
+            assert!(cfg.validate().is_err());
+            // The same degenerate knobs are fine with the breaker off.
+            cfg.breaker = false;
+            assert!(cfg.validate().is_ok());
+        }
+        assert!(breaker_cfg().validate().is_ok());
     }
 }

@@ -435,6 +435,7 @@ fn sd_generate_impl(
             // Horizon tail: plain target AR step off the session tip.
             let t0 = Instant::now();
             let mu_p = t_sess.tip_mean()?;
+            ensure_finite(&mu_p, "target tip mean")?;
             let patch = emit_from_p(&mu_p, policy.sigma, cfg.emission, &mut rng);
             t_sess.append(&patch, 1)?;
             let tt = t0.elapsed();
@@ -471,6 +472,10 @@ fn sd_generate_impl(
             "draft source returned {} proposals for gamma {gamma}",
             block.proposals.len()
         );
+        for (x, m) in block.proposals.iter().zip(&block.mu_qs) {
+            ensure_finite(x, "draft proposal")?;
+            ensure_finite(m, "draft mean")?;
+        }
         let proposals = &block.proposals;
         let mu_qs = &block.mu_qs;
 
@@ -484,6 +489,7 @@ fn sd_generate_impl(
         let t1 = Instant::now();
         let val_rows = t_sess.extend(&flat, gamma)?;
         let mut target_time = t1.elapsed();
+        ensure_finite(&val_rows, "target validation means")?;
         let mu_p_at = |i: usize| &val_rows[i * p..(i + 1) * p];
 
         // --- Acceptance scan (l.5-8).
@@ -605,6 +611,24 @@ fn sd_generate_impl(
     out_patches.truncate(horizon * p);
     stats.draft_updates = source.updates().saturating_sub(upd0);
     Ok(DecodeOutput { patches: out_patches, rounds, stats })
+}
+
+/// Numeric guard at the session boundary: any non-finite value coming
+/// out of a backend (draft proposals, target validation means, the AR
+/// tip) becomes a typed error *before* the acceptance scan, so a model
+/// emitting one NaN can never poison the acceptance math or be served to
+/// a client. The message always contains the marker `non-finite` — the
+/// serving tier greps the error chain for it to count numeric faults and
+/// feed the controller's circuit breaker
+/// ([`super::GammaController::note_numeric_fault`]).
+pub(crate) fn ensure_finite(vals: &[f32], what: &str) -> Result<()> {
+    if let Some(pos) = vals.iter().position(|v| !v.is_finite()) {
+        anyhow::bail!(
+            "non-finite model output: {what} has {} at flat index {pos}",
+            if vals[pos].is_nan() { "NaN" } else { "inf" }
+        );
+    }
+    Ok(())
 }
 
 /// Residual thinning at a rejection point (§A.5.1): draw `Z ~ p`,
@@ -1037,6 +1061,50 @@ mod tests {
         // Gamma-only adaptation is fine for lossless.
         c.adaptive = Some(AdaptiveConfig::default());
         assert!(sd_generate(&t, &d, &[0.0], 1, 4, &c).is_ok());
+    }
+
+    /// A backend that emits NaN means after a set number of forwards —
+    /// the minimal stand-in for a numerically-corrupt model.
+    struct NanAfter(AnalyticBackend, std::cell::Cell<usize>);
+    impl crate::models::Backend for NanAfter {
+        fn name(&self) -> &str {
+            self.0.name()
+        }
+        fn patch(&self) -> usize {
+            self.0.patch()
+        }
+        fn max_ctx(&self) -> usize {
+            self.0.max_ctx()
+        }
+        fn forward(&self, tokens: &[f32], n: usize) -> Result<Vec<f32>> {
+            let mut out = self.0.forward(tokens, n)?;
+            if self.1.get() == 0 {
+                out[0] = f32::NAN;
+            } else {
+                self.1.set(self.1.get() - 1);
+            }
+            Ok(out)
+        }
+        fn flops(&self, n: usize) -> f64 {
+            self.0.flops(n)
+        }
+    }
+
+    #[test]
+    fn non_finite_model_output_is_a_typed_error_not_a_served_nan() {
+        let d = AnalyticBackend::new("d", 2, 0.75, 0.1);
+        // Target goes NaN after 2 clean forwards: the decode must fail
+        // with the greppable "non-finite" marker, never emit NaN patches.
+        let t = NanAfter(AnalyticBackend::new("t", 2, 0.8, 0.1), std::cell::Cell::new(2));
+        let err = sd_generate(&t, &d, &[0.5, -0.5], 1, 12, &cfg(3, 0.5, Variant::Practical, 5))
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("non-finite"), "got: {err:#}");
+        // Draft goes NaN: same contract, caught before the acceptance scan.
+        let t = AnalyticBackend::new("t", 2, 0.8, 0.1);
+        let d = NanAfter(AnalyticBackend::new("d", 2, 0.75, 0.1), std::cell::Cell::new(1));
+        let err = sd_generate(&t, &d, &[0.5, -0.5], 1, 12, &cfg(3, 0.5, Variant::Practical, 5))
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("non-finite"), "got: {err:#}");
     }
 
     #[test]

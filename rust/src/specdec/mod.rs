@@ -56,12 +56,13 @@ mod tree;
 pub use batched::{
     sd_generate_batch, sd_generate_stream, sd_generate_stream_from, sd_generate_stream_seeded,
 };
-pub use controller::{AdaptiveConfig, ControllerState, GammaController};
+pub use controller::{AdaptiveConfig, BreakerState, ControllerState, GammaController};
 pub use draft::{
     make_batch_source, make_free_source, make_source, AdaptiveResidualDraft, BatchDraftSource,
     DraftConfig, DraftKind, DraftSource, ExtrapolationDraft, ModelBatchDraft, ModelDraft,
     ProposalBlock, RoundFeedback,
 };
+pub(crate) use engine::ensure_finite;
 pub use engine::{
     sd_generate, sd_generate_from, sd_generate_from_with_controller, sd_generate_scheduled,
     sd_generate_with_controller, Emission, SpecConfig, Variant,

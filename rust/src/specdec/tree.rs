@@ -222,6 +222,7 @@ fn sd_generate_tree_impl(
             // branches either (identical to the classic tail).
             let t0 = Instant::now();
             let mu_p = t_sess.tip_mean()?;
+            super::engine::ensure_finite(&mu_p, "target tip mean")?;
             let patch = emit_from_p(&mu_p, policy.sigma, cfg.emission, &mut rng);
             t_sess.append(&patch, 1)?;
             let tt = t0.elapsed();
@@ -265,6 +266,10 @@ fn sd_generate_tree_impl(
                 "draft source returned {} proposals for gamma {gamma}",
                 b.proposals.len()
             );
+            for (x, m) in b.proposals.iter().zip(&b.mu_qs) {
+                super::engine::ensure_finite(x, "draft proposal")?;
+                super::engine::ensure_finite(m, "draft mean")?;
+            }
         }
 
         // --- Verify: one target extend per branch returns all γ+1
@@ -279,7 +284,9 @@ fn sd_generate_tree_impl(
             for x in &b.proposals {
                 flat.extend_from_slice(x);
             }
-            branch_rows.push(t_sess.extend(&flat, gamma)?);
+            let rows = t_sess.extend(&flat, gamma)?;
+            super::engine::ensure_finite(&rows, "target validation means")?;
+            branch_rows.push(rows);
             if j + 1 < k_round {
                 t_sess.rollback(gamma)?;
             }

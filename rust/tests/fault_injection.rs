@@ -1,0 +1,366 @@
+//! Chaos suite for the fault-tolerance tentpole: seeded fault injection
+//! driven through the full HTTP + scheduler + replica stack, proving
+//! that every failure shape the [`stride::faultinject`] plan can emit is
+//! absorbed with a *typed, terminal* response — no hangs, no served
+//! NaNs, bounded recovery — and that with chaos disarmed the serving
+//! path is byte-for-byte unchanged.
+//!
+//! Every test runs artifact-free over synthetic [`NativeBackend`]
+//! replicas (`tiny_model`), so the suite exercises supervision, the
+//! numeric guards, the speculation circuit breaker, and graceful drain
+//! without any model artifacts present.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use stride::config::ServeConfig;
+use stride::http::http_request;
+use stride::models::NativeBackend;
+use stride::nn::model::tiny_model;
+use stride::server::{ModelShape, ReplicaBuilder, ReplicaStacks, Server};
+use stride::util::json::Json;
+
+const SHAPE: ModelShape = ModelShape { patch: 4, n_ctx: 8 };
+
+/// A replica builder over two synthetic models (same seeds on every
+/// replica, so restarts rebind to identical weights).
+fn builder(seed_t: u64, seed_d: u64) -> ReplicaBuilder {
+    Arc::new(move |_r| {
+        Ok(ReplicaStacks {
+            target: Box::new(NativeBackend::new(tiny_model(seed_t))),
+            draft: Box::new(NativeBackend::new(tiny_model(seed_d))),
+        })
+    })
+}
+
+fn base_cfg() -> ServeConfig {
+    let mut cfg = ServeConfig::default();
+    cfg.bind = "127.0.0.1:0".into();
+    cfg.backend = "native".into();
+    cfg
+}
+
+fn body(horizon: usize, seed: u64, mode: &str) -> String {
+    let hist: Vec<String> = (0..16).map(|i| format!("{}", (i as f32 * 0.23).sin())).collect();
+    format!(
+        r#"{{"history": [{}], "horizon": {horizon}, "seed": {seed}, "mode": "{mode}"}}"#,
+        hist.join(",")
+    )
+}
+
+fn stats(addr: &str) -> Json {
+    Json::parse(http_request(addr, "GET", "/stats", None).unwrap().body_str()).unwrap()
+}
+
+fn faults_block(addr: &str) -> Json {
+    stats(addr).get("faults").expect("/stats must carry a faults block").clone()
+}
+
+/// Forecast values of a 200 response; panics unless every bit is finite.
+fn finite_forecast(body: &str) -> Vec<f32> {
+    let vals: Vec<f32> = Json::parse(body)
+        .unwrap()
+        .get("forecast")
+        .expect("200 response must carry a forecast")
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|v| v.as_f64().unwrap() as f32)
+        .collect();
+    assert!(
+        vals.iter().all(|v| v.is_finite()),
+        "served forecast carries a non-finite value: {vals:?}"
+    );
+    vals
+}
+
+/// An injected panic inside a speculative decode is invisible to the
+/// client: the group goes down the supervisor's requeue-once path, the
+/// replica restarts onto fresh stacks, and the retried request is
+/// served. Recovery is observable in the supervision counters.
+#[test]
+fn sd_panic_is_requeued_and_served_after_restart() {
+    let mut cfg = base_cfg();
+    cfg.fault.enabled = true;
+    cfg.fault.seed = 11;
+    cfg.fault.p_panic = 1.0;
+    cfg.fault.max_faults = 1; // exactly one panic, then quiescent
+    let server = Server::start_with_builder(cfg, SHAPE, builder(101, 102)).unwrap();
+    let addr = server.addr().to_string();
+
+    let r = http_request(&addr, "POST", "/forecast", Some(body(4, 5, "sd").as_bytes())).unwrap();
+    assert_eq!(r.status, 200, "requeue-once must absorb a single panic: {}", r.body_str());
+    finite_forecast(r.body_str());
+
+    let f = faults_block(&addr);
+    assert_eq!(f.get("replica_restarts").unwrap().as_usize(), Some(1));
+    assert_eq!(f.get("requeues").unwrap().as_usize(), Some(1));
+    assert_eq!(f.get("replica_failures").unwrap().as_usize(), Some(0));
+    let inj = f.get("injection").expect("armed plan must report injection counters");
+    assert_eq!(inj.get("panics").unwrap().as_usize(), Some(1));
+    assert_eq!(inj.get("exhausted").unwrap().as_bool(), Some(true));
+}
+
+/// A panic mid-way through a co-batched group of per-job AR decodes
+/// fails exactly the job that owned the faulted forward (typed
+/// `replica_failure`, HTTP 500) and requeues its innocent group-mates,
+/// which are served after the restart.
+#[test]
+fn baseline_group_panic_fails_one_job_and_requeues_the_rest() {
+    let mut cfg = base_cfg();
+    cfg.max_batch = 4;
+    cfg.max_wait_ms = 200; // a wide window, so the 4 requests co-batch
+    cfg.fault.enabled = true;
+    cfg.fault.seed = 12;
+    cfg.fault.p_panic = 1.0;
+    cfg.fault.max_faults = 1;
+    let server = Server::start_with_builder(cfg, SHAPE, builder(103, 104)).unwrap();
+    let addr = Arc::new(server.addr().to_string());
+
+    let mut handles = Vec::new();
+    for k in 0..4u64 {
+        let addr = Arc::clone(&addr);
+        handles.push(std::thread::spawn(move || {
+            http_request(&addr, "POST", "/forecast", Some(body(3, k, "baseline").as_bytes()))
+                .unwrap()
+        }));
+    }
+    let responses: Vec<_> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+
+    let failed: Vec<_> = responses.iter().filter(|r| r.status == 500).collect();
+    let served = responses.iter().filter(|r| r.status == 200).count();
+    assert_eq!(failed.len(), 1, "exactly the decoding job fails typed");
+    assert_eq!(served, 3, "group-mates are requeued and served");
+    assert!(
+        failed[0].body_str().contains("\"error_code\":\"replica_failure\""),
+        "the poisoned job's error must be typed: {}",
+        failed[0].body_str()
+    );
+    for r in &responses {
+        if r.status == 200 {
+            finite_forecast(r.body_str());
+        }
+    }
+    let f = faults_block(&addr);
+    assert_eq!(f.get("replica_restarts").unwrap().as_usize(), Some(1));
+    assert_eq!(f.get("replica_failures").unwrap().as_usize(), Some(1));
+    assert!(f.get("requeues").unwrap().as_usize().unwrap() >= 1, "group-mates requeued");
+}
+
+/// NaN-poisoned model outputs never reach a response: while the fault
+/// budget lasts, decodes fail with a typed `internal` error whose
+/// message names the non-finite output; once it is exhausted the same
+/// request is served clean. No 200 ever carries a non-finite bit.
+#[test]
+fn nan_faults_become_typed_errors_never_served_values() {
+    let mut cfg = base_cfg();
+    cfg.fault.enabled = true;
+    cfg.fault.seed = 13;
+    cfg.fault.p_nan = 1.0;
+    cfg.fault.max_faults = 3;
+    let server = Server::start_with_builder(cfg, SHAPE, builder(105, 106)).unwrap();
+    let addr = server.addr().to_string();
+
+    let mut saw_typed_failure = false;
+    for attempt in 0..20u64 {
+        let r =
+            http_request(&addr, "POST", "/forecast", Some(body(4, attempt, "sd").as_bytes()))
+                .unwrap();
+        match r.status {
+            200 => {
+                finite_forecast(r.body_str());
+            }
+            500 => {
+                assert!(
+                    r.body_str().contains("non-finite"),
+                    "numeric failure must name the guard: {}",
+                    r.body_str()
+                );
+                assert!(r.body_str().contains("\"error_code\":\"internal\""));
+                saw_typed_failure = true;
+            }
+            other => panic!("unexpected status {other}: {}", r.body_str()),
+        }
+        let inj = faults_block(&addr).get("injection").unwrap().clone();
+        if inj.get("exhausted").unwrap().as_bool() == Some(true) {
+            break;
+        }
+    }
+    assert!(saw_typed_failure, "the NaN budget must produce at least one typed failure");
+
+    // Bounded recovery: the quiescent tail serves clean.
+    let r = http_request(&addr, "POST", "/forecast", Some(body(4, 99, "sd").as_bytes())).unwrap();
+    assert_eq!(r.status, 200, "post-exhaustion request must be served: {}", r.body_str());
+    finite_forecast(r.body_str());
+
+    let f = faults_block(&addr);
+    assert!(f.get("numeric_faults").unwrap().as_usize().unwrap() >= 1);
+    let inj = f.get("injection").unwrap();
+    assert!(inj.get("nans").unwrap().as_usize().unwrap() >= 1);
+    assert_eq!(f.get("replica_restarts").unwrap().as_usize(), Some(0), "NaNs don't restart");
+}
+
+/// Stalled forwards are absorbed transparently: the request completes,
+/// the forecast is clean, and the injection counters show the stalls
+/// actually happened.
+#[test]
+fn stall_faults_complete_with_clean_forecasts() {
+    let mut cfg = base_cfg();
+    cfg.fault.enabled = true;
+    cfg.fault.seed = 14;
+    cfg.fault.p_stall = 1.0;
+    cfg.fault.stall_ms = 20;
+    cfg.fault.max_faults = 3;
+    let server = Server::start_with_builder(cfg, SHAPE, builder(107, 108)).unwrap();
+    let addr = server.addr().to_string();
+
+    for seed in 0..2u64 {
+        let r =
+            http_request(&addr, "POST", "/forecast", Some(body(3, seed, "sd").as_bytes())).unwrap();
+        assert_eq!(r.status, 200, "stalls are transparent: {}", r.body_str());
+        finite_forecast(r.body_str());
+    }
+    let inj = faults_block(&addr).get("injection").unwrap().clone();
+    let stalls = inj.get("stalls").unwrap().as_usize().unwrap();
+    assert!(stalls >= 1, "the plan must actually have stalled forwards");
+    assert_eq!(inj.get("injected").unwrap().as_usize(), Some(stalls), "stall-only plan");
+}
+
+/// The speculation circuit breaker, end to end: a numeric fault trips
+/// it open (speculation disabled, requests served pure-AR on the
+/// target), the fallback horizons tick its cool-down into half-open,
+/// and one healthy probe decode closes it again. Target and draft share
+/// weights here, so probe acceptance is high by construction.
+#[test]
+fn breaker_trips_to_pure_ar_and_recovers_via_probes() {
+    let mut cfg = base_cfg();
+    cfg.adaptive = true;
+    cfg.adaptive_cfg.breaker = true;
+    cfg.adaptive_cfg.breaker_nf_trip = 1; // one numeric fault trips
+    cfg.adaptive_cfg.breaker_cooldown = 2; // one fallback horizon reaches half-open
+    cfg.adaptive_cfg.breaker_probes = 1; // one healthy probe re-closes
+    cfg.fault.enabled = true;
+    cfg.fault.seed = 15;
+    cfg.fault.p_nan = 1.0;
+    cfg.fault.max_faults = 1;
+    let server = Server::start_with_builder(cfg, SHAPE, builder(77, 77)).unwrap();
+    let addr = server.addr().to_string();
+
+    let breaker = |addr: &str| -> (String, usize) {
+        let b = faults_block(addr).get("breaker").expect("adaptive server reports breaker").clone();
+        (
+            b.get("state").unwrap().as_str().unwrap().to_string(),
+            b.get("fallback_decodes").unwrap().as_usize().unwrap(),
+        )
+    };
+
+    // 1. The poisoned decode fails typed and trips the breaker.
+    let r = http_request(&addr, "POST", "/forecast", Some(body(4, 1, "sd").as_bytes())).unwrap();
+    assert_eq!(r.status, 500, "poisoned decode fails typed: {}", r.body_str());
+    assert!(r.body_str().contains("non-finite"));
+    assert_eq!(breaker(&addr).0, "open", "numeric fault must trip the breaker");
+
+    // 2. Open: served pure-AR on the target (no draft calls, alpha
+    //    null), which ticks the cool-down past its budget.
+    let r = http_request(&addr, "POST", "/forecast", Some(body(4, 2, "sd").as_bytes())).unwrap();
+    assert_eq!(r.status, 200, "open breaker still serves: {}", r.body_str());
+    finite_forecast(r.body_str());
+    let j = Json::parse(r.body_str()).unwrap();
+    assert_eq!(j.get("mode").unwrap().as_str(), Some("sd"));
+    assert_eq!(j.get("draft_calls").unwrap().as_usize(), Some(0), "pure-AR fallback");
+    assert_eq!(j.get("alpha_hat"), Some(&Json::Null), "no acceptance stats without speculation");
+    let (state, fallbacks) = breaker(&addr);
+    assert_eq!(state, "half_open", "fallback horizons tick the cool-down");
+    assert!(fallbacks >= 1);
+
+    // 3. Half-open: a healthy probe decode (shared weights -> alpha = 1)
+    //    closes the breaker; speculation is back.
+    let r = http_request(&addr, "POST", "/forecast", Some(body(4, 3, "sd").as_bytes())).unwrap();
+    assert_eq!(r.status, 200, "{}", r.body_str());
+    finite_forecast(r.body_str());
+    assert_eq!(breaker(&addr).0, "closed", "healthy probes must re-close the breaker");
+
+    let b = faults_block(&addr).get("breaker").unwrap().clone();
+    assert_eq!(b.get("trips").unwrap().as_usize(), Some(1));
+    // The gauge tells the same story on the scrape surface.
+    let m = http_request(&addr, "GET", "/metrics", None).unwrap().body_str().to_string();
+    assert!(m.contains("stride_breaker_state 0"), "closed again at scrape time:\n{m}");
+    assert!(m.contains("stride_breaker_trips 1"), "one trip recorded:\n{m}");
+}
+
+/// Graceful drain: `begin_drain` flips `/healthz` to a not-ready
+/// `"draining"` report, new admissions get a typed 503, queued work is
+/// allowed to finish, and `Server::drain` confirms an empty queue
+/// within its budget.
+#[test]
+fn drain_refuses_new_work_and_empties_the_queue() {
+    let mut server = Server::start_with_builder(base_cfg(), SHAPE, builder(109, 110)).unwrap();
+    let addr = Arc::new(server.addr().to_string());
+
+    // Healthy before the drain.
+    let h = http_request(&addr, "GET", "/healthz", None).unwrap();
+    assert_eq!(h.status, 200, "{}", h.body_str());
+
+    // A few in-flight requests race the drain; each must end typed —
+    // served if admitted before the flip, `draining` after it.
+    let mut handles = Vec::new();
+    for k in 0..3u64 {
+        let addr = Arc::clone(&addr);
+        handles.push(std::thread::spawn(move || {
+            http_request(&addr, "POST", "/forecast", Some(body(3, k, "sd").as_bytes())).unwrap()
+        }));
+    }
+    std::thread::sleep(Duration::from_millis(30));
+    server.handle.begin_drain();
+
+    // New work is refused with the typed drain error...
+    let r = http_request(&addr, "POST", "/forecast", Some(body(3, 9, "sd").as_bytes())).unwrap();
+    assert_eq!(r.status, 503, "{}", r.body_str());
+    assert!(r.body_str().contains("\"error_code\":\"draining\""));
+    // ...and /healthz reports the drain.
+    let h = http_request(&addr, "GET", "/healthz", None).unwrap();
+    assert_eq!(h.status, 503);
+    assert!(h.body_str().contains("draining"));
+    let f = faults_block(&addr);
+    assert_eq!(f.get("draining").unwrap().as_bool(), Some(true));
+
+    for h in handles {
+        let r = h.join().unwrap();
+        assert!(
+            r.status == 200 || (r.status == 503 && r.body_str().contains("draining")),
+            "in-flight requests end typed: {} {}",
+            r.status,
+            r.body_str()
+        );
+    }
+    assert!(
+        server.drain(Duration::from_secs(10)),
+        "an idle queue must drain inside the budget"
+    );
+}
+
+/// The chaos gate is absolute: a config that carries fault knobs but
+/// `enabled: false` serves bit-identical forecasts to a config with no
+/// fault plan at all (same models, same seeds).
+#[test]
+fn disabled_fault_config_is_bit_identical_to_no_fault_config() {
+    let plain = Server::start_with_builder(base_cfg(), SHAPE, builder(31, 32)).unwrap();
+    let mut cfg = base_cfg();
+    cfg.fault.p_panic = 0.5;
+    cfg.fault.p_nan = 0.5;
+    cfg.fault.enabled = false; // knobs present, chaos disarmed
+    let disarmed = Server::start_with_builder(cfg, SHAPE, builder(31, 32)).unwrap();
+
+    let req = body(5, 42, "sd");
+    let bits = |srv: &Server| -> Vec<u32> {
+        let addr = srv.addr().to_string();
+        let r = http_request(&addr, "POST", "/forecast", Some(req.as_bytes())).unwrap();
+        assert_eq!(r.status, 200, "{}", r.body_str());
+        finite_forecast(r.body_str()).iter().map(|v| v.to_bits()).collect()
+    };
+    assert_eq!(bits(&plain), bits(&disarmed), "enabled: false must be byte-for-byte clean");
+
+    // And the disarmed server reports no injection surface at all.
+    let f = faults_block(&disarmed.addr().to_string());
+    assert_eq!(f.get("injection"), Some(&Json::Null));
+}

@@ -225,6 +225,63 @@ fn tree_metrics_and_stats_block_light_up() {
     );
 }
 
+/// Fault-tolerance observability in steady state: with chaos *disarmed*
+/// the supervision counters must still render (pre-registered at zero,
+/// so dashboards can alert on "went nonzero" without a first fault),
+/// `stride_breaker_state` and `stride_draining` gauges must read 0, and
+/// the `/stats` `"faults"` block must report `injection: null`,
+/// `draining: false`, and zeroed recovery counters.
+#[test]
+fn fault_metrics_render_zero_without_chaos() {
+    use stride::models::NativeBackend;
+    use stride::nn::model::tiny_model;
+    use stride::server::{ModelShape, ReplicaBuilder, ReplicaStacks};
+
+    let mut cfg = ServeConfig::default();
+    cfg.bind = "127.0.0.1:0".into();
+    cfg.backend = "native".into();
+    let shape = ModelShape { patch: 4, n_ctx: 8 };
+    let builder: ReplicaBuilder = Arc::new(move |_r| {
+        Ok(ReplicaStacks {
+            target: Box::new(NativeBackend::new(tiny_model(911))),
+            draft: Box::new(NativeBackend::new(tiny_model(912))),
+        })
+    });
+    let server = Server::start_with_builder(cfg, shape, builder).unwrap();
+    let addr = server.addr().to_string();
+
+    // Serve one request so the stats path is fully exercised.
+    let hist: Vec<String> = (0..16).map(|i| format!("{}", (i as f32 * 0.17).cos())).collect();
+    let body = format!(r#"{{"history": [{}], "horizon": 4, "seed": 3}}"#, hist.join(","));
+    let r = http_request(&addr, "POST", "/forecast", Some(body.as_bytes())).unwrap();
+    assert_eq!(r.status, 200, "{}", r.body_str());
+
+    // /metrics: every supervision series is present and zero.
+    let m = http_request(&addr, "GET", "/metrics", None).unwrap().body_str().to_string();
+    for key in [
+        "stride_replica_restarts 0",
+        "stride_replica_failures 0",
+        "stride_requeues 0",
+        "stride_numeric_faults 0",
+        "stride_breaker_state 0",
+        "stride_draining 0",
+    ] {
+        assert!(m.contains(key), "missing `{key}` in /metrics:\n{m}");
+    }
+
+    // /stats: the faults block tells the same story in JSON.
+    let j = Json::parse(http_request(&addr, "GET", "/stats", None).unwrap().body_str()).unwrap();
+    let faults = j.get("faults").expect("/stats must carry a faults block");
+    assert_eq!(faults.get("injection"), Some(&Json::Null), "chaos disarmed -> injection null");
+    assert_eq!(faults.get("replica_restarts").unwrap().as_usize(), Some(0));
+    assert_eq!(faults.get("replica_failures").unwrap().as_usize(), Some(0));
+    assert_eq!(faults.get("requeues").unwrap().as_usize(), Some(0));
+    assert_eq!(faults.get("numeric_faults").unwrap().as_usize(), Some(0));
+    assert_eq!(faults.get("draining").unwrap().as_bool(), Some(false));
+    // No adaptive controller configured -> no breaker to report.
+    assert_eq!(faults.get("breaker"), Some(&Json::Null), "breaker null without adaptive gamma");
+}
+
 /// Engine-thread resilience: a request that fails validation must not
 /// poison the batch it rides in.
 #[test]

@@ -20,6 +20,12 @@ cargo build --release
 echo "== cargo test -q =="
 cargo test -q
 
+# The chaos suite is part of the suite above; rerunning it alone makes a
+# fault-tolerance regression name itself in the CI log instead of hiding
+# in the aggregate count.
+echo "== fault-injection chaos suite =="
+cargo test -q --test fault_injection
+
 # Rustdoc gate: the crate carries #![warn(missing_docs)]; -D warnings
 # turns any missing public-API doc (or broken intra-doc link) into a hard
 # failure. --lib avoids the doc-output name collision with the bin target.
@@ -90,6 +96,18 @@ if [[ "${1:-}" != "--no-bench" ]]; then
     check_bench_json results/BENCH_tree_speculation.json
     if ! grep -q '"criteria_met":true' results/BENCH_tree_speculation.json; then
         echo "error: tree_speculation criteria not met" >&2
+        exit 1
+    fi
+
+    echo "== chaos_soak smoke (STRIDE_BENCH_QUICK=1) =="
+    # Fault-tolerance criteria: every request under seeded chaos reaches
+    # a typed terminal outcome, no served response carries a non-finite
+    # bit, replica restarts equal injected panics, and the post-budget
+    # recovery tail is error-free.
+    STRIDE_BENCH_QUICK=1 cargo bench --bench chaos_soak
+    check_bench_json results/BENCH_chaos_soak.json
+    if ! grep -q '"criteria_met":true' results/BENCH_chaos_soak.json; then
+        echo "error: chaos_soak criteria not met" >&2
         exit 1
     fi
 fi
