@@ -7,6 +7,13 @@
 //! pre-kernel-layer naive kernel, serial vs row-parallel matmul) emitted
 //! machine-readably to `results/BENCH_perf_hotpath.json` for CI.
 //! These are the numbers the performance pass iterates on.
+//!
+//! SIMD + stacked-GEMM PR additions: the runtime-dispatched SIMD inner
+//! kernel vs the forced-scalar fallback, the cache-blocked tiled matmul,
+//! and the stacked tree-verify (one batched target forward) vs the
+//! retained sequential extend/rollback reference — each pair's bit
+//! identity is asserted **in-bench** before timing, and the JSON record
+//! carries a `criteria_met` verdict that scripts/ci.sh gates on.
 
 use std::time::Duration;
 
@@ -17,7 +24,7 @@ use stride::nn::{ModelDims, NativeModel};
 use stride::specdec::{sd_generate, SpecConfig};
 use stride::util::microbench::{bencher_from_env, Bencher, Table};
 use stride::util::rng::Rng;
-use stride::util::tensor::{matmul, matmul_parallel};
+use stride::util::tensor::{matmul, matmul_parallel, matmul_tiled, set_scalar_kernel};
 use stride::util::threadpool::global_pool;
 
 fn main() -> anyhow::Result<()> {
@@ -273,6 +280,77 @@ fn main() -> anyhow::Result<()> {
             std::hint::black_box(&c);
         });
 
+        // --- SIMD tier before/after: the runtime-dispatched 4-lane inner
+        // kernel vs the forced-scalar fallback, plus the cache-blocked
+        // tiled path, all at the prefill matmul shape. The exhaustive
+        // fence lives in tests/kernel_equivalence.rs; here each pair's
+        // bit identity is re-asserted on the benched buffers so the perf
+        // record can never describe a kernel that drifted.
+        let mut c_scalar = vec![0.0f32; mm * mn];
+        set_scalar_kernel(true);
+        let r_mm_scalar = kb.run("kernel_matmul_scalar", || {
+            matmul(&a, &b2, mm, mk, mn, &mut c_scalar);
+            std::hint::black_box(&c_scalar);
+        });
+        set_scalar_kernel(false);
+        let r_mm_simd = kb.run("kernel_matmul_simd", || {
+            matmul(&a, &b2, mm, mk, mn, &mut c);
+            std::hint::black_box(&c);
+        });
+        let simd_identical =
+            c.iter().zip(&c_scalar).all(|(x, y)| x.to_bits() == y.to_bits());
+        anyhow::ensure!(simd_identical, "SIMD matmul drifted from the scalar kernel's bits");
+        let mut c_tiled = vec![0.0f32; mm * mn];
+        let r_mm_tiled = kb.run("kernel_matmul_tiled", || {
+            matmul_tiled(&a, &b2, mm, mk, mn, &mut c_tiled);
+            std::hint::black_box(&c_tiled);
+        });
+        let tiled_identical =
+            c.iter().zip(&c_tiled).all(|(x, y)| x.to_bits() == y.to_bits());
+        anyhow::ensure!(tiled_identical, "tiled matmul drifted from the flat kernel's bits");
+
+        // --- Stacked tree verify: k branch suffixes against the shared
+        // prefix as ONE batched target forward ("after") vs the retained
+        // sequential extend/rollback reference ("before"). Row bit
+        // identity is asserted before timing.
+        let k_branches = 4usize;
+        let gamma = 3usize;
+        let n_hist2 = 192usize;
+        let mut vs = target.begin_cached(&hist[..n_hist2 * p], n_hist2).unwrap();
+        let mut vrng = Rng::new(9);
+        let branches: Vec<f32> =
+            (0..k_branches * gamma * p).map(|_| vrng.normal() as f32).collect();
+        let mut srows: Vec<f32> = Vec::new();
+        anyhow::ensure!(
+            vs.verify_stacked(&branches, k_branches, gamma, &mut srows)?,
+            "native session refused the stacked verify path"
+        );
+        let mut seq_rows: Vec<f32> = Vec::with_capacity(srows.len());
+        for j in 0..k_branches {
+            let rows = vs.extend(&branches[j * gamma * p..(j + 1) * gamma * p], gamma)?;
+            seq_rows.extend_from_slice(&rows);
+            vs.rollback(gamma)?;
+        }
+        let stacked_identical = srows.len() == seq_rows.len()
+            && srows.iter().zip(&seq_rows).all(|(x, y)| x.to_bits() == y.to_bits());
+        anyhow::ensure!(
+            stacked_identical,
+            "stacked verify rows drifted from the sequential extend/rollback reference"
+        );
+        let r_vseq = kb.run("tree_verify_sequential_k4_g3", || {
+            for j in 0..k_branches {
+                std::hint::black_box(
+                    vs.extend(&branches[j * gamma * p..(j + 1) * gamma * p], gamma).unwrap(),
+                );
+                vs.rollback(gamma).unwrap();
+            }
+        });
+        let r_vstack = kb.run("tree_verify_stacked_k4_g3", || {
+            std::hint::black_box(
+                vs.verify_stacked(&branches, k_branches, gamma, &mut srows).unwrap(),
+            );
+        });
+
         let mut ktab = Table::new(
             "Perf: kernel layer (packed/arena/blocked vs naive reference)",
             &["op", "naive", "packed", "speedup"],
@@ -302,6 +380,24 @@ fn main() -> anyhow::Result<()> {
             ms(r_mmp.mean_ns),
             format!("{:.2}x", r_mm.mean_ns / r_mmp.mean_ns),
         ]);
+        ktab.row(vec![
+            format!("matmul {mm}x{mk}x{mn} (scalar->simd)"),
+            ms(r_mm_scalar.mean_ns),
+            ms(r_mm_simd.mean_ns),
+            format!("{:.2}x", r_mm_scalar.mean_ns / r_mm_simd.mean_ns),
+        ]);
+        ktab.row(vec![
+            format!("matmul {mm}x{mk}x{mn} (flat->tiled)"),
+            ms(r_mm_simd.mean_ns),
+            ms(r_mm_tiled.mean_ns),
+            format!("{:.2}x", r_mm_simd.mean_ns / r_mm_tiled.mean_ns),
+        ]);
+        ktab.row(vec![
+            "tree verify k4 g3 (seq->stacked)".into(),
+            ms(r_vseq.mean_ns),
+            ms(r_vstack.mean_ns),
+            format!("{:.2}x", r_vseq.mean_ns / r_vstack.mean_ns),
+        ]);
         ktab.print();
 
         // Machine-readable record for CI and the perf trajectory. Every
@@ -316,11 +412,19 @@ fn main() -> anyhow::Result<()> {
             sd_round_ref,
             r_mm.mean_ns,
             r_mmp.mean_ns,
+            r_mm_scalar.mean_ns,
+            r_mm_simd.mean_ns,
+            r_mm_tiled.mean_ns,
+            r_vseq.mean_ns,
+            r_vstack.mean_ns,
         ];
-        anyhow::ensure!(
-            vals.iter().all(|v| v.is_finite() && *v > 0.0),
-            "kernel bench produced non-finite timings: {vals:?}"
-        );
+        let all_finite = vals.iter().all(|v| v.is_finite() && *v > 0.0);
+        anyhow::ensure!(all_finite, "kernel bench produced non-finite timings: {vals:?}");
+        // `criteria_met` is the CI gate (scripts/ci.sh greps for it):
+        // every before/after pair in this record is bitwise identical and
+        // every timing is finite. The speedups themselves are informative
+        // (they vary with the host); the identity is the contract.
+        let criteria_met = all_finite && simd_identical && tiled_identical && stacked_identical;
         let json = format!(
             concat!(
                 "{{\n",
@@ -332,7 +436,14 @@ fn main() -> anyhow::Result<()> {
                 "  \"prefill_ns\": {{\"naive\": {pre_ref:.0}, \"packed\": {pre:.0}, \"speedup\": {pre_s:.3}}},\n",
                 "  \"ar_step_ns\": {{\"naive\": {ar_ref:.0}, \"packed\": {ar:.0}, \"speedup\": {ar_s:.3}}},\n",
                 "  \"sd_round_ns\": {{\"naive\": {sd_ref:.0}, \"packed\": {sd:.0}, \"speedup\": {sd_s:.3}}},\n",
-                "  \"matmul_ns\": {{\"serial\": {mm_s_ns:.0}, \"parallel\": {mm_p_ns:.0}, \"speedup\": {mm_sp:.3}}}\n",
+                "  \"matmul_ns\": {{\"serial\": {mm_s_ns:.0}, \"parallel\": {mm_p_ns:.0}, \"speedup\": {mm_sp:.3}}},\n",
+                "  \"simd_matmul_ns\": {{\"scalar\": {sc_ns:.0}, \"simd\": {si_ns:.0}, ",
+                "\"tiled\": {ti_ns:.0}, \"speedup\": {si_sp:.3}}},\n",
+                "  \"stacked_verify_ns\": {{\"sequential\": {vq_ns:.0}, \"stacked\": {vk_ns:.0}, ",
+                "\"speedup\": {vk_sp:.3}, \"k\": {kb_k}, \"gamma\": {kb_g}}},\n",
+                "  \"criteria\": {{\"all_finite\": {fin}, \"simd_bitwise_identical\": {sid}, ",
+                "\"tiled_bitwise_identical\": {tid}, \"stacked_bitwise_identical\": {std_}, ",
+                "\"criteria_met\":{met}}}\n",
                 "}}\n"
             ),
             threads = pool.size(),
@@ -355,6 +466,20 @@ fn main() -> anyhow::Result<()> {
             mm_s_ns = r_mm.mean_ns,
             mm_p_ns = r_mmp.mean_ns,
             mm_sp = r_mm.mean_ns / r_mmp.mean_ns,
+            sc_ns = r_mm_scalar.mean_ns,
+            si_ns = r_mm_simd.mean_ns,
+            ti_ns = r_mm_tiled.mean_ns,
+            si_sp = r_mm_scalar.mean_ns / r_mm_simd.mean_ns,
+            vq_ns = r_vseq.mean_ns,
+            vk_ns = r_vstack.mean_ns,
+            vk_sp = r_vseq.mean_ns / r_vstack.mean_ns,
+            kb_k = k_branches,
+            kb_g = gamma,
+            fin = all_finite,
+            sid = simd_identical,
+            tid = tiled_identical,
+            std_ = stacked_identical,
+            met = criteria_met,
         );
         std::fs::create_dir_all("results")?;
         std::fs::write("results/BENCH_perf_hotpath.json", &json)?;

@@ -21,12 +21,21 @@
 //! full-γ accepted runs track the independent-branch theory
 //! `E[L_k] − 1 = Σ(1 − (1 − αⁱ)^k)`, and every recorded number is
 //! finite.
+//!
+//! SIMD + stacked-GEMM PR addition: a native (kernel-layer) decode pair
+//! re-runs the same tree workload with the stacked verify toggled on and
+//! off — one batched target forward per round vs the retained sequential
+//! extend/rollback reference. Bit identity of the emitted patches is
+//! asserted in-bench, the per-decode times land in the JSON record, and
+//! the identity folds into `criteria_met`.
 
 use std::collections::BTreeMap;
+use std::time::Instant;
 
 use stride::data::Dataset;
-use stride::models::AnalyticBackend;
-use stride::specdec::{sd_generate_tree, SpecConfig};
+use stride::models::{AnalyticBackend, NativeBackend};
+use stride::nn::{ModelDims, NativeModel};
+use stride::specdec::{sd_generate_tree, set_stacked_verify, SpecConfig};
 use stride::theory;
 use stride::util::json::Json;
 use stride::util::stats::gaussian_overlap;
@@ -239,6 +248,53 @@ fn main() -> anyhow::Result<()> {
         ]));
     }
 
+    // --- Stacked verify on a native (kernel-layer) pair: the same tree
+    // workload, toggled between the stacked batched verify and the
+    // retained sequential reference. The emitted bits must match decode
+    // for decode (the tests/tree_equivalence.rs wall, re-asserted on the
+    // benched workload); the times record what the fusion buys here.
+    let ndims = ModelDims { patch: PATCH, n_ctx: 64, d_model: 32, n_layers: 2, n_heads: 4, d_ff: 64 };
+    let ddims = ModelDims { patch: PATCH, n_ctx: 64, d_model: 16, n_layers: 1, n_heads: 2, d_ff: 32 };
+    let nt = NativeBackend::new(NativeModel::random("nt", ndims, 51));
+    let nd = NativeBackend::new(NativeModel::random("nd", ddims, 52));
+    let n_decodes = if quick { 4usize } else { 12 };
+    let mut stacked_ns = 0.0f64;
+    let mut seq_ns = 0.0f64;
+    let mut stacked_identical = true;
+    {
+        let mut ncfg = spec;
+        ncfg.gamma = GAMMA;
+        ncfg.k = 4;
+        for w in 0..n_decodes {
+            let hist = &histories[w % REGIMES.len()][w % histories[0].len()];
+            ncfg.seed = 0x57AC_0000u64.wrapping_add(w as u64 * 0x9E37_79B9);
+            set_stacked_verify(true);
+            let t0 = Instant::now();
+            let on = sd_generate_tree(&nt, &nd, hist, hist.len() / PATCH, HORIZON, &ncfg)?;
+            stacked_ns += t0.elapsed().as_nanos() as f64;
+            set_stacked_verify(false);
+            let t1 = Instant::now();
+            let off = sd_generate_tree(&nt, &nd, hist, hist.len() / PATCH, HORIZON, &ncfg)?;
+            seq_ns += t1.elapsed().as_nanos() as f64;
+            set_stacked_verify(true);
+            stacked_identical &= on.patches.len() == off.patches.len()
+                && on.patches.iter().zip(&off.patches).all(|(x, y)| x.to_bits() == y.to_bits());
+        }
+    }
+    let stacked_per = stacked_ns / n_decodes as f64;
+    let seq_per = seq_ns / n_decodes as f64;
+    anyhow::ensure!(
+        stacked_identical,
+        "stacked verify diverged from the sequential reference on the benched workload"
+    );
+    println!(
+        "stacked verify (native, k=4, g={GAMMA}): {:.3}ms/decode vs sequential {:.3}ms/decode \
+         ({:.2}x), bits identical",
+        stacked_per / 1e6,
+        seq_per / 1e6,
+        seq_per / stacked_per.max(1e-9),
+    );
+
     // --- Criteria.
     let k1 = overall(1);
     let k4 = overall(4);
@@ -252,7 +308,7 @@ fn main() -> anyhow::Result<()> {
     let theory_tol = if quick { 0.2 } else { 0.15 };
     let theory_tracks = max_theory_err < theory_tol;
 
-    let mut all_vals: Vec<f64> = vec![max_theory_err];
+    let mut all_vals: Vec<f64> = vec![max_theory_err, stacked_per, seq_per];
     for &k in KS {
         let t = overall(k);
         all_vals.extend([t.mean_accepted(), t.full_gamma_mean_accepted(), t.throughput()]);
@@ -288,10 +344,23 @@ fn main() -> anyhow::Result<()> {
         })
         .collect();
 
-    let criteria_met = k4_longer_overall && k4_longer_everywhere && theory_tracks;
+    let criteria_met =
+        k4_longer_overall && k4_longer_everywhere && theory_tracks && stacked_identical;
     let j = Json::obj(vec![
         ("bench", Json::from("tree_speculation")),
         ("quick", Json::from(quick)),
+        (
+            "stacked_verify",
+            Json::obj(vec![
+                ("decodes", Json::from(n_decodes)),
+                ("k", Json::from(4usize)),
+                ("gamma", Json::from(GAMMA)),
+                ("stacked_ns_per_decode", Json::Num(stacked_per)),
+                ("sequential_ns_per_decode", Json::Num(seq_per)),
+                ("speedup", Json::Num(seq_per / stacked_per.max(1e-9))),
+                ("bitwise_identical", Json::from(stacked_identical)),
+            ]),
+        ),
         (
             "config",
             Json::obj(vec![
@@ -315,6 +384,7 @@ fn main() -> anyhow::Result<()> {
                 ("k4_longer_every_regime", Json::from(k4_longer_everywhere)),
                 ("max_theory_abs_error", Json::Num(max_theory_err)),
                 ("theory_tolerance", Json::Num(theory_tol)),
+                ("stacked_verify_bitwise_identical", Json::from(stacked_identical)),
                 ("criteria_met", Json::from(criteria_met)),
             ]),
         ),
@@ -327,7 +397,8 @@ fn main() -> anyhow::Result<()> {
         criteria_met,
         "tree speculation failed its acceptance criteria: k4 > k1 overall: \
          {k4_longer_overall}, per-regime: {k4_longer_everywhere}, \
-         max theory error {max_theory_err:.3} (need < {theory_tol})"
+         max theory error {max_theory_err:.3} (need < {theory_tol}), \
+         stacked verify bitwise identical: {stacked_identical}"
     );
     println!(
         "criteria met: k=4 accepted run {:.3} vs k=1 {:.3}, theory tracked within {:.3}",

@@ -13,12 +13,25 @@
 //!   reserved to `max_ctx` up front and the forward arena lives inside the
 //!   `KvCache`, so a steady-state `extend` heap-allocates only the
 //!   trait-mandated return `Vec` (pinned by `tests/alloc_discipline.rs`).
-//! * **Parallel batched verify** — [`NativeBatchSession::extend`] fans the
-//!   per-sequence incremental forwards across the shared worker pool
+//! * **Stacked lockstep rounds** — when every addressed sequence sits at
+//!   the same length, [`NativeBatchSession::extend`] folds the whole round
+//!   into ONE stacked forward ([`NativeModel::forward_cached_lockstep`]):
+//!   every GEMM spans `b*k` rows instead of `b` narrow calls. Bitwise
+//!   identical to the serial loop (pinned by
+//!   `tests/kernel_equivalence.rs`).
+//! * **Parallel batched verify** — when lengths diverge,
+//!   [`NativeBatchSession::extend`] fans the per-sequence incremental
+//!   forwards across the shared worker pool
 //!   ([`crate::util::threadpool::global_pool`]), so a lockstep round costs
 //!   max-of-sequences wall clock instead of sum. Each sequence runs the
 //!   identical serial code path, so results are bitwise independent of
 //!   the thread count (pinned by `tests/kernel_equivalence.rs`).
+//! * **Stacked tree verify** — [`NativeSession`] overrides
+//!   `DecodeSession::verify_stacked`: k branch suffixes are verified by
+//!   ONE stacked target forward against the immutable shared-prefix cache
+//!   ([`NativeModel::forward_cached_stacked`]), bitwise identical to the
+//!   sequential extend/rollback loop (pinned by
+//!   `tests/tree_equivalence.rs`).
 
 use std::sync::Mutex;
 
@@ -26,7 +39,8 @@ use anyhow::Result;
 
 use super::session::{BatchDecodeSession, DecodeSession};
 use super::Backend;
-use crate::nn::{KvCache, ModelDims, NativeModel, Weights};
+use crate::nn::kernel::MAX_STACK_LANES;
+use crate::nn::{ForwardScratch, KvCache, ModelDims, NativeModel, StackedLanes, Weights};
 use crate::runtime::{Manifest, ModelEntry};
 use crate::util::stats::Summary;
 use crate::util::tensor::Tensor;
@@ -93,7 +107,7 @@ impl NativeBackend {
             .iter()
             .map(|(h, n)| NativeSession::new(self, h, *n))
             .collect::<Result<Vec<_>>>()?;
-        Ok(NativeBatchSession { seqs })
+        Ok(NativeBatchSession { seqs, stack: None, stack_rows: 0 })
     }
 }
 
@@ -111,6 +125,10 @@ pub struct NativeSession<'a> {
     tokens: Vec<f32>,
     means: Vec<f32>,
     forwards: usize,
+    /// Per-branch K/V lanes for the stacked tree verify
+    /// (`DecodeSession::verify_stacked`); empty until the first k > 1
+    /// round, then reused at its high-water mark.
+    lanes: StackedLanes,
 }
 
 impl<'a> NativeSession<'a> {
@@ -129,6 +147,7 @@ impl<'a> NativeSession<'a> {
             tokens,
             means: Vec::with_capacity(cap),
             forwards: 0,
+            lanes: StackedLanes::new(),
         };
         Self::run_forward(
             s.backend,
@@ -261,6 +280,53 @@ impl DecodeSession for NativeSession<'_> {
     fn forwards(&self) -> usize {
         self.forwards
     }
+
+    fn verify_stacked(
+        &mut self,
+        branches: &[f32],
+        b: usize,
+        k: usize,
+        out: &mut Vec<f32>,
+    ) -> Result<bool> {
+        let p = self.patch();
+        anyhow::ensure!(b >= 1 && k >= 1, "verify_stacked needs b >= 1 and k >= 1");
+        anyhow::ensure!(
+            branches.len() == b * k * p,
+            "verify_stacked: branch buffer has {} values, want b*k*patch = {}",
+            branches.len(),
+            b * k * p
+        );
+        let n0 = self.len();
+        anyhow::ensure!(n0 >= 1, "verify_stacked on an empty session");
+        // Fall back to the sequential per-branch path (Ok(false)) when the
+        // stacked kernel cannot apply: reference-kernel mode (the wall's
+        // baseline), more branches than lanes, or a round the caller
+        // should have made room for first.
+        if self.backend.model.reference_kernel()
+            || b > MAX_STACK_LANES
+            || n0 + k > self.max_ctx()
+        {
+            return Ok(false);
+        }
+        let t0 = std::time::Instant::now();
+        let rows = self
+            .backend
+            .model
+            .forward_cached_stacked(&self.cache, &mut self.lanes, branches, b, k)?;
+        // Row 0 of every branch's (k+1)-row result is the shared tip mean —
+        // already computed by the forward that produced position n0-1's
+        // output, exactly as the sequential extend() returns it.
+        out.clear();
+        out.reserve(b * (k + 1) * p);
+        let tip = &self.means[(n0 - 1) * p..n0 * p];
+        for lane in 0..b {
+            out.extend_from_slice(tip);
+            out.extend_from_slice(&rows[lane * k * p..(lane + 1) * k * p]);
+        }
+        self.backend.timings.lock().unwrap().push(t0.elapsed().as_secs_f64());
+        self.forwards += 1;
+        Ok(true)
+    }
 }
 
 /// Per-sequence cached sessions advanced in lockstep. Batched reads fan
@@ -271,6 +337,12 @@ impl DecodeSession for NativeSession<'_> {
 /// acceptance lengths diverge.
 pub struct NativeBatchSession<'a> {
     seqs: Vec<NativeSession<'a>>,
+    /// Reusable arena for the aligned-lengths stacked lockstep path; built
+    /// lazily at the first aligned round and grown to a high-water row
+    /// count, so steady-state stacked rounds allocate nothing beyond the
+    /// trait-mandated return `Vec`s.
+    stack: Option<ForwardScratch>,
+    stack_rows: usize,
 }
 
 // The batched-verify fan-out smuggles `&mut NativeSession` across worker
@@ -315,6 +387,79 @@ impl NativeBatchSession<'_> {
             k * m.n_layers * (m.d_model * (4 * m.d_model + 3 * m.d_ff) + n * m.d_model);
         per_seq >= PAR_MIN_SEQ_FLOPS
     }
+
+    /// Aligned-lengths fast path: when every addressed sequence sits at
+    /// the same length, advance them all with ONE stacked forward
+    /// ([`NativeModel::forward_cached_lockstep`]) — every GEMM in the
+    /// round spans `b*k` rows instead of `b` separate `k`-row calls.
+    /// Returns `Ok(None)` (fall through to the pool fan-out / serial
+    /// loop) when lengths diverge, fewer than two sequences are
+    /// addressed, or the reference kernel is active. Bitwise identical to
+    /// the serial path (pinned by `tests/kernel_equivalence.rs`).
+    fn try_extend_stacked(
+        &mut self,
+        idx: &[usize],
+        patches: &[f32],
+        k: usize,
+    ) -> Result<Option<Vec<f32>>> {
+        let p = self.patch();
+        let b = idx.len();
+        if b < 2
+            || !idx.windows(2).all(|w| w[0] < w[1])
+            || self.seqs[idx[0]].backend.model.reference_kernel()
+        {
+            return Ok(None);
+        }
+        let n_pre = self.seqs[idx[0]].len();
+        if idx.iter().any(|&i| self.seqs[i].len() != n_pre) {
+            return Ok(None);
+        }
+        // Same length + same max_ctx => the window slide (if any) is
+        // identical per sequence, so lengths stay aligned afterwards.
+        for &i in idx {
+            self.seqs[i].room_for(k)?;
+        }
+        let n0 = self.seqs[idx[0]].len();
+        anyhow::ensure!(n0 >= 1, "extend on an empty session");
+        let rows = b * k;
+        let backend = self.seqs[idx[0]].backend;
+        if self.stack.is_none() || self.stack_rows < rows {
+            self.stack_rows = self.stack_rows.max(rows);
+            self.stack = Some(ForwardScratch::for_prefill(backend.dims(), self.stack_rows));
+        }
+        // Disjoint `&mut` per cache via split_at_mut walks (idx is
+        // strictly increasing — checked above).
+        let mut refs: Vec<&mut KvCache> = Vec::with_capacity(b);
+        let mut rest: &mut [NativeSession] = &mut self.seqs;
+        let mut prev = 0usize;
+        for &i in idx {
+            let (_, tail) = rest.split_at_mut(i - prev);
+            let (one, tail) = tail.split_at_mut(1);
+            refs.push(&mut one[0].cache);
+            rest = tail;
+            prev = i + 1;
+        }
+        let t0 = std::time::Instant::now();
+        let scratch = self.stack.as_mut().expect("stacked scratch sized above");
+        let rows_out = backend.model.forward_cached_lockstep(
+            &mut refs,
+            scratch,
+            &patches[..rows * p],
+            k,
+        )?;
+        // One fused forward, one timing record.
+        backend.timings.lock().unwrap().push(t0.elapsed().as_secs_f64());
+        let n = n0 + k;
+        let mut out = Vec::with_capacity(b * (k + 1) * p);
+        for (ai, &i) in idx.iter().enumerate() {
+            let seq = &mut self.seqs[i];
+            seq.means.extend_from_slice(&rows_out[ai * k * p..(ai + 1) * k * p]);
+            seq.tokens.extend_from_slice(&patches[ai * k * p..(ai + 1) * k * p]);
+            seq.forwards += 1;
+            out.extend_from_slice(&seq.means[(n0 - 1) * p..n * p]);
+        }
+        Ok(Some(out))
+    }
 }
 
 impl BatchDecodeSession for NativeBatchSession<'_> {
@@ -344,6 +489,10 @@ impl BatchDecodeSession for NativeBatchSession<'_> {
         let p = self.patch();
         anyhow::ensure!(patches.len() >= idx.len() * k * p, "patch buffer too short");
         anyhow::ensure!(idx.iter().all(|&i| i < self.seqs.len()), "sequence index out of range");
+        // Aligned lengths: one stacked forward for the whole round.
+        if let Some(out) = self.try_extend_stacked(idx, patches, k)? {
+            return Ok(out);
+        }
         if !self.parallel_ok(idx, k) {
             let mut out = Vec::with_capacity(idx.len() * (k + 1) * p);
             for (ai, &i) in idx.iter().enumerate() {
@@ -555,6 +704,61 @@ mod tests {
         let _ = rep.forward(&toks, 6).unwrap();
         assert!(fresh.mean_secs().is_nan(), "replica timings leaked into source");
         assert!(rep.mean_secs() > 0.0);
+    }
+
+    #[test]
+    fn batched_stacked_extend_matches_serial_singles() {
+        // Equal-length histories: the stacked lockstep path engages and
+        // must reproduce solo sessions bit for bit, advancing every cache.
+        let b = NativeBackend::new(tiny_model(9));
+        let mk = |seed: u64, n: usize| -> Vec<f32> {
+            (0..n * 4).map(|i| ((i as f32 + seed as f32) * 0.29).sin()).collect()
+        };
+        let h1 = mk(1, 4);
+        let h2 = mk(2, 4);
+        let h3 = mk(3, 4);
+        let tasks: Vec<(&[f32], usize)> = vec![(&h1, 4), (&h2, 4), (&h3, 4)];
+        let mut bs = b.begin_cached_batch(&tasks).unwrap();
+        let flat = mk(9, 6); // 3 sequences x 2 patches
+        let batch_rows = bs.extend(&[0, 1, 2], &flat, 2).unwrap();
+        assert_eq!(bs.len(0), 6, "stacked lockstep must advance the caches");
+        for (ai, h) in [&h1, &h2, &h3].iter().enumerate() {
+            let mut solo = b.begin_cached(h, 4).unwrap();
+            let rows = solo.extend(&flat[ai * 2 * 4..(ai + 1) * 2 * 4], 2).unwrap();
+            let got = &batch_rows[ai * 3 * 4..(ai + 1) * 3 * 4];
+            for (x, y) in rows.iter().zip(got) {
+                assert_eq!(x.to_bits(), y.to_bits(), "sequence {ai} diverged under stacked lockstep");
+            }
+        }
+    }
+
+    #[test]
+    fn verify_stacked_matches_sequential_extend_rollback() {
+        let b = NativeBackend::new(tiny_model(10));
+        let toks: Vec<f32> = (0..4 * 4).map(|i| (i as f32 * 0.21).sin()).collect();
+        let mut sess = b.begin_cached(&toks, 4).unwrap();
+        let branches: Vec<f32> = (0..3 * 2 * 4).map(|i| (i as f32 * 0.15).cos()).collect();
+        let mut out = Vec::new();
+        let used = sess.verify_stacked(&branches, 3, 2, &mut out).unwrap();
+        assert!(used, "kernel-layer session must take the stacked path");
+        assert_eq!(sess.len(), 4, "stacked verify must not advance the session");
+        assert_eq!(out.len(), 3 * 3 * 4, "want b * (k+1) * patch rows");
+        for lane in 0..3 {
+            let rows = sess.extend(&branches[lane * 8..(lane + 1) * 8], 2).unwrap();
+            sess.rollback(2).unwrap();
+            let got = &out[lane * 12..(lane + 1) * 12];
+            for (x, y) in rows.iter().zip(got) {
+                assert_eq!(x.to_bits(), y.to_bits(), "lane {lane} diverged from extend/rollback");
+            }
+        }
+        // The reference kernel declines (the equivalence wall's baseline),
+        // as does a round that would overflow the context window.
+        let mut rb = NativeBackend::new(tiny_model(10));
+        rb.set_reference_kernel(true);
+        let mut rsess = rb.begin_cached(&toks, 4).unwrap();
+        assert!(!rsess.verify_stacked(&branches, 3, 2, &mut out).unwrap());
+        let wide = vec![0.1f32; 2 * 5 * 4];
+        assert!(!sess.verify_stacked(&wide, 2, 5, &mut out).unwrap(), "4 + 5 > n_ctx 8");
     }
 
     #[test]

@@ -91,6 +91,30 @@ pub trait DecodeSession {
     fn evict_to(&mut self, keep: usize) -> Result<()>;
     /// Sequential forward passes run so far (perf accounting).
     fn forwards(&self) -> usize;
+    /// Verify `b` candidate branch suffixes of `k` patches each (flat
+    /// `[b, k, patch]`, lane-major) against the current context in ONE
+    /// stacked forward, **without changing session state**. On success,
+    /// fills `out` with flat `[b, k+1, patch]` means — per branch, the
+    /// same `(k+1)`-row convention as [`DecodeSession::extend`] (row 0 is
+    /// the shared tip mean) — and returns `true`.
+    ///
+    /// The default returns `Ok(false)`: "no stacked path here" — the
+    /// caller (the tree engine) falls back to sequential per-branch
+    /// extend + rollback, which is retained as the reference and must
+    /// stay bit-identical (`tests/tree_equivalence.rs`). Implementations
+    /// must consume no RNG and produce rows bitwise equal to the
+    /// sequential fallback's. `out` is caller-reused across rounds so the
+    /// steady state stays allocation-free.
+    fn verify_stacked(
+        &mut self,
+        branches: &[f32],
+        b: usize,
+        k: usize,
+        out: &mut Vec<f32>,
+    ) -> Result<bool> {
+        let _ = (branches, b, k, out);
+        Ok(false)
+    }
 }
 
 /// Lockstep decode state for `b` independent sequences. Mirrors

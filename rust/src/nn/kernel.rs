@@ -16,8 +16,11 @@
 //!   arena inside the cache, so a steady-state `extend` performs **zero
 //!   heap allocations** (pinned by `tests/alloc_discipline.rs`).
 //! * **Slice kernels** — the block functions below ([`embed_tokens`],
-//!   [`qkv_rows`], [`append_kv`], [`attn_rows`], [`proj_residual_rows`],
-//!   [`mlp_rows`], [`head_rows`]) operate on flat `&[f32]` row buffers and
+//!   [`qkv_rows`], [`append_kv`], [`attn_rows`] and its split-store twin
+//!   [`attn_rows_split`], [`proj_residual_rows`], [`mlp_rows`],
+//!   [`head_rows`], plus the batched [`matmul_stacked`] entry that folds B
+//!   same-shape blocks into one GEMM) operate on flat `&[f32]` row buffers
+//!   and
 //!   are shared verbatim by the stateless batched forward and the
 //!   incremental cached forward, which is what keeps the two paths equal
 //!   row-for-row (the cache-equivalence invariant from the decode-session
@@ -159,6 +162,58 @@ pub struct ForwardScratch {
     pub(crate) vbuf: Vec<f32>,
     /// Model output `[rows, patch]`.
     pub(crate) out: Vec<f32>,
+}
+
+/// Most stacked lanes (tree branches / lockstep sequences) one
+/// `forward_cached_stacked` call can carry. Matches `specdec`'s
+/// `MAX_TREE_K` so every admissible tree round fits; requests beyond it
+/// get a typed error from [`matmul_stacked`]/the stacked forward (pinned
+/// by `tests/fuzz_lite.rs`), never UB or a panic.
+pub const MAX_STACK_LANES: usize = 16;
+
+/// Stacked batched GEMM: treat `batch` contiguous `[m, k]` blocks of A as
+/// one `[batch*m, k] x [k, n]` call — the enabler for verifying k tree
+/// branches (or B lockstep sequences) in ONE target forward instead of
+/// B narrow ones. Because every GEMM output row depends only on its own A
+/// row and all of B, the stacked result is **bitwise identical** to
+/// looping `matmul` over the blocks (pinned by
+/// `tests/kernel_equivalence.rs`), and large stacks still ride
+/// `matmul_auto`'s row-parallel + tiled dispatch.
+///
+/// Unlike the asserting [`crate::util::tensor::matmul`], shape mismatches
+/// here return typed errors: the stacked entry sits on the serving path
+/// (tree verify under the PR 7 replica supervisor), where a fuzzable
+/// mis-size must surface as `Err`, not a panic.
+pub fn matmul_stacked(
+    a: &[f32],
+    b: &[f32],
+    batch: usize,
+    m: usize,
+    k: usize,
+    n: usize,
+    c: &mut [f32],
+) -> Result<()> {
+    ensure!(batch >= 1, "matmul_stacked: batch must be >= 1");
+    ensure!(m >= 1 && k >= 1 && n >= 1, "matmul_stacked: zero-dim shape ({m}, {k}, {n})");
+    let rows = batch
+        .checked_mul(m)
+        .filter(|r| r.checked_mul(k).is_some() && r.checked_mul(n).is_some())
+        .ok_or_else(|| anyhow::anyhow!("matmul_stacked: batch*m overflows ({batch} x {m})"))?;
+    ensure!(
+        a.len() == rows * k,
+        "matmul_stacked: A has {} elems, want batch*m*k = {}",
+        a.len(),
+        rows * k
+    );
+    ensure!(b.len() == k * n, "matmul_stacked: B has {} elems, want k*n = {}", b.len(), k * n);
+    ensure!(
+        c.len() == rows * n,
+        "matmul_stacked: C has {} elems, want batch*m*n = {}",
+        c.len(),
+        rows * n
+    );
+    matmul_auto(a, b, rows, k, n, c);
+    Ok(())
 }
 
 /// Largest `k` a steady-state decode read can carry: `SpecConfig::gamma`
@@ -310,6 +365,65 @@ pub fn attn_rows(
     }
 }
 
+/// [`attn_rows`] over a **split** K/V store: positions `0..n0` read the
+/// shared-prefix cache rows (`kpre`/`vpre`, untouched — they come in
+/// behind `&`), positions `n0..n0+rows` read a per-lane scratch buffer
+/// (`klane`/`vlane`, rows `0..rows`). This is how one stacked forward
+/// verifies k branch suffixes against ONE committed prefix without
+/// copying or mutating the cache: each branch appends its K/V to its own
+/// disjoint lane. Per (row, head, j) the arithmetic — dot, scale,
+/// softmax, weighted-V accumulation in ascending j — is line-for-line
+/// [`attn_rows`] with the row source switched at `n0`, so the output is
+/// bitwise identical to having appended the lane rows into the cache
+/// (the sequential verify path).
+#[allow(clippy::too_many_arguments)]
+pub fn attn_rows_split(
+    qkv: &[f32],
+    kpre: &[f32],
+    vpre: &[f32],
+    klane: &[f32],
+    vlane: &[f32],
+    n0: usize,
+    rows: usize,
+    h: usize,
+    dh: usize,
+    scale: f32,
+    scores: &mut [f32],
+    concat: &mut [f32],
+) {
+    let d = h * dh;
+    for t in 0..rows {
+        let g = n0 + t;
+        for hi in 0..h {
+            let q = &qkv[t * 3 * d + hi * dh..t * 3 * d + hi * dh + dh];
+            let srow = &mut scores[..=g];
+            for (j, sv) in srow.iter_mut().enumerate() {
+                let krow = if j < n0 {
+                    &kpre[j * d + hi * dh..j * d + hi * dh + dh]
+                } else {
+                    let jl = j - n0;
+                    &klane[jl * d + hi * dh..jl * d + hi * dh + dh]
+                };
+                *sv = q.iter().zip(krow).map(|(a, c)| a * c).sum::<f32>() * scale;
+            }
+            softmax_row(srow);
+            let orow = &mut concat[t * d + hi * dh..t * d + hi * dh + dh];
+            orow.fill(0.0);
+            for (j, &wj) in srow.iter().enumerate() {
+                let vrow = if j < n0 {
+                    &vpre[j * d + hi * dh..j * d + hi * dh + dh]
+                } else {
+                    let jl = j - n0;
+                    &vlane[jl * d + hi * dh..jl * d + hi * dh + dh]
+                };
+                for (o, vv) in orow.iter_mut().zip(vrow) {
+                    *o += wj * vv;
+                }
+            }
+        }
+    }
+}
+
 /// Attention output projection plus residual: `x += concat x wo`.
 pub fn proj_residual_rows(
     lw: &LayerWeights,
@@ -406,6 +520,63 @@ mod tests {
         assert_eq!(s.kbuf.len(), 0, "cached path reads the KvCache ring buffers");
         assert_eq!(s.vbuf.len(), 0);
         assert_eq!(s.x.len(), 8 * 4);
+    }
+
+    #[test]
+    fn stacked_matmul_matches_looped_and_types_errors() {
+        let mut rng = crate::util::rng::Rng::new(41);
+        let (batch, m, k, n) = (3usize, 2usize, 5usize, 4usize);
+        let a: Vec<f32> = (0..batch * m * k).map(|_| rng.normal() as f32).collect();
+        let b: Vec<f32> = (0..k * n).map(|_| rng.normal() as f32).collect();
+        let mut stacked = vec![0.0; batch * m * n];
+        matmul_stacked(&a, &b, batch, m, k, n, &mut stacked).unwrap();
+        for bi in 0..batch {
+            let mut single = vec![0.0; m * n];
+            crate::util::tensor::matmul(&a[bi * m * k..(bi + 1) * m * k], &b, m, k, n, &mut single);
+            for (i, (x, y)) in single.iter().zip(&stacked[bi * m * n..(bi + 1) * m * n]).enumerate() {
+                assert_eq!(x.to_bits(), y.to_bits(), "stacked drift at block {bi} elem {i}");
+            }
+        }
+        // Typed errors, not panics.
+        assert!(matmul_stacked(&a, &b, 0, m, k, n, &mut stacked).is_err(), "batch 0");
+        assert!(matmul_stacked(&a, &b, batch, 0, k, n, &mut stacked).is_err(), "zero dim");
+        assert!(matmul_stacked(&a[1..], &b, batch, m, k, n, &mut stacked).is_err(), "short A");
+        assert!(matmul_stacked(&a, &b[1..], batch, m, k, n, &mut stacked).is_err(), "short B");
+        assert!(matmul_stacked(&a, &b, batch, m, k, n, &mut stacked[1..]).is_err(), "short C");
+        assert!(matmul_stacked(&a, &b, usize::MAX, 2, k, n, &mut stacked).is_err(), "overflow");
+    }
+
+    #[test]
+    fn split_attention_bitwise_equals_contiguous() {
+        // attn_rows over [prefix | lane] appended contiguously must equal
+        // attn_rows_split reading the two stores separately.
+        let mut rng = crate::util::rng::Rng::new(43);
+        let (h, dh, n0, rows) = (2usize, 3usize, 4usize, 3usize);
+        let d = h * dh;
+        let qkv: Vec<f32> = (0..rows * 3 * d).map(|_| rng.normal() as f32).collect();
+        let kall: Vec<f32> = (0..(n0 + rows) * d).map(|_| rng.normal() as f32).collect();
+        let vall: Vec<f32> = (0..(n0 + rows) * d).map(|_| rng.normal() as f32).collect();
+        let mut scores = vec![0.0; n0 + rows];
+        let mut c0 = vec![0.0; rows * d];
+        let mut c1 = vec![0.0; rows * d];
+        attn_rows(&qkv, &kall, &vall, n0, rows, h, dh, 0.5, &mut scores, &mut c0);
+        attn_rows_split(
+            &qkv,
+            &kall[..n0 * d],
+            &vall[..n0 * d],
+            &kall[n0 * d..],
+            &vall[n0 * d..],
+            n0,
+            rows,
+            h,
+            dh,
+            0.5,
+            &mut scores,
+            &mut c1,
+        );
+        for (i, (x, y)) in c0.iter().zip(&c1).enumerate() {
+            assert_eq!(x.to_bits(), y.to_bits(), "split attention drift at {i}");
+        }
     }
 
     #[test]

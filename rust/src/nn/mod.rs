@@ -7,5 +7,5 @@ pub mod model;
 pub mod weights;
 
 pub use kernel::{ForwardScratch, LayerWeights, PackedWeights};
-pub use model::{KvCache, ModelDims, NativeModel};
+pub use model::{KvCache, ModelDims, NativeModel, StackedLanes};
 pub use weights::Weights;

@@ -300,6 +300,209 @@ impl NativeModel {
         kernel::head_rows(&self.pw, &mut s.x, k, d, p, &mut s.out);
     }
 
+    /// Stacked incremental forward: run `b` same-length suffixes of `k`
+    /// patches each (flat `[b, k, patch]`, lane-major) against ONE shared
+    /// committed prefix, in ONE pass of stacked GEMMs. The cache comes in
+    /// behind `&` — the type-level guarantee that the prefix is never
+    /// mutated — and each lane's K/V rows land in its own disjoint slice
+    /// of the [`StackedLanes`] arena, with attention reading prefix rows
+    /// from the cache and suffix rows from the lane
+    /// ([`kernel::attn_rows_split`]).
+    ///
+    /// Returns the `b*k` output rows (flat `[b, k, patch]`, lane-major),
+    /// borrowed from the lane arena. Every GEMM row and every attention
+    /// row depends only on its own lane's inputs plus the shared prefix,
+    /// so lane `j`'s rows are **bitwise identical** to a sequential
+    /// [`NativeModel::forward_cached`] of that lane's patches over the
+    /// same prefix (pinned by `tests/tree_equivalence.rs`'s stacked wall).
+    /// This is the "verify k draft branches in one wide target forward"
+    /// kernel from the paper's parallel-verification claim.
+    ///
+    /// Steady state is **zero heap allocations**: the arena grows to a
+    /// high-water mark on first use and is reused afterwards (pinned by
+    /// `tests/alloc_discipline.rs`). Shape violations — zero dims,
+    /// mis-sized token buffers, more lanes than
+    /// [`kernel::MAX_STACK_LANES`], overflowing the context window —
+    /// return typed errors, never UB or a panic (`tests/fuzz_lite.rs`).
+    /// Always runs the kernel layer, regardless of
+    /// [`NativeModel::set_reference`] (the reference wall compares against
+    /// the sequential path instead).
+    pub fn forward_cached_stacked<'s>(
+        &self,
+        cache: &KvCache,
+        lanes: &'s mut StackedLanes,
+        new_tokens: &[f32],
+        b: usize,
+        k: usize,
+    ) -> Result<&'s [f32]> {
+        let p = self.dims.patch;
+        let d = self.dims.d_model;
+        let h = self.dims.n_heads;
+        let dh = self.dims.d_head();
+        let f = self.dims.d_ff;
+        anyhow::ensure!(cache.dims == self.dims, "KV cache built for different dims");
+        anyhow::ensure!(b >= 1 && k >= 1, "forward_cached_stacked needs b >= 1 and k >= 1");
+        anyhow::ensure!(
+            b <= kernel::MAX_STACK_LANES,
+            "forward_cached_stacked: {b} lanes > MAX_STACK_LANES {}",
+            kernel::MAX_STACK_LANES
+        );
+        anyhow::ensure!(
+            new_tokens.len() == b * k * p,
+            "forward_cached_stacked: token buffer has {} values, want b*k*p = {}",
+            new_tokens.len(),
+            b * k * p
+        );
+        let n0 = cache.n;
+        anyhow::ensure!(
+            n0 + k <= self.dims.n_ctx,
+            "KV cache overflow: {n0} + {k} > n_ctx {}",
+            self.dims.n_ctx
+        );
+        lanes.ensure(&self.dims, b, k);
+        let rows = b * k;
+        let scale = 1.0 / (dh as f32).sqrt();
+        // Split the lane-arena borrow: per-layer lane K/V and the scratch
+        // are disjoint fields.
+        let StackedLanes {
+            k: ref mut lk,
+            v: ref mut lv,
+            scratch: ref mut sc,
+            rows: cap_rows,
+            ..
+        } = *lanes;
+        let stride = cap_rows * d;
+        let s = sc.as_mut().expect("ensure() populated the stacked scratch");
+        kernel::embed_tokens(&self.pw, new_tokens, rows, p, d, &mut s.x);
+        for lane in 0..b {
+            // Every lane sits at the same absolute positions n0..n0+k.
+            kernel::add_pos(&self.pw, d, n0, k, &mut s.x[lane * k * d..(lane + 1) * k * d]);
+        }
+        for (li, lw) in self.pw.layers.iter().enumerate() {
+            kernel::qkv_rows(lw, &s.x, rows, d, &mut s.normed, &mut s.qkv);
+            let kc = &cache.k[li];
+            let vc = &cache.v[li];
+            for lane in 0..b {
+                let q = &s.qkv[lane * k * 3 * d..(lane + 1) * k * 3 * d];
+                {
+                    let klane = &mut lk[li][lane * stride..lane * stride + k * d];
+                    let vlane = &mut lv[li][lane * stride..lane * stride + k * d];
+                    kernel::append_kv(q, k, d, 0, klane, vlane);
+                }
+                kernel::attn_rows_split(
+                    q,
+                    &kc[..n0 * d],
+                    &vc[..n0 * d],
+                    &lk[li][lane * stride..lane * stride + k * d],
+                    &lv[li][lane * stride..lane * stride + k * d],
+                    n0,
+                    k,
+                    h,
+                    dh,
+                    scale,
+                    &mut s.scores,
+                    &mut s.concat[lane * k * d..(lane + 1) * k * d],
+                );
+            }
+            kernel::proj_residual_rows(lw, &s.concat, rows, d, &mut s.proj, &mut s.x);
+            kernel::mlp_rows(lw, &mut s.x, rows, d, f, &mut s.normed, &mut s.gate, &mut s.up, &mut s.down);
+        }
+        kernel::head_rows(&self.pw, &mut s.x, rows, d, p, &mut s.out);
+        Ok(&s.out[..rows * p])
+    }
+
+    /// Lockstep incremental forward: advance `b` *independent* cached
+    /// sequences — all sitting at the same length `n0` — by the same `k`
+    /// patches each (flat `[b, k, patch]`, lane-major), with every GEMM in
+    /// the round stacked into one `[b*k, ·]` call. Unlike
+    /// [`NativeModel::forward_cached_stacked`] (k branches over ONE shared
+    /// prefix, cache immutable) this is the batched decoder's commit path:
+    /// each lane's K/V rows are appended into *its own* cache and each
+    /// cache advances to `n0 + k`.
+    ///
+    /// Attention stays per-lane (each lane reads only its own cache), and
+    /// every stacked GEMM row depends only on its own lane's activations,
+    /// so lane `j`'s output rows are **bitwise identical** to a serial
+    /// [`NativeModel::forward_cached`] on cache `j` (pinned by
+    /// `tests/kernel_equivalence.rs`). `scratch` must have capacity for
+    /// `b*k` rows; the caller owns and reuses it so steady-state lockstep
+    /// rounds allocate nothing. Always runs the kernel layer — callers
+    /// gate on [`NativeModel::reference_kernel`].
+    pub fn forward_cached_lockstep<'s>(
+        &self,
+        caches: &mut [&mut KvCache],
+        scratch: &'s mut ForwardScratch,
+        new_tokens: &[f32],
+        k: usize,
+    ) -> Result<&'s [f32]> {
+        let p = self.dims.patch;
+        let d = self.dims.d_model;
+        let h = self.dims.n_heads;
+        let dh = self.dims.d_head();
+        let f = self.dims.d_ff;
+        let b = caches.len();
+        anyhow::ensure!(b >= 1 && k >= 1, "forward_cached_lockstep needs b >= 1 and k >= 1");
+        let n0 = caches[0].n;
+        for c in caches.iter() {
+            anyhow::ensure!(c.dims == self.dims, "KV cache built for different dims");
+            anyhow::ensure!(
+                c.n == n0,
+                "lockstep caches must share a length: {} vs {n0}",
+                c.n
+            );
+        }
+        anyhow::ensure!(
+            n0 + k <= self.dims.n_ctx,
+            "KV cache overflow: {n0} + {k} > n_ctx {}",
+            self.dims.n_ctx
+        );
+        anyhow::ensure!(
+            new_tokens.len() == b * k * p,
+            "forward_cached_lockstep: token buffer has {} values, want b*k*p = {}",
+            new_tokens.len(),
+            b * k * p
+        );
+        let rows = b * k;
+        anyhow::ensure!(
+            rows <= scratch.capacity_rows(),
+            "lockstep scratch sized for {} rows, need {rows}",
+            scratch.capacity_rows()
+        );
+        let scale = 1.0 / (dh as f32).sqrt();
+        let s = scratch;
+        kernel::embed_tokens(&self.pw, new_tokens, rows, p, d, &mut s.x);
+        for lane in 0..b {
+            // All lanes sit at the same absolute positions n0..n0+k.
+            kernel::add_pos(&self.pw, d, n0, k, &mut s.x[lane * k * d..(lane + 1) * k * d]);
+        }
+        for (li, lw) in self.pw.layers.iter().enumerate() {
+            kernel::qkv_rows(lw, &s.x, rows, d, &mut s.normed, &mut s.qkv);
+            for (lane, cache) in caches.iter_mut().enumerate() {
+                let q = &s.qkv[lane * k * 3 * d..(lane + 1) * k * 3 * d];
+                kernel::append_kv(q, k, d, n0, &mut cache.k[li], &mut cache.v[li]);
+                kernel::attn_rows(
+                    q,
+                    &cache.k[li],
+                    &cache.v[li],
+                    n0,
+                    k,
+                    h,
+                    dh,
+                    scale,
+                    &mut s.scores,
+                    &mut s.concat[lane * k * d..(lane + 1) * k * d],
+                );
+            }
+            kernel::proj_residual_rows(lw, &s.concat, rows, d, &mut s.proj, &mut s.x);
+            kernel::mlp_rows(lw, &mut s.x, rows, d, f, &mut s.normed, &mut s.gate, &mut s.up, &mut s.down);
+        }
+        kernel::head_rows(&self.pw, &mut s.x, rows, d, p, &mut s.out);
+        for cache in caches.iter_mut() {
+            cache.n = n0 + k;
+        }
+        Ok(&s.out[..rows * p])
+    }
+
     // -----------------------------------------------------------------------
     // Reference (pre-kernel-layer) implementation: string-keyed weight
     // lookups, per-call allocation, naive matmul. The "before" side of the
@@ -523,12 +726,12 @@ impl NativeModel {
 /// to stateless cost at the window boundary — the price of keeping
 /// eviction bit-equal to the stateless sliding-window rule.
 pub struct KvCache {
-    dims: ModelDims,
+    pub(crate) dims: ModelDims,
     /// Valid rows (patches) currently cached.
-    n: usize,
-    k: Vec<Vec<f32>>,
-    v: Vec<Vec<f32>>,
-    scratch: ForwardScratch,
+    pub(crate) n: usize,
+    pub(crate) k: Vec<Vec<f32>>,
+    pub(crate) v: Vec<Vec<f32>>,
+    pub(crate) scratch: ForwardScratch,
 }
 
 impl KvCache {
@@ -569,6 +772,63 @@ impl KvCache {
     pub fn truncate(&mut self, n: usize) {
         assert!(n <= self.n, "KvCache::truncate beyond cached rows");
         self.n = n;
+    }
+}
+
+/// Per-branch scratch lanes for [`NativeModel::forward_cached_stacked`]:
+/// each of up to [`kernel::MAX_STACK_LANES`] lanes gets a disjoint K/V
+/// slice per layer (the branch suffix rows; the shared prefix stays in
+/// the immutable [`KvCache`]) plus a slice of one stacked
+/// [`ForwardScratch`] arena. Construction allocates nothing; buffers grow
+/// lazily to a (lanes, rows, dims) high-water mark on first use and are
+/// reused bit-for-bit afterwards, so steady-state stacked verify rounds
+/// are zero-allocation (pinned by `tests/alloc_discipline.rs`).
+#[derive(Default)]
+pub struct StackedLanes {
+    /// Dims the buffers were last sized for (resized on change).
+    dims: Option<ModelDims>,
+    /// Lane capacity (branches) currently allocated.
+    lanes: usize,
+    /// Row capacity per lane; the lane stride in `k`/`v` is `rows * d`.
+    rows: usize,
+    /// Per-layer branch K rows, `[lanes * rows * d_model]`, lane-major.
+    k: Vec<Vec<f32>>,
+    /// Per-layer branch V rows, same layout.
+    v: Vec<Vec<f32>>,
+    /// Stacked activation arena (`lanes * rows` rows), built on first use.
+    scratch: Option<ForwardScratch>,
+}
+
+impl StackedLanes {
+    /// Empty lane set; no buffers are allocated until the first stacked
+    /// forward declares its (lanes, rows) shape.
+    pub fn new() -> StackedLanes {
+        StackedLanes::default()
+    }
+
+    /// Grow buffers to cover (`lanes`, `rows`) under `dims`; a no-op (and
+    /// allocation-free) whenever the high-water mark already covers the
+    /// request, which is every steady-state call.
+    fn ensure(&mut self, dims: &ModelDims, lanes: usize, rows: usize) {
+        let covered = self.dims.as_ref() == Some(dims)
+            && lanes <= self.lanes
+            && rows <= self.rows
+            && self.scratch.is_some();
+        if covered {
+            return;
+        }
+        if self.dims.as_ref() != Some(dims) {
+            // Dims changed: previous high-water marks are meaningless.
+            self.lanes = 0;
+            self.rows = 0;
+        }
+        self.dims = Some(*dims);
+        self.lanes = self.lanes.max(lanes);
+        self.rows = self.rows.max(rows);
+        let cap = self.lanes * self.rows * dims.d_model;
+        self.k = (0..dims.n_layers).map(|_| vec![0.0; cap]).collect();
+        self.v = (0..dims.n_layers).map(|_| vec![0.0; cap]).collect();
+        self.scratch = Some(ForwardScratch::for_prefill(dims, self.lanes * self.rows));
     }
 }
 
@@ -831,6 +1091,109 @@ mod tests {
                 i / 4
             );
         }
+    }
+
+    #[test]
+    fn stacked_forward_bitwise_equals_sequential_branches() {
+        // k branch suffixes through ONE stacked forward against a shared
+        // immutable prefix == k sequential forward_cached + truncate
+        // passes, bit for bit.
+        let m = tiny_model(17);
+        let mut rng = Rng::new(27);
+        let p = m.dims.patch;
+        let prefix: Vec<f32> = (0..3 * p).map(|_| rng.normal() as f32).collect();
+        let (b, k) = (3usize, 2usize);
+        let branches: Vec<f32> = (0..b * k * p).map(|_| rng.normal() as f32).collect();
+        let mut cache = KvCache::new(&m.dims);
+        let _ = m.forward_cached(&mut cache, &prefix, 3).unwrap();
+        let mut lanes = StackedLanes::new();
+        let stacked =
+            m.forward_cached_stacked(&cache, &mut lanes, &branches, b, k).unwrap().to_vec();
+        assert_eq!(cache.len(), 3, "stacked verify must not grow the cache");
+        for lane in 0..b {
+            let rows = m
+                .forward_cached(&mut cache, &branches[lane * k * p..(lane + 1) * k * p], k)
+                .unwrap()
+                .to_vec();
+            cache.truncate(3);
+            for (i, (x, y)) in rows.iter().zip(&stacked[lane * k * p..(lane + 1) * k * p]).enumerate()
+            {
+                assert_eq!(
+                    x.to_bits(),
+                    y.to_bits(),
+                    "lane {lane} row {} diverged: sequential {x} vs stacked {y}",
+                    i / p
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn lockstep_forward_bitwise_equals_serial_caches() {
+        // b independent sequences advanced k patches in one stacked round
+        // == b serial forward_cached calls, bit for bit, with every cache
+        // advanced.
+        let m = tiny_model(19);
+        let mut rng = Rng::new(29);
+        let p = m.dims.patch;
+        let (b, k) = (3usize, 2usize);
+        let prefixes: Vec<Vec<f32>> = (0..b)
+            .map(|_| (0..3 * p).map(|_| rng.normal() as f32).collect())
+            .collect();
+        let steps: Vec<f32> = (0..b * k * p).map(|_| rng.normal() as f32).collect();
+        let mut serial_rows = Vec::new();
+        for lane in 0..b {
+            let mut c = KvCache::new(&m.dims);
+            let _ = m.forward_cached(&mut c, &prefixes[lane], 3).unwrap();
+            serial_rows.push(
+                m.forward_cached(&mut c, &steps[lane * k * p..(lane + 1) * k * p], k)
+                    .unwrap()
+                    .to_vec(),
+            );
+        }
+        let mut caches: Vec<KvCache> = (0..b).map(|_| KvCache::new(&m.dims)).collect();
+        for lane in 0..b {
+            let _ = m.forward_cached(&mut caches[lane], &prefixes[lane], 3).unwrap();
+        }
+        let mut refs: Vec<&mut KvCache> = caches.iter_mut().collect();
+        let mut scratch = ForwardScratch::for_prefill(&m.dims, b * k);
+        let rows = m.forward_cached_lockstep(&mut refs, &mut scratch, &steps, k).unwrap().to_vec();
+        for lane in 0..b {
+            assert_eq!(caches[lane].len(), 5, "lane {lane} cache did not advance");
+            for (i, (x, y)) in
+                serial_rows[lane].iter().zip(&rows[lane * k * p..(lane + 1) * k * p]).enumerate()
+            {
+                assert_eq!(x.to_bits(), y.to_bits(), "lane {lane} elem {i} diverged");
+            }
+        }
+        // Mismatched lengths are a typed error, not a panic.
+        let mut c_short = KvCache::new(&m.dims);
+        let _ = m.forward_cached(&mut c_short, &prefixes[0][..2 * p], 2).unwrap();
+        let mut c_ok = KvCache::new(&m.dims);
+        let _ = m.forward_cached(&mut c_ok, &prefixes[1], 3).unwrap();
+        let mut uneven: Vec<&mut KvCache> = vec![&mut c_short, &mut c_ok];
+        assert!(m.forward_cached_lockstep(&mut uneven, &mut scratch, &steps[..2 * k * p], k).is_err());
+    }
+
+    #[test]
+    fn stacked_forward_types_errors_not_panics() {
+        let m = tiny_model(18);
+        let p = m.dims.patch;
+        let mut cache = KvCache::new(&m.dims);
+        let _ = m.forward_cached(&mut cache, &vec![0.1; 3 * p], 3).unwrap();
+        let mut lanes = StackedLanes::new();
+        let toks = vec![0.1f32; 2 * 2 * p];
+        assert!(m.forward_cached_stacked(&cache, &mut lanes, &toks, 0, 2).is_err(), "b = 0");
+        assert!(m.forward_cached_stacked(&cache, &mut lanes, &toks, 2, 0).is_err(), "k = 0");
+        assert!(m.forward_cached_stacked(&cache, &mut lanes, &toks[1..], 2, 2).is_err(), "short");
+        assert!(
+            m.forward_cached_stacked(&cache, &mut lanes, &toks, 17, 2).is_err(),
+            "lanes beyond MAX_STACK_LANES"
+        );
+        assert!(
+            m.forward_cached_stacked(&cache, &mut lanes, &vec![0.1; 2 * 6 * p], 2, 6).is_err(),
+            "n0 + k beyond n_ctx"
+        );
     }
 
     #[test]

@@ -68,4 +68,7 @@ pub use engine::{
     sd_generate_with_controller, Emission, SpecConfig, Variant,
 };
 pub use stats::{DecodeOutput, DecodeStats, RoundStats};
-pub use tree::{sd_generate_tree, sd_generate_tree_from, MAX_TREE_K};
+pub use tree::{
+    sd_generate_tree, sd_generate_tree_from, set_stacked_verify, stacked_verify_enabled,
+    MAX_TREE_K,
+};

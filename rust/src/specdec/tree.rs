@@ -12,11 +12,15 @@
 //!    [`super::draft::DraftSource::propose_k`] — k distinct sample paths
 //!    for a model-backed draft, k σ-perturbed continuations for the
 //!    closed-form sources. All branches fork the *committed* prefix.
-//! 2. **Verify**: each branch's γ+1 prefix conditionals are validated in
-//!    a single target `extend` (the batched verify), and the branches
-//!    share the committed prefix's KV cache — between branches the
-//!    session is forked by `rollback(γ)`, the same machinery rejection
-//!    already uses, so no prefix work is ever recomputed.
+//! 2. **Verify**: all k branch suffixes are validated by **one stacked
+//!    target forward** against the shared-prefix KV cache
+//!    (`DecodeSession::verify_stacked`, kernel-layer sessions only) —
+//!    every GEMM in the round spans k·γ rows, and the session is never
+//!    mutated. Sessions without a stacked kernel — and rounds with
+//!    [`set_stacked_verify`] off — take the retained *sequential
+//!    reference path*: one target `extend` per branch, forked between
+//!    branches by `rollback(γ)`. The two paths are bitwise identical
+//!    (`tests/tree_equivalence.rs`'s stacked wall).
 //! 3. **Commit**: each branch runs the standard acceptance scan (its own
 //!    uniforms, in branch order); the branch with the longest accepted
 //!    run wins (ties to the lowest index), its accepted prefix is
@@ -43,6 +47,7 @@
 //! the 2-D (γ × k) surface the [`super::GammaController`] scans when
 //! `adaptive.k_max > 1`.
 
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::time::Instant;
 
 use anyhow::Result;
@@ -58,6 +63,25 @@ use crate::util::rng::Rng;
 /// per round, so k is a cost multiplier; 16 is far past the point where
 /// Eq. 5's `c·k·γ + 1` denominator eats the E\[L\] gain.
 pub const MAX_TREE_K: usize = 16;
+
+/// Route k > 1 verify rounds through `DecodeSession::verify_stacked`
+/// (one stacked target forward for all branches) instead of the
+/// sequential per-branch extend/rollback loop. Default **on**; the two
+/// paths are bitwise identical (`tests/tree_equivalence.rs`'s stacked
+/// wall), so this toggle exists for the wall itself and for the
+/// before/after benches, following the `set_reference_kernel` /
+/// `set_scalar_kernel` precedent.
+static STACKED_VERIFY: AtomicBool = AtomicBool::new(true);
+
+/// Enable or disable the stacked (one-forward) tree verify path.
+pub fn set_stacked_verify(on: bool) {
+    STACKED_VERIFY.store(on, Ordering::SeqCst);
+}
+
+/// Whether k > 1 rounds attempt the stacked verify path (default true).
+pub fn stacked_verify_enabled() -> bool {
+    STACKED_VERIFY.load(Ordering::SeqCst)
+}
 
 /// [`super::sd_generate`] with tree speculation: `cfg.k` candidate
 /// branches per round, longest accepted branch committed. At
@@ -199,6 +223,12 @@ fn sd_generate_tree_impl(
     let mut out_patches: Vec<f32> = Vec::with_capacity(horizon * p);
     let mut rounds = Vec::new();
     let mut stats = DecodeStats::default();
+    // Round-reused buffers for the stacked verify path: the flat
+    // [k, gamma, patch] branch block and the [k, gamma+1, patch] result
+    // rows. Grown once to the round high-water mark, then steady-state
+    // stacked rounds allocate nothing here.
+    let mut stacked_flat: Vec<f32> = Vec::new();
+    let mut stacked_rows: Vec<f32> = Vec::new();
 
     while emitted < horizon {
         let remaining = horizon - emitted;
@@ -272,23 +302,51 @@ fn sd_generate_tree_impl(
             }
         }
 
-        // --- Verify: one target extend per branch returns all γ+1
-        // prefix-conditional means; rolling back γ between branches
-        // forks the next branch off the same cached prefix. The last
-        // branch stays in-session (at k = 1 that reproduces the classic
-        // extend with no extra ops).
+        // --- Verify. Preferred path for k > 1: ONE stacked target
+        // forward over all k branch suffixes against the shared-prefix
+        // KV cache (`DecodeSession::verify_stacked`), leaving the
+        // session untouched at the prefix. Sessions without a stacked
+        // kernel (stateless, analytic, reference mode) return false and
+        // fall back to the sequential reference path: one extend per
+        // branch with rollback(γ) forking the next branch off the same
+        // cached prefix. Both paths produce bit-identical rows (the
+        // stacked wall in `tests/tree_equivalence.rs`); verify consumes
+        // no RNG either way, so the acceptance scans below see the same
+        // uniform stream regardless of path.
         let t1 = Instant::now();
-        let mut branch_rows: Vec<Vec<f32>> = Vec::with_capacity(k_round);
-        for (j, b) in blocks.iter().enumerate() {
-            let mut flat = Vec::with_capacity(gamma * p);
-            for x in &b.proposals {
-                flat.extend_from_slice(x);
+        let mut branch_rows: Vec<Vec<f32>> = Vec::new();
+        let mut stacked_used = false;
+        if k_round > 1 && stacked_verify_enabled() {
+            stacked_flat.clear();
+            for b in &blocks {
+                for x in &b.proposals {
+                    stacked_flat.extend_from_slice(x);
+                }
             }
-            let rows = t_sess.extend(&flat, gamma)?;
-            super::engine::ensure_finite(&rows, "target validation means")?;
-            branch_rows.push(rows);
-            if j + 1 < k_round {
-                t_sess.rollback(gamma)?;
+            stacked_used = t_sess.verify_stacked(&stacked_flat, k_round, gamma, &mut stacked_rows)?;
+            if stacked_used {
+                let per = (gamma + 1) * p;
+                for j in 0..k_round {
+                    super::engine::ensure_finite(
+                        &stacked_rows[j * per..(j + 1) * per],
+                        "target validation means",
+                    )?;
+                }
+            }
+        }
+        if !stacked_used {
+            branch_rows.reserve(k_round);
+            for (j, b) in blocks.iter().enumerate() {
+                let mut flat = Vec::with_capacity(gamma * p);
+                for x in &b.proposals {
+                    flat.extend_from_slice(x);
+                }
+                let rows = t_sess.extend(&flat, gamma)?;
+                super::engine::ensure_finite(&rows, "target validation means")?;
+                branch_rows.push(rows);
+                if j + 1 < k_round {
+                    t_sess.rollback(gamma)?;
+                }
             }
         }
         let mut target_time = t1.elapsed();
@@ -298,10 +356,21 @@ fn sd_generate_tree_impl(
         // at the classic stream position). `all_alphas` collects every
         // evaluated probability for stats; the winner's own alphas feed
         // the draft source.
+        // Branch j's γ+1 result rows, independent of which verify path
+        // ran: a slice of the stacked block, or the j-th sequential
+        // extend's return.
+        let rows_of = |j: usize| -> &[f32] {
+            if stacked_used {
+                &stacked_rows[j * (gamma + 1) * p..(j + 1) * (gamma + 1) * p]
+            } else {
+                &branch_rows[j]
+            }
+        };
+
         let mut all_alphas: Vec<f64> = Vec::new();
         let mut scans: Vec<(usize, Option<usize>, Vec<f64>)> = Vec::with_capacity(k_round);
         for (j, b) in blocks.iter().enumerate() {
-            let rows = &branch_rows[j];
+            let rows = rows_of(j);
             let mut alphas = Vec::with_capacity(gamma);
             let mut accepted = 0usize;
             let mut rejected_at: Option<usize> = None;
@@ -325,13 +394,17 @@ fn sd_generate_tree_impl(
         let winner = (0..k_round).max_by_key(|&j| (scans[j].0, usize::MAX - j)).unwrap_or(0);
         let (accepted, rejected_at, win_alphas) = scans[winner].clone();
         let wblock = &blocks[winner];
-        let wrows = &branch_rows[winner];
+        let wrows = rows_of(winner);
         let mu_p_at = |i: usize| &wrows[i * p..(i + 1) * p];
 
-        // --- Commit the winner under the usual emission protocol. The
-        // session currently holds the *last* branch's proposals; when the
-        // winner is that branch the classic in-place ops apply verbatim,
-        // otherwise rewind fully and rebuild from the winner's patches.
+        // --- Commit the winner under the usual emission protocol. After
+        // a *stacked* verify the session still sits at the shared prefix,
+        // so committing is a plain append — the recomputed K/V and mean
+        // rows are bitwise those of the verify pass (deterministic
+        // row-independent kernels). After a *sequential* verify the
+        // session holds the last branch's proposals; when the winner is
+        // that branch the classic in-place ops apply verbatim, otherwise
+        // rewind fully and rebuild from the winner's patches.
         let mut emit_flat: Vec<f32> = Vec::with_capacity(accepted * p);
         match cfg.emission {
             Emission::Sampled => {
@@ -339,7 +412,11 @@ fn sd_generate_tree_impl(
                     emit_flat.extend_from_slice(x);
                 }
                 let t2 = Instant::now();
-                if winner == k_round - 1 {
+                if stacked_used {
+                    if accepted > 0 {
+                        t_sess.append(&emit_flat, accepted)?;
+                    }
+                } else if winner == k_round - 1 {
                     t_sess.rollback(gamma - accepted)?;
                 } else {
                     t_sess.rollback(gamma)?;
@@ -354,7 +431,9 @@ fn sd_generate_tree_impl(
                     emit_flat.extend_from_slice(m);
                 }
                 let t2 = Instant::now();
-                t_sess.rollback(gamma)?;
+                if !stacked_used {
+                    t_sess.rollback(gamma)?;
+                }
                 if accepted > 0 {
                     t_sess.append(&emit_flat, accepted)?;
                 }
@@ -539,6 +618,29 @@ mod tests {
         let d = AnalyticBackend::new("d", 1, 0.7, 0.0);
         let c = cfg(2, MAX_TREE_K + 1, 0.5, Variant::Practical, 1);
         assert!(sd_generate_tree(&t, &d, &[0.0], 1, 4, &c).is_err());
+    }
+
+    #[test]
+    fn stacked_verify_toggle_is_bitwise_invisible() {
+        // Native (kernel-layer) sessions take the stacked path when the
+        // toggle is on; the emitted stream must be bit-identical either
+        // way — the unit-level echo of the tree_equivalence stacked wall.
+        use crate::models::NativeBackend;
+        use crate::nn::model::tiny_model;
+        let t = NativeBackend::new(tiny_model(21));
+        let d = NativeBackend::new(tiny_model(22));
+        let hist: Vec<f32> = (0..3 * 4).map(|i| (i as f32 * 0.2).sin()).collect();
+        let c = cfg(3, 3, 0.4, Variant::Practical, 11);
+        set_stacked_verify(true);
+        let on = sd_generate_tree(&t, &d, &hist, 3, 15, &c).unwrap();
+        set_stacked_verify(false);
+        let off = sd_generate_tree(&t, &d, &hist, 3, 15, &c).unwrap();
+        set_stacked_verify(true);
+        let ob: Vec<u32> = on.patches.iter().map(|v| v.to_bits()).collect();
+        let fb: Vec<u32> = off.patches.iter().map(|v| v.to_bits()).collect();
+        assert_eq!(ob, fb, "stacked verify changed the emitted bits");
+        assert_eq!(on.stats.accepted, off.stats.accepted);
+        assert_eq!(on.stats.rounds, off.stats.rounds);
     }
 
     #[test]

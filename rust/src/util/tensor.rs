@@ -6,6 +6,7 @@
 //! not use this type on the wire — `runtime::literal` marshals flat slices.
 
 use std::fmt;
+use std::sync::atomic::{AtomicBool, Ordering};
 
 /// Row-major f32 tensor: a shape vector over flat storage.
 #[derive(Clone, PartialEq)]
@@ -75,8 +76,13 @@ impl Tensor {
 /// C = A[m,k] x B[k,n]; the native-backend hot matmul.
 ///
 /// Register-blocked micro-kernel: the k loop is 4x-unrolled so the inner j
-/// loop carries four fused multiply-adds per C element per pass (one load
-/// of `crow[j]`, four B streams), which auto-vectorizes into fma chains.
+/// loop carries four multiply-adds per C element per pass (one load of
+/// `crow[j]`, four B streams). On x86_64 the inner loop runs explicit
+/// 4-lane SSE (separate mul + add, never FMA — see [`set_scalar_kernel`]);
+/// everywhere else, a scalar fallback with the identical association
+/// order, so the two paths are **bitwise identical**. Shapes whose B
+/// panel outgrows L2 additionally go through [`matmul_tiled`]'s
+/// cache blocking, also bitwise identical.
 /// There is deliberately *no* `a[i,k] == 0.0` skip: on dense activations
 /// the branch mispredicts, and skipping silently dropped NaN/Inf
 /// propagation (`0.0 * NaN` never added), diverging from the XLA/JAX
@@ -91,38 +97,241 @@ pub fn matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, c: &mut [f32])
     matmul_rows(a, b, m, k, n, c);
 }
 
+/// Force the scalar 4-lane micro-kernel even where SIMD lanes are
+/// available. Test hook for the dispatch-equality wall in
+/// `tests/kernel_equivalence.rs` (the forced-fallback path must be bitwise
+/// identical to the SIMD path); also the escape hatch if an exotic target
+/// miscompiles the intrinsics. Process-global, like
+/// `NativeBackend::set_reference_kernel`.
+pub fn set_scalar_kernel(on: bool) {
+    FORCE_SCALAR.store(on, Ordering::SeqCst);
+}
+
+/// Whether the next [`matmul`] call will run the explicit-SIMD micro-kernel
+/// (true on x86_64 unless [`set_scalar_kernel`]`(true)` is in effect; the
+/// scalar 4-lane fallback runs everywhere else).
+pub fn simd_kernel_active() -> bool {
+    cfg!(target_arch = "x86_64") && !FORCE_SCALAR.load(Ordering::Relaxed)
+}
+
+static FORCE_SCALAR: AtomicBool = AtomicBool::new(false);
+
+/// Cache-blocked tile sizes for [`matmul_tiled`]. `TILE_K` MUST stay a
+/// multiple of 4: k-blocks then begin on the same 4-aligned boundaries the
+/// flat kernel's unroll visits, so every output element consumes the k
+/// dimension in the exact same 4-chunk groups (ascending) and the tiled
+/// result is bitwise identical to the flat kernel. Tiling over i and j is
+/// order-irrelevant (each C element is an independent accumulation chain).
+const TILE_M: usize = 64;
+const TILE_K: usize = 256;
+const TILE_N: usize = 256;
+/// Flat-vs-tiled switch inside [`matmul`]: once B no longer fits in L2
+/// (k·n floats), the streaming passes thrash and blocking wins.
+const TILE_MIN_KN: usize = 128 * 1024;
+
+/// Accumulate `crow[j0..j1] += arow[k0..k1] · B[k0..k1, j0..j1]` with the
+/// canonical association order: k in 4-chunks from `k0` (then singles),
+/// each chunk contributing `((a0·b0 + a1·b1) + a2·b2) + a3·b3` to the
+/// running `crow[j]`. Both micro-kernels below implement exactly this
+/// order; callers must pass a 4-aligned `k0` for chunk boundaries to line
+/// up with the flat kernel's.
+#[inline]
+fn accum_span(
+    arow: &[f32],
+    b: &[f32],
+    n: usize,
+    k0: usize,
+    k1: usize,
+    j0: usize,
+    j1: usize,
+    crow: &mut [f32],
+    simd: bool,
+) {
+    #[cfg(target_arch = "x86_64")]
+    if simd {
+        // SAFETY: slice bounds checked by the callers' debug asserts and
+        // the loop conditions below; SSE is part of the x86_64 baseline.
+        unsafe {
+            return accum_span_sse(arow, b, n, k0, k1, j0, j1, crow);
+        }
+    }
+    let _ = simd;
+    accum_span_scalar(arow, b, n, k0, k1, j0, j1, crow);
+}
+
+/// Scalar reference micro-kernel: the PR 2 4x unroll verbatim, generalized
+/// to a (k, j) sub-range. With `k0 = j0 = 0`, `k1 = k`, `j1 = n` this is
+/// line-for-line the old `matmul_rows` inner loop.
+fn accum_span_scalar(
+    arow: &[f32],
+    b: &[f32],
+    n: usize,
+    k0: usize,
+    k1: usize,
+    j0: usize,
+    j1: usize,
+    crow: &mut [f32],
+) {
+    let mut kk = k0;
+    while kk + 4 <= k1 {
+        let a0 = arow[kk];
+        let a1 = arow[kk + 1];
+        let a2 = arow[kk + 2];
+        let a3 = arow[kk + 3];
+        let b0 = &b[kk * n..(kk + 1) * n];
+        let b1 = &b[(kk + 1) * n..(kk + 2) * n];
+        let b2 = &b[(kk + 2) * n..(kk + 3) * n];
+        let b3 = &b[(kk + 3) * n..(kk + 4) * n];
+        for j in j0..j1 {
+            crow[j] += a0 * b0[j] + a1 * b1[j] + a2 * b2[j] + a3 * b3[j];
+        }
+        kk += 4;
+    }
+    while kk < k1 {
+        let aik = arow[kk];
+        let brow = &b[kk * n..(kk + 1) * n];
+        for j in j0..j1 {
+            crow[j] += aik * brow[j];
+        }
+        kk += 1;
+    }
+}
+
+/// 4-lane SSE micro-kernel, bitwise identical to [`accum_span_scalar`]:
+/// separate `_mm_mul_ps` + `_mm_add_ps` (never a fused multiply-add — FMA
+/// would skip the intermediate rounding and change bits) applied in the
+/// scalar kernel's exact association order, with the j remainder handled
+/// by the same scalar expression. IEEE-754 ops are deterministic per lane,
+/// so vectorizing over j preserves every bit.
+#[cfg(target_arch = "x86_64")]
+unsafe fn accum_span_sse(
+    arow: &[f32],
+    b: &[f32],
+    n: usize,
+    k0: usize,
+    k1: usize,
+    j0: usize,
+    j1: usize,
+    crow: &mut [f32],
+) {
+    use std::arch::x86_64::{_mm_add_ps, _mm_loadu_ps, _mm_mul_ps, _mm_set1_ps, _mm_storeu_ps};
+    let bp = b.as_ptr();
+    let cp = crow.as_mut_ptr();
+    let mut kk = k0;
+    while kk + 4 <= k1 {
+        let a0 = arow[kk];
+        let a1 = arow[kk + 1];
+        let a2 = arow[kk + 2];
+        let a3 = arow[kk + 3];
+        let va0 = _mm_set1_ps(a0);
+        let va1 = _mm_set1_ps(a1);
+        let va2 = _mm_set1_ps(a2);
+        let va3 = _mm_set1_ps(a3);
+        let b0 = bp.add(kk * n);
+        let b1 = bp.add((kk + 1) * n);
+        let b2 = bp.add((kk + 2) * n);
+        let b3 = bp.add((kk + 3) * n);
+        let mut j = j0;
+        while j + 4 <= j1 {
+            // ((a0*b0 + a1*b1) + a2*b2) + a3*b3, then += into C — the
+            // scalar expression's left-to-right association, per lane.
+            let t01 = _mm_add_ps(
+                _mm_mul_ps(va0, _mm_loadu_ps(b0.add(j))),
+                _mm_mul_ps(va1, _mm_loadu_ps(b1.add(j))),
+            );
+            let t012 = _mm_add_ps(t01, _mm_mul_ps(va2, _mm_loadu_ps(b2.add(j))));
+            let t = _mm_add_ps(t012, _mm_mul_ps(va3, _mm_loadu_ps(b3.add(j))));
+            _mm_storeu_ps(cp.add(j), _mm_add_ps(_mm_loadu_ps(cp.add(j)), t));
+            j += 4;
+        }
+        while j < j1 {
+            crow[j] += a0 * *b0.add(j) + a1 * *b1.add(j) + a2 * *b2.add(j) + a3 * *b3.add(j);
+            j += 1;
+        }
+        kk += 4;
+    }
+    while kk < k1 {
+        let aik = arow[kk];
+        let va = _mm_set1_ps(aik);
+        let brow = bp.add(kk * n);
+        let mut j = j0;
+        while j + 4 <= j1 {
+            let t = _mm_mul_ps(va, _mm_loadu_ps(brow.add(j)));
+            _mm_storeu_ps(cp.add(j), _mm_add_ps(_mm_loadu_ps(cp.add(j)), t));
+            j += 4;
+        }
+        while j < j1 {
+            crow[j] += aik * *brow.add(j);
+            j += 1;
+        }
+        kk += 1;
+    }
+}
+
 /// Row-range worker for [`matmul`]/[`matmul_parallel`]: computes `rows`
 /// output rows from `rows` A rows against the full B. No allocation.
+/// Dispatches to the SIMD or scalar micro-kernel (bitwise identical to
+/// each other) and to the cache-blocked tiling once B outgrows L2
+/// (bitwise identical to the flat sweep; see `TILE_K`).
 fn matmul_rows(a_rows: &[f32], b: &[f32], rows: usize, k: usize, n: usize, c_rows: &mut [f32]) {
     debug_assert_eq!(a_rows.len(), rows * k);
     debug_assert_eq!(c_rows.len(), rows * n);
+    let simd = simd_kernel_active();
+    if k * n >= TILE_MIN_KN {
+        return matmul_rows_tiled(a_rows, b, rows, k, n, c_rows, simd);
+    }
     c_rows.fill(0.0);
     for i in 0..rows {
         let arow = &a_rows[i * k..(i + 1) * k];
         let crow = &mut c_rows[i * n..(i + 1) * n];
-        let mut kk = 0;
-        while kk + 4 <= k {
-            let a0 = arow[kk];
-            let a1 = arow[kk + 1];
-            let a2 = arow[kk + 2];
-            let a3 = arow[kk + 3];
-            let b0 = &b[kk * n..(kk + 1) * n];
-            let b1 = &b[(kk + 1) * n..(kk + 2) * n];
-            let b2 = &b[(kk + 2) * n..(kk + 3) * n];
-            let b3 = &b[(kk + 3) * n..(kk + 4) * n];
-            for j in 0..n {
-                crow[j] += a0 * b0[j] + a1 * b1[j] + a2 * b2[j] + a3 * b3[j];
+        accum_span(arow, b, n, 0, k, 0, n, crow, simd);
+    }
+}
+
+/// Cache-blocked [`matmul`] for prefill-sized shapes: i/k/j tiled so each
+/// pass streams a `TILE_K x TILE_N` block of B against `TILE_M` A rows.
+/// Bitwise identical to the flat kernel — `TILE_K` is a multiple of 4, so
+/// per output element the k dimension is consumed in the identical
+/// ascending 4-chunk sequence (the k%4 singles land at the same final
+/// offset), and i/j tiling only reorders independent elements. Exposed for
+/// the equivalence tests and the `perf_hotpath` before/after; [`matmul`]
+/// engages it automatically past `TILE_MIN_KN`.
+pub fn matmul_tiled(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, c: &mut [f32]) {
+    assert_eq!(a.len(), m * k);
+    assert_eq!(b.len(), k * n);
+    assert_eq!(c.len(), m * n);
+    matmul_rows_tiled(a, b, m, k, n, c, simd_kernel_active());
+}
+
+fn matmul_rows_tiled(
+    a_rows: &[f32],
+    b: &[f32],
+    rows: usize,
+    k: usize,
+    n: usize,
+    c_rows: &mut [f32],
+    simd: bool,
+) {
+    c_rows.fill(0.0);
+    let mut i0 = 0;
+    while i0 < rows {
+        let i1 = (i0 + TILE_M).min(rows);
+        let mut k0 = 0;
+        while k0 < k {
+            let k1 = (k0 + TILE_K).min(k);
+            let mut j0 = 0;
+            while j0 < n {
+                let j1 = (j0 + TILE_N).min(n);
+                for i in i0..i1 {
+                    let arow = &a_rows[i * k..(i + 1) * k];
+                    let crow = &mut c_rows[i * n..(i + 1) * n];
+                    accum_span(arow, b, n, k0, k1, j0, j1, crow, simd);
+                }
+                j0 = j1;
             }
-            kk += 4;
+            k0 = k1;
         }
-        while kk < k {
-            let aik = arow[kk];
-            let brow = &b[kk * n..(kk + 1) * n];
-            for (cj, bj) in crow.iter_mut().zip(brow) {
-                *cj += aik * bj;
-            }
-            kk += 1;
-        }
+        i0 = i1;
     }
 }
 
@@ -358,6 +567,52 @@ mod tests {
         let mut c = vec![0.0; 2];
         matmul_naive(&a, &b, 1, 2, 2, &mut c);
         assert!(c[0].is_nan(), "NaN dropped by the naive kernel: {c:?}");
+    }
+
+    #[test]
+    fn simd_and_scalar_kernels_bitwise_identical() {
+        let mut rng = crate::util::rng::Rng::new(23);
+        for &(m, k, n) in &[(1usize, 1usize, 1usize), (2, 3, 5), (7, 9, 6), (5, 8, 4), (3, 17, 11)] {
+            let a: Vec<f32> = (0..m * k).map(|_| rng.normal() as f32).collect();
+            let b: Vec<f32> = (0..k * n).map(|_| rng.normal() as f32).collect();
+            let mut fast = vec![0.0; m * n];
+            let mut slow = vec![0.0; m * n];
+            matmul(&a, &b, m, k, n, &mut fast);
+            set_scalar_kernel(true);
+            matmul(&a, &b, m, k, n, &mut slow);
+            set_scalar_kernel(false);
+            for (i, (x, y)) in fast.iter().zip(&slow).enumerate() {
+                assert_eq!(x.to_bits(), y.to_bits(), "dispatch drift at {i} for ({m},{k},{n})");
+            }
+        }
+    }
+
+    #[test]
+    fn tiled_matmul_bitwise_equals_flat() {
+        let mut rng = crate::util::rng::Rng::new(29);
+        // Shapes straddling every tile boundary: < one tile, exactly one
+        // tile on each axis, and a ragged multi-tile (k % 4 != 0 so the
+        // singles remainder lands inside the final k-block).
+        for &(m, k, n) in &[
+            (3usize, 5usize, 7usize),
+            (TILE_M, TILE_K, 8),
+            (5, TILE_K + 6, TILE_N + 3),
+            (TILE_M + 1, 13, TILE_N),
+        ] {
+            let a: Vec<f32> = (0..m * k).map(|_| rng.normal() as f32).collect();
+            let b: Vec<f32> = (0..k * n).map(|_| rng.normal() as f32).collect();
+            let mut flat = vec![0.0; m * n];
+            let mut tiled = vec![0.0; m * n];
+            // Flat reference: the scalar full-range span (never auto-tiled).
+            flat.fill(0.0);
+            for i in 0..m {
+                accum_span_scalar(&a[i * k..(i + 1) * k], &b, n, 0, k, 0, n, &mut flat[i * n..(i + 1) * n]);
+            }
+            matmul_tiled(&a, &b, m, k, n, &mut tiled);
+            for (i, (x, y)) in flat.iter().zip(&tiled).enumerate() {
+                assert_eq!(x.to_bits(), y.to_bits(), "tiling drift at {i} for ({m},{k},{n})");
+            }
+        }
     }
 
     #[test]

@@ -4,6 +4,13 @@
 //! steady-state `NativeSession::extend` allocates only the trait-mandated
 //! return `Vec`.
 //!
+//! SIMD + stacked-GEMM PR: the stacked verify tier obeys the same
+//! discipline — `forward_cached_stacked` (k > 1 tree verify) and
+//! `forward_cached_lockstep` (equal-length batched rounds) are **zero**
+//! allocation in steady state after their lane/scratch arenas' one-time
+//! high-water allocation, and the session-layer `verify_stacked` with a
+//! caller-reused out buffer stays at amortized-zero.
+//!
 //! This file contains exactly one `#[test]` on purpose: the counter is a
 //! process-wide global, and a sibling test allocating concurrently would
 //! make the measurement meaningless.
@@ -11,8 +18,8 @@
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicU64, Ordering};
 
-use stride::models::{DecodeSession, NativeBackend};
-use stride::nn::{KvCache, ModelDims, NativeModel};
+use stride::models::{BatchDecodeSession, DecodeSession, NativeBackend};
+use stride::nn::{ForwardScratch, KvCache, ModelDims, NativeModel, StackedLanes};
 
 static ALLOCS: AtomicU64 = AtomicU64::new(0);
 
@@ -88,6 +95,54 @@ fn steady_state_decode_does_not_allocate() {
          counted {gamma_allocs} over 4 steps"
     );
 
+    // --- Stacked tree verify, kernel layer: `forward_cached_stacked`
+    // reads the shared prefix from the (immutably borrowed) cache and
+    // writes per-branch K/V into the lane arena. After the arena's
+    // one-time high-water allocation a verify round must be strictly
+    // allocation-free — this is what makes k > 1 tree verify a steady-
+    // state serving operation rather than k heap-churning extends.
+    let mut lanes = StackedLanes::new();
+    let branches = &toks[..3 * 2 * 4]; // b = 3 lanes, k = 2 rows each
+    let _ = model.forward_cached_stacked(&cache, &mut lanes, branches, 3, 2).unwrap(); // warm
+    let before = allocs();
+    for _ in 0..8 {
+        let _ = model.forward_cached_stacked(&cache, &mut lanes, branches, 3, 2).unwrap();
+    }
+    let stacked_allocs = allocs() - before;
+    assert_eq!(
+        stacked_allocs, 0,
+        "forward_cached_stacked must be allocation-free in steady state \
+         (lane arena + shared-prefix reads); counted {stacked_allocs} over 8 rounds"
+    );
+
+    // --- Lockstep batched rounds, kernel layer: `forward_cached_lockstep`
+    // fuses B equal-length decode steps into one forward, appending into
+    // each lane's own cache. With an externally owned scratch it is
+    // likewise strictly allocation-free in steady state.
+    let mut c0 = KvCache::new(&dims);
+    let mut c1 = KvCache::new(&dims);
+    let _ = model.forward_cached(&mut c0, &toks[..16 * 4], 16).unwrap();
+    let _ = model.forward_cached(&mut c1, &toks[..16 * 4], 16).unwrap();
+    let mut scratch = ForwardScratch::for_prefill(&dims, 2 * 2);
+    let lock_toks = &toks[16 * 4..20 * 4]; // b = 2, k = 2 -> 4 rows
+    let _ = model.forward_cached_lockstep(&mut [&mut c0, &mut c1], &mut scratch, lock_toks, 2).unwrap();
+    c0.truncate(16);
+    c1.truncate(16);
+    let before = allocs();
+    for _ in 0..8 {
+        let _ = model
+            .forward_cached_lockstep(&mut [&mut c0, &mut c1], &mut scratch, lock_toks, 2)
+            .unwrap();
+        c0.truncate(16);
+        c1.truncate(16);
+    }
+    let lockstep_allocs = allocs() - before;
+    assert_eq!(
+        lockstep_allocs, 0,
+        "forward_cached_lockstep must be allocation-free in steady state \
+         (external scratch + preallocated caches); counted {lockstep_allocs} over 8 rounds"
+    );
+
     // --- Session layer: extend/rollback. The DecodeSession contract
     // returns a Vec, so the only permitted allocation per extend is that
     // return value (1 per call; <= 2 leaves room for allocator-internal
@@ -111,5 +166,62 @@ fn steady_state_decode_does_not_allocate() {
         per_round <= 2.0,
         "steady-state extend should allocate only its return Vec; \
          measured {per_round} allocations per extend+rollback round"
+    );
+
+    // --- Session layer: `verify_stacked` with a caller-reused out
+    // buffer. The kernel work is pinned to zero above; at the session
+    // layer the only permitted growth is amortized telemetry (the
+    // timing ring doubles rarely), so the per-round average must stay
+    // at (near-)zero — far below the b extends a sequential verify
+    // would cost in return Vecs alone.
+    let vbranches: Vec<f32> = toks[..3 * 2 * 4].to_vec();
+    let mut vout: Vec<f32> = Vec::new();
+    for _ in 0..4 {
+        let used = sess.verify_stacked(&vbranches, 3, 2, &mut vout).unwrap();
+        assert!(used, "native session must take the stacked verify path");
+    }
+    let before = allocs();
+    let rounds = 8u64;
+    for _ in 0..rounds {
+        let used = sess.verify_stacked(&vbranches, 3, 2, &mut vout).unwrap();
+        assert!(used, "stacked verify fell back mid-measurement");
+    }
+    let per_round = (allocs() - before) as f64 / rounds as f64;
+    assert!(
+        per_round <= 1.0,
+        "steady-state verify_stacked with a reused out buffer should be \
+         amortized allocation-free; measured {per_round} per round"
+    );
+    assert_eq!(vout.len(), 3 * (2 + 1) * 4, "verify rows: b * (k+1) * patch");
+
+    // --- Session layer: lockstep batched extend. Equal-length sequences
+    // take the fused stacked forward; the per-round budget is the
+    // trait-mandated return Vec (plus its growth), the cache-ref gather,
+    // and amortized telemetry — a small constant, independent of B,
+    // where the fan-out path would pay per-sequence task allocations.
+    let h = &toks[..5 * 4];
+    let tasks: Vec<(&[f32], usize)> = vec![(h, 5), (h, 5), (h, 5)];
+    let mut bs = backend.begin_cached_batch(&tasks).unwrap();
+    let fresh = &toks[5 * 4..7 * 4]; // k = 2 rows
+    let flat = [fresh, fresh, fresh].concat();
+    for _ in 0..4 {
+        let _ = bs.extend(&[0, 1, 2], &flat, 2).unwrap();
+        for i in 0..3 {
+            bs.rollback(i, 2).unwrap();
+        }
+    }
+    let before = allocs();
+    for _ in 0..rounds {
+        let _ = bs.extend(&[0, 1, 2], &flat, 2).unwrap();
+        for i in 0..3 {
+            bs.rollback(i, 2).unwrap();
+        }
+    }
+    let per_round = (allocs() - before) as f64 / rounds as f64;
+    assert!(
+        per_round <= 6.0,
+        "steady-state lockstep batched extend should allocate only the \
+         return Vec, its growth, and the cache-ref gather; measured \
+         {per_round} allocations per round"
     );
 }

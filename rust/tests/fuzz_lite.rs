@@ -1,6 +1,12 @@
 //! Fuzz-lite: random and adversarial byte inputs must never panic the JSON
 //! parser, the HTTP request parser, or the protocol layer (they may only
 //! return errors). Seeded, deterministic, shrunk via proptest_lite.
+//!
+//! SIMD + stacked-GEMM PR: the stacked kernel tier joins the same
+//! contract — mis-sized, zero-dim, overflowing, or over-wide stacked
+//! requests are typed `Err`s (or graceful fallbacks at the session
+//! layer), never UB and never a panic that could escape into the
+//! replica supervisor's restart loop.
 
 use stride::server::protocol::ForecastRequest;
 use stride::util::json::Json;
@@ -82,6 +88,114 @@ fn protocol_never_panics_on_arbitrary_json() {
         }
         Ok(())
     });
+}
+
+#[test]
+fn stacked_kernels_reject_malformed_shapes_with_errors_not_panics() {
+    use stride::models::{DecodeSession, NativeBackend};
+    use stride::nn::kernel::{matmul_stacked, MAX_STACK_LANES};
+    use stride::nn::{ForwardScratch, KvCache, ModelDims, NativeModel, StackedLanes};
+
+    // --- Raw stacked GEMM: every malformed shape is a typed error.
+    let a = vec![0.25f32; 2 * 3 * 4];
+    let b = vec![0.25f32; 4 * 5];
+    let mut c = vec![0.0f32; 2 * 3 * 5];
+    assert!(matmul_stacked(&a, &b, 2, 3, 4, 5, &mut c).is_ok(), "well-formed call");
+    assert!(matmul_stacked(&a, &b, 0, 3, 4, 5, &mut c).is_err(), "zero batch");
+    assert!(matmul_stacked(&a, &b, 2, 0, 4, 5, &mut c).is_err(), "zero m");
+    assert!(matmul_stacked(&a, &b, 2, 3, 0, 5, &mut c).is_err(), "zero k");
+    assert!(matmul_stacked(&a, &b, 2, 3, 4, 0, &mut c).is_err(), "zero n");
+    assert!(matmul_stacked(&a[..1], &b, 2, 3, 4, 5, &mut c).is_err(), "short a");
+    assert!(matmul_stacked(&a, &b[..1], 2, 3, 4, 5, &mut c).is_err(), "short b");
+    assert!(matmul_stacked(&a, &b, 2, 3, 4, 5, &mut c[..1]).is_err(), "short c");
+    assert!(
+        matmul_stacked(&a, &b, usize::MAX, usize::MAX, 4, 5, &mut c).is_err(),
+        "size overflow must error, not wrap"
+    );
+
+    // --- Stacked branch-verify forward: b/k bounds, lane cap, token
+    // sizing, and context overflow are all typed errors.
+    let dims = ModelDims { patch: 4, n_ctx: 16, d_model: 8, n_layers: 1, n_heads: 2, d_ff: 16 };
+    let model = NativeModel::random("m", dims, 9);
+    let mut cache = KvCache::new(&dims);
+    let hist: Vec<f32> = (0..4 * 4).map(|i| (i as f32 * 0.1).sin()).collect();
+    model.forward_cached(&mut cache, &hist, 4).unwrap();
+    let mut lanes = StackedLanes::new();
+    let toks = vec![0.25f32; 2 * 2 * 4]; // b = 2, k = 2
+    assert!(model.forward_cached_stacked(&cache, &mut lanes, &toks, 2, 2).is_ok());
+    assert!(model.forward_cached_stacked(&cache, &mut lanes, &toks, 0, 2).is_err(), "b = 0");
+    assert!(model.forward_cached_stacked(&cache, &mut lanes, &toks, 2, 0).is_err(), "k = 0");
+    let wide = vec![0.25f32; (MAX_STACK_LANES + 1) * 2 * 4];
+    assert!(
+        model.forward_cached_stacked(&cache, &mut lanes, &wide, MAX_STACK_LANES + 1, 2).is_err(),
+        "k > scratch lanes (b over MAX_STACK_LANES)"
+    );
+    assert!(
+        model.forward_cached_stacked(&cache, &mut lanes, &toks[..7], 2, 2).is_err(),
+        "mis-sized token buffer"
+    );
+    let deep = vec![0.25f32; 2 * 13 * 4];
+    assert!(
+        model.forward_cached_stacked(&cache, &mut lanes, &deep, 2, 13).is_err(),
+        "n0 + k past n_ctx"
+    );
+
+    // --- Lockstep fused forward: uneven lanes, empty lane sets, zero k,
+    // mis-sized tokens, and an under-provisioned scratch all error; a
+    // well-formed call still succeeds after every rejection.
+    let mut c0 = KvCache::new(&dims);
+    let mut c1 = KvCache::new(&dims);
+    model.forward_cached(&mut c0, &hist, 4).unwrap();
+    model.forward_cached(&mut c1, &hist[..3 * 4], 3).unwrap();
+    let mut scratch = ForwardScratch::for_prefill(&dims, 4);
+    assert!(
+        model.forward_cached_lockstep(&mut [&mut c0, &mut c1], &mut scratch, &toks, 2).is_err(),
+        "uneven lane lengths"
+    );
+    let mut none: Vec<&mut KvCache> = Vec::new();
+    assert!(
+        model.forward_cached_lockstep(&mut none, &mut scratch, &toks, 2).is_err(),
+        "empty lane set"
+    );
+    model.forward_cached(&mut c1, &hist[3 * 4..4 * 4], 1).unwrap(); // even up
+    assert!(
+        model.forward_cached_lockstep(&mut [&mut c0, &mut c1], &mut scratch, &toks, 0).is_err(),
+        "k = 0"
+    );
+    assert!(
+        model
+            .forward_cached_lockstep(&mut [&mut c0, &mut c1], &mut scratch, &toks[..5], 2)
+            .is_err(),
+        "mis-sized token buffer"
+    );
+    let mut tiny = ForwardScratch::for_prefill(&dims, 1);
+    assert!(
+        model.forward_cached_lockstep(&mut [&mut c0, &mut c1], &mut tiny, &toks, 2).is_err(),
+        "scratch rows below b * k"
+    );
+    assert!(
+        model.forward_cached_lockstep(&mut [&mut c0, &mut c1], &mut scratch, &toks, 2).is_ok(),
+        "recovers after rejections"
+    );
+
+    // --- Session layer: mis-sizes are typed errors; requests the stacked
+    // tier cannot serve (too many lanes, context overflow) degrade to the
+    // sequential fallback (`Ok(false)`) so serving never sees a panic.
+    let backend = NativeBackend::new(NativeModel::random("m", dims, 10));
+    let mut sess = backend.begin_cached(&hist, 4).unwrap();
+    let mut out = Vec::new();
+    assert!(sess.verify_stacked(&toks, 0, 2, &mut out).is_err(), "b = 0");
+    assert!(sess.verify_stacked(&toks, 2, 0, &mut out).is_err(), "k = 0");
+    assert!(sess.verify_stacked(&toks[..5], 2, 2, &mut out).is_err(), "mis-sized branches");
+    assert!(
+        !sess.verify_stacked(&wide, MAX_STACK_LANES + 1, 2, &mut out).unwrap(),
+        "over-wide request must decline, not panic"
+    );
+    assert!(
+        !sess.verify_stacked(&deep, 2, 13, &mut out).unwrap(),
+        "context-overflowing request must decline, not panic"
+    );
+    assert!(sess.verify_stacked(&toks, 2, 2, &mut out).unwrap(), "recovers after declines");
 }
 
 #[test]

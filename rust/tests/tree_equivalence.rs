@@ -18,13 +18,21 @@
 //!    * cache on/off bit-identity at any k — the fork-by-rollback used
 //!      to share the committed prefix between branches leaves no KV
 //!      residue behind.
+//! 3. **The stacked-verify wall** (SIMD + stacked-GEMM PR). At k > 1 the
+//!    native target can verify all k branch suffixes in ONE stacked
+//!    forward against the shared-prefix KV instead of k extend/rollback
+//!    round-trips. The sequential path is *retained as the reference*
+//!    behind [`set_stacked_verify`]; toggling it must not move a bit —
+//!    same patches, same per-round alphas/accepted/residual draws, same
+//!    RNG stream positions — across emissions × draft kinds × window
+//!    slides.
 
 use stride::accept::AcceptancePolicy;
 use stride::models::{AnalyticBackend, CacheMode, NativeBackend};
 use stride::nn::model::tiny_model;
 use stride::specdec::{
-    make_source, sd_generate_from, sd_generate_tree_from, DraftConfig, DraftKind, Emission,
-    SpecConfig, Variant,
+    make_source, sd_generate_from, sd_generate_tree_from, set_stacked_verify,
+    stacked_verify_enabled, DraftConfig, DraftKind, Emission, SpecConfig, Variant,
 };
 use stride::util::proptest_lite::{check_with, Config, Gen};
 use stride::util::rng::Rng;
@@ -136,7 +144,7 @@ fn tree_k1_matches_classic_bitwise_across_draft_kinds() {
         for &(variant, emission) in COMBOS {
             for seed in [3u64, 19] {
                 let mut c = cfg(3, 1, 0.5, variant, emission, seed);
-                c.draft.kind = *kind;
+                c.draft.kind = kind;
                 assert_wall(
                     &t,
                     &d,
@@ -327,6 +335,136 @@ fn tree_round_structure_invariants_hold() {
         }
         Ok(())
     });
+}
+
+// ---------------------------------------------------------------------------
+// The stacked-verify wall (k > 1).
+// ---------------------------------------------------------------------------
+
+/// One tree decode with the stacked-verify toggle forced to `on`,
+/// restoring the default afterwards. The toggle is process-global and
+/// sibling tests may flip it concurrently; that is *safe by the very
+/// invariant under test* — both verify paths are bitwise identical, so
+/// whichever path a round takes, the assertion below must hold.
+fn tree_run(
+    target: &dyn stride::models::Backend,
+    draft: &dyn stride::models::Backend,
+    hist: &[f32],
+    n_hist: usize,
+    horizon: usize,
+    c: &SpecConfig,
+    on: bool,
+) -> stride::specdec::DecodeOutput {
+    set_stacked_verify(on);
+    let mut src = make_source(&c.draft, draft).unwrap();
+    let out = sd_generate_tree_from(target, src.as_mut(), hist, n_hist, horizon, c).unwrap();
+    set_stacked_verify(true);
+    out
+}
+
+/// Full-strength comparison: emitted bits, round structure, acceptance
+/// probabilities, and residual-draw counts — everything the RNG stream
+/// touches — must match between the stacked and the sequential verify.
+fn assert_stacked_wall(
+    on: &stride::specdec::DecodeOutput,
+    off: &stride::specdec::DecodeOutput,
+    label: &str,
+) {
+    assert_eq!(bits(&on.patches), bits(&off.patches), "{label}: patches diverged");
+    assert_eq!(on.stats.rounds, off.stats.rounds, "{label}: rounds");
+    assert_eq!(on.stats.proposals, off.stats.proposals, "{label}: proposals");
+    assert_eq!(on.stats.accepted, off.stats.accepted, "{label}: accepted");
+    assert_eq!(
+        on.stats.branches_verified, off.stats.branches_verified,
+        "{label}: branches_verified"
+    );
+    for (i, (ra, rb)) in on.rounds.iter().zip(&off.rounds).enumerate() {
+        assert_eq!(ra.gamma, rb.gamma, "{label}: round {i} gamma");
+        assert_eq!(ra.branches, rb.branches, "{label}: round {i} branches");
+        assert_eq!(ra.alphas, rb.alphas, "{label}: round {i} alphas");
+        assert_eq!(ra.accepted, rb.accepted, "{label}: round {i} accepted");
+        assert_eq!(ra.emitted, rb.emitted, "{label}: round {i} emitted");
+        assert_eq!(ra.residual_draws, rb.residual_draws, "{label}: round {i} residual draws");
+    }
+}
+
+#[test]
+fn stacked_verify_bitwise_equals_sequential_native() {
+    // Native (kernel-layer) target: the stacked path verifies k branch
+    // suffixes in one batched forward against the shared-prefix KV;
+    // sequential does k extend/rollback round-trips. Lossless is k = 1
+    // only by construction, so the wall matrix is Practical × emissions.
+    let t = NativeBackend::new(tiny_model(33));
+    let d = NativeBackend::new(tiny_model(34));
+    let hist: Vec<f32> = (0..3 * 4).map(|i| (i as f32 * 0.25).sin()).collect();
+    for &k in &[2usize, 4] {
+        for emission in [Emission::Mean, Emission::Sampled] {
+            for seed in [5u64, 23] {
+                let c = cfg(2, k, 0.4, Variant::Practical, emission, seed);
+                let on = tree_run(&t, &d, &hist, 3, 12, &c, true);
+                let off = tree_run(&t, &d, &hist, 3, 12, &c, false);
+                assert_stacked_wall(&on, &off, &format!("k {k} {emission:?} seed {seed}"));
+                assert!(
+                    on.rounds.iter().any(|r| r.branches == k),
+                    "k {k}: no multi-branch round was exercised"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn stacked_verify_bitwise_equals_sequential_across_draft_kinds() {
+    let t = NativeBackend::new(tiny_model(35));
+    let d = NativeBackend::new(tiny_model(36));
+    let hist: Vec<f32> = (0..2 * 4).map(|i| (i as f32 * 0.3).cos()).collect();
+    for kind in DraftKind::all() {
+        for emission in [Emission::Mean, Emission::Sampled] {
+            let mut c = cfg(3, 2, 0.5, Variant::Practical, emission, 17);
+            c.draft.kind = kind;
+            let on = tree_run(&t, &d, &hist, 2, 11, &c, true);
+            let off = tree_run(&t, &d, &hist, 2, 11, &c, false);
+            assert_stacked_wall(&on, &off, &format!("{kind:?}/{emission:?}"));
+        }
+    }
+}
+
+#[test]
+fn stacked_verify_bitwise_equals_sequential_with_window_slides() {
+    // Tight context + long horizon forces repeated eviction *before* the
+    // verify stage (the engine slides to keep γ + 1 of headroom), so the
+    // stacked forward must stay bit-identical across evict_to calls too —
+    // the lanes rebuild against a moved prefix every slide.
+    let t = NativeBackend::new(tiny_model(37));
+    let d = NativeBackend::new(tiny_model(38));
+    let hist: Vec<f32> = (0..2 * 4).map(|i| (i as f32 * 0.2).sin()).collect();
+    for &k in &[2usize, 4] {
+        let c = cfg(3, k, 0.4, Variant::Practical, Emission::Sampled, 11);
+        let on = tree_run(&t, &d, &hist, 2, 17, &c, true);
+        let off = tree_run(&t, &d, &hist, 2, 17, &c, false);
+        assert_stacked_wall(&on, &off, &format!("window-slide k {k}"));
+    }
+}
+
+#[test]
+fn stacked_toggle_is_inert_at_k1_and_on_analytic_backends() {
+    // k = 1 never enters the stacked branch, and analytic sessions
+    // decline `verify_stacked` (default impl) — both must make the
+    // toggle a no-op rather than an error.
+    let t = AnalyticBackend::new("t", 2, 0.8, 0.1);
+    let d = AnalyticBackend::new("d", 2, 0.7, 0.15);
+    let hist = [0.5f32, -0.5, 0.2, 0.1];
+    for &k in &[1usize, 3] {
+        let c = cfg(2, k, 0.5, Variant::Practical, Emission::Sampled, 9);
+        let on = tree_run(&t, &d, &hist, 2, 9, &c, true);
+        let off = tree_run(&t, &d, &hist, 2, 9, &c, false);
+        assert_stacked_wall(&on, &off, &format!("analytic k {k}"));
+    }
+    // NOTE: no assert on `stacked_verify_enabled()` here — sibling tests
+    // flip the process-global toggle transiently in parallel, so its
+    // instantaneous value is not observable race-free. Every helper
+    // restores `true` on exit; the walls above are what the toggle owes.
+    let _ = stacked_verify_enabled();
 }
 
 /// Invariant: cache on/off bit-identity at any k. The tree loop forks

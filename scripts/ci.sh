@@ -51,8 +51,16 @@ check_bench_json() {
 
 if [[ "${1:-}" != "--no-bench" ]]; then
     echo "== perf_hotpath smoke (STRIDE_BENCH_QUICK=1) =="
+    # Kernel-tier criteria: the SIMD, tiled, and stacked-verify fast
+    # paths must each be bitwise identical to the scalar / flat /
+    # sequential forms they replace (asserted in-bench, recorded as
+    # criteria_met), and every timing must be finite.
     STRIDE_BENCH_QUICK=1 cargo bench --bench perf_hotpath
     check_bench_json results/BENCH_perf_hotpath.json
+    if ! grep -q '"criteria_met":true' results/BENCH_perf_hotpath.json; then
+        echo "error: perf_hotpath kernel-tier criteria not met" >&2
+        exit 1
+    fi
 
     echo "== adaptive_gamma smoke (STRIDE_BENCH_QUICK=1) =="
     # The bench exits non-zero itself if the controller misses its
@@ -90,8 +98,10 @@ if [[ "${1:-}" != "--no-bench" ]]; then
     echo "== tree_speculation smoke (STRIDE_BENCH_QUICK=1) =="
     # Tree-speculation criteria: the k=4 mean accepted run must be
     # strictly longer than k=1 overall and in every acceptance regime,
-    # and measured full-gamma runs must track the independent-branch
-    # law E[L_k] - 1 = sum(1 - (1 - alpha^i)^k).
+    # measured full-gamma runs must track the independent-branch
+    # law E[L_k] - 1 = sum(1 - (1 - alpha^i)^k), and the stacked
+    # (one-batched-forward) verify must emit bits identical to the
+    # retained sequential reference on the native workload.
     STRIDE_BENCH_QUICK=1 cargo bench --bench tree_speculation
     check_bench_json results/BENCH_tree_speculation.json
     if ! grep -q '"criteria_met":true' results/BENCH_tree_speculation.json; then
