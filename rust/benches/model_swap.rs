@@ -1,0 +1,339 @@
+//! Live weight-swap bench: open-loop Poisson load against a
+//! registry-booted engine with a hot swap fired mid-soak.
+//!
+//! Three self-judging criteria (asserted in-bench and recorded in
+//! `results/BENCH_model_swap.json`; schema in `benches/README.md`):
+//!
+//! 1. **Zero drops** — every request issued across the soak (before,
+//!    during, and after the swap) completes successfully; the swap is
+//!    not allowed to shed, error, or lose a single one.
+//! 2. **Bounded disturbance** — p99 latency of requests issued inside
+//!    the swap window is <= 2x the steady-state p99 (plus a small
+//!    absolute floor for timer jitter at tiny-model ms latencies).
+//! 3. **Identity lands** — the swap report is complete (every replica
+//!    rebound) and the serving digest equals the new manifest's content
+//!    address.
+//!
+//! No artifacts needed: both model versions are seeded synthetics
+//! published into a throwaway registry under the system temp dir, and
+//! the engine boots from `ServeConfig::registry_model`.
+
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use stride::config::ServeConfig;
+use stride::metrics::{AcceptanceMonitor, Metrics};
+use stride::nn::{ModelDims, NativeModel};
+use stride::registry::{publish_pair, Registry};
+use stride::server::protocol::{ForecastRequest, Mode, Priority};
+use stride::server::{start_engine, BatcherHandle};
+use stride::util::json::Json;
+use stride::util::rng::Rng;
+use stride::util::stats::quantile;
+
+const PATCH: usize = 4;
+const N_CTX: usize = 32;
+const N_HIST: usize = 8;
+const HORIZON: usize = 16;
+
+fn target_model(seed: u64) -> NativeModel {
+    let dims =
+        ModelDims { patch: PATCH, n_ctx: N_CTX, d_model: 32, n_layers: 2, n_heads: 4, d_ff: 64 };
+    NativeModel::random("swap-target", dims, seed)
+}
+
+fn draft_model(seed: u64) -> NativeModel {
+    let dims =
+        ModelDims { patch: PATCH, n_ctx: N_CTX, d_model: 16, n_layers: 1, n_heads: 2, d_ff: 32 };
+    NativeModel::random("swap-draft", dims, seed)
+}
+
+struct Engine {
+    handle: BatcherHandle,
+    threads: Vec<std::thread::JoinHandle<()>>,
+}
+
+fn start(registry_root: &std::path::Path, reference: &str) -> anyhow::Result<Engine> {
+    let mut cfg = ServeConfig::default();
+    cfg.backend = "native".into();
+    cfg.replicas = 2;
+    cfg.max_batch = 8;
+    cfg.max_wait_ms = 1;
+    cfg.queue_cap = 1024;
+    // Replica behavior is the thing under test; keep kernel-layer
+    // parallelism fixed so latencies attribute to the serving layer.
+    cfg.threads = 1;
+    cfg.registry_dir = Some(registry_root.to_path_buf());
+    cfg.registry_model = Some(reference.to_string());
+    let metrics = Arc::new(Metrics::new());
+    let monitor = Arc::new(AcceptanceMonitor::new(256, 0.8));
+    let stop = Arc::new(AtomicBool::new(false));
+    let (handle, threads) = start_engine(cfg, metrics, monitor, stop)?;
+    Ok(Engine { handle, threads })
+}
+
+impl Engine {
+    fn stop(self) {
+        self.handle.shutdown();
+        for t in self.threads {
+            let _ = t.join();
+        }
+    }
+}
+
+fn history(seed: u64) -> Vec<f32> {
+    let mut rng = Rng::new(seed);
+    (0..N_HIST * PATCH).map(|_| (rng.normal() as f32) * 0.5).collect()
+}
+
+fn request(i: usize) -> ForecastRequest {
+    ForecastRequest {
+        history: history(1000 + (i % 8) as u64),
+        horizon: HORIZON,
+        mode: Mode::Sd,
+        gamma: Some(2 + (i % 2)),
+        k: None,
+        sigma: Some(0.5),
+        cache: None,
+        adaptive: None,
+        draft: None,
+        dataset: None,
+        priority: Priority::Normal,
+        deadline_ms: None,
+        seed: Some(0x5A17_0000 + i as u64),
+    }
+}
+
+/// Short closed-loop warmup to size the open-loop rate: the soak runs at
+/// ~60% of measured capacity so the queue stays shallow and the swap is
+/// the only disturbance.
+fn measure_capacity(handle: &BatcherHandle, n_req: usize) -> anyhow::Result<f64> {
+    let next = Arc::new(AtomicUsize::new(0));
+    let t0 = Instant::now();
+    let workers: Vec<_> = (0..8)
+        .map(|_| {
+            let h = handle.clone();
+            let next = Arc::clone(&next);
+            std::thread::spawn(move || loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n_req {
+                    return;
+                }
+                h.forecast(request(i)).expect("warmup request failed");
+            })
+        })
+        .collect();
+    for w in workers {
+        w.join().unwrap();
+    }
+    Ok(n_req as f64 / t0.elapsed().as_secs_f64())
+}
+
+/// One completed soak request: seconds-from-start at issue, latency in
+/// ms, and whether it succeeded.
+#[derive(Clone, Copy)]
+struct Sample {
+    issued_at_s: f64,
+    latency_ms: f64,
+    ok: bool,
+}
+
+fn p99(samples: &[&Sample]) -> f64 {
+    let mut l: Vec<f64> = samples.iter().map(|s| s.latency_ms).collect();
+    l.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    if l.is_empty() {
+        0.0
+    } else {
+        quantile(&l, 0.99)
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    let quick = std::env::var("STRIDE_BENCH_QUICK").as_deref() == Ok("1");
+    let n_req = if quick { 300 } else { 900 };
+    let n_warm = if quick { 48 } else { 96 };
+    println!("model_swap: quick={quick}, soak {n_req} requests, horizon {HORIZON}, patch {PATCH}");
+
+    // Publish both versions (same geometry, different weights) into a
+    // throwaway registry.
+    let root = std::env::temp_dir().join("stride_bench_model_swap");
+    let _ = std::fs::remove_dir_all(&root);
+    let reg = Registry::open(&root)?;
+    let d1 = publish_pair(&reg, "bench", "v1", &target_model(0xA11CE), &draft_model(0xB0B))?;
+    let d2 = publish_pair(&reg, "bench", "v2", &target_model(0xCAFE), &draft_model(0xD00D))?;
+    anyhow::ensure!(d1 != d2, "versions must differ");
+
+    let engine = start(&root, "bench:v1")?;
+    anyhow::ensure!(engine.handle.model_digest() == d1, "engine must boot on v1");
+
+    let capacity = measure_capacity(&engine.handle, n_warm)?;
+    let rate = (0.6 * capacity).max(20.0);
+    println!("capacity ~{capacity:.1} req/s -> open-loop soak at {rate:.1} req/s");
+
+    // Pre-computed Poisson arrival schedule (seeded: the arrival pattern
+    // is part of the workload definition).
+    let mut rng = Rng::new(0x5A17_BEEF);
+    let mut offsets = Vec::with_capacity(n_req);
+    let mut t_acc = 0.0f64;
+    for _ in 0..n_req {
+        t_acc += rng.exponential(rate);
+        offsets.push(t_acc);
+    }
+    let offsets = Arc::new(offsets);
+    let next = Arc::new(AtomicUsize::new(0));
+    let issued = Arc::new(AtomicUsize::new(0));
+    let samples: Arc<Mutex<Vec<Sample>>> = Arc::new(Mutex::new(Vec::new()));
+    let t0 = Instant::now();
+    let workers: Vec<_> = (0..32)
+        .map(|_| {
+            let h = engine.handle.clone();
+            let next = Arc::clone(&next);
+            let issued = Arc::clone(&issued);
+            let offsets = Arc::clone(&offsets);
+            let samples = Arc::clone(&samples);
+            std::thread::spawn(move || loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= offsets.len() {
+                    return;
+                }
+                let due = offsets[i];
+                let now = t0.elapsed().as_secs_f64();
+                if due > now {
+                    std::thread::sleep(std::time::Duration::from_secs_f64(due - now));
+                }
+                let issued_at_s = t0.elapsed().as_secs_f64();
+                issued.fetch_add(1, Ordering::Relaxed);
+                let t = Instant::now();
+                let ok = h.forecast(request(i)).is_ok();
+                let latency_ms = t.elapsed().as_secs_f64() * 1e3;
+                samples.lock().unwrap().push(Sample { issued_at_s, latency_ms, ok });
+            })
+        })
+        .collect();
+
+    // Fire the hot swap once half the soak has been issued.
+    while issued.load(Ordering::Relaxed) < n_req / 2 {
+        std::thread::sleep(std::time::Duration::from_millis(1));
+    }
+    let swap_start_s = t0.elapsed().as_secs_f64();
+    let report = engine.handle.swap_model("bench:v2").map_err(|e| anyhow::anyhow!("{e}"))?;
+    let swap_end_s = t0.elapsed().as_secs_f64();
+    println!(
+        "swap: {} -> generation {} in {} ms (rebound {}/{}, complete {})",
+        report.label, report.generation, report.duration_ms, report.rebound, report.replicas,
+        report.complete
+    );
+
+    for w in workers {
+        w.join().unwrap();
+    }
+    let samples = samples.lock().unwrap().clone();
+    anyhow::ensure!(samples.len() == n_req, "soak lost samples: {}", samples.len());
+
+    // Partition by issue time. The swap window gets a margin past the
+    // barrier so requests admitted onto just-rebound replicas count as
+    // "during"; if the window caught too few samples for a p99 (a fast
+    // swap on an idle instant), widen it symmetrically.
+    let mut window = (swap_start_s, swap_end_s + 0.1);
+    let in_window = |w: (f64, f64), s: &&Sample| s.issued_at_s >= w.0 && s.issued_at_s <= w.1;
+    if samples.iter().filter(|s| in_window(window, s)).count() < 5 {
+        window = (swap_start_s - 0.25, swap_end_s + 0.35);
+    }
+    let steady: Vec<&Sample> = samples.iter().filter(|s| s.issued_at_s < window.0).collect();
+    let during: Vec<&Sample> = samples.iter().filter(|s| in_window(window, s)).collect();
+    let after: Vec<&Sample> = samples.iter().filter(|s| s.issued_at_s > window.1).collect();
+    let errors = samples.iter().filter(|s| !s.ok).count();
+    let p99_steady = p99(&steady);
+    let p99_during = p99(&during);
+    let p99_after = p99(&after);
+    println!(
+        "p99 ms: steady {p99_steady:.2} ({} req), during swap {p99_during:.2} ({} req), \
+         after {p99_after:.2} ({} req); errors {errors}",
+        steady.len(),
+        during.len(),
+        after.len()
+    );
+
+    // Criteria. The +5 ms absolute floor keeps the 2x ratio meaningful
+    // at tiny-model latencies, where a single timer tick is a large
+    // relative error.
+    let zero_drops = errors == 0;
+    let bounded = p99_during <= 2.0 * p99_steady + 5.0;
+    let identity = report.complete
+        && report.digest == d2
+        && engine.handle.model_digest() == d2
+        && report.rebound == report.replicas;
+    let criteria_met = zero_drops && bounded && identity;
+
+    let vals = [p99_steady, p99_during, p99_after, capacity, rate];
+    anyhow::ensure!(vals.iter().all(|v| v.is_finite()), "non-finite bench value: {vals:?}");
+    let phase_json = |label: &str, s: &[&Sample], p: f64| {
+        Json::obj(vec![
+            ("label", Json::from(label)),
+            ("requests", Json::from(s.len())),
+            ("latency_p99_ms", Json::Num(p)),
+        ])
+    };
+    let j = Json::obj(vec![
+        ("bench", Json::from("model_swap")),
+        ("quick", Json::from(quick)),
+        (
+            "config",
+            Json::obj(vec![
+                ("patch", Json::from(PATCH)),
+                ("n_ctx", Json::from(N_CTX)),
+                ("horizon_patches", Json::from(HORIZON)),
+                ("replicas", Json::from(2usize)),
+                ("soak_requests", Json::from(n_req)),
+                ("capacity_req_per_s", Json::Num(capacity)),
+                ("soak_rate_req_per_s", Json::Num(rate)),
+            ]),
+        ),
+        (
+            "swap",
+            Json::obj(vec![
+                ("from_digest", Json::from(d1)),
+                ("to_digest", Json::from(report.digest.clone())),
+                ("generation", Json::from(report.generation as usize)),
+                ("duration_ms", Json::from(report.duration_ms as usize)),
+                ("rebound", Json::from(report.rebound)),
+                ("replicas", Json::from(report.replicas)),
+                ("complete", Json::from(report.complete)),
+                ("heads", Json::from(report.heads)),
+            ]),
+        ),
+        (
+            "phases",
+            Json::Arr(vec![
+                phase_json("steady", &steady, p99_steady),
+                phase_json("during_swap", &during, p99_during),
+                phase_json("after_swap", &after, p99_after),
+            ]),
+        ),
+        (
+            "criteria",
+            Json::obj(vec![
+                ("zero_dropped_or_errored", Json::from(zero_drops)),
+                ("swap_p99_le_2x_steady", Json::from(bounded)),
+                ("post_swap_digest_matches", Json::from(identity)),
+                ("criteria_met", Json::from(criteria_met)),
+            ]),
+        ),
+    ]);
+    std::fs::create_dir_all("results")?;
+    std::fs::write("results/BENCH_model_swap.json", format!("{j}\n"))?;
+    println!("wrote results/BENCH_model_swap.json");
+    engine.stop();
+
+    anyhow::ensure!(
+        criteria_met,
+        "model_swap criteria failed: zero_drops={zero_drops} bounded={bounded} \
+         identity={identity}"
+    );
+    println!(
+        "criteria met: zero requests dropped across the swap; swap-window p99 bounded; \
+         serving identity landed on the new digest"
+    );
+    Ok(())
+}

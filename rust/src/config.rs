@@ -111,6 +111,40 @@ impl SchedPolicy {
     }
 }
 
+/// What happens to learned per-model state — adaptive draft heads and
+/// the γ/k controller — when the replica pool live-swaps to a new model.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum SwapHeads {
+    /// Discard heads and reset the controller to its warm-up state: the
+    /// new weights get a clean slate. The default — learned residuals
+    /// against the old target are noise against the new one.
+    #[default]
+    Reset,
+    /// Carry heads and controller state across the swap: right when the
+    /// new model is a small delta of the old (a fine-tune step) and
+    /// re-warming costs more than the stale-state bias.
+    Carry,
+}
+
+impl SwapHeads {
+    /// Config/CLI name (`"reset"` / `"carry"`).
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            SwapHeads::Reset => "reset",
+            SwapHeads::Carry => "carry",
+        }
+    }
+
+    /// Parse a config/CLI name; `None` for unknown spellings.
+    pub fn parse(s: &str) -> Option<SwapHeads> {
+        match s {
+            "reset" => Some(SwapHeads::Reset),
+            "carry" => Some(SwapHeads::Carry),
+            _ => None,
+        }
+    }
+}
+
 /// Server/engine configuration.
 #[derive(Clone, Debug)]
 pub struct ServeConfig {
@@ -204,6 +238,20 @@ pub struct ServeConfig {
     /// `Server::drain` waits for queued jobs to finish (while refusing
     /// new admissions with HTTP 503) before hard shutdown.
     pub drain_ms: u64,
+    /// Root directory of the content-addressed model registry (blobs +
+    /// manifests). `None` derives `<artifacts>/registry` at startup.
+    pub registry_dir: Option<PathBuf>,
+    /// Model reference to serve at startup, resolved against the
+    /// registry: `"name:version"` or `"sha256:<hex>"`. `None` keeps the
+    /// seeded synthetic model pair (the pre-registry behavior).
+    pub registry_model: Option<String>,
+    /// Policy for adaptive draft heads and γ/k-controller state across a
+    /// live weight swap (`"reset"` | `"carry"`).
+    pub swap_heads: SwapHeads,
+    /// HTTP request-body cap in bytes. Over-cap requests are answered
+    /// with a typed 413 (`body_too_large`), never silently dropped.
+    /// Registry pushes are the legitimate large-body traffic this guards.
+    pub max_body_bytes: usize,
 }
 
 impl Default for ServeConfig {
@@ -236,6 +284,10 @@ impl Default for ServeConfig {
             seed: 0xC0FFEE,
             fault: FaultConfig::default(),
             drain_ms: 5000,
+            registry_dir: None,
+            registry_model: None,
+            swap_heads: SwapHeads::Reset,
+            max_body_bytes: crate::http::DEFAULT_MAX_BODY_BYTES,
         }
     }
 }
@@ -287,6 +339,20 @@ impl ServeConfig {
                 // (object implies enabled unless "enabled": false).
                 "fault" => self.apply_fault_json(v)?,
                 "drain_ms" => self.drain_ms = v.as_usize().context("drain_ms")? as u64,
+                "registry_dir" => {
+                    self.registry_dir = Some(PathBuf::from(v.as_str().context("registry_dir")?))
+                }
+                "registry_model" => {
+                    self.registry_model = Some(v.as_str().context("registry_model")?.to_string())
+                }
+                "swap_heads" => {
+                    let s = v.as_str().context("swap_heads")?;
+                    self.swap_heads = SwapHeads::parse(s)
+                        .with_context(|| format!("unknown swap_heads policy '{s}' (reset|carry)"))?;
+                }
+                "max_body_bytes" => {
+                    self.max_body_bytes = v.as_usize().context("max_body_bytes")?
+                }
                 other => bail!("unknown config key: {other}"),
             }
         }
@@ -335,6 +401,9 @@ impl ServeConfig {
                 "p_stall" => f.p_stall = val.as_f64().context("fault.p_stall")?,
                 "stall_ms" => f.stall_ms = val.as_usize().context("fault.stall_ms")? as u64,
                 "p_nan" => f.p_nan = val.as_f64().context("fault.p_nan")?,
+                "p_blob_corrupt" => {
+                    f.p_blob_corrupt = val.as_f64().context("fault.p_blob_corrupt")?
+                }
                 "max_faults" => f.max_faults = val.as_usize().context("fault.max_faults")? as u64,
                 other => bail!("unknown fault config key: {other}"),
             }
@@ -489,7 +558,26 @@ impl ServeConfig {
         if let Some(v) = cli.get_usize("drain-ms")? {
             self.drain_ms = v as u64;
         }
+        if let Some(v) = cli.get("registry-dir") {
+            self.registry_dir = Some(PathBuf::from(v));
+        }
+        if let Some(v) = cli.get("registry-model") {
+            self.registry_model = Some(v.to_string());
+        }
+        if let Some(v) = cli.get("swap-heads") {
+            self.swap_heads = SwapHeads::parse(v)
+                .with_context(|| format!("--swap-heads must be reset|carry, got '{v}'"))?;
+        }
+        if let Some(v) = cli.get_usize("max-body-bytes")? {
+            self.max_body_bytes = v;
+        }
         self.validate()
+    }
+
+    /// Root directory of the model registry: the configured
+    /// `registry_dir`, or `<artifacts>/registry` when unset.
+    pub fn registry_root(&self) -> PathBuf {
+        self.registry_dir.clone().unwrap_or_else(|| self.artifacts.join("registry"))
     }
 
     /// Check cross-field invariants (γ bounds, σ/λ positivity, variant
@@ -545,6 +633,13 @@ impl ServeConfig {
         }
         if !matches!(self.kernel.as_str(), "fused" | "pallas") {
             bail!("kernel must be 'fused' or 'pallas'");
+        }
+        if self.max_body_bytes < 1024 {
+            bail!(
+                "max_body_bytes must be >= 1024 (a cap below one KiB rejects \
+                 every real request), got {}",
+                self.max_body_bytes
+            );
         }
         self.draft.validate()?;
         // Bounds hold whether or not chaos is armed — a config file
@@ -917,6 +1012,72 @@ mod tests {
         cfg.validate().unwrap();
         // Breaker bounds are enforced when armed.
         cfg.adaptive_cfg.breaker_alpha_floor = 1.5;
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn registry_plumbing() {
+        // Defaults: no registry model, registry root derives from artifacts.
+        let cfg = ServeConfig::default();
+        assert!(cfg.registry_dir.is_none());
+        assert!(cfg.registry_model.is_none());
+        assert_eq!(cfg.swap_heads, SwapHeads::Reset);
+        assert_eq!(cfg.max_body_bytes, crate::http::DEFAULT_MAX_BODY_BYTES);
+        assert_eq!(cfg.registry_root(), cfg.artifacts.join("registry"));
+
+        // JSON form.
+        let mut cfg = ServeConfig::default();
+        cfg.apply_json(
+            &Json::parse(
+                r#"{"registry_dir": "/tmp/reg", "registry_model": "demo:v1",
+                    "swap_heads": "carry", "max_body_bytes": 1048576}"#,
+            )
+            .unwrap(),
+        )
+        .unwrap();
+        assert_eq!(cfg.registry_root(), PathBuf::from("/tmp/reg"));
+        assert_eq!(cfg.registry_model.as_deref(), Some("demo:v1"));
+        assert_eq!(cfg.swap_heads, SwapHeads::Carry);
+        assert_eq!(cfg.max_body_bytes, 1 << 20);
+        cfg.validate().unwrap();
+
+        // CLI form wins.
+        cfg.apply_cli(
+            &Cli::parse(args(
+                "--registry-dir /tmp/reg2 --registry-model demo:v2 \
+                 --swap-heads reset --max-body-bytes 2048",
+            ))
+            .unwrap(),
+        )
+        .unwrap();
+        assert_eq!(cfg.registry_root(), PathBuf::from("/tmp/reg2"));
+        assert_eq!(cfg.registry_model.as_deref(), Some("demo:v2"));
+        assert_eq!(cfg.swap_heads, SwapHeads::Reset);
+        assert_eq!(cfg.max_body_bytes, 2048);
+
+        // Bad values.
+        let mut cfg = ServeConfig::default();
+        assert!(cfg.apply_json(&Json::parse(r#"{"swap_heads": "merge"}"#).unwrap()).is_err());
+        let mut cfg = ServeConfig::default();
+        cfg.max_body_bytes = 16;
+        assert!(cfg.validate().is_err(), "sub-KiB body cap must be rejected");
+
+        // Policy names roundtrip.
+        for p in [SwapHeads::Reset, SwapHeads::Carry] {
+            assert_eq!(SwapHeads::parse(p.as_str()), Some(p));
+        }
+        assert_eq!(SwapHeads::parse("merge"), None);
+
+        // Blob-corruption knob rides the fault object.
+        let mut cfg = ServeConfig::default();
+        cfg.apply_json(
+            &Json::parse(r#"{"fault": {"p_blob_corrupt": 0.25, "max_faults": 5}}"#).unwrap(),
+        )
+        .unwrap();
+        assert!(cfg.fault.enabled);
+        assert!((cfg.fault.p_blob_corrupt - 0.25).abs() < 1e-12);
+        cfg.validate().unwrap();
+        cfg.fault.p_blob_corrupt = 1.5;
         assert!(cfg.validate().is_err());
     }
 

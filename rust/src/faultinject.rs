@@ -47,6 +47,10 @@ pub enum FaultSite {
     Target,
     /// The draft (proposal) backend's forwards.
     Draft,
+    /// Registry blob bytes in transit (pull path). Drawn from its own
+    /// op stream via [`FaultPlan::draw_blob_corrupt`], never from the
+    /// forward-fault chain.
+    BlobCorrupt,
 }
 
 impl FaultSite {
@@ -54,6 +58,7 @@ impl FaultSite {
         match self {
             FaultSite::Target => 0x7A26_57E7,
             FaultSite::Draft => 0xD2AF_7001,
+            FaultSite::BlobCorrupt => 0x5EED_B10B,
         }
     }
 
@@ -62,6 +67,7 @@ impl FaultSite {
         match self {
             FaultSite::Target => "target",
             FaultSite::Draft => "draft",
+            FaultSite::BlobCorrupt => "blob",
         }
     }
 }
@@ -96,6 +102,12 @@ pub struct FaultConfig {
     pub stall_ms: u64,
     /// Per-forward probability of a NaN-poisoned output row.
     pub p_nan: f64,
+    /// Per-pull probability that a registry blob's bytes are corrupted
+    /// in transit (one deterministically-chosen byte is flipped). The
+    /// digest check must reject the blob with a typed
+    /// `digest_mismatch`, never load it. Drawn from its own op stream —
+    /// it does not dilute the forward-fault sub-distribution.
+    pub p_blob_corrupt: f64,
     /// Hard cap on total injected faults (0 = unlimited). A finite
     /// budget gives chaos tests a guaranteed-quiescent tail to measure
     /// recovery against.
@@ -111,6 +123,7 @@ impl Default for FaultConfig {
             p_stall: 0.0,
             stall_ms: 25,
             p_nan: 0.0,
+            p_blob_corrupt: 0.0,
             max_faults: 0,
         }
     }
@@ -121,9 +134,12 @@ impl FaultConfig {
     /// and stalls must be short enough that a faulted forward cannot
     /// outlive the serving timeout.
     pub fn validate(&self) -> Result<()> {
-        for (name, p) in
-            [("p_panic", self.p_panic), ("p_stall", self.p_stall), ("p_nan", self.p_nan)]
-        {
+        for (name, p) in [
+            ("p_panic", self.p_panic),
+            ("p_stall", self.p_stall),
+            ("p_nan", self.p_nan),
+            ("p_blob_corrupt", self.p_blob_corrupt),
+        ] {
             anyhow::ensure!(
                 p.is_finite() && (0.0..=1.0).contains(&p),
                 "fault {name} must be in [0, 1], got {p}"
@@ -157,10 +173,12 @@ fn splitmix64(mut x: u64) -> u64 {
 pub struct FaultPlan {
     cfg: FaultConfig,
     ops: AtomicU64,
+    blob_ops: AtomicU64,
     injected: AtomicU64,
     panics: AtomicU64,
     stalls: AtomicU64,
     nans: AtomicU64,
+    corrupts: AtomicU64,
 }
 
 impl FaultPlan {
@@ -172,10 +190,12 @@ impl FaultPlan {
         Ok(Arc::new(FaultPlan {
             cfg,
             ops: AtomicU64::new(0),
+            blob_ops: AtomicU64::new(0),
             injected: AtomicU64::new(0),
             panics: AtomicU64::new(0),
             stalls: AtomicU64::new(0),
             nans: AtomicU64::new(0),
+            corrupts: AtomicU64::new(0),
         }))
     }
 
@@ -202,6 +222,11 @@ impl FaultPlan {
     /// Injected NaN poisonings so far.
     pub fn nans(&self) -> u64 {
         self.nans.load(Ordering::Relaxed)
+    }
+
+    /// Injected blob corruptions so far.
+    pub fn corrupts(&self) -> u64 {
+        self.corrupts.load(Ordering::Relaxed)
     }
 
     /// True once the fault budget (when finite) is exhausted — the
@@ -237,6 +262,45 @@ impl FaultPlan {
             self.injected.fetch_add(1, Ordering::Relaxed);
         }
         fault
+    }
+
+    /// Draw the corruption decision for the next pulled blob. Pure in
+    /// `(seed, BlobCorrupt salt, blob-op index)`; respects the shared
+    /// fault budget. `Some(h)` means "corrupt this blob", with `h` the
+    /// decision hash the caller uses to pick the byte to flip (see
+    /// [`FaultPlan::corrupt_blob`]).
+    pub fn draw_blob_corrupt(&self) -> Option<u64> {
+        let op = self.blob_ops.fetch_add(1, Ordering::Relaxed);
+        if self.cfg.max_faults > 0 && self.injected.load(Ordering::Relaxed) >= self.cfg.max_faults
+        {
+            return None;
+        }
+        let h = splitmix64(
+            self.cfg.seed ^ FaultSite::BlobCorrupt.salt().wrapping_mul(0x100_0000_01B3) ^ op,
+        );
+        let u = (h >> 11) as f64 / (1u64 << 53) as f64;
+        if u < self.cfg.p_blob_corrupt {
+            self.corrupts.fetch_add(1, Ordering::Relaxed);
+            self.injected.fetch_add(1, Ordering::Relaxed);
+            Some(splitmix64(h))
+        } else {
+            None
+        }
+    }
+
+    /// Apply the blob-corruption draw to `bytes`: flips one
+    /// deterministically-chosen byte when the draw fires. Returns true
+    /// when the blob was corrupted — the pull path feeds the mutated
+    /// bytes to digest verification, which must reject them.
+    pub fn corrupt_blob(&self, bytes: &mut [u8]) -> bool {
+        match self.draw_blob_corrupt() {
+            Some(h) if !bytes.is_empty() => {
+                let idx = (h % bytes.len() as u64) as usize;
+                bytes[idx] ^= 0xFF;
+                true
+            }
+            _ => false,
+        }
     }
 }
 
@@ -347,6 +411,7 @@ mod tests {
             p_stall,
             stall_ms: 1,
             p_nan,
+            p_blob_corrupt: 0.0,
             max_faults: 0,
         }
     }
@@ -406,6 +471,48 @@ mod tests {
         // Budget spent: the next forward is clean.
         let out2 = b.forward(&toks, 2).unwrap();
         assert!(out2.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn blob_corruption_is_deterministic_and_flips_one_byte() {
+        let mut c = cfg(0.0, 0.0, 0.0);
+        c.p_blob_corrupt = 1.0;
+        let plan = FaultPlan::new(c).unwrap();
+        let clean: Vec<u8> = (0..64u8).collect();
+        let mut a = clean.clone();
+        assert!(plan.corrupt_blob(&mut a));
+        assert_eq!(plan.corrupts(), 1);
+        // Exactly one byte differs, by exactly a bit-flip.
+        let diffs: Vec<usize> = (0..clean.len()).filter(|&i| a[i] != clean[i]).collect();
+        assert_eq!(diffs.len(), 1);
+        assert_eq!(a[diffs[0]], clean[diffs[0]] ^ 0xFF);
+        // Same seed + same op index -> same corruption site.
+        let plan2 = FaultPlan::new(c).unwrap();
+        let mut b = clean.clone();
+        assert!(plan2.corrupt_blob(&mut b));
+        assert_eq!(a, b);
+        // p = 0 never corrupts, and empty blobs are left alone.
+        let clean_plan = FaultPlan::new(cfg(0.0, 0.0, 0.0)).unwrap();
+        let mut c2 = clean.clone();
+        assert!(!clean_plan.corrupt_blob(&mut c2));
+        assert_eq!(c2, clean);
+        assert!(!plan.corrupt_blob(&mut []));
+    }
+
+    #[test]
+    fn blob_corruption_respects_the_shared_budget() {
+        let mut c = cfg(0.0, 0.0, 0.0);
+        c.p_blob_corrupt = 1.0;
+        c.max_faults = 2;
+        let plan = FaultPlan::new(c).unwrap();
+        let hits = (0..10)
+            .filter(|_| {
+                let mut b = vec![1u8, 2, 3, 4];
+                plan.corrupt_blob(&mut b)
+            })
+            .count();
+        assert_eq!(hits, 2);
+        assert!(plan.exhausted());
     }
 
     #[test]

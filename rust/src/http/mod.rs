@@ -9,4 +9,4 @@ mod client;
 mod server;
 
 pub use client::{http_request, http_request_retry, HttpResponse, RetryError, RetryPolicy};
-pub use server::{HttpServer, Request, Response};
+pub use server::{HttpServer, Request, Response, DEFAULT_MAX_BODY_BYTES};

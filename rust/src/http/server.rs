@@ -90,9 +90,13 @@ impl Response {
 fn status_text(code: u16) -> &'static str {
     match code {
         200 => "OK",
+        201 => "Created",
         202 => "Accepted",
         400 => "Bad Request",
         404 => "Not Found",
+        409 => "Conflict",
+        413 => "Payload Too Large",
+        422 => "Unprocessable Entity",
         429 => "Too Many Requests",
         500 => "Internal Server Error",
         503 => "Service Unavailable",
@@ -100,6 +104,10 @@ fn status_text(code: u16) -> &'static str {
         _ => "Unknown",
     }
 }
+
+/// Default request-body cap (64 MiB) when a server is started without an
+/// explicit limit.
+pub const DEFAULT_MAX_BODY_BYTES: usize = 64 << 20;
 
 /// Shared request handler invoked on worker threads.
 pub type Handler = Arc<dyn Fn(&Request) -> Response + Send + Sync + 'static>;
@@ -139,6 +147,30 @@ impl HttpServer {
         read_timeout: Duration,
         write_timeout: Duration,
     ) -> std::io::Result<HttpServer> {
+        Self::start_with_limits(
+            addr,
+            workers,
+            handler,
+            read_timeout,
+            write_timeout,
+            DEFAULT_MAX_BODY_BYTES,
+        )
+    }
+
+    /// [`HttpServer::start_with_timeouts`] with an explicit request-body
+    /// cap. An over-cap `Content-Length` is answered with a typed HTTP
+    /// 413 JSON body (`error_code: "body_too_large"`, echoing the cap)
+    /// instead of silently dropping the connection — registry pushes are
+    /// the first legitimate large-body traffic, so the client needs a
+    /// deterministic signal to distinguish "too big" from "network flake".
+    pub fn start_with_limits(
+        addr: &str,
+        workers: usize,
+        handler: Handler,
+        read_timeout: Duration,
+        write_timeout: Duration,
+        max_body_bytes: usize,
+    ) -> std::io::Result<HttpServer> {
         let listener = TcpListener::bind(addr)?;
         let local = listener.local_addr()?;
         // Periodic accept timeout so the stop flag is observed promptly.
@@ -157,7 +189,13 @@ impl HttpServer {
                         Ok((stream, _)) => {
                             let handler = Arc::clone(&handler);
                             pool.execute(move || {
-                                handle_connection(stream, handler, read_timeout, write_timeout)
+                                handle_connection(
+                                    stream,
+                                    handler,
+                                    read_timeout,
+                                    write_timeout,
+                                    max_body_bytes,
+                                )
                             });
                         }
                         Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
@@ -190,6 +228,7 @@ fn handle_connection(
     handler: Handler,
     read_timeout: Duration,
     write_timeout: Duration,
+    max_body_bytes: usize,
 ) {
     let _ = stream.set_read_timeout(Some(read_timeout));
     // A reader that stalls mid-response must not pin this worker: when
@@ -204,8 +243,19 @@ fn handle_connection(
     let mut stream = stream;
     // Keep-alive loop.
     loop {
-        let req = match read_request(&mut reader) {
-            Ok(Some(r)) => r,
+        let req = match read_request(&mut reader, max_body_bytes) {
+            Ok(Some(ReadOutcome::Complete(r))) => r,
+            Ok(Some(ReadOutcome::BodyTooLarge { content_len })) => {
+                // The body was never read, so the connection cannot be
+                // reused — answer with a typed 413 and close.
+                let body = format!(
+                    "{{\"error\":\"request body of {content_len} bytes exceeds the \
+                     {max_body_bytes}-byte limit\",\"error_code\":\"body_too_large\",\
+                     \"max_body_bytes\":{max_body_bytes}}}"
+                );
+                let _ = write_response(&mut stream, &Response::json(413, body), false);
+                return;
+            }
             _ => return,
         };
         let keep_alive = !matches!(req.header("connection"), Some(v) if v.eq_ignore_ascii_case("close"));
@@ -219,7 +269,22 @@ fn handle_connection(
     }
 }
 
-fn read_request<R: BufRead>(reader: &mut R) -> std::io::Result<Option<Request>> {
+/// What `read_request` produced for one wire request.
+enum ReadOutcome {
+    /// A fully-framed request, body included.
+    Complete(Request),
+    /// The declared `Content-Length` exceeds the server's cap; the body
+    /// was not read.
+    BodyTooLarge {
+        /// The declared length.
+        content_len: usize,
+    },
+}
+
+fn read_request<R: BufRead>(
+    reader: &mut R,
+    max_body_bytes: usize,
+) -> std::io::Result<Option<ReadOutcome>> {
     let mut line = String::new();
     if reader.read_line(&mut line)? == 0 {
         return Ok(None); // closed
@@ -254,13 +319,12 @@ fn read_request<R: BufRead>(reader: &mut R) -> std::io::Result<Option<Request>> 
             headers.push((k, v));
         }
     }
-    const MAX_BODY: usize = 64 << 20;
-    if content_len > MAX_BODY {
-        return Err(std::io::Error::new(std::io::ErrorKind::InvalidData, "body too large"));
+    if content_len > max_body_bytes {
+        return Ok(Some(ReadOutcome::BodyTooLarge { content_len }));
     }
     let mut body = vec![0u8; content_len];
     reader.read_exact(&mut body)?;
-    Ok(Some(Request { method, path, query, headers, body }))
+    Ok(Some(ReadOutcome::Complete(Request { method, path, query, headers, body })))
 }
 
 fn write_response(stream: &mut TcpStream, resp: &Response, keep_alive: bool) -> std::io::Result<()> {
@@ -391,6 +455,65 @@ mod tests {
         assert!(
             t0.elapsed() < Duration::from_secs(3),
             "worker still pinned by the stalled reader after {:?}",
+            t0.elapsed()
+        );
+        drop(stalled);
+    }
+
+    /// An over-cap `Content-Length` gets a typed 413 JSON answer, not a
+    /// dropped connection, and the cap is configurable per server.
+    #[test]
+    fn over_cap_body_gets_typed_413() {
+        let server = HttpServer::start_with_limits(
+            "127.0.0.1:0",
+            1,
+            Arc::new(|_req: &Request| Response::text(200, "ok")),
+            Duration::from_secs(5),
+            Duration::from_secs(5),
+            1024, // 1 KiB cap
+        )
+        .unwrap();
+        let addr = server.addr.to_string();
+        // Under the cap: served normally.
+        let r = http_request(&addr, "POST", "/", Some(&vec![b'a'; 512])).unwrap();
+        assert_eq!(r.status, 200);
+        // Over the cap: typed 413 with the cap echoed back.
+        let r = http_request(&addr, "POST", "/", Some(&vec![b'a'; 4096])).unwrap();
+        assert_eq!(r.status, 413);
+        let body = r.body_str();
+        assert!(body.contains("\"error_code\":\"body_too_large\""), "body: {body}");
+        assert!(body.contains("\"max_body_bytes\":1024"), "body: {body}");
+    }
+
+    /// A client that declares a body and then stops *writing* must not pin
+    /// an HTTP worker: the read timeout drops the half-sent request and
+    /// frees the thread (mirror of the slow-reader test above).
+    #[test]
+    fn read_timeout_frees_worker_from_slow_body_writer() {
+        let server = HttpServer::start_with_timeouts(
+            "127.0.0.1:0",
+            1, // single worker: a pinned thread would block everyone
+            Arc::new(|_req: &Request| Response::text(200, "ok")),
+            Duration::from_millis(200),
+            Duration::from_secs(5),
+        )
+        .unwrap();
+        let addr = server.addr.to_string();
+        // Declare a 1 MiB body, send 10 bytes of it, then stall.
+        let mut stalled = TcpStream::connect(&addr).unwrap();
+        stalled
+            .write_all(b"POST /echo HTTP/1.1\r\nHost: x\r\nContent-Length: 1048576\r\n\r\n0123456789")
+            .unwrap();
+        stalled.flush().unwrap();
+        // Give the worker time to hit the 200 ms read timeout.
+        std::thread::sleep(Duration::from_millis(800));
+        // The single worker must be free again for a normal request.
+        let t0 = std::time::Instant::now();
+        let r = http_request(&addr, "GET", "/ping", None).unwrap();
+        assert_eq!(r.status, 200);
+        assert!(
+            t0.elapsed() < Duration::from_secs(3),
+            "worker still pinned by the stalled writer after {:?}",
             t0.elapsed()
         );
         drop(stalled);

@@ -136,6 +136,26 @@
 //!   `"draining"`). `tests/fault_injection.rs` is the chaos suite;
 //!   `benches/chaos_soak.rs` pins no-hang/no-NaN/bounded-recovery in
 //!   `results/BENCH_chaos_soak.json`.
+//! * [`registry`] — the **content-addressed model registry**: versioned
+//!   manifests (per-blob SHA-256 over a hand-rolled FIPS-checked
+//!   [`registry::digest`]), a digest-keyed blob cache, push/pull over
+//!   the serving HTTP API (`/v1/models`, `/v1/blobs` — pulls reuse the
+//!   seeded [`http::RetryPolicy`]), and verify-then-bind **zero-copy
+//!   loading**: blobs are mmapped ([`util::mmap::MappedFile`], heap
+//!   fallback where unsupported), hashed in place, and weight tensors
+//!   bind straight into the mapping ([`nn::Weights::from_mapped`]) — no
+//!   float is copied between disk and the packed kernel handles, and
+//!   mapped loads are bit-identical to heap loads. On top of it sits
+//!   **live weight swap**: `POST /admin/swap` resolves a manifest,
+//!   preloads + verifies, then replicas drain their current decode
+//!   groups and rebind to the new `Arc`-packed weights with zero
+//!   dropped requests (draft heads and controller state reset or carry
+//!   per `ServeConfig::swap_heads`); `stride_model_swap_*` metrics and
+//!   the serving digest in `/healthz` + `/stats` make the cutover
+//!   observable. `tests/registry_e2e.rs` pins push→pull bit-identity,
+//!   typed corrupt-blob rejection, and post-swap outputs bit-identical
+//!   to a cold start; `benches/model_swap.rs` pins zero-drop + bounded
+//!   p99 during a mid-soak hot swap.
 
 #![warn(missing_docs)]
 
@@ -149,6 +169,7 @@ pub mod http;
 pub mod metrics;
 pub mod models;
 pub mod nn;
+pub mod registry;
 pub mod repro;
 pub mod runtime;
 pub mod server;

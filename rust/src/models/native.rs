@@ -75,6 +75,12 @@ impl NativeBackend {
         &self.model.dims
     }
 
+    /// Borrow the wrapped model (registry equivalence tests forward
+    /// through it directly).
+    pub fn model(&self) -> &NativeModel {
+        &self.model
+    }
+
     /// An independent backend over the same `Arc`-shared weight storage
     /// (see [`NativeModel::replicate`]): its own packed handles, its own
     /// timing summary (so the measured cost ratio c stays per-replica
@@ -562,14 +568,14 @@ impl Backend for NativeBackend {
         let t = Tensor::from_vec(&[1, n, p], tokens[..n * p].to_vec());
         let out = self.model.forward(&t)?;
         self.timings.lock().unwrap().push(t0.elapsed().as_secs_f64());
-        Ok(out.data)
+        Ok(out.data.into_vec())
     }
 
     fn forward_batch(&self, tokens: &[f32], b: usize, n: usize) -> Result<Vec<f32>> {
         let p = self.patch();
         anyhow::ensure!(tokens.len() == b * n * p, "bad batch buffer");
         let t = Tensor::from_vec(&[b, n, p], tokens.to_vec());
-        Ok(self.model.forward(&t)?.data)
+        Ok(self.model.forward(&t)?.data.into_vec())
     }
 
     fn mean_secs(&self) -> f64 {

@@ -108,6 +108,12 @@ impl NativeModel {
         self.use_reference
     }
 
+    /// Borrow the string-keyed weight map (the registry packer serializes
+    /// tensors from here; no float is copied by the borrow).
+    pub fn weights(&self) -> &Weights {
+        &self.w
+    }
+
     /// Seeded random-weight model (no artifacts needed): the substrate for
     /// the cache-equivalence test suite and the `perf_hotpath` cached sweep,
     /// where analytic heads would be too trivial to exercise attention.
@@ -513,7 +519,8 @@ impl NativeModel {
         let d = self.dims.d_model;
 
         // Patch embedding + learned positions.
-        let mut x = linear_naive(tokens, self.w.get("embed_w")?, Some(&self.w.get("embed_b")?.data));
+        let mut x =
+            linear_naive(tokens, self.w.get("embed_w")?, Some(&self.w.get("embed_b")?.data[..]));
         let pos = self.w.get("pos")?;
         for bi in 0..b {
             for t in 0..n {
@@ -531,7 +538,7 @@ impl NativeModel {
         }
 
         rmsnorm(&mut x.data, &self.w.get("final_norm")?.data, RMS_EPS);
-        Ok(linear_naive(&x, self.w.get("head_w")?, Some(&self.w.get("head_b")?.data)))
+        Ok(linear_naive(&x, self.w.get("head_w")?, Some(&self.w.get("head_b")?.data[..])))
     }
 
     fn attn_block_reference(
@@ -638,7 +645,8 @@ impl NativeModel {
 
         // Embed + learned positions for the new rows only.
         let t_in = Tensor::from_vec(&[k, p], new_tokens[..k * p].to_vec());
-        let mut x = linear_naive(&t_in, self.w.get("embed_w")?, Some(&self.w.get("embed_b")?.data));
+        let mut x =
+            linear_naive(&t_in, self.w.get("embed_w")?, Some(&self.w.get("embed_b")?.data[..]));
         let pos = self.w.get("pos")?;
         for t in 0..k {
             let row = &mut x.data[t * d..(t + 1) * d];
@@ -702,7 +710,9 @@ impl NativeModel {
 
         cache.n = n0 + k;
         rmsnorm(&mut x.data, &self.w.get("final_norm")?.data, RMS_EPS);
-        Ok(linear_naive(&x, self.w.get("head_w")?, Some(&self.w.get("head_b")?.data)).data)
+        Ok(linear_naive(&x, self.w.get("head_w")?, Some(&self.w.get("head_b")?.data[..]))
+            .data
+            .into_vec())
     }
 }
 

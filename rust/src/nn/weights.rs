@@ -14,7 +14,8 @@ use std::sync::Arc;
 use anyhow::{bail, Context, Result};
 
 use crate::util::json::Json;
-use crate::util::tensor::Tensor;
+use crate::util::mmap::MappedFile;
+use crate::util::tensor::{Storage, Tensor};
 
 /// Named tensor store.
 ///
@@ -39,26 +40,50 @@ impl Weights {
             .chunks_exact(4)
             .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
             .collect();
-        let entries = tensor_index.as_arr().context("tensor index must be an array")?;
         let mut map = HashMap::new();
-        for e in entries {
-            let name = e.get("name").and_then(Json::as_str).context("tensor name")?;
-            let offset = e.get("offset").and_then(Json::as_usize).context("tensor offset")?;
-            let shape: Vec<usize> = e
-                .get("shape")
-                .and_then(Json::as_arr)
-                .context("tensor shape")?
-                .iter()
-                .map(|v| v.as_usize().unwrap_or(0))
-                .collect();
-            let n: usize = shape.iter().product();
-            if offset + n > floats.len() {
-                bail!("tensor {name} [{offset}, {}) exceeds blob len {}", offset + n, floats.len());
-            }
+        for entry in parse_index(tensor_index, floats.len())? {
+            let IndexEntry { name, shape, offset, numel } = entry;
             map.insert(
-                name.to_string(),
-                Arc::new(Tensor::from_vec(&shape, floats[offset..offset + n].to_vec())),
+                name,
+                Arc::new(Tensor::from_vec(&shape, floats[offset..offset + numel].to_vec())),
             );
+        }
+        Ok(Weights { map })
+    }
+
+    /// Load from `blob_path` without copying a float: the blob is mapped
+    /// read-only (heap fallback on unsupported platforms, see
+    /// [`crate::util::mmap::MMAP_SUPPORTED`]) and every tensor becomes a
+    /// view into the shared mapping. Contents are bit-identical to
+    /// [`Weights::load`] on the same inputs — the heap loader stays the
+    /// reference the equivalence tests compare against.
+    pub fn load_mapped(blob_path: &Path, tensor_index: &Json) -> Result<Weights> {
+        let file = Arc::new(
+            MappedFile::open(blob_path)
+                .with_context(|| format!("mapping weights blob {}", blob_path.display()))?,
+        );
+        Weights::from_mapped(file, tensor_index)
+    }
+
+    /// Build a store over an already-opened mapping (the registry loader
+    /// hashes the mapped bytes for digest verification first, then binds
+    /// tensors to the same mapping — one open, zero float copies).
+    pub fn from_mapped(file: Arc<MappedFile>, tensor_index: &Json) -> Result<Weights> {
+        if file.len() % 4 != 0 {
+            bail!("weights blob size {} not a multiple of 4", file.len());
+        }
+        let total_floats = file.len() / 4;
+        let mut map = HashMap::new();
+        for entry in parse_index(tensor_index, total_floats)? {
+            let IndexEntry { name, shape, offset, numel } = entry;
+            let byte_off = offset.checked_mul(4).context("tensor offset overflows")?;
+            let storage = Storage::mapped(file.clone(), byte_off, numel)
+                .map_err(anyhow::Error::msg)
+                .with_context(|| format!("mapping tensor {name}"))?;
+            let t = Tensor::from_storage(&shape, storage)
+                .map_err(anyhow::Error::msg)
+                .with_context(|| format!("shaping tensor {name}"))?;
+            map.insert(name, Arc::new(t));
         }
         Ok(Weights { map })
     }
@@ -99,6 +124,48 @@ impl Weights {
     pub fn insert(&mut self, name: &str, t: Tensor) {
         self.map.insert(name.to_string(), Arc::new(t));
     }
+
+    /// Tensor names in sorted order (deterministic iteration for packing
+    /// and serialization).
+    pub fn names(&self) -> Vec<String> {
+        let mut names: Vec<String> = self.map.keys().cloned().collect();
+        names.sort();
+        names
+    }
+}
+
+/// One parsed row of the manifest's tensor index.
+struct IndexEntry {
+    name: String,
+    shape: Vec<usize>,
+    /// Offset into the blob, in floats.
+    offset: usize,
+    numel: usize,
+}
+
+/// Parse and bounds-check the `{name, shape, offset}` index against a blob
+/// of `total_floats` floats.
+fn parse_index(tensor_index: &Json, total_floats: usize) -> Result<Vec<IndexEntry>> {
+    let entries = tensor_index.as_arr().context("tensor index must be an array")?;
+    let mut out = Vec::with_capacity(entries.len());
+    for e in entries {
+        let name = e.get("name").and_then(Json::as_str).context("tensor name")?;
+        let offset = e.get("offset").and_then(Json::as_usize).context("tensor offset")?;
+        let shape: Vec<usize> = e
+            .get("shape")
+            .and_then(Json::as_arr)
+            .context("tensor shape")?
+            .iter()
+            .map(|v| v.as_usize().unwrap_or(0))
+            .collect();
+        let numel: usize = shape.iter().product();
+        let end = offset.checked_add(numel).context("tensor extent overflows")?;
+        if end > total_floats {
+            bail!("tensor {name} [{offset}, {end}) exceeds blob len {total_floats}");
+        }
+        out.push(IndexEntry { name: name.to_string(), shape, offset, numel });
+    }
+    Ok(out)
 }
 
 #[cfg(test)]
@@ -124,6 +191,43 @@ mod tests {
         assert_eq!(w.get("b").unwrap().data, vec![6.0, 7.0, 8.0, 9.0]);
         assert_eq!(w.total_params(), 10);
         assert!(w.get("nope").is_err());
+    }
+
+    #[test]
+    fn mapped_load_is_bitwise_identical_to_heap_load() {
+        let dir = std::env::temp_dir().join("stride_weights_test_mapped");
+        std::fs::create_dir_all(&dir).unwrap();
+        let blob = dir.join("w.bin");
+        // Include awkward bit patterns: negatives, subnormal, -0.0.
+        let floats: Vec<f32> = vec![0.0, -0.0, 1.5, -2.25, 1.0e-40, 3.14159, -1.0, 42.0];
+        let bytes: Vec<u8> = floats.iter().flat_map(|f| f.to_le_bytes()).collect();
+        std::fs::write(&blob, bytes).unwrap();
+        let index = Json::parse(
+            r#"[{"name":"a","shape":[2,2],"offset":0},{"name":"b","shape":[4],"offset":4}]"#,
+        )
+        .unwrap();
+        let heap = Weights::load(&blob, &index).unwrap();
+        let mapped = Weights::load_mapped(&blob, &index).unwrap();
+        assert_eq!(heap.names(), mapped.names());
+        for name in heap.names() {
+            let h = heap.get(&name).unwrap();
+            let m = mapped.get(&name).unwrap();
+            assert_eq!(h.shape, m.shape);
+            let hb: Vec<u32> = h.data.iter().map(|v| v.to_bits()).collect();
+            let mb: Vec<u32> = m.data.iter().map(|v| v.to_bits()).collect();
+            assert_eq!(hb, mb, "tensor {name} differs between heap and mapped load");
+            assert_eq!(m.data.is_mapped(), crate::util::mmap::MMAP_SUPPORTED);
+        }
+    }
+
+    #[test]
+    fn mapped_load_rejects_out_of_bounds() {
+        let dir = std::env::temp_dir().join("stride_weights_test_mapped_oob");
+        std::fs::create_dir_all(&dir).unwrap();
+        let blob = dir.join("w.bin");
+        std::fs::write(&blob, [0u8; 8]).unwrap();
+        let index = Json::parse(r#"[{"name":"a","shape":[4],"offset":0}]"#).unwrap();
+        assert!(Weights::load_mapped(&blob, &index).is_err());
     }
 
     #[test]

@@ -1,0 +1,197 @@
+//! Content-addressed blob store: `<root>/blobs/sha256/<hex>`.
+//!
+//! A blob's name *is* its SHA-256, so the store is immutable and
+//! idempotent by construction — `put` of bytes that already exist is a
+//! no-op, and two registries that hold the same model hold bit-identical
+//! files under the same paths. Writes go through a temp file + atomic
+//! rename so a crashed push never leaves a half-written blob under a
+//! valid digest. Reads re-verify: [`BlobStore::open_verified`] hashes the
+//! mapped bytes and refuses to hand out a mapping whose content no longer
+//! matches its address.
+
+use std::fs;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use crate::registry::digest::{is_hex_digest, sha256_hex};
+use crate::registry::error::RegistryError;
+use crate::util::mmap::MappedFile;
+
+/// Handle to an on-disk blob directory (cheap to clone; no state beyond
+/// the root path — the filesystem is the source of truth).
+#[derive(Clone, Debug)]
+pub struct BlobStore {
+    dir: PathBuf,
+}
+
+impl BlobStore {
+    /// Open (creating if absent) the blob directory under a registry root.
+    pub fn open(registry_root: &Path) -> Result<BlobStore, RegistryError> {
+        let dir = registry_root.join("blobs").join("sha256");
+        fs::create_dir_all(&dir)?;
+        Ok(BlobStore { dir })
+    }
+
+    /// The path a digest would live at. Errors on anything that is not a
+    /// well-formed lowercase hex digest — this is the traversal guard for
+    /// every externally supplied digest.
+    pub fn path_for(&self, digest: &str) -> Result<PathBuf, RegistryError> {
+        if !is_hex_digest(digest) {
+            return Err(RegistryError::Invalid(format!("malformed blob digest {digest:?}")));
+        }
+        Ok(self.dir.join(digest))
+    }
+
+    /// Whether a blob with this digest is present (malformed digests are
+    /// simply absent).
+    pub fn has(&self, digest: &str) -> bool {
+        self.path_for(digest).map(|p| p.is_file()).unwrap_or(false)
+    }
+
+    /// Store `bytes` under their own digest and return it. Idempotent;
+    /// atomic via temp file + rename.
+    pub fn put(&self, bytes: &[u8]) -> Result<String, RegistryError> {
+        let digest = sha256_hex(bytes);
+        let dst = self.dir.join(&digest);
+        if dst.is_file() {
+            return Ok(digest);
+        }
+        // Temp name is unique per (digest, pid) — concurrent writers of
+        // the *same* content race benignly: both temp files hold the
+        // same bytes and rename is atomic.
+        let tmp = self.dir.join(format!(".tmp.{}.{}", digest, std::process::id()));
+        fs::write(&tmp, bytes)?;
+        fs::rename(&tmp, &dst)?;
+        Ok(digest)
+    }
+
+    /// Store bytes that the caller claims have `expected` digest; verify
+    /// before committing. This is the pull path's corruption gate: a
+    /// truncated or bit-flipped transfer is rejected with a typed
+    /// [`RegistryError::DigestMismatch`] and nothing is written.
+    pub fn put_expected(&self, expected: &str, bytes: &[u8]) -> Result<String, RegistryError> {
+        if !is_hex_digest(expected) {
+            return Err(RegistryError::Invalid(format!("malformed blob digest {expected:?}")));
+        }
+        let actual = sha256_hex(bytes);
+        if actual != expected {
+            return Err(RegistryError::DigestMismatch {
+                expected: expected.to_string(),
+                actual,
+            });
+        }
+        self.put(bytes)
+    }
+
+    /// Read a blob fully into memory, verifying its digest.
+    pub fn read_verified(&self, digest: &str) -> Result<Vec<u8>, RegistryError> {
+        let path = self.path_for(digest)?;
+        let bytes = fs::read(&path).map_err(|e| {
+            if e.kind() == std::io::ErrorKind::NotFound {
+                RegistryError::NotFound(format!("blob sha256:{digest}"))
+            } else {
+                RegistryError::Io(e)
+            }
+        })?;
+        let actual = sha256_hex(&bytes);
+        if actual != digest {
+            return Err(RegistryError::DigestMismatch {
+                expected: digest.to_string(),
+                actual,
+            });
+        }
+        Ok(bytes)
+    }
+
+    /// Map a blob read-only (heap fallback where mmap is unsupported),
+    /// verify the mapped bytes hash to `digest`, and return the mapping.
+    /// This is the zero-copy load path: the returned `Arc<MappedFile>` is
+    /// what weight tensors bind into — the digest check reads every byte
+    /// once, but no float is ever copied.
+    pub fn open_verified(&self, digest: &str) -> Result<Arc<MappedFile>, RegistryError> {
+        let path = self.path_for(digest)?;
+        if !path.is_file() {
+            return Err(RegistryError::NotFound(format!("blob sha256:{digest}")));
+        }
+        let file = Arc::new(MappedFile::open(&path)?);
+        let actual = sha256_hex(file.bytes());
+        if actual != digest {
+            return Err(RegistryError::DigestMismatch {
+                expected: digest.to_string(),
+                actual,
+            });
+        }
+        Ok(file)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn store(tag: &str) -> BlobStore {
+        let root = std::env::temp_dir().join(format!("stride_blobstore_{tag}"));
+        let _ = fs::remove_dir_all(&root);
+        BlobStore::open(&root).unwrap()
+    }
+
+    #[test]
+    fn put_get_roundtrip_is_bit_identical() {
+        let s = store("roundtrip");
+        let data = b"hello registry".to_vec();
+        let d = s.put(&data).unwrap();
+        assert!(s.has(&d));
+        assert_eq!(s.read_verified(&d).unwrap(), data);
+        let mapped = s.open_verified(&d).unwrap();
+        assert_eq!(mapped.bytes(), &data[..]);
+        // Idempotent re-put.
+        assert_eq!(s.put(&data).unwrap(), d);
+    }
+
+    #[test]
+    fn corruption_is_a_typed_rejection_not_a_panic() {
+        let s = store("corrupt");
+        let d = s.put(b"good bytes").unwrap();
+        // Flip a byte on disk behind the store's back.
+        let path = s.path_for(&d).unwrap();
+        let mut bytes = fs::read(&path).unwrap();
+        bytes[0] ^= 0xff;
+        fs::write(&path, &bytes).unwrap();
+        match s.open_verified(&d) {
+            Err(RegistryError::DigestMismatch { expected, actual }) => {
+                assert_eq!(expected, d);
+                assert_ne!(actual, d);
+            }
+            other => panic!("want DigestMismatch, got {other:?}"),
+        }
+        assert!(matches!(
+            s.read_verified(&d),
+            Err(RegistryError::DigestMismatch { .. })
+        ));
+    }
+
+    #[test]
+    fn put_expected_rejects_wrong_content() {
+        let s = store("expected");
+        let good = b"payload".to_vec();
+        let d = crate::registry::digest::sha256_hex(&good);
+        assert_eq!(s.put_expected(&d, &good).unwrap(), d);
+        let err = s.put_expected(&d, b"tampered").unwrap_err();
+        assert!(matches!(err, RegistryError::DigestMismatch { .. }));
+        // Nothing extra written: the tampered bytes' digest is absent.
+        assert!(!s.has(&crate::registry::digest::sha256_hex(b"tampered")));
+    }
+
+    #[test]
+    fn malformed_digests_never_touch_the_filesystem() {
+        let s = store("traversal");
+        for bad in ["../../etc/passwd", "ABCDEF", "", "zz"] {
+            assert!(matches!(s.path_for(bad), Err(RegistryError::Invalid(_))));
+            assert!(!s.has(bad));
+        }
+        assert!(matches!(
+            s.read_verified(&"0".repeat(64)),
+            Err(RegistryError::NotFound(_))
+        ));
+    }
+}

@@ -1,0 +1,195 @@
+//! Registry transfer client: push/pull a model pair between a local
+//! registry directory and a serving node's registry API.
+//!
+//! Transfers ride the existing HTTP substrate: [`http_request_retry`]
+//! with the shared [`RetryPolicy`] (seeded backoff; retries only 429/503
+//! and transport faults), so a briefly-draining server does not fail a
+//! pull. Every pulled byte is verified before it is committed:
+//! manifests are re-digested after parsing, blobs go through
+//! [`BlobStore::put_expected`] — a corrupted transfer is a typed
+//! [`RegistryError::DigestMismatch`], never a poisoned cache entry. The
+//! chaos hook ([`FaultPlan::corrupt_blob`]) injects bit flips exactly at
+//! the network boundary to prove that property under test.
+
+use crate::faultinject::FaultPlan;
+use crate::http::{http_request_retry, HttpResponse, RetryError, RetryPolicy};
+use crate::registry::error::RegistryError;
+use crate::registry::manifest::{parse_ref, ModelRef, RegistryManifest};
+use crate::registry::Registry;
+use crate::util::json::Json;
+
+/// URL path for a manifest reference. `sha256` is a reserved name, so
+/// `/v1/models/sha256/<hex>` (content address) and
+/// `/v1/models/<name>/<version>` (tag) share one route shape.
+pub fn manifest_path(reference: &str) -> Result<String, RegistryError> {
+    Ok(match parse_ref(reference)? {
+        ModelRef::Tag { name, version } => format!("/v1/models/{name}/{version}"),
+        ModelRef::Digest(d) => format!("/v1/models/sha256/{d}"),
+    })
+}
+
+/// Push a locally-registered model pair to `addr`. Blobs first, then the
+/// manifest (the server refuses manifests whose blobs are absent, so the
+/// ordering is load-bearing). Returns the manifest digest.
+pub fn push_model(
+    addr: &str,
+    registry: &Registry,
+    reference: &str,
+    policy: &RetryPolicy,
+) -> Result<String, RegistryError> {
+    let (manifest, digest) = registry.get_manifest(reference)?;
+    for spec in [&manifest.target, &manifest.draft] {
+        let bytes = registry.blobs().read_verified(&spec.sha256)?;
+        let resp = request(addr, "PUT", &format!("/v1/blobs/{}", spec.sha256), Some(&bytes), policy)?;
+        expect_2xx(&resp, &format!("pushing blob sha256:{}", spec.sha256))?;
+    }
+    let body = manifest.to_json().to_string();
+    let resp = request(
+        addr,
+        "PUT",
+        &format!("/v1/models/{}/{}", manifest.name, manifest.version),
+        Some(body.as_bytes()),
+        policy,
+    )?;
+    expect_2xx(&resp, "pushing manifest")?;
+    let remote_digest = Json::parse(resp.body_str())
+        .ok()
+        .and_then(|j| j.get("digest").and_then(Json::as_str).map(str::to_string))
+        .unwrap_or_default();
+    if remote_digest != digest {
+        return Err(RegistryError::Invalid(format!(
+            "server acknowledged digest {remote_digest:?}, local manifest is sha256:{digest}"
+        )));
+    }
+    Ok(digest)
+}
+
+/// Pull `reference` from `addr` into the local registry. Blobs already
+/// present locally are not re-fetched (the cache is keyed by digest, so
+/// "present" implies "verified content"). Returns the manifest digest.
+///
+/// `fault` is the chaos boundary: when armed with `p_blob_corrupt > 0`
+/// it flips a byte in the received blob *before* verification, modeling
+/// a corrupt transfer or bad disk on the far side.
+pub fn pull_model(
+    addr: &str,
+    registry: &Registry,
+    reference: &str,
+    policy: &RetryPolicy,
+    fault: Option<&FaultPlan>,
+) -> Result<String, RegistryError> {
+    let resp = request(addr, "GET", &manifest_path(reference)?, None, policy)?;
+    expect_2xx(&resp, &format!("pulling manifest {reference}"))?;
+    let j = Json::parse(resp.body_str())
+        .map_err(|e| RegistryError::Invalid(format!("manifest from {addr} unparseable: {e}")))?;
+    let manifest = RegistryManifest::from_json(&j)?;
+    if let ModelRef::Digest(expected) = parse_ref(reference)? {
+        let actual = manifest.digest();
+        if actual != expected {
+            return Err(RegistryError::DigestMismatch { expected, actual });
+        }
+    }
+    for spec in [&manifest.target, &manifest.draft] {
+        if registry.blobs().has(&spec.sha256) {
+            continue;
+        }
+        let resp = request(addr, "GET", &format!("/v1/blobs/{}", spec.sha256), None, policy)?;
+        expect_2xx(&resp, &format!("pulling blob sha256:{}", spec.sha256))?;
+        let mut bytes = resp.body;
+        if let Some(plan) = fault {
+            plan.corrupt_blob(&mut bytes);
+        }
+        registry.blobs().put_expected(&spec.sha256, &bytes)?;
+    }
+    registry.put_manifest(&manifest)
+}
+
+fn request(
+    addr: &str,
+    method: &str,
+    path: &str,
+    body: Option<&[u8]>,
+    policy: &RetryPolicy,
+) -> Result<HttpResponse, RegistryError> {
+    http_request_retry(addr, method, path, body, policy).map_err(|e| {
+        let msg = format!("{method} {path}: {e}");
+        match e {
+            RetryError::Io { last, .. } => {
+                RegistryError::Io(std::io::Error::new(last.kind(), msg))
+            }
+            RetryError::Exhausted { .. } => {
+                RegistryError::Io(std::io::Error::new(std::io::ErrorKind::TimedOut, msg))
+            }
+        }
+    })
+}
+
+/// Map a non-2xx registry API response back into the typed error space
+/// (the server emits `ServeError::to_json` bodies; we reconstruct the
+/// matching `RegistryError` so client callers see the same sum type as
+/// local callers).
+fn expect_2xx(resp: &HttpResponse, what: &str) -> Result<(), RegistryError> {
+    if (200..300).contains(&resp.status) {
+        return Ok(());
+    }
+    let j = Json::parse(resp.body_str()).ok();
+    let msg = j
+        .as_ref()
+        .and_then(|j| j.get("error").and_then(Json::as_str))
+        .unwrap_or("")
+        .to_string();
+    Err(match resp.status {
+        404 => RegistryError::NotFound(format!("{what}: {msg}")),
+        422 => {
+            let field = |k: &str| {
+                j.as_ref()
+                    .and_then(|j| j.get(k).and_then(Json::as_str))
+                    .unwrap_or("?")
+                    .to_string()
+            };
+            RegistryError::DigestMismatch { expected: field("expected"), actual: field("actual") }
+        }
+        400 | 413 => RegistryError::Invalid(format!("{what}: http {}: {msg}", resp.status)),
+        s => RegistryError::Io(std::io::Error::new(
+            std::io::ErrorKind::Other,
+            format!("{what}: http {s}: {msg}"),
+        )),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn manifest_paths() {
+        assert_eq!(manifest_path("demo:v1").unwrap(), "/v1/models/demo/v1");
+        let d = "cd".repeat(32);
+        assert_eq!(manifest_path(&format!("sha256:{d}")).unwrap(), format!("/v1/models/sha256/{d}"));
+        assert!(manifest_path("no-colon").is_err());
+    }
+
+    #[test]
+    fn error_bodies_map_back_to_typed_errors() {
+        let resp = |status: u16, body: &str| HttpResponse {
+            status,
+            headers: vec![],
+            body: body.as_bytes().to_vec(),
+        };
+        assert!(matches!(
+            expect_2xx(&resp(404, r#"{"error":"no such model"}"#), "x"),
+            Err(RegistryError::NotFound(_))
+        ));
+        match expect_2xx(&resp(422, r#"{"error":"bad","expected":"aa","actual":"bb"}"#), "x") {
+            Err(RegistryError::DigestMismatch { expected, actual }) => {
+                assert_eq!((expected.as_str(), actual.as_str()), ("aa", "bb"));
+            }
+            other => panic!("{other:?}"),
+        }
+        assert!(matches!(
+            expect_2xx(&resp(400, r#"{"error":"bad ref"}"#), "x"),
+            Err(RegistryError::Invalid(_))
+        ));
+        assert!(expect_2xx(&resp(201, r#"{"digest":"aa"}"#), "x").is_ok());
+    }
+}

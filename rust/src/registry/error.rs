@@ -1,0 +1,92 @@
+//! Typed registry failures, mapped onto the serving wire protocol.
+//!
+//! The store layer stays independent of the server (`registry` must not
+//! import `server::protocol`), so it defines its own error sum and the
+//! conversion lives here as a `From` impl — handlers bubble
+//! `RegistryError` with `?` straight into a [`ServeError`] response.
+
+use std::fmt;
+
+use crate::server::protocol::ServeError;
+
+/// Why a registry operation failed. Every variant is a typed, reportable
+/// condition — corruption and absence are expected runtime events, never
+/// panics.
+#[derive(Debug)]
+pub enum RegistryError {
+    /// Content did not hash to the digest it was addressed by (corrupt or
+    /// truncated blob, tampered manifest).
+    DigestMismatch {
+        /// The digest the content was addressed by.
+        expected: String,
+        /// What the content actually hashed to.
+        actual: String,
+    },
+    /// No blob or manifest under that reference.
+    NotFound(String),
+    /// Structurally invalid input: bad reference syntax, malformed
+    /// manifest JSON, wrong architecture tag, unsafe name.
+    Invalid(String),
+    /// Underlying filesystem failure.
+    Io(std::io::Error),
+}
+
+impl fmt::Display for RegistryError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            RegistryError::DigestMismatch { expected, actual } => {
+                write!(f, "digest mismatch: expected sha256:{expected}, got sha256:{actual}")
+            }
+            RegistryError::NotFound(what) => write!(f, "not found: {what}"),
+            RegistryError::Invalid(why) => write!(f, "invalid: {why}"),
+            RegistryError::Io(e) => write!(f, "registry io: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for RegistryError {}
+
+impl From<std::io::Error> for RegistryError {
+    fn from(e: std::io::Error) -> Self {
+        RegistryError::Io(e)
+    }
+}
+
+impl From<RegistryError> for ServeError {
+    fn from(e: RegistryError) -> Self {
+        match e {
+            RegistryError::DigestMismatch { expected, actual } => {
+                ServeError::DigestMismatch { expected, actual }
+            }
+            RegistryError::NotFound(what) => ServeError::NotFound(what),
+            RegistryError::Invalid(why) => ServeError::Invalid(why),
+            RegistryError::Io(e) => ServeError::Internal(format!("registry io: {e}")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn maps_onto_wire_protocol() {
+        let e: ServeError = RegistryError::DigestMismatch {
+            expected: "aa".into(),
+            actual: "bb".into(),
+        }
+        .into();
+        assert_eq!(e.http_status(), 422);
+        assert_eq!(e.code(), "digest_mismatch");
+
+        let e: ServeError = RegistryError::NotFound("model demo:v9".into()).into();
+        assert_eq!(e.http_status(), 404);
+
+        let e: ServeError = RegistryError::Invalid("bad ref".into()).into();
+        assert_eq!(e.http_status(), 400);
+
+        let e: ServeError =
+            RegistryError::from(std::io::Error::new(std::io::ErrorKind::Other, "disk")).into();
+        assert_eq!(e.http_status(), 500);
+    }
+}

@@ -1,0 +1,137 @@
+//! Verify-then-bind model loading: manifest reference → ready backends.
+//!
+//! The load path never trusts bytes it has not hashed. Each role's blob
+//! is mapped read-only, hashed against the manifest's digest (one
+//! sequential pass — the only full read on the path), and only then do
+//! weight tensors bind into the mapping via [`Weights::from_mapped`]:
+//! zero floats are copied between disk and the kernel layer's packed
+//! handles. A corrupt or truncated blob surfaces as a typed
+//! [`RegistryError::DigestMismatch`] before any model object exists.
+
+use crate::models::NativeBackend;
+use crate::nn::{NativeModel, Weights};
+use crate::registry::error::RegistryError;
+use crate::registry::manifest::{RegistryManifest, RoleSpec};
+use crate::registry::Registry;
+
+/// A fully verified, ready-to-serve model pair.
+pub struct LoadedPair {
+    /// The manifest the pair was loaded from.
+    pub manifest: RegistryManifest,
+    /// The manifest's content address — this is what `/healthz` and
+    /// `/stats` report as the serving model identity.
+    pub manifest_digest: String,
+    /// Verification backend.
+    pub target: NativeBackend,
+    /// Speculation backend.
+    pub draft: NativeBackend,
+}
+
+/// Resolve `reference` (`name:version` or `sha256:<hex>`) and load both
+/// roles with digest verification.
+pub fn load_pair(registry: &Registry, reference: &str) -> Result<LoadedPair, RegistryError> {
+    let (manifest, manifest_digest) = registry.get_manifest(reference)?;
+    let target = load_role(registry, &manifest.target)?;
+    let draft = load_role(registry, &manifest.draft)?;
+    Ok(LoadedPair { manifest, manifest_digest, target, draft })
+}
+
+/// Load one role: verified mapping → tensor binding → packed backend.
+pub fn load_role(registry: &Registry, spec: &RoleSpec) -> Result<NativeBackend, RegistryError> {
+    let file = registry.blobs().open_verified(&spec.sha256)?;
+    if file.len() != spec.size_bytes {
+        return Err(RegistryError::Invalid(format!(
+            "blob sha256:{} is {} bytes, manifest says {}",
+            spec.sha256,
+            file.len(),
+            spec.size_bytes
+        )));
+    }
+    let weights = Weights::from_mapped(file, &spec.tensor_index)
+        .map_err(|e| RegistryError::Invalid(format!("binding tensors for {}: {e:#}", spec.model_name)))?;
+    if weights.total_params() != spec.param_count {
+        return Err(RegistryError::Invalid(format!(
+            "{} indexes {} params, manifest says {}",
+            spec.model_name,
+            weights.total_params(),
+            spec.param_count
+        )));
+    }
+    let model = NativeModel::new(&spec.model_name, spec.dims, weights)
+        .map_err(|e| RegistryError::Invalid(format!("packing {}: {e:#}", spec.model_name)))?;
+    Ok(NativeBackend::new(model))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::model::tiny_model;
+    use crate::registry::pack::publish_pair;
+    use crate::util::tensor::Tensor;
+
+    fn fresh_registry(tag: &str) -> Registry {
+        let root = std::env::temp_dir().join(format!("stride_loader_test_{tag}"));
+        let _ = std::fs::remove_dir_all(&root);
+        Registry::open(&root).unwrap()
+    }
+
+    #[test]
+    fn loaded_pair_forwards_identically_to_the_source_models() {
+        let registry = fresh_registry("fwd");
+        let target = tiny_model(31);
+        let draft = tiny_model(32);
+        let digest = publish_pair(&registry, "m", "v1", &target, &draft).unwrap();
+
+        let pair = load_pair(&registry, "m:v1").unwrap();
+        assert_eq!(pair.manifest_digest, digest);
+
+        // Same input through source model and registry-loaded (mapped)
+        // model must agree bit-for-bit: the whole zero-copy path is only
+        // admissible because it is invisible to the numerics.
+        let dims = target.dims;
+        let tokens = Tensor::from_vec(
+            &[1, 2, dims.patch],
+            (0..2 * dims.patch).map(|i| (i as f32 * 0.37).sin()).collect(),
+        );
+        let want = target.forward(&tokens).unwrap();
+        let got = pair.target.model().forward(&tokens).unwrap();
+        let wb: Vec<u32> = want.data.iter().map(|v| v.to_bits()).collect();
+        let gb: Vec<u32> = got.data.iter().map(|v| v.to_bits()).collect();
+        assert_eq!(wb, gb);
+    }
+
+    #[test]
+    fn corrupt_blob_is_rejected_with_digest_mismatch() {
+        let registry = fresh_registry("corrupt");
+        let target = tiny_model(41);
+        let draft = tiny_model(42);
+        publish_pair(&registry, "m", "v1", &target, &draft).unwrap();
+        let (manifest, _) = registry.get_manifest("m:v1").unwrap();
+
+        // Truncate the target blob in place.
+        let path = registry.blobs().path_for(&manifest.target.sha256).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &bytes[..bytes.len() - 4]).unwrap();
+
+        match load_pair(&registry, "m:v1") {
+            Err(RegistryError::DigestMismatch { expected, .. }) => {
+                assert_eq!(expected, manifest.target.sha256);
+            }
+            other => panic!("want DigestMismatch, got {:?}", other.err()),
+        }
+    }
+
+    #[test]
+    fn missing_blob_is_not_found() {
+        let registry = fresh_registry("missing");
+        let target = tiny_model(51);
+        let draft = tiny_model(52);
+        publish_pair(&registry, "m", "v1", &target, &draft).unwrap();
+        let (manifest, _) = registry.get_manifest("m:v1").unwrap();
+        std::fs::remove_file(registry.blobs().path_for(&manifest.draft.sha256).unwrap()).unwrap();
+        assert!(matches!(
+            load_pair(&registry, "m:v1"),
+            Err(RegistryError::NotFound(_))
+        ));
+    }
+}

@@ -1,0 +1,331 @@
+//! Versioned registry manifests: the unit of model identity.
+//!
+//! A manifest names a (target, draft) model pair — architecture tag,
+//! serving shape (`patch`/`n_ctx`), per-role dims, and for each role the
+//! SHA-256 of its weight blob plus the tensor index that binds names and
+//! shapes to float offsets inside it. Manifests serialize through
+//! [`crate::util::json::Json`], whose object keys are a `BTreeMap` — the
+//! canonical form is therefore deterministic, and the manifest digest is
+//! simply the SHA-256 of that canonical text. Two manifests with the same
+//! digest are the same model pair, bit for bit.
+
+use crate::nn::ModelDims;
+use crate::registry::digest::{is_hex_digest, sha256_hex};
+use crate::registry::error::RegistryError;
+use crate::util::json::Json;
+
+/// The only architecture this registry accepts; manifests carrying any
+/// other tag are rejected at parse time (forward-compat hinge).
+pub const ARCH: &str = "stride-native-v1";
+
+/// One role (target or draft) inside a manifest.
+#[derive(Clone, Debug)]
+pub struct RoleSpec {
+    /// Model name handed to the backend (shows up in traces/metrics).
+    pub model_name: String,
+    /// Full architecture dims for this role.
+    pub dims: ModelDims,
+    /// SHA-256 (lowercase hex) of the role's weight blob.
+    pub sha256: String,
+    /// Blob size in bytes (cheap pre-check before hashing on pull).
+    pub size_bytes: usize,
+    /// Float count (sanity cross-check against the index).
+    pub param_count: usize,
+    /// `[{name, shape, offset}]` with offsets in floats — the same index
+    /// format `runtime::manifest` uses, so both loaders share a parser.
+    pub tensor_index: Json,
+}
+
+/// A named, versioned (target, draft) model pair.
+#[derive(Clone, Debug)]
+pub struct RegistryManifest {
+    /// Model family name (path-safe, see [`valid_ref_component`]).
+    pub name: String,
+    /// Version label (path-safe).
+    pub version: String,
+    /// Shared patch length both roles must agree on.
+    pub patch: usize,
+    /// Shared context length both roles must agree on.
+    pub n_ctx: usize,
+    /// The verification model.
+    pub target: RoleSpec,
+    /// The speculation model.
+    pub draft: RoleSpec,
+}
+
+impl RegistryManifest {
+    /// Canonical JSON form (sorted keys; `Display` of this value is the
+    /// byte sequence the manifest digest is computed over).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("arch", Json::from(ARCH)),
+            ("name", Json::from(self.name.clone())),
+            ("version", Json::from(self.version.clone())),
+            ("patch", Json::from(self.patch)),
+            ("n_ctx", Json::from(self.n_ctx)),
+            (
+                "models",
+                Json::obj(vec![
+                    ("target", role_to_json(&self.target)),
+                    ("draft", role_to_json(&self.draft)),
+                ]),
+            ),
+        ])
+    }
+
+    /// SHA-256 of the canonical serialization — the manifest's content
+    /// address (`sha256:<this>` resolves it).
+    pub fn digest(&self) -> String {
+        sha256_hex(self.to_json().to_string().as_bytes())
+    }
+
+    /// Parse and validate. Every structural failure is a typed
+    /// [`RegistryError::Invalid`]; digests are shape-checked here so
+    /// nothing malformed ever reaches a blob path.
+    pub fn from_json(j: &Json) -> Result<RegistryManifest, RegistryError> {
+        let arch = req_str(j, "arch")?;
+        if arch != ARCH {
+            return Err(RegistryError::Invalid(format!(
+                "unsupported arch {arch:?} (this registry serves {ARCH:?})"
+            )));
+        }
+        let name = req_str(j, "name")?.to_string();
+        let version = req_str(j, "version")?.to_string();
+        valid_ref_component("name", &name)?;
+        valid_ref_component("version", &version)?;
+        let patch = req_usize(j, "patch")?;
+        let n_ctx = req_usize(j, "n_ctx")?;
+        let models = j
+            .get("models")
+            .ok_or_else(|| RegistryError::Invalid("manifest missing models".into()))?;
+        let target = role_from_json(models, "target")?;
+        let draft = role_from_json(models, "draft")?;
+        let m = RegistryManifest { name, version, patch, n_ctx, target, draft };
+        m.validate()?;
+        Ok(m)
+    }
+
+    /// Cross-field invariants: both roles must share the manifest's
+    /// serving shape (the scheduler batches by `(patch, n_ctx)`; a pair
+    /// that disagrees cannot speculate against itself).
+    pub fn validate(&self) -> Result<(), RegistryError> {
+        for (role, spec) in [("target", &self.target), ("draft", &self.draft)] {
+            if spec.dims.patch != self.patch || spec.dims.n_ctx != self.n_ctx {
+                return Err(RegistryError::Invalid(format!(
+                    "{role} dims (patch={}, n_ctx={}) disagree with manifest shape (patch={}, n_ctx={})",
+                    spec.dims.patch, spec.dims.n_ctx, self.patch, self.n_ctx
+                )));
+            }
+            if spec.dims.d_model == 0
+                || spec.dims.n_layers == 0
+                || spec.dims.n_heads == 0
+                || spec.dims.d_model % spec.dims.n_heads != 0
+            {
+                return Err(RegistryError::Invalid(format!("{role} dims are degenerate")));
+            }
+            if spec.size_bytes != spec.param_count * 4 {
+                return Err(RegistryError::Invalid(format!(
+                    "{role} size_bytes {} != 4 * param_count {}",
+                    spec.size_bytes, spec.param_count
+                )));
+            }
+        }
+        Ok(())
+    }
+}
+
+fn role_to_json(r: &RoleSpec) -> Json {
+    Json::obj(vec![
+        ("name", Json::from(r.model_name.clone())),
+        ("patch", Json::from(r.dims.patch)),
+        ("n_ctx", Json::from(r.dims.n_ctx)),
+        ("d_model", Json::from(r.dims.d_model)),
+        ("n_layers", Json::from(r.dims.n_layers)),
+        ("n_heads", Json::from(r.dims.n_heads)),
+        ("d_ff", Json::from(r.dims.d_ff)),
+        ("sha256", Json::from(r.sha256.clone())),
+        ("size_bytes", Json::from(r.size_bytes)),
+        ("param_count", Json::from(r.param_count)),
+        ("tensors", r.tensor_index.clone()),
+    ])
+}
+
+fn role_from_json(models: &Json, role: &str) -> Result<RoleSpec, RegistryError> {
+    let j = models
+        .get(role)
+        .ok_or_else(|| RegistryError::Invalid(format!("manifest missing models.{role}")))?;
+    let sha256 = req_str(j, "sha256")?.to_string();
+    if !is_hex_digest(&sha256) {
+        return Err(RegistryError::Invalid(format!("{role} sha256 is not a hex digest")));
+    }
+    let tensor_index = j
+        .get("tensors")
+        .ok_or_else(|| RegistryError::Invalid(format!("{role} missing tensors index")))?;
+    if tensor_index.as_arr().is_none() {
+        return Err(RegistryError::Invalid(format!("{role} tensors index must be an array")));
+    }
+    Ok(RoleSpec {
+        model_name: req_str(j, "name")?.to_string(),
+        dims: ModelDims {
+            patch: req_usize(j, "patch")?,
+            n_ctx: req_usize(j, "n_ctx")?,
+            d_model: req_usize(j, "d_model")?,
+            n_layers: req_usize(j, "n_layers")?,
+            n_heads: req_usize(j, "n_heads")?,
+            d_ff: req_usize(j, "d_ff")?,
+        },
+        sha256,
+        size_bytes: req_usize(j, "size_bytes")?,
+        param_count: req_usize(j, "param_count")?,
+        tensor_index: tensor_index.clone(),
+    })
+}
+
+fn req_str<'a>(j: &'a Json, key: &str) -> Result<&'a str, RegistryError> {
+    j.get(key)
+        .and_then(Json::as_str)
+        .ok_or_else(|| RegistryError::Invalid(format!("manifest field {key:?} missing or not a string")))
+}
+
+fn req_usize(j: &Json, key: &str) -> Result<usize, RegistryError> {
+    j.get(key)
+        .and_then(Json::as_usize)
+        .ok_or_else(|| RegistryError::Invalid(format!("manifest field {key:?} missing or not a number")))
+}
+
+/// A parsed model reference: either `name:version` or `sha256:<hex>`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ModelRef {
+    /// Mutable tag — resolves through the tag file to whatever manifest
+    /// was last pushed under it.
+    Tag {
+        /// Model family name.
+        name: String,
+        /// Version label.
+        version: String,
+    },
+    /// Immutable content address of a manifest.
+    Digest(String),
+}
+
+/// Parse `"name:version"` or `"sha256:<hex>"`. Anything else — missing
+/// colon, unsafe path characters, malformed digest — is a typed
+/// [`RegistryError::Invalid`].
+pub fn parse_ref(s: &str) -> Result<ModelRef, RegistryError> {
+    let (head, tail) = s
+        .split_once(':')
+        .ok_or_else(|| RegistryError::Invalid(format!("model ref {s:?} must be name:version or sha256:<hex>")))?;
+    if head == "sha256" {
+        if !is_hex_digest(tail) {
+            return Err(RegistryError::Invalid(format!("malformed manifest digest in ref {s:?}")));
+        }
+        return Ok(ModelRef::Digest(tail.to_string()));
+    }
+    valid_ref_component("name", head)?;
+    valid_ref_component("version", tail)?;
+    Ok(ModelRef::Tag { name: head.to_string(), version: tail.to_string() })
+}
+
+/// Path-safety gate for manifest names and versions: nonempty, ≤64
+/// chars, `[A-Za-z0-9._-]` only, no leading dot, and `name` may not be
+/// the reserved word `sha256` (it would make refs ambiguous).
+pub fn valid_ref_component(what: &str, s: &str) -> Result<(), RegistryError> {
+    let ok = !s.is_empty()
+        && s.len() <= 64
+        && !s.starts_with('.')
+        && s != "sha256"
+        && s.bytes().all(|b| b.is_ascii_alphanumeric() || b == b'.' || b == b'_' || b == b'-');
+    if ok {
+        Ok(())
+    } else {
+        Err(RegistryError::Invalid(format!("unsafe {what} {s:?}")))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dims() -> ModelDims {
+        ModelDims { patch: 4, n_ctx: 8, d_model: 8, n_layers: 2, n_heads: 2, d_ff: 16 }
+    }
+
+    fn role(name: &str) -> RoleSpec {
+        RoleSpec {
+            model_name: name.to_string(),
+            dims: dims(),
+            sha256: "ab".repeat(32),
+            size_bytes: 40,
+            param_count: 10,
+            tensor_index: Json::parse(r#"[{"name":"a","shape":[10],"offset":0}]"#).unwrap(),
+        }
+    }
+
+    fn manifest() -> RegistryManifest {
+        RegistryManifest {
+            name: "demo".into(),
+            version: "v1".into(),
+            patch: 4,
+            n_ctx: 8,
+            target: role("t"),
+            draft: role("d"),
+        }
+    }
+
+    #[test]
+    fn roundtrip_preserves_digest() {
+        let m = manifest();
+        let j = m.to_json();
+        let m2 = RegistryManifest::from_json(&Json::parse(&j.to_string()).unwrap()).unwrap();
+        assert_eq!(m.digest(), m2.digest());
+        assert_eq!(m2.name, "demo");
+        assert_eq!(m2.target.dims.d_ff, 16);
+    }
+
+    #[test]
+    fn digest_is_content_sensitive_and_key_order_insensitive() {
+        let m = manifest();
+        let mut m2 = manifest();
+        assert_eq!(m.digest(), m2.digest());
+        m2.version = "v2".into();
+        assert_ne!(m.digest(), m2.digest());
+        // Key order in the source text does not matter: Json objects are
+        // BTreeMaps, so parsing a shuffled doc re-canonicalizes it.
+        let shuffled = r#"{"version":"v1","name":"demo","arch":"stride-native-v1","patch":4,"n_ctx":8,"models":{"target":null,"draft":null}}"#;
+        let canonical = Json::parse(shuffled).unwrap().to_string();
+        assert!(canonical.starts_with(r#"{"arch""#));
+    }
+
+    #[test]
+    fn rejects_wrong_arch_and_bad_fields() {
+        let mut j = manifest().to_json();
+        if let Json::Obj(m) = &mut j {
+            m.insert("arch".into(), Json::from("pytorch-v9"));
+        }
+        assert!(matches!(
+            RegistryManifest::from_json(&j),
+            Err(RegistryError::Invalid(_))
+        ));
+
+        let mut m = manifest();
+        m.draft.dims.patch = 5; // disagrees with manifest shape
+        assert!(m.validate().is_err());
+
+        let mut m = manifest();
+        m.target.size_bytes = 41;
+        assert!(m.validate().is_err());
+    }
+
+    #[test]
+    fn ref_parsing() {
+        assert_eq!(
+            parse_ref("demo:v1").unwrap(),
+            ModelRef::Tag { name: "demo".into(), version: "v1".into() }
+        );
+        let d = "ab".repeat(32);
+        assert_eq!(parse_ref(&format!("sha256:{d}")).unwrap(), ModelRef::Digest(d));
+        for bad in ["demo", "sha256:xyz", "../x:v1", "a:b:c", ":v1", "demo:", "sha256:"] {
+            assert!(parse_ref(bad).is_err(), "{bad} should be rejected");
+        }
+    }
+}

@@ -1,0 +1,131 @@
+//! Weight serialization: `Weights` → (flat little-endian f32 blob,
+//! `{name, shape, offset}` tensor index).
+//!
+//! Tensors are packed in sorted-name order, so the blob — and therefore
+//! its digest — is a pure function of the weight contents. Publishing the
+//! same model twice yields the same blob digest and the same manifest
+//! digest, which is what makes "post-swap outputs == cold-start outputs"
+//! a testable bit-level claim.
+
+use crate::nn::{NativeModel, Weights};
+use crate::registry::error::RegistryError;
+use crate::registry::manifest::{RegistryManifest, RoleSpec};
+use crate::registry::Registry;
+use crate::util::json::Json;
+
+/// Serialize a weight store. Returns the raw blob and the tensor index
+/// whose offsets (in floats) describe it — the same index format
+/// [`Weights::load`] and [`Weights::from_mapped`] consume.
+pub fn pack_weights(w: &Weights) -> Result<(Vec<u8>, Json), RegistryError> {
+    let mut blob: Vec<u8> = Vec::with_capacity(w.total_params() * 4);
+    let mut index: Vec<Json> = Vec::with_capacity(w.len());
+    let mut offset = 0usize; // in floats
+    for name in w.names() {
+        let t = w
+            .get(&name)
+            .map_err(|e| RegistryError::Invalid(format!("packing {name}: {e}")))?;
+        let shape = Json::Arr(t.shape.iter().map(|&d| Json::from(d)).collect());
+        index.push(Json::obj(vec![
+            ("name", Json::from(name.clone())),
+            ("shape", shape),
+            ("offset", Json::from(offset)),
+        ]));
+        for v in t.data.iter() {
+            blob.extend_from_slice(&v.to_le_bytes());
+        }
+        offset += t.numel();
+    }
+    Ok((blob, Json::Arr(index)))
+}
+
+/// Pack one model's weights into the blob store and describe it as a
+/// manifest role.
+pub fn role_spec(model: &NativeModel, registry: &Registry) -> Result<RoleSpec, RegistryError> {
+    let (blob, tensor_index) = pack_weights(model.weights())?;
+    let sha256 = registry.blobs().put(&blob)?;
+    Ok(RoleSpec {
+        model_name: model.name.clone(),
+        dims: model.dims,
+        sha256,
+        size_bytes: blob.len(),
+        param_count: blob.len() / 4,
+        tensor_index,
+    })
+}
+
+/// Publish a (target, draft) pair under `name:version`: pack both weight
+/// blobs into the store, then write the manifest. Returns the manifest
+/// digest. This is how a model pair enters a registry in the first place
+/// (tests, benches, and the push CLI all bottom out here).
+pub fn publish_pair(
+    registry: &Registry,
+    name: &str,
+    version: &str,
+    target: &NativeModel,
+    draft: &NativeModel,
+) -> Result<String, RegistryError> {
+    let manifest = RegistryManifest {
+        name: name.to_string(),
+        version: version.to_string(),
+        patch: target.dims.patch,
+        n_ctx: target.dims.n_ctx,
+        target: role_spec(target, registry)?,
+        draft: role_spec(draft, registry)?,
+    };
+    registry.put_manifest(&manifest)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::model::tiny_model;
+    use crate::nn::ModelDims;
+
+    #[test]
+    fn packing_is_deterministic_and_loadable() {
+        let m = tiny_model(7);
+        let (blob1, idx1) = pack_weights(m.weights()).unwrap();
+        let (blob2, idx2) = pack_weights(m.weights()).unwrap();
+        assert_eq!(blob1, blob2);
+        assert_eq!(idx1.to_string(), idx2.to_string());
+        assert_eq!(blob1.len(), m.weights().total_params() * 4);
+
+        // Heap-load the packed blob back and compare bit-for-bit.
+        let dir = std::env::temp_dir().join("stride_pack_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("w.bin");
+        std::fs::write(&path, &blob1).unwrap();
+        let loaded = Weights::load(&path, &idx1).unwrap();
+        assert_eq!(loaded.names(), m.weights().names());
+        for name in loaded.names() {
+            let a = m.weights().get(&name).unwrap();
+            let b = loaded.get(&name).unwrap();
+            assert_eq!(a.shape, b.shape);
+            let ab: Vec<u32> = a.data.iter().map(|v| v.to_bits()).collect();
+            let bb: Vec<u32> = b.data.iter().map(|v| v.to_bits()).collect();
+            assert_eq!(ab, bb, "tensor {name}");
+        }
+    }
+
+    #[test]
+    fn publish_then_resolve_roundtrips() {
+        let root = std::env::temp_dir().join("stride_publish_test");
+        let _ = std::fs::remove_dir_all(&root);
+        let registry = Registry::open(&root).unwrap();
+        let dims = ModelDims { patch: 4, n_ctx: 8, d_model: 8, n_layers: 2, n_heads: 2, d_ff: 16 };
+        let target = NativeModel::random("t", dims, 11);
+        let draft = NativeModel::random("d", dims, 22);
+        let digest = publish_pair(&registry, "demo", "v1", &target, &draft).unwrap();
+
+        let (by_tag, d1) = registry.get_manifest("demo:v1").unwrap();
+        assert_eq!(d1, digest);
+        let (by_digest, d2) = registry.get_manifest(&format!("sha256:{digest}")).unwrap();
+        assert_eq!(d2, digest);
+        assert_eq!(by_tag.digest(), by_digest.digest());
+        assert!(registry.blobs().has(&by_tag.target.sha256));
+        assert!(registry.blobs().has(&by_tag.draft.sha256));
+
+        // Re-publish of identical content is a no-op digest-wise.
+        assert_eq!(publish_pair(&registry, "demo", "v1", &target, &draft).unwrap(), digest);
+    }
+}

@@ -39,14 +39,15 @@ use anyhow::Result;
 
 use super::protocol::{ForecastRequest, ForecastResponse, Mode, ServeError};
 use super::sched::{
-    start_pool, AdmissionQueue, GroupKey, ModelShape, QueuedJob, ReplicaBuilder, ReplicaStacks,
-    SchedShared,
+    start_pool, AdmissionQueue, GroupKey, ModelShape, ModelSlot, QueuedJob, ReplicaBuilder,
+    ReplicaStacks, SchedShared,
 };
-use crate::config::ServeConfig;
+use crate::config::{ServeConfig, SwapHeads};
 use crate::faultinject::FaultPlan;
 use crate::forecast::ar_decode_with;
 use crate::metrics::{AcceptanceMonitor, Metrics};
 use crate::models::{Backend, CacheMode, NativeBackend, XlaBackend};
+use crate::registry::{self, Registry};
 use crate::runtime::{Engine, Manifest};
 use crate::specdec::{
     make_batch_source, make_source, sd_generate_stream_seeded, sd_generate_tree_from,
@@ -81,6 +82,12 @@ pub struct BatcherHandle {
     cfg: Arc<ServeConfig>,
     shape: ModelShape,
     queue: Arc<AdmissionQueue>,
+    /// The pool's live model binding (builder + identity + generation);
+    /// [`BatcherHandle::swap_model`] retargets it.
+    slot: Arc<ModelSlot>,
+    /// The cross-replica shared state ([`SwapHeads::Reset`] clears its
+    /// draft heads on swap).
+    shared: Arc<SchedShared>,
     /// Shared metrics registry (also rendered at `/metrics`).
     pub metrics: Arc<Metrics>,
     /// Windowed acceptance monitor (alerting; paper §7).
@@ -254,6 +261,135 @@ impl BatcherHandle {
     pub fn shutdown(&self) {
         self.queue.shutdown();
     }
+
+    /// Open the server's registry root (`ServeConfig::registry_root`),
+    /// creating its directories on first use — servers that never see a
+    /// registry route touch nothing on disk.
+    pub fn registry(&self) -> Result<Registry, ServeError> {
+        Registry::open(&self.cfg.registry_root()).map_err(ServeError::from)
+    }
+
+    /// The serving model's registry manifest digest (`"unregistered"`
+    /// when the pool was built from artifacts or an injected builder).
+    pub fn model_digest(&self) -> String {
+        self.slot.digest()
+    }
+
+    /// The serving model's display reference (`name:version`).
+    pub fn model_label(&self) -> String {
+        self.slot.label()
+    }
+
+    /// Pool model generation (0 = boot weights; +1 per completed swap).
+    pub fn model_generation(&self) -> u64 {
+        self.slot.generation()
+    }
+
+    /// Live weight swap (`POST /admin/swap`): resolve `reference`
+    /// against the configured registry, verify + zero-copy-load both
+    /// roles, then retarget the pool — the slot takes the new builder,
+    /// the queue's interrupt epoch wakes parked replicas, and each
+    /// replica rebinds between decode batches. Queued jobs stay queued
+    /// and in-flight groups finish on the old weights, so a swap drops
+    /// zero requests. Blocks until every replica acknowledges the new
+    /// generation (or the barrier times out — stragglers still rebind
+    /// before their next batch). Draft heads and γ/k-controller state
+    /// follow `ServeConfig::swap_heads` (reset or carry).
+    ///
+    /// A failed resolve/verify/load leaves the pool serving exactly what
+    /// it served before: the slot is only retargeted after the new pair
+    /// is fully loaded.
+    pub fn swap_model(&self, reference: &str) -> Result<SwapReport, ServeError> {
+        let start = Instant::now();
+        let fail = |e: ServeError| -> ServeError {
+            self.metrics.inc("model_swap_failed", 1);
+            e
+        };
+        let registry = Registry::open(&self.cfg.registry_root())
+            .map_err(|e| fail(ServeError::from(e)))?;
+        let pair = registry::load_pair(&registry, reference)
+            .map_err(|e| fail(ServeError::from(e)))?;
+        // Sessions, scratch arenas, and request validation are all sized
+        // by the boot shape; a swap changes weights, not geometry.
+        if pair.manifest.patch != self.shape.patch || pair.manifest.n_ctx != self.shape.n_ctx {
+            return Err(fail(ServeError::Invalid(format!(
+                "manifest {reference} has shape patch={} n_ctx={}, pool is serving \
+                 patch={} n_ctx={} — live swap cannot change model geometry",
+                pair.manifest.patch, pair.manifest.n_ctx, self.shape.patch, self.shape.n_ctx
+            ))));
+        }
+        let label = format!("{}:{}", pair.manifest.name, pair.manifest.version);
+        let digest = pair.manifest_digest.clone();
+        let (base_t, base_d) = (pair.target, pair.draft);
+        let builder: ReplicaBuilder = Arc::new(move |_r| {
+            Ok(ReplicaStacks {
+                target: Box::new(base_t.replicate()?),
+                draft: Box::new(base_d.replicate()?),
+            })
+        });
+        // Heads/controller policy, applied before replicas wake: under
+        // Reset the learned residual heads (fit against the *old*
+        // target's means) and the controller's α̂/c estimates are
+        // discarded so the new weights start from the configured
+        // defaults; under Carry both survive the cutover.
+        let heads = self.cfg.swap_heads;
+        if heads == SwapHeads::Reset {
+            lock_ignore_poison(&self.shared.draft_heads).clear();
+            if let Some(c) = &self.controller {
+                let mut ctrl = lock_ignore_poison(c);
+                *ctrl = GammaController::new(self.cfg.adaptive_cfg, self.cfg.gamma, self.cfg.sigma);
+                ctrl.set_draft_kind(self.cfg.draft.kind.as_str());
+            }
+        }
+        let generation = self.slot.swap(builder, &digest, &label);
+        self.queue.bump_epoch();
+        let complete =
+            self.slot.wait_generation(generation, self.cfg.replicas, SWAP_BARRIER_TIMEOUT);
+        let rebound = self.slot.replicas_at(generation);
+        self.metrics.inc("model_swap_total", 1);
+        if !complete {
+            self.metrics.inc("model_swap_incomplete", 1);
+        }
+        self.metrics.set_gauge("model_generation", generation as f64);
+        self.metrics.observe("model_swap", start.elapsed());
+        Ok(SwapReport {
+            digest,
+            label,
+            generation,
+            replicas: self.cfg.replicas,
+            rebound,
+            complete,
+            duration_ms: start.elapsed().as_millis() as u64,
+            heads: heads.as_str(),
+        })
+    }
+}
+
+/// How long [`BatcherHandle::swap_model`] waits for every replica to
+/// acknowledge the new generation. A replica wedged past this (e.g. by
+/// injected chaos stalls) does not block the swap — it rebinds before
+/// its next batch; the report carries `complete: false`.
+const SWAP_BARRIER_TIMEOUT: Duration = Duration::from_secs(30);
+
+/// Outcome of one live weight swap — the `/admin/swap` reply body.
+pub struct SwapReport {
+    /// New serving manifest digest (content address).
+    pub digest: String,
+    /// New serving reference (`name:version`).
+    pub label: String,
+    /// Pool generation after the swap.
+    pub generation: u64,
+    /// Replica count the barrier waited on.
+    pub replicas: usize,
+    /// Replicas that acknowledged the new generation before the barrier
+    /// released.
+    pub rebound: usize,
+    /// True when every replica acknowledged within the barrier timeout.
+    pub complete: bool,
+    /// Wall clock from verify start to barrier exit.
+    pub duration_ms: u64,
+    /// Heads/controller policy applied (`"reset"` / `"carry"`).
+    pub heads: &'static str,
 }
 
 /// Spawn the scheduler (admission queue + replica pool) from the
@@ -265,6 +401,13 @@ pub fn start_engine(
     monitor: Arc<AcceptanceMonitor>,
     stop: Arc<AtomicBool>,
 ) -> Result<(BatcherHandle, Vec<std::thread::JoinHandle<()>>)> {
+    if let Some(reference) = cfg.registry_model.clone() {
+        // Registry boot: resolve + verify + zero-copy-load the pair and
+        // serve under its manifest digest from the first request.
+        let (shape, builder, digest, label) = builder_from_registry(&cfg, &reference)?;
+        let slot = Arc::new(ModelSlot::new(builder, &digest, &label));
+        return start_engine_with_slot(cfg, shape, slot, metrics, monitor, stop);
+    }
     let (shape, builder) = builder_from_artifacts(&cfg)?;
     start_engine_with_builder(cfg, shape, builder, metrics, monitor, stop)
 }
@@ -272,11 +415,24 @@ pub fn start_engine(
 /// [`start_engine`] with an injected replica builder — the entry point
 /// that lets tests and benches run the complete serving stack (HTTP,
 /// admission, EDF dispatch, replica pool) over synthetic in-memory
-/// models, no artifacts directory required.
+/// models, no artifacts directory required. The pool serves with the
+/// `"unregistered"` model identity until a swap retargets it.
 pub fn start_engine_with_builder(
     cfg: ServeConfig,
     shape: ModelShape,
     builder: ReplicaBuilder,
+    metrics: Arc<Metrics>,
+    monitor: Arc<AcceptanceMonitor>,
+    stop: Arc<AtomicBool>,
+) -> Result<(BatcherHandle, Vec<std::thread::JoinHandle<()>>)> {
+    let slot = Arc::new(ModelSlot::new(builder, "unregistered", "builtin"));
+    start_engine_with_slot(cfg, shape, slot, metrics, monitor, stop)
+}
+
+fn start_engine_with_slot(
+    cfg: ServeConfig,
+    shape: ModelShape,
+    slot: Arc<ModelSlot>,
     metrics: Arc<Metrics>,
     monitor: Arc<AcceptanceMonitor>,
     stop: Arc<AtomicBool>,
@@ -315,23 +471,70 @@ pub fn start_engine_with_builder(
     });
     // Pre-register the fault-tolerance ledger so `/metrics` scrapes see
     // the counters (at 0) and the breaker gauge before any fault fires.
-    for name in ["replica_restarts", "replica_failures", "requeues", "numeric_faults"] {
+    for name in [
+        "replica_restarts",
+        "replica_failures",
+        "requeues",
+        "numeric_faults",
+        "model_swap_total",
+        "model_swap_failed",
+        "model_swap_incomplete",
+        "model_swap_rebinds",
+        "model_swap_rebind_failures",
+    ] {
         metrics.inc(name, 0);
     }
     metrics.set_gauge("breaker_state", 0.0);
     metrics.set_gauge("draining", 0.0);
+    metrics.set_gauge("model_generation", 0.0);
     let handles = start_pool(
         Arc::clone(&cfg),
         shape,
-        builder,
+        Arc::clone(&slot),
         Arc::clone(&queue),
         Arc::clone(&shared),
         stop,
     )?;
     Ok((
-        BatcherHandle { cfg, shape, queue, metrics, monitor, controller, draft: draft_kind, fault },
+        BatcherHandle {
+            cfg,
+            shape,
+            queue,
+            slot,
+            shared,
+            metrics,
+            monitor,
+            controller,
+            draft: draft_kind,
+            fault,
+        },
         handles,
     ))
+}
+
+/// Resolve `reference` against the configured registry, verify + load
+/// both roles (one mmap + one hash pass per blob — see
+/// [`registry::load_pair`]), and wrap the pair as a replica builder:
+/// each replica's stack is a [`NativeBackend::replicate`] over the
+/// mapped `Arc` storage, so N replicas share one copy of the floats and
+/// zero floats were heap-copied getting them off disk.
+fn builder_from_registry(
+    cfg: &ServeConfig,
+    reference: &str,
+) -> Result<(ModelShape, ReplicaBuilder, String, String)> {
+    let reg = Registry::open(&cfg.registry_root())?;
+    let pair = registry::load_pair(&reg, reference)?;
+    let shape = ModelShape { patch: pair.manifest.patch, n_ctx: pair.manifest.n_ctx };
+    let label = format!("{}:{}", pair.manifest.name, pair.manifest.version);
+    let digest = pair.manifest_digest.clone();
+    let (base_t, base_d) = (pair.target, pair.draft);
+    let builder: ReplicaBuilder = Arc::new(move |_r| {
+        Ok(ReplicaStacks {
+            target: Box::new(base_t.replicate()?),
+            draft: Box::new(base_d.replicate()?),
+        })
+    });
+    Ok((shape, builder, digest, label))
 }
 
 /// Resolve the manifest into (shape, replica builder). The native

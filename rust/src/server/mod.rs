@@ -19,15 +19,33 @@
 //!   chaos counters, replica restarts, requeues, numeric faults, and
 //!   the speculation circuit breaker's state).
 //!
+//! Registry + swap routes (see [`crate::registry`]):
+//! * `GET  /v1/models` — tags in the server's registry.
+//! * `GET/PUT /v1/models/<name>/<version>` — manifest by tag
+//!   (`/v1/models/sha256/<hex>` addresses by content; `sha256` is a
+//!   reserved model name). PUT follows the blobs-first push protocol:
+//!   a manifest referencing absent blobs is a 404.
+//! * `GET/PUT /v1/blobs/<sha256>` — raw weight blobs
+//!   (`application/octet-stream`). PUT re-hashes the received bytes
+//!   against the path digest — a corrupt upload is a typed 422
+//!   (`digest_mismatch`), never a poisoned cache entry.
+//! * `POST /admin/swap` — body `{"model": "<name>:<version>"}` (or
+//!   `"sha256:<hex>"`): verify + load the pair, then live-swap the
+//!   replica pool with zero dropped requests. The reply reports the new
+//!   digest/generation and how many replicas rebound inside the
+//!   barrier. `/healthz` and `/stats` carry the serving model identity.
+//!
 //! The router validates and parses on HTTP worker threads; all model
 //! work happens on the engine replica threads behind the scheduler
-//! ([`sched`]).
+//! ([`sched`]). Request bodies are capped at `ServeConfig::
+//! max_body_bytes` (typed 413 past it — registry pushes are the
+//! legitimate large-body traffic).
 
 mod batcher;
 pub mod protocol;
 pub mod sched;
 
-pub use batcher::{start_engine, start_engine_with_builder, BatcherHandle, Job};
+pub use batcher::{start_engine, start_engine_with_builder, BatcherHandle, Job, SwapReport};
 pub use protocol::{ForecastRequest, ForecastResponse, Mode, Priority, ServeError};
 pub use sched::{ModelShape, ReplicaBuilder, ReplicaStacks};
 
@@ -93,10 +111,13 @@ impl Server {
         };
 
         let h = handle.clone();
-        let http = HttpServer::start(
+        let http = HttpServer::start_with_limits(
             &cfg.bind,
             cfg.http_workers,
             Arc::new(move |req: &Request| route(req, &h)),
+            std::time::Duration::from_secs(30),
+            std::time::Duration::from_secs(30),
+            cfg.max_body_bytes,
         )?;
         log::info!("serving on {}", http.addr);
         Ok(Server { http, handle, stop, replica_threads })
@@ -168,6 +189,8 @@ fn route(req: &Request, handle: &BatcherHandle) -> Response {
                 ("version", Json::from(crate::VERSION)),
                 ("queue_depth", Json::from(handle.queue_depth())),
                 ("queue_cap", Json::from(handle.queue_cap())),
+                ("model_digest", Json::from(handle.model_digest())),
+                ("model_generation", Json::from(handle.model_generation() as usize)),
             ])
             .to_string();
             Response::json(if ready { 200 } else { 503 }, body)
@@ -334,6 +357,20 @@ fn route(req: &Request, handle: &BatcherHandle) -> Response {
                 ("steals", Json::from(m.counter("steals") as usize)),
                 ("priorities", Json::obj(priorities)),
             ]);
+            // Serving-model identity + swap ledger: which weights answer
+            // requests right now, and how they got there.
+            let model = Json::obj(vec![
+                ("digest", Json::from(handle.model_digest())),
+                ("label", Json::from(handle.model_label())),
+                ("generation", Json::from(handle.model_generation() as usize)),
+                ("swaps", Json::from(m.counter("model_swap_total") as usize)),
+                ("swap_failures", Json::from(m.counter("model_swap_failed") as usize)),
+                ("rebinds", Json::from(m.counter("model_swap_rebinds") as usize)),
+                (
+                    "rebind_failures",
+                    Json::from(m.counter("model_swap_rebind_failures") as usize),
+                ),
+            ]);
             let j = Json::obj(vec![
                 ("requests", Json::from(m.requests_total.load(Ordering::Relaxed) as usize)),
                 ("patches", Json::from(m.patches_total.load(Ordering::Relaxed) as usize)),
@@ -344,6 +381,7 @@ fn route(req: &Request, handle: &BatcherHandle) -> Response {
                 ("controller", controller),
                 ("draft", draft),
                 ("tree", tree),
+                ("model", model),
                 ("scheduler", scheduler),
                 ("faults", faults),
                 ("latency_p50_ms", Json::Num(m.quantile_ms("request_latency", 0.5))),
@@ -378,8 +416,131 @@ fn route(req: &Request, handle: &BatcherHandle) -> Response {
                 }
             }
         }
+        ("POST", "/admin/swap") => {
+            let body = match req.body_str() {
+                Ok(s) => s,
+                Err(_) => return Response::bad_request("body must be UTF-8"),
+            };
+            let parsed = match Json::parse(body) {
+                Ok(j) => j,
+                Err(e) => return Response::bad_request(&format!("bad JSON: {e}")),
+            };
+            let Some(reference) = parsed.get("model").and_then(Json::as_str) else {
+                return Response::bad_request(
+                    "body must carry {\"model\": \"name:version\"} or \
+                     {\"model\": \"sha256:<hex>\"}",
+                );
+            };
+            match handle.swap_model(reference) {
+                Ok(r) => Response::json(
+                    200,
+                    Json::obj(vec![
+                        ("status", Json::from(if r.complete { "ok" } else { "partial" })),
+                        ("digest", Json::from(r.digest)),
+                        ("model", Json::from(r.label)),
+                        ("generation", Json::from(r.generation as usize)),
+                        ("replicas", Json::from(r.replicas)),
+                        ("rebound", Json::from(r.rebound)),
+                        ("complete", Json::from(r.complete)),
+                        ("duration_ms", Json::from(r.duration_ms as usize)),
+                        ("heads", Json::from(r.heads)),
+                    ])
+                    .to_string(),
+                ),
+                Err(e) => error_response(&e),
+            }
+        }
+        _ if req.path.starts_with("/v1/") => route_registry(req, handle),
         _ => Response::not_found(),
     }
+}
+
+/// Registry API: manifests by tag or content address, raw blobs, and
+/// the tag listing. Every externally-supplied name/digest is validated
+/// by the registry layer before it touches a path, every write is
+/// re-hashed, and every failure is a typed [`ServeError`] body.
+fn route_registry(req: &Request, handle: &BatcherHandle) -> Response {
+    let registry = match handle.registry() {
+        Ok(r) => r,
+        Err(e) => return error_response(&e),
+    };
+    let segs: Vec<&str> = req.path.trim_start_matches('/').split('/').collect();
+    match (req.method.as_str(), segs.as_slice()) {
+        ("GET", ["v1", "models"]) => match registry.list_tags() {
+            Ok(tags) => {
+                let body = Json::obj(vec![(
+                    "models",
+                    Json::Arr(tags.into_iter().map(Json::from).collect()),
+                )]);
+                Response::json(200, body.to_string())
+            }
+            Err(e) => error_response(&ServeError::from(e)),
+        },
+        ("GET", ["v1", "models", head, tail]) => {
+            // `sha256` is a reserved model name, so tag and content
+            // address share one route shape (see `registry::client`).
+            let reference = format!("{head}:{tail}");
+            match registry.get_manifest(&reference) {
+                // Serve the canonical (sorted-key) form: the bytes a
+                // puller re-digests.
+                Ok((m, _digest)) => Response::json(200, m.to_json().to_string()),
+                Err(e) => error_response(&ServeError::from(e)),
+            }
+        }
+        ("PUT", ["v1", "models", name, version]) => {
+            let body = match req.body_str() {
+                Ok(s) => s,
+                Err(_) => return Response::bad_request("manifest must be UTF-8 JSON"),
+            };
+            let parsed = match Json::parse(body) {
+                Ok(j) => j,
+                Err(e) => return Response::bad_request(&format!("bad manifest JSON: {e}")),
+            };
+            let m = match crate::registry::RegistryManifest::from_json(&parsed) {
+                Ok(m) => m,
+                Err(e) => return error_response(&ServeError::from(e)),
+            };
+            if m.name != *name || m.version != *version {
+                return Response::bad_request(&format!(
+                    "manifest names {}:{} but was PUT to /v1/models/{name}/{version}",
+                    m.name, m.version
+                ));
+            }
+            match registry.put_manifest(&m) {
+                Ok(digest) => Response::json(
+                    201,
+                    Json::obj(vec![("digest", Json::from(digest))]).to_string(),
+                ),
+                Err(e) => error_response(&ServeError::from(e)),
+            }
+        }
+        ("GET", ["v1", "blobs", digest]) => match registry.blobs().read_verified(digest) {
+            Ok(bytes) => Response {
+                status: 200,
+                content_type: "application/octet-stream",
+                headers: Vec::new(),
+                body: bytes,
+            },
+            Err(e) => error_response(&ServeError::from(e)),
+        },
+        ("PUT", ["v1", "blobs", digest]) => {
+            // Hash-before-store: a corrupt upload never lands in the
+            // cache under a digest it does not match.
+            match registry.blobs().put_expected(digest, &req.body) {
+                Ok(()) => Response::json(
+                    201,
+                    Json::obj(vec![("digest", Json::from(*digest))]).to_string(),
+                ),
+                Err(e) => error_response(&ServeError::from(e)),
+            }
+        }
+        _ => Response::not_found(),
+    }
+}
+
+/// Serve a typed [`ServeError`] as its canonical JSON body + status.
+fn error_response(e: &ServeError) -> Response {
+    Response::json(e.http_status(), e.to_json().to_string())
 }
 
 fn finite_or_null(v: f64) -> Json {

@@ -20,7 +20,10 @@
 //! never decoded), `invalid` (HTTP 400), `internal` (HTTP 500),
 //! `replica_failure` (HTTP 500 — the executing replica panicked and was
 //! restarted), `draining` (HTTP 503 — the server is shutting down
-//! gracefully and no longer admits work).
+//! gracefully and no longer admits work), `digest_mismatch` (HTTP 422 —
+//! a registry blob's bytes do not hash to the promised digest),
+//! `not_found` (HTTP 404 — unknown registry manifest/blob/model), and
+//! `body_too_large` (HTTP 413 — request body over `max_body_bytes`).
 
 use anyhow::{bail, Context, Result};
 
@@ -102,6 +105,30 @@ pub enum ServeError {
     /// The server is draining ahead of shutdown: in-flight and queued
     /// jobs still complete, but new work is refused. HTTP 503.
     Draining,
+    /// A registry blob's bytes hash to something other than the digest
+    /// the manifest (or its content address) promised — a corrupt,
+    /// truncated, or tampered artifact. The blob is rejected and never
+    /// loaded; this is always a typed error, never a panic or a served
+    /// NaN. HTTP 422.
+    DigestMismatch {
+        /// The digest the caller asked for.
+        expected: String,
+        /// The digest the bytes actually hash to.
+        actual: String,
+    },
+    /// A registry manifest, blob, or model reference does not exist.
+    /// HTTP 404.
+    NotFound(String),
+    /// A request body exceeded the server's `max_body_bytes` cap. The
+    /// HTTP layer normally answers this before the handler runs; the
+    /// variant exists so registry handlers can enforce tighter per-route
+    /// caps with the same wire shape. HTTP 413.
+    BodyTooLarge {
+        /// The declared/observed body size.
+        got: usize,
+        /// The enforced cap.
+        limit: usize,
+    },
 }
 
 impl ServeError {
@@ -115,6 +142,9 @@ impl ServeError {
             ServeError::Internal(_) => "internal",
             ServeError::ReplicaFailure(_) => "replica_failure",
             ServeError::Draining => "draining",
+            ServeError::DigestMismatch { .. } => "digest_mismatch",
+            ServeError::NotFound(_) => "not_found",
+            ServeError::BodyTooLarge { .. } => "body_too_large",
         }
     }
 
@@ -127,6 +157,9 @@ impl ServeError {
             ServeError::Internal(_) => 500,
             ServeError::ReplicaFailure(_) => 500,
             ServeError::Draining => 503,
+            ServeError::DigestMismatch { .. } => 422,
+            ServeError::NotFound(_) => 404,
+            ServeError::BodyTooLarge { .. } => 413,
         }
     }
 
@@ -145,6 +178,14 @@ impl ServeError {
             ServeError::DeadlineExpired { deadline_ms, waited_ms } => {
                 fields.push(("deadline_ms", Json::from(*deadline_ms as usize)));
                 fields.push(("waited_ms", Json::from(*waited_ms as usize)));
+            }
+            ServeError::DigestMismatch { expected, actual } => {
+                fields.push(("expected", Json::from(expected.as_str())));
+                fields.push(("actual", Json::from(actual.as_str())));
+            }
+            ServeError::BodyTooLarge { got, limit } => {
+                fields.push(("got", Json::from(*got)));
+                fields.push(("max_body_bytes", Json::from(*limit)));
             }
             _ => {}
         }
@@ -171,6 +212,14 @@ impl std::fmt::Display for ServeError {
             }
             ServeError::Draining => {
                 write!(f, "server is draining ahead of shutdown; not admitting new work")
+            }
+            ServeError::DigestMismatch { expected, actual } => write!(
+                f,
+                "digest mismatch: expected sha256:{expected}, bytes hash to sha256:{actual}"
+            ),
+            ServeError::NotFound(what) => write!(f, "not found: {what}"),
+            ServeError::BodyTooLarge { got, limit } => {
+                write!(f, "request body of {got} bytes exceeds the {limit}-byte limit")
             }
         }
     }
@@ -610,6 +659,26 @@ mod tests {
         assert_eq!(e.http_status(), 503);
         assert_eq!(e.code(), "draining");
         assert_eq!(e.to_json().get("error_code").unwrap().as_str(), Some("draining"));
+
+        let e = ServeError::DigestMismatch { expected: "ab".into(), actual: "cd".into() };
+        assert_eq!(e.http_status(), 422);
+        assert_eq!(e.code(), "digest_mismatch");
+        let j = e.to_json();
+        assert_eq!(j.get("expected").unwrap().as_str(), Some("ab"));
+        assert_eq!(j.get("actual").unwrap().as_str(), Some("cd"));
+        assert!(e.to_string().contains("digest mismatch"));
+
+        let e = ServeError::NotFound("model demo:v2".into());
+        assert_eq!(e.http_status(), 404);
+        assert_eq!(e.code(), "not_found");
+        assert!(e.to_string().contains("demo:v2"));
+
+        let e = ServeError::BodyTooLarge { got: 2048, limit: 1024 };
+        assert_eq!(e.http_status(), 413);
+        assert_eq!(e.code(), "body_too_large");
+        let j = e.to_json();
+        assert_eq!(j.get("got").unwrap().as_usize(), Some(2048));
+        assert_eq!(j.get("max_body_bytes").unwrap().as_usize(), Some(1024));
     }
 
     #[test]

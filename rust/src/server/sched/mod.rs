@@ -48,12 +48,19 @@
 //! `"scheduler"` block. `/healthz` turns into a readiness probe:
 //! it reports HTTP 503 with `"ready": false` while the admission queue
 //! is saturated, so external load balancers can drain a hot replica.
+//!
+//! Live weight swap rides the same machinery: [`ModelSlot`] holds the
+//! pool's current [`ReplicaBuilder`] + model identity behind a
+//! generation counter, [`AdmissionQueue::bump_epoch`] wakes parked
+//! replicas ([`NextBatch::Interrupted`]), and each replica rebinds
+//! between batches — queued jobs are untouched, so a swap drops zero
+//! requests.
 
 mod queue;
 mod pool;
 
-pub use pool::{start_pool, ReplicaBuilder, ReplicaStacks, SchedShared};
-pub use queue::{AdmissionQueue, GroupKey, QueuedJob};
+pub use pool::{start_pool, ModelSlot, ReplicaBuilder, ReplicaStacks, SchedShared};
+pub use queue::{AdmissionQueue, GroupKey, NextBatch, QueuedJob};
 
 pub use crate::config::SchedPolicy;
 

@@ -28,9 +28,9 @@
 
 use std::collections::BTreeMap;
 use std::panic::{catch_unwind, AssertUnwindSafe};
-use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::{mpsc, Arc, Mutex};
-use std::time::Duration;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
@@ -41,7 +41,7 @@ use crate::models::Backend;
 use crate::specdec::{DraftKind, GammaController};
 
 use super::super::batcher::{execute_batch, lock_ignore_poison, GroupRun};
-use super::queue::AdmissionQueue;
+use super::queue::{AdmissionQueue, NextBatch};
 use super::ModelShape;
 
 /// One replica's owned backends (target + draft).
@@ -57,6 +57,122 @@ pub struct ReplicaStacks {
 /// reload blobs) and is the injection point that lets tests and benches
 /// run the full serving stack over synthetic models.
 pub type ReplicaBuilder = Arc<dyn Fn(usize) -> Result<ReplicaStacks> + Send + Sync>;
+
+struct SlotInner {
+    builder: ReplicaBuilder,
+    digest: String,
+    label: String,
+}
+
+/// The pool's live model binding: the [`ReplicaBuilder`] every replica
+/// constructs its stacks from, plus the identity of the weights behind
+/// it (registry manifest digest + human label) and a generation counter.
+///
+/// Live weight swap is two writes and a barrier: [`ModelSlot::swap`]
+/// installs a new builder and bumps the generation, the caller bumps the
+/// queue's interrupt epoch to wake parked replicas, and each replica
+/// rebinds *between* decode batches — in-flight groups finish on the old
+/// weights, queued jobs are untouched, so no request is ever dropped by
+/// a swap. [`ModelSlot::wait_generation`] is the barrier: it returns
+/// once every replica has acknowledged the new generation (or the
+/// timeout expires, e.g. a replica wedged by injected chaos).
+pub struct ModelSlot {
+    inner: Mutex<SlotInner>,
+    /// Lock-free mirror of the current generation for the serve loop's
+    /// per-iteration check (bumped under `inner`'s lock, so a
+    /// `snapshot()` pair is always consistent).
+    generation: AtomicU64,
+    /// Per-replica highest acknowledged generation (the swap barrier).
+    acks: Mutex<BTreeMap<usize, u64>>,
+    ack_cond: Condvar,
+}
+
+impl ModelSlot {
+    /// A slot serving `builder`, identified by `digest` (registry
+    /// manifest content address, or `"unregistered"` for builders that
+    /// did not come from the registry) and a display `label`.
+    pub fn new(builder: ReplicaBuilder, digest: &str, label: &str) -> ModelSlot {
+        ModelSlot {
+            inner: Mutex::new(SlotInner {
+                builder,
+                digest: digest.to_string(),
+                label: label.to_string(),
+            }),
+            generation: AtomicU64::new(0),
+            acks: Mutex::new(BTreeMap::new()),
+            ack_cond: Condvar::new(),
+        }
+    }
+
+    /// The current swap generation (0 = the stacks the pool booted with).
+    pub fn generation(&self) -> u64 {
+        self.generation.load(Ordering::SeqCst)
+    }
+
+    /// The serving manifest digest (`/healthz` + `/stats` identity).
+    pub fn digest(&self) -> String {
+        lock_ignore_poison(&self.inner).digest.clone()
+    }
+
+    /// The serving model's display label (`name:version` reference).
+    pub fn label(&self) -> String {
+        lock_ignore_poison(&self.inner).label.clone()
+    }
+
+    /// A consistent (builder, generation) pair for one rebind.
+    pub fn snapshot(&self) -> (ReplicaBuilder, u64) {
+        let inner = lock_ignore_poison(&self.inner);
+        (Arc::clone(&inner.builder), self.generation.load(Ordering::SeqCst))
+    }
+
+    /// Install a new builder + identity and advance the generation.
+    /// Returns the new generation. The caller must follow with
+    /// [`AdmissionQueue::bump_epoch`] so parked replicas notice.
+    pub fn swap(&self, builder: ReplicaBuilder, digest: &str, label: &str) -> u64 {
+        let mut inner = lock_ignore_poison(&self.inner);
+        inner.builder = builder;
+        inner.digest = digest.to_string();
+        inner.label = label.to_string();
+        self.generation.fetch_add(1, Ordering::SeqCst) + 1
+    }
+
+    /// Record that `replica` now serves `generation` (monotone).
+    pub fn ack(&self, replica: usize, generation: u64) {
+        let mut acks = lock_ignore_poison(&self.acks);
+        let e = acks.entry(replica).or_insert(0);
+        if generation > *e {
+            *e = generation;
+        }
+        self.ack_cond.notify_all();
+    }
+
+    /// Replicas currently acknowledging a generation `>= generation`.
+    pub fn replicas_at(&self, generation: u64) -> usize {
+        lock_ignore_poison(&self.acks).values().filter(|g| **g >= generation).count()
+    }
+
+    /// Block until `replicas` replicas acknowledge `generation` (true)
+    /// or `timeout` expires (false — the swap is still installed; any
+    /// straggler rebinds before its next batch).
+    pub fn wait_generation(&self, generation: u64, replicas: usize, timeout: Duration) -> bool {
+        let deadline = Instant::now() + timeout;
+        let mut acks = lock_ignore_poison(&self.acks);
+        loop {
+            if acks.values().filter(|g| **g >= generation).count() >= replicas {
+                return true;
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return false;
+            }
+            let (next, _) = self
+                .ack_cond
+                .wait_timeout(acks, deadline.saturating_duration_since(now))
+                .unwrap_or_else(|e| e.into_inner());
+            acks = next;
+        }
+    }
+}
 
 /// State shared by every replica (and read by the HTTP layer).
 pub struct SchedShared {
@@ -109,7 +225,7 @@ impl SchedShared {
 pub fn start_pool(
     cfg: Arc<ServeConfig>,
     shape: ModelShape,
-    builder: ReplicaBuilder,
+    slot: Arc<ModelSlot>,
     queue: Arc<AdmissionQueue>,
     shared: Arc<SchedShared>,
     stop: Arc<AtomicBool>,
@@ -128,7 +244,7 @@ pub fn start_pool(
     let mut handles = Vec::new();
     for r in 0..cfg.replicas {
         let cfg = Arc::clone(&cfg);
-        let builder = Arc::clone(&builder);
+        let slot = Arc::clone(&slot);
         let queue = Arc::clone(&queue);
         let shared = Arc::clone(&shared);
         let stop = Arc::clone(&stop);
@@ -136,6 +252,7 @@ pub fn start_pool(
         let handle = std::thread::Builder::new()
             .name(format!("stride-replica-{r}"))
             .spawn(move || {
+                let (builder, generation) = slot.snapshot();
                 let stacks = match builder(r) {
                     Ok(s) => s,
                     Err(e) => {
@@ -148,12 +265,13 @@ pub fn start_pool(
                 let warm = vec![0.0f32; shape.n_ctx * shape.patch];
                 let _ = stacks.target.forward(&warm, shape.n_ctx);
                 let _ = stacks.draft.forward(&warm, shape.n_ctx);
+                slot.ack(r, generation);
                 let _ = ready.send(Ok(format!(
                     "replica {r}: target={} draft={}",
                     stacks.target.name(),
                     stacks.draft.name()
                 )));
-                replica_main(r, &cfg, shape, stacks, &builder, &queue, &shared, &stop);
+                replica_main(r, &cfg, shape, stacks, generation, &slot, &queue, &shared, &stop);
             })
             .context("spawning replica thread")?;
         handles.push(handle);
@@ -208,13 +326,53 @@ fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
     }
 }
 
+/// Rebuild `stacks` from the slot's current builder (a swap landed).
+/// On the native backend the builder clones `Arc` weight handles out of
+/// the already-verified [`crate::registry::LoadedPair`], so a rebind
+/// costs session/scratch construction, never a disk read. A failed
+/// build keeps the prior stacks serving (the swap caller verified the
+/// new weights load, so this is a replicate/alloc failure, not bad
+/// bytes) — either way the generation is acknowledged so the swap
+/// barrier cannot hang.
+fn rebind(
+    replica: usize,
+    shape: ModelShape,
+    stacks: &mut ReplicaStacks,
+    slot: &ModelSlot,
+    shared: &SchedShared,
+) -> u64 {
+    let (builder, generation) = slot.snapshot();
+    match builder(replica) {
+        Ok(fresh) => {
+            // Same warm-up as startup: the first post-swap request
+            // should not pay first-touch cost either.
+            let warm = vec![0.0f32; shape.n_ctx * shape.patch];
+            let _ = fresh.target.forward(&warm, shape.n_ctx);
+            let _ = fresh.draft.forward(&warm, shape.n_ctx);
+            *stacks = arm(fresh, shared);
+            shared.metrics.inc("model_swap_rebinds", 1);
+            log::info!("replica {replica} rebound to model generation {generation}");
+        }
+        Err(e) => {
+            shared.metrics.inc("model_swap_rebind_failures", 1);
+            log::error!(
+                "replica {replica} failed to bind model generation {generation}, \
+                 keeping prior stacks: {e:#}"
+            );
+        }
+    }
+    slot.ack(replica, generation);
+    generation
+}
+
 #[allow(clippy::too_many_arguments)]
 fn replica_main(
     replica: usize,
     cfg: &ServeConfig,
     shape: ModelShape,
     stacks: ReplicaStacks,
-    builder: &ReplicaBuilder,
+    generation: u64,
+    slot: &ModelSlot,
     queue: &AdmissionQueue,
     shared: &SchedShared,
     stop: &AtomicBool,
@@ -223,12 +381,27 @@ fn replica_main(
     // Arm chaos only after the warm-up forwards, so startup cannot be
     // killed by its own injection schedule.
     let mut stacks = arm(stacks, shared);
+    let mut generation = generation;
     loop {
         if stop.load(Ordering::Relaxed) {
             return;
         }
-        let Some((key, jobs)) = queue.next_batch(replica, cfg.max_batch, max_wait) else {
-            return; // queue shut down
+        // Swap check between batches: a decode group that was in flight
+        // when the slot moved finishes on the old weights; nothing is
+        // dropped.
+        if slot.generation() != generation {
+            generation = rebind(replica, shape, &mut stacks, slot, shared);
+        }
+        let (key, jobs) = match queue.next_batch_or_interrupt(
+            replica,
+            cfg.max_batch,
+            max_wait,
+            queue.epoch(),
+        ) {
+            NextBatch::Batch(key, jobs) => (key, jobs),
+            // Epoch moved while parked: loop back to the rebind check.
+            NextBatch::Interrupted => continue,
+            NextBatch::Shutdown => return,
         };
         shared.metrics.inc("batches", 1);
         shared.metrics.inc("batched_jobs", jobs.len() as u64);
@@ -253,13 +426,73 @@ fn replica_main(
             run.recover_after_panic(key, queue, shared, &msg);
             // Rebind to the shared weight store: on the native backend
             // `replicate()` clones `Arc` handles, so a restart costs
-            // session state, never a weight reload.
+            // session state, never a weight reload. Snapshotting from
+            // the slot means a restart concurrent with a swap comes
+            // back on the *new* weights.
+            let (builder, gen) = slot.snapshot();
             match builder(replica) {
-                Ok(fresh) => stacks = arm(fresh, shared),
+                Ok(fresh) => {
+                    stacks = arm(fresh, shared);
+                    if gen != generation {
+                        slot.ack(replica, gen);
+                        generation = gen;
+                    }
+                }
                 Err(e) => log::error!(
                     "replica {replica} stack rebuild failed, keeping prior stacks: {e:#}"
                 ),
             }
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn unused_builder() -> ReplicaBuilder {
+        Arc::new(|_| anyhow::bail!("slot tests never build stacks"))
+    }
+
+    #[test]
+    fn slot_swap_advances_generation_and_identity() {
+        let slot = ModelSlot::new(unused_builder(), "unregistered", "boot");
+        assert_eq!(slot.generation(), 0);
+        assert_eq!(slot.digest(), "unregistered");
+        let g = slot.swap(unused_builder(), "abc123", "m:v2");
+        assert_eq!(g, 1);
+        assert_eq!(slot.generation(), 1);
+        assert_eq!(slot.digest(), "abc123");
+        assert_eq!(slot.label(), "m:v2");
+        let (_, snap_gen) = slot.snapshot();
+        assert_eq!(snap_gen, 1);
+    }
+
+    #[test]
+    fn swap_barrier_waits_for_every_replica_and_times_out_on_stragglers() {
+        let slot = Arc::new(ModelSlot::new(unused_builder(), "d0", "boot"));
+        slot.ack(0, 0);
+        slot.ack(1, 0);
+        assert!(slot.wait_generation(0, 2, Duration::ZERO));
+        let gen = slot.swap(unused_builder(), "d1", "m:v2");
+        // Nobody has rebound yet: the barrier must time out, not hang.
+        assert!(!slot.wait_generation(gen, 2, Duration::from_millis(20)));
+        assert_eq!(slot.replicas_at(gen), 0);
+        // Replicas acknowledge from their own threads; the barrier
+        // releases once the last one lands.
+        let s2 = Arc::clone(&slot);
+        let t = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(20));
+            s2.ack(0, gen);
+            std::thread::sleep(Duration::from_millis(20));
+            s2.ack(1, gen);
+        });
+        assert!(slot.wait_generation(gen, 2, Duration::from_secs(5)));
+        t.join().unwrap();
+        assert_eq!(slot.replicas_at(gen), 2);
+        // Acks are monotone: a late ack for an old generation does not
+        // regress the barrier.
+        slot.ack(0, 0);
+        assert_eq!(slot.replicas_at(gen), 2);
     }
 }

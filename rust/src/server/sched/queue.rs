@@ -23,7 +23,7 @@
 //!   backlog — graceful shutdown empties the queue before stopping.
 
 use std::collections::BTreeMap;
-use std::sync::atomic::{AtomicBool, Ordering as AtomicOrdering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering as AtomicOrdering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
@@ -156,6 +156,24 @@ pub struct AdmissionQueue {
     /// While draining, `admit` refuses with [`ServeError::Draining`] but
     /// `next_batch` keeps dispatching until the backlog is empty.
     draining: AtomicBool,
+    /// Model-swap interrupt epoch. Bumping it wakes every replica parked
+    /// in [`AdmissionQueue::next_batch_or_interrupt`] so they can rebind
+    /// to new weights *between* batches — queued jobs are untouched, so
+    /// a swap never drops a request.
+    epoch: AtomicU64,
+}
+
+/// What a replica gets back from
+/// [`AdmissionQueue::next_batch_or_interrupt`].
+pub enum NextBatch {
+    /// A decode batch from one compatibility group, in dispatch order.
+    Batch(GroupKey, Vec<QueuedJob>),
+    /// The queue's epoch moved past the replica's observed value (a
+    /// model swap is in flight). No jobs were removed — re-observe the
+    /// epoch, rebind, and call again.
+    Interrupted,
+    /// Stop flag or shutdown: the replica should exit its serve loop.
+    Shutdown,
 }
 
 impl AdmissionQueue {
@@ -184,7 +202,24 @@ impl AdmissionQueue {
             metrics,
             stop,
             draining: AtomicBool::new(false),
+            epoch: AtomicU64::new(0),
         }
+    }
+
+    /// The current swap-interrupt epoch. Replicas snapshot this before
+    /// blocking in [`AdmissionQueue::next_batch_or_interrupt`].
+    pub fn epoch(&self) -> u64 {
+        self.epoch.load(AtomicOrdering::SeqCst)
+    }
+
+    /// Advance the swap-interrupt epoch and wake every parked replica.
+    /// Queued jobs are untouched — replicas see
+    /// [`NextBatch::Interrupted`], rebind their stacks, and resume
+    /// draining the same backlog. Returns the new epoch.
+    pub fn bump_epoch(&self) -> u64 {
+        let e = self.epoch.fetch_add(1, AtomicOrdering::SeqCst) + 1;
+        self.cond.notify_all();
+        e
     }
 
     /// The dispatch policy this queue runs.
@@ -388,10 +423,38 @@ impl AdmissionQueue {
         max_batch: usize,
         max_wait: Duration,
     ) -> Option<(GroupKey, Vec<QueuedJob>)> {
+        loop {
+            match self.next_batch_or_interrupt(replica, max_batch, max_wait, self.epoch()) {
+                NextBatch::Batch(key, batch) => return Some((key, batch)),
+                NextBatch::Shutdown => return None,
+                // Callers of the legacy entry point don't rebind on swap;
+                // re-observe the epoch and keep waiting.
+                NextBatch::Interrupted => continue,
+            }
+        }
+    }
+
+    /// [`AdmissionQueue::next_batch`] with a swap-interrupt contract:
+    /// returns [`NextBatch::Interrupted`] (removing no jobs) as soon as
+    /// the queue's epoch differs from `observed_epoch`, so a replica
+    /// parked in its batching window reacts to a live weight swap
+    /// immediately instead of after the window expires. The replica pool
+    /// is the intended caller; [`AdmissionQueue::next_batch`] keeps the
+    /// pre-swap contract for everything else.
+    pub fn next_batch_or_interrupt(
+        &self,
+        replica: usize,
+        max_batch: usize,
+        max_wait: Duration,
+        observed_epoch: u64,
+    ) -> NextBatch {
         let mut s = self.state.lock().unwrap();
         loop {
             if self.stop.load(AtomicOrdering::Relaxed) {
-                return None;
+                return NextBatch::Shutdown;
+            }
+            if self.epoch() != observed_epoch {
+                return NextBatch::Interrupted;
             }
             self.purge_expired(&mut s);
             if let Some((key, stolen)) = self.choose_group(&s, replica) {
@@ -420,14 +483,14 @@ impl AdmissionQueue {
                     self.metrics.set_gauge("queue_depth", s.depth as f64);
                     // Waking peers matters: more groups may remain.
                     self.cond.notify_all();
-                    return Some((key, batch));
+                    return NextBatch::Batch(key, batch);
                 }
                 // Wait out the batching window for this group to fill.
                 let remaining = max_wait.saturating_sub(oldest.elapsed());
                 let (ns, _) = self.cond.wait_timeout(s, remaining).unwrap();
                 s = ns;
             } else if s.shutdown {
-                return None;
+                return NextBatch::Shutdown;
             } else {
                 let (ns, _) = self.cond.wait_timeout(s, Duration::from_millis(50)).unwrap();
                 s = ns;
@@ -834,5 +897,57 @@ mod tests {
         }
         let (job, _rx) = mk_job();
         assert!(q.admit(job, Priority::Normal, None, key(3)).is_err());
+    }
+
+    #[test]
+    fn epoch_bump_interrupts_an_idle_replica_without_touching_jobs() {
+        let q = Arc::new(queue(16, SchedPolicy::Edf));
+        // A job sits mid batching-window so the replica is parked inside
+        // the group-fill wait, not the idle wait.
+        let (job, _rx) = mk_job();
+        std::mem::forget(_rx);
+        q.admit(job, Priority::Normal, None, key(3)).unwrap();
+        let q2 = q.clone();
+        let observed = q.epoch();
+        let waiter = std::thread::spawn(move || {
+            q2.next_batch_or_interrupt(0, 8, Duration::from_secs(60), observed)
+        });
+        std::thread::sleep(Duration::from_millis(30));
+        let new_epoch = q.bump_epoch();
+        assert_eq!(new_epoch, observed + 1);
+        match waiter.join().unwrap() {
+            NextBatch::Interrupted => {}
+            NextBatch::Batch(..) => panic!("swap interrupt must win over the batching window"),
+            NextBatch::Shutdown => panic!("epoch bump is not a shutdown"),
+        }
+        // The interrupt removed nothing: the job is still queued and the
+        // replica picks it up on the next call at the new epoch.
+        assert_eq!(q.depth(), 1);
+        match q.next_batch_or_interrupt(0, 8, Duration::ZERO, new_epoch) {
+            NextBatch::Batch(_, batch) => assert_eq!(batch.len(), 1),
+            _ => panic!("job must survive the swap interrupt"),
+        }
+    }
+
+    #[test]
+    fn stale_epoch_interrupts_before_dispatch() {
+        // A replica calling in with an out-of-date epoch must be told to
+        // rebind even though work is immediately available — otherwise a
+        // busy replica could keep serving old weights past the swap
+        // barrier.
+        let q = queue(16, SchedPolicy::Edf);
+        let (job, _rx) = mk_job();
+        std::mem::forget(_rx);
+        q.admit(job, Priority::Normal, None, key(3)).unwrap();
+        let stale = q.epoch();
+        q.bump_epoch();
+        assert!(matches!(
+            q.next_batch_or_interrupt(0, 8, Duration::ZERO, stale),
+            NextBatch::Interrupted
+        ));
+        // Legacy entry point is swap-oblivious: it re-observes and
+        // dispatches as before.
+        let (_, batch) = q.next_batch(0, 8, Duration::ZERO).unwrap();
+        assert_eq!(batch.len(), 1);
     }
 }

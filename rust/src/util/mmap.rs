@@ -1,0 +1,186 @@
+//! Read-only file mapping for zero-copy weight loading.
+//!
+//! [`MappedFile`] binds a file's bytes into the address space via `mmap(2)`
+//! on 64-bit little-endian unix targets — the configuration where a raw
+//! little-endian f32 blob can be reinterpreted in place — and falls back to
+//! a plain heap read everywhere else. Callers never branch on which path
+//! was taken: [`MappedFile::bytes`] is the one accessor, and
+//! [`MappedFile::is_mapped`] only feeds metrics/tests.
+//!
+//! No external crate is used: the two syscalls are declared directly
+//! against the platform libc that `std` already links. The mapping is
+//! `PROT_READ` + `MAP_PRIVATE`, so the kernel shares clean pages across
+//! processes and a serving replica can never scribble on the weight file.
+
+use std::fs::File;
+use std::io;
+use std::path::Path;
+
+/// Whether this build can take the true `mmap` path (64-bit little-endian
+/// unix). Elsewhere the type silently degrades to a heap read with the
+/// identical API and bit-identical contents.
+pub const MMAP_SUPPORTED: bool =
+    cfg!(all(unix, target_pointer_width = "64", target_endian = "little"));
+
+#[cfg(all(unix, target_pointer_width = "64", target_endian = "little"))]
+mod sys {
+    use std::ffi::c_void;
+    use std::os::raw::c_int;
+
+    pub const PROT_READ: c_int = 1;
+    pub const MAP_PRIVATE: c_int = 2;
+
+    extern "C" {
+        pub fn mmap(
+            addr: *mut c_void,
+            len: usize,
+            prot: c_int,
+            flags: c_int,
+            fd: c_int,
+            offset: i64,
+        ) -> *mut c_void;
+        pub fn munmap(addr: *mut c_void, len: usize) -> c_int;
+    }
+
+    pub const MAP_FAILED: *mut c_void = usize::MAX as *mut c_void;
+}
+
+enum Backing {
+    /// Live `mmap` region (freed with `munmap` on drop).
+    #[cfg(all(unix, target_pointer_width = "64", target_endian = "little"))]
+    Map { ptr: *const u8, len: usize },
+    /// Heap fallback (non-unix / big-endian / empty file / mmap failure).
+    Heap(Vec<u8>),
+}
+
+/// A file's bytes, mapped read-only when the platform allows it and read
+/// to the heap otherwise. Immutable for its whole lifetime, so sharing
+/// `&[u8]` views across threads is sound.
+pub struct MappedFile {
+    backing: Backing,
+}
+
+// SAFETY: the region is PROT_READ/MAP_PRIVATE and never handed out
+// mutably; concurrent reads of immutable memory are data-race free.
+unsafe impl Send for MappedFile {}
+unsafe impl Sync for MappedFile {}
+
+impl MappedFile {
+    /// Map (or read) `path`. Zero-length files take the heap path — a
+    /// zero-length `mmap` is an error by spec, not an empty mapping.
+    pub fn open(path: &Path) -> io::Result<MappedFile> {
+        let file = File::open(path)?;
+        let len = file.metadata()?.len();
+        #[cfg(all(unix, target_pointer_width = "64", target_endian = "little"))]
+        {
+            use std::os::unix::io::AsRawFd;
+            if len > 0 && len <= usize::MAX as u64 {
+                let len = len as usize;
+                // SAFETY: fd is open for reading; len matches the file
+                // size read above; a MAP_FAILED return is checked before
+                // the pointer is ever used.
+                let ptr = unsafe {
+                    sys::mmap(
+                        std::ptr::null_mut(),
+                        len,
+                        sys::PROT_READ,
+                        sys::MAP_PRIVATE,
+                        file.as_raw_fd(),
+                        0,
+                    )
+                };
+                if ptr != sys::MAP_FAILED {
+                    return Ok(MappedFile { backing: Backing::Map { ptr: ptr as *const u8, len } });
+                }
+                // Fall through to the heap read on mmap failure (e.g. a
+                // filesystem that refuses mappings) — degraded, not fatal.
+            }
+        }
+        let bytes = std::fs::read(path)?;
+        let _ = len;
+        Ok(MappedFile { backing: Backing::Heap(bytes) })
+    }
+
+    /// The file's bytes (identical contents on either backing).
+    pub fn bytes(&self) -> &[u8] {
+        match &self.backing {
+            #[cfg(all(unix, target_pointer_width = "64", target_endian = "little"))]
+            // SAFETY: ptr/len came from a successful mmap of exactly `len`
+            // bytes, live until Drop.
+            Backing::Map { ptr, len } => unsafe { std::slice::from_raw_parts(*ptr, *len) },
+            Backing::Heap(v) => v,
+        }
+    }
+
+    /// Byte length.
+    pub fn len(&self) -> usize {
+        self.bytes().len()
+    }
+
+    /// True when the file is empty.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// True when the bytes are a live `mmap` region (vs the heap
+    /// fallback). Observability only — contents are identical either way.
+    pub fn is_mapped(&self) -> bool {
+        match &self.backing {
+            #[cfg(all(unix, target_pointer_width = "64", target_endian = "little"))]
+            Backing::Map { .. } => true,
+            Backing::Heap(_) => false,
+        }
+    }
+}
+
+impl Drop for MappedFile {
+    fn drop(&mut self) {
+        #[cfg(all(unix, target_pointer_width = "64", target_endian = "little"))]
+        if let Backing::Map { ptr, len } = self.backing {
+            // SAFETY: exactly the region mmap returned; unmapped once.
+            unsafe {
+                sys::munmap(ptr as *mut std::ffi::c_void, len);
+            }
+        }
+    }
+}
+
+impl std::fmt::Debug for MappedFile {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "MappedFile(len={}, mapped={})", self.len(), self.is_mapped())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn maps_and_reads_identical_bytes() {
+        let dir = std::env::temp_dir().join("stride_mmap_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("blob.bin");
+        let want: Vec<u8> = (0..=255u8).cycle().take(10_000).collect();
+        std::fs::write(&path, &want).unwrap();
+        let m = MappedFile::open(&path).unwrap();
+        assert_eq!(m.len(), want.len());
+        assert_eq!(m.bytes(), &want[..]);
+        assert_eq!(m.is_mapped(), MMAP_SUPPORTED);
+    }
+
+    #[test]
+    fn empty_file_takes_heap_path() {
+        let dir = std::env::temp_dir().join("stride_mmap_test_empty");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("empty.bin");
+        std::fs::write(&path, []).unwrap();
+        let m = MappedFile::open(&path).unwrap();
+        assert!(m.is_empty());
+        assert!(!m.is_mapped());
+    }
+
+    #[test]
+    fn missing_file_is_an_error() {
+        assert!(MappedFile::open(Path::new("/nonexistent/stride/blob")).is_err());
+    }
+}

@@ -3,6 +3,7 @@
 
 pub mod json;
 pub mod microbench;
+pub mod mmap;
 pub mod proptest_lite;
 pub mod rng;
 pub mod stats;

@@ -6,15 +6,170 @@
 //! not use this type on the wire — `runtime::literal` marshals flat slices.
 
 use std::fmt;
+use std::ops::{Deref, DerefMut};
 use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use crate::util::mmap::MappedFile;
+
+/// Flat f32 storage behind a [`Tensor`]: either an owned heap `Vec` (every
+/// computed tensor) or a window into a shared read-only [`MappedFile`]
+/// (registry-loaded weights — the zero-copy path binds the blob's bytes
+/// straight into the weight store; no float is copied at load time).
+///
+/// `Deref<Target = [f32]>` makes the two cases indistinguishable to the
+/// kernel layer. Mutation (`DerefMut`) promotes a mapped window to a heap
+/// copy first — weights are never mutated in practice, so the promotion
+/// path exists for safety, not for the hot loop.
+pub struct Storage(Repr);
+
+enum Repr {
+    Heap(Vec<f32>),
+    Mapped {
+        file: Arc<MappedFile>,
+        /// Byte offset into the file (4-aligned, checked at construction).
+        off: usize,
+        /// Element count.
+        len: usize,
+    },
+}
+
+impl Storage {
+    /// Owned heap storage.
+    pub fn from_vec(v: Vec<f32>) -> Storage {
+        Storage(Repr::Heap(v))
+    }
+
+    /// A `len`-float window at byte offset `off` of a shared mapping.
+    /// Fails (typed, never a panic — this sits on the model-load path) on
+    /// a misaligned offset or an out-of-bounds window. Only valid on
+    /// little-endian hosts, where the blob's LE f32 bytes *are* the
+    /// in-memory representation; [`crate::util::mmap::MMAP_SUPPORTED`]
+    /// gates callers on other targets.
+    pub fn mapped(file: Arc<MappedFile>, off: usize, len: usize) -> Result<Storage, String> {
+        if !cfg!(target_endian = "little") {
+            return Err("mapped storage requires a little-endian host".to_string());
+        }
+        if off % 4 != 0 {
+            return Err(format!("mapped tensor byte offset {off} is not 4-aligned"));
+        }
+        let end = off
+            .checked_add(len.checked_mul(4).ok_or("mapped tensor length overflows")?)
+            .ok_or("mapped tensor window overflows")?;
+        if end > file.len() {
+            return Err(format!(
+                "mapped tensor window [{off}, {end}) exceeds blob length {}",
+                file.len()
+            ));
+        }
+        Ok(Storage(Repr::Mapped { file, off, len }))
+    }
+
+    /// True when backed by a mapped file window (no heap copy was made).
+    pub fn is_mapped(&self) -> bool {
+        matches!(self.0, Repr::Mapped { .. })
+    }
+
+    /// Consume into an owned `Vec` (copy only if mapped).
+    pub fn into_vec(self) -> Vec<f32> {
+        match self.0 {
+            Repr::Heap(v) => v,
+            Repr::Mapped { .. } => self.to_vec(),
+        }
+    }
+}
+
+impl Deref for Storage {
+    type Target = [f32];
+    fn deref(&self) -> &[f32] {
+        match &self.0 {
+            Repr::Heap(v) => v,
+            Repr::Mapped { file, off, len } => {
+                let bytes = &file.bytes()[*off..*off + *len * 4];
+                // SAFETY: the window is bounds- and 4-alignment-checked at
+                // construction, the mapping is immutable for its lifetime
+                // (PROT_READ), every u32 bit pattern is a valid f32, and
+                // mmap regions are page-aligned so off % 4 == 0 implies
+                // f32 alignment.
+                unsafe { std::slice::from_raw_parts(bytes.as_ptr() as *const f32, *len) }
+            }
+        }
+    }
+}
+
+impl DerefMut for Storage {
+    fn deref_mut(&mut self) -> &mut [f32] {
+        if self.is_mapped() {
+            // Promote to heap on first mutation (never taken for weights).
+            self.0 = Repr::Heap(self.to_vec());
+        }
+        match &mut self.0 {
+            Repr::Heap(v) => v,
+            Repr::Mapped { .. } => unreachable!("promoted above"),
+        }
+    }
+}
+
+impl Clone for Storage {
+    fn clone(&self) -> Storage {
+        match &self.0 {
+            Repr::Heap(v) => Storage(Repr::Heap(v.clone())),
+            // Cloning a mapped window copies pointers, not floats — the
+            // replica pool's cheap-clone contract extends to mapped
+            // weights.
+            Repr::Mapped { file, off, len } => {
+                Storage(Repr::Mapped { file: Arc::clone(file), off: *off, len: *len })
+            }
+        }
+    }
+}
+
+impl PartialEq for Storage {
+    fn eq(&self, other: &Storage) -> bool {
+        self[..] == other[..]
+    }
+}
+
+impl PartialEq<Vec<f32>> for Storage {
+    fn eq(&self, other: &Vec<f32>) -> bool {
+        self[..] == other[..]
+    }
+}
+
+impl PartialEq<[f32]> for Storage {
+    fn eq(&self, other: &[f32]) -> bool {
+        &self[..] == other
+    }
+}
+
+impl fmt::Debug for Storage {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "Storage(n={}, mapped={})", self.len(), self.is_mapped())
+    }
+}
+
+impl From<Vec<f32>> for Storage {
+    fn from(v: Vec<f32>) -> Storage {
+        Storage::from_vec(v)
+    }
+}
+
+impl<'a> IntoIterator for &'a Storage {
+    type Item = &'a f32;
+    type IntoIter = std::slice::Iter<'a, f32>;
+    fn into_iter(self) -> Self::IntoIter {
+        self.iter()
+    }
+}
 
 /// Row-major f32 tensor: a shape vector over flat storage.
 #[derive(Clone, PartialEq)]
 pub struct Tensor {
     /// Dimension sizes, outermost first.
     pub shape: Vec<usize>,
-    /// Flat row-major storage (`shape.iter().product()` elements).
-    pub data: Vec<f32>,
+    /// Flat row-major storage (`shape.iter().product()` elements) —
+    /// heap-owned or a zero-copy mapped window, see [`Storage`].
+    pub data: Storage,
 }
 
 impl fmt::Debug for Tensor {
@@ -27,13 +182,24 @@ impl Tensor {
     /// Zero-filled tensor of the given shape.
     pub fn zeros(shape: &[usize]) -> Tensor {
         let n = shape.iter().product();
-        Tensor { shape: shape.to_vec(), data: vec![0.0; n] }
+        Tensor { shape: shape.to_vec(), data: Storage::from_vec(vec![0.0; n]) }
     }
 
     /// Wrap existing flat data in a shape (lengths must agree).
     pub fn from_vec(shape: &[usize], data: Vec<f32>) -> Tensor {
         assert_eq!(shape.iter().product::<usize>(), data.len(), "shape/data mismatch");
-        Tensor { shape: shape.to_vec(), data }
+        Tensor { shape: shape.to_vec(), data: Storage::from_vec(data) }
+    }
+
+    /// Wrap pre-built storage (heap or mapped) in a shape. Typed error on
+    /// a length mismatch — this sits on the registry load path, where a
+    /// truncated blob must surface as `Err`, not a panic.
+    pub fn from_storage(shape: &[usize], data: Storage) -> Result<Tensor, String> {
+        let want: usize = shape.iter().product();
+        if want != data.len() {
+            return Err(format!("shape {shape:?} wants {want} floats, storage has {}", data.len()));
+        }
+        Ok(Tensor { shape: shape.to_vec(), data })
     }
 
     /// Total element count.

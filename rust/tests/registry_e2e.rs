@@ -1,0 +1,336 @@
+//! End-to-end registry + live-swap tests: the content-addressed model
+//! registry over real HTTP (push → pull bit-identity, typed corruption
+//! rejection) and the replica pool's live weight swap (zero dropped
+//! requests under concurrent load; post-swap responses bit-identical to
+//! a cold start on the new manifest).
+//!
+//! Everything here runs artifact-free: model pairs are `tiny_model`
+//! synthetics published into throwaway registries under the system temp
+//! dir, registry-hosting servers come up via `Server::start_with_builder`
+//! (no artifacts manifest on disk), and registry-*booted* servers use
+//! `ServeConfig::registry_model` to serve a published pair directly.
+
+use std::sync::Arc;
+
+use stride::config::ServeConfig;
+use stride::faultinject::{FaultConfig, FaultPlan};
+use stride::http::{http_request, RetryPolicy};
+use stride::models::NativeBackend;
+use stride::nn::model::tiny_model;
+use stride::registry::{
+    load_pair, publish_pair, pull_model, push_model, sha256_hex, Registry, RegistryError,
+};
+use stride::server::{ModelShape, ReplicaBuilder, ReplicaStacks, Server};
+use stride::util::json::Json;
+use stride::util::tensor::Tensor;
+
+fn fresh_registry(tag: &str) -> Registry {
+    let root = std::env::temp_dir().join(format!("stride_registry_e2e_{tag}"));
+    let _ = std::fs::remove_dir_all(&root);
+    Registry::open(&root).unwrap()
+}
+
+fn tiny_shape() -> ModelShape {
+    ModelShape { patch: 4, n_ctx: 8 }
+}
+
+fn tiny_builder() -> ReplicaBuilder {
+    Arc::new(move |_r| {
+        Ok(ReplicaStacks {
+            target: Box::new(NativeBackend::new(tiny_model(901))),
+            draft: Box::new(NativeBackend::new(tiny_model(902))),
+        })
+    })
+}
+
+fn base_cfg() -> ServeConfig {
+    let mut cfg = ServeConfig::default();
+    cfg.bind = "127.0.0.1:0".into();
+    cfg.backend = "native".into();
+    cfg.replicas = 2;
+    cfg.http_workers = 16;
+    cfg.max_batch = 4;
+    cfg.max_wait_ms = 5;
+    cfg
+}
+
+/// A synthetic-model server that also hosts a registry under `tag`'s
+/// temp dir: the push/pull/route tests need registry routes, not a
+/// registry-loaded model.
+fn registry_host(tag: &str) -> (Server, Registry) {
+    let reg = fresh_registry(tag);
+    let mut cfg = base_cfg();
+    cfg.registry_dir = Some(reg.root().to_path_buf());
+    let server =
+        Server::start_with_builder(cfg, tiny_shape(), tiny_builder()).expect("registry host");
+    (server, reg)
+}
+
+/// A server booted *from* the registry: `reference` is resolved,
+/// verified, zero-copy-loaded, and served under its manifest digest.
+fn registry_booted(reg: &Registry, reference: &str) -> Server {
+    let mut cfg = base_cfg();
+    cfg.registry_dir = Some(reg.root().to_path_buf());
+    cfg.registry_model = Some(reference.to_string());
+    Server::start(cfg).expect("registry-booted server")
+}
+
+fn hist_json() -> String {
+    let h: Vec<String> = (0..16).map(|i| format!("{}", ((i as f32) * 0.23).sin())).collect();
+    format!("[{}]", h.join(","))
+}
+
+fn forecast_bits(addr: &str, seed: u64) -> Vec<u32> {
+    let body = format!(
+        r#"{{"history": {}, "horizon": 8, "gamma": 2, "seed": {seed}}}"#,
+        hist_json()
+    );
+    let r = http_request(addr, "POST", "/forecast", Some(body.as_bytes())).unwrap();
+    assert_eq!(r.status, 200, "{}", r.body_str());
+    let j = Json::parse(r.body_str()).unwrap();
+    j.get("forecast")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|v| (v.as_f64().unwrap() as f32).to_bits())
+        .collect()
+}
+
+#[test]
+fn push_pull_roundtrip_is_bit_identical_over_http() {
+    let source = fresh_registry("push_src");
+    let digest = publish_pair(&source, "m", "v1", &tiny_model(801), &tiny_model(802)).unwrap();
+
+    let (server, _host_reg) = registry_host("push_srv");
+    let addr = server.addr().to_string();
+    let policy = RetryPolicy::default();
+
+    let pushed = push_model(&addr, &source, "m:v1", &policy).unwrap();
+    assert_eq!(pushed, digest, "server must acknowledge the same content address");
+
+    // The tag listing and the content address both resolve over HTTP;
+    // the served manifest bytes are canonical (they re-hash to the
+    // address they were fetched by).
+    let r = http_request(&addr, "GET", "/v1/models", None).unwrap();
+    assert_eq!(r.status, 200, "{}", r.body_str());
+    assert!(r.body_str().contains("m:v1"), "{}", r.body_str());
+    let r = http_request(&addr, "GET", &format!("/v1/models/sha256/{digest}"), None).unwrap();
+    assert_eq!(r.status, 200, "{}", r.body_str());
+    assert_eq!(sha256_hex(&r.body), digest, "manifest body must be the canonical form");
+
+    // Pull into a third registry and compare every byte.
+    let dest = fresh_registry("push_dst");
+    let pulled = pull_model(&addr, &dest, "m:v1", &policy, None).unwrap();
+    assert_eq!(pulled, digest);
+    let (m, _) = dest.get_manifest("m:v1").unwrap();
+    for spec in [&m.target, &m.draft] {
+        let a = source.blobs().read_verified(&spec.sha256).unwrap();
+        let b = dest.blobs().read_verified(&spec.sha256).unwrap();
+        assert_eq!(a, b, "blob sha256:{} must round-trip bit-identically", spec.sha256);
+    }
+
+    // The pulled pair zero-copy-loads and forwards exactly like the
+    // model it was packed from: [B=1, N=2, P=4] within tiny n_ctx.
+    let pair = load_pair(&dest, "m:v1").unwrap();
+    let src_model = tiny_model(801);
+    let tokens =
+        Tensor::from_vec(&[1, 2, 4], (0..8).map(|i| (i as f32 * 0.37).sin()).collect());
+    let want: Vec<u32> =
+        src_model.forward(&tokens).unwrap().data.iter().map(|v| v.to_bits()).collect();
+    let got: Vec<u32> = pair
+        .target
+        .model()
+        .forward(&tokens)
+        .unwrap()
+        .data
+        .iter()
+        .map(|v| v.to_bits())
+        .collect();
+    assert_eq!(want, got, "mapped registry load must be bitwise-invisible");
+}
+
+#[test]
+fn corrupted_pull_is_a_typed_rejection_not_a_poisoned_cache() {
+    let source = fresh_registry("chaos_src");
+    publish_pair(&source, "m", "v1", &tiny_model(811), &tiny_model(812)).unwrap();
+    let (server, _host_reg) = registry_host("chaos_srv");
+    let addr = server.addr().to_string();
+    let policy = RetryPolicy::default();
+    push_model(&addr, &source, "m:v1", &policy).unwrap();
+
+    // Chaos at the transfer boundary: every pulled blob gets a byte
+    // flipped before verification.
+    let mut fc = FaultConfig::default();
+    fc.enabled = true;
+    fc.seed = 7;
+    fc.p_blob_corrupt = 1.0;
+    let plan = FaultPlan::new(fc).unwrap();
+
+    let dest = fresh_registry("chaos_dst");
+    match pull_model(&addr, &dest, "m:v1", &policy, Some(plan.as_ref())) {
+        Err(RegistryError::DigestMismatch { expected, actual }) => {
+            assert_ne!(expected, actual);
+        }
+        other => panic!("corrupt transfer must be DigestMismatch, got {:?}", other.err()),
+    }
+    // Nothing poisoned: the cache holds no blob under the expected
+    // digest, no manifest landed, and a clean retry into the same dir
+    // succeeds.
+    let (m, _) = source.get_manifest("m:v1").unwrap();
+    assert!(!dest.blobs().has(&m.target.sha256));
+    assert!(dest.get_manifest("m:v1").is_err(), "manifest must not land before its blobs");
+    pull_model(&addr, &dest, "m:v1", &policy, None).unwrap();
+    assert!(dest.blobs().read_verified(&m.target.sha256).is_ok());
+}
+
+#[test]
+fn blob_and_manifest_routes_reject_bad_input_with_typed_errors() {
+    let (server, _reg) = registry_host("routes");
+    let addr = server.addr().to_string();
+
+    // Wrong-content upload: hash-before-store answers 422 and caches
+    // nothing under either digest.
+    let fake = "a".repeat(64);
+    let r = http_request(&addr, "PUT", &format!("/v1/blobs/{fake}"), Some(b"junk")).unwrap();
+    assert_eq!(r.status, 422, "{}", r.body_str());
+    assert!(r.body_str().contains("\"error_code\":\"digest_mismatch\""), "{}", r.body_str());
+    let r = http_request(&addr, "GET", &format!("/v1/blobs/{fake}"), None).unwrap();
+    assert_eq!(r.status, 404, "{}", r.body_str());
+
+    // Malformed digests never touch the filesystem: typed 400.
+    let r = http_request(&addr, "GET", "/v1/blobs/not-a-digest", None).unwrap();
+    assert_eq!(r.status, 400, "{}", r.body_str());
+
+    // A manifest PUT whose name/version disagree with the path is a 400.
+    let source = fresh_registry("routes_src");
+    publish_pair(&source, "m", "v1", &tiny_model(821), &tiny_model(822)).unwrap();
+    let (m, _) = source.get_manifest("m:v1").unwrap();
+    let body = m.to_json().to_string();
+    let r = http_request(&addr, "PUT", "/v1/models/other/v1", Some(body.as_bytes())).unwrap();
+    assert_eq!(r.status, 400, "{}", r.body_str());
+
+    // Blobs-first protocol over the wire: the manifest alone is refused
+    // (its blobs were never pushed).
+    let r = http_request(&addr, "PUT", "/v1/models/m/v1", Some(body.as_bytes())).unwrap();
+    assert_eq!(r.status, 404, "{}", r.body_str());
+    assert!(r.body_str().contains("\"error_code\":\"not_found\""), "{}", r.body_str());
+}
+
+#[test]
+fn live_swap_drops_zero_requests_and_matches_a_cold_start() {
+    // Two versions, same geometry, different weights, one registry.
+    let reg = fresh_registry("swap_live");
+    let d1 = publish_pair(&reg, "m", "v1", &tiny_model(901), &tiny_model(902)).unwrap();
+    let d2 = publish_pair(&reg, "m", "v2", &tiny_model(911), &tiny_model(912)).unwrap();
+    assert_ne!(d1, d2);
+
+    let server = registry_booted(&reg, "m:v1");
+    let addr = Arc::new(server.addr().to_string());
+
+    let h = http_request(&addr, "GET", "/healthz", None).unwrap();
+    let j = Json::parse(h.body_str()).unwrap();
+    assert_eq!(j.get("model_digest").unwrap().as_str(), Some(d1.as_str()));
+    assert_eq!(j.get("model_generation").unwrap().as_usize(), Some(0));
+
+    // Concurrent seeded load across the swap: every request must be
+    // served (200) — the swap is not allowed to drop or error any.
+    let stop_load = Arc::new(std::sync::atomic::AtomicBool::new(false));
+    let clients: Vec<_> = (0..6)
+        .map(|c| {
+            let addr = Arc::clone(&addr);
+            let stop_load = Arc::clone(&stop_load);
+            std::thread::spawn(move || {
+                let mut served = 0u64;
+                while !stop_load.load(std::sync::atomic::Ordering::Relaxed) {
+                    let body = format!(
+                        r#"{{"history": {}, "horizon": 16, "seed": {}}}"#,
+                        hist_json(),
+                        1000 + c
+                    );
+                    let r = http_request(&addr, "POST", "/forecast", Some(body.as_bytes()))
+                        .expect("request across swap must not fail at the transport");
+                    assert_eq!(r.status, 200, "dropped during swap: {}", r.body_str());
+                    served += 1;
+                }
+                served
+            })
+        })
+        .collect();
+    std::thread::sleep(std::time::Duration::from_millis(50));
+
+    // Swap mid-load.
+    let r = http_request(&addr, "POST", "/admin/swap", Some(br#"{"model": "m:v2"}"#)).unwrap();
+    assert_eq!(r.status, 200, "{}", r.body_str());
+    let rep = Json::parse(r.body_str()).unwrap();
+    assert_eq!(rep.get("digest").unwrap().as_str(), Some(d2.as_str()));
+    assert_eq!(rep.get("complete").unwrap().as_bool(), Some(true));
+    assert_eq!(rep.get("generation").unwrap().as_usize(), Some(1));
+    assert_eq!(rep.get("rebound").unwrap().as_usize(), Some(2));
+    assert_eq!(rep.get("heads").unwrap().as_str(), Some("reset"));
+
+    std::thread::sleep(std::time::Duration::from_millis(50));
+    stop_load.store(true, std::sync::atomic::Ordering::Relaxed);
+    let total: u64 = clients.into_iter().map(|h| h.join().unwrap()).sum();
+    assert!(total > 0, "load loop never issued a request");
+
+    // Identity flipped everywhere it is reported.
+    let h = http_request(&addr, "GET", "/healthz", None).unwrap();
+    let j = Json::parse(h.body_str()).unwrap();
+    assert_eq!(j.get("model_digest").unwrap().as_str(), Some(d2.as_str()));
+    assert_eq!(j.get("model_generation").unwrap().as_usize(), Some(1));
+    let s = Json::parse(http_request(&addr, "GET", "/stats", None).unwrap().body_str()).unwrap();
+    let model = s.get("model").expect("stats model block");
+    assert_eq!(model.get("digest").unwrap().as_str(), Some(d2.as_str()));
+    assert_eq!(model.get("label").unwrap().as_str(), Some("m:v2"));
+    assert_eq!(model.get("swaps").unwrap().as_usize(), Some(1));
+    assert_eq!(model.get("swap_failures").unwrap().as_usize(), Some(0));
+    assert!(model.get("rebinds").unwrap().as_usize().unwrap() >= 2);
+    assert_eq!(model.get("rebind_failures").unwrap().as_usize(), Some(0));
+
+    // Post-swap responses are bit-identical to a cold start on v2: the
+    // swap left no residue in the serving numerics.
+    let hot = forecast_bits(&addr, 424242);
+    let cold = registry_booted(&reg, "m:v2");
+    let cold_bits = forecast_bits(&cold.addr().to_string(), 424242);
+    assert_eq!(hot, cold_bits, "post-swap decode must equal a cold start on the new manifest");
+}
+
+#[test]
+fn swap_failures_are_typed_and_leave_the_pool_serving() {
+    let (server, reg) = registry_host("swap_fail");
+    let addr = server.addr().to_string();
+
+    // Unknown reference: 404.
+    let r = http_request(&addr, "POST", "/admin/swap", Some(br#"{"model": "ghost:v9"}"#)).unwrap();
+    assert_eq!(r.status, 404, "{}", r.body_str());
+    assert!(r.body_str().contains("\"error_code\":\"not_found\""), "{}", r.body_str());
+
+    // Body without a model reference: 400.
+    let r = http_request(&addr, "POST", "/admin/swap", Some(br#"{"nope": 1}"#)).unwrap();
+    assert_eq!(r.status, 400, "{}", r.body_str());
+
+    // Geometry mismatch: a published pair with different dims is
+    // refused — a live swap cannot change model shape.
+    use stride::nn::{ModelDims, NativeModel};
+    let dims = ModelDims { patch: 2, n_ctx: 8, d_model: 8, n_layers: 1, n_heads: 2, d_ff: 16 };
+    let t = NativeModel::random("t", dims, 31);
+    let d = NativeModel::random("d", dims, 32);
+    publish_pair(&reg, "thin", "v1", &t, &d).unwrap();
+    let r = http_request(&addr, "POST", "/admin/swap", Some(br#"{"model": "thin:v1"}"#)).unwrap();
+    assert_eq!(r.status, 400, "{}", r.body_str());
+    assert!(r.body_str().contains("geometry"), "{}", r.body_str());
+
+    // Every failed swap was counted, none advanced the pool: it still
+    // answers on its boot weights under the builtin identity.
+    let s = Json::parse(http_request(&addr, "GET", "/stats", None).unwrap().body_str()).unwrap();
+    let model = s.get("model").expect("stats model block");
+    assert_eq!(model.get("swaps").unwrap().as_usize(), Some(0));
+    assert_eq!(model.get("swap_failures").unwrap().as_usize(), Some(2));
+    let h = http_request(&addr, "GET", "/healthz", None).unwrap();
+    let j = Json::parse(h.body_str()).unwrap();
+    assert_eq!(j.get("model_digest").unwrap().as_str(), Some("unregistered"));
+    assert_eq!(j.get("model_generation").unwrap().as_usize(), Some(0));
+    let bits = forecast_bits(&addr, 7);
+    assert!(!bits.is_empty());
+}

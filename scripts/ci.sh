@@ -120,6 +120,18 @@ if [[ "${1:-}" != "--no-bench" ]]; then
         echo "error: chaos_soak criteria not met" >&2
         exit 1
     fi
+
+    echo "== model_swap smoke (STRIDE_BENCH_QUICK=1) =="
+    # Live-swap criteria: zero requests dropped or errored across a
+    # mid-soak hot swap, swap-window p99 <= 2x steady-state, and the
+    # serving digest lands on the new manifest's content address with
+    # every replica rebound.
+    STRIDE_BENCH_QUICK=1 cargo bench --bench model_swap
+    check_bench_json results/BENCH_model_swap.json
+    if ! grep -q '"criteria_met":true' results/BENCH_model_swap.json; then
+        echo "error: model_swap criteria not met" >&2
+        exit 1
+    fi
 fi
 
 echo "CI OK"
