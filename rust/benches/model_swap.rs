@@ -102,6 +102,7 @@ fn request(i: usize) -> ForecastRequest {
         priority: Priority::Normal,
         deadline_ms: None,
         seed: Some(0x5A17_0000 + i as u64),
+        request_id: None,
     }
 }
 

@@ -14,14 +14,22 @@
 //! retained sequential extend/rollback reference — each pair's bit
 //! identity is asserted **in-bench** before timing, and the JSON record
 //! carries a `criteria_met` verdict that scripts/ci.sh gates on.
+//!
+//! Flight-recorder PR addition: `trace_overhead` — the same SD decode
+//! untraced vs under an installed round observer feeding a live
+//! `TraceSink`. The decode must be bit-identical either way (tracing
+//! can observe, never perturb) and the traced mean must stay within 5%
+//! of untraced; both verdicts fold into `criteria_met`.
 
+use std::sync::Arc;
 use std::time::Duration;
 
 use stride::accept::AcceptancePolicy;
 use stride::forecast::ar_decode_with;
 use stride::models::{Backend, CacheMode, DecodeSession, NativeBackend};
 use stride::nn::{ModelDims, NativeModel};
-use stride::specdec::{sd_generate, SpecConfig};
+use stride::specdec::{sd_generate, with_round_observer, RoundObserver, RoundStats, SpecConfig};
+use stride::trace::{EventKind, TraceSink, MAX_TRACE_ALPHAS};
 use stride::util::microbench::{bencher_from_env, Bencher, Table};
 use stride::util::rng::Rng;
 use stride::util::tensor::{matmul, matmul_parallel, matmul_tiled, set_scalar_kernel};
@@ -76,6 +84,10 @@ fn main() -> anyhow::Result<()> {
         forecast: (0..96).map(|i| i as f32).collect(),
         mode: "sd".into(),
         draft: "model".into(),
+        priority: "normal".into(),
+        replica: 0,
+        seed: 42,
+        request_id: 0xc0ffee,
         latency_ms: 1.0,
         alpha_hat: 0.97,
         mean_block_len: 3.4,
@@ -351,6 +363,69 @@ fn main() -> anyhow::Result<()> {
             );
         });
 
+        // --- Flight-recorder overhead: the tracing PR's contract. With
+        // no observer installed the engines pay one TLS None-check per
+        // round; with an observer feeding a live TraceSink the decode
+        // must (a) stay bit-identical — tracing observes, never
+        // perturbs — and (b) cost < 5% wall-clock on a full SD decode.
+        struct SinkObserver {
+            sink: Arc<TraceSink>,
+        }
+        impl RoundObserver for SinkObserver {
+            fn on_round(&self, seq: usize, r: &RoundStats) {
+                let fan = r.branches.max(1);
+                let n_alphas = r.alphas.len().min(MAX_TRACE_ALPHAS);
+                let mut alphas = [0.0f32; MAX_TRACE_ALPHAS];
+                for (dst, src) in alphas.iter_mut().zip(r.alphas.iter()) {
+                    *dst = *src as f32;
+                }
+                self.sink.record_span_ending_now(
+                    seq as u64 + 1,
+                    r.draft_time + r.target_time,
+                    EventKind::Round {
+                        round: 0,
+                        gamma: r.gamma.min(u8::MAX as usize) as u8,
+                        k: fan.min(u8::MAX as usize) as u8,
+                        draft: 0,
+                        proposed: (r.gamma * fan).min(u16::MAX as usize) as u16,
+                        accepted: r.accepted.min(u16::MAX as usize) as u16,
+                        rollback: r.gamma.saturating_sub(r.accepted).min(u16::MAX as usize) as u16,
+                        residual: r.residual_draws.min(u16::MAX as usize) as u16,
+                        draft_ns: r.draft_time.as_nanos() as u64,
+                        target_ns: r.target_time.as_nanos() as u64,
+                        n_alphas: n_alphas as u8,
+                        alphas,
+                    },
+                );
+            }
+        }
+        let sink = Arc::new(TraceSink::new(4096));
+        let obs: Arc<dyn RoundObserver> = Arc::new(SinkObserver { sink: Arc::clone(&sink) });
+        let out_plain = sd_generate(&target, &draft, &hist, n_hist, 16, &spec)?;
+        let out_traced = with_round_observer(Arc::clone(&obs), || {
+            sd_generate(&target, &draft, &hist, n_hist, 16, &spec)
+        })?;
+        let trace_identical = out_plain.patches.len() == out_traced.patches.len()
+            && out_plain
+                .patches
+                .iter()
+                .zip(&out_traced.patches)
+                .all(|(x, y)| x.to_bits() == y.to_bits());
+        anyhow::ensure!(trace_identical, "decode under a round observer drifted bitwise");
+        anyhow::ensure!(sink.recorded() > 0, "the observer never reached the sink");
+        let r_untraced = kb.run("sd_decode_untraced", || {
+            std::hint::black_box(sd_generate(&target, &draft, &hist, n_hist, 16, &spec).unwrap());
+        });
+        let r_traced = kb.run("sd_decode_traced", || {
+            with_round_observer(Arc::clone(&obs), || {
+                std::hint::black_box(
+                    sd_generate(&target, &draft, &hist, n_hist, 16, &spec).unwrap(),
+                );
+            });
+        });
+        let trace_overhead = (r_traced.mean_ns - r_untraced.mean_ns) / r_untraced.mean_ns;
+        let trace_overhead_ok = trace_overhead < 0.05;
+
         let mut ktab = Table::new(
             "Perf: kernel layer (packed/arena/blocked vs naive reference)",
             &["op", "naive", "packed", "speedup"],
@@ -398,6 +473,12 @@ fn main() -> anyhow::Result<()> {
             ms(r_vstack.mean_ns),
             format!("{:.2}x", r_vseq.mean_ns / r_vstack.mean_ns),
         ]);
+        ktab.row(vec![
+            "SD decode (untraced->traced)".into(),
+            ms(r_untraced.mean_ns),
+            ms(r_traced.mean_ns),
+            format!("{:+.2}%", trace_overhead * 100.0),
+        ]);
         ktab.print();
 
         // Machine-readable record for CI and the perf trajectory. Every
@@ -417,14 +498,23 @@ fn main() -> anyhow::Result<()> {
             r_mm_tiled.mean_ns,
             r_vseq.mean_ns,
             r_vstack.mean_ns,
+            r_untraced.mean_ns,
+            r_traced.mean_ns,
         ];
         let all_finite = vals.iter().all(|v| v.is_finite() && *v > 0.0);
         anyhow::ensure!(all_finite, "kernel bench produced non-finite timings: {vals:?}");
         // `criteria_met` is the CI gate (scripts/ci.sh greps for it):
-        // every before/after pair in this record is bitwise identical and
-        // every timing is finite. The speedups themselves are informative
-        // (they vary with the host); the identity is the contract.
-        let criteria_met = all_finite && simd_identical && tiled_identical && stacked_identical;
+        // every before/after pair in this record is bitwise identical,
+        // every timing is finite, and the flight recorder's observed
+        // decode is both bit-identical and within its 5% overhead
+        // budget. The speedups themselves are informative (they vary
+        // with the host); the identity is the contract.
+        let criteria_met = all_finite
+            && simd_identical
+            && tiled_identical
+            && stacked_identical
+            && trace_identical
+            && trace_overhead_ok;
         let json = format!(
             concat!(
                 "{{\n",
@@ -441,8 +531,11 @@ fn main() -> anyhow::Result<()> {
                 "\"tiled\": {ti_ns:.0}, \"speedup\": {si_sp:.3}}},\n",
                 "  \"stacked_verify_ns\": {{\"sequential\": {vq_ns:.0}, \"stacked\": {vk_ns:.0}, ",
                 "\"speedup\": {vk_sp:.3}, \"k\": {kb_k}, \"gamma\": {kb_g}}},\n",
+                "  \"trace_overhead\": {{\"untraced_ns\": {tr_u:.0}, \"traced_ns\": {tr_t:.0}, ",
+                "\"overhead_frac\": {tr_f:.4}, \"events_recorded\": {tr_n}}},\n",
                 "  \"criteria\": {{\"all_finite\": {fin}, \"simd_bitwise_identical\": {sid}, ",
                 "\"tiled_bitwise_identical\": {tid}, \"stacked_bitwise_identical\": {std_}, ",
+                "\"trace_bitwise_identical\": {trid}, \"trace_overhead_ok\": {trok}, ",
                 "\"criteria_met\":{met}}}\n",
                 "}}\n"
             ),
@@ -475,10 +568,16 @@ fn main() -> anyhow::Result<()> {
             vk_sp = r_vseq.mean_ns / r_vstack.mean_ns,
             kb_k = k_branches,
             kb_g = gamma,
+            tr_u = r_untraced.mean_ns,
+            tr_t = r_traced.mean_ns,
+            tr_f = trace_overhead,
+            tr_n = sink.recorded(),
             fin = all_finite,
             sid = simd_identical,
             tid = tiled_identical,
             std_ = stacked_identical,
+            trid = trace_identical,
+            trok = trace_overhead_ok,
             met = criteria_met,
         );
         std::fs::create_dir_all("results")?;

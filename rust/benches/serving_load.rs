@@ -155,6 +155,7 @@ fn request(i: usize, with_deadline: bool) -> ForecastRequest {
             None
         },
         seed: Some(0x5EED_0000 + i as u64),
+        request_id: None,
     }
 }
 

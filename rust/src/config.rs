@@ -252,6 +252,14 @@ pub struct ServeConfig {
     /// with a typed 413 (`body_too_large`), never silently dropped.
     /// Registry pushes are the legitimate large-body traffic this guards.
     pub max_body_bytes: usize,
+    /// Flight-recorder ring capacity in events (`--trace-capacity`,
+    /// config `"trace"`). 0 (the default) disables tracing entirely: no
+    /// [`crate::trace::TraceSink`] is constructed and serving is
+    /// bit-identical to a build without the recorder. Nonzero
+    /// preallocates the ring at startup (rounded up to a multiple of
+    /// [`crate::trace::TRACE_SHARDS`]); recording never allocates or
+    /// blocks — a full ring overwrites oldest and counts the drop.
+    pub trace_capacity: usize,
 }
 
 impl Default for ServeConfig {
@@ -288,6 +296,7 @@ impl Default for ServeConfig {
             registry_model: None,
             swap_heads: SwapHeads::Reset,
             max_body_bytes: crate::http::DEFAULT_MAX_BODY_BYTES,
+            trace_capacity: 0,
         }
     }
 }
@@ -353,6 +362,25 @@ impl ServeConfig {
                 "max_body_bytes" => {
                     self.max_body_bytes = v.as_usize().context("max_body_bytes")?
                 }
+                "trace" => match v {
+                    // Shorthand: "trace": 4096.
+                    Json::Num(_) => {
+                        self.trace_capacity = v.as_usize().context("trace")?;
+                    }
+                    // Block form: "trace": {"capacity": 4096}.
+                    Json::Obj(m) => {
+                        for (tk, tv) in m {
+                            match tk.as_str() {
+                                "capacity" => {
+                                    self.trace_capacity =
+                                        tv.as_usize().context("trace.capacity")?
+                                }
+                                other => bail!("unknown trace config key: {other}"),
+                            }
+                        }
+                    }
+                    _ => bail!("'trace' must be a capacity number or an object"),
+                },
                 other => bail!("unknown config key: {other}"),
             }
         }
@@ -570,6 +598,9 @@ impl ServeConfig {
         }
         if let Some(v) = cli.get_usize("max-body-bytes")? {
             self.max_body_bytes = v;
+        }
+        if let Some(v) = cli.get_usize("trace-capacity")? {
+            self.trace_capacity = v;
         }
         self.validate()
     }
@@ -1079,6 +1110,34 @@ mod tests {
         cfg.validate().unwrap();
         cfg.fault.p_blob_corrupt = 1.5;
         assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn trace_plumbing() {
+        // Default: tracing off.
+        let cfg = ServeConfig::default();
+        assert_eq!(cfg.trace_capacity, 0);
+
+        // JSON shorthand and block forms.
+        let mut cfg = ServeConfig::default();
+        cfg.apply_json(&Json::parse(r#"{"trace": 4096}"#).unwrap()).unwrap();
+        assert_eq!(cfg.trace_capacity, 4096);
+        let mut cfg = ServeConfig::default();
+        cfg.apply_json(&Json::parse(r#"{"trace": {"capacity": 512}}"#).unwrap()).unwrap();
+        assert_eq!(cfg.trace_capacity, 512);
+        cfg.validate().unwrap();
+
+        // CLI form wins.
+        cfg.apply_cli(&Cli::parse(args("--trace-capacity 1024")).unwrap()).unwrap();
+        assert_eq!(cfg.trace_capacity, 1024);
+
+        // Bad values.
+        let mut cfg = ServeConfig::default();
+        assert!(cfg.apply_json(&Json::parse(r#"{"trace": "big"}"#).unwrap()).is_err());
+        let mut cfg = ServeConfig::default();
+        assert!(cfg
+            .apply_json(&Json::parse(r#"{"trace": {"slots": 4}}"#).unwrap())
+            .is_err());
     }
 
     #[test]

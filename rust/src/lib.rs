@@ -136,6 +136,21 @@
 //!   `"draining"`). `tests/fault_injection.rs` is the chaos suite;
 //!   `benches/chaos_soak.rs` pins no-hang/no-NaN/bounded-recovery in
 //!   `results/BENCH_chaos_soak.json`.
+//! * [`trace`] — the **flight recorder**: a config-gated
+//!   (`--trace-capacity`), fixed-capacity ring of typed serving events.
+//!   Every request carries a seeded `request_id` (echoed in the JSON
+//!   body and `X-Request-Id`, client-overridable) and leaves a full
+//!   timeline — admission, queue-wait span, each speculative round's
+//!   (γ, k, per-proposal α, draft-vs-verify ns), reply — alongside
+//!   control-plane events (retunes, breaker flips, replica restarts,
+//!   steals, swap generations). `GET /debug/trace` exports the ring as
+//!   Chrome trace-event JSON (`chrome://tracing` / Perfetto),
+//!   `GET /debug/requests/<id>` reconstructs one request, `/stats`
+//!   reports recorded/dropped. Disabled tracing constructs nothing and
+//!   serves bit-identically ([`specdec::with_round_observer`] is the
+//!   engine-side hook: a thread-local checked once per round);
+//!   enabled tracing never allocates per event (fixed `Copy` ring
+//!   slots; overflow overwrites oldest, exactly counted).
 //! * [`registry`] — the **content-addressed model registry**: versioned
 //!   manifests (per-blob SHA-256 over a hand-rolled FIPS-checked
 //!   [`registry::digest`]), a digest-keyed blob cache, push/pull over
@@ -175,6 +190,7 @@ pub mod runtime;
 pub mod server;
 pub mod specdec;
 pub mod theory;
+pub mod trace;
 pub mod util;
 pub mod xla;
 

@@ -87,12 +87,24 @@ impl Metrics {
     /// Served requests report met/missed by latency; **shed and expired
     /// requests count as missed** — the SLO is about what the client
     /// experienced, not about what happened to decode.
+    ///
+    /// The increments and the per-priority reads happen under **one**
+    /// counters-lock acquisition: taking the lock per operation would
+    /// let a concurrent outcome interleave between this outcome's
+    /// increment and its read, publishing an attainment computed from
+    /// torn counts (and, worse, letting the *stale* computation win the
+    /// gauge race after the fresher one).
     pub fn record_deadline_outcome(&self, prio: &str, met: bool) {
         let which = if met { "met" } else { "missed" };
-        self.inc(if met { "deadline_met" } else { "deadline_missed" }, 1);
-        self.inc(&format!("deadline_{which}_{prio}"), 1);
-        let met_n = self.counter(&format!("deadline_met_{prio}"));
-        let miss_n = self.counter(&format!("deadline_missed_{prio}"));
+        let mut c = self.counters.lock().unwrap();
+        *c.entry(if met { "deadline_met" } else { "deadline_missed" }.to_string())
+            .or_insert(0) += 1;
+        *c.entry(format!("deadline_{which}_{prio}")).or_insert(0) += 1;
+        let met_n = c.get(&format!("deadline_met_{prio}")).copied().unwrap_or(0);
+        let miss_n = c.get(&format!("deadline_missed_{prio}")).copied().unwrap_or(0);
+        // Publish under the counters lock (counters → gauges is the only
+        // nested order anywhere; render() takes them sequentially), so
+        // the gauge always reflects the latest consistent snapshot.
         if met_n + miss_n > 0 {
             self.set_gauge(
                 &format!("slo_attainment_{prio}"),
@@ -168,7 +180,15 @@ pub struct AcceptanceMonitor {
 struct MonitorState {
     alphas: std::collections::VecDeque<f64>,
     sum: f64,
+    /// Evictions since `sum` was last recomputed from the deque. The
+    /// incremental `+=`/`-=` running sum accumulates float error across
+    /// millions of records; every [`SUM_REFRESH_EVICTIONS`] evictions the
+    /// sum is rebuilt exactly from the live window, bounding drift.
+    evictions: usize,
 }
+
+/// Evictions between exact running-sum rebuilds in [`AcceptanceMonitor`].
+const SUM_REFRESH_EVICTIONS: usize = 1024;
 
 impl AcceptanceMonitor {
     /// Monitor over the last `window` per-request acceptance means,
@@ -176,7 +196,11 @@ impl AcceptanceMonitor {
     pub fn new(window: usize, alert_threshold: f64) -> AcceptanceMonitor {
         AcceptanceMonitor {
             window,
-            inner: Mutex::new(MonitorState { alphas: Default::default(), sum: 0.0 }),
+            inner: Mutex::new(MonitorState {
+                alphas: Default::default(),
+                sum: 0.0,
+                evictions: 0,
+            }),
             alert_threshold,
         }
     }
@@ -189,6 +213,14 @@ impl AcceptanceMonitor {
         if s.alphas.len() > self.window {
             if let Some(old) = s.alphas.pop_front() {
                 s.sum -= old;
+            }
+            s.evictions += 1;
+            // Periodic exact rebuild: long-lived windows otherwise drift
+            // (catastrophic cancellation in += / -= over millions of
+            // records), and alpha_bar feeds γ recommendations.
+            if s.evictions >= SUM_REFRESH_EVICTIONS {
+                s.evictions = 0;
+                s.sum = s.alphas.iter().sum();
             }
         }
     }
@@ -304,6 +336,25 @@ mod tests {
         assert!((mon.alpha_bar() - 0.5).abs() < 1e-12); // 0,0,1,1
         mon.record(1.0);
         assert!(mon.alpha_bar() > 0.7);
+    }
+
+    #[test]
+    fn monitor_sum_rebuild_bounds_drift() {
+        // A catastrophic-cancellation victim: 1e15 swallows 1e-3 in the
+        // running sum, so after the big value is evicted the incremental
+        // sum is off by the entire small-value mass. The periodic exact
+        // rebuild (every SUM_REFRESH_EVICTIONS evictions) must restore
+        // alpha_bar to the true window mean.
+        let mon = AcceptanceMonitor::new(2, 0.0);
+        mon.record(1e15);
+        for _ in 0..(2 * SUM_REFRESH_EVICTIONS) {
+            mon.record(1e-3);
+        }
+        assert!(
+            (mon.alpha_bar() - 1e-3).abs() < 1e-15,
+            "alpha_bar drifted: {}",
+            mon.alpha_bar()
+        );
     }
 
     #[test]

@@ -51,8 +51,10 @@ use crate::registry::{self, Registry};
 use crate::runtime::{Engine, Manifest};
 use crate::specdec::{
     make_batch_source, make_source, sd_generate_stream_seeded, sd_generate_tree_from,
-    ControllerState, DecodeStats, DraftKind, GammaController, SpecConfig,
+    with_round_observer, ControllerState, DecodeStats, DraftKind, GammaController, RoundObserver,
+    RoundStats, SpecConfig,
 };
+use crate::trace::{EventKind, TraceSink, MAX_TRACE_ALPHAS};
 
 /// Lock a shared mutex, tolerating poison: a replica panic (induced by
 /// the chaos plan or a real bug) must not brick the fleet's controller
@@ -105,6 +107,11 @@ pub struct BatcherHandle {
     /// The live fault-injection schedule, when chaos is armed
     /// (`ServeConfig::fault.enabled`). `/stats` reports its counters.
     pub fault: Option<Arc<FaultPlan>>,
+    /// The flight recorder, when `ServeConfig::trace_capacity > 0`
+    /// (`None` = tracing disabled and every trace site is a no-op).
+    /// `/debug/trace` and `/debug/requests/<id>` render it; `/stats`
+    /// reports its counters.
+    pub trace: Option<Arc<TraceSink>>,
 }
 
 impl BatcherHandle {
@@ -112,8 +119,36 @@ impl BatcherHandle {
     /// Admission failures (shed / invalid) return immediately; admitted
     /// jobs wait for their replica's reply.
     pub fn forecast(&self, req: ForecastRequest) -> Result<ForecastResponse, ServeError> {
+        self.forecast_with_id(req).1
+    }
+
+    /// [`BatcherHandle::forecast`], additionally returning the request's
+    /// id (client-supplied, or assigned here) — the HTTP layer stamps it
+    /// into `X-Request-Id` and error bodies even when the request fails
+    /// before a response object exists.
+    pub fn forecast_with_id(
+        &self,
+        req: ForecastRequest,
+    ) -> (u64, Result<ForecastResponse, ServeError>) {
         self.metrics.requests_total.fetch_add(1, Ordering::Relaxed);
         let mut req = req;
+        // Request identity: every request carries an id from admission
+        // to reply (trace events, the response body, and `X-Request-Id`
+        // all agree on it). Client-supplied ids are kept; assigned ids
+        // follow the same splitmix discipline as decode seeds, so a
+        // seeded server hands out a deterministic id sequence. Id 0 is
+        // reserved for control-plane trace events and never assigned.
+        if req.request_id.is_none() {
+            static RID_SEQ: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(0);
+            req.request_id = Some(
+                self.cfg
+                    .seed
+                    .wrapping_add(RID_SEQ.fetch_add(1, Ordering::Relaxed))
+                    .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+                    .max(1),
+            );
+        }
+        let rid = req.request_id.unwrap_or(0);
         // Seed discipline: a request that pins a seed is exactly
         // reproducible (bit-identical to `sd_generate_from` at that
         // seed, any replica count). Unseeded requests get a fresh
@@ -131,7 +166,10 @@ impl BatcherHandle {
                     .wrapping_mul(0x9E37_79B9_7F4A_7C15),
             );
         }
-        let key = self.group_key(&req)?;
+        let key = match self.group_key(&req) {
+            Ok(k) => k,
+            Err(e) => return (rid, Err(e)),
+        };
         let priority = req.priority;
         let deadline_ms = req.deadline_ms.or(if self.cfg.default_deadline_ms > 0 {
             Some(self.cfg.default_deadline_ms)
@@ -139,12 +177,31 @@ impl BatcherHandle {
             None
         });
         let (tx, rx) = mpsc::sync_channel(1);
-        let job = Job { req, enqueued: Instant::now(), reply: tx };
-        self.queue.admit(job, priority, deadline_ms, key)?;
-        match rx.recv_timeout(Duration::from_secs(120)) {
+        let enqueued = Instant::now();
+        let job = Job { req, enqueued, reply: tx };
+        if let Err(e) = self.queue.admit(job, priority, deadline_ms, key) {
+            return (rid, Err(e));
+        }
+        let result = match rx.recv_timeout(Duration::from_secs(120)) {
             Ok(r) => r,
             Err(_) => Err(ServeError::Internal("engine timeout".into())),
+        };
+        // The request's root span: admission to reply, tagged with the
+        // outcome. Shed/expired requests already carried their terminal
+        // event from the queue; this span still lands for them, so every
+        // admitted request's timeline ends the same way.
+        if let Some(t) = &self.shared.trace {
+            let (ok, status, rounds) = match &result {
+                Ok(r) => (true, 200u16, r.rounds as u32),
+                Err(e) => (false, e.http_status(), 0),
+            };
+            t.record_span_ending_now(
+                rid,
+                enqueued.elapsed(),
+                EventKind::Replied { ok, status, rounds },
+            );
         }
+        (rid, result)
     }
 
     /// Compute the request's decode-compatibility group (and reject the
@@ -342,6 +399,9 @@ impl BatcherHandle {
             }
         }
         let generation = self.slot.swap(builder, &digest, &label);
+        if let Some(t) = &self.shared.trace {
+            t.record(0, EventKind::Swap { generation });
+        }
         self.queue.bump_epoch();
         let complete =
             self.slot.wait_generation(generation, self.cfg.replicas, SWAP_BARRIER_TIMEOUT);
@@ -454,12 +514,22 @@ fn start_engine_with_slot(
     } else {
         None
     };
+    // Construct the flight recorder only when configured: with
+    // `trace_capacity = 0` (the default) no sink exists, every trace
+    // call site is an `if let` on `None`, and serving is bit-identical
+    // to an untraced build (the FaultPlan gating pattern).
+    let trace = if cfg.trace_capacity > 0 {
+        Some(Arc::new(TraceSink::new(cfg.trace_capacity)))
+    } else {
+        None
+    };
     let cfg = Arc::new(cfg);
     let queue = Arc::new(AdmissionQueue::new(
         cfg.queue_cap,
         cfg.sched,
         cfg.retry_after_ms,
         metrics.clone(),
+        trace.clone(),
         Arc::clone(&stop),
     ));
     let shared = Arc::new(SchedShared {
@@ -468,6 +538,7 @@ fn start_engine_with_slot(
         controller: controller.clone(),
         draft_heads: Mutex::new(BTreeMap::new()),
         fault_plan: fault.clone(),
+        trace: trace.clone(),
     });
     // Pre-register the fault-tolerance ledger so `/metrics` scrapes see
     // the counters (at 0) and the breaker gauge before any fault fires.
@@ -507,6 +578,7 @@ fn start_engine_with_slot(
             controller,
             draft: draft_kind,
             fault,
+            trace,
         },
         handles,
     ))
@@ -617,6 +689,60 @@ fn observe_served(shared: &SchedShared, qj: &QueuedJob, latency: Duration) {
     }
 }
 
+/// Maps engine round callbacks back to request ids and forwards each
+/// completed speculative round into the flight recorder. Installed
+/// thread-locally around one decode (`rids[seq]` is the request in
+/// batch task order); the per-sequence round counters are fixed-size,
+/// so observing allocates nothing after construction.
+struct TraceRoundObserver {
+    sink: Arc<TraceSink>,
+    /// Request id per in-batch sequence index.
+    rids: Vec<u64>,
+    /// Draft-source code for the whole group (groups are draft-keyed).
+    draft: u8,
+    /// Per-sequence 0-based round counters.
+    rounds: Vec<std::sync::atomic::AtomicU32>,
+}
+
+impl TraceRoundObserver {
+    fn new(sink: Arc<TraceSink>, rids: Vec<u64>, kind: DraftKind) -> TraceRoundObserver {
+        let rounds = (0..rids.len()).map(|_| std::sync::atomic::AtomicU32::new(0)).collect();
+        TraceRoundObserver { sink, rids, draft: kind as u8, rounds }
+    }
+}
+
+impl RoundObserver for TraceRoundObserver {
+    fn on_round(&self, seq: usize, r: &RoundStats) {
+        let rid = self.rids.get(seq).copied().unwrap_or(0);
+        let round =
+            self.rounds.get(seq).map(|c| c.fetch_add(1, Ordering::Relaxed)).unwrap_or(0);
+        let fan = r.branches.max(1);
+        let mut alphas = [0.0f32; MAX_TRACE_ALPHAS];
+        let n_alphas = r.alphas.len().min(MAX_TRACE_ALPHAS);
+        for (dst, src) in alphas.iter_mut().zip(&r.alphas) {
+            *dst = *src as f32;
+        }
+        self.sink.record_span_ending_now(
+            rid,
+            r.draft_time + r.target_time,
+            EventKind::Round {
+                round,
+                gamma: r.gamma.min(u8::MAX as usize) as u8,
+                k: fan.min(u8::MAX as usize) as u8,
+                draft: self.draft,
+                proposed: (r.gamma * fan).min(u16::MAX as usize) as u16,
+                accepted: r.accepted.min(u16::MAX as usize) as u16,
+                rollback: r.gamma.saturating_sub(r.accepted).min(u16::MAX as usize) as u16,
+                residual: r.residual_draws.min(u16::MAX as usize) as u16,
+                draft_ns: r.draft_time.as_nanos() as u64,
+                target_ns: r.target_time.as_nanos() as u64,
+                n_alphas: n_alphas as u8,
+                alphas,
+            },
+        );
+    }
+}
+
 /// Sentinel: no single job is decoding right now.
 const CURRENT_NONE: usize = usize::MAX;
 /// Sentinel: the whole group is decoding in lockstep — a panic has no
@@ -694,6 +820,7 @@ impl GroupRun {
         queue: &AdmissionQueue,
         shared: &SchedShared,
         panic_msg: &str,
+        replica: usize,
     ) {
         let current = self.current.load(Ordering::Relaxed);
         let taken: Vec<(usize, QueuedJob)> = {
@@ -708,6 +835,12 @@ impl GroupRun {
             if i == current || qj.requeued {
                 shared.metrics.inc("replica_failures", 1);
                 shared.metrics.errors_total.fetch_add(1, Ordering::Relaxed);
+                if let Some(t) = &shared.trace {
+                    t.record(
+                        qj.job.req.request_id.unwrap_or(0),
+                        EventKind::ReplicaFailed { replica: replica as u32 },
+                    );
+                }
                 let _ = qj.job.reply.send(Err(ServeError::ReplicaFailure(format!(
                     "replica panicked during decode: {panic_msg}"
                 ))));
@@ -719,8 +852,28 @@ impl GroupRun {
 }
 
 /// Push the controller's current state to the gauge set (shared by the
-/// lockstep, tree, and breaker-fallback paths).
-fn publish_controller(metrics: &Metrics, s: &ControllerState) {
+/// lockstep, tree, and breaker-fallback paths). With tracing enabled,
+/// operating-point movement relative to the previously published gauges
+/// also lands in the flight recorder as control-plane `retune`/`breaker`
+/// events (best-effort: two replicas publishing concurrently may both
+/// record the same transition — duplicates in a debug ring beat a lock
+/// around every publish).
+fn publish_controller(shared: &SchedShared, s: &ControllerState) {
+    let metrics = &shared.metrics;
+    if let Some(t) = &shared.trace {
+        let moved = metrics.gauge("controller_gamma") != Some(s.gamma as f64)
+            || metrics.gauge("controller_k") != Some(s.k as f64);
+        if moved {
+            t.record(0, EventKind::Retune {
+                gamma: s.gamma.min(u8::MAX as usize) as u8,
+                k: s.k.min(u8::MAX as usize) as u8,
+            });
+        }
+        let breaker = s.breaker.gauge();
+        if metrics.gauge("breaker_state") != Some(breaker) {
+            t.record(0, EventKind::Breaker { state: breaker as u8 });
+        }
+    }
     metrics.set_gauge("controller_gamma", s.gamma as f64);
     metrics.set_gauge("controller_k", s.k as f64);
     metrics.set_gauge("controller_alpha_hat", s.alpha_hat);
@@ -751,7 +904,7 @@ fn note_decode_failure(
         c.note_numeric_fault();
         let s = c.state();
         drop(c);
-        publish_controller(&shared.metrics, &s);
+        publish_controller(shared, &s);
     }
 }
 
@@ -871,8 +1024,23 @@ fn run_sd_group(
     // identifiable owner, so the group sentinel sends every unreplied
     // job down the supervisor's requeue-once path.
     run.mark(CURRENT_GROUP);
-    let decoded =
-        sd_generate_stream_seeded(target, source.as_mut(), &tasks, &seeds, usize::MAX, spec);
+    let decoded = match &shared.trace {
+        Some(sink) => {
+            // `ok` is in task order, which is exactly the sequence order
+            // the batched engine reports rounds under.
+            let rids: Vec<u64> = ok
+                .iter()
+                .map(|(i, ..)| {
+                    run.with(*i, |qj| qj.job.req.request_id.unwrap_or(0)).unwrap_or(0)
+                })
+                .collect();
+            let obs = Arc::new(TraceRoundObserver::new(Arc::clone(sink), rids, spec.draft.kind));
+            with_round_observer(obs, || {
+                sd_generate_stream_seeded(target, source.as_mut(), &tasks, &seeds, usize::MAX, spec)
+            })
+        }
+        None => sd_generate_stream_seeded(target, source.as_mut(), &tasks, &seeds, usize::MAX, spec),
+    };
     run.clear_mark();
     match decoded {
         Ok(outs) => {
@@ -893,7 +1061,7 @@ fn run_sd_group(
                 }
                 let s = c.state();
                 drop(c);
-                publish_controller(metrics, &s);
+                publish_controller(shared, &s);
             }
             // Per-draft-source serving aggregates (see PR 4): EWMA α̂/c
             // per kind plus monotone decode/update counts.
@@ -911,6 +1079,8 @@ fn run_sd_group(
                 let latency = qj.job.enqueued.elapsed();
                 observe_served(shared, &qj, latency);
                 metrics.observe("decode_latency", batch_wall);
+                metrics.observe("draft_compute", out.stats.draft_time);
+                metrics.observe("verify_compute", out.stats.target_time);
                 metrics
                     .patches_total
                     .fetch_add(out.patches.len() as u64 / shape.patch as u64, Ordering::Relaxed);
@@ -922,6 +1092,7 @@ fn run_sd_group(
                     forecast: out.patches,
                     mode: "sd".into(),
                     draft: spec.draft.kind.as_str().into(),
+                    request_id: qj.job.req.request_id.unwrap_or(0),
                     priority: qj.priority.as_str().into(),
                     replica,
                     seed,
@@ -994,6 +1165,7 @@ fn run_ar_fallback_group(
                     forecast: pred,
                     mode: "sd".into(),
                     draft: kind.as_str().into(),
+                    request_id: qj.job.req.request_id.unwrap_or(0),
                     priority: qj.priority.as_str().into(),
                     replica,
                     seed,
@@ -1019,7 +1191,7 @@ fn run_ar_fallback_group(
         c.tick_fallback(rounds_total);
         let s = c.state();
         drop(c);
-        publish_controller(metrics, &s);
+        publish_controller(shared, &s);
     }
 }
 
@@ -1079,8 +1251,20 @@ fn run_tree_group(
         // Tree decodes are per-job: a panic mid-decode poisons exactly
         // this slot (the supervisor fails it typed, requeues the rest).
         run.mark(i);
-        let decoded =
-            sd_generate_tree_from(target, source.as_mut(), &hist, n_hist, horizon, &job_spec);
+        let decoded = match &shared.trace {
+            Some(sink) => {
+                let rid = run.with(i, |qj| qj.job.req.request_id.unwrap_or(0)).unwrap_or(0);
+                let obs = Arc::new(TraceRoundObserver::new(
+                    Arc::clone(sink),
+                    vec![rid],
+                    spec.draft.kind,
+                ));
+                with_round_observer(obs, || {
+                    sd_generate_tree_from(target, source.as_mut(), &hist, n_hist, horizon, &job_spec)
+                })
+            }
+            None => sd_generate_tree_from(target, source.as_mut(), &hist, n_hist, horizon, &job_spec),
+        };
         run.clear_mark();
         match decoded {
             Ok(out) => {
@@ -1107,7 +1291,7 @@ fn run_tree_group(
                     }
                     let s = c.state();
                     drop(c);
-                    publish_controller(metrics, &s);
+                    publish_controller(shared, &s);
                 }
                 metrics.inc(&format!("draft_{kind}_decodes"), 1);
                 metrics.inc(&format!("draft_{kind}_updates"), out.stats.draft_updates as u64);
@@ -1116,6 +1300,8 @@ fn run_tree_group(
                 let latency = qj.job.enqueued.elapsed();
                 observe_served(shared, &qj, latency);
                 metrics.observe("decode_latency", wall);
+                metrics.observe("draft_compute", out.stats.draft_time);
+                metrics.observe("verify_compute", out.stats.target_time);
                 metrics
                     .patches_total
                     .fetch_add(out.patches.len() as u64 / shape.patch as u64, Ordering::Relaxed);
@@ -1127,6 +1313,7 @@ fn run_tree_group(
                     forecast: out.patches,
                     mode: "sd".into(),
                     draft: kind.into(),
+                    request_id: qj.job.req.request_id.unwrap_or(0),
                     priority: qj.priority.as_str().into(),
                     replica,
                     seed: job_spec.seed,
@@ -1198,6 +1385,7 @@ fn run_single(
                 // AR modes draft nothing; the field names the proposal
                 // source of SD decodes only.
                 draft: String::new(),
+                request_id: qj.job.req.request_id.unwrap_or(0),
                 priority: qj.priority.as_str().into(),
                 replica,
                 seed,

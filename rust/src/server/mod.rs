@@ -4,7 +4,10 @@
 //! * `POST /forecast` — forecast request (see [`protocol`]). Errors are
 //!   typed: 429 + `Retry-After` when shed by the bounded admission
 //!   queue, 504 when a deadline expired before decoding, 400 for
-//!   invalid requests, 500 for decode failures.
+//!   invalid requests, 500 for decode failures. Every reply — success
+//!   or error — carries the request's id in `X-Request-Id` (and in the
+//!   body); clients may supply their own via the JSON `"request_id"`
+//!   field or the `X-Request-Id` header (the body wins).
 //! * `GET  /healthz`  — **readiness** probe: HTTP 200 `"ready": true`
 //!   normally, HTTP 503 `"ready": false` while the admission queue is
 //!   saturated or the server is draining ahead of shutdown (external
@@ -17,7 +20,14 @@
 //!   replicas, queue depth/cap, shed/expired/steal counts, per-priority
 //!   latency and SLO attainment — and the `"faults"` block: injected
 //!   chaos counters, replica restarts, requeues, numeric faults, and
-//!   the speculation circuit breaker's state).
+//!   the speculation circuit breaker's state — plus the `"trace"`
+//!   block: flight-recorder enablement, capacity, and exact
+//!   recorded/dropped counts).
+//! * `GET  /debug/trace` — the flight recorder's live ring as Chrome
+//!   trace-event JSON (load in `chrome://tracing` / Perfetto). 404
+//!   unless the server started with `--trace-capacity > 0`.
+//! * `GET  /debug/requests/<id>` — one request's recorded timeline by
+//!   id (16-hex, as echoed in `X-Request-Id`).
 //!
 //! Registry + swap routes (see [`crate::registry`]):
 //! * `GET  /v1/models` — tags in the server's registry.
@@ -371,6 +381,18 @@ fn route(req: &Request, handle: &BatcherHandle) -> Response {
                     Json::from(m.counter("model_swap_rebind_failures") as usize),
                 ),
             ]);
+            // Flight-recorder block: same keys in both states, so
+            // dashboards key on `trace.enabled` without probing
+            // `/debug/trace`.
+            let trace = match &handle.trace {
+                Some(t) => t.stats_json(),
+                None => Json::obj(vec![
+                    ("enabled", Json::from(false)),
+                    ("capacity", Json::from(0usize)),
+                    ("recorded", Json::from(0usize)),
+                    ("dropped", Json::from(0usize)),
+                ]),
+            };
             let j = Json::obj(vec![
                 ("requests", Json::from(m.requests_total.load(Ordering::Relaxed) as usize)),
                 ("patches", Json::from(m.patches_total.load(Ordering::Relaxed) as usize)),
@@ -384,6 +406,7 @@ fn route(req: &Request, handle: &BatcherHandle) -> Response {
                 ("model", model),
                 ("scheduler", scheduler),
                 ("faults", faults),
+                ("trace", trace),
                 ("latency_p50_ms", Json::Num(m.quantile_ms("request_latency", 0.5))),
                 ("latency_p95_ms", Json::Num(m.quantile_ms("request_latency", 0.95))),
                 ("latency_p99_ms", Json::Num(m.quantile_ms("request_latency", 0.99))),
@@ -399,14 +422,35 @@ fn route(req: &Request, handle: &BatcherHandle) -> Response {
                 Ok(j) => j,
                 Err(e) => return Response::bad_request(&format!("bad JSON: {e}")),
             };
-            let freq = match ForecastRequest::from_json(&parsed) {
+            let mut freq = match ForecastRequest::from_json(&parsed) {
                 Ok(r) => r,
                 Err(e) => return Response::bad_request(&format!("bad request: {e:#}")),
             };
-            match handle.forecast(freq) {
-                Ok(resp) => Response::json(200, resp.to_json().to_string()),
+            // `X-Request-Id` is the header spelling of the JSON
+            // `"request_id"` field; the body wins when both are set.
+            if freq.request_id.is_none() {
+                if let Some(h) = req.header("x-request-id") {
+                    match crate::trace::parse_request_id(h) {
+                        Some(rid) => freq.request_id = Some(rid),
+                        None => {
+                            return Response::bad_request(
+                                "X-Request-Id must be 1-16 hex digits (nonzero)",
+                            )
+                        }
+                    }
+                }
+            }
+            let (rid, result) = handle.forecast_with_id(freq);
+            let rid_text = crate::trace::format_request_id(rid);
+            match result {
+                Ok(resp) => Response::json(200, resp.to_json().to_string())
+                    .with_header("X-Request-Id", rid_text),
                 Err(e) => {
-                    let mut resp = Response::json(e.http_status(), e.to_json().to_string());
+                    let mut resp = Response::json(
+                        e.http_status(),
+                        e.to_json_with_request_id(rid).to_string(),
+                    )
+                    .with_header("X-Request-Id", rid_text);
                     if let ServeError::Shed { retry_after_ms } = &e {
                         // Retry-After is specified in (whole) seconds.
                         let secs = ((retry_after_ms + 999) / 1000).max(1);
@@ -414,6 +458,18 @@ fn route(req: &Request, handle: &BatcherHandle) -> Response {
                     }
                     resp
                 }
+            }
+        }
+        ("GET", "/debug/trace") => match &handle.trace {
+            Some(t) => Response::json(200, t.chrome_trace_json().to_string()),
+            None => trace_disabled(),
+        },
+        ("GET", p) if p.starts_with("/debug/requests/") => {
+            let Some(t) = &handle.trace else { return trace_disabled() };
+            let id = &p["/debug/requests/".len()..];
+            match crate::trace::parse_request_id(id) {
+                Some(rid) => Response::json(200, t.request_timeline_json(rid).to_string()),
+                None => Response::bad_request("request id must be 1-16 hex digits (nonzero)"),
             }
         }
         ("POST", "/admin/swap") => {
@@ -541,6 +597,18 @@ fn route_registry(req: &Request, handle: &BatcherHandle) -> Response {
 /// Serve a typed [`ServeError`] as its canonical JSON body + status.
 fn error_response(e: &ServeError) -> Response {
     Response::json(e.http_status(), e.to_json().to_string())
+}
+
+/// The `/debug/*` reply on a server running without a flight recorder.
+fn trace_disabled() -> Response {
+    Response::json(
+        404,
+        Json::obj(vec![(
+            "error",
+            Json::from("tracing disabled (start with --trace-capacity N)"),
+        )])
+        .to_string(),
+    )
 }
 
 fn finite_or_null(v: f64) -> Json {

@@ -7,12 +7,19 @@
 //!    "cache"?: true|false, "adaptive"?: true|false,
 //!    "draft"?: "model" | "extrap" | "adaptive",
 //!    "priority"?: "high" | "normal" | "low", "deadline_ms"?: n,
-//!    "seed"?: n}
+//!    "seed"?: n, "request_id"?: "<hex>" | n}
 //! ->
 //!   {"forecast": [f32...], "mode": "...", "draft": "...",
-//!    "priority": "...", "replica": n, "seed": n,
+//!    "priority": "...", "replica": n, "seed": n, "request_id": "<hex>",
 //!    "latency_ms": x, "alpha_hat": x, "mean_block_len": x, "rounds": n,
 //!    "draft_calls": n, "target_calls": n}
+//!
+//! Every request carries a `request_id` (assigned by the scheduler when
+//! the client doesn't supply one via the JSON field or the
+//! `X-Request-Id` header) that is echoed in the response body, the
+//! `X-Request-Id` response header, typed error bodies, and every flight-
+//! recorder trace event ([`crate::trace`]) — the join key between a
+//! client-observed outcome and its server-side timeline.
 //!
 //! Error responses carry a machine-readable `error_code` alongside the
 //! human `error` message (see [`ServeError`]): `shed` (HTTP 429 with a
@@ -191,6 +198,27 @@ impl ServeError {
         }
         Json::obj(fields)
     }
+
+    /// [`ServeError::to_json`] with the owning request's id stamped in
+    /// (`"request_id": "<16-hex>"`), so error bodies join against the
+    /// flight-recorder timeline exactly like successes. `rid` 0 (no id
+    /// assigned yet, e.g. a body that failed to parse) stamps nothing.
+    pub fn to_json_with_request_id(&self, rid: u64) -> Json {
+        let j = self.to_json();
+        if rid == 0 {
+            return j;
+        }
+        match j {
+            Json::Obj(mut m) => {
+                m.insert(
+                    "request_id".to_string(),
+                    Json::from(crate::trace::format_request_id(rid)),
+                );
+                Json::Obj(m)
+            }
+            other => other,
+        }
+    }
 }
 
 impl std::fmt::Display for ServeError {
@@ -306,6 +334,13 @@ pub struct ForecastRequest {
     /// independent RNG streams: repeated `"sampled"` requests draw
     /// fresh samples, not copies.
     pub seed: Option<u64>,
+    /// Client-supplied request id override (wire form: 1–16 hex digits,
+    /// or a plain nonzero integer). `None` makes the scheduler assign a
+    /// seeded, deterministic-under-`--seed` id at admission. Either way
+    /// the id is echoed in the response body, the `X-Request-Id` header,
+    /// typed errors, and every trace event. Id 0 is reserved for the
+    /// control plane and rejected.
+    pub request_id: Option<u64>,
 }
 
 impl ForecastRequest {
@@ -386,6 +421,20 @@ impl ForecastRequest {
             None => None,
             Some(v) => Some(v.as_usize().context("'seed' must be an integer")? as u64),
         };
+        let request_id = match j.get("request_id") {
+            None => None,
+            Some(Json::Str(s)) => Some(
+                crate::trace::parse_request_id(s)
+                    .with_context(|| format!("'request_id' must be 1-16 nonzero hex digits, got '{s}'"))?,
+            ),
+            Some(v) => {
+                let n = v.as_usize().context("'request_id' must be a hex string or integer")?;
+                if n == 0 {
+                    bail!("'request_id' 0 is reserved");
+                }
+                Some(n as u64)
+            }
+        };
         Ok(ForecastRequest {
             history,
             horizon,
@@ -400,6 +449,7 @@ impl ForecastRequest {
             priority,
             deadline_ms,
             seed,
+            request_id,
         })
     }
 }
@@ -423,6 +473,10 @@ pub struct ForecastResponse {
     /// fresh one the scheduler assigned). Resubmitting the same request
     /// with `"seed"` set to this value replays the forecast exactly.
     pub seed: u64,
+    /// The request's id (assigned or client-supplied), the join key for
+    /// `GET /debug/requests/<id>` and the flight-recorder timeline.
+    /// Serialized as 16 lowercase hex digits.
+    pub request_id: u64,
     /// End-to-end request latency in milliseconds.
     pub latency_ms: f64,
     /// Mean acceptance probability of this decode (NaN for AR modes).
@@ -454,6 +508,7 @@ impl ForecastResponse {
             ("priority", Json::from(self.priority.as_str())),
             ("replica", Json::from(self.replica)),
             ("seed", Json::from(self.seed as usize)),
+            ("request_id", Json::from(crate::trace::format_request_id(self.request_id))),
             ("latency_ms", num(self.latency_ms)),
             ("alpha_hat", num(self.alpha_hat)),
             ("mean_block_len", num(self.mean_block_len)),
@@ -570,6 +625,7 @@ mod tests {
             priority: "high".into(),
             replica: 3,
             seed: 99,
+            request_id: 0xabc1,
             latency_ms: 3.5,
             alpha_hat: 0.97,
             mean_block_len: 3.4,
@@ -584,6 +640,7 @@ mod tests {
         assert_eq!(parsed.get("priority").unwrap().as_str(), Some("high"));
         assert_eq!(parsed.get("replica").unwrap().as_usize(), Some(3));
         assert_eq!(parsed.get("seed").unwrap().as_usize(), Some(99));
+        assert_eq!(parsed.get("request_id").unwrap().as_str(), Some("000000000000abc1"));
         assert_eq!(parsed.get("rounds").unwrap().as_usize(), Some(2));
         assert_eq!(parsed.get("forecast").unwrap().as_arr().unwrap().len(), 2);
     }
@@ -616,6 +673,36 @@ mod tests {
             let j = Json::parse(bad).unwrap();
             assert!(ForecastRequest::from_json(&j).is_err(), "should reject {bad}");
         }
+    }
+
+    #[test]
+    fn parses_request_id_override() {
+        let j = Json::parse(r#"{"history": [0.5], "horizon": 2, "request_id": "00ff"}"#).unwrap();
+        assert_eq!(ForecastRequest::from_json(&j).unwrap().request_id, Some(255));
+        let j = Json::parse(r#"{"history": [0.5], "horizon": 2, "request_id": 77}"#).unwrap();
+        assert_eq!(ForecastRequest::from_json(&j).unwrap().request_id, Some(77));
+        let j = Json::parse(r#"{"history": [0.5], "horizon": 2}"#).unwrap();
+        assert_eq!(ForecastRequest::from_json(&j).unwrap().request_id, None);
+        for bad in [
+            r#"{"history": [0.5], "horizon": 2, "request_id": "zz"}"#,
+            r#"{"history": [0.5], "horizon": 2, "request_id": "0"}"#,
+            r#"{"history": [0.5], "horizon": 2, "request_id": 0}"#,
+            r#"{"history": [0.5], "horizon": 2, "request_id": true}"#,
+        ] {
+            let j = Json::parse(bad).unwrap();
+            assert!(ForecastRequest::from_json(&j).is_err(), "should reject {bad}");
+        }
+    }
+
+    #[test]
+    fn error_bodies_stamp_request_id() {
+        let e = ServeError::Shed { retry_after_ms: 10 };
+        let j = e.to_json_with_request_id(0x2a);
+        assert_eq!(j.get("request_id").unwrap().as_str(), Some("000000000000002a"));
+        assert_eq!(j.get("error_code").unwrap().as_str(), Some("shed"));
+        // No id assigned yet (e.g. the body never parsed): no stamp.
+        let j = e.to_json_with_request_id(0);
+        assert!(j.get("request_id").is_none());
     }
 
     #[test]

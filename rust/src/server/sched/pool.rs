@@ -187,6 +187,9 @@ pub struct SchedShared {
     /// Seeded fault-injection schedule, when chaos is armed (`None` in
     /// normal operation — the hot path never consults it).
     pub fault_plan: Option<Arc<FaultPlan>>,
+    /// Flight recorder (`None` = tracing disabled — the hot path never
+    /// touches it, mirroring `fault_plan`'s zero-cost gating).
+    pub trace: Option<Arc<crate::trace::TraceSink>>,
 }
 
 impl SchedShared {
@@ -423,7 +426,10 @@ fn replica_main(
             let msg = panic_message(payload.as_ref());
             log::error!("replica {replica} panicked mid-group, restarting: {msg}");
             shared.metrics.inc("replica_restarts", 1);
-            run.recover_after_panic(key, queue, shared, &msg);
+            if let Some(t) = &shared.trace {
+                t.record(0, crate::trace::EventKind::ReplicaRestart { replica: replica as u32 });
+            }
+            run.recover_after_panic(key, queue, shared, &msg, replica);
             // Rebind to the shared weight store: on the native backend
             // `replicate()` clones `Arc` handles, so a restart costs
             // session state, never a weight reload. Snapshotting from

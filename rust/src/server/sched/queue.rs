@@ -30,6 +30,7 @@ use std::time::{Duration, Instant};
 use crate::config::SchedPolicy;
 use crate::metrics::Metrics;
 use crate::specdec::DraftKind;
+use crate::trace::{EventKind, TraceSink};
 
 use super::super::batcher::Job;
 use super::super::protocol::{Priority, ServeError};
@@ -148,6 +149,10 @@ pub struct AdmissionQueue {
     policy: SchedPolicy,
     retry_after_ms: u64,
     metrics: Arc<Metrics>,
+    /// Flight recorder (None = tracing disabled, zero cost). The queue
+    /// records the lifecycle events it owns: admission, queue-wait spans
+    /// at dispatch, sheds, deadline expiries, requeues, and steals.
+    trace: Option<Arc<TraceSink>>,
     /// External drain signal: when set, `next_batch` returns `None` at
     /// the next wakeup even without `shutdown()` (the pre-scheduler
     /// engine loop honored its stop flag the same way).
@@ -185,6 +190,7 @@ impl AdmissionQueue {
         policy: SchedPolicy,
         retry_after_ms: u64,
         metrics: Arc<Metrics>,
+        trace: Option<Arc<TraceSink>>,
         stop: Arc<AtomicBool>,
     ) -> AdmissionQueue {
         AdmissionQueue {
@@ -200,6 +206,7 @@ impl AdmissionQueue {
             policy,
             retry_after_ms,
             metrics,
+            trace,
             stop,
             draining: AtomicBool::new(false),
             epoch: AtomicU64::new(0),
@@ -251,6 +258,12 @@ impl AdmissionQueue {
         if qj.deadline_ms.is_some() {
             self.metrics.record_deadline_outcome(qj.priority.as_str(), false);
         }
+        if let Some(t) = &self.trace {
+            t.record(
+                qj.job.req.request_id.unwrap_or(0),
+                EventKind::Shed { priority: qj.priority as u8 },
+            );
+        }
         let _ = qj.job.reply.send(Err(ServeError::Shed { retry_after_ms: self.retry_after_ms }));
     }
 
@@ -261,6 +274,12 @@ impl AdmissionQueue {
         // that decoded, overstating exactly under overload.
         self.metrics.record_deadline_outcome(qj.priority.as_str(), false);
         let waited_ms = now.saturating_duration_since(qj.job.enqueued).as_millis() as u64;
+        if let Some(t) = &self.trace {
+            t.record(
+                qj.job.req.request_id.unwrap_or(0),
+                EventKind::Expired { deadline_ms: qj.deadline_ms.unwrap_or(0), waited_ms },
+            );
+        }
         let _ = qj.job.reply.send(Err(ServeError::DeadlineExpired {
             deadline_ms: qj.deadline_ms.unwrap_or(0),
             waited_ms,
@@ -323,12 +342,27 @@ impl AdmissionQueue {
                     if deadline_ms.is_some() {
                         self.metrics.record_deadline_outcome(priority.as_str(), false);
                     }
+                    if let Some(t) = &self.trace {
+                        t.record(
+                            job.req.request_id.unwrap_or(0),
+                            EventKind::Shed { priority: priority as u8 },
+                        );
+                    }
                     return Err(ServeError::Shed { retry_after_ms: self.retry_after_ms });
                 }
             }
         }
         let seq = s.seq;
         s.seq += 1;
+        if let Some(t) = &self.trace {
+            t.record(
+                job.req.request_id.unwrap_or(0),
+                EventKind::Admitted {
+                    priority: priority as u8,
+                    deadline_ms: deadline_ms.unwrap_or(0),
+                },
+            );
+        }
         let deadline = deadline_ms.map(|ms| job.enqueued + Duration::from_millis(ms));
         s.insert(
             key,
@@ -359,6 +393,9 @@ impl AdmissionQueue {
             }
             // Keep the original seq: the job re-enters at its old spot in
             // arrival order rather than the back of the line.
+            if let Some(t) = &self.trace {
+                t.record(qj.job.req.request_id.unwrap_or(0), EventKind::Requeued);
+            }
             s.insert(key, qj, self.policy);
             self.metrics.set_gauge("queue_depth", s.depth as f64);
         }
@@ -471,6 +508,21 @@ impl AdmissionQueue {
                     s.depth -= batch.len();
                     if stolen {
                         self.metrics.inc("steals", 1);
+                        if let Some(t) = &self.trace {
+                            t.record(0, EventKind::Steal { replica: replica as u32 });
+                        }
+                    }
+                    let now = Instant::now();
+                    for qj in &batch {
+                        let waited = now.saturating_duration_since(qj.job.enqueued);
+                        self.metrics.observe("queue_wait", waited);
+                        if let Some(t) = &self.trace {
+                            t.record_span_ending_now(
+                                qj.job.req.request_id.unwrap_or(0),
+                                waited,
+                                EventKind::Dispatched { replica: replica as u32 },
+                            );
+                        }
                     }
                     s.affinity.insert(key, replica);
                     // γ and σ-bits in the key come off the wire, so the
@@ -572,6 +624,7 @@ mod tests {
             priority: Priority::Normal,
             deadline_ms: None,
             seed: None,
+            request_id: None,
         }
     }
 
@@ -621,6 +674,7 @@ mod tests {
             policy,
             750,
             Arc::new(Metrics::new()),
+            None,
             Arc::new(AtomicBool::new(false)),
         )
     }
@@ -677,7 +731,7 @@ mod tests {
     fn saturation_sheds_and_high_priority_evicts_low() {
         let m = Arc::new(Metrics::new());
         let q =
-            AdmissionQueue::new(2, SchedPolicy::Edf, 750, m.clone(), Arc::new(AtomicBool::new(false)));
+            AdmissionQueue::new(2, SchedPolicy::Edf, 750, m.clone(), None, Arc::new(AtomicBool::new(false)));
         let (j1, rx1) = mk_job();
         q.admit(j1, Priority::Low, None, key(3)).unwrap();
         let (j2, _rx2) = mk_job();
@@ -718,6 +772,7 @@ mod tests {
             SchedPolicy::Edf,
             750,
             m.clone(),
+            None,
             Arc::new(AtomicBool::new(false)),
         );
         let (j1, rx1) = mk_job();
@@ -746,6 +801,7 @@ mod tests {
             SchedPolicy::Edf,
             750,
             Arc::new(Metrics::new()),
+            None,
             stop.clone(),
         ));
         let q2 = q.clone();
@@ -766,6 +822,7 @@ mod tests {
             SchedPolicy::Edf,
             750,
             m.clone(),
+            None,
             Arc::new(AtomicBool::new(false)),
         );
         for g in [2usize, 3] {
@@ -817,7 +874,7 @@ mod tests {
     fn requeue_is_cap_exempt_and_marks_the_job() {
         let m = Arc::new(Metrics::new());
         let q =
-            AdmissionQueue::new(1, SchedPolicy::Edf, 750, m.clone(), Arc::new(AtomicBool::new(false)));
+            AdmissionQueue::new(1, SchedPolicy::Edf, 750, m.clone(), None, Arc::new(AtomicBool::new(false)));
         let (j1, _rx1) = mk_job();
         q.admit(j1, Priority::Normal, None, key(3)).unwrap();
         let (_, mut batch) = q.next_batch(0, 8, Duration::ZERO).unwrap();

@@ -374,6 +374,7 @@ pub fn sd_generate_stream_from(
             if let Some(c) = &mut seqs[i].ctrl {
                 c.observe_round(&r);
             }
+            super::observer::notify_round(i, &r);
             seqs[i].stats.absorb(&r);
             seqs[i].rounds.push(r);
         }
@@ -565,6 +566,7 @@ pub fn sd_generate_stream_seeded(
                     if let Some(c) = &mut seqs[i].ctrl {
                         c.observe_round(&r);
                     }
+                    super::observer::notify_round(i, &r);
                     seqs[i].stats.absorb(&r);
                     seqs[i].rounds.push(r);
                 }
@@ -711,6 +713,7 @@ pub fn sd_generate_stream_seeded(
                 if let Some(c) = &mut seqs[i].ctrl {
                     c.observe_round(&r);
                 }
+                super::observer::notify_round(i, &r);
                 seqs[i].stats.absorb(&r);
                 seqs[i].rounds.push(r);
             }

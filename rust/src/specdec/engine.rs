@@ -455,6 +455,7 @@ fn sd_generate_impl(
                 target_time: tt,
             };
             plan.observe(&r);
+            super::observer::notify_round(0, &r);
             stats.absorb(&r);
             rounds.push(r);
             continue;
@@ -604,6 +605,7 @@ fn sd_generate_impl(
             target_time,
         };
         plan.observe(&r);
+        super::observer::notify_round(0, &r);
         stats.absorb(&r);
         rounds.push(r);
     }

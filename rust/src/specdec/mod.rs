@@ -50,6 +50,7 @@ mod batched;
 mod controller;
 pub mod draft;
 mod engine;
+mod observer;
 mod stats;
 mod tree;
 
@@ -63,6 +64,7 @@ pub use draft::{
     ProposalBlock, RoundFeedback,
 };
 pub(crate) use engine::ensure_finite;
+pub use observer::{with_round_observer, RoundObserver};
 pub use engine::{
     sd_generate, sd_generate_from, sd_generate_from_with_controller, sd_generate_scheduled,
     sd_generate_with_controller, Emission, SpecConfig, Variant,

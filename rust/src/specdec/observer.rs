@@ -1,0 +1,135 @@
+//! Per-round observation hook: lets the serving tier watch every
+//! speculative round as it completes without the engines knowing about
+//! servers, trace sinks, or request ids.
+//!
+//! The engines ([`super::sd_generate_from`], the tree and batched
+//! variants) call [`notify_round`] right after constructing each
+//! [`RoundStats`]. The hook is a thread-local `Option<Arc<dyn
+//! RoundObserver>>` installed for the dynamic extent of one decode by
+//! [`with_round_observer`]: the scheduler (which runs each decode group
+//! synchronously on a replica thread) installs an observer that maps the
+//! sequence index back to a request id and forwards the round into the
+//! flight recorder ([`crate::trace`]).
+//!
+//! Cost discipline: with no observer installed (the default, and always
+//! the case when tracing is off) `notify_round` is one TLS access and a
+//! `None` check — no allocation, no locking, and no effect on decode
+//! output, preserving the engines' bit-identity walls. The installer is
+//! panic-safe: the previous observer is restored by a drop guard even if
+//! the decode unwinds (replica panics are supervised and must not leak a
+//! stale observer into the replica's next decode).
+
+use std::cell::RefCell;
+use std::sync::Arc;
+
+use super::stats::RoundStats;
+
+/// A sink for completed speculation rounds. `seq` is the in-batch
+/// sequence index (0 for single-sequence decodes; the lockstep batched
+/// engine passes each sequence's slot index).
+pub trait RoundObserver: Send + Sync {
+    /// Called synchronously after round `round`'s stats are final, on
+    /// the decoding thread. Implementations must be cheap and must not
+    /// call back into the engines.
+    fn on_round(&self, seq: usize, round: &RoundStats);
+}
+
+thread_local! {
+    static OBSERVER: RefCell<Option<Arc<dyn RoundObserver>>> = RefCell::new(None);
+}
+
+/// Install `obs` as this thread's round observer for the duration of
+/// `f`, restoring the previous observer (usually `None`) afterwards —
+/// including on unwind.
+pub fn with_round_observer<R>(obs: Arc<dyn RoundObserver>, f: impl FnOnce() -> R) -> R {
+    struct Guard(Option<Arc<dyn RoundObserver>>);
+    impl Drop for Guard {
+        fn drop(&mut self) {
+            let prev = self.0.take();
+            OBSERVER.with(|o| *o.borrow_mut() = prev);
+        }
+    }
+    let prev = OBSERVER.with(|o| o.borrow_mut().replace(obs));
+    let _restore = Guard(prev);
+    f()
+}
+
+/// Engine-side notification point: forwards `round` to the installed
+/// observer, if any. One TLS borrow + `None` check when tracing is off.
+#[inline]
+pub(crate) fn notify_round(seq: usize, round: &RoundStats) {
+    OBSERVER.with(|o| {
+        if let Some(obs) = o.borrow().as_ref() {
+            obs.on_round(seq, round);
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Mutex;
+    use std::time::Duration;
+
+    fn round(gamma: usize, accepted: usize) -> RoundStats {
+        RoundStats {
+            gamma,
+            accepted,
+            emitted: accepted + 1,
+            alphas: vec![0.5; gamma],
+            residual_draws: usize::from(accepted < gamma),
+            branches: 1,
+            draft_time: Duration::from_micros(10),
+            target_time: Duration::from_micros(40),
+        }
+    }
+
+    struct Collect(Mutex<Vec<(usize, usize, usize)>>);
+    impl RoundObserver for Collect {
+        fn on_round(&self, seq: usize, r: &RoundStats) {
+            self.0.lock().unwrap().push((seq, r.gamma, r.accepted));
+        }
+    }
+
+    #[test]
+    fn observer_sees_rounds_only_inside_scope() {
+        let obs = Arc::new(Collect(Mutex::new(Vec::new())));
+        notify_round(0, &round(4, 2)); // no observer installed: dropped
+        let got = with_round_observer(obs.clone(), || {
+            notify_round(0, &round(4, 4));
+            notify_round(1, &round(2, 0));
+            42
+        });
+        assert_eq!(got, 42);
+        notify_round(0, &round(8, 8)); // outside again: dropped
+        assert_eq!(*obs.0.lock().unwrap(), vec![(0, 4, 4), (1, 2, 0)]);
+    }
+
+    #[test]
+    fn observer_restored_after_panic() {
+        let outer = Arc::new(Collect(Mutex::new(Vec::new())));
+        with_round_observer(outer.clone(), || {
+            let inner = Arc::new(Collect(Mutex::new(Vec::new())));
+            let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                with_round_observer(inner, || panic!("replica fault"));
+            }));
+            assert!(r.is_err());
+            // The outer observer must be back in place after the unwind.
+            notify_round(3, &round(1, 1));
+        });
+        assert_eq!(*outer.0.lock().unwrap(), vec![(3, 1, 1)]);
+    }
+
+    #[test]
+    fn nested_installs_shadow_and_restore() {
+        let a = Arc::new(Collect(Mutex::new(Vec::new())));
+        let b = Arc::new(Collect(Mutex::new(Vec::new())));
+        with_round_observer(a.clone(), || {
+            notify_round(0, &round(1, 0));
+            with_round_observer(b.clone(), || notify_round(0, &round(2, 1)));
+            notify_round(0, &round(3, 2));
+        });
+        assert_eq!(*a.0.lock().unwrap(), vec![(0, 1, 0), (0, 3, 2)]);
+        assert_eq!(*b.0.lock().unwrap(), vec![(0, 2, 1)]);
+    }
+}

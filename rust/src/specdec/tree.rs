@@ -272,6 +272,7 @@ fn sd_generate_tree_impl(
                 target_time: tt,
             };
             plan.observe(&r);
+            super::observer::notify_round(0, &r);
             stats.absorb(&r);
             rounds.push(r);
             continue;
@@ -498,6 +499,7 @@ fn sd_generate_tree_impl(
             target_time,
         };
         plan.observe(&r);
+        super::observer::notify_round(0, &r);
         stats.absorb(&r);
         rounds.push(r);
     }

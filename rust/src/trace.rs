@@ -1,0 +1,663 @@
+//! Flight-recorder tracing: a config-gated, fixed-capacity ring buffer
+//! of typed serving events with Chrome-trace export.
+//!
+//! The serving stack's aggregate counters ([`crate::metrics`]) answer
+//! "how is the fleet doing"; they cannot answer "why was *this* request
+//! slow". The flight recorder fills that gap: every request carries a
+//! `request_id` from admission to reply, and every stage of its life —
+//! queue wait, dispatch, each speculative round (γ, k, per-proposal α,
+//! draft-vs-verify time split), the final reply — lands as one
+//! fixed-size [`TraceEvent`] in a preallocated ring. Control-plane
+//! transitions (controller retunes, breaker trips, replica restarts,
+//! work steals, weight-swap generations) share the same ring under
+//! `request_id = 0`.
+//!
+//! Design constraints, in priority order:
+//!
+//! 1. **Disabled = free.** The sink lives behind `Option<Arc<TraceSink>>`
+//!    (the [`crate::faultinject::FaultPlan`] pattern): with
+//!    `trace_capacity = 0` nothing is constructed and every call site is
+//!    an `if let Some(..)` on a `None` — no allocation, no lock, no RNG
+//!    perturbation, bit-identical serving.
+//! 2. **Enabled = allocation-free after startup.** The ring is
+//!    `TRACE_SHARDS` mutex-guarded slabs of `Copy` slots, preallocated
+//!    in [`TraceSink::new`]. Recording is a relaxed `fetch_add` (shard
+//!    pick + global order), one short mutex hold, and a slot overwrite.
+//!    Variable-length payloads are clamped into fixed arrays
+//!    ([`MAX_TRACE_ALPHAS`]) and interned small codes (priority, draft
+//!    kind, breaker state ride as `u8`).
+//! 3. **Overflow = counted drop, never a block.** The ring overwrites
+//!    its oldest slot; [`TraceSink::dropped`] reports exactly how many
+//!    events were overwritten (`head − capacity` per shard, summed), so
+//!    a wrapped ring is visible in `/stats` rather than silently lossy.
+//!
+//! Export: [`TraceSink::chrome_trace_json`] renders the live ring as a
+//! Chrome trace-event array (`[{name, ph, ts, dur, pid, tid, args}]`)
+//! loadable in `chrome://tracing` or [Perfetto](https://ui.perfetto.dev)
+//! (served at `GET /debug/trace`), and
+//! [`TraceSink::request_timeline_json`] reconstructs one request's
+//! timeline by id (served at `GET /debug/requests/<id>`).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use crate::util::json::Json;
+
+/// Number of independent ring shards. Writers pick a shard from the
+/// global event sequence (`seq & (TRACE_SHARDS - 1)`), so concurrent
+/// replicas contend on different mutexes. Power of two.
+pub const TRACE_SHARDS: usize = 8;
+
+/// Per-round α values retained per [`EventKind::Round`] event. Rounds
+/// with more proposals than this keep the first `MAX_TRACE_ALPHAS`
+/// (γ is typically ≤ 8 in tuned operation; the count field is exact
+/// either way).
+pub const MAX_TRACE_ALPHAS: usize = 8;
+
+/// The typed payload of one trace event. Every variant is `Copy` with a
+/// fixed layout so ring slots never allocate; names/strings are interned
+/// as small integer codes (`priority`: 0 low / 1 normal / 2 high;
+/// `draft`: 0 model / 1 extrap / 2 adaptive; breaker `state`: 0 closed /
+/// 1 open / 2 half-open).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum EventKind {
+    /// A request passed admission and entered the queue.
+    Admitted {
+        /// Priority band code (0 low / 1 normal / 2 high).
+        priority: u8,
+        /// Effective deadline in ms (0 = none).
+        deadline_ms: u64,
+    },
+    /// A replica picked the request out of the queue. Recorded as a
+    /// span covering the full queue wait.
+    Dispatched {
+        /// Executing replica (0-based).
+        replica: u32,
+    },
+    /// One speculative round (or AR step, with `gamma = 0`) of this
+    /// request's decode. Recorded as a span covering draft + verify.
+    Round {
+        /// 0-based round index within the request.
+        round: u32,
+        /// Proposals drafted per branch this round (0 = pure AR step).
+        gamma: u8,
+        /// Candidate branches drafted (tree width; 1 = classic chain).
+        k: u8,
+        /// Draft source code (0 model / 1 extrap / 2 adaptive).
+        draft: u8,
+        /// Total proposals offered to the verifier (γ · k).
+        proposed: u16,
+        /// Proposals accepted on the committed branch.
+        accepted: u16,
+        /// Proposals rolled back on the committed branch (γ − accepted).
+        rollback: u16,
+        /// Residual (correction) draws taken after the reject.
+        residual: u16,
+        /// Wall time spent drafting, nanoseconds.
+        draft_ns: u64,
+        /// Wall time spent in target verification, nanoseconds.
+        target_ns: u64,
+        /// How many of `alphas` are live.
+        n_alphas: u8,
+        /// Per-proposal acceptance probabilities (committed branch),
+        /// first `n_alphas` entries live.
+        alphas: [f32; MAX_TRACE_ALPHAS],
+    },
+    /// The request's reply was handed back. Recorded as a span covering
+    /// the full admission→reply latency, so this is the request's root
+    /// span in the Chrome view.
+    Replied {
+        /// Whether the reply was a success (`false` = typed error).
+        ok: bool,
+        /// HTTP status the reply maps to.
+        status: u16,
+        /// Rounds (or AR steps) the decode executed; 0 for errors.
+        rounds: u32,
+    },
+    /// The request was shed by the bounded admission queue (HTTP 429).
+    Shed {
+        /// Priority band code of the shed request.
+        priority: u8,
+    },
+    /// The request's deadline expired while queued (HTTP 504).
+    Expired {
+        /// The deadline the request carried, ms.
+        deadline_ms: u64,
+        /// How long it had waited when purged, ms.
+        waited_ms: u64,
+    },
+    /// The request was re-queued after its replica failed mid-flight.
+    Requeued,
+    /// The replica executing this request panicked; the supervisor
+    /// answered the request with a typed `replica_failure`.
+    ReplicaFailed {
+        /// The replica that failed.
+        replica: u32,
+    },
+    /// Control plane: the (γ × k) controller moved its operating point.
+    Retune {
+        /// New γ.
+        gamma: u8,
+        /// New k.
+        k: u8,
+    },
+    /// Control plane: the speculation circuit breaker changed state.
+    Breaker {
+        /// New state code (0 closed / 1 open / 2 half-open).
+        state: u8,
+    },
+    /// Control plane: a panicked replica was restarted over the shared
+    /// packed weights.
+    ReplicaRestart {
+        /// The restarted replica.
+        replica: u32,
+    },
+    /// Control plane: a replica stole work from another group's queue.
+    Steal {
+        /// The stealing replica.
+        replica: u32,
+    },
+    /// Control plane: a live weight swap committed a new generation.
+    Swap {
+        /// The generation the model slot advanced to.
+        generation: u64,
+    },
+}
+
+impl EventKind {
+    /// The Chrome trace-event `name` this kind renders under.
+    pub fn name(&self) -> &'static str {
+        match self {
+            EventKind::Admitted { .. } => "admitted",
+            EventKind::Dispatched { .. } => "queue_wait",
+            EventKind::Round { .. } => "round",
+            EventKind::Replied { .. } => "request",
+            EventKind::Shed { .. } => "shed",
+            EventKind::Expired { .. } => "deadline_expired",
+            EventKind::Requeued => "requeued",
+            EventKind::ReplicaFailed { .. } => "replica_failed",
+            EventKind::Retune { .. } => "retune",
+            EventKind::Breaker { .. } => "breaker",
+            EventKind::ReplicaRestart { .. } => "replica_restart",
+            EventKind::Steal { .. } => "steal",
+            EventKind::Swap { .. } => "swap",
+        }
+    }
+}
+
+/// One recorded event: a fixed-size `Copy` ring slot.
+#[derive(Clone, Copy, Debug)]
+pub struct TraceEvent {
+    /// Global record order (total order across shards).
+    pub seq: u64,
+    /// Event start, microseconds since the sink's epoch.
+    pub ts_us: u64,
+    /// Event duration in microseconds (0 for instants).
+    pub dur_us: u64,
+    /// Owning request (0 = control plane).
+    pub request_id: u64,
+    /// Typed payload.
+    pub kind: EventKind,
+}
+
+struct Shard {
+    slots: Vec<TraceEvent>,
+    /// Monotone write count for this shard. The live window is the last
+    /// `min(head, slots.len())` writes; everything older was overwritten
+    /// (= dropped).
+    head: u64,
+}
+
+/// The flight recorder: `TRACE_SHARDS` preallocated rings behind short
+/// mutexes, plus a global sequence counter. Construct once at engine
+/// start (when `trace_capacity > 0`) and share via `Arc`.
+pub struct TraceSink {
+    epoch: Instant,
+    shards: Vec<Mutex<Shard>>,
+    shard_cap: usize,
+    seq: AtomicU64,
+}
+
+impl TraceSink {
+    /// Preallocate a recorder holding at least `capacity` events
+    /// (rounded up to a multiple of [`TRACE_SHARDS`]). All ring memory
+    /// is allocated here; recording never allocates.
+    pub fn new(capacity: usize) -> TraceSink {
+        let shard_cap = capacity.div_ceil(TRACE_SHARDS).max(1);
+        let zero = TraceEvent {
+            seq: 0,
+            ts_us: 0,
+            dur_us: 0,
+            request_id: 0,
+            kind: EventKind::Requeued,
+        };
+        let shards = (0..TRACE_SHARDS)
+            .map(|_| Mutex::new(Shard { slots: vec![zero; shard_cap], head: 0 }))
+            .collect();
+        TraceSink { epoch: Instant::now(), shards, shard_cap, seq: AtomicU64::new(0) }
+    }
+
+    /// Total ring capacity in events (shards × per-shard slots).
+    pub fn capacity(&self) -> usize {
+        self.shard_cap * TRACE_SHARDS
+    }
+
+    /// Total events ever recorded (including overwritten ones).
+    pub fn recorded(&self) -> u64 {
+        self.shards.iter().map(|s| s.lock().unwrap().head).sum()
+    }
+
+    /// Exact count of events lost to ring wraparound: per shard,
+    /// `head − shard_cap` once the shard has wrapped.
+    pub fn dropped(&self) -> u64 {
+        self.shards
+            .iter()
+            .map(|s| s.lock().unwrap().head.saturating_sub(self.shard_cap as u64))
+            .sum()
+    }
+
+    fn now_us(&self) -> u64 {
+        self.epoch.elapsed().as_micros() as u64
+    }
+
+    /// Record an instant event stamped "now".
+    pub fn record(&self, request_id: u64, kind: EventKind) {
+        let ts = self.now_us();
+        self.record_at(request_id, ts, 0, kind);
+    }
+
+    /// Record a span that ends now and lasted `dur` (the common shape:
+    /// the caller measures a stage, then records it on completion; the
+    /// start timestamp is back-computed).
+    pub fn record_span_ending_now(&self, request_id: u64, dur: Duration, kind: EventKind) {
+        let dur_us = dur.as_micros() as u64;
+        let ts = self.now_us().saturating_sub(dur_us);
+        self.record_at(request_id, ts, dur_us, kind);
+    }
+
+    fn record_at(&self, request_id: u64, ts_us: u64, dur_us: u64, kind: EventKind) {
+        let seq = self.seq.fetch_add(1, Ordering::Relaxed);
+        let shard = &self.shards[(seq as usize) & (TRACE_SHARDS - 1)];
+        let mut s = shard.lock().unwrap();
+        let idx = (s.head % self.shard_cap as u64) as usize;
+        s.slots[idx] = TraceEvent { seq, ts_us, dur_us, request_id, kind };
+        s.head += 1;
+    }
+
+    /// Copy out every live (not-yet-overwritten) event, globally ordered
+    /// by record sequence. Allocates (debug path, not the hot path).
+    pub fn snapshot(&self) -> Vec<TraceEvent> {
+        let mut out = Vec::with_capacity(self.capacity());
+        for shard in &self.shards {
+            let s = shard.lock().unwrap();
+            let live = (s.head).min(self.shard_cap as u64) as usize;
+            let start = (s.head - live as u64) as u64;
+            for i in 0..live {
+                let idx = ((start + i as u64) % self.shard_cap as u64) as usize;
+                out.push(s.slots[idx]);
+            }
+        }
+        out.sort_by_key(|e| e.seq);
+        out
+    }
+
+    /// Render the live ring as a Chrome trace-event array: every event a
+    /// complete (`"ph": "X"`) event with `ts`/`dur` in microseconds,
+    /// `pid` 1, and `tid` the low 32 bits of the owning request id
+    /// (0 = control plane). The full request id rides in `args.rid`.
+    /// Load the output in `chrome://tracing` or Perfetto as-is.
+    pub fn chrome_trace_json(&self) -> Json {
+        Json::Arr(self.snapshot().iter().map(chrome_event).collect())
+    }
+
+    /// Reconstruct one request's timeline: every live event stamped with
+    /// `request_id`, in record order, as
+    /// `{"request_id": "<16-hex>", "found": n, "events": [...]}`.
+    pub fn request_timeline_json(&self, request_id: u64) -> Json {
+        let events: Vec<Json> = self
+            .snapshot()
+            .iter()
+            .filter(|e| e.request_id == request_id)
+            .map(timeline_event)
+            .collect();
+        Json::obj(vec![
+            ("request_id", Json::from(format_request_id(request_id))),
+            ("found", Json::from(events.len())),
+            ("events", Json::Arr(events)),
+        ])
+    }
+
+    /// The `"trace"` block served in `/stats`:
+    /// `{"enabled": true, "capacity": n, "recorded": n, "dropped": n}`.
+    pub fn stats_json(&self) -> Json {
+        Json::obj(vec![
+            ("enabled", Json::from(true)),
+            ("capacity", Json::from(self.capacity())),
+            ("recorded", Json::from(self.recorded() as usize)),
+            ("dropped", Json::from(self.dropped() as usize)),
+        ])
+    }
+}
+
+/// Canonical wire spelling of a request id: 16 lowercase hex digits
+/// (echoed in responses, `X-Request-Id`, and trace output).
+pub fn format_request_id(rid: u64) -> String {
+    format!("{rid:016x}")
+}
+
+/// Parse a client-supplied request id: 1–16 hex digits (the canonical
+/// form), with an optional `0x` prefix. Returns `None` for anything
+/// else. Id 0 is reserved for the control plane and rejected.
+pub fn parse_request_id(s: &str) -> Option<u64> {
+    let hex = s.strip_prefix("0x").unwrap_or(s);
+    if hex.is_empty() || hex.len() > 16 {
+        return None;
+    }
+    // from_str_radix alone would also take a leading '+'; ids are bare
+    // hex digits only.
+    if !hex.bytes().all(|b| b.is_ascii_hexdigit()) {
+        return None;
+    }
+    match u64::from_str_radix(hex, 16) {
+        Ok(0) => None,
+        Ok(v) => Some(v),
+        Err(_) => None,
+    }
+}
+
+fn prio_name(p: u8) -> &'static str {
+    match p {
+        0 => "low",
+        1 => "normal",
+        2 => "high",
+        _ => "unknown",
+    }
+}
+
+fn draft_name(d: u8) -> &'static str {
+    match d {
+        0 => "model",
+        1 => "extrap",
+        2 => "adaptive",
+        _ => "unknown",
+    }
+}
+
+fn breaker_name(b: u8) -> &'static str {
+    match b {
+        0 => "closed",
+        1 => "open",
+        2 => "half_open",
+        _ => "unknown",
+    }
+}
+
+fn args_json(e: &TraceEvent) -> Json {
+    let mut fields: Vec<(&str, Json)> =
+        vec![("rid", Json::from(format_request_id(e.request_id)))];
+    match e.kind {
+        EventKind::Admitted { priority, deadline_ms } => {
+            fields.push(("priority", Json::from(prio_name(priority))));
+            fields.push(("deadline_ms", Json::from(deadline_ms as usize)));
+        }
+        EventKind::Dispatched { replica } => {
+            fields.push(("replica", Json::from(replica as usize)));
+        }
+        EventKind::Round {
+            round,
+            gamma,
+            k,
+            draft,
+            proposed,
+            accepted,
+            rollback,
+            residual,
+            draft_ns,
+            target_ns,
+            n_alphas,
+            alphas,
+        } => {
+            fields.push(("round", Json::from(round as usize)));
+            fields.push(("gamma", Json::from(gamma as usize)));
+            fields.push(("k", Json::from(k as usize)));
+            fields.push(("draft", Json::from(draft_name(draft))));
+            fields.push(("proposed", Json::from(proposed as usize)));
+            fields.push(("accepted", Json::from(accepted as usize)));
+            fields.push(("rollback", Json::from(rollback as usize)));
+            fields.push(("residual", Json::from(residual as usize)));
+            fields.push(("draft_ns", Json::from(draft_ns as usize)));
+            fields.push(("target_ns", Json::from(target_ns as usize)));
+            let live: Vec<f64> =
+                alphas[..(n_alphas as usize).min(MAX_TRACE_ALPHAS)].iter().map(|&a| a as f64).collect();
+            fields.push(("alphas", Json::arr_f64(&live)));
+        }
+        EventKind::Replied { ok, status, rounds } => {
+            fields.push(("ok", Json::from(ok)));
+            fields.push(("status", Json::from(status as usize)));
+            fields.push(("rounds", Json::from(rounds as usize)));
+        }
+        EventKind::Shed { priority } => {
+            fields.push(("priority", Json::from(prio_name(priority))));
+        }
+        EventKind::Expired { deadline_ms, waited_ms } => {
+            fields.push(("deadline_ms", Json::from(deadline_ms as usize)));
+            fields.push(("waited_ms", Json::from(waited_ms as usize)));
+        }
+        EventKind::Requeued => {}
+        EventKind::ReplicaFailed { replica } => {
+            fields.push(("replica", Json::from(replica as usize)));
+        }
+        EventKind::Retune { gamma, k } => {
+            fields.push(("gamma", Json::from(gamma as usize)));
+            fields.push(("k", Json::from(k as usize)));
+        }
+        EventKind::Breaker { state } => {
+            fields.push(("state", Json::from(breaker_name(state))));
+        }
+        EventKind::ReplicaRestart { replica } => {
+            fields.push(("replica", Json::from(replica as usize)));
+        }
+        EventKind::Steal { replica } => {
+            fields.push(("replica", Json::from(replica as usize)));
+        }
+        EventKind::Swap { generation } => {
+            fields.push(("generation", Json::from(generation as usize)));
+        }
+    }
+    Json::obj(fields)
+}
+
+fn chrome_event(e: &TraceEvent) -> Json {
+    Json::obj(vec![
+        ("name", Json::from(e.kind.name())),
+        ("ph", Json::from("X")),
+        ("ts", Json::from(e.ts_us as usize)),
+        ("dur", Json::from(e.dur_us as usize)),
+        ("pid", Json::from(1usize)),
+        ("tid", Json::from((e.request_id & 0xFFFF_FFFF) as usize)),
+        ("args", args_json(e)),
+    ])
+}
+
+fn timeline_event(e: &TraceEvent) -> Json {
+    Json::obj(vec![
+        ("name", Json::from(e.kind.name())),
+        ("seq", Json::from(e.seq as usize)),
+        ("ts_us", Json::from(e.ts_us as usize)),
+        ("dur_us", Json::from(e.dur_us as usize)),
+        ("args", args_json(e)),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_and_counts_without_wrap() {
+        let sink = TraceSink::new(64);
+        assert_eq!(sink.capacity(), 64);
+        for i in 0..10u64 {
+            sink.record(i + 1, EventKind::Requeued);
+        }
+        assert_eq!(sink.recorded(), 10);
+        assert_eq!(sink.dropped(), 0);
+        let snap = sink.snapshot();
+        assert_eq!(snap.len(), 10);
+        // Global sequence order is preserved across shards.
+        for (i, e) in snap.iter().enumerate() {
+            assert_eq!(e.seq, i as u64);
+            assert_eq!(e.request_id, i as u64 + 1);
+        }
+    }
+
+    #[test]
+    fn wraparound_drop_accounting_is_exact() {
+        let sink = TraceSink::new(16); // 2 slots per shard
+        let total = 100u64;
+        for i in 0..total {
+            sink.record(i, EventKind::Requeued);
+        }
+        assert_eq!(sink.recorded(), total);
+        // Uniform round-robin: every shard wrapped identically.
+        assert_eq!(sink.dropped(), total - sink.capacity() as u64);
+        let snap = sink.snapshot();
+        assert_eq!(snap.len(), sink.capacity());
+        // The survivors are exactly the newest `capacity` events.
+        assert!(snap.iter().all(|e| e.seq >= total - sink.capacity() as u64));
+    }
+
+    #[test]
+    fn capacity_rounds_up_to_shards() {
+        let sink = TraceSink::new(1);
+        assert_eq!(sink.capacity(), TRACE_SHARDS);
+        let sink = TraceSink::new(0);
+        assert_eq!(sink.capacity(), TRACE_SHARDS);
+        let sink = TraceSink::new(17);
+        assert_eq!(sink.capacity() % TRACE_SHARDS, 0);
+        assert!(sink.capacity() >= 17);
+    }
+
+    #[test]
+    fn chrome_export_parses_and_has_required_keys() {
+        let sink = TraceSink::new(32);
+        sink.record(7, EventKind::Admitted { priority: 1, deadline_ms: 250 });
+        sink.record_span_ending_now(
+            7,
+            Duration::from_micros(1500),
+            EventKind::Replied { ok: true, status: 200, rounds: 3 },
+        );
+        sink.record(0, EventKind::Breaker { state: 1 });
+        let text = sink.chrome_trace_json().to_string();
+        let parsed = Json::parse(&text).unwrap();
+        let arr = parsed.as_arr().unwrap();
+        assert_eq!(arr.len(), 3);
+        for e in arr {
+            assert_eq!(e.get("ph").unwrap().as_str(), Some("X"));
+            assert!(e.get("name").unwrap().as_str().is_some());
+            assert!(e.get("ts").unwrap().as_usize().is_some());
+            assert!(e.get("dur").unwrap().as_usize().is_some());
+            assert_eq!(e.get("pid").unwrap().as_usize(), Some(1));
+            assert!(e.get("tid").unwrap().as_usize().is_some());
+            assert!(e.get("args").unwrap().as_obj().is_some());
+        }
+        // The reply span back-computes its start and keeps its duration.
+        let reply = arr.iter().find(|e| e.get("name").unwrap().as_str() == Some("request")).unwrap();
+        assert_eq!(reply.get("dur").unwrap().as_usize(), Some(1500));
+        assert_eq!(reply.get("args").unwrap().get("rounds").unwrap().as_usize(), Some(3));
+    }
+
+    #[test]
+    fn timeline_filters_by_request() {
+        let sink = TraceSink::new(32);
+        sink.record(5, EventKind::Admitted { priority: 2, deadline_ms: 0 });
+        sink.record(6, EventKind::Admitted { priority: 0, deadline_ms: 0 });
+        sink.record(5, EventKind::Replied { ok: true, status: 200, rounds: 1 });
+        let j = sink.request_timeline_json(5);
+        assert_eq!(j.get("request_id").unwrap().as_str(), Some("0000000000000005"));
+        assert_eq!(j.get("found").unwrap().as_usize(), Some(2));
+        let names: Vec<&str> = j
+            .get("events")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|e| e.get("name").unwrap().as_str().unwrap())
+            .collect();
+        assert_eq!(names, vec!["admitted", "request"]);
+    }
+
+    #[test]
+    fn round_event_clamps_alphas() {
+        let sink = TraceSink::new(32);
+        let mut alphas = [0f32; MAX_TRACE_ALPHAS];
+        alphas[0] = 0.75;
+        alphas[1] = 0.5;
+        sink.record(9, EventKind::Round {
+            round: 0,
+            gamma: 2,
+            k: 1,
+            draft: 0,
+            proposed: 2,
+            accepted: 1,
+            rollback: 1,
+            residual: 1,
+            draft_ns: 100,
+            target_ns: 400,
+            n_alphas: 2,
+            alphas,
+        });
+        let j = sink.request_timeline_json(9);
+        let e = j.get("events").unwrap().at(0).unwrap();
+        let a = e.get("args").unwrap().get("alphas").unwrap();
+        assert_eq!(a.as_arr().unwrap().len(), 2);
+        assert!((a.at(0).unwrap().as_f64().unwrap() - 0.75).abs() < 1e-6);
+        assert_eq!(e.get("args").unwrap().get("draft").unwrap().as_str(), Some("model"));
+    }
+
+    #[test]
+    fn request_id_wire_format_roundtrips() {
+        assert_eq!(format_request_id(0x1a2b), "0000000000001a2b");
+        assert_eq!(parse_request_id("0000000000001a2b"), Some(0x1a2b));
+        assert_eq!(parse_request_id("0x1a2b"), Some(0x1a2b));
+        assert_eq!(parse_request_id("ff"), Some(255));
+        assert_eq!(parse_request_id(""), None);
+        assert_eq!(parse_request_id("0"), None, "id 0 is the control plane");
+        assert_eq!(parse_request_id("zz"), None);
+        assert_eq!(parse_request_id("11112222333344445"), None, "too long");
+    }
+
+    #[test]
+    fn stats_block_shape() {
+        let sink = TraceSink::new(16);
+        sink.record(1, EventKind::Requeued);
+        let j = sink.stats_json();
+        assert_eq!(j.get("enabled").unwrap().as_bool(), Some(true));
+        assert_eq!(j.get("capacity").unwrap().as_usize(), Some(16));
+        assert_eq!(j.get("recorded").unwrap().as_usize(), Some(1));
+        assert_eq!(j.get("dropped").unwrap().as_usize(), Some(0));
+    }
+
+    #[test]
+    fn concurrent_recording_keeps_exact_accounting() {
+        use std::sync::Arc;
+        let sink = Arc::new(TraceSink::new(64));
+        let threads: Vec<_> = (0..4)
+            .map(|t| {
+                let s = Arc::clone(&sink);
+                std::thread::spawn(move || {
+                    for i in 0..500u64 {
+                        s.record(t * 1000 + i, EventKind::Requeued);
+                    }
+                })
+            })
+            .collect();
+        for t in threads {
+            t.join().unwrap();
+        }
+        assert_eq!(sink.recorded(), 2000);
+        assert_eq!(sink.recorded() - sink.dropped(), sink.capacity() as u64);
+        assert_eq!(sink.snapshot().len(), sink.capacity());
+    }
+}

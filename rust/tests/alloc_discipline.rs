@@ -11,6 +11,12 @@
 //! high-water allocation, and the session-layer `verify_stacked` with a
 //! caller-reused out buffer stays at amortized-zero.
 //!
+//! Flight-recorder PR: the trace ring obeys the same discipline — a
+//! warmed [`stride::trace::TraceSink`] records events (including full
+//! per-round spans with their inline alpha array) with **zero** heap
+//! allocations, so tracing enabled costs the hot path a sharded mutex
+//! and a slab write, never an allocation or an unbounded queue.
+//!
 //! This file contains exactly one `#[test]` on purpose: the counter is a
 //! process-wide global, and a sibling test allocating concurrently would
 //! make the measurement meaningless.
@@ -224,4 +230,46 @@ fn steady_state_decode_does_not_allocate() {
          return Vec, its growth, and the cache-ref gather; measured \
          {per_round} allocations per round"
     );
+
+    // --- Flight recorder: event recording is strictly allocation-free.
+    // The ring's slabs are preallocated at construction and every
+    // `EventKind` is `Copy` with inline storage (fixed-size alpha
+    // array), so a record is a mutex + slab write — even past wrap,
+    // where overflow must be a counted drop, never an allocation.
+    use std::time::Duration;
+    use stride::trace::{EventKind, TraceSink, MAX_TRACE_ALPHAS};
+    let sink = TraceSink::new(64); // small: the loop below wraps it
+    let round = EventKind::Round {
+        round: 1,
+        gamma: 4,
+        k: 2,
+        draft: 0,
+        proposed: 8,
+        accepted: 6,
+        rollback: 2,
+        residual: 1,
+        draft_ns: 1_000,
+        target_ns: 9_000,
+        n_alphas: MAX_TRACE_ALPHAS as u8,
+        alphas: [0.9; MAX_TRACE_ALPHAS],
+    };
+    sink.record(1, EventKind::Requeued); // warm: settle any one-time init
+    let before = allocs();
+    for i in 0..1_000u64 {
+        sink.record(i.max(1), round);
+        sink.record_span_ending_now(
+            i.max(1),
+            Duration::from_micros(10),
+            EventKind::Replied { ok: true, status: 200, rounds: 3 },
+        );
+    }
+    let trace_allocs = allocs() - before;
+    assert_eq!(
+        trace_allocs, 0,
+        "TraceSink::record must be allocation-free after construction \
+         (preallocated slabs, Copy events, counted-drop overflow); \
+         counted {trace_allocs} over 2000 records"
+    );
+    assert_eq!(sink.recorded(), 2_001, "every record lands in the ledger");
+    assert!(sink.dropped() > 0, "the loop must actually have wrapped the ring");
 }

@@ -282,6 +282,129 @@ fn fault_metrics_render_zero_without_chaos() {
     assert_eq!(faults.get("breaker"), Some(&Json::Null), "breaker null without adaptive gamma");
 }
 
+/// Pin the `/metrics` exposition grammar: every line is exactly
+/// `stride_<ident> <finite number>` — one metric per line, no labels,
+/// no NaN/inf, no trailing junk. Dashboards parse this by line; a
+/// format drift is a silent fleet-wide observability outage.
+fn assert_metrics_grammar(text: &str) {
+    assert!(!text.is_empty(), "metrics render must not be empty");
+    for line in text.lines() {
+        let (name, value) = line
+            .split_once(' ')
+            .unwrap_or_else(|| panic!("metric line must be `name value`: '{line}'"));
+        assert!(
+            name.strip_prefix("stride_").is_some_and(|rest| {
+                !rest.is_empty()
+                    && rest.chars().all(|c| c.is_ascii_lowercase() || c.is_ascii_digit() || c == '_')
+            }),
+            "metric name must be stride_[a-z0-9_]+: '{line}'"
+        );
+        let v: f64 = value
+            .parse()
+            .unwrap_or_else(|_| panic!("metric value must parse as a number: '{line}'"));
+        assert!(v.is_finite(), "metric value must be finite (torn/NaN line?): '{line}'");
+        assert!(!value.contains(' '), "exactly one value per line: '{line}'");
+    }
+}
+
+/// The render grammar holds on a quiet registry (pre-registered zeros)
+/// and after traffic — including the latency histograms the scheduler
+/// feeds (`queue_wait`, `draft_compute`, `verify_compute`).
+#[test]
+fn metrics_render_format_is_pinned() {
+    use stride::models::NativeBackend;
+    use stride::nn::model::tiny_model;
+    use stride::server::{ModelShape, ReplicaBuilder, ReplicaStacks, Server};
+
+    let mut cfg = ServeConfig::default();
+    cfg.bind = "127.0.0.1:0".into();
+    cfg.backend = "native".into();
+    let builder: ReplicaBuilder = Arc::new(move |_r| {
+        Ok(ReplicaStacks {
+            target: Box::new(NativeBackend::new(tiny_model(921))),
+            draft: Box::new(NativeBackend::new(tiny_model(922))),
+        })
+    });
+    let server = Server::start_with_builder(cfg, ModelShape { patch: 4, n_ctx: 8 }, builder).unwrap();
+    let addr = server.addr().to_string();
+
+    // Quiet: grammar holds before any request.
+    assert_metrics_grammar(http_request(&addr, "GET", "/metrics", None).unwrap().body_str());
+
+    let hist: Vec<String> = (0..16).map(|i| format!("{}", (i as f32 * 0.19).sin())).collect();
+    let body = format!(r#"{{"history": [{}], "horizon": 4, "seed": 11}}"#, hist.join(","));
+    for _ in 0..3 {
+        let r = http_request(&addr, "POST", "/forecast", Some(body.as_bytes())).unwrap();
+        assert_eq!(r.status, 200, "{}", r.body_str());
+    }
+
+    let m = http_request(&addr, "GET", "/metrics", None).unwrap().body_str().to_string();
+    assert_metrics_grammar(&m);
+    // The scheduler's stage histograms light up with served traffic.
+    for key in ["stride_queue_wait_count", "stride_draft_compute_p95_ms", "stride_verify_compute_p95_ms"]
+    {
+        assert!(m.contains(key), "missing `{key}` in /metrics after traffic:\n{m}");
+    }
+}
+
+/// Scrape-under-fire: concurrent `/metrics` readers racing live
+/// `/forecast` traffic must always see a complete, grammar-clean
+/// exposition — the render locks each family briefly, so a scrape can
+/// interleave *between* families but never tear a line or emit NaN.
+#[test]
+fn concurrent_metrics_scrape_stays_well_formed() {
+    use stride::models::NativeBackend;
+    use stride::nn::model::tiny_model;
+    use stride::server::{ModelShape, ReplicaBuilder, ReplicaStacks, Server};
+
+    let mut cfg = ServeConfig::default();
+    cfg.bind = "127.0.0.1:0".into();
+    cfg.backend = "native".into();
+    let builder: ReplicaBuilder = Arc::new(move |_r| {
+        Ok(ReplicaStacks {
+            target: Box::new(NativeBackend::new(tiny_model(931))),
+            draft: Box::new(NativeBackend::new(tiny_model(932))),
+        })
+    });
+    let server = Server::start_with_builder(cfg, ModelShape { patch: 4, n_ctx: 8 }, builder).unwrap();
+    let addr = Arc::new(server.addr().to_string());
+
+    let mut handles = Vec::new();
+    // Writers: keep the counters, gauges, and histograms moving.
+    for w in 0..2u64 {
+        let addr = Arc::clone(&addr);
+        handles.push(std::thread::spawn(move || {
+            let hist: Vec<String> =
+                (0..16).map(|i| format!("{}", (i as f32 * 0.21).cos())).collect();
+            for i in 0..8u64 {
+                let body = format!(
+                    r#"{{"history": [{}], "horizon": 4, "seed": {}}}"#,
+                    hist.join(","),
+                    w * 100 + i
+                );
+                let r = http_request(&addr, "POST", "/forecast", Some(body.as_bytes())).unwrap();
+                assert_eq!(r.status, 200, "{}", r.body_str());
+            }
+        }));
+    }
+    // Scrapers: every observation mid-flight must be grammar-clean.
+    for _ in 0..3 {
+        let addr = Arc::clone(&addr);
+        handles.push(std::thread::spawn(move || {
+            for _ in 0..12 {
+                let r = http_request(&addr, "GET", "/metrics", None).unwrap();
+                assert_eq!(r.status, 200);
+                assert_metrics_grammar(r.body_str());
+            }
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    // One final settled scrape, still clean.
+    assert_metrics_grammar(http_request(&addr, "GET", "/metrics", None).unwrap().body_str());
+}
+
 /// Engine-thread resilience: a request that fails validation must not
 /// poison the batch it rides in.
 #[test]

@@ -26,6 +26,34 @@ cargo test -q
 echo "== fault-injection chaos suite =="
 cargo test -q --test fault_injection
 
+# Same naming treatment for the observability surfaces: the flight-
+# recorder end-to-end suite (request ids, per-round spans, Chrome
+# export, wrap accounting, disabled-is-bit-identical), the zero-
+# allocation discipline (which now pins TraceSink::record at zero), and
+# the /metrics grammar + scrape-under-fire tests.
+echo "== flight-recorder trace suite =="
+cargo test -q --test trace_e2e
+cargo test -q --test alloc_discipline
+cargo test -q --test monitoring metrics_render_format_is_pinned \
+    concurrent_metrics_scrape_stays_well_formed
+
+# The trace suite persists a /debug/trace scrape taken under concurrent
+# load; it must parse as JSON end-to-end (Chrome/Perfetto would reject
+# anything torn). python3 when available, a shape grep otherwise.
+if [[ -s results/trace_smoke.json ]]; then
+    if command -v python3 >/dev/null 2>&1; then
+        python3 -m json.tool results/trace_smoke.json >/dev/null \
+            || { echo "error: results/trace_smoke.json is not valid JSON" >&2; exit 1; }
+    elif ! grep -q '"ph"' results/trace_smoke.json; then
+        echo "error: results/trace_smoke.json lacks trace-event shape" >&2
+        exit 1
+    fi
+    echo "trace export OK: results/trace_smoke.json"
+else
+    echo "error: trace suite did not write results/trace_smoke.json" >&2
+    exit 1
+fi
+
 # Rustdoc gate: the crate carries #![warn(missing_docs)]; -D warnings
 # turns any missing public-API doc (or broken intra-doc link) into a hard
 # failure. --lib avoids the doc-output name collision with the bin target.
@@ -54,7 +82,9 @@ if [[ "${1:-}" != "--no-bench" ]]; then
     # Kernel-tier criteria: the SIMD, tiled, and stacked-verify fast
     # paths must each be bitwise identical to the scalar / flat /
     # sequential forms they replace (asserted in-bench, recorded as
-    # criteria_met), and every timing must be finite.
+    # criteria_met), every timing must be finite, and the flight
+    # recorder's trace_overhead section must show an observed decode
+    # that is bit-identical and within its 5% budget.
     STRIDE_BENCH_QUICK=1 cargo bench --bench perf_hotpath
     check_bench_json results/BENCH_perf_hotpath.json
     if ! grep -q '"criteria_met":true' results/BENCH_perf_hotpath.json; then
